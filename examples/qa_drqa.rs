@@ -1,0 +1,105 @@
+//! QA example (paper Table 3 / Figs 2–3 workload): train the DrQA-style
+//! reader on the synthetic SQuAD-like corpus with the word2ketXS embedding
+//! and report F1/EM. With `--qualitative`, prints Fig.-3-style sample
+//! predictions from the trained compressed model.
+//!
+//! Run: cargo run --release --example qa_drqa -- [--steps N]
+//!      [--order 4 --rank 1] [--regular] [--qualitative]
+
+use word2ket::cli::{App, CommandSpec, OptSpec};
+use word2ket::config::{EmbeddingKind, ExperimentConfig, TaskKind};
+use word2ket::coordinator::experiment::resolve_variant;
+use word2ket::coordinator::tasks::prepare_qa;
+use word2ket::coordinator::trainer::predict_spans;
+use word2ket::coordinator::{experiment, Trainer};
+use word2ket::runtime::{Engine, Manifest, ParamStore};
+use word2ket::text::detokenize;
+use word2ket::util::Rng;
+use std::path::Path;
+
+fn main() -> word2ket::Result<()> {
+    let app = App {
+        name: "qa_drqa",
+        about: "extractive QA with compressed embeddings (Table 3 / Fig. 2–3)",
+        commands: vec![CommandSpec {
+            name: "run",
+            about: "train + evaluate F1",
+            opts: vec![
+                OptSpec { name: "steps", help: "training steps", takes_value: true, repeated: false, default: Some("500") },
+                OptSpec { name: "order", help: "word2ketXS order", takes_value: true, repeated: false, default: Some("4") },
+                OptSpec { name: "rank", help: "word2ketXS rank", takes_value: true, repeated: false, default: Some("1") },
+                OptSpec { name: "regular", help: "use the regular embedding", takes_value: false, repeated: false, default: None },
+                OptSpec { name: "qualitative", help: "print Fig. 3-style sample predictions", takes_value: false, repeated: false, default: None },
+            ],
+            positionals: vec![],
+        }],
+    };
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.insert(0, "run".into());
+    let parsed = match app.parse(&argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "e2e-qa".into();
+    cfg.task = TaskKind::Qa;
+    if parsed.flag("regular") {
+        cfg.embedding.kind = EmbeddingKind::Regular;
+    } else {
+        cfg.embedding.kind = EmbeddingKind::Word2KetXS;
+        cfg.embedding.order = parsed.get_usize("order")?.unwrap_or(4);
+        cfg.embedding.rank = parsed.get_usize("rank")?.unwrap_or(1);
+    }
+    cfg.train.steps = parsed.get_usize("steps")?.unwrap_or(500);
+    cfg.train.eval_every = (cfg.train.steps / 5).max(1);
+    cfg.corpus.train = 2000;
+    cfg.corpus.valid = 100;
+    cfg.corpus.test = 100;
+
+    let report = experiment::run_experiment(&cfg)?;
+    println!("{}", report.render());
+    println!(
+        "F1 dynamics (Fig. 2 style): {}",
+        report
+            .curve
+            .iter()
+            .map(|p| format!("@{}:{:.1}", p.step, p.primary))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+
+    if parsed.flag("qualitative") {
+        // Fig. 3: sample contexts/questions with model predictions from the
+        // trained compressed model (reload checkpoint saved by the run).
+        let engine = Engine::cpu(Path::new(&cfg.artifacts_dir))?;
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+        let variant = resolve_variant(&cfg, &manifest)?;
+        let ckpt = Path::new(&cfg.train.checkpoint_dir).join(format!("{}.ckpt", variant.name));
+        let store = ParamStore::load(&variant.params, &ckpt)?;
+        let data = prepare_qa(&cfg, variant)?;
+        let _ = Trainer::new(&engine, variant, word2ket::coordinator::LrSchedule::new(0.0, 0));
+        println!(
+            "\n=== Fig. 3 (qualitative): predictions from a {}-parameter embedding ===",
+            variant.embedding.num_params
+        );
+        let mut rng = Rng::new(1);
+        let batches = data.test.eval_batches();
+        let (batch, real) = &batches[rng.below(batches.len().min(2))];
+        let spans = predict_spans(&engine, variant, &store, batch)?;
+        for row in 0..(*real).min(5) {
+            let ex = &data.test_examples[row];
+            let (s, e) = spans[row];
+            let e = e.min(ex.context.len().saturating_sub(1));
+            let s = s.min(e);
+            println!("\nCONTEXT:  {}", detokenize(&ex.context));
+            println!("QUESTION: {}", detokenize(&ex.question));
+            println!("GOLD:     {}", detokenize(&ex.answers[0]));
+            println!("MODEL:    {}", detokenize(&ex.context[s..=e]));
+        }
+    }
+    Ok(())
+}

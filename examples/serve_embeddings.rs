@@ -1,0 +1,120 @@
+//! Serving example: run the embedding server on a compressed word2ketXS
+//! table, fire concurrent client load at it, and report latency/throughput —
+//! the serving-side story of the paper (a 380-parameter table standing in
+//! for a 35.6M-parameter one).
+//!
+//! Run: cargo run --release --example serve_embeddings -- [--requests N]
+//!      [--clients C] [--order 4 --rank 1]
+
+use word2ket::cli::{App, CommandSpec, OptSpec};
+use word2ket::config::{EmbeddingKind, ExperimentConfig};
+use word2ket::coordinator::server;
+use word2ket::util::{Rng, Summary, Timer};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn main() -> word2ket::Result<()> {
+    let app = App {
+        name: "serve_embeddings",
+        about: "embedding server + load generator",
+        commands: vec![CommandSpec {
+            name: "run",
+            about: "serve and measure",
+            opts: vec![
+                OptSpec { name: "requests", help: "requests per client", takes_value: true, repeated: false, default: Some("500") },
+                OptSpec { name: "clients", help: "concurrent clients", takes_value: true, repeated: false, default: Some("4") },
+                OptSpec { name: "order", help: "word2ketXS order", takes_value: true, repeated: false, default: Some("4") },
+                OptSpec { name: "rank", help: "word2ketXS rank", takes_value: true, repeated: false, default: Some("1") },
+                OptSpec { name: "vocab", help: "vocabulary size", takes_value: true, repeated: false, default: Some("118655") },
+                OptSpec { name: "dim", help: "embedding dim", takes_value: true, repeated: false, default: Some("300") },
+            ],
+            positionals: vec![],
+        }],
+    };
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.insert(0, "run".into());
+    let parsed = match app.parse(&argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let requests = parsed.get_usize("requests")?.unwrap_or(500);
+    let clients = parsed.get_usize("clients")?.unwrap_or(4);
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.embedding.kind = EmbeddingKind::Word2KetXS;
+    cfg.embedding.order = parsed.get_usize("order")?.unwrap_or(4);
+    cfg.embedding.rank = parsed.get_usize("rank")?.unwrap_or(1);
+    cfg.model.vocab = parsed.get_usize("vocab")?.unwrap_or(118_655);
+    cfg.model.emb_dim = parsed.get_usize("dim")?.unwrap_or(300);
+    cfg.server.addr = "127.0.0.1:17898".into();
+    cfg.server.batch_window_us = 150;
+    cfg.server.max_batch = 256;
+
+    let (state, listener, _worker) = server::spawn(&cfg)?;
+    let addr = cfg.server.addr.clone();
+    let accept_state = state.clone();
+    let accept = std::thread::spawn(move || server::accept_loop(listener, accept_state));
+
+    println!("server on {addr}; {clients} clients × {requests} lookups each");
+    let wall = Timer::start();
+    let vocab = cfg.model.vocab;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> Summary {
+                let mut lat = Summary::new();
+                let mut rng = Rng::new(100 + c as u64);
+                let mut s = TcpStream::connect(&addr).expect("connect");
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut line = String::new();
+                for _ in 0..requests {
+                    let id = rng.below(vocab);
+                    let t = Timer::start();
+                    s.write_all(format!("LOOKUP {id}\n").as_bytes()).unwrap();
+                    line.clear();
+                    r.read_line(&mut line).unwrap();
+                    lat.add(t.elapsed_us());
+                    assert!(line.starts_with("OK "), "bad response: {line}");
+                }
+                s.write_all(b"QUIT\n").ok();
+                lat
+            })
+        })
+        .collect();
+
+    for h in handles {
+        let lat = h.join().expect("client thread");
+        println!(
+            "  client done: p50 {:.0}µs p99 {:.0}µs over {} reqs",
+            lat.p50(),
+            lat.p99(),
+            lat.len()
+        );
+    }
+    let secs = wall.elapsed().as_secs_f64();
+    let total = (clients * requests) as f64;
+    println!(
+        "\nTOTAL: {} lookups in {:.2}s → {:.0} lookups/s (served {} rows from a \
+         compressed {}×{} table)",
+        total as u64,
+        secs,
+        total / secs,
+        state.served(),
+        vocab,
+        cfg.model.emb_dim
+    );
+    // Ask the server for its own view.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"STATS\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+    println!("server STATS: {}", line.trim());
+    s.write_all(b"QUIT\n").ok();
+
+    state.shutdown();
+    accept.join().ok();
+    Ok(())
+}

@@ -1,0 +1,3 @@
+# L2 build-time package: JAX models + Pallas kernels, AOT-lowered to HLO text
+# by aot.py. Never imported at runtime — the Rust coordinator executes the
+# lowered artifacts through PJRT.

@@ -1,0 +1,43 @@
+"""Adam with global-norm gradient clipping, fused into the train_step HLO.
+
+The optimizer state (m, v) flows through the executable as explicit inputs/
+outputs — the Rust ParamStore owns the buffers; Python never runs at training
+time. Bias correction uses the step counter passed as a scalar input.
+"""
+
+import jax
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def clip_by_global_norm(grads: dict, max_norm: float) -> dict:
+    """Scale all grads so the global L2 norm is at most max_norm (0 = off)."""
+    if max_norm <= 0:
+        return grads
+    total = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads.values())
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(total, 1e-12))
+    return {k: g * scale for k, g in grads.items()}
+
+
+def update(params: dict, grads: dict, m: dict, v: dict, step: jax.Array,
+           lr: jax.Array, clip: float = 1.0):
+    """One Adam step. step is the 1-based iteration count (f32 scalar)."""
+    grads = clip_by_global_norm(grads, clip)
+    b1t = BETA1**step
+    b2t = BETA2**step
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = BETA1 * m[k] + (1.0 - BETA1) * g
+        vk = BETA2 * v[k] + (1.0 - BETA2) * g * g
+        mhat = mk / (1.0 - b1t)
+        vhat = vk / (1.0 - b2t)
+        new_params[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + EPS)
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_params, new_m, new_v

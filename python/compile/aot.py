@@ -1,0 +1,388 @@
+"""AOT compiler: lowers every (task × embedding-variant) model function to
+HLO text plus a manifest.json the Rust runtime consumes.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--only sum_regular] [--list]
+
+Python runs exactly once per source change (`make artifacts` checks a source
+hash); the request path is pure Rust + PJRT.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from . import model, model_qa
+from .embeddings import EmbSpec
+from .hlo import lower_to_text
+from .model import Seq2SeqSpec
+from .model_qa import QaSpec
+
+# ---------------------------------------------------------------------------
+# Scenario registry — dims chosen for CPU-scale end-to-end runs; the paper's
+# full-scale parameter accounting is reproduced exactly in rust (stats.rs).
+# Table 1 mirror: regular / w2k 4/1 / XS 2/10 / XS 4/1.
+# Table 2 mirror: regular / XS 2/30 / XS 2/10 / XS 3/10.
+# Table 3 mirror: regular / XS 2/2 / XS 4/1.
+# ---------------------------------------------------------------------------
+
+SUM = dict(vocab=1024, hidden=64, batch=16, src_len=24, tgt_len=8, dim=64)
+MT = dict(vocab=2048, hidden=64, batch=16, src_len=20, tgt_len=14, dim=64)
+QA = dict(vocab=1024, hidden=48, batch=16, ctx_len=48, q_len=8, dim=64)
+
+
+def _emb(kind, vocab, dim, order=1, rank=1):
+    return EmbSpec(kind=kind, vocab=vocab, dim=dim, order=order, rank=rank)
+
+
+def variants():
+    """name → (task, spec) for every lowered model variant."""
+    out = {}
+    v, d = SUM["vocab"], SUM["dim"]
+    for name, emb in [
+        ("regular", _emb("regular", v, d)),
+        ("w2k_o4r1", _emb("w2k", v, d, 4, 1)),
+        ("xs_o2r10", _emb("xs", v, d, 2, 10)),
+        ("xs_o4r1", _emb("xs", v, d, 4, 1)),
+    ]:
+        out[f"sum_{name}"] = (
+            "sum",
+            Seq2SeqSpec(emb=emb, hidden=SUM["hidden"], batch=SUM["batch"],
+                        src_len=SUM["src_len"], tgt_len=SUM["tgt_len"]),
+        )
+    v, d = MT["vocab"], MT["dim"]
+    for name, emb in [
+        ("regular", _emb("regular", v, d)),
+        ("xs_o2r30", _emb("xs", v, d, 2, 30)),
+        ("xs_o2r10", _emb("xs", v, d, 2, 10)),
+        ("xs_o3r10", _emb("xs", v, d, 3, 10)),
+    ]:
+        out[f"mt_{name}"] = (
+            "mt",
+            Seq2SeqSpec(emb=emb, hidden=MT["hidden"], batch=MT["batch"],
+                        src_len=MT["src_len"], tgt_len=MT["tgt_len"]),
+        )
+    v, d = QA["vocab"], QA["dim"]
+    for name, emb in [
+        ("regular", _emb("regular", v, d)),
+        ("xs_o2r2", _emb("xs", v, d, 2, 2)),
+        ("xs_o4r1", _emb("xs", v, d, 4, 1)),
+    ]:
+        out[f"qa_{name}"] = (
+            "qa",
+            QaSpec(emb=emb, hidden=QA["hidden"], batch=QA["batch"],
+                   ctx_len=QA["ctx_len"], q_len=QA["q_len"]),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers (HLO entry takes positional parameters; the manifest
+# records the order).
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def seq2seq_functions(spec: Seq2SeqSpec):
+    """name → (fn, example_args, extra_input_descr, output_descr)."""
+    pspecs = model.param_specs(spec)
+    names = [n for n, _, _ in pspecs]
+    shapes = {n: s for n, s, _ in pspecs}
+    np_ = len(names)
+    b, ts, tt, h = spec.batch, spec.src_len, spec.tgt_len, spec.hidden
+
+    def split_pmv(args):
+        params = dict(zip(names, args[:np_]))
+        m = dict(zip(names, args[np_:2 * np_]))
+        v = dict(zip(names, args[2 * np_:3 * np_]))
+        return params, m, v, args[3 * np_:]
+
+    def train_fn(*args):
+        params, m, v, rest = split_pmv(args)
+        src, tgt, tgt_mask, step, lr = rest
+        p2, m2, v2, loss = model.train_step(spec, params, m, v, src, tgt, tgt_mask, step, lr)
+        return (
+            tuple(p2[n] for n in names)
+            + tuple(m2[n] for n in names)
+            + tuple(v2[n] for n in names)
+            + (loss,)
+        )
+
+    def encode_fn(*args):
+        params = dict(zip(names, args[:np_]))
+        (src,) = args[np_:]
+        enc_proj, mask, h0 = model.encode(spec, params, src)
+        return enc_proj, mask, h0
+
+    def decode_fn(*args):
+        params = dict(zip(names, args[:np_]))
+        enc_proj, src_mask, prev_tok, hstate = args[np_:]
+        return model.decode_step(spec, params, enc_proj, src_mask, prev_tok, hstate)
+
+    pm = [_sds(shapes[n]) for n in names]
+    train_extra = [
+        ("src", (b, ts), "i32"),
+        ("tgt", (b, tt), "i32"),
+        ("tgt_mask", (b, tt), "f32"),
+        ("step", (), "f32"),
+        ("lr", (), "f32"),
+    ]
+    enc_extra = [("src", (b, ts), "i32")]
+    dec_extra = [
+        ("enc_proj", (b, ts, h), "f32"),
+        ("src_mask", (b, ts), "f32"),
+        ("prev_tok", (b,), "i32"),
+        ("h", (b, h), "f32"),
+    ]
+    return {
+        "train_step": (
+            train_fn,
+            pm * 3 + [_example(e) for e in train_extra],
+            {"param_copies": 3, "extra": train_extra},
+            [("loss", (), "f32")],  # params/m/v outputs implied by order
+        ),
+        "encode": (
+            encode_fn,
+            pm + [_example(e) for e in enc_extra],
+            {"param_copies": 1, "extra": enc_extra},
+            [("enc_proj", (b, ts, h), "f32"), ("src_mask", (b, ts), "f32"), ("h0", (b, h), "f32")],
+        ),
+        "decode_step": (
+            decode_fn,
+            pm + [_example(e) for e in dec_extra],
+            {"param_copies": 1, "extra": dec_extra},
+            [("next_tok", (b,), "i32"), ("h", (b, h), "f32"), ("logits", (b, spec.vocab), "f32")],
+        ),
+    }
+
+
+def qa_functions(spec: QaSpec):
+    pspecs = model_qa.param_specs(spec)
+    names = [n for n, _, _ in pspecs]
+    shapes = {n: s for n, s, _ in pspecs}
+    np_ = len(names)
+    b, tc, tq = spec.batch, spec.ctx_len, spec.q_len
+
+    def train_fn(*args):
+        params = dict(zip(names, args[:np_]))
+        m = dict(zip(names, args[np_:2 * np_]))
+        v = dict(zip(names, args[2 * np_:3 * np_]))
+        ctx, q, start, end, step, lr = args[3 * np_:]
+        p2, m2, v2, loss = model_qa.train_step(spec, params, m, v, ctx, q, start, end, step, lr)
+        return (
+            tuple(p2[n] for n in names)
+            + tuple(m2[n] for n in names)
+            + tuple(v2[n] for n in names)
+            + (loss,)
+        )
+
+    def predict_fn(*args):
+        params = dict(zip(names, args[:np_]))
+        ctx, q = args[np_:]
+        return model_qa.predict(spec, params, ctx, q)
+
+    pm = [_sds(shapes[n]) for n in names]
+    train_extra = [
+        ("ctx", (b, tc), "i32"),
+        ("q", (b, tq), "i32"),
+        ("start", (b,), "i32"),
+        ("end", (b,), "i32"),
+        ("step", (), "f32"),
+        ("lr", (), "f32"),
+    ]
+    pred_extra = [("ctx", (b, tc), "i32"), ("q", (b, tq), "i32")]
+    return {
+        "train_step": (
+            train_fn,
+            pm * 3 + [_example(e) for e in train_extra],
+            {"param_copies": 3, "extra": train_extra},
+            [("loss", (), "f32")],
+        ),
+        "predict": (
+            predict_fn,
+            pm + [_example(e) for e in pred_extra],
+            {"param_copies": 1, "extra": pred_extra},
+            [("start", (b,), "i32"), ("end", (b,), "i32")],
+        ),
+    }
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def _example(descr):
+    name, shape, dt = descr
+    return _sds(shape, _DTYPES[dt])
+
+
+# ---------------------------------------------------------------------------
+# Kernel smoke artifacts: standalone Pallas kernels for Rust integration tests
+# and the lookup-throughput bench.
+# ---------------------------------------------------------------------------
+
+
+def kernel_artifacts():
+    from .kernels import kron_pair, layernorm, luong_attention, xs_reconstruct_rows
+
+    arts = {}
+    arts["kernel_kron_pair"] = (
+        lambda a, b: (kron_pair(a, b),),
+        [_sds((16, 8)), _sds((16, 8))],
+        [("a", (16, 8), "f32"), ("b", (16, 8), "f32")],
+        [("out", (16, 64), "f32")],
+    )
+    arts["kernel_xs_rows"] = (
+        lambda c: (xs_reconstruct_rows(c),),
+        [_sds((16, 2, 2, 8))],
+        [("cols", (16, 2, 2, 8), "f32")],
+        [("rows", (16, 64), "f32")],
+    )
+    arts["kernel_layernorm"] = (
+        lambda x: (layernorm(x),),
+        [_sds((16, 64))],
+        [("x", (16, 64), "f32")],
+        [("out", (16, 64), "f32")],
+    )
+    arts["kernel_attention"] = (
+        lambda h, e, m: luong_attention(h, e, m),
+        [_sds((16, 64)), _sds((16, 24, 64)), _sds((16, 24))],
+        [("h", (16, 64), "f32"), ("enc", (16, 24, 64), "f32"), ("mask", (16, 24), "f32")],
+        [("ctx", (16, 64), "f32"), ("probs", (16, 24), "f32")],
+    )
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def source_hash() -> str:
+    """Hash of every .py under compile/ — staleness key for make."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _dirs, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def spec_manifest(task, spec):
+    emb = spec.emb
+    dims = {
+        "task": task,
+        "hidden": spec.hidden,
+        "batch": spec.batch,
+        "vocab": emb.vocab,
+        "emb_dim": emb.effective_dim,
+    }
+    if task in ("sum", "mt"):
+        dims.update(src_len=spec.src_len, tgt_len=spec.tgt_len)
+    else:
+        dims.update(ctx_len=spec.ctx_len, q_len=spec.q_len, max_answer_len=spec.max_answer_len)
+    pspecs = model.param_specs(spec) if task in ("sum", "mt") else model_qa.param_specs(spec)
+    return {
+        "dims": dims,
+        "embedding": {
+            "kind": emb.kind,
+            "order": emb.order,
+            "rank": emb.rank,
+            "q": emb.q if emb.kind != "regular" else emb.dim,
+            "t": emb.t if emb.kind != "regular" else emb.vocab,
+            "num_params": emb.num_params(),
+        },
+        "params": [
+            {"name": n, "shape": list(s), "init": init} for n, s, init in pspecs
+        ],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", action="append", default=None,
+                    help="lower only variants whose name contains this substring")
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    var = variants()
+    if args.list:
+        for name in var:
+            print(name)
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"source_hash": source_hash(), "variants": {}, "kernels": {}}
+
+    selected = {
+        name: tv
+        for name, tv in var.items()
+        if args.only is None or any(sub in name for sub in args.only)
+    }
+    for name, (task, spec) in selected.items():
+        fns = seq2seq_functions(spec) if task in ("sum", "mt") else qa_functions(spec)
+        entry = spec_manifest(task, spec)
+        entry["functions"] = {}
+        for fname, (fn, ex_args, input_descr, out_descr) in fns.items():
+            fname_file = f"{name}.{fname}.hlo.txt"
+            path = os.path.join(args.out_dir, fname_file)
+            print(f"[aot] lowering {name}.{fname} ...", flush=True)
+            text = lower_to_text(fn, ex_args)
+            with open(path, "w") as f:
+                f.write(text)
+            entry["functions"][fname] = {
+                "file": fname_file,
+                "param_copies": input_descr["param_copies"],
+                "extra_inputs": [
+                    {"name": n, "shape": list(s), "dtype": d}
+                    for n, s, d in input_descr["extra"]
+                ],
+                "outputs": [
+                    {"name": n, "shape": list(s), "dtype": d} for n, s, d in out_descr
+                ],
+            }
+            print(f"[aot]   wrote {path} ({len(text)} chars)", flush=True)
+        manifest["variants"][name] = entry
+
+    if not args.skip_kernels:
+        for kname, (fn, ex_args, in_descr, out_descr) in kernel_artifacts().items():
+            path = os.path.join(args.out_dir, f"{kname}.hlo.txt")
+            print(f"[aot] lowering {kname} ...", flush=True)
+            text = lower_to_text(fn, ex_args)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["kernels"][kname] = {
+                "file": f"{kname}.hlo.txt",
+                "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in in_descr],
+                "outputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in out_descr],
+            }
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    # Merge with an existing manifest when lowering a subset.
+    if args.only is not None and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old_vars = old.get("variants", {})
+        old_vars.update(manifest["variants"])
+        manifest["variants"] = old_vars
+        if not manifest["kernels"]:
+            manifest["kernels"] = old.get("kernels", {})
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest → {mpath} ({len(manifest['variants'])} variants)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""L2 embedding modules: regular, word2ket, word2ketXS lookups.
+
+Each embedding kind is a (param-spec, lookup-fn) pair. Parameters are plain
+arrays initialized on the Rust side from manifest init specs; lookups call
+the L1 Pallas kernels so the whole reconstruction lowers into the AOT HLO.
+
+Dimension conventions (mirroring rust/src/embedding/*):
+  regular : table  (V, p)
+  word2ket: leaves (V, r, n, q), p = q**n           (paper eq. 3, per-word)
+  word2ketXS: factors (r, n, t, q), q**n >= p,
+              t**n >= V, digits base-t big-endian    (paper eq. 4, lazy rows)
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kron_tree_ranked, xs_reconstruct_rows
+
+
+def ceil_root(x: int, n: int) -> int:
+    """Smallest t with t**n >= x (matches rust util::ceil_root)."""
+    if x <= 1:
+        return 1
+    t = int(math.floor(x ** (1.0 / n)))
+    while t**n < x:
+        t += 1
+    while t > 1 and (t - 1) ** n >= x:
+        t -= 1
+    return t
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbSpec:
+    """Embedding hyper-parameters for one model variant."""
+
+    kind: str  # 'regular' | 'w2k' | 'xs'
+    vocab: int
+    dim: int  # requested p; effective dim is q**n for tensorized kinds
+    order: int = 1
+    rank: int = 1
+    layernorm: bool = True
+
+    @property
+    def q(self) -> int:
+        return ceil_root(self.dim, self.order) if self.kind != "regular" else self.dim
+
+    @property
+    def t(self) -> int:
+        return ceil_root(self.vocab, self.order)
+
+    @property
+    def effective_dim(self) -> int:
+        """Embedding width actually produced (q**n for tensorized kinds)."""
+        if self.kind == "regular":
+            return self.dim
+        return self.q**self.order
+
+    def param_specs(self):
+        """[(name, shape, init)] — init mirrored by rust ParamStore."""
+        if self.kind == "regular":
+            a = math.sqrt(3.0 / self.dim)
+            return [("emb/table", (self.vocab, self.dim), {"dist": "uniform", "a": a})]
+        if self.kind == "w2k":
+            a = math.sqrt(3.0 / (self.q * self.rank ** (1.0 / self.order)))
+            return [(
+                "emb/leaves",
+                (self.vocab, self.rank, self.order, self.q),
+                {"dist": "uniform", "a": a},
+            )]
+        if self.kind == "xs":
+            target = math.sqrt(3.0 / self.effective_dim)
+            a = (target / math.sqrt(self.rank)) ** (1.0 / self.order)
+            return [(
+                "emb/factors",
+                (self.rank, self.order, self.t, self.q),
+                {"dist": "uniform", "a": a},
+            )]
+        raise ValueError(f"unknown embedding kind {self.kind}")
+
+    def num_params(self) -> int:
+        return sum(math.prod(s) for _, s, _ in self.param_specs())
+
+
+def lookup(spec: EmbSpec, params: dict, ids: jax.Array) -> jax.Array:
+    """ids (...,) int32 → embeddings (..., effective_dim)."""
+    flat = ids.reshape(-1)
+    if spec.kind == "regular":
+        out = params["emb/table"][flat]
+    elif spec.kind == "w2k":
+        leaves = params["emb/leaves"][flat]  # (B, r, n, q)
+        out = kron_tree_ranked(leaves, layernorm_nodes=spec.layernorm)
+    elif spec.kind == "xs":
+        factors = params["emb/factors"]  # (r, n, t, q)
+        n, t = spec.order, spec.t
+        # Big-endian base-t digit decode (mirrors rust kron::MixedRadix).
+        cols = []
+        for j in range(n):
+            weight = t ** (n - 1 - j)
+            dj = (flat // weight) % t  # (B,)
+            # factors[:, j, dj, :] → (r, B, q) → (B, r, q)
+            cj = jnp.transpose(factors[:, j, :, :][:, dj, :], (1, 0, 2))
+            cols.append(cj)
+        stacked = jnp.stack(cols, axis=2)  # (B, r, n, q)
+        out = xs_reconstruct_rows(stacked)
+    else:
+        raise ValueError(spec.kind)
+    return out.reshape(*ids.shape, spec.effective_dim)

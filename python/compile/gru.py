@@ -1,0 +1,56 @@
+"""Minimal GRU layers (scan-based) shared by the seq2seq and QA models.
+
+Parameter layout per cell (name prefix + suffixes):
+    <p>/wx (in_dim, 3H), <p>/wh (H, 3H), <p>/b (3H)
+Gate order along the 3H axis: [reset | update | candidate].
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def cell_specs(prefix: str, in_dim: int, hidden: int):
+    ax = math.sqrt(3.0 / in_dim)
+    ah = math.sqrt(3.0 / hidden)
+    return [
+        (f"{prefix}/wx", (in_dim, 3 * hidden), {"dist": "uniform", "a": ax}),
+        (f"{prefix}/wh", (hidden, 3 * hidden), {"dist": "uniform", "a": ah}),
+        (f"{prefix}/b", (3 * hidden,), {"dist": "zeros"}),
+    ]
+
+
+def cell_step(params: dict, prefix: str, x: jax.Array, h: jax.Array) -> jax.Array:
+    """One GRU step: x (B, in), h (B, H) → h' (B, H)."""
+    hidden = h.shape[-1]
+    gx = x @ params[f"{prefix}/wx"] + params[f"{prefix}/b"]
+    gh = h @ params[f"{prefix}/wh"]
+    rx, zx, nx = jnp.split(gx, 3, axis=-1)
+    rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    del hidden
+    return (1.0 - z) * n + z * h
+
+
+def run(params: dict, prefix: str, xs: jax.Array, h0: jax.Array, mask: jax.Array,
+        reverse: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Run a GRU over time.
+
+    xs (B, T, in), h0 (B, H), mask (B, T) 1.0 on real tokens.
+    Returns (outputs (B, T, H), final hidden (B, H)). Masked positions carry
+    the previous hidden state through (standard packed-sequence semantics).
+    """
+    xs_t = jnp.swapaxes(xs, 0, 1)  # (T, B, in)
+    mask_t = jnp.swapaxes(mask, 0, 1)[:, :, None]  # (T, B, 1)
+
+    def step(h, inp):
+        x, m = inp
+        h_new = cell_step(params, prefix, x, h)
+        h = m * h_new + (1.0 - m) * h
+        return h, h
+
+    hT, outs = jax.lax.scan(step, h0, (xs_t, mask_t), reverse=reverse)
+    return jnp.swapaxes(outs, 0, 1), hT

@@ -1,0 +1,30 @@
+"""HLO-text lowering helper.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. Lower with return_tuple=True and unwrap with
+to_tuple1()/tupled outputs on the Rust side.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_text(fn, example_args) -> str:
+    """jit-lower fn at the example argument shapes and render HLO text.
+
+    keep_unused=True: the Rust runtime feeds every manifest input
+    positionally, so argument pruning (jit's default) would desynchronize
+    the call signature (e.g. `encode` uses only 11 of 18 param tensors).
+    """
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    return to_hlo_text(lowered)

@@ -1,0 +1,20 @@
+# L1: Pallas kernels for the word2ket / word2ketXS reconstruction hot path.
+#
+# All kernels run with interpret=True — the CPU PJRT plugin cannot execute
+# Mosaic custom-calls, so interpret mode is the correctness path and the
+# BlockSpec structure documents the intended TPU HBM<->VMEM schedule
+# (DESIGN.md "Hardware adaptation").
+
+from .kron_tree import kron_pair, kron_pair_rank_sum, kron_tree_ranked
+from .xs_rows import xs_reconstruct_rows
+from .layernorm import layernorm
+from .attention import luong_attention
+
+__all__ = [
+    "kron_pair",
+    "kron_pair_rank_sum",
+    "kron_tree_ranked",
+    "xs_reconstruct_rows",
+    "layernorm",
+    "luong_attention",
+]

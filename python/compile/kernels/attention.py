@@ -1,0 +1,104 @@
+"""Luong dot attention kernel (Luong et al., 2015), the decoder's per-step
+hot loop in the paper's seq2seq models.
+
+For one decoder step: scores over encoder outputs, masked softmax, context.
+
+    score[b, t] = <h[b, :], enc[b, t, :]>
+    probs       = softmax(score + (mask - 1) * BIG)
+    ctx[b, :]   = Σ_t probs[b, t] * enc[b, t, :]
+
+One batch tile holds enc (B_blk, T, H), h (B_blk, H) in VMEM → ctx (B_blk, H).
+The two contractions are MXU-shaped (batched matvec); on TPU this is where
+the decode-path FLOPs live.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BATCH_BLOCK = 8
+NEG_BIG = -1e9
+
+
+def _attention_kernel(h_ref, enc_ref, mask_ref, ctx_ref, probs_ref):
+    h = h_ref[...]  # (B, H)
+    enc = enc_ref[...]  # (B, T, H)
+    mask = mask_ref[...]  # (B, T) 1.0 = valid
+    scores = jnp.einsum("bh,bth->bt", h, enc)
+    scores = jnp.where(mask > 0.5, scores, NEG_BIG)
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * mask
+    z = e.sum(axis=-1, keepdims=True)
+    probs = e / jnp.maximum(z, 1e-9)
+    ctx_ref[...] = jnp.einsum("bt,bth->bh", probs, enc)
+    probs_ref[...] = probs
+
+
+@jax.custom_vjp
+def luong_attention(h: jax.Array, enc: jax.Array, mask: jax.Array):
+    """One attention step.
+
+    h:    (B, H) decoder hidden state
+    enc:  (B, T, H) encoder outputs
+    mask: (B, T) 1.0 on real source tokens
+    Returns (context (B, H), probs (B, T)).
+
+    Forward is the Pallas kernel; backward is the analytic masked-softmax
+    attention gradient (mask is treated as non-differentiable).
+    """
+    return _attention_impl(h, enc, mask)
+
+
+def _attention_fwd(h, enc, mask):
+    ctx, probs = _attention_impl(h, enc, mask)
+    return (ctx, probs), (h, enc, probs)
+
+
+def _attention_bwd(res, grads):
+    h, enc, probs = res
+    g_ctx, g_probs = grads
+    # ctx = Σ_t P[t]·enc[t]
+    d_enc_from_ctx = probs[:, :, None] * g_ctx[:, None, :]  # (B, T, H)
+    dP = jnp.einsum("bh,bth->bt", g_ctx, enc) + g_probs
+    # softmax backward (P already zero on masked positions)
+    ds = probs * (dP - (probs * dP).sum(axis=-1, keepdims=True))
+    dh = jnp.einsum("bt,bth->bh", ds, enc)
+    d_enc = d_enc_from_ctx + ds[:, :, None] * h[:, None, :]
+    d_mask = jnp.zeros_like(probs)
+    return dh, d_enc, d_mask
+
+
+def _attention_impl(h: jax.Array, enc: jax.Array, mask: jax.Array):
+    assert h.ndim == 2 and enc.ndim == 3 and mask.ndim == 2
+    bsz, hdim = h.shape
+    t = enc.shape[1]
+    blk = min(BATCH_BLOCK, bsz)
+    pad = (-bsz) % blk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        enc = jnp.pad(enc, ((0, pad), (0, 0), (0, 0)))
+        # Padded rows get an all-invalid mask; softmax degrades to uniform-0
+        # but those rows are sliced away below.
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    ctx, probs = pl.pallas_call(
+        _attention_kernel,
+        grid=(h.shape[0] // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((blk, t, hdim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, t), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((blk, t), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h.shape[0], hdim), h.dtype),
+            jax.ShapeDtypeStruct((h.shape[0], t), h.dtype),
+        ],
+        interpret=True,
+    )(h, enc, mask)
+    return ctx[:bsz], probs[:bsz]
+
+
+luong_attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,180 @@
+"""Balanced-tree Kronecker product kernels (paper Fig. 1, §2.3).
+
+The reconstruction hot-spot of word2ket embeddings is the batched Kronecker
+product at each balanced-tree node:
+
+    out[b, i * Db + j] = a[b, i] * c[b, j]
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): one grid step holds a
+(B_blk, Da) left tile and (B_blk, Db) right tile in VMEM and emits the
+(B_blk, Da*Db) node output — an elementwise outer product, bandwidth-bound,
+never touching the MXU. The rank dimension is fused into the final tree level
+(`kron_pair_rank_sum`) so intermediate rank copies are never materialized in
+HBM: VMEM saving of (r-1)·p floats per row.
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls; the
+lowered HLO is plain elementwise code that XLA:CPU fuses well.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: 8 rows per grid step keeps the node output tile below
+# 8 * 1024 * 4B = 32 KiB VMEM even for p = 1024 embeddings.
+BATCH_BLOCK = 8
+
+
+def _kron_pair_kernel(a_ref, b_ref, o_ref):
+    """One batch tile: outer product flattened to the Kronecker layout."""
+    a = a_ref[...]  # (B_blk, Da)
+    b = b_ref[...]  # (B_blk, Db)
+    # (B, Da, 1) * (B, 1, Db) -> (B, Da, Db) -> (B, Da*Db)
+    prod = a[:, :, None] * b[:, None, :]
+    o_ref[...] = prod.reshape(a.shape[0], -1)
+
+
+def _kron_pair_impl(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched Kronecker product of vectors: (B, Da) ⊗ (B, Db) → (B, Da·Db)."""
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[0] == b.shape[0], (a.shape, b.shape)
+    bsz, da = a.shape
+    db = b.shape[1]
+    blk = min(BATCH_BLOCK, bsz)
+    # Pad batch to a multiple of the block.
+    pad = (-bsz) % blk
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    grid = (a.shape[0] // blk,)
+    out = pl.pallas_call(
+        _kron_pair_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, da), lambda i: (i, 0)),
+            pl.BlockSpec((blk, db), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, da * db), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], da * db), a.dtype),
+        interpret=True,
+    )(a, b)
+    return out[:bsz]
+
+
+# pallas_call has no autodiff rule (and interpret-mode Mosaic never will on
+# CPU), so the training graph needs explicit VJPs: forward runs the Pallas
+# kernel, backward is the analytic jnp expression. This is also the honest
+# TPU story — backward of an outer product is two reductions, MXU-free.
+
+
+@jax.custom_vjp
+def kron_pair(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched Kronecker product of vectors: (B, Da) ⊗ (B, Db) → (B, Da·Db)."""
+    return _kron_pair_impl(a, b)
+
+
+def _kron_pair_fwd(a, b):
+    return _kron_pair_impl(a, b), (a, b)
+
+
+def _kron_pair_bwd(res, g):
+    a, b = res
+    g3 = g.reshape(a.shape[0], a.shape[1], b.shape[1])
+    da = (g3 * b[:, None, :]).sum(axis=2)
+    db = (g3 * a[:, :, None]).sum(axis=1)
+    return da, db
+
+
+kron_pair.defvjp(_kron_pair_fwd, _kron_pair_bwd)
+
+
+def _kron_rank_sum_kernel(a_ref, b_ref, o_ref):
+    """Final tree level fused with the rank summation (eq. 3's Σ_k)."""
+    a = a_ref[...]  # (B_blk, R, Da)
+    b = b_ref[...]  # (B_blk, R, Db)
+    prod = a[:, :, :, None] * b[:, :, None, :]  # (B, R, Da, Db)
+    o_ref[...] = prod.sum(axis=1).reshape(a.shape[0], -1)
+
+
+def _kron_pair_rank_sum_impl(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Rank-fused root node: (B, R, Da) ⊗ (B, R, Db) summed over R → (B, Da·Db)."""
+    assert a.ndim == 3 and b.ndim == 3, (a.shape, b.shape)
+    assert a.shape[:2] == b.shape[:2], (a.shape, b.shape)
+    bsz, r, da = a.shape
+    db = b.shape[2]
+    blk = min(BATCH_BLOCK, bsz)
+    pad = (-bsz) % blk
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0), (0, 0)))
+    grid = (a.shape[0] // blk,)
+    out = pl.pallas_call(
+        _kron_rank_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, r, da), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, r, db), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, da * db), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], da * db), a.dtype),
+        interpret=True,
+    )(a, b)
+    return out[:bsz]
+
+
+@jax.custom_vjp
+def kron_pair_rank_sum(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Rank-fused root node: (B, R, Da) ⊗ (B, R, Db) summed over R → (B, Da·Db)."""
+    return _kron_pair_rank_sum_impl(a, b)
+
+
+def _kron_rank_fwd(a, b):
+    return _kron_pair_rank_sum_impl(a, b), (a, b)
+
+
+def _kron_rank_bwd(res, g):
+    a, b = res
+    bsz, r, da = a.shape
+    db = b.shape[2]
+    g4 = g.reshape(bsz, 1, da, db)
+    dga = (g4 * b[:, :, None, :]).sum(axis=3)  # (B, R, Da)
+    dgb = (g4 * a[:, :, :, None]).sum(axis=2)  # (B, R, Db)
+    return dga, dgb
+
+
+kron_pair_rank_sum.defvjp(_kron_rank_fwd, _kron_rank_bwd)
+
+
+def kron_tree_ranked(leaves: jax.Array, layernorm_nodes: bool = False) -> jax.Array:
+    """Full balanced-tree reconstruction with fused rank sum at the root.
+
+    leaves: (B, R, n, q) — per-example rank-R order-n CP leaves.
+    Returns (B, q**n).
+
+    Internal nodes optionally LayerNorm their output (paper §2.3). The rank
+    axis rides along through internal levels and is contracted by
+    `kron_pair_rank_sum` at the root (or by a plain sum when n == 1).
+    """
+    from .layernorm import layernorm
+
+    bsz, r, n, q = leaves.shape
+    # Current level: list of (B, R, width) arrays.
+    level = [leaves[:, :, j, :] for j in range(n)]
+    while len(level) > 2:
+        nxt = []
+        for i in range(0, len(level) - 1, 2):
+            a, c = level[i], level[i + 1]
+            da, db = a.shape[2], c.shape[2]
+            # Treat (B, R) as one batch axis for the pair kernel.
+            flat = kron_pair(a.reshape(bsz * r, da), c.reshape(bsz * r, db))
+            node = flat.reshape(bsz, r, da * db)
+            if layernorm_nodes:
+                node = layernorm(node.reshape(bsz * r, -1)).reshape(node.shape)
+            nxt.append(node)
+        if len(level) % 2 == 1:
+            nxt.append(level[-1])
+        level = nxt
+    if len(level) == 1:
+        return level[0].sum(axis=1)
+    return kron_pair_rank_sum(level[0], level[1])

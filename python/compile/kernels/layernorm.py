@@ -1,0 +1,66 @@
+"""Pallas LayerNorm kernel (no learned affine), used at the internal nodes of
+the word2ket balanced tree (paper §2.3: LayerNorm tames the gradient Lipschitz
+constant of chained tensor products).
+
+One grid step normalizes a (B_blk, D) tile held in VMEM — mean/variance are
+per-row reductions over the minor axis, ideal for the TPU VPU; no MXU use.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BATCH_BLOCK = 8
+EPS = 1e-5
+
+
+def _layernorm_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + EPS)
+
+
+@jax.custom_vjp
+def layernorm(x: jax.Array) -> jax.Array:
+    """Row-wise LayerNorm of a (B, D) array (eps=1e-5, no affine).
+
+    Forward runs the Pallas kernel; backward is the analytic LN gradient
+    (pallas_call has no autodiff rule in interpret mode).
+    """
+    return _layernorm_impl(x)
+
+
+def _layernorm_fwd(x):
+    return _layernorm_impl(x), x
+
+
+def _layernorm_bwd(x, g):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mean) * inv
+    gm = g.mean(axis=-1, keepdims=True)
+    gx = (g * xhat).mean(axis=-1, keepdims=True)
+    return (inv * (g - gm - xhat * gx),)
+
+
+def _layernorm_impl(x: jax.Array) -> jax.Array:
+    assert x.ndim == 2, x.shape
+    bsz, d = x.shape
+    blk = min(BATCH_BLOCK, bsz)
+    pad = (-bsz) % blk
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _layernorm_kernel,
+        grid=(x.shape[0] // blk,),
+        in_specs=[pl.BlockSpec((blk, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+    return out[:bsz]
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

@@ -1,0 +1,140 @@
+"""L2 seq2seq model: bidirectional GRU encoder + Luong-attention GRU decoder
+(the paper's GIGAWORD / IWSLT architecture, Texar-style, scaled for CPU).
+
+Three lowered entry points per (task, embedding) variant:
+  train_step : params, m, v, src, tgt, tgt_mask, step, lr
+               → new params/m/v, loss
+  encode     : params, src → enc_proj (B,T,H), src_mask (B,T), h0 (B,H)
+  decode_step: params, enc_proj, src_mask, prev_tok, h
+               → next_tok (argmax), h', logits
+
+The source/target share one vocabulary and one (possibly compressed)
+embedding table — matching the paper's single-#Params accounting per model.
+The pre-softmax output projection stays dense (§4: "the matrix of word
+probabilities prior to the last softmax ... not compressed by our method").
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import adam, gru
+from .embeddings import EmbSpec, lookup
+from .kernels import luong_attention
+
+PAD = 0
+BOS = 2
+EOS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Seq2SeqSpec:
+    emb: EmbSpec
+    hidden: int
+    batch: int
+    src_len: int
+    tgt_len: int
+    clip: float = 1.0
+
+    @property
+    def vocab(self) -> int:
+        return self.emb.vocab
+
+
+def param_specs(spec: Seq2SeqSpec):
+    """Ordered [(name, shape, init)] for every trainable tensor."""
+    h = spec.hidden
+    e = spec.emb.effective_dim
+    a = lambda fan_in: {"dist": "uniform", "a": math.sqrt(3.0 / fan_in)}
+    out = []
+    out += spec.emb.param_specs()
+    out += gru.cell_specs("enc_fwd", e, h)
+    out += gru.cell_specs("enc_bwd", e, h)
+    # encoder output projection 2H → H (attention memory)
+    out += [("enc_proj/w", (2 * h, h), a(2 * h)), ("enc_proj/b", (h,), {"dist": "zeros"})]
+    # decoder initial state from final fwd/bwd states
+    out += [("dec_init/w", (2 * h, h), a(2 * h)), ("dec_init/b", (h,), {"dist": "zeros"})]
+    # decoder GRU input = [emb, prev context]
+    out += gru.cell_specs("dec", e + h, h)
+    # attentional combine [h, ctx] → h
+    out += [("combine/w", (2 * h, h), a(2 * h)), ("combine/b", (h,), {"dist": "zeros"})]
+    # output projection (dense, uncompressed per the paper)
+    out += [("out/w", (h, spec.vocab), a(h)), ("out/b", (spec.vocab,), {"dist": "zeros"})]
+    return out
+
+
+def encode(spec: Seq2SeqSpec, params: dict, src: jax.Array):
+    """src (B, T) int32 → (enc_proj (B,T,H), src_mask (B,T) f32, h0 (B,H))."""
+    mask = (src != PAD).astype(jnp.float32)
+    emb = lookup(spec.emb, params, src)  # (B, T, E)
+    b = src.shape[0]
+    h_init = jnp.zeros((b, spec.hidden), emb.dtype)
+    fwd, h_fwd = gru.run(params, "enc_fwd", emb, h_init, mask)
+    bwd, h_bwd = gru.run(params, "enc_bwd", emb, h_init, mask, reverse=True)
+    enc = jnp.concatenate([fwd, bwd], axis=-1)  # (B, T, 2H)
+    enc_proj = jnp.tanh(enc @ params["enc_proj/w"] + params["enc_proj/b"])
+    h0 = jnp.tanh(
+        jnp.concatenate([h_fwd, h_bwd], axis=-1) @ params["dec_init/w"]
+        + params["dec_init/b"]
+    )
+    return enc_proj, mask, h0
+
+
+def _decoder_step(spec: Seq2SeqSpec, params: dict, tok_emb, h, enc_proj, src_mask):
+    """Shared per-step decoder computation → (h', attn_h)."""
+    ctx, _probs = luong_attention(h, enc_proj, src_mask)
+    x = jnp.concatenate([tok_emb, ctx], axis=-1)
+    h_new = gru.cell_step(params, "dec", x, h)
+    ctx2, _ = luong_attention(h_new, enc_proj, src_mask)
+    attn_h = jnp.tanh(
+        jnp.concatenate([h_new, ctx2], axis=-1) @ params["combine/w"] + params["combine/b"]
+    )
+    return h_new, attn_h
+
+
+def logits_from_attn(params: dict, attn_h: jax.Array) -> jax.Array:
+    return attn_h @ params["out/w"] + params["out/b"]
+
+
+def loss_fn(spec: Seq2SeqSpec, params: dict, src, tgt, tgt_mask):
+    """Teacher-forced masked cross-entropy.
+
+    tgt (B, Tt) includes BOS...EOS; positions predicting tgt[:, 1:] are live
+    where tgt_mask[:, :-1] is 1.
+    """
+    enc_proj, src_mask, h0 = encode(spec, params, src)
+    tgt_in = tgt[:, :-1]  # (B, Tt-1)
+    tgt_out = tgt[:, 1:]
+    emb = lookup(spec.emb, params, tgt_in)  # (B, Tt-1, E)
+    emb_t = jnp.swapaxes(emb, 0, 1)  # (Tt-1, B, E)
+
+    def step(h, e_t):
+        h_new, attn_h = _decoder_step(spec, params, e_t, h, enc_proj, src_mask)
+        return h_new, attn_h
+
+    _, attn_seq = jax.lax.scan(step, h0, emb_t)  # (Tt-1, B, H)
+    attn_seq = jnp.swapaxes(attn_seq, 0, 1)  # (B, Tt-1, H)
+    logits = logits_from_attn(params, attn_seq)  # (B, Tt-1, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt_out[:, :, None], axis=-1)[:, :, 0]
+    mask = tgt_mask[:, : nll.shape[1]]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_step(spec: Seq2SeqSpec, params, m, v, src, tgt, tgt_mask, step, lr):
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(spec, p, src, tgt, tgt_mask)
+    )(params)
+    new_params, new_m, new_v = adam.update(params, grads, m, v, step, lr, spec.clip)
+    return new_params, new_m, new_v, loss
+
+
+def decode_step(spec: Seq2SeqSpec, params, enc_proj, src_mask, prev_tok, h):
+    """Greedy decode one step: returns (next_tok (B,) int32, h', logits)."""
+    emb = lookup(spec.emb, params, prev_tok)  # (B, E)
+    h_new, attn_h = _decoder_step(spec, params, emb, h, enc_proj, src_mask)
+    logits = logits_from_attn(params, attn_h)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, h_new, logits

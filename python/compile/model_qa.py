@@ -1,0 +1,112 @@
+"""L2 QA reader: DrQA-style extractive span model (paper Table 3 / Fig. 2),
+scaled for CPU — biGRU context and question encoders, masked-mean question
+pooling, bilinear start/end span scorers.
+
+Lowered entry points per variant:
+  train_step : params, m, v, ctx, q, start, end, step, lr → updated, loss
+  predict    : params, ctx, q → (start_idx (B,), end_idx (B,))
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import adam, gru
+from .embeddings import EmbSpec, lookup
+
+PAD = 0
+NEG_BIG = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class QaSpec:
+    emb: EmbSpec
+    hidden: int
+    batch: int
+    ctx_len: int
+    q_len: int
+    max_answer_len: int = 4
+    clip: float = 1.0
+
+    @property
+    def vocab(self) -> int:
+        return self.emb.vocab
+
+
+def param_specs(spec: QaSpec):
+    h = spec.hidden
+    e = spec.emb.effective_dim
+    a = lambda fan_in: {"dist": "uniform", "a": math.sqrt(3.0 / fan_in)}
+    out = []
+    out += spec.emb.param_specs()
+    out += gru.cell_specs("ctx_fwd", e, h)
+    out += gru.cell_specs("ctx_bwd", e, h)
+    out += gru.cell_specs("q_fwd", e, h)
+    out += gru.cell_specs("q_bwd", e, h)
+    # bilinear span scorers: score = ctx_h · W · q_vec
+    out += [("span_start/w", (2 * h, 2 * h), a(2 * h))]
+    out += [("span_end/w", (2 * h, 2 * h), a(2 * h))]
+    return out
+
+
+def _encode(spec: QaSpec, params: dict, ctx: jax.Array, q: jax.Array):
+    """→ (ctx_h (B,Tc,2H), ctx_mask, q_vec (B,2H))."""
+    ctx_mask = (ctx != PAD).astype(jnp.float32)
+    q_mask = (q != PAD).astype(jnp.float32)
+    b = ctx.shape[0]
+    h0 = jnp.zeros((b, spec.hidden), jnp.float32)
+
+    ce = lookup(spec.emb, params, ctx)
+    cf, _ = gru.run(params, "ctx_fwd", ce, h0, ctx_mask)
+    cb, _ = gru.run(params, "ctx_bwd", ce, h0, ctx_mask, reverse=True)
+    ctx_h = jnp.concatenate([cf, cb], axis=-1)  # (B, Tc, 2H)
+
+    qe = lookup(spec.emb, params, q)
+    qf, _ = gru.run(params, "q_fwd", qe, h0, q_mask)
+    qb, _ = gru.run(params, "q_bwd", qe, h0, q_mask, reverse=True)
+    q_h = jnp.concatenate([qf, qb], axis=-1)  # (B, Tq, 2H)
+    denom = jnp.maximum(q_mask.sum(axis=1, keepdims=True), 1.0)
+    q_vec = (q_h * q_mask[:, :, None]).sum(axis=1) / denom  # (B, 2H)
+    return ctx_h, ctx_mask, q_vec
+
+
+def _span_logits(spec: QaSpec, params: dict, ctx_h, ctx_mask, q_vec):
+    s = jnp.einsum("bth,hk,bk->bt", ctx_h, params["span_start/w"], q_vec)
+    e = jnp.einsum("bth,hk,bk->bt", ctx_h, params["span_end/w"], q_vec)
+    s = jnp.where(ctx_mask > 0.5, s, NEG_BIG)
+    e = jnp.where(ctx_mask > 0.5, e, NEG_BIG)
+    return s, e
+
+
+def loss_fn(spec: QaSpec, params, ctx, q, start, end):
+    ctx_h, ctx_mask, q_vec = _encode(spec, params, ctx, q)
+    s_logits, e_logits = _span_logits(spec, params, ctx_h, ctx_mask, q_vec)
+    s_logp = jax.nn.log_softmax(s_logits, axis=-1)
+    e_logp = jax.nn.log_softmax(e_logits, axis=-1)
+    s_nll = -jnp.take_along_axis(s_logp, start[:, None], axis=-1)[:, 0]
+    e_nll = -jnp.take_along_axis(e_logp, end[:, None], axis=-1)[:, 0]
+    return (s_nll + e_nll).mean()
+
+
+def train_step(spec: QaSpec, params, m, v, ctx, q, start, end, step, lr):
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(spec, p, ctx, q, start, end)
+    )(params)
+    new_params, new_m, new_v = adam.update(params, grads, m, v, step, lr, spec.clip)
+    return new_params, new_m, new_v, loss
+
+
+def predict(spec: QaSpec, params, ctx, q):
+    """Greedy constrained span: best start, then best end within
+    [start, start + max_answer_len)."""
+    ctx_h, ctx_mask, q_vec = _encode(spec, params, ctx, q)
+    s_logits, e_logits = _span_logits(spec, params, ctx_h, ctx_mask, q_vec)
+    start = jnp.argmax(s_logits, axis=-1).astype(jnp.int32)  # (B,)
+    t = ctx.shape[1]
+    pos = jnp.arange(t)[None, :]
+    window = (pos >= start[:, None]) & (pos < start[:, None] + spec.max_answer_len)
+    e_masked = jnp.where(window, e_logits, NEG_BIG)
+    end = jnp.argmax(e_masked, axis=-1).astype(jnp.int32)
+    return start, end

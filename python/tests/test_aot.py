@@ -1,0 +1,110 @@
+"""AOT pipeline: manifest integrity, HLO text well-formedness, variant
+registry coverage of the paper's tables, incremental-build hash."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import kernel_artifacts, source_hash, spec_manifest, variants
+from compile.hlo import lower_to_text
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_variant_registry_covers_paper_tables():
+    v = variants()
+    # Table 1 mirror
+    for name in ["sum_regular", "sum_w2k_o4r1", "sum_xs_o2r10", "sum_xs_o4r1"]:
+        assert name in v
+    # Table 2 mirror
+    for name in ["mt_regular", "mt_xs_o2r30", "mt_xs_o2r10", "mt_xs_o3r10"]:
+        assert name in v
+    # Table 3 mirror
+    for name in ["qa_regular", "qa_xs_o2r2", "qa_xs_o4r1"]:
+        assert name in v
+    assert len(v) == 11
+
+
+def test_spec_manifest_structure():
+    v = variants()
+    task, spec = v["sum_xs_o2r10"]
+    m = spec_manifest(task, spec)
+    assert m["dims"]["task"] == "sum"
+    assert m["embedding"]["kind"] == "xs"
+    assert m["embedding"]["rank"] == 10
+    names = [p["name"] for p in m["params"]]
+    assert "emb/factors" in names
+    assert "out/w" in names
+    for p in m["params"]:
+        assert p["init"]["dist"] in ("uniform", "zeros", "ones")
+        if p["init"]["dist"] == "uniform":
+            assert p["init"]["a"] > 0
+
+
+def test_lowering_produces_parseable_hlo_text():
+    import jax.numpy as jnp
+    import jax
+
+    def fn(x, y):
+        return (jnp.dot(x, y),)
+
+    text = lower_to_text(fn, [jax.ShapeDtypeStruct((2, 3), jnp.float32),
+                              jax.ShapeDtypeStruct((3, 2), jnp.float32)])
+    assert "ENTRY" in text
+    assert "f32[2,3]" in text
+    assert "dot" in text
+
+
+def test_kernel_artifacts_registry():
+    arts = kernel_artifacts()
+    assert set(arts) == {
+        "kernel_kron_pair",
+        "kernel_xs_rows",
+        "kernel_layernorm",
+        "kernel_attention",
+    }
+
+
+def test_source_hash_stable():
+    assert source_hash() == source_hash()
+    assert len(source_hash()) == 64
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_consistent_with_registry():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        m = json.load(f)
+    v = variants()
+    assert set(m["variants"]) == set(v)
+    for name, entry in m["variants"].items():
+        task, spec = v[name]
+        # Shapes in the manifest must match the current registry.
+        fresh = spec_manifest(task, spec)
+        assert entry["dims"] == fresh["dims"], f"{name} dims drift"
+        assert entry["params"] == fresh["params"], f"{name} params drift"
+        for fname, finfo in entry["functions"].items():
+            path = os.path.join(ART_DIR, finfo["file"])
+            assert os.path.exists(path), f"missing {finfo['file']}"
+            with open(path) as fh:
+                head = fh.read(4096)
+            assert "ENTRY" in head or "HloModule" in head
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_hash_current():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["source_hash"] == source_hash(), (
+        "artifacts stale vs python/compile sources — run `make artifacts`"
+    )
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,138 @@
+"""L2 embedding modules: lookup semantics per eq. 3 / eq. 4, param-count
+formulas, and agreement with manual reconstruction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.embeddings import EmbSpec, ceil_root, lookup
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def init_params(spec, seed=0):
+    params = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape, init in spec.param_specs():
+        key, sub = jax.random.split(key)
+        if init["dist"] == "uniform":
+            params[name] = jax.random.uniform(sub, shape, minval=-init["a"], maxval=init["a"])
+        else:
+            params[name] = jnp.zeros(shape)
+    return params
+
+
+def test_ceil_root_matches_paper():
+    assert ceil_root(118_655, 2) == 345
+    assert ceil_root(118_655, 4) == 19
+    assert ceil_root(300, 4) == 5
+    assert ceil_root(300, 2) == 18
+    assert ceil_root(30_428, 4) == 14
+
+
+def test_param_counts_match_paper_formulas():
+    # Table 3: XS 4/1 over 118,655×300 → 380 params (four 19×5 matrices).
+    spec = EmbSpec("xs", 118_655, 300, 4, 1)
+    assert spec.num_params() == 380
+    spec = EmbSpec("xs", 118_655, 300, 2, 2)
+    assert spec.num_params() == 24_840
+    # Table 1: w2k 4/1 over 30,428×256 → 486,848.
+    spec = EmbSpec("w2k", 30_428, 256, 4, 1)
+    assert spec.num_params() == 486_848
+
+
+@settings(**SETTINGS)
+@given(
+    vocab=st.integers(4, 200),
+    dim=st.sampled_from([4, 8, 16, 27]),
+    order=st.integers(2, 3),
+    rank=st.integers(1, 3),
+)
+def test_xs_lookup_matches_manual_kron(vocab, dim, order, rank):
+    spec = EmbSpec("xs", vocab, dim, order, rank)
+    params = init_params(spec)
+    factors = np.array(params["emb/factors"])  # (r, n, t, q)
+    t, q, n = spec.t, spec.q, spec.order
+    ids = np.array([0, vocab - 1, vocab // 2], dtype=np.int32)
+    got = np.array(lookup(spec, params, jnp.array(ids)))
+    for bi, wid in enumerate(ids):
+        # big-endian digit decode
+        digits = []
+        x = int(wid)
+        for j in range(n):
+            w = t ** (n - 1 - j)
+            digits.append((x // w) % t)
+        expect = np.zeros(q**n, dtype=np.float64)
+        for k in range(rank):
+            acc = np.array([1.0])
+            for j in range(n):
+                acc = np.kron(acc, factors[k, j, digits[j], :])
+            expect += acc
+        np.testing.assert_allclose(got[bi], expect, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(vocab=st.integers(4, 60), order=st.integers(2, 3), rank=st.integers(1, 3))
+def test_w2k_lookup_matches_manual(vocab, order, rank):
+    dim = 3**order
+    spec = EmbSpec("w2k", vocab, dim, order, rank)
+    object.__setattr__(spec, "layernorm", False) if False else None
+    spec = EmbSpec("w2k", vocab, dim, order, rank, layernorm=False)
+    params = init_params(spec)
+    leaves = np.array(params["emb/leaves"])  # (V, r, n, q)
+    wid = vocab // 3
+    got = np.array(lookup(spec, params, jnp.array([wid], dtype=jnp.int32)))[0]
+    expect = np.zeros(dim)
+    for k in range(rank):
+        acc = np.array([1.0])
+        for j in range(order):
+            acc = np.kron(acc, leaves[wid, k, j, :])
+        expect += acc
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_regular_lookup_is_row_select():
+    spec = EmbSpec("regular", 10, 8)
+    params = init_params(spec)
+    ids = jnp.array([3, 7], dtype=jnp.int32)
+    got = lookup(spec, params, ids)
+    np.testing.assert_allclose(got[0], params["emb/table"][3])
+    np.testing.assert_allclose(got[1], params["emb/table"][7])
+
+
+def test_lookup_preserves_leading_shape():
+    spec = EmbSpec("xs", 100, 16, 2, 2)
+    params = init_params(spec)
+    ids = jnp.zeros((4, 7), dtype=jnp.int32)
+    out = lookup(spec, params, ids)
+    assert out.shape == (4, 7, spec.effective_dim)
+
+
+def test_lookup_differentiable():
+    spec = EmbSpec("xs", 50, 16, 2, 2)
+    params = init_params(spec)
+    ids = jnp.array([1, 2, 3], dtype=jnp.int32)
+
+    def loss(p):
+        return (lookup(spec, p, ids) ** 2).sum()
+
+    g = jax.grad(loss)(params)
+    assert g["emb/factors"].shape == params["emb/factors"].shape
+    assert float(jnp.abs(g["emb/factors"]).sum()) > 0.0
+
+
+def test_w2k_layernorm_changes_output():
+    base = EmbSpec("w2k", 20, 16, 4, 2, layernorm=False)
+    ln = EmbSpec("w2k", 20, 16, 4, 2, layernorm=True)
+    params = init_params(base)
+    ids = jnp.array([5], dtype=jnp.int32)
+    a = lookup(base, params, ids)
+    b = lookup(ln, params, ids)
+    assert not np.allclose(np.array(a), np.array(b))
+    assert np.isfinite(np.array(b)).all()
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

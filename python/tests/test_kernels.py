@@ -1,0 +1,216 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, hypothesis-swept over
+shapes and dtypes, plus gradient checks of the custom VJPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    kron_pair,
+    kron_pair_rank_sum,
+    kron_tree_ranked,
+    layernorm,
+    luong_attention,
+    xs_reconstruct_rows,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward agreement, hypothesis-swept shapes
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 33),
+    da=st.integers(1, 9),
+    db=st.integers(1, 9),
+)
+def test_kron_pair_matches_ref(b, da, db):
+    a = rand(b * 31 + da, (b, da))
+    c = rand(b * 17 + db, (b, db))
+    np.testing.assert_allclose(kron_pair(a, c), ref.kron_pair_ref(a, c), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 17),
+    r=st.integers(1, 5),
+    da=st.integers(1, 6),
+    db=st.integers(1, 6),
+)
+def test_kron_rank_sum_matches_ref(b, r, da, db):
+    a = rand(b + r, (b, r, da))
+    c = rand(b * r + 3, (b, r, db))
+    np.testing.assert_allclose(
+        kron_pair_rank_sum(a, c), ref.kron_pair_rank_sum_ref(a, c), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 9),
+    r=st.integers(1, 4),
+    n=st.integers(1, 4),
+    q=st.integers(2, 5),
+    ln=st.booleans(),
+)
+def test_kron_tree_matches_ref(b, r, n, q, ln):
+    leaves = rand(b * n + q, (b, r, n, q))
+    got = kron_tree_ranked(leaves, layernorm_nodes=ln)
+    want = ref.kron_tree_ranked_ref(leaves, layernorm_nodes=ln)
+    assert got.shape == (b, q**n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 9),
+    r=st.integers(1, 4),
+    n=st.integers(1, 4),
+    q=st.integers(2, 5),
+)
+def test_xs_rows_matches_ref(b, r, n, q):
+    cols = rand(b + 7 * q, (b, r, n, q))
+    got = xs_reconstruct_rows(cols)
+    want = ref.xs_reconstruct_rows_ref(cols)
+    assert got.shape == (b, q**n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 33), d=st.integers(2, 65))
+def test_layernorm_matches_ref(b, d):
+    x = rand(b * d, (b, d))
+    np.testing.assert_allclose(layernorm(x), ref.layernorm_ref(x), rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 9), t=st.integers(1, 12), h=st.integers(1, 16), valid=st.integers(1, 12))
+def test_attention_matches_ref(b, t, h, valid):
+    hq = rand(b + h, (b, h))
+    enc = rand(t + h, (b, t, h))
+    mask = jnp.zeros((b, t)).at[:, : min(valid, t)].set(1.0)
+    c1, p1 = luong_attention(hq, enc, mask)
+    c2, p2 = ref.luong_attention_ref(hq, enc, mask)
+    np.testing.assert_allclose(c1, c2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+
+def test_kron_norm_multiplicative():
+    a = rand(0, (4, 6))
+    b = rand(1, (4, 5))
+    kp = kron_pair(a, b)
+    na = jnp.linalg.norm(a, axis=1)
+    nb = jnp.linalg.norm(b, axis=1)
+    np.testing.assert_allclose(jnp.linalg.norm(kp, axis=1), na * nb, rtol=1e-5)
+
+
+def test_attention_probs_normalized_and_masked():
+    h = rand(2, (5, 8))
+    enc = rand(3, (5, 7, 8))
+    mask = jnp.zeros((5, 7)).at[:, :3].set(1.0)
+    _, probs = luong_attention(h, enc, mask)
+    np.testing.assert_allclose(probs.sum(axis=1), np.ones(5), rtol=1e-5)
+    assert float(jnp.abs(probs[:, 3:]).max()) < 1e-7
+
+
+def test_layernorm_row_stats():
+    x = rand(4, (6, 32)) * 5.0 + 3.0
+    y = layernorm(x)
+    np.testing.assert_allclose(y.mean(axis=1), np.zeros(6), atol=1e-5)
+    np.testing.assert_allclose(y.std(axis=1), np.ones(6), atol=1e-2)
+
+
+def test_tree_equals_chain_without_ln():
+    # Balanced tree (kernel) == left chain (ref) by associativity.
+    leaves = rand(9, (3, 2, 4, 3))
+    got = kron_tree_ranked(leaves, layernorm_nodes=False)
+    want = ref.xs_reconstruct_rows_ref(leaves)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradients (custom VJPs vs jnp autodiff of the refs)
+# ---------------------------------------------------------------------------
+
+
+def _gradcheck(f, fr, args, tol=5e-3):
+    g1 = jax.grad(lambda *a: (f(*a) ** 2).sum())(*args)
+    g2 = jax.grad(lambda *a: (fr(*a) ** 2).sum())(*args)
+    np.testing.assert_allclose(g1, g2, rtol=tol, atol=tol)
+
+
+def test_grad_kron_pair():
+    _gradcheck(kron_pair, ref.kron_pair_ref, (rand(0, (4, 5)), rand(1, (4, 3))))
+
+
+def test_grad_rank_sum():
+    _gradcheck(
+        kron_pair_rank_sum,
+        ref.kron_pair_rank_sum_ref,
+        (rand(2, (3, 2, 4)), rand(3, (3, 2, 5))),
+    )
+
+
+def test_grad_layernorm():
+    _gradcheck(layernorm, ref.layernorm_ref, (rand(4, (5, 16)),))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 4), q=st.integers(2, 4), r=st.integers(1, 3))
+def test_grad_xs_rows_swept(n, q, r):
+    cols = rand(n * q + r, (3, r, n, q))
+    _gradcheck(xs_reconstruct_rows, ref.xs_reconstruct_rows_ref, (cols,))
+
+
+def test_grad_tree_with_layernorm():
+    leaves = rand(7, (2, 2, 4, 3))
+    _gradcheck(
+        lambda l: kron_tree_ranked(l, True),
+        lambda l: ref.kron_tree_ranked_ref(l, True),
+        (leaves,),
+    )
+
+
+def test_grad_attention():
+    h, enc = rand(0, (3, 6)), rand(1, (3, 5, 6))
+    mask = jnp.ones((3, 5)).at[:, 4:].set(0.0)
+    _gradcheck(
+        lambda h, e: luong_attention(h, e, mask)[0],
+        lambda h, e: ref.luong_attention_ref(h, e, mask)[0],
+        (h, enc),
+    )
+
+
+def test_grad_finite_differences_spot():
+    # Independent FD check, not via ref autodiff.
+    cols = np.array(rand(5, (1, 1, 2, 3)))
+    f = lambda c: float((xs_reconstruct_rows(jnp.array(c)) ** 2).sum())
+    g = np.array(jax.grad(lambda c: (xs_reconstruct_rows(c) ** 2).sum())(jnp.array(cols)))
+    eps = 1e-3
+    for idx in [(0, 0, 0, 0), (0, 0, 1, 2)]:
+        cp = cols.copy()
+        cp[idx] += eps
+        cm = cols.copy()
+        cm[idx] -= eps
+        fd = (f(cp) - f(cm)) / (2 * eps)
+        assert abs(fd - g[idx]) < 5e-2, f"fd {fd} vs grad {g[idx]} at {idx}"
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,68 @@
+//! Shared helpers for the table/figure benches.
+//!
+//! `cargo bench` compiles each bench as `harness = false`; they use the
+//! crate's own bench substrate (word2ket::bench) and this module for the
+//! experiment plumbing shared across tables.
+
+use word2ket::config::{EmbeddingKind, ExperimentConfig, TaskKind};
+use word2ket::coordinator::experiment::{resolve_variant, run_with, Report};
+use word2ket::runtime::{Engine, Manifest, ParamStore};
+use std::path::Path;
+
+/// Steps scale: W2K_BENCH_FAST=1 cuts training to smoke-test length.
+pub fn steps(full: usize) -> usize {
+    if std::env::var("W2K_BENCH_FAST").is_ok() {
+        (full / 20).max(4)
+    } else {
+        full
+    }
+}
+
+/// Build a config for a (task, embedding) cell of a paper table.
+pub fn cell_config(
+    task: TaskKind,
+    kind: EmbeddingKind,
+    order: usize,
+    rank: usize,
+    train_steps: usize,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("{}-{}-o{}r{}", task.tag(), kind.name(), order, rank);
+    cfg.task = task;
+    cfg.embedding.kind = kind;
+    cfg.embedding.order = order;
+    cfg.embedding.rank = rank;
+    cfg.train.steps = train_steps;
+    cfg.train.eval_every = 0; // benches only need the final metric
+    cfg.train.warmup = 0;
+    cfg.train.lr = 5e-3;
+    cfg.corpus.train = 2000;
+    cfg.corpus.valid = 100;
+    cfg.corpus.test = 100;
+    cfg
+}
+
+/// Run one experiment cell, reusing a shared Engine.
+pub fn run_cell(engine: &Engine, manifest: &Manifest, cfg: &ExperimentConfig) -> Report {
+    let variant = resolve_variant(cfg, manifest).expect("variant in manifest");
+    let mut store = ParamStore::init(&variant.params, cfg.train.seed);
+    run_with(cfg, engine, variant, &mut store, false).expect("experiment")
+}
+
+/// Open engine + manifest at the default artifacts dir.
+pub fn open_runtime() -> (Engine, Manifest) {
+    let dir = Path::new("artifacts");
+    let engine = Engine::cpu(dir).expect("PJRT engine (run `make artifacts` first)");
+    let manifest = Manifest::load(dir).expect("manifest.json (run `make artifacts`)");
+    (engine, manifest)
+}
+
+/// Pull a named metric out of a report.
+pub fn metric(report: &Report, name: &str) -> f64 {
+    report
+        .final_metrics
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| *v)
+        .unwrap_or(0.0)
+}

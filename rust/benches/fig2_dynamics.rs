@@ -1,0 +1,100 @@
+//! Bench: paper Fig. 2 — test-set F1 dynamics during training on SQuAD for
+//! regular vs word2ketXS 2/2 vs word2ketXS 4/1. Paper shape: all three
+//! converge along similar trajectories, XS 4/1 slightly below.
+//!
+//! Emits the three curves as aligned series (step → F1), ASCII-plotted.
+//!
+//! Run: cargo bench --bench fig2_dynamics    (W2K_BENCH_FAST=1 to smoke)
+
+mod common;
+
+use word2ket::config::{EmbeddingKind, TaskKind};
+
+fn ascii_plot(curves: &[(&str, Vec<(usize, f64)>)]) -> String {
+    // 60×16 character plot, F1 range [0, 100].
+    const W: usize = 64;
+    const H: usize = 16;
+    let max_step = curves
+        .iter()
+        .flat_map(|(_, c)| c.iter().map(|&(s, _)| s))
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let mut grid = vec![vec![' '; W]; H];
+    let marks = ['R', 'x', '4'];
+    for (ci, (_, curve)) in curves.iter().enumerate() {
+        for &(step, f1) in curve {
+            let x = (step * (W - 1)) / max_step;
+            let y = ((f1.clamp(0.0, 100.0) / 100.0) * (H - 1) as f64).round() as usize;
+            grid[H - 1 - y][x] = marks[ci % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str("F1\n");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            "100".to_string()
+        } else if i == H - 1 {
+            "  0".to_string()
+        } else {
+            "   ".to_string()
+        };
+        out.push_str(&format!("{label}|{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("   +{}\n    0 {:>56}\n", "-".repeat(W), format!("steps → {max_step}")));
+    out
+}
+
+fn main() {
+    let steps = common::steps(600);
+    let eval_every = (steps / 8).max(1);
+    println!("\n=== Fig. 2: F1 training dynamics (eval every {eval_every} steps) ===");
+    println!("paper: regular ≈ XS 2/2, XS 4/1 slightly below; all converge\n");
+
+    let (engine, manifest) = common::open_runtime();
+    let variants = [
+        ("Regular    (R)", EmbeddingKind::Regular, 1, 1),
+        ("XS 2/2     (x)", EmbeddingKind::Word2KetXS, 2, 2),
+        ("XS 4/1     (4)", EmbeddingKind::Word2KetXS, 4, 1),
+    ];
+
+    let mut curves = Vec::new();
+    for (label, kind, order, rank) in variants {
+        let mut cfg = common::cell_config(TaskKind::Qa, kind, order, rank, steps);
+        cfg.train.eval_every = eval_every;
+        eprintln!("[fig2] training {label} ...");
+        let r = common::run_cell(&engine, &manifest, &cfg);
+        let curve: Vec<(usize, f64)> = r.curve.iter().map(|p| (p.step, p.primary)).collect();
+        curves.push((label, curve));
+    }
+
+    for (label, curve) in &curves {
+        println!(
+            "{label}: {}",
+            curve
+                .iter()
+                .map(|(s, f)| format!("@{s}:{f:.1}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+    }
+    println!();
+    let named: Vec<(&str, Vec<(usize, f64)>)> =
+        curves.iter().map(|(l, c)| (*l, c.clone())).collect();
+    println!("{}", ascii_plot(&named));
+
+    // Shape: final F1 of XS 2/2 within 15 of regular; all curves monotone-ish
+    // (final >= first).
+    let finals: Vec<f64> = curves.iter().map(|(_, c)| c.last().map(|x| x.1).unwrap_or(0.0)).collect();
+    let firsts: Vec<f64> = curves.iter().map(|(_, c)| c.first().map(|x| x.1).unwrap_or(0.0)).collect();
+    println!("shape checks:");
+    println!(
+        "  curves improve over training: {}",
+        if finals.iter().zip(&firsts).all(|(f, s)| f + 1e-9 >= *s) { "OK" } else { "MIXED (short run)" }
+    );
+    println!(
+        "  XS 2/2 final ({:.1}) within 15 F1 of regular ({:.1}): {}",
+        finals[1], finals[0],
+        if finals[1] + 15.0 >= finals[0] { "OK" } else { "VIOLATED" }
+    );
+}

@@ -1,0 +1,75 @@
+//! Bench: paper Fig. 3 — qualitative QA predictions from the order-4 rank-1
+//! word2ketXS model whose *entire embedding table is 72 parameters* at our
+//! scale (380 at paper scale — four 19×5 matrices; reproduced exactly in
+//! the space_saving bench).
+//!
+//! Trains briefly, then prints context / question / gold / prediction
+//! samples in the figure's format.
+//!
+//! Run: cargo bench --bench fig3_qualitative    (W2K_BENCH_FAST=1 to smoke)
+
+mod common;
+
+use word2ket::config::{EmbeddingKind, TaskKind};
+use word2ket::coordinator::experiment::resolve_variant;
+use word2ket::coordinator::tasks::prepare_qa;
+use word2ket::coordinator::trainer::predict_spans;
+use word2ket::metrics::{qa_f1, exact_match};
+use word2ket::runtime::ParamStore;
+use word2ket::text::detokenize;
+
+fn main() {
+    let steps = common::steps(700);
+    println!("\n=== Fig. 3: qualitative predictions from a 72-parameter embedding ===\n");
+
+    let (engine, manifest) = common::open_runtime();
+    let cfg = common::cell_config(TaskKind::Qa, EmbeddingKind::Word2KetXS, 4, 1, steps);
+    let variant = resolve_variant(&cfg, &manifest).expect("variant");
+    println!(
+        "embedding: {} order-4 rank-1, {} trainable parameters for a {}×{} table\n",
+        variant.embedding.kind,
+        variant.embedding.num_params,
+        variant.dims["vocab"],
+        variant.dims["emb_dim"],
+    );
+
+    eprintln!("[fig3] training XS 4/1 for {steps} steps ...");
+    let mut store = ParamStore::init(&variant.params, cfg.train.seed);
+    let report =
+        word2ket::coordinator::experiment::run_with(&cfg, &engine, variant, &mut store, false)
+            .expect("train");
+    println!("trained to test F1 {:.1} / EM {:.1}\n", report.primary(),
+        common::metric(&report, "EM"));
+
+    let data = prepare_qa(&cfg, variant).expect("data");
+    let batches = data.test.eval_batches();
+    let mut shown = 0;
+    let mut offset = 0;
+    for (batch, real) in &batches {
+        let spans = predict_spans(&engine, variant, &store, batch).expect("predict");
+        for row in 0..*real {
+            if shown >= 6 {
+                break;
+            }
+            let ex = &data.test_examples[offset + row];
+            let (s, e) = spans[row];
+            let e = e.min(ex.context.len().saturating_sub(1));
+            let s = s.min(e);
+            let pred: Vec<String> = ex.context[s..=e].to_vec();
+            let f1 = qa_f1(&pred, &ex.answers[0]);
+            let em = exact_match(&pred, &ex.answers[0]);
+            println!("CONTEXT:   {}", detokenize(&ex.context));
+            println!("QUESTION:  {}", detokenize(&ex.question));
+            println!("TRUE:      {}", detokenize(&ex.answers[0]));
+            println!("PREDICTED: {}   [F1 {f1:.2}{}]", detokenize(&pred),
+                if em > 0.0 { ", exact" } else { "" });
+            println!();
+            shown += 1;
+        }
+        offset += real;
+        if shown >= 6 {
+            break;
+        }
+    }
+    println!("(paper Fig. 3 shows the same format from a 380-parameter, 118,655-word model)");
+}

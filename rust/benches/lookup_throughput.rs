@@ -1,0 +1,119 @@
+//! Bench: §2.3 complexity claims — lookup/reconstruction throughput and the
+//! factored inner product, across representations, pure-Rust serving path.
+//!
+//!  * regular lookup: memcpy of a row (baseline)
+//!  * word2ket reconstruct: O(r·p·n) per row, balanced tree
+//!  * word2ketXS lazy row: gather n columns + tree product (§3.2)
+//!  * factored inner product: O(r²·n·q) — no reconstruction (§2.3)
+//!
+//! Also measures the Pallas kernel artifacts through PJRT for the same ops.
+//!
+//! Run: cargo bench --bench lookup_throughput
+
+mod common;
+
+use word2ket::bench::{black_box, header, BenchRunner};
+use word2ket::embedding::{EmbeddingStore, RegularEmbedding, Word2Ket, Word2KetXS};
+use word2ket::runtime::Value;
+use word2ket::util::Rng;
+
+fn main() {
+    header(
+        "Lookup / reconstruction throughput (serving path)",
+        "word2ket costs O(r·p·n) per row; XS row touches one column per factor; \
+         factored dot is O(r²·n·q) with O(1) extra space (§2.3, §3.2)",
+    );
+    let mut rng = Rng::new(0);
+    let vocab = 100_000;
+    let dim = 256;
+    let batch: Vec<usize> = (0..512).map(|_| rng.below(vocab)).collect();
+
+    let regular = RegularEmbedding::random(vocab, dim, &mut rng);
+    let w2k = Word2Ket::random(vocab, dim, 4, 2, &mut rng);
+    let xs2 = Word2KetXS::random(vocab, dim, 2, 10, &mut rng);
+    let xs4 = Word2KetXS::random(vocab, dim, 4, 1, &mut rng);
+
+    let runner = BenchRunner::default();
+    let mut results = Vec::new();
+    results.push(runner.run_throughput("regular lookup_batch (512 rows)", 512.0, || {
+        black_box(regular.lookup_batch(&batch))
+    }));
+    results.push(runner.run_throughput("word2ket 4/2 reconstruct (512 rows)", 512.0, || {
+        black_box(w2k.lookup_batch(&batch))
+    }));
+    results.push(runner.run_throughput("word2ketXS 2/10 lazy rows (512)", 512.0, || {
+        black_box(xs2.lookup_batch(&batch))
+    }));
+    results.push(runner.run_throughput("word2ketXS 4/1 lazy rows (512)", 512.0, || {
+        black_box(xs4.lookup_batch(&batch))
+    }));
+    for r in &results {
+        println!("{}", r.render());
+    }
+
+    // Factored inner product vs dense dot.
+    println!();
+    let dense_dot = runner.run_throughput("dense dot after reconstruct (w2k)", 1.0, || {
+        let a = w2k.lookup(17);
+        let b = w2k.lookup(9_999);
+        black_box(word2ket::tensor::dot(&a, &b))
+    });
+    let factored = runner.run_throughput("factored inner product (§2.3)", 1.0, || {
+        black_box(w2k.inner(17, 9_999))
+    });
+    println!("{}", dense_dot.render());
+    println!("{}", factored.render());
+    println!(
+        "factored/dense speedup: {:.1}×",
+        dense_dot.mean.as_secs_f64() / factored.mean.as_secs_f64()
+    );
+
+    // Memory story.
+    println!("\nresident embedding bytes:");
+    for (name, params) in [
+        ("regular", regular.num_params()),
+        ("word2ket 4/2", w2k.num_params()),
+        ("XS 2/10", xs2.num_params()),
+        ("XS 4/1", xs4.num_params()),
+    ] {
+        println!("  {name:<14} {:>12} f32 = {:>10.1} KiB", params, params as f64 * 4.0 / 1024.0);
+    }
+
+    // Pallas kernel path through PJRT (same ops, compiled artifacts).
+    println!("\nPJRT kernel artifacts (interpret-mode Pallas lowered to HLO):");
+    let (engine, manifest) = common::open_runtime();
+    if let Some(k) = manifest.kernels.get("kernel_xs_rows") {
+        let ins: Vec<Value> = k
+            .inputs
+            .iter()
+            .map(|spec| {
+                Value::F32(
+                    Rng::new(1).uniform_vec(spec.num_elements(), -1.0, 1.0),
+                    spec.shape.clone(),
+                )
+            })
+            .collect();
+        engine.run(&k.file, &ins).expect("warmup");
+        let r = runner.run_throughput("kernel_xs_rows via PJRT (16 rows)", 16.0, || {
+            black_box(engine.run(&k.file, &ins).unwrap())
+        });
+        println!("{}", r.render());
+    }
+    if let Some(k) = manifest.kernels.get("kernel_kron_pair") {
+        let ins: Vec<Value> = k
+            .inputs
+            .iter()
+            .map(|spec| {
+                Value::F32(
+                    Rng::new(2).uniform_vec(spec.num_elements(), -1.0, 1.0),
+                    spec.shape.clone(),
+                )
+            })
+            .collect();
+        engine.run(&k.file, &ins).expect("warmup");
+        let r = runner.run_throughput("kernel_kron_pair via PJRT (16 rows)", 16.0, || {
+            black_box(engine.run(&k.file, &ins).unwrap())
+        });
+        println!("{}", r.render());
+    }
+}

@@ -1,0 +1,64 @@
+//! Bench: exact reproduction of every #Params / space-saving cell of the
+//! paper's Tables 1–3 (closed-form, no training), plus the related-work
+//! bounds the paper argues against (§4.1): 32/b for b-bit quantization and
+//! d·p/(d+p) for PCA/low-rank.
+//!
+//! Run: cargo bench --bench space_saving
+
+use word2ket::embedding::stats;
+use word2ket::embedding::{
+    EmbeddingStore, LowRankEmbedding, QuantizedEmbedding, Word2Ket, Word2KetXS,
+};
+use word2ket::util::{fmt_count, Rng, Table};
+
+fn main() {
+    println!("\n=== Space-saving accounting: paper Tables 1–3, digit-for-digit ===\n");
+    print!("{}", stats::render_paper_tables());
+
+    // Cross-check the closed forms against live stores at paper scale.
+    let mut rng = Rng::new(0);
+    let xs41 = Word2KetXS::random(stats::SQUAD_VOCAB, stats::SQUAD_DIM, 4, 1, &mut rng);
+    assert_eq!(xs41.num_params(), 380);
+    let xs22 = Word2KetXS::random(stats::SQUAD_VOCAB, stats::SQUAD_DIM, 2, 2, &mut rng);
+    assert_eq!(xs22.num_params(), 24_840);
+    let w2k = Word2Ket::random(stats::GIGAWORD_VOCAB, 256, 4, 1, &mut rng);
+    assert_eq!(w2k.num_params(), 486_848);
+    println!("\nlive-store cross-check: word2ketXS 4/1 = {} params ✓, 2/2 = {} ✓, w2k 4/1 = {} ✓",
+        xs41.num_params(), xs22.num_params(), w2k.num_params());
+
+    // Related-work structural bounds (paper §4.1).
+    let mut t = Table::new(vec!["Method", "Bound", "At SQuAD scale", "word2ketXS 4/1"])
+        .with_title("\nwhy bit-encoding and PCA cannot match (paper §4.1)");
+    let d = stats::SQUAD_VOCAB as f64;
+    let p = stats::SQUAD_DIM as f64;
+    let pca_bound = d * p / (d + p);
+    t.add_row(vec![
+        "b-bit quantization".to_string(),
+        "≤ 32/b ×".to_string(),
+        "≤ 32× (b=1)".to_string(),
+        "93,675×".to_string(),
+    ]);
+    t.add_row(vec![
+        "PCA / low-rank".to_string(),
+        "≤ d·p/(d+p) ×".to_string(),
+        format!("≤ {:.0}×", pca_bound),
+        "93,675×".to_string(),
+    ]);
+    println!("{}", t.render());
+
+    // Live confirmation of the bounds.
+    let mut rng = Rng::new(1);
+    let q8 = QuantizedEmbedding::random(2000, 512, 8, &mut rng);
+    assert!(q8.space_saving_rate() <= 4.0 + 1e-9);
+    let lr1 = LowRankEmbedding::random(stats::SQUAD_VOCAB, stats::SQUAD_DIM, 1, &mut rng);
+    assert!(lr1.space_saving_rate() <= pca_bound + 1e-6);
+    println!(
+        "live: quantized-8bit = {:.2}× (≤4), lowrank k=1 = {:.0}× (≤{:.0})",
+        q8.space_saving_rate(),
+        lr1.space_saving_rate(),
+        pca_bound
+    );
+    println!("\ntotal verified cells: 13 exact + 1 documented paper inconsistency (see DESIGN.md §5)");
+    println!("\nbench space_saving: {} / {} / {}",
+        fmt_count(7_789_568), fmt_count(8_194_816), fmt_count(35_596_500));
+}

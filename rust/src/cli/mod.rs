@@ -1,0 +1,324 @@
+//! Command-line argument parsing (clap substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, repeated
+//! options, positionals, and auto-generated help text.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean flag (no value) vs valued option.
+    pub takes_value: bool,
+    /// May appear multiple times.
+    pub repeated: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A subcommand definition.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<String> {
+        self.values.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| Error::Cli(format!("--{name} expects an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| Error::Cli(format!("--{name} expects a number, got '{s}'"))),
+        }
+    }
+}
+
+/// Top-level application parser.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '");
+        s.push_str(self.name);
+        s.push_str(" <COMMAND> --help' for command options.\n");
+        s
+    }
+
+    pub fn command_help(&self, cmd: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, cmd.name, cmd.about);
+        for o in &cmd.opts {
+            let val = if o.takes_value { " <VALUE>" } else { "" };
+            let dflt = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{:<24} {}{}\n", format!("{}{}", o.name, val), o.help, dflt));
+        }
+        if !cmd.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (name, help) in &cmd.positionals {
+                s.push_str(&format!("  <{name}>  {help}\n"));
+            }
+        }
+        s
+    }
+
+    /// Parse argv (excluding program name). Returns Err with the help text as
+    /// the message when `--help` is requested.
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(Error::Cli(self.help()));
+        }
+        let cmd_name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| Error::Cli(format!("unknown command '{cmd_name}'\n\n{}", self.help())))?;
+
+        let mut parsed = Parsed { command: cmd.name.to_string(), ..Default::default() };
+        // Seed defaults.
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                parsed.values.insert(o.name.to_string(), vec![d.to_string()]);
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::Cli(self.command_help(cmd)));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| Error::Cli(format!("unknown option '--{key}' for '{}'", cmd.name)))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Cli(format!("--{key} expects a value")))?
+                        }
+                    };
+                    let slot = parsed.values.entry(key.to_string()).or_default();
+                    if spec.repeated {
+                        // keep defaults out of repeated accumulation
+                        if spec.default.is_some()
+                            && slot.len() == 1
+                            && slot[0] == spec.default.unwrap_or("")
+                            && !parsed.flags.get(key).copied().unwrap_or(false)
+                        {
+                            slot.clear();
+                        }
+                        parsed.flags.insert(key.to_string(), true);
+                        slot.push(val);
+                    } else {
+                        *slot = vec![val];
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        return Err(Error::Cli(format!("flag --{key} takes no value")));
+                    }
+                    parsed.flags.insert(key.to_string(), true);
+                }
+            } else {
+                parsed.positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        if parsed.positionals.len() > cmd.positionals.len() {
+            return Err(Error::Cli(format!(
+                "too many positional arguments for '{}' (expected {})",
+                cmd.name,
+                cmd.positionals.len()
+            )));
+        }
+        Ok(parsed)
+    }
+}
+
+/// The `w2k` binary's CLI definition, shared with examples.
+pub fn app() -> App {
+    let common_train = vec![
+        OptSpec { name: "config", help: "experiment config file (TOML subset)", takes_value: true, repeated: false, default: None },
+        OptSpec { name: "set", help: "override config key, e.g. --set train.steps=100", takes_value: true, repeated: true, default: None },
+        OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, repeated: false, default: Some("artifacts") },
+        OptSpec { name: "verbose", help: "debug logging", takes_value: false, repeated: false, default: None },
+    ];
+    App {
+        name: "w2k",
+        about: "word2ket / word2ketXS reproduction: training, evaluation and serving",
+        commands: vec![
+            CommandSpec {
+                name: "train",
+                about: "train a model variant on a synthetic task",
+                opts: common_train.clone(),
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "eval",
+                about: "evaluate a checkpoint on the test split",
+                opts: {
+                    let mut o = common_train.clone();
+                    o.push(OptSpec { name: "checkpoint", help: "checkpoint file to load", takes_value: true, repeated: false, default: None });
+                    o
+                },
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "serve",
+                about: "serve compressed embedding lookups over TCP",
+                opts: {
+                    let mut o = common_train.clone();
+                    o.push(OptSpec { name: "addr", help: "listen address", takes_value: true, repeated: false, default: Some("127.0.0.1:7878") });
+                    o
+                },
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "params",
+                about: "print paper Tables 1-3 #Params / space-saving accounting",
+                opts: vec![],
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "artifacts",
+                about: "list and validate AOT artifacts against the manifest",
+                opts: vec![OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, repeated: false, default: Some("artifacts") }],
+                positionals: vec![],
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_train_with_overrides() {
+        let a = app();
+        let p = a
+            .parse(&argv(&[
+                "train",
+                "--set",
+                "embedding.kind=word2ketxs",
+                "--set",
+                "embedding.order=2",
+                "--artifacts",
+                "arts",
+                "--verbose",
+            ]))
+            .unwrap();
+        assert_eq!(p.command, "train");
+        assert_eq!(p.get_all("set"), vec!["embedding.kind=word2ketxs", "embedding.order=2"]);
+        assert_eq!(p.get("artifacts"), Some("arts"));
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = app();
+        let p = a.parse(&argv(&["serve", "--addr=0.0.0.0:9999"])).unwrap();
+        assert_eq!(p.get("addr"), Some("0.0.0.0:9999"));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = app();
+        let p = a.parse(&argv(&["train"])).unwrap();
+        assert_eq!(p.get("artifacts"), Some("artifacts"));
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        let a = app();
+        assert!(a.parse(&argv(&["fly"])).is_err());
+        assert!(a.parse(&argv(&["train", "--bogus", "1"])).is_err());
+        assert!(a.parse(&argv(&["train", "--set"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_text() {
+        let a = app();
+        let e = a.parse(&argv(&["--help"])).unwrap_err().to_string();
+        assert!(e.contains("COMMANDS"));
+        let e2 = a.parse(&argv(&["train", "--help"])).unwrap_err().to_string();
+        assert!(e2.contains("--config"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = App {
+            name: "t",
+            about: "",
+            commands: vec![CommandSpec {
+                name: "c",
+                about: "",
+                opts: vec![OptSpec { name: "n", help: "", takes_value: true, repeated: false, default: None }],
+                positionals: vec![],
+            }],
+        };
+        let p = a.parse(&argv(&["c", "--n", "42"])).unwrap();
+        assert_eq!(p.get_usize("n").unwrap(), Some(42));
+        let p2 = a.parse(&argv(&["c", "--n", "x"])).unwrap();
+        assert!(p2.get_usize("n").is_err());
+    }
+}

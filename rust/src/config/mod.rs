@@ -1,0 +1,66 @@
+//! Layered configuration system.
+//!
+//! Experiments are described by TOML-subset files (see `configs/`) with CLI
+//! `--set section.key=value` overrides layered on top. No `serde`/`toml`
+//! crates exist in this environment, so `toml.rs` is a from-scratch parser of
+//! the subset we use: `[section]` headers, `key = value` with string, bool,
+//! integer, float and flat-array values, `#` comments.
+
+mod schema;
+mod toml;
+
+pub use schema::{
+    CorpusConfig, EmbeddingConfig, EmbeddingKind, ExperimentConfig, ModelConfig, ServerConfig,
+    TaskKind, TrainConfig,
+};
+pub use toml::{TomlDoc, TomlValue};
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// Load a config file and apply `--set a.b=c` overrides in order.
+pub fn load_with_overrides(path: Option<&Path>, overrides: &[String]) -> Result<ExperimentConfig> {
+    let mut doc = match path {
+        Some(p) => {
+            let src = std::fs::read_to_string(p)
+                .map_err(|e| Error::Config(format!("cannot read {}: {e}", p.display())))?;
+            TomlDoc::parse(&src)?
+        }
+        None => TomlDoc::default(),
+    };
+    for ov in overrides {
+        let (key, val) = ov
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("override '{ov}' is not key=value")))?;
+        doc.set_str(key.trim(), val.trim())?;
+    }
+    ExperimentConfig::from_doc(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_without_file() {
+        let cfg = load_with_overrides(
+            None,
+            &[
+                "task.kind=translation".to_string(),
+                "embedding.kind=word2ketxs".to_string(),
+                "embedding.order=4".to_string(),
+                "train.steps=17".to_string(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.task, TaskKind::Translation);
+        assert_eq!(cfg.embedding.kind, EmbeddingKind::Word2KetXS);
+        assert_eq!(cfg.embedding.order, 4);
+        assert_eq!(cfg.train.steps, 17);
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        assert!(load_with_overrides(None, &["nonsense".to_string()]).is_err());
+    }
+}

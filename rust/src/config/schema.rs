@@ -1,0 +1,396 @@
+//! Typed experiment configuration assembled from a [`TomlDoc`].
+
+use super::toml::TomlDoc;
+use crate::error::{Error, Result};
+
+/// Which downstream NLP task (paper §4 evaluates three).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// GIGAWORD-style headline generation (Table 1).
+    Summarization,
+    /// IWSLT-style machine translation (Table 2).
+    Translation,
+    /// SQuAD-style extractive question answering (Table 3, Figs 2–3).
+    Qa,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Result<TaskKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "summarization" | "gigaword" | "sum" => Ok(TaskKind::Summarization),
+            "translation" | "iwslt" | "mt" => Ok(TaskKind::Translation),
+            "qa" | "squad" => Ok(TaskKind::Qa),
+            other => Err(Error::Config(format!("unknown task '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Summarization => "summarization",
+            TaskKind::Translation => "translation",
+            TaskKind::Qa => "qa",
+        }
+    }
+
+    /// Short tag used in artifact names (matches python/compile/aot.py).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            TaskKind::Summarization => "sum",
+            TaskKind::Translation => "mt",
+            TaskKind::Qa => "qa",
+        }
+    }
+}
+
+/// Embedding representation families. The first three are the paper's;
+/// the rest are related-work baselines (§4.1) used for comparison benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmbeddingKind {
+    Regular,
+    Word2Ket,
+    Word2KetXS,
+    /// Uniform b-bit quantization of a regular embedding (May et al., 2019).
+    Quantized,
+    /// Low-rank factorization M = U·V (PCA-style; storage ≥ d + p per rank).
+    LowRank,
+    /// Parameter-sharing via hashing (Suzuki & Nagata, 2016).
+    Hashed,
+}
+
+impl EmbeddingKind {
+    pub fn parse(s: &str) -> Result<EmbeddingKind> {
+        match s.to_ascii_lowercase().replace('-', "").as_str() {
+            "regular" => Ok(EmbeddingKind::Regular),
+            "word2ket" | "w2k" => Ok(EmbeddingKind::Word2Ket),
+            "word2ketxs" | "xs" | "w2kxs" => Ok(EmbeddingKind::Word2KetXS),
+            "quantized" => Ok(EmbeddingKind::Quantized),
+            "lowrank" => Ok(EmbeddingKind::LowRank),
+            "hashed" => Ok(EmbeddingKind::Hashed),
+            other => Err(Error::Config(format!("unknown embedding kind '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EmbeddingKind::Regular => "regular",
+            EmbeddingKind::Word2Ket => "word2ket",
+            EmbeddingKind::Word2KetXS => "word2ketXS",
+            EmbeddingKind::Quantized => "quantized",
+            EmbeddingKind::LowRank => "lowrank",
+            EmbeddingKind::Hashed => "hashed",
+        }
+    }
+}
+
+/// Embedding hyper-parameters (paper "Order/Rank" columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmbeddingConfig {
+    pub kind: EmbeddingKind,
+    /// Tensor order n (number of factors). 1 for regular.
+    pub order: usize,
+    /// Tensor rank r (number of summed simple tensors).
+    pub rank: usize,
+    /// LayerNorm at balanced-tree internal nodes (§2.3).
+    pub layernorm: bool,
+    /// Quantization bits (Quantized baseline only).
+    pub bits: usize,
+    /// Factorization rank (LowRank baseline only).
+    pub lowrank_dim: usize,
+    /// Bucket count (Hashed baseline only).
+    pub buckets: usize,
+}
+
+impl Default for EmbeddingConfig {
+    fn default() -> Self {
+        EmbeddingConfig {
+            kind: EmbeddingKind::Regular,
+            order: 1,
+            rank: 1,
+            layernorm: true,
+            bits: 8,
+            lowrank_dim: 16,
+            buckets: 1 << 14,
+        }
+    }
+}
+
+/// Model dimensions (seq2seq or QA reader).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    /// Hidden width of RNN layers.
+    pub hidden: usize,
+    /// Embedding dimensionality p (must be q^order for tensorized kinds).
+    pub emb_dim: usize,
+    /// Vocabulary size d (shared source/target in our synthetic tasks).
+    pub vocab: usize,
+    pub max_src_len: usize,
+    pub max_tgt_len: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { hidden: 64, emb_dim: 64, vocab: 1024, max_src_len: 24, max_tgt_len: 12 }
+    }
+}
+
+/// Synthetic corpus generation parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    pub train: usize,
+    pub valid: usize,
+    pub test: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig { seed: 2020, train: 2000, valid: 200, test: 200 }
+    }
+}
+
+/// Optimization schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch_size: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    /// Gradient global-norm clip (0 disables; applied inside the HLO).
+    pub clip: f64,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub checkpoint_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            batch_size: 16,
+            lr: 3e-3,
+            warmup: 30,
+            clip: 1.0,
+            eval_every: 50,
+            seed: 7,
+            checkpoint_dir: "checkpoints".into(),
+        }
+    }
+}
+
+/// Embedding-server settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    pub addr: String,
+    /// Micro-batching window in microseconds.
+    pub batch_window_us: u64,
+    pub max_batch: usize,
+    pub threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7878".into(), batch_window_us: 200, max_batch: 64, threads: 2 }
+    }
+}
+
+/// Complete experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub task: TaskKind,
+    pub embedding: EmbeddingConfig,
+    pub model: ModelConfig,
+    pub corpus: CorpusConfig,
+    pub train: TrainConfig,
+    pub server: ServerConfig,
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            task: TaskKind::Summarization,
+            embedding: EmbeddingConfig::default(),
+            model: ModelConfig::default(),
+            corpus: CorpusConfig::default(),
+            train: TrainConfig::default(),
+            server: ServerConfig::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let task = match doc.get("task.kind") {
+            Some(v) => TaskKind::parse(v.as_str().unwrap_or(""))?,
+            None => d.task,
+        };
+        let kind = match doc.get("embedding.kind") {
+            Some(v) => EmbeddingKind::parse(v.as_str().unwrap_or(""))?,
+            None => d.embedding.kind,
+        };
+        let cfg = ExperimentConfig {
+            name: doc.str_or("name", &d.name),
+            task,
+            embedding: EmbeddingConfig {
+                kind,
+                order: doc.usize_or("embedding.order", d.embedding.order),
+                rank: doc.usize_or("embedding.rank", d.embedding.rank),
+                layernorm: doc.bool_or("embedding.layernorm", d.embedding.layernorm),
+                bits: doc.usize_or("embedding.bits", d.embedding.bits),
+                lowrank_dim: doc.usize_or("embedding.lowrank_dim", d.embedding.lowrank_dim),
+                buckets: doc.usize_or("embedding.buckets", d.embedding.buckets),
+            },
+            model: ModelConfig {
+                hidden: doc.usize_or("model.hidden", d.model.hidden),
+                emb_dim: doc.usize_or("model.emb_dim", d.model.emb_dim),
+                vocab: doc.usize_or("model.vocab", d.model.vocab),
+                max_src_len: doc.usize_or("model.max_src_len", d.model.max_src_len),
+                max_tgt_len: doc.usize_or("model.max_tgt_len", d.model.max_tgt_len),
+            },
+            corpus: CorpusConfig {
+                seed: doc.usize_or("corpus.seed", d.corpus.seed as usize) as u64,
+                train: doc.usize_or("corpus.train", d.corpus.train),
+                valid: doc.usize_or("corpus.valid", d.corpus.valid),
+                test: doc.usize_or("corpus.test", d.corpus.test),
+            },
+            train: TrainConfig {
+                steps: doc.usize_or("train.steps", d.train.steps),
+                batch_size: doc.usize_or("train.batch_size", d.train.batch_size),
+                lr: doc.f64_or("train.lr", d.train.lr),
+                warmup: doc.usize_or("train.warmup", d.train.warmup),
+                clip: doc.f64_or("train.clip", d.train.clip),
+                eval_every: doc.usize_or("train.eval_every", d.train.eval_every),
+                seed: doc.usize_or("train.seed", d.train.seed as usize) as u64,
+                checkpoint_dir: doc.str_or("train.checkpoint_dir", &d.train.checkpoint_dir),
+            },
+            server: ServerConfig {
+                addr: doc.str_or("server.addr", &d.server.addr),
+                batch_window_us: doc.usize_or("server.batch_window_us", d.server.batch_window_us as usize)
+                    as u64,
+                max_batch: doc.usize_or("server.max_batch", d.server.max_batch),
+                threads: doc.usize_or("server.threads", d.server.threads),
+            },
+            artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks tying the pieces together.
+    pub fn validate(&self) -> Result<()> {
+        let e = &self.embedding;
+        if e.order == 0 || e.rank == 0 {
+            return Err(Error::Config("embedding order/rank must be >= 1".into()));
+        }
+        match e.kind {
+            EmbeddingKind::Word2Ket | EmbeddingKind::Word2KetXS => {
+                if e.order < 2 {
+                    return Err(Error::Config(format!(
+                        "{} needs order >= 2 (got {})",
+                        e.kind.name(),
+                        e.order
+                    )));
+                }
+                // emb_dim must admit q = ceil(p^(1/n)) with q^n >= p; always true,
+                // but guard against degenerate q < 2.
+                let q = crate::util::ceil_root(self.model.emb_dim, e.order as u32);
+                if q < 2 {
+                    return Err(Error::Config(format!(
+                        "emb_dim {} too small for order {}",
+                        self.model.emb_dim, e.order
+                    )));
+                }
+            }
+            EmbeddingKind::Quantized => {
+                if !(1..=16).contains(&e.bits) {
+                    return Err(Error::Config(format!("bits {} outside 1..=16", e.bits)));
+                }
+            }
+            _ => {}
+        }
+        if self.train.batch_size == 0 {
+            return Err(Error::Config("batch_size must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Artifact base name for this (task, embedding) pair, matching aot.py.
+    pub fn artifact_prefix(&self) -> String {
+        let e = &self.embedding;
+        match e.kind {
+            EmbeddingKind::Regular => format!("{}_regular", self.task.tag()),
+            EmbeddingKind::Word2Ket => {
+                format!("{}_w2k_o{}r{}", self.task.tag(), e.order, e.rank)
+            }
+            EmbeddingKind::Word2KetXS => {
+                format!("{}_xs_o{}r{}", self.task.tag(), e.order, e.rank)
+            }
+            other => format!("{}_{}", self.task.tag(), other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_doc_roundtrip() {
+        let src = r#"
+name = "tbl1-xs"
+[task]
+kind = "summarization"
+[embedding]
+kind = "word2ketxs"
+order = 2
+rank = 10
+layernorm = false
+[model]
+hidden = 32
+emb_dim = 64
+vocab = 512
+[train]
+steps = 10
+batch_size = 4
+lr = 0.001
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.name, "tbl1-xs");
+        assert_eq!(cfg.task, TaskKind::Summarization);
+        assert_eq!(cfg.embedding.kind, EmbeddingKind::Word2KetXS);
+        assert_eq!(cfg.embedding.rank, 10);
+        assert!(!cfg.embedding.layernorm);
+        assert_eq!(cfg.model.vocab, 512);
+        assert_eq!(cfg.train.lr, 0.001);
+        assert_eq!(cfg.artifact_prefix(), "sum_xs_o2r10");
+    }
+
+    #[test]
+    fn validation_rejects_bad_order() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.embedding.kind = EmbeddingKind::Word2Ket;
+        cfg.embedding.order = 1;
+        assert!(cfg.validate().is_err());
+        cfg.embedding.order = 2;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn task_and_kind_parsing() {
+        assert_eq!(TaskKind::parse("SQUAD").unwrap(), TaskKind::Qa);
+        assert_eq!(TaskKind::parse("mt").unwrap(), TaskKind::Translation);
+        assert!(TaskKind::parse("poetry").is_err());
+        assert_eq!(EmbeddingKind::parse("W2K").unwrap(), EmbeddingKind::Word2Ket);
+        assert_eq!(EmbeddingKind::parse("word2ketXS").unwrap(), EmbeddingKind::Word2KetXS);
+    }
+}

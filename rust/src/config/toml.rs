@@ -1,0 +1,281 @@
+//! TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//! Values: strings ("..." or '...'), booleans, integers, floats, flat arrays.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Parse a bare scalar token (used both by the file parser and --set).
+    pub fn parse_scalar(tok: &str) -> TomlValue {
+        let t = tok.trim();
+        if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+            || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+        {
+            return TomlValue::Str(t[1..t.len() - 1].to_string());
+        }
+        match t {
+            "true" => return TomlValue::Bool(true),
+            "false" => return TomlValue::Bool(false),
+            _ => {}
+        }
+        if let Ok(i) = t.replace('_', "").parse::<i64>() {
+            return TomlValue::Int(i);
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return TomlValue::Float(f);
+        }
+        TomlValue::Str(t.to_string())
+    }
+}
+
+/// A parsed document: `section.key → value`. Keys without a section live
+/// under the empty section "".
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!(
+                        "line {}: malformed section header '{raw}'",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value, got '{raw}'", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            doc.entries.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn set(&mut self, key: &str, val: TomlValue) {
+        self.entries.insert(key.to_string(), val);
+    }
+
+    /// Set from a raw string (CLI override path).
+    pub fn set_str(&mut self, key: &str, raw: &str) -> Result<()> {
+        if key.is_empty() {
+            return Err(Error::Config("empty override key".into()));
+        }
+        self.entries.insert(key.to_string(), parse_value(raw, 0)?);
+        Ok(())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    // typed getters with defaults --------------------------------------------
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (in_str, c) {
+            (None, '#') => return &line[..i],
+            (None, '"') => in_str = Some('"'),
+            (None, '\'') => in_str = Some('\''),
+            (Some(q), c) if c == q => in_str = None,
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str, lineno: usize) -> Result<TomlValue> {
+    let t = raw.trim();
+    if t.is_empty() {
+        return Err(Error::Config(format!("line {lineno}: empty value")));
+    }
+    if t.starts_with('[') {
+        if !t.ends_with(']') {
+            return Err(Error::Config(format!("line {lineno}: unterminated array")));
+        }
+        let inner = &t[1..t.len() - 1];
+        let items: Vec<TomlValue> = split_top_level(inner)
+            .into_iter()
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| TomlValue::parse_scalar(&s))
+            .collect();
+        return Ok(TomlValue::Arr(items));
+    }
+    Ok(TomlValue::parse_scalar(t))
+}
+
+/// Split an array body on commas, respecting quotes.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str: Option<char> = None;
+    for c in s.chars() {
+        match (in_str, c) {
+            (None, ',') => {
+                out.push(std::mem::take(&mut cur));
+            }
+            (None, '"') | (None, '\'') => {
+                in_str = Some(c);
+                cur.push(c);
+            }
+            (Some(q), c) if c == q => {
+                in_str = None;
+                cur.push(c);
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let src = r#"
+# experiment config
+name = "table1"          # inline comment
+[embedding]
+kind = "word2ketxs"
+order = 2
+rank = 10
+layernorm = true
+scale = 0.5
+dims = [20, 175]
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("table1"));
+        assert_eq!(doc.get("embedding.kind").unwrap().as_str(), Some("word2ketxs"));
+        assert_eq!(doc.get("embedding.order").unwrap().as_usize(), Some(2));
+        assert_eq!(doc.get("embedding.layernorm").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("embedding.scale").unwrap().as_f64(), Some(0.5));
+        match doc.get("embedding.dims").unwrap() {
+            TomlValue::Arr(v) => {
+                assert_eq!(v.len(), 2);
+                assert_eq!(v[1].as_usize(), Some(175));
+            }
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = TomlDoc::parse("n = 7_789_568").unwrap();
+        assert_eq!(doc.get("n").unwrap().as_i64(), Some(7_789_568));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("[bad").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k =").is_err());
+    }
+
+    #[test]
+    fn set_str_overrides() {
+        let mut doc = TomlDoc::parse("[a]\nb = 1").unwrap();
+        doc.set_str("a.b", "2").unwrap();
+        assert_eq!(doc.get("a.b").unwrap().as_i64(), Some(2));
+        doc.set_str("a.c", "\"hi\"").unwrap();
+        assert_eq!(doc.get("a.c").unwrap().as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let doc = TomlDoc::parse("[t]\nsteps = 5").unwrap();
+        assert_eq!(doc.usize_or("t.steps", 99), 5);
+        assert_eq!(doc.usize_or("t.missing", 99), 99);
+        assert_eq!(doc.str_or("t.name", "dflt"), "dflt");
+    }
+}

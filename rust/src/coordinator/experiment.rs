@@ -1,0 +1,364 @@
+//! One-call experiment runner: config → corpus → training → evaluation →
+//! report. This is what `w2k train`, the examples, and every table/figure
+//! bench drive.
+
+use super::schedule::LrSchedule;
+use super::tasks::{self, QaData, Seq2SeqData};
+use super::trainer::{greedy_decode, predict_spans, Trainer};
+use crate::config::{ExperimentConfig, TaskKind};
+use crate::error::Result;
+use crate::metrics::{corpus_bleu, qa_corpus, rouge_corpus, QaScore};
+use crate::runtime::{Engine, Manifest, ParamStore, VariantInfo};
+use crate::util::{fmt_count, Json, Rng, Summary, Table, Timer};
+use std::path::Path;
+
+/// Metric snapshot at one evaluation point.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    /// Task-dependent primary metric: RG-L (sum), BLEU (mt), F1 (qa).
+    pub primary: f64,
+    /// All named metrics at this point.
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// Everything an experiment produces.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub variant: String,
+    pub task: &'static str,
+    pub emb_params: usize,
+    pub total_params: usize,
+    pub space_saving: f64,
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub curve: Vec<EvalPoint>,
+    pub final_metrics: Vec<(String, f64)>,
+    pub step_time_mean_ms: f64,
+    pub step_time_p99_ms: f64,
+    pub wall_seconds: f64,
+}
+
+impl Report {
+    pub fn primary(&self) -> f64 {
+        self.final_metrics.first().map(|(_, v)| *v).unwrap_or(0.0)
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["Field", "Value"]).with_title(format!(
+            "experiment '{}' — variant {} ({})",
+            self.name, self.variant, self.task
+        ));
+        t.add_row(vec!["embedding params".to_string(), fmt_count(self.emb_params as u64)]);
+        t.add_row(vec!["total params".to_string(), fmt_count(self.total_params as u64)]);
+        t.add_row(vec!["space saving (embedding)".to_string(), format!("{:.0}×", self.space_saving)]);
+        t.add_row(vec!["train steps".to_string(), self.steps.to_string()]);
+        if let (Some(first), Some(last)) = (self.losses.first(), self.losses.last()) {
+            t.add_row(vec!["loss first→last".to_string(), format!("{first:.3} → {last:.3}")]);
+        }
+        for (k, v) in &self.final_metrics {
+            t.add_row(vec![format!("test {k}"), format!("{v:.2}")]);
+        }
+        t.add_row(vec![
+            "step time".to_string(),
+            format!("{:.1}ms (p99 {:.1}ms)", self.step_time_mean_ms, self.step_time_p99_ms),
+        ]);
+        t.add_row(vec!["wall time".to_string(), format!("{:.1}s", self.wall_seconds)]);
+        t.render()
+    }
+
+    /// JSON for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("variant", Json::str(self.variant.clone())),
+            ("task", Json::str(self.task)),
+            ("emb_params", Json::num(self.emb_params as f64)),
+            ("total_params", Json::num(self.total_params as f64)),
+            ("space_saving", Json::num(self.space_saving)),
+            ("steps", Json::num(self.steps as f64)),
+            (
+                "final_metrics",
+                Json::Obj(
+                    self.final_metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "curve",
+                Json::arr(self.curve.iter().map(|p| {
+                    Json::obj(vec![
+                        ("step", Json::num(p.step as f64)),
+                        ("primary", Json::num(p.primary)),
+                    ])
+                })),
+            ),
+            ("step_time_mean_ms", Json::num(self.step_time_mean_ms)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+        ])
+    }
+}
+
+/// Resolve the manifest variant for a config.
+pub fn resolve_variant<'m>(cfg: &ExperimentConfig, manifest: &'m Manifest) -> Result<&'m VariantInfo> {
+    let prefix = cfg.artifact_prefix();
+    manifest.variants.get(&prefix).ok_or_else(|| {
+        crate::Error::Artifact(format!(
+            "no artifact variant '{prefix}' — available: {:?}",
+            manifest.variants.keys().collect::<Vec<_>>()
+        ))
+    })
+}
+
+/// Train + evaluate per the config; the main entry point.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Report> {
+    let engine = Engine::cpu(Path::new(&cfg.artifacts_dir))?;
+    let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+    let variant = resolve_variant(cfg, &manifest)?;
+    let mut store = ParamStore::init(&variant.params, cfg.train.seed);
+    run_with(cfg, &engine, variant, &mut store, true)
+}
+
+/// Evaluate a saved checkpoint without training.
+pub fn eval_checkpoint(cfg: &ExperimentConfig, ckpt: &Path) -> Result<Report> {
+    let engine = Engine::cpu(Path::new(&cfg.artifacts_dir))?;
+    let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+    let variant = resolve_variant(cfg, &manifest)?;
+    let mut store = ParamStore::load(&variant.params, ckpt)?;
+    let mut cfg2 = cfg.clone();
+    cfg2.train.steps = 0;
+    run_with(&cfg2, &engine, variant, &mut store, false)
+}
+
+/// Core loop shared by train and eval paths. Exposed for benches that need
+/// to reuse one Engine across variants.
+pub fn run_with(
+    cfg: &ExperimentConfig,
+    engine: &Engine,
+    variant: &VariantInfo,
+    store: &mut ParamStore,
+    save_checkpoint: bool,
+) -> Result<Report> {
+    let wall = Timer::start();
+    match cfg.task {
+        TaskKind::Summarization | TaskKind::Translation => {
+            let data = tasks::prepare_seq2seq(cfg, variant)?;
+            run_seq2seq(cfg, engine, variant, store, data, save_checkpoint, wall)
+        }
+        TaskKind::Qa => {
+            let data = tasks::prepare_qa(cfg, variant)?;
+            run_qa(cfg, engine, variant, store, data, save_checkpoint, wall)
+        }
+    }
+}
+
+fn finish_report(
+    cfg: &ExperimentConfig,
+    variant: &VariantInfo,
+    trainer_losses: Vec<f32>,
+    step_times: &Summary,
+    curve: Vec<EvalPoint>,
+    final_metrics: Vec<(String, f64)>,
+    wall: Timer,
+) -> Report {
+    let dp = variant.dims.get("vocab").copied().unwrap_or(0)
+        * variant.dims.get("emb_dim").copied().unwrap_or(0);
+    let emb_params = variant.embedding.num_params;
+    Report {
+        name: cfg.name.clone(),
+        variant: variant.name.clone(),
+        task: match cfg.task {
+            TaskKind::Summarization => "summarization",
+            TaskKind::Translation => "translation",
+            TaskKind::Qa => "qa",
+        },
+        emb_params,
+        total_params: variant.total_params(),
+        space_saving: if emb_params > 0 { dp as f64 / emb_params as f64 } else { 1.0 },
+        steps: trainer_losses.len(),
+        losses: trainer_losses,
+        curve,
+        final_metrics,
+        step_time_mean_ms: step_times.mean() * 1e3,
+        step_time_p99_ms: step_times.p99() * 1e3,
+        wall_seconds: wall.elapsed().as_secs_f64(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// seq2seq
+// ---------------------------------------------------------------------------
+
+fn eval_seq2seq(
+    engine: &Engine,
+    variant: &VariantInfo,
+    store: &ParamStore,
+    data: &Seq2SeqData,
+    batcher: &crate::data::Batcher,
+    refs: &[Vec<String>],
+    task: TaskKind,
+) -> Result<Vec<(String, f64)>> {
+    let max_len = variant.dim("tgt_len")?;
+    let mut pairs: Vec<(Vec<String>, Vec<String>)> = Vec::with_capacity(refs.len());
+    for (batch, real_idx) in batcher.eval_batches() {
+        let seqs = greedy_decode(engine, variant, store, &batch, max_len)?;
+        for (row, &orig) in real_idx.iter().enumerate() {
+            let hyp = data.vocab.decode(&seqs[row]);
+            pairs.push((hyp, refs[orig].clone()));
+        }
+    }
+    Ok(match task {
+        TaskKind::Summarization => vec![
+            ("RG-L".to_string(), rouge_corpus(&pairs, 1, true)),
+            ("RG-1".to_string(), rouge_corpus(&pairs, 1, false)),
+            ("RG-2".to_string(), rouge_corpus(&pairs, 2, false)),
+        ],
+        _ => {
+            let bleu = corpus_bleu(&pairs);
+            vec![
+                ("BLEU".to_string(), bleu.bleu),
+                ("BP".to_string(), bleu.brevity_penalty),
+            ]
+        }
+    })
+}
+
+fn run_seq2seq(
+    cfg: &ExperimentConfig,
+    engine: &Engine,
+    variant: &VariantInfo,
+    store: &mut ParamStore,
+    data: Seq2SeqData,
+    save_checkpoint: bool,
+    wall: Timer,
+) -> Result<Report> {
+    let mut trainer = Trainer::new(
+        engine,
+        variant,
+        LrSchedule::new(cfg.train.lr, cfg.train.warmup),
+    );
+    let mut rng = Rng::new(cfg.train.seed ^ 0xba7c4);
+    let mut curve = Vec::new();
+    let mut epoch_batches = Vec::new();
+
+    for step in 0..cfg.train.steps {
+        if epoch_batches.is_empty() {
+            epoch_batches = data.train.epoch(&mut rng);
+            epoch_batches.reverse(); // pop from the back
+        }
+        let (batch, _real) = epoch_batches.pop().unwrap();
+        let loss = trainer.step_seq2seq(store, &batch)?;
+        if step % 20 == 0 {
+            crate::info!("step {step}: loss {loss:.4}");
+        }
+        if cfg.train.eval_every > 0
+            && (step + 1) % cfg.train.eval_every == 0
+            && step + 1 < cfg.train.steps
+        {
+            let m = eval_seq2seq(engine, variant, store, &data, &data.valid, &data.valid_refs, cfg.task)?;
+            crate::info!("eval @{}: {:?}", step + 1, m);
+            curve.push(EvalPoint { step: step + 1, primary: m[0].1, metrics: m });
+        }
+    }
+    let final_metrics =
+        eval_seq2seq(engine, variant, store, &data, &data.test, &data.test_refs, cfg.task)?;
+    curve.push(EvalPoint {
+        step: cfg.train.steps,
+        primary: final_metrics[0].1,
+        metrics: final_metrics.clone(),
+    });
+    if save_checkpoint && cfg.train.steps > 0 {
+        let path = Path::new(&cfg.train.checkpoint_dir)
+            .join(format!("{}.ckpt", variant.name));
+        store.save(&path)?;
+        crate::info!("checkpoint → {}", path.display());
+    }
+    let losses = std::mem::take(&mut trainer.losses);
+    let times = trainer.step_times.clone();
+    Ok(finish_report(cfg, variant, losses, &times, curve, final_metrics, wall))
+}
+
+// ---------------------------------------------------------------------------
+// QA
+// ---------------------------------------------------------------------------
+
+fn eval_qa(
+    engine: &Engine,
+    variant: &VariantInfo,
+    store: &ParamStore,
+    batcher: &crate::data::QaBatcher,
+    examples: &[crate::corpus::QaExample],
+) -> Result<QaScore> {
+    let mut items: Vec<(Vec<String>, Vec<Vec<String>>)> = Vec::with_capacity(examples.len());
+    let mut offset = 0usize;
+    for (batch, real) in batcher.eval_batches() {
+        let spans = predict_spans(engine, variant, store, &batch)?;
+        for row in 0..real {
+            let ex = &examples[offset + row];
+            let (s, e) = spans[row];
+            let e = e.min(ex.context.len().saturating_sub(1));
+            let s = s.min(e);
+            let pred: Vec<String> = ex.context[s..=e].to_vec();
+            items.push((pred, ex.answers.clone()));
+        }
+        offset += real;
+    }
+    Ok(qa_corpus(&items))
+}
+
+fn run_qa(
+    cfg: &ExperimentConfig,
+    engine: &Engine,
+    variant: &VariantInfo,
+    store: &mut ParamStore,
+    data: QaData,
+    save_checkpoint: bool,
+    wall: Timer,
+) -> Result<Report> {
+    let mut trainer = Trainer::new(
+        engine,
+        variant,
+        LrSchedule::new(cfg.train.lr, cfg.train.warmup),
+    );
+    let mut rng = Rng::new(cfg.train.seed ^ 0x9a11);
+    let mut curve = Vec::new();
+    let mut epoch_batches = Vec::new();
+
+    for step in 0..cfg.train.steps {
+        if epoch_batches.is_empty() {
+            epoch_batches = data.train.epoch(&mut rng);
+            epoch_batches.reverse();
+        }
+        let (batch, _real) = epoch_batches.pop().unwrap();
+        let loss = trainer.step_qa(store, &batch)?;
+        if step % 20 == 0 {
+            crate::info!("step {step}: loss {loss:.4}");
+        }
+        if cfg.train.eval_every > 0
+            && (step + 1) % cfg.train.eval_every == 0
+            && step + 1 < cfg.train.steps
+        {
+            let s = eval_qa(engine, variant, store, &data.valid, &data.valid_examples)?;
+            crate::info!("eval @{}: F1 {:.2} EM {:.2}", step + 1, s.f1, s.em);
+            curve.push(EvalPoint {
+                step: step + 1,
+                primary: s.f1,
+                metrics: vec![("F1".to_string(), s.f1), ("EM".to_string(), s.em)],
+            });
+        }
+    }
+    let s = eval_qa(engine, variant, store, &data.test, &data.test_examples)?;
+    let final_metrics = vec![("F1".to_string(), s.f1), ("EM".to_string(), s.em)];
+    curve.push(EvalPoint { step: cfg.train.steps, primary: s.f1, metrics: final_metrics.clone() });
+    if save_checkpoint && cfg.train.steps > 0 {
+        let path = Path::new(&cfg.train.checkpoint_dir)
+            .join(format!("{}.ckpt", variant.name));
+        store.save(&path)?;
+    }
+    let losses = std::mem::take(&mut trainer.losses);
+    let times = trainer.step_times.clone();
+    Ok(finish_report(cfg, variant, losses, &times, curve, final_metrics, wall))
+}

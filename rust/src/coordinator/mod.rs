@@ -1,0 +1,13 @@
+//! L3 coordinator: the training / evaluation / serving orchestration around
+//! the AOT-compiled compute artifacts. Pure Rust on the request path.
+
+pub mod beam;
+pub mod experiment;
+pub mod schedule;
+pub mod server;
+pub mod tasks;
+pub mod trainer;
+
+pub use experiment::{eval_checkpoint, run_experiment, Report};
+pub use schedule::LrSchedule;
+pub use trainer::Trainer;

@@ -1,0 +1,53 @@
+//! Learning-rate schedules.
+
+/// Linear warmup followed by inverse-sqrt decay (the standard seq2seq
+/// schedule, scaled to our short CPU runs), or constant when warmup = 0.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base: f64,
+    pub warmup: usize,
+}
+
+impl LrSchedule {
+    pub fn new(base: f64, warmup: usize) -> LrSchedule {
+        LrSchedule { base, warmup }
+    }
+
+    /// LR at 0-based step index.
+    pub fn at(&self, step: usize) -> f64 {
+        if self.warmup == 0 {
+            return self.base;
+        }
+        let s = (step + 1) as f64;
+        let w = self.warmup as f64;
+        if s < w {
+            self.base * s / w
+        } else {
+            self.base * (w / s).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_when_no_warmup() {
+        let s = LrSchedule::new(1e-3, 0);
+        assert_eq!(s.at(0), 1e-3);
+        assert_eq!(s.at(1000), 1e-3);
+    }
+
+    #[test]
+    fn warms_up_then_decays() {
+        let s = LrSchedule::new(1.0, 10);
+        assert!(s.at(0) < s.at(5));
+        assert!(s.at(5) < s.at(9));
+        let peak = s.at(9);
+        assert!((peak - 1.0).abs() < 0.01);
+        assert!(s.at(40) < peak);
+        // inverse sqrt: at 4x warmup, lr = base/2
+        assert!((s.at(39) - 0.5).abs() < 0.01);
+    }
+}

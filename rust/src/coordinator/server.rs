@@ -1,0 +1,311 @@
+//! Embedding lookup server: serves compressed-embedding rows over TCP with
+//! cross-connection micro-batching — the serving-side argument of the paper
+//! (a word2ketXS table small enough to live in cache, reconstructed lazily
+//! per request).
+//!
+//! Protocol (line-oriented text):
+//!   `LOOKUP <id> [<id> ...]\n` → `OK <dim> <f32> <f32> ...\n` (per id, one line)
+//!   `DOT <id a> <id b>\n`      → `OK <f32>\n` (factored inner product path)
+//!   `STATS\n`                  → `OK p50_us=<..> p99_us=<..> served=<..>\n`
+//!   `QUIT\n`                   → closes the connection.
+//!
+//! Requests from all connections funnel into one worker that drains the queue
+//! every `batch_window_us` and reconstructs rows in one batch — the same
+//! pattern a vLLM-style router uses for dynamic batching.
+
+use crate::config::ExperimentConfig;
+use crate::embedding::{self, EmbeddingStore};
+use crate::error::{Error, Result};
+use crate::util::{Rng, Summary};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued lookup request.
+struct Job {
+    ids: Vec<usize>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Vec<Vec<f32>>>,
+}
+
+/// Shared server state.
+pub struct ServerState {
+    store: Box<dyn EmbeddingStore>,
+    queue: Mutex<Vec<Job>>,
+    latencies_us: Mutex<Summary>,
+    served: AtomicU64,
+    stop: AtomicBool,
+    batch_window: Duration,
+    max_batch: usize,
+}
+
+impl ServerState {
+    pub fn new(cfg: &ExperimentConfig) -> ServerState {
+        let mut rng = Rng::new(cfg.train.seed);
+        let store = embedding::build(
+            &cfg.embedding,
+            cfg.model.vocab,
+            cfg.model.emb_dim,
+            &mut rng,
+        );
+        crate::info!("serving {}", store.describe());
+        ServerState {
+            store,
+            queue: Mutex::new(Vec::new()),
+            latencies_us: Mutex::new(Summary::new()),
+            served: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            batch_window: Duration::from_micros(cfg.server.batch_window_us),
+            max_batch: cfg.server.max_batch,
+        }
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.atomic_store();
+    }
+
+    fn stats_line(&self) -> String {
+        let lat = self.latencies_us.lock().unwrap();
+        format!(
+            "OK p50_us={:.0} p99_us={:.0} served={}\n",
+            lat.p50(),
+            lat.p99(),
+            self.served()
+        )
+    }
+}
+
+trait AtomicStoreExt {
+    fn atomic_store(&self);
+}
+
+impl AtomicStoreExt for AtomicBool {
+    fn atomic_store(&self) {
+        self.store(true, Ordering::SeqCst);
+    }
+}
+
+/// The batching worker: drain queue → batched lookup → reply.
+fn batch_worker(state: Arc<ServerState>) {
+    while !state.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(state.batch_window);
+        let jobs: Vec<Job> = {
+            let mut q = state.queue.lock().unwrap();
+            let take = q.len().min(state.max_batch);
+            q.drain(..take).collect()
+        };
+        if jobs.is_empty() {
+            continue;
+        }
+        // One flat batch over all ids of all jobs.
+        let mut all_ids = Vec::new();
+        for j in &jobs {
+            all_ids.extend_from_slice(&j.ids);
+        }
+        let tensor = state.store.lookup_batch(&all_ids);
+        let dim = state.store.dim();
+        let mut row = 0usize;
+        let now = Instant::now();
+        for j in jobs {
+            let mut rows = Vec::with_capacity(j.ids.len());
+            for _ in 0..j.ids.len() {
+                rows.push(tensor.data()[row * dim..(row + 1) * dim].to_vec());
+                row += 1;
+            }
+            let us = now.duration_since(j.enqueued).as_secs_f64() * 1e6;
+            state.latencies_us.lock().unwrap().add(us);
+            state.served.fetch_add(j.ids.len() as u64, Ordering::Relaxed);
+            let _ = j.reply.send(rows);
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
+    let peer = stream.peer_addr().ok();
+    crate::debug!("connection from {peer:?}");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let response = match parts.as_slice() {
+            [] => continue,
+            ["QUIT"] => break,
+            ["STATS"] => state.stats_line(),
+            ["LOOKUP", rest @ ..] if !rest.is_empty() => {
+                match rest.iter().map(|s| s.parse::<usize>()).collect::<std::result::Result<Vec<_>, _>>() {
+                    Ok(ids) if ids.iter().all(|&i| i < state.store.vocab_size()) => {
+                        let (tx, rx) = mpsc::channel();
+                        state.queue.lock().unwrap().push(Job {
+                            ids,
+                            enqueued: Instant::now(),
+                            reply: tx,
+                        });
+                        match rx.recv_timeout(Duration::from_secs(5)) {
+                            Ok(rows) => {
+                                let mut s = String::new();
+                                for r in rows {
+                                    s.push_str(&format!("OK {}", r.len()));
+                                    for x in r {
+                                        s.push_str(&format!(" {x}"));
+                                    }
+                                    s.push('\n');
+                                }
+                                s
+                            }
+                            Err(_) => "ERR timeout\n".to_string(),
+                        }
+                    }
+                    Ok(_) => "ERR id out of range\n".to_string(),
+                    Err(_) => "ERR bad id\n".to_string(),
+                }
+            }
+            ["DOT", a, b] => match (a.parse::<usize>(), b.parse::<usize>()) {
+                (Ok(a), Ok(b))
+                    if a < state.store.vocab_size() && b < state.store.vocab_size() =>
+                {
+                    let va = state.store.lookup(a);
+                    let vb = state.store.lookup(b);
+                    let d = crate::tensor::dot(&va, &vb);
+                    format!("OK {d}\n")
+                }
+                _ => "ERR bad ids\n".to_string(),
+            },
+            _ => "ERR unknown command\n".to_string(),
+        };
+        if writer.write_all(response.as_bytes()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Run the server until the process is killed (the `w2k serve` subcommand).
+pub fn serve_blocking(cfg: &ExperimentConfig) -> Result<()> {
+    let (state, listener, _worker) = spawn(cfg)?;
+    crate::info!("listening on {}", cfg.server.addr);
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let st = state.clone();
+                std::thread::spawn(move || handle_conn(s, st));
+            }
+            Err(e) => crate::warn!("accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Start listener + worker without blocking (tests, serve_embeddings example).
+/// Returns (state, listener, worker handle); the caller accepts connections.
+pub fn spawn(
+    cfg: &ExperimentConfig,
+) -> Result<(Arc<ServerState>, TcpListener, std::thread::JoinHandle<()>)> {
+    let state = Arc::new(ServerState::new(cfg));
+    let listener = TcpListener::bind(&cfg.server.addr)
+        .map_err(|e| Error::Server(format!("bind {}: {e}", cfg.server.addr)))?;
+    let worker_state = state.clone();
+    let worker = std::thread::spawn(move || batch_worker(worker_state));
+    Ok((state, listener, worker))
+}
+
+/// Accept-loop helper for examples/tests: serve until `state.stop` flips.
+pub fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    listener.set_nonblocking(true).ok();
+    while !state.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((s, _)) => {
+                let st = state.clone();
+                std::thread::spawn(move || handle_conn(s, st));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EmbeddingKind, ExperimentConfig};
+    use std::io::{BufRead, BufReader, Write};
+
+    fn test_cfg(port: u16) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.embedding.kind = EmbeddingKind::Word2KetXS;
+        cfg.embedding.order = 2;
+        cfg.embedding.rank = 2;
+        cfg.model.vocab = 100;
+        cfg.model.emb_dim = 16;
+        cfg.server.addr = format!("127.0.0.1:{port}");
+        cfg.server.batch_window_us = 100;
+        cfg
+    }
+
+    fn request(addr: &str, line: &str) -> Vec<String> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(line.as_bytes()).unwrap();
+        let mut out = Vec::new();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let expect = line.split_whitespace().count().saturating_sub(1).max(1);
+        for _ in 0..if line.starts_with("LOOKUP") { expect } else { 1 } {
+            let mut l = String::new();
+            r.read_line(&mut l).unwrap();
+            out.push(l.trim().to_string());
+        }
+        s.write_all(b"QUIT\n").ok();
+        out
+    }
+
+    #[test]
+    fn lookup_dot_stats_roundtrip() {
+        let cfg = test_cfg(17871);
+        let (state, listener, _worker) = spawn(&cfg).unwrap();
+        let st = state.clone();
+        let acc = std::thread::spawn(move || accept_loop(listener, st));
+
+        let addr = &cfg.server.addr;
+        // single lookup
+        let resp = request(addr, "LOOKUP 42\n");
+        assert!(resp[0].starts_with("OK 16 "), "{resp:?}");
+        let vals: Vec<f32> = resp[0]
+            .split_whitespace()
+            .skip(2)
+            .map(|x| x.parse().unwrap())
+            .collect();
+        assert_eq!(vals.len(), 16);
+
+        // multi lookup: one OK line per id
+        let resp = request(addr, "LOOKUP 1 2 3\n");
+        assert_eq!(resp.len(), 3);
+
+        // dot equals dot of lookups
+        let resp = request(addr, "DOT 1 2\n");
+        assert!(resp[0].starts_with("OK "));
+
+        // errors
+        let resp = request(addr, "LOOKUP 5000\n");
+        assert!(resp[0].starts_with("ERR"));
+        let resp = request(addr, "NONSENSE\n");
+        assert!(resp[0].starts_with("ERR"));
+
+        // stats
+        let resp = request(addr, "STATS\n");
+        assert!(resp[0].contains("served="), "{resp:?}");
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+}

@@ -1,0 +1,168 @@
+//! Task preparation: corpus synthesis → vocabulary → encoding → batchers,
+//! driven by the artifact manifest's dims (shapes are the contract).
+
+use crate::config::{ExperimentConfig, TaskKind};
+use crate::corpus::{self, QaExample, SeqPair};
+use crate::data::{
+    encode_pairs, encode_qa, truncate_pairs, truncate_qa, Batcher, QaBatcher,
+};
+use crate::error::Result;
+use crate::runtime::VariantInfo;
+use crate::text::Vocab;
+
+/// Prepared data for a sequence-to-sequence task (summarization, MT).
+pub struct Seq2SeqData {
+    pub vocab: Vocab,
+    pub train: Batcher,
+    pub valid: Batcher,
+    pub test: Batcher,
+    /// Reference target token strings for valid/test (metric ground truth).
+    pub valid_refs: Vec<Vec<String>>,
+    pub test_refs: Vec<Vec<String>>,
+}
+
+/// Prepared data for the QA task.
+pub struct QaData {
+    pub vocab: Vocab,
+    pub train: QaBatcher,
+    pub valid: QaBatcher,
+    pub test: QaBatcher,
+    /// Raw examples (for span → token answers at eval).
+    pub valid_examples: Vec<QaExample>,
+    pub test_examples: Vec<QaExample>,
+}
+
+fn build_vocab_pairs(pairs: &[SeqPair], max_size: usize) -> Vocab {
+    let mut seqs: Vec<&[String]> = Vec::with_capacity(pairs.len() * 2);
+    for p in pairs {
+        seqs.push(&p.src);
+        seqs.push(&p.tgt);
+    }
+    Vocab::build(seqs.into_iter(), max_size, 1)
+}
+
+fn build_vocab_qa(examples: &[QaExample], max_size: usize) -> Vocab {
+    let mut seqs: Vec<&[String]> = Vec::with_capacity(examples.len() * 2);
+    for e in examples {
+        seqs.push(&e.context);
+        seqs.push(&e.question);
+    }
+    Vocab::build(seqs.into_iter(), max_size, 1)
+}
+
+/// Build seq2seq data with shapes taken from the manifest variant.
+pub fn prepare_seq2seq(cfg: &ExperimentConfig, var: &VariantInfo) -> Result<Seq2SeqData> {
+    let vocab_cap = var.dim("vocab")?;
+    let batch = var.dim("batch")?;
+    let src_len = var.dim("src_len")?;
+    let tgt_len = var.dim("tgt_len")?;
+
+    let splits = match cfg.task {
+        TaskKind::Summarization => corpus::summarization::generate(&cfg.corpus, vocab_cap),
+        TaskKind::Translation => corpus::translation::generate(&cfg.corpus, vocab_cap / 2),
+        TaskKind::Qa => {
+            return Err(crate::Error::Config("QA task needs prepare_qa".into()));
+        }
+    };
+    let vocab = build_vocab_pairs(&splits.train, vocab_cap);
+
+    let enc = |pairs: &[SeqPair]| {
+        let mut e = encode_pairs(pairs, &vocab, &vocab);
+        truncate_pairs(&mut e, src_len, tgt_len);
+        e
+    };
+    let valid_refs = splits.valid.iter().map(|p| p.tgt.clone()).collect();
+    let test_refs = splits.test.iter().map(|p| p.tgt.clone()).collect();
+    Ok(Seq2SeqData {
+        train: Batcher::new(enc(&splits.train), batch, src_len, tgt_len),
+        valid: Batcher::new(enc(&splits.valid), batch, src_len, tgt_len),
+        test: Batcher::new(enc(&splits.test), batch, src_len, tgt_len),
+        vocab,
+        valid_refs,
+        test_refs,
+    })
+}
+
+/// Build QA data with shapes taken from the manifest variant.
+pub fn prepare_qa(cfg: &ExperimentConfig, var: &VariantInfo) -> Result<QaData> {
+    let vocab_cap = var.dim("vocab")?;
+    let batch = var.dim("batch")?;
+    let ctx_len = var.dim("ctx_len")?;
+    let q_len = var.dim("q_len")?;
+
+    let splits = corpus::qa::generate(&cfg.corpus, vocab_cap);
+    let vocab = build_vocab_qa(&splits.train, vocab_cap);
+
+    let enc = |ex: &[QaExample]| {
+        let mut e = encode_qa(ex, &vocab);
+        truncate_qa(&mut e, ctx_len, q_len);
+        e
+    };
+    // Keep raw examples aligned with encodable ones (drop the same ones).
+    let keep = |ex: &[QaExample]| -> Vec<QaExample> {
+        ex.iter().filter(|e| e.span.1 <= ctx_len).cloned().collect()
+    };
+    Ok(QaData {
+        train: QaBatcher::new(enc(&splits.train), batch, ctx_len, q_len),
+        valid: QaBatcher::new(enc(&splits.valid), batch, ctx_len, q_len),
+        test: QaBatcher::new(enc(&splits.test), batch, ctx_len, q_len),
+        vocab,
+        valid_examples: keep(&splits.valid),
+        test_examples: keep(&splits.test),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn fake_variant(task: &str) -> VariantInfo {
+        let json = format!(
+            r#"{{"variants": {{"x": {{
+              "dims": {{"task": "{task}", "batch": 4, "vocab": 512, "hidden": 8,
+                        "src_len": 16, "tgt_len": 8, "ctx_len": 32, "q_len": 8,
+                        "emb_dim": 16}},
+              "embedding": {{"kind": "regular", "order": 1, "rank": 1, "q": 16,
+                            "t": 512, "num_params": 8192}},
+              "params": [], "functions": {{}}
+            }}}}}}"#
+        );
+        Manifest::parse(&json).unwrap().variants["x"].clone()
+    }
+
+    #[test]
+    fn seq2seq_preparation_shapes() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.corpus.train = 40;
+        cfg.corpus.valid = 8;
+        cfg.corpus.test = 8;
+        let var = fake_variant("sum");
+        let d = prepare_seq2seq(&cfg, &var).unwrap();
+        assert_eq!(d.train.len_examples(), 40);
+        assert_eq!(d.valid_refs.len(), 8);
+        assert!(d.vocab.len() <= 512);
+        let mut rng = crate::util::Rng::new(0);
+        let (batch, real) = d.train.epoch(&mut rng).remove(0);
+        assert_eq!(batch.src.len(), 4 * 16);
+        assert!(real <= 4);
+    }
+
+    #[test]
+    fn qa_preparation_spans_fit() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.task = TaskKind::Qa;
+        cfg.corpus.train = 30;
+        cfg.corpus.valid = 6;
+        cfg.corpus.test = 6;
+        let var = fake_variant("qa");
+        let d = prepare_qa(&cfg, &var).unwrap();
+        assert!(d.train.len_examples() > 0);
+        assert_eq!(d.valid.len_examples(), d.valid_examples.len());
+        for (b, _) in d.test.eval_batches() {
+            for i in 0..b.batch_size {
+                assert!(b.start[i] >= 0 && (b.end[i] as usize) < 32);
+            }
+        }
+    }
+}

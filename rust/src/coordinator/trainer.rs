@@ -1,0 +1,175 @@
+//! Generic training loop over a train_step artifact, plus the greedy
+//! decoding / span-prediction drivers used for evaluation.
+
+use super::schedule::LrSchedule;
+use crate::data::{Batch, QaBatch};
+use crate::error::Result;
+use crate::runtime::{Engine, ParamStore, Value, VariantInfo};
+use crate::text::EOS;
+use crate::util::{Summary, Timer};
+
+/// Orchestrates train steps against one variant's artifacts.
+pub struct Trainer<'a> {
+    pub engine: &'a Engine,
+    pub variant: &'a VariantInfo,
+    pub schedule: LrSchedule,
+    /// Wall-clock per step (for the training-overhead bench).
+    pub step_times: Summary,
+    pub losses: Vec<f32>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(engine: &'a Engine, variant: &'a VariantInfo, schedule: LrSchedule) -> Trainer<'a> {
+        Trainer { engine, variant, schedule, step_times: Summary::new(), losses: Vec::new() }
+    }
+
+    /// One seq2seq train step; returns the loss.
+    pub fn step_seq2seq(&mut self, store: &mut ParamStore, batch: &Batch) -> Result<f32> {
+        let f = self.variant.function("train_step")?;
+        let lr = self.schedule.at(store.step as usize) as f32;
+        let mut inputs = store.train_values();
+        inputs.push(Value::I32(
+            batch.src.iter().map(|&x| x as i32).collect(),
+            vec![batch.batch_size, batch.src_len],
+        ));
+        inputs.push(Value::I32(
+            batch.tgt.iter().map(|&x| x as i32).collect(),
+            vec![batch.batch_size, batch.tgt_len],
+        ));
+        inputs.push(Value::F32(
+            batch.tgt_mask.clone(),
+            vec![batch.batch_size, batch.tgt_len],
+        ));
+        inputs.push(Value::scalar_f32(store.step as f32 + 1.0));
+        inputs.push(Value::scalar_f32(lr));
+        self.run_train(f, store, inputs)
+    }
+
+    /// One QA train step; returns the loss.
+    pub fn step_qa(&mut self, store: &mut ParamStore, batch: &QaBatch) -> Result<f32> {
+        let f = self.variant.function("train_step")?;
+        let lr = self.schedule.at(store.step as usize) as f32;
+        let mut inputs = store.train_values();
+        inputs.push(Value::I32(
+            batch.context.iter().map(|&x| x as i32).collect(),
+            vec![batch.batch_size, batch.ctx_len],
+        ));
+        inputs.push(Value::I32(
+            batch.question.iter().map(|&x| x as i32).collect(),
+            vec![batch.batch_size, batch.q_len],
+        ));
+        inputs.push(Value::I32(
+            batch.start.iter().map(|&x| x as i32).collect(),
+            vec![batch.batch_size],
+        ));
+        inputs.push(Value::I32(
+            batch.end.iter().map(|&x| x as i32).collect(),
+            vec![batch.batch_size],
+        ));
+        inputs.push(Value::scalar_f32(store.step as f32 + 1.0));
+        inputs.push(Value::scalar_f32(lr));
+        self.run_train(f, store, inputs)
+    }
+
+    fn run_train(
+        &mut self,
+        f: &crate::runtime::FunctionInfo,
+        store: &mut ParamStore,
+        inputs: Vec<Value>,
+    ) -> Result<f32> {
+        let t = Timer::start();
+        let outputs = self.engine.run(&f.file, &inputs)?;
+        store.absorb(&outputs)?;
+        let loss = outputs
+            .last()
+            .ok_or_else(|| crate::Error::Runtime("empty train outputs".into()))?
+            .first_f32()?;
+        self.step_times.add(t.elapsed().as_secs_f64());
+        self.losses.push(loss);
+        Ok(loss)
+    }
+}
+
+/// Greedy autoregressive decode over a batch (seq2seq eval).
+///
+/// Runs `encode` once, then `decode_step` up to `max_len` times, harvesting
+/// token ids until EOS per row. Returns one id sequence per batch row.
+pub fn greedy_decode(
+    engine: &Engine,
+    variant: &VariantInfo,
+    store: &ParamStore,
+    batch: &Batch,
+    max_len: usize,
+) -> Result<Vec<Vec<usize>>> {
+    let enc_f = variant.function("encode")?;
+    let dec_f = variant.function("decode_step")?;
+    let b = batch.batch_size;
+
+    let mut enc_inputs = store.param_values();
+    enc_inputs.push(Value::I32(
+        batch.src.iter().map(|&x| x as i32).collect(),
+        vec![b, batch.src_len],
+    ));
+    let enc_out = engine.run(&enc_f.file, &enc_inputs)?;
+    let (enc_proj, src_mask, mut h) = (
+        enc_out[0].clone(),
+        enc_out[1].clone(),
+        enc_out[2].clone(),
+    );
+
+    let params = store.param_values();
+    let mut prev: Vec<i32> = vec![crate::text::BOS as i32; b];
+    let mut seqs: Vec<Vec<usize>> = vec![Vec::new(); b];
+    let mut done = vec![false; b];
+    for _ in 0..max_len {
+        let mut inputs = params.clone();
+        inputs.push(enc_proj.clone());
+        inputs.push(src_mask.clone());
+        inputs.push(Value::I32(prev.clone(), vec![b]));
+        inputs.push(h.clone());
+        let out = engine.run(&dec_f.file, &inputs)?;
+        let next = out[0].as_i32()?.to_vec();
+        h = out[1].clone();
+        for i in 0..b {
+            if !done[i] {
+                if next[i] as usize == EOS {
+                    done[i] = true;
+                } else {
+                    seqs[i].push(next[i] as usize);
+                }
+            }
+        }
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        prev = next;
+    }
+    Ok(seqs)
+}
+
+/// QA span prediction over a batch; returns (start, end_inclusive) per row.
+pub fn predict_spans(
+    engine: &Engine,
+    variant: &VariantInfo,
+    store: &ParamStore,
+    batch: &QaBatch,
+) -> Result<Vec<(usize, usize)>> {
+    let f = variant.function("predict")?;
+    let mut inputs = store.param_values();
+    inputs.push(Value::I32(
+        batch.context.iter().map(|&x| x as i32).collect(),
+        vec![batch.batch_size, batch.ctx_len],
+    ));
+    inputs.push(Value::I32(
+        batch.question.iter().map(|&x| x as i32).collect(),
+        vec![batch.batch_size, batch.q_len],
+    ));
+    let out = engine.run(&f.file, &inputs)?;
+    let starts = out[0].as_i32()?;
+    let ends = out[1].as_i32()?;
+    Ok(starts
+        .iter()
+        .zip(ends.iter())
+        .map(|(&s, &e)| (s.max(0) as usize, e.max(0) as usize))
+        .collect())
+}

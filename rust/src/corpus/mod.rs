@@ -1,0 +1,72 @@
+//! Synthetic corpus generators standing in for the paper's datasets.
+//!
+//! The paper evaluates on GIGAWORD (LDC-licensed), IWSLT2014 DE-EN and
+//! SQuAD — none of which are available in this offline environment. Each
+//! generator below produces a *learnable* synthetic task that exercises the
+//! identical code path (same tokenization, vocabulary handling, seq2seq /
+//! reader architectures, same metrics), so the relative comparison between
+//! embedding representations — the object of Tables 1–3 — is preserved.
+//! See DESIGN.md §2 for the substitution argument.
+//!
+//! All generators are deterministic in their seed.
+
+mod lexicon;
+pub mod qa;
+pub mod summarization;
+pub mod translation;
+
+pub use lexicon::Lexicon;
+
+/// A source→target example (summarization, translation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqPair {
+    pub src: Vec<String>,
+    pub tgt: Vec<String>,
+}
+
+/// An extractive-QA example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QaExample {
+    pub context: Vec<String>,
+    pub question: Vec<String>,
+    /// Gold answer span [start, end) in context token coordinates.
+    pub span: (usize, usize),
+    /// Acceptable answer strings (token sequences), SQuAD-style.
+    pub answers: Vec<Vec<String>>,
+}
+
+impl QaExample {
+    pub fn answer_tokens(&self) -> &[String] {
+        &self.context[self.span.0..self.span.1]
+    }
+}
+
+/// Train/valid/test splits of a generated corpus.
+#[derive(Debug, Clone)]
+pub struct Splits<T> {
+    pub train: Vec<T>,
+    pub valid: Vec<T>,
+    pub test: Vec<T>,
+}
+
+impl<T> Splits<T> {
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        (self.train.len(), self.valid.len(), self.test.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qa_example_span_accessor() {
+        let ex = QaExample {
+            context: ["the", "year", "1999", "was"].iter().map(|s| s.to_string()).collect(),
+            question: vec!["when".into()],
+            span: (2, 3),
+            answers: vec![vec!["1999".into()]],
+        };
+        assert_eq!(ex.answer_tokens(), &["1999".to_string()]);
+    }
+}

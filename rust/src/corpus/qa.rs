@@ -1,0 +1,223 @@
+//! SQuAD-style synthetic extractive QA (Table 3 / Figs 2–3 workload).
+//!
+//! Each context paragraph states 3–6 facts about generated entities
+//! ("<entity> was founded in <year> .", "<entity> is located in <place> ." …);
+//! each question asks for one fact's value, and the gold answer is the value's
+//! token span inside the context. A reader model (biGRU + span scorers) must
+//! associate question words with the right fact — the embedding table is by
+//! far the dominant parameter block, matching DrQA's profile in the paper.
+
+use super::{Lexicon, QaExample, Splits};
+use crate::config::CorpusConfig;
+use crate::util::Rng;
+
+/// Fact families: (statement template, question template).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FactKind {
+    FoundedYear,
+    Location,
+    Product,
+    Leader,
+}
+
+const KINDS: [FactKind; 4] =
+    [FactKind::FoundedYear, FactKind::Location, FactKind::Product, FactKind::Leader];
+
+struct Fact {
+    kind: FactKind,
+    entity: String,
+    value: Vec<String>,
+}
+
+fn sample_fact(lex: &Lexicon, entity: &str, kind: FactKind, rng: &mut Rng) -> Fact {
+    let value: Vec<String> = match kind {
+        FactKind::FoundedYear => vec![rng.choose(&lex.years).clone()],
+        FactKind::Location => vec![rng.choose(&lex.places).clone()],
+        FactKind::Product => vec![rng.choose(&lex.objects).clone()],
+        FactKind::Leader => vec![rng.choose(&lex.entities).clone()],
+    };
+    Fact { kind, entity: entity.to_string(), value }
+}
+
+/// Render a fact as a statement, returning (tokens, value_span).
+fn render_fact(f: &Fact) -> (Vec<String>, (usize, usize)) {
+    let mut toks: Vec<String> = Vec::new();
+    let span;
+    match f.kind {
+        FactKind::FoundedYear => {
+            // "<entity> was founded in <year> ."
+            toks.push(f.entity.clone());
+            toks.extend(["was", "founded", "in"].map(String::from));
+            let s = toks.len();
+            toks.extend(f.value.iter().cloned());
+            span = (s, toks.len());
+            toks.push(".".into());
+        }
+        FactKind::Location => {
+            toks.push(f.entity.clone());
+            toks.extend(["is", "located", "in"].map(String::from));
+            let s = toks.len();
+            toks.extend(f.value.iter().cloned());
+            span = (s, toks.len());
+            toks.push(".".into());
+        }
+        FactKind::Product => {
+            toks.push(f.entity.clone());
+            toks.extend(["makes", "the"].map(String::from));
+            let s = toks.len();
+            toks.extend(f.value.iter().cloned());
+            span = (s, toks.len());
+            toks.push(".".into());
+        }
+        FactKind::Leader => {
+            toks.push(f.entity.clone());
+            toks.extend(["is", "led", "by"].map(String::from));
+            let s = toks.len();
+            toks.extend(f.value.iter().cloned());
+            span = (s, toks.len());
+            toks.push(".".into());
+        }
+    }
+    (toks, span)
+}
+
+fn render_question(f: &Fact) -> Vec<String> {
+    let mut q: Vec<String> = Vec::new();
+    match f.kind {
+        FactKind::FoundedYear => {
+            q.extend(["when", "was"].map(String::from));
+            q.push(f.entity.clone());
+            q.push("founded".into());
+        }
+        FactKind::Location => {
+            q.extend(["where", "is"].map(String::from));
+            q.push(f.entity.clone());
+            q.push("located".into());
+        }
+        FactKind::Product => {
+            q.extend(["what", "does"].map(String::from));
+            q.push(f.entity.clone());
+            q.push("make".into());
+        }
+        FactKind::Leader => {
+            q.extend(["who", "leads"].map(String::from));
+            q.push(f.entity.clone());
+        }
+    }
+    q.push("?".into());
+    q
+}
+
+/// Generate one context with one question about a random fact in it.
+pub fn generate_example(lex: &Lexicon, rng: &mut Rng) -> QaExample {
+    let n_facts = rng.range(3, 6);
+    // Distinct entities so questions are unambiguous; (entity, kind) pairs
+    // must be unique within a context.
+    let mut facts: Vec<Fact> = Vec::with_capacity(n_facts);
+    let mut used: std::collections::HashSet<(String, u8)> = std::collections::HashSet::new();
+    while facts.len() < n_facts {
+        let e = rng.choose(&lex.entities).clone();
+        let k = KINDS[rng.below(KINDS.len())];
+        if used.insert((e.clone(), k as u8)) {
+            facts.push(sample_fact(lex, &e, k, rng));
+        }
+    }
+    let mut context: Vec<String> = Vec::new();
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for f in &facts {
+        let (toks, (s, e)) = render_fact(f);
+        let off = context.len();
+        spans.push((off + s, off + e));
+        context.extend(toks);
+    }
+    let qi = rng.below(facts.len());
+    let question = render_question(&facts[qi]);
+    let span = spans[qi];
+    let answers = vec![context[span.0..span.1].to_vec()];
+    QaExample { context, question, span, answers }
+}
+
+/// Generate the full corpus with splits.
+pub fn generate(cfg: &CorpusConfig, target_vocab: usize) -> Splits<QaExample> {
+    let lex = Lexicon::new(cfg.seed, target_vocab);
+    let mut rng = Rng::new(cfg.seed ^ 0x54a4);
+    let gen_n = |rng: &mut Rng, n: usize| (0..n).map(|_| generate_example(&lex, rng)).collect();
+    Splits {
+        train: gen_n(&mut rng, cfg.train),
+        valid: gen_n(&mut rng, cfg.valid),
+        test: gen_n(&mut rng, cfg.test),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CorpusConfig {
+        CorpusConfig { seed: 5, train: 60, valid: 12, test: 12 }
+    }
+
+    #[test]
+    fn spans_point_at_answers() {
+        let s = generate(&cfg(), 400);
+        for ex in s.train.iter().chain(&s.valid).chain(&s.test) {
+            assert!(ex.span.1 <= ex.context.len());
+            assert!(ex.span.0 < ex.span.1);
+            assert_eq!(ex.answer_tokens(), ex.answers[0].as_slice());
+        }
+    }
+
+    #[test]
+    fn questions_reference_context_entity() {
+        let s = generate(&cfg(), 400);
+        for ex in &s.train {
+            // The questioned entity appears in both question and context.
+            let ent = ex
+                .question
+                .iter()
+                .find(|t| ex.context.contains(t) && t.len() > 2)
+                .cloned();
+            assert!(ent.is_some(), "q {:?} ctx {:?}", ex.question, ex.context);
+        }
+    }
+
+    #[test]
+    fn question_ends_with_mark() {
+        let s = generate(&cfg(), 400);
+        for ex in &s.train {
+            assert_eq!(ex.question.last().unwrap(), "?");
+        }
+    }
+
+    #[test]
+    fn answer_types_match_question_words() {
+        let s = generate(&cfg(), 400);
+        for ex in &s.train {
+            let ans = &ex.answers[0][0];
+            match ex.question[0].as_str() {
+                "when" => assert!(ans.parse::<u32>().is_ok(), "when → year, got {ans}"),
+                "where" => assert!(ans.ends_with("ia"), "where → place, got {ans}"),
+                "what" => assert!(ans.ends_with('s'), "what → object, got {ans}"),
+                "who" => {}
+                other => panic!("unexpected question word {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&cfg(), 400);
+        let b = generate(&cfg(), 400);
+        assert_eq!(a.train[0], b.train[0]);
+        assert_eq!(a.test[11], b.test[11]);
+    }
+
+    #[test]
+    fn contexts_have_multiple_facts() {
+        let s = generate(&cfg(), 400);
+        for ex in &s.train {
+            let periods = ex.context.iter().filter(|t| *t == ".").count();
+            assert!((3..=6).contains(&periods), "facts {periods}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Background prefetching over a batch stream (tokio substitute: one
+//! std::thread producer + bounded mpsc channel). Keeps the PJRT step from
+//! stalling on batch assembly — the L3 contribution of keeping Python (and
+//! everything slow) off the hot path extends to batch prep too.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A prefetching iterator adapter: runs `make_items` on a worker thread and
+/// buffers up to `depth` items ahead of the consumer.
+pub struct Prefetcher<T: Send + 'static> {
+    rx: mpsc::Receiver<T>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    /// Spawn a producer that pushes items from `producer` into a bounded
+    /// queue of `depth`.
+    pub fn spawn<F>(depth: usize, producer: F) -> Prefetcher<T>
+    where
+        F: FnOnce(&mut dyn FnMut(T) -> bool) + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let handle = std::thread::Builder::new()
+            .name("w2k-prefetch".into())
+            .spawn(move || {
+                let mut push = |item: T| tx.send(item).is_ok();
+                producer(&mut push);
+            })
+            .expect("spawn prefetch thread");
+        Prefetcher { rx, handle: Some(handle) }
+    }
+
+    /// Convenience: prefetch a pre-built vector (moves batch assembly cost
+    /// off the training thread when construction itself is the cost).
+    pub fn from_vec(depth: usize, items: Vec<T>) -> Prefetcher<T> {
+        Self::spawn(depth, move |push| {
+            for it in items {
+                if !push(it) {
+                    break;
+                }
+            }
+        })
+    }
+}
+
+impl<T: Send + 'static> Iterator for Prefetcher<T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+}
+
+impl<T: Send + 'static> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        // Close the channel, then join the producer.
+        // Draining is unnecessary: sender errors out once rx is dropped,
+        // but rx drops only after this; explicitly unblock by reading the
+        // remaining items non-blockingly.
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            // The producer may be blocked on a full channel; dropping rx
+            // first is impossible here, so keep draining until it finishes.
+            loop {
+                match self.rx.try_recv() {
+                    Ok(_) => continue,
+                    Err(mpsc::TryRecvError::Empty) => {
+                        if h.is_finished() {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => break,
+                }
+            }
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yields_all_items_in_order() {
+        let p = Prefetcher::from_vec(2, vec![1, 2, 3, 4, 5]);
+        let got: Vec<i32> = p.collect();
+        assert_eq!(got, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn producer_runs_ahead() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let produced = Arc::new(AtomicUsize::new(0));
+        let pc = produced.clone();
+        let mut p = Prefetcher::spawn(4, move |push| {
+            for i in 0..8 {
+                pc.fetch_add(1, Ordering::SeqCst);
+                if !push(i) {
+                    break;
+                }
+            }
+        });
+        // Consume one item slowly; producer should have buffered ahead.
+        let first = p.next().unwrap();
+        assert_eq!(first, 0);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(produced.load(Ordering::SeqCst) >= 4, "producer did not run ahead");
+        let rest: Vec<usize> = p.collect();
+        assert_eq!(rest, vec![1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn early_drop_terminates_producer() {
+        let p = Prefetcher::from_vec(1, (0..1_000_000).collect::<Vec<usize>>());
+        drop(p); // must not hang
+    }
+
+    #[test]
+    fn empty_stream() {
+        let p = Prefetcher::from_vec(2, Vec::<u8>::new());
+        assert_eq!(p.count(), 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Data pipeline: encoded datasets, padded batches, background prefetching.
+
+mod batcher;
+mod loader;
+
+pub use batcher::{Batch, Batcher, QaBatch, QaBatcher};
+pub use loader::Prefetcher;
+
+use crate::corpus::{QaExample, SeqPair};
+use crate::text::Vocab;
+
+/// A sequence-to-sequence example encoded to ids (BOS/EOS wrapped target).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedPair {
+    pub src: Vec<usize>,
+    /// Target with BOS prefix and EOS suffix (teacher forcing layout).
+    pub tgt: Vec<usize>,
+}
+
+/// A QA example encoded to ids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedQa {
+    pub context: Vec<usize>,
+    pub question: Vec<usize>,
+    pub span: (usize, usize),
+}
+
+/// Encode seq2seq pairs with (possibly distinct) vocabularies.
+pub fn encode_pairs(pairs: &[SeqPair], src_vocab: &Vocab, tgt_vocab: &Vocab) -> Vec<EncodedPair> {
+    pairs
+        .iter()
+        .map(|p| EncodedPair {
+            src: src_vocab.encode(&p.src),
+            tgt: tgt_vocab.encode_wrapped(&p.tgt),
+        })
+        .collect()
+}
+
+/// Encode QA examples with a single shared vocabulary.
+pub fn encode_qa(examples: &[QaExample], vocab: &Vocab) -> Vec<EncodedQa> {
+    examples
+        .iter()
+        .map(|e| EncodedQa {
+            context: vocab.encode(&e.context),
+            question: vocab.encode(&e.question),
+            span: e.span,
+        })
+        .collect()
+}
+
+/// Truncate sequences to maximum lengths (keeps spans valid by construction:
+/// QA contexts are truncated only if the span fits, else the example drops).
+pub fn truncate_pairs(pairs: &mut Vec<EncodedPair>, max_src: usize, max_tgt: usize) {
+    for p in pairs.iter_mut() {
+        p.src.truncate(max_src);
+        if p.tgt.len() > max_tgt {
+            p.tgt.truncate(max_tgt);
+            // ensure EOS terminates the truncated target
+            *p.tgt.last_mut().unwrap() = crate::text::EOS;
+        }
+    }
+}
+
+/// Drop QA examples whose span exceeds `max_ctx` after truncation.
+pub fn truncate_qa(examples: &mut Vec<EncodedQa>, max_ctx: usize, max_q: usize) {
+    examples.retain(|e| e.span.1 <= max_ctx);
+    for e in examples.iter_mut() {
+        e.context.truncate(max_ctx);
+        e.question.truncate(max_q);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::{BOS, EOS};
+
+    fn mini_vocab() -> Vocab {
+        let data: Vec<Vec<String>> =
+            vec![["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect()];
+        let refs: Vec<&[String]> = data.iter().map(|v| v.as_slice()).collect();
+        Vocab::build(refs.iter().copied(), 100, 1)
+    }
+
+    #[test]
+    fn encode_wraps_target() {
+        let v = mini_vocab();
+        let pairs = vec![SeqPair {
+            src: vec!["a".into(), "b".into()],
+            tgt: vec!["c".into()],
+        }];
+        let enc = encode_pairs(&pairs, &v, &v);
+        assert_eq!(enc[0].src.len(), 2);
+        assert_eq!(enc[0].tgt[0], BOS);
+        assert_eq!(*enc[0].tgt.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn truncation_preserves_eos() {
+        let v = mini_vocab();
+        let pairs = vec![SeqPair {
+            src: (0..10).map(|_| "a".to_string()).collect(),
+            tgt: (0..10).map(|_| "b".to_string()).collect(),
+        }];
+        let mut enc = encode_pairs(&pairs, &v, &v);
+        truncate_pairs(&mut enc, 4, 5);
+        assert_eq!(enc[0].src.len(), 4);
+        assert_eq!(enc[0].tgt.len(), 5);
+        assert_eq!(*enc[0].tgt.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn qa_truncation_drops_unreachable_spans() {
+        let mut ex = vec![
+            EncodedQa { context: (0..20).collect(), question: vec![1], span: (18, 19) },
+            EncodedQa { context: (0..20).collect(), question: vec![1], span: (2, 3) },
+        ];
+        truncate_qa(&mut ex, 10, 5);
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].span, (2, 3));
+        assert_eq!(ex[0].context.len(), 10);
+    }
+}

@@ -1,0 +1,115 @@
+//! Parameter-sharing baseline via the hashing trick (related work §4.1,
+//! Suzuki & Nagata 2016 style): each (word, dimension) coordinate maps to one
+//! of `B` shared weights through a hash, with a per-coordinate sign hash to
+//! decorrelate collisions.
+
+use super::EmbeddingStore;
+use crate::util::rng::splitmix64;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct HashedEmbedding {
+    vocab: usize,
+    dim: usize,
+    buckets: usize,
+    weights: Vec<f32>,
+    seed: u64,
+}
+
+impl HashedEmbedding {
+    pub fn random(vocab: usize, dim: usize, buckets: usize, rng: &mut Rng) -> Self {
+        assert!(buckets >= 1);
+        let a = (3.0 / dim as f32).sqrt();
+        HashedEmbedding {
+            vocab,
+            dim,
+            buckets,
+            weights: rng.uniform_vec(buckets, -a, a),
+            seed: rng.next_u64(),
+        }
+    }
+
+    #[inline]
+    fn coord_hash(&self, id: usize, j: usize) -> (usize, f32) {
+        let mut h = self
+            .seed
+            .wrapping_add((id as u64) << 32)
+            .wrapping_add(j as u64);
+        let x = splitmix64(&mut h);
+        let bucket = (x % self.buckets as u64) as usize;
+        let sign = if (x >> 63) == 0 { 1.0 } else { -1.0 };
+        (bucket, sign)
+    }
+
+    pub fn buckets(&self) -> usize {
+        self.buckets
+    }
+}
+
+impl EmbeddingStore for HashedEmbedding {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_params(&self) -> usize {
+        self.buckets
+    }
+
+    fn lookup(&self, id: usize) -> Vec<f32> {
+        (0..self.dim)
+            .map(|j| {
+                let (b, s) = self.coord_hash(id, j);
+                s * self.weights[b]
+            })
+            .collect()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Hashed B={} ({}×{}, {:.1}× saving)",
+            self.buckets,
+            self.vocab,
+            self.dim,
+            self.space_saving_rate()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_lookup() {
+        let mut rng = Rng::new(0);
+        let e = HashedEmbedding::random(100, 16, 64, &mut rng);
+        assert_eq!(e.lookup(42), e.lookup(42));
+        assert_ne!(e.lookup(42), e.lookup(43));
+    }
+
+    #[test]
+    fn params_equal_buckets() {
+        let mut rng = Rng::new(1);
+        let e = HashedEmbedding::random(1000, 50, 128, &mut rng);
+        assert_eq!(e.num_params(), 128);
+        let expected = 1000.0 * 50.0 / 128.0;
+        assert!((e.space_saving_rate() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn values_are_signed_bucket_weights() {
+        let mut rng = Rng::new(2);
+        let e = HashedEmbedding::random(10, 8, 4, &mut rng);
+        let v = e.lookup(3);
+        for x in v {
+            assert!(
+                e.weights.iter().any(|w| (w - x).abs() < 1e-7 || (w + x).abs() < 1e-7),
+                "{x} not ±bucket weight"
+            );
+        }
+    }
+}

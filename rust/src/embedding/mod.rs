@@ -1,0 +1,139 @@
+//! Embedding stores: the paper's two contributions plus related-work
+//! baselines, behind one trait.
+//!
+//! These are the *serving-path* implementations (pure Rust): they back the
+//! embedding server, the lookup benchmarks, the parameter accounting of
+//! Tables 1–3, and act as independent oracles for the Pallas kernels. The
+//! *training-path* versions of the same math live in `python/compile/` and
+//! run as AOT-compiled XLA executables.
+
+pub mod compress;
+mod hashed;
+mod lowrank;
+mod quantized;
+mod regular;
+pub mod stats;
+mod word2ket;
+mod word2ketxs;
+
+pub use compress::{fit_xs_order2, FitReport};
+pub use hashed::HashedEmbedding;
+pub use lowrank::LowRankEmbedding;
+pub use quantized::QuantizedEmbedding;
+pub use regular::RegularEmbedding;
+pub use word2ket::Word2Ket;
+pub use word2ketxs::Word2KetXS;
+
+use crate::config::{EmbeddingConfig, EmbeddingKind};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// A `d × p` word-embedding matrix accessed row-wise.
+pub trait EmbeddingStore: Send + Sync {
+    /// Vocabulary size `d`.
+    fn vocab_size(&self) -> usize;
+
+    /// Embedding dimensionality `p`.
+    fn dim(&self) -> usize;
+
+    /// Number of trainable parameters actually stored.
+    fn num_params(&self) -> usize;
+
+    /// Reconstruct the embedding vector for one token id.
+    fn lookup(&self, id: usize) -> Vec<f32>;
+
+    /// Reconstruct a batch of rows as a `(b, p)` tensor. Implementations may
+    /// override for batch-level optimizations.
+    fn lookup_batch(&self, ids: &[usize]) -> Tensor {
+        let p = self.dim();
+        let mut data = Vec::with_capacity(ids.len() * p);
+        for &id in ids {
+            data.extend(self.lookup(id));
+        }
+        Tensor::new(vec![ids.len(), p], data).expect("lookup_batch shape")
+    }
+
+    /// Space saving rate vs a regular `d × p` matrix (paper's definition:
+    /// regular parameter count divided by this store's parameter count).
+    fn space_saving_rate(&self) -> f64 {
+        (self.vocab_size() as f64 * self.dim() as f64) / self.num_params() as f64
+    }
+
+    /// Human-readable description for reports.
+    fn describe(&self) -> String;
+}
+
+/// Materialize the full `d × p` matrix (tests / small vocabularies only).
+pub fn materialize(store: &dyn EmbeddingStore) -> Tensor {
+    let ids: Vec<usize> = (0..store.vocab_size()).collect();
+    store.lookup_batch(&ids)
+}
+
+/// Construct a store from an [`EmbeddingConfig`] (used by the server and the
+/// benches; training-path stores are built inside the AOT graphs instead).
+pub fn build(
+    cfg: &EmbeddingConfig,
+    vocab: usize,
+    dim: usize,
+    rng: &mut Rng,
+) -> Box<dyn EmbeddingStore> {
+    match cfg.kind {
+        EmbeddingKind::Regular => Box::new(RegularEmbedding::random(vocab, dim, rng)),
+        EmbeddingKind::Word2Ket => {
+            let mut e = Word2Ket::random(vocab, dim, cfg.order, cfg.rank, rng);
+            e.set_layernorm(cfg.layernorm);
+            Box::new(e)
+        }
+        EmbeddingKind::Word2KetXS => {
+            Box::new(Word2KetXS::random(vocab, dim, cfg.order, cfg.rank, rng))
+        }
+        EmbeddingKind::Quantized => {
+            Box::new(QuantizedEmbedding::random(vocab, dim, cfg.bits, rng))
+        }
+        EmbeddingKind::LowRank => {
+            Box::new(LowRankEmbedding::random(vocab, dim, cfg.lowrank_dim, rng))
+        }
+        EmbeddingKind::Hashed => Box::new(HashedEmbedding::random(vocab, dim, cfg.buckets, rng)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EmbeddingConfig;
+
+    #[test]
+    fn build_dispatches_all_kinds() {
+        let mut rng = Rng::new(0);
+        for kind in [
+            EmbeddingKind::Regular,
+            EmbeddingKind::Word2Ket,
+            EmbeddingKind::Word2KetXS,
+            EmbeddingKind::Quantized,
+            EmbeddingKind::LowRank,
+            EmbeddingKind::Hashed,
+        ] {
+            let cfg = EmbeddingConfig { kind, order: 2, rank: 2, ..Default::default() };
+            let store = build(&cfg, 100, 16, &mut rng);
+            assert_eq!(store.vocab_size(), 100);
+            assert_eq!(store.dim(), 16);
+            assert_eq!(store.lookup(7).len(), 16);
+            assert!(store.num_params() > 0, "{}", store.describe());
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(1);
+        let cfg = EmbeddingConfig {
+            kind: EmbeddingKind::Word2KetXS,
+            order: 2,
+            rank: 3,
+            ..Default::default()
+        };
+        let store = build(&cfg, 50, 16, &mut rng);
+        let batch = store.lookup_batch(&[3, 17, 49]);
+        assert_eq!(batch.shape(), &[3, 16]);
+        assert_eq!(batch.row(1), store.lookup(17).as_slice());
+    }
+}

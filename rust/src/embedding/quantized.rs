@@ -1,0 +1,175 @@
+//! Uniform quantization baseline (related work §4.1: Gupta et al. 2015,
+//! May et al. 2019). Stores b-bit codes plus one (scale, offset) pair per
+//! row. Space saving is bounded by 32/b for 32-bit floats — the paper's
+//! argument for why bit-encoding methods cannot reach word2ketXS rates.
+
+use super::EmbeddingStore;
+use crate::util::Rng;
+
+/// Per-row uniformly quantized embedding table.
+#[derive(Debug, Clone)]
+pub struct QuantizedEmbedding {
+    vocab: usize,
+    dim: usize,
+    bits: usize,
+    /// Packed codes, `bits` per entry, row-major.
+    codes: Vec<u32>,
+    /// Per-row dequantization: value = offset + code * scale.
+    scales: Vec<f32>,
+    offsets: Vec<f32>,
+}
+
+impl QuantizedEmbedding {
+    /// Quantize an existing dense matrix row-by-row.
+    pub fn from_dense(vocab: usize, dim: usize, data: &[f32], bits: usize) -> Self {
+        assert!((1..=16).contains(&bits));
+        assert_eq!(data.len(), vocab * dim);
+        let levels = (1u32 << bits) - 1;
+        let mut codes = vec![0u32; (vocab * dim * bits + 31) / 32];
+        let mut scales = vec![0.0f32; vocab];
+        let mut offsets = vec![0.0f32; vocab];
+        for r in 0..vocab {
+            let row = &data[r * dim..(r + 1) * dim];
+            let lo = row.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let scale = if hi > lo { (hi - lo) / levels as f32 } else { 1.0 };
+            scales[r] = scale;
+            offsets[r] = lo;
+            for (c, &x) in row.iter().enumerate() {
+                let code = (((x - lo) / scale).round() as u32).min(levels);
+                set_bits(&mut codes, (r * dim + c) * bits, bits, code);
+            }
+        }
+        QuantizedEmbedding { vocab, dim, bits, codes, scales, offsets }
+    }
+
+    pub fn random(vocab: usize, dim: usize, bits: usize, rng: &mut Rng) -> Self {
+        let a = (3.0 / dim as f32).sqrt();
+        let dense = rng.uniform_vec(vocab * dim, -a, a);
+        Self::from_dense(vocab, dim, &dense, bits)
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Worst-case reconstruction error bound: scale/2 per element.
+    pub fn max_row_error(&self, id: usize) -> f32 {
+        self.scales[id] / 2.0
+    }
+}
+
+fn set_bits(words: &mut [u32], bit_off: usize, nbits: usize, val: u32) {
+    let w = bit_off / 32;
+    let o = bit_off % 32;
+    words[w] |= val << o;
+    if o + nbits > 32 {
+        words[w + 1] |= val >> (32 - o);
+    }
+}
+
+fn get_bits(words: &[u32], bit_off: usize, nbits: usize) -> u32 {
+    let w = bit_off / 32;
+    let o = bit_off % 32;
+    let mask = if nbits == 32 { u32::MAX } else { (1u32 << nbits) - 1 };
+    let mut v = words[w] >> o;
+    if o + nbits > 32 {
+        v |= words[w + 1] << (32 - o);
+    }
+    v & mask
+}
+
+impl EmbeddingStore for QuantizedEmbedding {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_params(&self) -> usize {
+        // Count in f32-equivalents, the paper's accounting unit: packed codes
+        // occupy dim·bits/32 floats per row, plus scale+offset.
+        let code_floats = (self.vocab * self.dim * self.bits + 31) / 32;
+        code_floats + 2 * self.vocab
+    }
+
+    fn lookup(&self, id: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.dim);
+        let scale = self.scales[id];
+        let off = self.offsets[id];
+        for c in 0..self.dim {
+            let code = get_bits(&self.codes, (id * self.dim + c) * self.bits, self.bits);
+            out.push(off + code as f32 * scale);
+        }
+        out
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Quantized {}-bit ({}×{}, {} f32-equiv params, {:.1}× saving)",
+            self.bits,
+            self.vocab,
+            self.dim,
+            self.num_params(),
+            self.space_saving_rate()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_packing_roundtrip() {
+        let mut words = vec![0u32; 4];
+        let vals = [5u32, 7, 0, 255, 128, 3];
+        for (i, &v) in vals.iter().enumerate() {
+            set_bits(&mut words, i * 9, 9, v); // 9-bit crosses word boundaries
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(get_bits(&words, i * 9, 9), v);
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_bounded() {
+        let mut rng = Rng::new(0);
+        let a = (3.0f32 / 16.0).sqrt();
+        let dense = rng.uniform_vec(10 * 16, -a, a);
+        let q = QuantizedEmbedding::from_dense(10, 16, &dense, 8);
+        for r in 0..10 {
+            let rec = q.lookup(r);
+            let bound = q.max_row_error(r) + 1e-6;
+            for c in 0..16 {
+                let err = (rec[c] - dense[r * 16 + c]).abs();
+                assert!(err <= bound, "row {r} col {c}: err {err} > bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn saving_rate_bounded_by_32_over_b() {
+        // The paper's §4.1 point: bit encoding saves at most 32× (b=1).
+        let mut rng = Rng::new(1);
+        for bits in [2usize, 4, 8] {
+            // dim large enough that per-row (scale, offset) overhead is small
+            let q = QuantizedEmbedding::random(100, 512, bits, &mut rng);
+            let rate = q.space_saving_rate();
+            assert!(rate <= 32.0 / bits as f64 + 1e-9, "bits {bits}: rate {rate}");
+            assert!(rate > 32.0 / bits as f64 * 0.8, "bits {bits}: rate {rate} too low");
+        }
+    }
+
+    #[test]
+    fn constant_row_handled() {
+        let dense = vec![0.5f32; 4 * 8];
+        let q = QuantizedEmbedding::from_dense(4, 8, &dense, 4);
+        let rec = q.lookup(2);
+        for x in rec {
+            assert!((x - 0.5).abs() < 1e-6);
+        }
+    }
+}

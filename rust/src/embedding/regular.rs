@@ -1,0 +1,97 @@
+//! The baseline the paper compares against: a dense `d × p` matrix.
+
+use super::EmbeddingStore;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Dense row-major embedding matrix.
+#[derive(Debug, Clone)]
+pub struct RegularEmbedding {
+    vocab: usize,
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl RegularEmbedding {
+    pub fn new(vocab: usize, dim: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), vocab * dim);
+        RegularEmbedding { vocab, dim, data }
+    }
+
+    /// Glorot-uniform initialization, matching typical embedding init.
+    pub fn random(vocab: usize, dim: usize, rng: &mut Rng) -> Self {
+        let a = (3.0 / dim as f32).sqrt();
+        RegularEmbedding { vocab, dim, data: rng.uniform_vec(vocab * dim, -a, a) }
+    }
+
+    /// Borrow the underlying matrix (used by the quantized/low-rank baselines
+    /// when compressing a trained table).
+    pub fn matrix(&self) -> Tensor {
+        Tensor::new(vec![self.vocab, self.dim], self.data.clone()).unwrap()
+    }
+
+    pub fn row_slice(&self, id: usize) -> &[f32] {
+        &self.data[id * self.dim..(id + 1) * self.dim]
+    }
+}
+
+impl EmbeddingStore for RegularEmbedding {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_params(&self) -> usize {
+        self.data.len()
+    }
+
+    fn lookup(&self, id: usize) -> Vec<f32> {
+        self.row_slice(id).to_vec()
+    }
+
+    fn lookup_batch(&self, ids: &[usize]) -> Tensor {
+        let mut data = Vec::with_capacity(ids.len() * self.dim);
+        for &id in ids {
+            data.extend_from_slice(self.row_slice(id));
+        }
+        Tensor::new(vec![ids.len(), self.dim], data).unwrap()
+    }
+
+    fn describe(&self) -> String {
+        format!("Regular {}×{} ({} params)", self.vocab, self.dim, self.num_params())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_equal_d_times_p() {
+        let mut rng = Rng::new(0);
+        let e = RegularEmbedding::random(100, 32, &mut rng);
+        assert_eq!(e.num_params(), 3200);
+        assert_eq!(e.space_saving_rate(), 1.0);
+    }
+
+    #[test]
+    fn lookup_returns_stored_row() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let e = RegularEmbedding::new(3, 4, data);
+        assert_eq!(e.lookup(1), vec![4.0, 5.0, 6.0, 7.0]);
+        let b = e.lookup_batch(&[2, 0]);
+        assert_eq!(b.row(0), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(b.row(1), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn init_scale_bounded() {
+        let mut rng = Rng::new(1);
+        let e = RegularEmbedding::random(10, 64, &mut rng);
+        let a = (3.0f32 / 64.0).sqrt();
+        assert!(e.lookup(0).iter().all(|x| x.abs() <= a));
+    }
+}

@@ -1,0 +1,168 @@
+//! word2ket (paper §2.3, eq. 3): each word's embedding is its own entangled
+//! tensor `v_i = Σ_{k=1..r} ⊗_{j=1..n} v_jk^{(i)}` with leaves `v_jk ∈ R^q`,
+//! `q = ⌈p^{1/n}⌉`. Storage: `d · r · n · q` instead of `d · p`.
+
+use super::EmbeddingStore;
+use crate::kron::CpTensor;
+use crate::util::{ceil_root, Rng};
+
+/// Per-word CP tensors sharing (rank, order, leaf dim).
+#[derive(Debug, Clone)]
+pub struct Word2Ket {
+    vocab: usize,
+    dim: usize,
+    order: usize,
+    rank: usize,
+    leaf_dim: usize,
+    words: Vec<CpTensor>,
+    layernorm: bool,
+}
+
+impl Word2Ket {
+    /// `dim` is the requested embedding dimension p; the reconstructed vector
+    /// has dimension `q^n ≥ p` and is truncated to p (the paper picks p=q^n
+    /// exactly; truncation generalizes to arbitrary p).
+    pub fn random(vocab: usize, dim: usize, order: usize, rank: usize, rng: &mut Rng) -> Self {
+        assert!(order >= 2, "word2ket needs order >= 2");
+        let q = ceil_root(dim, order as u32).max(2);
+        let words = (0..vocab)
+            .map(|w| {
+                let mut child = rng.fork(w as u64);
+                CpTensor::random(rank, order, q, &mut child)
+            })
+            .collect();
+        Word2Ket { vocab, dim, order, rank, leaf_dim: q, words, layernorm: false }
+    }
+
+    pub fn set_layernorm(&mut self, on: bool) {
+        self.layernorm = on;
+        for w in &mut self.words {
+            w.layernorm_nodes = on;
+        }
+    }
+
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn leaf_dim(&self) -> usize {
+        self.leaf_dim
+    }
+
+    /// Access a word's CP tensor (e.g. for factored inner products).
+    pub fn word(&self, id: usize) -> &CpTensor {
+        &self.words[id]
+    }
+
+    /// Factored inner product between two words' embeddings without
+    /// reconstruction (§2.3): `O(r² n q)` time, `O(1)` space.
+    ///
+    /// Only valid in raw CP form (LayerNorm off).
+    pub fn inner(&self, a: usize, b: usize) -> f32 {
+        self.words[a].inner(&self.words[b])
+    }
+}
+
+impl EmbeddingStore for Word2Ket {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_params(&self) -> usize {
+        // d · r · n · q
+        self.vocab * self.rank * self.order * self.leaf_dim
+    }
+
+    fn lookup(&self, id: usize) -> Vec<f32> {
+        let mut v = self.words[id].reconstruct();
+        v.truncate(self.dim);
+        v
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "word2ket order={} rank={} q={} ({}×{}, {} params, {:.0}× saving)",
+            self.order,
+            self.rank,
+            self.leaf_dim,
+            self.vocab,
+            self.dim,
+            self.num_params(),
+            self.space_saving_rate()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table1_row_w2k() {
+        // Table 1: word2ket 4/1 dim 256 over GIGAWORD vocab 30,428 → 486,848
+        // params = 30,428 · 1 · 4 · 4, saving rate 16.
+        let mut rng = Rng::new(0);
+        let e = Word2Ket::random(30_428, 256, 4, 1, &mut rng);
+        assert_eq!(e.leaf_dim(), 4);
+        assert_eq!(e.num_params(), 486_848);
+        let rate = e.space_saving_rate();
+        assert!((rate - 16.0).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn lookup_dim_and_determinism() {
+        let mut rng = Rng::new(3);
+        let e = Word2Ket::random(20, 27, 3, 2, &mut rng);
+        let v1 = e.lookup(5);
+        let v2 = e.lookup(5);
+        assert_eq!(v1.len(), 27);
+        assert_eq!(v1, v2);
+        assert!(v1.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn factored_inner_matches_dense_lookup() {
+        let mut rng = Rng::new(4);
+        // p = q^n exactly so no truncation interferes: 4^2 = 16.
+        let e = Word2Ket::random(10, 16, 2, 3, &mut rng);
+        for (a, b) in [(0usize, 1usize), (2, 2), (5, 9)] {
+            let va = e.lookup(a);
+            let vb = e.lookup(b);
+            let dense: f32 = va.iter().zip(vb.iter()).map(|(x, y)| x * y).sum();
+            let fast = e.inner(a, b);
+            assert!(
+                (dense - fast).abs() < 1e-3 * dense.abs().max(1.0),
+                "({a},{b}): dense {dense} vs factored {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn layernorm_changes_reconstruction() {
+        let mut rng = Rng::new(5);
+        let mut e = Word2Ket::random(4, 16, 2, 2, &mut rng);
+        let raw = e.lookup(0);
+        e.set_layernorm(true);
+        let ln = e.lookup(0);
+        assert_eq!(raw.len(), ln.len());
+        assert_ne!(raw, ln);
+        assert!(ln.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn distinct_words_distinct_vectors() {
+        let mut rng = Rng::new(6);
+        let e = Word2Ket::random(8, 16, 2, 1, &mut rng);
+        let v0 = e.lookup(0);
+        let v1 = e.lookup(1);
+        assert_ne!(v0, v1);
+    }
+}

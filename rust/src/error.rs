@@ -1,0 +1,47 @@
+//! Unified error type for the library.
+
+use thiserror::Error;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    #[error("server error: {0}")]
+    Server(String),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

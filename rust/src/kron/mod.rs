@@ -1,0 +1,296 @@
+//! Kronecker / tensor-product algebra (§2–§3 of the paper).
+//!
+//! This module implements, in pure Rust:
+//!  * dense Kronecker products of vectors and matrices,
+//!  * the mixed-radix index codec behind *lazy* Kronecker row access
+//!    (`(A ⊗ B)_{ij} = a_{⌊i/p⌋,⌊j/q⌋} · b_{i mod p, j mod q}`, §3.2),
+//!  * CP-format tensors `v = Σ_{k=1..r} ⊗_{j=1..n} v_jk` (eq. 3) with the
+//!    balanced product tree of Fig. 1 and the factored inner product of §2.3.
+//!
+//! The same algebra is implemented as Pallas kernels on the compute path
+//! (python/compile/kernels); this Rust mirror powers the serving path,
+//! baselines, parameter accounting, and acts as an independent oracle for the
+//! kernel tests.
+
+mod cp;
+mod radix;
+
+pub use cp::CpTensor;
+pub use radix::MixedRadix;
+
+use crate::tensor::Tensor;
+
+/// Dense Kronecker product of two vectors: `out[i*|b| + j] = a[i] * b[j]`.
+pub fn kron_vec(a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(a.len() * b.len());
+    for &x in a {
+        if x == 0.0 {
+            out.extend(std::iter::repeat(0.0).take(b.len()));
+        } else {
+            out.extend(b.iter().map(|&y| x * y));
+        }
+    }
+    out
+}
+
+/// Dense Kronecker product of a chain of vectors, left-associated.
+pub fn kron_chain(vs: &[&[f32]]) -> Vec<f32> {
+    assert!(!vs.is_empty());
+    let mut acc: Vec<f32> = vs[0].to_vec();
+    for v in &vs[1..] {
+        acc = kron_vec(&acc, v);
+    }
+    acc
+}
+
+/// Dense Kronecker product of a chain of vectors using the *balanced tree*
+/// arrangement of Fig. 1: pairs are combined level by level. Produces the same
+/// vector as [`kron_chain`] (tensor product is associative) but with
+/// `O(log n)` sequential depth.
+pub fn kron_tree(vs: &[&[f32]]) -> Vec<f32> {
+    assert!(!vs.is_empty());
+    let mut level: Vec<Vec<f32>> = vs.iter().map(|v| v.to_vec()).collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity((level.len() + 1) / 2);
+        let mut it = level.chunks(2);
+        while let Some(pair) = it.next() {
+            if pair.len() == 2 {
+                next.push(kron_vec(&pair[0], &pair[1]));
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+/// Reusable scratch buffers for allocation-free Kronecker accumulation
+/// (the serving hot path; see `Word2KetXS::lookup_into`).
+#[derive(Debug, Default)]
+pub struct KronScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl KronScratch {
+    pub fn new() -> KronScratch {
+        KronScratch::default()
+    }
+}
+
+/// `acc += ⊗_j parts[j]` without allocating (beyond scratch growth).
+///
+/// `acc` may be *shorter* than the full `Π|parts_j|` product — only the
+/// prefix is accumulated (word2ketXS truncates `q^n ≥ p` to `p`). The chain
+/// prefix `⊗ parts[..n-1]` is built by ping-ponging between the two scratch
+/// buffers; the final level is fused into the accumulation so the full-width
+/// term vector is never materialized (the Rust mirror of the kernel-side
+/// rank-sum fusion, DESIGN.md §Hardware-Adaptation).
+pub fn kron_accumulate(parts: &[&[f32]], acc: &mut [f32], s: &mut KronScratch) {
+    match parts.len() {
+        0 => {}
+        1 => {
+            debug_assert!(acc.len() <= parts[0].len());
+            for (o, &x) in acc.iter_mut().zip(parts[0]) {
+                *o += x;
+            }
+        }
+        _ => {
+            let last = parts[parts.len() - 1];
+            s.a.clear();
+            s.a.extend_from_slice(parts[0]);
+            for p in &parts[1..parts.len() - 1] {
+                s.b.clear();
+                s.b.reserve(s.a.len() * p.len());
+                for &x in &s.a {
+                    if x == 0.0 {
+                        s.b.extend(std::iter::repeat(0.0).take(p.len()));
+                    } else {
+                        s.b.extend(p.iter().map(|&y| x * y));
+                    }
+                }
+                std::mem::swap(&mut s.a, &mut s.b);
+            }
+            let q = last.len();
+            debug_assert!(acc.len() <= s.a.len() * q);
+            let mut i = 0;
+            while i * q < acc.len() {
+                let x = s.a[i];
+                if x != 0.0 {
+                    let end = ((i + 1) * q).min(acc.len());
+                    let out = &mut acc[i * q..end];
+                    for (oj, &y) in out.iter_mut().zip(last) {
+                        *oj += x * y;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Dense Kronecker product of two matrices, shapes (m×n) ⊗ (p×q) → (mp×nq).
+pub fn kron_mat(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let (p, q) = (b.shape()[0], b.shape()[1]);
+    let mut out = Tensor::zeros(vec![m * p, n * q]);
+    for i in 0..m {
+        for j in 0..n {
+            let aij = a.at2(i, j);
+            if aij == 0.0 {
+                continue;
+            }
+            for k in 0..p {
+                for l in 0..q {
+                    out.set2(i * p + k, j * q + l, aij * b.at2(k, l));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Lazily evaluated single entry of `⊗_j A_j` (matrices), without
+/// materializing anything (§3.2 lazy-tensor identity, generalized to order n).
+///
+/// `factors` are the matrices `A_1 .. A_n`; the full operator has
+/// `Π rows(A_j)` rows and `Π cols(A_j)` columns.
+pub fn kron_entry(factors: &[&Tensor], mut i: usize, mut j: usize) -> f32 {
+    // Decompose (i, j) into per-factor (i_k, j_k) digits, most significant
+    // digit first (factor 0 is the most significant block).
+    let mut prod = 1.0f32;
+    // Compute digit weights right-to-left.
+    for f in factors.iter().rev() {
+        let (r, c) = (f.shape()[0], f.shape()[1]);
+        let (di, dj) = (i % r, j % c);
+        i /= r;
+        j /= c;
+        prod *= f.at2(di, dj);
+        if prod == 0.0 {
+            return 0.0;
+        }
+    }
+    prod
+}
+
+/// Lazily reconstruct row `i` of `⊗_j A_j` — touches only one row of each
+/// factor (this is the key word2ketXS serving primitive). Output length is
+/// `Π cols(A_j)`.
+pub fn kron_row(factors: &[&Tensor], i: usize) -> Vec<f32> {
+    let radix = MixedRadix::new(factors.iter().map(|f| f.shape()[0]).collect());
+    let digits = radix.decode(i);
+    let rows: Vec<&[f32]> = factors
+        .iter()
+        .zip(digits.iter())
+        .map(|(f, &d)| f.row(d))
+        .collect();
+    kron_tree(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn kron_vec_known() {
+        let a = [1.0, 2.0];
+        let b = [3.0, 4.0];
+        assert_eq!(kron_vec(&a, &b), vec![3.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn kron_chain_and_tree_agree() {
+        let mut rng = Rng::new(1);
+        for n in 1..=5 {
+            let vs: Vec<Vec<f32>> = (0..n).map(|_| rng.uniform_vec(4, -1.0, 1.0)).collect();
+            let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+            let chain = kron_chain(&refs);
+            let tree = kron_tree(&refs);
+            assert_eq!(chain.len(), tree.len());
+            for (a, b) in chain.iter().zip(tree.iter()) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn kron_bilinearity() {
+        // (u+v) ⊗ w == u⊗w + v⊗w
+        let u = [1.0f32, -2.0];
+        let v = [0.5f32, 3.0];
+        let w = [2.0f32, 0.0, 1.0];
+        let lhs = kron_vec(&[u[0] + v[0], u[1] + v[1]], &w);
+        let uw = kron_vec(&u, &w);
+        let vw = kron_vec(&v, &w);
+        for k in 0..lhs.len() {
+            assert!((lhs[k] - (uw[k] + vw[k])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kron_norm_is_product_of_norms() {
+        // ‖v ⊗ w‖ = ‖v‖·‖w‖ (paper §2.1)
+        let mut rng = Rng::new(2);
+        let v = rng.uniform_vec(8, -1.0, 1.0);
+        let w = rng.uniform_vec(5, -1.0, 1.0);
+        let vw = kron_vec(&v, &w);
+        let nv: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nw: f32 = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nvw: f32 = vw.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((nvw - nv * nw).abs() < 1e-4);
+    }
+
+    #[test]
+    fn kron_mat_known_blocks() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![0., 5., 6., 7.]).unwrap();
+        let k = kron_mat(&a, &b);
+        assert_eq!(k.shape(), &[4, 4]);
+        // top-left block = 1*B
+        assert_eq!(k.at2(0, 1), 5.0);
+        assert_eq!(k.at2(1, 0), 6.0);
+        // top-right block = 2*B
+        assert_eq!(k.at2(0, 3), 10.0);
+        // bottom-right block = 4*B
+        assert_eq!(k.at2(3, 3), 28.0);
+    }
+
+    #[test]
+    fn kron_entry_matches_dense() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::new(vec![2, 3], rng.uniform_vec(6, -1.0, 1.0)).unwrap();
+        let b = Tensor::new(vec![3, 2], rng.uniform_vec(6, -1.0, 1.0)).unwrap();
+        let c = Tensor::new(vec![2, 2], rng.uniform_vec(4, -1.0, 1.0)).unwrap();
+        let dense = kron_mat(&kron_mat(&a, &b), &c);
+        let factors = [&a, &b, &c];
+        for i in 0..dense.shape()[0] {
+            for j in 0..dense.shape()[1] {
+                let lazy = kron_entry(&factors, i, j);
+                assert!(
+                    (lazy - dense.at2(i, j)).abs() < 1e-5,
+                    "entry ({i},{j}): {lazy} vs {}",
+                    dense.at2(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kron_row_matches_dense() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::new(vec![3, 2], rng.uniform_vec(6, -1.0, 1.0)).unwrap();
+        let b = Tensor::new(vec![2, 4], rng.uniform_vec(8, -1.0, 1.0)).unwrap();
+        let dense = kron_mat(&a, &b);
+        for i in 0..6 {
+            let lazy = kron_row(&[&a, &b], i);
+            assert_eq!(lazy.len(), 8);
+            for j in 0..8 {
+                assert!((lazy[j] - dense.at2(i, j)).abs() < 1e-5);
+            }
+        }
+    }
+}

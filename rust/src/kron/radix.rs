@@ -1,0 +1,128 @@
+//! Mixed-radix index codec.
+//!
+//! A row index `i` of `⊗_j A_j` decomposes into per-factor digits
+//! `(i_1, …, i_n)` with radices `rows(A_j)`, most-significant first. This is
+//! the addressing scheme behind the paper's lazy row reconstruction (§3.2)
+//! and is shared by the Rust serving path and the manifest the Pallas kernel
+//! consumes.
+
+/// Positional codec for a fixed sequence of radices (most significant first).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MixedRadix {
+    radices: Vec<usize>,
+    /// weight[j] = product of radices after j.
+    weights: Vec<usize>,
+}
+
+impl MixedRadix {
+    pub fn new(radices: Vec<usize>) -> MixedRadix {
+        assert!(!radices.is_empty(), "need at least one radix");
+        assert!(radices.iter().all(|&r| r > 0), "radices must be positive");
+        let n = radices.len();
+        let mut weights = vec![1usize; n];
+        for j in (0..n - 1).rev() {
+            weights[j] = weights[j + 1] * radices[j + 1];
+        }
+        MixedRadix { radices, weights }
+    }
+
+    /// Uniform radix constructor: n digits of base t (capacity t^n).
+    pub fn uniform(t: usize, n: usize) -> MixedRadix {
+        MixedRadix::new(vec![t; n])
+    }
+
+    /// Total capacity = product of radices.
+    pub fn capacity(&self) -> usize {
+        self.weights[0] * self.radices[0]
+    }
+
+    pub fn num_digits(&self) -> usize {
+        self.radices.len()
+    }
+
+    pub fn radices(&self) -> &[usize] {
+        &self.radices
+    }
+
+    /// Decompose an index into digits (most significant first).
+    pub fn decode(&self, mut i: usize) -> Vec<usize> {
+        debug_assert!(i < self.capacity(), "index {} out of capacity {}", i, self.capacity());
+        let mut digits = Vec::with_capacity(self.radices.len());
+        for &w in &self.weights {
+            digits.push(i / w);
+            i %= w;
+        }
+        digits
+    }
+
+    /// Decode into a caller-provided buffer (allocation-free hot path).
+    #[inline]
+    pub fn decode_into(&self, mut i: usize, out: &mut [usize]) {
+        debug_assert_eq!(out.len(), self.radices.len());
+        for (d, &w) in out.iter_mut().zip(self.weights.iter()) {
+            *d = i / w;
+            i %= w;
+        }
+    }
+
+    /// Recompose digits into an index.
+    pub fn encode(&self, digits: &[usize]) -> usize {
+        debug_assert_eq!(digits.len(), self.radices.len());
+        debug_assert!(digits.iter().zip(self.radices.iter()).all(|(&d, &r)| d < r));
+        digits.iter().zip(self.weights.iter()).map(|(&d, &w)| d * w).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn binary_decode() {
+        let r = MixedRadix::uniform(2, 3);
+        assert_eq!(r.capacity(), 8);
+        assert_eq!(r.decode(0), vec![0, 0, 0]);
+        assert_eq!(r.decode(5), vec![1, 0, 1]);
+        assert_eq!(r.decode(7), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn mixed_radices() {
+        // radices [3, 2, 5]: weights [10, 5, 1], capacity 30
+        let r = MixedRadix::new(vec![3, 2, 5]);
+        assert_eq!(r.capacity(), 30);
+        assert_eq!(r.decode(0), vec![0, 0, 0]);
+        assert_eq!(r.decode(29), vec![2, 1, 4]);
+        assert_eq!(r.decode(17), vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn roundtrip_exhaustive() {
+        let r = MixedRadix::new(vec![4, 3, 2]);
+        for i in 0..r.capacity() {
+            assert_eq!(r.encode(&r.decode(i)), i);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_large() {
+        let mut rng = Rng::new(9);
+        let r = MixedRadix::uniform(19, 4); // SQuAD order-4 vocab codec: 19^4
+        assert_eq!(r.capacity(), 130_321);
+        for _ in 0..1000 {
+            let i = rng.below(r.capacity());
+            assert_eq!(r.encode(&r.decode(i)), i);
+        }
+    }
+
+    #[test]
+    fn decode_into_matches_decode() {
+        let r = MixedRadix::new(vec![5, 7, 3]);
+        let mut buf = [0usize; 3];
+        for i in [0usize, 1, 52, 104] {
+            r.decode_into(i, &mut buf);
+            assert_eq!(buf.to_vec(), r.decode(i));
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! # word2ket — space-efficient word embeddings inspired by quantum entanglement
+//!
+//! Full-system reproduction of *Panahi, Saeedi & Arodz, "word2ket:
+//! Space-efficient Word Embeddings inspired by Quantum Entanglement"*
+//! (ICLR 2020) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — coordinator: configs, CLI, synthetic corpora,
+//!   tokenizer, batching, training/eval loops, metrics (ROUGE/BLEU/F1),
+//!   checkpointing, an embedding server, and a pure-Rust mirror of the
+//!   paper's tensor-product embedding algebra used on the serving path.
+//! * **L2 (python/compile)** — JAX model graphs (GRU seq2seq with attention,
+//!   QA reader) with embeddings represented per the paper; AOT-lowered once
+//!   to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the reconstruction
+//!   hot path, validated against pure-jnp oracles.
+//!
+//! The runtime executes the AOT artifacts through the PJRT C API (`xla`
+//! crate); Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use word2ket::embedding::{EmbeddingStore, Word2KetXS};
+//! use word2ket::util::Rng;
+//!
+//! // The paper's Fig. 3 setting: 118,655-word, 300-dim embedding in 380 params.
+//! let mut rng = Rng::new(0);
+//! let emb = Word2KetXS::random(118_655, 300, /*order=*/4, /*rank=*/1, &mut rng);
+//! assert_eq!(emb.num_params(), 380);
+//! let v = emb.lookup(42); // lazily reconstructs one row
+//! assert_eq!(v.len(), 300);
+//! # let _ = v;
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod data;
+pub mod embedding;
+pub mod error;
+pub mod kron;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod text;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,93 @@
+//! `w2k` — leader entrypoint for the word2ket reproduction.
+//!
+//! Subcommands: `train`, `eval`, `serve`, `params`, `artifacts`.
+//! Run `w2k --help` for details.
+
+use word2ket::cli;
+use word2ket::config;
+use word2ket::coordinator;
+use word2ket::embedding::stats;
+use word2ket::runtime::ArtifactRegistry;
+use word2ket::util::log::{set_level, Level};
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = cli::app();
+    let parsed = match app.parse(&argv) {
+        Ok(p) => p,
+        Err(e) => {
+            // --help lands here with the help text as the message.
+            eprintln!("{e}");
+            return ExitCode::from(2);
+        }
+    };
+    if parsed.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let result = match parsed.command.as_str() {
+        "train" => cmd_train(&parsed),
+        "eval" => cmd_eval(&parsed),
+        "serve" => cmd_serve(&parsed),
+        "params" => cmd_params(),
+        "artifacts" => cmd_artifacts(&parsed),
+        other => Err(word2ket::Error::Cli(format!("unhandled command {other}"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn load_cfg(parsed: &cli::Parsed) -> word2ket::Result<config::ExperimentConfig> {
+    let path = parsed.get("config").map(Path::new);
+    let overrides = parsed.get_all("set");
+    let mut cfg = config::load_with_overrides(path, &overrides)?;
+    if let Some(dir) = parsed.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(parsed: &cli::Parsed) -> word2ket::Result<()> {
+    let cfg = load_cfg(parsed)?;
+    let report = coordinator::experiment::run_experiment(&cfg)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_eval(parsed: &cli::Parsed) -> word2ket::Result<()> {
+    let cfg = load_cfg(parsed)?;
+    let ckpt = parsed
+        .get("checkpoint")
+        .ok_or_else(|| word2ket::Error::Cli("--checkpoint is required for eval".into()))?;
+    let report = coordinator::experiment::eval_checkpoint(&cfg, Path::new(ckpt))?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_serve(parsed: &cli::Parsed) -> word2ket::Result<()> {
+    let mut cfg = load_cfg(parsed)?;
+    if let Some(addr) = parsed.get("addr") {
+        cfg.server.addr = addr.to_string();
+    }
+    coordinator::server::serve_blocking(&cfg)
+}
+
+fn cmd_params() -> word2ket::Result<()> {
+    // Reproduce every #Params / space-saving cell of Tables 1–3.
+    print!("{}", stats::render_paper_tables());
+    Ok(())
+}
+
+fn cmd_artifacts(parsed: &cli::Parsed) -> word2ket::Result<()> {
+    let dir = parsed.get("artifacts").unwrap_or("artifacts");
+    let reg = ArtifactRegistry::open(Path::new(dir))?;
+    println!("{}", reg.describe());
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! BLEU (Papineni et al., 2002): modified n-gram precision up to 4-grams,
+//! geometric mean, brevity penalty. Corpus-level aggregation as used for the
+//! paper's IWSLT2014 DE-EN results (Table 2).
+
+use std::collections::HashMap;
+
+/// Detailed BLEU breakdown.
+#[derive(Debug, Clone)]
+pub struct BleuScore {
+    /// 100-scaled BLEU-4.
+    pub bleu: f64,
+    /// Modified n-gram precisions p_1..p_4.
+    pub precisions: [f64; 4],
+    pub brevity_penalty: f64,
+    pub candidate_len: usize,
+    pub reference_len: usize,
+}
+
+fn ngrams<T: std::hash::Hash + Eq + Clone>(tokens: &[T], n: usize) -> HashMap<Vec<T>, usize> {
+    let mut map = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *map.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    map
+}
+
+/// Corpus BLEU over (candidate, reference) pairs (single reference each).
+pub fn corpus_bleu<T: std::hash::Hash + Eq + Clone>(pairs: &[(Vec<T>, Vec<T>)]) -> BleuScore {
+    let mut match_n = [0usize; 4];
+    let mut total_n = [0usize; 4];
+    let mut cand_len = 0usize;
+    let mut ref_len = 0usize;
+    for (cand, refr) in pairs {
+        cand_len += cand.len();
+        ref_len += refr.len();
+        for n in 1..=4 {
+            let cg = ngrams(cand, n);
+            let rg = ngrams(refr, n);
+            for (g, &c) in &cg {
+                match_n[n - 1] += c.min(rg.get(g).copied().unwrap_or(0));
+            }
+            total_n[n - 1] += cg.values().sum::<usize>();
+        }
+    }
+    // Precisions with smoothing on higher orders only (n ≥ 2): unigram
+    // precision stays exact so fully-disjoint outputs score ~0, while short
+    // synthetic sentences with no 4-gram matches don't zero the geometric
+    // mean (cf. Lin & Och smoothing "method 1").
+    let mut precisions = [0.0f64; 4];
+    let mut log_sum = 0.0f64;
+    let mut orders = 0usize;
+    for n in 0..4 {
+        if total_n[n] == 0 {
+            // Candidates shorter than n tokens: order n is undefined and is
+            // excluded from the geometric mean (effective max order).
+            continue;
+        }
+        let p = if match_n[n] == 0 {
+            if n == 0 {
+                0.0
+            } else {
+                1.0 / (2.0 * total_n[n] as f64)
+            }
+        } else {
+            match_n[n] as f64 / total_n[n] as f64
+        };
+        precisions[n] = p;
+        orders += 1;
+        log_sum += if p > 0.0 { p.ln() } else { f64::NEG_INFINITY };
+    }
+    let geo = if orders > 0 && log_sum.is_finite() {
+        (log_sum / orders as f64).exp()
+    } else {
+        0.0
+    };
+    let bp = if cand_len == 0 {
+        0.0
+    } else if cand_len > ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / cand_len as f64).exp()
+    };
+    BleuScore {
+        bleu: 100.0 * bp * geo,
+        precisions,
+        brevity_penalty: bp,
+        candidate_len: cand_len,
+        reference_len: ref_len,
+    }
+}
+
+/// Single-sentence BLEU convenience wrapper.
+pub fn sentence_bleu<T: std::hash::Hash + Eq + Clone>(cand: &[T], refr: &[T]) -> BleuScore {
+    corpus_bleu(&[(cand.to_vec(), refr.to_vec())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<&str> {
+        s.split_whitespace().collect()
+    }
+
+    #[test]
+    fn perfect_match_is_100() {
+        let c = toks("the cat sat on the mat today");
+        let s = sentence_bleu(&c, &c);
+        assert!((s.bleu - 100.0).abs() < 1e-9, "bleu {}", s.bleu);
+        assert_eq!(s.brevity_penalty, 1.0);
+        for p in s.precisions {
+            assert_eq!(p, 1.0);
+        }
+    }
+
+    #[test]
+    fn disjoint_is_near_zero() {
+        let s = sentence_bleu(&toks("aa bb cc dd"), &toks("ww xx yy zz"));
+        assert_eq!(s.bleu, 0.0, "bleu {}", s.bleu);
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        // Candidate shorter than reference → BP < 1.
+        let c = toks("the cat");
+        let r = toks("the cat sat on the mat");
+        let s = sentence_bleu(&c, &r);
+        assert!(s.brevity_penalty < 1.0);
+        assert!((s.brevity_penalty - (1.0f64 - 6.0 / 2.0).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn longer_candidate_no_penalty() {
+        let c = toks("the cat sat on the mat and then some");
+        let r = toks("the cat sat");
+        let s = sentence_bleu(&c, &r);
+        assert_eq!(s.brevity_penalty, 1.0);
+        assert!(s.bleu < 100.0); // precision drops instead
+    }
+
+    #[test]
+    fn known_precision_values() {
+        // cand: "the the the", ref: "the cat": p1 = clipped 1/3.
+        let s = sentence_bleu(&toks("the the the"), &toks("the cat"));
+        assert!((s.precisions[0] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn corpus_pools_counts() {
+        // Corpus BLEU pools n-gram counts rather than averaging sentence BLEU.
+        let pairs = vec![
+            (toks("a b c d"), toks("a b c d")),
+            (toks("e f g h"), toks("e f x h")),
+        ];
+        let s = corpus_bleu(&pairs);
+        assert!(s.bleu > 30.0 && s.bleu < 100.0);
+        assert_eq!(s.candidate_len, 8);
+        assert_eq!(s.reference_len, 8);
+    }
+
+    #[test]
+    fn order_matters_via_higher_ngrams() {
+        let r = toks("a b c d e f");
+        let inorder = sentence_bleu(&toks("a b c d e f"), &r);
+        let shuffled = sentence_bleu(&toks("f e d c b a"), &r);
+        assert!(inorder.bleu > shuffled.bleu);
+    }
+
+    #[test]
+    fn empty_candidate_is_zero() {
+        let s = sentence_bleu(&Vec::<&str>::new(), &toks("a b"));
+        assert_eq!(s.bleu, 0.0);
+    }
+}

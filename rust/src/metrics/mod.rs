@@ -1,0 +1,25 @@
+//! Evaluation metrics used by the paper's three tasks: ROUGE-1/2/L
+//! (GIGAWORD, Table 1), corpus BLEU (IWSLT, Table 2), and SQuAD-style
+//! EM / token-F1 (Table 3, Fig. 2). Plus perplexity for training logs.
+
+mod bleu;
+mod qa;
+mod rouge;
+
+pub use bleu::{corpus_bleu, sentence_bleu, BleuScore};
+pub use qa::{exact_match, qa_best, qa_corpus, qa_f1, QaScore};
+pub use rouge::{lcs_len, rouge_corpus, rouge_l, rouge_n, RougeScore};
+
+/// Perplexity from mean cross-entropy (nats).
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn perplexity_of_zero_loss_is_one() {
+        assert!((super::perplexity(0.0) - 1.0).abs() < 1e-12);
+        assert!(super::perplexity(2.0) > 7.0);
+    }
+}

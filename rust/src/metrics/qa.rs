@@ -1,0 +1,139 @@
+//! SQuAD-style answer metrics: exact match and token-level F1
+//! (Rajpurkar et al., 2016 evaluation script semantics, over pre-tokenized
+//! answers). Used for Table 3 and the Fig. 2 training-dynamics curves.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QaScore {
+    pub em: f64,
+    pub f1: f64,
+}
+
+/// Exact token-sequence match (1.0/0.0).
+pub fn exact_match<T: PartialEq>(prediction: &[T], gold: &[T]) -> f64 {
+    if prediction == gold {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Token-level F1 with multiset overlap.
+pub fn qa_f1<T: std::hash::Hash + Eq + Clone>(prediction: &[T], gold: &[T]) -> f64 {
+    if prediction.is_empty() || gold.is_empty() {
+        return if prediction.is_empty() && gold.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut gold_counts: HashMap<&T, usize> = HashMap::new();
+    for t in gold {
+        *gold_counts.entry(t).or_insert(0) += 1;
+    }
+    let mut overlap = 0usize;
+    for t in prediction {
+        if let Some(c) = gold_counts.get_mut(t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / prediction.len() as f64;
+    let recall = overlap as f64 / gold.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Against multiple acceptable gold answers, take the best score
+/// (the SQuAD convention; Fig. 3's "True Answers" column lists variants).
+pub fn qa_best<T: std::hash::Hash + Eq + Clone>(prediction: &[T], golds: &[Vec<T>]) -> QaScore {
+    let mut best = QaScore { em: 0.0, f1: 0.0 };
+    for g in golds {
+        best.em = best.em.max(exact_match(prediction, g));
+        best.f1 = best.f1.max(qa_f1(prediction, g));
+    }
+    best
+}
+
+/// Corpus macro-average (×100) over (prediction, acceptable-golds) pairs.
+pub fn qa_corpus<T: std::hash::Hash + Eq + Clone>(
+    items: &[(Vec<T>, Vec<Vec<T>>)],
+) -> QaScore {
+    if items.is_empty() {
+        return QaScore { em: 0.0, f1: 0.0 };
+    }
+    let mut em = 0.0;
+    let mut f1 = 0.0;
+    for (pred, golds) in items {
+        let s = qa_best(pred, golds);
+        em += s.em;
+        f1 += s.f1;
+    }
+    let n = items.len() as f64;
+    QaScore { em: 100.0 * em / n, f1: 100.0 * f1 / n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<&str> {
+        s.split_whitespace().collect()
+    }
+
+    #[test]
+    fn exact_match_binary() {
+        assert_eq!(exact_match(&toks("los angeles times"), &toks("los angeles times")), 1.0);
+        assert_eq!(exact_match(&toks("los angeles"), &toks("los angeles times")), 0.0);
+    }
+
+    #[test]
+    fn f1_partial_overlap() {
+        // pred "southern california megaregion" vs gold "the greater southern
+        // california megaregion": overlap 3, p=1.0, r=3/5 → f1 = 0.75
+        let p = toks("southern california megaregion");
+        let g = toks("the greater southern california megaregion");
+        assert!((qa_f1(&p, &g) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_multiset_clipping() {
+        let p = toks("a a a");
+        let g = toks("a b");
+        // overlap clipped to 1; p=1/3, r=1/2 → f1 = 0.4
+        assert!((qa_f1(&p, &g) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_of_multiple_golds() {
+        // Fig. 3 example: both "Southern California Megaregion" and "the
+        // greater Southern California Megaregion" are acceptable.
+        let pred = toks("greater southern california megaregion");
+        let golds = vec![
+            toks("southern california megaregion"),
+            toks("the greater southern california megaregion"),
+        ];
+        let s = qa_best(&pred, &golds);
+        assert!(s.f1 > 0.85);
+        assert_eq!(s.em, 0.0);
+    }
+
+    #[test]
+    fn empty_edge_cases() {
+        assert_eq!(qa_f1(&Vec::<&str>::new(), &toks("x")), 0.0);
+        assert_eq!(qa_f1(&toks("x"), &Vec::<&str>::new()), 0.0);
+        assert_eq!(qa_f1(&Vec::<&str>::new(), &Vec::<&str>::new()), 1.0);
+    }
+
+    #[test]
+    fn corpus_average_scale() {
+        let items = vec![
+            (toks("11"), vec![toks("11")]),                  // EM 1, F1 1
+            (toks("tijuana"), vec![toks("mexican")]),        // EM 0, F1 0
+        ];
+        let s = qa_corpus(&items);
+        assert!((s.em - 50.0).abs() < 1e-9);
+        assert!((s.f1 - 50.0).abs() < 1e-9);
+    }
+}

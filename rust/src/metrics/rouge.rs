@@ -1,0 +1,201 @@
+//! ROUGE-N and ROUGE-L (Lin, 2004), F-measure variants as reported in the
+//! paper's Table 1 (RG-1, RG-2, RG-L).
+
+use std::collections::HashMap;
+
+/// Precision / recall / F1 triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RougeScore {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+impl RougeScore {
+    fn from_counts(overlap: usize, cand: usize, refr: usize) -> RougeScore {
+        let precision = if cand == 0 { 0.0 } else { overlap as f64 / cand as f64 };
+        let recall = if refr == 0 { 0.0 } else { overlap as f64 / refr as f64 };
+        let f1 = if precision + recall == 0.0 {
+            0.0
+        } else {
+            2.0 * precision * recall / (precision + recall)
+        };
+        RougeScore { precision, recall, f1 }
+    }
+
+    pub fn zero() -> RougeScore {
+        RougeScore { precision: 0.0, recall: 0.0, f1: 0.0 }
+    }
+}
+
+fn ngram_counts<T: std::hash::Hash + Eq + Clone>(
+    tokens: &[T],
+    n: usize,
+) -> HashMap<Vec<T>, usize> {
+    let mut map = HashMap::new();
+    if tokens.len() < n {
+        return map;
+    }
+    for w in tokens.windows(n) {
+        *map.entry(w.to_vec()).or_insert(0) += 1;
+    }
+    map
+}
+
+/// ROUGE-N between one candidate and one reference (clipped n-gram overlap).
+pub fn rouge_n<T: std::hash::Hash + Eq + Clone>(
+    candidate: &[T],
+    reference: &[T],
+    n: usize,
+) -> RougeScore {
+    assert!(n >= 1);
+    let cand = ngram_counts(candidate, n);
+    let refr = ngram_counts(reference, n);
+    let overlap: usize = cand
+        .iter()
+        .map(|(g, &c)| c.min(refr.get(g).copied().unwrap_or(0)))
+        .sum();
+    let cand_total: usize = cand.values().sum();
+    let ref_total: usize = refr.values().sum();
+    RougeScore::from_counts(overlap, cand_total, ref_total)
+}
+
+/// Length of the longest common subsequence (O(|a|·|b|) DP, O(min) space).
+pub fn lcs_len<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    let (short, long) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    let mut prev = vec![0usize; short.len() + 1];
+    let mut cur = vec![0usize; short.len() + 1];
+    for x in long {
+        for (j, y) in short.iter().enumerate() {
+            cur[j + 1] = if x == y {
+                prev[j] + 1
+            } else {
+                prev[j + 1].max(cur[j])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[short.len()]
+}
+
+/// ROUGE-L: LCS-based F-measure (β=1, as in the summary-level formulation
+/// with a single reference).
+pub fn rouge_l<T: PartialEq>(candidate: &[T], reference: &[T]) -> RougeScore {
+    let l = lcs_len(candidate, reference);
+    RougeScore::from_counts(l, candidate.len(), reference.len())
+}
+
+/// Corpus-level macro-average of per-example F1 (Table 1 reports averages
+/// over the test set × 100).
+pub fn rouge_corpus<T: std::hash::Hash + Eq + Clone>(
+    pairs: &[(Vec<T>, Vec<T>)],
+    n: usize,
+    use_lcs: bool,
+) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = pairs
+        .iter()
+        .map(|(c, r)| {
+            if use_lcs {
+                rouge_l(c, r).f1
+            } else {
+                rouge_n(c, r, n).f1
+            }
+        })
+        .sum();
+    100.0 * total / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<&str> {
+        s.split_whitespace().collect()
+    }
+
+    #[test]
+    fn identical_scores_one() {
+        let c = toks("the cat sat on the mat");
+        let r1 = rouge_n(&c, &c, 1);
+        let r2 = rouge_n(&c, &c, 2);
+        let rl = rouge_l(&c, &c);
+        assert_eq!(r1.f1, 1.0);
+        assert_eq!(r2.f1, 1.0);
+        assert_eq!(rl.f1, 1.0);
+    }
+
+    #[test]
+    fn disjoint_scores_zero() {
+        let c = toks("aa bb");
+        let r = toks("cc dd");
+        assert_eq!(rouge_n(&c, &r, 1).f1, 0.0);
+        assert_eq!(rouge_l(&c, &r).f1, 0.0);
+    }
+
+    #[test]
+    fn known_unigram_overlap() {
+        // candidate: "the cat", reference: "the cat sat"
+        let c = toks("the cat");
+        let r = toks("the cat sat");
+        let s = rouge_n(&c, &r, 1);
+        assert!((s.precision - 1.0).abs() < 1e-12);
+        assert!((s.recall - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.f1 - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipping_repeated_ngrams() {
+        // candidate repeats "the" 4×; reference has it twice → clipped to 2.
+        let c = toks("the the the the");
+        let r = toks("the cat the");
+        let s = rouge_n(&c, &r, 1);
+        assert!((s.precision - 0.5).abs() < 1e-12); // 2/4
+    }
+
+    #[test]
+    fn lcs_classic() {
+        assert_eq!(lcs_len(&toks("a b c d e"), &toks("a c e")), 3);
+        assert_eq!(lcs_len(&toks("x"), &toks("y")), 0);
+        assert_eq!(lcs_len::<&str>(&[], &toks("a")), 0);
+    }
+
+    #[test]
+    fn rouge_l_order_sensitive() {
+        let r = toks("the cat sat");
+        let good = toks("the cat sat");
+        let scrambled = toks("sat cat the");
+        assert!(rouge_l(&good, &r).f1 > rouge_l(&scrambled, &r).f1);
+        // unigram ROUGE is order-insensitive: identical there
+        assert_eq!(rouge_n(&good, &r, 1).f1, rouge_n(&scrambled, &r, 1).f1);
+    }
+
+    #[test]
+    fn bigram_stricter_than_unigram() {
+        let c = toks("the cat sat on a mat");
+        let r = toks("a cat sat on the mat");
+        assert!(rouge_n(&c, &r, 2).f1 < rouge_n(&c, &r, 1).f1);
+    }
+
+    #[test]
+    fn corpus_scale_0_100() {
+        let pairs = vec![
+            (toks("a b").iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+             toks("a b").iter().map(|s| s.to_string()).collect::<Vec<_>>()),
+            (toks("x").iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+             toks("y").iter().map(|s| s.to_string()).collect::<Vec<_>>()),
+        ];
+        let score = rouge_corpus(&pairs, 1, false);
+        assert!((score - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_candidate_safe() {
+        let c: Vec<&str> = vec![];
+        let r = toks("a b");
+        assert_eq!(rouge_n(&c, &r, 1).f1, 0.0);
+        assert_eq!(rouge_l(&c, &r).f1, 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! PJRT execution engine: loads HLO-text artifacts, caches compiled
+//! executables, and runs them with Literal I/O.
+//!
+//! Start-from: /opt/xla-example/load_hlo — HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax's 64-bit-id protos).
+
+use super::manifest::{Dtype, TensorSpec};
+use crate::error::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A host-side tensor value crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(vec![x], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(_, s) | Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(d, _) => d.len(),
+            Value::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => Err(Error::Runtime("value is not f32".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(d, _) => Ok(d),
+            _ => Err(Error::Runtime("value is not i32".into())),
+        }
+    }
+
+    pub fn first_f32(&self) -> Result<f32> {
+        Ok(self.as_f32()?[0])
+    }
+
+    /// Validate against a manifest tensor spec.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        let dt_ok = matches!(
+            (self, spec.dtype),
+            (Value::F32(..), Dtype::F32) | (Value::I32(..), Dtype::I32)
+        );
+        if !dt_ok {
+            return Err(Error::Runtime(format!("dtype mismatch for {}", spec.name)));
+        }
+        if self.shape() != spec.shape.as_slice() {
+            return Err(Error::Runtime(format!(
+                "shape mismatch for {}: got {:?}, manifest says {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            )));
+        }
+        Ok(())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32(d, shape) => {
+                let l = xla::Literal::vec1(d);
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                l.reshape(&dims)?
+            }
+            Value::I32(d, shape) => {
+                let l = xla::Literal::vec1(d);
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                l.reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.shape()?;
+        let dims: Vec<usize> = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            _ => return Err(Error::Runtime("nested tuple output".into())),
+        };
+        let ty = lit.element_type()?;
+        match ty {
+            xla::ElementType::F32 => Ok(Value::F32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(Value::I32(lit.to_vec::<i32>()?, dims)),
+            other => Err(Error::Runtime(format!("unsupported output type {other:?}"))),
+        }
+    }
+}
+
+/// Compiled-executable cache over a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        crate::debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile an artifact file (cached by file name).
+    pub fn prepare(&self, file: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(file) {
+            return Ok(());
+        }
+        let path = self.dir.join(file);
+        let t = crate::util::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("bad path {}", path.display())))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        crate::debug!("compiled {} in {:.1}ms", file, t.elapsed_ms());
+        self.cache.borrow_mut().insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host values; returns the untupled outputs.
+    pub fn run(&self, file: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.prepare(file)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(file).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(Value::from_literal).collect()
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_roundtrip_f32() {
+        let v = Value::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn value_roundtrip_i32() {
+        let v = Value::I32(vec![7, -3], vec![2]);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let v = Value::scalar_f32(0.5);
+        assert!(v.shape().is_empty());
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(back.first_f32().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 2], dtype: Dtype::F32 };
+        assert!(Value::F32(vec![0.0; 4], vec![2, 2]).check(&spec).is_ok());
+        assert!(Value::F32(vec![0.0; 4], vec![4]).check(&spec).is_err());
+        assert!(Value::I32(vec![0; 4], vec![2, 2]).check(&spec).is_err());
+    }
+}

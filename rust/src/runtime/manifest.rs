@@ -1,0 +1,355 @@
+//! Parser for `artifacts/manifest.json` written by `python/compile/aot.py`.
+//!
+//! The manifest is the contract between the build path (L1/L2) and the
+//! request path (L3): artifact file names, input ordering, shapes, dtypes,
+//! parameter initialization specs, and model dimensions.
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Tensor dtype in the artifact interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(Error::Artifact(format!("unsupported dtype {other}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one non-parameter input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: req_str(j, "name")?,
+            shape: req_shape(j, "shape")?,
+            dtype: Dtype::parse(&req_str(j, "dtype")?)?,
+        })
+    }
+}
+
+/// Initialization spec for one parameter tensor (mirrored from python).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    /// U(-a, a)
+    Uniform { a: f64 },
+    Zeros,
+    Ones,
+}
+
+/// One trainable parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered function of a variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FunctionInfo {
+    pub file: String,
+    /// How many copies of the parameter list lead the input tuple
+    /// (3 for train_step: params, m, v; 1 for inference functions).
+    pub param_copies: usize,
+    pub extra_inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Embedding description (for reports; authoritative accounting in stats.rs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmbeddingInfo {
+    pub kind: String,
+    pub order: usize,
+    pub rank: usize,
+    pub q: usize,
+    pub t: usize,
+    pub num_params: usize,
+}
+
+/// One (task × embedding) model variant.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub task: String,
+    pub dims: BTreeMap<String, usize>,
+    pub embedding: EmbeddingInfo,
+    pub params: Vec<ParamSpec>,
+    pub functions: BTreeMap<String, FunctionInfo>,
+}
+
+impl VariantInfo {
+    pub fn dim(&self, key: &str) -> Result<usize> {
+        self.dims
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Artifact(format!("variant {} missing dim {key}", self.name)))
+    }
+
+    pub fn function(&self, name: &str) -> Result<&FunctionInfo> {
+        self.functions
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("variant {} has no function {name}", self.name)))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.num_elements()).sum()
+    }
+}
+
+/// Standalone kernel artifact (integration tests, microbenches).
+#[derive(Debug, Clone)]
+pub struct KernelInfo {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub source_hash: String,
+    pub variants: BTreeMap<String, VariantInfo>,
+    pub kernels: BTreeMap<String, KernelInfo>,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| Error::Artifact(format!("manifest missing key '{key}'")))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    req(j, key)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::Artifact(format!("'{key}' is not a string")))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?
+        .as_usize()
+        .ok_or_else(|| Error::Artifact(format!("'{key}' is not a non-negative integer")))
+}
+
+fn req_shape(j: &Json, key: &str) -> Result<Vec<usize>> {
+    req(j, key)?
+        .as_arr()
+        .ok_or_else(|| Error::Artifact(format!("'{key}' is not an array")))?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| Error::Artifact(format!("bad dim in '{key}'")))
+        })
+        .collect()
+}
+
+fn parse_init(j: &Json) -> Result<Init> {
+    let dist = req_str(j, "dist")?;
+    match dist.as_str() {
+        "uniform" => Ok(Init::Uniform {
+            a: req(j, "a")?
+                .as_f64()
+                .ok_or_else(|| Error::Artifact("'a' is not a number".into()))?,
+        }),
+        "zeros" => Ok(Init::Zeros),
+        "ones" => Ok(Init::Ones),
+        other => Err(Error::Artifact(format!("unknown init dist '{other}'"))),
+    }
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src)?;
+        let mut variants = BTreeMap::new();
+        if let Some(vars) = j.get("variants").and_then(|v| v.as_obj()) {
+            for (name, vj) in vars {
+                variants.insert(name.clone(), Self::parse_variant(name, vj)?);
+            }
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = j.get("kernels").and_then(|v| v.as_obj()) {
+            for (name, kj) in ks {
+                kernels.insert(
+                    name.clone(),
+                    KernelInfo {
+                        file: req_str(kj, "file")?,
+                        inputs: parse_tensor_list(kj, "inputs")?,
+                        outputs: parse_tensor_list(kj, "outputs")?,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            source_hash: j
+                .get("source_hash")
+                .and_then(|s| s.as_str())
+                .unwrap_or("")
+                .to_string(),
+            variants,
+            kernels,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Self::parse(&src)
+    }
+
+    fn parse_variant(name: &str, j: &Json) -> Result<VariantInfo> {
+        let dims_j = req(j, "dims")?;
+        let mut dims = BTreeMap::new();
+        let mut task = String::new();
+        if let Some(obj) = dims_j.as_obj() {
+            for (k, v) in obj {
+                if k == "task" {
+                    task = v.as_str().unwrap_or("").to_string();
+                } else if let Some(u) = v.as_usize() {
+                    dims.insert(k.clone(), u);
+                }
+            }
+        }
+        let emb = req(j, "embedding")?;
+        let embedding = EmbeddingInfo {
+            kind: req_str(emb, "kind")?,
+            order: req_usize(emb, "order")?,
+            rank: req_usize(emb, "rank")?,
+            q: req_usize(emb, "q")?,
+            t: req_usize(emb, "t")?,
+            num_params: req_usize(emb, "num_params")?,
+        };
+        let params = req(j, "params")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("'params' not an array".into()))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: req_str(p, "name")?,
+                    shape: req_shape(p, "shape")?,
+                    init: parse_init(req(p, "init")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut functions = BTreeMap::new();
+        if let Some(fs) = j.get("functions").and_then(|f| f.as_obj()) {
+            for (fname, fj) in fs {
+                functions.insert(
+                    fname.clone(),
+                    FunctionInfo {
+                        file: req_str(fj, "file")?,
+                        param_copies: req_usize(fj, "param_copies")?,
+                        extra_inputs: parse_tensor_list(fj, "extra_inputs")?,
+                        outputs: parse_tensor_list(fj, "outputs")?,
+                    },
+                );
+            }
+        }
+        Ok(VariantInfo { name: name.to_string(), task, dims, embedding, params, functions })
+    }
+}
+
+fn parse_tensor_list(j: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    req(j, key)?
+        .as_arr()
+        .ok_or_else(|| Error::Artifact(format!("'{key}' not an array")))?
+        .iter()
+        .map(TensorSpec::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "source_hash": "abc",
+      "variants": {
+        "sum_regular": {
+          "dims": {"task": "sum", "batch": 16, "vocab": 1024, "hidden": 64,
+                   "src_len": 24, "tgt_len": 8, "emb_dim": 64},
+          "embedding": {"kind": "regular", "order": 1, "rank": 1, "q": 64,
+                        "t": 1024, "num_params": 65536},
+          "params": [
+            {"name": "emb/table", "shape": [1024, 64],
+             "init": {"dist": "uniform", "a": 0.2165}},
+            {"name": "out/b", "shape": [1024], "init": {"dist": "zeros"}}
+          ],
+          "functions": {
+            "train_step": {
+              "file": "sum_regular.train_step.hlo.txt",
+              "param_copies": 3,
+              "extra_inputs": [
+                {"name": "src", "shape": [16, 24], "dtype": "i32"},
+                {"name": "lr", "shape": [], "dtype": "f32"}
+              ],
+              "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+            }
+          }
+        }
+      },
+      "kernels": {
+        "kernel_kron_pair": {
+          "file": "kernel_kron_pair.hlo.txt",
+          "inputs": [{"name": "a", "shape": [16, 8], "dtype": "f32"}],
+          "outputs": [{"name": "out", "shape": [16, 64], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.source_hash, "abc");
+        let v = &m.variants["sum_regular"];
+        assert_eq!(v.task, "sum");
+        assert_eq!(v.dim("batch").unwrap(), 16);
+        assert_eq!(v.embedding.kind, "regular");
+        assert_eq!(v.params.len(), 2);
+        assert_eq!(v.params[0].num_elements(), 65536);
+        assert!(matches!(v.params[0].init, Init::Uniform { .. }));
+        assert!(matches!(v.params[1].init, Init::Zeros));
+        let f = v.function("train_step").unwrap();
+        assert_eq!(f.param_copies, 3);
+        assert_eq!(f.extra_inputs[0].dtype, Dtype::I32);
+        assert_eq!(f.extra_inputs[1].shape.len(), 0);
+        assert!(v.function("bogus").is_err());
+        assert_eq!(m.kernels["kernel_kron_pair"].inputs.len(), 1);
+    }
+
+    #[test]
+    fn missing_keys_error() {
+        assert!(Manifest::parse("{}").is_ok()); // empty manifest is valid
+        assert!(Manifest::parse(r#"{"variants": {"x": {}}}"#).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Runtime: PJRT execution of AOT artifacts (the xla crate), manifest
+//! contract, parameter store, and the artifact registry used by the CLI.
+
+mod engine;
+pub mod manifest;
+mod params;
+
+pub use engine::{Engine, Value};
+pub use manifest::{
+    Dtype, FunctionInfo, Init, KernelInfo, Manifest, ParamSpec, TensorSpec, VariantInfo,
+};
+pub use params::ParamStore;
+
+use crate::error::Result;
+use crate::util::{fmt_count, Table};
+use std::path::Path;
+
+/// Artifact registry: manifest + existence/staleness checks (the
+/// `w2k artifacts` subcommand).
+pub struct ArtifactRegistry {
+    pub manifest: Manifest,
+    dir: std::path::PathBuf,
+}
+
+impl ArtifactRegistry {
+    pub fn open(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest = Manifest::load(dir)?;
+        Ok(ArtifactRegistry { manifest, dir: dir.to_path_buf() })
+    }
+
+    /// Validate that every file referenced by the manifest exists.
+    pub fn missing_files(&self) -> Vec<String> {
+        let mut missing = Vec::new();
+        for v in self.manifest.variants.values() {
+            for f in v.functions.values() {
+                if !self.dir.join(&f.file).exists() {
+                    missing.push(f.file.clone());
+                }
+            }
+        }
+        for k in self.manifest.kernels.values() {
+            if !self.dir.join(&k.file).exists() {
+                missing.push(k.file.clone());
+            }
+        }
+        missing
+    }
+
+    /// Human-readable inventory.
+    pub fn describe(&self) -> String {
+        let mut t = Table::new(vec![
+            "Variant", "Task", "Embedding", "Order/Rank", "Emb #Params", "Total #Params",
+            "Functions",
+        ])
+        .with_title(format!(
+            "artifacts at {} (source hash {})",
+            self.dir.display(),
+            self.manifest.source_hash.get(..12).unwrap_or("?")
+        ));
+        for (name, v) in &self.manifest.variants {
+            t.add_row(vec![
+                name.clone(),
+                v.task.clone(),
+                v.embedding.kind.clone(),
+                format!("{}/{}", v.embedding.order, v.embedding.rank),
+                fmt_count(v.embedding.num_params as u64),
+                fmt_count(v.total_params() as u64),
+                v.functions.keys().cloned().collect::<Vec<_>>().join(","),
+            ]);
+        }
+        let mut s = t.render();
+        let missing = self.missing_files();
+        if missing.is_empty() {
+            s.push_str(&format!(
+                "\n{} kernel artifacts; all files present.\n",
+                self.manifest.kernels.len()
+            ));
+        } else {
+            s.push_str(&format!("\nMISSING files: {missing:?}\n"));
+        }
+        s
+    }
+}

@@ -1,0 +1,312 @@
+//! Host-side parameter + optimizer state store.
+//!
+//! The Rust coordinator owns all training state; executables are pure
+//! functions (params, m, v, batch…) → (params', m', v', loss). Initialization
+//! follows the manifest init specs so Python never has to run at train time.
+
+use super::engine::Value;
+use super::manifest::{Init, ParamSpec};
+use crate::error::{Error, Result};
+use crate::util::Rng;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Parameters plus Adam moments, in manifest order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    specs: Vec<ParamSpec>,
+    params: Vec<Vec<f32>>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// 1-based Adam step count.
+    pub step: u64,
+}
+
+impl ParamStore {
+    /// Initialize from manifest specs with a seeded RNG (one child stream per
+    /// tensor, so adding tensors never perturbs earlier ones).
+    pub fn init(specs: &[ParamSpec], seed: u64) -> ParamStore {
+        let mut root = Rng::new(seed);
+        let mut params = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let n = spec.num_elements();
+            let data = match spec.init {
+                Init::Uniform { a } => {
+                    let mut rng = root.fork(i as u64);
+                    rng.uniform_vec(n, -(a as f32), a as f32)
+                }
+                Init::Zeros => vec![0.0; n],
+                Init::Ones => vec![1.0; n],
+            };
+            params.push(data);
+        }
+        let zeros: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0; s.num_elements()]).collect();
+        ParamStore { specs: specs.to_vec(), params, m: zeros.clone(), v: zeros, step: 0 }
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.specs.iter().map(|s| s.num_elements()).sum()
+    }
+
+    pub fn specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    /// Borrow one parameter tensor by name.
+    pub fn get(&self, name: &str) -> Option<(&ParamSpec, &[f32])> {
+        self.specs
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| (&self.specs[i], self.params[i].as_slice()))
+    }
+
+    pub fn set(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
+        let i = self
+            .specs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| Error::Runtime(format!("no parameter named {name}")))?;
+        if data.len() != self.specs[i].num_elements() {
+            return Err(Error::Shape(format!("size mismatch for {name}")));
+        }
+        self.params[i] = data;
+        Ok(())
+    }
+
+    /// Values for an inference call: params only, manifest order.
+    pub fn param_values(&self) -> Vec<Value> {
+        self.specs
+            .iter()
+            .zip(&self.params)
+            .map(|(s, d)| Value::F32(d.clone(), s.shape.clone()))
+            .collect()
+    }
+
+    /// Values for a train call: params, then m, then v.
+    pub fn train_values(&self) -> Vec<Value> {
+        let mut out = self.param_values();
+        for (s, d) in self.specs.iter().zip(&self.m) {
+            out.push(Value::F32(d.clone(), s.shape.clone()));
+        }
+        for (s, d) in self.specs.iter().zip(&self.v) {
+            out.push(Value::F32(d.clone(), s.shape.clone()));
+        }
+        out
+    }
+
+    /// Absorb train-step outputs (params', m', v' prefix of the output list)
+    /// and bump the step counter.
+    pub fn absorb(&mut self, outputs: &[Value]) -> Result<()> {
+        let p = self.specs.len();
+        if outputs.len() < 3 * p {
+            return Err(Error::Runtime(format!(
+                "expected >= {} outputs, got {}",
+                3 * p,
+                outputs.len()
+            )));
+        }
+        for i in 0..p {
+            self.params[i] = outputs[i].as_f32()?.to_vec();
+            self.m[i] = outputs[p + i].as_f32()?.to_vec();
+            self.v[i] = outputs[2 * p + i].as_f32()?.to_vec();
+        }
+        self.step += 1;
+        Ok(())
+    }
+
+    // ---- checkpointing ------------------------------------------------------
+    //
+    // Binary format: magic "W2KC", u32 version, u64 step, u32 tensor count,
+    // then per tensor: u32 name len, name bytes, u32 ndim, u64 dims…,
+    // f32 data (params, m, v consecutively).
+
+    const MAGIC: &'static [u8; 4] = b"W2KC";
+    const VERSION: u32 = 1;
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&Self::VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.specs.len() as u32).to_le_bytes())?;
+        for (i, spec) in self.specs.iter().enumerate() {
+            let name = spec.name.as_bytes();
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name)?;
+            w.write_all(&(spec.shape.len() as u32).to_le_bytes())?;
+            for &d in &spec.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for part in [&self.params[i], &self.m[i], &self.v[i]] {
+                for &x in part.iter() {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint; tensor names/shapes must match `specs`.
+    pub fn load(specs: &[ParamSpec], path: &Path) -> Result<ParamStore> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            return Err(Error::Checkpoint("bad magic".into()));
+        }
+        let version = read_u32(&mut r)?;
+        if version != Self::VERSION {
+            return Err(Error::Checkpoint(format!("unsupported version {version}")));
+        }
+        let step = read_u64(&mut r)?;
+        let count = read_u32(&mut r)? as usize;
+        if count != specs.len() {
+            return Err(Error::Checkpoint(format!(
+                "tensor count mismatch: checkpoint {count}, manifest {}",
+                specs.len()
+            )));
+        }
+        let mut store = ParamStore::init(specs, 0);
+        store.step = step;
+        for i in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|_| Error::Checkpoint("bad tensor name".into()))?;
+            if name != specs[i].name {
+                return Err(Error::Checkpoint(format!(
+                    "tensor {i} name mismatch: {} vs {}",
+                    name, specs[i].name
+                )));
+            }
+            let ndim = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            if shape != specs[i].shape {
+                return Err(Error::Checkpoint(format!("tensor {name} shape mismatch")));
+            }
+            let n = specs[i].num_elements();
+            store.params[i] = read_f32s(&mut r, n)?;
+            store.m[i] = read_f32s(&mut r, n)?;
+            store.v[i] = read_f32s(&mut r, n)?;
+        }
+        Ok(store)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 3], init: Init::Uniform { a: 0.5 } },
+            ParamSpec { name: "b".into(), shape: vec![4], init: Init::Zeros },
+        ]
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let s = ParamStore::init(&specs(), 42);
+        assert_eq!(s.num_tensors(), 2);
+        assert_eq!(s.total_params(), 10);
+        let (_, a) = s.get("a").unwrap();
+        assert!(a.iter().all(|x| x.abs() <= 0.5));
+        assert!(a.iter().any(|&x| x != 0.0));
+        let (_, b) = s.get("b").unwrap();
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = ParamStore::init(&specs(), 7);
+        let b = ParamStore::init(&specs(), 7);
+        assert_eq!(a.get("a").unwrap().1, b.get("a").unwrap().1);
+        let c = ParamStore::init(&specs(), 8);
+        assert_ne!(a.get("a").unwrap().1, c.get("a").unwrap().1);
+    }
+
+    #[test]
+    fn train_values_layout() {
+        let s = ParamStore::init(&specs(), 1);
+        let vals = s.train_values();
+        assert_eq!(vals.len(), 6); // 2 params + 2 m + 2 v
+        assert_eq!(vals[0].shape(), &[2, 3]);
+        assert_eq!(vals[2].as_f32().unwrap(), &[0.0; 6]); // m zeros
+    }
+
+    #[test]
+    fn absorb_updates_state() {
+        let mut s = ParamStore::init(&specs(), 1);
+        let outs = vec![
+            Value::F32(vec![9.0; 6], vec![2, 3]),
+            Value::F32(vec![8.0; 4], vec![4]),
+            Value::F32(vec![1.0; 6], vec![2, 3]),
+            Value::F32(vec![2.0; 4], vec![4]),
+            Value::F32(vec![3.0; 6], vec![2, 3]),
+            Value::F32(vec![4.0; 4], vec![4]),
+            Value::scalar_f32(0.1),
+        ];
+        s.absorb(&outs).unwrap();
+        assert_eq!(s.get("a").unwrap().1, &[9.0; 6]);
+        assert_eq!(s.step, 1);
+        assert!(s.absorb(&outs[..2]).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("w2k_test_ckpt");
+        let path = dir.join("s.ckpt");
+        let mut s = ParamStore::init(&specs(), 3);
+        s.step = 17;
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&specs(), &path).unwrap();
+        assert_eq!(loaded.step, 17);
+        assert_eq!(loaded.get("a").unwrap().1, s.get("a").unwrap().1);
+        assert_eq!(loaded.get("b").unwrap().1, s.get("b").unwrap().1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_mismatch() {
+        let dir = std::env::temp_dir().join("w2k_test_ckpt2");
+        let path = dir.join("s.ckpt");
+        let s = ParamStore::init(&specs(), 3);
+        s.save(&path).unwrap();
+        let mut other = specs();
+        other[0].shape = vec![3, 2];
+        assert!(ParamStore::load(&other, &path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,109 @@
+//! Cache-blocked matrix multiplication.
+//!
+//! Used by the pure-Rust serving path (embedding × projection) and test
+//! oracles. Not intended to compete with XLA's CPU backend — training matmuls
+//! run inside AOT executables — but the blocking keeps the serving benches
+//! honest.
+
+use super::Tensor;
+use crate::error::{Error, Result};
+
+const BLOCK: usize = 64;
+
+/// C = A(m×k) · B(k×n), row-major, i-k-j loop order with k-blocking.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.ndim() != 2 || b.ndim() != 2 {
+        return Err(Error::Shape("matmul expects 2-D operands".into()));
+    }
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!(
+            "matmul inner-dim mismatch: {:?} × {:?}",
+            a.shape(),
+            b.shape()
+        )));
+    }
+    let mut c = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for kb in (0..k).step_by(BLOCK) {
+        let kend = (kb + BLOCK).min(k);
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut c = Tensor::zeros(vec![m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at2(i, kk) * b.at2(kk, j);
+                }
+                c.set2(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn small_known_product() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut eye = Tensor::zeros(vec![3, 3]);
+        for i in 0..3 {
+            eye.set2(i, i, 1.0);
+        }
+        let a = Tensor::new(vec![3, 3], (0..9).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(matmul(&a, &eye).unwrap(), a);
+        assert_eq!(matmul(&eye, &a).unwrap(), a);
+    }
+
+    #[test]
+    fn blocked_matches_naive_nonsquare() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(123);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 70, 5), (65, 130, 17), (8, 8, 8)] {
+            let a = Tensor::new(vec![m, k], rng.uniform_vec(m * k, -1.0, 1.0)).unwrap();
+            let b = Tensor::new(vec![k, n], rng.uniform_vec(k * n, -1.0, 1.0)).unwrap();
+            let fast = matmul(&a, &b).unwrap();
+            let slow = naive(&a, &b);
+            assert!(fast.allclose(&slow, 1e-4, 1e-5), "mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(vec![2, 3]);
+        let b = Tensor::zeros(vec![4, 2]);
+        assert!(matmul(&a, &b).is_err());
+        assert!(matmul(&a, &Tensor::zeros(vec![6])).is_err());
+    }
+}

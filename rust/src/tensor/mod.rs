@@ -1,0 +1,384 @@
+//! Dense f32 tensors with a small set of NumPy-style operations.
+//!
+//! This is the host-side math substrate used by the pure-Rust mirror of the
+//! paper's embedding algebra (serving path, baselines, property tests). The
+//! heavy training math runs inside AOT-compiled XLA executables — this module
+//! only needs to be correct and reasonably fast for embedding reconstruction,
+//! metric computation and test oracles.
+
+mod matmul;
+
+pub use matmul::matmul;
+
+use crate::error::{Error, Result};
+
+/// A dense, row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![1.0; n] }
+    }
+
+    pub fn filled(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element access for 2-D tensors.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        &mut self.data[i * cols..(i + 1) * cols]
+    }
+
+    // ---- shape ops ---------------------------------------------------------
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} ({} elems) to {:?}",
+                self.shape,
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// 2-D transpose.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2, "transpose needs a matrix");
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor { shape: vec![c, r], data: out }
+    }
+
+    // ---- elementwise -------------------------------------------------------
+
+    fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "elementwise shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, c: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| x * c).collect(),
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    // ---- reductions / norms -------------------------------------------------
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn dot(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return Err(Error::Shape("dot shape mismatch".into()));
+        }
+        Ok(dot(&self.data, &other.data))
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |a - b| across all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// allclose with both tolerances, NumPy-style.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    // ---- NN primitives (used for serving-side math and test oracles) -------
+
+    /// Softmax over the last axis.
+    pub fn softmax(&self) -> Tensor {
+        let cols = *self.shape.last().expect("softmax needs >=1 dim");
+        let mut out = self.data.clone();
+        for chunk in out.chunks_mut(cols) {
+            let max = chunk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for x in chunk.iter_mut() {
+                *x = (*x - max).exp();
+                sum += *x;
+            }
+            for x in chunk.iter_mut() {
+                *x /= sum;
+            }
+        }
+        Tensor { shape: self.shape.clone(), data: out }
+    }
+
+    /// LayerNorm over the last axis (no learned affine), eps = 1e-5.
+    pub fn layernorm(&self) -> Tensor {
+        layernorm_slices(&self.data, *self.shape.last().expect("layernorm needs >=1 dim"))
+            .map(|data| Tensor { shape: self.shape.clone(), data })
+            .expect("layernorm")
+    }
+}
+
+/// Plain dot product over slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than naive fold and
+    // keeps results deterministic.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        acc[0] += a[k] * b[k];
+        acc[1] += a[k + 1] * b[k + 1];
+        acc[2] += a[k + 2] * b[k + 2];
+        acc[3] += a[k + 3] * b[k + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for k in chunks * 4..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// LayerNorm each contiguous `width`-sized slice of `data` (eps=1e-5).
+pub fn layernorm_slices(data: &[f32], width: usize) -> Result<Vec<f32>> {
+    if width == 0 || data.len() % width != 0 {
+        return Err(Error::Shape(format!(
+            "layernorm width {} does not divide len {}",
+            width,
+            data.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(data.len());
+    for chunk in data.chunks(width) {
+        let mean = chunk.iter().sum::<f32>() / width as f32;
+        let var = chunk.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / width as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        out.extend(chunk.iter().map(|x| (x - mean) * inv));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape_check() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let t = Tensor::zeros(vec![4, 5]);
+        assert_eq!(t.len(), 20);
+        assert_eq!(t.shape(), &[4, 5]);
+    }
+
+    #[test]
+    fn elementwise_and_scale() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(vec![10.0, 20.0, 30.0]);
+        assert_eq!(a.add(&b).unwrap().data(), &[11.0, 22.0, 33.0]);
+        assert_eq!(b.sub(&a).unwrap().data(), &[9.0, 18.0, 27.0]);
+        assert_eq!(a.mul(&b).unwrap().data(), &[10.0, 40.0, 90.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0]);
+        assert!(a.add(&Tensor::zeros(vec![2])).is_err());
+    }
+
+    #[test]
+    fn transpose_matrix() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.data(), &[1., 4., 2., 5., 3., 6.]);
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = Tensor::from_vec(vec![3.0, 4.0]);
+        assert_eq!(a.norm(), 5.0);
+        let b = Tensor::from_vec(vec![1.0, 2.0]);
+        assert_eq!(a.dot(&b).unwrap(), 11.0);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.37 - 7.0).collect();
+        let b: Vec<f32> = (0..103).map(|i| (i as f32) * -0.11 + 3.0).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 0., 0., 0.]).unwrap();
+        let s = t.softmax();
+        let r0: f32 = s.row(0).iter().sum();
+        let r1: f32 = s.row(1).iter().sum();
+        assert!((r0 - 1.0).abs() < 1e-6);
+        assert!((r1 - 1.0).abs() < 1e-6);
+        assert!((s.row(1)[0] - 1.0 / 3.0).abs() < 1e-6);
+        // monotone: bigger logit → bigger prob
+        assert!(s.row(0)[2] > s.row(0)[1]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let t = Tensor::new(vec![2, 4], vec![1., 2., 3., 4., -5., 0., 5., 10.]).unwrap();
+        let n = t.layernorm();
+        for i in 0..2 {
+            let row = n.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rows_and_at2() {
+        let mut t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(t.row(1), &[3., 4.]);
+        assert_eq!(t.at2(0, 1), 2.0);
+        t.set2(0, 1, 9.0);
+        assert_eq!(t.at2(0, 1), 9.0);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::from_vec(vec![1.1, 2.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+}

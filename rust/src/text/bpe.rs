@@ -1,0 +1,195 @@
+//! Byte-pair encoding: learned subword merges over a word-frequency table.
+//!
+//! Used to keep synthetic-task vocabularies closed (no UNK explosion) when a
+//! corpus generator emits inflected forms; also exercises the `t^n ≥ d`
+//! vocabulary-padding path of word2ketXS with realistic subword vocabularies.
+
+use std::collections::HashMap;
+
+/// A trained BPE model: an ordered list of merges.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// Merge rules in priority order: (left, right) → merged.
+    merges: Vec<(String, String)>,
+    rank: HashMap<(String, String), usize>,
+    /// End-of-word marker appended to the final symbol of each word.
+    eow: &'static str,
+}
+
+impl Bpe {
+    pub const EOW: &'static str = "</w>";
+
+    /// Learn `num_merges` merges from (word, frequency) pairs.
+    pub fn train(word_freq: &HashMap<String, usize>, num_merges: usize) -> Bpe {
+        // Represent each word as a symbol sequence.
+        let mut words: Vec<(Vec<String>, usize)> = word_freq
+            .iter()
+            .map(|(w, &f)| {
+                let mut syms: Vec<String> = w.chars().map(|c| c.to_string()).collect();
+                if let Some(last) = syms.last_mut() {
+                    last.push_str(Self::EOW);
+                }
+                (syms, f)
+            })
+            .collect();
+        // Deterministic processing order.
+        words.sort_by(|a, b| a.0.cmp(&b.0));
+
+        let mut merges = Vec::with_capacity(num_merges);
+        for _ in 0..num_merges {
+            // Count adjacent pairs.
+            let mut pair_count: HashMap<(String, String), usize> = HashMap::new();
+            for (syms, f) in &words {
+                for w in syms.windows(2) {
+                    *pair_count
+                        .entry((w[0].clone(), w[1].clone()))
+                        .or_insert(0) += *f;
+                }
+            }
+            // Best pair (ties alphabetical for determinism).
+            let best = pair_count
+                .into_iter()
+                .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)));
+            let Some(((l, r), count)) = best else { break };
+            if count < 2 {
+                break; // nothing worth merging
+            }
+            // Apply merge.
+            let merged = format!("{l}{r}");
+            for (syms, _) in &mut words {
+                let mut i = 0;
+                while i + 1 < syms.len() {
+                    if syms[i] == l && syms[i + 1] == r {
+                        syms[i] = merged.clone();
+                        syms.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            merges.push((l, r));
+        }
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.clone(), i))
+            .collect();
+        Bpe { merges, rank, eow: Self::EOW }
+    }
+
+    pub fn num_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Segment one word into subword symbols by greedily applying the
+    /// lowest-rank applicable merge (standard BPE inference).
+    pub fn segment(&self, word: &str) -> Vec<String> {
+        let mut syms: Vec<String> = word.chars().map(|c| c.to_string()).collect();
+        if syms.is_empty() {
+            return syms;
+        }
+        if let Some(last) = syms.last_mut() {
+            last.push_str(self.eow);
+        }
+        loop {
+            // Find the best-ranked adjacent pair.
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for i in 0..syms.len().saturating_sub(1) {
+                if let Some(&rk) = self.rank.get(&(syms[i].clone(), syms[i + 1].clone())) {
+                    if best.map_or(true, |(brk, _)| rk < brk) {
+                        best = Some((rk, i));
+                    }
+                }
+            }
+            match best {
+                Some((_, i)) => {
+                    let merged = format!("{}{}", syms[i], syms[i + 1]);
+                    syms[i] = merged;
+                    syms.remove(i + 1);
+                }
+                None => break,
+            }
+        }
+        syms
+    }
+
+    /// Segment a token stream, flattening subwords.
+    pub fn segment_all(&self, tokens: &[String]) -> Vec<String> {
+        tokens.iter().flat_map(|t| self.segment(t)).collect()
+    }
+
+    /// Undo segmentation: join symbols, splitting words at EOW markers.
+    pub fn join(&self, symbols: &[String]) -> Vec<String> {
+        let mut words = Vec::new();
+        let mut cur = String::new();
+        for s in symbols {
+            if let Some(stripped) = s.strip_suffix(self.eow) {
+                cur.push_str(stripped);
+                words.push(std::mem::take(&mut cur));
+            } else {
+                cur.push_str(s);
+            }
+        }
+        if !cur.is_empty() {
+            words.push(cur);
+        }
+        words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn freq(pairs: &[(&str, usize)]) -> HashMap<String, usize> {
+        pairs.iter().map(|(w, f)| (w.to_string(), *f)).collect()
+    }
+
+    #[test]
+    fn learns_frequent_pairs() {
+        let wf = freq(&[("lower", 10), ("low", 10), ("lowest", 5), ("newer", 8)]);
+        let bpe = Bpe::train(&wf, 10);
+        assert!(bpe.num_merges() > 0);
+        // "low" should segment into few symbols after training.
+        let segs = bpe.segment("low");
+        assert!(segs.len() <= 2, "{segs:?}");
+    }
+
+    #[test]
+    fn roundtrip_join() {
+        let wf = freq(&[("abab", 5), ("ab", 9)]);
+        let bpe = Bpe::train(&wf, 5);
+        for w in ["abab", "ab", "ba", "xyz"] {
+            let segs = bpe.segment(w);
+            let joined = bpe.join(&segs);
+            assert_eq!(joined, vec![w.to_string()], "word {w}: {segs:?}");
+        }
+    }
+
+    #[test]
+    fn segment_all_flattens() {
+        let wf = freq(&[("aa", 5)]);
+        let bpe = Bpe::train(&wf, 2);
+        let toks: Vec<String> = vec!["aa".into(), "b".into()];
+        let segs = bpe.segment_all(&toks);
+        let joined = bpe.join(&segs);
+        assert_eq!(joined, toks);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let wf = freq(&[("hello", 3), ("help", 3), ("held", 2)]);
+        let a = Bpe::train(&wf, 8);
+        let b = Bpe::train(&wf, 8);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn empty_and_single_char() {
+        let wf = freq(&[("ab", 2)]);
+        let bpe = Bpe::train(&wf, 2);
+        assert!(bpe.segment("").is_empty());
+        let one = bpe.segment("x");
+        assert_eq!(bpe.join(&one), vec!["x".to_string()]);
+    }
+}

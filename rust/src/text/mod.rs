@@ -1,0 +1,9 @@
+//! Text processing substrate: tokenization, vocabulary, byte-pair encoding.
+
+mod bpe;
+mod tokenizer;
+mod vocab;
+
+pub use bpe::Bpe;
+pub use tokenizer::{detokenize, tokenize, Token};
+pub use vocab::{Vocab, BOS, EOS, PAD, UNK};

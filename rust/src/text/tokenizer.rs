@@ -1,0 +1,112 @@
+//! Whitespace + punctuation tokenizer with lowercasing — the preprocessing
+//! regime of the paper's seq2seq baselines (Texar GIGAWORD / IWSLT pipelines
+//! lowercase and split punctuation).
+
+/// A token is just an owned lowercase string here; ids come from [`super::Vocab`].
+pub type Token = String;
+
+/// Tokenize: lowercase, split on whitespace, split leading/trailing
+/// punctuation into separate tokens, keep digits grouped.
+pub fn tokenize(text: &str) -> Vec<Token> {
+    let mut out = Vec::new();
+    for raw in text.split_whitespace() {
+        let lower = raw.to_lowercase();
+        push_word(&lower, &mut out);
+    }
+    out
+}
+
+fn is_punct(c: char) -> bool {
+    c.is_ascii_punctuation()
+}
+
+fn push_word(w: &str, out: &mut Vec<Token>) {
+    if w.is_empty() {
+        return;
+    }
+    // Strip leading punctuation.
+    let mut chars: Vec<char> = w.chars().collect();
+    let mut start = 0;
+    while start < chars.len() && is_punct(chars[start]) {
+        out.push(chars[start].to_string());
+        start += 1;
+    }
+    // Collect trailing punctuation (emitted after the core).
+    let mut end = chars.len();
+    let mut trail = Vec::new();
+    while end > start && is_punct(chars[end - 1]) {
+        trail.push(chars[end - 1].to_string());
+        end -= 1;
+    }
+    if start < end {
+        // Split internal hyphenation: "low-memory" → low - memory
+        let core: String = chars[start..end].iter().collect();
+        let mut piece = String::new();
+        for c in core.chars() {
+            if c == '-' || c == '/' {
+                if !piece.is_empty() {
+                    out.push(std::mem::take(&mut piece));
+                }
+                out.push(c.to_string());
+            } else {
+                piece.push(c);
+            }
+        }
+        if !piece.is_empty() {
+            out.push(piece);
+        }
+    }
+    out.extend(trail.into_iter().rev());
+    let _ = chars.drain(..); // keep clippy quiet about unused tail
+}
+
+/// Detokenize for display: join with spaces, attach simple punctuation.
+pub fn detokenize(tokens: &[Token]) -> String {
+    let mut s = String::new();
+    for (i, t) in tokens.iter().enumerate() {
+        let attach = t.len() == 1 && matches!(t.as_str(), "." | "," | "!" | "?" | ";" | ":");
+        if i > 0 && !attach {
+            s.push(' ');
+        }
+        s.push_str(t);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowercases_and_splits() {
+        assert_eq!(tokenize("The Cat sat"), vec!["the", "cat", "sat"]);
+    }
+
+    #[test]
+    fn punctuation_separated() {
+        assert_eq!(tokenize("Hello, world!"), vec!["hello", ",", "world", "!"]);
+        assert_eq!(tokenize("(nested)"), vec!["(", "nested", ")"]);
+    }
+
+    #[test]
+    fn hyphens_split() {
+        assert_eq!(tokenize("low-memory"), vec!["low", "-", "memory"]);
+    }
+
+    #[test]
+    fn digits_kept_together() {
+        assert_eq!(tokenize("in 1999 it"), vec!["in", "1999", "it"]);
+    }
+
+    #[test]
+    fn pure_punct_token() {
+        assert_eq!(tokenize("..."), vec![".", ".", "."]);
+        assert_eq!(tokenize(""), Vec::<Token>::new());
+    }
+
+    #[test]
+    fn detokenize_attaches_punct() {
+        let toks: Vec<Token> = vec!["hello".into(), ",".into(), "world".into(), "!".into()];
+        assert_eq!(detokenize(&toks), "hello, world!");
+    }
+}

@@ -1,0 +1,175 @@
+//! Frequency-cut vocabulary with the four standard special tokens.
+
+use std::collections::HashMap;
+
+/// Special token ids (fixed positions at the front of every vocabulary).
+pub const PAD: usize = 0;
+pub const UNK: usize = 1;
+pub const BOS: usize = 2;
+pub const EOS: usize = 3;
+
+/// Token ↔ id bijection, built from corpus frequencies.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    token_to_id: HashMap<String, usize>,
+    id_to_token: Vec<String>,
+}
+
+impl Vocab {
+    /// Build from token sequences: keep the `max_size - 4` most frequent
+    /// tokens appearing at least `min_freq` times. Ties break alphabetically
+    /// so vocabularies are deterministic.
+    pub fn build<'a, I>(sequences: I, max_size: usize, min_freq: usize) -> Vocab
+    where
+        I: IntoIterator<Item = &'a [String]>,
+    {
+        let mut freq: HashMap<&str, usize> = HashMap::new();
+        for seq in sequences {
+            for t in seq {
+                *freq.entry(t.as_str()).or_insert(0) += 1;
+            }
+        }
+        let mut items: Vec<(&str, usize)> =
+            freq.into_iter().filter(|&(_, c)| c >= min_freq).collect();
+        items.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let keep = max_size.saturating_sub(4);
+        items.truncate(keep);
+
+        let mut id_to_token: Vec<String> =
+            vec!["<pad>".into(), "<unk>".into(), "<bos>".into(), "<eos>".into()];
+        id_to_token.extend(items.into_iter().map(|(t, _)| t.to_string()));
+        let token_to_id = id_to_token
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i))
+            .collect();
+        Vocab { token_to_id, id_to_token }
+    }
+
+    /// Vocabulary size including specials.
+    pub fn len(&self) -> usize {
+        self.id_to_token.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_token.is_empty()
+    }
+
+    pub fn id(&self, token: &str) -> usize {
+        self.token_to_id.get(token).copied().unwrap_or(UNK)
+    }
+
+    pub fn token(&self, id: usize) -> &str {
+        self.id_to_token.get(id).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+
+    pub fn contains(&self, token: &str) -> bool {
+        self.token_to_id.contains_key(token)
+    }
+
+    /// Encode a token sequence (no BOS/EOS added).
+    pub fn encode(&self, tokens: &[String]) -> Vec<usize> {
+        tokens.iter().map(|t| self.id(t)).collect()
+    }
+
+    /// Encode with BOS/EOS wrapping.
+    pub fn encode_wrapped(&self, tokens: &[String]) -> Vec<usize> {
+        let mut ids = Vec::with_capacity(tokens.len() + 2);
+        ids.push(BOS);
+        ids.extend(tokens.iter().map(|t| self.id(t)));
+        ids.push(EOS);
+        ids
+    }
+
+    /// Decode ids to tokens, dropping specials.
+    pub fn decode(&self, ids: &[usize]) -> Vec<String> {
+        ids.iter()
+            .filter(|&&i| i >= 4)
+            .map(|&i| self.token(i).to_string())
+            .collect()
+    }
+
+    /// Out-of-vocabulary rate over a token stream.
+    pub fn oov_rate(&self, tokens: &[String]) -> f64 {
+        if tokens.is_empty() {
+            return 0.0;
+        }
+        let oov = tokens.iter().filter(|t| !self.contains(t)).count();
+        oov as f64 / tokens.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seqs(data: &[&[&str]]) -> Vec<Vec<String>> {
+        data.iter()
+            .map(|s| s.iter().map(|t| t.to_string()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn specials_at_front() {
+        let data = seqs(&[&["a", "b", "a"]]);
+        let refs: Vec<&[String]> = data.iter().map(|v| v.as_slice()).collect();
+        let v = Vocab::build(refs.iter().copied(), 100, 1);
+        assert_eq!(v.token(PAD), "<pad>");
+        assert_eq!(v.token(UNK), "<unk>");
+        assert_eq!(v.token(BOS), "<bos>");
+        assert_eq!(v.token(EOS), "<eos>");
+        assert_eq!(v.id("a"), 4); // most frequent real token gets first slot
+        assert_eq!(v.len(), 6);
+    }
+
+    #[test]
+    fn frequency_order_and_cutoff() {
+        let data = seqs(&[&["x", "y", "y", "z", "z", "z", "zebra"]]);
+        let refs: Vec<&[String]> = data.iter().map(|v| v.as_slice()).collect();
+        let v = Vocab::build(refs.iter().copied(), 7, 1); // room for 3 real tokens
+        assert_eq!(v.id("z"), 4);
+        assert_eq!(v.id("y"), 5);
+        assert_eq!(v.id("x"), 6); // alphabetical tie-break beats "zebra"
+        assert_eq!(v.id("zebra"), UNK); // truncated by max_size
+    }
+
+    #[test]
+    fn min_freq_filters() {
+        let data = seqs(&[&["a", "a", "b"]]);
+        let refs: Vec<&[String]> = data.iter().map(|v| v.as_slice()).collect();
+        let v = Vocab::build(refs.iter().copied(), 100, 2);
+        assert!(v.contains("a"));
+        assert!(!v.contains("b"));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let data = seqs(&[&["the", "cat", "sat"]]);
+        let refs: Vec<&[String]> = data.iter().map(|v| v.as_slice()).collect();
+        let v = Vocab::build(refs.iter().copied(), 100, 1);
+        let toks: Vec<String> = ["the", "cat", "sat"].iter().map(|s| s.to_string()).collect();
+        let ids = v.encode_wrapped(&toks);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(v.decode(&ids), toks);
+    }
+
+    #[test]
+    fn unk_for_unknown() {
+        let data = seqs(&[&["known"]]);
+        let refs: Vec<&[String]> = data.iter().map(|v| v.as_slice()).collect();
+        let v = Vocab::build(refs.iter().copied(), 100, 1);
+        assert_eq!(v.id("unknown-token"), UNK);
+        let toks: Vec<String> = vec!["unknown-token".into(), "known".into()];
+        assert_eq!(v.oov_rate(&toks), 0.5);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let data = seqs(&[&["b", "a"]]);
+        let refs: Vec<&[String]> = data.iter().map(|v| v.as_slice()).collect();
+        let v = Vocab::build(refs.iter().copied(), 100, 1);
+        assert_eq!(v.id("a"), 4); // alphabetical among equal-frequency
+        assert_eq!(v.id("b"), 5);
+    }
+}

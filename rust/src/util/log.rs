@@ -1,0 +1,121 @@
+//! Tiny leveled logger writing to stderr, controlled by `W2K_LOG`
+//! (error|warn|info|debug|trace). Substrate replacement for the `log`/
+//! `env_logger` crates, with elapsed-time stamps relative to process start.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => " WARN",
+            Level::Info => " INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // default: Info
+static START: OnceLock<Instant> = OnceLock::new();
+static INIT: OnceLock<()> = OnceLock::new();
+
+/// Initialize from the environment; idempotent, called lazily by `enabled`.
+pub fn init() {
+    INIT.get_or_init(|| {
+        START.get_or_init(Instant::now);
+        if let Ok(v) = std::env::var("W2K_LOG") {
+            if let Some(l) = Level::parse(&v) {
+                LEVEL.store(l as u8, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Override the level programmatically (e.g. from --verbose CLI flags).
+pub fn set_level(l: Level) {
+    init();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    init();
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{:9.3}s {} {}] {}", t, l.tag(), target, msg);
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Trace, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn level_filtering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

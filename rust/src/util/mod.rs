@@ -1,0 +1,72 @@
+//! Shared substrates: PRNG, JSON, logging, statistics, tables.
+//!
+//! None of the usual ecosystem crates (rand, serde, log, criterion) are
+//! available in this offline build, so this module provides from-scratch,
+//! well-tested equivalents sized for what the rest of the system needs.
+
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::{fmt_count, fmt_duration, Summary, Timer};
+pub use table::Table;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Smallest integer `t` with `t^n >= d` (used to size word2ketXS factors).
+pub fn ceil_root(d: usize, n: u32) -> usize {
+    if d <= 1 {
+        return 1;
+    }
+    let mut t = (d as f64).powf(1.0 / n as f64).floor() as usize;
+    // floating point may under- or over-shoot by one
+    while t.checked_pow(n).map_or(true, |p| p < d) {
+        t += 1;
+    }
+    while t > 1 && (t - 1).checked_pow(n).map_or(false, |p| p >= d) {
+        t -= 1;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 5), 1);
+    }
+
+    #[test]
+    fn ceil_root_matches_paper_cells() {
+        // SQuAD vocab 118,655: order-2 → 345, order-4 → 19 (paper Fig. 3: 19×5)
+        assert_eq!(ceil_root(118_655, 2), 345);
+        assert_eq!(ceil_root(118_655, 4), 19);
+        // embedding dim 300: order-2 → 18 (18² = 324), order-4 → 5 (5⁴ = 625)
+        assert_eq!(ceil_root(300, 2), 18);
+        assert_eq!(ceil_root(300, 4), 5);
+        // GIGAWORD vocab 30,428: order-4 → 14 (14⁴ = 38,416)
+        assert_eq!(ceil_root(30_428, 4), 14);
+        assert_eq!(ceil_root(30_428, 2), 175);
+    }
+
+    #[test]
+    fn ceil_root_edges() {
+        assert_eq!(ceil_root(1, 3), 1);
+        assert_eq!(ceil_root(8, 3), 2);
+        assert_eq!(ceil_root(9, 3), 3);
+        assert_eq!(ceil_root(256, 4), 4);
+        assert_eq!(ceil_root(257, 4), 5);
+    }
+}

@@ -1,0 +1,148 @@
+//! ASCII table rendering for benchmark reports (paper-vs-measured tables).
+
+/// A simple left/right-aligned column table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    /// Right-align numeric-looking columns automatically.
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(columns: Vec<S>) -> Self {
+        Table {
+            header: columns.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, t: impl Into<String>) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    pub fn add_row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn looks_numeric(s: &str) -> bool {
+        !s.is_empty()
+            && s.chars().all(|c| c.is_ascii_digit() || ",.%-+×xe".contains(c))
+            && s.chars().any(|c| c.is_ascii_digit())
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        // A column is right-aligned if all its body cells look numeric.
+        let right: Vec<bool> = (0..ncols)
+            .map(|i| {
+                !self.rows.is_empty()
+                    && self.rows.iter().all(|r| Self::looks_numeric(&r[i]) || r[i].is_empty())
+            })
+            .collect();
+
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &width {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        let fmt_row = |cells: &[String], right: &[bool]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i] - c.chars().count();
+                if right[i] {
+                    line.push_str(&format!(" {}{} |", " ".repeat(pad), c));
+                } else {
+                    line.push_str(&format!(" {}{} |", c, " ".repeat(pad)));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &vec![false; ncols]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &right));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    /// Render as a GitHub-flavored markdown table (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("**{}**\n\n", t));
+        }
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["Embedding", "#Params", "Saving"]);
+        t.add_row(vec!["Regular", "7,789,568", "1"]);
+        t.add_row(vec!["word2ketXS", "224", "34,775"]);
+        let s = t.render();
+        assert!(s.contains("| Embedding "));
+        assert!(s.contains("7,789,568"));
+        // numeric columns right-aligned: the short "224" is padded on the left
+        assert!(s.contains("       224"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.add_row(vec!["1", "2"]);
+        let md = t.render_markdown();
+        assert!(md.starts_with("| a | b |\n|---|---|\n| 1 | 2 |\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.add_row(vec!["only-one"]);
+    }
+}

@@ -1,0 +1,369 @@
+//! Integration tests over the full runtime: PJRT execution of AOT artifacts,
+//! kernel-vs-Rust-oracle agreement, training-loss descent, checkpoint
+//! resume, greedy decode, and QA prediction.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! loud message) when artifacts/ is missing so `cargo test` stays green on a
+//! fresh clone.
+
+use std::path::Path;
+use std::rc::Rc;
+use word2ket::config::{EmbeddingKind, ExperimentConfig, TaskKind};
+use word2ket::coordinator::experiment::{resolve_variant, run_with};
+use word2ket::coordinator::schedule::LrSchedule;
+use word2ket::coordinator::tasks::{prepare_qa, prepare_seq2seq};
+use word2ket::coordinator::trainer::{greedy_decode, predict_spans, Trainer};
+use word2ket::kron::kron_vec;
+use word2ket::runtime::{Engine, Manifest, ParamStore, Value};
+use word2ket::util::Rng;
+
+// The xla client is !Send/!Sync (Rc internals), so each test thread holds
+// its own engine via a thread-local.
+fn runtime() -> Option<Rc<(Engine, Manifest)>> {
+    thread_local! {
+        static RT: std::cell::RefCell<Option<Option<Rc<(Engine, Manifest)>>>> =
+            const { std::cell::RefCell::new(None) };
+    }
+    RT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let dir = Path::new("artifacts");
+            *slot = Some(if dir.join("manifest.json").exists() {
+                let engine = Engine::cpu(dir).expect("engine");
+                let manifest = Manifest::load(dir).expect("manifest");
+                Some(Rc::new((engine, manifest)))
+            } else {
+                eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+                None
+            });
+        }
+        slot.as_ref().unwrap().clone()
+    })
+}
+
+fn tiny_cfg(task: TaskKind, kind: EmbeddingKind, order: usize, rank: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.task = task;
+    cfg.embedding.kind = kind;
+    cfg.embedding.order = order;
+    cfg.embedding.rank = rank;
+    cfg.train.steps = 6;
+    cfg.train.eval_every = 0;
+    cfg.train.warmup = 0;
+    cfg.train.lr = 3e-3;
+    cfg.corpus.train = 64;
+    cfg.corpus.valid = 8;
+    cfg.corpus.test = 8;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Kernel artifacts vs pure-Rust oracles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kernel_kron_pair_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let k = &manifest.kernels["kernel_kron_pair"];
+    let mut rng = Rng::new(11);
+    let a: Vec<f32> = rng.uniform_vec(16 * 8, -1.0, 1.0);
+    let b: Vec<f32> = rng.uniform_vec(16 * 8, -1.0, 1.0);
+    let out = engine
+        .run(
+            &k.file,
+            &[
+                Value::F32(a.clone(), vec![16, 8]),
+                Value::F32(b.clone(), vec![16, 8]),
+            ],
+        )
+        .expect("run kron_pair");
+    let got = out[0].as_f32().unwrap();
+    for row in 0..16 {
+        let expect = kron_vec(&a[row * 8..(row + 1) * 8], &b[row * 8..(row + 1) * 8]);
+        for (i, e) in expect.iter().enumerate() {
+            let g = got[row * 64 + i];
+            assert!((g - e).abs() < 1e-5, "row {row} idx {i}: {g} vs {e}");
+        }
+    }
+}
+
+#[test]
+fn kernel_xs_rows_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let k = &manifest.kernels["kernel_xs_rows"];
+    let mut rng = Rng::new(12);
+    // (16, 2, 2, 8): batch 16, rank 2, order 2, q 8.
+    let cols: Vec<f32> = rng.uniform_vec(16 * 2 * 2 * 8, -1.0, 1.0);
+    let out = engine
+        .run(&k.file, &[Value::F32(cols.clone(), vec![16, 2, 2, 8])])
+        .expect("run xs_rows");
+    let got = out[0].as_f32().unwrap();
+    for b in 0..16 {
+        let mut expect = vec![0.0f32; 64];
+        for r in 0..2 {
+            let off = ((b * 2) + r) * 2 * 8;
+            let term = kron_vec(&cols[off..off + 8], &cols[off + 8..off + 16]);
+            for i in 0..64 {
+                expect[i] += term[i];
+            }
+        }
+        for i in 0..64 {
+            let g = got[b * 64 + i];
+            assert!((g - expect[i]).abs() < 1e-4, "b {b} i {i}: {g} vs {}", expect[i]);
+        }
+    }
+}
+
+#[test]
+fn kernel_layernorm_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let k = &manifest.kernels["kernel_layernorm"];
+    let mut rng = Rng::new(13);
+    let x: Vec<f32> = rng.uniform_vec(16 * 64, -2.0, 2.0);
+    let out = engine
+        .run(&k.file, &[Value::F32(x.clone(), vec![16, 64])])
+        .expect("run layernorm");
+    let got = out[0].as_f32().unwrap();
+    let expect = word2ket::tensor::layernorm_slices(&x, 64).unwrap();
+    for i in 0..x.len() {
+        assert!((got[i] - expect[i]).abs() < 1e-4, "idx {i}: {} vs {}", got[i], expect[i]);
+    }
+}
+
+#[test]
+fn kernel_attention_probs_sum_to_one() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let k = &manifest.kernels["kernel_attention"];
+    let mut rng = Rng::new(14);
+    let h: Vec<f32> = rng.uniform_vec(16 * 64, -1.0, 1.0);
+    let enc: Vec<f32> = rng.uniform_vec(16 * 24 * 64, -1.0, 1.0);
+    // Mask: first 10 positions valid.
+    let mut mask = vec![0.0f32; 16 * 24];
+    for b in 0..16 {
+        for t in 0..10 {
+            mask[b * 24 + t] = 1.0;
+        }
+    }
+    let out = engine
+        .run(
+            &k.file,
+            &[
+                Value::F32(h, vec![16, 64]),
+                Value::F32(enc, vec![16, 24, 64]),
+                Value::F32(mask, vec![16, 24]),
+            ],
+        )
+        .expect("run attention");
+    let probs = out[1].as_f32().unwrap();
+    for b in 0..16 {
+        let row = &probs[b * 24..(b + 1) * 24];
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "batch {b}: prob sum {sum}");
+        for t in 10..24 {
+            assert!(row[t].abs() < 1e-6, "masked position {t} has prob {}", row[t]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Training behaviour
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seq2seq_loss_decreases() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let cfg = tiny_cfg(TaskKind::Summarization, EmbeddingKind::Regular, 1, 1);
+    let variant = resolve_variant(&cfg, manifest).unwrap();
+    let data = prepare_seq2seq(&cfg, variant).unwrap();
+    let mut store = ParamStore::init(&variant.params, 1);
+    let mut trainer = Trainer::new(engine, variant, LrSchedule::new(5e-3, 0));
+    let mut rng = Rng::new(2);
+    let batches = data.train.epoch(&mut rng);
+    let mut losses = Vec::new();
+    for (batch, _) in batches.iter().take(8).cycle().take(12) {
+        losses.push(trainer.step_seq2seq(&mut store, batch).unwrap());
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+    // First loss ≈ ln(vocab): uniform predictions.
+    let v = variant.dims["vocab"] as f32;
+    assert!((losses[0] - v.ln()).abs() < 1.0, "initial loss {} vs ln(V) {}", losses[0], v.ln());
+}
+
+#[test]
+fn qa_loss_decreases_all_variants() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    for (kind, order, rank) in [
+        (EmbeddingKind::Regular, 1, 1),
+        (EmbeddingKind::Word2KetXS, 2, 2),
+        (EmbeddingKind::Word2KetXS, 4, 1),
+    ] {
+        let cfg = tiny_cfg(TaskKind::Qa, kind, order, rank);
+        let variant = resolve_variant(&cfg, manifest).unwrap();
+        let data = prepare_qa(&cfg, variant).unwrap();
+        let mut store = ParamStore::init(&variant.params, 1);
+        let mut trainer = Trainer::new(engine, variant, LrSchedule::new(5e-3, 0));
+        let mut rng = Rng::new(3);
+        let batches = data.train.epoch(&mut rng);
+        let mut losses = Vec::new();
+        for (batch, _) in batches.iter().cycle().take(10) {
+            losses.push(trainer.step_qa(&mut store, batch).unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "{kind:?} {order}/{rank}: loss did not decrease: {losses:?}"
+        );
+    }
+}
+
+#[test]
+fn greedy_decode_emits_valid_tokens() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let cfg = tiny_cfg(TaskKind::Summarization, EmbeddingKind::Word2KetXS, 2, 10);
+    let variant = resolve_variant(&cfg, manifest).unwrap();
+    let data = prepare_seq2seq(&cfg, variant).unwrap();
+    let store = ParamStore::init(&variant.params, 1);
+    let (batch, _) = &data.test.eval_batches()[0];
+    let seqs = greedy_decode(engine, variant, &store, batch, 8).unwrap();
+    assert_eq!(seqs.len(), batch.batch_size);
+    let vocab = variant.dims["vocab"];
+    for s in &seqs {
+        assert!(s.len() <= 8);
+        assert!(s.iter().all(|&t| t < vocab), "token out of vocab: {s:?}");
+    }
+}
+
+#[test]
+fn qa_predict_spans_in_range() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let cfg = tiny_cfg(TaskKind::Qa, EmbeddingKind::Regular, 1, 1);
+    let variant = resolve_variant(&cfg, manifest).unwrap();
+    let data = prepare_qa(&cfg, variant).unwrap();
+    let store = ParamStore::init(&variant.params, 5);
+    let (batch, _) = &data.test.eval_batches()[0];
+    let spans = predict_spans(engine, variant, &store, batch).unwrap();
+    let ctx_len = variant.dims["ctx_len"];
+    let max_ans = variant.dims["max_answer_len"];
+    for &(s, e) in &spans {
+        assert!(s < ctx_len && e < ctx_len, "span ({s},{e}) out of range");
+        assert!(e >= s, "end before start");
+        assert!(e - s < max_ans, "span longer than max_answer_len");
+    }
+}
+
+#[test]
+fn checkpoint_resume_continues_exactly() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let cfg = tiny_cfg(TaskKind::Qa, EmbeddingKind::Word2KetXS, 2, 2);
+    let variant = resolve_variant(&cfg, manifest).unwrap();
+    let data = prepare_qa(&cfg, variant).unwrap();
+    let mut rng = Rng::new(4);
+    let batches = data.train.epoch(&mut rng);
+
+    // Path A: 4 straight steps.
+    let mut store_a = ParamStore::init(&variant.params, 9);
+    let mut tr_a = Trainer::new(engine, variant, LrSchedule::new(3e-3, 0));
+    for (batch, _) in batches.iter().take(4) {
+        tr_a.step_qa(&mut store_a, batch).unwrap();
+    }
+
+    // Path B: 2 steps, checkpoint, reload, 2 more steps.
+    let dir = std::env::temp_dir().join("w2k_resume_test");
+    let path = dir.join("resume.ckpt");
+    let mut store_b = ParamStore::init(&variant.params, 9);
+    let mut tr_b = Trainer::new(engine, variant, LrSchedule::new(3e-3, 0));
+    for (batch, _) in batches.iter().take(2) {
+        tr_b.step_qa(&mut store_b, batch).unwrap();
+    }
+    store_b.save(&path).unwrap();
+    let mut store_b2 = ParamStore::load(&variant.params, &path).unwrap();
+    assert_eq!(store_b2.step, 2);
+    let mut tr_b2 = Trainer::new(engine, variant, LrSchedule::new(3e-3, 0));
+    for (batch, _) in batches.iter().skip(2).take(2) {
+        tr_b2.step_qa(&mut store_b2, batch).unwrap();
+    }
+
+    // Final losses must match to float tolerance.
+    let la = *tr_a.losses.last().unwrap();
+    let lb = *tr_b2.losses.last().unwrap();
+    assert!(
+        (la - lb).abs() < 1e-5,
+        "resume diverged: straight {la} vs resumed {lb}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn full_experiment_smoke_mt() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let mut cfg = tiny_cfg(TaskKind::Translation, EmbeddingKind::Word2KetXS, 3, 10);
+    cfg.train.steps = 4;
+    let variant = resolve_variant(&cfg, manifest).unwrap();
+    let mut store = ParamStore::init(&variant.params, 1);
+    let report = run_with(&cfg, engine, variant, &mut store, false).unwrap();
+    assert_eq!(report.steps, 4);
+    assert!(report.final_metrics.iter().any(|(k, _)| k == "BLEU"));
+    assert!(report.step_time_mean_ms > 0.0);
+}
+
+#[test]
+fn manifest_files_all_present() {
+    let Some(rt) = runtime() else { return };
+    let manifest = &rt.1;
+    let reg = word2ket::runtime::ArtifactRegistry::open(Path::new("artifacts")).unwrap();
+    assert!(reg.missing_files().is_empty(), "missing: {:?}", reg.missing_files());
+    assert!(manifest.variants.len() >= 11, "expected all 11 variants");
+    assert!(manifest.kernels.len() >= 4, "expected 4 kernel artifacts");
+}
+
+#[test]
+fn beam_width1_matches_greedy() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let cfg = tiny_cfg(TaskKind::Summarization, EmbeddingKind::Regular, 1, 1);
+    let variant = resolve_variant(&cfg, manifest).unwrap();
+    let data = prepare_seq2seq(&cfg, variant).unwrap();
+    let store = ParamStore::init(&variant.params, 3);
+    let (batch, _) = &data.test.eval_batches()[0];
+    let greedy = greedy_decode(engine, variant, &store, batch, 6).unwrap();
+    let beam1 =
+        word2ket::coordinator::beam::beam_decode(engine, variant, &store, batch, 6, 1).unwrap();
+    assert_eq!(greedy, beam1, "beam width 1 must equal greedy");
+}
+
+#[test]
+fn beam_width3_scores_at_least_greedy() {
+    let Some(rt) = runtime() else { return };
+    let (engine, manifest) = (&rt.0, &rt.1);
+    let cfg = tiny_cfg(TaskKind::Summarization, EmbeddingKind::Word2KetXS, 2, 10);
+    let variant = resolve_variant(&cfg, manifest).unwrap();
+    let data = prepare_seq2seq(&cfg, variant).unwrap();
+    // brief training so the distribution is non-degenerate
+    let mut store = ParamStore::init(&variant.params, 4);
+    let mut trainer = Trainer::new(engine, variant, LrSchedule::new(5e-3, 0));
+    let mut rng = Rng::new(5);
+    for (batch, _) in data.train.epoch(&mut rng).iter().take(6) {
+        trainer.step_seq2seq(&mut store, batch).unwrap();
+    }
+    let (batch, _) = &data.test.eval_batches()[0];
+    let beams =
+        word2ket::coordinator::beam::beam_decode(engine, variant, &store, batch, 8, 3).unwrap();
+    assert_eq!(beams.len(), batch.batch_size);
+    let vocab = variant.dims["vocab"];
+    for s in &beams {
+        assert!(s.iter().all(|&t| t < vocab && t != word2ket::text::EOS));
+        assert!(s.len() <= 8);
+    }
+}

@@ -1,0 +1,137 @@
+//! Property-based tests for the Kronecker/CP algebra — the invariants the
+//! paper's math rests on (§2.1–§2.3, §3.1–§3.2).
+
+use word2ket::kron::{kron_chain, kron_entry, kron_mat, kron_row, kron_tree, CpTensor, MixedRadix};
+use word2ket::prop_assert;
+use word2ket::tensor::Tensor;
+use word2ket::testing::{check, close};
+
+#[test]
+fn prop_kron_bilinearity() {
+    check("kron bilinearity", |c| {
+        let n = c.dim(2, 6);
+        let m = c.dim(2, 6);
+        let u = c.vec_f32(n, -2.0, 2.0);
+        let v = c.vec_f32(n, -2.0, 2.0);
+        let w = c.vec_f32(m, -2.0, 2.0);
+        let alpha = c.rng.uniform(-2.0, 2.0);
+        // (u + αv) ⊗ w == u⊗w + α(v⊗w)
+        let lhs_in: Vec<f32> = u.iter().zip(&v).map(|(a, b)| a + alpha * b).collect();
+        let lhs = word2ket::kron::kron_vec(&lhs_in, &w);
+        let uw = word2ket::kron::kron_vec(&u, &w);
+        let vw = word2ket::kron::kron_vec(&v, &w);
+        for i in 0..lhs.len() {
+            close(lhs[i], uw[i] + alpha * vw[i], 1e-4)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_equals_chain() {
+    check("balanced tree == chain (associativity)", |c| {
+        let order = c.dim(1, 5);
+        let q = c.dim(2, 5);
+        let leaves: Vec<Vec<f32>> = (0..order).map(|_| c.vec_f32(q, -1.0, 1.0)).collect();
+        let refs: Vec<&[f32]> = leaves.iter().map(|v| v.as_slice()).collect();
+        let a = kron_chain(&refs);
+        let b = kron_tree(&refs);
+        prop_assert!(a.len() == b.len(), "length mismatch");
+        for i in 0..a.len() {
+            close(a[i], b[i], 1e-4)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_norm_multiplicativity() {
+    check("‖v⊗w‖ = ‖v‖·‖w‖ (§2.1)", |c| {
+        let lv = c.dim(1, 12);
+        let lw = c.dim(1, 12);
+        let v = c.vec_f32(lv, -3.0, 3.0);
+        let w = c.vec_f32(lw, -3.0, 3.0);
+        let vw = word2ket::kron::kron_vec(&v, &w);
+        let nv = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nw = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nvw = vw.iter().map(|x| x * x).sum::<f32>().sqrt();
+        close(nvw, nv * nw, 1e-3)
+    });
+}
+
+#[test]
+fn prop_mixed_radix_roundtrip() {
+    check("mixed-radix encode∘decode = id", |c| {
+        let ndig = c.dim(1, 5);
+        let radices: Vec<usize> = (0..ndig).map(|_| c.dim(2, 9)).collect();
+        let r = MixedRadix::new(radices);
+        let i = c.rng.below(r.capacity());
+        prop_assert!(r.encode(&r.decode(i)) == i, "roundtrip failed at {i}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lazy_entry_matches_dense() {
+    check("lazy (A⊗B)_{ij} identity (§3.2)", |c| {
+        let (m, n) = (c.dim(1, 4), c.dim(1, 4));
+        let (p, q) = (c.dim(1, 4), c.dim(1, 4));
+        let a = Tensor::new(vec![m, n], c.vec_f32(m * n, -1.0, 1.0)).unwrap();
+        let b = Tensor::new(vec![p, q], c.vec_f32(p * q, -1.0, 1.0)).unwrap();
+        let dense = kron_mat(&a, &b);
+        let i = c.rng.below(m * p);
+        let j = c.rng.below(n * q);
+        close(kron_entry(&[&a, &b], i, j), dense.at2(i, j), 1e-4)
+    });
+}
+
+#[test]
+fn prop_lazy_row_matches_dense() {
+    check("lazy row reconstruction (§3.2)", |c| {
+        let (m, n) = (c.dim(2, 4), c.dim(1, 4));
+        let (p, q) = (c.dim(2, 4), c.dim(1, 4));
+        let a = Tensor::new(vec![m, n], c.vec_f32(m * n, -1.0, 1.0)).unwrap();
+        let b = Tensor::new(vec![p, q], c.vec_f32(p * q, -1.0, 1.0)).unwrap();
+        let dense = kron_mat(&a, &b);
+        let i = c.rng.below(m * p);
+        let lazy = kron_row(&[&a, &b], i);
+        for j in 0..lazy.len() {
+            close(lazy[j], dense.at2(i, j), 1e-4)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_factored_inner_product() {
+    check("factored ⟨v,w⟩ == dense (§2.3)", |c| {
+        let order = c.dim(2, 4);
+        let q = c.dim(2, 4);
+        let r1 = c.dim(1, 4);
+        let r2 = c.dim(1, 4);
+        let mut ra = c.rng.fork(1);
+        let mut rb = c.rng.fork(2);
+        let a = CpTensor::random(r1, order, q, &mut ra);
+        let b = CpTensor::random(r2, order, q, &mut rb);
+        let dense: f32 = a
+            .reconstruct()
+            .iter()
+            .zip(b.reconstruct().iter())
+            .map(|(x, y)| x * y)
+            .sum();
+        close(a.inner(&b), dense, 5e-3)
+    });
+}
+
+#[test]
+fn prop_cp_param_count() {
+    check("CP storage is r·n·q (eq. 3)", |c| {
+        let r = c.dim(1, 6);
+        let n = c.dim(1, 5);
+        let q = c.dim(2, 6);
+        let t = CpTensor::zeros(r, n, q);
+        prop_assert!(t.num_params() == r * n * q, "params {}", t.num_params());
+        prop_assert!(t.dim() == q.pow(n as u32), "dim {}", t.dim());
+        Ok(())
+    });
+}

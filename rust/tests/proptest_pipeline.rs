@@ -1,0 +1,187 @@
+//! Property-based tests over the NLP substrate: metrics bounds, batcher
+//! invariants, vocabulary handling, config/checkpoint roundtrips.
+
+use word2ket::config::{EmbeddingKind, ExperimentConfig};
+use word2ket::corpus::{self};
+use word2ket::data::{encode_pairs, Batcher, EncodedPair};
+use word2ket::metrics::{corpus_bleu, qa_f1, rouge_l, rouge_n};
+use word2ket::prop_assert;
+use word2ket::testing::check;
+use word2ket::text::{Vocab, BOS, EOS, PAD};
+
+fn rand_tokens(c: &mut word2ket::testing::Cases, len: usize, alphabet: usize) -> Vec<String> {
+    (0..len)
+        .map(|_| format!("w{}", c.rng.below(alphabet.max(1))))
+        .collect()
+}
+
+#[test]
+fn prop_metric_ranges() {
+    check("ROUGE/BLEU/F1 ∈ [0,1]; identity ⇒ 1", |c| {
+        let la = c.dim(1, 12);
+        let lb = c.dim(1, 12);
+        let a = rand_tokens(c, la, 8);
+        let b = rand_tokens(c, lb, 8);
+        for s in [rouge_n(&a, &b, 1).f1, rouge_n(&a, &b, 2).f1, rouge_l(&a, &b).f1, qa_f1(&a, &b)] {
+            prop_assert!((0.0..=1.0 + 1e-9).contains(&s), "score {s} out of range");
+        }
+        prop_assert!((rouge_l(&a, &a).f1 - 1.0).abs() < 1e-9, "identity rouge != 1");
+        prop_assert!((qa_f1(&a, &a) - 1.0).abs() < 1e-9, "identity f1 != 1");
+        let bleu = corpus_bleu(&[(a.clone(), a.clone())]);
+        prop_assert!((bleu.bleu - 100.0).abs() < 1e-6, "identity bleu {}", bleu.bleu);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rouge_symmetric_f1() {
+    check("ROUGE-N F1 symmetric under swap", |c| {
+        let la = c.dim(1, 10);
+        let lb = c.dim(1, 10);
+        let a = rand_tokens(c, la, 6);
+        let b = rand_tokens(c, lb, 6);
+        let ab = rouge_n(&a, &b, 1).f1;
+        let ba = rouge_n(&b, &a, 1).f1;
+        prop_assert!((ab - ba).abs() < 1e-9, "{ab} vs {ba}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_preserves_examples() {
+    check("every example appears exactly once per epoch", |c| {
+        let n = c.dim(1, 40);
+        let batch = c.dim(1, 8);
+        // Tag each example with a unique first token.
+        let data: Vec<EncodedPair> = (0..n)
+            .map(|i| EncodedPair {
+                src: vec![4 + i, 4, 5],
+                tgt: vec![BOS, 4 + i, EOS],
+            })
+            .collect();
+        let b = Batcher::new(data, batch, 8, 5);
+        let mut rng = c.rng.fork(0);
+        let mut seen = std::collections::HashMap::new();
+        for (bt, real) in b.epoch(&mut rng) {
+            for r in 0..real {
+                *seen.entry(bt.src[r * 8]).or_insert(0usize) += 1;
+            }
+        }
+        prop_assert!(seen.len() == n, "saw {} of {n}", seen.len());
+        prop_assert!(seen.values().all(|&v| v == 1), "duplicates: {seen:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_padding_is_pad() {
+    check("padding beyond seq length is PAD", |c| {
+        let len = c.dim(1, 6);
+        let data = vec![EncodedPair {
+            src: (0..len).map(|i| 4 + i).collect(),
+            tgt: vec![BOS, 4, EOS],
+        }];
+        let b = Batcher::new(data, 2, 10, 6);
+        let mut rng = c.rng.fork(0);
+        let (bt, _) = &b.epoch(&mut rng)[0];
+        for r in 0..2 {
+            for t in len..10 {
+                prop_assert!(
+                    bt.src[r * 10 + t] == PAD as i64,
+                    "non-PAD at ({r},{t}): {}",
+                    bt.src[r * 10 + t]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vocab_encode_decode() {
+    check("vocab decode(encode(x)) == x for in-vocab tokens", |c| {
+        let lt = c.dim(1, 30);
+        let toks = rand_tokens(c, lt, 10);
+        let refs: Vec<&[String]> = vec![toks.as_slice()];
+        let v = Vocab::build(refs.into_iter(), 1000, 1);
+        let ids = v.encode_wrapped(&toks);
+        prop_assert!(ids[0] == BOS && *ids.last().unwrap() == EOS, "missing wrap");
+        let back = v.decode(&ids);
+        prop_assert!(back == toks, "roundtrip failed");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corpus_generators_deterministic() {
+    check("corpus generation deterministic in seed", |c| {
+        let mut cfg = ExperimentConfig::default().corpus;
+        cfg.seed = c.rng.next_u64();
+        cfg.train = 5;
+        cfg.valid = 2;
+        cfg.test = 2;
+        let a = corpus::summarization::generate(&cfg, 300);
+        let b = corpus::summarization::generate(&cfg, 300);
+        prop_assert!(a.train == b.train, "summarization not deterministic");
+        let a = corpus::qa::generate(&cfg, 300);
+        let b = corpus::qa::generate(&cfg, 300);
+        prop_assert!(a.train == b.train, "qa not deterministic");
+        let a = corpus::translation::generate(&cfg, 300);
+        let b = corpus::translation::generate(&cfg, 300);
+        prop_assert!(a.train == b.train, "translation not deterministic");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qa_spans_valid_after_encode() {
+    check("encoded QA spans index real tokens", |c| {
+        let mut cfg = ExperimentConfig::default().corpus;
+        cfg.seed = c.rng.next_u64();
+        cfg.train = 8;
+        cfg.valid = 0;
+        cfg.test = 0;
+        let splits = corpus::qa::generate(&cfg, 400);
+        for ex in &splits.train {
+            prop_assert!(ex.span.1 <= ex.context.len(), "span escapes context");
+            prop_assert!(!ex.answers.is_empty(), "no answers");
+            prop_assert!(
+                ex.answer_tokens() == ex.answers[0].as_slice(),
+                "span/answer disagree"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_override_roundtrip() {
+    check("config override → typed value", |c| {
+        let steps = c.dim(1, 10_000);
+        let cfg = word2ket::config::load_with_overrides(
+            None,
+            &[
+                format!("train.steps={steps}"),
+                "embedding.kind=word2ketxs".to_string(),
+                "embedding.order=2".to_string(),
+            ],
+        )
+        .map_err(|e| e.to_string())?;
+        prop_assert!(cfg.train.steps == steps, "steps {}", cfg.train.steps);
+        prop_assert!(cfg.embedding.kind == EmbeddingKind::Word2KetXS, "kind");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_translation_source_is_function_of_target() {
+    check("same target ⇒ same source rendering", |c| {
+        let seed = c.rng.next_u64();
+        let lt = c.dim(2, 8);
+        let tgt = rand_tokens(c, lt, 6);
+        let a = corpus::translation::to_source(&tgt, seed);
+        let b = corpus::translation::to_source(&tgt, seed);
+        prop_assert!(a == b, "not deterministic");
+        Ok(())
+    });
+}
