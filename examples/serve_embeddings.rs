@@ -1,22 +1,26 @@
 //! Serving example: run the embedding server on a compressed word2ketXS
-//! table, fire concurrent client load at it, and report latency/throughput —
-//! the serving-side story of the paper (a 380-parameter table standing in
-//! for a 35.6M-parameter one).
+//! table, fire Zipf-distributed concurrent client load at it, and report
+//! latency/throughput — the serving-side story of the paper (a 380-parameter
+//! table standing in for a 35.6M-parameter one), now through the production
+//! path: sharded hot-row cache, worker pool, and binary wire protocol.
 //!
 //! Run: cargo run --release --example serve_embeddings -- [--requests N]
-//!      [--clients C] [--order 4 --rank 1]
+//!      [--clients C] [--order 4 --rank 1] [--shards 4] [--cache-rows 65536]
+//!      [--wire binary|text] [--zipf 1.05]
 
 use word2ket::cli::{App, CommandSpec, OptSpec};
 use word2ket::config::{EmbeddingKind, ExperimentConfig};
 use word2ket::coordinator::server;
-use word2ket::util::{Rng, Summary, Timer};
+use word2ket::serving::BinaryClient;
+use word2ket::util::{Rng, Summary, Timer, ZipfSampler};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 
 fn main() -> word2ket::Result<()> {
     let app = App {
         name: "serve_embeddings",
-        about: "embedding server + load generator",
+        about: "embedding server + Zipf load generator",
         commands: vec![CommandSpec {
             name: "run",
             about: "serve and measure",
@@ -27,6 +31,11 @@ fn main() -> word2ket::Result<()> {
                 OptSpec { name: "rank", help: "word2ketXS rank", takes_value: true, repeated: false, default: Some("1") },
                 OptSpec { name: "vocab", help: "vocabulary size", takes_value: true, repeated: false, default: Some("118655") },
                 OptSpec { name: "dim", help: "embedding dim", takes_value: true, repeated: false, default: Some("300") },
+                OptSpec { name: "shards", help: "cache/pool shards", takes_value: true, repeated: false, default: Some("4") },
+                OptSpec { name: "cache-rows", help: "hot-row cache size (0 disables)", takes_value: true, repeated: false, default: Some("65536") },
+                OptSpec { name: "wire", help: "protocol: binary|text", takes_value: true, repeated: false, default: Some("binary") },
+                OptSpec { name: "zipf", help: "Zipf exponent of the id stream", takes_value: true, repeated: false, default: Some("1.05") },
+                OptSpec { name: "batch", help: "ids per request", takes_value: true, repeated: false, default: Some("8") },
             ],
             positionals: vec![],
         }],
@@ -42,6 +51,13 @@ fn main() -> word2ket::Result<()> {
     };
     let requests = parsed.get_usize("requests")?.unwrap_or(500);
     let clients = parsed.get_usize("clients")?.unwrap_or(4);
+    let batch = parsed.get_usize("batch")?.unwrap_or(8).max(1);
+    let wire_mode = parsed.get("wire").unwrap_or("binary").to_string();
+    if wire_mode != "binary" && wire_mode != "text" {
+        eprintln!("--wire must be 'binary' or 'text', got '{wire_mode}'");
+        std::process::exit(2);
+    }
+    let zipf_s = parsed.get_f64("zipf")?.unwrap_or(1.05);
 
     let mut cfg = ExperimentConfig::default();
     cfg.embedding.kind = EmbeddingKind::Word2KetXS;
@@ -49,72 +65,156 @@ fn main() -> word2ket::Result<()> {
     cfg.embedding.rank = parsed.get_usize("rank")?.unwrap_or(1);
     cfg.model.vocab = parsed.get_usize("vocab")?.unwrap_or(118_655);
     cfg.model.emb_dim = parsed.get_usize("dim")?.unwrap_or(300);
-    cfg.server.addr = "127.0.0.1:17898".into();
-    cfg.server.batch_window_us = 150;
-    cfg.server.max_batch = 256;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.serving.shards = parsed.get_usize("shards")?.unwrap_or(4);
+    cfg.serving.cache_rows = parsed.get_usize("cache-rows")?.unwrap_or(65_536);
+    cfg.serving.batch_window_us = 150;
+    cfg.serving.max_batch = 256;
 
-    let (state, listener, _worker) = server::spawn(&cfg)?;
-    let addr = cfg.server.addr.clone();
+    let (state, listener, addr) = server::spawn(&cfg)?;
     let accept_state = state.clone();
     let accept = std::thread::spawn(move || server::accept_loop(listener, accept_state));
 
-    println!("server on {addr}; {clients} clients × {requests} lookups each");
+    println!(
+        "server on {addr} [{wire_mode} wire, {} shards, {} cache rows]; \
+         {clients} clients × {requests} batched lookups (batch {batch}, Zipf s={zipf_s})",
+        cfg.serving.shards, cfg.serving.cache_rows
+    );
+    let zipf = Arc::new(ZipfSampler::new(cfg.model.vocab, zipf_s));
     let wall = Timer::start();
-    let vocab = cfg.model.vocab;
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             let addr = addr.clone();
-            std::thread::spawn(move || -> Summary {
-                let mut lat = Summary::new();
+            let wire_mode = wire_mode.clone();
+            let zipf = zipf.clone();
+            std::thread::spawn(move || -> (Summary, u64) {
                 let mut rng = Rng::new(100 + c as u64);
-                let mut s = TcpStream::connect(&addr).expect("connect");
-                let mut r = BufReader::new(s.try_clone().unwrap());
-                let mut line = String::new();
-                for _ in 0..requests {
-                    let id = rng.below(vocab);
-                    let t = Timer::start();
-                    s.write_all(format!("LOOKUP {id}\n").as_bytes()).unwrap();
-                    line.clear();
-                    r.read_line(&mut line).unwrap();
-                    lat.add(t.elapsed_us());
-                    assert!(line.starts_with("OK "), "bad response: {line}");
+                if wire_mode == "binary" {
+                    run_binary_client(&addr, requests, batch, &zipf, &mut rng)
+                } else {
+                    run_text_client(&addr, requests, batch, &zipf, &mut rng)
                 }
-                s.write_all(b"QUIT\n").ok();
-                lat
             })
         })
         .collect();
 
+    let mut rejected_total = 0u64;
     for h in handles {
-        let lat = h.join().expect("client thread");
+        let (lat, rejected) = h.join().expect("client thread");
+        rejected_total += rejected;
         println!(
-            "  client done: p50 {:.0}µs p99 {:.0}µs over {} reqs",
+            "  client done: p50 {:.0}µs p99 {:.0}µs over {} reqs ({rejected} rejected)",
             lat.p50(),
             lat.p99(),
             lat.len()
         );
     }
     let secs = wall.elapsed().as_secs_f64();
-    let total = (clients * requests) as f64;
+    // Only successfully served rows count toward throughput; rejected
+    // batches (backpressure/timeout) served nothing.
+    let served_rows = (clients * requests * batch) as f64 - (rejected_total * batch as u64) as f64;
     println!(
-        "\nTOTAL: {} lookups in {:.2}s → {:.0} lookups/s (served {} rows from a \
+        "\nTOTAL: {} rows in {:.2}s → {:.0} rows/s, {} rejected reqs (served {} from a \
          compressed {}×{} table)",
-        total as u64,
+        served_rows as u64,
         secs,
-        total / secs,
+        served_rows / secs,
+        rejected_total,
         state.served(),
-        vocab,
+        cfg.model.vocab,
         cfg.model.emb_dim
     );
-    // Ask the server for its own view.
-    let mut s = TcpStream::connect(&addr).unwrap();
-    s.write_all(b"STATS\n").unwrap();
-    let mut line = String::new();
-    BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
-    println!("server STATS: {}", line.trim());
-    s.write_all(b"QUIT\n").ok();
+
+    // Ask the server for its own view over the binary protocol.
+    let mut stats_client = BinaryClient::connect(&addr).expect("stats connect");
+    let stats = stats_client.stats().expect("stats");
+    println!(
+        "server STATS: p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} \
+         rejected={} (hit rate {:.1}%)",
+        stats.p50_us,
+        stats.p99_us,
+        stats.served,
+        stats.cache_hits,
+        stats.cache_misses,
+        stats.rejected,
+        100.0 * stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64
+    );
+    stats_client.quit().ok();
 
     state.shutdown();
     accept.join().ok();
     Ok(())
+}
+
+/// Drive `requests` batched lookups over the binary protocol. Backpressure
+/// rejections (overloaded/timeout) are counted, not fatal — observing them
+/// is part of the point of the load generator.
+fn run_binary_client(
+    addr: &str,
+    requests: usize,
+    batch: usize,
+    zipf: &ZipfSampler,
+    rng: &mut Rng,
+) -> (Summary, u64) {
+    let mut lat = Summary::new();
+    let mut rejected = 0u64;
+    let mut client = BinaryClient::connect(addr).expect("connect");
+    let mut ids = vec![0u32; batch];
+    for _ in 0..requests {
+        for id in ids.iter_mut() {
+            *id = zipf.sample(rng) as u32;
+        }
+        let t = Timer::start();
+        match client.lookup(&ids) {
+            Ok(rows) => {
+                lat.add(t.elapsed_us());
+                assert_eq!(rows.len(), batch, "short binary response");
+            }
+            Err(word2ket::serving::WireError::Status(_)) => rejected += 1,
+            Err(e) => panic!("binary transport error: {e}"),
+        }
+    }
+    client.quit().ok();
+    (lat, rejected)
+}
+
+/// Drive `requests` batched lookups over the text protocol. A failed batch
+/// comes back as a single `ERR ...` line (overloaded/timeout), counted as a
+/// rejection rather than a panic.
+fn run_text_client(
+    addr: &str,
+    requests: usize,
+    batch: usize,
+    zipf: &ZipfSampler,
+    rng: &mut Rng,
+) -> (Summary, u64) {
+    let mut lat = Summary::new();
+    let mut rejected = 0u64;
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    for _ in 0..requests {
+        let mut req = String::from("LOOKUP");
+        for _ in 0..batch {
+            req.push_str(&format!(" {}", zipf.sample(rng)));
+        }
+        req.push('\n');
+        let t = Timer::start();
+        s.write_all(req.as_bytes()).unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        if line.starts_with("ERR") {
+            rejected += 1;
+            continue;
+        }
+        assert!(line.starts_with("OK "), "bad response: {line}");
+        for _ in 1..batch {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            assert!(line.starts_with("OK "), "bad response: {line}");
+        }
+        lat.add(t.elapsed_us());
+    }
+    s.write_all(b"QUIT\n").ok();
+    (lat, rejected)
 }

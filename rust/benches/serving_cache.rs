@@ -1,0 +1,218 @@
+//! Bench: serving-path hot-row cache — cold reconstruction vs cached vs
+//! sharded-concurrent throughput on a Zipf-distributed id stream, the load
+//! shape production token traffic actually has.
+//!
+//! The paper's word2ketXS table is tiny but must be reconstructed per
+//! lookup; the serving layer's claim is that a sharded LRU-with-admission
+//! cache turns the Zipf head into memcpys. This bench quantifies that and
+//! emits `BENCH_serving.json` (throughput + p50/p99 per config) so the perf
+//! trajectory accumulates across PRs.
+//!
+//! Run: cargo bench --bench serving_cache    (W2K_BENCH_FAST=1 to smoke)
+
+use word2ket::bench::{black_box, header, BenchRunner};
+use word2ket::embedding::{EmbeddingStore, Word2KetXS};
+use word2ket::serving::ShardedCache;
+use word2ket::util::{Json, Rng, Summary, Timer, ZipfSampler};
+use std::sync::Arc;
+
+const VOCAB: usize = 100_000;
+const DIM: usize = 256;
+const BATCH: usize = 512;
+const ZIPF_S: f64 = 1.05;
+const CACHE_ROWS: usize = 65_536;
+
+/// Pregenerated Zipf batches, cycled so successive iterations differ.
+struct Workload {
+    batches: Vec<Vec<usize>>,
+    next: std::cell::Cell<usize>,
+}
+
+impl Workload {
+    fn new(n_batches: usize) -> Workload {
+        let zipf = ZipfSampler::new(VOCAB, ZIPF_S);
+        let mut rng = Rng::new(42);
+        let batches = (0..n_batches)
+            .map(|_| (0..BATCH).map(|_| zipf.sample(&mut rng)).collect())
+            .collect();
+        Workload { batches, next: std::cell::Cell::new(0) }
+    }
+
+    fn next_batch(&self) -> &[usize] {
+        let i = self.next.get();
+        self.next.set((i + 1) % self.batches.len());
+        &self.batches[i]
+    }
+}
+
+fn xs_store(order: usize, rank: usize) -> Word2KetXS {
+    // Same seed everywhere: cached and uncached stores hold identical factors.
+    let mut rng = Rng::new(7);
+    Word2KetXS::random(VOCAB, DIM, order, rank, &mut rng)
+}
+
+struct Row {
+    name: String,
+    rows_per_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    config: Vec<(&'static str, f64)>,
+}
+
+fn record(results: &mut Vec<Row>, name: &str, r: &word2ket::bench::BenchResult, cfg: Vec<(&'static str, f64)>) {
+    results.push(Row {
+        name: name.to_string(),
+        rows_per_s: r.throughput().unwrap_or(0.0),
+        p50_us: r.p50.as_secs_f64() * 1e6,
+        p99_us: r.p99.as_secs_f64() * 1e6,
+        config: cfg,
+    });
+}
+
+/// Multi-threaded hammer: `threads` workers each push `iters` batches
+/// through the store; returns (rows/s, per-batch latency summary).
+fn concurrent_rows_per_s(store: Arc<dyn EmbeddingStore>, threads: usize, iters: usize) -> (f64, Summary) {
+    let wall = Timer::start();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let zipf = ZipfSampler::new(VOCAB, ZIPF_S);
+                let mut rng = Rng::new(1000 + t as u64);
+                let mut lat = Summary::new();
+                let mut ids = vec![0usize; BATCH];
+                for _ in 0..iters {
+                    for id in ids.iter_mut() {
+                        *id = zipf.sample(&mut rng);
+                    }
+                    let t = Timer::start();
+                    black_box(store.lookup_batch(&ids));
+                    lat.add(t.elapsed_us());
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut merged = Summary::new();
+    for h in handles {
+        merged.merge(&h.join().expect("bench thread"));
+    }
+    let rows = (threads * iters * BATCH) as f64;
+    (rows / wall.elapsed().as_secs_f64(), merged)
+}
+
+fn main() {
+    header(
+        "Serving cache: cold vs cached vs sharded (Zipf load)",
+        "XS rows are reconstructed per lookup (§3.2); a sharded hot-row cache \
+         with frequency admission turns the Zipf head into memcpys",
+    );
+    let fast = std::env::var("W2K_BENCH_FAST").is_ok();
+    let runner = if fast {
+        BenchRunner { warmup_iters: 1, min_iters: 3, max_iters: 20, budget: std::time::Duration::from_millis(300) }
+    } else {
+        BenchRunner::default()
+    };
+    let workload = Workload::new(if fast { 16 } else { 256 });
+    let mut results: Vec<Row> = Vec::new();
+
+    // The heavy paper cell (XS 2/10: rank-10 fused reconstruction) is the
+    // headline comparison; XS 4/1 shows the cheap-reconstruction end.
+    for (order, rank) in [(2usize, 10usize), (4, 1)] {
+        let tag = format!("xs {order}/{rank}");
+        let uncached = xs_store(order, rank);
+        let bare = runner.run_throughput(
+            &format!("{tag} uncached reconstruct ({BATCH} Zipf rows)"),
+            BATCH as f64,
+            || black_box(uncached.lookup_batch(workload.next_batch())),
+        );
+        println!("{}", bare.render());
+        record(&mut results, &format!("{tag} uncached"), &bare, vec![
+            ("order", order as f64),
+            ("rank", rank as f64),
+            ("shards", 0.0),
+            ("cache_rows", 0.0),
+        ]);
+
+        for shards in [1usize, 8] {
+            let cached = ShardedCache::new(Box::new(xs_store(order, rank)), shards, CACHE_ROWS);
+            // Warm the cache with one pass over the workload's head.
+            for _ in 0..workload.batches.len().min(64) {
+                black_box(cached.lookup_batch(workload.next_batch()));
+            }
+            let warm = runner.run_throughput(
+                &format!("{tag} cached {shards}-shard ({BATCH} Zipf rows)"),
+                BATCH as f64,
+                || black_box(cached.lookup_batch(workload.next_batch())),
+            );
+            println!("{}", warm.render());
+            let stats = cached.stats();
+            record(&mut results, &format!("{tag} cached {shards}sh"), &warm, vec![
+                ("order", order as f64),
+                ("rank", rank as f64),
+                ("shards", shards as f64),
+                ("cache_rows", CACHE_ROWS as f64),
+                ("hit_rate", stats.hit_rate()),
+            ]);
+            if shards == 1 {
+                let speedup = bare.mean.as_secs_f64() / warm.mean.as_secs_f64();
+                println!(
+                    "  -> cached/uncached speedup {speedup:.1}× (hit rate {:.1}%)",
+                    100.0 * stats.hit_rate()
+                );
+            }
+        }
+        println!();
+    }
+
+    // Sharding under concurrency: 8 threads hammering one cache; 1 shard
+    // serializes on a single mutex, 8 shards mostly don't collide.
+    println!("concurrent load (8 threads × {BATCH}-row Zipf batches):");
+    let iters = if fast { 8 } else { 64 };
+    for shards in [1usize, 8] {
+        let cached: Arc<dyn EmbeddingStore> =
+            Arc::new(ShardedCache::new(Box::new(xs_store(2, 10)), shards, CACHE_ROWS));
+        // Warm.
+        for _ in 0..8 {
+            black_box(cached.lookup_batch(workload.next_batch()));
+        }
+        let (rows_per_s, lat) = concurrent_rows_per_s(cached, 8, iters);
+        println!(
+            "  {shards}-shard: {rows_per_s:>12.0} rows/s  p50 {:.0}µs p99 {:.0}µs",
+            lat.p50(),
+            lat.p99()
+        );
+        results.push(Row {
+            name: format!("xs 2/10 concurrent {shards}sh"),
+            rows_per_s,
+            p50_us: lat.p50(),
+            p99_us: lat.p99(),
+            config: vec![
+                ("order", 2.0),
+                ("rank", 10.0),
+                ("shards", shards as f64),
+                ("cache_rows", CACHE_ROWS as f64),
+                ("threads", 8.0),
+            ],
+        });
+    }
+
+    // Persist the trajectory point.
+    let json = Json::arr(results.iter().map(|r| {
+        let mut pairs = vec![
+            ("name", Json::str(r.name.clone())),
+            ("rows_per_s", Json::num(r.rows_per_s)),
+            ("p50_us", Json::num(r.p50_us)),
+            ("p99_us", Json::num(r.p99_us)),
+        ];
+        for &(k, v) in &r.config {
+            pairs.push((k, Json::num(v)));
+        }
+        Json::obj(pairs)
+    }));
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, json.pretty()) {
+        Ok(()) => println!("\nwrote {path} ({} configs)", results.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -11,7 +11,7 @@ mod toml;
 
 pub use schema::{
     CorpusConfig, EmbeddingConfig, EmbeddingKind, ExperimentConfig, ModelConfig, ServerConfig,
-    TaskKind, TrainConfig,
+    ServingConfig, TaskKind, TrainConfig,
 };
 pub use toml::{TomlDoc, TomlValue};
 

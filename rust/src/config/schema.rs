@@ -177,19 +177,46 @@ impl Default for TrainConfig {
     }
 }
 
-/// Embedding-server settings.
+/// Embedding-server listener settings. Batching/caching knobs live in
+/// [`ServingConfig`] (`[serving]`); this section only picks the socket.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
     pub addr: String,
-    /// Micro-batching window in microseconds.
-    pub batch_window_us: u64,
-    pub max_batch: usize,
-    pub threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7878".into(), batch_window_us: 200, max_batch: 64, threads: 2 }
+        ServerConfig { addr: "127.0.0.1:7878".into() }
+    }
+}
+
+/// Serving-path settings: the sharded hot-row cache and worker pool that sit
+/// between the TCP listener and the embedding store (see `serving/`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// Cache/queue shard count; also the worker-pool size (one worker drains
+    /// each shard queue).
+    pub shards: usize,
+    /// Total cached rows across all shards. 0 disables the cache.
+    pub cache_rows: usize,
+    /// Micro-batching window per worker, in microseconds.
+    pub batch_window_us: u64,
+    /// Bounded per-shard queue depth; submits beyond this are rejected
+    /// (backpressure) instead of growing the queue without limit.
+    pub queue_depth: usize,
+    /// Max jobs drained per batch by one worker.
+    pub max_batch: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            shards: 4,
+            cache_rows: 4096,
+            batch_window_us: 200,
+            queue_depth: 1024,
+            max_batch: 64,
+        }
     }
 }
 
@@ -203,6 +230,7 @@ pub struct ExperimentConfig {
     pub corpus: CorpusConfig,
     pub train: TrainConfig,
     pub server: ServerConfig,
+    pub serving: ServingConfig,
     pub artifacts_dir: String,
 }
 
@@ -216,6 +244,7 @@ impl Default for ExperimentConfig {
             corpus: CorpusConfig::default(),
             train: TrainConfig::default(),
             server: ServerConfig::default(),
+            serving: ServingConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -267,12 +296,15 @@ impl ExperimentConfig {
                 seed: doc.usize_or("train.seed", d.train.seed as usize) as u64,
                 checkpoint_dir: doc.str_or("train.checkpoint_dir", &d.train.checkpoint_dir),
             },
-            server: ServerConfig {
-                addr: doc.str_or("server.addr", &d.server.addr),
-                batch_window_us: doc.usize_or("server.batch_window_us", d.server.batch_window_us as usize)
+            server: ServerConfig { addr: doc.str_or("server.addr", &d.server.addr) },
+            serving: ServingConfig {
+                shards: doc.usize_or("serving.shards", d.serving.shards),
+                cache_rows: doc.usize_or("serving.cache_rows", d.serving.cache_rows),
+                batch_window_us: doc
+                    .usize_or("serving.batch_window_us", d.serving.batch_window_us as usize)
                     as u64,
-                max_batch: doc.usize_or("server.max_batch", d.server.max_batch),
-                threads: doc.usize_or("server.threads", d.server.threads),
+                queue_depth: doc.usize_or("serving.queue_depth", d.serving.queue_depth),
+                max_batch: doc.usize_or("serving.max_batch", d.serving.max_batch),
             },
             artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir),
         };
@@ -314,6 +346,13 @@ impl ExperimentConfig {
         }
         if self.train.batch_size == 0 {
             return Err(Error::Config("batch_size must be >= 1".into()));
+        }
+        let s = &self.serving;
+        if s.shards == 0 {
+            return Err(Error::Config("serving.shards must be >= 1".into()));
+        }
+        if s.queue_depth == 0 || s.max_batch == 0 {
+            return Err(Error::Config("serving.queue_depth/max_batch must be >= 1".into()));
         }
         Ok(())
     }
@@ -373,6 +412,31 @@ lr = 0.001
         assert_eq!(cfg.model.vocab, 512);
         assert_eq!(cfg.train.lr, 0.001);
         assert_eq!(cfg.artifact_prefix(), "sum_xs_o2r10");
+    }
+
+    #[test]
+    fn serving_section_parses_and_validates() {
+        let src = r#"
+[serving]
+shards = 8
+cache_rows = 65536
+batch_window_us = 50
+queue_depth = 256
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.serving.shards, 8);
+        assert_eq!(cfg.serving.cache_rows, 65536);
+        assert_eq!(cfg.serving.batch_window_us, 50);
+        assert_eq!(cfg.serving.queue_depth, 256);
+        assert_eq!(cfg.serving.max_batch, ServingConfig::default().max_batch);
+
+        let mut bad = ExperimentConfig::default();
+        bad.serving.shards = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.serving.queue_depth = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

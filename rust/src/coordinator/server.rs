@@ -1,44 +1,38 @@
-//! Embedding lookup server: serves compressed-embedding rows over TCP with
-//! cross-connection micro-batching — the serving-side argument of the paper
-//! (a word2ketXS table small enough to live in cache, reconstructed lazily
-//! per request).
+//! Embedding lookup server: serves compressed-embedding rows over TCP — the
+//! serving-side argument of the paper (a word2ketXS table small enough to
+//! live in cache, reconstructed lazily per request).
 //!
-//! Protocol (line-oriented text):
-//!   `LOOKUP <id> [<id> ...]\n` → `OK <dim> <f32> <f32> ...\n` (per id, one line)
-//!   `DOT <id a> <id b>\n`      → `OK <f32>\n` (factored inner product path)
-//!   `STATS\n`                  → `OK p50_us=<..> p99_us=<..> served=<..>\n`
+//! This module is the *listener and text protocol* only; the production
+//! request path (sharded hot-row cache, worker pool, binary framing) lives
+//! in [`crate::serving`] and is shared by both protocols. A connection whose
+//! first byte is `serving::wire::MAGIC[0]` speaks the binary protocol; any
+//! other first byte gets the line-oriented text protocol:
+//!
+//!   `LOOKUP <id> [<id> ...]\n` → `OK <dim> <f32> <f32> ...\n` (per id)
+//!   `DOT <id a> <id b>\n`      → `OK <f32>\n` (cache-served inner product)
+//!   `STATS\n`                  → `OK p50_us=.. p99_us=.. served=..
+//!                                 cache_hits=.. cache_misses=.. rejected=..\n`
 //!   `QUIT\n`                   → closes the connection.
 //!
-//! Requests from all connections funnel into one worker that drains the queue
-//! every `batch_window_us` and reconstructs rows in one batch — the same
-//! pattern a vLLM-style router uses for dynamic batching.
+//! Malformed input (bad ids, out-of-range ids, empty LOOKUP, unknown
+//! commands) always yields an `ERR ...` line, never a panic or a dropped
+//! connection; `STATS` before any traffic reports zeros.
 
 use crate::config::ExperimentConfig;
-use crate::embedding::{self, EmbeddingStore};
+use crate::embedding;
 use crate::error::{Error, Result};
-use crate::util::{Rng, Summary};
-use std::io::{BufRead, BufReader, Write};
+use crate::serving::{wire, LookupError, ServingState};
+use crate::util::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-/// One queued lookup request.
-struct Job {
-    ids: Vec<usize>,
-    enqueued: Instant,
-    reply: mpsc::Sender<Vec<Vec<f32>>>,
-}
-
-/// Shared server state.
+/// Shared server state: the serving layer plus listener lifecycle flags.
 pub struct ServerState {
-    store: Box<dyn EmbeddingStore>,
-    queue: Mutex<Vec<Job>>,
-    latencies_us: Mutex<Summary>,
-    served: AtomicU64,
+    serving: ServingState,
     stop: AtomicBool,
-    batch_window: Duration,
-    max_batch: usize,
 }
 
 impl ServerState {
@@ -50,138 +44,102 @@ impl ServerState {
             cfg.model.emb_dim,
             &mut rng,
         );
-        crate::info!("serving {}", store.describe());
-        ServerState {
-            store,
-            queue: Mutex::new(Vec::new()),
-            latencies_us: Mutex::new(Summary::new()),
-            served: AtomicU64::new(0),
-            stop: AtomicBool::new(false),
-            batch_window: Duration::from_micros(cfg.server.batch_window_us),
-            max_batch: cfg.server.max_batch,
-        }
+        let serving = ServingState::new(store, &cfg.serving);
+        crate::info!("serving {}", serving.store().describe());
+        ServerState { serving, stop: AtomicBool::new(false) }
+    }
+
+    /// The serving layer (cache + pool) behind both protocols.
+    pub fn serving(&self) -> &ServingState {
+        &self.serving
     }
 
     pub fn served(&self) -> u64 {
-        self.served.load(Ordering::Relaxed)
+        self.serving.served()
     }
 
     pub fn shutdown(&self) {
-        self.stop.atomic_store();
+        self.stop.store(true, Ordering::SeqCst);
+        self.serving.shutdown();
     }
 
     fn stats_line(&self) -> String {
-        let lat = self.latencies_us.lock().unwrap();
+        let s = self.serving.stats();
         format!(
-            "OK p50_us={:.0} p99_us={:.0} served={}\n",
-            lat.p50(),
-            lat.p99(),
-            self.served()
+            "OK p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} rejected={}\n",
+            s.p50_us, s.p99_us, s.served, s.cache.hits, s.cache.misses, s.rejected
         )
     }
 }
 
-trait AtomicStoreExt {
-    fn atomic_store(&self);
+fn err_line(e: LookupError) -> String {
+    format!("ERR {e}\n")
 }
 
-impl AtomicStoreExt for AtomicBool {
-    fn atomic_store(&self) {
-        self.store(true, Ordering::SeqCst);
-    }
-}
+/// Request-line byte cap: without it, `read_line` would buffer an unbounded
+/// newline-free stream into memory before any id-count check could run.
+const MAX_LINE_BYTES: u64 = 1 << 20;
 
-/// The batching worker: drain queue → batched lookup → reply.
-fn batch_worker(state: Arc<ServerState>) {
-    while !state.stop.load(Ordering::SeqCst) {
-        std::thread::sleep(state.batch_window);
-        let jobs: Vec<Job> = {
-            let mut q = state.queue.lock().unwrap();
-            let take = q.len().min(state.max_batch);
-            q.drain(..take).collect()
-        };
-        if jobs.is_empty() {
-            continue;
-        }
-        // One flat batch over all ids of all jobs.
-        let mut all_ids = Vec::new();
-        for j in &jobs {
-            all_ids.extend_from_slice(&j.ids);
-        }
-        let tensor = state.store.lookup_batch(&all_ids);
-        let dim = state.store.dim();
-        let mut row = 0usize;
-        let now = Instant::now();
-        for j in jobs {
-            let mut rows = Vec::with_capacity(j.ids.len());
-            for _ in 0..j.ids.len() {
-                rows.push(tensor.data()[row * dim..(row + 1) * dim].to_vec());
-                row += 1;
-            }
-            let us = now.duration_since(j.enqueued).as_secs_f64() * 1e6;
-            state.latencies_us.lock().unwrap().add(us);
-            state.served.fetch_add(j.ids.len() as u64, Ordering::Relaxed);
-            let _ = j.reply.send(rows);
-        }
-    }
-}
-
-fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
-    let peer = stream.peer_addr().ok();
-    crate::debug!("connection from {peer:?}");
-    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
-    let mut writer = stream;
+/// One text-protocol session over an already-peeked reader.
+fn handle_text(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    state: &ServerState,
+) {
     let mut line = String::new();
     loop {
         line.clear();
-        match reader.read_line(&mut line) {
+        match (&mut *reader).take(MAX_LINE_BYTES).read_line(&mut line) {
             Ok(0) | Err(_) => break,
             Ok(_) => {}
+        }
+        if line.len() as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
+            // Hit the cap mid-line: the rest of the stream is unparseable.
+            let _ = writer.write_all(b"ERR line too long\n");
+            break;
         }
         let parts: Vec<&str> = line.split_whitespace().collect();
         let response = match parts.as_slice() {
             [] => continue,
             ["QUIT"] => break,
             ["STATS"] => state.stats_line(),
-            ["LOOKUP", rest @ ..] if !rest.is_empty() => {
-                match rest.iter().map(|s| s.parse::<usize>()).collect::<std::result::Result<Vec<_>, _>>() {
-                    Ok(ids) if ids.iter().all(|&i| i < state.store.vocab_size()) => {
-                        let (tx, rx) = mpsc::channel();
-                        state.queue.lock().unwrap().push(Job {
-                            ids,
-                            enqueued: Instant::now(),
-                            reply: tx,
-                        });
-                        match rx.recv_timeout(Duration::from_secs(5)) {
-                            Ok(rows) => {
-                                let mut s = String::new();
-                                for r in rows {
-                                    s.push_str(&format!("OK {}", r.len()));
-                                    for x in r {
-                                        s.push_str(&format!(" {x}"));
-                                    }
-                                    s.push('\n');
+            ["LOOKUP"] => err_line(LookupError::Empty),
+            // Same allocation cap as the binary protocol's MAX_IDS: one text
+            // line must not be able to force a multi-GB reply buffer.
+            ["LOOKUP", rest @ ..] if rest.len() > wire::MAX_IDS as usize => {
+                "ERR too many ids\n".to_string()
+            }
+            ["LOOKUP", rest @ ..] => {
+                match rest
+                    .iter()
+                    .map(|s| s.parse::<usize>())
+                    .collect::<std::result::Result<Vec<_>, _>>()
+                {
+                    Ok(ids) => match state.serving.lookup_rows(ids) {
+                        Ok(rows) => {
+                            let mut s = String::new();
+                            for r in rows {
+                                s.push_str(&format!("OK {}", r.len()));
+                                for x in r {
+                                    s.push_str(&format!(" {x}"));
                                 }
-                                s
+                                s.push('\n');
                             }
-                            Err(_) => "ERR timeout\n".to_string(),
+                            s
                         }
-                    }
-                    Ok(_) => "ERR id out of range\n".to_string(),
+                        Err(e) => err_line(e),
+                    },
                     Err(_) => "ERR bad id\n".to_string(),
                 }
             }
             ["DOT", a, b] => match (a.parse::<usize>(), b.parse::<usize>()) {
-                (Ok(a), Ok(b))
-                    if a < state.store.vocab_size() && b < state.store.vocab_size() =>
-                {
-                    let va = state.store.lookup(a);
-                    let vb = state.store.lookup(b);
-                    let d = crate::tensor::dot(&va, &vb);
-                    format!("OK {d}\n")
-                }
-                _ => "ERR bad ids\n".to_string(),
+                (Ok(a), Ok(b)) => match state.serving.dot(a, b) {
+                    Ok(d) => format!("OK {d}\n"),
+                    Err(e) => err_line(e),
+                },
+                _ => "ERR bad id\n".to_string(),
             },
+            ["DOT", ..] => "ERR DOT takes exactly two ids\n".to_string(),
             _ => "ERR unknown command\n".to_string(),
         };
         if writer.write_all(response.as_bytes()).is_err() {
@@ -190,10 +148,35 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
     }
 }
 
+/// Per-connection dispatcher: sniff the first byte to pick a protocol.
+fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
+    let peer = stream.peer_addr().ok();
+    crate::debug!("connection from {peer:?}");
+    let Ok(clone) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(clone);
+    let mut writer = stream;
+    let first = match reader.fill_buf() {
+        Ok(buf) if !buf.is_empty() => buf[0],
+        _ => return,
+    };
+    if first == wire::MAGIC[0] {
+        let mut magic = [0u8; 4];
+        if reader.read_exact(&mut magic).is_err() || magic != wire::MAGIC {
+            let _ = writer.write_all(b"ERR bad magic\n");
+            return;
+        }
+        if let Err(e) = wire::handle_binary(&mut reader, &mut writer, &state.serving) {
+            crate::debug!("binary conn {peer:?} ended: {e}");
+        }
+    } else {
+        handle_text(&mut reader, &mut writer, &state);
+    }
+}
+
 /// Run the server until the process is killed (the `w2k serve` subcommand).
 pub fn serve_blocking(cfg: &ExperimentConfig) -> Result<()> {
-    let (state, listener, _worker) = spawn(cfg)?;
-    crate::info!("listening on {}", cfg.server.addr);
+    let (state, listener, addr) = spawn(cfg)?;
+    crate::info!("listening on {addr} (text + binary protocols)");
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
@@ -206,17 +189,18 @@ pub fn serve_blocking(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
-/// Start listener + worker without blocking (tests, serve_embeddings example).
-/// Returns (state, listener, worker handle); the caller accepts connections.
-pub fn spawn(
-    cfg: &ExperimentConfig,
-) -> Result<(Arc<ServerState>, TcpListener, std::thread::JoinHandle<()>)> {
+/// Start state + listener without blocking (tests, serve_embeddings
+/// example). Returns (state, listener, bound address) — the address matters
+/// when `cfg.server.addr` uses port 0; the caller runs [`accept_loop`].
+pub fn spawn(cfg: &ExperimentConfig) -> Result<(Arc<ServerState>, TcpListener, String)> {
     let state = Arc::new(ServerState::new(cfg));
     let listener = TcpListener::bind(&cfg.server.addr)
         .map_err(|e| Error::Server(format!("bind {}: {e}", cfg.server.addr)))?;
-    let worker_state = state.clone();
-    let worker = std::thread::spawn(move || batch_worker(worker_state));
-    Ok((state, listener, worker))
+    let addr = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| cfg.server.addr.clone());
+    Ok((state, listener, addr))
 }
 
 /// Accept-loop helper for examples/tests: serve until `state.stop` flips.
@@ -240,27 +224,38 @@ pub fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
 mod tests {
     use super::*;
     use crate::config::{EmbeddingKind, ExperimentConfig};
+    use crate::serving::BinaryClient;
     use std::io::{BufRead, BufReader, Write};
 
-    fn test_cfg(port: u16) -> ExperimentConfig {
+    fn test_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
         cfg.embedding.kind = EmbeddingKind::Word2KetXS;
         cfg.embedding.order = 2;
         cfg.embedding.rank = 2;
         cfg.model.vocab = 100;
         cfg.model.emb_dim = 16;
-        cfg.server.addr = format!("127.0.0.1:{port}");
-        cfg.server.batch_window_us = 100;
+        cfg.server.addr = "127.0.0.1:0".into(); // OS-assigned port per test
+        cfg.serving.batch_window_us = 100;
+        cfg.serving.shards = 2;
+        cfg.serving.cache_rows = 64;
         cfg
     }
 
-    fn request(addr: &str, line: &str) -> Vec<String> {
+    /// Start a server; returns (state, bound addr, accept-thread handle).
+    fn start() -> (Arc<ServerState>, String, std::thread::JoinHandle<()>) {
+        let cfg = test_cfg();
+        let (state, listener, addr) = spawn(&cfg).unwrap();
+        let st = state.clone();
+        let acc = std::thread::spawn(move || accept_loop(listener, st));
+        (state, addr, acc)
+    }
+
+    fn request(addr: &str, line: &str, expect_lines: usize) -> Vec<String> {
         let mut s = TcpStream::connect(addr).unwrap();
         s.write_all(line.as_bytes()).unwrap();
         let mut out = Vec::new();
         let mut r = BufReader::new(s.try_clone().unwrap());
-        let expect = line.split_whitespace().count().saturating_sub(1).max(1);
-        for _ in 0..if line.starts_with("LOOKUP") { expect } else { 1 } {
+        for _ in 0..expect_lines {
             let mut l = String::new();
             r.read_line(&mut l).unwrap();
             out.push(l.trim().to_string());
@@ -270,15 +265,11 @@ mod tests {
     }
 
     #[test]
-    fn lookup_dot_stats_roundtrip() {
-        let cfg = test_cfg(17871);
-        let (state, listener, _worker) = spawn(&cfg).unwrap();
-        let st = state.clone();
-        let acc = std::thread::spawn(move || accept_loop(listener, st));
+    fn text_lookup_dot_stats_roundtrip() {
+        let (state, addr, acc) = start();
+        let addr = addr.as_str();
 
-        let addr = &cfg.server.addr;
-        // single lookup
-        let resp = request(addr, "LOOKUP 42\n");
+        let resp = request(addr, "LOOKUP 42\n", 1);
         assert!(resp[0].starts_with("OK 16 "), "{resp:?}");
         let vals: Vec<f32> = resp[0]
             .split_whitespace()
@@ -287,23 +278,123 @@ mod tests {
             .collect();
         assert_eq!(vals.len(), 16);
 
-        // multi lookup: one OK line per id
-        let resp = request(addr, "LOOKUP 1 2 3\n");
+        // multi lookup: one OK line per id; repeated id rows identical
+        let resp = request(addr, "LOOKUP 1 2 1\n", 3);
         assert_eq!(resp.len(), 3);
+        assert_eq!(resp[0], resp[2]);
 
-        // dot equals dot of lookups
-        let resp = request(addr, "DOT 1 2\n");
+        let resp = request(addr, "DOT 1 2\n", 1);
         assert!(resp[0].starts_with("OK "));
 
-        // errors
-        let resp = request(addr, "LOOKUP 5000\n");
-        assert!(resp[0].starts_with("ERR"));
-        let resp = request(addr, "NONSENSE\n");
-        assert!(resp[0].starts_with("ERR"));
-
-        // stats
-        let resp = request(addr, "STATS\n");
+        let resp = request(addr, "STATS\n", 1);
         assert!(resp[0].contains("served="), "{resp:?}");
+        assert!(resp[0].contains("cache_hits="), "{resp:?}");
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    #[test]
+    fn text_protocol_rejects_malformed_input() {
+        let (state, addr, acc) = start();
+        let addr = addr.as_str();
+
+        // Every malformed request must yield an ERR line, never a panic.
+        for (req, frag) in [
+            ("LOOKUP\n", "empty"),
+            ("LOOKUP abc\n", "bad id"),
+            ("LOOKUP 1 two 3\n", "bad id"),
+            ("LOOKUP 5000\n", "range"),
+            ("LOOKUP 99 100\n", "range"),
+            ("DOT 1\n", "two ids"),
+            ("DOT 1 2 3\n", "two ids"),
+            ("DOT a b\n", "bad id"),
+            ("DOT 0 5000\n", "range"),
+            ("NONSENSE\n", "unknown"),
+        ] {
+            let resp = request(addr, req, 1);
+            assert!(resp[0].starts_with("ERR"), "{req:?} -> {resp:?}");
+            assert!(resp[0].contains(frag), "{req:?} -> {resp:?}");
+        }
+        // The server survives all of the above and still serves.
+        let resp = request(addr, "LOOKUP 0\n", 1);
+        assert!(resp[0].starts_with("OK"), "{resp:?}");
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    #[test]
+    fn stats_before_traffic_is_zeros() {
+        let (state, addr, acc) = start();
+        let resp = request(&addr, "STATS\n", 1);
+        assert_eq!(
+            resp[0],
+            "OK p50_us=0 p99_us=0 served=0 cache_hits=0 cache_misses=0 rejected=0"
+        );
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    #[test]
+    fn binary_and_text_agree_on_one_listener() {
+        let (state, addr, acc) = start();
+        let addr = addr.as_str();
+
+        // Binary client and text client hit the same live server; rows must
+        // be identical to the last bit (text f32 formatting round-trips).
+        let mut bin = BinaryClient::connect(addr).unwrap();
+        assert_eq!(bin.dim, 16);
+        let ids = [0u32, 7, 42, 7, 99];
+        let bin_rows = bin.lookup(&ids).unwrap();
+        assert_eq!(bin_rows.len(), ids.len());
+
+        for (row, &id) in bin_rows.iter().zip(&ids) {
+            let text = request(addr, &format!("LOOKUP {id}\n"), 1);
+            let text_row: Vec<f32> = text[0]
+                .split_whitespace()
+                .skip(2)
+                .map(|x| x.parse().unwrap())
+                .collect();
+            assert_eq!(row, &text_row, "id {id}: binary vs text rows differ");
+        }
+
+        let bd = bin.dot(1, 2).unwrap();
+        let td: f32 = request(addr, "DOT 1 2\n", 1)[0]
+            .split_whitespace()
+            .nth(1)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(bd, td);
+
+        let stats = bin.stats().unwrap();
+        assert!(stats.served > 0);
+        bin.quit().unwrap();
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    #[test]
+    fn binary_rejects_bad_requests_and_keeps_session() {
+        let (state, addr, acc) = start();
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+
+        // Out-of-range id.
+        match bin.lookup(&[5000]) {
+            Err(crate::serving::WireError::Status(s)) => assert_eq!(s, wire::STATUS_RANGE),
+            other => panic!("expected range error, got {other:?}"),
+        }
+        // Empty lookup is a bad frame.
+        match bin.lookup(&[]) {
+            Err(crate::serving::WireError::Status(s)) => assert_eq!(s, wire::STATUS_BAD_FRAME),
+            other => panic!("expected bad frame, got {other:?}"),
+        }
+        // The session is still usable afterwards.
+        let rows = bin.lookup(&[1, 2]).unwrap();
+        assert_eq!(rows.len(), 2);
+        bin.quit().unwrap();
 
         state.shutdown();
         acc.join().unwrap();

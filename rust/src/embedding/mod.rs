@@ -27,6 +27,35 @@ pub use word2ketxs::Word2KetXS;
 use crate::config::{EmbeddingConfig, EmbeddingKind};
 use crate::tensor::Tensor;
 use crate::util::Rng;
+use std::collections::{hash_map::Entry, HashMap};
+
+/// Reconstruct rows for `ids` into a flat `(ids.len() × dim)` buffer,
+/// calling `fill` exactly once per distinct id and copying its row to every
+/// later position that repeats it. Production token streams are Zipf-skewed,
+/// so batches repeat head ids constantly and duplicate reconstruction is
+/// pure waste. Shared by the trait default `lookup_batch` and store-specific
+/// overrides.
+pub(crate) fn dedup_scatter(
+    ids: &[usize],
+    dim: usize,
+    mut fill: impl FnMut(usize, &mut [f32]),
+) -> Vec<f32> {
+    let mut data = vec![0.0f32; ids.len() * dim];
+    let mut first_row: HashMap<usize, usize> = HashMap::with_capacity(ids.len());
+    for (row, &id) in ids.iter().enumerate() {
+        match first_row.entry(id) {
+            Entry::Occupied(e) => {
+                let src = *e.get();
+                data.copy_within(src * dim..(src + 1) * dim, row * dim);
+            }
+            Entry::Vacant(e) => {
+                e.insert(row);
+                fill(id, &mut data[row * dim..(row + 1) * dim]);
+            }
+        }
+    }
+    data
+}
 
 /// A `d × p` word-embedding matrix accessed row-wise.
 pub trait EmbeddingStore: Send + Sync {
@@ -44,12 +73,12 @@ pub trait EmbeddingStore: Send + Sync {
 
     /// Reconstruct a batch of rows as a `(b, p)` tensor. Implementations may
     /// override for batch-level optimizations.
+    ///
+    /// The default impl reconstructs each distinct id once and scatters the
+    /// row to every position that requested it (see [`dedup_scatter`]).
     fn lookup_batch(&self, ids: &[usize]) -> Tensor {
         let p = self.dim();
-        let mut data = Vec::with_capacity(ids.len() * p);
-        for &id in ids {
-            data.extend(self.lookup(id));
-        }
+        let data = dedup_scatter(ids, p, |id, out| out.copy_from_slice(&self.lookup(id)));
         Tensor::new(vec![ids.len(), p], data).expect("lookup_batch shape")
     }
 
@@ -119,6 +148,23 @@ mod tests {
             assert_eq!(store.dim(), 16);
             assert_eq!(store.lookup(7).len(), 16);
             assert!(store.num_params() > 0, "{}", store.describe());
+        }
+    }
+
+    #[test]
+    fn batch_dedup_scatters_repeats() {
+        // Zipf-shaped batch with heavy repetition: every position must still
+        // receive exactly its id's row, bit-identical to a single lookup.
+        let mut rng = Rng::new(2);
+        for kind in [EmbeddingKind::Word2KetXS, EmbeddingKind::Quantized] {
+            let cfg = EmbeddingConfig { kind, order: 2, rank: 2, ..Default::default() };
+            let store = build(&cfg, 40, 16, &mut rng);
+            let ids = [7usize, 0, 7, 7, 3, 0, 39, 7];
+            let batch = store.lookup_batch(&ids);
+            assert_eq!(batch.shape(), &[8, 16]);
+            for (row, &id) in ids.iter().enumerate() {
+                assert_eq!(batch.row(row), store.lookup(id).as_slice(), "row {row} id {id}");
+            }
         }
     }
 

@@ -159,13 +159,14 @@ impl EmbeddingStore for Word2KetXS {
     }
 
     fn lookup_batch(&self, ids: &[usize]) -> crate::tensor::Tensor {
-        let mut data = vec![0.0f32; ids.len() * self.dim];
+        // Scratch-reusing override of the trait default: same dedup-and-
+        // scatter, but distinct ids reconstruct through lookup_into without
+        // per-row allocations.
         let mut digits = vec![0usize; self.order];
         let mut scratch = KronScratch::new();
-        for (row, &id) in ids.iter().enumerate() {
-            let out = &mut data[row * self.dim..(row + 1) * self.dim];
-            self.lookup_into(id, out, &mut digits, &mut scratch);
-        }
+        let data = super::dedup_scatter(ids, self.dim, |id, out| {
+            self.lookup_into(id, out, &mut digits, &mut scratch)
+        });
         crate::tensor::Tensor::new(vec![ids.len(), self.dim], data).unwrap()
     }
 

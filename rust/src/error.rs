@@ -1,43 +1,65 @@
 //! Unified error type for the library.
+//!
+//! Hand-rolled Display/Error impls: `thiserror` is not available in this
+//! offline build environment.
 
-use thiserror::Error;
+use std::fmt;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape error: {0}")]
     Shape(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("cli error: {0}")]
     Cli(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("checkpoint error: {0}")]
     Checkpoint(String),
-
-    #[error("server error: {0}")]
     Server(String),
-
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
+    Json(crate::util::json::JsonError),
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Cli(m) => write!(f, "cli error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+            Error::Server(m) => write!(f, "server error: {m}"),
+            Error::Json(e) => write!(f, "json error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Json(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Json(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -43,6 +43,7 @@ pub mod error;
 pub mod kron;
 pub mod metrics;
 pub mod runtime;
+pub mod serving;
 pub mod tensor;
 pub mod testing;
 pub mod text;

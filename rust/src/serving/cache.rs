@@ -1,0 +1,422 @@
+//! Sharded hot-row cache over any [`EmbeddingStore`].
+//!
+//! The paper's serving argument (word2ketXS fits in cache, rows are
+//! *reconstructed* on demand) makes reconstruction compute the hot path at
+//! production traffic. Token-id request streams are Zipf-skewed, so a small
+//! cache of reconstructed rows absorbs most of that compute. Design:
+//!
+//! * **Sharding**: `shards` independent locks keyed by `id % shards`, so
+//!   concurrent workers don't serialize on one mutex. Reconstruction on miss
+//!   happens *outside* the shard lock; the lock only covers map/list updates.
+//! * **LRU + frequency-based admission** (TinyLFU-style): eviction order is
+//!   LRU, but a candidate row only displaces the LRU victim when its
+//!   estimated access frequency (4-bit count-min sketch, periodically halved)
+//!   is at least the victim's. One-hit-wonder tail ids therefore cannot flush
+//!   the Zipf head out of the cache.
+//! * **Transparency**: `ShardedCache` itself implements [`EmbeddingStore`]
+//!   and returns bit-identical rows (cached rows are byte copies of what the
+//!   wrapped store reconstructed), so the server, benches and tests compose
+//!   it like any other store.
+
+use crate::embedding::EmbeddingStore;
+use crate::util::ceil_div;
+use crate::util::rng::splitmix64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const NIL: usize = usize::MAX;
+
+/// 4-bit count-min sketch with periodic halving ("aging"), sized to the
+/// shard capacity. Estimates access frequency without storing per-id state.
+#[derive(Debug)]
+struct FreqSketch {
+    counters: Vec<u8>,
+    mask: usize,
+    ops: u32,
+    halve_at: u32,
+}
+
+impl FreqSketch {
+    fn new(cap: usize) -> FreqSketch {
+        let size = (cap.max(8) * 8).next_power_of_two();
+        FreqSketch {
+            counters: vec![0; size],
+            mask: size - 1,
+            ops: 0,
+            halve_at: (cap.max(8) * 8) as u32,
+        }
+    }
+
+    #[inline]
+    fn slots(&self, id: usize) -> (usize, usize) {
+        let mut s = id as u64;
+        let h1 = splitmix64(&mut s);
+        let h2 = splitmix64(&mut s);
+        (h1 as usize & self.mask, h2 as usize & self.mask)
+    }
+
+    fn touch(&mut self, id: usize) {
+        let (a, b) = self.slots(id);
+        if self.counters[a] < 15 {
+            self.counters[a] += 1;
+        }
+        if self.counters[b] < 15 {
+            self.counters[b] += 1;
+        }
+        self.ops += 1;
+        if self.ops >= self.halve_at {
+            self.ops = 0;
+            for c in self.counters.iter_mut() {
+                *c >>= 1;
+            }
+        }
+    }
+
+    fn estimate(&self, id: usize) -> u8 {
+        let (a, b) = self.slots(id);
+        self.counters[a].min(self.counters[b])
+    }
+}
+
+/// One cached row in the intrusive LRU list.
+#[derive(Debug)]
+struct Slot {
+    id: usize,
+    row: Vec<f32>,
+    prev: usize,
+    next: usize,
+}
+
+/// One shard: bounded LRU map with admission control.
+#[derive(Debug)]
+struct Shard {
+    cap: usize,
+    map: HashMap<usize, usize>,
+    slots: Vec<Slot>,
+    head: usize,
+    tail: usize,
+    sketch: FreqSketch,
+}
+
+impl Shard {
+    fn new(cap: usize) -> Shard {
+        Shard {
+            cap,
+            map: HashMap::with_capacity(cap),
+            slots: Vec::with_capacity(cap),
+            head: NIL,
+            tail: NIL,
+            sketch: FreqSketch::new(cap),
+        }
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Hit path: copy the row straight into `out` (no allocation) and
+    /// refresh recency. Records the access in the frequency sketch either
+    /// way, so admission sees the full stream.
+    fn get_into(&mut self, id: usize, out: &mut [f32]) -> bool {
+        self.sketch.touch(id);
+        let Some(&i) = self.map.get(&id) else { return false };
+        self.detach(i);
+        self.push_front(i);
+        out.copy_from_slice(&self.slots[i].row);
+        true
+    }
+
+    /// Miss path: admit `row` if there is room, or if `id` is at least as
+    /// frequent as the LRU victim (frequency-based admission).
+    fn insert_if_absent(&mut self, id: usize, row: Vec<f32>) {
+        if self.cap == 0 || self.map.contains_key(&id) {
+            return;
+        }
+        if self.slots.len() < self.cap {
+            let i = self.slots.len();
+            self.slots.push(Slot { id, row, prev: NIL, next: NIL });
+            self.push_front(i);
+            self.map.insert(id, i);
+            return;
+        }
+        let victim = self.tail;
+        let victim_id = self.slots[victim].id;
+        if self.sketch.estimate(id) < self.sketch.estimate(victim_id) {
+            return; // victim is hotter: reject the candidate
+        }
+        self.map.remove(&victim_id);
+        self.detach(victim);
+        self.slots[victim].id = id;
+        self.slots[victim].row = row;
+        self.push_front(victim);
+        self.map.insert(id, victim);
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Cache-wide counters, readable without locking the shards.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Sharded hot-row cache wrapping any [`EmbeddingStore`]; itself a store.
+pub struct ShardedCache {
+    inner: Box<dyn EmbeddingStore>,
+    shards: Vec<Mutex<Shard>>,
+    /// false when `cache_rows == 0`: lookups bypass the shards entirely so
+    /// the "uncached" baseline pays no lock or sketch cost.
+    enabled: bool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ShardedCache {
+    /// `cache_rows` is the *total* row budget, split evenly across `shards`.
+    /// `cache_rows == 0` disables caching (every lookup hits the inner store).
+    pub fn new(inner: Box<dyn EmbeddingStore>, shards: usize, cache_rows: usize) -> ShardedCache {
+        let shards = shards.max(1);
+        let per_shard = if cache_rows == 0 { 0 } else { ceil_div(cache_rows, shards) };
+        ShardedCache {
+            inner,
+            shards: (0..shards).map(|_| Mutex::new(Shard::new(per_shard))).collect(),
+            enabled: cache_rows > 0,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The wrapped store.
+    pub fn inner(&self) -> &dyn EmbeddingStore {
+        self.inner.as_ref()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.shards.iter().map(|s| s.lock().unwrap().len()).sum(),
+        }
+    }
+
+    /// Fill `out` with row `id` through the cache: one copy on a hit, one
+    /// reconstruction + copy on a miss. Reconstruction happens *outside* the
+    /// shard lock — concurrent misses on the same id may duplicate work but
+    /// never block each other, and the result is identical either way.
+    fn fetch_into(&self, id: usize, out: &mut [f32]) {
+        if !self.enabled {
+            // cache_rows == 0: a true pass-through baseline — no shard
+            // locks, no sketch updates, just the inner reconstruction.
+            out.copy_from_slice(&self.inner.lookup(id));
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let s = id % self.shards.len();
+        if self.shards[s].lock().unwrap().get_into(id, out) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let row = self.inner.lookup(id);
+        out.copy_from_slice(&row);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.shards[s].lock().unwrap().insert_if_absent(id, row);
+    }
+}
+
+impl EmbeddingStore for ShardedCache {
+    fn vocab_size(&self) -> usize {
+        self.inner.vocab_size()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn num_params(&self) -> usize {
+        // Cached rows are derived data, not trainable parameters.
+        self.inner.num_params()
+    }
+
+    fn lookup(&self, id: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.inner.dim()];
+        self.fetch_into(id, &mut out);
+        out
+    }
+
+    fn lookup_batch(&self, ids: &[usize]) -> crate::tensor::Tensor {
+        // Dedup-and-scatter like the trait default, but each distinct id is
+        // copied exactly once into the flat output (no per-row Vec on hits).
+        let p = self.inner.dim();
+        let data = crate::embedding::dedup_scatter(ids, p, |id, out| self.fetch_into(id, out));
+        crate::tensor::Tensor::new(vec![ids.len(), p], data).expect("lookup_batch shape")
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sharded-cache[{} shards, {} rows] over {}",
+            self.shards.len(),
+            self.shards.iter().map(|s| s.lock().unwrap().cap).sum::<usize>(),
+            self.inner.describe()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{materialize, Word2KetXS};
+    use crate::util::{Rng, ZipfSampler};
+
+    fn xs_store(seed: u64) -> Box<dyn EmbeddingStore> {
+        let mut rng = Rng::new(seed);
+        Box::new(Word2KetXS::random(500, 16, 2, 2, &mut rng))
+    }
+
+    #[test]
+    fn cached_rows_bit_identical_to_uncached() {
+        // Same seed ⇒ identical factor tensors ⇒ the uncached twin is an
+        // oracle for the cached store. Cache sized to hold the whole vocab so
+        // the warm pass is all hits.
+        let uncached = xs_store(7);
+        let cached = ShardedCache::new(xs_store(7), 4, 512);
+        let want = materialize(uncached.as_ref());
+        // Two passes: first fills the cache (all misses), second must serve
+        // hits that are byte-for-byte what the store reconstructed.
+        let got_cold = materialize(&cached);
+        let got_warm = materialize(&cached);
+        assert_eq!(want.data(), got_cold.data());
+        assert_eq!(want.data(), got_warm.data());
+        let stats = cached.stats();
+        assert_eq!(stats.misses, 500, "cold pass should reconstruct every row once");
+        assert_eq!(stats.hits, 500, "warm pass should be all cache hits");
+    }
+
+    #[test]
+    fn shard_routing_and_capacity_bound() {
+        let cached = ShardedCache::new(xs_store(1), 4, 16);
+        for id in 0..500 {
+            cached.lookup(id);
+        }
+        let stats = cached.stats();
+        assert!(stats.entries <= 16, "entries {} exceed budget", stats.entries);
+        assert_eq!(stats.misses, 500);
+    }
+
+    #[test]
+    fn zipf_head_sticks_under_churn() {
+        // A head-heavy stream through a small cache must end with a high hit
+        // rate: admission keeps hot ids resident despite tail churn.
+        let cached = ShardedCache::new(xs_store(2), 2, 32);
+        let zipf = ZipfSampler::new(500, 1.1);
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            cached.lookup(zipf.sample(&mut rng));
+        }
+        let warmup = cached.stats();
+        for _ in 0..2000 {
+            cached.lookup(zipf.sample(&mut rng));
+        }
+        let after = cached.stats();
+        let late_hits = after.hits - warmup.hits;
+        let late_total = (after.hits + after.misses) - (warmup.hits + warmup.misses);
+        let rate = late_hits as f64 / late_total as f64;
+        assert!(rate > 0.5, "steady-state hit rate {rate:.2} too low");
+    }
+
+    #[test]
+    fn admission_rejects_one_hit_wonders() {
+        let cached = ShardedCache::new(xs_store(4), 1, 4);
+        // Make ids 0..4 hot.
+        for _ in 0..10 {
+            for id in 0..4 {
+                cached.lookup(id);
+            }
+        }
+        // A long scan of one-hit-wonder tail ids, interleaved with ongoing
+        // hot traffic (the realistic Zipf shape): admission must keep the hot
+        // ids resident, so almost every hot lookup during the churn hits.
+        let mut hot_hits = 0u64;
+        let mut hot_lookups = 0u64;
+        for cold in 100..300usize {
+            cached.lookup(cold);
+            let before = cached.stats().hits;
+            cached.lookup(cold % 4);
+            hot_hits += cached.stats().hits - before;
+            hot_lookups += 1;
+        }
+        let rate = hot_hits as f64 / hot_lookups as f64;
+        assert!(rate > 0.9, "hot hit rate {rate:.2} during cold churn");
+        // And all four survive the scan outright.
+        let before = cached.stats().hits;
+        for id in 0..4 {
+            cached.lookup(id);
+        }
+        assert_eq!(cached.stats().hits - before, 4, "hot ids were evicted by cold scan");
+    }
+
+    #[test]
+    fn zero_rows_disables_cache() {
+        let cached = ShardedCache::new(xs_store(5), 4, 0);
+        for _ in 0..3 {
+            cached.lookup(42);
+        }
+        let stats = cached.stats();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.entries, 0);
+    }
+
+    #[test]
+    fn store_metadata_delegates() {
+        let inner = xs_store(6);
+        let params = inner.num_params();
+        let cached = ShardedCache::new(inner, 3, 8);
+        assert_eq!(cached.vocab_size(), 500);
+        assert_eq!(cached.dim(), 16);
+        assert_eq!(cached.num_params(), params);
+        assert!(cached.describe().contains("sharded-cache"));
+    }
+}

@@ -1,0 +1,204 @@
+//! Production serving layer: sharded hot-row cache, worker pool, binary wire
+//! protocol.
+//!
+//! This is the request path behind `w2k serve` and the `serve_embeddings`
+//! example. The paper's word2ketXS table is small enough to live in cache
+//! but must be *reconstructed* per lookup, so at production traffic the hot
+//! path is reconstruction compute — this layer attacks exactly that:
+//!
+//! * [`cache::ShardedCache`] — N-way sharded LRU with frequency-based
+//!   admission wrapping any [`EmbeddingStore`]; Zipf-head tokens are
+//!   reconstructed once and then served as memcpys.
+//! * [`pool::WorkerPool`] — per-shard bounded queues drained in micro-batches
+//!   by independent workers, with fail-fast backpressure and per-worker
+//!   latency summaries merged on `STATS`.
+//! * [`wire`] — a length-prefixed binary protocol negotiated on the same
+//!   TCP listener as the text protocol (see `coordinator::server`).
+//!
+//! Configuration arrives via `[serving]` in the experiment TOML
+//! ([`crate::config::ServingConfig`]): `shards`, `cache_rows`,
+//! `batch_window_us`, `queue_depth`, `max_batch`.
+
+pub mod cache;
+pub mod pool;
+pub mod wire;
+
+pub use cache::{CacheStats, ShardedCache};
+pub use pool::{Job, Overloaded, WorkerPool};
+pub use wire::{BinaryClient, WireError, WireStats};
+
+use crate::config::ServingConfig;
+use crate::embedding::EmbeddingStore;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Why a lookup could not be served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LookupError {
+    /// Request contained no ids.
+    Empty,
+    /// Some id is >= vocab_size.
+    OutOfRange,
+    /// Every pool queue is full (backpressure).
+    Overloaded,
+    /// The pool did not reply within the request deadline.
+    Timeout,
+}
+
+impl std::fmt::Display for LookupError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            LookupError::Empty => "empty request",
+            LookupError::OutOfRange => "id out of range",
+            LookupError::Overloaded => "overloaded",
+            LookupError::Timeout => "timeout",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Aggregate serving statistics (pool + cache), zeros before any traffic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingStats {
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub served: u64,
+    pub rejected: u64,
+    pub cache: CacheStats,
+}
+
+/// Shared per-server serving state: cached store + worker pool.
+///
+/// Protocol handlers (text in `coordinator::server`, binary in [`wire`])
+/// validate and format; everything between socket and store lives here.
+pub struct ServingState {
+    store: Arc<ShardedCache>,
+    pool: WorkerPool,
+    timeout: Duration,
+}
+
+impl ServingState {
+    pub fn new(inner: Box<dyn EmbeddingStore>, cfg: &ServingConfig) -> ServingState {
+        let store = Arc::new(ShardedCache::new(inner, cfg.shards, cfg.cache_rows));
+        let pool_store: Arc<dyn EmbeddingStore> = store.clone();
+        let pool = WorkerPool::new(
+            pool_store,
+            cfg.shards,
+            cfg.queue_depth,
+            Duration::from_micros(cfg.batch_window_us),
+            cfg.max_batch,
+        );
+        ServingState { store, pool, timeout: Duration::from_secs(5) }
+    }
+
+    pub fn store(&self) -> &ShardedCache {
+        &self.store
+    }
+
+    pub fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.store.vocab_size()
+    }
+
+    pub fn served(&self) -> u64 {
+        self.pool.served()
+    }
+
+    /// Validate and enqueue a lookup, blocking until rows arrive or the
+    /// deadline passes. Rows come back in request order.
+    pub fn lookup_rows(&self, ids: Vec<usize>) -> Result<Vec<Vec<f32>>, LookupError> {
+        if ids.is_empty() {
+            return Err(LookupError::Empty);
+        }
+        let vocab = self.store.vocab_size();
+        if ids.iter().any(|&id| id >= vocab) {
+            return Err(LookupError::OutOfRange);
+        }
+        let (tx, rx) = mpsc::channel();
+        self.pool
+            .submit(Job { ids, enqueued: Instant::now(), reply: tx })
+            .map_err(|_| LookupError::Overloaded)?;
+        rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)
+    }
+
+    /// Inner product of two rows. Served synchronously through the cache
+    /// (two row fetches), bypassing the batching queue.
+    pub fn dot(&self, a: usize, b: usize) -> Result<f32, LookupError> {
+        let vocab = self.store.vocab_size();
+        if a >= vocab || b >= vocab {
+            return Err(LookupError::OutOfRange);
+        }
+        let va = self.store.lookup(a);
+        let vb = self.store.lookup(b);
+        Ok(crate::tensor::dot(&va, &vb))
+    }
+
+    /// Pool + cache statistics; all-zero (never NaN) before any traffic.
+    pub fn stats(&self) -> ServingStats {
+        let lat = self.pool.latency_summary();
+        let (p50, p99) = if lat.is_empty() { (0.0, 0.0) } else { (lat.p50(), lat.p99()) };
+        ServingStats {
+            p50_us: p50,
+            p99_us: p99,
+            served: self.pool.served(),
+            rejected: self.pool.rejected(),
+            cache: self.store.stats(),
+        }
+    }
+
+    /// Stop pool workers after their queues drain; idempotent.
+    pub fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::embedding::{EmbeddingStore, Word2KetXS};
+    use crate::util::Rng;
+
+    fn state() -> ServingState {
+        let mut rng = Rng::new(0);
+        let inner = Box::new(Word2KetXS::random(200, 16, 2, 2, &mut rng));
+        ServingState::new(inner, &ServingConfig { batch_window_us: 50, ..Default::default() })
+    }
+
+    #[test]
+    fn lookup_validates_then_serves() {
+        let st = state();
+        assert_eq!(st.lookup_rows(vec![]), Err(LookupError::Empty));
+        assert_eq!(st.lookup_rows(vec![3, 200]), Err(LookupError::OutOfRange));
+        let rows = st.lookup_rows(vec![3, 7, 3]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], st.store().lookup(3));
+        assert_eq!(rows[0], rows[2]);
+        st.shutdown();
+    }
+
+    #[test]
+    fn dot_matches_reconstruction() {
+        let st = state();
+        let d = st.dot(1, 2).unwrap();
+        let want = crate::tensor::dot(&st.store().lookup(1), &st.store().lookup(2));
+        assert_eq!(d, want);
+        assert_eq!(st.dot(0, 999), Err(LookupError::OutOfRange));
+        st.shutdown();
+    }
+
+    #[test]
+    fn stats_zero_before_traffic() {
+        let st = state();
+        let s = st.stats();
+        assert_eq!(s.served, 0);
+        assert_eq!(s.p50_us, 0.0);
+        assert_eq!(s.p99_us, 0.0);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.cache.hits, 0);
+        st.shutdown();
+    }
+}

@@ -1,0 +1,299 @@
+//! Worker pool for the serving request path.
+//!
+//! Replaces the single funnel worker + one global unbounded queue of the
+//! original server with `workers` independent workers, one bounded queue
+//! each. Requests are distributed round-robin with full-queue spill-over;
+//! when every queue is at `queue_depth`, submission fails fast
+//! (backpressure) instead of growing memory and latency without limit.
+//!
+//! Each worker micro-batches: once a job arrives it waits `batch_window` for
+//! more to land, then drains up to `max_batch` jobs, flattens their ids into
+//! one `lookup_batch` call (which dedups repeated ids), and scatters rows
+//! back to each job's reply channel. Per-worker latency summaries avoid a
+//! shared stats lock on the hot path and are merged on demand for `STATS`.
+
+use crate::embedding::EmbeddingStore;
+use crate::util::Summary;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued lookup request: ids in, rows out through `reply`.
+pub struct Job {
+    pub ids: Vec<usize>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Vec<Vec<f32>>>,
+}
+
+/// Submission failed because every queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded;
+
+struct ShardQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+struct PoolShared {
+    queues: Vec<ShardQueue>,
+    store: Arc<dyn EmbeddingStore>,
+    stop: AtomicBool,
+    served: AtomicU64,
+    rejected: AtomicU64,
+    latencies_us: Vec<Mutex<Summary>>,
+    depth: usize,
+    window: Duration,
+    max_batch: usize,
+}
+
+/// The pool handle: submit jobs, read stats, shut down.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    next: AtomicUsize,
+}
+
+impl WorkerPool {
+    pub fn new(
+        store: Arc<dyn EmbeddingStore>,
+        workers: usize,
+        queue_depth: usize,
+        batch_window: Duration,
+        max_batch: usize,
+    ) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            queues: (0..workers)
+                .map(|_| ShardQueue { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new() })
+                .collect(),
+            store,
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            latencies_us: (0..workers).map(|_| Mutex::new(Summary::new())).collect(),
+            depth: queue_depth.max(1),
+            window: batch_window,
+            max_batch: max_batch.max(1),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { shared, workers: Mutex::new(handles), next: AtomicUsize::new(0) }
+    }
+
+    /// Enqueue a job. Round-robin across queues, spilling to the next queue
+    /// when the preferred one is full; errors only when all are full.
+    pub fn submit(&self, job: Job) -> Result<(), Overloaded> {
+        let n = self.shared.queues.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        for off in 0..n {
+            let q = &self.shared.queues[(start + off) % n];
+            let mut jobs = q.jobs.lock().unwrap();
+            // The stop check must happen under the queue lock: workers take
+            // the same lock before deciding to exit, so a job enqueued here
+            // with stop still false is guaranteed a drain pass. Checked
+            // before the flag means a job could land just after the last
+            // worker exited and strand until the caller's timeout.
+            if self.shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if jobs.len() < self.shared.depth {
+                jobs.push_back(job);
+                drop(jobs);
+                q.ready.notify_one();
+                return Ok(());
+            }
+        }
+        self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+        Err(Overloaded)
+    }
+
+    /// Total rows served across all workers.
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::Relaxed)
+    }
+
+    /// Jobs rejected for backpressure.
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Merge the per-worker latency summaries into one view.
+    pub fn latency_summary(&self) -> Summary {
+        let mut merged = Summary::new();
+        for lat in &self.shared.latencies_us {
+            merged.merge(&lat.lock().unwrap());
+        }
+        merged
+    }
+
+    /// Stop workers after they drain their queues; idempotent.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for q in &self.shared.queues {
+            q.ready.notify_all();
+        }
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Block until this worker's queue has a job (or the pool stops and the
+/// queue is drained), then micro-batch: wait `window` for stragglers and
+/// drain up to `max_batch`.
+fn take_batch(shared: &PoolShared, w: usize) -> Option<Vec<Job>> {
+    let q = &shared.queues[w];
+    let mut jobs = q.jobs.lock().unwrap();
+    loop {
+        if !jobs.is_empty() {
+            break;
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        let (guard, _) = q.ready.wait_timeout(jobs, Duration::from_millis(20)).unwrap();
+        jobs = guard;
+    }
+    if !shared.window.is_zero() && jobs.len() < shared.max_batch {
+        drop(jobs);
+        std::thread::sleep(shared.window);
+        jobs = q.jobs.lock().unwrap();
+    }
+    let take = jobs.len().min(shared.max_batch);
+    Some(jobs.drain(..take).collect())
+}
+
+/// Per-worker latency samples kept for percentile queries. The summary is a
+/// *tumbling* window: once it fills it is reset and starts collecting fresh,
+/// so STATS reflects roughly the most recent window rather than all of
+/// uptime. Unbounded accumulation would leak memory and make every STATS
+/// percentile sort grow with server age.
+const LATENCY_WINDOW: usize = 1 << 16;
+
+fn worker_loop(shared: &PoolShared, w: usize) {
+    while let Some(batch) = take_batch(shared, w) {
+        // One flat store call per drained batch: dedup inside lookup_batch
+        // collapses the Zipf head across all jobs in the batch.
+        let mut all_ids = Vec::new();
+        for job in &batch {
+            all_ids.extend_from_slice(&job.ids);
+        }
+        let tensor = shared.store.lookup_batch(&all_ids);
+        let dim = shared.store.dim();
+        let now = Instant::now();
+        let mut row = 0usize;
+        let mut lat = shared.latencies_us[w].lock().unwrap();
+        if lat.len() >= LATENCY_WINDOW {
+            *lat = Summary::new();
+        }
+        for job in batch {
+            let mut rows = Vec::with_capacity(job.ids.len());
+            for _ in 0..job.ids.len() {
+                rows.push(tensor.data()[row * dim..(row + 1) * dim].to_vec());
+                row += 1;
+            }
+            lat.add(now.duration_since(job.enqueued).as_secs_f64() * 1e6);
+            shared.served.fetch_add(job.ids.len() as u64, Ordering::Relaxed);
+            let _ = job.reply.send(rows);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{EmbeddingStore, RegularEmbedding};
+    use crate::util::Rng;
+
+    fn pool(workers: usize, depth: usize, window_us: u64) -> (WorkerPool, Arc<dyn EmbeddingStore>) {
+        let mut rng = Rng::new(0);
+        let store: Arc<dyn EmbeddingStore> =
+            Arc::new(RegularEmbedding::random(64, 8, &mut rng));
+        (
+            WorkerPool::new(
+                store.clone(),
+                workers,
+                depth,
+                Duration::from_micros(window_us),
+                16,
+            ),
+            store,
+        )
+    }
+
+    fn submit_ids(pool: &WorkerPool, ids: Vec<usize>) -> mpsc::Receiver<Vec<Vec<f32>>> {
+        let (tx, rx) = mpsc::channel();
+        pool.submit(Job { ids, enqueued: Instant::now(), reply: tx }).unwrap();
+        rx
+    }
+
+    #[test]
+    fn rows_match_store_across_workers() {
+        let (pool, store) = pool(4, 32, 50);
+        let rxs: Vec<_> = (0..20)
+            .map(|i| {
+                let ids = vec![i % 64, (i * 7) % 64, 5];
+                (ids.clone(), submit_ids(&pool, ids))
+            })
+            .collect();
+        for (ids, rx) in rxs {
+            let rows = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(rows.len(), ids.len());
+            for (row, &id) in rows.iter().zip(&ids) {
+                assert_eq!(row.as_slice(), store.lookup(id).as_slice());
+            }
+        }
+        assert_eq!(pool.served(), 60);
+        assert_eq!(pool.latency_summary().len(), 20);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // One worker, depth 1, long window: the worker sleeps inside the
+        // window while more submits pile in; beyond (in-flight + depth) they
+        // must be rejected, not buffered without bound.
+        let (pool, _) = pool(1, 1, 50_000);
+        let mut receivers = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..16 {
+            let (tx, rx) = mpsc::channel();
+            match pool.submit(Job { ids: vec![1], enqueued: Instant::now(), reply: tx }) {
+                Ok(()) => receivers.push(rx),
+                Err(Overloaded) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "no submission was rejected");
+        assert!(pool.rejected() as usize == rejected);
+        // Accepted jobs still complete.
+        for rx in receivers {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending_jobs() {
+        let (pool, _) = pool(2, 64, 20_000);
+        let rxs: Vec<_> = (0..8).map(|i| submit_ids(&pool, vec![i])).collect();
+        pool.shutdown();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok(), "job dropped on shutdown");
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! Length-prefixed binary wire protocol for the embedding server.
+//!
+//! The text protocol formats every f32 as decimal text and re-parses ids per
+//! request — measurable overhead at production rates. This module defines a
+//! compact binary framing negotiated *on the same listener*: a connection
+//! whose first byte is `MAGIC[0]` (0xB2, never a valid text-command byte)
+//! speaks binary; anything else falls through to the line-oriented text
+//! handler.
+//!
+//! ## Framing (all integers/floats little-endian)
+//!
+//! ```text
+//! client hello:  MAGIC (4 bytes: B2 4B 45 54, i.e. 0xB2 "KET")
+//! server hello:  MAGIC, u32 dim
+//! request:       u32 op, u32 count, count × u32 id
+//!   op 1 LOOKUP  count >= 1 ids
+//!   op 2 DOT     count == 2 ids
+//!   op 3 STATS   count == 0
+//!   op 4 QUIT    count == 0 (server closes the connection)
+//! response:      u32 status, u32 count, payload
+//!   LOOKUP ok    count = #ids,  payload = count × dim × f32 rows
+//!   DOT ok       count = 1,     payload = 1 × f32
+//!   STATS ok     count = 6,     payload = 6 × f64:
+//!                p50_us, p99_us, served, cache_hits, cache_misses, rejected
+//!   error        status != 0,   count = 0, no payload
+//! status codes:  0 ok, 1 id out of range, 2 bad frame, 3 overloaded
+//!                (backpressure), 4 timeout
+//! ```
+
+use super::{LookupError, ServingState};
+use std::io::{self, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Connection preamble; first byte 0xB2 is outside printable ASCII so the
+/// listener can sniff binary vs text from one byte.
+pub const MAGIC: [u8; 4] = [0xB2, b'K', b'E', b'T'];
+
+pub const OP_LOOKUP: u32 = 1;
+pub const OP_DOT: u32 = 2;
+pub const OP_STATS: u32 = 3;
+pub const OP_QUIT: u32 = 4;
+
+pub const STATUS_OK: u32 = 0;
+pub const STATUS_RANGE: u32 = 1;
+pub const STATUS_BAD_FRAME: u32 = 2;
+pub const STATUS_OVERLOADED: u32 = 3;
+pub const STATUS_TIMEOUT: u32 = 4;
+
+/// Per-request id-count cap: bounds allocation from a hostile frame header.
+pub const MAX_IDS: u32 = 1 << 16;
+
+pub fn status_name(status: u32) -> &'static str {
+    match status {
+        STATUS_OK => "ok",
+        STATUS_RANGE => "id out of range",
+        STATUS_BAD_FRAME => "bad frame",
+        STATUS_OVERLOADED => "overloaded",
+        STATUS_TIMEOUT => "timeout",
+        _ => "unknown status",
+    }
+}
+
+// ---- primitive framing ----------------------------------------------------
+
+fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    buf.reserve(xs.len() * 8);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_f64s(r: &mut impl Read, n: usize) -> io::Result<Vec<f64>> {
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+fn write_error(w: &mut impl Write, status: u32) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(8);
+    put_u32(&mut buf, status);
+    put_u32(&mut buf, 0);
+    w.write_all(&buf)
+}
+
+fn status_of(e: LookupError) -> u32 {
+    match e {
+        LookupError::Empty => STATUS_BAD_FRAME,
+        LookupError::OutOfRange => STATUS_RANGE,
+        LookupError::Overloaded => STATUS_OVERLOADED,
+        LookupError::Timeout => STATUS_TIMEOUT,
+    }
+}
+
+// ---- server side ----------------------------------------------------------
+
+/// Serve binary frames on an accepted connection. Called by the listener
+/// after it consumed and verified [`MAGIC`]; sends the server hello and
+/// loops until QUIT, EOF, or an unrecoverable framing error.
+pub fn handle_binary(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    state: &ServingState,
+) -> io::Result<()> {
+    let mut hello = Vec::with_capacity(8);
+    hello.extend_from_slice(&MAGIC);
+    put_u32(&mut hello, state.dim() as u32);
+    writer.write_all(&hello)?;
+    loop {
+        let op = match read_u32(reader) {
+            Ok(op) => op,
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()), // clean close
+            Err(e) => return Err(e),
+        };
+        let count = read_u32(reader)?;
+        if count > MAX_IDS {
+            // The remaining stream length is untrustworthy: error and close.
+            return write_error(writer, STATUS_BAD_FRAME);
+        }
+        let mut ids = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            ids.push(read_u32(reader)? as usize);
+        }
+        match op {
+            OP_QUIT => return Ok(()),
+            OP_LOOKUP if !ids.is_empty() => match state.lookup_rows(ids) {
+                Ok(rows) => {
+                    let mut buf = Vec::with_capacity(8 + rows.len() * state.dim() * 4);
+                    put_u32(&mut buf, STATUS_OK);
+                    put_u32(&mut buf, rows.len() as u32);
+                    for row in &rows {
+                        put_f32s(&mut buf, row);
+                    }
+                    writer.write_all(&buf)?;
+                }
+                Err(e) => write_error(writer, status_of(e))?,
+            },
+            OP_DOT if ids.len() == 2 => match state.dot(ids[0], ids[1]) {
+                Ok(d) => {
+                    let mut buf = Vec::with_capacity(12);
+                    put_u32(&mut buf, STATUS_OK);
+                    put_u32(&mut buf, 1);
+                    put_f32s(&mut buf, &[d]);
+                    writer.write_all(&buf)?;
+                }
+                Err(e) => write_error(writer, status_of(e))?,
+            },
+            OP_STATS => {
+                let s = state.stats();
+                let mut buf = Vec::with_capacity(8 + 6 * 8);
+                put_u32(&mut buf, STATUS_OK);
+                put_u32(&mut buf, 6);
+                put_f64s(
+                    &mut buf,
+                    &[
+                        s.p50_us,
+                        s.p99_us,
+                        s.served as f64,
+                        s.cache.hits as f64,
+                        s.cache.misses as f64,
+                        s.rejected as f64,
+                    ],
+                );
+                writer.write_all(&buf)?;
+            }
+            // Known op with a bad id count, or an unknown op: the frame was
+            // still consumed in full, so report and keep the connection.
+            _ => write_error(writer, STATUS_BAD_FRAME)?,
+        }
+    }
+}
+
+// ---- client side ----------------------------------------------------------
+
+/// Client-side failure: transport error or a non-zero server status.
+#[derive(Debug)]
+pub enum WireError {
+    Io(io::Error),
+    Status(u32),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io: {e}"),
+            WireError::Status(s) => write!(f, "server status {s}: {}", status_name(*s)),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Aggregate server statistics decoded from a STATS response.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireStats {
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub served: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub rejected: u64,
+}
+
+/// Minimal binary-protocol client (load generator, tests, examples).
+pub struct BinaryClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    pub dim: usize,
+}
+
+impl BinaryClient {
+    /// Connect and perform the magic handshake.
+    pub fn connect(addr: &str) -> Result<BinaryClient, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        writer.write_all(&MAGIC)?;
+        let mut ack = [0u8; 4];
+        reader.read_exact(&mut ack)?;
+        if ack != MAGIC {
+            return Err(WireError::Io(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "server did not ack binary magic",
+            )));
+        }
+        let dim = read_u32(&mut reader)? as usize;
+        Ok(BinaryClient { reader, writer, dim })
+    }
+
+    fn request(&mut self, op: u32, ids: &[u32]) -> Result<u32, WireError> {
+        let mut buf = Vec::with_capacity(8 + ids.len() * 4);
+        put_u32(&mut buf, op);
+        put_u32(&mut buf, ids.len() as u32);
+        for &id in ids {
+            put_u32(&mut buf, id);
+        }
+        self.writer.write_all(&buf)?;
+        let status = read_u32(&mut self.reader)?;
+        Ok(status)
+    }
+
+    /// Fetch rows for `ids`; one `dim`-length vector per id, request order.
+    pub fn lookup(&mut self, ids: &[u32]) -> Result<Vec<Vec<f32>>, WireError> {
+        let status = self.request(OP_LOOKUP, ids)?;
+        let count = read_u32(&mut self.reader)? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let mut rows = Vec::with_capacity(count);
+        for _ in 0..count {
+            rows.push(read_f32s(&mut self.reader, self.dim)?);
+        }
+        Ok(rows)
+    }
+
+    /// Inner product of two rows, computed server-side.
+    pub fn dot(&mut self, a: u32, b: u32) -> Result<f32, WireError> {
+        let status = self.request(OP_DOT, &[a, b])?;
+        let count = read_u32(&mut self.reader)? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let xs = read_f32s(&mut self.reader, count)?;
+        Ok(xs[0])
+    }
+
+    pub fn stats(&mut self) -> Result<WireStats, WireError> {
+        let status = self.request(OP_STATS, &[])?;
+        let count = read_u32(&mut self.reader)? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let xs = read_f64s(&mut self.reader, count)?;
+        if xs.len() < 6 {
+            return Err(WireError::Io(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "short STATS payload",
+            )));
+        }
+        Ok(WireStats {
+            p50_us: xs[0],
+            p99_us: xs[1],
+            served: xs[2] as u64,
+            cache_hits: xs[3] as u64,
+            cache_misses: xs[4] as u64,
+            rejected: xs[5] as u64,
+        })
+    }
+
+    /// Send QUIT; the server closes the connection without replying, so
+    /// this writes the frame and returns (no status read).
+    pub fn quit(mut self) -> Result<(), WireError> {
+        let mut buf = Vec::with_capacity(8);
+        put_u32(&mut buf, OP_QUIT);
+        put_u32(&mut buf, 0);
+        self.writer.write_all(&buf)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn primitive_roundtrips() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_f32s(&mut buf, &[1.5, -2.25]);
+        put_f64s(&mut buf, &[3.5e12]);
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_u32(&mut c).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_f32s(&mut c, 2).unwrap(), vec![1.5, -2.25]);
+        assert_eq!(read_f64s(&mut c, 1).unwrap(), vec![3.5e12]);
+    }
+
+    #[test]
+    fn magic_first_byte_is_not_ascii_text() {
+        // The dispatcher relies on this: every text command starts with an
+        // uppercase ASCII letter, so 0xB2 can never be confused for text.
+        assert!(!MAGIC[0].is_ascii());
+    }
+
+    #[test]
+    fn status_names_cover_codes() {
+        for s in [STATUS_OK, STATUS_RANGE, STATUS_BAD_FRAME, STATUS_OVERLOADED, STATUS_TIMEOUT] {
+            assert_ne!(status_name(s), "unknown status");
+        }
+        assert_eq!(status_name(99), "unknown status");
+    }
+}

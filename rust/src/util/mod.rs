@@ -11,7 +11,7 @@ pub mod stats;
 pub mod table;
 
 pub use json::Json;
-pub use rng::Rng;
+pub use rng::{Rng, ZipfSampler};
 pub use stats::{fmt_count, fmt_duration, Summary, Timer};
 pub use table::Table;
 

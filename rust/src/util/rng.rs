@@ -177,6 +177,41 @@ impl Rng {
     }
 }
 
+/// Zipf-distributed index sampler over `[0, n)`: P(i) ∝ 1/(i+1)^s.
+///
+/// Token-id request streams are heavily head-skewed in production serving;
+/// this is the load model used by the serving bench and the
+/// `serve_embeddings` load generator. Sampling is an O(log n) binary search
+/// over a precomputed CDF, so a sampler is cheap to share per client thread.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, s: f64) -> ZipfSampler {
+        assert!(n > 0, "zipf needs a non-empty domain");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Draw one index using the caller's RNG stream.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        // partition_point: first index whose cdf exceeds u.
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +294,23 @@ mod tests {
         }
         assert_eq!(counts[1], 0);
         assert!(counts[2] > counts[0] * 5);
+    }
+
+    #[test]
+    fn zipf_is_head_heavy_and_in_range() {
+        let z = ZipfSampler::new(1000, 1.0);
+        let mut r = Rng::new(21);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..20_000 {
+            let i = z.sample(&mut r);
+            assert!(i < 1000);
+            counts[i] += 1;
+        }
+        // Rank 0 should dominate rank 100 by roughly 100× under s=1.
+        assert!(counts[0] > counts[100] * 20, "{} vs {}", counts[0], counts[100]);
+        // Head mass: top-10 ids should carry a large share of the stream.
+        let head: usize = counts[..10].iter().sum();
+        assert!(head > 20_000 / 3, "head {head}");
     }
 
     #[test]

@@ -17,6 +17,12 @@ impl Summary {
         self.samples.push(x);
     }
 
+    /// Fold another summary's samples into this one (e.g. merging per-worker
+    /// latency summaries for a pool-wide STATS view).
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -144,6 +150,18 @@ mod tests {
         assert_eq!(s.max(), 5.0);
         assert!((s.stddev() - 1.5811).abs() < 1e-3);
         assert_eq!(s.p50(), 3.0);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = Summary::new();
+        a.add(1.0);
+        let mut b = Summary::new();
+        b.add(3.0);
+        b.add(5.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.mean(), 3.0);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Offline stub of the `xla` PJRT binding.
+//!
+//! The container this repo builds in has no XLA runtime, so this crate
+//! provides the same surface the coordinator uses, split in two tiers:
+//!
+//! * **Host-side data types** ([`Literal`], [`Shape`], [`ElementType`]) are
+//!   fully functional — the engine's Value⇄Literal round-trips and unit tests
+//!   run for real against them.
+//! * **Runtime ops** (`PjRtClient::compile`, executable execution) return a
+//!   clear [`Error`] instead of running: artifacts cannot execute without a
+//!   real PJRT plugin. The integration tests skip themselves when
+//!   `artifacts/manifest.json` is absent, so `cargo test` stays green.
+//!
+//! Swapping in a real binding is a one-line Cargo.toml change; the API here
+//! mirrors the subset of `xla-rs` the coordinator calls.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error type matching the real binding's surface (stringly, Display-able).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types the coordinator exchanges with artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+    S64,
+    U8,
+    Pred,
+}
+
+/// Array shape: dims + element type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Shape of a literal: a dense array or a tuple of shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor literal (row-major), the PJRT I/O currency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+/// Rust scalar types that can cross the literal boundary.
+pub trait NativeType: Sized + Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn wrap(data: Vec<Self>) -> LiteralStorage;
+    fn unwrap(data: &LiteralStorage) -> Option<&[Self]>;
+}
+
+/// Opaque storage handed between [`NativeType`] impls and [`Literal`].
+pub struct LiteralStorage(LiteralData);
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+
+    fn wrap(data: Vec<f32>) -> LiteralStorage {
+        LiteralStorage(LiteralData::F32(data))
+    }
+
+    fn unwrap(data: &LiteralStorage) -> Option<&[f32]> {
+        match &data.0 {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+
+    fn wrap(data: Vec<i32>) -> LiteralStorage {
+        LiteralStorage(LiteralData::I32(data))
+    }
+
+    fn unwrap(data: &LiteralStorage) -> Option<&[i32]> {
+        match &data.0 {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let n = data.len() as i64;
+        Literal { data: T::wrap(data.to_vec()).0, dims: vec![n] }
+    }
+
+    /// Tuple literal (artifact outputs are tuples).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: LiteralData::Tuple(parts), dims: vec![] }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret under new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error::new("reshape on tuple literal"));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        match &self.data {
+            LiteralData::Tuple(parts) => Ok(Shape::Tuple(
+                parts.iter().map(|p| p.shape()).collect::<Result<Vec<_>>>()?,
+            )),
+            _ => Ok(Shape::Array(ArrayShape { dims: self.dims.clone(), ty: self.ty() })),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+            LiteralData::Tuple(_) => ElementType::Pred, // never queried on tuples
+        }
+    }
+
+    pub fn element_type(&self) -> Result<ElementType> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error::new("element_type on tuple literal"));
+        }
+        Ok(self.ty())
+    }
+
+    /// Copy elements out as a host vector; errors on dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        let storage = LiteralStorage(self.data.clone());
+        T::unwrap(&storage)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error::new(format!("literal is not {:?}", T::ELEMENT_TYPE)))
+    }
+
+    /// Unpack a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module text (held verbatim; the stub cannot lower it).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("read hlo text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation wrapper around a module proto.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+
+    pub fn proto(&self) -> &HloModuleProto {
+        &self.proto
+    }
+}
+
+/// PJRT client handle. !Send/!Sync like the real binding (Rc internals).
+pub struct PjRtClient {
+    _not_send: Rc<RefCell<()>>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _not_send: Rc::new(RefCell::new(())) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(
+            "xla stub: no PJRT runtime in this build — artifacts cannot be compiled \
+             (swap vendor/xla for a real binding to execute HLO)",
+        ))
+    }
+}
+
+/// Device buffer holding a result literal.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Compiled executable. Unreachable in the stub (compile always errors), but
+/// the type and its `execute` signature must exist for the engine to compile.
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<RefCell<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new("xla stub: execute unavailable without a PJRT runtime"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        match r.shape().unwrap() {
+            Shape::Array(a) => {
+                assert_eq!(a.dims(), &[2, 2]);
+                assert_eq!(a.element_type(), ElementType::F32);
+            }
+            _ => panic!("expected array shape"),
+        }
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_scalar_reshape() {
+        let l = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(l.element_type().unwrap(), ElementType::S32);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(Literal::vec1(&[1i32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuple_unpack() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.element_type().is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_exists_but_compile_gated() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.device_count(), 1);
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(c.compile(&comp).is_err());
+    }
+}
