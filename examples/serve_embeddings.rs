@@ -6,10 +6,15 @@
 //!
 //! Run: cargo run --release --example serve_embeddings -- [--requests N]
 //!      [--clients C] [--order 4 --rank 1] [--shards 4] [--cache-rows 65536]
-//!      [--wire binary|text] [--zipf 1.05]
+//!      [--wire binary|text] [--zipf 1.05] [--knn 0.1 --topk 10]
+//!      [--index ivf --nlist 64 --nprobe 8]
+//!
+//! `--knn F` makes each client issue a KNN query (Zipf-sampled query word,
+//! `--topk` neighbors) instead of a batched lookup with probability F,
+//! exercising the similarity-search request path under the same load.
 
 use word2ket::cli::{App, CommandSpec, OptSpec};
-use word2ket::config::{EmbeddingKind, ExperimentConfig};
+use word2ket::config::{EmbeddingKind, ExperimentConfig, IndexKind};
 use word2ket::coordinator::server;
 use word2ket::serving::BinaryClient;
 use word2ket::util::{Rng, Summary, Timer, ZipfSampler};
@@ -36,6 +41,11 @@ fn main() -> word2ket::Result<()> {
                 OptSpec { name: "wire", help: "protocol: binary|text", takes_value: true, repeated: false, default: Some("binary") },
                 OptSpec { name: "zipf", help: "Zipf exponent of the id stream", takes_value: true, repeated: false, default: Some("1.05") },
                 OptSpec { name: "batch", help: "ids per request", takes_value: true, repeated: false, default: Some("8") },
+                OptSpec { name: "knn", help: "fraction of requests that are KNN queries", takes_value: true, repeated: false, default: Some("0") },
+                OptSpec { name: "topk", help: "neighbors per KNN query", takes_value: true, repeated: false, default: Some("10") },
+                OptSpec { name: "index", help: "knn index: brute|ivf", takes_value: true, repeated: false, default: Some("brute") },
+                OptSpec { name: "nlist", help: "IVF coarse cells", takes_value: true, repeated: false, default: Some("64") },
+                OptSpec { name: "nprobe", help: "IVF cells probed per query", takes_value: true, repeated: false, default: Some("8") },
             ],
             positionals: vec![],
         }],
@@ -58,6 +68,8 @@ fn main() -> word2ket::Result<()> {
         std::process::exit(2);
     }
     let zipf_s = parsed.get_f64("zipf")?.unwrap_or(1.05);
+    let knn_frac = parsed.get_f64("knn")?.unwrap_or(0.0).clamp(0.0, 1.0);
+    let topk = parsed.get_usize("topk")?.unwrap_or(10).max(1);
 
     let mut cfg = ExperimentConfig::default();
     cfg.embedding.kind = EmbeddingKind::Word2KetXS;
@@ -70,15 +82,22 @@ fn main() -> word2ket::Result<()> {
     cfg.serving.cache_rows = parsed.get_usize("cache-rows")?.unwrap_or(65_536);
     cfg.serving.batch_window_us = 150;
     cfg.serving.max_batch = 256;
+    cfg.index.kind = IndexKind::parse(parsed.get("index").unwrap_or("brute"))?;
+    cfg.index.nlist = parsed.get_usize("nlist")?.unwrap_or(64);
+    cfg.index.nprobe = parsed.get_usize("nprobe")?.unwrap_or(8);
 
     let (state, listener, addr) = server::spawn(&cfg)?;
     let accept_state = state.clone();
     let accept = std::thread::spawn(move || server::accept_loop(listener, accept_state));
 
     println!(
-        "server on {addr} [{wire_mode} wire, {} shards, {} cache rows]; \
-         {clients} clients × {requests} batched lookups (batch {batch}, Zipf s={zipf_s})",
-        cfg.serving.shards, cfg.serving.cache_rows
+        "server on {addr} [{wire_mode} wire, {} shards, {} cache rows, {} index]; \
+         {clients} clients × {requests} reqs (batch {batch}, Zipf s={zipf_s}, \
+         knn mix {:.0}% top-{topk})",
+        cfg.serving.shards,
+        cfg.serving.cache_rows,
+        cfg.index.kind.name(),
+        100.0 * knn_frac
     );
     let zipf = Arc::new(ZipfSampler::new(cfg.model.vocab, zipf_s));
     let wall = Timer::start();
@@ -87,36 +106,46 @@ fn main() -> word2ket::Result<()> {
             let addr = addr.clone();
             let wire_mode = wire_mode.clone();
             let zipf = zipf.clone();
-            std::thread::spawn(move || -> (Summary, u64) {
+            std::thread::spawn(move || -> ClientReport {
                 let mut rng = Rng::new(100 + c as u64);
+                let mix = Mix { batch, knn_frac, topk };
                 if wire_mode == "binary" {
-                    run_binary_client(&addr, requests, batch, &zipf, &mut rng)
+                    run_binary_client(&addr, requests, &mix, &zipf, &mut rng)
                 } else {
-                    run_text_client(&addr, requests, batch, &zipf, &mut rng)
+                    run_text_client(&addr, requests, &mix, &zipf, &mut rng)
                 }
             })
         })
         .collect();
 
     let mut rejected_total = 0u64;
+    let mut lookups_total = 0u64;
+    let mut knn_total = 0u64;
     for h in handles {
-        let (lat, rejected) = h.join().expect("client thread");
-        rejected_total += rejected;
+        let r = h.join().expect("client thread");
+        rejected_total += r.rejected;
+        lookups_total += r.lookups;
+        knn_total += r.knn;
         println!(
-            "  client done: p50 {:.0}µs p99 {:.0}µs over {} reqs ({rejected} rejected)",
-            lat.p50(),
-            lat.p99(),
-            lat.len()
+            "  client done: p50 {:.0}µs p99 {:.0}µs over {} reqs \
+             ({} lookups, {} knn, {} rejected)",
+            r.lat.p50(),
+            r.lat.p99(),
+            r.lat.len(),
+            r.lookups,
+            r.knn,
+            r.rejected
         );
     }
     let secs = wall.elapsed().as_secs_f64();
     // Only successfully served rows count toward throughput; rejected
-    // batches (backpressure/timeout) served nothing.
-    let served_rows = (clients * requests * batch) as f64 - (rejected_total * batch as u64) as f64;
+    // batches (backpressure/timeout) and knn queries serve no rows.
+    let served_rows = (lookups_total * batch as u64) as f64;
     println!(
-        "\nTOTAL: {} rows in {:.2}s → {:.0} rows/s, {} rejected reqs (served {} from a \
-         compressed {}×{} table)",
+        "\nTOTAL: {} rows + {} knn queries in {:.2}s → {:.0} rows/s, {} rejected reqs \
+         (served {} from a compressed {}×{} table)",
         served_rows as u64,
+        knn_total,
         secs,
         served_rows / secs,
         rejected_total,
@@ -130,13 +159,16 @@ fn main() -> word2ket::Result<()> {
     let stats = stats_client.stats().expect("stats");
     println!(
         "server STATS: p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} \
-         rejected={} (hit rate {:.1}%)",
+         rejected={} knn_queries={} knn_candidates={} knn_mean_probes={:.2} (hit rate {:.1}%)",
         stats.p50_us,
         stats.p99_us,
         stats.served,
         stats.cache_hits,
         stats.cache_misses,
         stats.rejected,
+        stats.knn_queries,
+        stats.knn_candidates,
+        stats.knn_mean_probes,
         100.0 * stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64
     );
     stats_client.quit().ok();
@@ -146,56 +178,103 @@ fn main() -> word2ket::Result<()> {
     Ok(())
 }
 
-/// Drive `requests` batched lookups over the binary protocol. Backpressure
-/// rejections (overloaded/timeout) are counted, not fatal — observing them
-/// is part of the point of the load generator.
+/// Per-request workload shape shared by both protocol drivers.
+struct Mix {
+    batch: usize,
+    knn_frac: f64,
+    topk: usize,
+}
+
+/// What one client observed.
+struct ClientReport {
+    lat: Summary,
+    lookups: u64,
+    knn: u64,
+    rejected: u64,
+}
+
+/// Drive `requests` Zipf requests over the binary protocol, mixing batched
+/// lookups with KNN queries per `mix`. Backpressure rejections
+/// (overloaded/timeout) are counted, not fatal — observing them is part of
+/// the point of the load generator.
 fn run_binary_client(
     addr: &str,
     requests: usize,
-    batch: usize,
+    mix: &Mix,
     zipf: &ZipfSampler,
     rng: &mut Rng,
-) -> (Summary, u64) {
-    let mut lat = Summary::new();
-    let mut rejected = 0u64;
+) -> ClientReport {
+    let mut report =
+        ClientReport { lat: Summary::new(), lookups: 0, knn: 0, rejected: 0 };
     let mut client = BinaryClient::connect(addr).expect("connect");
-    let mut ids = vec![0u32; batch];
+    let mut ids = vec![0u32; mix.batch];
     for _ in 0..requests {
+        if mix.knn_frac > 0.0 && rng.chance(mix.knn_frac) {
+            let query = zipf.sample(rng) as u32;
+            let t = Timer::start();
+            match client.knn(query, mix.topk as u32) {
+                Ok(neighbors) => {
+                    report.lat.add(t.elapsed_us());
+                    report.knn += 1;
+                    assert!(neighbors.len() <= mix.topk, "overlong knn response");
+                }
+                Err(word2ket::serving::WireError::Status(_)) => report.rejected += 1,
+                Err(e) => panic!("binary transport error: {e}"),
+            }
+            continue;
+        }
         for id in ids.iter_mut() {
             *id = zipf.sample(rng) as u32;
         }
         let t = Timer::start();
         match client.lookup(&ids) {
             Ok(rows) => {
-                lat.add(t.elapsed_us());
-                assert_eq!(rows.len(), batch, "short binary response");
+                report.lat.add(t.elapsed_us());
+                report.lookups += 1;
+                assert_eq!(rows.len(), mix.batch, "short binary response");
             }
-            Err(word2ket::serving::WireError::Status(_)) => rejected += 1,
+            Err(word2ket::serving::WireError::Status(_)) => report.rejected += 1,
             Err(e) => panic!("binary transport error: {e}"),
         }
     }
     client.quit().ok();
-    (lat, rejected)
+    report
 }
 
-/// Drive `requests` batched lookups over the text protocol. A failed batch
-/// comes back as a single `ERR ...` line (overloaded/timeout), counted as a
-/// rejection rather than a panic.
+/// Drive `requests` Zipf requests over the text protocol, mixing batched
+/// lookups with KNN queries per `mix`. A failed request comes back as a
+/// single `ERR ...` line (overloaded/timeout), counted as a rejection rather
+/// than a panic.
 fn run_text_client(
     addr: &str,
     requests: usize,
-    batch: usize,
+    mix: &Mix,
     zipf: &ZipfSampler,
     rng: &mut Rng,
-) -> (Summary, u64) {
-    let mut lat = Summary::new();
-    let mut rejected = 0u64;
+) -> ClientReport {
+    let mut report =
+        ClientReport { lat: Summary::new(), lookups: 0, knn: 0, rejected: 0 };
     let mut s = TcpStream::connect(addr).expect("connect");
     let mut r = BufReader::new(s.try_clone().unwrap());
     let mut line = String::new();
     for _ in 0..requests {
+        if mix.knn_frac > 0.0 && rng.chance(mix.knn_frac) {
+            let req = format!("KNN {} {}\n", zipf.sample(rng), mix.topk);
+            let t = Timer::start();
+            s.write_all(req.as_bytes()).unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            if line.starts_with("ERR") {
+                report.rejected += 1;
+            } else {
+                assert!(line.starts_with("OK "), "bad response: {line}");
+                report.lat.add(t.elapsed_us());
+                report.knn += 1;
+            }
+            continue;
+        }
         let mut req = String::from("LOOKUP");
-        for _ in 0..batch {
+        for _ in 0..mix.batch {
             req.push_str(&format!(" {}", zipf.sample(rng)));
         }
         req.push('\n');
@@ -204,17 +283,18 @@ fn run_text_client(
         line.clear();
         r.read_line(&mut line).unwrap();
         if line.starts_with("ERR") {
-            rejected += 1;
+            report.rejected += 1;
             continue;
         }
         assert!(line.starts_with("OK "), "bad response: {line}");
-        for _ in 1..batch {
+        for _ in 1..mix.batch {
             line.clear();
             r.read_line(&mut line).unwrap();
             assert!(line.starts_with("OK "), "bad response: {line}");
         }
-        lat.add(t.elapsed_us());
+        report.lat.add(t.elapsed_us());
+        report.lookups += 1;
     }
     s.write_all(b"QUIT\n").ok();
-    (lat, rejected)
+    report
 }

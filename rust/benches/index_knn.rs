@@ -1,0 +1,206 @@
+//! Bench: top-k similarity search over a compressed store — brute force
+//! over materialized rows vs brute force in *factored space* vs IVF.
+//!
+//! The paper's CP representation makes each pair score `O(r² n q)` instead
+//! of `O(q^n)` (§2.3), so exact search over the compressed table beats the
+//! dense scan without any approximation; IVF stacks a sub-linear candidate
+//! scan on top (probe `nprobe` of `nlist` k-means cells, exact factored
+//! re-rank). This bench quantifies both speedups plus IVF recall@k and
+//! emits `BENCH_index.json` so the perf trajectory accumulates across PRs.
+//!
+//! Run: cargo bench --bench index_knn    (W2K_BENCH_FAST=1 to smoke)
+
+use word2ket::bench::{black_box, header, BenchRunner};
+use word2ket::embedding::{EmbeddingStore, Word2Ket};
+use word2ket::index::{BruteForce, IvfIndex, KnnIndex, Neighbor, Query, Scorer};
+use word2ket::tensor::dot;
+use word2ket::util::{Json, Rng, Timer};
+use std::cell::Cell;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+const DIM: usize = 256; // q = 16, 16² = 256: exact reconstruction
+const ORDER: usize = 2;
+const RANK: usize = 1; // paper Table 1 word2ket 2/1-style cell
+const K: usize = 10;
+
+/// Dense scan over a pre-materialized matrix: the baseline every index is
+/// judged against. Insertion top-k, query row excluded.
+fn dense_top_k(matrix: &[f32], vocab: usize, query: usize, k: usize) -> Vec<(usize, f32)> {
+    let q = &matrix[query * DIM..(query + 1) * DIM];
+    let mut best: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+    for b in 0..vocab {
+        if b == query {
+            continue;
+        }
+        let s = dot(q, &matrix[b * DIM..(b + 1) * DIM]);
+        if best.len() < k || s > best.last().unwrap().1 {
+            let pos = best.partition_point(|&(_, bs)| bs > s);
+            best.insert(pos, (b, s));
+            if best.len() > k {
+                best.pop();
+            }
+        }
+    }
+    best
+}
+
+struct Row {
+    name: String,
+    queries_per_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    mean_candidates: f64,
+    recall_at_k: f64,
+}
+
+fn main() {
+    header(
+        "k-NN: materialized brute vs factored brute vs IVF",
+        "factored inner products score pairs in O(r²nq) instead of O(q^n) \
+         (§2.3); IVF probes nprobe/nlist of the vocabulary on top",
+    );
+    let fast = std::env::var("W2K_BENCH_FAST").is_ok();
+    let vocab = if fast { 5_000 } else { 30_000 };
+    let n_queries = if fast { 16 } else { 64 };
+    let (nlist, nprobe) = if fast { (32usize, 4usize) } else { (128usize, 8usize) };
+    let runner = if fast {
+        BenchRunner {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            budget: std::time::Duration::from_millis(500),
+        }
+    } else {
+        BenchRunner::default()
+    };
+
+    let mut rng = Rng::new(7);
+    let store = Arc::new(Word2Ket::random(vocab, DIM, ORDER, RANK, &mut rng));
+    println!("store: {}\n", store.describe());
+    let queries: Vec<usize> = (0..n_queries).map(|_| rng.below(vocab)).collect();
+    let mut results: Vec<Row> = Vec::new();
+
+    // --- materialized brute force -----------------------------------------
+    let t = Timer::start();
+    let matrix = {
+        let mut m = Vec::with_capacity(vocab * DIM);
+        for id in 0..vocab {
+            m.extend_from_slice(&store.lookup(id));
+        }
+        m
+    };
+    println!(
+        "materialized {}×{} matrix in {:.0}ms ({} MB vs {} KB of factors)",
+        vocab,
+        DIM,
+        t.elapsed_ms(),
+        vocab * DIM * 4 / (1 << 20),
+        store.num_params() * 4 / (1 << 10)
+    );
+    let next = Cell::new(0usize);
+    let mat = runner.run_throughput(&format!("materialized brute top-{K}"), 1.0, || {
+        let q = queries[next.get() % queries.len()];
+        next.set(next.get() + 1);
+        black_box(dense_top_k(&matrix, vocab, q, K))
+    });
+    println!("{}", mat.render());
+    results.push(Row {
+        name: "materialized brute".into(),
+        queries_per_s: mat.throughput().unwrap_or(0.0),
+        p50_us: mat.p50.as_secs_f64() * 1e6,
+        p99_us: mat.p99.as_secs_f64() * 1e6,
+        mean_candidates: (vocab - 1) as f64,
+        recall_at_k: 1.0,
+    });
+
+    // --- factored brute force ---------------------------------------------
+    let brute = BruteForce::new(Scorer::new(store.clone() as Arc<dyn EmbeddingStore>, false));
+    assert!(brute.scorer().is_factored(), "bench premise: factored scoring path");
+    let next = Cell::new(0usize);
+    let fac = runner.run_throughput(&format!("factored brute top-{K}"), 1.0, || {
+        let q = queries[next.get() % queries.len()];
+        next.set(next.get() + 1);
+        black_box(brute.top_k(&Query::Id(q), K))
+    });
+    println!("{}", fac.render());
+    let fac_speedup = mat.mean.as_secs_f64() / fac.mean.as_secs_f64();
+    println!("  -> factored/materialized speedup {fac_speedup:.1}×");
+    results.push(Row {
+        name: "factored brute".into(),
+        queries_per_s: fac.throughput().unwrap_or(0.0),
+        p50_us: fac.p50.as_secs_f64() * 1e6,
+        p99_us: fac.p99.as_secs_f64() * 1e6,
+        mean_candidates: (vocab - 1) as f64,
+        recall_at_k: 1.0,
+    });
+
+    // --- IVF ----------------------------------------------------------------
+    let t = Timer::start();
+    let ivf = IvfIndex::build(
+        Scorer::new(store.clone() as Arc<dyn EmbeddingStore>, false),
+        nlist,
+        nprobe,
+        42,
+    );
+    println!("\nbuilt {} in {:.0}ms", ivf.describe(), t.elapsed_ms());
+
+    // Recall + candidate accounting against the materialized ground truth.
+    let mut hits = 0usize;
+    let mut candidates = 0usize;
+    for &q in &queries {
+        let exact: HashSet<usize> =
+            dense_top_k(&matrix, vocab, q, K).into_iter().map(|(id, _)| id).collect();
+        let (approx, stats) = ivf.top_k(&Query::Id(q), K);
+        candidates += stats.candidates;
+        hits += approx.iter().filter(|n: &&Neighbor| exact.contains(&n.id)).count();
+    }
+    let recall = hits as f64 / (queries.len() * K) as f64;
+    let mean_candidates = candidates as f64 / queries.len() as f64;
+
+    let next = Cell::new(0usize);
+    let ivf_r = runner.run_throughput(
+        &format!("ivf[{nlist}/{nprobe}] top-{K}"),
+        1.0,
+        || {
+            let q = queries[next.get() % queries.len()];
+            next.set(next.get() + 1);
+            black_box(ivf.top_k(&Query::Id(q), K))
+        },
+    );
+    println!("{}", ivf_r.render());
+    let ivf_speedup = mat.mean.as_secs_f64() / ivf_r.mean.as_secs_f64();
+    println!(
+        "  -> ivf/materialized speedup {ivf_speedup:.1}× at recall@{K} {recall:.2} \
+         ({mean_candidates:.0} of {} candidates scanned)",
+        vocab - 1
+    );
+    results.push(Row {
+        name: format!("ivf nlist={nlist} nprobe={nprobe}"),
+        queries_per_s: ivf_r.throughput().unwrap_or(0.0),
+        p50_us: ivf_r.p50.as_secs_f64() * 1e6,
+        p99_us: ivf_r.p99.as_secs_f64() * 1e6,
+        mean_candidates,
+        recall_at_k: recall,
+    });
+
+    // Persist the trajectory point.
+    let json = Json::arr(results.iter().map(|r| {
+        Json::obj(vec![
+            ("name", Json::str(r.name.clone())),
+            ("queries_per_s", Json::num(r.queries_per_s)),
+            ("p50_us", Json::num(r.p50_us)),
+            ("p99_us", Json::num(r.p99_us)),
+            ("mean_candidates", Json::num(r.mean_candidates)),
+            ("recall_at_k", Json::num(r.recall_at_k)),
+            ("vocab", Json::num(vocab as f64)),
+            ("dim", Json::num(DIM as f64)),
+            ("k", Json::num(K as f64)),
+        ])
+    }));
+    let path = "BENCH_index.json";
+    match std::fs::write(path, json.pretty()) {
+        Ok(()) => println!("\nwrote {path} ({} configs)", results.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

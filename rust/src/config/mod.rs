@@ -10,8 +10,8 @@ mod schema;
 mod toml;
 
 pub use schema::{
-    CorpusConfig, EmbeddingConfig, EmbeddingKind, ExperimentConfig, ModelConfig, ServerConfig,
-    ServingConfig, TaskKind, TrainConfig,
+    CorpusConfig, EmbeddingConfig, EmbeddingKind, ExperimentConfig, IndexConfig, IndexKind,
+    ModelConfig, ServerConfig, ServingConfig, TaskKind, TrainConfig,
 };
 pub use toml::{TomlDoc, TomlValue};
 

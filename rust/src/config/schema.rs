@@ -190,6 +190,53 @@ impl Default for ServerConfig {
     }
 }
 
+/// Which k-NN index structure serves similarity queries (see `index/`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexKind {
+    /// Exact scan of the whole vocabulary (factored scoring when possible).
+    Brute,
+    /// Inverted-file approximate index: k-means coarse quantizer, probe the
+    /// `nprobe` nearest of `nlist` cells, exact re-rank of their members.
+    Ivf,
+}
+
+impl IndexKind {
+    pub fn parse(s: &str) -> Result<IndexKind> {
+        match s.to_ascii_lowercase().replace('-', "").as_str() {
+            "brute" | "bruteforce" | "flat" | "exact" => Ok(IndexKind::Brute),
+            "ivf" => Ok(IndexKind::Ivf),
+            other => Err(Error::Config(format!("unknown index kind '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexKind::Brute => "brute",
+            IndexKind::Ivf => "ivf",
+        }
+    }
+}
+
+/// Similarity-search settings for the server's `KNN` request path
+/// (`[index]` in the experiment TOML; see `index/`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexConfig {
+    pub kind: IndexKind,
+    /// IVF coarse cells (clamped to the vocabulary size at build).
+    pub nlist: usize,
+    /// IVF cells probed per query (clamped to `nlist` at build).
+    pub nprobe: usize,
+    /// Rank by cosine similarity instead of raw dot product (per-word norms
+    /// are precomputed at index build).
+    pub cosine: bool,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig { kind: IndexKind::Brute, nlist: 64, nprobe: 8, cosine: false }
+    }
+}
+
 /// Serving-path settings: the sharded hot-row cache and worker pool that sit
 /// between the TCP listener and the embedding store (see `serving/`).
 #[derive(Debug, Clone, PartialEq)]
@@ -231,6 +278,7 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub server: ServerConfig,
     pub serving: ServingConfig,
+    pub index: IndexConfig,
     pub artifacts_dir: String,
 }
 
@@ -245,6 +293,7 @@ impl Default for ExperimentConfig {
             train: TrainConfig::default(),
             server: ServerConfig::default(),
             serving: ServingConfig::default(),
+            index: IndexConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -297,6 +346,15 @@ impl ExperimentConfig {
                 checkpoint_dir: doc.str_or("train.checkpoint_dir", &d.train.checkpoint_dir),
             },
             server: ServerConfig { addr: doc.str_or("server.addr", &d.server.addr) },
+            index: IndexConfig {
+                kind: match doc.get("index.kind") {
+                    Some(v) => IndexKind::parse(v.as_str().unwrap_or(""))?,
+                    None => d.index.kind,
+                },
+                nlist: doc.usize_or("index.nlist", d.index.nlist),
+                nprobe: doc.usize_or("index.nprobe", d.index.nprobe),
+                cosine: doc.bool_or("index.cosine", d.index.cosine),
+            },
             serving: ServingConfig {
                 shards: doc.usize_or("serving.shards", d.serving.shards),
                 cache_rows: doc.usize_or("serving.cache_rows", d.serving.cache_rows),
@@ -327,6 +385,14 @@ impl ExperimentConfig {
                         e.order
                     )));
                 }
+                if e.kind == EmbeddingKind::Word2KetXS && e.order > 8 {
+                    // The XS lazy-reconstruction fast path uses fixed 8-slot
+                    // digit buffers (see word2ketxs.rs).
+                    return Err(Error::Config(format!(
+                        "word2ketXS supports order <= 8 (got {})",
+                        e.order
+                    )));
+                }
                 // emb_dim must admit q = ceil(p^(1/n)) with q^n >= p; always true,
                 // but guard against degenerate q < 2.
                 let q = crate::util::ceil_root(self.model.emb_dim, e.order as u32);
@@ -353,6 +419,9 @@ impl ExperimentConfig {
         }
         if s.queue_depth == 0 || s.max_batch == 0 {
             return Err(Error::Config("serving.queue_depth/max_batch must be >= 1".into()));
+        }
+        if self.index.nlist == 0 || self.index.nprobe == 0 {
+            return Err(Error::Config("index.nlist/nprobe must be >= 1".into()));
         }
         Ok(())
     }
@@ -440,12 +509,51 @@ queue_depth = 256
     }
 
     #[test]
+    fn index_section_parses_and_validates() {
+        let src = r#"
+[index]
+kind = "ivf"
+nlist = 32
+nprobe = 4
+cosine = true
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.index.kind, IndexKind::Ivf);
+        assert_eq!(cfg.index.nlist, 32);
+        assert_eq!(cfg.index.nprobe, 4);
+        assert!(cfg.index.cosine);
+
+        // Defaults: brute-force, dot product.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.index.kind, IndexKind::Brute);
+        assert!(!d.index.cosine);
+
+        assert_eq!(IndexKind::parse("brute-force").unwrap(), IndexKind::Brute);
+        assert_eq!(IndexKind::parse("IVF").unwrap(), IndexKind::Ivf);
+        assert!(IndexKind::parse("kdtree").is_err());
+
+        let mut bad = ExperimentConfig::default();
+        bad.index.nprobe = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
     fn validation_rejects_bad_order() {
         let mut cfg = ExperimentConfig::default();
         cfg.embedding.kind = EmbeddingKind::Word2Ket;
         cfg.embedding.order = 1;
         assert!(cfg.validate().is_err());
         cfg.embedding.order = 2;
+        cfg.validate().unwrap();
+
+        // The XS fast path caps order at 8 (fixed digit buffers).
+        cfg.embedding.kind = EmbeddingKind::Word2KetXS;
+        cfg.embedding.order = 9;
+        cfg.model.emb_dim = 512; // q = 2, 2^9 = 512: would otherwise pass
+        assert!(cfg.validate().is_err());
+        cfg.embedding.order = 8;
+        cfg.model.emb_dim = 256;
         cfg.validate().unwrap();
     }
 

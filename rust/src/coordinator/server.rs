@@ -10,8 +10,12 @@
 //!
 //!   `LOOKUP <id> [<id> ...]\n` → `OK <dim> <f32> <f32> ...\n` (per id)
 //!   `DOT <id a> <id b>\n`      → `OK <f32>\n` (cache-served inner product)
+//!   `KNN <id> <k>\n`           → `OK <n> <id> <score> ...\n` (top-n
+//!                                 neighbors, best first, query excluded)
 //!   `STATS\n`                  → `OK p50_us=.. p99_us=.. served=..
-//!                                 cache_hits=.. cache_misses=.. rejected=..\n`
+//!                                 cache_hits=.. cache_misses=.. rejected=..
+//!                                 knn_queries=.. knn_candidates=..
+//!                                 knn_mean_probes=..\n`
 //!   `QUIT\n`                   → closes the connection.
 //!
 //! Malformed input (bad ids, out-of-range ids, empty LOOKUP, unknown
@@ -21,6 +25,7 @@
 use crate::config::ExperimentConfig;
 use crate::embedding;
 use crate::error::{Error, Result};
+use crate::index::Query;
 use crate::serving::{wire, LookupError, ServingState};
 use crate::util::Rng;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -44,8 +49,9 @@ impl ServerState {
             cfg.model.emb_dim,
             &mut rng,
         );
-        let serving = ServingState::new(store, &cfg.serving);
+        let serving = ServingState::new(store, &cfg.serving, &cfg.index);
         crate::info!("serving {}", serving.store().describe());
+        crate::info!("knn via {}", serving.index().describe());
         ServerState { serving, stop: AtomicBool::new(false) }
     }
 
@@ -66,8 +72,17 @@ impl ServerState {
     fn stats_line(&self) -> String {
         let s = self.serving.stats();
         format!(
-            "OK p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} rejected={}\n",
-            s.p50_us, s.p99_us, s.served, s.cache.hits, s.cache.misses, s.rejected
+            "OK p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} rejected={} \
+             knn_queries={} knn_candidates={} knn_mean_probes={:.2}\n",
+            s.p50_us,
+            s.p99_us,
+            s.served,
+            s.cache.hits,
+            s.cache.misses,
+            s.rejected,
+            s.knn_queries,
+            s.knn_candidates,
+            s.knn_mean_probes
         )
     }
 }
@@ -140,6 +155,23 @@ fn handle_text(
                 _ => "ERR bad id\n".to_string(),
             },
             ["DOT", ..] => "ERR DOT takes exactly two ids\n".to_string(),
+            // No k cap here: the serving layer clamps k to the vocabulary
+            // size (same as the binary protocol).
+            ["KNN", id, k] => match (id.parse::<usize>(), k.parse::<usize>()) {
+                (Ok(id), Ok(k)) => match state.serving.knn(Query::Id(id), k) {
+                    Ok(neighbors) => {
+                        let mut s = format!("OK {}", neighbors.len());
+                        for n in &neighbors {
+                            s.push_str(&format!(" {} {}", n.id, n.score));
+                        }
+                        s.push('\n');
+                        s
+                    }
+                    Err(e) => err_line(e),
+                },
+                _ => "ERR bad id\n".to_string(),
+            },
+            ["KNN", ..] => "ERR KNN takes <query id> <k>\n".to_string(),
             _ => "ERR unknown command\n".to_string(),
         };
         if writer.write_all(response.as_bytes()).is_err() {
@@ -330,8 +362,56 @@ mod tests {
         let resp = request(&addr, "STATS\n", 1);
         assert_eq!(
             resp[0],
-            "OK p50_us=0 p99_us=0 served=0 cache_hits=0 cache_misses=0 rejected=0"
+            "OK p50_us=0 p99_us=0 served=0 cache_hits=0 cache_misses=0 rejected=0 \
+             knn_queries=0 knn_candidates=0 knn_mean_probes=0.00"
         );
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    #[test]
+    fn text_knn_serves_and_counts() {
+        let (state, addr, acc) = start();
+        let addr = addr.as_str();
+
+        let resp = request(addr, "KNN 42 5\n", 1);
+        let parts: Vec<&str> = resp[0].split_whitespace().collect();
+        assert_eq!(parts[0], "OK", "{resp:?}");
+        assert_eq!(parts[1], "5");
+        // 5 neighbors = 5 (id, score) pairs after "OK 5".
+        assert_eq!(parts.len(), 2 + 10, "{resp:?}");
+        let ids: Vec<usize> = parts[2..].chunks(2).map(|c| c[0].parse().unwrap()).collect();
+        let scores: Vec<f32> = parts[2..].chunks(2).map(|c| c[1].parse().unwrap()).collect();
+        assert!(ids.iter().all(|&id| id != 42 && id < 100), "{ids:?}");
+        for w in scores.windows(2) {
+            assert!(w[0] >= w[1], "scores not descending: {scores:?}");
+        }
+
+        // Oversized k clamps to the vocabulary (99 non-query words), same
+        // as the binary protocol — not an error.
+        let resp = request(addr, "KNN 3 999999\n", 1);
+        assert!(resp[0].starts_with("OK 99 "), "{resp:?}");
+
+        // Malformed KNN requests: always ERR, never a panic.
+        for (req, frag) in [
+            ("KNN\n", "KNN takes"),
+            ("KNN 1\n", "KNN takes"),
+            ("KNN 1 2 3\n", "KNN takes"),
+            ("KNN x 5\n", "bad id"),
+            ("KNN 5000 5\n", "range"),
+            ("KNN 1 0\n", "bad query"),
+        ] {
+            let resp = request(addr, req, 1);
+            assert!(resp[0].starts_with("ERR"), "{req:?} -> {resp:?}");
+            assert!(resp[0].contains(frag), "{req:?} -> {resp:?}");
+        }
+
+        // The counters saw exactly the two successful queries (k=5 and the
+        // clamped k), 99 candidates each; failed requests counted nothing.
+        let stats = request(addr, "STATS\n", 1);
+        assert!(stats[0].contains("knn_queries=2"), "{stats:?}");
+        assert!(stats[0].contains("knn_candidates=198"), "{stats:?}");
+
         state.shutdown();
         acc.join().unwrap();
     }
@@ -370,6 +450,93 @@ mod tests {
 
         let stats = bin.stats().unwrap();
         assert!(stats.served > 0);
+        bin.quit().unwrap();
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    #[test]
+    fn binary_knn_end_to_end() {
+        // Acceptance: OP_KNN through the binary wire client against a live
+        // server, agreeing with the server-side serving state and the text
+        // protocol, with STATS knn counters tracking the traffic.
+        let (state, addr, acc) = start();
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+
+        let before = bin.stats().unwrap();
+        assert_eq!(before.knn_queries, 0);
+        assert_eq!(before.knn_candidates, 0);
+        assert_eq!(before.knn_mean_probes, 0.0);
+
+        let k = 7u32;
+        let neighbors = bin.knn(42, k).unwrap();
+        assert_eq!(neighbors.len(), k as usize);
+        assert!(neighbors.iter().all(|&(id, _)| id != 42 && (id as usize) < 100));
+        for w in neighbors.windows(2) {
+            assert!(w[0].1 >= w[1].1, "not best-first: {neighbors:?}");
+        }
+        // Scores are real dot products of served rows: recompute client-side
+        // from wire lookups.
+        let q_rows = bin.lookup(&[42]).unwrap();
+        for &(id, score) in &neighbors {
+            let n_rows = bin.lookup(&[id]).unwrap();
+            let dense: f32 = q_rows[0].iter().zip(n_rows[0].iter()).map(|(x, y)| x * y).sum();
+            assert!(
+                (dense - score).abs() < 1e-4 * dense.abs().max(1.0),
+                "id {id}: wire score {score} vs recomputed {dense}"
+            );
+        }
+
+        // Text protocol sees the same top neighbor.
+        let text = request(&addr, "KNN 42 1\n", 1);
+        let text_best: usize =
+            text[0].split_whitespace().nth(2).unwrap().parse().unwrap();
+        assert_eq!(text_best, neighbors[0].0 as usize, "{text:?}");
+
+        // Errors: out-of-range query id, k == 0, wrong id count.
+        match bin.knn(5000, 3) {
+            Err(crate::serving::WireError::Status(s)) => assert_eq!(s, wire::STATUS_RANGE),
+            other => panic!("expected range error, got {other:?}"),
+        }
+        match bin.knn(1, 0) {
+            Err(crate::serving::WireError::Status(s)) => assert_eq!(s, wire::STATUS_BAD_FRAME),
+            other => panic!("expected bad frame, got {other:?}"),
+        }
+
+        // Counters: 2 successful knn queries (binary + text), 99 candidates
+        // each under the default brute index.
+        let after = bin.stats().unwrap();
+        assert_eq!(after.knn_queries, 2);
+        assert_eq!(after.knn_candidates, 198);
+        assert_eq!(after.knn_mean_probes, 0.0, "brute force probes no cells");
+        bin.quit().unwrap();
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    #[test]
+    fn binary_knn_ivf_configured_server() {
+        // Same path with an IVF index from the [index] config section.
+        let mut cfg = test_cfg();
+        cfg.index.kind = crate::config::IndexKind::Ivf;
+        cfg.index.nlist = 4;
+        cfg.index.nprobe = 2;
+        let (state, listener, addr) = spawn(&cfg).unwrap();
+        let st = state.clone();
+        let acc = std::thread::spawn(move || accept_loop(listener, st));
+
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+        let neighbors = bin.knn(7, 3).unwrap();
+        assert!(!neighbors.is_empty() && neighbors.len() <= 3);
+        let stats = bin.stats().unwrap();
+        assert_eq!(stats.knn_queries, 1);
+        // Typically well under 99 with 2 of 4 cells probed; `<=` because
+        // k-means balance on a tiny vocab is not guaranteed.
+        assert!(stats.knn_candidates <= 99, "{}", stats.knn_candidates);
+        assert!(stats.knn_candidates > 0);
+        assert!((stats.knn_mean_probes - 2.0).abs() < 1e-9);
         bin.quit().unwrap();
 
         state.shutdown();

@@ -90,6 +90,15 @@ pub trait EmbeddingStore: Send + Sync {
 
     /// Human-readable description for reports.
     fn describe(&self) -> String;
+
+    /// Concrete-type escape hatch for layers that can exploit a store's
+    /// internal structure (the `index` scorer reaches factored space through
+    /// this). Stores without structure worth sniffing keep the `None`
+    /// default; wrappers ([`crate::serving::ShardedCache`]) expose themselves
+    /// so callers can unwrap to the inner store.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 }
 
 /// Materialize the full `d × p` matrix (tests / small vocabularies only).

@@ -58,6 +58,18 @@ impl Word2Ket {
         &self.words[id]
     }
 
+    /// Whether LayerNorm is applied at tree nodes (factored identities only
+    /// hold for the raw CP form, so the index scorer checks this).
+    pub fn layernorm(&self) -> bool {
+        self.layernorm
+    }
+
+    /// True when `q^n == p` exactly, i.e. reconstruction is not truncated and
+    /// the factored inner product equals the dense dot product of rows.
+    pub fn exact_dim(&self) -> bool {
+        self.leaf_dim.checked_pow(self.order as u32) == Some(self.dim)
+    }
+
     /// Factored inner product between two words' embeddings without
     /// reconstruction (§2.3): `O(r² n q)` time, `O(1)` space.
     ///
@@ -98,6 +110,10 @@ impl EmbeddingStore for Word2Ket {
             self.num_params(),
             self.space_saving_rate()
         )
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
     }
 }
 

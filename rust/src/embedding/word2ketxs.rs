@@ -34,6 +34,11 @@ pub struct Word2KetXS {
 impl Word2KetXS {
     pub fn random(vocab: usize, dim: usize, order: usize, rank: usize, rng: &mut Rng) -> Self {
         assert!(order >= 2, "word2ketXS needs order >= 2");
+        // The lazy reconstruction / factored-inner fast paths use fixed
+        // 8-slot digit buffers; enforce the bound here (always, not just in
+        // debug) so release builds cannot silently mis-slice. Config
+        // validation rejects order > 8 with a friendlier message.
+        assert!(order <= 8, "word2ketXS supports order <= 8");
         let q = ceil_root(dim, order as u32).max(2);
         let t = ceil_root(vocab, order as u32).max(2);
         // Scale so each reconstructed entry (product of n entries, summed over
@@ -86,6 +91,44 @@ impl Word2KetXS {
         let q = self.leaf_q;
         let f = &mut self.factors[k * self.order + j];
         &mut f[c * q..(c + 1) * q]
+    }
+
+    /// True when `q^n == p` exactly: reconstruction is not truncated and the
+    /// factored inner product below equals the dense dot product of rows.
+    pub fn exact_dim(&self) -> bool {
+        self.leaf_q.checked_pow(self.order as u32) == Some(self.dim)
+    }
+
+    /// Factored inner product between rows `a` and `b` without materializing
+    /// either (§2.3 generalized to the shared-factor form of §3.2):
+    ///
+    /// `⟨row a, row b⟩ = Σ_{k,k'} Π_j ⟨F_jk[:, a_j], F_jk'[:, b_j]⟩`
+    ///
+    /// `O(r² n q)` time, `O(1)` space. Equals the dense dot product when
+    /// [`exact_dim`](Self::exact_dim) holds (the inner product runs over the
+    /// full `q^n` tensor, which `lookup` truncates to `p` otherwise).
+    pub fn inner(&self, a: usize, b: usize) -> f32 {
+        debug_assert!(self.order <= 8, "order > 8 unsupported on the fast path");
+        let mut da = [0usize; 8];
+        let mut db = [0usize; 8];
+        self.radix.decode_into(a, &mut da[..self.order]);
+        self.radix.decode_into(b, &mut db[..self.order]);
+        let mut total = 0.0f32;
+        for k in 0..self.rank {
+            for k2 in 0..self.rank {
+                let mut prod = 1.0f32;
+                for j in 0..self.order {
+                    let ca = self.factor_col(k, j, da[j]);
+                    let cb = self.factor_col(k2, j, db[j]);
+                    prod *= crate::tensor::dot(ca, cb);
+                    if prod == 0.0 {
+                        break;
+                    }
+                }
+                total += prod;
+            }
+        }
+        total
     }
 
     /// Reconstruct row `id` into a caller buffer of length `dim`
@@ -170,6 +213,10 @@ impl EmbeddingStore for Word2KetXS {
         crate::tensor::Tensor::new(vec![ids.len(), self.dim], data).unwrap()
     }
 
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+
     fn describe(&self) -> String {
         format!(
             "word2ketXS order={} rank={} q={} t={} ({}×{}, {} params, {:.0}× saving)",
@@ -251,6 +298,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn factored_inner_matches_dense_lookup() {
+        // Shared-factor inner product vs dot of materialized rows. Dims are
+        // exact powers (q^n == p) so truncation cannot interfere; the
+        // acceptance tolerance is 1e-5 relative.
+        let mut rng = Rng::new(6);
+        for (vocab, dim, order, rank) in [(50usize, 16usize, 2usize, 2usize), (40, 27, 3, 3)] {
+            let e = Word2KetXS::random(vocab, dim, order, rank, &mut rng);
+            assert!(e.exact_dim(), "test requires q^n == p");
+            for (a, b) in [(0usize, 1usize), (7, 7), (3, vocab - 1), (vocab - 1, 0)] {
+                let va = e.lookup(a);
+                let vb = e.lookup(b);
+                let dense: f32 = va.iter().zip(vb.iter()).map(|(x, y)| x * y).sum();
+                let fast = e.inner(a, b);
+                assert!(
+                    (dense - fast).abs() < 1e-5 * dense.abs().max(1.0),
+                    "({a},{b}) o{order}r{rank}: dense {dense} vs factored {fast}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_dims_are_flagged_inexact() {
+        let mut rng = Rng::new(7);
+        // dim 300, order 2 → q = 18, 18² = 324 > 300: truncated.
+        let e = Word2KetXS::random(100, 300, 2, 1, &mut rng);
+        assert!(!e.exact_dim());
     }
 
     #[test]

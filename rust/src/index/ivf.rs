@@ -1,0 +1,332 @@
+//! Inverted-file (IVF) approximate k-NN index.
+//!
+//! A k-means coarse quantizer over *reconstructed* rows partitions the
+//! vocabulary into `nlist` cells; a query ranks the cell centroids, probes
+//! the best `nprobe` cells, and exactly re-ranks only their members through
+//! the [`Scorer`] — the expensive exact pass touches `≈ nprobe/nlist` of the
+//! vocabulary instead of all of it, and for id queries it still runs in
+//! factored space. Training is Lloyd's algorithm on a bounded random sample
+//! (spherical k-means in cosine mode: rows and centroids kept unit-norm),
+//! followed by one streaming full-vocabulary assignment pass; everything is
+//! seeded and deterministic.
+
+use super::{KnnIndex, KnnResult, Query, QueryStats, Scorer, TopK};
+use crate::tensor::dot;
+use crate::util::Rng;
+
+/// Lloyd iterations over the training sample. Coarse quantization does not
+/// need convergence to the last decimal; candidate recall saturates early.
+const KMEANS_ITERS: usize = 8;
+
+/// Upper bound on k-means training rows (keeps index builds on 100k+ vocabs
+/// from scaling with vocabulary size; assignment still sees every row once).
+const MAX_TRAIN_ROWS: usize = 16_384;
+
+/// IVF index: coarse centroids plus per-cell id lists (see module docs).
+pub struct IvfIndex {
+    scorer: Scorer,
+    dim: usize,
+    nprobe: usize,
+    /// `nlist × dim` row-major; unit-norm in cosine mode.
+    centroids: Vec<f32>,
+    /// `lists[c]` holds the word ids whose rows quantize to centroid `c`.
+    lists: Vec<Vec<u32>>,
+}
+
+#[inline]
+fn l2_normalize(row: &mut [f32]) {
+    let n = dot(row, row).sqrt();
+    if n > 0.0 {
+        for x in row.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// Squared L2 distance — the one quantizer metric, shared by training
+/// assignment and query-time probing so the two can never disagree.
+#[inline]
+fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    let mut d = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let t = x - y;
+        d += t * t;
+    }
+    d
+}
+
+/// Index of the centroid closest (L2) to `row`. With unit-norm rows and
+/// centroids this is equivalently the argmax-cosine centroid.
+fn nearest_centroid(centroids: &[f32], dim: usize, row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for (c, cent) in centroids.chunks_exact(dim).enumerate() {
+        let d = l2_sq(row, cent);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+impl IvfIndex {
+    /// Train the coarse quantizer and assign every word to a cell.
+    /// `nlist`/`nprobe` are clamped to sane ranges (`1 ≤ nprobe ≤ nlist ≤
+    /// vocab`).
+    pub fn build(scorer: Scorer, nlist: usize, nprobe: usize, seed: u64) -> IvfIndex {
+        let vocab = scorer.vocab_size();
+        let dim = scorer.dim();
+        assert!(vocab > 0, "cannot index an empty vocabulary");
+        let nlist = nlist.clamp(1, vocab);
+        let nprobe = nprobe.clamp(1, nlist);
+        let cosine = scorer.cosine();
+        let mut rng = Rng::new(seed ^ 0x1df3_a9c4_77b1_02e5);
+
+        // Bounded training sample: a random subset of distinct ids (partial
+        // Fisher-Yates), reconstructed once into a flat matrix. At least
+        // nlist rows (centroid init needs them), at most MAX_TRAIN_ROWS
+        // unless nlist itself is larger.
+        let sample_n = (nlist * 64).min(MAX_TRAIN_ROWS).max(nlist).min(vocab);
+        let mut ids: Vec<usize> = (0..vocab).collect();
+        for i in 0..sample_n {
+            let j = rng.range(i, vocab - 1);
+            ids.swap(i, j);
+        }
+        let mut rows = Vec::with_capacity(sample_n * dim);
+        for &id in &ids[..sample_n] {
+            let mut row = scorer.row(id);
+            if cosine {
+                l2_normalize(&mut row);
+            }
+            rows.extend_from_slice(&row);
+        }
+
+        // Init: the first nlist sampled rows (already a uniform draw).
+        let mut centroids = rows[..nlist * dim].to_vec();
+        let mut assign = vec![usize::MAX; sample_n];
+        for _ in 0..KMEANS_ITERS {
+            let mut changed = false;
+            for (i, row) in rows.chunks_exact(dim).enumerate() {
+                let c = nearest_centroid(&centroids, dim, row);
+                if assign[i] != c {
+                    assign[i] = c;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+            let mut counts = vec![0usize; nlist];
+            let mut sums = vec![0.0f32; nlist * dim];
+            for (i, row) in rows.chunks_exact(dim).enumerate() {
+                let c = assign[i];
+                counts[c] += 1;
+                for (s, &x) in sums[c * dim..(c + 1) * dim].iter_mut().zip(row) {
+                    *s += x;
+                }
+            }
+            for c in 0..nlist {
+                let dst = &mut centroids[c * dim..(c + 1) * dim];
+                if counts[c] == 0 {
+                    // Dead cell: reseed on a random training row so every
+                    // centroid keeps pulling its share of the vocabulary.
+                    let r = rng.below(sample_n);
+                    dst.copy_from_slice(&rows[r * dim..(r + 1) * dim]);
+                } else {
+                    let inv = 1.0 / counts[c] as f32;
+                    for (d, &s) in dst.iter_mut().zip(&sums[c * dim..(c + 1) * dim]) {
+                        *d = s * inv;
+                    }
+                }
+                if cosine {
+                    l2_normalize(&mut centroids[c * dim..(c + 1) * dim]);
+                }
+            }
+        }
+
+        // Release the training buffers before the (long) assignment pass;
+        // only the centroids are needed from here on.
+        drop(rows);
+        drop(assign);
+        drop(ids);
+
+        // Streaming full-vocabulary assignment: one reconstructed row in
+        // flight at a time.
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); nlist];
+        for id in 0..vocab {
+            let mut row = scorer.row(id);
+            if cosine {
+                l2_normalize(&mut row);
+            }
+            lists[nearest_centroid(&centroids, dim, &row)].push(id as u32);
+        }
+        IvfIndex { scorer, dim, nprobe, centroids, lists }
+    }
+
+    pub fn nlist(&self) -> usize {
+        self.lists.len()
+    }
+
+    pub fn nprobe(&self) -> usize {
+        self.nprobe
+    }
+
+    pub fn scorer(&self) -> &Scorer {
+        &self.scorer
+    }
+}
+
+impl KnnIndex for IvfIndex {
+    fn top_k(&self, query: &Query, k: usize) -> KnnResult {
+        // Materialize the query vector once (through the cache for ids); the
+        // *re-rank* below still scores id queries in factored space.
+        let owned;
+        let q: &[f32] = match query {
+            Query::Id(id) => {
+                owned = self.scorer.row(*id);
+                &owned
+            }
+            Query::Vector(v) => v.as_slice(),
+        };
+        let exclude = match query {
+            Query::Id(id) => Some(*id),
+            Query::Vector(_) => None,
+        };
+        let q_norm = if self.scorer.cosine() { dot(q, q).sqrt() } else { 0.0 };
+
+        // Coarse ranking: probe the cells whose centroids are L2-closest to
+        // the query — the same geometry assignment used, so a candidate's
+        // cell ranks exactly by how close the candidate's neighborhood is.
+        // (In cosine mode centroids are unit-norm, making this monotone-
+        // equivalent to ranking by dot/cosine; in dot mode, dot-ranked
+        // probing would systematically skip cells whose *mean* is small
+        // even when their members score high.)
+        let mut cells = TopK::new(self.nprobe);
+        for (c, cent) in self.centroids.chunks_exact(self.dim).enumerate() {
+            cells.push(c, -l2_sq(q, cent));
+        }
+        let probed = cells.into_sorted();
+
+        // Exact re-rank of the probed cells' members: factored pair scores
+        // for id queries on tensorized stores (backend resolved once, not
+        // per candidate), dense dots against the already-materialized query
+        // vector otherwise.
+        let factored_id = matches!(query, Query::Id(_)) && self.scorer.is_factored();
+        let pairs = self.scorer.pair_scorer();
+        let mut top = TopK::new(k);
+        let mut scanned = 0usize;
+        for cell in &probed {
+            for &cand in &self.lists[cell.id] {
+                let b = cand as usize;
+                if Some(b) == exclude {
+                    continue;
+                }
+                let score = match query {
+                    Query::Id(a) if factored_id => pairs.score(*a, b),
+                    _ => self.scorer.score_vec(q, q_norm, b),
+                };
+                top.push(b, score);
+                scanned += 1;
+            }
+        }
+        (top.into_sorted(), QueryStats { candidates: scanned, probes: probed.len() })
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "ivf[nlist={} nprobe={} {}] over {} words",
+            self.lists.len(),
+            self.nprobe,
+            self.scorer.describe(),
+            self.scorer.vocab_size()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{EmbeddingStore, Word2Ket};
+    use crate::index::BruteForce;
+    use std::sync::Arc;
+
+    fn store(vocab: usize) -> Arc<dyn EmbeddingStore> {
+        let mut rng = Rng::new(23);
+        Arc::new(Word2Ket::random(vocab, 16, 2, 2, &mut rng))
+    }
+
+    #[test]
+    fn lists_partition_the_vocabulary() {
+        let ivf = IvfIndex::build(Scorer::new(store(500), false), 8, 2, 1);
+        let mut seen = vec![false; 500];
+        for list in &ivf.lists {
+            for &id in list {
+                assert!(!seen[id as usize], "id {id} in two cells");
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some id unassigned");
+    }
+
+    #[test]
+    fn probing_every_cell_is_exact() {
+        // nprobe == nlist scans every cell, so IVF must reproduce brute
+        // force exactly (the cells partition the vocabulary).
+        let s = store(400);
+        let ivf = IvfIndex::build(Scorer::new(s.clone(), false), 10, 10, 2);
+        let brute = BruteForce::new(Scorer::new(s, false));
+        for &query in &[0usize, 123, 399] {
+            let (approx, stats) = ivf.top_k(&Query::Id(query), 8);
+            let (exact, _) = brute.top_k(&Query::Id(query), 8);
+            assert_eq!(stats.probes, 10);
+            assert_eq!(stats.candidates, 399, "all non-query ids scanned");
+            let a_ids: Vec<usize> = approx.iter().map(|n| n.id).collect();
+            let e_ids: Vec<usize> = exact.iter().map(|n| n.id).collect();
+            assert_eq!(a_ids, e_ids, "query {query}");
+        }
+    }
+
+    #[test]
+    fn partial_probe_is_sublinear_with_reasonable_recall() {
+        let s = store(1000);
+        let ivf = IvfIndex::build(Scorer::new(s.clone(), true), 16, 6, 3);
+        let brute = BruteForce::new(Scorer::new(s, true));
+        let k = 10;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for query in (0..1000).step_by(97) {
+            let (approx, stats) = ivf.top_k(&Query::Id(query), k);
+            assert!(stats.candidates < 999, "probe scanned the whole vocab");
+            assert_eq!(stats.probes, 6);
+            let (exact, _) = brute.top_k(&Query::Id(query), k);
+            let approx_ids: std::collections::HashSet<usize> =
+                approx.iter().map(|n| n.id).collect();
+            hits += exact.iter().filter(|n| approx_ids.contains(&n.id)).count();
+            total += k;
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.2, "recall {recall:.2} suspiciously low");
+    }
+
+    #[test]
+    fn nlist_larger_than_vocab_clamps() {
+        let ivf = IvfIndex::build(Scorer::new(store(12), false), 64, 64, 4);
+        assert!(ivf.nlist() <= 12);
+        let (ns, _) = ivf.top_k(&Query::Id(3), 5);
+        assert_eq!(ns.len(), 5);
+    }
+
+    #[test]
+    fn vector_queries_supported() {
+        // Cosine + exhaustive probing: a word's own row has similarity
+        // exactly 1, the maximum, so it must come back first.
+        let s = store(300);
+        let ivf = IvfIndex::build(Scorer::new(s.clone(), true), 8, 8, 5);
+        let q = s.lookup(42);
+        let (ns, _) = ivf.top_k(&Query::Vector(q), 3);
+        assert_eq!(ns.len(), 3);
+        assert_eq!(ns[0].id, 42, "{ns:?}");
+        assert!((ns[0].score - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,330 @@
+//! Exact similarity scoring over any [`EmbeddingStore`], through *factored
+//! space* when the store is tensorized.
+//!
+//! The paper's representation makes inner products cheap without ever
+//! materializing rows: `⟨Σ_k ⊗_j u_jk, Σ_k' ⊗_j v_jk'⟩ = Σ_{k,k'} Π_j
+//! ⟨u_jk, v_jk'⟩` (§2.3), an `O(r² n q)` computation against the `O(q^n)`
+//! dense dot product. The scorer resolves once, at construction, whether the
+//! store underneath (unwrapping [`ShardedCache`]) is a [`Word2Ket`] or
+//! [`Word2KetXS`] in raw, untruncated form; if so every pair score runs
+//! through the factors, otherwise it falls back to materialized rows served
+//! through the store (and thus through the hot-row cache when present).
+//!
+//! Cosine mode caches per-word L2 norms at construction — computed in
+//! factored space too (`‖v‖² = ⟨v, v⟩`), so even the norm pass never
+//! reconstructs a row on tensorized stores.
+
+use crate::embedding::{EmbeddingStore, Word2Ket, Word2KetXS};
+use crate::serving::ShardedCache;
+use crate::tensor::dot;
+use std::sync::Arc;
+
+/// How pair scores are computed, resolved once at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Backend {
+    /// Per-word CP tensors: factored inner via `Word2Ket::inner`.
+    Word2Ket,
+    /// Shared-factor operator: factored inner via `Word2KetXS::inner`.
+    Word2KetXS,
+    /// Materialized rows through the store (cache-aware when wrapped).
+    Dense,
+}
+
+/// Peel cache wrappers off a store to reach the structure underneath.
+fn unwrap_store(store: &dyn EmbeddingStore) -> &dyn EmbeddingStore {
+    if let Some(any) = store.as_any() {
+        if let Some(cache) = any.downcast_ref::<ShardedCache>() {
+            return unwrap_store(cache.inner());
+        }
+    }
+    store
+}
+
+/// Decide the scoring backend. The factored identities only hold for raw
+/// (no LayerNorm) CP form over the full `q^n` tensor, so truncated or
+/// LayerNorm-ed stores score densely.
+fn sniff(store: &dyn EmbeddingStore) -> Backend {
+    let inner = unwrap_store(store);
+    if let Some(any) = inner.as_any() {
+        if let Some(w) = any.downcast_ref::<Word2Ket>() {
+            if !w.layernorm() && w.exact_dim() {
+                return Backend::Word2Ket;
+            }
+        }
+        if let Some(xs) = any.downcast_ref::<Word2KetXS>() {
+            if xs.exact_dim() {
+                return Backend::Word2KetXS;
+            }
+        }
+    }
+    Backend::Dense
+}
+
+/// Exact dot/cosine scorer over a store (see module docs).
+pub struct Scorer {
+    store: Arc<dyn EmbeddingStore>,
+    backend: Backend,
+    cosine: bool,
+    /// Per-word L2 norms; populated only in cosine mode.
+    norms: Vec<f32>,
+}
+
+impl Scorer {
+    pub fn new(store: Arc<dyn EmbeddingStore>, cosine: bool) -> Scorer {
+        let backend = sniff(store.as_ref());
+        let mut scorer = Scorer { store, backend, cosine, norms: Vec::new() };
+        if cosine {
+            let vocab = scorer.vocab_size();
+            let mut norms = Vec::with_capacity(vocab);
+            {
+                let pairs = scorer.pair_scorer();
+                for id in 0..vocab {
+                    norms.push(pairs.raw_inner(id, id).max(0.0).sqrt());
+                }
+            }
+            scorer.norms = norms;
+        }
+        scorer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.store.vocab_size()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    pub fn cosine(&self) -> bool {
+        self.cosine
+    }
+
+    /// True when pair scores go through factored space.
+    pub fn is_factored(&self) -> bool {
+        self.backend != Backend::Dense
+    }
+
+    /// Materialize row `id` through the store (cache-aware when wrapped).
+    pub fn row(&self, id: usize) -> Vec<f32> {
+        self.store.lookup(id)
+    }
+
+    fn w2k(&self) -> &Word2Ket {
+        unwrap_store(self.store.as_ref())
+            .as_any()
+            .and_then(|a| a.downcast_ref::<Word2Ket>())
+            .expect("scorer backend resolved to word2ket")
+    }
+
+    fn xs(&self) -> &Word2KetXS {
+        unwrap_store(self.store.as_ref())
+            .as_any()
+            .and_then(|a| a.downcast_ref::<Word2KetXS>())
+            .expect("scorer backend resolved to word2ketXS")
+    }
+
+    /// Resolve a per-scan scoring handle: the concrete store reference is
+    /// looked up once here instead of once per pair — the downcast chain
+    /// through the cache wrapper costs on the order of the factored kernel
+    /// itself at small rank, so scans must not pay it in the inner loop.
+    pub fn pair_scorer(&self) -> PairScorer<'_> {
+        let backend = match self.backend {
+            Backend::Word2Ket => ResolvedBackend::Word2Ket(self.w2k()),
+            Backend::Word2KetXS => ResolvedBackend::Word2KetXS(self.xs()),
+            Backend::Dense => ResolvedBackend::Dense,
+        };
+        PairScorer { backend, store: self.store.as_ref(), cosine: self.cosine, norms: &self.norms }
+    }
+
+    /// Raw inner product `⟨row a, row b⟩` — factored when available.
+    /// One-shot convenience; scans should use [`Self::pair_scorer`].
+    pub fn raw_inner(&self, a: usize, b: usize) -> f32 {
+        self.pair_scorer().raw_inner(a, b)
+    }
+
+    /// `‖row id‖`: cached in cosine mode, computed (factored) on demand
+    /// otherwise.
+    pub fn norm(&self, id: usize) -> f32 {
+        match self.norms.get(id) {
+            Some(&n) => n,
+            None => self.raw_inner(id, id).max(0.0).sqrt(),
+        }
+    }
+
+    /// Ranking score between two stored rows: dot product, or cosine using
+    /// the cached norms. One-shot convenience; scans should use
+    /// [`Self::pair_scorer`].
+    pub fn score_pair(&self, a: usize, b: usize) -> f32 {
+        self.pair_scorer().score(a, b)
+    }
+
+    /// Ranking score between an external query vector and stored row `b`.
+    /// `q_norm` is `‖q‖`, ignored unless in cosine mode.
+    pub fn score_vec(&self, q: &[f32], q_norm: f32, b: usize) -> f32 {
+        let ip = dot(q, &self.store.lookup(b));
+        if self.cosine {
+            let denom = q_norm * self.norm(b);
+            if denom > 0.0 {
+                ip / denom
+            } else {
+                0.0
+            }
+        } else {
+            ip
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        let metric = if self.cosine { "cosine" } else { "dot" };
+        let path = match self.backend {
+            Backend::Word2Ket => "factored(word2ket)",
+            Backend::Word2KetXS => "factored(word2ketXS)",
+            Backend::Dense => "materialized",
+        };
+        format!("{metric}/{path}")
+    }
+}
+
+/// Concrete per-scan store access (see [`Scorer::pair_scorer`]).
+enum ResolvedBackend<'a> {
+    Word2Ket(&'a Word2Ket),
+    Word2KetXS(&'a Word2KetXS),
+    Dense,
+}
+
+/// Pair-scoring handle with the backend resolved once per scan.
+///
+/// Borrows the [`Scorer`]; create one per query/scan and call
+/// [`score`](Self::score) (or [`raw_inner`](Self::raw_inner)) in the loop.
+pub struct PairScorer<'a> {
+    backend: ResolvedBackend<'a>,
+    store: &'a dyn EmbeddingStore,
+    cosine: bool,
+    norms: &'a [f32],
+}
+
+impl PairScorer<'_> {
+    /// Raw inner product `⟨row a, row b⟩` — factored when available.
+    #[inline]
+    pub fn raw_inner(&self, a: usize, b: usize) -> f32 {
+        match &self.backend {
+            ResolvedBackend::Word2Ket(w) => w.inner(a, b),
+            ResolvedBackend::Word2KetXS(xs) => xs.inner(a, b),
+            ResolvedBackend::Dense => {
+                let va = self.store.lookup(a);
+                if a == b {
+                    // Norm computations hit this: don't reconstruct twice.
+                    dot(&va, &va)
+                } else {
+                    dot(&va, &self.store.lookup(b))
+                }
+            }
+        }
+    }
+
+    /// Ranking score, same contract as [`Scorer::score_pair`].
+    #[inline]
+    pub fn score(&self, a: usize, b: usize) -> f32 {
+        let ip = self.raw_inner(a, b);
+        if self.cosine {
+            let denom = self.norms[a] * self.norms[b];
+            if denom > 0.0 {
+                ip / denom
+            } else {
+                0.0
+            }
+        } else {
+            ip
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn w2k(vocab: usize, dim: usize, order: usize, rank: usize) -> Arc<dyn EmbeddingStore> {
+        let mut rng = Rng::new(3);
+        Arc::new(Word2Ket::random(vocab, dim, order, rank, &mut rng))
+    }
+
+    #[test]
+    fn factored_backends_detected() {
+        // 4^2 == 16: exact → factored.
+        assert!(Scorer::new(w2k(30, 16, 2, 2), false).is_factored());
+        let mut rng = Rng::new(4);
+        let xs: Arc<dyn EmbeddingStore> = Arc::new(Word2KetXS::random(30, 16, 2, 2, &mut rng));
+        assert!(Scorer::new(xs, false).is_factored());
+    }
+
+    #[test]
+    fn truncated_or_layernormed_stores_score_densely() {
+        // 18² = 324 > 300: truncated reconstruction → dense fallback.
+        assert!(!Scorer::new(w2k(30, 300, 2, 1), false).is_factored());
+        let mut rng = Rng::new(5);
+        let mut w = Word2Ket::random(30, 16, 2, 1, &mut rng);
+        w.set_layernorm(true);
+        let store: Arc<dyn EmbeddingStore> = Arc::new(w);
+        let s = Scorer::new(store, false);
+        assert!(!s.is_factored());
+        // Dense scoring still works (no factored-identity assert tripped).
+        assert!(s.score_pair(0, 1).is_finite());
+    }
+
+    #[test]
+    fn factored_scores_match_dense_rows() {
+        let store = w2k(40, 16, 2, 3);
+        let scorer = Scorer::new(store.clone(), false);
+        assert!(scorer.is_factored());
+        for (a, b) in [(0usize, 1usize), (5, 5), (39, 7)] {
+            let va = store.lookup(a);
+            let vb = store.lookup(b);
+            let dense = dot(&va, &vb);
+            let fast = scorer.score_pair(a, b);
+            assert!(
+                (dense - fast).abs() < 1e-5 * dense.abs().max(1.0),
+                "({a},{b}): {dense} vs {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn cosine_scores_normalized_and_consistent() {
+        let store = w2k(40, 16, 2, 2);
+        let scorer = Scorer::new(store.clone(), true);
+        for (a, b) in [(0usize, 3usize), (11, 29)] {
+            let c = scorer.score_pair(a, b);
+            assert!((-1.0 - 1e-4..=1.0 + 1e-4).contains(&c), "cosine {c} out of range");
+            let va = store.lookup(a);
+            let vb = store.lookup(b);
+            let want = dot(&va, &vb) / (dot(&va, &va).sqrt() * dot(&vb, &vb).sqrt());
+            assert!((c - want).abs() < 1e-4, "({a},{b}): {c} vs {want}");
+        }
+        // Self-similarity is 1.
+        assert!((scorer.score_pair(7, 7) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn scoring_reaches_through_the_cache() {
+        let mut rng = Rng::new(8);
+        let inner = Box::new(Word2Ket::random(30, 16, 2, 2, &mut rng));
+        let cached: Arc<dyn EmbeddingStore> = Arc::new(ShardedCache::new(inner, 2, 64));
+        let scorer = Scorer::new(cached, false);
+        assert!(scorer.is_factored(), "cache wrapper must be transparent to the sniff");
+        assert!(scorer.score_pair(1, 2).is_finite());
+    }
+
+    #[test]
+    fn score_vec_matches_pair_on_materialized_query() {
+        let store = w2k(30, 16, 2, 2);
+        let scorer = Scorer::new(store.clone(), true);
+        let q = store.lookup(4);
+        let qn = dot(&q, &q).sqrt();
+        for b in [0usize, 9, 21] {
+            let by_vec = scorer.score_vec(&q, qn, b);
+            let by_pair = scorer.score_pair(4, b);
+            assert!((by_vec - by_pair).abs() < 1e-4, "b={b}: {by_vec} vs {by_pair}");
+        }
+    }
+}

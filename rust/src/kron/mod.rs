@@ -260,6 +260,57 @@ mod tests {
     }
 
     #[test]
+    fn kron_entry_and_row_match_chain_tree_oracles() {
+        // Randomized factor shapes — including order 1 and non-square
+        // factors — with the dense chain/tree materializations as oracles
+        // for both lazy accessors.
+        let mut rng = Rng::new(41);
+        for case in 0..12usize {
+            let order = 1 + case % 3;
+            let factors: Vec<Tensor> = (0..order)
+                .map(|_| {
+                    let r = rng.range(1, 4);
+                    let c = rng.range(1, 4);
+                    Tensor::new(vec![r, c], rng.uniform_vec(r * c, -1.0, 1.0)).unwrap()
+                })
+                .collect();
+            let refs: Vec<&Tensor> = factors.iter().collect();
+            let rows: usize = factors.iter().map(|f| f.shape()[0]).product();
+            let cols: usize = factors.iter().map(|f| f.shape()[1]).product();
+            let radix = MixedRadix::new(factors.iter().map(|f| f.shape()[0]).collect());
+            for i in 0..rows {
+                let digits = radix.decode(i);
+                let factor_rows: Vec<&[f32]> =
+                    refs.iter().zip(&digits).map(|(f, &d)| f.row(d)).collect();
+                let chain = kron_chain(&factor_rows);
+                let tree = kron_tree(&factor_rows);
+                let lazy = kron_row(&refs, i);
+                assert_eq!(lazy.len(), cols, "case {case} row {i}");
+                for j in 0..cols {
+                    assert!(
+                        (chain[j] - tree[j]).abs() < 1e-5,
+                        "case {case} ({i},{j}): chain {} vs tree {}",
+                        chain[j],
+                        tree[j]
+                    );
+                    assert!(
+                        (lazy[j] - chain[j]).abs() < 1e-5,
+                        "case {case} ({i},{j}): kron_row {} vs chain {}",
+                        lazy[j],
+                        chain[j]
+                    );
+                    let entry = kron_entry(&refs, i, j);
+                    assert!(
+                        (entry - chain[j]).abs() < 1e-5,
+                        "case {case} ({i},{j}): kron_entry {entry} vs chain {}",
+                        chain[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn kron_entry_matches_dense() {
         let mut rng = Rng::new(3);
         let a = Tensor::new(vec![2, 3], rng.uniform_vec(6, -1.0, 1.0)).unwrap();

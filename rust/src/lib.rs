@@ -40,6 +40,7 @@ pub mod corpus;
 pub mod data;
 pub mod embedding;
 pub mod error;
+pub mod index;
 pub mod kron;
 pub mod metrics;
 pub mod runtime;

@@ -242,6 +242,15 @@ impl ShardedCache {
         }
     }
 
+    /// Zero the hit/miss counters; cached rows stay resident. The serving
+    /// layer calls this after k-NN index construction, which intentionally
+    /// reads rows through the cache (warming it) but must not show up as
+    /// request traffic in `STATS`.
+    pub fn reset_stats(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
     /// Fill `out` with row `id` through the cache: one copy on a hit, one
     /// reconstruction + copy on a miss. Reconstruction happens *outside* the
     /// shard lock — concurrent misses on the same id may duplicate work but
@@ -292,6 +301,13 @@ impl EmbeddingStore for ShardedCache {
         let p = self.inner.dim();
         let data = crate::embedding::dedup_scatter(ids, p, |id, out| self.fetch_into(id, out));
         crate::tensor::Tensor::new(vec![ids.len(), p], data).expect("lookup_batch shape")
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        // Lets the index scorer unwrap the cache and reach the factored
+        // store underneath (cached rows are dense; factored scoring wants
+        // the factors).
+        Some(self)
     }
 
     fn describe(&self) -> String {

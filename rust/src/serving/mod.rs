@@ -1,5 +1,5 @@
 //! Production serving layer: sharded hot-row cache, worker pool, binary wire
-//! protocol.
+//! protocol, and the k-NN request path.
 //!
 //! This is the request path behind `w2k serve` and the `serve_embeddings`
 //! example. The paper's word2ketXS table is small enough to live in cache
@@ -11,13 +11,19 @@
 //!   reconstructed once and then served as memcpys.
 //! * [`pool::WorkerPool`] — per-shard bounded queues drained in micro-batches
 //!   by independent workers, with fail-fast backpressure and per-worker
-//!   latency summaries merged on `STATS`.
+//!   latency summaries merged on `STATS`. Lookup *and* k-NN jobs flow
+//!   through the same queues.
 //! * [`wire`] — a length-prefixed binary protocol negotiated on the same
 //!   TCP listener as the text protocol (see `coordinator::server`).
+//! * similarity search — a [`crate::index::KnnIndex`] (brute force or IVF,
+//!   `[index]` config) built over the cached store at startup serves
+//!   `KNN`/`OP_KNN` queries, scoring in factored space when the store is
+//!   tensorized.
 //!
 //! Configuration arrives via `[serving]` in the experiment TOML
 //! ([`crate::config::ServingConfig`]): `shards`, `cache_rows`,
-//! `batch_window_us`, `queue_depth`, `max_batch`.
+//! `batch_window_us`, `queue_depth`, `max_batch`; the index via `[index]`
+//! ([`crate::config::IndexConfig`]): `kind`, `nlist`, `nprobe`, `cosine`.
 
 pub mod cache;
 pub mod pool;
@@ -27,18 +33,21 @@ pub use cache::{CacheStats, ShardedCache};
 pub use pool::{Job, Overloaded, WorkerPool};
 pub use wire::{BinaryClient, WireError, WireStats};
 
-use crate::config::ServingConfig;
+use crate::config::{IndexConfig, ServingConfig};
 use crate::embedding::EmbeddingStore;
+use crate::index::{build_index, KnnIndex, Neighbor, Query};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-/// Why a lookup could not be served.
+/// Why a request could not be served.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LookupError {
     /// Request contained no ids.
     Empty,
     /// Some id is >= vocab_size.
     OutOfRange,
+    /// Malformed knn query (k == 0, or query vector of the wrong dimension).
+    BadQuery,
     /// Every pool queue is full (backpressure).
     Overloaded,
     /// The pool did not reply within the request deadline.
@@ -50,6 +59,7 @@ impl std::fmt::Display for LookupError {
         let s = match self {
             LookupError::Empty => "empty request",
             LookupError::OutOfRange => "id out of range",
+            LookupError::BadQuery => "bad query",
             LookupError::Overloaded => "overloaded",
             LookupError::Timeout => "timeout",
         };
@@ -57,7 +67,8 @@ impl std::fmt::Display for LookupError {
     }
 }
 
-/// Aggregate serving statistics (pool + cache), zeros before any traffic.
+/// Aggregate serving statistics (pool + cache + knn), zeros before any
+/// traffic.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServingStats {
     pub p50_us: f64,
@@ -65,21 +76,40 @@ pub struct ServingStats {
     pub served: u64,
     pub rejected: u64,
     pub cache: CacheStats,
+    /// k-NN queries answered.
+    pub knn_queries: u64,
+    /// Candidates exactly scored across all knn queries.
+    pub knn_candidates: u64,
+    /// Mean IVF cells probed per knn query (0 for brute force / no traffic).
+    pub knn_mean_probes: f64,
 }
 
-/// Shared per-server serving state: cached store + worker pool.
+/// Shared per-server serving state: cached store + worker pool + knn index.
 ///
 /// Protocol handlers (text in `coordinator::server`, binary in [`wire`])
 /// validate and format; everything between socket and store lives here.
 pub struct ServingState {
     store: Arc<ShardedCache>,
+    index: Arc<dyn KnnIndex>,
     pool: WorkerPool,
     timeout: Duration,
 }
 
 impl ServingState {
-    pub fn new(inner: Box<dyn EmbeddingStore>, cfg: &ServingConfig) -> ServingState {
+    pub fn new(
+        inner: Box<dyn EmbeddingStore>,
+        cfg: &ServingConfig,
+        index_cfg: &IndexConfig,
+    ) -> ServingState {
         let store = Arc::new(ShardedCache::new(inner, cfg.shards, cfg.cache_rows));
+        let index_store: Arc<dyn EmbeddingStore> = store.clone();
+        // Fixed seed: index structure (IVF centroids) is deterministic for a
+        // given store, so restarts serve identical results.
+        let index: Arc<dyn KnnIndex> = Arc::from(build_index(index_cfg, index_store, 0x6b6e6e));
+        // Index construction (IVF k-means, cosine norm pass) reads rows
+        // through the cache — useful warming, but it must not count as
+        // traffic: STATS stays all-zero until the first real request.
+        store.reset_stats();
         let pool_store: Arc<dyn EmbeddingStore> = store.clone();
         let pool = WorkerPool::new(
             pool_store,
@@ -87,12 +117,18 @@ impl ServingState {
             cfg.queue_depth,
             Duration::from_micros(cfg.batch_window_us),
             cfg.max_batch,
+            Some(index.clone()),
         );
-        ServingState { store, pool, timeout: Duration::from_secs(5) }
+        ServingState { store, index, pool, timeout: Duration::from_secs(5) }
     }
 
     pub fn store(&self) -> &ShardedCache {
         &self.store
+    }
+
+    /// The similarity index answering `KNN` queries.
+    pub fn index(&self) -> &dyn KnnIndex {
+        self.index.as_ref()
     }
 
     pub fn dim(&self) -> usize {
@@ -119,7 +155,7 @@ impl ServingState {
         }
         let (tx, rx) = mpsc::channel();
         self.pool
-            .submit(Job { ids, enqueued: Instant::now(), reply: tx })
+            .submit(Job::Lookup { ids, enqueued: Instant::now(), reply: tx })
             .map_err(|_| LookupError::Overloaded)?;
         rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)
     }
@@ -136,16 +172,56 @@ impl ServingState {
         Ok(crate::tensor::dot(&va, &vb))
     }
 
-    /// Pool + cache statistics; all-zero (never NaN) before any traffic.
+    /// Validate and enqueue a top-k similarity query through the worker
+    /// pool; neighbors come back best-first. For [`Query::Id`] the query
+    /// word itself is excluded from the results. `k` is clamped to the
+    /// vocabulary size (the answer can never be larger, and an unclamped
+    /// client-supplied k would size the selection heap — a u32::MAX k from
+    /// the binary wire must not turn into a giant eager allocation).
+    pub fn knn(&self, query: Query, k: usize) -> Result<Vec<Neighbor>, LookupError> {
+        if k == 0 {
+            return Err(LookupError::BadQuery);
+        }
+        let k = k.min(self.store.vocab_size());
+        match &query {
+            Query::Id(id) => {
+                if *id >= self.store.vocab_size() {
+                    return Err(LookupError::OutOfRange);
+                }
+            }
+            Query::Vector(v) => {
+                if v.len() != self.dim() {
+                    return Err(LookupError::BadQuery);
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        self.pool
+            .submit(Job::Knn { query, k, enqueued: Instant::now(), reply: tx })
+            .map_err(|_| LookupError::Overloaded)?;
+        // knn accounting happens worker-side (like `served`), so queries
+        // the caller gives up on are still counted when the scan finishes.
+        let (neighbors, _stats) = rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)?;
+        Ok(neighbors)
+    }
+
+    /// Pool + cache + knn statistics; all-zero (never NaN) before any
+    /// traffic.
     pub fn stats(&self) -> ServingStats {
         let lat = self.pool.latency_summary();
         let (p50, p99) = if lat.is_empty() { (0.0, 0.0) } else { (lat.p50(), lat.p99()) };
+        let (knn_queries, knn_candidates, knn_probes) = self.pool.knn_counters();
+        let knn_mean_probes =
+            if knn_queries == 0 { 0.0 } else { knn_probes as f64 / knn_queries as f64 };
         ServingStats {
             p50_us: p50,
             p99_us: p99,
             served: self.pool.served(),
             rejected: self.pool.rejected(),
             cache: self.store.stats(),
+            knn_queries,
+            knn_candidates,
+            knn_mean_probes,
         }
     }
 
@@ -158,14 +234,22 @@ impl ServingState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ServingConfig;
+    use crate::config::{IndexConfig, IndexKind, ServingConfig};
     use crate::embedding::{EmbeddingStore, Word2KetXS};
     use crate::util::Rng;
 
     fn state() -> ServingState {
+        state_with_index(IndexConfig::default())
+    }
+
+    fn state_with_index(index_cfg: IndexConfig) -> ServingState {
         let mut rng = Rng::new(0);
         let inner = Box::new(Word2KetXS::random(200, 16, 2, 2, &mut rng));
-        ServingState::new(inner, &ServingConfig { batch_window_us: 50, ..Default::default() })
+        ServingState::new(
+            inner,
+            &ServingConfig { batch_window_us: 50, ..Default::default() },
+            &index_cfg,
+        )
     }
 
     #[test]
@@ -191,6 +275,64 @@ mod tests {
     }
 
     #[test]
+    fn knn_validates_then_serves() {
+        let st = state();
+        assert_eq!(st.knn(Query::Id(999), 5).unwrap_err(), LookupError::OutOfRange);
+        assert_eq!(st.knn(Query::Id(3), 0).unwrap_err(), LookupError::BadQuery);
+        assert_eq!(st.knn(Query::Vector(vec![0.0; 3]), 5).unwrap_err(), LookupError::BadQuery);
+
+        let ns = st.knn(Query::Id(3), 5).unwrap();
+        assert_eq!(ns.len(), 5);
+        assert!(ns.iter().all(|n| n.id != 3));
+        for w in ns.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        // Best neighbor agrees with an exhaustive dot scan through the cache
+        // (tie-robust: the returned winner's dense score must match the true
+        // maximum within float noise).
+        let q = st.store().lookup(3);
+        let mut best_s = f32::NEG_INFINITY;
+        for b in 0..200 {
+            if b != 3 {
+                best_s = best_s.max(crate::tensor::dot(&q, &st.store().lookup(b)));
+            }
+        }
+        let winner_dense = crate::tensor::dot(&q, &st.store().lookup(ns[0].id));
+        assert!(
+            (winner_dense - best_s).abs() < 1e-4,
+            "knn winner {winner_dense} vs exhaustive max {best_s}"
+        );
+        st.shutdown();
+    }
+
+    #[test]
+    fn knn_counters_track_traffic() {
+        let st = state_with_index(IndexConfig {
+            kind: IndexKind::Ivf,
+            nlist: 8,
+            nprobe: 3,
+            cosine: false,
+        });
+        let before = st.stats();
+        assert_eq!(before.knn_queries, 0);
+        assert_eq!(before.knn_candidates, 0);
+        assert_eq!(before.knn_mean_probes, 0.0);
+        // IVF construction reconstructs rows through the cache; that must
+        // not surface as pre-traffic cache activity.
+        assert_eq!(before.cache.hits, 0, "index build leaked into cache stats");
+        assert_eq!(before.cache.misses, 0, "index build leaked into cache stats");
+
+        for id in [1usize, 2, 3, 4] {
+            st.knn(Query::Id(id), 4).unwrap();
+        }
+        let after = st.stats();
+        assert_eq!(after.knn_queries, 4);
+        assert!(after.knn_candidates > 0);
+        assert!((after.knn_mean_probes - 3.0).abs() < 1e-9, "{}", after.knn_mean_probes);
+        st.shutdown();
+    }
+
+    #[test]
     fn stats_zero_before_traffic() {
         let st = state();
         let s = st.stats();
@@ -199,6 +341,9 @@ mod tests {
         assert_eq!(s.p99_us, 0.0);
         assert_eq!(s.rejected, 0);
         assert_eq!(s.cache.hits, 0);
+        assert_eq!(s.knn_queries, 0);
+        assert_eq!(s.knn_candidates, 0);
+        assert_eq!(s.knn_mean_probes, 0.0);
         st.shutdown();
     }
 }

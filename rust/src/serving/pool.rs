@@ -6,24 +6,38 @@
 //! when every queue is at `queue_depth`, submission fails fast
 //! (backpressure) instead of growing memory and latency without limit.
 //!
-//! Each worker micro-batches: once a job arrives it waits `batch_window` for
-//! more to land, then drains up to `max_batch` jobs, flattens their ids into
-//! one `lookup_batch` call (which dedups repeated ids), and scatters rows
-//! back to each job's reply channel. Per-worker latency summaries avoid a
-//! shared stats lock on the hot path and are merged on demand for `STATS`.
+//! Two job kinds flow through the same queues: batched row lookups and k-NN
+//! similarity queries. Each worker micro-batches: once a job arrives it
+//! waits `batch_window` for more to land, then drains up to `max_batch`
+//! jobs. Lookup jobs across the drain are flattened into one `lookup_batch`
+//! call (which dedups repeated ids) and rows are scattered back per job;
+//! k-NN jobs run against the shared [`KnnIndex`] on the worker thread, so
+//! index scans never block the listener. Per-worker latency summaries avoid
+//! a shared stats lock on the hot path and are merged on demand for `STATS`.
 
 use crate::embedding::EmbeddingStore;
+use crate::index::{KnnIndex, KnnResult, Query};
 use crate::util::Summary;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One queued lookup request: ids in, rows out through `reply`.
-pub struct Job {
-    pub ids: Vec<usize>,
-    pub enqueued: Instant,
-    pub reply: mpsc::Sender<Vec<Vec<f32>>>,
+/// One queued request.
+pub enum Job {
+    /// Reconstruct rows for `ids`; rows come back in request order.
+    Lookup {
+        ids: Vec<usize>,
+        enqueued: Instant,
+        reply: mpsc::Sender<Vec<Vec<f32>>>,
+    },
+    /// Top-`k` similarity search against the pool's index.
+    Knn {
+        query: Query,
+        k: usize,
+        enqueued: Instant,
+        reply: mpsc::Sender<KnnResult>,
+    },
 }
 
 /// Submission failed because every queue is full.
@@ -38,9 +52,19 @@ struct ShardQueue {
 struct PoolShared {
     queues: Vec<ShardQueue>,
     store: Arc<dyn EmbeddingStore>,
+    /// Index serving `Job::Knn`; a pool built without one drops knn reply
+    /// channels, which surfaces to the caller as an immediate disconnect on
+    /// its receiver (not a hang). Servers always attach an index.
+    index: Option<Arc<dyn KnnIndex>>,
     stop: AtomicBool,
     served: AtomicU64,
     rejected: AtomicU64,
+    /// k-NN accounting, incremented by workers as queries complete (like
+    /// `served`, and unlike caller-side counting it still counts queries
+    /// whose caller gave up waiting).
+    knn_queries: AtomicU64,
+    knn_candidates: AtomicU64,
+    knn_probes: AtomicU64,
     latencies_us: Vec<Mutex<Summary>>,
     depth: usize,
     window: Duration,
@@ -61,6 +85,7 @@ impl WorkerPool {
         queue_depth: usize,
         batch_window: Duration,
         max_batch: usize,
+        index: Option<Arc<dyn KnnIndex>>,
     ) -> WorkerPool {
         let workers = workers.max(1);
         let shared = Arc::new(PoolShared {
@@ -68,9 +93,13 @@ impl WorkerPool {
                 .map(|_| ShardQueue { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new() })
                 .collect(),
             store,
+            index,
             stop: AtomicBool::new(false),
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            knn_queries: AtomicU64::new(0),
+            knn_candidates: AtomicU64::new(0),
+            knn_probes: AtomicU64::new(0),
             latencies_us: (0..workers).map(|_| Mutex::new(Summary::new())).collect(),
             depth: queue_depth.max(1),
             window: batch_window,
@@ -115,7 +144,8 @@ impl WorkerPool {
         Err(Overloaded)
     }
 
-    /// Total rows served across all workers.
+    /// Total rows served across all workers (lookup jobs only; knn queries
+    /// are tracked separately in [`Self::knn_counters`]).
     pub fn served(&self) -> u64 {
         self.shared.served.load(Ordering::Relaxed)
     }
@@ -123,6 +153,16 @@ impl WorkerPool {
     /// Jobs rejected for backpressure.
     pub fn rejected(&self) -> u64 {
         self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// k-NN accounting: (queries answered, candidates exactly scored,
+    /// coarse cells probed), counted worker-side as scans complete.
+    pub fn knn_counters(&self) -> (u64, u64, u64) {
+        (
+            self.shared.knn_queries.load(Ordering::Relaxed),
+            self.shared.knn_candidates.load(Ordering::Relaxed),
+            self.shared.knn_probes.load(Ordering::Relaxed),
+        )
     }
 
     /// Merge the per-worker latency summaries into one view.
@@ -187,29 +227,72 @@ const LATENCY_WINDOW: usize = 1 << 16;
 
 fn worker_loop(shared: &PoolShared, w: usize) {
     while let Some(batch) = take_batch(shared, w) {
-        // One flat store call per drained batch: dedup inside lookup_batch
-        // collapses the Zipf head across all jobs in the batch.
+        // Split the drain: lookups are scattered and answered first — their
+        // rows come from one flat store call and must not wait behind index
+        // scans that happen to share the micro-batch.
+        let mut lookups = Vec::new();
+        let mut knns = Vec::new();
         let mut all_ids = Vec::new();
-        for job in &batch {
-            all_ids.extend_from_slice(&job.ids);
-        }
-        let tensor = shared.store.lookup_batch(&all_ids);
-        let dim = shared.store.dim();
-        let now = Instant::now();
-        let mut row = 0usize;
-        let mut lat = shared.latencies_us[w].lock().unwrap();
-        if lat.len() >= LATENCY_WINDOW {
-            *lat = Summary::new();
-        }
         for job in batch {
-            let mut rows = Vec::with_capacity(job.ids.len());
-            for _ in 0..job.ids.len() {
-                rows.push(tensor.data()[row * dim..(row + 1) * dim].to_vec());
-                row += 1;
+            match job {
+                Job::Lookup { ids, enqueued, reply } => {
+                    all_ids.extend_from_slice(&ids);
+                    lookups.push((ids, enqueued, reply));
+                }
+                Job::Knn { query, k, enqueued, reply } => knns.push((query, k, enqueued, reply)),
             }
-            lat.add(now.duration_since(job.enqueued).as_secs_f64() * 1e6);
-            shared.served.fetch_add(job.ids.len() as u64, Ordering::Relaxed);
-            let _ = job.reply.send(rows);
+        }
+
+        // One flat store call covering every lookup job in the drain: dedup
+        // inside lookup_batch collapses the Zipf head across all of them.
+        if !all_ids.is_empty() {
+            let tensor = shared.store.lookup_batch(&all_ids);
+            let dim = shared.store.dim();
+            // Each job's latency is recorded *before* its reply is sent
+            // (under the per-worker stats lock), so a caller that has
+            // received its reply is guaranteed to see the request in STATS.
+            let now = Instant::now();
+            let mut row = 0usize;
+            let mut lat = shared.latencies_us[w].lock().unwrap();
+            if lat.len() >= LATENCY_WINDOW {
+                *lat = Summary::new();
+            }
+            for (ids, enqueued, reply) in lookups {
+                let mut rows = Vec::with_capacity(ids.len());
+                for _ in 0..ids.len() {
+                    rows.push(tensor.data()[row * dim..(row + 1) * dim].to_vec());
+                    row += 1;
+                }
+                lat.add(now.duration_since(enqueued).as_secs_f64() * 1e6);
+                shared.served.fetch_add(ids.len() as u64, Ordering::Relaxed);
+                let _ = reply.send(rows);
+            }
+        }
+
+        // Index scans run after lookup replies are out, each outside the
+        // stats lock (a brute scan is milliseconds; STATS must not block
+        // on it).
+        for (query, k, enqueued, reply) in knns {
+            match shared.index.as_deref() {
+                Some(index) => {
+                    let result = index.top_k(&query, k);
+                    let stats = result.1;
+                    shared.knn_queries.fetch_add(1, Ordering::Relaxed);
+                    shared.knn_candidates.fetch_add(stats.candidates as u64, Ordering::Relaxed);
+                    shared.knn_probes.fetch_add(stats.probes as u64, Ordering::Relaxed);
+                    let elapsed = enqueued.elapsed().as_secs_f64() * 1e6;
+                    let mut lat = shared.latencies_us[w].lock().unwrap();
+                    if lat.len() >= LATENCY_WINDOW {
+                        *lat = Summary::new();
+                    }
+                    lat.add(elapsed);
+                    let _ = reply.send(result);
+                }
+                // A pool without an index drops the reply channel; the
+                // caller's recv fails immediately with a disconnect
+                // (servers always attach one).
+                None => drop(reply),
+            }
         }
     }
 }
@@ -218,12 +301,22 @@ fn worker_loop(shared: &PoolShared, w: usize) {
 mod tests {
     use super::*;
     use crate::embedding::{EmbeddingStore, RegularEmbedding};
+    use crate::index::{BruteForce, Scorer};
     use crate::util::Rng;
 
-    fn pool(workers: usize, depth: usize, window_us: u64) -> (WorkerPool, Arc<dyn EmbeddingStore>) {
+    fn pool_with(
+        workers: usize,
+        depth: usize,
+        window_us: u64,
+        with_index: bool,
+    ) -> (WorkerPool, Arc<dyn EmbeddingStore>) {
         let mut rng = Rng::new(0);
-        let store: Arc<dyn EmbeddingStore> =
-            Arc::new(RegularEmbedding::random(64, 8, &mut rng));
+        let store: Arc<dyn EmbeddingStore> = Arc::new(RegularEmbedding::random(64, 8, &mut rng));
+        let index: Option<Arc<dyn KnnIndex>> = if with_index {
+            Some(Arc::new(BruteForce::new(Scorer::new(store.clone(), false))))
+        } else {
+            None
+        };
         (
             WorkerPool::new(
                 store.clone(),
@@ -231,14 +324,19 @@ mod tests {
                 depth,
                 Duration::from_micros(window_us),
                 16,
+                index,
             ),
             store,
         )
     }
 
+    fn pool(workers: usize, depth: usize, window_us: u64) -> (WorkerPool, Arc<dyn EmbeddingStore>) {
+        pool_with(workers, depth, window_us, false)
+    }
+
     fn submit_ids(pool: &WorkerPool, ids: Vec<usize>) -> mpsc::Receiver<Vec<Vec<f32>>> {
         let (tx, rx) = mpsc::channel();
-        pool.submit(Job { ids, enqueued: Instant::now(), reply: tx }).unwrap();
+        pool.submit(Job::Lookup { ids, enqueued: Instant::now(), reply: tx }).unwrap();
         rx
     }
 
@@ -264,6 +362,43 @@ mod tests {
     }
 
     #[test]
+    fn knn_jobs_flow_through_the_pool() {
+        let (pool, store) = pool_with(2, 32, 50, true);
+        let (tx, rx) = mpsc::channel();
+        pool.submit(Job::Knn {
+            query: Query::Id(5),
+            k: 4,
+            enqueued: Instant::now(),
+            reply: tx,
+        })
+        .unwrap();
+        let (neighbors, stats) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(neighbors.len(), 4);
+        assert_eq!(stats.candidates, store.vocab_size() - 1);
+        assert!(neighbors.iter().all(|n| n.id != 5));
+        // Knn latency lands in the same summary; rows served stays 0;
+        // worker-side knn counters reflect the scan.
+        assert_eq!(pool.latency_summary().len(), 1);
+        assert_eq!(pool.served(), 0);
+        assert_eq!(pool.knn_counters(), (1, 63, 0));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn mixed_batches_serve_both_kinds() {
+        let (pool, store) = pool_with(1, 64, 2_000, true);
+        let look = submit_ids(&pool, vec![1, 2, 3]);
+        let (tx, knn_rx) = mpsc::channel();
+        pool.submit(Job::Knn { query: Query::Id(1), k: 2, enqueued: Instant::now(), reply: tx })
+            .unwrap();
+        let rows = look.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(rows[2], store.lookup(3));
+        let (neighbors, _) = knn_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(neighbors.len(), 2);
+        pool.shutdown();
+    }
+
+    #[test]
     fn backpressure_rejects_when_full() {
         // One worker, depth 1, long window: the worker sleeps inside the
         // window while more submits pile in; beyond (in-flight + depth) they
@@ -273,7 +408,7 @@ mod tests {
         let mut rejected = 0usize;
         for _ in 0..16 {
             let (tx, rx) = mpsc::channel();
-            match pool.submit(Job { ids: vec![1], enqueued: Instant::now(), reply: tx }) {
+            match pool.submit(Job::Lookup { ids: vec![1], enqueued: Instant::now(), reply: tx }) {
                 Ok(()) => receivers.push(rx),
                 Err(Overloaded) => rejected += 1,
             }

@@ -17,17 +17,22 @@
 //!   op 2 DOT     count == 2 ids
 //!   op 3 STATS   count == 0
 //!   op 4 QUIT    count == 0 (server closes the connection)
+//!   op 5 KNN     count == 2: [query id, k]
 //! response:      u32 status, u32 count, payload
 //!   LOOKUP ok    count = #ids,  payload = count × dim × f32 rows
 //!   DOT ok       count = 1,     payload = 1 × f32
-//!   STATS ok     count = 6,     payload = 6 × f64:
-//!                p50_us, p99_us, served, cache_hits, cache_misses, rejected
+//!   STATS ok     count = 9,     payload = 9 × f64:
+//!                p50_us, p99_us, served, cache_hits, cache_misses, rejected,
+//!                knn_queries, knn_candidates, knn_mean_probes
+//!   KNN ok       count = #neighbors (≤ k), payload = count × (u32 id,
+//!                f32 score), best first
 //!   error        status != 0,   count = 0, no payload
 //! status codes:  0 ok, 1 id out of range, 2 bad frame, 3 overloaded
 //!                (backpressure), 4 timeout
 //! ```
 
 use super::{LookupError, ServingState};
+use crate::index::Query;
 use std::io::{self, BufReader, Read, Write};
 use std::net::TcpStream;
 
@@ -39,6 +44,7 @@ pub const OP_LOOKUP: u32 = 1;
 pub const OP_DOT: u32 = 2;
 pub const OP_STATS: u32 = 3;
 pub const OP_QUIT: u32 = 4;
+pub const OP_KNN: u32 = 5;
 
 pub const STATUS_OK: u32 = 0;
 pub const STATUS_RANGE: u32 = 1;
@@ -114,6 +120,7 @@ fn write_error(w: &mut impl Write, status: u32) -> io::Result<()> {
 fn status_of(e: LookupError) -> u32 {
     match e {
         LookupError::Empty => STATUS_BAD_FRAME,
+        LookupError::BadQuery => STATUS_BAD_FRAME,
         LookupError::OutOfRange => STATUS_RANGE,
         LookupError::Overloaded => STATUS_OVERLOADED,
         LookupError::Timeout => STATUS_TIMEOUT,
@@ -173,11 +180,27 @@ pub fn handle_binary(
                 }
                 Err(e) => write_error(writer, status_of(e))?,
             },
+            OP_KNN if ids.len() == 2 => {
+                let (query, k) = (ids[0], ids[1]);
+                match state.knn(Query::Id(query), k) {
+                    Ok(neighbors) => {
+                        let mut buf = Vec::with_capacity(8 + neighbors.len() * 8);
+                        put_u32(&mut buf, STATUS_OK);
+                        put_u32(&mut buf, neighbors.len() as u32);
+                        for n in &neighbors {
+                            put_u32(&mut buf, n.id as u32);
+                            put_f32s(&mut buf, &[n.score]);
+                        }
+                        writer.write_all(&buf)?;
+                    }
+                    Err(e) => write_error(writer, status_of(e))?,
+                }
+            }
             OP_STATS => {
                 let s = state.stats();
-                let mut buf = Vec::with_capacity(8 + 6 * 8);
+                let mut buf = Vec::with_capacity(8 + 9 * 8);
                 put_u32(&mut buf, STATUS_OK);
-                put_u32(&mut buf, 6);
+                put_u32(&mut buf, 9);
                 put_f64s(
                     &mut buf,
                     &[
@@ -187,6 +210,9 @@ pub fn handle_binary(
                         s.cache.hits as f64,
                         s.cache.misses as f64,
                         s.rejected as f64,
+                        s.knn_queries as f64,
+                        s.knn_candidates as f64,
+                        s.knn_mean_probes,
                     ],
                 );
                 writer.write_all(&buf)?;
@@ -233,6 +259,9 @@ pub struct WireStats {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub rejected: u64,
+    pub knn_queries: u64,
+    pub knn_candidates: u64,
+    pub knn_mean_probes: f64,
 }
 
 /// Minimal binary-protocol client (load generator, tests, examples).
@@ -298,6 +327,22 @@ impl BinaryClient {
         Ok(xs[0])
     }
 
+    /// Top-`k` neighbors of word `id`, computed server-side (best first).
+    pub fn knn(&mut self, id: u32, k: u32) -> Result<Vec<(u32, f32)>, WireError> {
+        let status = self.request(OP_KNN, &[id, k])?;
+        let count = read_u32(&mut self.reader)? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nid = read_u32(&mut self.reader)?;
+            let score = read_f32s(&mut self.reader, 1)?[0];
+            out.push((nid, score));
+        }
+        Ok(out)
+    }
+
     pub fn stats(&mut self) -> Result<WireStats, WireError> {
         let status = self.request(OP_STATS, &[])?;
         let count = read_u32(&mut self.reader)? as usize;
@@ -305,7 +350,7 @@ impl BinaryClient {
             return Err(WireError::Status(status));
         }
         let xs = read_f64s(&mut self.reader, count)?;
-        if xs.len() < 6 {
+        if xs.len() < 9 {
             return Err(WireError::Io(io::Error::new(
                 io::ErrorKind::InvalidData,
                 "short STATS payload",
@@ -318,6 +363,9 @@ impl BinaryClient {
             cache_hits: xs[3] as u64,
             cache_misses: xs[4] as u64,
             rejected: xs[5] as u64,
+            knn_queries: xs[6] as u64,
+            knn_candidates: xs[7] as u64,
+            knn_mean_probes: xs[8],
         })
     }
 

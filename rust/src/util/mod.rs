@@ -18,7 +18,7 @@ pub use table::Table;
 /// Integer ceiling division.
 #[inline]
 pub fn ceil_div(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Smallest integer `t` with `t^n >= d` (used to size word2ketXS factors).
