@@ -8,10 +8,17 @@
 //!      [--clients C] [--order 4 --rank 1] [--shards 4] [--cache-rows 65536]
 //!      [--wire binary|text] [--zipf 1.05] [--knn 0.1 --topk 10]
 //!      [--index ivf --nlist 64 --nprobe 8]
+//!      [--save model.snap] [--load model.snap] [--reload model.snap]
 //!
 //! `--knn F` makes each client issue a KNN query (Zipf-sampled query word,
 //! `--topk` neighbors) instead of a batched lookup with probability F,
 //! exercising the similarity-search request path under the same load.
+//!
+//! Snapshot flags (the zero-downtime model-roll walkthrough in the README):
+//! `--save` writes the configured store to a snapshot before serving;
+//! `--load` boots the server from a snapshot (memory-mapped) instead of
+//! RNG + config; `--reload` issues a binary-protocol `OP_RELOAD` mid-load,
+//! hot-swapping the model under the running traffic.
 
 use word2ket::cli::{App, CommandSpec, OptSpec};
 use word2ket::config::{EmbeddingKind, ExperimentConfig, IndexKind};
@@ -46,6 +53,9 @@ fn main() -> word2ket::Result<()> {
                 OptSpec { name: "index", help: "knn index: brute|ivf", takes_value: true, repeated: false, default: Some("brute") },
                 OptSpec { name: "nlist", help: "IVF coarse cells", takes_value: true, repeated: false, default: Some("64") },
                 OptSpec { name: "nprobe", help: "IVF cells probed per query", takes_value: true, repeated: false, default: Some("8") },
+                OptSpec { name: "save", help: "write the configured store to this snapshot file before serving", takes_value: true, repeated: false, default: None },
+                OptSpec { name: "load", help: "boot the server from this snapshot (mmap) instead of RNG+config", takes_value: true, repeated: false, default: None },
+                OptSpec { name: "reload", help: "hot-swap to this snapshot mid-load via OP_RELOAD", takes_value: true, repeated: false, default: None },
             ],
             positionals: vec![],
         }],
@@ -86,6 +96,34 @@ fn main() -> word2ket::Result<()> {
     cfg.index.nlist = parsed.get_usize("nlist")?.unwrap_or(64);
     cfg.index.nprobe = parsed.get_usize("nprobe")?.unwrap_or(8);
 
+    if let Some(save) = parsed.get("save") {
+        // Build the exact store the server would build (same seed) and
+        // persist it, so --save + --load/--reload round-trip one model.
+        let mut rng = Rng::new(cfg.train.seed);
+        let store = word2ket::embedding::build(
+            &cfg.embedding,
+            cfg.model.vocab,
+            cfg.model.emb_dim,
+            &mut rng,
+        );
+        let info = word2ket::snapshot::save_store(
+            store.as_ref(),
+            std::path::Path::new(save),
+            &word2ket::snapshot::SaveOptions { codec: cfg.snapshot.codec },
+        )?;
+        println!(
+            "saved snapshot {} ({} bytes, {} sections, vs {} materialized f32 bytes)",
+            save,
+            info.bytes,
+            info.sections,
+            cfg.model.vocab * cfg.model.emb_dim * 4
+        );
+    }
+    if let Some(load) = parsed.get("load") {
+        cfg.snapshot.path = load.to_string();
+    }
+    let reload_path = parsed.get("reload").map(|s| s.to_string());
+
     let (state, listener, addr) = server::spawn(&cfg)?;
     let accept_state = state.clone();
     let accept = std::thread::spawn(move || server::accept_loop(listener, accept_state));
@@ -117,6 +155,18 @@ fn main() -> word2ket::Result<()> {
             })
         })
         .collect();
+
+    // The zero-downtime roll: swap the model while the clients above are
+    // mid-flight. In-flight requests drain on the old generation.
+    if let Some(rp) = &reload_path {
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut c = BinaryClient::connect(&addr).expect("reload connect");
+        match c.reload(rp) {
+            Ok(generation) => println!("hot-swapped to {rp} (model generation {generation})"),
+            Err(e) => eprintln!("reload {rp} failed: {e}"),
+        }
+        c.quit().ok();
+    }
 
     let mut rejected_total = 0u64;
     let mut lookups_total = 0u64;
@@ -159,7 +209,8 @@ fn main() -> word2ket::Result<()> {
     let stats = stats_client.stats().expect("stats");
     println!(
         "server STATS: p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} \
-         rejected={} knn_queries={} knn_candidates={} knn_mean_probes={:.2} (hit rate {:.1}%)",
+         rejected={} knn_queries={} knn_candidates={} knn_mean_probes={:.2} \
+         model_generation={} snapshot_bytes={} (hit rate {:.1}%)",
         stats.p50_us,
         stats.p99_us,
         stats.served,
@@ -169,6 +220,8 @@ fn main() -> word2ket::Result<()> {
         stats.knn_queries,
         stats.knn_candidates,
         stats.knn_mean_probes,
+        stats.model_generation,
+        stats.snapshot_bytes,
         100.0 * stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64
     );
     stats_client.quit().ok();

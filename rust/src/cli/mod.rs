@@ -229,6 +229,21 @@ pub fn app() -> App {
                 positionals: vec![],
             },
             CommandSpec {
+                name: "snapshot",
+                about: "save, inspect or load embedding-store snapshots",
+                opts: {
+                    let mut o = common_train.clone();
+                    o.push(OptSpec { name: "payload", help: "payload codec for save: f32|f16|int8 (default: [snapshot] codec)", takes_value: true, repeated: false, default: None });
+                    o.push(OptSpec { name: "with-index", help: "embed the trained IVF index ([index] config) in the snapshot", takes_value: false, repeated: false, default: None });
+                    o.push(OptSpec { name: "mmap", help: "load via memory mapping (zero-copy) instead of heap read", takes_value: false, repeated: false, default: None });
+                    o
+                },
+                positionals: vec![
+                    ("action", "save | load | info"),
+                    ("path", "snapshot file"),
+                ],
+            },
+            CommandSpec {
                 name: "params",
                 about: "print paper Tables 1-3 #Params / space-saving accounting",
                 opts: vec![],
@@ -285,6 +300,28 @@ mod tests {
         let a = app();
         let p = a.parse(&argv(&["train"])).unwrap();
         assert_eq!(p.get("artifacts"), Some("artifacts"));
+    }
+
+    #[test]
+    fn snapshot_command_parses() {
+        let a = app();
+        let p = a
+            .parse(&argv(&[
+                "snapshot",
+                "save",
+                "model.snap",
+                "--payload",
+                "int8",
+                "--with-index",
+            ]))
+            .unwrap();
+        assert_eq!(p.command, "snapshot");
+        assert_eq!(p.positionals, vec!["save".to_string(), "model.snap".to_string()]);
+        assert_eq!(p.get("payload"), Some("int8"));
+        assert!(p.flag("with-index"));
+        assert!(!p.flag("mmap"));
+        // Too many positionals is a CLI error.
+        assert!(a.parse(&argv(&["snapshot", "save", "a.snap", "extra"])).is_err());
     }
 
     #[test]

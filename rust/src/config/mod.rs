@@ -11,7 +11,7 @@ mod toml;
 
 pub use schema::{
     CorpusConfig, EmbeddingConfig, EmbeddingKind, ExperimentConfig, IndexConfig, IndexKind,
-    ModelConfig, ServerConfig, ServingConfig, TaskKind, TrainConfig,
+    ModelConfig, ServerConfig, ServingConfig, SnapshotConfig, TaskKind, TrainConfig,
 };
 pub use toml::{TomlDoc, TomlValue};
 

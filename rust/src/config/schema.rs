@@ -2,6 +2,7 @@
 
 use super::toml::TomlDoc;
 use crate::error::{Error, Result};
+use crate::snapshot::Codec;
 
 /// Which downstream NLP task (paper §4 evaluates three).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -267,6 +268,23 @@ impl Default for ServingConfig {
     }
 }
 
+/// Snapshot persistence settings (`[snapshot]`; see `snapshot/`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotConfig {
+    /// Snapshot file the server boots from (empty = build from RNG+config).
+    pub path: String,
+    /// Memory-map snapshot loads (zero-copy) instead of heap-buffering.
+    pub mmap: bool,
+    /// Payload codec used when *writing* snapshots (`f32`, `f16`, `int8`).
+    pub codec: Codec,
+}
+
+impl Default for SnapshotConfig {
+    fn default() -> Self {
+        SnapshotConfig { path: String::new(), mmap: true, codec: Codec::F32 }
+    }
+}
+
 /// Complete experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -279,6 +297,7 @@ pub struct ExperimentConfig {
     pub server: ServerConfig,
     pub serving: ServingConfig,
     pub index: IndexConfig,
+    pub snapshot: SnapshotConfig,
     pub artifacts_dir: String,
 }
 
@@ -294,6 +313,7 @@ impl Default for ExperimentConfig {
             server: ServerConfig::default(),
             serving: ServingConfig::default(),
             index: IndexConfig::default(),
+            snapshot: SnapshotConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -363,6 +383,14 @@ impl ExperimentConfig {
                     as u64,
                 queue_depth: doc.usize_or("serving.queue_depth", d.serving.queue_depth),
                 max_batch: doc.usize_or("serving.max_batch", d.serving.max_batch),
+            },
+            snapshot: SnapshotConfig {
+                path: doc.str_or("snapshot.path", &d.snapshot.path),
+                mmap: doc.bool_or("snapshot.mmap", d.snapshot.mmap),
+                codec: match doc.get("snapshot.codec") {
+                    Some(v) => Codec::parse(v.as_str().unwrap_or(""))?,
+                    None => d.snapshot.codec,
+                },
             },
             artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir),
         };
@@ -536,6 +564,31 @@ cosine = true
         let mut bad = ExperimentConfig::default();
         bad.index.nprobe = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn snapshot_section_parses() {
+        let src = r#"
+[snapshot]
+path = "models/current.snap"
+mmap = false
+codec = "int8"
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.snapshot.path, "models/current.snap");
+        assert!(!cfg.snapshot.mmap);
+        assert_eq!(cfg.snapshot.codec, Codec::Int8);
+
+        // Defaults: no path, mmap on, exact payloads.
+        let d = ExperimentConfig::default();
+        assert!(d.snapshot.path.is_empty());
+        assert!(d.snapshot.mmap);
+        assert_eq!(d.snapshot.codec, Codec::F32);
+
+        // Bad codec is a config error at parse time.
+        let bad = TomlDoc::parse("[snapshot]\ncodec = \"f64\"\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&bad).is_err());
     }
 
     #[test]

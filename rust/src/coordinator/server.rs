@@ -12,20 +12,25 @@
 //!   `DOT <id a> <id b>\n`      → `OK <f32>\n` (cache-served inner product)
 //!   `KNN <id> <k>\n`           → `OK <n> <id> <score> ...\n` (top-n
 //!                                 neighbors, best first, query excluded)
+//!   `RELOAD <path>\n`          → `OK generation=<g>\n` (hot-swap the model
+//!                                 to the snapshot at the server-side path)
 //!   `STATS\n`                  → `OK p50_us=.. p99_us=.. served=..
 //!                                 cache_hits=.. cache_misses=.. rejected=..
 //!                                 knn_queries=.. knn_candidates=..
-//!                                 knn_mean_probes=..\n`
+//!                                 knn_mean_probes=.. model_generation=..
+//!                                 snapshot_bytes=..\n`
 //!   `QUIT\n`                   → closes the connection.
 //!
 //! Malformed input (bad ids, out-of-range ids, empty LOOKUP, unknown
 //! commands) always yields an `ERR ...` line, never a panic or a dropped
-//! connection; `STATS` before any traffic reports zeros.
+//! connection; `STATS` before any traffic reports zeros. A server started
+//! with `[snapshot] path` boots from that snapshot (optionally memory-
+//! mapped) instead of building the store from RNG + config.
 
 use crate::config::ExperimentConfig;
-use crate::embedding;
+use crate::embedding::{self, EmbeddingStore};
 use crate::error::{Error, Result};
-use crate::index::Query;
+use crate::index::{KnnIndex, Query};
 use crate::serving::{wire, LookupError, ServingState};
 use crate::util::Rng;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -41,18 +46,29 @@ pub struct ServerState {
 }
 
 impl ServerState {
-    pub fn new(cfg: &ExperimentConfig) -> ServerState {
-        let mut rng = Rng::new(cfg.train.seed);
-        let store = embedding::build(
-            &cfg.embedding,
-            cfg.model.vocab,
-            cfg.model.emb_dim,
-            &mut rng,
-        );
-        let serving = ServingState::new(store, &cfg.serving, &cfg.index);
+    pub fn new(cfg: &ExperimentConfig) -> Result<ServerState> {
+        let mut serving = if cfg.snapshot.path.is_empty() {
+            let mut rng = Rng::new(cfg.train.seed);
+            let store = embedding::build(
+                &cfg.embedding,
+                cfg.model.vocab,
+                cfg.model.emb_dim,
+                &mut rng,
+            );
+            ServingState::new(store, &cfg.serving, &cfg.index)
+        } else {
+            ServingState::from_snapshot(
+                std::path::Path::new(&cfg.snapshot.path),
+                &cfg.serving,
+                &cfg.index,
+                cfg.snapshot.mmap,
+            )?
+        };
+        // RELOADs honor the same [snapshot] mmap preference as boot.
+        serving.set_reload_mmap(cfg.snapshot.mmap);
         crate::info!("serving {}", serving.store().describe());
         crate::info!("knn via {}", serving.index().describe());
-        ServerState { serving, stop: AtomicBool::new(false) }
+        Ok(ServerState { serving, stop: AtomicBool::new(false) })
     }
 
     /// The serving layer (cache + pool) behind both protocols.
@@ -73,7 +89,8 @@ impl ServerState {
         let s = self.serving.stats();
         format!(
             "OK p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} rejected={} \
-             knn_queries={} knn_candidates={} knn_mean_probes={:.2}\n",
+             knn_queries={} knn_candidates={} knn_mean_probes={:.2} model_generation={} \
+             snapshot_bytes={}\n",
             s.p50_us,
             s.p99_us,
             s.served,
@@ -82,7 +99,9 @@ impl ServerState {
             s.rejected,
             s.knn_queries,
             s.knn_candidates,
-            s.knn_mean_probes
+            s.knn_mean_probes,
+            s.model_generation,
+            s.snapshot_bytes
         )
     }
 }
@@ -172,6 +191,13 @@ fn handle_text(
                 _ => "ERR bad id\n".to_string(),
             },
             ["KNN", ..] => "ERR KNN takes <query id> <k>\n".to_string(),
+            ["RELOAD", path] => {
+                match state.serving.reload_snapshot(std::path::Path::new(path)) {
+                    Ok(generation) => format!("OK generation={generation}\n"),
+                    Err(e) => format!("ERR reload: {e}\n"),
+                }
+            }
+            ["RELOAD", ..] => "ERR RELOAD takes <path>\n".to_string(),
             _ => "ERR unknown command\n".to_string(),
         };
         if writer.write_all(response.as_bytes()).is_err() {
@@ -225,7 +251,7 @@ pub fn serve_blocking(cfg: &ExperimentConfig) -> Result<()> {
 /// example). Returns (state, listener, bound address) — the address matters
 /// when `cfg.server.addr` uses port 0; the caller runs [`accept_loop`].
 pub fn spawn(cfg: &ExperimentConfig) -> Result<(Arc<ServerState>, TcpListener, String)> {
-    let state = Arc::new(ServerState::new(cfg));
+    let state = Arc::new(ServerState::new(cfg)?);
     let listener = TcpListener::bind(&cfg.server.addr)
         .map_err(|e| Error::Server(format!("bind {}: {e}", cfg.server.addr)))?;
     let addr = listener
@@ -363,7 +389,8 @@ mod tests {
         assert_eq!(
             resp[0],
             "OK p50_us=0 p99_us=0 served=0 cache_hits=0 cache_misses=0 rejected=0 \
-             knn_queries=0 knn_candidates=0 knn_mean_probes=0.00"
+             knn_queries=0 knn_candidates=0 knn_mean_probes=0.00 model_generation=1 \
+             snapshot_bytes=0"
         );
         state.shutdown();
         acc.join().unwrap();
@@ -538,6 +565,220 @@ mod tests {
         assert!(stats.knn_candidates > 0);
         assert!((stats.knn_mean_probes - 2.0).abs() < 1e-9);
         bin.quit().unwrap();
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    fn tmp_snap(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("w2k_server_{}_{}.snap", std::process::id(), name))
+    }
+
+    /// Build the exact store the test server serves (same config, same
+    /// seed) so snapshots of it are interchangeable with the live model.
+    fn server_twin_store() -> Box<dyn crate::embedding::EmbeddingStore> {
+        let cfg = test_cfg();
+        let mut rng = crate::util::Rng::new(cfg.train.seed);
+        embedding::build(&cfg.embedding, cfg.model.vocab, cfg.model.emb_dim, &mut rng)
+    }
+
+    /// Acceptance: OP_RELOAD under concurrent binary-protocol load — zero
+    /// failed requests, model_generation increments, snapshot_bytes set,
+    /// and factored k-NN results identical before/after save→load→swap.
+    #[test]
+    fn hot_swap_under_concurrent_load() {
+        let (state, addr, acc) = start();
+        let path = tmp_snap("hot_swap");
+        crate::snapshot::save_store(
+            server_twin_store().as_ref(),
+            &path,
+            &crate::snapshot::SaveOptions::default(),
+        )
+        .unwrap();
+
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+        let knn_before = bin.knn(42, 5).unwrap();
+        let rows_before = bin.lookup(&[0, 7, 99]).unwrap();
+
+        // Hammer the server from four client threads while the reload
+        // happens mid-flight; every single request must succeed.
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let workers: Vec<_> = (0..4u32)
+            .map(|w| {
+                let addr = addr.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || -> u64 {
+                    let mut c = BinaryClient::connect(&addr).unwrap();
+                    let mut ok = 0u64;
+                    let mut i = 0u32;
+                    while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                        let ids = [(i + w) % 100, (i * 7 + 3) % 100];
+                        let rows = c.lookup(&ids).expect("lookup failed during hot swap");
+                        assert_eq!(rows.len(), 2);
+                        if i % 5 == 0 {
+                            let ns = c.knn(ids[0], 3).expect("knn failed during hot swap");
+                            assert!(!ns.is_empty());
+                        }
+                        ok += 1;
+                        i += 1;
+                    }
+                    c.quit().ok();
+                    ok
+                })
+            })
+            .collect();
+
+        // Let traffic build up, swap, then let it drain over the new model.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let generation = bin.reload(path.to_str().unwrap()).unwrap();
+        assert_eq!(generation, 2);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let mut total = 0u64;
+        for h in workers {
+            total += h.join().expect("worker panicked (a request failed during the swap)");
+        }
+        assert!(total > 0, "load generator never got a request through");
+
+        // Same weights ⇒ bit-identical rows and identical k-NN answers.
+        let rows_after = bin.lookup(&[0, 7, 99]).unwrap();
+        assert_eq!(rows_before, rows_after, "rows changed across an identical-model swap");
+        let knn_after = bin.knn(42, 5).unwrap();
+        assert_eq!(knn_before, knn_after, "top-k changed across save→load→swap");
+
+        let stats = bin.stats().unwrap();
+        assert_eq!(stats.model_generation, 2);
+        assert!(stats.snapshot_bytes > 0);
+        assert_eq!(stats.rejected, 0, "requests were rejected during the swap");
+        bin.quit().unwrap();
+
+        state.shutdown();
+        acc.join().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn text_reload_and_failure_modes() {
+        let (state, addr, acc) = start();
+        let path = tmp_snap("text_reload");
+        crate::snapshot::save_store(
+            server_twin_store().as_ref(),
+            &path,
+            &crate::snapshot::SaveOptions::default(),
+        )
+        .unwrap();
+
+        let resp = request(&addr, &format!("RELOAD {}\n", path.display()), 1);
+        assert_eq!(resp[0], "OK generation=2", "{resp:?}");
+
+        // Failure paths: missing file, malformed command — ERR, not panic,
+        // and the generation stays put.
+        let resp = request(&addr, "RELOAD /nonexistent/nope.snap\n", 1);
+        assert!(resp[0].starts_with("ERR reload:"), "{resp:?}");
+        let resp = request(&addr, "RELOAD\n", 1);
+        assert!(resp[0].contains("RELOAD takes"), "{resp:?}");
+        let stats = request(&addr, "STATS\n", 1);
+        assert!(stats[0].contains("model_generation=2"), "{stats:?}");
+
+        state.shutdown();
+        acc.join().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn server_boots_from_snapshot_config() {
+        // [snapshot] path: the server starts from the file (mmap), serving
+        // rows bit-identical to the store that was saved.
+        let store = server_twin_store();
+        let path = tmp_snap("boot");
+        crate::snapshot::save_store(
+            store.as_ref(),
+            &path,
+            &crate::snapshot::SaveOptions::default(),
+        )
+        .unwrap();
+
+        let mut cfg = test_cfg();
+        cfg.snapshot.path = path.display().to_string();
+        let (state, listener, addr) = spawn(&cfg).unwrap();
+        let st = state.clone();
+        let acc = std::thread::spawn(move || accept_loop(listener, st));
+
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+        let rows = bin.lookup(&[3, 42]).unwrap();
+        assert_eq!(rows[0], store.lookup(3));
+        assert_eq!(rows[1], store.lookup(42));
+        let stats = bin.stats().unwrap();
+        assert!(stats.snapshot_bytes > 0, "snapshot-backed server must report file size");
+        bin.quit().unwrap();
+
+        // A dangling snapshot path fails server construction with a typed
+        // error instead of serving garbage.
+        let mut bad = test_cfg();
+        bad.snapshot.path = "/nonexistent/nope.snap".into();
+        assert!(spawn(&bad).is_err());
+
+        state.shutdown();
+        acc.join().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Satellite regression: an adversarial header claiming 4Gi ids (and a
+    /// zero-k KNN) must come back STATUS_BAD_FRAME without the server
+    /// allocating or panicking, and the listener must keep serving.
+    #[test]
+    fn binary_rejects_adversarial_count_header() {
+        let (state, addr, acc) = start();
+
+        // Raw socket: handshake, then a hostile LOOKUP frame with
+        // count = u32::MAX (a 4 GiB id buffer if it were believed).
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::MAGIC).unwrap();
+        let mut hello = [0u8; 8];
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        std::io::Read::read_exact(&mut r, &mut hello).unwrap();
+        assert_eq!(hello[..4], wire::MAGIC);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&wire::OP_LOOKUP.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        s.write_all(&frame).unwrap();
+        let mut resp = [0u8; 8];
+        std::io::Read::read_exact(&mut r, &mut resp).unwrap();
+        let status = u32::from_le_bytes(resp[0..4].try_into().unwrap());
+        let count = u32::from_le_bytes(resp[4..8].try_into().unwrap());
+        assert_eq!(status, wire::STATUS_BAD_FRAME);
+        assert_eq!(count, 0);
+        // The stream is untrustworthy after a hostile header: server closes.
+        let mut probe = [0u8; 1];
+        assert_eq!(std::io::Read::read(&mut r, &mut probe).unwrap(), 0, "conn must close");
+
+        // Oversized RELOAD path length gets the same treatment.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::MAGIC).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        std::io::Read::read_exact(&mut r, &mut hello).unwrap();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&wire::OP_RELOAD.to_le_bytes());
+        frame.extend_from_slice(&(wire::MAX_PATH_BYTES + 1).to_le_bytes());
+        s.write_all(&frame).unwrap();
+        std::io::Read::read_exact(&mut r, &mut resp).unwrap();
+        assert_eq!(u32::from_le_bytes(resp[0..4].try_into().unwrap()), wire::STATUS_BAD_FRAME);
+
+        // Zero-k KNN through the client: bad frame, session stays usable.
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+        match bin.knn(1, 0) {
+            Err(crate::serving::WireError::Status(st)) => {
+                assert_eq!(st, wire::STATUS_BAD_FRAME)
+            }
+            other => panic!("expected bad frame, got {other:?}"),
+        }
+        let rows = bin.lookup(&[1]).unwrap();
+        assert_eq!(rows.len(), 1);
+        bin.quit().unwrap();
+
+        // And the server still serves fresh connections.
+        let resp = request(&addr, "LOOKUP 0\n", 1);
+        assert!(resp[0].starts_with("OK"), "{resp:?}");
 
         state.shutdown();
         acc.join().unwrap();

@@ -41,8 +41,37 @@ impl HashedEmbedding {
         (bucket, sign)
     }
 
+    /// Rebuild from serialized parts (snapshot loading): the bucket weights
+    /// plus the hash seed that fixes the (word, dim) → bucket mapping.
+    pub fn from_parts(
+        vocab: usize,
+        dim: usize,
+        buckets: usize,
+        seed: u64,
+        weights: Vec<f32>,
+    ) -> crate::Result<Self> {
+        if buckets == 0 || weights.len() != buckets {
+            return Err(crate::Error::Snapshot(format!(
+                "hashed parts mismatch: {} weights for {buckets} buckets",
+                weights.len()
+            )));
+        }
+        Ok(HashedEmbedding { vocab, dim, buckets, weights, seed })
+    }
+
     pub fn buckets(&self) -> usize {
         self.buckets
+    }
+
+    /// Shared bucket weights (snapshot serialization).
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    /// The coordinate-hash seed; must travel with the weights or every
+    /// lookup would land on different buckets.
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 }
 
@@ -66,6 +95,10 @@ impl EmbeddingStore for HashedEmbedding {
                 s * self.weights[b]
             })
             .collect()
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
     }
 
     fn describe(&self) -> String {

@@ -33,8 +33,46 @@ impl LowRankEmbedding {
         }
     }
 
+    /// Rebuild from serialized factors (snapshot loading). Validates shapes
+    /// instead of asserting, so a corrupt snapshot yields a typed error.
+    pub fn from_parts(
+        vocab: usize,
+        dim: usize,
+        k: usize,
+        u: Vec<f32>,
+        vt: Vec<f32>,
+    ) -> crate::Result<Self> {
+        if k == 0 {
+            return Err(crate::Error::Snapshot("lowrank k must be >= 1".into()));
+        }
+        let want_u = vocab
+            .checked_mul(k)
+            .ok_or_else(|| crate::Error::Snapshot("lowrank geometry overflows".into()))?;
+        let want_vt = dim
+            .checked_mul(k)
+            .ok_or_else(|| crate::Error::Snapshot("lowrank geometry overflows".into()))?;
+        if u.len() != want_u || vt.len() != want_vt {
+            return Err(crate::Error::Snapshot(format!(
+                "lowrank parts mismatch: |U|={} (want {want_u}), |Vt|={} (want {want_vt})",
+                u.len(),
+                vt.len()
+            )));
+        }
+        Ok(LowRankEmbedding { vocab, dim, k, u, vt })
+    }
+
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    /// The `d × k` factor, row-major (snapshot serialization).
+    pub fn u(&self) -> &[f32] {
+        &self.u
+    }
+
+    /// The `p × k` transposed factor, row-major.
+    pub fn vt(&self) -> &[f32] {
+        &self.vt
     }
 
     fn u_row(&self, id: usize) -> &[f32] {
@@ -60,6 +98,10 @@ impl EmbeddingStore for LowRankEmbedding {
         (0..self.dim)
             .map(|j| dot(u, &self.vt[j * self.k..(j + 1) * self.k]))
             .collect()
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
     }
 
     fn describe(&self) -> String {

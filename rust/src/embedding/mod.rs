@@ -10,7 +10,9 @@
 pub mod compress;
 mod hashed;
 mod lowrank;
-mod quantized;
+// Crate-visible so the snapshot store can share the bit-unpacking helpers
+// (identical decode ⇒ bit-identical reconstruction from a mapped file).
+pub(crate) mod quantized;
 mod regular;
 pub mod stats;
 mod word2ket;
@@ -91,11 +93,13 @@ pub trait EmbeddingStore: Send + Sync {
     /// Human-readable description for reports.
     fn describe(&self) -> String;
 
-    /// Concrete-type escape hatch for layers that can exploit a store's
-    /// internal structure (the `index` scorer reaches factored space through
-    /// this). Stores without structure worth sniffing keep the `None`
-    /// default; wrappers ([`crate::serving::ShardedCache`]) expose themselves
-    /// so callers can unwrap to the inner store.
+    /// Concrete-type escape hatch for layers that need a store's identity:
+    /// the `index` scorer reaches factored space through this (including
+    /// snapshot-backed stores after a hot swap), and `snapshot::save_store`
+    /// dispatches serialization on it. Wrappers
+    /// ([`crate::serving::ShardedCache`]) expose themselves so callers can
+    /// unwrap to the inner store; every concrete store overrides this with
+    /// `Some(self)`.
     fn as_any(&self) -> Option<&dyn std::any::Any> {
         None
     }
@@ -175,6 +179,61 @@ mod tests {
                 assert_eq!(batch.row(row), store.lookup(id).as_slice(), "row {row} id {id}");
             }
         }
+    }
+
+    #[test]
+    fn dedup_scatter_empty_ids() {
+        let data = dedup_scatter(&[], 8, |_, _| panic!("fill must not run for empty ids"));
+        assert!(data.is_empty());
+    }
+
+    #[test]
+    fn dedup_scatter_all_duplicates_fill_once() {
+        let mut fills = 0usize;
+        let ids = [9usize; 6];
+        let data = dedup_scatter(&ids, 3, |id, out| {
+            fills += 1;
+            assert_eq!(id, 9);
+            out.copy_from_slice(&[1.0, 2.0, 3.0]);
+        });
+        assert_eq!(fills, 1, "all-duplicate batch must reconstruct once");
+        assert_eq!(data.len(), 6 * 3);
+        for row in data.chunks(3) {
+            assert_eq!(row, &[1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn dedup_scatter_interleaved_repeats() {
+        // Repeats arriving *after* other ids must copy the first occurrence's
+        // row, not refill: a row's value is id*10 + position-of-first-fill.
+        let ids = [4usize, 2, 4, 7, 2, 4];
+        let mut order: Vec<usize> = Vec::new();
+        let data = dedup_scatter(&ids, 2, |id, out| {
+            order.push(id);
+            out[0] = id as f32 * 10.0;
+            out[1] = order.len() as f32;
+        });
+        assert_eq!(order, vec![4, 2, 7], "fill order must follow first occurrences");
+        for (row, &id) in data.chunks(2).zip(&ids) {
+            assert_eq!(row[0], id as f32 * 10.0, "id {id}");
+            // Every repeat carries the same fill-sequence stamp as its first
+            // occurrence — proof it was copied, not refilled.
+            let first = ids.iter().position(|&x| x == id).unwrap();
+            assert_eq!(row[1], data[first * 2 + 1], "id {id} not copied from first row");
+        }
+    }
+
+    #[test]
+    fn dedup_scatter_fill_exactly_once_per_distinct() {
+        let ids = [0usize, 5, 0, 3, 5, 5, 0, 3, 8];
+        let mut fills: HashMap<usize, usize> = HashMap::new();
+        dedup_scatter(&ids, 4, |id, out| {
+            *fills.entry(id).or_insert(0) += 1;
+            out.fill(id as f32);
+        });
+        assert_eq!(fills.len(), 4, "one fill per distinct id");
+        assert!(fills.values().all(|&n| n == 1), "{fills:?}");
     }
 
     #[test]

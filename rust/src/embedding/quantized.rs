@@ -49,8 +49,53 @@ impl QuantizedEmbedding {
         Self::from_dense(vocab, dim, &dense, bits)
     }
 
+    /// Rebuild from serialized parts (snapshot loading). Validates shapes
+    /// instead of asserting, so a corrupt snapshot yields a typed error.
+    pub fn from_parts(
+        vocab: usize,
+        dim: usize,
+        bits: usize,
+        codes: Vec<u32>,
+        scales: Vec<f32>,
+        offsets: Vec<f32>,
+    ) -> crate::Result<Self> {
+        if !(1..=16).contains(&bits) {
+            return Err(crate::Error::Snapshot(format!("quantized bits {bits} outside 1..=16")));
+        }
+        let want_codes = vocab
+            .checked_mul(dim)
+            .and_then(|x| x.checked_mul(bits))
+            .ok_or_else(|| crate::Error::Snapshot("quantized geometry overflows".into()))?
+            .div_ceil(32);
+        if codes.len() != want_codes || scales.len() != vocab || offsets.len() != vocab {
+            return Err(crate::Error::Snapshot(format!(
+                "quantized parts mismatch: {} codes (want {want_codes}), {} scales, {} offsets \
+                 for vocab {vocab}",
+                codes.len(),
+                scales.len(),
+                offsets.len()
+            )));
+        }
+        Ok(QuantizedEmbedding { vocab, dim, bits, codes, scales, offsets })
+    }
+
     pub fn bits(&self) -> usize {
         self.bits
+    }
+
+    /// Packed code words (snapshot serialization).
+    pub fn codes(&self) -> &[u32] {
+        &self.codes
+    }
+
+    /// Per-row dequantization scales.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Per-row dequantization offsets.
+    pub fn offsets(&self) -> &[f32] {
+        &self.offsets
     }
 
     /// Worst-case reconstruction error bound: scale/2 per element.
@@ -59,7 +104,7 @@ impl QuantizedEmbedding {
     }
 }
 
-fn set_bits(words: &mut [u32], bit_off: usize, nbits: usize, val: u32) {
+pub(crate) fn set_bits(words: &mut [u32], bit_off: usize, nbits: usize, val: u32) {
     let w = bit_off / 32;
     let o = bit_off % 32;
     words[w] |= val << o;
@@ -68,7 +113,9 @@ fn set_bits(words: &mut [u32], bit_off: usize, nbits: usize, val: u32) {
     }
 }
 
-fn get_bits(words: &[u32], bit_off: usize, nbits: usize) -> u32 {
+/// Extract `nbits` at `bit_off` from a packed code array; shared with the
+/// snapshot store's mapped reconstruction so both decode identically.
+pub(crate) fn get_bits(words: &[u32], bit_off: usize, nbits: usize) -> u32 {
     let w = bit_off / 32;
     let o = bit_off % 32;
     let mask = if nbits == 32 { u32::MAX } else { (1u32 << nbits) - 1 };
@@ -104,6 +151,10 @@ impl EmbeddingStore for QuantizedEmbedding {
             out.push(off + code as f32 * scale);
         }
         out
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
     }
 
     fn describe(&self) -> String {

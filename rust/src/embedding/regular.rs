@@ -33,6 +33,11 @@ impl RegularEmbedding {
     pub fn row_slice(&self, id: usize) -> &[f32] {
         &self.data[id * self.dim..(id + 1) * self.dim]
     }
+
+    /// The full row-major matrix as a flat slice (snapshot serialization).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
 }
 
 impl EmbeddingStore for RegularEmbedding {
@@ -58,6 +63,10 @@ impl EmbeddingStore for RegularEmbedding {
             data.extend_from_slice(self.row_slice(id));
         }
         Tensor::new(vec![ids.len(), self.dim], data).unwrap()
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
     }
 
     fn describe(&self) -> String {

@@ -34,6 +34,60 @@ impl Word2Ket {
         Word2Ket { vocab, dim, order, rank, leaf_dim: q, words, layernorm: false }
     }
 
+    /// Rebuild from a flat leaf blob (snapshot loading): word `w`'s CP
+    /// tensor occupies `leaves[w·r·n·q .. (w+1)·r·n·q]` in `CpTensor` leaf
+    /// order (`(k·n + j)·q`). Validates geometry instead of asserting, so a
+    /// corrupt snapshot yields a typed error rather than a panic.
+    pub fn from_leaves(
+        vocab: usize,
+        dim: usize,
+        order: usize,
+        rank: usize,
+        leaf_dim: usize,
+        layernorm: bool,
+        leaves: &[f32],
+    ) -> crate::Result<Word2Ket> {
+        if !(2..=16).contains(&order) || rank == 0 || leaf_dim == 0 {
+            return Err(crate::Error::Snapshot(format!(
+                "bad word2ket geometry: order={order} rank={rank} q={leaf_dim}"
+            )));
+        }
+        let full = leaf_dim
+            .checked_pow(order as u32)
+            .ok_or_else(|| crate::Error::Snapshot("word2ket q^order overflows".into()))?;
+        // q^n must cover dim, and minimal-root construction bounds it by
+        // dim·2^n: reject hostile geometries that would make every
+        // reconstruction allocate a q^n-sized buffer.
+        if full < dim || full > dim.saturating_mul(1usize << order) {
+            return Err(crate::Error::Snapshot(format!(
+                "word2ket q^order = {full} inconsistent with dim {dim}"
+            )));
+        }
+        let per_word = rank
+            .checked_mul(order)
+            .and_then(|x| x.checked_mul(leaf_dim))
+            .ok_or_else(|| crate::Error::Snapshot("word2ket geometry overflows".into()))?;
+        let want = vocab
+            .checked_mul(per_word)
+            .ok_or_else(|| crate::Error::Snapshot("word2ket geometry overflows".into()))?;
+        if leaves.len() != want {
+            return Err(crate::Error::Snapshot(format!(
+                "word2ket leaf blob has {} values, expected {want}",
+                leaves.len()
+            )));
+        }
+        let words = leaves
+            .chunks(per_word)
+            .map(|c| {
+                let mut t = CpTensor::zeros(rank, order, leaf_dim);
+                t.leaves_mut().copy_from_slice(c);
+                t.layernorm_nodes = layernorm;
+                t
+            })
+            .collect();
+        Ok(Word2Ket { vocab, dim, order, rank, leaf_dim, words, layernorm })
+    }
+
     pub fn set_layernorm(&mut self, on: bool) {
         self.layernorm = on;
         for w in &mut self.words {

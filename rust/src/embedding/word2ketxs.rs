@@ -63,6 +63,65 @@ impl Word2KetXS {
         }
     }
 
+    /// Rebuild from explicit factor matrices (snapshot loading / fitted
+    /// stores): `factors[k·n + j]` is the `t × q` row-major transposed
+    /// `F_jk`. Validates geometry instead of asserting, so a corrupt
+    /// snapshot yields a typed error rather than a panic.
+    pub fn from_factors(
+        vocab: usize,
+        dim: usize,
+        order: usize,
+        rank: usize,
+        leaf_q: usize,
+        leaf_t: usize,
+        factors: Vec<Vec<f32>>,
+    ) -> crate::Result<Word2KetXS> {
+        if !(2..=8).contains(&order) || rank == 0 || leaf_q == 0 || leaf_t == 0 {
+            return Err(crate::Error::Snapshot(format!(
+                "bad word2ketXS geometry: order={order} rank={rank} q={leaf_q} t={leaf_t}"
+            )));
+        }
+        let full = leaf_q
+            .checked_pow(order as u32)
+            .ok_or_else(|| crate::Error::Snapshot("word2ketXS q^order overflows".into()))?;
+        let cap = leaf_t
+            .checked_pow(order as u32)
+            .ok_or_else(|| crate::Error::Snapshot("word2ketXS t^order overflows".into()))?;
+        // Cover dim/vocab, and stay within the minimal-root bound (see
+        // `Word2Ket::from_leaves`): hostile oversized q/t would otherwise
+        // blow up per-lookup scratch buffers.
+        if full < dim
+            || cap < vocab
+            || full > dim.saturating_mul(1usize << order)
+            || cap > vocab.saturating_mul(1usize << order)
+        {
+            return Err(crate::Error::Snapshot(format!(
+                "word2ketXS geometry inconsistent with {vocab}x{dim} (q^n={full}, t^n={cap})"
+            )));
+        }
+        let per = leaf_t
+            .checked_mul(leaf_q)
+            .ok_or_else(|| crate::Error::Snapshot("word2ketXS geometry overflows".into()))?;
+        let n_factors = rank
+            .checked_mul(order)
+            .ok_or_else(|| crate::Error::Snapshot("word2ketXS geometry overflows".into()))?;
+        if factors.len() != n_factors || factors.iter().any(|f| f.len() != per) {
+            return Err(crate::Error::Snapshot(format!(
+                "word2ketXS expects {rank}x{order} factors of {per} values"
+            )));
+        }
+        Ok(Word2KetXS {
+            vocab,
+            dim,
+            order,
+            rank,
+            leaf_q,
+            leaf_t,
+            factors,
+            radix: MixedRadix::uniform(leaf_t, order),
+        })
+    }
+
     pub fn order(&self) -> usize {
         self.order
     }
@@ -73,6 +132,11 @@ impl Word2KetXS {
 
     pub fn leaf_q(&self) -> usize {
         self.leaf_q
+    }
+
+    /// All factor matrices in `k·n + j` order (snapshot serialization).
+    pub fn factors(&self) -> &[Vec<f32>] {
+        &self.factors
     }
 
     pub fn leaf_t(&self) -> usize {

@@ -17,6 +17,7 @@ pub enum Error {
     Data(String),
     Checkpoint(String),
     Server(String),
+    Snapshot(String),
     Json(crate::util::json::JsonError),
     Io(std::io::Error),
     Xla(String),
@@ -33,6 +34,7 @@ impl fmt::Display for Error {
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             Error::Server(m) => write!(f, "server error: {m}"),
+            Error::Snapshot(m) => write!(f, "snapshot error: {m}"),
             Error::Json(e) => write!(f, "json error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),

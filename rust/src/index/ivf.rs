@@ -164,6 +164,46 @@ impl IvfIndex {
         IvfIndex { scorer, dim, nprobe, centroids, lists }
     }
 
+    /// Rebuild an index from serialized parts (snapshot loading), skipping
+    /// k-means training entirely. Validates the payload instead of
+    /// asserting: a server falls back to retraining on a bad payload rather
+    /// than panicking mid-reload.
+    pub fn from_parts(
+        scorer: Scorer,
+        nprobe: usize,
+        centroids: Vec<f32>,
+        lists: Vec<Vec<u32>>,
+    ) -> crate::Result<IvfIndex> {
+        let dim = scorer.dim();
+        let vocab = scorer.vocab_size();
+        let nlist = lists.len();
+        if nlist == 0 || centroids.len() != nlist * dim {
+            return Err(crate::Error::Snapshot(format!(
+                "ivf parts mismatch: {} centroid values for nlist={nlist} dim={dim}",
+                centroids.len()
+            )));
+        }
+        let mut seen = vec![false; vocab];
+        for list in &lists {
+            for &id in list {
+                let id = id as usize;
+                if id >= vocab || seen[id] {
+                    return Err(crate::Error::Snapshot(format!(
+                        "ivf parts: id {id} out of range or duplicated (vocab {vocab})"
+                    )));
+                }
+                seen[id] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(crate::Error::Snapshot(
+                "ivf parts: cell lists do not cover the vocabulary".into(),
+            ));
+        }
+        let nprobe = nprobe.clamp(1, nlist);
+        Ok(IvfIndex { scorer, dim, nprobe, centroids, lists })
+    }
+
     pub fn nlist(&self) -> usize {
         self.lists.len()
     }
@@ -174,6 +214,16 @@ impl IvfIndex {
 
     pub fn scorer(&self) -> &Scorer {
         &self.scorer
+    }
+
+    /// `nlist × dim` row-major centroids (snapshot serialization).
+    pub fn centroids(&self) -> &[f32] {
+        &self.centroids
+    }
+
+    /// Per-cell member id lists (a partition of the vocabulary).
+    pub fn lists(&self) -> &[Vec<u32>] {
+        &self.lists
     }
 }
 
@@ -307,6 +357,42 @@ mod tests {
         }
         let recall = hits as f64 / total as f64;
         assert!(recall > 0.2, "recall {recall:.2} suspiciously low");
+    }
+
+    #[test]
+    fn from_parts_reproduces_built_index() {
+        let s = store(300);
+        let built = IvfIndex::build(Scorer::new(s.clone(), false), 8, 3, 9);
+        let rebuilt = IvfIndex::from_parts(
+            Scorer::new(s.clone(), false),
+            3,
+            built.centroids().to_vec(),
+            built.lists().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt.nlist(), built.nlist());
+        for &q in &[0usize, 99, 299] {
+            let (a, sa) = built.top_k(&Query::Id(q), 7);
+            let (b, sb) = rebuilt.top_k(&Query::Id(q), 7);
+            assert_eq!(sa, sb, "query {q} stats differ");
+            let aids: Vec<usize> = a.iter().map(|n| n.id).collect();
+            let bids: Vec<usize> = b.iter().map(|n| n.id).collect();
+            assert_eq!(aids, bids, "query {q}");
+        }
+        // Bad payloads are typed errors, not panics.
+        assert!(IvfIndex::from_parts(Scorer::new(s.clone(), false), 3, vec![0.0; 5], vec![])
+            .is_err());
+        // A list set that drops ids must be rejected too.
+        let mut lists = built.lists().to_vec();
+        let dropped = lists[0].pop();
+        assert!(dropped.is_some());
+        assert!(IvfIndex::from_parts(
+            Scorer::new(s, false),
+            3,
+            built.centroids().to_vec(),
+            lists
+        )
+        .is_err());
     }
 
     #[test]

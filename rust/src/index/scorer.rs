@@ -15,7 +15,8 @@
 //! reconstructs a row on tensorized stores.
 
 use crate::embedding::{EmbeddingStore, Word2Ket, Word2KetXS};
-use crate::serving::ShardedCache;
+use crate::serving::cache::unwrap_cached;
+use crate::snapshot::SnapshotStore;
 use crate::tensor::dot;
 use std::sync::Arc;
 
@@ -26,25 +27,17 @@ enum Backend {
     Word2Ket,
     /// Shared-factor operator: factored inner via `Word2KetXS::inner`.
     Word2KetXS,
+    /// Snapshot-backed factors (post-hot-swap): `SnapshotStore::inner`.
+    Snapshot,
     /// Materialized rows through the store (cache-aware when wrapped).
     Dense,
-}
-
-/// Peel cache wrappers off a store to reach the structure underneath.
-fn unwrap_store(store: &dyn EmbeddingStore) -> &dyn EmbeddingStore {
-    if let Some(any) = store.as_any() {
-        if let Some(cache) = any.downcast_ref::<ShardedCache>() {
-            return unwrap_store(cache.inner());
-        }
-    }
-    store
 }
 
 /// Decide the scoring backend. The factored identities only hold for raw
 /// (no LayerNorm) CP form over the full `q^n` tensor, so truncated or
 /// LayerNorm-ed stores score densely.
 fn sniff(store: &dyn EmbeddingStore) -> Backend {
-    let inner = unwrap_store(store);
+    let inner = unwrap_cached(store);
     if let Some(any) = inner.as_any() {
         if let Some(w) = any.downcast_ref::<Word2Ket>() {
             if !w.layernorm() && w.exact_dim() {
@@ -54,6 +47,14 @@ fn sniff(store: &dyn EmbeddingStore) -> Backend {
         if let Some(xs) = any.downcast_ref::<Word2KetXS>() {
             if xs.exact_dim() {
                 return Backend::Word2KetXS;
+            }
+        }
+        // A snapshot-backed model (after `save → load → swap`) exposes the
+        // same factored identities straight off the mapped file; without
+        // this arm a hot reload would silently demote k-NN to dense scans.
+        if let Some(snap) = any.downcast_ref::<SnapshotStore>() {
+            if snap.factored() {
+                return Backend::Snapshot;
             }
         }
     }
@@ -110,17 +111,24 @@ impl Scorer {
     }
 
     fn w2k(&self) -> &Word2Ket {
-        unwrap_store(self.store.as_ref())
+        unwrap_cached(self.store.as_ref())
             .as_any()
             .and_then(|a| a.downcast_ref::<Word2Ket>())
             .expect("scorer backend resolved to word2ket")
     }
 
     fn xs(&self) -> &Word2KetXS {
-        unwrap_store(self.store.as_ref())
+        unwrap_cached(self.store.as_ref())
             .as_any()
             .and_then(|a| a.downcast_ref::<Word2KetXS>())
             .expect("scorer backend resolved to word2ketXS")
+    }
+
+    fn snap(&self) -> &SnapshotStore {
+        unwrap_cached(self.store.as_ref())
+            .as_any()
+            .and_then(|a| a.downcast_ref::<SnapshotStore>())
+            .expect("scorer backend resolved to snapshot store")
     }
 
     /// Resolve a per-scan scoring handle: the concrete store reference is
@@ -131,6 +139,7 @@ impl Scorer {
         let backend = match self.backend {
             Backend::Word2Ket => ResolvedBackend::Word2Ket(self.w2k()),
             Backend::Word2KetXS => ResolvedBackend::Word2KetXS(self.xs()),
+            Backend::Snapshot => ResolvedBackend::Snapshot(self.snap()),
             Backend::Dense => ResolvedBackend::Dense,
         };
         PairScorer { backend, store: self.store.as_ref(), cosine: self.cosine, norms: &self.norms }
@@ -179,6 +188,7 @@ impl Scorer {
         let path = match self.backend {
             Backend::Word2Ket => "factored(word2ket)",
             Backend::Word2KetXS => "factored(word2ketXS)",
+            Backend::Snapshot => "factored(snapshot)",
             Backend::Dense => "materialized",
         };
         format!("{metric}/{path}")
@@ -189,6 +199,7 @@ impl Scorer {
 enum ResolvedBackend<'a> {
     Word2Ket(&'a Word2Ket),
     Word2KetXS(&'a Word2KetXS),
+    Snapshot(&'a SnapshotStore),
     Dense,
 }
 
@@ -210,6 +221,7 @@ impl PairScorer<'_> {
         match &self.backend {
             ResolvedBackend::Word2Ket(w) => w.inner(a, b),
             ResolvedBackend::Word2KetXS(xs) => xs.inner(a, b),
+            ResolvedBackend::Snapshot(s) => s.inner(a, b),
             ResolvedBackend::Dense => {
                 let va = self.store.lookup(a);
                 if a == b {
@@ -242,6 +254,7 @@ impl PairScorer<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serving::ShardedCache;
     use crate::util::Rng;
 
     fn w2k(vocab: usize, dim: usize, order: usize, rank: usize) -> Arc<dyn EmbeddingStore> {
@@ -313,6 +326,35 @@ mod tests {
         let scorer = Scorer::new(cached, false);
         assert!(scorer.is_factored(), "cache wrapper must be transparent to the sniff");
         assert!(scorer.score_pair(1, 2).is_finite());
+    }
+
+    #[test]
+    fn snapshot_store_sniffed_factored_through_cache() {
+        // Satellite: a SnapshotStore-backed model (the post-reload state)
+        // must keep factored-space scoring, including under the cache
+        // wrapper, with scores bit-identical to the original store's.
+        let mut rng = Rng::new(9);
+        let xs = Word2KetXS::random(60, 16, 2, 2, &mut rng);
+        let path = std::env::temp_dir()
+            .join(format!("w2k_scorer_snap_{}.snap", std::process::id()));
+        crate::snapshot::save_store(&xs, &path, &Default::default()).unwrap();
+        let snap =
+            Arc::new(crate::snapshot::Snapshot::open(&path, true).unwrap());
+        let mm = SnapshotStore::open(snap).unwrap();
+        let cached: Arc<dyn EmbeddingStore> =
+            Arc::new(ShardedCache::new(Box::new(mm), 2, 64));
+        let scorer = Scorer::new(cached, false);
+        assert!(scorer.is_factored(), "snapshot store must keep factored scoring");
+        assert!(scorer.describe().contains("factored(snapshot)"), "{}", scorer.describe());
+        let direct = Scorer::new(Arc::new(xs) as Arc<dyn EmbeddingStore>, false);
+        for (a, b) in [(0usize, 1usize), (5, 5), (59, 17)] {
+            assert_eq!(
+                direct.score_pair(a, b).to_bits(),
+                scorer.score_pair(a, b).to_bits(),
+                "({a},{b})"
+            );
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -8,6 +8,31 @@ use super::kron_tree;
 use crate::tensor::{dot, layernorm_slices};
 use crate::util::Rng;
 
+/// Balanced-tree Kronecker product of one rank term's leaves (Fig. 1),
+/// optionally LayerNorm-ing every internal node. Shared by
+/// [`CpTensor::reconstruct`] and the snapshot store's mapped reconstruction
+/// so both produce bit-identical rows from the same leaves.
+pub(crate) fn tree_term(leaves: &[&[f32]], layernorm: bool) -> Vec<f32> {
+    let mut level: Vec<Vec<f32>> = leaves.iter().map(|l| l.to_vec()).collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            if pair.len() == 2 {
+                let mut node = kron_vec(&pair[0], &pair[1]);
+                if layernorm {
+                    let w = node.len();
+                    node = layernorm_slices(&node, w).expect("layernorm node");
+                }
+                next.push(node);
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
 /// A single entangled-tensor vector in CP format.
 ///
 /// Leaves are stored as `factors[k][j]` = `v_{j,k}` ∈ R^q for rank index `k`
@@ -115,25 +140,8 @@ impl CpTensor {
 
     /// Reconstruct a single rank term ⊗_j v_jk via the balanced tree.
     fn reconstruct_term(&self, k: usize) -> Vec<f32> {
-        let mut level: Vec<Vec<f32>> =
-            (0..self.order).map(|j| self.leaf(k, j).to_vec()).collect();
-        while level.len() > 1 {
-            let mut next = Vec::with_capacity((level.len() + 1) / 2);
-            for pair in level.chunks(2) {
-                if pair.len() == 2 {
-                    let mut node = kron_vec(&pair[0], &pair[1]);
-                    if self.layernorm_nodes {
-                        let w = node.len();
-                        node = layernorm_slices(&node, w).expect("layernorm node");
-                    }
-                    next.push(node);
-                } else {
-                    next.push(pair[0].clone());
-                }
-            }
-            level = next;
-        }
-        level.pop().unwrap()
+        let leaves: Vec<&[f32]> = (0..self.order).map(|j| self.leaf(k, j)).collect();
+        tree_term(&leaves, self.layernorm_nodes)
     }
 
     /// Factored inner product (§2.3):

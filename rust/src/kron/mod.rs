@@ -16,6 +16,7 @@ mod cp;
 mod radix;
 
 pub use cp::CpTensor;
+pub(crate) use cp::tree_term;
 pub use radix::MixedRadix;
 
 use crate::tensor::Tensor;

@@ -45,6 +45,7 @@ pub mod kron;
 pub mod metrics;
 pub mod runtime;
 pub mod serving;
+pub mod snapshot;
 pub mod tensor;
 pub mod testing;
 pub mod text;

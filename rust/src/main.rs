@@ -1,17 +1,21 @@
 //! `w2k` — leader entrypoint for the word2ket reproduction.
 //!
-//! Subcommands: `train`, `eval`, `serve`, `params`, `artifacts`.
-//! Run `w2k --help` for details.
+//! Subcommands: `train`, `eval`, `serve`, `snapshot`, `params`,
+//! `artifacts`. Run `w2k --help` for details.
 
 use word2ket::cli;
 use word2ket::config;
 use word2ket::coordinator;
-use word2ket::embedding::stats;
+use word2ket::embedding::{self, stats, EmbeddingStore};
+use word2ket::index::{IvfIndex, Scorer};
 use word2ket::runtime::ArtifactRegistry;
+use word2ket::snapshot::{self, Snapshot, SnapshotStore};
 use word2ket::util::log::{set_level, Level};
+use word2ket::util::Rng;
 
 use std::path::Path;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -31,6 +35,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&parsed),
         "eval" => cmd_eval(&parsed),
         "serve" => cmd_serve(&parsed),
+        "snapshot" => cmd_snapshot(&parsed),
         "params" => cmd_params(),
         "artifacts" => cmd_artifacts(&parsed),
         other => Err(word2ket::Error::Cli(format!("unhandled command {other}"))),
@@ -77,6 +82,87 @@ fn cmd_serve(parsed: &cli::Parsed) -> word2ket::Result<()> {
         cfg.server.addr = addr.to_string();
     }
     coordinator::server::serve_blocking(&cfg)
+}
+
+fn cmd_snapshot(parsed: &cli::Parsed) -> word2ket::Result<()> {
+    let action = parsed
+        .positionals
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| word2ket::Error::Cli("snapshot needs an action: save | load | info".into()))?;
+    let path_s = parsed
+        .positionals
+        .get(1)
+        .ok_or_else(|| word2ket::Error::Cli("snapshot needs a file path".into()))?;
+    let path = Path::new(path_s);
+    match action {
+        "save" => {
+            let cfg = load_cfg(parsed)?;
+            let codec = match parsed.get("payload") {
+                Some(s) => snapshot::Codec::parse(s)?,
+                None => cfg.snapshot.codec,
+            };
+            let mut rng = Rng::new(cfg.train.seed);
+            let store: Arc<dyn embedding::EmbeddingStore> = Arc::from(embedding::build(
+                &cfg.embedding,
+                cfg.model.vocab,
+                cfg.model.emb_dim,
+                &mut rng,
+            ));
+            let opts = snapshot::SaveOptions { codec };
+            let info = if parsed.flag("with-index")
+                && cfg.index.kind == config::IndexKind::Ivf
+            {
+                // Same deterministic seed as the server, so the embedded
+                // index is exactly what a fresh boot would have trained.
+                let ivf = IvfIndex::build(
+                    Scorer::new(store.clone(), cfg.index.cosine),
+                    cfg.index.nlist,
+                    cfg.index.nprobe,
+                    0x6b6e6e,
+                );
+                snapshot::save_store_with_index(store.as_ref(), Some(&ivf), path, &opts)?
+            } else {
+                if parsed.flag("with-index") {
+                    eprintln!("note: --with-index requires [index] kind=ivf; saving store only");
+                }
+                snapshot::save_store(store.as_ref(), path, &opts)?
+            };
+            let materialized = (cfg.model.vocab * cfg.model.emb_dim * 4) as f64;
+            println!(
+                "saved {} ({} sections, {} bytes on disk, {:.1}x smaller than the \
+                 materialized f32 table) to {}",
+                store.describe(),
+                info.sections,
+                info.bytes,
+                materialized / info.bytes as f64,
+                path.display()
+            );
+            Ok(())
+        }
+        "info" => {
+            let snap = Snapshot::open(path, parsed.flag("mmap"))?;
+            println!("{}", snap.describe());
+            Ok(())
+        }
+        "load" => {
+            if parsed.flag("mmap") {
+                let snap = Arc::new(Snapshot::open(path, true)?);
+                let store = SnapshotStore::open(snap)?;
+                println!("loaded (mmap, zero-copy) {}", store.describe());
+                println!("row 0 head: {:?}", &store.lookup(0)[..store.dim().min(4)]);
+            } else {
+                let snap = Snapshot::open(path, false)?;
+                let store = snapshot::load_store(&snap)?;
+                println!("loaded (heap) {}", store.describe());
+                println!("row 0 head: {:?}", &store.lookup(0)[..store.dim().min(4)]);
+            }
+            Ok(())
+        }
+        other => Err(word2ket::Error::Cli(format!(
+            "unknown snapshot action '{other}' (expected save | load | info)"
+        ))),
+    }
 }
 
 fn cmd_params() -> word2ket::Result<()> {

@@ -199,6 +199,19 @@ impl CacheStats {
     }
 }
 
+/// Peel [`ShardedCache`] wrappers off a store to reach the parameter-owning
+/// store underneath. Shared by the index scorer's factored-backend sniff
+/// and snapshot serialization, so a new wrapper type only needs teaching
+/// here.
+pub(crate) fn unwrap_cached(store: &dyn EmbeddingStore) -> &dyn EmbeddingStore {
+    if let Some(any) = store.as_any() {
+        if let Some(cache) = any.downcast_ref::<ShardedCache>() {
+            return unwrap_cached(cache.inner());
+        }
+    }
+    store
+}
+
 /// Sharded hot-row cache wrapping any [`EmbeddingStore`]; itself a store.
 pub struct ShardedCache {
     inner: Box<dyn EmbeddingStore>,

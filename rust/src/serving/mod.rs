@@ -1,5 +1,5 @@
 //! Production serving layer: sharded hot-row cache, worker pool, binary wire
-//! protocol, and the k-NN request path.
+//! protocol, the k-NN request path, and live model hot-swap.
 //!
 //! This is the request path behind `w2k serve` and the `serve_embeddings`
 //! example. The paper's word2ketXS table is small enough to live in cache
@@ -20,10 +20,25 @@
 //!   `KNN`/`OP_KNN` queries, scoring in factored space when the store is
 //!   tensorized.
 //!
+//! ## Model generations and hot swap
+//!
+//! Cache + index + pool together form one immutable **model generation**
+//! (`Arc<Model>`). Every request clones the current generation's `Arc` once
+//! and runs entirely against it. `RELOAD <path>` / `OP_RELOAD` builds a new
+//! generation from a snapshot file on the *calling connection's* thread
+//! (listener and workers keep serving), validates it, then atomically swaps
+//! the shared pointer: new requests land on the new model while in-flight
+//! requests drain on the old one, whose workers shut down only after the
+//! last holder drops it — zero failed requests across a swap. The retired
+//! generation's counters fold into a carry so `STATS` stays cumulative;
+//! `model_generation` and `snapshot_bytes` expose the swap state.
+//!
 //! Configuration arrives via `[serving]` in the experiment TOML
 //! ([`crate::config::ServingConfig`]): `shards`, `cache_rows`,
 //! `batch_window_us`, `queue_depth`, `max_batch`; the index via `[index]`
-//! ([`crate::config::IndexConfig`]): `kind`, `nlist`, `nprobe`, `cosine`.
+//! ([`crate::config::IndexConfig`]): `kind`, `nlist`, `nprobe`, `cosine`;
+//! snapshot startup/reload behavior via `[snapshot]`
+//! ([`crate::config::SnapshotConfig`]): `path`, `mmap`, `codec`.
 
 pub mod cache;
 pub mod pool;
@@ -33,10 +48,14 @@ pub use cache::{CacheStats, ShardedCache};
 pub use pool::{Job, Overloaded, WorkerPool};
 pub use wire::{BinaryClient, WireError, WireStats};
 
-use crate::config::{IndexConfig, ServingConfig};
+use crate::config::{IndexConfig, IndexKind, ServingConfig};
 use crate::embedding::EmbeddingStore;
-use crate::index::{build_index, KnnIndex, Neighbor, Query};
-use std::sync::{mpsc, Arc};
+use crate::error::Error;
+use crate::index::{build_index, IvfIndex, KnnIndex, Neighbor, Query, Scorer};
+use crate::snapshot::{self, IndexPayload, Snapshot, SnapshotStore};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Why a request could not be served.
@@ -67,8 +86,8 @@ impl std::fmt::Display for LookupError {
     }
 }
 
-/// Aggregate serving statistics (pool + cache + knn), zeros before any
-/// traffic.
+/// Aggregate serving statistics (pool + cache + knn + swap state), zeros
+/// (and generation 1) before any traffic.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServingStats {
     pub p50_us: f64,
@@ -82,16 +101,48 @@ pub struct ServingStats {
     pub knn_candidates: u64,
     /// Mean IVF cells probed per knn query (0 for brute force / no traffic).
     pub knn_mean_probes: f64,
+    /// Current model generation (1 at boot, +1 per successful reload).
+    pub model_generation: u64,
+    /// On-disk bytes of the snapshot backing the current generation (0 when
+    /// the model was built in memory).
+    pub snapshot_bytes: u64,
 }
 
-/// Shared per-server serving state: cached store + worker pool + knn index.
+/// One immutable model generation: cache + index + worker pool.
+struct Model {
+    store: Arc<ShardedCache>,
+    index: Arc<dyn KnnIndex>,
+    pool: WorkerPool,
+    snapshot_bytes: u64,
+}
+
+/// Counters carried across generations so `STATS` stays cumulative after a
+/// hot swap (a retired pool's totals fold in here once it drains).
+#[derive(Default)]
+struct Carry {
+    served: AtomicU64,
+    rejected: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    knn_queries: AtomicU64,
+    knn_candidates: AtomicU64,
+    knn_probes: AtomicU64,
+}
+
+/// Shared per-server serving state: the current model generation plus the
+/// configuration needed to build replacement generations on reload.
 ///
 /// Protocol handlers (text in `coordinator::server`, binary in [`wire`])
 /// validate and format; everything between socket and store lives here.
 pub struct ServingState {
-    store: Arc<ShardedCache>,
-    index: Arc<dyn KnnIndex>,
-    pool: WorkerPool,
+    model: Mutex<Arc<Model>>,
+    serving_cfg: ServingConfig,
+    index_cfg: IndexConfig,
+    /// Whether reloads map the snapshot (zero-copy) or heap-buffer it;
+    /// follows `[snapshot] mmap` so boot and reload behave identically.
+    reload_mmap: bool,
+    generation: AtomicU64,
+    carry: Arc<Carry>,
     timeout: Duration,
 }
 
@@ -101,11 +152,77 @@ impl ServingState {
         cfg: &ServingConfig,
         index_cfg: &IndexConfig,
     ) -> ServingState {
+        let model = Self::assemble(inner, cfg, index_cfg, None, 0);
+        Self::with_model(model, cfg, index_cfg)
+    }
+
+    /// Boot directly from a snapshot file (`[snapshot] path`): the store
+    /// serves off the (optionally memory-mapped) file and, when the
+    /// snapshot embeds IVF centroids, the index loads instead of re-running
+    /// k-means.
+    pub fn from_snapshot(
+        path: &Path,
+        cfg: &ServingConfig,
+        index_cfg: &IndexConfig,
+        mmap: bool,
+    ) -> crate::Result<ServingState> {
+        let model = Self::model_from_snapshot(path, cfg, index_cfg, mmap)?;
+        let mut state = Self::with_model(model, cfg, index_cfg);
+        state.reload_mmap = mmap;
+        Ok(state)
+    }
+
+    /// Set how future `RELOAD`s open snapshots (`[snapshot] mmap`); defaults
+    /// to memory-mapped.
+    pub fn set_reload_mmap(&mut self, mmap: bool) {
+        self.reload_mmap = mmap;
+    }
+
+    fn with_model(model: Model, cfg: &ServingConfig, index_cfg: &IndexConfig) -> ServingState {
+        ServingState {
+            model: Mutex::new(Arc::new(model)),
+            serving_cfg: cfg.clone(),
+            index_cfg: index_cfg.clone(),
+            reload_mmap: true,
+            generation: AtomicU64::new(1),
+            carry: Arc::new(Carry::default()),
+            timeout: Duration::from_secs(5),
+        }
+    }
+
+    /// Build one model generation over `inner`. `index_payload` (from a
+    /// snapshot) skips IVF training when compatible with the `[index]`
+    /// config; incompatible or invalid payloads fall back to a fresh build
+    /// rather than failing the whole generation.
+    fn assemble(
+        inner: Box<dyn EmbeddingStore>,
+        cfg: &ServingConfig,
+        index_cfg: &IndexConfig,
+        index_payload: Option<IndexPayload>,
+        snapshot_bytes: u64,
+    ) -> Model {
         let store = Arc::new(ShardedCache::new(inner, cfg.shards, cfg.cache_rows));
         let index_store: Arc<dyn EmbeddingStore> = store.clone();
-        // Fixed seed: index structure (IVF centroids) is deterministic for a
-        // given store, so restarts serve identical results.
-        let index: Arc<dyn KnnIndex> = Arc::from(build_index(index_cfg, index_store, 0x6b6e6e));
+        let mut index: Option<Arc<dyn KnnIndex>> = None;
+        if index_cfg.kind == IndexKind::Ivf {
+            if let Some(p) = index_payload {
+                if p.cosine == index_cfg.cosine {
+                    let scorer = Scorer::new(index_store.clone(), index_cfg.cosine);
+                    match IvfIndex::from_parts(scorer, index_cfg.nprobe, p.centroids, p.lists) {
+                        Ok(ivf) => index = Some(Arc::new(ivf)),
+                        Err(e) => crate::warn!("snapshot index rejected ({e}); retraining"),
+                    }
+                } else {
+                    crate::warn!("snapshot index metric differs from [index] config; retraining");
+                }
+            }
+        }
+        let index: Arc<dyn KnnIndex> = match index {
+            Some(i) => i,
+            // Fixed seed: index structure (IVF centroids) is deterministic
+            // for a given store, so restarts serve identical results.
+            None => Arc::from(build_index(index_cfg, index_store, 0x6b6e6e)),
+        };
         // Index construction (IVF k-means, cosine norm pass) reads rows
         // through the cache — useful warming, but it must not count as
         // traffic: STATS stays all-zero until the first real request.
@@ -119,42 +236,119 @@ impl ServingState {
             cfg.max_batch,
             Some(index.clone()),
         );
-        ServingState { store, index, pool, timeout: Duration::from_secs(5) }
+        Model { store, index, pool, snapshot_bytes }
     }
 
-    pub fn store(&self) -> &ShardedCache {
-        &self.store
+    fn model_from_snapshot(
+        path: &Path,
+        cfg: &ServingConfig,
+        index_cfg: &IndexConfig,
+        mmap: bool,
+    ) -> crate::Result<Model> {
+        let snap = Arc::new(Snapshot::open(path, mmap)?);
+        let payload = snapshot::load_index_payload(&snap)?;
+        let bytes = snap.file_len();
+        let store = SnapshotStore::open(snap)?;
+        Ok(Self::assemble(Box::new(store), cfg, index_cfg, payload, bytes))
     }
 
-    /// The similarity index answering `KNN` queries.
-    pub fn index(&self) -> &dyn KnnIndex {
-        self.index.as_ref()
+    /// Swap in a new model generation loaded from `path` (memory-mapped
+    /// unless `[snapshot] mmap = false`).
+    ///
+    /// Runs on the caller's thread: the new snapshot is opened and fully
+    /// CRC-validated, its cache/index/pool built and warmed, all while the
+    /// current generation keeps serving. Only then is the shared pointer
+    /// replaced — an atomic swap under a lock held for a pointer move.
+    /// In-flight requests drain on the old generation; its workers stop
+    /// once the last holder lets go, and its counters fold into the carry.
+    /// Returns the new generation number.
+    pub fn reload_snapshot(&self, path: &Path) -> crate::Result<u64> {
+        let model =
+            Self::model_from_snapshot(path, &self.serving_cfg, &self.index_cfg, self.reload_mmap)?;
+        if model.store.dim() != self.dim() {
+            return Err(Error::Snapshot(format!(
+                "snapshot dim {} does not match serving dim {} (connected clients negotiated \
+                 the old dimension)",
+                model.store.dim(),
+                self.dim()
+            )));
+        }
+        let old = {
+            let mut cur = self.model.lock().unwrap();
+            std::mem::replace(&mut *cur, Arc::new(model))
+        };
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        // Fold the retired generation's counters into the carry *now*, so
+        // STATS stays monotonic through the swap (a deferred fold would make
+        // `served` dip to ~0 until the old pool drains — a negative-rate
+        // spike on any monitoring). Requests still draining on the old
+        // generation after this point are bounded by its queue depth and are
+        // not re-counted (the fold happens exactly once, here).
+        self.carry.served.fetch_add(old.pool.served(), Ordering::Relaxed);
+        self.carry.rejected.fetch_add(old.pool.rejected(), Ordering::Relaxed);
+        let (q, c, p) = old.pool.knn_counters();
+        self.carry.knn_queries.fetch_add(q, Ordering::Relaxed);
+        self.carry.knn_candidates.fetch_add(c, Ordering::Relaxed);
+        self.carry.knn_probes.fetch_add(p, Ordering::Relaxed);
+        let cs = old.store.stats();
+        self.carry.hits.fetch_add(cs.hits, Ordering::Relaxed);
+        self.carry.misses.fetch_add(cs.misses, Ordering::Relaxed);
+        // Retire off-thread: in-flight requests still hold the old Arc and
+        // must be able to submit + drain against its live pool before its
+        // workers stop.
+        std::thread::Builder::new()
+            .name("model-retire".into())
+            .spawn(move || retire(old))
+            .ok();
+        Ok(generation)
+    }
+
+    fn current(&self) -> Arc<Model> {
+        self.model.lock().unwrap().clone()
+    }
+
+    /// The current generation's cached store.
+    pub fn store(&self) -> Arc<ShardedCache> {
+        self.current().store.clone()
+    }
+
+    /// The current generation's similarity index.
+    pub fn index(&self) -> Arc<dyn KnnIndex> {
+        self.current().index.clone()
+    }
+
+    /// Current model generation (1 at boot, +1 per successful reload).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
     }
 
     pub fn dim(&self) -> usize {
-        self.store.dim()
+        self.current().store.dim()
     }
 
     pub fn vocab_size(&self) -> usize {
-        self.store.vocab_size()
+        self.current().store.vocab_size()
     }
 
     pub fn served(&self) -> u64 {
-        self.pool.served()
+        self.carry.served.load(Ordering::Relaxed) + self.current().pool.served()
     }
 
     /// Validate and enqueue a lookup, blocking until rows arrive or the
-    /// deadline passes. Rows come back in request order.
+    /// deadline passes. Rows come back in request order. The whole request
+    /// runs against one model generation (captured here), so a concurrent
+    /// hot swap can never mix rows from two models.
     pub fn lookup_rows(&self, ids: Vec<usize>) -> Result<Vec<Vec<f32>>, LookupError> {
         if ids.is_empty() {
             return Err(LookupError::Empty);
         }
-        let vocab = self.store.vocab_size();
+        let m = self.current();
+        let vocab = m.store.vocab_size();
         if ids.iter().any(|&id| id >= vocab) {
             return Err(LookupError::OutOfRange);
         }
         let (tx, rx) = mpsc::channel();
-        self.pool
+        m.pool
             .submit(Job::Lookup { ids, enqueued: Instant::now(), reply: tx })
             .map_err(|_| LookupError::Overloaded)?;
         rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)
@@ -163,12 +357,13 @@ impl ServingState {
     /// Inner product of two rows. Served synchronously through the cache
     /// (two row fetches), bypassing the batching queue.
     pub fn dot(&self, a: usize, b: usize) -> Result<f32, LookupError> {
-        let vocab = self.store.vocab_size();
+        let m = self.current();
+        let vocab = m.store.vocab_size();
         if a >= vocab || b >= vocab {
             return Err(LookupError::OutOfRange);
         }
-        let va = self.store.lookup(a);
-        let vb = self.store.lookup(b);
+        let va = m.store.lookup(a);
+        let vb = m.store.lookup(b);
         Ok(crate::tensor::dot(&va, &vb))
     }
 
@@ -182,21 +377,22 @@ impl ServingState {
         if k == 0 {
             return Err(LookupError::BadQuery);
         }
-        let k = k.min(self.store.vocab_size());
+        let m = self.current();
+        let k = k.min(m.store.vocab_size());
         match &query {
             Query::Id(id) => {
-                if *id >= self.store.vocab_size() {
+                if *id >= m.store.vocab_size() {
                     return Err(LookupError::OutOfRange);
                 }
             }
             Query::Vector(v) => {
-                if v.len() != self.dim() {
+                if v.len() != m.store.dim() {
                     return Err(LookupError::BadQuery);
                 }
             }
         }
         let (tx, rx) = mpsc::channel();
-        self.pool
+        m.pool
             .submit(Job::Knn { query, k, enqueued: Instant::now(), reply: tx })
             .map_err(|_| LookupError::Overloaded)?;
         // knn accounting happens worker-side (like `served`), so queries
@@ -205,30 +401,51 @@ impl ServingState {
         Ok(neighbors)
     }
 
-    /// Pool + cache + knn statistics; all-zero (never NaN) before any
-    /// traffic.
+    /// Pool + cache + knn statistics, cumulative across hot swaps; all-zero
+    /// counters (never NaN) before any traffic.
     pub fn stats(&self) -> ServingStats {
-        let lat = self.pool.latency_summary();
+        let m = self.current();
+        let lat = m.pool.latency_summary();
         let (p50, p99) = if lat.is_empty() { (0.0, 0.0) } else { (lat.p50(), lat.p99()) };
-        let (knn_queries, knn_candidates, knn_probes) = self.pool.knn_counters();
+        let (knn_q, knn_c, knn_p) = m.pool.knn_counters();
+        let knn_queries = self.carry.knn_queries.load(Ordering::Relaxed) + knn_q;
+        let knn_candidates = self.carry.knn_candidates.load(Ordering::Relaxed) + knn_c;
+        let knn_probes = self.carry.knn_probes.load(Ordering::Relaxed) + knn_p;
         let knn_mean_probes =
             if knn_queries == 0 { 0.0 } else { knn_probes as f64 / knn_queries as f64 };
+        let cs = m.store.stats();
         ServingStats {
             p50_us: p50,
             p99_us: p99,
-            served: self.pool.served(),
-            rejected: self.pool.rejected(),
-            cache: self.store.stats(),
+            served: self.carry.served.load(Ordering::Relaxed) + m.pool.served(),
+            rejected: self.carry.rejected.load(Ordering::Relaxed) + m.pool.rejected(),
+            cache: CacheStats {
+                hits: self.carry.hits.load(Ordering::Relaxed) + cs.hits,
+                misses: self.carry.misses.load(Ordering::Relaxed) + cs.misses,
+                entries: cs.entries,
+            },
             knn_queries,
             knn_candidates,
             knn_mean_probes,
+            model_generation: self.generation(),
+            snapshot_bytes: m.snapshot_bytes,
         }
     }
 
-    /// Stop pool workers after their queues drain; idempotent.
+    /// Stop the current generation's pool workers after their queues drain;
+    /// idempotent.
     pub fn shutdown(&self) {
-        self.pool.shutdown();
+        self.current().pool.shutdown();
     }
+}
+
+/// Wait for every in-flight holder of a retired generation to finish, then
+/// drain + stop its workers (counters were already folded at swap time).
+fn retire(old: Arc<Model>) {
+    while Arc::strong_count(&old) > 1 {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    old.pool.shutdown();
 }
 
 #[cfg(test)]
@@ -236,6 +453,7 @@ mod tests {
     use super::*;
     use crate::config::{IndexConfig, IndexKind, ServingConfig};
     use crate::embedding::{EmbeddingStore, Word2KetXS};
+    use crate::snapshot::SaveOptions;
     use crate::util::Rng;
 
     fn state() -> ServingState {
@@ -250,6 +468,10 @@ mod tests {
             &ServingConfig { batch_window_us: 50, ..Default::default() },
             &index_cfg,
         )
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("w2k_serving_{}_{}.snap", std::process::id(), name))
     }
 
     #[test]
@@ -344,6 +566,99 @@ mod tests {
         assert_eq!(s.knn_queries, 0);
         assert_eq!(s.knn_candidates, 0);
         assert_eq!(s.knn_mean_probes, 0.0);
+        assert_eq!(s.model_generation, 1);
+        assert_eq!(s.snapshot_bytes, 0);
         st.shutdown();
+    }
+
+    #[test]
+    fn reload_swaps_generation_and_serves_new_rows() {
+        // Save a *different* store (same dim, different seed + vocab) and
+        // hot-swap to it: generation bumps, vocab/rows/snapshot_bytes all
+        // follow the new model, and old counters stay cumulative.
+        let st = state();
+        let before_rows = st.lookup_rows(vec![0, 1]).unwrap();
+        let served_before = st.served();
+        assert_eq!(served_before, 2);
+
+        let mut rng = Rng::new(99);
+        let other = Word2KetXS::random(120, 16, 2, 3, &mut rng);
+        let path = tmp("reload_basic");
+        snapshot::save_store(&other, &path, &SaveOptions::default()).unwrap();
+
+        let generation = st.reload_snapshot(&path).unwrap();
+        assert_eq!(generation, 2);
+        assert_eq!(st.generation(), 2);
+        assert_eq!(st.vocab_size(), 120, "vocab must follow the new model");
+        let after = st.lookup_rows(vec![0]).unwrap();
+        assert_eq!(after[0], other.lookup(0), "rows must come from the new model");
+        assert_ne!(before_rows[0], after[0], "different seed ⇒ different rows");
+        let s = st.stats();
+        assert_eq!(s.model_generation, 2);
+        assert!(s.snapshot_bytes > 0);
+
+        // The retired generation's served count folds into the carry.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while st.served() < 3 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(st.served(), 3, "cumulative served across the swap");
+
+        st.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reload_rejects_dim_mismatch_and_garbage() {
+        let st = state();
+        // Wrong dimension: connected binary clients negotiated dim once.
+        let mut rng = Rng::new(5);
+        let wrong = Word2KetXS::random(50, 64, 2, 2, &mut rng);
+        let path = tmp("wrong_dim");
+        snapshot::save_store(&wrong, &path, &SaveOptions::default()).unwrap();
+        assert!(matches!(st.reload_snapshot(&path), Err(Error::Snapshot(_))));
+        std::fs::write(&path, b"garbage").unwrap();
+        assert!(matches!(st.reload_snapshot(&path), Err(Error::Snapshot(_))));
+        assert!(st.reload_snapshot(Path::new("/nonexistent/no.snap")).is_err());
+        // Still generation 1 and still serving.
+        assert_eq!(st.generation(), 1);
+        assert_eq!(st.lookup_rows(vec![7]).unwrap().len(), 1);
+        st.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reload_with_embedded_ivf_skips_training_and_matches() {
+        // Snapshot carries the IVF payload; the reloaded server must answer
+        // identically to the original index (same centroids, same lists).
+        let mut rng = Rng::new(7);
+        let store = Word2KetXS::random(300, 16, 2, 2, &mut rng);
+        let icfg = IndexConfig { kind: IndexKind::Ivf, nlist: 8, nprobe: 3, cosine: false };
+        let st = ServingState::new(
+            Box::new(store.clone()),
+            &ServingConfig { batch_window_us: 50, ..Default::default() },
+            &icfg,
+        );
+        let before: Vec<Vec<usize>> = (0..5)
+            .map(|q| st.knn(Query::Id(q), 6).unwrap().iter().map(|n| n.id).collect())
+            .collect();
+
+        // Build the same index standalone and embed it in the snapshot.
+        let arc: Arc<dyn EmbeddingStore> = Arc::new(store.clone());
+        let ivf = IvfIndex::build(Scorer::new(arc, false), 8, 3, 0x6b6e6e);
+        let path = tmp("embedded_ivf");
+        snapshot::save_store_with_index(&store, Some(&ivf), &path, &SaveOptions::default())
+            .unwrap();
+
+        let generation = st.reload_snapshot(&path).unwrap();
+        assert_eq!(generation, 2);
+        assert!(st.index().describe().contains("ivf"), "{}", st.index().describe());
+        for (q, want) in before.iter().enumerate() {
+            let got: Vec<usize> =
+                st.knn(Query::Id(q), 6).unwrap().iter().map(|n| n.id).collect();
+            assert_eq!(&got, want, "query {q} differs after ivf-carrying reload");
+        }
+        st.shutdown();
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -17,19 +17,28 @@
 //!   op 2 DOT     count == 2 ids
 //!   op 3 STATS   count == 0
 //!   op 4 QUIT    count == 0 (server closes the connection)
-//!   op 5 KNN     count == 2: [query id, k]
+//!   op 5 KNN     count == 2: [query id, k]; k == 0 is a bad frame
+//!   op 6 RELOAD  count = path byte length, payload = count raw UTF-8 path
+//!                bytes (not ids); hot-swaps the model to that snapshot
 //! response:      u32 status, u32 count, payload
 //!   LOOKUP ok    count = #ids,  payload = count × dim × f32 rows
 //!   DOT ok       count = 1,     payload = 1 × f32
-//!   STATS ok     count = 9,     payload = 9 × f64:
+//!   STATS ok     count = 11,    payload = 11 × f64:
 //!                p50_us, p99_us, served, cache_hits, cache_misses, rejected,
-//!                knn_queries, knn_candidates, knn_mean_probes
+//!                knn_queries, knn_candidates, knn_mean_probes,
+//!                model_generation, snapshot_bytes
 //!   KNN ok       count = #neighbors (≤ k), payload = count × (u32 id,
 //!                f32 score), best first
+//!   RELOAD ok    count = 1,     payload = 1 × u32 new model generation
 //!   error        status != 0,   count = 0, no payload
 //! status codes:  0 ok, 1 id out of range, 2 bad frame, 3 overloaded
-//!                (backpressure), 4 timeout
+//!                (backpressure), 4 timeout, 5 reload failed
 //! ```
+//!
+//! Hostile-frame hardening: `count` is validated against [`MAX_IDS`]
+//! (or [`MAX_PATH_BYTES`] for RELOAD) *before* any buffer is allocated, so
+//! a 4 GiB count header costs the attacker a `STATUS_BAD_FRAME` and a
+//! closed connection, not a server allocation.
 
 use super::{LookupError, ServingState};
 use crate::index::Query;
@@ -45,15 +54,24 @@ pub const OP_DOT: u32 = 2;
 pub const OP_STATS: u32 = 3;
 pub const OP_QUIT: u32 = 4;
 pub const OP_KNN: u32 = 5;
+pub const OP_RELOAD: u32 = 6;
 
 pub const STATUS_OK: u32 = 0;
 pub const STATUS_RANGE: u32 = 1;
 pub const STATUS_BAD_FRAME: u32 = 2;
 pub const STATUS_OVERLOADED: u32 = 3;
 pub const STATUS_TIMEOUT: u32 = 4;
+pub const STATUS_RELOAD_FAILED: u32 = 5;
 
 /// Per-request id-count cap: bounds allocation from a hostile frame header.
 pub const MAX_IDS: u32 = 1 << 16;
+
+/// RELOAD path byte cap (PATH_MAX-ish): same allocation-bounding role as
+/// [`MAX_IDS`] for the one op whose payload is bytes, not ids.
+pub const MAX_PATH_BYTES: u32 = 4096;
+
+/// Number of f64 values in a STATS response payload.
+pub const STATS_FIELDS: usize = 11;
 
 pub fn status_name(status: u32) -> &'static str {
     match status {
@@ -62,6 +80,7 @@ pub fn status_name(status: u32) -> &'static str {
         STATUS_BAD_FRAME => "bad frame",
         STATUS_OVERLOADED => "overloaded",
         STATUS_TIMEOUT => "timeout",
+        STATUS_RELOAD_FAILED => "reload failed",
         _ => "unknown status",
     }
 }
@@ -148,6 +167,36 @@ pub fn handle_binary(
             Err(e) => return Err(e),
         };
         let count = read_u32(reader)?;
+        if op == OP_RELOAD {
+            // RELOAD's payload is path bytes, not ids; cap checked before
+            // any allocation, like MAX_IDS below.
+            if count == 0 || count > MAX_PATH_BYTES {
+                // The remaining stream length is untrustworthy: error, close.
+                return write_error(writer, STATUS_BAD_FRAME);
+            }
+            let mut raw = vec![0u8; count as usize];
+            reader.read_exact(&mut raw)?;
+            let Ok(path) = String::from_utf8(raw) else {
+                write_error(writer, STATUS_BAD_FRAME)?;
+                continue;
+            };
+            match state.reload_snapshot(std::path::Path::new(&path)) {
+                Ok(generation) => {
+                    let mut buf = Vec::with_capacity(12);
+                    put_u32(&mut buf, STATUS_OK);
+                    put_u32(&mut buf, 1);
+                    put_u32(&mut buf, generation as u32);
+                    writer.write_all(&buf)?;
+                }
+                Err(e) => {
+                    crate::warn!("binary RELOAD {path:?} failed: {e}");
+                    write_error(writer, STATUS_RELOAD_FAILED)?;
+                }
+            }
+            continue;
+        }
+        // Hostile-header guard: the cap check precedes the id-buffer
+        // allocation, so a 4 GiB count never reserves memory.
         if count > MAX_IDS {
             // The remaining stream length is untrustworthy: error and close.
             return write_error(writer, STATUS_BAD_FRAME);
@@ -180,6 +229,12 @@ pub fn handle_binary(
                 }
                 Err(e) => write_error(writer, status_of(e))?,
             },
+            // Zero-length k is rejected here, before the job could be built
+            // or enqueued (state.knn would also catch it; failing at the
+            // frame layer keeps the invalid request off the pool entirely).
+            OP_KNN if ids.len() == 2 && ids[1] == 0 => {
+                write_error(writer, STATUS_BAD_FRAME)?
+            }
             OP_KNN if ids.len() == 2 => {
                 let (query, k) = (ids[0], ids[1]);
                 match state.knn(Query::Id(query), k) {
@@ -198,9 +253,9 @@ pub fn handle_binary(
             }
             OP_STATS => {
                 let s = state.stats();
-                let mut buf = Vec::with_capacity(8 + 9 * 8);
+                let mut buf = Vec::with_capacity(8 + STATS_FIELDS * 8);
                 put_u32(&mut buf, STATUS_OK);
-                put_u32(&mut buf, 9);
+                put_u32(&mut buf, STATS_FIELDS as u32);
                 put_f64s(
                     &mut buf,
                     &[
@@ -213,6 +268,8 @@ pub fn handle_binary(
                         s.knn_queries as f64,
                         s.knn_candidates as f64,
                         s.knn_mean_probes,
+                        s.model_generation as f64,
+                        s.snapshot_bytes as f64,
                     ],
                 );
                 writer.write_all(&buf)?;
@@ -262,6 +319,8 @@ pub struct WireStats {
     pub knn_queries: u64,
     pub knn_candidates: u64,
     pub knn_mean_probes: f64,
+    pub model_generation: u64,
+    pub snapshot_bytes: u64,
 }
 
 /// Minimal binary-protocol client (load generator, tests, examples).
@@ -350,7 +409,7 @@ impl BinaryClient {
             return Err(WireError::Status(status));
         }
         let xs = read_f64s(&mut self.reader, count)?;
-        if xs.len() < 9 {
+        if xs.len() < STATS_FIELDS {
             return Err(WireError::Io(io::Error::new(
                 io::ErrorKind::InvalidData,
                 "short STATS payload",
@@ -366,7 +425,30 @@ impl BinaryClient {
             knn_queries: xs[6] as u64,
             knn_candidates: xs[7] as u64,
             knn_mean_probes: xs[8],
+            model_generation: xs[9] as u64,
+            snapshot_bytes: xs[10] as u64,
         })
+    }
+
+    /// Ask the server to hot-swap its model to the snapshot at `path`
+    /// (server-side path). Returns the new model generation.
+    pub fn reload(&mut self, path: &str) -> Result<u32, WireError> {
+        let bytes = path.as_bytes();
+        let mut buf = Vec::with_capacity(8 + bytes.len());
+        put_u32(&mut buf, OP_RELOAD);
+        put_u32(&mut buf, bytes.len() as u32);
+        buf.extend_from_slice(bytes);
+        self.writer.write_all(&buf)?;
+        let status = read_u32(&mut self.reader)?;
+        let count = read_u32(&mut self.reader)? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let mut generation = 0u32;
+        for _ in 0..count {
+            generation = read_u32(&mut self.reader)?;
+        }
+        Ok(generation)
     }
 
     /// Send QUIT; the server closes the connection without replying, so
@@ -406,7 +488,14 @@ mod tests {
 
     #[test]
     fn status_names_cover_codes() {
-        for s in [STATUS_OK, STATUS_RANGE, STATUS_BAD_FRAME, STATUS_OVERLOADED, STATUS_TIMEOUT] {
+        for s in [
+            STATUS_OK,
+            STATUS_RANGE,
+            STATUS_BAD_FRAME,
+            STATUS_OVERLOADED,
+            STATUS_TIMEOUT,
+            STATUS_RELOAD_FAILED,
+        ] {
             assert_ne!(status_name(s), "unknown status");
         }
         assert_eq!(status_name(99), "unknown status");

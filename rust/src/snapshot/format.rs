@@ -1,0 +1,618 @@
+//! On-disk snapshot container: layout constants, CRC32, f16/int8 codecs,
+//! and the writer.
+//!
+//! ## File layout (all integers/floats little-endian)
+//!
+//! ```text
+//! 0x00  magic        8 bytes  "W2KSNAP1"
+//! 0x08  version      u32
+//! 0x0c  kind         u32      store kind tag (see [`StoreKind`])
+//! 0x10  vocab        u64
+//! 0x18  dim          u64
+//! 0x20  order        u32
+//! 0x24  rank         u32
+//! 0x28  flags        u32      bit 0 layernorm, bit 1 has-index, bit 2 cosine
+//! 0x2c  n_sections   u32
+//! 0x30  meta         6 × u64  kind-specific (leaf dims, bits, seeds, nlist)
+//! 0x60  header_crc   u32      CRC32 over bytes 0x00..0x60
+//! 0x64  section table: n_sections × 44-byte entries
+//!       id u32, dtype u32, count u64, chunk u64, offset u64, byte_len u64,
+//!       crc u32
+//! ....  payloads, each 8-byte aligned, CRC32-checksummed independently
+//! ```
+//!
+//! Payload encodings per [`Dtype`]:
+//! * `F32` — `count × 4` bytes, raw little-endian f32 (zero-copy view on
+//!   load).
+//! * `F16` — `count × 2` bytes, IEEE half precision (Word2Bits-style
+//!   mantissa trade; decoded on access).
+//! * `I8`  — `n_chunks × 4` bytes of per-chunk f32 scales followed by
+//!   `count` symmetric int8 codes (`value = code · scale`, scale =
+//!   max-abs/127 per `chunk` elements — one chunk per factor/row so a single
+//!   outlier cannot wreck the whole tensor's precision).
+//! * `U32` — `count × 4` bytes (bit-packed quantized codes, IVF id lists).
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// File magic: identifies a word2ket snapshot, version baked into the tag.
+pub const MAGIC: [u8; 8] = *b"W2KSNAP1";
+
+/// Format version; bumped on incompatible layout changes.
+pub const VERSION: u32 = 1;
+
+/// Fixed header size in bytes (magic through `header_crc`).
+pub const HEADER_BYTES: usize = 0x64;
+
+/// Encoded size of one section-table entry.
+pub const SECTION_ENTRY_BYTES: usize = 44;
+
+/// Upper bound on the section count (a valid snapshot uses at most a
+/// handful; a corrupt header must not drive a huge table allocation).
+pub const MAX_SECTIONS: u32 = 64;
+
+/// `flags` bit 0: LayerNorm applied at CP tree nodes (word2ket only).
+pub const FLAG_LAYERNORM: u32 = 1;
+/// `flags` bit 1: the snapshot embeds serialized IVF centroids/lists.
+pub const FLAG_HAS_INDEX: u32 = 1 << 1;
+/// `flags` bit 2: the embedded IVF index was built for cosine ranking.
+pub const FLAG_INDEX_COSINE: u32 = 1 << 2;
+
+// Section ids (fixed registry; unknown ids are ignored on load so future
+// versions can add sections without breaking old readers).
+pub const SEC_REGULAR_DATA: u32 = 1;
+pub const SEC_W2K_LEAVES: u32 = 2;
+pub const SEC_XS_FACTORS: u32 = 3;
+pub const SEC_QUANT_CODES: u32 = 4;
+pub const SEC_QUANT_SCALES: u32 = 5;
+pub const SEC_QUANT_OFFSETS: u32 = 6;
+pub const SEC_LOWRANK_U: u32 = 7;
+pub const SEC_LOWRANK_VT: u32 = 8;
+pub const SEC_HASHED_WEIGHTS: u32 = 9;
+pub const SEC_IVF_CENTROIDS: u32 = 10;
+pub const SEC_IVF_LIST_LENS: u32 = 11;
+pub const SEC_IVF_LIST_IDS: u32 = 12;
+
+/// Human-readable section name for `snapshot info`.
+pub fn section_name(id: u32) -> &'static str {
+    match id {
+        SEC_REGULAR_DATA => "regular.data",
+        SEC_W2K_LEAVES => "word2ket.leaves",
+        SEC_XS_FACTORS => "word2ketxs.factors",
+        SEC_QUANT_CODES => "quantized.codes",
+        SEC_QUANT_SCALES => "quantized.scales",
+        SEC_QUANT_OFFSETS => "quantized.offsets",
+        SEC_LOWRANK_U => "lowrank.u",
+        SEC_LOWRANK_VT => "lowrank.vt",
+        SEC_HASHED_WEIGHTS => "hashed.weights",
+        SEC_IVF_CENTROIDS => "ivf.centroids",
+        SEC_IVF_LIST_LENS => "ivf.list_lens",
+        SEC_IVF_LIST_IDS => "ivf.list_ids",
+        _ => "unknown",
+    }
+}
+
+// Meta slot assignments (header `meta: [u64; 6]`).
+/// word2ket: leaf dimension q. word2ketXS: leaf q.
+pub const META_Q: usize = 0;
+/// word2ketXS: leaf t. hashed: seed.
+pub const META_T_OR_SEED: usize = 1;
+/// quantized: bits. lowrank: k. hashed: buckets (also meta[0] for those
+/// kinds — each kind owns slot 0 for its primary hyper-parameter).
+pub const META_PRIMARY: usize = 0;
+/// IVF: nlist (only meaningful with [`FLAG_HAS_INDEX`]).
+pub const META_IVF_NLIST: usize = 4;
+
+/// Which concrete store a snapshot holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreKind {
+    Regular,
+    Word2Ket,
+    Word2KetXS,
+    Quantized,
+    LowRank,
+    Hashed,
+}
+
+impl StoreKind {
+    pub fn tag(&self) -> u32 {
+        match self {
+            StoreKind::Regular => 0,
+            StoreKind::Word2Ket => 1,
+            StoreKind::Word2KetXS => 2,
+            StoreKind::Quantized => 3,
+            StoreKind::LowRank => 4,
+            StoreKind::Hashed => 5,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> Result<StoreKind> {
+        Ok(match tag {
+            0 => StoreKind::Regular,
+            1 => StoreKind::Word2Ket,
+            2 => StoreKind::Word2KetXS,
+            3 => StoreKind::Quantized,
+            4 => StoreKind::LowRank,
+            5 => StoreKind::Hashed,
+            other => return Err(Error::Snapshot(format!("unknown store kind tag {other}"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreKind::Regular => "regular",
+            StoreKind::Word2Ket => "word2ket",
+            StoreKind::Word2KetXS => "word2ketXS",
+            StoreKind::Quantized => "quantized",
+            StoreKind::LowRank => "lowrank",
+            StoreKind::Hashed => "hashed",
+        }
+    }
+}
+
+/// Payload element encoding of one section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+    I8,
+    U32,
+}
+
+impl Dtype {
+    pub fn tag(&self) -> u32 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F16 => 1,
+            Dtype::I8 => 2,
+            Dtype::U32 => 3,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> Result<Dtype> {
+        Ok(match tag {
+            0 => Dtype::F32,
+            1 => Dtype::F16,
+            2 => Dtype::I8,
+            3 => Dtype::U32,
+            other => return Err(Error::Snapshot(format!("unknown dtype tag {other}"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+            Dtype::I8 => "i8",
+            Dtype::U32 => "u32",
+        }
+    }
+}
+
+/// How float payloads are written (`[snapshot] codec` / `--payload`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    /// Exact 32-bit floats (bit-exact round trip).
+    #[default]
+    F32,
+    /// IEEE half precision: 2× smaller, ~1e-3 relative error.
+    F16,
+    /// Symmetric per-chunk int8: 4× smaller, ~1e-2 relative error.
+    Int8,
+}
+
+impl Codec {
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "none" | "exact" => Ok(Codec::F32),
+            "f16" | "half" => Ok(Codec::F16),
+            "int8" | "i8" => Ok(Codec::Int8),
+            other => Err(Error::Config(format!(
+                "unknown snapshot codec '{other}' (expected f32|f16|int8)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::F16 => "f16",
+            Codec::Int8 => "int8",
+        }
+    }
+}
+
+/// Parsed fixed header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub kind: StoreKind,
+    pub vocab: u64,
+    pub dim: u64,
+    pub order: u32,
+    pub rank: u32,
+    pub flags: u32,
+    pub meta: [u64; 6],
+}
+
+/// One encoded section, ready to be laid out by the writer.
+#[derive(Debug, Clone)]
+pub struct SectionData {
+    pub id: u32,
+    pub dtype: Dtype,
+    /// Logical element count (codes for I8, not counting the scales prefix).
+    pub count: u64,
+    /// I8 only: elements per quantization chunk (one f32 scale each).
+    pub chunk: u64,
+    pub bytes: Vec<u8>,
+}
+
+/// Expected payload byte length for a (dtype, count, chunk) triple; the
+/// reader rejects sections whose stored length disagrees. All arithmetic is
+/// checked — a hostile header with a near-u64::MAX count must produce a
+/// typed error, not an overflow panic.
+pub fn expected_byte_len(dtype: Dtype, count: u64, chunk: u64) -> Result<u64> {
+    let overflow = || Error::Snapshot("section size overflows".into());
+    Ok(match dtype {
+        Dtype::F32 | Dtype::U32 => count.checked_mul(4).ok_or_else(overflow)?,
+        Dtype::F16 => count.checked_mul(2).ok_or_else(overflow)?,
+        Dtype::I8 => {
+            if count > 0 && chunk == 0 {
+                return Err(Error::Snapshot("i8 section with zero chunk size".into()));
+            }
+            let n_chunks = if count == 0 { 0 } else { count.div_ceil(chunk) };
+            n_chunks
+                .checked_mul(4)
+                .and_then(|s| s.checked_add(count))
+                .ok_or_else(overflow)?
+        }
+    })
+}
+
+// ---- CRC32 (IEEE, table-driven) --------------------------------------------
+
+/// Byte-at-a-time lookup table, built at compile time. Sections can be
+/// large (a snapshotted *regular* table is vocab×dim×4 bytes, and every
+/// `open` — including the live-reload path — re-checksums each section), so
+/// the bitwise form's 8 steps/byte would turn hot swaps into multi-second
+/// stalls on big models.
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32/IEEE over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = CRC_TABLE[((crc ^ b as u32) & 0xff) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ---- half-precision codec --------------------------------------------------
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN-ness with a quiet bit).
+        return sign | 0x7c00 | if frac != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        // Subnormal half (or underflow to zero).
+        if e < -10 {
+            return sign;
+        }
+        let full = frac | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let mut f = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (f & 1) == 1) {
+            f += 1;
+        }
+        return sign | f as u16;
+    }
+    let mut f = frac >> 13;
+    let mut e = e as u32;
+    let rem = frac & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (f & 1) == 1) {
+        f += 1;
+        if f == 0x400 {
+            f = 0;
+            e += 1;
+            if e >= 0x1f {
+                return sign | 0x7c00;
+            }
+        }
+    }
+    sign | ((e as u16) << 10) | f as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // Subnormal: renormalize into f32's much wider exponent range.
+            let mut e: u32 = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((f & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---- section encoding ------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Encode an f32 tensor section under `codec`. `chunk` is the per-scale
+/// granularity for int8 (clamped to `1..=len`; pass 0 for one chunk per
+/// section).
+pub fn encode_f32s(id: u32, data: &[f32], codec: Codec, chunk: usize) -> SectionData {
+    match codec {
+        Codec::F32 => {
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for &x in data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            SectionData { id, dtype: Dtype::F32, count: data.len() as u64, chunk: 0, bytes }
+        }
+        Codec::F16 => {
+            let mut bytes = Vec::with_capacity(data.len() * 2);
+            for &x in data {
+                bytes.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+            }
+            SectionData { id, dtype: Dtype::F16, count: data.len() as u64, chunk: 0, bytes }
+        }
+        Codec::Int8 => {
+            let chunk = if chunk == 0 { data.len().max(1) } else { chunk.min(data.len().max(1)) };
+            let n_chunks = data.len().div_ceil(chunk);
+            let mut scales = Vec::with_capacity(n_chunks);
+            for c in data.chunks(chunk) {
+                let max_abs = c.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                scales.push(if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 });
+            }
+            let mut bytes = Vec::with_capacity(n_chunks * 4 + data.len());
+            for &s in &scales {
+                bytes.extend_from_slice(&s.to_le_bytes());
+            }
+            for (i, &x) in data.iter().enumerate() {
+                let s = scales[i / chunk];
+                let code = if s > 0.0 { (x / s).round().clamp(-127.0, 127.0) as i8 } else { 0 };
+                bytes.push(code as u8);
+            }
+            SectionData { id, dtype: Dtype::I8, count: data.len() as u64, chunk: chunk as u64, bytes }
+        }
+    }
+}
+
+/// Encode a u32 section (bit-packed codes, IVF id lists) — always exact.
+pub fn encode_u32s(id: u32, data: &[u32]) -> SectionData {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    SectionData { id, dtype: Dtype::U32, count: data.len() as u64, chunk: 0, bytes }
+}
+
+// ---- writer ----------------------------------------------------------------
+
+fn align8(x: usize) -> usize {
+    x.div_ceil(8) * 8
+}
+
+/// Serialize header + sections and write the file **atomically**: the
+/// bytes go to a temp file in the same directory, then `rename(2)` over the
+/// target. Two failure modes this closes: a crash mid-write can never
+/// destroy the previous good snapshot, and overwriting a snapshot a live
+/// server currently serves by mmap keeps the old *inode* (and therefore the
+/// old mapping) intact — truncating it in place would SIGBUS the server.
+/// Returns the total byte count on disk.
+pub fn write_snapshot(path: &Path, header: &Header, sections: &[SectionData]) -> Result<u64> {
+    if sections.len() as u32 > MAX_SECTIONS {
+        return Err(Error::Snapshot(format!("too many sections ({})", sections.len())));
+    }
+    // Header bytes (without the trailing CRC yet).
+    let mut head = Vec::with_capacity(HEADER_BYTES);
+    head.extend_from_slice(&MAGIC);
+    put_u32(&mut head, VERSION);
+    put_u32(&mut head, header.kind.tag());
+    put_u64(&mut head, header.vocab);
+    put_u64(&mut head, header.dim);
+    put_u32(&mut head, header.order);
+    put_u32(&mut head, header.rank);
+    put_u32(&mut head, header.flags);
+    put_u32(&mut head, sections.len() as u32);
+    for &m in &header.meta {
+        put_u64(&mut head, m);
+    }
+    let hcrc = crc32(&head);
+    put_u32(&mut head, hcrc);
+    debug_assert_eq!(head.len(), HEADER_BYTES);
+
+    // Lay out payload offsets (8-aligned) and build the table.
+    let table_end = HEADER_BYTES + sections.len() * SECTION_ENTRY_BYTES;
+    let mut offset = align8(table_end);
+    let mut table = Vec::with_capacity(sections.len() * SECTION_ENTRY_BYTES);
+    let mut payload_end = offset;
+    for s in sections {
+        let want = expected_byte_len(s.dtype, s.count, s.chunk)?;
+        if want != s.bytes.len() as u64 {
+            return Err(Error::Snapshot(format!(
+                "section {} encoded length {} != expected {}",
+                section_name(s.id),
+                s.bytes.len(),
+                want
+            )));
+        }
+        put_u32(&mut table, s.id);
+        put_u32(&mut table, s.dtype.tag());
+        put_u64(&mut table, s.count);
+        put_u64(&mut table, s.chunk);
+        put_u64(&mut table, offset as u64);
+        put_u64(&mut table, s.bytes.len() as u64);
+        put_u32(&mut table, crc32(&s.bytes));
+        payload_end = offset + s.bytes.len();
+        offset = align8(payload_end);
+    }
+
+    let total = if sections.is_empty() { table_end } else { payload_end };
+    let mut file = vec![0u8; total];
+    file[..HEADER_BYTES].copy_from_slice(&head);
+    file[HEADER_BYTES..table_end].copy_from_slice(&table);
+    // Payloads (recompute the same offsets).
+    let mut off = align8(table_end);
+    for s in sections {
+        file[off..off + s.bytes.len()].copy_from_slice(&s.bytes);
+        off = align8(off + s.bytes.len());
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &file)
+        .map_err(|e| Error::Snapshot(format!("write {}: {e}", tmp.display())))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(Error::Snapshot(format!(
+            "rename {} -> {}: {e}",
+            tmp.display(),
+            path.display()
+        )));
+    }
+    Ok(total as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard test vector: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_for_representables() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, -0.25, 2.0, 1024.0, -0.125] {
+            let h = f32_to_f16_bits(x);
+            assert_eq!(f16_bits_to_f32(h), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        // Half precision has 11 significand bits: relative error < 2^-11.
+        let mut x = 1e-3f32;
+        while x < 1e3 {
+            for s in [1.0f32, -1.0] {
+                let v = s * x;
+                let back = f16_bits_to_f32(f32_to_f16_bits(v));
+                assert!(
+                    (back - v).abs() <= v.abs() * 5e-4 + 1e-7,
+                    "{v} -> {back}"
+                );
+            }
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow saturates to inf; tiny underflows to (signed) zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-12)), 0.0);
+        // Subnormal half survives the round trip.
+        let sub = 2.0f32.powi(-15);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(sub)), sub);
+    }
+
+    #[test]
+    fn i8_encode_error_bounded_per_chunk() {
+        let data: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.01).collect();
+        let s = encode_f32s(7, &data, Codec::Int8, 16);
+        assert_eq!(s.dtype, Dtype::I8);
+        assert_eq!(s.count, 64);
+        assert_eq!(s.chunk, 16);
+        assert_eq!(s.bytes.len() as u64, expected_byte_len(Dtype::I8, 64, 16).unwrap());
+        // Decode manually and check error bound scale/2 per element.
+        let n_chunks = 4;
+        for (i, &x) in data.iter().enumerate() {
+            let c = i / 16;
+            let scale =
+                f32::from_le_bytes(s.bytes[c * 4..c * 4 + 4].try_into().unwrap());
+            let code = s.bytes[n_chunks * 4 + i] as i8;
+            let back = code as f32 * scale;
+            assert!((back - x).abs() <= scale / 2.0 + 1e-7, "{i}: {x} vs {back}");
+        }
+    }
+
+    #[test]
+    fn codec_parse_names() {
+        assert_eq!(Codec::parse("f32").unwrap(), Codec::F32);
+        assert_eq!(Codec::parse("F16").unwrap(), Codec::F16);
+        assert_eq!(Codec::parse("int8").unwrap(), Codec::Int8);
+        assert!(Codec::parse("f64").is_err());
+    }
+
+    #[test]
+    fn kind_and_dtype_tags_roundtrip() {
+        for k in [
+            StoreKind::Regular,
+            StoreKind::Word2Ket,
+            StoreKind::Word2KetXS,
+            StoreKind::Quantized,
+            StoreKind::LowRank,
+            StoreKind::Hashed,
+        ] {
+            assert_eq!(StoreKind::from_tag(k.tag()).unwrap(), k);
+        }
+        for d in [Dtype::F32, Dtype::F16, Dtype::I8, Dtype::U32] {
+            assert_eq!(Dtype::from_tag(d.tag()).unwrap(), d);
+        }
+        assert!(StoreKind::from_tag(99).is_err());
+        assert!(Dtype::from_tag(99).is_err());
+    }
+}

@@ -1,0 +1,439 @@
+//! Snapshot subsystem: versioned on-disk persistence, zero-copy load, and
+//! the save half of live model hot-swap.
+//!
+//! The paper's whole argument is that a Kronecker-factored embedding table
+//! is tiny enough to store and ship anywhere — this module is where it
+//! actually gets stored. A snapshot is a single binary container
+//! (`format.rs`): magic + CRC-checked header + CRC-checked sections holding
+//! the factor tensors of any [`crate::config::EmbeddingKind`], optionally
+//! with f16/int8-quantized payloads (Word2Bits-style: trade mantissa bits
+//! for another 2–4× on top of the paper's 100×) and optionally with the
+//! serving IVF index's centroids and cell lists so a reloaded server skips
+//! k-means retraining.
+//!
+//! Loading has two paths:
+//! * [`load_store`] — rebuild the concrete in-memory store (bit-exact for
+//!   f32 payloads).
+//! * [`SnapshotStore`] — serve straight off a memory-mapped file, zero-copy
+//!   for f32 payloads, factored k-NN scoring intact (`reader.rs`,
+//!   `store.rs`).
+//!
+//! The serving layer (`crate::serving`) builds model generations from these
+//! and atomically swaps them under live traffic (`OP_RELOAD` / `RELOAD`).
+
+pub mod format;
+pub mod reader;
+mod store;
+
+pub use format::{crc32, section_name, Codec, Dtype, Header, SectionData, StoreKind};
+pub use reader::{load_index_payload, load_store, IndexPayload, Section, Snapshot};
+pub use store::SnapshotStore;
+
+use crate::embedding::{
+    EmbeddingStore, HashedEmbedding, LowRankEmbedding, QuantizedEmbedding, RegularEmbedding,
+    Word2Ket, Word2KetXS,
+};
+use crate::error::{Error, Result};
+use crate::index::IvfIndex;
+use crate::serving::cache::unwrap_cached;
+use format::*;
+use std::path::Path;
+
+/// Write-side options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SaveOptions {
+    /// Payload codec for factor tensors (quantized-store codes and IVF
+    /// centroids always stay exact).
+    pub codec: Codec,
+}
+
+/// What a save produced.
+#[derive(Debug, Clone, Copy)]
+pub struct SnapshotInfo {
+    /// Total bytes written to disk.
+    pub bytes: u64,
+    /// Number of sections in the container.
+    pub sections: usize,
+}
+
+/// Save any embedding store to `path`. Equivalent to
+/// [`save_store_with_index`] with no index payload.
+pub fn save_store(
+    store: &dyn EmbeddingStore,
+    path: &Path,
+    opts: &SaveOptions,
+) -> Result<SnapshotInfo> {
+    save_store_with_index(store, None, path, opts)
+}
+
+/// Save an embedding store — plus, optionally, a trained IVF index so the
+/// loading server can skip k-means — to a versioned, checksummed snapshot.
+pub fn save_store_with_index(
+    store: &dyn EmbeddingStore,
+    index: Option<&IvfIndex>,
+    path: &Path,
+    opts: &SaveOptions,
+) -> Result<SnapshotInfo> {
+    let store = unwrap_cached(store);
+    let vocab = store.vocab_size();
+    let dim = store.dim();
+    let codec = opts.codec;
+    let any = store.as_any().ok_or_else(|| {
+        Error::Snapshot(format!("store '{}' cannot be snapshotted", store.describe()))
+    })?;
+
+    let mut header = Header {
+        kind: StoreKind::Regular,
+        vocab: vocab as u64,
+        dim: dim as u64,
+        order: 1,
+        rank: 1,
+        flags: 0,
+        meta: [0u64; 6],
+    };
+    let mut sections: Vec<SectionData> = Vec::new();
+
+    if let Some(e) = any.downcast_ref::<RegularEmbedding>() {
+        header.kind = StoreKind::Regular;
+        sections.push(encode_f32s(SEC_REGULAR_DATA, e.data(), codec, dim));
+    } else if let Some(e) = any.downcast_ref::<Word2Ket>() {
+        header.kind = StoreKind::Word2Ket;
+        header.order = e.order() as u32;
+        header.rank = e.rank() as u32;
+        header.meta[META_Q] = e.leaf_dim() as u64;
+        if e.layernorm() {
+            header.flags |= FLAG_LAYERNORM;
+        }
+        let per_word = e.rank() * e.order() * e.leaf_dim();
+        let mut leaves = Vec::with_capacity(vocab * per_word);
+        for w in 0..vocab {
+            leaves.extend_from_slice(e.word(w).leaves());
+        }
+        sections.push(encode_f32s(SEC_W2K_LEAVES, &leaves, codec, per_word));
+    } else if let Some(e) = any.downcast_ref::<Word2KetXS>() {
+        header.kind = StoreKind::Word2KetXS;
+        header.order = e.order() as u32;
+        header.rank = e.rank() as u32;
+        header.meta[META_Q] = e.leaf_q() as u64;
+        header.meta[META_T_OR_SEED] = e.leaf_t() as u64;
+        let per_factor = e.leaf_t() * e.leaf_q();
+        let mut blob = Vec::with_capacity(e.rank() * e.order() * per_factor);
+        for f in e.factors() {
+            blob.extend_from_slice(f);
+        }
+        sections.push(encode_f32s(SEC_XS_FACTORS, &blob, codec, per_factor));
+    } else if let Some(e) = any.downcast_ref::<QuantizedEmbedding>() {
+        header.kind = StoreKind::Quantized;
+        header.meta[META_PRIMARY] = e.bits() as u64;
+        // The codes are already the quantized payload; re-quantizing them
+        // (or their row scales/offsets) would corrupt reconstruction, so
+        // all three sections stay exact regardless of `codec`.
+        sections.push(encode_u32s(SEC_QUANT_CODES, e.codes()));
+        sections.push(encode_f32s(SEC_QUANT_SCALES, e.scales(), Codec::F32, 0));
+        sections.push(encode_f32s(SEC_QUANT_OFFSETS, e.offsets(), Codec::F32, 0));
+    } else if let Some(e) = any.downcast_ref::<LowRankEmbedding>() {
+        header.kind = StoreKind::LowRank;
+        header.meta[META_PRIMARY] = e.k() as u64;
+        sections.push(encode_f32s(SEC_LOWRANK_U, e.u(), codec, e.k()));
+        sections.push(encode_f32s(SEC_LOWRANK_VT, e.vt(), codec, e.k()));
+    } else if let Some(e) = any.downcast_ref::<HashedEmbedding>() {
+        header.kind = StoreKind::Hashed;
+        header.meta[META_PRIMARY] = e.buckets() as u64;
+        header.meta[META_T_OR_SEED] = e.seed();
+        sections.push(encode_f32s(SEC_HASHED_WEIGHTS, e.weights(), codec, 0));
+    } else {
+        return Err(Error::Snapshot(format!(
+            "store '{}' has no snapshot serializer",
+            store.describe()
+        )));
+    }
+
+    if let Some(ivf) = index {
+        header.flags |= FLAG_HAS_INDEX;
+        if ivf.scorer().cosine() {
+            header.flags |= FLAG_INDEX_COSINE;
+        }
+        header.meta[META_IVF_NLIST] = ivf.nlist() as u64;
+        // Centroids stay f32: they are nlist×dim — negligible next to any
+        // materialized table — and probe geometry is precision-sensitive.
+        sections.push(encode_f32s(SEC_IVF_CENTROIDS, ivf.centroids(), Codec::F32, 0));
+        let lists = ivf.lists();
+        let lens: Vec<u32> = lists.iter().map(|l| l.len() as u32).collect();
+        let mut ids = Vec::with_capacity(vocab);
+        for l in lists {
+            ids.extend_from_slice(l);
+        }
+        sections.push(encode_u32s(SEC_IVF_LIST_LENS, &lens));
+        sections.push(encode_u32s(SEC_IVF_LIST_IDS, &ids));
+    }
+
+    let n = sections.len();
+    let bytes = write_snapshot(path, &header, &sections)?;
+    Ok(SnapshotInfo { bytes, sections: n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EmbeddingConfig, EmbeddingKind};
+    use crate::embedding::{build, materialize};
+    use crate::serving::ShardedCache;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("w2k_snap_test_{}_{}.snap", std::process::id(), name))
+    }
+
+    fn all_kind_cfgs() -> Vec<(EmbeddingKind, EmbeddingConfig)> {
+        [
+            EmbeddingKind::Regular,
+            EmbeddingKind::Word2Ket,
+            EmbeddingKind::Word2KetXS,
+            EmbeddingKind::Quantized,
+            EmbeddingKind::LowRank,
+            EmbeddingKind::Hashed,
+        ]
+        .into_iter()
+        .map(|kind| {
+            (kind, EmbeddingConfig { kind, order: 2, rank: 2, ..Default::default() })
+        })
+        .collect()
+    }
+
+    /// Acceptance: save → load reproduces every row bit-exactly for f32
+    /// payloads, on both the heap and the mmap path, for every kind.
+    #[test]
+    fn roundtrip_bit_exact_all_kinds() {
+        for (kind, cfg) in all_kind_cfgs() {
+            let mut rng = Rng::new(11);
+            let store = build(&cfg, 60, 16, &mut rng);
+            let path = tmp(&format!("rt_{}", cfg.kind.name()));
+            let info = save_store(store.as_ref(), &path, &SaveOptions::default()).unwrap();
+            assert!(info.bytes > 0 && info.sections >= 1);
+
+            let want = materialize(store.as_ref());
+
+            // Heap path: concrete store reconstruction.
+            let snap = Snapshot::open(&path, false).unwrap();
+            let loaded = load_store(&snap).unwrap();
+            assert_eq!(loaded.vocab_size(), 60, "{kind:?}");
+            assert_eq!(loaded.dim(), 16, "{kind:?}");
+            assert_eq!(loaded.num_params(), store.num_params(), "{kind:?}");
+            let got = materialize(loaded.as_ref());
+            assert_eq!(want.data(), got.data(), "{kind:?} heap path not bit-exact");
+
+            // Mmap path: zero-copy SnapshotStore.
+            let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+            let mm = SnapshotStore::open(snap).unwrap();
+            assert_eq!(mm.vocab_size(), 60);
+            assert_eq!(mm.dim(), 16);
+            assert_eq!(mm.num_params(), store.num_params(), "{kind:?}");
+            let got = materialize(&mm);
+            assert_eq!(want.data(), got.data(), "{kind:?} mmap path not bit-exact");
+
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    /// word2ket with LayerNorm-ed tree nodes round-trips bit-exactly too
+    /// (the flag travels in the header).
+    #[test]
+    fn roundtrip_word2ket_layernorm() {
+        let mut rng = Rng::new(12);
+        let mut e = Word2Ket::random(30, 16, 2, 2, &mut rng);
+        e.set_layernorm(true);
+        let path = tmp("w2k_ln");
+        save_store(&e, &path, &SaveOptions::default()).unwrap();
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert_eq!(snap.header().flags & FLAG_LAYERNORM, FLAG_LAYERNORM);
+        let mm = SnapshotStore::open(snap.clone()).unwrap();
+        for id in [0usize, 7, 29] {
+            assert_eq!(e.lookup(id), mm.lookup(id), "id {id}");
+        }
+        assert!(!mm.factored(), "layernorm must disable the factored identity");
+        let heap = load_store(&snap).unwrap();
+        assert_eq!(e.lookup(13), heap.lookup(13));
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Quantized payloads (f16, int8): rows agree with the original within
+    /// 1e-2 cosine, on both load paths.
+    #[test]
+    fn quantized_payloads_close_in_cosine() {
+        for codec in [Codec::F16, Codec::Int8] {
+            for kind in [EmbeddingKind::Word2Ket, EmbeddingKind::Word2KetXS, EmbeddingKind::Regular]
+            {
+                let cfg = EmbeddingConfig { kind, order: 2, rank: 2, ..Default::default() };
+                let mut rng = Rng::new(13);
+                let store = build(&cfg, 50, 16, &mut rng);
+                let path = tmp(&format!("q_{}_{}", codec.name(), kind.name()));
+                save_store(store.as_ref(), &path, &SaveOptions { codec }).unwrap();
+                let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+                let mm = SnapshotStore::open(snap.clone()).unwrap();
+                let heap = load_store(&snap).unwrap();
+                for id in 0..50 {
+                    let a = store.lookup(id);
+                    for b in [mm.lookup(id), heap.lookup(id)] {
+                        let (mut ab, mut aa, mut bb) = (0.0f64, 0.0f64, 0.0f64);
+                        for (x, y) in a.iter().zip(b.iter()) {
+                            ab += (*x as f64) * (*y as f64);
+                            aa += (*x as f64) * (*x as f64);
+                            bb += (*y as f64) * (*y as f64);
+                        }
+                        let cos = ab / (aa.sqrt() * bb.sqrt()).max(1e-30);
+                        assert!(
+                            cos > 0.99,
+                            "{codec:?}/{kind:?} id {id}: cosine {cos}"
+                        );
+                    }
+                }
+                std::fs::remove_file(&path).ok();
+            }
+        }
+    }
+
+    /// f16/int8 payloads actually shrink the file.
+    #[test]
+    fn quantized_payloads_shrink_disk() {
+        let cfg = EmbeddingConfig {
+            kind: EmbeddingKind::Word2KetXS,
+            order: 2,
+            rank: 4,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(14);
+        let store = build(&cfg, 1000, 64, &mut rng);
+        let p32 = tmp("sz32");
+        let p16 = tmp("sz16");
+        let p8 = tmp("sz8");
+        let b32 = save_store(store.as_ref(), &p32, &SaveOptions { codec: Codec::F32 })
+            .unwrap()
+            .bytes;
+        let b16 = save_store(store.as_ref(), &p16, &SaveOptions { codec: Codec::F16 })
+            .unwrap()
+            .bytes;
+        let b8 = save_store(store.as_ref(), &p8, &SaveOptions { codec: Codec::Int8 })
+            .unwrap()
+            .bytes;
+        assert!(b16 < b32, "f16 {b16} !< f32 {b32}");
+        assert!(b8 < b16, "int8 {b8} !< f16 {b16}");
+        for p in [p32, p16, p8] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    /// Corrupted and truncated snapshots are rejected with typed errors —
+    /// never panics, never a half-valid handle.
+    #[test]
+    fn corruption_and_truncation_rejected() {
+        let cfg = EmbeddingConfig {
+            kind: EmbeddingKind::Word2KetXS,
+            order: 2,
+            rank: 2,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(15);
+        let store = build(&cfg, 40, 16, &mut rng);
+        let path = tmp("corrupt");
+        save_store(store.as_ref(), &path, &SaveOptions::default()).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let expect_snapshot_err = |bytes: &[u8], what: &str| {
+            std::fs::write(&path, bytes).unwrap();
+            for mmap in [false, true] {
+                match Snapshot::open(&path, mmap) {
+                    Err(Error::Snapshot(_)) => {}
+                    Err(other) => panic!("{what} (mmap={mmap}): wrong error kind {other}"),
+                    Ok(_) => panic!("{what} (mmap={mmap}): accepted"),
+                }
+            }
+        };
+
+        // Flip one payload byte (breaks a section CRC).
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x5a;
+        expect_snapshot_err(&bad, "payload corruption");
+
+        // Flip a header byte (breaks the header CRC).
+        let mut bad = good.clone();
+        bad[0x20] ^= 0xff;
+        expect_snapshot_err(&bad, "header corruption");
+
+        // Truncate mid-payload and mid-header.
+        expect_snapshot_err(&good[..good.len() - 7], "payload truncation");
+        expect_snapshot_err(&good[..40], "header truncation");
+
+        // Not a snapshot at all.
+        expect_snapshot_err(b"definitely not a snapshot file", "bad magic");
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Factored inner products from a mapped snapshot are bit-identical to
+    /// the original store's (the k-NN swap guarantee).
+    #[test]
+    fn snapshot_inner_bit_exact() {
+        let mut rng = Rng::new(16);
+        let xs = Word2KetXS::random(80, 16, 2, 3, &mut rng);
+        let path = tmp("inner_xs");
+        save_store(&xs, &path, &SaveOptions::default()).unwrap();
+        let mm = SnapshotStore::open(Arc::new(Snapshot::open(&path, true).unwrap())).unwrap();
+        assert!(mm.factored());
+        for (a, b) in [(0usize, 1usize), (7, 7), (63, 12), (79, 0)] {
+            assert_eq!(
+                xs.inner(a, b).to_bits(),
+                mm.inner(a, b).to_bits(),
+                "xs inner ({a},{b})"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+
+        let w2k = Word2Ket::random(40, 16, 2, 2, &mut rng);
+        let path = tmp("inner_w2k");
+        save_store(&w2k, &path, &SaveOptions::default()).unwrap();
+        let mm = SnapshotStore::open(Arc::new(Snapshot::open(&path, true).unwrap())).unwrap();
+        assert!(mm.factored());
+        for (a, b) in [(0usize, 1usize), (5, 5), (39, 2)] {
+            assert_eq!(
+                w2k.inner(a, b).to_bits(),
+                mm.inner(a, b).to_bits(),
+                "w2k inner ({a},{b})"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Saving through a cache wrapper snapshots the wrapped store.
+    #[test]
+    fn save_unwraps_cache() {
+        let mut rng = Rng::new(17);
+        let inner = Box::new(Word2KetXS::random(50, 16, 2, 2, &mut rng));
+        let want = materialize(inner.as_ref());
+        let cache = ShardedCache::new(inner, 2, 64);
+        let path = tmp("cache");
+        save_store(&cache, &path, &SaveOptions::default()).unwrap();
+        let snap = Snapshot::open(&path, false).unwrap();
+        assert_eq!(snap.kind(), StoreKind::Word2KetXS);
+        let loaded = load_store(&snap).unwrap();
+        assert_eq!(want.data(), materialize(loaded.as_ref()).data());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Info/describe renders something useful for every section.
+    #[test]
+    fn describe_lists_sections() {
+        let mut rng = Rng::new(18);
+        let e = QuantizedEmbedding::random(30, 16, 8, &mut rng);
+        let path = tmp("describe");
+        save_store(&e, &path, &SaveOptions::default()).unwrap();
+        let snap = Snapshot::open(&path, false).unwrap();
+        let d = snap.describe();
+        assert!(d.contains("quantized.codes"), "{d}");
+        assert!(d.contains("quantized.scales"), "{d}");
+        assert!(d.contains("kind=quantized"), "{d}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,580 @@
+//! Snapshot reading: memory-mapped (or heap-buffered) container access with
+//! full validation, payload decoding, and heap reconstruction of concrete
+//! stores.
+//!
+//! Every `open` fully validates the file before any accessor exists: magic,
+//! version, header CRC, section-table bounds, per-section CRC32, and
+//! dtype-consistent byte lengths. Corrupted or truncated snapshots are
+//! rejected with [`Error::Snapshot`] — never a panic, never a partially
+//! usable handle.
+//!
+//! Zero-copy: `F32`/`U32` payloads are 8-byte aligned in the file and the
+//! mapping base is page-aligned, so [`Snapshot::f32_view`] /
+//! [`Snapshot::u32_view`] hand out slices straight into the mapping (the
+//! file format is little-endian; big-endian hosts are rejected at open and
+//! would need the decoding path).
+
+use super::format::*;
+use crate::embedding::{
+    EmbeddingStore, HashedEmbedding, LowRankEmbedding, QuantizedEmbedding, RegularEmbedding,
+    Word2Ket, Word2KetXS,
+};
+use crate::error::{Error, Result};
+use std::path::Path;
+
+// ---- platform mmap ---------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use core::ffi::{c_int, c_void};
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    /// Read-only private mapping of a whole file. The pointer is page-
+    /// aligned, so any 8-aligned file offset stays 8-aligned in memory.
+    pub struct Mmap {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // The mapping is read-only and owned exclusively by this handle.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn map(file: &File, len: usize) -> io::Result<Mmap> {
+            if len == 0 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "empty file"));
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+/// File bytes: a real mapping on unix, or an 8-aligned heap buffer (the
+/// heap path backs `mmap = false` loads and non-unix hosts).
+enum Backing {
+    #[cfg(unix)]
+    Mapped(sys::Mmap),
+    /// `Vec<u64>` storage guarantees 8-byte base alignment for zero-copy
+    /// f32/u32 views; `usize` is the real byte length.
+    Heap(Vec<u64>, usize),
+}
+
+impl Backing {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            Backing::Mapped(m) => m.bytes(),
+            Backing::Heap(words, len) => {
+                // u64 → u8 reinterpretation is always valid (alignment only
+                // ever decreases).
+                let all =
+                    unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 8) };
+                &all[..*len]
+            }
+        }
+    }
+}
+
+fn read_heap(path: &Path) -> Result<Backing> {
+    let data = std::fs::read(path)
+        .map_err(|e| Error::Snapshot(format!("read {}: {e}", path.display())))?;
+    let len = data.len();
+    let mut words = vec![0u64; len.div_ceil(8)];
+    unsafe {
+        std::ptr::copy_nonoverlapping(data.as_ptr(), words.as_mut_ptr() as *mut u8, len);
+    }
+    Ok(Backing::Heap(words, len))
+}
+
+#[cfg(unix)]
+fn map_file(path: &Path) -> Result<Backing> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Snapshot(format!("open {}: {e}", path.display())))?;
+    let len = file
+        .metadata()
+        .map_err(|e| Error::Snapshot(format!("stat {}: {e}", path.display())))?
+        .len() as usize;
+    Ok(Backing::Mapped(
+        sys::Mmap::map(&file, len)
+            .map_err(|e| Error::Snapshot(format!("mmap {}: {e}", path.display())))?,
+    ))
+}
+
+/// Non-unix hosts have no mmap syscall wrapper; fall back to the aligned
+/// heap buffer (same validation, same zero-copy views, just not shared).
+#[cfg(not(unix))]
+fn map_file(path: &Path) -> Result<Backing> {
+    read_heap(path)
+}
+
+// ---- parsed sections -------------------------------------------------------
+
+/// One validated section of an open snapshot.
+#[derive(Debug, Clone, Copy)]
+pub struct Section {
+    pub id: u32,
+    pub dtype: Dtype,
+    /// Logical element count.
+    pub count: u64,
+    /// I8: elements per quantization chunk.
+    pub chunk: u64,
+    /// Payload byte offset (8-aligned).
+    pub offset: u64,
+    pub byte_len: u64,
+    pub crc: u32,
+}
+
+fn get_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().expect("bounds checked"))
+}
+
+fn get_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().expect("bounds checked"))
+}
+
+// ---- snapshot handle -------------------------------------------------------
+
+/// An open, fully validated snapshot file.
+pub struct Snapshot {
+    backing: Backing,
+    header: Header,
+    sections: Vec<Section>,
+    path: String,
+}
+
+impl Snapshot {
+    /// Open and validate. `mmap = true` maps the file (zero-copy serving);
+    /// `false` reads it into an aligned heap buffer. Non-unix hosts always
+    /// take the heap path.
+    pub fn open(path: &Path, mmap: bool) -> Result<Snapshot> {
+        let backing = if mmap { map_file(path)? } else { read_heap(path)? };
+        Self::parse(backing, path)
+    }
+
+    fn parse(backing: Backing, path: &Path) -> Result<Snapshot> {
+        if cfg!(target_endian = "big") {
+            return Err(Error::Snapshot(
+                "snapshot format is little-endian; big-endian hosts unsupported".into(),
+            ));
+        }
+        let bytes = backing.bytes();
+        if bytes.len() < HEADER_BYTES {
+            return Err(Error::Snapshot(format!(
+                "truncated snapshot: {} bytes < {HEADER_BYTES}-byte header",
+                bytes.len()
+            )));
+        }
+        if bytes[..8] != MAGIC {
+            return Err(Error::Snapshot("bad magic: not a word2ket snapshot".into()));
+        }
+        let version = get_u32(bytes, 0x08);
+        if version != VERSION {
+            return Err(Error::Snapshot(format!(
+                "unsupported snapshot version {version} (expected {VERSION})"
+            )));
+        }
+        let stored_hcrc = get_u32(bytes, HEADER_BYTES - 4);
+        let actual_hcrc = crc32(&bytes[..HEADER_BYTES - 4]);
+        if stored_hcrc != actual_hcrc {
+            return Err(Error::Snapshot(format!(
+                "header CRC mismatch: stored {stored_hcrc:#010x}, computed {actual_hcrc:#010x}"
+            )));
+        }
+        let kind = StoreKind::from_tag(get_u32(bytes, 0x0c))?;
+        let vocab = get_u64(bytes, 0x10);
+        let dim = get_u64(bytes, 0x18);
+        let order = get_u32(bytes, 0x20);
+        let rank = get_u32(bytes, 0x24);
+        let flags = get_u32(bytes, 0x28);
+        let n_sections = get_u32(bytes, 0x2c);
+        if n_sections > MAX_SECTIONS {
+            return Err(Error::Snapshot(format!("section count {n_sections} exceeds cap")));
+        }
+        let mut meta = [0u64; 6];
+        for (i, m) in meta.iter_mut().enumerate() {
+            *m = get_u64(bytes, 0x30 + i * 8);
+        }
+        let header = Header { kind, vocab, dim, order, rank, flags, meta };
+
+        let table_end = HEADER_BYTES + n_sections as usize * SECTION_ENTRY_BYTES;
+        if bytes.len() < table_end {
+            return Err(Error::Snapshot(format!(
+                "truncated snapshot: section table needs {table_end} bytes, file has {}",
+                bytes.len()
+            )));
+        }
+        let mut sections = Vec::with_capacity(n_sections as usize);
+        for i in 0..n_sections as usize {
+            let off = HEADER_BYTES + i * SECTION_ENTRY_BYTES;
+            let sec = Section {
+                id: get_u32(bytes, off),
+                dtype: Dtype::from_tag(get_u32(bytes, off + 4))?,
+                count: get_u64(bytes, off + 8),
+                chunk: get_u64(bytes, off + 16),
+                offset: get_u64(bytes, off + 24),
+                byte_len: get_u64(bytes, off + 32),
+                crc: get_u32(bytes, off + 40),
+            };
+            let name = section_name(sec.id);
+            if sec.offset % 8 != 0 {
+                return Err(Error::Snapshot(format!("section {name}: unaligned offset")));
+            }
+            let end = sec
+                .offset
+                .checked_add(sec.byte_len)
+                .ok_or_else(|| Error::Snapshot(format!("section {name}: offset overflow")))?;
+            if end > bytes.len() as u64 {
+                return Err(Error::Snapshot(format!(
+                    "truncated snapshot: section {name} ends at {end}, file has {} bytes",
+                    bytes.len()
+                )));
+            }
+            let want = expected_byte_len(sec.dtype, sec.count, sec.chunk)?;
+            if want != sec.byte_len {
+                return Err(Error::Snapshot(format!(
+                    "section {name}: byte length {} inconsistent with dtype/count ({want})",
+                    sec.byte_len
+                )));
+            }
+            let payload = &bytes[sec.offset as usize..end as usize];
+            let actual = crc32(payload);
+            if actual != sec.crc {
+                return Err(Error::Snapshot(format!(
+                    "section {name}: CRC mismatch (stored {:#010x}, computed {actual:#010x})",
+                    sec.crc
+                )));
+            }
+            sections.push(sec);
+        }
+        Ok(Snapshot { backing, header, sections, path: path.display().to_string() })
+    }
+
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    pub fn kind(&self) -> StoreKind {
+        self.header.kind
+    }
+
+    /// Total bytes on disk.
+    pub fn file_len(&self) -> u64 {
+        self.backing.bytes().len() as u64
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    pub fn sections(&self) -> &[Section] {
+        &self.sections
+    }
+
+    pub fn section(&self, id: u32) -> Option<&Section> {
+        self.sections.iter().find(|s| s.id == id)
+    }
+
+    fn require(&self, id: u32) -> Result<&Section> {
+        self.section(id).ok_or_else(|| {
+            Error::Snapshot(format!(
+                "snapshot {} is missing section {}",
+                self.path,
+                section_name(id)
+            ))
+        })
+    }
+
+    fn payload(&self, s: &Section) -> &[u8] {
+        &self.backing.bytes()[s.offset as usize..(s.offset + s.byte_len) as usize]
+    }
+
+    /// Zero-copy f32 view; `None` unless the section is raw F32.
+    pub fn f32_view(&self, s: &Section) -> Option<&[f32]> {
+        if s.dtype != Dtype::F32 {
+            return None;
+        }
+        Some(self.f32s_at(s.offset as usize, s.count as usize))
+    }
+
+    /// Zero-copy u32 view; `None` unless the section dtype is U32.
+    pub fn u32_view(&self, s: &Section) -> Option<&[u32]> {
+        if s.dtype != Dtype::U32 {
+            return None;
+        }
+        let b = &self.backing.bytes()[s.offset as usize..(s.offset + s.byte_len) as usize];
+        debug_assert_eq!(b.as_ptr() as usize % 4, 0);
+        Some(unsafe { std::slice::from_raw_parts(b.as_ptr() as *const u32, s.count as usize) })
+    }
+
+    /// Reinterpret `count` f32s at a validated, 8-aligned byte offset.
+    /// Callers only pass offsets derived from validated sections.
+    pub(crate) fn f32s_at(&self, byte_off: usize, count: usize) -> &[f32] {
+        let b = &self.backing.bytes()[byte_off..byte_off + count * 4];
+        debug_assert_eq!(b.as_ptr() as usize % 4, 0);
+        unsafe { std::slice::from_raw_parts(b.as_ptr() as *const f32, count) }
+    }
+
+    /// Same for u32s (bit-packed quantization codes).
+    pub(crate) fn u32s_at(&self, byte_off: usize, count: usize) -> &[u32] {
+        let b = &self.backing.bytes()[byte_off..byte_off + count * 4];
+        debug_assert_eq!(b.as_ptr() as usize % 4, 0);
+        unsafe { std::slice::from_raw_parts(b.as_ptr() as *const u32, count) }
+    }
+
+    /// Decode a float section into a heap vector, whatever its payload
+    /// dtype (F32 pass-through, F16/I8 dequantized).
+    pub fn read_f32s(&self, s: &Section) -> Result<Vec<f32>> {
+        let bytes = self.payload(s);
+        let n = s.count as usize;
+        Ok(match s.dtype {
+            Dtype::F32 => {
+                self.f32_view(s).map(|v| v.to_vec()).unwrap_or_default()
+            }
+            Dtype::F16 => {
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    let h = u16::from_le_bytes([bytes[i * 2], bytes[i * 2 + 1]]);
+                    out.push(f16_bits_to_f32(h));
+                }
+                out
+            }
+            Dtype::I8 => {
+                let chunk = s.chunk as usize;
+                let n_chunks = if n == 0 { 0 } else { n.div_ceil(chunk) };
+                let codes = &bytes[n_chunks * 4..];
+                let mut out = Vec::with_capacity(n);
+                for (i, &c) in codes.iter().enumerate().take(n) {
+                    let ci = i / chunk;
+                    let scale =
+                        f32::from_le_bytes(bytes[ci * 4..ci * 4 + 4].try_into().expect("scales"));
+                    out.push(c as i8 as f32 * scale);
+                }
+                out
+            }
+            Dtype::U32 => {
+                return Err(Error::Snapshot(format!(
+                    "section {} holds u32 data, not floats",
+                    section_name(s.id)
+                )))
+            }
+        })
+    }
+
+    /// Decode a u32 section into a heap vector.
+    pub fn read_u32s(&self, s: &Section) -> Result<Vec<u32>> {
+        self.u32_view(s).map(|v| v.to_vec()).ok_or_else(|| {
+            Error::Snapshot(format!("section {} is not u32-typed", section_name(s.id)))
+        })
+    }
+
+    /// Human-readable summary for `w2k snapshot info`.
+    pub fn describe(&self) -> String {
+        let h = &self.header;
+        let mut s = format!(
+            "snapshot {} (v{VERSION}, {} bytes)\n  kind={} vocab={} dim={} order={} rank={} \
+             layernorm={} index={}\n",
+            self.path,
+            self.file_len(),
+            h.kind.name(),
+            h.vocab,
+            h.dim,
+            h.order,
+            h.rank,
+            h.flags & FLAG_LAYERNORM != 0,
+            if h.flags & FLAG_HAS_INDEX != 0 {
+                if h.flags & FLAG_INDEX_COSINE != 0 {
+                    "ivf/cosine"
+                } else {
+                    "ivf/dot"
+                }
+            } else {
+                "none"
+            },
+        );
+        for sec in &self.sections {
+            s.push_str(&format!(
+                "  section {:<20} dtype={:<3} count={:<10} bytes={:<10} crc={:#010x}\n",
+                section_name(sec.id),
+                sec.dtype.name(),
+                sec.count,
+                sec.byte_len,
+                sec.crc
+            ));
+        }
+        let materialized = h.vocab * h.dim * 4;
+        if materialized > 0 {
+            s.push_str(&format!(
+                "  on-disk vs materialized f32 table: {} / {} bytes ({:.1}x smaller)",
+                self.file_len(),
+                materialized,
+                materialized as f64 / self.file_len() as f64
+            ));
+        }
+        s
+    }
+}
+
+// ---- heap store reconstruction ---------------------------------------------
+
+/// Rebuild the concrete in-memory store a snapshot was saved from. All
+/// payload codecs are accepted (F16/I8 dequantize on load); with F32
+/// payloads every row is bit-exact with the original store.
+pub fn load_store(snap: &Snapshot) -> Result<Box<dyn EmbeddingStore>> {
+    let h = *snap.header();
+    let vocab = h.vocab as usize;
+    let dim = h.dim as usize;
+    let order = h.order as usize;
+    let rank = h.rank as usize;
+    Ok(match h.kind {
+        StoreKind::Regular => {
+            let data = snap.read_f32s(snap.require(SEC_REGULAR_DATA)?)?;
+            let want = vocab
+                .checked_mul(dim)
+                .ok_or_else(|| Error::Snapshot("regular geometry overflows".into()))?;
+            if data.len() != want {
+                return Err(Error::Snapshot(format!(
+                    "regular data has {} values, expected {want}",
+                    data.len()
+                )));
+            }
+            Box::new(RegularEmbedding::new(vocab, dim, data))
+        }
+        StoreKind::Word2Ket => {
+            let leaves = snap.read_f32s(snap.require(SEC_W2K_LEAVES)?)?;
+            let q = h.meta[META_Q] as usize;
+            let layernorm = h.flags & FLAG_LAYERNORM != 0;
+            Box::new(Word2Ket::from_leaves(vocab, dim, order, rank, q, layernorm, &leaves)?)
+        }
+        StoreKind::Word2KetXS => {
+            let blob = snap.read_f32s(snap.require(SEC_XS_FACTORS)?)?;
+            let q = h.meta[META_Q] as usize;
+            let t = h.meta[META_T_OR_SEED] as usize;
+            let per = t
+                .checked_mul(q)
+                .ok_or_else(|| Error::Snapshot("word2ketXS geometry overflows".into()))?;
+            let want = rank
+                .checked_mul(order)
+                .and_then(|x| x.checked_mul(per))
+                .ok_or_else(|| Error::Snapshot("word2ketXS geometry overflows".into()))?;
+            if per == 0 || blob.len() != want {
+                return Err(Error::Snapshot(format!(
+                    "word2ketXS factor blob has {} values, expected {want}",
+                    blob.len()
+                )));
+            }
+            let factors: Vec<Vec<f32>> =
+                blob.chunks(per).map(|c| c.to_vec()).collect();
+            Box::new(Word2KetXS::from_factors(vocab, dim, order, rank, q, t, factors)?)
+        }
+        StoreKind::Quantized => {
+            let codes = snap.read_u32s(snap.require(SEC_QUANT_CODES)?)?;
+            let scales = snap.read_f32s(snap.require(SEC_QUANT_SCALES)?)?;
+            let offsets = snap.read_f32s(snap.require(SEC_QUANT_OFFSETS)?)?;
+            let bits = h.meta[META_PRIMARY] as usize;
+            Box::new(QuantizedEmbedding::from_parts(vocab, dim, bits, codes, scales, offsets)?)
+        }
+        StoreKind::LowRank => {
+            let u = snap.read_f32s(snap.require(SEC_LOWRANK_U)?)?;
+            let vt = snap.read_f32s(snap.require(SEC_LOWRANK_VT)?)?;
+            let k = h.meta[META_PRIMARY] as usize;
+            Box::new(LowRankEmbedding::from_parts(vocab, dim, k, u, vt)?)
+        }
+        StoreKind::Hashed => {
+            let weights = snap.read_f32s(snap.require(SEC_HASHED_WEIGHTS)?)?;
+            let buckets = h.meta[META_PRIMARY] as usize;
+            let seed = h.meta[META_T_OR_SEED];
+            Box::new(HashedEmbedding::from_parts(vocab, dim, buckets, seed, weights)?)
+        }
+    })
+}
+
+// ---- serialized index ------------------------------------------------------
+
+/// Deserialized IVF payload: everything needed to rebuild the coarse
+/// quantizer without re-running k-means.
+pub struct IndexPayload {
+    pub cosine: bool,
+    pub nlist: usize,
+    /// `nlist × dim` row-major centroids.
+    pub centroids: Vec<f32>,
+    /// Per-cell member id lists (a partition of the vocabulary).
+    pub lists: Vec<Vec<u32>>,
+}
+
+/// Extract the embedded IVF index, if the snapshot carries one.
+pub fn load_index_payload(snap: &Snapshot) -> Result<Option<IndexPayload>> {
+    let h = snap.header();
+    if h.flags & FLAG_HAS_INDEX == 0 {
+        return Ok(None);
+    }
+    let nlist = h.meta[META_IVF_NLIST] as usize;
+    let centroids = snap.read_f32s(snap.require(SEC_IVF_CENTROIDS)?)?;
+    let lens = snap.read_u32s(snap.require(SEC_IVF_LIST_LENS)?)?;
+    let ids = snap.read_u32s(snap.require(SEC_IVF_LIST_IDS)?)?;
+    if nlist == 0 || lens.len() != nlist {
+        return Err(Error::Snapshot(format!(
+            "ivf payload: {} cell lengths for nlist={nlist}",
+            lens.len()
+        )));
+    }
+    let want_centroids = nlist
+        .checked_mul(h.dim as usize)
+        .ok_or_else(|| Error::Snapshot("ivf payload geometry overflows".into()))?;
+    if centroids.len() != want_centroids {
+        return Err(Error::Snapshot(format!(
+            "ivf payload: {} centroid values, expected {want_centroids}",
+            centroids.len()
+        )));
+    }
+    let total: u64 = lens.iter().map(|&l| l as u64).sum();
+    if total != ids.len() as u64 {
+        return Err(Error::Snapshot(format!(
+            "ivf payload: list lengths sum to {total}, {} ids present",
+            ids.len()
+        )));
+    }
+    let mut lists = Vec::with_capacity(nlist);
+    let mut off = 0usize;
+    for &l in &lens {
+        let l = l as usize;
+        lists.push(ids[off..off + l].to_vec());
+        off += l;
+    }
+    Ok(Some(IndexPayload { cosine: h.flags & FLAG_INDEX_COSINE != 0, nlist, centroids, lists }))
+}

@@ -1,0 +1,506 @@
+//! `SnapshotStore`: serve factored lookups straight out of an open snapshot
+//! (zero-copy for f32 payloads) without heap-materializing any table.
+//!
+//! Every [`crate::config::EmbeddingKind`] is supported. Reconstruction
+//! mirrors the concrete in-memory stores *operation for operation* — same
+//! balanced product tree, same fused order-2 outer product, same bit-packed
+//! code extraction — so rows and factored inner products are bit-identical
+//! to the store the snapshot was saved from (f32 payloads). For f16/int8
+//! payloads the factor tensors are dequantized once into a small owned
+//! buffer at open (they are the *compressed* representation, so this stays
+//! tiny) and reconstruction proceeds identically from there.
+//!
+//! The index scorer treats a `SnapshotStore` over raw word2ket/word2ketXS
+//! factors as a factored backend (see `index::scorer`), so k-NN keeps
+//! scoring in `O(r²nq)` after a hot swap.
+
+use super::format::*;
+use super::reader::Snapshot;
+use crate::embedding::quantized::get_bits;
+use crate::embedding::EmbeddingStore;
+use crate::error::{Error, Result};
+use crate::kron::{kron_accumulate, tree_term, KronScratch, MixedRadix};
+use crate::tensor::dot;
+use crate::util::rng::splitmix64;
+use std::sync::Arc;
+
+/// A float slab: zero-copy offsets into the snapshot (F32 payloads) or a
+/// small owned dequantized buffer (F16/I8 payloads).
+enum Slab {
+    Map { off: usize, count: usize },
+    Own(Vec<f32>),
+}
+
+/// Same for u32 payloads (bit-packed quantization codes, always exact).
+enum SlabU32 {
+    Map { off: usize, count: usize },
+}
+
+/// Kind-specific resolved view over the snapshot sections.
+enum View {
+    Regular {
+        data: Slab,
+    },
+    W2k {
+        leaves: Slab,
+        q: usize,
+        layernorm: bool,
+    },
+    Xs {
+        factors: Slab,
+        q: usize,
+        t: usize,
+        radix: MixedRadix,
+    },
+    Quant {
+        codes: SlabU32,
+        scales: Slab,
+        offsets: Slab,
+        bits: usize,
+    },
+    LowRank {
+        u: Slab,
+        vt: Slab,
+        k: usize,
+    },
+    Hashed {
+        weights: Slab,
+        seed: u64,
+    },
+}
+
+/// Snapshot-backed embedding store (see module docs).
+pub struct SnapshotStore {
+    snap: Arc<Snapshot>,
+    vocab: usize,
+    dim: usize,
+    order: usize,
+    rank: usize,
+    view: View,
+}
+
+/// Overflow-checked product: a CRC-valid but hostile header must yield a
+/// typed error, never an arithmetic panic.
+fn prod(parts: &[usize]) -> Result<usize> {
+    let mut acc = 1usize;
+    for &p in parts {
+        acc = acc
+            .checked_mul(p)
+            .ok_or_else(|| Error::Snapshot("snapshot geometry product overflows".into()))?;
+    }
+    Ok(acc)
+}
+
+impl SnapshotStore {
+    /// Resolve a float section into a slab: zero-copy for F32, dequantized
+    /// once into the heap for F16/I8.
+    fn slab_for(snap: &Snapshot, id: u32, expect: usize) -> Result<Slab> {
+        let sec = *snap
+            .section(id)
+            .ok_or_else(|| Error::Snapshot(format!("missing section {}", section_name(id))))?;
+        if sec.count as usize != expect {
+            return Err(Error::Snapshot(format!(
+                "section {} has {} values, expected {expect}",
+                section_name(id),
+                sec.count
+            )));
+        }
+        match sec.dtype {
+            Dtype::F32 => Ok(Slab::Map { off: sec.offset as usize, count: expect }),
+            Dtype::F16 | Dtype::I8 => Ok(Slab::Own(snap.read_f32s(&sec)?)),
+            Dtype::U32 => Err(Error::Snapshot(format!(
+                "section {} is u32-typed, expected floats",
+                section_name(id)
+            ))),
+        }
+    }
+
+    fn slab_u32_for(snap: &Snapshot, id: u32, expect: usize) -> Result<SlabU32> {
+        let sec = *snap
+            .section(id)
+            .ok_or_else(|| Error::Snapshot(format!("missing section {}", section_name(id))))?;
+        if sec.dtype != Dtype::U32 {
+            return Err(Error::Snapshot(format!(
+                "section {} must be u32-typed",
+                section_name(id)
+            )));
+        }
+        if sec.count as usize != expect {
+            return Err(Error::Snapshot(format!(
+                "section {} has {} values, expected {expect}",
+                section_name(id),
+                sec.count
+            )));
+        }
+        Ok(SlabU32::Map { off: sec.offset as usize, count: expect })
+    }
+
+    /// Open a store view over a validated snapshot.
+    pub fn open(snap: Arc<Snapshot>) -> Result<SnapshotStore> {
+        let h = *snap.header();
+        let vocab = h.vocab as usize;
+        let dim = h.dim as usize;
+        let order = h.order as usize;
+        let rank = h.rank as usize;
+        if vocab == 0 || dim == 0 {
+            return Err(Error::Snapshot("snapshot has empty vocab/dim".into()));
+        }
+        let view = match h.kind {
+            StoreKind::Regular => View::Regular {
+                data: Self::slab_for(&snap, SEC_REGULAR_DATA, prod(&[vocab, dim])?)?,
+            },
+            StoreKind::Word2Ket => {
+                let q = h.meta[META_Q] as usize;
+                if !(2..=16).contains(&order) || rank == 0 || q == 0 {
+                    return Err(Error::Snapshot(format!(
+                        "bad word2ket geometry: order={order} rank={rank} q={q}"
+                    )));
+                }
+                let full = q
+                    .checked_pow(order as u32)
+                    .ok_or_else(|| Error::Snapshot("word2ket q^order overflows".into()))?;
+                // Lower bound: reconstruction must cover dim. Upper bound:
+                // the legit constructor picks minimal q = ⌈dim^(1/n)⌉, so
+                // q^n ≤ dim·2^n always; a CRC-valid hostile header with a
+                // huge q must not drive a q^n-sized allocation per lookup.
+                if full < dim || full > dim.saturating_mul(1usize << order) {
+                    return Err(Error::Snapshot(format!(
+                        "word2ket q^order = {full} inconsistent with dim {dim}"
+                    )));
+                }
+                View::W2k {
+                    leaves: Self::slab_for(
+                        &snap,
+                        SEC_W2K_LEAVES,
+                        prod(&[vocab, rank, order, q])?,
+                    )?,
+                    q,
+                    layernorm: h.flags & FLAG_LAYERNORM != 0,
+                }
+            }
+            StoreKind::Word2KetXS => {
+                let q = h.meta[META_Q] as usize;
+                let t = h.meta[META_T_OR_SEED] as usize;
+                if !(2..=8).contains(&order) || rank == 0 || q == 0 || t == 0 {
+                    return Err(Error::Snapshot(format!(
+                        "bad word2ketXS geometry: order={order} rank={rank} q={q} t={t}"
+                    )));
+                }
+                let full = q
+                    .checked_pow(order as u32)
+                    .ok_or_else(|| Error::Snapshot("word2ketXS q^order overflows".into()))?;
+                let cap = t
+                    .checked_pow(order as u32)
+                    .ok_or_else(|| Error::Snapshot("word2ketXS t^order overflows".into()))?;
+                // Same bounds as word2ket: minimal-root construction means
+                // q^n ≤ dim·2^n and t^n ≤ vocab·2^n (the `.max(2)` floor is
+                // covered because dim/vocab ≥ 1 ⇒ 2^n ≤ bound); anything
+                // larger is hostile and would blow up per-lookup scratch.
+                if full < dim
+                    || cap < vocab
+                    || full > dim.saturating_mul(1usize << order)
+                    || cap > vocab.saturating_mul(1usize << order)
+                {
+                    return Err(Error::Snapshot(format!(
+                        "word2ketXS geometry inconsistent with {vocab}x{dim} (q^n={full}, t^n={cap})"
+                    )));
+                }
+                View::Xs {
+                    factors: Self::slab_for(
+                        &snap,
+                        SEC_XS_FACTORS,
+                        prod(&[rank, order, t, q])?,
+                    )?,
+                    q,
+                    t,
+                    radix: MixedRadix::uniform(t, order),
+                }
+            }
+            StoreKind::Quantized => {
+                let bits = h.meta[META_PRIMARY] as usize;
+                if !(1..=16).contains(&bits) {
+                    return Err(Error::Snapshot(format!("quantized bits {bits} outside 1..=16")));
+                }
+                let n_codes = prod(&[vocab, dim, bits])?.div_ceil(32);
+                View::Quant {
+                    codes: Self::slab_u32_for(&snap, SEC_QUANT_CODES, n_codes)?,
+                    scales: Self::slab_for(&snap, SEC_QUANT_SCALES, vocab)?,
+                    offsets: Self::slab_for(&snap, SEC_QUANT_OFFSETS, vocab)?,
+                    bits,
+                }
+            }
+            StoreKind::LowRank => {
+                let k = h.meta[META_PRIMARY] as usize;
+                if k == 0 {
+                    return Err(Error::Snapshot("lowrank k must be >= 1".into()));
+                }
+                View::LowRank {
+                    u: Self::slab_for(&snap, SEC_LOWRANK_U, prod(&[vocab, k])?)?,
+                    vt: Self::slab_for(&snap, SEC_LOWRANK_VT, prod(&[dim, k])?)?,
+                    k,
+                }
+            }
+            StoreKind::Hashed => {
+                let buckets = h.meta[META_PRIMARY] as usize;
+                if buckets == 0 {
+                    return Err(Error::Snapshot("hashed buckets must be >= 1".into()));
+                }
+                View::Hashed {
+                    weights: Self::slab_for(&snap, SEC_HASHED_WEIGHTS, buckets)?,
+                    seed: h.meta[META_T_OR_SEED],
+                }
+            }
+        };
+        Ok(SnapshotStore { snap, vocab, dim, order, rank, view })
+    }
+
+    /// The underlying snapshot (generation metadata, file size).
+    pub fn snapshot(&self) -> &Arc<Snapshot> {
+        &self.snap
+    }
+
+    pub fn kind(&self) -> StoreKind {
+        self.snap.kind()
+    }
+
+    fn floats<'a>(&'a self, slab: &'a Slab) -> &'a [f32] {
+        match slab {
+            Slab::Map { off, count } => self.snap.f32s_at(*off, *count),
+            Slab::Own(v) => v,
+        }
+    }
+
+    fn u32s<'a>(&'a self, slab: &'a SlabU32) -> &'a [u32] {
+        match slab {
+            SlabU32::Map { off, count } => self.snap.u32s_at(*off, *count),
+        }
+    }
+
+    /// True when this snapshot holds raw (no LayerNorm), untruncated
+    /// word2ket/word2ketXS factors — i.e. the factored inner-product
+    /// identity holds and the index scorer can skip materialization.
+    pub fn factored(&self) -> bool {
+        match &self.view {
+            View::W2k { q, layernorm, .. } => {
+                !*layernorm && q.checked_pow(self.order as u32) == Some(self.dim)
+            }
+            View::Xs { q, .. } => q.checked_pow(self.order as u32) == Some(self.dim),
+            _ => false,
+        }
+    }
+
+    /// Leaf slice `v_{j,k}` of word `w` (word2ket view only).
+    fn w2k_leaf<'a>(&self, leaves: &'a [f32], q: usize, w: usize, k: usize, j: usize) -> &'a [f32] {
+        let per_word = self.rank * self.order * q;
+        let off = w * per_word + (k * self.order + j) * q;
+        &leaves[off..off + q]
+    }
+
+    /// Column `c` of (transposed) factor `F_jk` (word2ketXS view only).
+    fn xs_col<'a>(
+        &self,
+        factors: &'a [f32],
+        q: usize,
+        t: usize,
+        k: usize,
+        j: usize,
+        c: usize,
+    ) -> &'a [f32] {
+        let base = (k * self.order + j) * (t * q) + c * q;
+        &factors[base..base + q]
+    }
+
+    /// Factored inner product `⟨row a, row b⟩` without reconstruction.
+    /// Same operation order as `Word2Ket::inner` / `Word2KetXS::inner`, so
+    /// results are bit-identical to pre-snapshot scoring. Only meaningful
+    /// when [`factored`](Self::factored) holds.
+    pub fn inner(&self, a: usize, b: usize) -> f32 {
+        match &self.view {
+            View::W2k { leaves, q, .. } => {
+                let leaves = self.floats(leaves);
+                let mut total = 0.0f32;
+                for k in 0..self.rank {
+                    for k2 in 0..self.rank {
+                        let mut prod = 1.0f32;
+                        for j in 0..self.order {
+                            let la = self.w2k_leaf(leaves, *q, a, k, j);
+                            let lb = self.w2k_leaf(leaves, *q, b, k2, j);
+                            prod *= dot(la, lb);
+                            if prod == 0.0 {
+                                break;
+                            }
+                        }
+                        total += prod;
+                    }
+                }
+                total
+            }
+            View::Xs { factors, q, t, radix } => {
+                let factors = self.floats(factors);
+                let mut da = [0usize; 8];
+                let mut db = [0usize; 8];
+                radix.decode_into(a, &mut da[..self.order]);
+                radix.decode_into(b, &mut db[..self.order]);
+                let mut total = 0.0f32;
+                for k in 0..self.rank {
+                    for k2 in 0..self.rank {
+                        let mut prod = 1.0f32;
+                        for j in 0..self.order {
+                            let ca = self.xs_col(factors, *q, *t, k, j, da[j]);
+                            let cb = self.xs_col(factors, *q, *t, k2, j, db[j]);
+                            prod *= dot(ca, cb);
+                            if prod == 0.0 {
+                                break;
+                            }
+                        }
+                        total += prod;
+                    }
+                }
+                total
+            }
+            _ => {
+                // Dense fallback: correctness over speed for non-factored
+                // kinds (the scorer never routes them here).
+                dot(&self.lookup(a), &self.lookup(b))
+            }
+        }
+    }
+}
+
+impl EmbeddingStore for SnapshotStore {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_params(&self) -> usize {
+        match &self.view {
+            View::Regular { .. } => self.vocab * self.dim,
+            View::W2k { q, .. } => self.vocab * self.rank * self.order * q,
+            View::Xs { q, t, .. } => self.rank * self.order * q * t,
+            View::Quant { bits, .. } => (self.vocab * self.dim * bits).div_ceil(32) + 2 * self.vocab,
+            View::LowRank { k, .. } => k * (self.vocab + self.dim),
+            View::Hashed { weights, .. } => match weights {
+                Slab::Map { count, .. } => *count,
+                Slab::Own(v) => v.len(),
+            },
+        }
+    }
+
+    fn lookup(&self, id: usize) -> Vec<f32> {
+        match &self.view {
+            View::Regular { data } => {
+                let data = self.floats(data);
+                data[id * self.dim..(id + 1) * self.dim].to_vec()
+            }
+            View::W2k { leaves, q, layernorm } => {
+                // Mirror CpTensor::reconstruct: balanced tree per rank term,
+                // terms accumulated in rank order, then truncated to dim.
+                let leaves = self.floats(leaves);
+                let full = q.pow(self.order as u32);
+                let mut out = vec![0.0f32; full];
+                let mut refs: Vec<&[f32]> = Vec::with_capacity(self.order);
+                for k in 0..self.rank {
+                    refs.clear();
+                    for j in 0..self.order {
+                        refs.push(self.w2k_leaf(leaves, *q, id, k, j));
+                    }
+                    let term = tree_term(&refs, *layernorm);
+                    for (o, t) in out.iter_mut().zip(term.iter()) {
+                        *o += t;
+                    }
+                }
+                out.truncate(self.dim);
+                out
+            }
+            View::Xs { factors, q, t, radix } => {
+                // Mirror Word2KetXS::lookup_into exactly (fused order-2 path,
+                // kron_accumulate otherwise).
+                let factors = self.floats(factors);
+                let mut out = vec![0.0f32; self.dim];
+                let mut digits = [0usize; 8];
+                radix.decode_into(id, &mut digits[..self.order]);
+                if self.order == 2 {
+                    let q = *q;
+                    let dim = self.dim;
+                    for k in 0..self.rank {
+                        let a = self.xs_col(factors, q, *t, k, 0, digits[0]);
+                        let b = self.xs_col(factors, q, *t, k, 1, digits[1]);
+                        let mut i = 0;
+                        while i * q < dim {
+                            let x = a[i];
+                            if x != 0.0 {
+                                let end = ((i + 1) * q).min(dim);
+                                let row = &mut out[i * q..end];
+                                for (o, &y) in row.iter_mut().zip(b) {
+                                    *o += x * y;
+                                }
+                            }
+                            i += 1;
+                        }
+                    }
+                    return out;
+                }
+                let mut scratch = KronScratch::new();
+                let mut cols: [&[f32]; 8] = [&[]; 8];
+                for k in 0..self.rank {
+                    for (j, c) in cols.iter_mut().take(self.order).enumerate() {
+                        *c = self.xs_col(factors, *q, *t, k, j, digits[j]);
+                    }
+                    kron_accumulate(&cols[..self.order], &mut out, &mut scratch);
+                }
+                out
+            }
+            View::Quant { codes, scales, offsets, bits } => {
+                let codes = self.u32s(codes);
+                let scale = self.floats(scales)[id];
+                let off = self.floats(offsets)[id];
+                let mut out = Vec::with_capacity(self.dim);
+                for c in 0..self.dim {
+                    let code = get_bits(codes, (id * self.dim + c) * bits, *bits);
+                    out.push(off + code as f32 * scale);
+                }
+                out
+            }
+            View::LowRank { u, vt, k } => {
+                let u = &self.floats(u)[id * k..(id + 1) * k];
+                let vt = self.floats(vt);
+                (0..self.dim).map(|j| dot(u, &vt[j * k..(j + 1) * k])).collect()
+            }
+            View::Hashed { weights, seed } => {
+                let w = self.floats(weights);
+                let buckets = w.len();
+                (0..self.dim)
+                    .map(|j| {
+                        let mut h =
+                            seed.wrapping_add((id as u64) << 32).wrapping_add(j as u64);
+                        let x = splitmix64(&mut h);
+                        let sign = if (x >> 63) == 0 { 1.0 } else { -1.0 };
+                        sign * w[(x % buckets as u64) as usize]
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "snapshot[{}] {}×{} order={} rank={} ({} params, {} bytes on disk, {:.0}× saving)",
+            self.kind().name(),
+            self.vocab,
+            self.dim,
+            self.order,
+            self.rank,
+            self.num_params(),
+            self.snap.file_len(),
+            self.space_saving_rate()
+        )
+    }
+}
