@@ -109,7 +109,7 @@ fn main() -> word2ket::Result<()> {
         let info = word2ket::snapshot::save_store(
             store.as_ref(),
             std::path::Path::new(save),
-            &word2ket::snapshot::SaveOptions { codec: cfg.snapshot.codec },
+            &word2ket::snapshot::SaveOptions { codec: cfg.snapshot.codec, ..Default::default() },
         )?;
         println!(
             "saved snapshot {} ({} bytes, {} sections, vs {} materialized f32 bytes)",

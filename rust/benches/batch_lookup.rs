@@ -1,0 +1,160 @@
+//! Bench: allocation-free batched lookups vs the per-row `Vec` path.
+//!
+//! The repr-layer refactor made `EmbeddingStore::lookup_into` /
+//! `lookup_batch_into` write caller-provided buffers end to end (per-thread
+//! reconstruction scratch, dedup-scatter into a reused arena, cache rows
+//! filled in place). This bench quantifies what that buys over the
+//! historical per-row path (`lookup` allocating a fresh `Vec<f32>` per id)
+//! on the acceptance config — a 10k-vocab order-4 word2ketXS store — plus
+//! the order-2 heavy-rank cell and a cache-wrapped variant, and emits
+//! `BENCH_batch.json` so the perf trajectory accumulates across PRs.
+//!
+//! Run: cargo bench --bench batch_lookup    (W2K_BENCH_FAST=1 to smoke)
+
+use word2ket::bench::{black_box, header, BenchRunner};
+use word2ket::embedding::{EmbeddingStore, Word2KetXS};
+use word2ket::serving::ShardedCache;
+use word2ket::util::{Json, Rng};
+
+const VOCAB: usize = 10_000;
+const DIM: usize = 256;
+const BATCH: usize = 512;
+
+struct Row {
+    name: String,
+    lookups_per_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    order: usize,
+    rank: usize,
+    batched: bool,
+    cached: bool,
+}
+
+fn xs_store(order: usize, rank: usize) -> Word2KetXS {
+    let mut rng = Rng::new(11);
+    Word2KetXS::random(VOCAB, DIM, order, rank, &mut rng)
+}
+
+/// Distinct uniform ids per batch (partial Fisher–Yates, no Zipf skew, no
+/// repeats): dedup finds zero duplicates, so the batched-vs-per-row
+/// comparison isolates allocation + scratch reuse — not dedup or caching.
+fn batches(n: usize) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(42);
+    let mut ids: Vec<usize> = (0..VOCAB).collect();
+    (0..n)
+        .map(|_| {
+            for i in 0..BATCH {
+                let j = rng.range(i, VOCAB - 1);
+                ids.swap(i, j);
+            }
+            ids[..BATCH].to_vec()
+        })
+        .collect()
+}
+
+fn main() {
+    header(
+        "Batched lookup_into vs per-row Vec reconstruction",
+        "the repr layer writes rows into caller buffers (per-thread scratch, \
+         reused arenas); the old path allocated a Vec per row",
+    );
+    let fast = std::env::var("W2K_BENCH_FAST").is_ok();
+    let runner = if fast {
+        BenchRunner {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            budget: std::time::Duration::from_millis(300),
+        }
+    } else {
+        BenchRunner::default()
+    };
+    let workload = batches(if fast { 8 } else { 64 });
+    let mut results: Vec<Row> = Vec::new();
+    let record = |name: &str,
+                      r: &word2ket::bench::BenchResult,
+                      order: usize,
+                      rank: usize,
+                      batched: bool,
+                      cached: bool,
+                      results: &mut Vec<Row>| {
+        println!("{}", r.render());
+        results.push(Row {
+            name: name.to_string(),
+            lookups_per_s: r.throughput().unwrap_or(0.0),
+            p50_us: r.p50.as_secs_f64() * 1e6,
+            p99_us: r.p99.as_secs_f64() * 1e6,
+            order,
+            rank,
+            batched,
+            cached,
+        });
+    };
+
+    // The acceptance config (order 4) first, then the rank-heavy order-2
+    // cell from the paper's tables.
+    for (order, rank) in [(4usize, 2usize), (2, 10)] {
+        let store = xs_store(order, rank);
+        let mut next = 0usize;
+
+        let name = format!("xs {order}/{rank} per-row Vec ({BATCH} rows)");
+        let per_row = runner.run_throughput(&name, BATCH as f64, || {
+            let ids = &workload[next % workload.len()];
+            next += 1;
+            for &id in ids {
+                black_box(store.lookup(id));
+            }
+        });
+        record(&name, &per_row, order, rank, false, false, &mut results);
+
+        let mut arena: Vec<f32> = Vec::new();
+        let mut next = 0usize;
+        let name = format!("xs {order}/{rank} batched arena ({BATCH} rows)");
+        let batched = runner.run_throughput(&name, BATCH as f64, || {
+            let ids = &workload[next % workload.len()];
+            next += 1;
+            store.lookup_batch_into(ids, &mut arena);
+            black_box(arena.last().copied())
+        });
+        record(&name, &batched, order, rank, true, false, &mut results);
+
+        let speedup = per_row.mean.as_secs_f64() / batched.mean.as_secs_f64();
+        println!("  -> batched/per-row speedup {speedup:.2}×\n");
+    }
+
+    // Cache-wrapped order-4 store: misses reconstruct in place, hits are
+    // single memcpys into the arena.
+    let cached = ShardedCache::new(Box::new(xs_store(4, 2)), 4, VOCAB);
+    let mut arena: Vec<f32> = Vec::new();
+    for ids in &workload {
+        cached.lookup_batch_into(ids, &mut arena); // warm
+    }
+    let mut next = 0usize;
+    let name = format!("xs 4/2 cached batched arena ({BATCH} rows)");
+    let warm = runner.run_throughput(&name, BATCH as f64, || {
+        let ids = &workload[next % workload.len()];
+        next += 1;
+        cached.lookup_batch_into(ids, &mut arena);
+        black_box(arena.last().copied())
+    });
+    record(&name, &warm, 4, 2, true, true, &mut results);
+
+    let json = Json::arr(results.iter().map(|r| {
+        Json::obj(vec![
+            ("name", Json::str(r.name.clone())),
+            ("lookups_per_s", Json::num(r.lookups_per_s)),
+            ("p50_us", Json::num(r.p50_us)),
+            ("p99_us", Json::num(r.p99_us)),
+            ("order", Json::num(r.order as f64)),
+            ("rank", Json::num(r.rank as f64)),
+            ("batched", Json::num(if r.batched { 1.0 } else { 0.0 })),
+            ("cached", Json::num(if r.cached { 1.0 } else { 0.0 })),
+        ])
+    }));
+    let path = "BENCH_batch.json";
+    match std::fs::write(path, json.pretty()) {
+        Ok(()) => println!("\nwrote {path} ({} configs)", results.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

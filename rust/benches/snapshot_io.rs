@@ -56,8 +56,8 @@ fn run_config(
 
     // Save.
     let t = Timer::start();
-    let info = snapshot::save_store(store.as_ref(), &path, &SaveOptions { codec })
-        .expect("snapshot save");
+    let opts = SaveOptions { codec, ..Default::default() };
+    let info = snapshot::save_store(store.as_ref(), &path, &opts).expect("snapshot save");
     let save_ms = t.elapsed_ms();
 
     // Heap load (concrete store reconstruction).

@@ -235,6 +235,7 @@ pub fn app() -> App {
                     let mut o = common_train.clone();
                     o.push(OptSpec { name: "payload", help: "payload codec for save: f32|f16|int8 (default: [snapshot] codec)", takes_value: true, repeated: false, default: None });
                     o.push(OptSpec { name: "with-index", help: "embed the trained IVF index ([index] config) in the snapshot", takes_value: false, repeated: false, default: None });
+                    o.push(OptSpec { name: "with-norms", help: "embed per-word L2 norms so cosine scorers skip the norm pass on load (f32 payloads only)", takes_value: false, repeated: false, default: None });
                     o.push(OptSpec { name: "mmap", help: "load via memory mapping (zero-copy) instead of heap read", takes_value: false, repeated: false, default: None });
                     o
                 },
@@ -313,12 +314,14 @@ mod tests {
                 "--payload",
                 "int8",
                 "--with-index",
+                "--with-norms",
             ]))
             .unwrap();
         assert_eq!(p.command, "snapshot");
         assert_eq!(p.positionals, vec!["save".to_string(), "model.snap".to_string()]);
         assert_eq!(p.get("payload"), Some("int8"));
         assert!(p.flag("with-index"));
+        assert!(p.flag("with-norms"));
         assert!(!p.flag("mmap"));
         // Too many positionals is a CLI error.
         assert!(a.parse(&argv(&["snapshot", "save", "a.snap", "extra"])).is_err());

@@ -89,16 +89,21 @@ impl EmbeddingStore for HashedEmbedding {
     }
 
     fn lookup(&self, id: usize) -> Vec<f32> {
-        (0..self.dim)
-            .map(|j| {
-                let (b, s) = self.coord_hash(id, j);
-                s * self.weights[b]
-            })
-            .collect()
+        let mut out = vec![0.0f32; self.dim];
+        self.lookup_into(id, &mut out);
+        out
     }
 
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        Some(self)
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (j, o) in out.iter_mut().enumerate() {
+            let (b, s) = self.coord_hash(id, j);
+            *o = s * self.weights[b];
+        }
+    }
+
+    fn repr(&self) -> crate::repr::Repr<'_> {
+        crate::repr::Repr::Hashed(self)
     }
 
     fn describe(&self) -> String {

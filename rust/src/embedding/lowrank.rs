@@ -94,14 +94,21 @@ impl EmbeddingStore for LowRankEmbedding {
     }
 
     fn lookup(&self, id: usize) -> Vec<f32> {
-        let u = self.u_row(id);
-        (0..self.dim)
-            .map(|j| dot(u, &self.vt[j * self.k..(j + 1) * self.k]))
-            .collect()
+        let mut out = vec![0.0f32; self.dim];
+        self.lookup_into(id, &mut out);
+        out
     }
 
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        Some(self)
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let u = self.u_row(id);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(u, &self.vt[j * self.k..(j + 1) * self.k]);
+        }
+    }
+
+    fn repr(&self) -> crate::repr::Repr<'_> {
+        crate::repr::Repr::LowRank(self)
     }
 
     fn describe(&self) -> String {

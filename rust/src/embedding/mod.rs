@@ -27,23 +27,42 @@ pub use word2ket::Word2Ket;
 pub use word2ketxs::Word2KetXS;
 
 use crate::config::{EmbeddingConfig, EmbeddingKind};
+use crate::repr::Repr;
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use std::collections::{hash_map::Entry, HashMap};
 
-/// Reconstruct rows for `ids` into a flat `(ids.len() × dim)` buffer,
-/// calling `fill` exactly once per distinct id and copying its row to every
-/// later position that repeats it. Production token streams are Zipf-skewed,
-/// so batches repeat head ids constantly and duplicate reconstruction is
-/// pure waste. Shared by the trait default `lookup_batch` and store-specific
-/// overrides.
-pub(crate) fn dedup_scatter(
+/// Reconstruct rows for `ids` into `data` (resized to `ids.len() × dim`,
+/// reusing its capacity), calling `fill` exactly once per distinct id and
+/// copying its row to every later position that repeats it. Production
+/// token streams are Zipf-skewed, so batches repeat head ids constantly and
+/// duplicate reconstruction is pure waste. Shared by the trait default
+/// `lookup_batch_into` and store-specific overrides; callers that keep the
+/// arena alive across batches (the serving worker pool) pay zero
+/// allocations in steady state.
+///
+/// `fill` must write its whole row: every position of `data` is either
+/// filled or copied from its first occurrence below, so the arena is
+/// deliberately *not* re-zeroed between batches (a per-drain memset of the
+/// full batch would cost more than the dedup saves on hot streams).
+pub(crate) fn dedup_scatter_into(
     ids: &[usize],
     dim: usize,
+    data: &mut Vec<f32>,
     mut fill: impl FnMut(usize, &mut [f32]),
-) -> Vec<f32> {
-    let mut data = vec![0.0f32; ids.len() * dim];
-    let mut first_row: HashMap<usize, usize> = HashMap::with_capacity(ids.len());
+) {
+    thread_local! {
+        /// First-occurrence map, reused across batches on each thread
+        /// (taken out of the cell while in use, so a `fill` that somehow
+        /// re-enters just falls back to a fresh map instead of panicking).
+        static FIRST_ROW: std::cell::Cell<HashMap<usize, usize>> =
+            std::cell::Cell::new(HashMap::new());
+    }
+    // Shrinking writes nothing; growing zero-fills only the new tail.
+    data.resize(ids.len() * dim, 0.0);
+    let mut first_row = FIRST_ROW.with(std::cell::Cell::take);
+    first_row.clear();
+    first_row.reserve(ids.len());
     for (row, &id) in ids.iter().enumerate() {
         match first_row.entry(id) {
             Entry::Occupied(e) => {
@@ -56,6 +75,19 @@ pub(crate) fn dedup_scatter(
             }
         }
     }
+    FIRST_ROW.with(|cell| cell.set(first_row));
+}
+
+/// Allocating convenience over [`dedup_scatter_into`] (tests, one-shot
+/// callers).
+#[cfg(test)]
+pub(crate) fn dedup_scatter(
+    ids: &[usize],
+    dim: usize,
+    fill: impl FnMut(usize, &mut [f32]),
+) -> Vec<f32> {
+    let mut data = Vec::new();
+    dedup_scatter_into(ids, dim, &mut data, fill);
     data
 }
 
@@ -73,35 +105,60 @@ pub trait EmbeddingStore: Send + Sync {
     /// Reconstruct the embedding vector for one token id.
     fn lookup(&self, id: usize) -> Vec<f32>;
 
-    /// Reconstruct a batch of rows as a `(b, p)` tensor. Implementations may
-    /// override for batch-level optimizations.
+    /// Reconstruct row `id` into a caller-provided buffer of length
+    /// [`dim`](Self::dim), bit-identical to [`lookup`](Self::lookup).
     ///
-    /// The default impl reconstructs each distinct id once and scatters the
-    /// row to every position that requested it (see [`dedup_scatter`]).
+    /// This is the allocation-free serving primitive: every concrete store
+    /// overrides it to write `out` directly (reusing per-thread scratch
+    /// where reconstruction needs working space). The default exists for
+    /// external store impls and simply copies the allocated `lookup` row.
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        out.copy_from_slice(&self.lookup(id));
+    }
+
+    /// Reconstruct a batch of rows into a caller-provided arena (resized to
+    /// `ids.len() × dim`, capacity reused across calls; every position is
+    /// overwritten).
+    ///
+    /// The default reconstructs each distinct id once via
+    /// [`lookup_into`](Self::lookup_into) and scatters the row to every
+    /// position that repeats it (see `dedup_scatter_into`).
+    fn lookup_batch_into(&self, ids: &[usize], out: &mut Vec<f32>) {
+        dedup_scatter_into(ids, self.dim(), out, |id, row| self.lookup_into(id, row));
+    }
+
+    /// Reconstruct a batch of rows as a `(b, p)` tensor (allocating
+    /// convenience over [`lookup_batch_into`](Self::lookup_batch_into)).
     fn lookup_batch(&self, ids: &[usize]) -> Tensor {
-        let p = self.dim();
-        let data = dedup_scatter(ids, p, |id, out| out.copy_from_slice(&self.lookup(id)));
-        Tensor::new(vec![ids.len(), p], data).expect("lookup_batch shape")
+        let mut data = Vec::with_capacity(ids.len() * self.dim());
+        self.lookup_batch_into(ids, &mut data);
+        Tensor::new(vec![ids.len(), self.dim()], data).expect("lookup_batch shape")
     }
 
     /// Space saving rate vs a regular `d × p` matrix (paper's definition:
     /// regular parameter count divided by this store's parameter count).
+    /// A store reporting zero parameters rates 0 (not `inf`/NaN), so
+    /// report tables stay finite.
     fn space_saving_rate(&self) -> f64 {
-        (self.vocab_size() as f64 * self.dim() as f64) / self.num_params() as f64
+        let params = self.num_params();
+        if params == 0 {
+            return 0.0;
+        }
+        (self.vocab_size() as f64 * self.dim() as f64) / params as f64
     }
 
     /// Human-readable description for reports.
     fn describe(&self) -> String;
 
-    /// Concrete-type escape hatch for layers that need a store's identity:
-    /// the `index` scorer reaches factored space through this (including
+    /// The store's typed representation (see [`crate::repr::Repr`]): the
+    /// index scorer resolves factored-space scoring through this (including
     /// snapshot-backed stores after a hot swap), and `snapshot::save_store`
     /// dispatches serialization on it. Wrappers
-    /// ([`crate::serving::ShardedCache`]) expose themselves so callers can
-    /// unwrap to the inner store; every concrete store overrides this with
-    /// `Some(self)`.
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        None
+    /// ([`crate::serving::ShardedCache`]) return [`Repr::Cached`] so
+    /// [`Repr::resolve`] can peel them; every concrete store overrides this
+    /// with its own variant. The default declares no identity.
+    fn repr(&self) -> Repr<'_> {
+        Repr::Opaque
     }
 }
 

@@ -143,18 +143,23 @@ impl EmbeddingStore for QuantizedEmbedding {
     }
 
     fn lookup(&self, id: usize) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.dim);
-        let scale = self.scales[id];
-        let off = self.offsets[id];
-        for c in 0..self.dim {
-            let code = get_bits(&self.codes, (id * self.dim + c) * self.bits, self.bits);
-            out.push(off + code as f32 * scale);
-        }
+        let mut out = vec![0.0f32; self.dim];
+        self.lookup_into(id, &mut out);
         out
     }
 
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        Some(self)
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let scale = self.scales[id];
+        let off = self.offsets[id];
+        for (c, o) in out.iter_mut().enumerate() {
+            let code = get_bits(&self.codes, (id * self.dim + c) * self.bits, self.bits);
+            *o = off + code as f32 * scale;
+        }
+    }
+
+    fn repr(&self) -> crate::repr::Repr<'_> {
+        crate::repr::Repr::Quantized(self)
     }
 
     fn describe(&self) -> String {

@@ -57,16 +57,22 @@ impl EmbeddingStore for RegularEmbedding {
         self.row_slice(id).to_vec()
     }
 
-    fn lookup_batch(&self, ids: &[usize]) -> Tensor {
-        let mut data = Vec::with_capacity(ids.len() * self.dim);
-        for &id in ids {
-            data.extend_from_slice(self.row_slice(id));
-        }
-        Tensor::new(vec![ids.len(), self.dim], data).unwrap()
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row_slice(id));
     }
 
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        Some(self)
+    fn lookup_batch_into(&self, ids: &[usize], out: &mut Vec<f32>) {
+        // Rows are plain memcpys here, so straight copies beat dedup
+        // bookkeeping.
+        out.clear();
+        out.reserve(ids.len() * self.dim);
+        for &id in ids {
+            out.extend_from_slice(self.row_slice(id));
+        }
+    }
+
+    fn repr(&self) -> crate::repr::Repr<'_> {
+        crate::repr::Repr::Regular(self)
     }
 
     fn describe(&self) -> String {

@@ -3,7 +3,8 @@
 //! `q = ⌈p^{1/n}⌉`. Storage: `d · r · n · q` instead of `d · p`.
 
 use super::EmbeddingStore;
-use crate::kron::CpTensor;
+use crate::kron::{tree_term, CpTensor};
+use crate::repr::{kernels, FactorGeometry, FactoredRepr, Repr};
 use crate::util::{ceil_root, Rng};
 
 /// Per-word CP tensors sharing (rank, order, leaf dim).
@@ -24,6 +25,9 @@ impl Word2Ket {
     /// exactly; truncation generalizes to arbitrary p).
     pub fn random(vocab: usize, dim: usize, order: usize, rank: usize, rng: &mut Rng) -> Self {
         assert!(order >= 2, "word2ket needs order >= 2");
+        // The repr-layer factor kernels use fixed MAX_ORDER slice buffers;
+        // enforce the same bound `from_leaves` already validates.
+        assert!(order <= crate::repr::MAX_ORDER, "word2ket supports order <= 16");
         let q = ceil_root(dim, order as u32).max(2);
         let words = (0..vocab)
             .map(|w| {
@@ -148,9 +152,35 @@ impl EmbeddingStore for Word2Ket {
     }
 
     fn lookup(&self, id: usize) -> Vec<f32> {
-        let mut v = self.words[id].reconstruct();
-        v.truncate(self.dim);
+        let mut v = vec![0.0f32; self.dim];
+        self.lookup_into(id, &mut v);
         v
+    }
+
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        // Same balanced tree per rank term as `CpTensor::reconstruct`, but
+        // each term accumulates straight into the (possibly truncated)
+        // caller buffer instead of a `q^n` temporary that gets truncated.
+        // The tree levels themselves still allocate: Fig. 1's balanced form
+        // is the defined reconstruction (and the only one LayerNorm nodes
+        // compose with), and a fused chain-accumulate was measured *slower*
+        // (see the perf note in `CpTensor::reconstruct`) — word2ketXS, not
+        // this per-word store, is the allocation-free serving hot path.
+        debug_assert_eq!(out.len(), self.dim);
+        out.fill(0.0);
+        let word = &self.words[id];
+        let mut leaves: [&[f32]; crate::repr::MAX_ORDER] = [&[]; crate::repr::MAX_ORDER];
+        for k in 0..self.rank {
+            for (j, leaf) in leaves.iter_mut().take(self.order).enumerate() {
+                *leaf = word.leaf(k, j);
+            }
+            let term = tree_term(&leaves[..self.order], self.layernorm);
+            kernels::add_assign(out, &term);
+        }
+    }
+
+    fn repr(&self) -> Repr<'_> {
+        Repr::Word2Ket(self)
     }
 
     fn describe(&self) -> String {
@@ -165,9 +195,45 @@ impl EmbeddingStore for Word2Ket {
             self.space_saving_rate()
         )
     }
+}
 
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        Some(self)
+/// Factored-space contract (see [`crate::repr`]). Handed out by
+/// [`Repr::factored`] only in raw, untruncated form, where the §2.3 inner
+/// products below equal dense dot products of reconstructed rows.
+impl FactoredRepr for Word2Ket {
+    fn geometry(&self) -> FactorGeometry {
+        FactorGeometry { order: self.order, rank: self.rank, leaf_dim: self.leaf_dim }
+    }
+
+    fn factors<'s>(&'s self, id: usize, k: usize, out: &mut [&'s [f32]]) {
+        // An overlong `out` would silently alias the next rank term's
+        // leaves through the flat (k·n + j)·q offset math.
+        debug_assert_eq!(out.len(), self.order);
+        let word = &self.words[id];
+        for (j, leaf) in out.iter_mut().enumerate() {
+            *leaf = word.leaf(k, j);
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "word2ket"
+    }
+
+    fn inner(&self, a: usize, b: usize) -> f32 {
+        Word2Ket::inner(self, a, b)
+    }
+
+    fn block_inner(&self, a: usize, bs: &[usize], out: &mut [f32]) {
+        // Hoist the query word's CP tensor out of the candidate loop; the
+        // per-pair arithmetic is identical to `inner`.
+        let wa = &self.words[a];
+        for (o, &b) in out.iter_mut().zip(bs) {
+            *o = wa.inner(&self.words[b]);
+        }
+    }
+
+    fn write_row(&self, id: usize, out: &mut [f32]) {
+        EmbeddingStore::lookup_into(self, id, out);
     }
 }
 

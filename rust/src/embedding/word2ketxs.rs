@@ -9,6 +9,7 @@
 
 use super::EmbeddingStore;
 use crate::kron::{kron_accumulate, KronScratch, MixedRadix};
+use crate::repr::{kernels, FactorGeometry, FactoredRepr, Repr};
 use crate::util::{ceil_root, Rng};
 
 /// Factored embedding operator.
@@ -177,27 +178,16 @@ impl Word2KetXS {
         let mut db = [0usize; 8];
         self.radix.decode_into(a, &mut da[..self.order]);
         self.radix.decode_into(b, &mut db[..self.order]);
-        let mut total = 0.0f32;
-        for k in 0..self.rank {
-            for k2 in 0..self.rank {
-                let mut prod = 1.0f32;
-                for j in 0..self.order {
-                    let ca = self.factor_col(k, j, da[j]);
-                    let cb = self.factor_col(k2, j, db[j]);
-                    prod *= crate::tensor::dot(ca, cb);
-                    if prod == 0.0 {
-                        break;
-                    }
-                }
-                total += prod;
-            }
-        }
-        total
+        kernels::factored_digit_inner(self.rank, self.order, &da, &db, |k, j, c| {
+            self.factor_col(k, j, c)
+        })
     }
 
-    /// Reconstruct row `id` into a caller buffer of length `dim`
-    /// (allocation-free hot path used by the server; §Perf in EXPERIMENTS.md).
-    pub fn lookup_into(
+    /// Reconstruct row `id` into a caller buffer of length `dim` using
+    /// caller-owned scratch (the trait-level
+    /// [`EmbeddingStore::lookup_into`] wraps this with per-thread scratch;
+    /// batch paths pass their own to stay re-entrant).
+    fn reconstruct_into(
         &self,
         id: usize,
         out: &mut [f32],
@@ -211,24 +201,12 @@ impl Word2KetXS {
         if self.order == 2 {
             // Fused rank-accumulated outer product: the dominant case
             // (paper Tables 1–3 all include order-2 rows). `dim` may be
-            // shorter than q² (truncated reconstruction).
-            let q = self.leaf_q;
-            let dim = self.dim;
+            // shorter than q² (truncated reconstruction) — the shared
+            // kernel truncates to `out`.
             for k in 0..self.rank {
                 let a = self.factor_col(k, 0, digits[0]);
                 let b = self.factor_col(k, 1, digits[1]);
-                let mut i = 0;
-                while i * q < dim {
-                    let x = a[i];
-                    if x != 0.0 {
-                        let end = ((i + 1) * q).min(dim);
-                        let row = &mut out[i * q..end];
-                        for (o, &y) in row.iter_mut().zip(b) {
-                            *o += x * y;
-                        }
-                    }
-                    i += 1;
-                }
+                kernels::kron2_accumulate(a, b, out);
             }
             return;
         }
@@ -259,26 +237,34 @@ impl EmbeddingStore for Word2KetXS {
 
     fn lookup(&self, id: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; self.dim];
-        let mut digits = vec![0usize; self.order];
-        let mut scratch = KronScratch::new();
-        self.lookup_into(id, &mut out, &mut digits, &mut scratch);
+        self.lookup_into(id, &mut out);
         out
     }
 
-    fn lookup_batch(&self, ids: &[usize]) -> crate::tensor::Tensor {
-        // Scratch-reusing override of the trait default: same dedup-and-
-        // scatter, but distinct ids reconstruct through lookup_into without
-        // per-row allocations.
-        let mut digits = vec![0usize; self.order];
-        let mut scratch = KronScratch::new();
-        let data = super::dedup_scatter(ids, self.dim, |id, out| {
-            self.lookup_into(id, out, &mut digits, &mut scratch)
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        // The serving hot path: per-thread digit/kron scratch makes this
+        // allocation-free in steady state (§Perf in EXPERIMENTS.md).
+        kernels::with_lookup_scratch(|s| {
+            self.reconstruct_into(id, out, &mut s.digits[..self.order], &mut s.kron)
         });
-        crate::tensor::Tensor::new(vec![ids.len(), self.dim], data).unwrap()
     }
 
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        Some(self)
+    fn lookup_batch_into(&self, ids: &[usize], out: &mut Vec<f32>) {
+        // Scratch-reusing override of the trait default: same dedup-and-
+        // scatter, but the per-thread scratch is borrowed once for the
+        // whole batch instead of once per row — a steady-state drain
+        // allocates nothing here.
+        kernels::with_lookup_scratch(|s| {
+            let digits = &mut s.digits[..self.order];
+            let kron = &mut s.kron;
+            super::dedup_scatter_into(ids, self.dim, out, |id, row| {
+                self.reconstruct_into(id, row, digits, kron)
+            });
+        });
+    }
+
+    fn repr(&self) -> Repr<'_> {
+        Repr::Word2KetXS(self)
     }
 
     fn describe(&self) -> String {
@@ -293,6 +279,50 @@ impl EmbeddingStore for Word2KetXS {
             self.num_params(),
             self.space_saving_rate()
         )
+    }
+}
+
+/// Factored-space contract (see [`crate::repr`]). Handed out by
+/// [`Repr::factored`] only when `q^n == p` (untruncated), where the shared
+/// factored inner product equals the dense dot product of rows.
+impl FactoredRepr for Word2KetXS {
+    fn geometry(&self) -> FactorGeometry {
+        FactorGeometry { order: self.order, rank: self.rank, leaf_dim: self.leaf_q }
+    }
+
+    fn factors<'s>(&'s self, id: usize, k: usize, out: &mut [&'s [f32]]) {
+        debug_assert_eq!(out.len(), self.order);
+        let mut digits = [0usize; 8];
+        self.radix.decode_into(id, &mut digits[..self.order]);
+        for (j, col) in out.iter_mut().enumerate() {
+            *col = self.factor_col(k, j, digits[j]);
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "word2ketXS"
+    }
+
+    fn inner(&self, a: usize, b: usize) -> f32 {
+        Word2KetXS::inner(self, a, b)
+    }
+
+    fn block_inner(&self, a: usize, bs: &[usize], out: &mut [f32]) {
+        // Shared digit-hoisted block kernel: the query word decodes once
+        // for the whole block; per-pair arithmetic is identical to `inner`.
+        kernels::factored_digit_block(
+            self.rank,
+            self.order,
+            |i, d: &mut [usize; 8]| self.radix.decode_into(i, &mut d[..self.order]),
+            |k, j, c| self.factor_col(k, j, c),
+            a,
+            bs,
+            out,
+        );
+    }
+
+    fn write_row(&self, id: usize, out: &mut [f32]) {
+        EmbeddingStore::lookup_into(self, id, out);
     }
 }
 

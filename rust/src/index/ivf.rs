@@ -10,7 +10,7 @@
 //! followed by one streaming full-vocabulary assignment pass; everything is
 //! seeded and deterministic.
 
-use super::{KnnIndex, KnnResult, Query, QueryStats, Scorer, TopK};
+use super::{scan_blocked, KnnIndex, KnnResult, Query, QueryStats, Scorer, TopK};
 use crate::tensor::dot;
 use crate::util::Rng;
 
@@ -258,26 +258,44 @@ impl KnnIndex for IvfIndex {
         }
         let probed = cells.into_sorted();
 
-        // Exact re-rank of the probed cells' members: factored pair scores
-        // for id queries on tensorized stores (backend resolved once, not
-        // per candidate), dense dots against the already-materialized query
-        // vector otherwise.
+        // Exact re-rank of the probed cells' members: for id queries on
+        // tensorized stores, whole cells feed through block-resolved
+        // factored scoring (representation resolved once per query, query
+        // factors hoisted per block); dense dots against the
+        // already-materialized query vector otherwise.
         let factored_id = matches!(query, Query::Id(_)) && self.scorer.is_factored();
         let pairs = self.scorer.pair_scorer();
         let mut top = TopK::new(k);
         let mut scanned = 0usize;
-        for cell in &probed {
-            for &cand in &self.lists[cell.id] {
-                let b = cand as usize;
-                if Some(b) == exclude {
-                    continue;
+        match query {
+            Query::Id(a) if factored_id => {
+                // One blocked scan over all probed cells' members (same
+                // candidate order as the per-cell loops), so blocks stay
+                // full-size across cell boundaries and the query factors
+                // are hoisted once per block, not once per small cell.
+                scanned += scan_blocked(
+                    &pairs,
+                    *a,
+                    probed.iter().flat_map(|cell| {
+                        self.lists[cell.id]
+                            .iter()
+                            .map(|&cand| cand as usize)
+                            .filter(|&b| Some(b) != exclude)
+                    }),
+                    &mut top,
+                );
+            }
+            _ => {
+                for cell in &probed {
+                    for &cand in &self.lists[cell.id] {
+                        let b = cand as usize;
+                        if Some(b) == exclude {
+                            continue;
+                        }
+                        top.push(b, self.scorer.score_vec(q, q_norm, b));
+                        scanned += 1;
+                    }
                 }
-                let score = match query {
-                    Query::Id(a) if factored_id => pairs.score(*a, b),
-                    _ => self.scorer.score_vec(q, q_norm, b),
-                };
-                top.push(b, score);
-                scanned += 1;
             }
         }
         (top.into_sorted(), QueryStats { candidates: scanned, probes: probed.len() })

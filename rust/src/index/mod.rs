@@ -69,6 +69,47 @@ pub trait KnnIndex: Send + Sync {
     fn describe(&self) -> String;
 }
 
+/// Candidate ids scored per [`PairScorer::score_block`] call during
+/// factored scans (brute-force sweeps and IVF re-ranks): big enough to
+/// amortize query-word factor resolution, small enough to stay on the
+/// stack.
+pub(crate) const SCAN_BLOCK: usize = 128;
+
+/// Feed every id yielded by `candidates` through block-resolved factored
+/// scoring into `top`, returning how many candidates were scored. Shared by
+/// the brute-force sweep and the IVF cell re-rank so both batch the same
+/// way.
+pub(crate) fn scan_blocked(
+    pairs: &PairScorer<'_>,
+    a: usize,
+    candidates: impl Iterator<Item = usize>,
+    top: &mut TopK,
+) -> usize {
+    let mut ids = [0usize; SCAN_BLOCK];
+    let mut scores = [0.0f32; SCAN_BLOCK];
+    let mut flush = |ids: &[usize], scores: &mut [f32], top: &mut TopK| {
+        pairs.score_block(a, ids, scores);
+        for (&id, &s) in ids.iter().zip(scores.iter()) {
+            top.push(id, s);
+        }
+        ids.len()
+    };
+    let mut n = 0usize;
+    let mut scanned = 0usize;
+    for b in candidates {
+        ids[n] = b;
+        n += 1;
+        if n == SCAN_BLOCK {
+            scanned += flush(&ids[..n], &mut scores[..n], top);
+            n = 0;
+        }
+    }
+    if n > 0 {
+        scanned += flush(&ids[..n], &mut scores[..n], top);
+    }
+    scanned
+}
+
 /// Heap entry ordering: higher score is better; ties prefer the smaller id
 /// so results are deterministic.
 struct Entry(Neighbor);
@@ -150,16 +191,11 @@ impl KnnIndex for BruteForce {
         let mut scanned = 0usize;
         match query {
             Query::Id(a) if self.scorer.is_factored() => {
-                // Resolve the factored backend once; the downcast chain must
-                // not run per pair.
+                // Resolve the factored representation once and sweep the
+                // vocabulary in blocks; neither dispatch nor the query
+                // word's factor resolution runs per pair.
                 let pairs = self.scorer.pair_scorer();
-                for b in 0..vocab {
-                    if b == *a {
-                        continue;
-                    }
-                    top.push(b, pairs.score(*a, b));
-                    scanned += 1;
-                }
+                scanned += scan_blocked(&pairs, *a, (0..vocab).filter(|b| b != a), &mut top);
             }
             Query::Id(a) => {
                 // Dense fallback: materialize the query row once instead of

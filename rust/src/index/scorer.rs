@@ -1,91 +1,91 @@
 //! Exact similarity scoring over any [`EmbeddingStore`], through *factored
-//! space* when the store is tensorized.
+//! space* when the representation layer offers it.
 //!
 //! The paper's representation makes inner products cheap without ever
 //! materializing rows: `⟨Σ_k ⊗_j u_jk, Σ_k' ⊗_j v_jk'⟩ = Σ_{k,k'} Π_j
 //! ⟨u_jk, v_jk'⟩` (§2.3), an `O(r² n q)` computation against the `O(q^n)`
-//! dense dot product. The scorer resolves once, at construction, whether the
-//! store underneath (unwrapping [`ShardedCache`]) is a [`Word2Ket`] or
-//! [`Word2KetXS`] in raw, untruncated form; if so every pair score runs
-//! through the factors, otherwise it falls back to materialized rows served
-//! through the store (and thus through the hot-row cache when present).
+//! dense dot product. The scorer asks the store for its
+//! [`Repr`](crate::repr::Repr) once per scan (and once at construction for
+//! the cosine norm pass):
+//! [`Repr::resolve`](crate::repr::Repr::resolve) peels cache wrappers and
+//! [`Repr::factored`](crate::repr::Repr::factored) hands back a
+//! [`FactoredRepr`] handle exactly when the identity holds (raw CP form, no
+//! LayerNorm, untruncated `q^n == p`) — for in-memory word2ket/word2ketXS
+//! stores *and* for snapshot-mapped stores after a hot swap, with no
+//! per-type sniffing here. Everything else falls back to materialized rows
+//! served through the store (and thus through the hot-row cache when
+//! present).
+//!
+//! Scans resolve a [`PairScorer`] once per query and score candidates in
+//! blocks ([`PairScorer::score_block`] → [`FactoredRepr::block_inner`]), so
+//! neither representation dispatch nor query-word factor resolution sits in
+//! the per-candidate loop.
 //!
 //! Cosine mode caches per-word L2 norms at construction — computed in
-//! factored space too (`‖v‖² = ⟨v, v⟩`), so even the norm pass never
-//! reconstructs a row on tensorized stores.
+//! factored space on tensorized stores (`‖v‖² = ⟨v, v⟩`), batched through a
+//! reused arena otherwise, and skipped entirely when a snapshot-backed
+//! store already embeds a norms section (see `snapshot::SaveOptions`).
 
-use crate::embedding::{EmbeddingStore, Word2Ket, Word2KetXS};
-use crate::serving::cache::unwrap_cached;
-use crate::snapshot::SnapshotStore;
+use crate::embedding::EmbeddingStore;
+use crate::repr::{FactoredRepr, Repr};
 use crate::tensor::dot;
 use std::sync::Arc;
-
-/// How pair scores are computed, resolved once at construction.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Backend {
-    /// Per-word CP tensors: factored inner via `Word2Ket::inner`.
-    Word2Ket,
-    /// Shared-factor operator: factored inner via `Word2KetXS::inner`.
-    Word2KetXS,
-    /// Snapshot-backed factors (post-hot-swap): `SnapshotStore::inner`.
-    Snapshot,
-    /// Materialized rows through the store (cache-aware when wrapped).
-    Dense,
-}
-
-/// Decide the scoring backend. The factored identities only hold for raw
-/// (no LayerNorm) CP form over the full `q^n` tensor, so truncated or
-/// LayerNorm-ed stores score densely.
-fn sniff(store: &dyn EmbeddingStore) -> Backend {
-    let inner = unwrap_cached(store);
-    if let Some(any) = inner.as_any() {
-        if let Some(w) = any.downcast_ref::<Word2Ket>() {
-            if !w.layernorm() && w.exact_dim() {
-                return Backend::Word2Ket;
-            }
-        }
-        if let Some(xs) = any.downcast_ref::<Word2KetXS>() {
-            if xs.exact_dim() {
-                return Backend::Word2KetXS;
-            }
-        }
-        // A snapshot-backed model (after `save → load → swap`) exposes the
-        // same factored identities straight off the mapped file; without
-        // this arm a hot reload would silently demote k-NN to dense scans.
-        if let Some(snap) = any.downcast_ref::<SnapshotStore>() {
-            if snap.factored() {
-                return Backend::Snapshot;
-            }
-        }
-    }
-    Backend::Dense
-}
 
 /// Exact dot/cosine scorer over a store (see module docs).
 pub struct Scorer {
     store: Arc<dyn EmbeddingStore>,
-    backend: Backend,
     cosine: bool,
     /// Per-word L2 norms; populated only in cosine mode.
     norms: Vec<f32>,
 }
 
+/// `‖row id‖` for every word of `store`, the way the scorer computes them:
+/// `⟨v, v⟩` in factored space when the representation allows, dense dots
+/// over arena-batched rows otherwise. Snapshot saving calls this to embed
+/// norms so a reloading server can skip the pass.
+pub fn compute_norms(store: &dyn EmbeddingStore) -> Vec<f32> {
+    let vocab = store.vocab_size();
+    if let Some(f) = Repr::resolve(store).factored() {
+        return (0..vocab).map(|id| f.inner(id, id).max(0.0).sqrt()).collect();
+    }
+    // Dense fallback: chunk rows through one reused arena (cache-aware when
+    // the store is wrapped) instead of allocating a Vec per row.
+    let dim = store.dim();
+    let mut norms = Vec::with_capacity(vocab);
+    let mut ids: Vec<usize> = Vec::new();
+    let mut rows: Vec<f32> = Vec::new();
+    const CHUNK: usize = 256;
+    let mut start = 0usize;
+    while start < vocab {
+        let end = (start + CHUNK).min(vocab);
+        ids.clear();
+        ids.extend(start..end);
+        store.lookup_batch_into(&ids, &mut rows);
+        for row in rows.chunks_exact(dim) {
+            norms.push(dot(row, row).max(0.0).sqrt());
+        }
+        start = end;
+    }
+    norms
+}
+
 impl Scorer {
     pub fn new(store: Arc<dyn EmbeddingStore>, cosine: bool) -> Scorer {
-        let backend = sniff(store.as_ref());
-        let mut scorer = Scorer { store, backend, cosine, norms: Vec::new() };
-        if cosine {
-            let vocab = scorer.vocab_size();
-            let mut norms = Vec::with_capacity(vocab);
-            {
-                let pairs = scorer.pair_scorer();
-                for id in 0..vocab {
-                    norms.push(pairs.raw_inner(id, id).max(0.0).sqrt());
-                }
+        let norms = if cosine {
+            // A snapshot that embeds a norms section makes the whole pass
+            // unnecessary — the values were computed by this same code
+            // before saving.
+            match Repr::resolve(store.as_ref()) {
+                Repr::Snapshot(s) => s
+                    .norms()
+                    .map(<[f32]>::to_vec)
+                    .unwrap_or_else(|| compute_norms(store.as_ref())),
+                _ => compute_norms(store.as_ref()),
             }
-            scorer.norms = norms;
-        }
-        scorer
+        } else {
+            Vec::new()
+        };
+        Scorer { store, cosine, norms }
     }
 
     pub fn vocab_size(&self) -> usize {
@@ -100,9 +100,22 @@ impl Scorer {
         self.cosine
     }
 
-    /// True when pair scores go through factored space.
+    /// True when pair scores go through factored space. Resolved from the
+    /// store's representation on demand (cheap: wrapper peeling plus the
+    /// precondition checks), so there is exactly one source of truth — the
+    /// same resolution [`Scorer::pair_scorer`] performs.
     pub fn is_factored(&self) -> bool {
-        self.backend != Backend::Dense
+        Repr::resolve(self.store.as_ref()).factored().is_some()
+    }
+
+    /// The cached per-word norms (cosine mode only): snapshot saving embeds
+    /// these so a reload skips the norm pass.
+    pub fn norms(&self) -> Option<&[f32]> {
+        if self.cosine {
+            Some(&self.norms)
+        } else {
+            None
+        }
     }
 
     /// Materialize row `id` through the store (cache-aware when wrapped).
@@ -110,39 +123,18 @@ impl Scorer {
         self.store.lookup(id)
     }
 
-    fn w2k(&self) -> &Word2Ket {
-        unwrap_cached(self.store.as_ref())
-            .as_any()
-            .and_then(|a| a.downcast_ref::<Word2Ket>())
-            .expect("scorer backend resolved to word2ket")
-    }
-
-    fn xs(&self) -> &Word2KetXS {
-        unwrap_cached(self.store.as_ref())
-            .as_any()
-            .and_then(|a| a.downcast_ref::<Word2KetXS>())
-            .expect("scorer backend resolved to word2ketXS")
-    }
-
-    fn snap(&self) -> &SnapshotStore {
-        unwrap_cached(self.store.as_ref())
-            .as_any()
-            .and_then(|a| a.downcast_ref::<SnapshotStore>())
-            .expect("scorer backend resolved to snapshot store")
-    }
-
-    /// Resolve a per-scan scoring handle: the concrete store reference is
-    /// looked up once here instead of once per pair — the downcast chain
-    /// through the cache wrapper costs on the order of the factored kernel
-    /// itself at small rank, so scans must not pay it in the inner loop.
+    /// Resolve a per-scan scoring handle: the representation is resolved
+    /// once here instead of once per pair — wrapper peeling and the
+    /// factored-precondition checks cost on the order of the factored
+    /// kernel itself at small rank, so scans must not pay them in the
+    /// inner loop.
     pub fn pair_scorer(&self) -> PairScorer<'_> {
-        let backend = match self.backend {
-            Backend::Word2Ket => ResolvedBackend::Word2Ket(self.w2k()),
-            Backend::Word2KetXS => ResolvedBackend::Word2KetXS(self.xs()),
-            Backend::Snapshot => ResolvedBackend::Snapshot(self.snap()),
-            Backend::Dense => ResolvedBackend::Dense,
-        };
-        PairScorer { backend, store: self.store.as_ref(), cosine: self.cosine, norms: &self.norms }
+        PairScorer {
+            factored: Repr::resolve(self.store.as_ref()).factored(),
+            store: self.store.as_ref(),
+            cosine: self.cosine,
+            norms: &self.norms,
+        }
     }
 
     /// Raw inner product `⟨row a, row b⟩` — factored when available.
@@ -185,30 +177,20 @@ impl Scorer {
 
     pub fn describe(&self) -> String {
         let metric = if self.cosine { "cosine" } else { "dot" };
-        let path = match self.backend {
-            Backend::Word2Ket => "factored(word2ket)",
-            Backend::Word2KetXS => "factored(word2ketXS)",
-            Backend::Snapshot => "factored(snapshot)",
-            Backend::Dense => "materialized",
-        };
-        format!("{metric}/{path}")
+        match Repr::resolve(self.store.as_ref()).factored() {
+            Some(f) => format!("{metric}/factored({})", f.kind_name()),
+            None => format!("{metric}/materialized"),
+        }
     }
 }
 
-/// Concrete per-scan store access (see [`Scorer::pair_scorer`]).
-enum ResolvedBackend<'a> {
-    Word2Ket(&'a Word2Ket),
-    Word2KetXS(&'a Word2KetXS),
-    Snapshot(&'a SnapshotStore),
-    Dense,
-}
-
-/// Pair-scoring handle with the backend resolved once per scan.
+/// Pair-scoring handle with the representation resolved once per scan.
 ///
 /// Borrows the [`Scorer`]; create one per query/scan and call
-/// [`score`](Self::score) (or [`raw_inner`](Self::raw_inner)) in the loop.
+/// [`score`](Self::score) / [`score_block`](Self::score_block) (or
+/// [`raw_inner`](Self::raw_inner)) in the loop.
 pub struct PairScorer<'a> {
-    backend: ResolvedBackend<'a>,
+    factored: Option<&'a dyn FactoredRepr>,
     store: &'a dyn EmbeddingStore,
     cosine: bool,
     norms: &'a [f32],
@@ -218,11 +200,9 @@ impl PairScorer<'_> {
     /// Raw inner product `⟨row a, row b⟩` — factored when available.
     #[inline]
     pub fn raw_inner(&self, a: usize, b: usize) -> f32 {
-        match &self.backend {
-            ResolvedBackend::Word2Ket(w) => w.inner(a, b),
-            ResolvedBackend::Word2KetXS(xs) => xs.inner(a, b),
-            ResolvedBackend::Snapshot(s) => s.inner(a, b),
-            ResolvedBackend::Dense => {
+        match self.factored {
+            Some(f) => f.inner(a, b),
+            None => {
                 let va = self.store.lookup(a);
                 if a == b {
                     // Norm computations hit this: don't reconstruct twice.
@@ -238,6 +218,42 @@ impl PairScorer<'_> {
     #[inline]
     pub fn score(&self, a: usize, b: usize) -> f32 {
         let ip = self.raw_inner(a, b);
+        self.finish(a, b, ip)
+    }
+
+    /// Block scoring: `out[i] = score(a, bs[i])`, bitwise identical to the
+    /// pairwise calls. On factored backends this runs through
+    /// [`FactoredRepr::block_inner`], which hoists the query word's factor
+    /// resolution out of the candidate loop — index scans feed whole
+    /// cells/blocks through here.
+    pub fn score_block(&self, a: usize, bs: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(bs.len(), out.len());
+        match self.factored {
+            Some(f) => {
+                f.block_inner(a, bs, out);
+                if self.cosine {
+                    for (o, &b) in out.iter_mut().zip(bs) {
+                        *o = self.finish(a, b, *o);
+                    }
+                }
+            }
+            None => {
+                // Dense fallback: materialize the query row once per block,
+                // not once per candidate; per-pair arithmetic (including the
+                // a == b self-dot) is identical to `score`.
+                let va = self.store.lookup(a);
+                for (o, &b) in out.iter_mut().zip(bs) {
+                    let ip =
+                        if a == b { dot(&va, &va) } else { dot(&va, &self.store.lookup(b)) };
+                    *o = self.finish(a, b, ip);
+                }
+            }
+        }
+    }
+
+    /// Apply the metric to a raw inner product.
+    #[inline]
+    fn finish(&self, a: usize, b: usize, ip: f32) -> f32 {
         if self.cosine {
             let denom = self.norms[a] * self.norms[b];
             if denom > 0.0 {
@@ -254,7 +270,9 @@ impl PairScorer<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::embedding::{Word2Ket, Word2KetXS};
     use crate::serving::ShardedCache;
+    use crate::snapshot::SnapshotStore;
     use crate::util::Rng;
 
     fn w2k(vocab: usize, dim: usize, order: usize, rank: usize) -> Arc<dyn EmbeddingStore> {
@@ -324,15 +342,15 @@ mod tests {
         let inner = Box::new(Word2Ket::random(30, 16, 2, 2, &mut rng));
         let cached: Arc<dyn EmbeddingStore> = Arc::new(ShardedCache::new(inner, 2, 64));
         let scorer = Scorer::new(cached, false);
-        assert!(scorer.is_factored(), "cache wrapper must be transparent to the sniff");
+        assert!(scorer.is_factored(), "cache wrapper must be transparent to the repr");
         assert!(scorer.score_pair(1, 2).is_finite());
     }
 
     #[test]
-    fn snapshot_store_sniffed_factored_through_cache() {
-        // Satellite: a SnapshotStore-backed model (the post-reload state)
-        // must keep factored-space scoring, including under the cache
-        // wrapper, with scores bit-identical to the original store's.
+    fn snapshot_store_resolves_factored_through_cache() {
+        // A SnapshotStore-backed model (the post-reload state) must keep
+        // factored-space scoring, including under the cache wrapper, with
+        // scores bit-identical to the original store's.
         let mut rng = Rng::new(9);
         let xs = Word2KetXS::random(60, 16, 2, 2, &mut rng);
         let path = std::env::temp_dir()
@@ -367,6 +385,51 @@ mod tests {
             let by_vec = scorer.score_vec(&q, qn, b);
             let by_pair = scorer.score_pair(4, b);
             assert!((by_vec - by_pair).abs() < 1e-4, "b={b}: {by_vec} vs {by_pair}");
+        }
+    }
+
+    #[test]
+    fn score_block_matches_pairwise() {
+        for cosine in [false, true] {
+            // Factored arm (4² == 16, exact) and dense arm (18² = 324 >
+            // 300, truncated): both must be bitwise equal to per-pair
+            // scoring, including the repeated and a == b entries.
+            for store in [w2k(40, 16, 2, 2), w2k(40, 300, 2, 1)] {
+                let scorer = Scorer::new(store, cosine);
+                let pairs = scorer.pair_scorer();
+                let bs: Vec<usize> = vec![1, 5, 5, 7, 39, 0];
+                let mut block = vec![0.0f32; bs.len()];
+                pairs.score_block(7, &bs, &mut block);
+                for (i, &b) in bs.iter().enumerate() {
+                    assert_eq!(
+                        pairs.score(7, b).to_bits(),
+                        block[i].to_bits(),
+                        "cosine={cosine} factored={} b={b}",
+                        scorer.is_factored()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compute_norms_dense_matches_factored() {
+        // Same store scored through the factored path and through a dense
+        // wrapper (LayerNorm off but truncated ⇒ dense): factored norms
+        // must equal dense norms on an exact-dim twin of itself.
+        let mut rng = Rng::new(11);
+        let xs = Word2KetXS::random(30, 16, 2, 2, &mut rng);
+        let factored = compute_norms(&xs);
+        // Dense route: compute from materialized rows directly.
+        let dense: Vec<f32> = (0..30)
+            .map(|id| {
+                let v = xs.lookup(id);
+                dot(&v, &v).max(0.0).sqrt()
+            })
+            .collect();
+        assert_eq!(factored.len(), dense.len());
+        for (id, (f, d)) in factored.iter().zip(&dense).enumerate() {
+            assert!((f - d).abs() < 1e-3 * d.max(1.0), "id {id}: {f} vs {d}");
         }
     }
 }

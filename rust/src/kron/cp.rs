@@ -5,7 +5,7 @@
 use super::kron_vec;
 #[cfg(test)]
 use super::kron_tree;
-use crate::tensor::{dot, layernorm_slices};
+use crate::tensor::layernorm_slices;
 use crate::util::Rng;
 
 /// Balanced-tree Kronecker product of one rank term's leaves (Fig. 1),
@@ -155,20 +155,11 @@ impl CpTensor {
             !self.layernorm_nodes && !other.layernorm_nodes,
             "factored inner product requires raw CP form"
         );
-        let mut total = 0.0f32;
-        for k in 0..self.rank {
-            for k2 in 0..other.rank {
-                let mut prod = 1.0f32;
-                for j in 0..self.order {
-                    prod *= dot(self.leaf(k, j), other.leaf(k2, j));
-                    if prod == 0.0 {
-                        break;
-                    }
-                }
-                total += prod;
-            }
-        }
-        total
+        crate::repr::kernels::rank_pair_sum(self.rank, other.rank, |k, k2| {
+            crate::repr::kernels::product_of_dots(
+                (0..self.order).map(|j| (self.leaf(k, j), other.leaf(k2, j))),
+            )
+        })
     }
 
     /// Squared L2 norm via the factored inner product.

@@ -93,9 +93,7 @@ pub fn kron_accumulate(parts: &[&[f32]], acc: &mut [f32], s: &mut KronScratch) {
         0 => {}
         1 => {
             debug_assert!(acc.len() <= parts[0].len());
-            for (o, &x) in acc.iter_mut().zip(parts[0]) {
-                *o += x;
-            }
+            crate::repr::kernels::add_assign(acc, parts[0]);
         }
         _ => {
             let last = parts[parts.len() - 1];
@@ -113,20 +111,8 @@ pub fn kron_accumulate(parts: &[&[f32]], acc: &mut [f32], s: &mut KronScratch) {
                 }
                 std::mem::swap(&mut s.a, &mut s.b);
             }
-            let q = last.len();
-            debug_assert!(acc.len() <= s.a.len() * q);
-            let mut i = 0;
-            while i * q < acc.len() {
-                let x = s.a[i];
-                if x != 0.0 {
-                    let end = ((i + 1) * q).min(acc.len());
-                    let out = &mut acc[i * q..end];
-                    for (oj, &y) in out.iter_mut().zip(last) {
-                        *oj += x * y;
-                    }
-                }
-                i += 1;
-            }
+            debug_assert!(acc.len() <= s.a.len() * last.len());
+            crate::repr::kernels::kron2_accumulate(&s.a, last, acc);
         }
     }
 }

@@ -43,6 +43,7 @@ pub mod error;
 pub mod index;
 pub mod kron;
 pub mod metrics;
+pub mod repr;
 pub mod runtime;
 pub mod serving;
 pub mod snapshot;

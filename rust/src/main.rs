@@ -109,7 +109,7 @@ fn cmd_snapshot(parsed: &cli::Parsed) -> word2ket::Result<()> {
                 cfg.model.emb_dim,
                 &mut rng,
             ));
-            let opts = snapshot::SaveOptions { codec };
+            let opts = snapshot::SaveOptions { codec, norms: parsed.flag("with-norms") };
             let info = if parsed.flag("with-index")
                 && cfg.index.kind == config::IndexKind::Ivf
             {
@@ -128,6 +128,12 @@ fn cmd_snapshot(parsed: &cli::Parsed) -> word2ket::Result<()> {
                 }
                 snapshot::save_store(store.as_ref(), path, &opts)?
             };
+            if parsed.flag("with-norms") && !info.norms_embedded {
+                eprintln!(
+                    "note: norms not embedded (lossy payload codecs serve dequantized \
+                     rows, so loaders recompute norms)"
+                );
+            }
             let materialized = (cfg.model.vocab * cfg.model.emb_dim * 4) as f64;
             println!(
                 "saved {} ({} sections, {} bytes on disk, {:.1}x smaller than the \

@@ -1,0 +1,263 @@
+//! Shared lookup/scoring kernels for factored representations.
+//!
+//! One home for the slice-level routines that were previously duplicated
+//! across `kron/` (the fused final level of `kron_accumulate`),
+//! `embedding/word2ketxs.rs` (the fused order-2 outer product), and
+//! `snapshot/store.rs` (the mapped mirror of both): the chunked/unrolled
+//! dot product, the axpy accumulate, the truncating Kronecker
+//! row-accumulate, and the `Π_j ⟨·,·⟩` factor-product behind every
+//! factored inner product (paper §2.3). Every caller routes through these
+//! so a future SIMD/kernel swap happens in exactly one place — and so the
+//! concrete stores and the snapshot-mapped store stay *bit-identical* by
+//! construction instead of by parallel maintenance.
+//!
+//! Also hosts the per-thread reconstruction scratch
+//! ([`with_lookup_scratch`]) that makes the trait-level
+//! [`crate::embedding::EmbeddingStore::lookup_into`] allocation-free in
+//! steady state without widening its signature.
+
+use crate::kron::KronScratch;
+use std::cell::RefCell;
+
+/// Unrolled dot product of two equal-length slices.
+///
+/// 4-way unrolled accumulation: measurably faster than a naive fold and
+/// deterministic (fixed association order). This is the primitive under
+/// every factored inner product and every dense re-rank;
+/// [`crate::tensor::dot`] delegates here.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        acc[0] += a[k] * b[k];
+        acc[1] += a[k + 1] * b[k + 1];
+        acc[2] += a[k + 2] * b[k + 2];
+        acc[3] += a[k + 3] * b[k + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for k in chunks * 4..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// `y += alpha · x` over the zip of the two slices (stops at the shorter).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// `acc += src` elementwise over the zip (stops at the shorter slice —
+/// word2ket reconstructions accumulate a `q^n`-long term into a `p`-long
+/// truncated row through exactly this).
+#[inline]
+pub fn add_assign(acc: &mut [f32], src: &[f32]) {
+    for (o, &v) in acc.iter_mut().zip(src) {
+        *o += v;
+    }
+}
+
+/// Truncating Kronecker accumulate of two vectors:
+/// `acc[i·q .. (i+1)·q] += a[i] · b` for every block that fits in `acc`
+/// (`q = |b|`; the last block may be partial — word2ketXS truncates
+/// `q^n ≥ p` reconstructions to `p`).
+///
+/// Zero entries of `a` skip their block entirely — same arithmetic as the
+/// dense loop (the skipped block would add `0 · b[j]` everywhere), fewer
+/// memory touches on sparse-ish factors.
+#[inline]
+pub fn kron2_accumulate(a: &[f32], b: &[f32], acc: &mut [f32]) {
+    let q = b.len();
+    if q == 0 {
+        return;
+    }
+    let mut i = 0;
+    while i * q < acc.len() {
+        let x = a[i];
+        if x != 0.0 {
+            let end = ((i + 1) * q).min(acc.len());
+            axpy(x, b, &mut acc[i * q..end]);
+        }
+        i += 1;
+    }
+}
+
+/// `Π_j ⟨x_j, y_j⟩` over a stream of slice pairs, with the early-out on a
+/// zero partial product every factored inner product in this codebase has
+/// always used. One `(k, k')` rank-pair term of §2.3's
+/// `⟨v, w⟩ = Σ_{k,k'} Π_j ⟨v_jk, w_jk'⟩`.
+#[inline]
+pub fn product_of_dots<'a>(pairs: impl Iterator<Item = (&'a [f32], &'a [f32])>) -> f32 {
+    let mut prod = 1.0f32;
+    for (x, y) in pairs {
+        prod *= dot(x, y);
+        if prod == 0.0 {
+            break;
+        }
+    }
+    prod
+}
+
+/// `Σ_{k,k'} term(k, k')` — the rank-pair accumulation shell of §2.3's
+/// factored inner product (`term` is one `Π_j ⟨·,·⟩`, usually
+/// [`product_of_dots`]). Shared by the in-memory stores and the
+/// snapshot-mapped mirrors so the accumulation order — and therefore the
+/// pre/post-hot-swap bit-identity of scores — is fixed in exactly one
+/// place.
+#[inline]
+pub fn rank_pair_sum(
+    rank_a: usize,
+    rank_b: usize,
+    mut term: impl FnMut(usize, usize) -> f32,
+) -> f32 {
+    let mut total = 0.0f32;
+    for k in 0..rank_a {
+        for k2 in 0..rank_b {
+            total += term(k, k2);
+        }
+    }
+    total
+}
+
+/// Factored inner product over already-decoded mixed-radix digits:
+/// `Σ_{k,k'} Π_j ⟨col(k, j, da_j), col(k', j, db_j)⟩`. One home for the
+/// digit-indexed shared-factor kernel so the in-memory word2ketXS store and
+/// its snapshot-mapped mirror cannot drift (`col` is the only per-store
+/// piece: a factor-column accessor).
+#[inline]
+pub fn factored_digit_inner<'a>(
+    rank: usize,
+    order: usize,
+    da: &[usize; 8],
+    db: &[usize; 8],
+    col: impl Fn(usize, usize, usize) -> &'a [f32],
+) -> f32 {
+    rank_pair_sum(rank, rank, |k, k2| {
+        product_of_dots((0..order).map(|j| (col(k, j, da[j]), col(k2, j, db[j]))))
+    })
+}
+
+/// Block form of [`factored_digit_inner`]: the query word's digits are
+/// decoded once for the whole candidate block, each `out[i]` is bitwise
+/// what the pairwise call would produce.
+#[inline]
+pub fn factored_digit_block<'a>(
+    rank: usize,
+    order: usize,
+    decode: impl Fn(usize, &mut [usize; 8]),
+    col: impl Fn(usize, usize, usize) -> &'a [f32],
+    a: usize,
+    bs: &[usize],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(bs.len(), out.len());
+    let mut da = [0usize; 8];
+    let mut db = [0usize; 8];
+    decode(a, &mut da);
+    for (o, &b) in out.iter_mut().zip(bs) {
+        decode(b, &mut db);
+        *o = factored_digit_inner(rank, order, &da, &db, &col);
+    }
+}
+
+/// Reusable per-thread buffers for allocation-free row reconstruction:
+/// mixed-radix digits plus the Kronecker ping-pong scratch.
+#[derive(Debug, Default)]
+pub struct LookupScratch {
+    /// Mixed-radix digit buffer (stores cap order at 16 or below).
+    pub digits: [usize; 16],
+    /// Ping-pong buffers for `kron_accumulate` (order ≥ 3 chains).
+    pub kron: KronScratch,
+}
+
+thread_local! {
+    static LOOKUP_SCRATCH: RefCell<LookupScratch> = RefCell::new(LookupScratch::default());
+}
+
+/// Run `f` with this thread's [`LookupScratch`]. After the first call on a
+/// thread the scratch buffers are warm, so `lookup_into` reconstruction
+/// allocates nothing in steady state. Do not call `with_lookup_scratch`
+/// re-entrantly from inside `f` (single `RefCell` per thread).
+pub fn with_lookup_scratch<R>(f: impl FnOnce(&mut LookupScratch) -> R) -> R {
+    LOOKUP_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        // Lengths around the unroll boundary, including 0 and 1.
+        for n in [0usize, 1, 3, 4, 5, 8, 17] {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5 - 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| 2.0 - (i as f32) * 0.25).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-5, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates_prefix() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut y = [10.0f32, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn add_assign_truncates_to_acc() {
+        let mut acc = [1.0f32, 1.0];
+        add_assign(&mut acc, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(acc, [2.0, 3.0]);
+    }
+
+    #[test]
+    fn kron2_matches_dense_outer_product() {
+        let a = [2.0f32, 0.0, -1.0];
+        let b = [1.0f32, 3.0];
+        // Full (untruncated) accumulate equals the dense Kronecker product.
+        let mut acc = [0.0f32; 6];
+        kron2_accumulate(&a, &b, &mut acc);
+        assert_eq!(acc, [2.0, 6.0, 0.0, 0.0, -1.0, -3.0]);
+        // Truncated accumulate covers only the prefix blocks.
+        let mut short = [0.0f32; 5];
+        kron2_accumulate(&a, &b, &mut short);
+        assert_eq!(short, [2.0, 6.0, 0.0, 0.0, -1.0]);
+        // Empty b: nothing to do (and no infinite loop).
+        kron2_accumulate(&a, &[], &mut acc);
+    }
+
+    #[test]
+    fn product_of_dots_zero_short_circuits() {
+        let a = [1.0f32, 0.0];
+        let z = [0.0f32, 0.0];
+        let poison = [f32::NAN, f32::NAN];
+        // The zero factor stops evaluation before the NaN pair is touched.
+        let pairs = [(&a[..], &z[..]), (&poison[..], &poison[..])];
+        let p = product_of_dots(pairs.iter().copied());
+        assert_eq!(p, 0.0);
+        // Non-degenerate product multiplies through.
+        let b = [2.0f32, 1.0];
+        let p = product_of_dots([(&a[..], &b[..]), (&b[..], &b[..])].iter().copied());
+        assert_eq!(p, 2.0 * 5.0);
+    }
+
+    #[test]
+    fn lookup_scratch_reuses_per_thread() {
+        let first = with_lookup_scratch(|s| {
+            s.digits[0] = 41;
+            s.digits.as_ptr() as usize
+        });
+        let again = with_lookup_scratch(|s| {
+            assert_eq!(s.digits[0], 41, "scratch must persist across calls");
+            s.digits.as_ptr() as usize
+        });
+        assert_eq!(first, again, "same thread must reuse the same buffers");
+    }
+}

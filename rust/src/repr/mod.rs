@@ -1,0 +1,487 @@
+//! First-class factored-representation layer.
+//!
+//! The paper's entire advantage is that a word's vector *is* its factors —
+//! `v = Σ_k ⊗_j v_jk` (§2.3) — yet every layer that wants to exploit that
+//! (the index scorer, the serving cache, snapshot serialization) used to
+//! rediscover it by `as_any()` downcasting through an ad-hoc chain of
+//! concrete types. This module promotes the representation to a real API:
+//!
+//! * [`Repr`] — a typed identity every [`EmbeddingStore`] advertises via
+//!   [`EmbeddingStore::repr`], replacing the old `as_any` escape hatch.
+//!   Wrappers (the sharded hot-row cache) expose themselves as
+//!   [`Repr::Cached`]; [`Repr::resolve`] peels them to the parameter-owning
+//!   store underneath.
+//! * [`FactoredRepr`] — the factored-space contract shared by
+//!   [`Word2Ket`], [`Word2KetXS`], and the snapshot-mapped
+//!   [`crate::snapshot::SnapshotStore`]: raw factor access
+//!   ([`FactoredRepr::factors`]), pair and block inner products without
+//!   reconstruction, and in-place row materialization
+//!   ([`FactoredRepr::write_row`]). [`Repr::factored`] hands out the trait
+//!   handle only when the factored identities actually hold (raw CP form,
+//!   no LayerNorm, untruncated `q^n == p`).
+//! * [`kernels`] — the shared slice-level routines (unrolled dot, axpy,
+//!   truncating kron-accumulate, factor-product) every implementation
+//!   routes through, so concrete stores and mapped snapshots stay
+//!   bit-identical by construction.
+
+pub mod kernels;
+
+use crate::embedding::{
+    EmbeddingStore, HashedEmbedding, LowRankEmbedding, QuantizedEmbedding, RegularEmbedding,
+    Word2Ket, Word2KetXS,
+};
+use crate::serving::ShardedCache;
+use crate::snapshot::SnapshotStore;
+
+/// Upper bound on the tensor order any store exposes through
+/// [`FactoredRepr`] (word2ket caps at 16, word2ketXS at 8); fixed so the
+/// generic kernels can use stack arrays of factor slices.
+pub const MAX_ORDER: usize = 16;
+
+/// Shape of a factored representation: `rank` terms, each an order-`order`
+/// tensor product of `leaf_dim`-long factors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FactorGeometry {
+    /// Tensor order `n` (number of factors per rank term).
+    pub order: usize,
+    /// CP rank `r` (number of summed tensor-product terms).
+    pub rank: usize,
+    /// Per-factor length `q` (the embedding-side leaf dimension).
+    pub leaf_dim: usize,
+}
+
+/// Factored-space access to an embedding store (see module docs).
+///
+/// Implementations guarantee that [`inner`](Self::inner) and
+/// [`block_inner`](Self::block_inner) reproduce the dense dot product of
+/// [`write_row`](Self::write_row) outputs bit-for-bit-deterministically
+/// (same operation order as the historical per-store kernels), *provided*
+/// the handle was obtained through [`Repr::factored`] — that gate checks
+/// the raw-CP / untruncated preconditions under which the §2.3 identity
+/// holds.
+pub trait FactoredRepr {
+    /// The factored shape.
+    fn geometry(&self) -> FactorGeometry;
+
+    /// Borrow the `order` factor slices of word `id`'s `k`-th rank term
+    /// into `out` (callers pass `&mut slices[..order]`). Slice `j` is the
+    /// paper's `v_jk` for this word: a per-word CP leaf for word2ket, the
+    /// `i_j`-th factor column for word2ketXS.
+    fn factors<'s>(&'s self, id: usize, k: usize, out: &mut [&'s [f32]]);
+
+    /// Short name of the concrete representation (for `describe` strings).
+    fn kind_name(&self) -> &'static str;
+
+    /// Factored inner product `⟨row a, row b⟩` — `O(r² n q)` time, `O(1)`
+    /// space, never materializing either row.
+    fn inner(&self, a: usize, b: usize) -> f32 {
+        let g = self.geometry();
+        debug_assert!(g.order <= MAX_ORDER, "order {} exceeds MAX_ORDER", g.order);
+        let mut fa: [&[f32]; MAX_ORDER] = [&[]; MAX_ORDER];
+        let mut fb: [&[f32]; MAX_ORDER] = [&[]; MAX_ORDER];
+        let mut total = 0.0f32;
+        for k in 0..g.rank {
+            self.factors(a, k, &mut fa[..g.order]);
+            for k2 in 0..g.rank {
+                self.factors(b, k2, &mut fb[..g.order]);
+                total += kernels::product_of_dots(
+                    fa[..g.order].iter().copied().zip(fb[..g.order].iter().copied()),
+                );
+            }
+        }
+        total
+    }
+
+    /// Block inner products: `out[i] = ⟨row a, row bs[i]⟩`. Scans resolve
+    /// the representation once and then score whole candidate blocks
+    /// through this, so per-pair dispatch never sits in the inner loop;
+    /// implementations additionally hoist the query word's factor lookups
+    /// out of the candidate loop. Results are bitwise equal to calling
+    /// [`inner`](Self::inner) per pair.
+    fn block_inner(&self, a: usize, bs: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(bs.len(), out.len());
+        for (o, &b) in out.iter_mut().zip(bs) {
+            *o = self.inner(a, b);
+        }
+    }
+
+    /// Materialize row `id` into `out` (length = store dim), allocation-free
+    /// where the representation allows. Same bytes as
+    /// [`EmbeddingStore::lookup`].
+    fn write_row(&self, id: usize, out: &mut [f32]);
+}
+
+/// Typed identity of an embedding store, replacing the old `as_any`
+/// downcast chains. Each concrete store returns its own variant from
+/// [`EmbeddingStore::repr`]; consumers `match` instead of downcasting.
+#[derive(Clone, Copy)]
+pub enum Repr<'a> {
+    /// Dense baseline table.
+    Regular(&'a RegularEmbedding),
+    /// Per-word CP tensors (paper §2.3).
+    Word2Ket(&'a Word2Ket),
+    /// Shared-factor operator (paper §3.2).
+    Word2KetXS(&'a Word2KetXS),
+    /// Uniform-quantization baseline.
+    Quantized(&'a QuantizedEmbedding),
+    /// Low-rank factorization baseline.
+    LowRank(&'a LowRankEmbedding),
+    /// Hashing-trick baseline.
+    Hashed(&'a HashedEmbedding),
+    /// Snapshot-mapped store (any kind, served off the file).
+    Snapshot(&'a SnapshotStore),
+    /// The sharded hot-row cache wrapper; [`Repr::resolve`] peels it.
+    Cached(&'a ShardedCache),
+    /// A store that declares no identity (external trait impls); callers
+    /// fall back to the dense [`EmbeddingStore`] surface.
+    Opaque,
+}
+
+/// Peel wrapper stores (the hot-row cache) down to the parameter-owning
+/// store. Shared by the index scorer's backend resolution and snapshot
+/// serialization, so a new wrapper type only needs teaching here.
+pub fn unwrap_wrappers(store: &dyn EmbeddingStore) -> &dyn EmbeddingStore {
+    let mut cur = store;
+    loop {
+        match cur.repr() {
+            Repr::Cached(cache) => cur = cache.inner(),
+            _ => return cur,
+        }
+    }
+}
+
+impl<'a> Repr<'a> {
+    /// The store's representation with wrappers peeled: what the old
+    /// `unwrap_cached(store).as_any()` sniff chains reconstructed by hand.
+    pub fn resolve(store: &'a dyn EmbeddingStore) -> Repr<'a> {
+        unwrap_wrappers(store).repr()
+    }
+
+    /// The factored-space handle, if this representation supports the §2.3
+    /// inner-product identity exactly: raw CP form (no LayerNorm) over the
+    /// full `q^n` tensor (`q^n == p`, no truncation). Truncated or
+    /// LayerNorm-ed stores return `None` and score densely.
+    pub fn factored(self) -> Option<&'a dyn FactoredRepr> {
+        match self {
+            Repr::Word2Ket(w) if !w.layernorm() && w.exact_dim() => Some(w),
+            Repr::Word2KetXS(xs) if xs.exact_dim() => Some(xs),
+            Repr::Snapshot(s) if s.factored() => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EmbeddingConfig, EmbeddingKind};
+    use crate::embedding::build;
+    use crate::kron::kron_tree;
+    use crate::snapshot::{save_store, SaveOptions, Snapshot, SnapshotStore};
+    use crate::tensor::dot;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("w2k_repr_test_{}_{}.snap", std::process::id(), name))
+    }
+
+    fn all_kinds() -> [EmbeddingKind; 6] {
+        [
+            EmbeddingKind::Regular,
+            EmbeddingKind::Word2Ket,
+            EmbeddingKind::Word2KetXS,
+            EmbeddingKind::Quantized,
+            EmbeddingKind::LowRank,
+            EmbeddingKind::Hashed,
+        ]
+    }
+
+    /// Satellite acceptance: `lookup_into` is bit-exact with `lookup` for
+    /// every kind, across randomized shapes including rank-1 and truncated
+    /// (`q^n > p`) configurations, plain, cache-wrapped, and
+    /// snapshot-backed.
+    #[test]
+    fn lookup_into_parity_all_kinds_and_wrappers() {
+        // (vocab, dim, order, rank): dim 16 = 4² is exact for order 2;
+        // dim 20 truncates (q=5, 25 > 20); dim 27 = 3³ exact for order 3;
+        // rank 1 exercises the single-term path.
+        let shapes = [(40usize, 16usize, 2usize, 2usize), (30, 20, 2, 1), (25, 27, 3, 3)];
+        for (case, &(vocab, dim, order, rank)) in shapes.iter().enumerate() {
+            for kind in all_kinds() {
+                let cfg = EmbeddingConfig { kind, order, rank, ..Default::default() };
+                let mut rng = Rng::new(100 + case as u64);
+                let store = build(&cfg, vocab, dim, &mut rng);
+                let check = |s: &dyn EmbeddingStore, label: &str| {
+                    let mut out = vec![f32::NAN; dim];
+                    for id in [0, vocab / 2, vocab - 1] {
+                        s.lookup_into(id, &mut out);
+                        let want = s.lookup(id);
+                        assert_eq!(
+                            want, out,
+                            "{label} {kind:?} case {case} id {id}: lookup_into differs"
+                        );
+                    }
+                };
+                check(store.as_ref(), "plain");
+
+                // Cache-wrapped: same rows through fetch_into.
+                let mut rng = Rng::new(100 + case as u64);
+                let twin = build(&cfg, vocab, dim, &mut rng);
+                let cached = ShardedCache::new(twin, 2, 16);
+                check(&cached, "cached");
+                check(&cached, "cached-warm"); // second pass exercises hits
+
+                // Snapshot-backed: zero-copy mapped store.
+                let path = tmp(&format!("parity_{}_{case}", kind.name()));
+                save_store(store.as_ref(), &path, &SaveOptions::default()).unwrap();
+                let mm =
+                    SnapshotStore::open(Arc::new(Snapshot::open(&path, true).unwrap())).unwrap();
+                let mut out = vec![f32::NAN; dim];
+                for id in [0, vocab - 1] {
+                    mm.lookup_into(id, &mut out);
+                    assert_eq!(store.lookup(id), out, "snapshot {kind:?} case {case} id {id}");
+                }
+                std::fs::remove_file(&path).ok();
+            }
+        }
+    }
+
+    /// Independent per-kind oracles: `lookup` now delegates to
+    /// `lookup_into` for most kinds, so plain parity alone cannot catch a
+    /// bug shared by both. Reconstruct rows through *different* code paths
+    /// (the CP tree, public factor/code accessors, manual hash math) and
+    /// compare.
+    #[test]
+    fn lookup_into_matches_independent_oracles() {
+        let mut rng = Rng::new(31);
+
+        // word2ket: full-tensor CP tree reconstruct, then truncate (the
+        // pre-refactor lookup path, still live on CpTensor).
+        let w2k = Word2Ket::random(12, 20, 2, 2, &mut rng);
+        for id in [0usize, 11] {
+            let mut out = vec![f32::NAN; 20];
+            w2k.lookup_into(id, &mut out);
+            let mut full = w2k.word(id).reconstruct();
+            full.truncate(20);
+            assert_eq!(full, out, "w2k id {id}");
+        }
+
+        // lowrank: manual u·vᵀ dots from the public factors.
+        let lr = LowRankEmbedding::random(10, 6, 3, &mut rng);
+        let mut out = vec![f32::NAN; 6];
+        lr.lookup_into(4, &mut out);
+        for (j, &got) in out.iter().enumerate() {
+            let manual: f32 = (0..3).map(|c| lr.u()[4 * 3 + c] * lr.vt()[j * 3 + c]).sum();
+            assert!((got - manual).abs() < 1e-6, "lowrank j {j}: {got} vs {manual}");
+        }
+
+        // hashed: manual splitmix64 bucket + sign from the public seed.
+        let h = HashedEmbedding::random(9, 5, 7, &mut rng);
+        let mut out = vec![f32::NAN; 5];
+        h.lookup_into(3, &mut out);
+        for (j, &got) in out.iter().enumerate() {
+            let mut s = h.seed().wrapping_add(3u64 << 32).wrapping_add(j as u64);
+            let x = crate::util::rng::splitmix64(&mut s);
+            let sign = if (x >> 63) == 0 { 1.0 } else { -1.0 };
+            assert_eq!(got, sign * h.weights()[(x % 7) as usize], "hashed j {j}");
+        }
+
+        // quantized: manual bit-unpack + dequantize from the public codes.
+        let q = QuantizedEmbedding::random(8, 6, 5, &mut rng);
+        let mut out = vec![f32::NAN; 6];
+        q.lookup_into(2, &mut out);
+        for (c, &got) in out.iter().enumerate() {
+            let code = crate::embedding::quantized::get_bits(q.codes(), (2 * 6 + c) * 5, 5);
+            assert_eq!(got, q.offsets()[2] + code as f32 * q.scales()[2], "quant c {c}");
+        }
+        // (word2ketXS is covered by `factors_reconstruct_rows` below:
+        // kron_tree over the public factor columns.)
+    }
+
+    /// `write_row` on every factored repr agrees with `lookup` bit-exactly.
+    #[test]
+    fn write_row_parity_factored_reprs() {
+        let mut rng = Rng::new(7);
+        let w2k = Word2Ket::random(20, 16, 2, 2, &mut rng);
+        let xs = Word2KetXS::random(20, 16, 2, 3, &mut rng);
+        let path = tmp("write_row");
+        save_store(&xs, &path, &SaveOptions::default()).unwrap();
+        let mm = SnapshotStore::open(Arc::new(Snapshot::open(&path, true).unwrap())).unwrap();
+
+        let stores: [(&dyn EmbeddingStore, &str); 3] =
+            [(&w2k, "word2ket"), (&xs, "word2ketXS"), (&mm, "snapshot")];
+        for (store, label) in stores {
+            let f = Repr::resolve(store).factored().unwrap_or_else(|| panic!("{label} factored"));
+            assert_eq!(f.kind_name(), label);
+            let mut out = vec![f32::NAN; store.dim()];
+            for id in [0usize, 7, 19] {
+                f.write_row(id, &mut out);
+                assert_eq!(store.lookup(id), out, "{label} id {id}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// `factors()` really exposes the §2.3 term factors: summing the
+    /// Kronecker product of each rank term's slices reconstructs the row.
+    #[test]
+    fn factors_reconstruct_rows() {
+        let mut rng = Rng::new(8);
+        let xs = Word2KetXS::random(30, 16, 2, 2, &mut rng);
+        let w2k = Word2Ket::random(12, 27, 3, 2, &mut rng);
+        let stores: [&dyn EmbeddingStore; 2] = [&xs, &w2k];
+        for store in stores {
+            let f = Repr::resolve(store).factored().expect("factored");
+            let g = f.geometry();
+            let mut slices: [&[f32]; MAX_ORDER] = [&[]; MAX_ORDER];
+            for id in [0usize, store.vocab_size() - 1] {
+                let mut acc = vec![0.0f32; store.dim()];
+                for k in 0..g.rank {
+                    f.factors(id, k, &mut slices[..g.order]);
+                    for s in &slices[..g.order] {
+                        assert_eq!(s.len(), g.leaf_dim);
+                    }
+                    let term = kron_tree(&slices[..g.order]);
+                    for (a, t) in acc.iter_mut().zip(&term) {
+                        *a += t;
+                    }
+                }
+                let want = store.lookup(id);
+                for (a, w) in acc.iter().zip(&want) {
+                    assert!(
+                        (a - w).abs() < 1e-4 * w.abs().max(1.0),
+                        "{} id {id}: {a} vs {w}",
+                        f.kind_name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// `block_inner` is bitwise `inner` per pair, and `inner` matches the
+    /// dense dot of materialized rows on exact-dim stores.
+    #[test]
+    fn block_inner_matches_pairwise_and_dense() {
+        let mut rng = Rng::new(9);
+        let xs = Word2KetXS::random(50, 16, 2, 2, &mut rng);
+        let w2k = Word2Ket::random(50, 16, 2, 3, &mut rng);
+        let stores: [&dyn EmbeddingStore; 2] = [&xs, &w2k];
+        for store in stores {
+            let f = Repr::resolve(store).factored().expect("factored");
+            let bs: Vec<usize> = vec![0, 7, 7, 49, 13];
+            let mut block = vec![0.0f32; bs.len()];
+            f.block_inner(3, &bs, &mut block);
+            for (i, &b) in bs.iter().enumerate() {
+                assert_eq!(
+                    f.inner(3, b).to_bits(),
+                    block[i].to_bits(),
+                    "{} pair (3,{b})",
+                    f.kind_name()
+                );
+                let dense = dot(&store.lookup(3), &store.lookup(b));
+                assert!(
+                    (dense - block[i]).abs() < 1e-4 * dense.abs().max(1.0),
+                    "{} pair (3,{b}): dense {dense} vs factored {}",
+                    f.kind_name(),
+                    block[i]
+                );
+            }
+        }
+    }
+
+    /// The trait-default `inner`/`block_inner` (built purely on
+    /// `factors()`) carry the same bit-identity contract as the tuned
+    /// per-store overrides: check them through a minimal adapter that
+    /// provides only the required methods.
+    #[test]
+    fn default_inner_matches_overrides() {
+        struct Bare<'a>(&'a Word2KetXS);
+        impl FactoredRepr for Bare<'_> {
+            fn geometry(&self) -> FactorGeometry {
+                self.0.geometry()
+            }
+            fn factors<'s>(&'s self, id: usize, k: usize, out: &mut [&'s [f32]]) {
+                // UFCS: the inherent zero-arg `Word2KetXS::factors` would
+                // shadow the trait method under plain method syntax.
+                FactoredRepr::factors(self.0, id, k, out)
+            }
+            fn kind_name(&self) -> &'static str {
+                "bare"
+            }
+            fn write_row(&self, id: usize, out: &mut [f32]) {
+                self.0.write_row(id, out)
+            }
+            // inner / block_inner: the trait defaults under test.
+        }
+        let mut rng = Rng::new(12);
+        let xs = Word2KetXS::random(30, 16, 2, 3, &mut rng);
+        let bare = Bare(&xs);
+        for (a, b) in [(0usize, 1usize), (7, 7), (29, 3)] {
+            assert_eq!(
+                FactoredRepr::inner(&xs, a, b).to_bits(),
+                bare.inner(a, b).to_bits(),
+                "({a},{b})"
+            );
+        }
+        let bs = [0usize, 7, 7, 29];
+        let mut got = [0.0f32; 4];
+        bare.block_inner(5, &bs, &mut got);
+        for (i, &b) in bs.iter().enumerate() {
+            assert_eq!(bare.inner(5, b).to_bits(), got[i].to_bits(), "block b={b}");
+        }
+    }
+
+    /// The `Repr::factored` gate: truncated or LayerNorm-ed stores must not
+    /// hand out a factored handle; wrappers resolve transparently.
+    #[test]
+    fn factored_gate_and_wrapper_resolution() {
+        let mut rng = Rng::new(10);
+        // 18² = 324 > 300: truncated.
+        let trunc = Word2KetXS::random(40, 300, 2, 1, &mut rng);
+        assert!(Repr::resolve(&trunc).factored().is_none());
+        let mut ln = Word2Ket::random(10, 16, 2, 1, &mut rng);
+        ln.set_layernorm(true);
+        assert!(Repr::resolve(&ln).factored().is_none());
+        let dense = RegularEmbedding::random(10, 8, &mut rng);
+        assert!(Repr::resolve(&dense).factored().is_none());
+
+        // Double-wrapped cache still resolves to the inner store.
+        let inner = Box::new(Word2KetXS::random(30, 16, 2, 2, &mut rng));
+        let cached = ShardedCache::new(Box::new(ShardedCache::new(inner, 2, 8)), 2, 8);
+        assert!(matches!(Repr::resolve(&cached), Repr::Word2KetXS(_)));
+        assert!(Repr::resolve(&cached).factored().is_some());
+        assert!(matches!(cached.repr(), Repr::Cached(_)));
+    }
+
+    /// Satellite acceptance: `space_saving_rate` must not divide by zero
+    /// when a store reports no parameters.
+    #[test]
+    fn space_saving_rate_guards_zero_params() {
+        struct Empty;
+        impl EmbeddingStore for Empty {
+            fn vocab_size(&self) -> usize {
+                10
+            }
+            fn dim(&self) -> usize {
+                4
+            }
+            fn num_params(&self) -> usize {
+                0
+            }
+            fn lookup(&self, _id: usize) -> Vec<f32> {
+                vec![0.0; 4]
+            }
+            fn describe(&self) -> String {
+                "empty".into()
+            }
+        }
+        let rate = Empty.space_saving_rate();
+        assert!(rate.is_finite(), "rate {rate} must be finite");
+        assert_eq!(rate, 0.0);
+        // And an external store with no repr() override is Opaque.
+        assert!(matches!(Empty.repr(), Repr::Opaque));
+        assert!(Repr::resolve(&Empty).factored().is_none());
+    }
+}

@@ -19,6 +19,7 @@
 //!   it like any other store.
 
 use crate::embedding::EmbeddingStore;
+use crate::repr::Repr;
 use crate::util::ceil_div;
 use crate::util::rng::splitmix64;
 use std::collections::HashMap;
@@ -150,14 +151,16 @@ impl Shard {
     }
 
     /// Miss path: admit `row` if there is room, or if `id` is at least as
-    /// frequent as the LRU victim (frequency-based admission).
-    fn insert_if_absent(&mut self, id: usize, row: Vec<f32>) {
+    /// frequent as the LRU victim (frequency-based admission). The row is
+    /// copied *into* the victim's existing buffer when one is evicted —
+    /// after the shard fills, admission never allocates.
+    fn insert_if_absent(&mut self, id: usize, row: &[f32]) {
         if self.cap == 0 || self.map.contains_key(&id) {
             return;
         }
         if self.slots.len() < self.cap {
             let i = self.slots.len();
-            self.slots.push(Slot { id, row, prev: NIL, next: NIL });
+            self.slots.push(Slot { id, row: row.to_vec(), prev: NIL, next: NIL });
             self.push_front(i);
             self.map.insert(id, i);
             return;
@@ -170,7 +173,7 @@ impl Shard {
         self.map.remove(&victim_id);
         self.detach(victim);
         self.slots[victim].id = id;
-        self.slots[victim].row = row;
+        self.slots[victim].row.copy_from_slice(row);
         self.push_front(victim);
         self.map.insert(id, victim);
     }
@@ -197,19 +200,6 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
-}
-
-/// Peel [`ShardedCache`] wrappers off a store to reach the parameter-owning
-/// store underneath. Shared by the index scorer's factored-backend sniff
-/// and snapshot serialization, so a new wrapper type only needs teaching
-/// here.
-pub(crate) fn unwrap_cached(store: &dyn EmbeddingStore) -> &dyn EmbeddingStore {
-    if let Some(any) = store.as_any() {
-        if let Some(cache) = any.downcast_ref::<ShardedCache>() {
-            return unwrap_cached(cache.inner());
-        }
-    }
-    store
 }
 
 /// Sharded hot-row cache wrapping any [`EmbeddingStore`]; itself a store.
@@ -265,14 +255,18 @@ impl ShardedCache {
     }
 
     /// Fill `out` with row `id` through the cache: one copy on a hit, one
-    /// reconstruction + copy on a miss. Reconstruction happens *outside* the
-    /// shard lock — concurrent misses on the same id may duplicate work but
-    /// never block each other, and the result is identical either way.
+    /// in-place reconstruction on a miss (the row is rebuilt directly into
+    /// `out` via `lookup_into`, then copied into a cache slot only if
+    /// admission accepts it — evictions reuse the victim's buffer, so the
+    /// steady-state miss path allocates nothing). Reconstruction happens
+    /// *outside* the shard lock — concurrent misses on the same id may
+    /// duplicate work but never block each other, and the result is
+    /// identical either way.
     fn fetch_into(&self, id: usize, out: &mut [f32]) {
         if !self.enabled {
             // cache_rows == 0: a true pass-through baseline — no shard
             // locks, no sketch updates, just the inner reconstruction.
-            out.copy_from_slice(&self.inner.lookup(id));
+            self.inner.lookup_into(id, out);
             self.misses.fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -281,10 +275,9 @@ impl ShardedCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return;
         }
-        let row = self.inner.lookup(id);
-        out.copy_from_slice(&row);
+        self.inner.lookup_into(id, out);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.shards[s].lock().unwrap().insert_if_absent(id, row);
+        self.shards[s].lock().unwrap().insert_if_absent(id, out);
     }
 }
 
@@ -308,19 +301,23 @@ impl EmbeddingStore for ShardedCache {
         out
     }
 
-    fn lookup_batch(&self, ids: &[usize]) -> crate::tensor::Tensor {
-        // Dedup-and-scatter like the trait default, but each distinct id is
-        // copied exactly once into the flat output (no per-row Vec on hits).
-        let p = self.inner.dim();
-        let data = crate::embedding::dedup_scatter(ids, p, |id, out| self.fetch_into(id, out));
-        crate::tensor::Tensor::new(vec![ids.len(), p], data).expect("lookup_batch shape")
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        self.fetch_into(id, out);
     }
 
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        // Lets the index scorer unwrap the cache and reach the factored
+    fn lookup_batch_into(&self, ids: &[usize], out: &mut Vec<f32>) {
+        // Dedup-and-scatter like the trait default, but each distinct id is
+        // copied exactly once into the flat arena (no per-row Vec on hits).
+        crate::embedding::dedup_scatter_into(ids, self.inner.dim(), out, |id, row| {
+            self.fetch_into(id, row)
+        });
+    }
+
+    fn repr(&self) -> Repr<'_> {
+        // Lets [`Repr::resolve`] peel the cache and reach the factored
         // store underneath (cached rows are dense; factored scoring wants
         // the factors).
-        Some(self)
+        Repr::Cached(self)
     }
 
     fn describe(&self) -> String {

@@ -226,13 +226,19 @@ fn take_batch(shared: &PoolShared, w: usize) -> Option<Vec<Job>> {
 const LATENCY_WINDOW: usize = 1 << 16;
 
 fn worker_loop(shared: &PoolShared, w: usize) {
+    // Per-worker buffers, reused across micro-batches: the flattened id
+    // list, the reconstruction arena `lookup_batch_into` fills, and the job
+    // split lists. In steady state a drain allocates only the reply rows it
+    // actually sends.
+    let mut all_ids: Vec<usize> = Vec::new();
+    let mut flat: Vec<f32> = Vec::new();
+    let mut lookups = Vec::new();
+    let mut knns = Vec::new();
     while let Some(batch) = take_batch(shared, w) {
         // Split the drain: lookups are scattered and answered first — their
         // rows come from one flat store call and must not wait behind index
         // scans that happen to share the micro-batch.
-        let mut lookups = Vec::new();
-        let mut knns = Vec::new();
-        let mut all_ids = Vec::new();
+        all_ids.clear();
         for job in batch {
             match job {
                 Job::Lookup { ids, enqueued, reply } => {
@@ -244,9 +250,10 @@ fn worker_loop(shared: &PoolShared, w: usize) {
         }
 
         // One flat store call covering every lookup job in the drain: dedup
-        // inside lookup_batch collapses the Zipf head across all of them.
-        if !all_ids.is_empty() {
-            let tensor = shared.store.lookup_batch(&all_ids);
+        // inside lookup_batch_into collapses the Zipf head across all of
+        // them, and the arena write skips the per-drain tensor allocation.
+        if !lookups.is_empty() {
+            shared.store.lookup_batch_into(&all_ids, &mut flat);
             let dim = shared.store.dim();
             // Each job's latency is recorded *before* its reply is sent
             // (under the per-worker stats lock), so a caller that has
@@ -257,10 +264,10 @@ fn worker_loop(shared: &PoolShared, w: usize) {
             if lat.len() >= LATENCY_WINDOW {
                 *lat = Summary::new();
             }
-            for (ids, enqueued, reply) in lookups {
+            for (ids, enqueued, reply) in lookups.drain(..) {
                 let mut rows = Vec::with_capacity(ids.len());
                 for _ in 0..ids.len() {
-                    rows.push(tensor.data()[row * dim..(row + 1) * dim].to_vec());
+                    rows.push(flat[row * dim..(row + 1) * dim].to_vec());
                     row += 1;
                 }
                 lat.add(now.duration_since(enqueued).as_secs_f64() * 1e6);
@@ -272,7 +279,7 @@ fn worker_loop(shared: &PoolShared, w: usize) {
         // Index scans run after lookup replies are out, each outside the
         // stats lock (a brute scan is milliseconds; STATS must not block
         // on it).
-        for (query, k, enqueued, reply) in knns {
+        for (query, k, enqueued, reply) in knns.drain(..) {
             match shared.index.as_deref() {
                 Some(index) => {
                     let result = index.top_k(&query, k);

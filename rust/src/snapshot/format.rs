@@ -11,7 +11,8 @@
 //! 0x18  dim          u64
 //! 0x20  order        u32
 //! 0x24  rank         u32
-//! 0x28  flags        u32      bit 0 layernorm, bit 1 has-index, bit 2 cosine
+//! 0x28  flags        u32      bit 0 layernorm, bit 1 has-index, bit 2
+//!                             cosine, bit 3 has-norms
 //! 0x2c  n_sections   u32
 //! 0x30  meta         6 × u64  kind-specific (leaf dims, bits, seeds, nlist)
 //! 0x60  header_crc   u32      CRC32 over bytes 0x00..0x60
@@ -57,6 +58,13 @@ pub const FLAG_LAYERNORM: u32 = 1;
 pub const FLAG_HAS_INDEX: u32 = 1 << 1;
 /// `flags` bit 2: the embedded IVF index was built for cosine ranking.
 pub const FLAG_INDEX_COSINE: u32 = 1 << 2;
+/// `flags` bit 3: the snapshot embeds per-word L2 norms
+/// ([`SEC_NORMS`], one f32 per vocabulary entry), letting a cosine-mode
+/// scorer skip its construction-time norm pass after a load/hot-swap.
+/// Readers older than this flag ignore both the bit and the section —
+/// the section registry tolerates unknown ids — so the format version
+/// stays unchanged; this flag *is* the gate.
+pub const FLAG_HAS_NORMS: u32 = 1 << 3;
 
 // Section ids (fixed registry; unknown ids are ignored on load so future
 // versions can add sections without breaking old readers).
@@ -72,6 +80,8 @@ pub const SEC_HASHED_WEIGHTS: u32 = 9;
 pub const SEC_IVF_CENTROIDS: u32 = 10;
 pub const SEC_IVF_LIST_LENS: u32 = 11;
 pub const SEC_IVF_LIST_IDS: u32 = 12;
+/// Optional per-word L2 norms (always f32-exact; see [`FLAG_HAS_NORMS`]).
+pub const SEC_NORMS: u32 = 13;
 
 /// Human-readable section name for `snapshot info`.
 pub fn section_name(id: u32) -> &'static str {
@@ -88,6 +98,7 @@ pub fn section_name(id: u32) -> &'static str {
         SEC_IVF_CENTROIDS => "ivf.centroids",
         SEC_IVF_LIST_LENS => "ivf.list_lens",
         SEC_IVF_LIST_IDS => "ivf.list_ids",
+        SEC_NORMS => "norms",
         _ => "unknown",
     }
 }

@@ -29,22 +29,28 @@ pub use format::{crc32, section_name, Codec, Dtype, Header, SectionData, StoreKi
 pub use reader::{load_index_payload, load_store, IndexPayload, Section, Snapshot};
 pub use store::SnapshotStore;
 
-use crate::embedding::{
-    EmbeddingStore, HashedEmbedding, LowRankEmbedding, QuantizedEmbedding, RegularEmbedding,
-    Word2Ket, Word2KetXS,
-};
+use crate::embedding::EmbeddingStore;
 use crate::error::{Error, Result};
 use crate::index::IvfIndex;
-use crate::serving::cache::unwrap_cached;
+use crate::repr::{unwrap_wrappers, Repr};
 use format::*;
 use std::path::Path;
 
 /// Write-side options.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SaveOptions {
-    /// Payload codec for factor tensors (quantized-store codes and IVF
-    /// centroids always stay exact).
+    /// Payload codec for factor tensors (quantized-store codes, IVF
+    /// centroids, and norms always stay exact).
     pub codec: Codec,
+    /// Embed per-word L2 norms ([`format::SEC_NORMS`]) so a cosine-mode
+    /// scorer loading this snapshot skips its norm pass. Norms are also
+    /// embedded automatically when the snapshot carries a cosine IVF
+    /// index (the reloading server is then guaranteed to want them).
+    /// Honored only with the exact f32 codec: a lossy payload serves
+    /// dequantized rows on load, so pre-quantization norms would make the
+    /// loader's cosine denominators inconsistent — lossy saves always let
+    /// the loader recompute.
+    pub norms: bool,
 }
 
 /// What a save produced.
@@ -54,6 +60,10 @@ pub struct SnapshotInfo {
     pub bytes: u64,
     /// Number of sections in the container.
     pub sections: usize,
+    /// Whether a norms section was embedded (requested or implied norms
+    /// can be skipped for lossy payloads — callers report from this field
+    /// instead of re-deriving the eligibility rule).
+    pub norms_embedded: bool,
 }
 
 /// Save any embedding store to `path`. Equivalent to
@@ -74,13 +84,10 @@ pub fn save_store_with_index(
     path: &Path,
     opts: &SaveOptions,
 ) -> Result<SnapshotInfo> {
-    let store = unwrap_cached(store);
+    let store = unwrap_wrappers(store);
     let vocab = store.vocab_size();
     let dim = store.dim();
     let codec = opts.codec;
-    let any = store.as_any().ok_or_else(|| {
-        Error::Snapshot(format!("store '{}' cannot be snapshotted", store.describe()))
-    })?;
 
     let mut header = Header {
         kind: StoreKind::Regular,
@@ -93,59 +100,91 @@ pub fn save_store_with_index(
     };
     let mut sections: Vec<SectionData> = Vec::new();
 
-    if let Some(e) = any.downcast_ref::<RegularEmbedding>() {
-        header.kind = StoreKind::Regular;
-        sections.push(encode_f32s(SEC_REGULAR_DATA, e.data(), codec, dim));
-    } else if let Some(e) = any.downcast_ref::<Word2Ket>() {
-        header.kind = StoreKind::Word2Ket;
-        header.order = e.order() as u32;
-        header.rank = e.rank() as u32;
-        header.meta[META_Q] = e.leaf_dim() as u64;
-        if e.layernorm() {
-            header.flags |= FLAG_LAYERNORM;
+    // Serialization dispatches on the store's typed representation — the
+    // same `Repr` the index scorer resolves, so a store is snapshottable
+    // exactly when it names itself.
+    match store.repr() {
+        Repr::Regular(e) => {
+            header.kind = StoreKind::Regular;
+            sections.push(encode_f32s(SEC_REGULAR_DATA, e.data(), codec, dim));
         }
-        let per_word = e.rank() * e.order() * e.leaf_dim();
-        let mut leaves = Vec::with_capacity(vocab * per_word);
-        for w in 0..vocab {
-            leaves.extend_from_slice(e.word(w).leaves());
+        Repr::Word2Ket(e) => {
+            header.kind = StoreKind::Word2Ket;
+            header.order = e.order() as u32;
+            header.rank = e.rank() as u32;
+            header.meta[META_Q] = e.leaf_dim() as u64;
+            if e.layernorm() {
+                header.flags |= FLAG_LAYERNORM;
+            }
+            let per_word = e.rank() * e.order() * e.leaf_dim();
+            let mut leaves = Vec::with_capacity(vocab * per_word);
+            for w in 0..vocab {
+                leaves.extend_from_slice(e.word(w).leaves());
+            }
+            sections.push(encode_f32s(SEC_W2K_LEAVES, &leaves, codec, per_word));
         }
-        sections.push(encode_f32s(SEC_W2K_LEAVES, &leaves, codec, per_word));
-    } else if let Some(e) = any.downcast_ref::<Word2KetXS>() {
-        header.kind = StoreKind::Word2KetXS;
-        header.order = e.order() as u32;
-        header.rank = e.rank() as u32;
-        header.meta[META_Q] = e.leaf_q() as u64;
-        header.meta[META_T_OR_SEED] = e.leaf_t() as u64;
-        let per_factor = e.leaf_t() * e.leaf_q();
-        let mut blob = Vec::with_capacity(e.rank() * e.order() * per_factor);
-        for f in e.factors() {
-            blob.extend_from_slice(f);
+        Repr::Word2KetXS(e) => {
+            header.kind = StoreKind::Word2KetXS;
+            header.order = e.order() as u32;
+            header.rank = e.rank() as u32;
+            header.meta[META_Q] = e.leaf_q() as u64;
+            header.meta[META_T_OR_SEED] = e.leaf_t() as u64;
+            let per_factor = e.leaf_t() * e.leaf_q();
+            let mut blob = Vec::with_capacity(e.rank() * e.order() * per_factor);
+            for f in e.factors() {
+                blob.extend_from_slice(f);
+            }
+            sections.push(encode_f32s(SEC_XS_FACTORS, &blob, codec, per_factor));
         }
-        sections.push(encode_f32s(SEC_XS_FACTORS, &blob, codec, per_factor));
-    } else if let Some(e) = any.downcast_ref::<QuantizedEmbedding>() {
-        header.kind = StoreKind::Quantized;
-        header.meta[META_PRIMARY] = e.bits() as u64;
-        // The codes are already the quantized payload; re-quantizing them
-        // (or their row scales/offsets) would corrupt reconstruction, so
-        // all three sections stay exact regardless of `codec`.
-        sections.push(encode_u32s(SEC_QUANT_CODES, e.codes()));
-        sections.push(encode_f32s(SEC_QUANT_SCALES, e.scales(), Codec::F32, 0));
-        sections.push(encode_f32s(SEC_QUANT_OFFSETS, e.offsets(), Codec::F32, 0));
-    } else if let Some(e) = any.downcast_ref::<LowRankEmbedding>() {
-        header.kind = StoreKind::LowRank;
-        header.meta[META_PRIMARY] = e.k() as u64;
-        sections.push(encode_f32s(SEC_LOWRANK_U, e.u(), codec, e.k()));
-        sections.push(encode_f32s(SEC_LOWRANK_VT, e.vt(), codec, e.k()));
-    } else if let Some(e) = any.downcast_ref::<HashedEmbedding>() {
-        header.kind = StoreKind::Hashed;
-        header.meta[META_PRIMARY] = e.buckets() as u64;
-        header.meta[META_T_OR_SEED] = e.seed();
-        sections.push(encode_f32s(SEC_HASHED_WEIGHTS, e.weights(), codec, 0));
-    } else {
-        return Err(Error::Snapshot(format!(
-            "store '{}' has no snapshot serializer",
-            store.describe()
-        )));
+        Repr::Quantized(e) => {
+            header.kind = StoreKind::Quantized;
+            header.meta[META_PRIMARY] = e.bits() as u64;
+            // The codes are already the quantized payload; re-quantizing
+            // them (or their row scales/offsets) would corrupt
+            // reconstruction, so all three sections stay exact regardless
+            // of `codec`.
+            sections.push(encode_u32s(SEC_QUANT_CODES, e.codes()));
+            sections.push(encode_f32s(SEC_QUANT_SCALES, e.scales(), Codec::F32, 0));
+            sections.push(encode_f32s(SEC_QUANT_OFFSETS, e.offsets(), Codec::F32, 0));
+        }
+        Repr::LowRank(e) => {
+            header.kind = StoreKind::LowRank;
+            header.meta[META_PRIMARY] = e.k() as u64;
+            sections.push(encode_f32s(SEC_LOWRANK_U, e.u(), codec, e.k()));
+            sections.push(encode_f32s(SEC_LOWRANK_VT, e.vt(), codec, e.k()));
+        }
+        Repr::Hashed(e) => {
+            header.kind = StoreKind::Hashed;
+            header.meta[META_PRIMARY] = e.buckets() as u64;
+            header.meta[META_T_OR_SEED] = e.seed();
+            sections.push(encode_f32s(SEC_HASHED_WEIGHTS, e.weights(), codec, 0));
+        }
+        Repr::Snapshot(_) | Repr::Cached(_) | Repr::Opaque => {
+            return Err(Error::Snapshot(format!(
+                "store '{}' has no snapshot serializer",
+                store.describe()
+            )));
+        }
+    }
+
+    // Optional norms section: requested explicitly, or implied by a cosine
+    // index (whose scorer already computed exactly these values). Exact
+    // payloads only: with a lossy codec the loader serves dequantized rows,
+    // and norms of the *original* rows would skew its cosine denominators
+    // (self-similarity ≠ 1) — lossy saves let the loader recompute instead.
+    // Quantized stores write byte-exact sections regardless of the
+    // requested codec (see above), so their rows — and thus these norms —
+    // survive any codec unchanged.
+    let payload_exact = codec == Codec::F32 || header.kind == StoreKind::Quantized;
+    let norms_embedded =
+        payload_exact && (opts.norms || index.is_some_and(|ivf| ivf.scorer().cosine()));
+    if norms_embedded {
+        let norms = match index.and_then(|ivf| ivf.scorer().norms()) {
+            Some(n) => n.to_vec(),
+            None => crate::index::scorer::compute_norms(store),
+        };
+        header.flags |= FLAG_HAS_NORMS;
+        sections.push(encode_f32s(SEC_NORMS, &norms, Codec::F32, 0));
     }
 
     if let Some(ivf) = index {
@@ -169,14 +208,14 @@ pub fn save_store_with_index(
 
     let n = sections.len();
     let bytes = write_snapshot(path, &header, &sections)?;
-    Ok(SnapshotInfo { bytes, sections: n })
+    Ok(SnapshotInfo { bytes, sections: n, norms_embedded })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{EmbeddingConfig, EmbeddingKind};
-    use crate::embedding::{build, materialize};
+    use crate::embedding::{build, materialize, QuantizedEmbedding, Word2Ket, Word2KetXS};
     use crate::serving::ShardedCache;
     use crate::util::Rng;
     use std::path::PathBuf;
@@ -269,7 +308,8 @@ mod tests {
                 let mut rng = Rng::new(13);
                 let store = build(&cfg, 50, 16, &mut rng);
                 let path = tmp(&format!("q_{}_{}", codec.name(), kind.name()));
-                save_store(store.as_ref(), &path, &SaveOptions { codec }).unwrap();
+                let opts = SaveOptions { codec, ..Default::default() };
+                save_store(store.as_ref(), &path, &opts).unwrap();
                 let snap = Arc::new(Snapshot::open(&path, true).unwrap());
                 let mm = SnapshotStore::open(snap.clone()).unwrap();
                 let heap = load_store(&snap).unwrap();
@@ -308,15 +348,14 @@ mod tests {
         let p32 = tmp("sz32");
         let p16 = tmp("sz16");
         let p8 = tmp("sz8");
-        let b32 = save_store(store.as_ref(), &p32, &SaveOptions { codec: Codec::F32 })
-            .unwrap()
-            .bytes;
-        let b16 = save_store(store.as_ref(), &p16, &SaveOptions { codec: Codec::F16 })
-            .unwrap()
-            .bytes;
-        let b8 = save_store(store.as_ref(), &p8, &SaveOptions { codec: Codec::Int8 })
-            .unwrap()
-            .bytes;
+        let save = |path: &std::path::Path, codec: Codec| {
+            save_store(store.as_ref(), path, &SaveOptions { codec, ..Default::default() })
+                .unwrap()
+                .bytes
+        };
+        let b32 = save(&p32, Codec::F32);
+        let b16 = save(&p16, Codec::F16);
+        let b8 = save(&p8, Codec::Int8);
         assert!(b16 < b32, "f16 {b16} !< f32 {b32}");
         assert!(b8 < b16, "int8 {b8} !< f16 {b16}");
         for p in [p32, p16, p8] {
@@ -402,6 +441,168 @@ mod tests {
                 mm.inner(a, b).to_bits(),
                 "w2k inner ({a},{b})"
             );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Norms section round-trip: `--with-norms` saves exactly the values
+    /// the scorer would compute, flag-gated, listed by `info`.
+    #[test]
+    fn norms_section_roundtrip() {
+        let mut rng = Rng::new(21);
+        let xs = Word2KetXS::random(70, 16, 2, 2, &mut rng);
+        let want = crate::index::scorer::compute_norms(&xs);
+        let path = tmp("norms_rt");
+        save_store(&xs, &path, &SaveOptions { norms: true, ..Default::default() }).unwrap();
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert_eq!(snap.header().flags & FLAG_HAS_NORMS, FLAG_HAS_NORMS);
+        assert!(snap.describe().contains("norms"), "{}", snap.describe());
+        let mm = SnapshotStore::open(snap).unwrap();
+        let got = mm.norms().expect("norms embedded");
+        assert_eq!(got.len(), 70);
+        for (id, (w, g)) in want.iter().zip(got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "norm {id}");
+        }
+        // A plain save carries no norms.
+        save_store(&xs, &path, &SaveOptions::default()).unwrap();
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert_eq!(snap.header().flags & FLAG_HAS_NORMS, 0);
+        assert!(SnapshotStore::open(snap).unwrap().norms().is_none());
+        // Neither does a lossy save, even when asked: the loader serves
+        // dequantized rows, so it must recompute norms to stay consistent.
+        save_store(&xs, &path, &SaveOptions { codec: Codec::F16, norms: true }).unwrap();
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert_eq!(snap.header().flags & FLAG_HAS_NORMS, 0, "lossy codec must not embed norms");
+        // A quantized store's sections are byte-exact under any codec, so
+        // its norms still embed.
+        let mut rng = Rng::new(24);
+        let q = QuantizedEmbedding::random(30, 16, 8, &mut rng);
+        save_store(&q, &path, &SaveOptions { codec: Codec::F16, norms: true }).unwrap();
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert_eq!(snap.header().flags & FLAG_HAS_NORMS, FLAG_HAS_NORMS);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A cosine IVF save embeds norms automatically (the scorer already
+    /// computed them), and a cosine scorer over the reloaded store skips
+    /// its norm pass: zero store reads through the cache at construction.
+    #[test]
+    fn cosine_ivf_save_embeds_norms_and_scorer_skips_pass() {
+        use crate::index::Scorer;
+        let mut rng = Rng::new(22);
+        let xs = Word2KetXS::random(120, 16, 2, 2, &mut rng);
+        let arc: Arc<dyn EmbeddingStore> = Arc::new(xs.clone());
+        let direct = Scorer::new(arc.clone(), true);
+        let ivf = crate::index::IvfIndex::build(Scorer::new(arc, true), 4, 2, 1);
+        let path = tmp("norms_ivf");
+        save_store_with_index(&xs, Some(&ivf), &path, &SaveOptions::default()).unwrap();
+
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert_eq!(snap.header().flags & FLAG_HAS_NORMS, FLAG_HAS_NORMS);
+        let mm = SnapshotStore::open(snap).unwrap();
+        let cached = ShardedCache::new(Box::new(mm), 2, 64);
+        let reloaded = Scorer::new(Arc::new(cached), true);
+        // Cosine scores bit-identical to the pre-snapshot scorer: same
+        // factored kernels, same (embedded) norms.
+        for (a, b) in [(0usize, 1usize), (7, 7), (119, 42)] {
+            assert_eq!(
+                direct.score_pair(a, b).to_bits(),
+                reloaded.score_pair(a, b).to_bits(),
+                "({a},{b})"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The embedded-norms fast path really skips the pass: a cosine scorer
+    /// over a *dense* snapshot (no factored shortcut) reads zero rows when
+    /// norms are embedded, and the whole vocabulary when they are not.
+    #[test]
+    fn embedded_norms_skip_dense_norm_pass() {
+        use crate::index::Scorer;
+        let mut rng = Rng::new(23);
+        let e = crate::embedding::RegularEmbedding::random(50, 8, &mut rng);
+        let path = tmp("norms_skip");
+        for with_norms in [false, true] {
+            save_store(&e, &path, &SaveOptions { norms: with_norms, ..Default::default() })
+                .unwrap();
+            let mm =
+                SnapshotStore::open(Arc::new(Snapshot::open(&path, true).unwrap())).unwrap();
+            let cached = Arc::new(ShardedCache::new(Box::new(mm), 1, 64));
+            let probe = cached.clone();
+            let _scorer = Scorer::new(cached, true);
+            let stats = probe.stats();
+            let reads = stats.hits + stats.misses;
+            if with_norms {
+                assert_eq!(reads, 0, "norm pass must be skipped with embedded norms");
+            } else {
+                assert_eq!(reads, 50, "dense norm pass reads every row once");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A CRC-valid snapshot pairing lossy-coded factors with the norms
+    /// flag is rejected: the writer never produces it, and accepting it
+    /// would score cosine queries against inconsistent denominators.
+    #[test]
+    fn lossy_factors_with_norms_flag_rejected() {
+        let mut rng = Rng::new(25);
+        let xs = Word2KetXS::random(9, 4, 2, 2, &mut rng); // t = 3, q = 2
+        let mut blob = Vec::new();
+        for f in xs.factors() {
+            blob.extend_from_slice(f);
+        }
+        let mut meta = [0u64; 6];
+        meta[META_Q] = 2;
+        meta[META_T_OR_SEED] = 3;
+        let header = Header {
+            kind: StoreKind::Word2KetXS,
+            vocab: 9,
+            dim: 4,
+            order: 2,
+            rank: 2,
+            flags: FLAG_HAS_NORMS,
+            meta,
+        };
+        let sections = vec![
+            encode_f32s(SEC_XS_FACTORS, &blob, Codec::F16, 6),
+            encode_f32s(SEC_NORMS, &[1.0f32; 9], Codec::F32, 0),
+        ];
+        let path = tmp("norms_lossy");
+        write_snapshot(&path, &header, &sections).unwrap();
+        let snap = Arc::new(Snapshot::open(&path, false).unwrap());
+        match SnapshotStore::open(snap) {
+            Err(crate::Error::Snapshot(msg)) => assert!(msg.contains("norms"), "{msg}"),
+            other => panic!("lossy factors + norms flag accepted: {:?}", other.map(|_| ())),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A CRC-valid snapshot with hostile norms (NaN) is rejected at open.
+    #[test]
+    fn non_finite_norms_rejected() {
+        let header = Header {
+            kind: StoreKind::Regular,
+            vocab: 4,
+            dim: 2,
+            order: 1,
+            rank: 1,
+            flags: FLAG_HAS_NORMS,
+            meta: [0u64; 6],
+        };
+        let data: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        let norms = [1.0f32, f32::NAN, 2.0, 3.0];
+        let sections = vec![
+            encode_f32s(SEC_REGULAR_DATA, &data, Codec::F32, 0),
+            encode_f32s(SEC_NORMS, &norms, Codec::F32, 0),
+        ];
+        let path = tmp("norms_nan");
+        write_snapshot(&path, &header, &sections).unwrap();
+        let snap = Arc::new(Snapshot::open(&path, false).unwrap());
+        match SnapshotStore::open(snap) {
+            Err(crate::Error::Snapshot(msg)) => assert!(msg.contains("norms"), "{msg}"),
+            other => panic!("hostile norms accepted: {:?}", other.map(|_| ())),
         }
         std::fs::remove_file(&path).ok();
     }

@@ -19,7 +19,8 @@ use super::reader::Snapshot;
 use crate::embedding::quantized::get_bits;
 use crate::embedding::EmbeddingStore;
 use crate::error::{Error, Result};
-use crate::kron::{kron_accumulate, tree_term, KronScratch, MixedRadix};
+use crate::kron::{kron_accumulate, tree_term, MixedRadix};
+use crate::repr::{kernels, FactorGeometry, FactoredRepr, Repr};
 use crate::tensor::dot;
 use crate::util::rng::splitmix64;
 use std::sync::Arc;
@@ -77,6 +78,9 @@ pub struct SnapshotStore {
     order: usize,
     rank: usize,
     view: View,
+    /// Optional embedded per-word L2 norms (`FLAG_HAS_NORMS`): lets a
+    /// cosine-mode scorer skip its construction-time norm pass entirely.
+    norms: Option<Slab>,
 }
 
 /// Overflow-checked product: a CRC-valid but hostile header must yield a
@@ -251,7 +255,46 @@ impl SnapshotStore {
                 }
             }
         };
-        Ok(SnapshotStore { snap, vocab, dim, order, rank, view })
+        let mut store = SnapshotStore { snap, vocab, dim, order, rank, view, norms: None };
+        if h.flags & FLAG_HAS_NORMS != 0 {
+            let slab = Self::slab_for(&store.snap, SEC_NORMS, vocab)?;
+            // The writer only embeds norms next to exact payloads; enforce
+            // the same invariant on read — a hand-crafted file pairing
+            // lossy-coded factors (or lossy norms) with this flag would
+            // feed cosine scoring denominators inconsistent with the
+            // dequantized rows it serves.
+            if matches!(slab, Slab::Own(_)) || store.lossy_payload() {
+                return Err(Error::Snapshot(
+                    "norms section requires exact f32 payloads (lossy-coded factors \
+                     would make cosine denominators inconsistent with served rows)"
+                        .into(),
+                ));
+            }
+            {
+                let norms = store.floats(&slab);
+                if norms.iter().any(|n| !n.is_finite() || *n < 0.0) {
+                    return Err(Error::Snapshot(
+                        "norms section holds non-finite or negative values".into(),
+                    ));
+                }
+            }
+            store.norms = Some(slab);
+        }
+        Ok(store)
+    }
+
+    /// True when any float section was dequantized at open (f16/int8
+    /// payload), i.e. served rows differ from the rows the writer saw.
+    fn lossy_payload(&self) -> bool {
+        let own = |s: &Slab| matches!(s, Slab::Own(_));
+        match &self.view {
+            View::Regular { data } => own(data),
+            View::W2k { leaves, .. } => own(leaves),
+            View::Xs { factors, .. } => own(factors),
+            View::Quant { scales, offsets, .. } => own(scales) || own(offsets),
+            View::LowRank { u, vt, .. } => own(u) || own(vt),
+            View::Hashed { weights, .. } => own(weights),
+        }
     }
 
     /// The underlying snapshot (generation metadata, file size).
@@ -310,30 +353,29 @@ impl SnapshotStore {
         &factors[base..base + q]
     }
 
+    /// Embedded per-word L2 norms, if the snapshot carries them
+    /// (`FLAG_HAS_NORMS`): the values `index::scorer::compute_norms` would
+    /// produce, stored at save time so a cosine scorer skips the pass.
+    pub fn norms(&self) -> Option<&[f32]> {
+        self.norms.as_ref().map(|s| self.floats(s))
+    }
+
     /// Factored inner product `⟨row a, row b⟩` without reconstruction.
-    /// Same operation order as `Word2Ket::inner` / `Word2KetXS::inner`, so
-    /// results are bit-identical to pre-snapshot scoring. Only meaningful
-    /// when [`factored`](Self::factored) holds.
+    /// Runs through the same shared kernels as `Word2Ket::inner` /
+    /// `Word2KetXS::inner`, so results are bit-identical to pre-snapshot
+    /// scoring. Only meaningful when [`factored`](Self::factored) holds.
     pub fn inner(&self, a: usize, b: usize) -> f32 {
         match &self.view {
             View::W2k { leaves, q, .. } => {
                 let leaves = self.floats(leaves);
-                let mut total = 0.0f32;
-                for k in 0..self.rank {
-                    for k2 in 0..self.rank {
-                        let mut prod = 1.0f32;
-                        for j in 0..self.order {
-                            let la = self.w2k_leaf(leaves, *q, a, k, j);
-                            let lb = self.w2k_leaf(leaves, *q, b, k2, j);
-                            prod *= dot(la, lb);
-                            if prod == 0.0 {
-                                break;
-                            }
-                        }
-                        total += prod;
-                    }
-                }
-                total
+                kernels::rank_pair_sum(self.rank, self.rank, |k, k2| {
+                    kernels::product_of_dots((0..self.order).map(|j| {
+                        (
+                            self.w2k_leaf(leaves, *q, a, k, j),
+                            self.w2k_leaf(leaves, *q, b, k2, j),
+                        )
+                    }))
+                })
             }
             View::Xs { factors, q, t, radix } => {
                 let factors = self.floats(factors);
@@ -341,22 +383,9 @@ impl SnapshotStore {
                 let mut db = [0usize; 8];
                 radix.decode_into(a, &mut da[..self.order]);
                 radix.decode_into(b, &mut db[..self.order]);
-                let mut total = 0.0f32;
-                for k in 0..self.rank {
-                    for k2 in 0..self.rank {
-                        let mut prod = 1.0f32;
-                        for j in 0..self.order {
-                            let ca = self.xs_col(factors, *q, *t, k, j, da[j]);
-                            let cb = self.xs_col(factors, *q, *t, k2, j, db[j]);
-                            prod *= dot(ca, cb);
-                            if prod == 0.0 {
-                                break;
-                            }
-                        }
-                        total += prod;
-                    }
-                }
-                total
+                kernels::factored_digit_inner(self.rank, self.order, &da, &db, |k, j, c| {
+                    self.xs_col(factors, *q, *t, k, j, c)
+                })
             }
             _ => {
                 // Dense fallback: correctness over speed for non-factored
@@ -391,103 +420,90 @@ impl EmbeddingStore for SnapshotStore {
     }
 
     fn lookup(&self, id: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.lookup_into(id, &mut out);
+        out
+    }
+
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
         match &self.view {
             View::Regular { data } => {
                 let data = self.floats(data);
-                data[id * self.dim..(id + 1) * self.dim].to_vec()
+                out.copy_from_slice(&data[id * self.dim..(id + 1) * self.dim]);
             }
             View::W2k { leaves, q, layernorm } => {
-                // Mirror CpTensor::reconstruct: balanced tree per rank term,
-                // terms accumulated in rank order, then truncated to dim.
+                // Mirror Word2Ket::lookup_into: balanced tree per rank
+                // term, each term accumulated straight into the (possibly
+                // truncated) caller buffer.
                 let leaves = self.floats(leaves);
-                let full = q.pow(self.order as u32);
-                let mut out = vec![0.0f32; full];
-                let mut refs: Vec<&[f32]> = Vec::with_capacity(self.order);
+                out.fill(0.0);
+                let mut refs: [&[f32]; crate::repr::MAX_ORDER] = [&[]; crate::repr::MAX_ORDER];
                 for k in 0..self.rank {
-                    refs.clear();
-                    for j in 0..self.order {
-                        refs.push(self.w2k_leaf(leaves, *q, id, k, j));
+                    for (j, leaf) in refs.iter_mut().take(self.order).enumerate() {
+                        *leaf = self.w2k_leaf(leaves, *q, id, k, j);
                     }
-                    let term = tree_term(&refs, *layernorm);
-                    for (o, t) in out.iter_mut().zip(term.iter()) {
-                        *o += t;
-                    }
+                    let term = tree_term(&refs[..self.order], *layernorm);
+                    kernels::add_assign(out, &term);
                 }
-                out.truncate(self.dim);
-                out
             }
             View::Xs { factors, q, t, radix } => {
-                // Mirror Word2KetXS::lookup_into exactly (fused order-2 path,
-                // kron_accumulate otherwise).
+                // Mirror Word2KetXS::reconstruct_into exactly (fused
+                // order-2 kernel, kron_accumulate otherwise) with the
+                // shared per-thread scratch.
                 let factors = self.floats(factors);
-                let mut out = vec![0.0f32; self.dim];
                 let mut digits = [0usize; 8];
                 radix.decode_into(id, &mut digits[..self.order]);
+                out.fill(0.0);
                 if self.order == 2 {
-                    let q = *q;
-                    let dim = self.dim;
                     for k in 0..self.rank {
-                        let a = self.xs_col(factors, q, *t, k, 0, digits[0]);
-                        let b = self.xs_col(factors, q, *t, k, 1, digits[1]);
-                        let mut i = 0;
-                        while i * q < dim {
-                            let x = a[i];
-                            if x != 0.0 {
-                                let end = ((i + 1) * q).min(dim);
-                                let row = &mut out[i * q..end];
-                                for (o, &y) in row.iter_mut().zip(b) {
-                                    *o += x * y;
-                                }
-                            }
-                            i += 1;
-                        }
+                        let a = self.xs_col(factors, *q, *t, k, 0, digits[0]);
+                        let b = self.xs_col(factors, *q, *t, k, 1, digits[1]);
+                        kernels::kron2_accumulate(a, b, out);
                     }
-                    return out;
+                    return;
                 }
-                let mut scratch = KronScratch::new();
                 let mut cols: [&[f32]; 8] = [&[]; 8];
-                for k in 0..self.rank {
-                    for (j, c) in cols.iter_mut().take(self.order).enumerate() {
-                        *c = self.xs_col(factors, *q, *t, k, j, digits[j]);
+                kernels::with_lookup_scratch(|s| {
+                    for k in 0..self.rank {
+                        for (j, c) in cols.iter_mut().take(self.order).enumerate() {
+                            *c = self.xs_col(factors, *q, *t, k, j, digits[j]);
+                        }
+                        kron_accumulate(&cols[..self.order], out, &mut s.kron);
                     }
-                    kron_accumulate(&cols[..self.order], &mut out, &mut scratch);
-                }
-                out
+                });
             }
             View::Quant { codes, scales, offsets, bits } => {
                 let codes = self.u32s(codes);
                 let scale = self.floats(scales)[id];
                 let off = self.floats(offsets)[id];
-                let mut out = Vec::with_capacity(self.dim);
-                for c in 0..self.dim {
+                for (c, o) in out.iter_mut().enumerate() {
                     let code = get_bits(codes, (id * self.dim + c) * bits, *bits);
-                    out.push(off + code as f32 * scale);
+                    *o = off + code as f32 * scale;
                 }
-                out
             }
             View::LowRank { u, vt, k } => {
                 let u = &self.floats(u)[id * k..(id + 1) * k];
                 let vt = self.floats(vt);
-                (0..self.dim).map(|j| dot(u, &vt[j * k..(j + 1) * k])).collect()
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = dot(u, &vt[j * k..(j + 1) * k]);
+                }
             }
             View::Hashed { weights, seed } => {
                 let w = self.floats(weights);
                 let buckets = w.len();
-                (0..self.dim)
-                    .map(|j| {
-                        let mut h =
-                            seed.wrapping_add((id as u64) << 32).wrapping_add(j as u64);
-                        let x = splitmix64(&mut h);
-                        let sign = if (x >> 63) == 0 { 1.0 } else { -1.0 };
-                        sign * w[(x % buckets as u64) as usize]
-                    })
-                    .collect()
+                for (j, o) in out.iter_mut().enumerate() {
+                    let mut h = seed.wrapping_add((id as u64) << 32).wrapping_add(j as u64);
+                    let x = splitmix64(&mut h);
+                    let sign = if (x >> 63) == 0 { 1.0 } else { -1.0 };
+                    *o = sign * w[(x % buckets as u64) as usize];
+                }
             }
         }
     }
 
-    fn as_any(&self) -> Option<&dyn std::any::Any> {
-        Some(self)
+    fn repr(&self) -> Repr<'_> {
+        Repr::Snapshot(self)
     }
 
     fn describe(&self) -> String {
@@ -502,5 +518,76 @@ impl EmbeddingStore for SnapshotStore {
             self.snap.file_len(),
             self.space_saving_rate()
         )
+    }
+}
+
+/// Factored-space contract (see [`crate::repr`]) straight off the mapped
+/// file. Handed out by [`Repr::factored`] only when
+/// [`SnapshotStore::factored`] holds (raw word2ket/word2ketXS factors,
+/// untruncated); the accessors below are only called under that gate.
+impl FactoredRepr for SnapshotStore {
+    fn geometry(&self) -> FactorGeometry {
+        let leaf_dim = match &self.view {
+            View::W2k { q, .. } | View::Xs { q, .. } => *q,
+            _ => 0,
+        };
+        FactorGeometry { order: self.order, rank: self.rank, leaf_dim }
+    }
+
+    fn factors<'s>(&'s self, id: usize, k: usize, out: &mut [&'s [f32]]) {
+        debug_assert_eq!(out.len(), self.order);
+        match &self.view {
+            View::W2k { leaves, q, .. } => {
+                let leaves = self.floats(leaves);
+                for (j, leaf) in out.iter_mut().enumerate() {
+                    *leaf = self.w2k_leaf(leaves, *q, id, k, j);
+                }
+            }
+            View::Xs { factors, q, t, radix } => {
+                let factors = self.floats(factors);
+                let mut digits = [0usize; 8];
+                radix.decode_into(id, &mut digits[..self.order]);
+                for (j, col) in out.iter_mut().enumerate() {
+                    *col = self.xs_col(factors, *q, *t, k, j, digits[j]);
+                }
+            }
+            _ => unreachable!("factored repr over a non-factored snapshot view"),
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "snapshot"
+    }
+
+    fn inner(&self, a: usize, b: usize) -> f32 {
+        SnapshotStore::inner(self, a, b)
+    }
+
+    fn block_inner(&self, a: usize, bs: &[usize], out: &mut [f32]) {
+        match &self.view {
+            View::Xs { factors, q, t, radix } => {
+                // The same shared digit-hoisted block kernel as the
+                // in-memory word2ketXS store.
+                let factors = self.floats(factors);
+                kernels::factored_digit_block(
+                    self.rank,
+                    self.order,
+                    |i, d: &mut [usize; 8]| radix.decode_into(i, &mut d[..self.order]),
+                    |k, j, c| self.xs_col(factors, *q, *t, k, j, c),
+                    a,
+                    bs,
+                    out,
+                );
+            }
+            _ => {
+                for (o, &b) in out.iter_mut().zip(bs) {
+                    *o = SnapshotStore::inner(self, a, b);
+                }
+            }
+        }
+    }
+
+    fn write_row(&self, id: usize, out: &mut [f32]) {
+        EmbeddingStore::lookup_into(self, id, out);
     }
 }

@@ -251,23 +251,9 @@ impl Tensor {
 /// Plain dot product over slices.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: measurably faster than naive fold and
-    // keeps results deterministic.
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let k = i * 4;
-        acc[0] += a[k] * b[k];
-        acc[1] += a[k + 1] * b[k + 1];
-        acc[2] += a[k + 2] * b[k + 2];
-        acc[3] += a[k + 3] * b[k + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for k in chunks * 4..a.len() {
-        s += a[k] * b[k];
-    }
-    s
+    // The unrolled implementation lives with the other shared lookup
+    // kernels; this alias keeps the historical call sites working.
+    crate::repr::kernels::dot(a, b)
 }
 
 /// LayerNorm each contiguous `width`-sized slice of `data` (eps=1e-5).
