@@ -19,9 +19,20 @@
 //! `--load` boots the server from a snapshot (memory-mapped) instead of
 //! RNG + config; `--reload` issues a binary-protocol `OP_RELOAD` mid-load,
 //! hot-swapping the model under the running traffic.
+//!
+//! Cluster mode: `--cluster topology.toml` self-hosts the whole story —
+//! slices the store into per-shard snapshots, spawns one stock shard
+//! server per replica listed in the topology (on OS-assigned loopback
+//! ports), and drives the same Zipf lookup/KNN mix through a scatter-
+//! gather [`word2ket::cluster::Router`] instead of a single server. With
+//! `--reload <dir>` the demo performs a mid-load *rolling* reload across
+//! every replica. The topology file's ports are treated as a replica
+//! *count* here (the demo binds its own); point `w2k cluster route` at
+//! real addresses for an actual deployment.
 
 use word2ket::cli::{App, CommandSpec, OptSpec};
-use word2ket::config::{EmbeddingKind, ExperimentConfig, IndexKind};
+use word2ket::cluster::{save_shard_snapshots, Router, RouterConfig, Topology};
+use word2ket::config::{EmbeddingKind, ExperimentConfig, IndexKind, TomlDoc};
 use word2ket::coordinator::server;
 use word2ket::serving::BinaryClient;
 use word2ket::util::{Rng, Summary, Timer, ZipfSampler};
@@ -55,7 +66,8 @@ fn main() -> word2ket::Result<()> {
                 OptSpec { name: "nprobe", help: "IVF cells probed per query", takes_value: true, repeated: false, default: Some("8") },
                 OptSpec { name: "save", help: "write the configured store to this snapshot file before serving", takes_value: true, repeated: false, default: None },
                 OptSpec { name: "load", help: "boot the server from this snapshot (mmap) instead of RNG+config", takes_value: true, repeated: false, default: None },
-                OptSpec { name: "reload", help: "hot-swap to this snapshot mid-load via OP_RELOAD", takes_value: true, repeated: false, default: None },
+                OptSpec { name: "reload", help: "hot-swap to this snapshot mid-load via OP_RELOAD (cluster mode: a dir to rolling-reload from)", takes_value: true, repeated: false, default: None },
+                OptSpec { name: "cluster", help: "topology TOML ([cluster] section): self-host the shards and route through a scatter-gather router", takes_value: true, repeated: false, default: None },
             ],
             positionals: vec![],
         }],
@@ -123,6 +135,19 @@ fn main() -> word2ket::Result<()> {
         cfg.snapshot.path = load.to_string();
     }
     let reload_path = parsed.get("reload").map(|s| s.to_string());
+
+    if let Some(topo_file) = parsed.get("cluster") {
+        let mix = Mix { batch, knn_frac, topk };
+        return run_cluster(
+            topo_file,
+            &cfg,
+            requests,
+            clients,
+            &mix,
+            zipf_s,
+            reload_path.as_deref(),
+        );
+    }
 
     let (state, listener, addr) = server::spawn(&cfg)?;
     let accept_state = state.clone();
@@ -292,6 +317,196 @@ fn run_binary_client(
     }
     client.quit().ok();
     report
+}
+
+/// Self-hosted cluster demo: per-shard snapshots, one stock server per
+/// replica, Zipf load through the scatter-gather router, optional mid-load
+/// rolling reload. See the module docs.
+fn run_cluster(
+    topo_file: &str,
+    cfg: &ExperimentConfig,
+    requests: usize,
+    clients: usize,
+    mix: &Mix,
+    zipf_s: f64,
+    reload_dir: Option<&str>,
+) -> word2ket::Result<()> {
+    let src = std::fs::read_to_string(topo_file).map_err(|e| {
+        word2ket::Error::Config(format!("cannot read topology {topo_file}: {e}"))
+    })?;
+    let doc = TomlDoc::parse(&src)?;
+    let shape = Topology::from_doc(&doc)?;
+    let router_cfg = RouterConfig::from_doc(&doc);
+    let mut cfg = cfg.clone();
+    cfg.model.vocab = shape.vocab();
+    cfg.validate()?;
+
+    // One global store, sliced into shard snapshot files.
+    let mut rng = Rng::new(cfg.train.seed);
+    let store = word2ket::embedding::build(
+        &cfg.embedding,
+        cfg.model.vocab,
+        cfg.model.emb_dim,
+        &mut rng,
+    );
+    let dir = std::env::temp_dir().join(format!("w2k_cluster_demo_{}", std::process::id()));
+    let opts =
+        word2ket::snapshot::SaveOptions { codec: cfg.snapshot.codec, ..Default::default() };
+    let saved = save_shard_snapshots(store.as_ref(), &shape, &dir, &opts)?;
+
+    // One stock single-node server per replica, booted from its shard file
+    // on an OS-assigned loopback port.
+    let mut nodes = Vec::new();
+    let mut addrs = Vec::new();
+    for (s, (path, info)) in saved.iter().enumerate() {
+        let mut group_addrs = Vec::new();
+        for _ in 0..shape.replicas(s).len() {
+            let mut shard_cfg = cfg.clone();
+            shard_cfg.server.addr = "127.0.0.1:0".into();
+            shard_cfg.snapshot.path = path.display().to_string();
+            let (state, listener, addr) = server::spawn(&shard_cfg)?;
+            let accept_state = state.clone();
+            let accept = std::thread::spawn(move || server::accept_loop(listener, accept_state));
+            group_addrs.push(addr);
+            nodes.push((state, accept));
+        }
+        println!(
+            "shard {s}: {} bytes on disk, replicas at {}",
+            info.bytes,
+            group_addrs.join(", ")
+        );
+        addrs.push(group_addrs);
+    }
+    let topo = shape.with_addrs(addrs)?;
+    println!(
+        "cluster up: {} (router probes every {:?})",
+        topo.describe(),
+        router_cfg.probe_interval
+    );
+
+    let router = Router::new(topo, router_cfg);
+    let zipf = Arc::new(ZipfSampler::new(cfg.model.vocab, zipf_s));
+    let wall = Timer::start();
+    let reload_at = requests / 3;
+    let total = std::thread::scope(|scope| -> u64 {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let router = router.clone();
+                let zipf = zipf.clone();
+                scope.spawn(move || -> (Summary, u64, u64, u64) {
+                    let mut rng = Rng::new(500 + c as u64);
+                    let mut lat = Summary::new();
+                    let (mut lookups, mut knn, mut rejected) = (0u64, 0u64, 0u64);
+                    let mut ids = vec![0u32; mix.batch];
+                    for _ in 0..requests {
+                        if mix.knn_frac > 0.0 && rng.chance(mix.knn_frac) {
+                            let q = zipf.sample(&mut rng) as u32;
+                            let t = Timer::start();
+                            match router.knn(q, mix.topk as u32) {
+                                Ok(ns) => {
+                                    assert!(ns.len() <= mix.topk);
+                                    lat.add(t.elapsed_us());
+                                    knn += 1;
+                                }
+                                // Backpressure is part of the show; a
+                                // malformed request is a bug.
+                                Err(e) => {
+                                    assert!(!matches!(
+                                        e,
+                                        word2ket::cluster::RouterError::OutOfRange
+                                            | word2ket::cluster::RouterError::BadQuery
+                                    ));
+                                    rejected += 1;
+                                }
+                            }
+                            continue;
+                        }
+                        for id in ids.iter_mut() {
+                            *id = zipf.sample(&mut rng) as u32;
+                        }
+                        let t = Timer::start();
+                        match router.lookup(&ids) {
+                            Ok(rows) => {
+                                assert_eq!(rows.len(), mix.batch);
+                                lat.add(t.elapsed_us());
+                                lookups += 1;
+                            }
+                            Err(e) => {
+                                assert!(!matches!(
+                                    e,
+                                    word2ket::cluster::RouterError::OutOfRange
+                                        | word2ket::cluster::RouterError::BadQuery
+                                ));
+                                rejected += 1;
+                            }
+                        }
+                    }
+                    (lat, lookups, knn, rejected)
+                })
+            })
+            .collect();
+
+        // Optional zero-downtime roll while the clients hammer away.
+        if let Some(rd) = reload_dir {
+            while router.stats().aggregate.served == 0 && wall.elapsed().as_secs() < 10 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            let rd = std::path::Path::new(rd);
+            save_shard_snapshots(store.as_ref(), router.topology(), rd, &opts)
+                .expect("save generation-2 shard snapshots");
+            match router.rolling_reload_dir(rd) {
+                Ok(generations) => println!(
+                    "rolling reload done after ~{} requests: shard generations {generations:?}",
+                    reload_at
+                ),
+                Err(e) => eprintln!("rolling reload failed: {e}"),
+            }
+        }
+
+        let mut total = 0u64;
+        for h in handles {
+            let (lat, lookups, knn, rejected) = h.join().expect("client thread");
+            total += lookups + knn;
+            println!(
+                "  client done: p50 {:.0}µs p99 {:.0}µs over {} reqs \
+                 ({lookups} lookups, {knn} knn, {rejected} rejected)",
+                lat.p50(),
+                lat.p99(),
+                lat.len()
+            );
+        }
+        total
+    });
+
+    let secs = wall.elapsed().as_secs_f64();
+    let cs = router.stats();
+    println!(
+        "\nCLUSTER TOTAL: {total} reqs in {secs:.2}s → {:.0} reqs/s across {} shards \
+         ({}/{} replicas healthy, {} failovers, generations {}..{})",
+        total as f64 / secs,
+        router.topology().n_shards(),
+        cs.healthy_replicas,
+        cs.total_replicas,
+        cs.failovers,
+        cs.min_generation,
+        cs.max_generation
+    );
+    println!(
+        "aggregate STATS: served={} cache_hits={} cache_misses={} knn_queries={} p99_us={:.0}",
+        cs.aggregate.served,
+        cs.aggregate.cache_hits,
+        cs.aggregate.cache_misses,
+        cs.aggregate.knn_queries,
+        cs.aggregate.p99_us
+    );
+
+    router.shutdown();
+    for (state, accept) in nodes {
+        state.shutdown();
+        accept.join().ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
 }
 
 /// Drive `requests` Zipf requests over the text protocol, mixing batched

@@ -1,0 +1,226 @@
+//! Bench: scatter-gather cluster serving vs a single node — LOOKUP and KNN
+//! throughput and tail latency at 1, 2 and 4 shards under the existing
+//! Zipf load shape.
+//!
+//! What this quantifies: the router adds a hop (and, for KNN, a fan-out to
+//! every shard plus an exact merge), while sharding divides per-node scan
+//! and reconstruction work by N. Lookups are dominated by the extra hop;
+//! KNN — whose per-shard brute scan is the real compute — is where the
+//! cluster pays for itself. Emits `BENCH_cluster.json` so the scaling
+//! trajectory accumulates across PRs.
+//!
+//! Run: cargo bench --bench cluster_scatter    (W2K_BENCH_FAST=1 to smoke)
+
+use word2ket::bench::header;
+use word2ket::cluster::{save_shard_snapshots, Router, RouterConfig, ShardStrategy, Topology};
+use word2ket::config::ExperimentConfig;
+use word2ket::coordinator::server::{self, ServerState};
+use word2ket::embedding::Word2KetXS;
+use word2ket::serving::BinaryClient;
+use word2ket::snapshot::SaveOptions;
+use word2ket::util::{Json, Rng, Summary, Timer, ZipfSampler};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIM: usize = 64;
+const BATCH: usize = 8;
+const TOPK: u32 = 10;
+const ZIPF_S: f64 = 1.05;
+const THREADS: usize = 4;
+
+struct Node {
+    state: Arc<ServerState>,
+    addr: String,
+    accept: std::thread::JoinHandle<()>,
+}
+
+fn spawn_node(snap: &Path) -> Node {
+    let mut cfg = ExperimentConfig::default();
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.serving.batch_window_us = 50;
+    cfg.serving.max_batch = 256;
+    cfg.snapshot.path = snap.display().to_string();
+    let (state, listener, addr) = server::spawn(&cfg).expect("shard server");
+    let st = state.clone();
+    let accept = std::thread::spawn(move || server::accept_loop(listener, st));
+    Node { state, addr, accept }
+}
+
+fn kill(node: Node) {
+    node.state.shutdown();
+    node.accept.join().ok();
+}
+
+/// Where a load thread sends its requests.
+enum Target {
+    /// Straight at one server over its own binary connection per thread.
+    Direct(String),
+    /// Through the scatter-gather router.
+    Routed(Router),
+}
+
+/// `threads` workers × `iters` requests of one kind; returns
+/// (requests/s, per-request latency summary).
+fn run_load(target: &Target, vocab: usize, iters: usize, knn: bool) -> (f64, Summary) {
+    let wall = Timer::start();
+    let merged = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                scope.spawn(move || {
+                    let zipf = ZipfSampler::new(vocab, ZIPF_S);
+                    let mut rng = Rng::new(900 + t as u64);
+                    let mut lat = Summary::new();
+                    let mut direct = match target {
+                        Target::Direct(addr) => Some(BinaryClient::connect(addr).unwrap()),
+                        Target::Routed(_) => None,
+                    };
+                    let mut ids = vec![0u32; BATCH];
+                    for _ in 0..iters {
+                        if knn {
+                            let q = zipf.sample(&mut rng) as u32;
+                            let timer = Timer::start();
+                            let n = match (&mut direct, target) {
+                                (Some(c), _) => c.knn(q, TOPK).unwrap().len(),
+                                (None, Target::Routed(r)) => r.knn(q, TOPK).unwrap().len(),
+                                _ => unreachable!(),
+                            };
+                            assert!(n > 0);
+                            lat.add(timer.elapsed_us());
+                        } else {
+                            for id in ids.iter_mut() {
+                                *id = zipf.sample(&mut rng) as u32;
+                            }
+                            let timer = Timer::start();
+                            let n = match (&mut direct, target) {
+                                (Some(c), _) => c.lookup(&ids).unwrap().len(),
+                                (None, Target::Routed(r)) => r.lookup(&ids).unwrap().len(),
+                                _ => unreachable!(),
+                            };
+                            assert_eq!(n, BATCH);
+                            lat.add(timer.elapsed_us());
+                        }
+                    }
+                    if let Some(c) = direct {
+                        c.quit().ok();
+                    }
+                    lat
+                })
+            })
+            .collect();
+        let mut merged = Summary::new();
+        for h in handles {
+            merged.merge(&h.join().expect("bench thread"));
+        }
+        merged
+    });
+    let reqs = (THREADS * iters) as f64;
+    (reqs / wall.elapsed().as_secs_f64(), merged)
+}
+
+struct RowOut {
+    name: String,
+    workload: &'static str,
+    shards: usize,
+    rps: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+fn record(
+    out: &mut Vec<RowOut>,
+    name: &str,
+    workload: &'static str,
+    shards: usize,
+    r: (f64, Summary),
+) {
+    let (rps, lat) = r;
+    println!(
+        "  {name:<24} {workload:<6} {rps:>9.0} req/s  p50 {:>6.0}µs  p99 {:>6.0}µs",
+        lat.p50(),
+        lat.p99()
+    );
+    out.push(RowOut {
+        name: name.to_string(),
+        workload,
+        shards,
+        rps,
+        p50_us: lat.p50(),
+        p99_us: lat.p99(),
+    });
+}
+
+fn main() {
+    header(
+        "Cluster scatter-gather: 1/2/4 shards vs single node (Zipf load)",
+        "compact tables are cheap to partition and replicate; the router \
+         fans KNN to every shard and exactly merges the per-shard heaps",
+    );
+    let fast = std::env::var("W2K_BENCH_FAST").is_ok();
+    let vocab = if fast { 4_000 } else { 20_000 };
+    let (lookup_iters, knn_iters) = if fast { (100, 20) } else { (1_000, 150) };
+
+    let mut rng = Rng::new(7);
+    let store = Word2KetXS::random(vocab, DIM, 2, 2, &mut rng);
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("w2k_bench_cluster_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut out: Vec<RowOut> = Vec::new();
+
+    // Baseline: one node over the full snapshot, direct connections.
+    let full = dir.join("full.snap");
+    word2ket::snapshot::save_store(&store, &full, &SaveOptions::default()).unwrap();
+    let single = spawn_node(&full);
+    let target = Target::Direct(single.addr.clone());
+    println!("single node ({vocab} × {DIM}, xs 2/2):");
+    record(&mut out, "single-node", "lookup", 0, run_load(&target, vocab, lookup_iters, false));
+    record(&mut out, "single-node", "knn", 0, run_load(&target, vocab, knn_iters, true));
+    kill(single);
+
+    // Routed: 1 shard isolates router overhead; 2 and 4 divide the work.
+    for shards in [1usize, 2, 4] {
+        let placeholder = (0..shards).map(|_| vec!["127.0.0.1:0".to_string()]).collect();
+        let shape = Topology::new(vocab, ShardStrategy::Range, placeholder).unwrap();
+        let shard_dir = dir.join(format!("{shards}sh"));
+        let saved =
+            save_shard_snapshots(&store, &shape, &shard_dir, &SaveOptions::default()).unwrap();
+        let nodes: Vec<Node> = saved.iter().map(|(p, _)| spawn_node(p)).collect();
+        let addrs: Vec<Vec<String>> = nodes.iter().map(|n| vec![n.addr.clone()]).collect();
+        let topo = shape.with_addrs(addrs).unwrap();
+        let router_cfg = RouterConfig {
+            probe_interval: Duration::ZERO,
+            ..RouterConfig::default()
+        };
+        let router = Router::new(topo, router_cfg);
+        let target = Target::Routed(router.clone());
+        println!("router, {shards} shard(s):");
+        let name = format!("router-{shards}shard");
+        record(&mut out, &name, "lookup", shards, run_load(&target, vocab, lookup_iters, false));
+        record(&mut out, &name, "knn", shards, run_load(&target, vocab, knn_iters, true));
+        router.shutdown();
+        drop(target);
+        for n in nodes {
+            kill(n);
+        }
+    }
+
+    let json = Json::arr(out.iter().map(|r| {
+        Json::obj(vec![
+            ("name", Json::str(r.name.clone())),
+            ("workload", Json::str(r.workload.to_string())),
+            ("shards", Json::num(r.shards as f64)),
+            ("rps", Json::num(r.rps)),
+            ("p50_us", Json::num(r.p50_us)),
+            ("p99_us", Json::num(r.p99_us)),
+            ("vocab", Json::num(vocab as f64)),
+            ("dim", Json::num(DIM as f64)),
+            ("threads", Json::num(THREADS as f64)),
+        ])
+    }));
+    let path = "BENCH_cluster.json";
+    match std::fs::write(path, json.pretty()) {
+        Ok(()) => println!("\nwrote {path} ({} configs)", out.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -245,6 +245,20 @@ pub fn app() -> App {
                 ],
             },
             CommandSpec {
+                name: "cluster",
+                about: "vocabulary-sharded multi-node serving: shard snapshots, scatter-gather router",
+                opts: {
+                    let mut o = common_train.clone();
+                    o.push(OptSpec { name: "addr", help: "router listen address (route)", takes_value: true, repeated: false, default: Some("127.0.0.1:7900") });
+                    o.push(OptSpec { name: "out", help: "shard snapshot directory (shard); also what rolling RELOAD deploys from", takes_value: true, repeated: false, default: Some("shards") });
+                    o
+                },
+                positionals: vec![
+                    ("action", "route | shard | status"),
+                    ("topology", "topology TOML file with a [cluster] section"),
+                ],
+            },
+            CommandSpec {
                 name: "params",
                 about: "print paper Tables 1-3 #Params / space-saving accounting",
                 opts: vec![],
@@ -325,6 +339,20 @@ mod tests {
         assert!(!p.flag("mmap"));
         // Too many positionals is a CLI error.
         assert!(a.parse(&argv(&["snapshot", "save", "a.snap", "extra"])).is_err());
+    }
+
+    #[test]
+    fn cluster_command_parses() {
+        let a = app();
+        let p = a
+            .parse(&argv(&["cluster", "shard", "topo.toml", "--out", "deploy/shards"]))
+            .unwrap();
+        assert_eq!(p.command, "cluster");
+        assert_eq!(p.positionals, vec!["shard".to_string(), "topo.toml".to_string()]);
+        assert_eq!(p.get("out"), Some("deploy/shards"));
+        let p = a.parse(&argv(&["cluster", "route", "topo.toml"])).unwrap();
+        assert_eq!(p.get("addr"), Some("127.0.0.1:7900"));
+        assert!(a.parse(&argv(&["cluster", "route", "t.toml", "x"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Replica health tracking: consecutive-failure ejection with probe-driven
+//! re-admission.
+//!
+//! Every replica is `healthy` until `eject_after` *consecutive* failures
+//! (request transport errors and failed `PING` probes both count; any
+//! success resets the streak). An ejected replica is skipped by the
+//! router's first-choice replica selection — killing a node degrades tail
+//! latency (one failed attempt per in-flight request until ejection), never
+//! correctness — and is re-admitted the moment a probe (or a desperate
+//! last-resort request, see the router's two-pass selection) succeeds
+//! again. All state is atomics: health checks sit on the request path and
+//! must not take locks.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+
+/// One replica's failure-streak state.
+#[derive(Debug, Default)]
+struct ReplicaHealth {
+    consecutive_failures: AtomicU32,
+    ejected: AtomicBool,
+    ejections: AtomicU64,
+}
+
+/// Health state for every replica in the cluster, indexed `[shard][replica]`.
+#[derive(Debug)]
+pub struct HealthBoard {
+    replicas: Vec<Vec<ReplicaHealth>>,
+    eject_after: u32,
+}
+
+impl HealthBoard {
+    /// `shape[s]` is shard `s`'s replica count; `eject_after` is the
+    /// consecutive-failure threshold (clamped to ≥ 1).
+    pub fn new(shape: &[usize], eject_after: u32) -> HealthBoard {
+        HealthBoard {
+            replicas: shape
+                .iter()
+                .map(|&n| (0..n).map(|_| ReplicaHealth::default()).collect())
+                .collect(),
+            eject_after: eject_after.max(1),
+        }
+    }
+
+    pub fn is_healthy(&self, shard: usize, replica: usize) -> bool {
+        !self.replicas[shard][replica].ejected.load(Ordering::Relaxed)
+    }
+
+    /// A request or probe succeeded: reset the streak and re-admit.
+    pub fn record_success(&self, shard: usize, replica: usize) {
+        let r = &self.replicas[shard][replica];
+        r.consecutive_failures.store(0, Ordering::Relaxed);
+        r.ejected.store(false, Ordering::Relaxed);
+    }
+
+    /// A request or probe failed; returns `true` if this failure crossed
+    /// the ejection threshold.
+    pub fn record_failure(&self, shard: usize, replica: usize) -> bool {
+        let r = &self.replicas[shard][replica];
+        let streak = r.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= self.eject_after && !r.ejected.swap(true, Ordering::Relaxed) {
+            r.ejections.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(s, group)| (0..group.len()).filter(|&r| self.is_healthy(s, r)).count())
+            .sum()
+    }
+
+    pub fn total(&self) -> usize {
+        self.replicas.iter().map(Vec::len).sum()
+    }
+
+    /// Healthy replicas within one shard.
+    pub fn healthy_in_shard(&self, shard: usize) -> usize {
+        (0..self.replicas[shard].len()).filter(|&r| self.is_healthy(shard, r)).count()
+    }
+
+    /// Lifetime ejection events across the cluster (monotonic).
+    pub fn ejections(&self) -> u64 {
+        self.replicas
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|r| r.ejections.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ejects_after_consecutive_failures_only() {
+        let b = HealthBoard::new(&[2, 1], 3);
+        assert_eq!(b.total(), 3);
+        assert_eq!(b.healthy_count(), 3);
+
+        // Interleaved successes keep resetting the streak.
+        for _ in 0..5 {
+            assert!(!b.record_failure(0, 0));
+            assert!(!b.record_failure(0, 0));
+            b.record_success(0, 0);
+        }
+        assert!(b.is_healthy(0, 0));
+
+        // Three in a row ejects — exactly once.
+        assert!(!b.record_failure(0, 0));
+        assert!(!b.record_failure(0, 0));
+        assert!(b.record_failure(0, 0), "third consecutive failure must eject");
+        assert!(!b.record_failure(0, 0), "already ejected");
+        assert!(!b.is_healthy(0, 0));
+        assert_eq!(b.healthy_count(), 2);
+        assert_eq!(b.healthy_in_shard(0), 1);
+        assert_eq!(b.ejections(), 1);
+
+        // Other replicas are untouched.
+        assert!(b.is_healthy(0, 1));
+        assert!(b.is_healthy(1, 0));
+    }
+
+    #[test]
+    fn readmission_on_success() {
+        let b = HealthBoard::new(&[1], 1);
+        assert!(b.record_failure(0, 0), "threshold 1 ejects immediately");
+        assert!(!b.is_healthy(0, 0));
+        // The node came back: one successful probe re-admits it.
+        b.record_success(0, 0);
+        assert!(b.is_healthy(0, 0));
+        // And the streak restarted from zero.
+        assert!(b.record_failure(0, 0));
+        assert_eq!(b.ejections(), 2);
+    }
+
+    #[test]
+    fn zero_threshold_clamps_to_one() {
+        let b = HealthBoard::new(&[1], 0);
+        assert!(b.record_failure(0, 0));
+        assert!(!b.is_healthy(0, 0));
+    }
+}

@@ -1,0 +1,52 @@
+//! Vocabulary-sharded multi-node serving: a topology-aware routing tier
+//! that turns N single-node embedding servers into one logical service.
+//!
+//! The paper's argument scales *out*, not just down: a 100×-smaller
+//! embedding table is cheap to replicate and cheap to partition, so a huge
+//! vocabulary can be served by many small nodes. This subsystem adds the
+//! distribution layer over everything built so far — the shard servers are
+//! stock `serving/` + `snapshot/` single-node servers, booted from per-
+//! shard snapshot files; the cluster logic lives entirely in the router.
+//!
+//! ```text
+//!                         clients (text or binary wire)
+//!                                    │
+//!                        ┌───────────▼───────────┐
+//!                        │   Router (cluster/)   │  scatter-gather,
+//!                        │  ┌─────────────────┐  │  failover, health,
+//!                        │  │ Topology        │  │  STATS roll-up,
+//!                        │  │ HealthBoard     │  │  rolling reload
+//!                        │  └─────────────────┘  │
+//!                        └──┬─────────┬───────┬──┘
+//!             OP_LOOKUP │ OP_KNN_VEC │ OP_PING │ OP_RELOAD (downstream wire)
+//!                ┌──────▼───┐  ┌─────▼────┐  ┌─▼────────┐
+//!                │ shard 0  │  │ shard 1  │  │ shard N-1│   each: replicas
+//!                │ r0 r1 …  │  │ r0 r1 …  │  │ r0 r1 …  │   serving one
+//!                └──────────┘  └──────────┘  └──────────┘   vocab slice
+//!                 shard0.snap   shard1.snap    shardN-1.snap
+//! ```
+//!
+//! * [`Topology`] — how the vocabulary splits (range or hash), O(1) id
+//!   mapping in both directions, replica address book; parsed from a
+//!   `[cluster]` TOML section and embedded per shard in the snapshot
+//!   manifest ([`crate::snapshot::ShardRange`]).
+//! * [`save_shard_snapshots`] — slice a global store into per-shard
+//!   snapshot files (word2ket slices stay factored).
+//! * [`Router`] — pooled downstream
+//!   [`BinaryClient`](crate::serving::BinaryClient) connections,
+//!   scatter-gather requests, replica failover, background health probing,
+//!   cluster STATS, rolling zero-downtime reload.
+//! * [`server`] — the router as a listener: the same text + binary
+//!   protocols upstream, so clients cannot tell a router from a node.
+
+pub mod health;
+pub mod router;
+pub mod server;
+pub mod shard;
+pub mod topology;
+
+pub use health::HealthBoard;
+pub use router::{ClusterStats, ReplicaReport, Router, RouterConfig, RouterError};
+pub use server::RouterState;
+pub use shard::{save_shard_snapshots, shard_snapshot_path, shard_store};
+pub use topology::{ShardStrategy, Topology};

@@ -1,0 +1,813 @@
+//! Scatter-gather router: N binary-protocol shard servers behind one
+//! client-facing façade.
+//!
+//! The router owns one pooled [`BinaryClient`] connection per replica
+//! (lazily established, transparently re-established) and speaks the
+//! existing downstream wire protocol — shard servers are stock single-node
+//! servers, unaware they are part of a cluster. Per request:
+//!
+//! * **LOOKUP** — ids are bucketed by owning shard ([`Topology::locate`]),
+//!   one `OP_LOOKUP` per involved shard fans out on scoped threads, and
+//!   rows are scattered back into request positions — reassembly is in
+//!   request order regardless of shard reply order.
+//! * **DOT** — co-routed to the owning shard when both words live there
+//!   (one `OP_DOT`, factored server-side); otherwise the two rows are
+//!   fetched from their shards and the dot runs router-side.
+//! * **KNN** — the query row is fetched from its owning shard, scattered to
+//!   every shard as `OP_KNN_VEC`, and the per-shard top-(k+1) heaps are
+//!   merged with [`merge_top_k`] into an exact global top-k (ties by global
+//!   id). When shards score the same dense rows a single node would (the
+//!   materialized slices `save_shard_snapshots` writes for every kind but
+//!   word2ket), the merged answer is *bit-identical* to the unsharded
+//!   scan; factored word2ket slices agree within float ulps, so exact-tie
+//!   neighbors can swap order — the same noise the single node's own
+//!   factored-vs-dense paths exhibit.
+//! * **STATS** — fanned to every replica and rolled up (sums for counters,
+//!   max for latency percentiles, min for the cluster generation).
+//! * **RELOAD** — rolled across the cluster one replica at a time, each
+//!   swap verified against `STATS` generation counters, so a snapshot
+//!   deploys with zero downtime ([`Router::rolling_reload`]).
+//!
+//! Failover: replica selection rotates round-robin over *healthy* replicas
+//! (see [`HealthBoard`]); a transport error drops the pooled connection,
+//! records the failure, and moves to the next replica — a killed replica
+//! costs latency, never a failed client request, as long as one replica of
+//! each shard survives. A background prober `OP_PING`s every replica (on
+//! dedicated connections) so ejected nodes are re-admitted when they
+//! return.
+//!
+//! Connection model: **one pooled connection per replica**, so concurrent
+//! requests routed to the same replica serialize on it (probes, STATS
+//! fan-out, and rolling reload deliberately use short-lived dedicated
+//! connections and never touch the slot). For the target deployment —
+//! many shards, R small — request concurrency spreads across shards; a
+//! per-replica connection *pool* is the natural next scaling step if one
+//! replica must absorb many concurrent routers' worth of traffic.
+
+use super::health::HealthBoard;
+use super::shard::shard_snapshot_path;
+use super::topology::Topology;
+use crate::config::TomlDoc;
+use crate::error::Error;
+use crate::index::{merge_top_k, Neighbor};
+use crate::serving::wire::{self, WireError, WireStats};
+use crate::serving::BinaryClient;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+/// Router knobs, parsed from the same `[cluster]` section as the topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouterConfig {
+    /// Downstream TCP connect deadline.
+    pub connect_timeout: Duration,
+    /// Downstream per-operation read/write deadline.
+    pub io_timeout: Duration,
+    /// Health-probe period; zero disables the prober (requests still
+    /// record failures, but ejected replicas are only re-admitted by the
+    /// last-resort retry pass).
+    pub probe_interval: Duration,
+    /// Consecutive failures before a replica is ejected.
+    pub eject_after: u32,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            connect_timeout: Duration::from_millis(1000),
+            io_timeout: Duration::from_millis(5000),
+            probe_interval: Duration::from_millis(1000),
+            eject_after: 3,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Read overrides from a `[cluster]` section (`connect_timeout_ms`,
+    /// `io_timeout_ms`, `probe_interval_ms`, `eject_after`).
+    pub fn from_doc(doc: &TomlDoc) -> RouterConfig {
+        let d = RouterConfig::default();
+        let ms = |key: &str, dflt: Duration| {
+            Duration::from_millis(doc.usize_or(key, dflt.as_millis() as usize) as u64)
+        };
+        RouterConfig {
+            connect_timeout: ms("cluster.connect_timeout_ms", d.connect_timeout),
+            io_timeout: ms("cluster.io_timeout_ms", d.io_timeout),
+            probe_interval: ms("cluster.probe_interval_ms", d.probe_interval),
+            eject_after: doc.usize_or("cluster.eject_after", d.eject_after as usize) as u32,
+        }
+    }
+}
+
+/// Why a routed request failed.
+#[derive(Debug)]
+pub enum RouterError {
+    /// A global id is outside the topology's vocabulary.
+    OutOfRange,
+    /// Malformed request (empty lookup, zero k).
+    BadQuery,
+    /// Every replica of a shard failed; `last` is the final transport
+    /// error observed.
+    ShardDown { shard: usize, last: String },
+    /// A downstream server answered with an error status, or the transport
+    /// failed in a non-failover context.
+    Wire(WireError),
+    /// A rolling reload step failed or verified wrong.
+    Reload { shard: usize, replica: usize, message: String },
+}
+
+impl std::fmt::Display for RouterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouterError::OutOfRange => write!(f, "id outside the cluster vocabulary"),
+            RouterError::BadQuery => write!(f, "bad query"),
+            RouterError::ShardDown { shard, last } => {
+                write!(f, "shard {shard}: every replica failed (last: {last})")
+            }
+            RouterError::Wire(e) => write!(f, "downstream: {e}"),
+            RouterError::Reload { shard, replica, message } => {
+                write!(f, "rolling reload at shard {shard} replica {replica}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouterError {}
+
+impl From<WireError> for RouterError {
+    fn from(e: WireError) -> Self {
+        RouterError::Wire(e)
+    }
+}
+
+impl From<RouterError> for Error {
+    fn from(e: RouterError) -> Self {
+        Error::Server(e.to_string())
+    }
+}
+
+impl RouterError {
+    /// The upstream wire status the router's own listener answers with.
+    pub fn status_code(&self) -> u32 {
+        match self {
+            RouterError::OutOfRange => wire::STATUS_RANGE,
+            RouterError::BadQuery => wire::STATUS_BAD_REQUEST,
+            // A fully-down shard is indistinguishable from overload from
+            // the client's seat: retry later, possibly elsewhere.
+            RouterError::ShardDown { .. } => wire::STATUS_OVERLOADED,
+            RouterError::Wire(WireError::Status(s)) => *s,
+            RouterError::Wire(WireError::TimedOut) => wire::STATUS_TIMEOUT,
+            RouterError::Wire(_) => wire::STATUS_TIMEOUT,
+            RouterError::Reload { .. } => wire::STATUS_RELOAD_FAILED,
+        }
+    }
+}
+
+/// One replica's view in a [`ClusterStats`] report.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub shard: usize,
+    pub replica: usize,
+    pub addr: String,
+    pub healthy: bool,
+    /// `None` when the replica did not answer STATS.
+    pub stats: Option<WireStats>,
+}
+
+/// Cluster-wide STATS roll-up.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    /// Counters summed across replicas; latency percentiles are the
+    /// cluster-wide maximum (the conservative tail); `model_generation` is
+    /// the *minimum* across replicas — the generation every node has
+    /// reached; `snapshot_bytes` sums.
+    pub aggregate: WireStats,
+    pub replicas: Vec<ReplicaReport>,
+    pub healthy_replicas: usize,
+    pub total_replicas: usize,
+    /// Requests that succeeded only after failing over off a replica.
+    pub failovers: u64,
+    pub min_generation: u64,
+    pub max_generation: u64,
+}
+
+/// One pooled downstream connection, lazily established.
+type Slot = Mutex<Option<BinaryClient>>;
+
+struct Inner {
+    topo: Topology,
+    cfg: RouterConfig,
+    /// Pooled downstream connections, `[shard][replica]`; `None` until the
+    /// first request (or probe) needs one.
+    slots: Vec<Vec<Slot>>,
+    health: HealthBoard,
+    next: Vec<AtomicUsize>,
+    dim: AtomicUsize,
+    stop: AtomicBool,
+    failovers: AtomicU64,
+}
+
+/// The cluster router (cheaply cloneable handle; see the module docs).
+#[derive(Clone)]
+pub struct Router {
+    inner: Arc<Inner>,
+}
+
+impl Router {
+    /// Build a router over `topo`; spawns the health-probe loop unless
+    /// `cfg.probe_interval` is zero. No connections are opened yet.
+    pub fn new(topo: Topology, cfg: RouterConfig) -> Router {
+        let shape: Vec<usize> = (0..topo.n_shards()).map(|s| topo.replicas(s).len()).collect();
+        let inner = Arc::new(Inner {
+            slots: shape
+                .iter()
+                .map(|&n| (0..n).map(|_| Slot::new(None)).collect())
+                .collect(),
+            health: HealthBoard::new(&shape, cfg.eject_after),
+            next: shape.iter().map(|_| AtomicUsize::new(0)).collect(),
+            dim: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            failovers: AtomicU64::new(0),
+            topo,
+            cfg,
+        });
+        if !inner.cfg.probe_interval.is_zero() {
+            spawn_prober(&inner);
+        }
+        Router { inner }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.inner.topo
+    }
+
+    pub fn health(&self) -> &HealthBoard {
+        &self.inner.health
+    }
+
+    /// Requests that succeeded only after a replica failover.
+    pub fn failovers(&self) -> u64 {
+        self.inner.failovers.load(Ordering::Relaxed)
+    }
+
+    /// Stop the probe loop. Pooled connections close as the router drops.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Embedding dimensionality served by the cluster (from the first
+    /// downstream hello; forces a connection if none exists yet).
+    pub fn dim(&self) -> Result<usize, RouterError> {
+        let d = self.inner.dim.load(Ordering::Relaxed);
+        if d != 0 {
+            return Ok(d);
+        }
+        self.inner.with_replica(0, |c| Ok(c.dim))
+    }
+
+    /// Fetch rows for global `ids`, one `dim`-length vector per id, in
+    /// request order (scatter by shard, gather by position).
+    pub fn lookup(&self, ids: &[u32]) -> Result<Vec<Vec<f32>>, RouterError> {
+        let inner = &*self.inner;
+        if ids.is_empty() {
+            return Err(RouterError::BadQuery);
+        }
+        let vocab = inner.topo.vocab();
+        let n = inner.topo.n_shards();
+        // positions[s] / locals[s]: which request slots shard s fills, and
+        // with which shard-local ids.
+        let mut positions: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut locals: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (pos, &gid) in ids.iter().enumerate() {
+            if gid as usize >= vocab {
+                return Err(RouterError::OutOfRange);
+            }
+            let (s, local) = inner.topo.locate(gid as usize);
+            positions[s].push(pos);
+            locals[s].push(local as u32);
+        }
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); ids.len()];
+        let involved: Vec<usize> = (0..n).filter(|&s| !positions[s].is_empty()).collect();
+        if let [s] = involved[..] {
+            // Single-shard fast path: no scatter threads for the common
+            // small request.
+            let rows = inner.with_replica(s, |c| c.lookup(&locals[s]))?;
+            for (row, &pos) in rows.into_iter().zip(&positions[s]) {
+                out[pos] = row;
+            }
+            return Ok(out);
+        }
+        let gathered = scatter(&involved, |s| inner.with_replica(s, |c| c.lookup(&locals[s])))?;
+        for (s, rows) in involved.iter().zip(gathered) {
+            for (row, &pos) in rows.into_iter().zip(&positions[*s]) {
+                out[pos] = row;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Inner product of two global ids: co-routed when one shard owns both
+    /// words (factored server-side), computed router-side from the two
+    /// fetched rows otherwise.
+    pub fn dot(&self, a: u32, b: u32) -> Result<f32, RouterError> {
+        let inner = &*self.inner;
+        let vocab = inner.topo.vocab();
+        if a as usize >= vocab || b as usize >= vocab {
+            return Err(RouterError::OutOfRange);
+        }
+        let (sa, la) = inner.topo.locate(a as usize);
+        let (sb, lb) = inner.topo.locate(b as usize);
+        if sa == sb {
+            return inner.with_replica(sa, |c| c.dot(la as u32, lb as u32));
+        }
+        let rows = self.lookup(&[a, b])?;
+        Ok(crate::tensor::dot(&rows[0], &rows[1]))
+    }
+
+    /// Exact global top-`k` neighbors of word `id` (excluded from its own
+    /// results), scatter-gathered across every shard and merged with the
+    /// single-node selection rule — bit-identical ids *and* scores to the
+    /// unsharded scan for dense shard stores (see the module docs for the
+    /// factored-word2ket ulp caveat).
+    pub fn knn(&self, id: u32, k: u32) -> Result<Vec<(u32, f32)>, RouterError> {
+        let inner = &*self.inner;
+        if id as usize >= inner.topo.vocab() {
+            return Err(RouterError::OutOfRange);
+        }
+        if k == 0 {
+            return Err(RouterError::BadQuery);
+        }
+        // The query row comes from its owning shard like any lookup...
+        let query = self.lookup(&[id])?.remove(0);
+        // ...then every shard scores it. Shards cannot exclude the query
+        // word (they see only a vector), so each is asked for k+1 and the
+        // gather filters the query id out before the merge.
+        let merged = self.scatter_knn(&query, k.saturating_add(1), Some(id))?;
+        Ok(take_k(merged, k as usize))
+    }
+
+    /// Exact global top-`k` for an external query vector (no exclusion).
+    pub fn knn_vec(&self, query: &[f32], k: u32) -> Result<Vec<(u32, f32)>, RouterError> {
+        if k == 0 || query.is_empty() {
+            return Err(RouterError::BadQuery);
+        }
+        let merged = self.scatter_knn(query, k, None)?;
+        Ok(take_k(merged, k as usize))
+    }
+
+    /// Scatter `OP_KNN_VEC` to every shard, map local ids to global, drop
+    /// `exclude`, and merge the partial heaps exactly.
+    fn scatter_knn(
+        &self,
+        query: &[f32],
+        per_shard_k: u32,
+        exclude: Option<u32>,
+    ) -> Result<Vec<Neighbor>, RouterError> {
+        let inner = &*self.inner;
+        let shards: Vec<usize> = (0..inner.topo.n_shards()).collect();
+        let per_shard =
+            scatter(&shards, |s| inner.with_replica(s, |c| c.knn_vec(query, per_shard_k)))?;
+        let lists = shards.iter().zip(per_shard).map(|(&s, locals)| {
+            locals
+                .into_iter()
+                .map(|(local, score)| Neighbor {
+                    id: inner.topo.global_id(s, local as usize),
+                    score,
+                })
+                .filter(|n| Some(n.id as u32) != exclude)
+                .collect()
+        });
+        // Clamp before sizing the merge heap: shards clamp hostile ks to
+        // their own vocabularies, and the router must do the same rather
+        // than let a u32::MAX k from the wire size an eager allocation.
+        let cap = (per_shard_k as usize).min(inner.topo.vocab());
+        Ok(merge_top_k(cap, lists))
+    }
+
+    /// Every (shard, replica) coordinate, shard-major.
+    fn replica_pairs(&self) -> Vec<(usize, usize)> {
+        let topo = &self.inner.topo;
+        (0..topo.n_shards())
+            .flat_map(|s| (0..topo.replicas(s).len()).map(move |r| (s, r)))
+            .collect()
+    }
+
+    /// Liveness-probe every replica once (the probe loop's body; callable
+    /// directly in tests): success re-admits, failure advances the
+    /// ejection streak. Probes fan out on scoped threads — serially, each
+    /// dead replica would add a full connect timeout to the cycle,
+    /// stretching re-admission latency for the nodes that *did* recover.
+    pub fn probe_once(&self) {
+        let inner = &*self.inner;
+        let pairs = self.replica_pairs();
+        std::thread::scope(|scope| {
+            for &(s, r) in &pairs {
+                scope.spawn(move || inner.probe_replica(s, r));
+            }
+        });
+    }
+
+    /// Fan `STATS` to every replica (in parallel — a dead replica must
+    /// cost the caller one connect timeout, not one per corpse) and roll
+    /// the answers up.
+    pub fn stats(&self) -> ClusterStats {
+        let inner = &*self.inner;
+        let pairs = self.replica_pairs();
+        let replicas: Vec<ReplicaReport> = std::thread::scope(|scope| {
+            let handles: Vec<_> = pairs
+                .iter()
+                .map(|&(s, r)| {
+                    scope.spawn(move || {
+                        // Dedicated connection: a wedged replica must not
+                        // hold its request slot's mutex hostage for an
+                        // io_timeout while clients queue behind it. Health
+                        // accounting belongs to the prober and the request
+                        // path, not to observability fetches.
+                        let stats = inner.with_admin_connection(s, r, |c| c.stats()).ok();
+                        ReplicaReport {
+                            shard: s,
+                            replica: r,
+                            addr: inner.topo.replicas(s)[r].clone(),
+                            healthy: inner.health.is_healthy(s, r),
+                            stats,
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("stats thread")).collect()
+        });
+        let mut agg = WireStats::default();
+        let (mut min_generation, mut max_generation) = (u64::MAX, 0u64);
+        let mut probes_weighted = 0.0f64;
+        for rep in replicas.iter().filter_map(|r| r.stats.as_ref()) {
+            agg.p50_us = agg.p50_us.max(rep.p50_us);
+            agg.p99_us = agg.p99_us.max(rep.p99_us);
+            agg.served += rep.served;
+            agg.cache_hits += rep.cache_hits;
+            agg.cache_misses += rep.cache_misses;
+            agg.rejected += rep.rejected;
+            agg.knn_queries += rep.knn_queries;
+            agg.knn_candidates += rep.knn_candidates;
+            probes_weighted += rep.knn_mean_probes * rep.knn_queries as f64;
+            agg.snapshot_bytes += rep.snapshot_bytes;
+            min_generation = min_generation.min(rep.model_generation);
+            max_generation = max_generation.max(rep.model_generation);
+        }
+        if min_generation == u64::MAX {
+            min_generation = 0;
+        }
+        agg.knn_mean_probes =
+            if agg.knn_queries == 0 { 0.0 } else { probes_weighted / agg.knn_queries as f64 };
+        agg.model_generation = min_generation;
+        ClusterStats {
+            aggregate: agg,
+            replicas,
+            healthy_replicas: inner.health.healthy_count(),
+            total_replicas: inner.health.total(),
+            failovers: self.failovers(),
+            min_generation,
+            max_generation,
+        }
+    }
+
+    /// Deploy new shard snapshots with zero downtime: one replica at a
+    /// time, `paths[s]` reloaded on every replica of shard `s`, each swap
+    /// verified via `STATS` (`model_generation` must step by exactly one
+    /// and the post-swap STATS must agree). While one replica swaps, its
+    /// siblings keep serving — and the swapping replica itself never drops
+    /// a request (single-node hot swap). Aborts on the first failure,
+    /// leaving untouched replicas on the old generation for the operator
+    /// to retry. Returns each shard's final generation.
+    pub fn rolling_reload(&self, paths: &[String]) -> Result<Vec<u64>, RouterError> {
+        let inner = &*self.inner;
+        if paths.len() != inner.topo.n_shards() {
+            return Err(RouterError::BadQuery);
+        }
+        let mut generations = Vec::with_capacity(paths.len());
+        for (s, path) in paths.iter().enumerate() {
+            let mut shard_generation = 0u64;
+            for r in 0..inner.topo.replicas(s).len() {
+                let step = |m: String| RouterError::Reload { shard: s, replica: r, message: m };
+                // A dedicated admin connection, NOT the pooled request
+                // slot: a snapshot load can take seconds, and holding the
+                // slot mutex for that long would stall every client
+                // request round-robined to this replica — exactly the
+                // downtime a rolling reload exists to avoid.
+                let (before, swapped, after) = inner
+                    .with_admin_connection(s, r, |c| {
+                        let before = c.stats()?.model_generation;
+                        let swapped = c.reload(path)? as u64;
+                        let after = c.stats()?.model_generation;
+                        Ok((before, swapped, after))
+                    })
+                    .map_err(|e| step(e.to_string()))?;
+                if swapped != before + 1 {
+                    return Err(step(format!(
+                        "generation stepped {before} -> {swapped}, expected {}",
+                        before + 1
+                    )));
+                }
+                if after != swapped {
+                    return Err(step(format!(
+                        "post-swap STATS reports generation {after}, reload said {swapped}"
+                    )));
+                }
+                shard_generation = after;
+            }
+            generations.push(shard_generation);
+        }
+        Ok(generations)
+    }
+
+    /// [`rolling_reload`](Self::rolling_reload) over a directory of
+    /// canonical `shard<i>.snap` files (what
+    /// [`save_shard_snapshots`](super::save_shard_snapshots) wrote) — the
+    /// form the router's own `RELOAD <dir>` wire op uses.
+    pub fn rolling_reload_dir(&self, dir: &Path) -> Result<Vec<u64>, RouterError> {
+        let paths: Vec<String> = (0..self.inner.topo.n_shards())
+            .map(|s| shard_snapshot_path(dir, s).to_string_lossy().into_owned())
+            .collect();
+        self.rolling_reload(&paths)
+    }
+}
+
+/// Run `f(shard)` for every listed shard on scoped threads and gather the
+/// results in listing order; the first error wins.
+fn scatter<T: Send>(
+    shards: &[usize],
+    f: impl Fn(usize) -> Result<T, RouterError> + Sync,
+) -> Result<Vec<T>, RouterError> {
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> =
+            shards.iter().map(|&s| scope.spawn(move || f(s))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scatter thread panicked"))
+            .collect::<Result<Vec<T>, RouterError>>()
+    })
+}
+
+/// Merged lists may hold `per_shard_k` entries; the client asked for `k`.
+fn take_k(mut merged: Vec<Neighbor>, k: usize) -> Vec<(u32, f32)> {
+    merged.truncate(k);
+    merged.into_iter().map(|n| (n.id as u32, n.score)).collect()
+}
+
+impl Inner {
+    /// Lock a replica slot, (re)connecting if needed, and run `op` on it.
+    /// On transport failure the pooled connection is dropped and the
+    /// failure recorded; server status errors are *answers* and count as
+    /// replica health successes.
+    fn try_slot<T>(
+        &self,
+        s: usize,
+        r: usize,
+        op: &mut dyn FnMut(&mut BinaryClient) -> Result<T, WireError>,
+    ) -> Result<T, WireError> {
+        let mut slot = self.slots[s][r].lock().unwrap();
+        if slot.is_none() {
+            let addr = &self.topo.replicas(s)[r];
+            let client = BinaryClient::connect_with_timeouts(
+                addr,
+                self.cfg.connect_timeout,
+                self.cfg.io_timeout,
+            );
+            match client {
+                Ok(c) => {
+                    self.dim.store(c.dim, Ordering::Relaxed);
+                    *slot = Some(c);
+                }
+                Err(e) => {
+                    self.health.record_failure(s, r);
+                    return Err(e);
+                }
+            }
+        }
+        let c = slot.as_mut().expect("connected above");
+        match op(c) {
+            Ok(v) => {
+                self.health.record_success(s, r);
+                Ok(v)
+            }
+            Err(WireError::Status(code)) => {
+                // The server answered; the replica is fine.
+                self.health.record_success(s, r);
+                Err(WireError::Status(code))
+            }
+            Err(e) => {
+                *slot = None;
+                self.health.record_failure(s, r);
+                Err(e)
+            }
+        }
+    }
+
+    /// Probe one replica on a fresh dedicated connection (never the pooled
+    /// request slot: a hung replica would hold the slot mutex for a full
+    /// io_timeout with client requests queued behind it) and record the
+    /// outcome on the health board. Probing the full accept path also
+    /// means a server whose listener died but whose old sockets linger is
+    /// correctly detected as down.
+    fn probe_replica(&self, s: usize, r: usize) {
+        let addr = &self.topo.replicas(s)[r];
+        let result = BinaryClient::connect_with_timeouts(
+            addr,
+            self.cfg.connect_timeout,
+            self.cfg.io_timeout,
+        )
+        .and_then(|mut c| {
+            let out = c.ping();
+            c.quit().ok();
+            out
+        });
+        match result {
+            Ok(()) => self.health.record_success(s, r),
+            Err(_) => {
+                self.health.record_failure(s, r);
+            }
+        }
+    }
+
+    /// A short-lived dedicated connection for administrative exchanges
+    /// (rolling reload, STATS fan-out): long or slow server-side work must
+    /// never run while the pooled request slot's mutex is held. No health
+    /// recording — that is the prober's and the request path's job.
+    fn with_admin_connection<T>(
+        &self,
+        s: usize,
+        r: usize,
+        mut op: impl FnMut(&mut BinaryClient) -> Result<T, WireError>,
+    ) -> Result<T, WireError> {
+        let addr = &self.topo.replicas(s)[r];
+        let mut client = BinaryClient::connect_with_timeouts(
+            addr,
+            self.cfg.connect_timeout,
+            self.cfg.io_timeout,
+        )?;
+        let out = op(&mut client);
+        client.quit().ok();
+        out
+    }
+
+    /// Run `op` against shard `s` with automatic failover: round-robin over
+    /// healthy replicas first, then — if every healthy replica failed — one
+    /// last-resort pass over the ejected ones (ejection degrades, it must
+    /// never blackhole a shard whose last replica flapped).
+    ///
+    /// What fails over: transport errors, and the two *capacity* statuses
+    /// (`overloaded`, `timeout`) — a replica drowning in backpressure (or
+    /// mid-shutdown with drained workers) answered, so its health streak is
+    /// untouched, but a sibling may well have room. Every other non-zero
+    /// status is a final answer about the request itself (bad id, bad
+    /// frame): retrying it elsewhere would just repeat the answer.
+    fn with_replica<T>(
+        &self,
+        s: usize,
+        mut op: impl FnMut(&mut BinaryClient) -> Result<T, WireError>,
+    ) -> Result<T, RouterError> {
+        let n = self.topo.replicas(s).len();
+        let start = self.next[s].fetch_add(1, Ordering::Relaxed);
+        let mut last = String::from("no replicas");
+        let mut attempts = 0u32;
+        for pass in 0..2 {
+            for off in 0..n {
+                let r = (start + off) % n;
+                if (pass == 0) != self.health.is_healthy(s, r) {
+                    continue;
+                }
+                attempts += 1;
+                match self.try_slot(s, r, &mut op) {
+                    Ok(v) => {
+                        if attempts > 1 {
+                            self.failovers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return Ok(v);
+                    }
+                    Err(WireError::Status(code))
+                        if code == wire::STATUS_OVERLOADED
+                            || code == wire::STATUS_TIMEOUT =>
+                    {
+                        last = format!("status {code}: {}", wire::status_name(code));
+                    }
+                    // Any other status is a final answer about the request;
+                    // it is not a successful failover, so the counter
+                    // (documented as successes-after-failover) stays put.
+                    Err(WireError::Status(code)) => {
+                        return Err(RouterError::Wire(WireError::Status(code)));
+                    }
+                    Err(e) => last = e.to_string(),
+                }
+            }
+        }
+        Err(RouterError::ShardDown { shard: s, last })
+    }
+
+}
+
+/// Background PING loop; holds only a `Weak`, so dropping every router
+/// handle (or calling [`Router::shutdown`]) ends it.
+fn spawn_prober(inner: &Arc<Inner>) {
+    let weak: Weak<Inner> = Arc::downgrade(inner);
+    let interval = inner.cfg.probe_interval;
+    std::thread::Builder::new()
+        .name("cluster-prober".into())
+        .spawn(move || loop {
+            let Some(inner) = weak.upgrade() else { return };
+            if inner.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            Router { inner }.probe_once();
+            std::thread::sleep(interval);
+        })
+        .ok();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ShardStrategy;
+
+    fn topo2() -> Topology {
+        // Ports in TEST-NET ranges nothing listens on: connection attempts
+        // fail fast-ish and deterministically.
+        Topology::new(
+            100,
+            ShardStrategy::Range,
+            vec![vec!["127.0.0.1:1".into()], vec!["127.0.0.1:1".into()]],
+        )
+        .unwrap()
+    }
+
+    fn no_probe_cfg() -> RouterConfig {
+        RouterConfig {
+            connect_timeout: Duration::from_millis(50),
+            io_timeout: Duration::from_millis(50),
+            probe_interval: Duration::ZERO,
+            eject_after: 1,
+        }
+    }
+
+    #[test]
+    fn config_defaults_and_doc_overrides() {
+        let d = RouterConfig::default();
+        assert_eq!(d.eject_after, 3);
+        let doc = TomlDoc::parse(
+            "[cluster]\nprobe_interval_ms = 50\neject_after = 1\nio_timeout_ms = 100\n",
+        )
+        .unwrap();
+        let cfg = RouterConfig::from_doc(&doc);
+        assert_eq!(cfg.probe_interval, Duration::from_millis(50));
+        assert_eq!(cfg.eject_after, 1);
+        assert_eq!(cfg.io_timeout, Duration::from_millis(100));
+        assert_eq!(cfg.connect_timeout, d.connect_timeout);
+    }
+
+    #[test]
+    fn validation_precedes_any_connection() {
+        // Bad requests fail before the router ever dials a socket — no
+        // listening servers exist here.
+        let router = Router::new(topo2(), no_probe_cfg());
+        assert!(matches!(router.lookup(&[]), Err(RouterError::BadQuery)));
+        assert!(matches!(router.lookup(&[100]), Err(RouterError::OutOfRange)));
+        assert!(matches!(router.dot(0, 100), Err(RouterError::OutOfRange)));
+        assert!(matches!(router.knn(100, 5), Err(RouterError::OutOfRange)));
+        assert!(matches!(router.knn(0, 0), Err(RouterError::BadQuery)));
+        assert!(matches!(router.knn_vec(&[], 5), Err(RouterError::BadQuery)));
+        assert!(matches!(
+            router.rolling_reload(&["one.snap".into()]),
+            Err(RouterError::BadQuery)
+        ));
+        router.shutdown();
+    }
+
+    #[test]
+    fn unreachable_cluster_reports_shard_down_and_ejects() {
+        let router = Router::new(topo2(), no_probe_cfg());
+        match router.lookup(&[1]) {
+            Err(RouterError::ShardDown { shard: 0, .. }) => {}
+            other => panic!("expected ShardDown, got {other:?}"),
+        }
+        // eject_after = 1: the first failed connect ejected the replica.
+        assert!(!router.health().is_healthy(0, 0));
+        let stats = router.stats();
+        assert_eq!(stats.total_replicas, 2);
+        assert_eq!(stats.aggregate.served, 0);
+        assert_eq!(stats.min_generation, 0);
+        assert!(stats.replicas.iter().all(|r| r.stats.is_none()));
+        router.shutdown();
+    }
+
+    #[test]
+    fn error_status_mapping() {
+        assert_eq!(RouterError::OutOfRange.status_code(), wire::STATUS_RANGE);
+        assert_eq!(RouterError::BadQuery.status_code(), wire::STATUS_BAD_REQUEST);
+        let down = RouterError::ShardDown { shard: 0, last: "x".into() };
+        assert_eq!(down.status_code(), wire::STATUS_OVERLOADED);
+        let status = RouterError::Wire(WireError::Status(wire::STATUS_RANGE));
+        assert_eq!(status.status_code(), wire::STATUS_RANGE);
+        let reload = RouterError::Reload { shard: 0, replica: 0, message: "x".into() };
+        assert_eq!(reload.status_code(), wire::STATUS_RELOAD_FAILED);
+    }
+}

@@ -1,0 +1,188 @@
+//! Shard preparation: slice one global embedding store into per-shard
+//! stores and persist them as snapshot files the existing single-node
+//! server boots from unchanged.
+//!
+//! A shard server is just `serve_embeddings`/`w2k serve` pointed at
+//! `shard<i>.snap` — the cluster layer adds no new server binary. Each
+//! shard file carries a [`ShardRange`](crate::snapshot::ShardRange) section
+//! ([`Topology::shard_range`]) so the file itself records which global ids
+//! it owns.
+//!
+//! Slicing keeps the factored representation where the math allows it:
+//! word2ket stores per-word leaf tensors, so any subset of words is again a
+//! word2ket store (the slice stays ~100× smaller than dense rows). The
+//! other kinds share parameters *across* the whole vocabulary (word2ketXS
+//! factors address global-id digits, hashing buckets are global), so their
+//! slices materialize to dense regular rows — still small in absolute
+//! terms, because a shard holds only `vocab/n` rows, and bit-identical to
+//! the global store's reconstruction by construction.
+
+use super::topology::Topology;
+use crate::embedding::{EmbeddingStore, RegularEmbedding, Word2Ket};
+use crate::error::{Error, Result};
+use crate::repr::Repr;
+use crate::snapshot::{save_store, SaveOptions, SnapshotInfo};
+use std::path::{Path, PathBuf};
+
+/// Canonical shard file name inside a snapshot directory: `shard<i>.snap`.
+/// The router's rolling `RELOAD <dir>` resolves per-shard paths with this,
+/// so writers and the reload path cannot disagree on naming.
+pub fn shard_snapshot_path(dir: &Path, shard: usize) -> PathBuf {
+    dir.join(format!("shard{shard}.snap"))
+}
+
+/// Build the store shard `s` serves: the global store's rows for exactly
+/// the ids `topo` assigns to `s`, re-indexed by local id.
+pub fn shard_store(
+    store: &dyn EmbeddingStore,
+    topo: &Topology,
+    s: usize,
+) -> Result<Box<dyn EmbeddingStore>> {
+    if store.vocab_size() != topo.vocab() {
+        return Err(Error::Config(format!(
+            "store holds {} words but the topology describes {}",
+            store.vocab_size(),
+            topo.vocab()
+        )));
+    }
+    let ids: Vec<usize> = topo.shard_ids(s).collect();
+    // word2ket: per-word leaves make any word subset a word2ket store.
+    if let Repr::Word2Ket(e) = store.repr() {
+        let per_word = e.rank() * e.order() * e.leaf_dim();
+        let mut leaves = Vec::with_capacity(ids.len() * per_word);
+        for &id in &ids {
+            leaves.extend_from_slice(e.word(id).leaves());
+        }
+        return Ok(Box::new(Word2Ket::from_leaves(
+            ids.len(),
+            e.dim(),
+            e.order(),
+            e.rank(),
+            e.leaf_dim(),
+            e.layernorm(),
+            &leaves,
+        )?));
+    }
+    // Everything else: materialize the slice (see module docs).
+    let mut rows = Vec::with_capacity(ids.len() * store.dim());
+    store.lookup_batch_into(&ids, &mut rows);
+    Ok(Box::new(RegularEmbedding::new(ids.len(), store.dim(), rows)))
+}
+
+/// Slice `store` per `topo` and write `shard<i>.snap` files (atomic, like
+/// every snapshot write) into `dir`, each carrying its shard-range section.
+/// Returns the per-shard paths in shard order.
+pub fn save_shard_snapshots(
+    store: &dyn EmbeddingStore,
+    topo: &Topology,
+    dir: &Path,
+    opts: &SaveOptions,
+) -> Result<Vec<(PathBuf, SnapshotInfo)>> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| Error::Snapshot(format!("create {}: {e}", dir.display())))?;
+    let mut out = Vec::with_capacity(topo.n_shards());
+    for s in 0..topo.n_shards() {
+        let sub = shard_store(store, topo, s)?;
+        let path = shard_snapshot_path(dir, s);
+        let shard_opts = SaveOptions { shard_range: Some(topo.shard_range(s)), ..*opts };
+        let info = save_store(sub.as_ref(), &path, &shard_opts)?;
+        out.push((path, info));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ShardStrategy;
+    use crate::embedding::Word2KetXS;
+    use crate::snapshot::{Snapshot, SnapshotStore};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn topo(vocab: usize, strategy: ShardStrategy, shards: usize) -> Topology {
+        let addrs = (0..shards).map(|s| vec![format!("127.0.0.1:{}", 7200 + s)]).collect();
+        Topology::new(vocab, strategy, addrs).unwrap()
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("w2k_shard_{}_{name}", std::process::id()))
+    }
+
+    /// Every shard row must be bit-identical to the global store's row for
+    /// the same global id — through slicing, save and (mmap) load.
+    #[test]
+    fn shard_snapshots_serve_bit_identical_rows() {
+        for strategy in [ShardStrategy::Range, ShardStrategy::Hash] {
+            let mut rng = Rng::new(41);
+            let store = Word2KetXS::random(53, 16, 2, 2, &mut rng);
+            let t = topo(53, strategy, 3);
+            let dir = tmp_dir(&format!("rows_{}", strategy.name()));
+            let saved = save_shard_snapshots(&store, &t, &dir, &SaveOptions::default()).unwrap();
+            assert_eq!(saved.len(), 3);
+            for (s, (path, info)) in saved.iter().enumerate() {
+                assert!(info.bytes > 0);
+                let snap = Arc::new(Snapshot::open(path, true).unwrap());
+                let sr = snap.shard_range().expect("shard file must carry its range");
+                assert_eq!(sr.shard as usize, s);
+                assert_eq!(sr.global_vocab as usize, 53);
+                let loaded = SnapshotStore::open(snap).unwrap();
+                assert_eq!(loaded.vocab_size(), t.local_count(s));
+                for (local, global) in t.shard_ids(s).enumerate() {
+                    assert_eq!(
+                        loaded.lookup(local),
+                        store.lookup(global),
+                        "{strategy:?} shard {s} local {local}"
+                    );
+                }
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    /// word2ket slices stay factored (tiny on disk); shared-parameter kinds
+    /// materialize.
+    #[test]
+    fn word2ket_slices_stay_factored() {
+        let mut rng = Rng::new(42);
+        let mut w2k = Word2Ket::random(40, 16, 2, 2, &mut rng);
+        w2k.set_layernorm(false);
+        let t = topo(40, ShardStrategy::Range, 4);
+        let sub = shard_store(&w2k, &t, 1).unwrap();
+        assert!(matches!(sub.repr(), Repr::Word2Ket(_)), "{}", sub.describe());
+        for (local, global) in t.shard_ids(1).enumerate() {
+            assert_eq!(sub.lookup(local), w2k.lookup(global));
+        }
+
+        let xs = Word2KetXS::random(40, 16, 2, 2, &mut rng);
+        let sub = shard_store(&xs, &t, 1).unwrap();
+        assert!(matches!(sub.repr(), Repr::Regular(_)), "{}", sub.describe());
+    }
+
+    #[test]
+    fn rejects_vocab_mismatch() {
+        let mut rng = Rng::new(43);
+        let store = Word2KetXS::random(10, 16, 2, 1, &mut rng);
+        let t = topo(11, ShardStrategy::Range, 2);
+        assert!(shard_store(&store, &t, 0).is_err());
+        let dir = tmp_dir("mismatch");
+        assert!(save_shard_snapshots(&store, &t, &dir, &SaveOptions::default()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The canonical naming used by rolling reload matches what the writer
+    /// produced.
+    #[test]
+    fn snapshot_paths_are_canonical() {
+        let mut rng = Rng::new(44);
+        let store = Word2KetXS::random(12, 16, 2, 1, &mut rng);
+        let t = topo(12, ShardStrategy::Range, 2);
+        let dir = tmp_dir("paths");
+        let saved = save_shard_snapshots(&store, &t, &dir, &SaveOptions::default()).unwrap();
+        for (s, (path, _)) in saved.iter().enumerate() {
+            assert_eq!(path, &shard_snapshot_path(&dir, s));
+            assert!(Snapshot::open(path, false).is_ok());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,422 @@
+//! Cluster topology: how a global vocabulary is split across shards, how a
+//! global id maps to a (shard, local id) pair, and which network addresses
+//! serve each shard.
+//!
+//! Parsed from a `[cluster]` TOML section (standalone topology file or a
+//! section of the experiment config):
+//!
+//! ```toml
+//! [cluster]
+//! vocab = 118655            # global vocabulary size
+//! strategy = "range"        # "range" (contiguous slices) | "hash"
+//! shard0 = ["10.0.0.1:7878", "10.0.1.1:7878"]   # replicas of shard 0
+//! shard1 = ["10.0.0.2:7878", "10.0.1.2:7878"]
+//! ```
+//!
+//! Both strategies are O(1) invertible in each direction, so the router
+//! maps global→local without per-id tables and a shard maps local→global
+//! when reporting results:
+//!
+//! * **range** — shard `i` owns the contiguous slice `[start_i, end_i)`
+//!   with sizes balanced to within one id; `local = global − start`.
+//!   Preserves id order inside a shard (tie-breaking stays globally
+//!   consistent for free) and makes shard files contiguous row slices.
+//! * **hash** — `shard = global mod n`, `local = global ÷ n`. Interleaves
+//!   the vocabulary so the Zipf head (low ids in frequency-sorted vocabs)
+//!   spreads across all shards instead of hammering shard 0.
+
+use crate::config::{TomlDoc, TomlValue};
+use crate::error::{Error, Result};
+use crate::snapshot::{ShardRange, SHARD_STRATEGY_HASH, SHARD_STRATEGY_RANGE};
+use std::path::Path;
+
+/// How global ids are assigned to shards (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    Range,
+    Hash,
+}
+
+impl ShardStrategy {
+    pub fn parse(s: &str) -> Result<ShardStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "range" => Ok(ShardStrategy::Range),
+            "hash" | "mod" | "interleave" => Ok(ShardStrategy::Hash),
+            other => Err(Error::Config(format!(
+                "unknown shard strategy '{other}' (expected range|hash)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardStrategy::Range => "range",
+            ShardStrategy::Hash => "hash",
+        }
+    }
+
+    /// Snapshot-section tag (see [`crate::snapshot::ShardRange`]).
+    pub fn tag(&self) -> u32 {
+        match self {
+            ShardStrategy::Range => SHARD_STRATEGY_RANGE,
+            ShardStrategy::Hash => SHARD_STRATEGY_HASH,
+        }
+    }
+}
+
+/// A validated cluster topology: vocabulary split + replica addresses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    vocab: usize,
+    strategy: ShardStrategy,
+    /// `addrs[shard]` is that shard's replica group, in failover order.
+    addrs: Vec<Vec<String>>,
+}
+
+impl Topology {
+    /// Build and validate: at least one shard, every shard at least one
+    /// replica, and no more shards than vocabulary entries (an id-less
+    /// shard could never answer anything).
+    pub fn new(
+        vocab: usize,
+        strategy: ShardStrategy,
+        addrs: Vec<Vec<String>>,
+    ) -> Result<Topology> {
+        if vocab == 0 {
+            return Err(Error::Config("cluster vocab must be >= 1".into()));
+        }
+        if addrs.is_empty() {
+            return Err(Error::Config("cluster needs at least one shard".into()));
+        }
+        if addrs.len() > vocab {
+            return Err(Error::Config(format!(
+                "{} shards over a {vocab}-word vocabulary leaves empty shards",
+                addrs.len()
+            )));
+        }
+        for (s, group) in addrs.iter().enumerate() {
+            if group.is_empty() {
+                return Err(Error::Config(format!("shard {s} has no replicas")));
+            }
+        }
+        Ok(Topology { vocab, strategy, addrs })
+    }
+
+    /// Parse the `[cluster]` section of a parsed TOML document.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Topology> {
+        let vocab = doc
+            .get("cluster.vocab")
+            .and_then(TomlValue::as_usize)
+            .ok_or_else(|| Error::Config("[cluster] needs vocab = <global size>".into()))?;
+        let strategy = match doc.get("cluster.strategy") {
+            Some(v) => ShardStrategy::parse(v.as_str().unwrap_or(""))?,
+            None => ShardStrategy::Range,
+        };
+        let mut addrs = Vec::new();
+        loop {
+            let key = format!("cluster.shard{}", addrs.len());
+            let Some(v) = doc.get(&key) else { break };
+            let group = match v {
+                TomlValue::Arr(items) => items
+                    .iter()
+                    .map(|it| {
+                        it.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::Config(format!("{key}: replicas must be strings"))
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                // A single replica may be written without brackets.
+                TomlValue::Str(s) => vec![s.clone()],
+                _ => {
+                    return Err(Error::Config(format!(
+                        "{key} must be an array of \"host:port\" strings"
+                    )))
+                }
+            };
+            addrs.push(group);
+        }
+        if addrs.is_empty() {
+            return Err(Error::Config(
+                "[cluster] needs shard0 = [\"host:port\", ...] (contiguously numbered)".into(),
+            ));
+        }
+        // Enforce contiguity: `shard0` + `shard2` silently parsing as a
+        // one-shard cluster would route ids against snapshots cut for a
+        // different split — wrong rows with status OK.
+        for key in doc.keys() {
+            if let Some(suffix) = key.strip_prefix("cluster.shard") {
+                if let Ok(i) = suffix.parse::<usize>() {
+                    if i >= addrs.len() {
+                        return Err(Error::Config(format!(
+                            "[cluster] shard keys must be contiguous from shard0: found \
+                             shard{i} but shard{} is missing",
+                            addrs.len()
+                        )));
+                    }
+                }
+            }
+        }
+        Topology::new(vocab, strategy, addrs)
+    }
+
+    /// Parse a topology TOML source (must contain a `[cluster]` section).
+    pub fn parse(src: &str) -> Result<Topology> {
+        Topology::from_doc(&TomlDoc::parse(src)?)
+    }
+
+    /// Load a topology file.
+    pub fn load(path: &Path) -> Result<Topology> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        Topology::parse(&src)
+    }
+
+    /// The same split with replacement replica addresses (self-hosted
+    /// demos/benches that spawn shard servers on OS-assigned ports).
+    pub fn with_addrs(&self, addrs: Vec<Vec<String>>) -> Result<Topology> {
+        if addrs.len() != self.addrs.len() {
+            return Err(Error::Config(format!(
+                "replacement addresses describe {} shards, topology has {}",
+                addrs.len(),
+                self.addrs.len()
+            )));
+        }
+        Topology::new(self.vocab, self.strategy, addrs)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn strategy(&self) -> ShardStrategy {
+        self.strategy
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// Replica addresses of one shard, in failover order.
+    pub fn replicas(&self, shard: usize) -> &[String] {
+        &self.addrs[shard]
+    }
+
+    /// Total replica count across all shards.
+    pub fn n_replicas(&self) -> usize {
+        self.addrs.iter().map(Vec::len).sum()
+    }
+
+    /// Balanced range split: (start, length) of shard `s` under the range
+    /// strategy. The first `vocab % n` shards get one extra id.
+    fn range_of(&self, s: usize) -> (usize, usize) {
+        let n = self.addrs.len();
+        let (base, rem) = (self.vocab / n, self.vocab % n);
+        let start = s * base + s.min(rem);
+        (start, base + usize::from(s < rem))
+    }
+
+    /// Map a global id to its owning shard and shard-local id. Panics if
+    /// `global >= vocab` (callers validate at the request boundary).
+    pub fn locate(&self, global: usize) -> (usize, usize) {
+        assert!(global < self.vocab, "global id {global} outside vocab {}", self.vocab);
+        let n = self.addrs.len();
+        match self.strategy {
+            ShardStrategy::Hash => (global % n, global / n),
+            ShardStrategy::Range => {
+                let (base, rem) = (self.vocab / n, self.vocab % n);
+                let big = rem * (base + 1);
+                if global < big {
+                    (global / (base + 1), global % (base + 1))
+                } else {
+                    // base > 0 here: rem == n would put every id in `big`.
+                    let rest = global - big;
+                    (rem + rest / base, rest % base)
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`locate`](Self::locate).
+    pub fn global_id(&self, shard: usize, local: usize) -> usize {
+        match self.strategy {
+            ShardStrategy::Hash => local * self.addrs.len() + shard,
+            ShardStrategy::Range => self.range_of(shard).0 + local,
+        }
+    }
+
+    /// How many global ids shard `s` owns.
+    pub fn local_count(&self, s: usize) -> usize {
+        match self.strategy {
+            ShardStrategy::Range => self.range_of(s).1,
+            ShardStrategy::Hash => {
+                let n = self.addrs.len();
+                (self.vocab - s).div_ceil(n)
+            }
+        }
+    }
+
+    /// Global ids owned by shard `s`, in local-id order.
+    pub fn shard_ids(&self, s: usize) -> impl Iterator<Item = usize> + '_ {
+        (0..self.local_count(s)).map(move |local| self.global_id(s, local))
+    }
+
+    /// The snapshot-manifest form of shard `s`'s assignment
+    /// ([`crate::snapshot::SaveOptions::shard_range`]).
+    pub fn shard_range(&self, s: usize) -> ShardRange {
+        let (start, len) = match self.strategy {
+            ShardStrategy::Range => self.range_of(s),
+            ShardStrategy::Hash => (0, 0),
+        };
+        ShardRange {
+            strategy: self.strategy.tag(),
+            shard: s as u32,
+            n_shards: self.addrs.len() as u32,
+            global_vocab: self.vocab as u64,
+            start: start as u64,
+            end: match self.strategy {
+                ShardStrategy::Range => (start + len) as u64,
+                ShardStrategy::Hash => 0,
+            },
+        }
+    }
+
+    /// Render back to `[cluster]` TOML (demos that spawn their own shard
+    /// servers persist the effective topology for the operator).
+    pub fn to_toml(&self) -> String {
+        let mut s = format!(
+            "[cluster]\nvocab = {}\nstrategy = \"{}\"\n",
+            self.vocab,
+            self.strategy.name()
+        );
+        for (i, group) in self.addrs.iter().enumerate() {
+            let quoted: Vec<String> = group.iter().map(|a| format!("\"{a}\"")).collect();
+            s.push_str(&format!("shard{i} = [{}]\n", quoted.join(", ")));
+        }
+        s
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} shards × up to {} replicas, {} sharding over {} words",
+            self.addrs.len(),
+            self.addrs.iter().map(Vec::len).max().unwrap_or(0),
+            self.strategy.name(),
+            self.vocab
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(vocab: usize, strategy: ShardStrategy, shards: usize) -> Topology {
+        let addrs = (0..shards).map(|s| vec![format!("127.0.0.1:{}", 7000 + s)]).collect();
+        Topology::new(vocab, strategy, addrs).unwrap()
+    }
+
+    #[test]
+    fn locate_and_global_id_are_inverse_for_both_strategies() {
+        for strategy in [ShardStrategy::Range, ShardStrategy::Hash] {
+            for (vocab, shards) in [(10, 3), (100, 4), (7, 7), (101, 2), (1, 1)] {
+                let t = topo(vocab, strategy, shards);
+                let mut seen = vec![false; vocab];
+                for g in 0..vocab {
+                    let (s, l) = t.locate(g);
+                    assert!(s < shards, "{strategy:?} {vocab}/{shards}: shard {s}");
+                    assert!(l < t.local_count(s), "{strategy:?}: local {l} out of range");
+                    assert_eq!(t.global_id(s, l), g, "{strategy:?} {vocab}/{shards}");
+                    assert!(!seen[g]);
+                    seen[g] = true;
+                }
+                // Every shard's count adds up and shard_ids enumerates its
+                // exact slice in local order.
+                let total: usize = (0..shards).map(|s| t.local_count(s)).sum();
+                assert_eq!(total, vocab);
+                for s in 0..shards {
+                    let ids: Vec<usize> = t.shard_ids(s).collect();
+                    assert_eq!(ids.len(), t.local_count(s));
+                    for (l, &g) in ids.iter().enumerate() {
+                        assert_eq!(t.locate(g), (s, l));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn range_split_is_balanced_and_ordered() {
+        let t = topo(10, ShardStrategy::Range, 3);
+        // 10 over 3: 4 + 3 + 3, contiguous.
+        let groups: Vec<Vec<usize>> = (0..3).map(|s| t.shard_ids(s).collect()).collect();
+        assert_eq!(groups[0], vec![0, 1, 2, 3]);
+        assert_eq!(groups[1], vec![4, 5, 6]);
+        assert_eq!(groups[2], vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn hash_split_interleaves_the_head() {
+        let t = topo(10, ShardStrategy::Hash, 3);
+        let head: Vec<usize> = (0..3).map(|g| t.locate(g).0).collect();
+        assert_eq!(head, vec![0, 1, 2], "consecutive hot ids must spread across shards");
+        assert_eq!(t.shard_ids(1).collect::<Vec<_>>(), vec![1, 4, 7]);
+    }
+
+    #[test]
+    fn shard_range_matches_snapshot_validation() {
+        for strategy in [ShardStrategy::Range, ShardStrategy::Hash] {
+            let t = topo(11, strategy, 3);
+            for s in 0..3 {
+                let sr = t.shard_range(s);
+                sr.validate(t.local_count(s) as u64).unwrap();
+                assert_eq!(sr.local_count() as usize, t.local_count(s));
+            }
+        }
+    }
+
+    #[test]
+    fn parses_cluster_section() {
+        let t = Topology::parse(
+            r#"
+[cluster]
+vocab = 1000
+strategy = "hash"
+shard0 = ["127.0.0.1:7001", "127.0.0.1:7101"]
+shard1 = "127.0.0.1:7002"    # single replica without brackets
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.vocab(), 1000);
+        assert_eq!(t.strategy(), ShardStrategy::Hash);
+        assert_eq!(t.n_shards(), 2);
+        assert_eq!(t.replicas(0).len(), 2);
+        assert_eq!(t.replicas(1), &["127.0.0.1:7002".to_string()]);
+        assert_eq!(t.n_replicas(), 3);
+
+        // Round-trips through its own TOML rendering.
+        let back = Topology::parse(&t.to_toml()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn rejects_malformed_topologies() {
+        assert!(Topology::parse("[cluster]\nvocab = 10\n").is_err(), "no shards");
+        assert!(
+            Topology::parse("[cluster]\nshard0 = [\"a:1\"]\n").is_err(),
+            "missing vocab"
+        );
+        assert!(
+            Topology::parse("[cluster]\nvocab = 10\nstrategy = \"ring\"\nshard0 = [\"a:1\"]\n")
+                .is_err(),
+            "unknown strategy"
+        );
+        assert!(
+            Topology::parse("[cluster]\nvocab = 10\nshard0 = [\"a:1\"]\nshard2 = [\"a:3\"]\n")
+                .is_err(),
+            "a numbering gap must be rejected, not silently truncated"
+        );
+        assert!(Topology::new(2, ShardStrategy::Range, vec![vec![]]).is_err(), "empty group");
+        let too_many = (0..3).map(|i| vec![format!("a:{i}")]).collect();
+        assert!(Topology::new(2, ShardStrategy::Range, too_many).is_err(), "empty shards");
+    }
+}

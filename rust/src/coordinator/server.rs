@@ -14,6 +14,8 @@
 //!                                 neighbors, best first, query excluded)
 //!   `RELOAD <path>\n`          → `OK generation=<g>\n` (hot-swap the model
 //!                                 to the snapshot at the server-side path)
+//!   `PING\n`                   → `OK\n` (status-only liveness probe, used
+//!                                 by the cluster health prober)
 //!   `STATS\n`                  → `OK p50_us=.. p99_us=.. served=..
 //!                                 cache_hits=.. cache_misses=.. rejected=..
 //!                                 knn_queries=.. knn_candidates=..
@@ -86,28 +88,43 @@ impl ServerState {
     }
 
     fn stats_line(&self) -> String {
-        let s = self.serving.stats();
-        format!(
-            "OK p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} rejected={} \
-             knn_queries={} knn_candidates={} knn_mean_probes={:.2} model_generation={} \
-             snapshot_bytes={}\n",
-            s.p50_us,
-            s.p99_us,
-            s.served,
-            s.cache.hits,
-            s.cache.misses,
-            s.rejected,
-            s.knn_queries,
-            s.knn_candidates,
-            s.knn_mean_probes,
-            s.model_generation,
-            s.snapshot_bytes
-        )
+        // Rendered from the shared field table (`wire::STATS_FIELD_NAMES`),
+        // the same array the binary protocol serializes — field additions
+        // land in both protocols or neither.
+        format!("{}\n", wire::format_stats_line(&self.serving.stats().fields()))
     }
 }
 
 fn err_line(e: LookupError) -> String {
     format!("ERR {e}\n")
+}
+
+// Text-protocol response rendering, shared with the cluster router's
+// listener (`crate::cluster::server`): the router promises to be
+// indistinguishable from a single node on the wire, so these formats must
+// exist exactly once.
+
+/// One `OK <dim> <f32> ...` line per row.
+pub(crate) fn rows_lines(rows: impl IntoIterator<Item = Vec<f32>>) -> String {
+    let mut s = String::new();
+    for r in rows {
+        s.push_str(&format!("OK {}", r.len()));
+        for x in r {
+            s.push_str(&format!(" {x}"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// `OK <n> <id> <score> ...` (top-n neighbors, best first).
+pub(crate) fn neighbors_line(neighbors: &[(u32, f32)]) -> String {
+    let mut s = format!("OK {}", neighbors.len());
+    for (id, score) in neighbors {
+        s.push_str(&format!(" {id} {score}"));
+    }
+    s.push('\n');
+    s
 }
 
 /// Request-line byte cap: without it, `read_line` would buffer an unbounded
@@ -136,6 +153,9 @@ fn handle_text(
         let response = match parts.as_slice() {
             [] => continue,
             ["QUIT"] => break,
+            // Status-only liveness probe, mirroring binary OP_PING.
+            ["PING"] => "OK\n".to_string(),
+            ["PING", ..] => "ERR PING takes no arguments\n".to_string(),
             ["STATS"] => state.stats_line(),
             ["LOOKUP"] => err_line(LookupError::Empty),
             // Same allocation cap as the binary protocol's MAX_IDS: one text
@@ -150,17 +170,7 @@ fn handle_text(
                     .collect::<std::result::Result<Vec<_>, _>>()
                 {
                     Ok(ids) => match state.serving.lookup_rows(ids) {
-                        Ok(rows) => {
-                            let mut s = String::new();
-                            for r in rows {
-                                s.push_str(&format!("OK {}", r.len()));
-                                for x in r {
-                                    s.push_str(&format!(" {x}"));
-                                }
-                                s.push('\n');
-                            }
-                            s
-                        }
+                        Ok(rows) => rows_lines(rows),
                         Err(e) => err_line(e),
                     },
                     Err(_) => "ERR bad id\n".to_string(),
@@ -179,12 +189,9 @@ fn handle_text(
             ["KNN", id, k] => match (id.parse::<usize>(), k.parse::<usize>()) {
                 (Ok(id), Ok(k)) => match state.serving.knn(Query::Id(id), k) {
                     Ok(neighbors) => {
-                        let mut s = format!("OK {}", neighbors.len());
-                        for n in &neighbors {
-                            s.push_str(&format!(" {} {}", n.id, n.score));
-                        }
-                        s.push('\n');
-                        s
+                        let pairs: Vec<(u32, f32)> =
+                            neighbors.iter().map(|n| (n.id as u32, n.score)).collect();
+                        neighbors_line(&pairs)
                     }
                     Err(e) => err_line(e),
                 },
@@ -779,6 +786,122 @@ mod tests {
         // And the server still serves fresh connections.
         let resp = request(&addr, "LOOKUP 0\n", 1);
         assert!(resp[0].starts_with("OK"), "{resp:?}");
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    /// Satellite: PING on both protocols — status-only success, bad-request
+    /// rejection when ids are attached, and the session survives both.
+    #[test]
+    fn ping_both_protocols() {
+        let (state, addr, acc) = start();
+
+        // Text: bare PING is OK, PING with arguments is an error.
+        let resp = request(&addr, "PING\n", 1);
+        assert_eq!(resp[0], "OK", "{resp:?}");
+        let resp = request(&addr, "PING 3\n", 1);
+        assert!(resp[0].starts_with("ERR"), "{resp:?}");
+
+        // Binary: ping round-trips, and a PING frame carrying ids comes
+        // back STATUS_BAD_REQUEST with the session still usable.
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+        bin.ping().unwrap();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::MAGIC).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut hello = [0u8; 8];
+        std::io::Read::read_exact(&mut r, &mut hello).unwrap();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&wire::OP_PING.to_le_bytes());
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.extend_from_slice(&7u32.to_le_bytes());
+        s.write_all(&frame).unwrap();
+        let mut resp = [0u8; 8];
+        std::io::Read::read_exact(&mut r, &mut resp).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(resp[0..4].try_into().unwrap()),
+            wire::STATUS_BAD_REQUEST
+        );
+        // PING touches no serving state: still all-zero counters.
+        let stats = bin.stats().unwrap();
+        assert_eq!(stats.served, 0);
+        bin.ping().unwrap();
+        bin.quit().unwrap();
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    /// OP_KNN_VEC: an external query vector is scored exactly like the same
+    /// row queried by id, minus the self-exclusion the server cannot infer.
+    #[test]
+    fn binary_knn_vec_matches_id_query() {
+        let (state, addr, acc) = start();
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+
+        let q = bin.lookup(&[42]).unwrap().remove(0);
+        let by_vec = bin.knn_vec(&q, 6).unwrap();
+        let by_id = bin.knn(42, 5).unwrap();
+        // The vector query sees word 42 itself; after dropping it the two
+        // answers agree. Id queries score in factored space and vector
+        // queries over dense rows, so scores match within float noise and
+        // position swaps are only acceptable as exact-precision ties.
+        let filtered: Vec<(u32, f32)> =
+            by_vec.iter().copied().filter(|&(id, _)| id != 42).collect();
+        assert!(filtered.len() >= 5, "{by_vec:?}");
+        for (a, b) in filtered[..5].iter().zip(by_id.iter()) {
+            assert!(
+                (a.1 - b.1).abs() < 1e-4 * b.1.abs().max(1.0),
+                "vector vs id scores diverge: {a:?} vs {b:?}"
+            );
+            assert!(a.0 == b.0 || (a.1 - b.1).abs() < 1e-4, "{filtered:?} vs {by_id:?}");
+        }
+
+        // Errors: zero k and a wrong-dimension vector are rejected with the
+        // session intact.
+        match bin.knn_vec(&q, 0) {
+            Err(crate::serving::WireError::Status(s)) => {
+                assert_eq!(s, wire::STATUS_BAD_REQUEST)
+            }
+            other => panic!("expected bad request, got {other:?}"),
+        }
+        match bin.knn_vec(&q[..q.len() - 1], 3) {
+            Err(crate::serving::WireError::Status(s)) => {
+                assert_eq!(s, wire::STATUS_BAD_FRAME)
+            }
+            other => panic!("expected bad frame, got {other:?}"),
+        }
+        assert_eq!(bin.lookup(&[1]).unwrap().len(), 1);
+        bin.quit().unwrap();
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    /// Satellite: the text and binary STATS views are asserted field by
+    /// field through the one shared helper — a field added to only one
+    /// protocol fails here.
+    #[test]
+    fn stats_text_and_binary_cannot_drift() {
+        let (state, addr, acc) = start();
+        let mut bin = BinaryClient::connect(&addr).unwrap();
+
+        // Quiescent server: both views identical at zero.
+        crate::testing::assert_stats_consistent(
+            &request(&addr, "STATS\n", 1)[0],
+            &bin.stats().unwrap(),
+        );
+
+        // And again after real mixed traffic (every counter nonzero-able).
+        bin.lookup(&[1, 2, 3, 2]).unwrap();
+        bin.knn(7, 4).unwrap();
+        bin.lookup(&[1]).unwrap();
+        let text = request(&addr, "STATS\n", 1);
+        let binary = bin.stats().unwrap();
+        assert!(binary.served > 0);
+        crate::testing::assert_stats_consistent(&text[0], &binary);
+        bin.quit().unwrap();
 
         state.shutdown();
         acc.join().unwrap();

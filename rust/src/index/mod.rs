@@ -110,6 +110,30 @@ pub(crate) fn scan_blocked(
     scanned
 }
 
+/// Merge per-shard partial top-k lists into one exact global top-k.
+///
+/// The scatter-gather half of cluster KNN: each shard returns its own
+/// best-first list over a disjoint vocabulary slice; pushing every partial
+/// result through one `TopK` applies the same selection rule a
+/// single-node scan uses (descending score, ties broken by ascending id),
+/// so the merged answer is *identical* to scanning the unsharded store —
+/// provided each input list carried at least `k` entries or was exhaustive
+/// for its shard. Tolerates empty lists (an empty shard, or a shard whose
+/// slice is smaller than `k`) and a `k` larger than the global vocabulary
+/// (the result is simply every candidate, sorted).
+pub fn merge_top_k(
+    k: usize,
+    lists: impl IntoIterator<Item = Vec<Neighbor>>,
+) -> Vec<Neighbor> {
+    let mut top = TopK::new(k);
+    for list in lists {
+        for n in list {
+            top.push(n.id, n.score);
+        }
+    }
+    top.into_sorted()
+}
+
 /// Heap entry ordering: higher score is better; ties prefer the smaller id
 /// so results are deterministic.
 struct Entry(Neighbor);
@@ -245,6 +269,7 @@ pub fn build_index(
 mod tests {
     use super::*;
     use crate::embedding::Word2Ket;
+    use crate::prop_assert;
     use crate::util::Rng;
 
     fn factored_brute(vocab: usize, dim: usize, order: usize, rank: usize) -> BruteForce {
@@ -349,5 +374,107 @@ mod tests {
         top.push(7, 1.0);
         let out = top.into_sorted();
         assert_eq!(out.iter().map(|n| n.id).collect::<Vec<_>>(), vec![2, 5, 7]);
+    }
+
+    /// Satellite: merge edge cases — duplicate scores across shards, k
+    /// larger than the global vocabulary, empty shard responses, k == 0.
+    #[test]
+    fn merge_top_k_edge_cases() {
+        let n = |id: usize, score: f32| Neighbor { id, score };
+        let a = vec![n(5, 1.0), n(9, 0.5)];
+        let b = vec![n(2, 1.0), n(7, 1.0)];
+
+        // Duplicate scores across shards: the global tie rule (ascending
+        // id) applies across lists, exactly as one TopK scan would.
+        let ids: Vec<usize> =
+            merge_top_k(3, [a.clone(), b.clone()]).iter().map(|x| x.id).collect();
+        assert_eq!(ids, vec![2, 5, 7]);
+
+        // k larger than everything the shards returned: every candidate,
+        // fully sorted.
+        let all = merge_top_k(50, [a.clone(), b.clone()]);
+        assert_eq!(all.iter().map(|x| x.id).collect::<Vec<_>>(), vec![2, 5, 7, 9]);
+        for w in all.windows(2) {
+            assert!(
+                w[0].score > w[1].score || (w[0].score == w[1].score && w[0].id < w[1].id),
+                "{all:?}"
+            );
+        }
+
+        // Empty shard responses (an empty shard, a shard smaller than k)
+        // are tolerated, not an error.
+        let merged = merge_top_k(2, [Vec::new(), a.clone(), Vec::new()]);
+        assert_eq!(merged, a);
+
+        // k == 0 is an empty answer.
+        assert!(merge_top_k(0, [a]).is_empty());
+    }
+
+    /// Satellite property: scatter-gather over range-sharded slices of a
+    /// store, merged with [`merge_top_k`], is *bit-identical* (ids and
+    /// scores) to a single-node [`BruteForce`] over the unsharded store.
+    /// Dense rows on both sides, so even the float noise matches.
+    #[test]
+    fn merged_scatter_gather_matches_unsharded_brute_force() {
+        use crate::embedding::RegularEmbedding;
+        crate::testing::check("scatter-gather knn merge", |c| {
+            let vocab = c.dim(8, 400);
+            let dim = [4usize, 8, 16][c.rng.below(3)];
+            let n_shards = 1 + c.rng.below(5);
+            let k = 1 + c.rng.below(vocab + 4); // may exceed the vocabulary
+            let query = c.rng.below(vocab);
+            let store: Arc<dyn EmbeddingStore> =
+                Arc::new(RegularEmbedding::random(vocab, dim, &mut c.rng));
+
+            let truth = BruteForce::new(Scorer::new(store.clone(), false));
+            let (want, _) = truth.top_k(&Query::Id(query), k);
+
+            // Balanced contiguous ranges, one BruteForce per slice; each
+            // shard scores the caller-supplied query row (the wire's
+            // KNN_VEC path) and cannot exclude the query word itself, so
+            // it is asked for k+1 and the router-side filter drops it.
+            let q_row = store.lookup(query);
+            let (base, rem) = (vocab / n_shards, vocab % n_shards);
+            let mut lists = Vec::with_capacity(n_shards);
+            let mut start = 0usize;
+            for s in 0..n_shards {
+                let len = base + usize::from(s < rem);
+                if len == 0 {
+                    lists.push(Vec::new());
+                    continue;
+                }
+                let mut rows = Vec::with_capacity(len * dim);
+                for id in start..start + len {
+                    rows.extend_from_slice(&store.lookup(id));
+                }
+                let slice: Arc<dyn EmbeddingStore> =
+                    Arc::new(RegularEmbedding::new(len, dim, rows));
+                let shard_index = BruteForce::new(Scorer::new(slice, false));
+                let (locals, _) = shard_index.top_k(&Query::Vector(q_row.clone()), k + 1);
+                lists.push(
+                    locals
+                        .into_iter()
+                        .map(|n| Neighbor { id: n.id + start, score: n.score })
+                        .filter(|n| n.id != query)
+                        .collect(),
+                );
+                start += len;
+            }
+            let got = merge_top_k(k, lists);
+
+            prop_assert!(
+                got.len() == want.len(),
+                "length {} vs {} (vocab {vocab} shards {n_shards} k {k})",
+                got.len(),
+                want.len()
+            );
+            for (g, w) in got.iter().zip(want.iter()) {
+                prop_assert!(
+                    g.id == w.id && g.score == w.score,
+                    "{g:?} vs {w:?} (vocab {vocab} shards {n_shards} k {k} query {query})"
+                );
+            }
+            Ok(())
+        });
     }
 }

@@ -34,6 +34,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod corpus;

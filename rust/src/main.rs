@@ -4,6 +4,7 @@
 //! `artifacts`. Run `w2k --help` for details.
 
 use word2ket::cli;
+use word2ket::cluster;
 use word2ket::config;
 use word2ket::coordinator;
 use word2ket::embedding::{self, stats, EmbeddingStore};
@@ -35,6 +36,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&parsed),
         "eval" => cmd_eval(&parsed),
         "serve" => cmd_serve(&parsed),
+        "cluster" => cmd_cluster(&parsed),
         "snapshot" => cmd_snapshot(&parsed),
         "params" => cmd_params(),
         "artifacts" => cmd_artifacts(&parsed),
@@ -84,6 +86,93 @@ fn cmd_serve(parsed: &cli::Parsed) -> word2ket::Result<()> {
     coordinator::server::serve_blocking(&cfg)
 }
 
+fn cmd_cluster(parsed: &cli::Parsed) -> word2ket::Result<()> {
+    let action = parsed.positionals.first().map(String::as_str).ok_or_else(|| {
+        word2ket::Error::Cli("cluster needs an action: route | shard | status".into())
+    })?;
+    let topo_path = parsed
+        .positionals
+        .get(1)
+        .ok_or_else(|| word2ket::Error::Cli("cluster needs a topology TOML file".into()))?;
+    let src = std::fs::read_to_string(topo_path).map_err(|e| {
+        word2ket::Error::Config(format!("cannot read topology {topo_path}: {e}"))
+    })?;
+    let doc = config::TomlDoc::parse(&src)?;
+    let topo = cluster::Topology::from_doc(&doc)?;
+    let router_cfg = cluster::RouterConfig::from_doc(&doc);
+    match action {
+        // Run the scatter-gather router tier: N shard servers behind one
+        // listener speaking the standard text + binary protocols.
+        "route" => {
+            let addr = parsed.get("addr").unwrap_or("127.0.0.1:7900");
+            cluster::server::serve_blocking(topo, router_cfg, addr)
+        }
+        // Slice the configured store into per-shard snapshot files each
+        // shard server boots from (the topology's vocab is authoritative).
+        "shard" => {
+            let mut cfg = load_cfg(parsed)?;
+            cfg.model.vocab = topo.vocab();
+            cfg.validate()?;
+            let mut rng = Rng::new(cfg.train.seed);
+            let store = embedding::build(
+                &cfg.embedding,
+                cfg.model.vocab,
+                cfg.model.emb_dim,
+                &mut rng,
+            );
+            let out = Path::new(parsed.get("out").unwrap_or("shards"));
+            let opts =
+                snapshot::SaveOptions { codec: cfg.snapshot.codec, ..Default::default() };
+            let saved = cluster::save_shard_snapshots(store.as_ref(), &topo, out, &opts)?;
+            println!("sliced {} into {} ({})", store.describe(), topo.describe(), out.display());
+            for (s, (path, info)) in saved.iter().enumerate() {
+                println!(
+                    "  shard {s}: {} ({} bytes, {} sections, {} replicas: {})",
+                    path.display(),
+                    info.bytes,
+                    info.sections,
+                    topo.replicas(s).len(),
+                    topo.replicas(s).join(", ")
+                );
+            }
+            Ok(())
+        }
+        // One-shot cluster health + STATS roll-up.
+        "status" => {
+            let no_probe =
+                cluster::RouterConfig { probe_interval: std::time::Duration::ZERO, ..router_cfg };
+            let router = cluster::Router::new(topo, no_probe);
+            let cs = router.stats();
+            println!(
+                "cluster: {} — {}/{} replicas healthy, generations {}..{}, {} failovers",
+                router.topology().describe(),
+                cs.healthy_replicas,
+                cs.total_replicas,
+                cs.min_generation,
+                cs.max_generation,
+                cs.failovers
+            );
+            for r in &cs.replicas {
+                match &r.stats {
+                    Some(ws) => println!(
+                        "  shard {} replica {} [{}]: generation={} served={} p99_us={:.0}",
+                        r.shard, r.replica, r.addr, ws.model_generation, ws.served, ws.p99_us
+                    ),
+                    None => println!(
+                        "  shard {} replica {} [{}]: UNREACHABLE",
+                        r.shard, r.replica, r.addr
+                    ),
+                }
+            }
+            router.shutdown();
+            Ok(())
+        }
+        other => Err(word2ket::Error::Cli(format!(
+            "unknown cluster action '{other}' (expected route | shard | status)"
+        ))),
+    }
+}
+
 fn cmd_snapshot(parsed: &cli::Parsed) -> word2ket::Result<()> {
     let action = parsed
         .positionals
@@ -109,7 +198,11 @@ fn cmd_snapshot(parsed: &cli::Parsed) -> word2ket::Result<()> {
                 cfg.model.emb_dim,
                 &mut rng,
             ));
-            let opts = snapshot::SaveOptions { codec, norms: parsed.flag("with-norms") };
+            let opts = snapshot::SaveOptions {
+                codec,
+                norms: parsed.flag("with-norms"),
+                ..Default::default()
+            };
             let info = if parsed.flag("with-index")
                 && cfg.index.kind == config::IndexKind::Ivf
             {

@@ -108,6 +108,28 @@ pub struct ServingStats {
     pub snapshot_bytes: u64,
 }
 
+impl ServingStats {
+    /// The STATS payload in [`wire::STATS_FIELD_NAMES`] order — the single
+    /// source both protocols serialize from (binary writes these f64s
+    /// verbatim; the text line formats them name=value), so the two cannot
+    /// drift when a field is added.
+    pub fn fields(&self) -> [f64; wire::STATS_FIELDS] {
+        [
+            self.p50_us,
+            self.p99_us,
+            self.served as f64,
+            self.cache.hits as f64,
+            self.cache.misses as f64,
+            self.rejected as f64,
+            self.knn_queries as f64,
+            self.knn_candidates as f64,
+            self.knn_mean_probes,
+            self.model_generation as f64,
+            self.snapshot_bytes as f64,
+        ]
+    }
+}
+
 /// One immutable model generation: cache + index + worker pool.
 struct Model {
     store: Arc<ShardedCache>,

@@ -20,19 +20,25 @@
 //!   op 5 KNN     count == 2: [query id, k]; k == 0 is a bad frame
 //!   op 6 RELOAD  count = path byte length, payload = count raw UTF-8 path
 //!                bytes (not ids); hot-swaps the model to that snapshot
+//!   op 7 PING    count == 0; liveness probe (the cluster health prober's
+//!                op). A PING carrying ids is a bad request.
+//!   op 8 KNN_VEC count = query dimensionality, payload = u32 k then
+//!                count × f32 query vector (not ids); the scatter half of
+//!                cluster KNN — shards that do not own the query word score
+//!                the caller-supplied vector
 //! response:      u32 status, u32 count, payload
 //!   LOOKUP ok    count = #ids,  payload = count × dim × f32 rows
 //!   DOT ok       count = 1,     payload = 1 × f32
-//!   STATS ok     count = 11,    payload = 11 × f64:
-//!                p50_us, p99_us, served, cache_hits, cache_misses, rejected,
-//!                knn_queries, knn_candidates, knn_mean_probes,
-//!                model_generation, snapshot_bytes
+//!   STATS ok     count = 11,    payload = 11 × f64 in
+//!                [`STATS_FIELD_NAMES`] order
 //!   KNN ok       count = #neighbors (≤ k), payload = count × (u32 id,
-//!                f32 score), best first
+//!                f32 score), best first (KNN_VEC identical, query word
+//!                not excluded)
 //!   RELOAD ok    count = 1,     payload = 1 × u32 new model generation
+//!   PING ok      count = 0,     no payload (status-only)
 //!   error        status != 0,   count = 0, no payload
-//! status codes:  0 ok, 1 id out of range, 2 bad frame, 3 overloaded
-//!                (backpressure), 4 timeout, 5 reload failed
+//! status codes:  0 ok, 1 id out of range, 2 bad frame/request, 3
+//!                overloaded (backpressure), 4 timeout, 5 reload failed
 //! ```
 //!
 //! Hostile-frame hardening: `count` is validated against [`MAX_IDS`]
@@ -55,6 +61,8 @@ pub const OP_STATS: u32 = 3;
 pub const OP_QUIT: u32 = 4;
 pub const OP_KNN: u32 = 5;
 pub const OP_RELOAD: u32 = 6;
+pub const OP_PING: u32 = 7;
+pub const OP_KNN_VEC: u32 = 8;
 
 pub const STATUS_OK: u32 = 0;
 pub const STATUS_RANGE: u32 = 1;
@@ -62,6 +70,12 @@ pub const STATUS_BAD_FRAME: u32 = 2;
 pub const STATUS_OVERLOADED: u32 = 3;
 pub const STATUS_TIMEOUT: u32 = 4;
 pub const STATUS_RELOAD_FAILED: u32 = 5;
+
+/// A syntactically valid frame carrying a semantically invalid request
+/// (e.g. `PING` with ids). Same wire code as [`STATUS_BAD_FRAME`] — the
+/// distinction is documentation-level, the connection stays usable either
+/// way because the frame was consumed in full.
+pub const STATUS_BAD_REQUEST: u32 = STATUS_BAD_FRAME;
 
 /// Per-request id-count cap: bounds allocation from a hostile frame header.
 pub const MAX_IDS: u32 = 1 << 16;
@@ -72,6 +86,85 @@ pub const MAX_PATH_BYTES: u32 = 4096;
 
 /// Number of f64 values in a STATS response payload.
 pub const STATS_FIELDS: usize = 11;
+
+/// The one canonical STATS field list. The binary payload is these values
+/// in this order; the text `STATS` line is `name=value` pairs in this order
+/// (formatted by [`format_stats_field`]); [`WireStats`] decodes positionally
+/// from it. Adding a field means touching exactly this table,
+/// [`crate::serving::ServingStats::fields`], and the [`WireStats`] struct —
+/// the compiler and the shared drift test
+/// ([`crate::testing::assert_stats_consistent`]) catch anything missed, so
+/// the two protocols cannot desync again.
+pub const STATS_FIELD_NAMES: [&str; STATS_FIELDS] = [
+    "p50_us",
+    "p99_us",
+    "served",
+    "cache_hits",
+    "cache_misses",
+    "rejected",
+    "knn_queries",
+    "knn_candidates",
+    "knn_mean_probes",
+    "model_generation",
+    "snapshot_bytes",
+];
+
+/// Text-protocol rendering of one STATS field: microsecond percentiles as
+/// whole numbers, `knn_mean_probes` with two decimals, everything else as
+/// an integer counter. Shared by the server's text `STATS` line and the
+/// drift test so a formatting change cannot split them.
+pub fn format_stats_field(name: &str, value: f64) -> String {
+    match name {
+        "p50_us" | "p99_us" => format!("{value:.0}"),
+        "knn_mean_probes" => format!("{value:.2}"),
+        _ => format!("{}", value as u64),
+    }
+}
+
+/// Render the canonical text-protocol `STATS` line (no trailing newline):
+/// `OK name=value ...` over [`STATS_FIELD_NAMES`]. Both the single-node
+/// server and the cluster router's listener emit exactly this (the router
+/// appends its rollup extras after), so the text rendering exists once.
+pub fn format_stats_line(fields: &[f64; STATS_FIELDS]) -> String {
+    let mut line = String::from("OK");
+    for (name, value) in STATS_FIELD_NAMES.iter().zip(fields) {
+        line.push(' ');
+        line.push_str(name);
+        line.push('=');
+        line.push_str(&format_stats_field(name, *value));
+    }
+    line
+}
+
+/// Write a binary STATS response frame — the one encoding of the shared
+/// field table, used by the single-node handler and the cluster listener.
+pub(crate) fn write_stats_frame(
+    w: &mut impl Write,
+    fields: &[f64; STATS_FIELDS],
+) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(8 + STATS_FIELDS * 8);
+    put_u32(&mut buf, STATUS_OK);
+    put_u32(&mut buf, STATS_FIELDS as u32);
+    put_f64s(&mut buf, fields);
+    w.write_all(&buf)
+}
+
+/// Write a KNN/KNN_VEC response frame: `count × (u32 id, f32 score)`,
+/// best first. One encoding for OP_KNN, OP_KNN_VEC, and the cluster
+/// listener's merged results.
+pub(crate) fn write_neighbors_frame<I>(w: &mut impl Write, neighbors: I) -> io::Result<()>
+where
+    I: ExactSizeIterator<Item = (u32, f32)>,
+{
+    let mut buf = Vec::with_capacity(8 + neighbors.len() * 8);
+    put_u32(&mut buf, STATUS_OK);
+    put_u32(&mut buf, neighbors.len() as u32);
+    for (id, score) in neighbors {
+        put_u32(&mut buf, id);
+        put_f32s(&mut buf, &[score]);
+    }
+    w.write_all(&buf)
+}
 
 pub fn status_name(status: u32) -> &'static str {
     match status {
@@ -86,32 +179,35 @@ pub fn status_name(status: u32) -> &'static str {
 }
 
 // ---- primitive framing ----------------------------------------------------
+// pub(crate): the cluster router's listener (`cluster::server`) speaks the
+// identical frame grammar upstream and reuses these instead of re-deriving
+// the byte layout.
 
-fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+pub(crate) fn read_u32(r: &mut impl Read) -> io::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn put_u32(buf: &mut Vec<u8>, x: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, x: u32) {
     buf.extend_from_slice(&x.to_le_bytes());
 }
 
-fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
     buf.reserve(xs.len() * 4);
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
 }
 
-fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+pub(crate) fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
     buf.reserve(xs.len() * 8);
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
 }
 
-fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+pub(crate) fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
     let mut bytes = vec![0u8; n * 4];
     r.read_exact(&mut bytes)?;
     Ok(bytes
@@ -129,7 +225,7 @@ fn read_f64s(r: &mut impl Read, n: usize) -> io::Result<Vec<f64>> {
         .collect())
 }
 
-fn write_error(w: &mut impl Write, status: u32) -> io::Result<()> {
+pub(crate) fn write_error(w: &mut impl Write, status: u32) -> io::Result<()> {
     let mut buf = Vec::with_capacity(8);
     put_u32(&mut buf, status);
     put_u32(&mut buf, 0);
@@ -195,6 +291,29 @@ pub fn handle_binary(
             }
             continue;
         }
+        if op == OP_KNN_VEC {
+            // KNN_VEC's payload is `u32 k` + `count` f32s, not ids. The cap
+            // check precedes any allocation, like MAX_IDS below; the whole
+            // frame is consumed before validation so the connection stays
+            // usable after a semantic error.
+            if count == 0 || count > MAX_IDS {
+                return write_error(writer, STATUS_BAD_FRAME);
+            }
+            let k = read_u32(reader)? as usize;
+            let query = read_f32s(reader, count as usize)?;
+            if k == 0 {
+                write_error(writer, STATUS_BAD_REQUEST)?;
+                continue;
+            }
+            match state.knn(Query::Vector(query), k) {
+                Ok(neighbors) => {
+                    let pairs = neighbors.iter().map(|n| (n.id as u32, n.score));
+                    write_neighbors_frame(writer, pairs)?;
+                }
+                Err(e) => write_error(writer, status_of(e))?,
+            }
+            continue;
+        }
         // Hostile-header guard: the cap check precedes the id-buffer
         // allocation, so a 4 GiB count never reserves memory.
         if count > MAX_IDS {
@@ -207,6 +326,18 @@ pub fn handle_binary(
         }
         match op {
             OP_QUIT => return Ok(()),
+            // Status-only liveness probe (the cluster health prober's op):
+            // no state is touched, so a wedged model cannot fake liveness —
+            // only the listener/framing path is exercised.
+            OP_PING if ids.is_empty() => {
+                let mut buf = Vec::with_capacity(8);
+                put_u32(&mut buf, STATUS_OK);
+                put_u32(&mut buf, 0);
+                writer.write_all(&buf)?;
+            }
+            // A PING carrying ids is a bad request (the frame was consumed,
+            // so the connection survives).
+            OP_PING => write_error(writer, STATUS_BAD_REQUEST)?,
             OP_LOOKUP if !ids.is_empty() => match state.lookup_rows(ids) {
                 Ok(rows) => {
                     let mut buf = Vec::with_capacity(8 + rows.len() * state.dim() * 4);
@@ -239,40 +370,16 @@ pub fn handle_binary(
                 let (query, k) = (ids[0], ids[1]);
                 match state.knn(Query::Id(query), k) {
                     Ok(neighbors) => {
-                        let mut buf = Vec::with_capacity(8 + neighbors.len() * 8);
-                        put_u32(&mut buf, STATUS_OK);
-                        put_u32(&mut buf, neighbors.len() as u32);
-                        for n in &neighbors {
-                            put_u32(&mut buf, n.id as u32);
-                            put_f32s(&mut buf, &[n.score]);
-                        }
-                        writer.write_all(&buf)?;
+                        let pairs = neighbors.iter().map(|n| (n.id as u32, n.score));
+                        write_neighbors_frame(writer, pairs)?;
                     }
                     Err(e) => write_error(writer, status_of(e))?,
                 }
             }
             OP_STATS => {
-                let s = state.stats();
-                let mut buf = Vec::with_capacity(8 + STATS_FIELDS * 8);
-                put_u32(&mut buf, STATUS_OK);
-                put_u32(&mut buf, STATS_FIELDS as u32);
-                put_f64s(
-                    &mut buf,
-                    &[
-                        s.p50_us,
-                        s.p99_us,
-                        s.served as f64,
-                        s.cache.hits as f64,
-                        s.cache.misses as f64,
-                        s.rejected as f64,
-                        s.knn_queries as f64,
-                        s.knn_candidates as f64,
-                        s.knn_mean_probes,
-                        s.model_generation as f64,
-                        s.snapshot_bytes as f64,
-                    ],
-                );
-                writer.write_all(&buf)?;
+                // The payload is the shared field table in canonical order
+                // (the text protocol renders the same array).
+                write_stats_frame(writer, &state.stats().fields())?;
             }
             // Known op with a bad id count, or an unknown op: the frame was
             // still consumed in full, so report and keep the connection.
@@ -283,11 +390,24 @@ pub fn handle_binary(
 
 // ---- client side ----------------------------------------------------------
 
-/// Client-side failure: transport error or a non-zero server status.
+/// Client-side failure, typed so callers (the cluster router above all) can
+/// tell *what kind* of transport problem occurred instead of pattern-
+/// matching on a raw `io::Error`:
+///
+/// * [`Status`](WireError::Status) — the server answered with a non-zero
+///   status; the connection is fine.
+/// * [`Connect`](WireError::Connect) — establishing the connection (resolve
+///   / connect / handshake) failed; nothing was sent.
+/// * [`TimedOut`](WireError::TimedOut) — a configured read/write deadline
+///   expired; the connection state is unknown and the client will reconnect
+///   on the next request.
+/// * [`Io`](WireError::Io) — any other transport error.
 #[derive(Debug)]
 pub enum WireError {
     Io(io::Error),
     Status(u32),
+    Connect { addr: String, message: String },
+    TimedOut,
 }
 
 impl std::fmt::Display for WireError {
@@ -295,6 +415,8 @@ impl std::fmt::Display for WireError {
         match self {
             WireError::Io(e) => write!(f, "wire io: {e}"),
             WireError::Status(s) => write!(f, "server status {s}: {}", status_name(*s)),
+            WireError::Connect { addr, message } => write!(f, "connect {addr}: {message}"),
+            WireError::TimedOut => write!(f, "wire deadline expired"),
         }
     }
 }
@@ -303,12 +425,36 @@ impl std::error::Error for WireError {}
 
 impl From<io::Error> for WireError {
     fn from(e: io::Error) -> Self {
-        WireError::Io(e)
+        classify(e)
     }
 }
 
+/// Typed mapping of raw transport errors: deadline expiries (both the unix
+/// `WouldBlock` and the windows `TimedOut` spellings of a socket timeout)
+/// become [`WireError::TimedOut`]; everything else stays [`WireError::Io`].
+fn classify(e: io::Error) -> WireError {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => WireError::TimedOut,
+        _ => WireError::Io(e),
+    }
+}
+
+/// Did the peer drop the connection (as opposed to answering or timing
+/// out)? These are the errors worth one transparent reconnect: a server
+/// restart or an idle-connection reap, not a protocol problem.
+fn connection_dropped(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::BrokenPipe
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::NotConnected
+    )
+}
+
 /// Aggregate server statistics decoded from a STATS response.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct WireStats {
     pub p50_us: f64,
     pub p99_us: f64,
@@ -323,99 +469,11 @@ pub struct WireStats {
     pub snapshot_bytes: u64,
 }
 
-/// Minimal binary-protocol client (load generator, tests, examples).
-pub struct BinaryClient {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-    pub dim: usize,
-}
-
-impl BinaryClient {
-    /// Connect and perform the magic handshake.
-    pub fn connect(addr: &str) -> Result<BinaryClient, WireError> {
-        let stream = TcpStream::connect(addr)?;
-        let mut writer = stream.try_clone()?;
-        let mut reader = BufReader::new(stream);
-        writer.write_all(&MAGIC)?;
-        let mut ack = [0u8; 4];
-        reader.read_exact(&mut ack)?;
-        if ack != MAGIC {
-            return Err(WireError::Io(io::Error::new(
-                io::ErrorKind::InvalidData,
-                "server did not ack binary magic",
-            )));
-        }
-        let dim = read_u32(&mut reader)? as usize;
-        Ok(BinaryClient { reader, writer, dim })
-    }
-
-    fn request(&mut self, op: u32, ids: &[u32]) -> Result<u32, WireError> {
-        let mut buf = Vec::with_capacity(8 + ids.len() * 4);
-        put_u32(&mut buf, op);
-        put_u32(&mut buf, ids.len() as u32);
-        for &id in ids {
-            put_u32(&mut buf, id);
-        }
-        self.writer.write_all(&buf)?;
-        let status = read_u32(&mut self.reader)?;
-        Ok(status)
-    }
-
-    /// Fetch rows for `ids`; one `dim`-length vector per id, request order.
-    pub fn lookup(&mut self, ids: &[u32]) -> Result<Vec<Vec<f32>>, WireError> {
-        let status = self.request(OP_LOOKUP, ids)?;
-        let count = read_u32(&mut self.reader)? as usize;
-        if status != STATUS_OK {
-            return Err(WireError::Status(status));
-        }
-        let mut rows = Vec::with_capacity(count);
-        for _ in 0..count {
-            rows.push(read_f32s(&mut self.reader, self.dim)?);
-        }
-        Ok(rows)
-    }
-
-    /// Inner product of two rows, computed server-side.
-    pub fn dot(&mut self, a: u32, b: u32) -> Result<f32, WireError> {
-        let status = self.request(OP_DOT, &[a, b])?;
-        let count = read_u32(&mut self.reader)? as usize;
-        if status != STATUS_OK {
-            return Err(WireError::Status(status));
-        }
-        let xs = read_f32s(&mut self.reader, count)?;
-        Ok(xs[0])
-    }
-
-    /// Top-`k` neighbors of word `id`, computed server-side (best first).
-    pub fn knn(&mut self, id: u32, k: u32) -> Result<Vec<(u32, f32)>, WireError> {
-        let status = self.request(OP_KNN, &[id, k])?;
-        let count = read_u32(&mut self.reader)? as usize;
-        if status != STATUS_OK {
-            return Err(WireError::Status(status));
-        }
-        let mut out = Vec::with_capacity(count);
-        for _ in 0..count {
-            let nid = read_u32(&mut self.reader)?;
-            let score = read_f32s(&mut self.reader, 1)?[0];
-            out.push((nid, score));
-        }
-        Ok(out)
-    }
-
-    pub fn stats(&mut self) -> Result<WireStats, WireError> {
-        let status = self.request(OP_STATS, &[])?;
-        let count = read_u32(&mut self.reader)? as usize;
-        if status != STATUS_OK {
-            return Err(WireError::Status(status));
-        }
-        let xs = read_f64s(&mut self.reader, count)?;
-        if xs.len() < STATS_FIELDS {
-            return Err(WireError::Io(io::Error::new(
-                io::ErrorKind::InvalidData,
-                "short STATS payload",
-            )));
-        }
-        Ok(WireStats {
+impl WireStats {
+    /// Decode from a STATS payload ([`STATS_FIELD_NAMES`] order). Extra
+    /// trailing fields from a newer server are ignored.
+    pub fn from_fields(xs: &[f64]) -> WireStats {
+        WireStats {
             p50_us: xs[0],
             p99_us: xs[1],
             served: xs[2] as u64,
@@ -427,26 +485,317 @@ impl BinaryClient {
             knn_mean_probes: xs[8],
             model_generation: xs[9] as u64,
             snapshot_bytes: xs[10] as u64,
+        }
+    }
+
+    /// Re-encode in [`STATS_FIELD_NAMES`] order (drift tests, the cluster
+    /// router's rolled-up STATS responses).
+    pub fn fields(&self) -> [f64; STATS_FIELDS] {
+        [
+            self.p50_us,
+            self.p99_us,
+            self.served as f64,
+            self.cache_hits as f64,
+            self.cache_misses as f64,
+            self.rejected as f64,
+            self.knn_queries as f64,
+            self.knn_candidates as f64,
+            self.knn_mean_probes,
+            self.model_generation as f64,
+            self.snapshot_bytes as f64,
+        ]
+    }
+}
+
+/// Binary-protocol client (load generator, tests, examples, and the unit of
+/// connection pooling inside the cluster router).
+///
+/// Hardened for use from a router: optional connect/read/write timeouts
+/// (deadline expiry surfaces as [`WireError::TimedOut`]), and a single
+/// transparent reconnect when the server dropped the connection between
+/// requests (idle reap, server restart). The retry resends only when it is
+/// safe: a failed *write* always retries (nothing reached the server), a
+/// failed first *read* retries only for idempotent ops — `RELOAD` is never
+/// replayed, because a reload that was applied but whose reply was lost
+/// would double-bump the generation.
+pub struct BinaryClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    pub dim: usize,
+    addr: String,
+    timeouts: Option<Timeouts>,
+    /// The stream may hold a half-read or late response (a deadline expired
+    /// mid-exchange): the next request must reconnect first, or it would
+    /// consume the previous request's bytes as its own reply.
+    broken: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Timeouts {
+    connect: std::time::Duration,
+    io: std::time::Duration,
+}
+
+impl BinaryClient {
+    /// Connect and perform the magic handshake (no deadlines: a request
+    /// blocks until the server answers or drops the connection).
+    pub fn connect(addr: &str) -> Result<BinaryClient, WireError> {
+        Self::connect_opts(addr, None)
+    }
+
+    /// Connect with a connection deadline plus per-operation read/write
+    /// deadlines. Expired deadlines surface as [`WireError::TimedOut`]; the
+    /// next request reconnects.
+    pub fn connect_with_timeouts(
+        addr: &str,
+        connect: std::time::Duration,
+        io: std::time::Duration,
+    ) -> Result<BinaryClient, WireError> {
+        Self::connect_opts(addr, Some(Timeouts { connect, io }))
+    }
+
+    fn connect_opts(addr: &str, timeouts: Option<Timeouts>) -> Result<BinaryClient, WireError> {
+        let fail = |message: String| WireError::Connect { addr: addr.to_string(), message };
+        let stream = match timeouts {
+            None => TcpStream::connect(addr).map_err(|e| fail(e.to_string()))?,
+            Some(t) => {
+                use std::net::ToSocketAddrs;
+                let sock = addr
+                    .to_socket_addrs()
+                    .map_err(|e| fail(format!("resolve: {e}")))?
+                    .next()
+                    .ok_or_else(|| fail("resolved to no addresses".into()))?;
+                let stream = TcpStream::connect_timeout(&sock, t.connect)
+                    .map_err(|e| fail(e.to_string()))?;
+                stream.set_read_timeout(Some(t.io)).map_err(|e| fail(e.to_string()))?;
+                stream.set_write_timeout(Some(t.io)).map_err(|e| fail(e.to_string()))?;
+                stream
+            }
+        };
+        let mut writer = stream.try_clone().map_err(|e| fail(e.to_string()))?;
+        let mut reader = BufReader::new(stream);
+        writer.write_all(&MAGIC).map_err(|e| fail(e.to_string()))?;
+        let mut ack = [0u8; 4];
+        reader.read_exact(&mut ack).map_err(|e| fail(e.to_string()))?;
+        if ack != MAGIC {
+            return Err(fail("server did not ack binary magic".into()));
+        }
+        let dim = read_u32(&mut reader).map_err(|e| fail(e.to_string()))? as usize;
+        Ok(BinaryClient {
+            reader,
+            writer,
+            dim,
+            addr: addr.to_string(),
+            timeouts,
+            broken: false,
         })
     }
 
+    /// The address this client connects (and reconnects) to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Replace this client's transport with a fresh connection to the same
+    /// address (re-handshakes, so `dim` tracks a restarted server). On
+    /// failure the client stays marked broken, so the next request retries
+    /// the reconnect instead of touching the stale stream.
+    fn reconnect(&mut self) -> Result<(), WireError> {
+        self.broken = true;
+        let fresh = Self::connect_opts(&self.addr, self.timeouts)?;
+        *self = fresh;
+        Ok(())
+    }
+
+    /// Mark the transport unusable (a deadline expired or the stream died
+    /// mid-exchange — response framing can no longer be trusted) and
+    /// convert the error.
+    fn fail(&mut self, e: io::Error) -> WireError {
+        self.broken = true;
+        classify(e)
+    }
+
+    /// Payload reads: any failure poisons the connection (a partial read
+    /// leaves the stream mid-frame).
+    fn recv_u32(&mut self) -> Result<u32, WireError> {
+        match read_u32(&mut self.reader) {
+            Ok(x) => Ok(x),
+            Err(e) => Err(self.fail(e)),
+        }
+    }
+
+    fn recv_f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        match read_f32s(&mut self.reader, n) {
+            Ok(xs) => Ok(xs),
+            Err(e) => Err(self.fail(e)),
+        }
+    }
+
+    fn recv_f64s(&mut self, n: usize) -> Result<Vec<f64>, WireError> {
+        match read_f64s(&mut self.reader, n) {
+            Ok(xs) => Ok(xs),
+            Err(e) => Err(self.fail(e)),
+        }
+    }
+
+    /// Send `frame` and read the response status word, reconnecting and
+    /// resending once if the server dropped the connection. See the type
+    /// docs for when the retry is safe (`idempotent`). A connection
+    /// poisoned by an earlier timeout/partial read reconnects *before*
+    /// sending — its stream may hold a late reply that would otherwise be
+    /// consumed as this request's response.
+    fn roundtrip(&mut self, frame: &[u8], idempotent: bool) -> Result<u32, WireError> {
+        if self.broken {
+            self.reconnect()?;
+        }
+        if let Err(e) = self.writer.write_all(frame) {
+            if !connection_dropped(&e) {
+                return Err(self.fail(e));
+            }
+            // Nothing reached the server: always safe to resend.
+            self.reconnect()?;
+            if let Err(e) = self.writer.write_all(frame) {
+                return Err(self.fail(e));
+            }
+            return self.recv_u32();
+        }
+        match read_u32(&mut self.reader) {
+            Ok(status) => Ok(status),
+            Err(e) if idempotent && connection_dropped(&e) => {
+                // The write landed in a dead socket's buffer; the server
+                // never processed it (or its answer is lost either way).
+                // Safe to replay idempotent ops exactly once.
+                self.reconnect()?;
+                if let Err(e) = self.writer.write_all(frame) {
+                    return Err(self.fail(e));
+                }
+                self.recv_u32()
+            }
+            Err(e) => Err(self.fail(e)),
+        }
+    }
+
+    fn request(&mut self, op: u32, ids: &[u32]) -> Result<u32, WireError> {
+        let mut buf = Vec::with_capacity(8 + ids.len() * 4);
+        put_u32(&mut buf, op);
+        put_u32(&mut buf, ids.len() as u32);
+        for &id in ids {
+            put_u32(&mut buf, id);
+        }
+        self.roundtrip(&buf, true)
+    }
+
+    /// Fetch rows for `ids`; one `dim`-length vector per id, request order.
+    pub fn lookup(&mut self, ids: &[u32]) -> Result<Vec<Vec<f32>>, WireError> {
+        let status = self.request(OP_LOOKUP, ids)?;
+        let count = self.recv_u32()? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let mut rows = Vec::with_capacity(count);
+        for _ in 0..count {
+            let dim = self.dim;
+            rows.push(self.recv_f32s(dim)?);
+        }
+        Ok(rows)
+    }
+
+    /// Inner product of two rows, computed server-side.
+    pub fn dot(&mut self, a: u32, b: u32) -> Result<f32, WireError> {
+        let status = self.request(OP_DOT, &[a, b])?;
+        let count = self.recv_u32()? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let xs = self.recv_f32s(count)?;
+        Ok(xs[0])
+    }
+
+    /// Top-`k` neighbors of word `id`, computed server-side (best first).
+    pub fn knn(&mut self, id: u32, k: u32) -> Result<Vec<(u32, f32)>, WireError> {
+        let status = self.request(OP_KNN, &[id, k])?;
+        let count = self.recv_u32()? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nid = self.recv_u32()?;
+            let score = self.recv_f32s(1)?[0];
+            out.push((nid, score));
+        }
+        Ok(out)
+    }
+
+    /// Top-`k` neighbors of an external query vector, computed server-side
+    /// (best first). Unlike [`knn`](Self::knn) no word is excluded — the
+    /// server cannot know which id (if any) the vector came from. This is
+    /// the scatter half of cluster KNN: the router sends the query row to
+    /// every shard and merges the per-shard heaps.
+    pub fn knn_vec(&mut self, query: &[f32], k: u32) -> Result<Vec<(u32, f32)>, WireError> {
+        let mut buf = Vec::with_capacity(12 + query.len() * 4);
+        put_u32(&mut buf, OP_KNN_VEC);
+        put_u32(&mut buf, query.len() as u32);
+        put_u32(&mut buf, k);
+        put_f32s(&mut buf, query);
+        let status = self.roundtrip(&buf, true)?;
+        let count = self.recv_u32()? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nid = self.recv_u32()?;
+            let score = self.recv_f32s(1)?[0];
+            out.push((nid, score));
+        }
+        Ok(out)
+    }
+
+    /// Status-only liveness probe (the health prober's request).
+    pub fn ping(&mut self) -> Result<(), WireError> {
+        let status = self.request(OP_PING, &[])?;
+        let _count = self.recv_u32()?;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        Ok(())
+    }
+
+    pub fn stats(&mut self) -> Result<WireStats, WireError> {
+        let status = self.request(OP_STATS, &[])?;
+        let count = self.recv_u32()? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let xs = self.recv_f64s(count)?;
+        if xs.len() < STATS_FIELDS {
+            return Err(WireError::Io(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "short STATS payload",
+            )));
+        }
+        Ok(WireStats::from_fields(&xs))
+    }
+
     /// Ask the server to hot-swap its model to the snapshot at `path`
-    /// (server-side path). Returns the new model generation.
+    /// (server-side path). Returns the new model generation. Never replayed
+    /// after a lost reply (see the type docs): a duplicate reload would
+    /// bump the generation twice.
     pub fn reload(&mut self, path: &str) -> Result<u32, WireError> {
         let bytes = path.as_bytes();
         let mut buf = Vec::with_capacity(8 + bytes.len());
         put_u32(&mut buf, OP_RELOAD);
         put_u32(&mut buf, bytes.len() as u32);
         buf.extend_from_slice(bytes);
-        self.writer.write_all(&buf)?;
-        let status = read_u32(&mut self.reader)?;
-        let count = read_u32(&mut self.reader)? as usize;
+        let status = self.roundtrip(&buf, false)?;
+        let count = self.recv_u32()? as usize;
         if status != STATUS_OK {
             return Err(WireError::Status(status));
         }
         let mut generation = 0u32;
         for _ in 0..count {
-            generation = read_u32(&mut self.reader)?;
+            generation = self.recv_u32()?;
         }
         Ok(generation)
     }
@@ -484,6 +833,35 @@ mod tests {
         // The dispatcher relies on this: every text command starts with an
         // uppercase ASCII letter, so 0xB2 can never be confused for text.
         assert!(!MAGIC[0].is_ascii());
+    }
+
+    #[test]
+    fn wire_stats_fields_roundtrip() {
+        // from_fields ∘ fields must be the identity, and the table length
+        // must match the struct — the compile-time half of the drift guard.
+        let s = WireStats {
+            p50_us: 12.0,
+            p99_us: 99.5,
+            served: 7,
+            cache_hits: 3,
+            cache_misses: 4,
+            rejected: 1,
+            knn_queries: 2,
+            knn_candidates: 150,
+            knn_mean_probes: 2.5,
+            model_generation: 3,
+            snapshot_bytes: 4096,
+        };
+        assert_eq!(WireStats::from_fields(&s.fields()), s);
+        assert_eq!(STATS_FIELD_NAMES.len(), s.fields().len());
+    }
+
+    #[test]
+    fn stats_field_formatting() {
+        assert_eq!(format_stats_field("p50_us", 12.6), "13");
+        assert_eq!(format_stats_field("knn_mean_probes", 2.0), "2.00");
+        assert_eq!(format_stats_field("served", 42.0), "42");
+        assert_eq!(format_stats_field("model_generation", 1.0), "1");
     }
 
     #[test]

@@ -65,6 +65,11 @@ pub const FLAG_INDEX_COSINE: u32 = 1 << 2;
 /// the section registry tolerates unknown ids — so the format version
 /// stays unchanged; this flag *is* the gate.
 pub const FLAG_HAS_NORMS: u32 = 1 << 3;
+/// `flags` bit 4: the snapshot is one shard of a sharded vocabulary and
+/// carries a [`SEC_SHARD_RANGE`] section describing which slice of the
+/// global id space it owns (see [`ShardRange`]). Same compatibility story
+/// as [`FLAG_HAS_NORMS`]: older readers ignore bit and section.
+pub const FLAG_HAS_SHARD_RANGE: u32 = 1 << 4;
 
 // Section ids (fixed registry; unknown ids are ignored on load so future
 // versions can add sections without breaking old readers).
@@ -82,6 +87,10 @@ pub const SEC_IVF_LIST_LENS: u32 = 11;
 pub const SEC_IVF_LIST_IDS: u32 = 12;
 /// Optional per-word L2 norms (always f32-exact; see [`FLAG_HAS_NORMS`]).
 pub const SEC_NORMS: u32 = 13;
+/// Optional shard-assignment metadata (see [`ShardRange`] /
+/// [`FLAG_HAS_SHARD_RANGE`]): which slice of a sharded global vocabulary
+/// this snapshot's local ids map to.
+pub const SEC_SHARD_RANGE: u32 = 14;
 
 /// Human-readable section name for `snapshot info`.
 pub fn section_name(id: u32) -> &'static str {
@@ -99,6 +108,7 @@ pub fn section_name(id: u32) -> &'static str {
         SEC_IVF_LIST_LENS => "ivf.list_lens",
         SEC_IVF_LIST_IDS => "ivf.list_ids",
         SEC_NORMS => "norms",
+        SEC_SHARD_RANGE => "shard_range",
         _ => "unknown",
     }
 }
@@ -229,6 +239,123 @@ impl Codec {
             Codec::F32 => "f32",
             Codec::F16 => "f16",
             Codec::Int8 => "int8",
+        }
+    }
+}
+
+// ---- shard assignment ------------------------------------------------------
+
+/// [`ShardRange::strategy`] tag: contiguous global-id ranges
+/// (`[start, end)` owned by this shard; local id = global − start).
+pub const SHARD_STRATEGY_RANGE: u32 = 0;
+/// [`ShardRange::strategy`] tag: interleaved hash sharding
+/// (`shard = global mod n_shards`, local id = global ÷ n_shards; `start`
+/// and `end` are unused and stored as 0). Spreads the Zipf head across
+/// shards instead of concentrating it on whichever shard owns the low ids.
+pub const SHARD_STRATEGY_HASH: u32 = 1;
+
+/// Which slice of a sharded global vocabulary a shard snapshot owns —
+/// the topology fact a shard server needs about *itself*, embedded in the
+/// snapshot ([`SEC_SHARD_RANGE`]) so a node can be booted from its shard
+/// file alone and the router can verify it deployed the right slice.
+///
+/// Payload encoding: nine u32s,
+/// `[strategy, shard, n_shards, global_vocab.lo, global_vocab.hi,
+///   start.lo, start.hi, end.lo, end.hi]` (u64s split little-end first,
+/// matching the header's u64 fields).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    /// [`SHARD_STRATEGY_RANGE`] or [`SHARD_STRATEGY_HASH`].
+    pub strategy: u32,
+    /// This shard's index in `0..n_shards`.
+    pub shard: u32,
+    pub n_shards: u32,
+    /// Size of the *global* (unsharded) vocabulary.
+    pub global_vocab: u64,
+    /// Range strategy only: owned global-id range `[start, end)`.
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Encoded element count of a [`SEC_SHARD_RANGE`] payload.
+pub const SHARD_RANGE_U32S: usize = 9;
+
+impl ShardRange {
+    pub fn encode(&self) -> [u32; SHARD_RANGE_U32S] {
+        let split = |x: u64| (x as u32, (x >> 32) as u32);
+        let (gv_lo, gv_hi) = split(self.global_vocab);
+        let (s_lo, s_hi) = split(self.start);
+        let (e_lo, e_hi) = split(self.end);
+        [self.strategy, self.shard, self.n_shards, gv_lo, gv_hi, s_lo, s_hi, e_lo, e_hi]
+    }
+
+    pub fn decode(xs: &[u32]) -> Result<ShardRange> {
+        if xs.len() != SHARD_RANGE_U32S {
+            return Err(Error::Snapshot(format!(
+                "shard_range section has {} u32s (expected {SHARD_RANGE_U32S})",
+                xs.len()
+            )));
+        }
+        let join = |lo: u32, hi: u32| (lo as u64) | ((hi as u64) << 32);
+        Ok(ShardRange {
+            strategy: xs[0],
+            shard: xs[1],
+            n_shards: xs[2],
+            global_vocab: join(xs[3], xs[4]),
+            start: join(xs[5], xs[6]),
+            end: join(xs[7], xs[8]),
+        })
+    }
+
+    /// How many global ids this assignment maps onto the shard — must equal
+    /// the snapshot's own `vocab` for the file to be coherent.
+    pub fn local_count(&self) -> u64 {
+        match self.strategy {
+            SHARD_STRATEGY_RANGE => self.end.saturating_sub(self.start),
+            // Ids in 0..global_vocab congruent to `shard` mod n_shards.
+            _ => {
+                let (v, s, n) = (self.global_vocab, self.shard as u64, self.n_shards as u64);
+                if s >= v || n == 0 {
+                    0
+                } else {
+                    (v - s).div_ceil(n)
+                }
+            }
+        }
+    }
+
+    /// Semantic validation against the snapshot's local vocabulary size; a
+    /// hostile or stale section yields a typed error, never a bad mapping.
+    pub fn validate(&self, local_vocab: u64) -> Result<()> {
+        let fail = |m: String| Err(Error::Snapshot(format!("shard_range: {m}")));
+        if self.strategy != SHARD_STRATEGY_RANGE && self.strategy != SHARD_STRATEGY_HASH {
+            return fail(format!("unknown strategy tag {}", self.strategy));
+        }
+        if self.n_shards == 0 || self.shard >= self.n_shards {
+            return fail(format!("shard {} outside 0..{}", self.shard, self.n_shards));
+        }
+        if self.strategy == SHARD_STRATEGY_RANGE
+            && (self.start > self.end || self.end > self.global_vocab)
+        {
+            return fail(format!(
+                "range [{}, {}) outside global vocabulary {}",
+                self.start, self.end, self.global_vocab
+            ));
+        }
+        if self.local_count() != local_vocab {
+            return fail(format!(
+                "assignment covers {} ids but the snapshot holds {local_vocab}",
+                self.local_count()
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        if self.strategy == SHARD_STRATEGY_HASH {
+            "hash"
+        } else {
+            "range"
         }
     }
 }
@@ -598,6 +725,46 @@ mod tests {
             let back = code as f32 * scale;
             assert!((back - x).abs() <= scale / 2.0 + 1e-7, "{i}: {x} vs {back}");
         }
+    }
+
+    #[test]
+    fn shard_range_encode_decode_validate() {
+        let sr = ShardRange {
+            strategy: SHARD_STRATEGY_RANGE,
+            shard: 1,
+            n_shards: 4,
+            global_vocab: 5_000_000_000, // u64 halves must survive the split
+            start: 1_250_000_000,
+            end: 2_500_000_000,
+        };
+        let back = ShardRange::decode(&sr.encode()).unwrap();
+        assert_eq!(back, sr);
+        back.validate(1_250_000_000).unwrap();
+        assert!(back.validate(7).is_err(), "local vocab mismatch must fail");
+        assert!(ShardRange::decode(&[1, 2, 3]).is_err(), "short payload");
+
+        // Hash strategy: local_count is the congruence-class size.
+        let h = ShardRange {
+            strategy: SHARD_STRATEGY_HASH,
+            shard: 2,
+            n_shards: 3,
+            global_vocab: 10,
+            start: 0,
+            end: 0,
+        };
+        assert_eq!(h.local_count(), 3); // ids 2, 5, 8
+        h.validate(3).unwrap();
+
+        // Hostile values: bad strategy, shard out of range, inverted range.
+        let mut bad = sr;
+        bad.strategy = 9;
+        assert!(bad.validate(sr.local_count()).is_err());
+        let mut bad = sr;
+        bad.shard = 4;
+        assert!(bad.validate(sr.local_count()).is_err());
+        let mut bad = sr;
+        bad.start = bad.end + 1;
+        assert!(bad.validate(sr.local_count()).is_err());
     }
 
     #[test]

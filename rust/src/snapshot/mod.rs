@@ -25,7 +25,10 @@ pub mod format;
 pub mod reader;
 mod store;
 
-pub use format::{crc32, section_name, Codec, Dtype, Header, SectionData, StoreKind};
+pub use format::{
+    crc32, section_name, Codec, Dtype, Header, SectionData, ShardRange, StoreKind,
+    SHARD_STRATEGY_HASH, SHARD_STRATEGY_RANGE,
+};
 pub use reader::{load_index_payload, load_store, IndexPayload, Section, Snapshot};
 pub use store::SnapshotStore;
 
@@ -51,6 +54,13 @@ pub struct SaveOptions {
     /// loader's cosine denominators inconsistent — lossy saves always let
     /// the loader recompute.
     pub norms: bool,
+    /// Mark the snapshot as one shard of a sharded global vocabulary
+    /// ([`format::SEC_SHARD_RANGE`] + [`format::FLAG_HAS_SHARD_RANGE`]): a
+    /// shard server booted from the file knows which global ids it owns,
+    /// and the cluster router can verify it deployed the right slice. The
+    /// assignment is validated against the store's vocabulary at save *and*
+    /// open.
+    pub shard_range: Option<ShardRange>,
 }
 
 /// What a save produced.
@@ -185,6 +195,12 @@ pub fn save_store_with_index(
         };
         header.flags |= FLAG_HAS_NORMS;
         sections.push(encode_f32s(SEC_NORMS, &norms, Codec::F32, 0));
+    }
+
+    if let Some(sr) = opts.shard_range {
+        sr.validate(vocab as u64)?;
+        header.flags |= FLAG_HAS_SHARD_RANGE;
+        sections.push(encode_u32s(SEC_SHARD_RANGE, &sr.encode()));
     }
 
     if let Some(ivf) = index {
@@ -470,14 +486,15 @@ mod tests {
         assert!(SnapshotStore::open(snap).unwrap().norms().is_none());
         // Neither does a lossy save, even when asked: the loader serves
         // dequantized rows, so it must recompute norms to stay consistent.
-        save_store(&xs, &path, &SaveOptions { codec: Codec::F16, norms: true }).unwrap();
+        let lossy_norms = SaveOptions { codec: Codec::F16, norms: true, ..Default::default() };
+        save_store(&xs, &path, &lossy_norms).unwrap();
         let snap = Arc::new(Snapshot::open(&path, true).unwrap());
         assert_eq!(snap.header().flags & FLAG_HAS_NORMS, 0, "lossy codec must not embed norms");
         // A quantized store's sections are byte-exact under any codec, so
         // its norms still embed.
         let mut rng = Rng::new(24);
         let q = QuantizedEmbedding::random(30, 16, 8, &mut rng);
-        save_store(&q, &path, &SaveOptions { codec: Codec::F16, norms: true }).unwrap();
+        save_store(&q, &path, &lossy_norms).unwrap();
         let snap = Arc::new(Snapshot::open(&path, true).unwrap());
         assert_eq!(snap.header().flags & FLAG_HAS_NORMS, FLAG_HAS_NORMS);
         std::fs::remove_file(&path).ok();
@@ -635,6 +652,43 @@ mod tests {
         assert!(d.contains("quantized.codes"), "{d}");
         assert!(d.contains("quantized.scales"), "{d}");
         assert!(d.contains("kind=quantized"), "{d}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Shard-assignment metadata round-trips through the container and is
+    /// validated at save *and* open; rows are untouched by the section.
+    #[test]
+    fn shard_range_section_roundtrip_and_validation() {
+        let mut rng = Rng::new(31);
+        let e = Word2KetXS::random(25, 16, 2, 2, &mut rng);
+        let sr = ShardRange {
+            strategy: SHARD_STRATEGY_RANGE,
+            shard: 1,
+            n_shards: 4,
+            global_vocab: 100,
+            start: 25,
+            end: 50,
+        };
+        let path = tmp("shard_range");
+        let opts = SaveOptions { shard_range: Some(sr), ..Default::default() };
+        save_store(&e, &path, &opts).unwrap();
+
+        let snap = Snapshot::open(&path, true).unwrap();
+        assert_eq!(snap.header().flags & FLAG_HAS_SHARD_RANGE, FLAG_HAS_SHARD_RANGE);
+        assert_eq!(snap.shard_range(), Some(sr));
+        assert!(snap.describe().contains("shard 1/4"), "{}", snap.describe());
+        let mm = SnapshotStore::open(Arc::new(snap)).unwrap();
+        assert_eq!(mm.lookup(3), e.lookup(3), "metadata section must not touch rows");
+
+        // An assignment that does not cover this store's vocabulary is
+        // rejected at save time.
+        let bad = ShardRange { end: 51, ..sr };
+        let opts = SaveOptions { shard_range: Some(bad), ..Default::default() };
+        assert!(matches!(save_store(&e, &path, &opts), Err(Error::Snapshot(_))));
+
+        // Unsharded snapshots carry no assignment.
+        save_store(&e, &path, &SaveOptions::default()).unwrap();
+        assert_eq!(Snapshot::open(&path, true).unwrap().shard_range(), None);
         std::fs::remove_file(&path).ok();
     }
 }

@@ -175,6 +175,7 @@ pub struct Snapshot {
     backing: Backing,
     header: Header,
     sections: Vec<Section>,
+    shard_range: Option<ShardRange>,
     path: String,
 }
 
@@ -282,7 +283,39 @@ impl Snapshot {
             }
             sections.push(sec);
         }
-        Ok(Snapshot { backing, header, sections, path: path.display().to_string() })
+        // Shard-assignment metadata: flag and section must agree, and the
+        // assignment must cover exactly this snapshot's vocabulary — a
+        // stale or hostile section fails the open, never silently misroutes
+        // ids later.
+        let shard_range = if flags & FLAG_HAS_SHARD_RANGE != 0 {
+            let sec = sections
+                .iter()
+                .find(|s| s.id == SEC_SHARD_RANGE)
+                .ok_or_else(|| {
+                    Error::Snapshot("shard-range flag set but section missing".into())
+                })?;
+            if sec.dtype != Dtype::U32 {
+                return Err(Error::Snapshot("shard_range section is not u32-typed".into()));
+            }
+            let payload = &bytes[sec.offset as usize..(sec.offset + sec.byte_len) as usize];
+            let xs: Vec<u32> = payload
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().expect("chunked by 4")))
+                .collect();
+            let sr = ShardRange::decode(&xs)?;
+            sr.validate(vocab)?;
+            Some(sr)
+        } else {
+            None
+        };
+        Ok(Snapshot { backing, header, sections, shard_range, path: path.display().to_string() })
+    }
+
+    /// The shard of a sharded global vocabulary this snapshot holds, when
+    /// it was written as one ([`crate::snapshot::SaveOptions::shard_range`];
+    /// validated against the local vocabulary at open).
+    pub fn shard_range(&self) -> Option<ShardRange> {
+        self.shard_range
     }
 
     pub fn header(&self) -> &Header {
@@ -427,6 +460,20 @@ impl Snapshot {
                 "none"
             },
         );
+        if let Some(sr) = self.shard_range {
+            s.push_str(&format!(
+                "  shard {}/{} of a {}-word vocabulary ({} sharding{})\n",
+                sr.shard,
+                sr.n_shards,
+                sr.global_vocab,
+                sr.strategy_name(),
+                if sr.strategy == SHARD_STRATEGY_RANGE {
+                    format!(", global ids [{}, {})", sr.start, sr.end)
+                } else {
+                    String::new()
+                },
+            ));
+        }
         for sec in &self.sections {
             s.push_str(&format!(
                 "  section {:<20} dtype={:<3} count={:<10} bytes={:<10} crc={:#010x}\n",

@@ -86,6 +86,46 @@ macro_rules! prop_assert {
     };
 }
 
+/// Assert a text-protocol `STATS` line and a binary-protocol
+/// [`WireStats`](crate::serving::WireStats) snapshot describe the same
+/// numbers, field by field.
+///
+/// Both sides go through the one shared table
+/// ([`wire::STATS_FIELD_NAMES`](crate::serving::wire::STATS_FIELD_NAMES) +
+/// [`wire::format_stats_field`](crate::serving::wire::format_stats_field)):
+/// the binary values are re-rendered with the same formatter the text
+/// server uses and compared as strings, so the next field addition either
+/// lands in both protocols or fails here. Extra text tokens (the cluster
+/// router appends rollup extras) are tolerated; a *missing* field is not.
+///
+/// Fetch both views with no traffic in between — latency percentiles move
+/// with load, and a request between the two fetches is a real difference,
+/// not drift.
+pub fn assert_stats_consistent(text_line: &str, binary: &crate::serving::WireStats) {
+    use crate::serving::wire;
+    let line = text_line.trim();
+    let rest = line
+        .strip_prefix("OK")
+        .unwrap_or_else(|| panic!("STATS line must start with OK: {line:?}"));
+    let mut text = std::collections::BTreeMap::new();
+    for token in rest.split_whitespace() {
+        let (k, v) = token
+            .split_once('=')
+            .unwrap_or_else(|| panic!("malformed STATS token {token:?} in {line:?}"));
+        text.insert(k, v);
+    }
+    for (name, value) in wire::STATS_FIELD_NAMES.iter().zip(binary.fields()) {
+        let got = text
+            .get(name)
+            .unwrap_or_else(|| panic!("text STATS is missing field '{name}': {line:?}"));
+        let want = wire::format_stats_field(name, value);
+        assert_eq!(
+            *got, want,
+            "STATS field '{name}' differs between protocols (text {got} vs binary {want})"
+        );
+    }
+}
+
 /// Approximate float equality helper returning a property error.
 pub fn close(a: f32, b: f32, tol: f32) -> Result<(), String> {
     if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
@@ -119,6 +159,47 @@ mod tests {
             prop_assert!(d == 0, "dim was {d}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn stats_consistency_helper_accepts_matching_and_catches_drift() {
+        use crate::serving::wire;
+        let ws = crate::serving::WireStats {
+            p50_us: 12.4,
+            p99_us: 99.6,
+            served: 7,
+            cache_hits: 3,
+            cache_misses: 4,
+            rejected: 0,
+            knn_queries: 2,
+            knn_candidates: 150,
+            knn_mean_probes: 2.5,
+            model_generation: 3,
+            snapshot_bytes: 4096,
+        };
+        // A line rendered through the shared table must pass, extra rollup
+        // tokens included.
+        let mut line = String::from("OK");
+        for (name, value) in wire::STATS_FIELD_NAMES.iter().zip(ws.fields()) {
+            line.push_str(&format!(" {name}={}", wire::format_stats_field(name, value)));
+        }
+        assert_stats_consistent(&line, &ws);
+        line.push_str(" healthy_replicas=4");
+        assert_stats_consistent(&line, &ws);
+
+        // A drifted counter must be caught.
+        let drifted = line.replace("served=7", "served=8");
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            assert_stats_consistent(&drifted, &ws);
+        }));
+        assert!(err.is_err(), "drifted served count went unnoticed");
+
+        // A missing field must be caught even if everything present agrees.
+        let missing = line.replace(" rejected=0", "");
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            assert_stats_consistent(&missing, &ws);
+        }));
+        assert!(err.is_err(), "missing field went unnoticed");
     }
 
     #[test]

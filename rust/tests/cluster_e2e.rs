@@ -1,0 +1,452 @@
+//! End-to-end cluster acceptance tests: real shard servers on loopback,
+//! scatter-gather routing, replica failover, and rolling snapshot reload.
+//!
+//! Shard servers here are completely stock single-node servers
+//! (`coordinator::server`) booted from per-shard snapshot files — exactly
+//! what `w2k serve --set snapshot.path=shardN.snap` runs in production.
+
+use word2ket::cluster::{
+    save_shard_snapshots, shard_snapshot_path, Router, RouterConfig, ShardStrategy, Topology,
+};
+use word2ket::config::ExperimentConfig;
+use word2ket::coordinator::server::{self, ServerState};
+use word2ket::embedding::{EmbeddingStore, RegularEmbedding};
+use word2ket::index::{BruteForce, Query, Scorer};
+use word2ket::serving::{wire, BinaryClient};
+use word2ket::snapshot::SaveOptions;
+use word2ket::util::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One live shard server (state + bound address + accept thread).
+struct Node {
+    state: Arc<ServerState>,
+    addr: String,
+    accept: std::thread::JoinHandle<()>,
+}
+
+impl Node {
+    fn kill(self) {
+        self.state.shutdown();
+        self.accept.join().expect("accept loop");
+    }
+}
+
+fn spawn_node(snap: &Path) -> Node {
+    let mut cfg = ExperimentConfig::default();
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.serving.batch_window_us = 50;
+    cfg.serving.shards = 2;
+    cfg.serving.cache_rows = 512;
+    cfg.snapshot.path = snap.display().to_string();
+    let (state, listener, addr) = server::spawn(&cfg).expect("shard server");
+    let st = state.clone();
+    let accept = std::thread::spawn(move || server::accept_loop(listener, st));
+    Node { state, addr, accept }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("w2k_cluster_e2e_{}_{name}", std::process::id()))
+}
+
+fn router_cfg() -> RouterConfig {
+    RouterConfig {
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_millis(5000),
+        probe_interval: Duration::from_millis(50),
+        eject_after: 2,
+    }
+}
+
+/// A live cluster: per-shard snapshot files, one stock server per replica,
+/// and a topology whose addresses are the actually-bound ports.
+struct Cluster {
+    nodes: Vec<Vec<Node>>,
+    topo: Topology,
+    dir: PathBuf,
+}
+
+impl Cluster {
+    fn start(
+        store: &dyn EmbeddingStore,
+        strategy: ShardStrategy,
+        shards: usize,
+        replicas: usize,
+        name: &str,
+    ) -> Cluster {
+        let placeholder = (0..shards).map(|_| vec!["127.0.0.1:0".to_string()]).collect();
+        let topo = Topology::new(store.vocab_size(), strategy, placeholder).unwrap();
+        let dir = tmp_dir(name);
+        let saved = save_shard_snapshots(store, &topo, &dir, &SaveOptions::default()).unwrap();
+        let mut nodes = Vec::with_capacity(shards);
+        let mut addrs = Vec::with_capacity(shards);
+        for (path, _) in &saved {
+            let group: Vec<Node> = (0..replicas).map(|_| spawn_node(path)).collect();
+            addrs.push(group.iter().map(|n| n.addr.clone()).collect());
+            nodes.push(group);
+        }
+        let topo = topo.with_addrs(addrs).unwrap();
+        Cluster { nodes, topo, dir }
+    }
+
+    fn stop(self) {
+        for group in self.nodes {
+            for node in group {
+                node.kill();
+            }
+        }
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn regular_store(vocab: usize, dim: usize, seed: u64) -> Arc<RegularEmbedding> {
+    let mut rng = Rng::new(seed);
+    Arc::new(RegularEmbedding::random(vocab, dim, &mut rng))
+}
+
+/// Acceptance: scatter-gather KNN over 2-shard and 4-shard splits (both
+/// strategies) is bit-identical — ids *and* scores — to the single-node
+/// BruteForce answer on the same store, including k larger than the
+/// vocabulary and a wire-level comparison against a real single-node
+/// server.
+#[test]
+fn scatter_gather_knn_bit_identical_to_single_node() {
+    let store = regular_store(211, 16, 7);
+    let dyn_store: Arc<dyn EmbeddingStore> = store.clone();
+    let truth = BruteForce::new(Scorer::new(dyn_store, false));
+
+    for (shards, strategy) in
+        [(2, ShardStrategy::Range), (4, ShardStrategy::Range), (2, ShardStrategy::Hash)]
+    {
+        let name = format!("knn_{}_{}", shards, strategy.name());
+        let cluster = Cluster::start(store.as_ref(), strategy, shards, 1, &name);
+        let router = Router::new(cluster.topo.clone(), router_cfg());
+
+        for &q in &[0usize, 17, 105, 210] {
+            for &k in &[1usize, 5, 23, 500] {
+                let (want, _) = truth.top_k(&Query::Id(q), k);
+                let got = router.knn(q as u32, k as u32).unwrap();
+                assert_eq!(
+                    got.len(),
+                    want.len(),
+                    "{shards} shards {strategy:?}: q={q} k={k} length"
+                );
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert!(
+                        g.0 as usize == w.id && g.1 == w.score,
+                        "{shards} shards {strategy:?}: q={q} k={k}: {g:?} vs {w:?}"
+                    );
+                }
+            }
+        }
+        router.shutdown();
+        cluster.stop();
+    }
+
+    // Wire-to-wire: the router's answer equals a real single-node server's
+    // answer over the same snapshot bits.
+    let dir = tmp_dir("knn_single");
+    std::fs::create_dir_all(&dir).unwrap();
+    let full = dir.join("full.snap");
+    word2ket::snapshot::save_store(store.as_ref(), &full, &SaveOptions::default()).unwrap();
+    let single = spawn_node(&full);
+    let mut client = BinaryClient::connect(&single.addr).unwrap();
+
+    let cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 4, 1, "knn_wire");
+    let router = Router::new(cluster.topo.clone(), router_cfg());
+    for &(q, k) in &[(3u32, 7u32), (150, 12)] {
+        let want = client.knn(q, k).unwrap();
+        let got = router.knn(q, k).unwrap();
+        assert_eq!(got, want, "router vs single-node server for q={q} k={k}");
+    }
+    client.quit().unwrap();
+    single.kill();
+    router.shutdown();
+    cluster.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Lookups reassemble in request order across shards (duplicates included),
+/// DOT co-routes or crosses shards correctly, and the STATS roll-up sees
+/// the traffic.
+#[test]
+fn lookup_dot_and_stats_across_shards() {
+    let store = regular_store(101, 8, 11);
+    let cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 3, 1, "lookup");
+    let router = Router::new(cluster.topo.clone(), router_cfg());
+    assert_eq!(router.dim().unwrap(), 8);
+
+    // Ids deliberately out of shard order, with repeats.
+    let ids = [100u32, 0, 55, 0, 33, 99, 1, 55];
+    let rows = router.lookup(&ids).unwrap();
+    assert_eq!(rows.len(), ids.len());
+    for (row, &gid) in rows.iter().zip(&ids) {
+        assert_eq!(row, &store.lookup(gid as usize), "row for global id {gid}");
+    }
+
+    // DOT: same-shard pair (co-routed) and cross-shard pair (router-side).
+    for &(a, b) in &[(1u32, 2u32), (0, 100)] {
+        let want = word2ket::tensor::dot(&store.lookup(a as usize), &store.lookup(b as usize));
+        assert_eq!(router.dot(a, b).unwrap(), want, "dot({a},{b})");
+    }
+
+    let cs = router.stats();
+    assert_eq!(cs.total_replicas, 3);
+    assert_eq!(cs.healthy_replicas, 3);
+    assert!(cs.aggregate.served > 0, "roll-up must see the lookups");
+    assert_eq!(cs.min_generation, 1);
+    assert_eq!(cs.max_generation, 1);
+    assert!(cs.replicas.iter().all(|r| r.stats.is_some()));
+
+    router.shutdown();
+    cluster.stop();
+}
+
+/// Mixed lookup+knn load through the router; returns total successful
+/// requests, panicking on any failure.
+fn hammer(router: &Router, threads: usize, iters: usize, mid: impl FnOnce()) -> u64 {
+    let stop_mid = AtomicBool::new(false);
+    let total = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let router = router.clone();
+                let stop_mid = &stop_mid;
+                scope.spawn(move || -> u64 {
+                    let vocab = router.topology().vocab() as u32;
+                    let mut ok = 0u64;
+                    for i in 0..iters {
+                        if i == iters / 3 {
+                            stop_mid.store(true, Ordering::SeqCst);
+                        }
+                        let base = (t * 31 + i) as u32;
+                        let ids =
+                            [base % vocab, (base * 7 + 3) % vocab, (base * 13 + 1) % vocab];
+                        let rows = router
+                            .lookup(&ids)
+                            .expect("lookup failed during failover/reload");
+                        assert_eq!(rows.len(), 3);
+                        if i % 5 == 0 {
+                            let ns = router
+                                .knn(ids[0], 3)
+                                .expect("knn failed during failover/reload");
+                            assert!(!ns.is_empty());
+                        }
+                        ok += 1;
+                    }
+                    ok
+                })
+            })
+            .collect();
+        // Run the mid-load action once a third of the work is done (the
+        // deadline only matters if a load thread panicked early — the
+        // panic then surfaces at join instead of hanging the test).
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !stop_mid.load(Ordering::SeqCst) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        mid();
+        handles.into_iter().map(|h| h.join().expect("load thread")).sum()
+    });
+    total
+}
+
+/// Acceptance: killing one replica mid-load yields zero failed client
+/// requests — the router fails over to the surviving replica — and the
+/// prober ejects a connection-dead replica.
+#[test]
+fn replica_failover_zero_failed_requests() {
+    let store = regular_store(120, 8, 13);
+    let cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 2, 2, "failover");
+    let router = Router::new(cluster.topo.clone(), router_cfg());
+
+    // Warm every pooled connection so the kill hits live state.
+    router.lookup(&[0, 60, 119]).unwrap();
+
+    let victim_state = cluster.nodes[0][0].state.clone();
+    let total = hammer(&router, 4, 120, || victim_state.shutdown());
+    assert_eq!(total, 4 * 120, "every request must succeed across the kill");
+
+    router.shutdown();
+    cluster.stop();
+}
+
+/// A replica whose address refuses connections is ejected by the probe
+/// loop after `eject_after` consecutive failures, while every client
+/// request keeps succeeding on the live replica.
+#[test]
+fn dead_replica_is_ejected_by_the_prober() {
+    let store = regular_store(60, 8, 17);
+    let cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 2, 1, "ejection");
+
+    // Reserve a port, then free it: a deterministic connection-refused
+    // address standing in as shard 0's second replica.
+    let dead_addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut addrs: Vec<Vec<String>> =
+        (0..2).map(|s| vec![cluster.topo.replicas(s)[0].clone()]).collect();
+    addrs[0].push(dead_addr);
+    let topo = cluster.topo.with_addrs(addrs).unwrap();
+    let router = Router::new(topo, router_cfg());
+
+    // Requests succeed from the start (failover off the dead replica).
+    for i in 0..20u32 {
+        assert_eq!(router.lookup(&[i % 60]).unwrap().len(), 1);
+    }
+
+    // The prober ejects the dead replica within a few probe periods.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while router.health().healthy_count() != 2 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(router.health().healthy_count(), 2, "dead replica not ejected");
+    assert_eq!(router.health().total(), 3);
+    let cs = router.stats();
+    assert_eq!(cs.healthy_replicas, 2);
+
+    // Still serving, straight to the healthy replica.
+    assert_eq!(router.lookup(&[5]).unwrap()[0], store.lookup(5));
+
+    router.shutdown();
+    cluster.stop();
+}
+
+/// Acceptance: rolling reload under live load — every replica of every
+/// shard steps to the new generation (verified via STATS), the server
+/// never answers STATUS_RELOAD_FAILED, and no client request fails.
+#[test]
+fn rolling_reload_increments_every_replica_generation() {
+    let store = regular_store(90, 8, 19);
+    let cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 2, 2, "reload_v1");
+    let router = Router::new(cluster.topo.clone(), router_cfg());
+
+    // Generation-2 shard snapshots (same rows — a config-identical
+    // redeploy) in a second directory.
+    let dir2 = tmp_dir("reload_v2");
+    save_shard_snapshots(store.as_ref(), &cluster.topo, &dir2, &SaveOptions::default())
+        .unwrap();
+
+    let dir2_for_mid = dir2.clone();
+    let router_for_mid = router.clone();
+    let total = hammer(&router, 4, 120, move || {
+        let generations = router_for_mid
+            .rolling_reload_dir(&dir2_for_mid)
+            .expect("rolling reload must succeed");
+        assert_eq!(generations, vec![2, 2]);
+    });
+    assert_eq!(total, 4 * 120, "every request must succeed across the rolling reload");
+
+    // Every replica reports the new generation in its own STATS.
+    let cs = router.stats();
+    assert_eq!(cs.min_generation, 2);
+    assert_eq!(cs.max_generation, 2);
+    for r in &cs.replicas {
+        assert_eq!(
+            r.stats.as_ref().map(|s| s.model_generation),
+            Some(2),
+            "shard {} replica {} stuck on the old generation",
+            r.shard,
+            r.replica
+        );
+    }
+
+    // Rows unchanged (same weights redeployed).
+    assert_eq!(router.lookup(&[42]).unwrap()[0], store.lookup(42));
+
+    // A rolling reload pointed at a missing directory fails cleanly and
+    // leaves generations intact.
+    assert!(router.rolling_reload_dir(Path::new("/nonexistent")).is_err());
+    assert_eq!(router.stats().min_generation, 2);
+
+    router.shutdown();
+    std::fs::remove_dir_all(&dir2).ok();
+    cluster.stop();
+}
+
+/// The router's own listener speaks both wire protocols: binary + text
+/// LOOKUP/KNN/PING/STATS/RELOAD against a live 2-shard cluster, with the
+/// STATS drift helper asserting the two protocol views stay in lockstep.
+#[test]
+fn router_listener_serves_both_protocols() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let store = regular_store(80, 16, 23);
+    let cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 2, 1, "listener_v1");
+    let (state, listener, addr) =
+        word2ket::cluster::server::spawn(cluster.topo.clone(), router_cfg(), "127.0.0.1:0")
+            .unwrap();
+    let st = state.clone();
+    let accept = std::thread::spawn(move || word2ket::cluster::server::accept_loop(listener, st));
+
+    // Binary protocol.
+    let mut bin = BinaryClient::connect(&addr).unwrap();
+    assert_eq!(bin.dim, 16);
+    let rows = bin.lookup(&[0, 79, 40, 0]).unwrap();
+    assert_eq!(rows.len(), 4);
+    assert_eq!(rows[0], store.lookup(0));
+    assert_eq!(rows[0], rows[3]);
+    bin.ping().unwrap();
+    let neighbors = bin.knn(11, 5).unwrap();
+    assert_eq!(neighbors.len(), 5);
+    assert!(neighbors.iter().all(|&(id, _)| id != 11));
+    match bin.lookup(&[500]) {
+        Err(word2ket::serving::WireError::Status(s)) => assert_eq!(s, wire::STATUS_RANGE),
+        other => panic!("expected range error, got {other:?}"),
+    }
+
+    // Text protocol on the same listener.
+    let mut text = std::net::TcpStream::connect(&addr).unwrap();
+    let mut text_reader = BufReader::new(text.try_clone().unwrap());
+    let mut line = String::new();
+    let mut ask = |sock: &mut std::net::TcpStream,
+                   reader: &mut BufReader<std::net::TcpStream>,
+                   req: &str,
+                   line: &mut String| {
+        sock.write_all(req.as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(line).unwrap();
+        line.trim().to_string()
+    };
+    let resp = ask(&mut text, &mut text_reader, "PING\n", &mut line);
+    assert_eq!(resp, "OK");
+    let resp = ask(&mut text, &mut text_reader, "LOOKUP 7\n", &mut line);
+    assert!(resp.starts_with("OK 16 "), "{resp}");
+    let resp = ask(&mut text, &mut text_reader, "KNN 7 3\n", &mut line);
+    assert!(resp.starts_with("OK 3 "), "{resp}");
+    let resp = ask(&mut text, &mut text_reader, "NONSENSE\n", &mut line);
+    assert!(resp.starts_with("ERR"), "{resp}");
+
+    // Drift check across protocols, quiescent between the two fetches; the
+    // cluster extras after the standard fields are tolerated.
+    let text_stats = ask(&mut text, &mut text_reader, "STATS\n", &mut line);
+    let bin_stats = bin.stats().unwrap();
+    word2ket::testing::assert_stats_consistent(&text_stats, &bin_stats);
+    assert!(text_stats.contains("healthy_replicas=2"), "{text_stats}");
+    assert!(text_stats.contains("shards=2"), "{text_stats}");
+
+    // Rolling RELOAD through the router's wire: new shard snapshots, text
+    // form first (generation 2), then binary (generation 3).
+    let dir2 = tmp_dir("listener_v2");
+    save_shard_snapshots(store.as_ref(), &cluster.topo, &dir2, &SaveOptions::default())
+        .unwrap();
+    let resp =
+        ask(&mut text, &mut text_reader, &format!("RELOAD {}\n", dir2.display()), &mut line);
+    assert_eq!(resp, "OK generation=2", "{resp}");
+    let generation = bin.reload(&dir2.display().to_string()).unwrap();
+    assert_eq!(generation, 3);
+    assert!(bin.reload("/nonexistent").is_err());
+    // Shard files from generation 1 still exist — prove the canonical
+    // naming the reload used matches the writer's.
+    assert!(shard_snapshot_path(&dir2, 0).exists());
+    assert!(shard_snapshot_path(&dir2, 1).exists());
+
+    text.write_all(b"QUIT\n").ok();
+    bin.quit().unwrap();
+    state.shutdown();
+    accept.join().unwrap();
+    std::fs::remove_dir_all(&dir2).ok();
+    cluster.stop();
+}
