@@ -6,9 +6,15 @@
 //!
 //! Run: cargo run --release --example serve_embeddings -- [--requests N]
 //!      [--clients C] [--order 4 --rank 1] [--shards 4] [--cache-rows 65536]
-//!      [--wire binary|text] [--zipf 1.05] [--knn 0.1 --topk 10]
-//!      [--index ivf --nlist 64 --nprobe 8]
+//!      [--wire binary|text] [--driver threads|epoll] [--zipf 1.05]
+//!      [--knn 0.1 --topk 10] [--index ivf --nlist 64 --nprobe 8]
 //!      [--save model.snap] [--load model.snap] [--reload model.snap]
+//!
+//! `--driver epoll` runs every listener on the event-loop reactor instead
+//! of the blocking thread-per-connection driver (and, in cluster mode,
+//! switches the router's scatter-gather to multiplexed in-flight fan-out);
+//! the load generator's numbers are directly comparable across drivers
+//! because the wire bytes are identical.
 //!
 //! `--knn F` makes each client issue a KNN query (Zipf-sampled query word,
 //! `--topk` neighbors) instead of a batched lookup with probability F,
@@ -57,6 +63,7 @@ fn main() -> word2ket::Result<()> {
                 OptSpec { name: "shards", help: "cache/pool shards", takes_value: true, repeated: false, default: Some("4") },
                 OptSpec { name: "cache-rows", help: "hot-row cache size (0 disables)", takes_value: true, repeated: false, default: Some("65536") },
                 OptSpec { name: "wire", help: "protocol: binary|text", takes_value: true, repeated: false, default: Some("binary") },
+                OptSpec { name: "driver", help: "network driver: threads|epoll", takes_value: true, repeated: false, default: Some("threads") },
                 OptSpec { name: "zipf", help: "Zipf exponent of the id stream", takes_value: true, repeated: false, default: Some("1.05") },
                 OptSpec { name: "batch", help: "ids per request", takes_value: true, repeated: false, default: Some("8") },
                 OptSpec { name: "knn", help: "fraction of requests that are KNN queries", takes_value: true, repeated: false, default: Some("0") },
@@ -104,6 +111,8 @@ fn main() -> word2ket::Result<()> {
     cfg.serving.cache_rows = parsed.get_usize("cache-rows")?.unwrap_or(65_536);
     cfg.serving.batch_window_us = 150;
     cfg.serving.max_batch = 256;
+    cfg.net.driver = word2ket::config::NetDriver::parse(parsed.get("driver").unwrap_or("threads"))
+        .map_err(word2ket::Error::Config)?;
     cfg.index.kind = IndexKind::parse(parsed.get("index").unwrap_or("brute"))?;
     cfg.index.nlist = parsed.get_usize("nlist")?.unwrap_or(64);
     cfg.index.nprobe = parsed.get_usize("nprobe")?.unwrap_or(8);
@@ -154,9 +163,10 @@ fn main() -> word2ket::Result<()> {
     let accept = std::thread::spawn(move || server::accept_loop(listener, accept_state));
 
     println!(
-        "server on {addr} [{wire_mode} wire, {} shards, {} cache rows, {} index]; \
+        "server on {addr} [{wire_mode} wire, {} driver, {} shards, {} cache rows, {} index]; \
          {clients} clients × {requests} reqs (batch {batch}, Zipf s={zipf_s}, \
          knn mix {:.0}% top-{topk})",
+        cfg.net.driver,
         cfg.serving.shards,
         cfg.serving.cache_rows,
         cfg.index.kind.name(),
@@ -235,7 +245,7 @@ fn main() -> word2ket::Result<()> {
     println!(
         "server STATS: p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} \
          rejected={} knn_queries={} knn_candidates={} knn_mean_probes={:.2} \
-         model_generation={} snapshot_bytes={} (hit rate {:.1}%)",
+         model_generation={} snapshot_bytes={} accept_errors={} (hit rate {:.1}%)",
         stats.p50_us,
         stats.p99_us,
         stats.served,
@@ -247,6 +257,7 @@ fn main() -> word2ket::Result<()> {
         stats.knn_mean_probes,
         stats.model_generation,
         stats.snapshot_bytes,
+        stats.accept_errors,
         100.0 * stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64
     );
     stats_client.quit().ok();
@@ -336,7 +347,10 @@ fn run_cluster(
     })?;
     let doc = TomlDoc::parse(&src)?;
     let shape = Topology::from_doc(&doc)?;
-    let router_cfg = RouterConfig::from_doc(&doc);
+    let mut router_cfg = RouterConfig::from_doc(&doc);
+    // The demo's --driver flag overrides the topology file's [net] section
+    // so one flag flips the shard servers and the router's fan-out together.
+    router_cfg.net = cfg.net;
     let mut cfg = cfg.clone();
     cfg.model.vocab = shape.vocab();
     cfg.validate()?;

@@ -1,0 +1,271 @@
+//! Bench: connection scaling — thousands of mostly-idle connections plus a
+//! small active set, thread-per-connection driver vs the epoll reactor.
+//!
+//! What this quantifies: the cost of *holding* connections. The blocking
+//! driver pays one OS thread (stack, scheduler state) per open socket, so a
+//! mostly-idle fleet of clients degrades it long before CPU does; the
+//! reactor pays ~one slab entry. Each sweep level tops the idle pool up to
+//! the target, confirms every connection completed the binary hello (it is
+//! actually served, not parked in a SYN backlog), then measures LOOKUP
+//! latency/throughput on a small active set threaded through the same
+//! listener. Rows land in `BENCH_cluster.json` next to the scatter-gather
+//! results, replacing prior conn_scaling rows and preserving everything
+//! else.
+//!
+//! Honest-degradation notes: the sweep records `conns_open` next to
+//! `conns_target` — a driver (or the loopback ephemeral-port range, around
+//! 28k 4-tuples to one destination) refusing further connections shows up
+//! as `conns_open < conns_target` rather than a crash. `RLIMIT_NOFILE` is
+//! raised first via [`word2ket::net::sys::raise_nofile_limit`].
+//!
+//! Run: cargo bench --bench conn_scaling    (W2K_BENCH_FAST=1 to smoke)
+
+use word2ket::bench::header;
+use word2ket::config::{EmbeddingKind, ExperimentConfig, NetDriver};
+use word2ket::coordinator::server::{self, ServerState};
+use word2ket::net::sys;
+use word2ket::serving::BinaryClient;
+use word2ket::util::{Json, Rng, Summary, Timer};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIM: usize = 32;
+const BATCH: usize = 8;
+const ACTIVE: usize = 8;
+
+struct Server {
+    state: Arc<ServerState>,
+    addr: String,
+    accept: std::thread::JoinHandle<()>,
+}
+
+fn spawn_server(driver: NetDriver, vocab: usize) -> Server {
+    let mut cfg = ExperimentConfig::default();
+    cfg.embedding.kind = EmbeddingKind::Word2KetXS;
+    cfg.embedding.order = 2;
+    cfg.embedding.rank = 2;
+    cfg.model.vocab = vocab;
+    cfg.model.emb_dim = DIM;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.serving.batch_window_us = 50;
+    cfg.net.driver = driver;
+    // Idle connections must outlive the whole sweep.
+    cfg.net.idle_timeout_ms = 600_000;
+    let (state, listener, addr) = server::spawn(&cfg).expect("bench server");
+    let st = state.clone();
+    let accept = std::thread::spawn(move || server::accept_loop(listener, st));
+    Server { state, addr, accept }
+}
+
+/// Top `pool` up to `target` fully-established idle binary connections
+/// (hello completed). Stops early after a run of consecutive failures —
+/// port exhaustion or a driver refusing more connections — and reports how
+/// far it got.
+fn top_up_idle(pool: &mut Vec<TcpStream>, addr: &SocketAddr, target: usize) {
+    let mut consecutive_failures = 0usize;
+    while pool.len() < target {
+        if consecutive_failures >= 200 {
+            eprintln!(
+                "  stopping at {} conns: {consecutive_failures} consecutive connect failures",
+                pool.len()
+            );
+            break;
+        }
+        let ok = (|| -> std::io::Result<TcpStream> {
+            let mut s = TcpStream::connect_timeout(addr, Duration::from_secs(5))?;
+            s.set_read_timeout(Some(Duration::from_secs(5)))?;
+            s.write_all(&word2ket::serving::wire::MAGIC)?;
+            let mut hello = [0u8; 8];
+            s.read_exact(&mut hello)?;
+            Ok(s)
+        })();
+        match ok {
+            Ok(s) => {
+                consecutive_failures = 0;
+                pool.push(s);
+                if pool.len() % 5_000 == 0 {
+                    println!("  {} idle conns open", pool.len());
+                }
+            }
+            Err(_) => consecutive_failures += 1,
+        }
+    }
+}
+
+/// `ACTIVE` workers × `iters` batched lookups each through fresh
+/// connections on the same listener; returns (requests/s, latency summary).
+fn run_active(addr: &str, vocab: usize, iters: usize) -> (f64, Summary) {
+    let wall = Timer::start();
+    let merged = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..ACTIVE)
+            .map(|t| {
+                scope.spawn(move || {
+                    let mut rng = Rng::new(4100 + t as u64);
+                    let mut client = BinaryClient::connect(addr).expect("active conn");
+                    let mut lat = Summary::new();
+                    let mut ids = vec![0u32; BATCH];
+                    for _ in 0..iters {
+                        for id in ids.iter_mut() {
+                            *id = (rng.next_u64() % vocab as u64) as u32;
+                        }
+                        let timer = Timer::start();
+                        let rows = client.lookup(&ids).expect("lookup under idle load");
+                        assert_eq!(rows.len(), BATCH);
+                        lat.add(timer.elapsed_us());
+                    }
+                    client.quit().ok();
+                    lat
+                })
+            })
+            .collect();
+        let mut merged = Summary::new();
+        for h in handles {
+            merged.merge(&h.join().expect("active worker"));
+        }
+        merged
+    });
+    let reqs = (ACTIVE * iters) as f64;
+    (reqs / wall.elapsed().as_secs_f64(), merged)
+}
+
+struct RowOut {
+    driver: NetDriver,
+    conns_target: usize,
+    conns_open: usize,
+    open_ms: f64,
+    rps: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+/// Split a JSON document into its top-level `{...}` object substrings
+/// (string-literal aware), so rows written by other benches survive a
+/// rewrite verbatim.
+fn top_level_objects(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let (mut depth, mut start, mut in_str, mut esc) = (0i32, None::<usize>, false, false);
+    for (i, c) in s.char_indices() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' => {
+                if depth == 0 {
+                    start = Some(i);
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    if let Some(st) = start.take() {
+                        out.push(s[st..=i].to_string());
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Merge this bench's rows into `BENCH_cluster.json`: keep every existing
+/// row except prior conn_scaling rows (marked by their `"bench"` field),
+/// append ours.
+fn splice_results(path: &str, rows: &[RowOut], vocab: usize) {
+    let mine = Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("bench", Json::str("conn_scaling".to_string())),
+            ("driver", Json::str(r.driver.as_str().to_string())),
+            ("conns_target", Json::num(r.conns_target as f64)),
+            ("conns_open", Json::num(r.conns_open as f64)),
+            ("open_ms", Json::num(r.open_ms)),
+            ("rps", Json::num(r.rps)),
+            ("p50_us", Json::num(r.p50_us)),
+            ("p99_us", Json::num(r.p99_us)),
+            ("active", Json::num(ACTIVE as f64)),
+            ("vocab", Json::num(vocab as f64)),
+            ("dim", Json::num(DIM as f64)),
+        ])
+    }));
+    let mut chunks: Vec<String> = match std::fs::read_to_string(path) {
+        Ok(prev) => top_level_objects(&prev)
+            .into_iter()
+            .filter(|c| !c.contains("\"conn_scaling\""))
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    let kept = chunks.len();
+    chunks.extend(top_level_objects(&mine.pretty()));
+    let body = chunks.join(",\n");
+    match std::fs::write(path, format!("[\n{body}\n]\n")) {
+        Ok(()) => println!(
+            "\nwrote {path} ({} conn_scaling rows, {kept} rows from other benches kept)",
+            rows.len()
+        ),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    header(
+        "Connection scaling: N mostly-idle conns + small active set, threads vs epoll",
+        "a factored embedding table leaves memory for connections, not the \
+         other way around — the reactor holds an idle socket for a slab \
+         entry where the blocking driver parks a whole thread",
+    );
+    let fast = std::env::var("W2K_BENCH_FAST").is_ok();
+    let vocab = if fast { 2_000 } else { 10_000 };
+    let levels: &[usize] = if fast { &[100, 500] } else { &[1_000, 10_000, 50_000] };
+    let iters = if fast { 100 } else { 1_000 };
+
+    match sys::raise_nofile_limit(150_000) {
+        Ok((before, after)) => println!("RLIMIT_NOFILE: {before} -> {after}"),
+        Err(e) => eprintln!("could not raise RLIMIT_NOFILE ({e}); expect early saturation"),
+    }
+
+    let mut out: Vec<RowOut> = Vec::new();
+    for driver in [NetDriver::Threads, NetDriver::Epoll] {
+        println!("driver = {driver}:");
+        let server = spawn_server(driver, vocab);
+        let sock_addr: SocketAddr = server.addr.parse().expect("bound addr");
+        let mut pool: Vec<TcpStream> = Vec::new();
+        for &target in levels {
+            let open_timer = Timer::start();
+            top_up_idle(&mut pool, &sock_addr, target);
+            let open_ms = open_timer.elapsed().as_secs_f64() * 1e3;
+            let (rps, lat) = run_active(&server.addr, vocab, iters);
+            println!(
+                "  {target:>6} idle target ({:>6} open, {open_ms:>8.0}ms to open)  \
+                 {rps:>9.0} req/s  p50 {:>6.0}µs  p99 {:>6.0}µs",
+                pool.len(),
+                lat.p50(),
+                lat.p99()
+            );
+            out.push(RowOut {
+                driver,
+                conns_target: target,
+                conns_open: pool.len(),
+                open_ms,
+                rps,
+                p50_us: lat.p50(),
+                p99_us: lat.p99(),
+            });
+        }
+        drop(pool);
+        server.state.shutdown();
+        server.accept.join().ok();
+    }
+
+    splice_results("BENCH_cluster.json", &out, vocab);
+}

@@ -50,6 +50,7 @@ use super::topology::Topology;
 use crate::config::TomlDoc;
 use crate::error::Error;
 use crate::index::{merge_top_k, Neighbor};
+use crate::net::{NetConfig, NetDriver};
 use crate::serving::wire::{self, WireError, WireStats};
 use crate::serving::BinaryClient;
 use std::path::Path;
@@ -70,6 +71,11 @@ pub struct RouterConfig {
     pub probe_interval: Duration,
     /// Consecutive failures before a replica is ejected.
     pub eject_after: u32,
+    /// The router's own listener driver plus multiplexed-fan-out toggle:
+    /// under `driver = "epoll"`, multi-shard scatter-gather runs as
+    /// concurrent in-flight exchanges on one poller instead of one scoped
+    /// thread per shard.
+    pub net: NetConfig,
 }
 
 impl Default for RouterConfig {
@@ -79,13 +85,15 @@ impl Default for RouterConfig {
             io_timeout: Duration::from_millis(5000),
             probe_interval: Duration::from_millis(1000),
             eject_after: 3,
+            net: NetConfig::default(),
         }
     }
 }
 
 impl RouterConfig {
     /// Read overrides from a `[cluster]` section (`connect_timeout_ms`,
-    /// `io_timeout_ms`, `probe_interval_ms`, `eject_after`).
+    /// `io_timeout_ms`, `probe_interval_ms`, `eject_after`) plus the shared
+    /// `[net]` section.
     pub fn from_doc(doc: &TomlDoc) -> RouterConfig {
         let d = RouterConfig::default();
         let ms = |key: &str, dflt: Duration| {
@@ -96,6 +104,7 @@ impl RouterConfig {
             io_timeout: ms("cluster.io_timeout_ms", d.io_timeout),
             probe_interval: ms("cluster.probe_interval_ms", d.probe_interval),
             eject_after: doc.usize_or("cluster.eject_after", d.eject_after as usize) as u32,
+            net: NetConfig::from_doc(doc),
         }
     }
 }
@@ -242,6 +251,10 @@ impl Router {
         &self.inner.topo
     }
 
+    pub fn config(&self) -> &RouterConfig {
+        &self.inner.cfg
+    }
+
     pub fn health(&self) -> &HealthBoard {
         &self.inner.health
     }
@@ -298,7 +311,11 @@ impl Router {
             }
             return Ok(out);
         }
-        let gathered = scatter(&involved, |s| inner.with_replica(s, |c| c.lookup(&locals[s])))?;
+        let gathered = if inner.multiplexed() {
+            inner.fan_lookup(&involved, &locals)?
+        } else {
+            scatter(&involved, |s| inner.with_replica(s, |c| c.lookup(&locals[s])))?
+        };
         for (s, rows) in involved.iter().zip(gathered) {
             for (row, &pos) in rows.into_iter().zip(&positions[*s]) {
                 out[pos] = row;
@@ -366,8 +383,11 @@ impl Router {
     ) -> Result<Vec<Neighbor>, RouterError> {
         let inner = &*self.inner;
         let shards: Vec<usize> = (0..inner.topo.n_shards()).collect();
-        let per_shard =
-            scatter(&shards, |s| inner.with_replica(s, |c| c.knn_vec(query, per_shard_k)))?;
+        let per_shard = if inner.multiplexed() && shards.len() > 1 {
+            inner.fan_knn(&shards, query, per_shard_k)?
+        } else {
+            scatter(&shards, |s| inner.with_replica(s, |c| c.knn_vec(query, per_shard_k)))?
+        };
         let lists = shards.iter().zip(per_shard).map(|(&s, locals)| {
             locals
                 .into_iter()
@@ -704,6 +724,220 @@ impl Inner {
         Err(RouterError::ShardDown { shard: s, last })
     }
 
+    /// Should multi-shard fan-out run as concurrent in-flight exchanges on
+    /// one poller (`[net] driver = "epoll"`) instead of one scoped thread
+    /// per shard? Off unix there is no poller, so never.
+    fn multiplexed(&self) -> bool {
+        cfg!(unix) && self.cfg.net.driver == NetDriver::Epoll
+    }
+
+    /// Multiplexed LOOKUP fan-out; shards whose concurrent attempt could
+    /// not run or did not answer fall back to the blocking failover path.
+    #[cfg(unix)]
+    fn fan_lookup(
+        &self,
+        involved: &[usize],
+        locals: &[Vec<u32>],
+    ) -> Result<Vec<Vec<Vec<f32>>>, RouterError> {
+        let attempts = self.scatter_multiplexed(
+            involved,
+            &|s| wire::encode_ids_frame(wire::OP_LOOKUP, &locals[s]),
+            true,
+        );
+        let mut out = Vec::with_capacity(involved.len());
+        for (&s, attempt) in involved.iter().zip(attempts) {
+            out.push(match attempt {
+                FanAttempt::Rows(rows) => rows,
+                FanAttempt::Neighbors(_) => unreachable!("rows exchange answered neighbors"),
+                other => self.refan(s, other, |c| c.lookup(&locals[s]))?,
+            });
+        }
+        Ok(out)
+    }
+
+    #[cfg(not(unix))]
+    fn fan_lookup(
+        &self,
+        involved: &[usize],
+        locals: &[Vec<u32>],
+    ) -> Result<Vec<Vec<Vec<f32>>>, RouterError> {
+        scatter(involved, |s| self.with_replica(s, |c| c.lookup(&locals[s])))
+    }
+
+    /// Multiplexed KNN_VEC fan-out with the same per-shard fallback.
+    #[cfg(unix)]
+    fn fan_knn(
+        &self,
+        shards: &[usize],
+        query: &[f32],
+        per_shard_k: u32,
+    ) -> Result<Vec<Vec<(u32, f32)>>, RouterError> {
+        let attempts = self.scatter_multiplexed(
+            shards,
+            &|_| wire::encode_knn_vec_frame(query, per_shard_k),
+            false,
+        );
+        let mut out = Vec::with_capacity(shards.len());
+        for (&s, attempt) in shards.iter().zip(attempts) {
+            out.push(match attempt {
+                FanAttempt::Neighbors(ns) => ns,
+                FanAttempt::Rows(_) => unreachable!("neighbors exchange answered rows"),
+                other => self.refan(s, other, |c| c.knn_vec(query, per_shard_k))?,
+            });
+        }
+        Ok(out)
+    }
+
+    #[cfg(not(unix))]
+    fn fan_knn(
+        &self,
+        shards: &[usize],
+        query: &[f32],
+        per_shard_k: u32,
+    ) -> Result<Vec<Vec<(u32, f32)>>, RouterError> {
+        scatter(shards, |s| self.with_replica(s, |c| c.knn_vec(query, per_shard_k)))
+    }
+
+    /// Resolve a non-answer fan-out attempt through the blocking failover
+    /// path ([`with_replica`](Self::with_replica)). A success after a
+    /// failed concurrent attempt counts as a failover, same as the
+    /// blocking path's own retries; capacity statuses (overloaded,
+    /// timeout) retry elsewhere, every other status is a final answer.
+    #[cfg(unix)]
+    fn refan<T>(
+        &self,
+        s: usize,
+        attempt: FanAttempt,
+        mut op: impl FnMut(&mut BinaryClient) -> Result<T, WireError>,
+    ) -> Result<T, RouterError> {
+        let failed = !matches!(attempt, FanAttempt::Skipped);
+        if let FanAttempt::Status(code) = attempt {
+            if code != wire::STATUS_OVERLOADED && code != wire::STATUS_TIMEOUT {
+                return Err(RouterError::Wire(WireError::Status(code)));
+            }
+        }
+        let v = self.with_replica(s, &mut op)?;
+        if failed {
+            self.failovers.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(v)
+    }
+
+    /// One concurrent exchange per listed shard: pick a healthy replica
+    /// (round-robin, pooled connection locked for the whole exchange —
+    /// the same exclusivity the blocking path has), write every request
+    /// frame, then multiplex all the response reads on one poller via
+    /// [`fanout::exchange_all`](crate::net::fanout::exchange_all). Wall
+    /// time is one downstream round-trip instead of thread-spawn + the
+    /// slowest sequential pieces. Never errors: each shard reports a
+    /// [`FanAttempt`] and the caller decides how to settle failures.
+    #[cfg(unix)]
+    fn scatter_multiplexed(
+        &self,
+        shards: &[usize],
+        frame_for: &dyn Fn(usize) -> Vec<u8>,
+        rows_shape: bool,
+    ) -> Vec<FanAttempt> {
+        use crate::net::fanout::{exchange_all, Exchange, Payload, Shape};
+        // Phase 1: pick + lock one replica slot per shard. Connect failures
+        // advance the ejection streak exactly like the blocking path; a
+        // slot with buffered response bytes (a previous exchange died
+        // mid-read) is unusable for framed fan-out and is skipped.
+        let mut picks: Vec<Option<(usize, std::sync::MutexGuard<'_, Option<BinaryClient>>)>> =
+            Vec::with_capacity(shards.len());
+        for &s in shards {
+            let n = self.topo.replicas(s).len();
+            let start = self.next[s].fetch_add(1, Ordering::Relaxed);
+            let mut picked = None;
+            for off in 0..n {
+                let r = (start + off) % n;
+                if !self.health.is_healthy(s, r) {
+                    continue;
+                }
+                let mut slot = self.slots[s][r].lock().unwrap();
+                if slot.is_none() {
+                    match BinaryClient::connect_with_timeouts(
+                        &self.topo.replicas(s)[r],
+                        self.cfg.connect_timeout,
+                        self.cfg.io_timeout,
+                    ) {
+                        Ok(c) => {
+                            self.dim.store(c.dim, Ordering::Relaxed);
+                            *slot = Some(c);
+                        }
+                        Err(_) => {
+                            self.health.record_failure(s, r);
+                            continue;
+                        }
+                    }
+                }
+                if !slot.as_ref().is_some_and(|c| c.fanout_ready()) {
+                    continue;
+                }
+                picked = Some((r, slot));
+                break;
+            }
+            picks.push(picked);
+        }
+        // Phase 2: build the exchanges over the locked slots and run them.
+        let mut jobs = Vec::new();
+        for (i, pick) in picks.iter_mut().enumerate() {
+            if let Some((_, guard)) = pick {
+                let client = guard.as_mut().expect("picked slots are connected");
+                let frame = frame_for(shards[i]);
+                let shape =
+                    if rows_shape { Shape::Rows { dim: client.dim } } else { Shape::Neighbors };
+                jobs.push(Exchange { client, frame, shape });
+            }
+        }
+        let mut results = exchange_all(jobs, self.cfg.io_timeout).into_iter();
+        // Phase 3: settle health + pooled slots per shard, in shard order
+        // (jobs were built in pick order, so the iterator lines up).
+        let mut out = Vec::with_capacity(shards.len());
+        for (&s, pick) in shards.iter().zip(picks) {
+            let Some((r, mut guard)) = pick else {
+                out.push(FanAttempt::Skipped);
+                continue;
+            };
+            out.push(match results.next().expect("one result per picked shard") {
+                Ok(Payload::Rows(rows)) => {
+                    self.health.record_success(s, r);
+                    FanAttempt::Rows(rows)
+                }
+                Ok(Payload::Neighbors(ns)) => {
+                    self.health.record_success(s, r);
+                    FanAttempt::Neighbors(ns)
+                }
+                // The server answered; the replica is fine, the
+                // connection's framing is clean.
+                Err(WireError::Status(code)) => {
+                    self.health.record_success(s, r);
+                    FanAttempt::Status(code)
+                }
+                Err(_) => {
+                    *guard = None;
+                    self.health.record_failure(s, r);
+                    FanAttempt::TransportFailed
+                }
+            });
+        }
+        out
+    }
+}
+
+/// Outcome of one shard's concurrent fan-out exchange.
+#[cfg(unix)]
+enum FanAttempt {
+    /// No usable replica pick (unhealthy, connect failed, or a dirty
+    /// pooled connection): the blocking path owns the retry, and it is
+    /// not counted as a failover.
+    Skipped,
+    /// The exchange's transport failed; the pooled connection was dropped.
+    TransportFailed,
+    /// The server answered a non-OK status.
+    Status(u32),
+    Rows(Vec<Vec<f32>>),
+    Neighbors(Vec<(u32, f32)>),
 }
 
 /// Background PING loop; holds only a `Weak`, so dropping every router
@@ -746,6 +980,7 @@ mod tests {
             io_timeout: Duration::from_millis(50),
             probe_interval: Duration::ZERO,
             eject_after: 1,
+            ..RouterConfig::default()
         }
     }
 
@@ -762,6 +997,14 @@ mod tests {
         assert_eq!(cfg.eject_after, 1);
         assert_eq!(cfg.io_timeout, Duration::from_millis(100));
         assert_eq!(cfg.connect_timeout, d.connect_timeout);
+        assert_eq!(cfg.net, crate::net::NetConfig::default());
+
+        // [net] rides along in the same doc.
+        let doc = TomlDoc::parse("[net]\ndriver = \"epoll\"\nhandlers = 8\n").unwrap();
+        let cfg = RouterConfig::from_doc(&doc);
+        assert_eq!(cfg.net.driver, crate::net::NetDriver::Epoll);
+        assert_eq!(cfg.net.handlers, 8);
+        assert_eq!(cfg.net.drain_ms, crate::net::NetConfig::default().drain_ms);
     }
 
     #[test]

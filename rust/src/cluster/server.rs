@@ -4,13 +4,17 @@
 //! Speaks the *same* two protocols upstream that the single-node server
 //! does (first-byte sniff: binary `MAGIC` vs line-oriented text), so every
 //! existing client — [`BinaryClient`](crate::serving::BinaryClient), the
-//! text protocol, the load generators — points at a router unchanged.
-//! Request semantics differ from a single node only where the cluster adds
-//! meaning:
+//! text protocol, the load generators — points at a router unchanged. The
+//! listener itself is a [`net::Service`] impl over the shared serving core,
+//! so the router runs on either network driver (`[net] driver`), exactly
+//! like the single node. Request semantics differ from a single node only
+//! where the cluster adds meaning:
 //!
 //! * `STATS` answers the cluster roll-up ([`Router::stats`]); the text form
 //!   appends `healthy_replicas= total_replicas= failovers= shards=
-//!   max_generation=` extras after the standard fields.
+//!   max_generation=` extras after the standard fields. The standard
+//!   `accept_errors` field counts this listener's own survived accept
+//!   failures on top of the sum reported by the shards.
 //! * `RELOAD <dir>` / `OP_RELOAD` takes a *directory* of canonical
 //!   `shard<i>.snap` files and performs the zero-downtime rolling reload
 //!   across every replica of every shard, replying with the cluster's new
@@ -18,38 +22,61 @@
 //! * `PING` answers from the router itself — liveness of the routing tier,
 //!   not of any shard.
 
-use super::router::{Router, RouterConfig, RouterError};
+use super::router::{ClusterStats, Router, RouterConfig, RouterError};
 use super::topology::Topology;
 use crate::error::{Error, Result};
-use crate::serving::wire;
-use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::net::{self, Lifecycle, TextAction};
+use crate::serving::wire::{self, BinRequest};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
 
 /// Shared router-listener state (mirrors `coordinator::server::ServerState`).
 pub struct RouterState {
     router: Router,
-    stop: AtomicBool,
+    lifecycle: Arc<Lifecycle>,
+    /// Transient accept(2) failures survived by *this* listener, folded
+    /// into the aggregate `accept_errors` STATS field on top of the shard
+    /// servers' own counts.
+    accept_errors: AtomicU64,
 }
 
 impl RouterState {
     pub fn new(router: Router) -> RouterState {
-        RouterState { router, stop: AtomicBool::new(false) }
+        RouterState {
+            router,
+            lifecycle: Lifecycle::new(),
+            accept_errors: AtomicU64::new(0),
+        }
     }
 
     pub fn router(&self) -> &Router {
         &self.router
     }
 
+    /// Begin graceful shutdown: stop accepting, drain in-flight requests,
+    /// close connections. The probe loop and connection pools are torn
+    /// down by [`accept_loop`] after the drain completes.
     pub fn shutdown(&self) {
-        self.stop.store(true, Ordering::SeqCst);
-        self.router.shutdown();
+        self.lifecycle.begin_shutdown();
+    }
+
+    /// The listener's shutdown/drain handle.
+    pub fn lifecycle(&self) -> &Arc<Lifecycle> {
+        &self.lifecycle
+    }
+
+    /// Cluster roll-up with this listener's own accept errors folded into
+    /// the shared `accept_errors` field (shards report theirs via their
+    /// STATS frames; the router adds its own listener's count).
+    fn stats_rollup(&self) -> ClusterStats {
+        let mut cs = self.router.stats();
+        cs.aggregate.accept_errors += self.accept_errors.load(Ordering::Relaxed);
+        cs
     }
 
     fn stats_line(&self) -> String {
-        let cs = self.router.stats();
+        let cs = self.stats_rollup();
         // Standard fields through the one shared renderer; cluster extras
         // ride after (the drift helper tolerates extras, and single-node
         // parsers ignore unknown keys).
@@ -70,219 +97,197 @@ fn err_line(e: &RouterError) -> String {
     format!("ERR {e}\n")
 }
 
-/// Same request-line cap as the single-node text handler.
-const MAX_LINE_BYTES: u64 = 1 << 20;
-
-fn handle_text(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, state: &RouterState) {
+/// Dispatch one text-protocol line to a response; both network drivers
+/// funnel through here via the [`net::Service`] impl.
+fn dispatch_text(state: &RouterState, line: &str) -> TextAction {
     let router = &state.router;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match (&mut *reader).take(MAX_LINE_BYTES).read_line(&mut line) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    let response = match parts.as_slice() {
+        [] => String::new(),
+        ["QUIT"] => return TextAction::Quit,
+        ["PING"] => "OK\n".to_string(),
+        ["PING", ..] => "ERR PING takes no arguments\n".to_string(),
+        ["STATS"] => state.stats_line(),
+        ["LOOKUP"] => err_line(&RouterError::BadQuery),
+        ["LOOKUP", rest @ ..] if rest.len() > wire::MAX_IDS as usize => {
+            "ERR too many ids\n".to_string()
         }
-        if line.len() as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
-            let _ = writer.write_all(b"ERR line too long\n");
-            break;
-        }
-        let parts: Vec<&str> = line.split_whitespace().collect();
-        let response = match parts.as_slice() {
-            [] => continue,
-            ["QUIT"] => break,
-            ["PING"] => "OK\n".to_string(),
-            ["PING", ..] => "ERR PING takes no arguments\n".to_string(),
-            ["STATS"] => state.stats_line(),
-            ["LOOKUP"] => err_line(&RouterError::BadQuery),
-            ["LOOKUP", rest @ ..] if rest.len() > wire::MAX_IDS as usize => {
-                "ERR too many ids\n".to_string()
-            }
-            ["LOOKUP", rest @ ..] => {
-                match rest
-                    .iter()
-                    .map(|s| s.parse::<u32>())
-                    .collect::<std::result::Result<Vec<_>, _>>()
-                {
-                    Ok(ids) => match router.lookup(&ids) {
-                        Ok(rows) => crate::coordinator::server::rows_lines(rows),
-                        Err(e) => err_line(&e),
-                    },
-                    Err(_) => "ERR bad id\n".to_string(),
-                }
-            }
-            ["DOT", a, b] => match (a.parse::<u32>(), b.parse::<u32>()) {
-                (Ok(a), Ok(b)) => match router.dot(a, b) {
-                    Ok(d) => format!("OK {d}\n"),
+        ["LOOKUP", rest @ ..] => {
+            match rest
+                .iter()
+                .map(|s| s.parse::<u32>())
+                .collect::<std::result::Result<Vec<_>, _>>()
+            {
+                Ok(ids) => match router.lookup(&ids) {
+                    Ok(rows) => crate::coordinator::server::rows_lines(rows),
                     Err(e) => err_line(&e),
                 },
-                _ => "ERR bad id\n".to_string(),
-            },
-            ["DOT", ..] => "ERR DOT takes exactly two ids\n".to_string(),
-            ["KNN", id, k] => match (id.parse::<u32>(), k.parse::<u32>()) {
-                (Ok(id), Ok(k)) => match router.knn(id, k) {
-                    Ok(neighbors) => crate::coordinator::server::neighbors_line(&neighbors),
-                    Err(e) => err_line(&e),
-                },
-                _ => "ERR bad id\n".to_string(),
-            },
-            ["KNN", ..] => "ERR KNN takes <query id> <k>\n".to_string(),
-            ["RELOAD", dir] => match router.rolling_reload_dir(std::path::Path::new(dir)) {
-                Ok(generations) => {
-                    let min = generations.iter().copied().min().unwrap_or(0);
-                    format!("OK generation={min}\n")
-                }
-                Err(e) => format!("ERR reload: {e}\n"),
-            },
-            ["RELOAD", ..] => "ERR RELOAD takes <shard snapshot dir>\n".to_string(),
-            _ => "ERR unknown command\n".to_string(),
-        };
-        if writer.write_all(response.as_bytes()).is_err() {
-            break;
+                Err(_) => "ERR bad id\n".to_string(),
+            }
         }
-    }
+        ["DOT", a, b] => match (a.parse::<u32>(), b.parse::<u32>()) {
+            (Ok(a), Ok(b)) => match router.dot(a, b) {
+                Ok(d) => format!("OK {d}\n"),
+                Err(e) => err_line(&e),
+            },
+            _ => "ERR bad id\n".to_string(),
+        },
+        ["DOT", ..] => "ERR DOT takes exactly two ids\n".to_string(),
+        ["KNN", id, k] => match (id.parse::<u32>(), k.parse::<u32>()) {
+            (Ok(id), Ok(k)) => match router.knn(id, k) {
+                Ok(neighbors) => crate::coordinator::server::neighbors_line(&neighbors),
+                Err(e) => err_line(&e),
+            },
+            _ => "ERR bad id\n".to_string(),
+        },
+        ["KNN", ..] => "ERR KNN takes <query id> <k>\n".to_string(),
+        ["RELOAD", dir] => match router.rolling_reload_dir(std::path::Path::new(dir)) {
+            Ok(generations) => {
+                let min = generations.iter().copied().min().unwrap_or(0);
+                format!("OK generation={min}\n")
+            }
+            Err(e) => format!("ERR reload: {e}\n"),
+        },
+        ["RELOAD", ..] => "ERR RELOAD takes <shard snapshot dir>\n".to_string(),
+        _ => "ERR unknown command\n".to_string(),
+    };
+    TextAction::Reply(response)
 }
 
-fn handle_binary(
-    reader: &mut BufReader<TcpStream>,
-    writer: &mut TcpStream,
-    state: &RouterState,
-) -> std::io::Result<()> {
+/// Append the response frame for one decoded binary request; mirrors
+/// `wire::respond_binary` but dispatches into the [`Router`] instead of a
+/// local [`ServingState`](crate::serving::ServingState). Returns true when
+/// the connection must close after the bytes flush.
+fn respond_binary_router(state: &RouterState, req: BinRequest, out: &mut Vec<u8>) -> bool {
     let router = &state.router;
-    // Hello: the dimensionality comes from the first downstream hello. If
-    // no shard-0 replica is reachable there is nothing truthful to
-    // negotiate — refuse the connection (the client sees a failed
-    // handshake and retries later) rather than cache dim=0 in the client
-    // for the connection's lifetime, which would desync its row framing
-    // the moment the shards come up.
-    let Ok(dim) = router.dim() else {
-        return Ok(());
-    };
-    let mut hello = Vec::with_capacity(8);
-    hello.extend_from_slice(&wire::MAGIC);
-    wire::put_u32(&mut hello, dim as u32);
-    writer.write_all(&hello)?;
-    loop {
-        let op = match wire::read_u32(reader) {
-            Ok(op) => op,
-            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
-            Err(e) => return Err(e),
-        };
-        let count = wire::read_u32(reader)?;
-        if op == wire::OP_RELOAD {
-            if count == 0 || count > wire::MAX_PATH_BYTES {
-                return wire::write_error(writer, wire::STATUS_BAD_FRAME);
-            }
-            let mut raw = vec![0u8; count as usize];
-            reader.read_exact(&mut raw)?;
-            let Ok(dir) = String::from_utf8(raw) else {
-                wire::write_error(writer, wire::STATUS_BAD_FRAME)?;
-                continue;
-            };
+    match req {
+        BinRequest::Fatal => {
+            wire::put_u32(out, wire::STATUS_BAD_FRAME);
+            wire::put_u32(out, 0);
+            true
+        }
+        BinRequest::Reload { path: None } => {
+            wire::put_u32(out, wire::STATUS_BAD_FRAME);
+            wire::put_u32(out, 0);
+            false
+        }
+        BinRequest::Reload { path: Some(dir) } => {
             match router.rolling_reload_dir(std::path::Path::new(&dir)) {
                 Ok(generations) => {
                     let min = generations.iter().copied().min().unwrap_or(0);
-                    let mut buf = Vec::with_capacity(12);
-                    wire::put_u32(&mut buf, wire::STATUS_OK);
-                    wire::put_u32(&mut buf, 1);
-                    wire::put_u32(&mut buf, min as u32);
-                    writer.write_all(&buf)?;
+                    wire::put_u32(out, wire::STATUS_OK);
+                    wire::put_u32(out, 1);
+                    wire::put_u32(out, min as u32);
                 }
                 Err(e) => {
                     crate::warn!("cluster RELOAD {dir:?} failed: {e}");
-                    wire::write_error(writer, wire::STATUS_RELOAD_FAILED)?;
+                    wire::put_u32(out, wire::STATUS_RELOAD_FAILED);
+                    wire::put_u32(out, 0);
                 }
             }
-            continue;
+            false
         }
-        if op == wire::OP_KNN_VEC {
-            if count == 0 || count > wire::MAX_IDS {
-                return wire::write_error(writer, wire::STATUS_BAD_FRAME);
-            }
-            let k = wire::read_u32(reader)?;
-            let query = wire::read_f32s(reader, count as usize)?;
-            if k == 0 {
-                wire::write_error(writer, wire::STATUS_BAD_REQUEST)?;
-                continue;
-            }
+        BinRequest::KnnVec { k: 0, .. } => {
+            wire::put_u32(out, wire::STATUS_BAD_REQUEST);
+            wire::put_u32(out, 0);
+            false
+        }
+        BinRequest::KnnVec { k, query } => {
             match router.knn_vec(&query, k) {
-                Ok(neighbors) => wire::write_neighbors_frame(writer, neighbors.iter().copied())?,
-                Err(e) => wire::write_error(writer, e.status_code())?,
+                Ok(neighbors) => {
+                    let _ = wire::write_neighbors_frame(out, neighbors.iter().copied());
+                }
+                Err(e) => {
+                    wire::put_u32(out, e.status_code());
+                    wire::put_u32(out, 0);
+                }
             }
-            continue;
+            false
         }
-        if count > wire::MAX_IDS {
-            return wire::write_error(writer, wire::STATUS_BAD_FRAME);
-        }
-        let mut ids = Vec::with_capacity(count as usize);
-        for _ in 0..count {
-            ids.push(wire::read_u32(reader)?);
-        }
-        match op {
-            wire::OP_QUIT => return Ok(()),
-            wire::OP_PING if ids.is_empty() => {
-                let mut buf = Vec::with_capacity(8);
-                wire::put_u32(&mut buf, wire::STATUS_OK);
-                wire::put_u32(&mut buf, 0);
-                writer.write_all(&buf)?;
-            }
-            wire::OP_PING => wire::write_error(writer, wire::STATUS_BAD_REQUEST)?,
-            wire::OP_LOOKUP if !ids.is_empty() => match router.lookup(&ids) {
-                Ok(rows) => {
-                    let mut buf = Vec::with_capacity(8 + rows.len() * dim * 4);
-                    wire::put_u32(&mut buf, wire::STATUS_OK);
-                    wire::put_u32(&mut buf, rows.len() as u32);
-                    for row in &rows {
-                        wire::put_f32s(&mut buf, row);
+        BinRequest::Ids { op: wire::OP_QUIT, .. } => true, // closes silently
+        BinRequest::Ids { op, ids } => {
+            match op {
+                wire::OP_PING if ids.is_empty() => {
+                    wire::put_u32(out, wire::STATUS_OK);
+                    wire::put_u32(out, 0);
+                }
+                wire::OP_PING => {
+                    wire::put_u32(out, wire::STATUS_BAD_REQUEST);
+                    wire::put_u32(out, 0);
+                }
+                wire::OP_LOOKUP if !ids.is_empty() => match router.lookup(&ids) {
+                    Ok(rows) => {
+                        let row_bytes: usize = rows.iter().map(|r| r.len() * 4).sum();
+                        out.reserve(8 + row_bytes);
+                        wire::put_u32(out, wire::STATUS_OK);
+                        wire::put_u32(out, rows.len() as u32);
+                        for row in &rows {
+                            wire::put_f32s(out, row);
+                        }
                     }
-                    writer.write_all(&buf)?;
+                    Err(e) => {
+                        wire::put_u32(out, e.status_code());
+                        wire::put_u32(out, 0);
+                    }
+                },
+                wire::OP_DOT if ids.len() == 2 => match router.dot(ids[0], ids[1]) {
+                    Ok(d) => {
+                        wire::put_u32(out, wire::STATUS_OK);
+                        wire::put_u32(out, 1);
+                        wire::put_f32s(out, &[d]);
+                    }
+                    Err(e) => {
+                        wire::put_u32(out, e.status_code());
+                        wire::put_u32(out, 0);
+                    }
+                },
+                wire::OP_KNN if ids.len() == 2 && ids[1] == 0 => {
+                    wire::put_u32(out, wire::STATUS_BAD_FRAME);
+                    wire::put_u32(out, 0);
                 }
-                Err(e) => wire::write_error(writer, e.status_code())?,
-            },
-            wire::OP_DOT if ids.len() == 2 => match router.dot(ids[0], ids[1]) {
-                Ok(d) => {
-                    let mut buf = Vec::with_capacity(12);
-                    wire::put_u32(&mut buf, wire::STATUS_OK);
-                    wire::put_u32(&mut buf, 1);
-                    wire::put_f32s(&mut buf, &[d]);
-                    writer.write_all(&buf)?;
+                wire::OP_KNN if ids.len() == 2 => match router.knn(ids[0], ids[1]) {
+                    Ok(neighbors) => {
+                        let _ = wire::write_neighbors_frame(out, neighbors.iter().copied());
+                    }
+                    Err(e) => {
+                        wire::put_u32(out, e.status_code());
+                        wire::put_u32(out, 0);
+                    }
+                },
+                wire::OP_STATS => {
+                    let _ = wire::write_stats_frame(out, &state.stats_rollup().aggregate.fields());
                 }
-                Err(e) => wire::write_error(writer, e.status_code())?,
-            },
-            wire::OP_KNN if ids.len() == 2 && ids[1] == 0 => {
-                wire::write_error(writer, wire::STATUS_BAD_FRAME)?
+                _ => {
+                    wire::put_u32(out, wire::STATUS_BAD_FRAME);
+                    wire::put_u32(out, 0);
+                }
             }
-            wire::OP_KNN if ids.len() == 2 => match router.knn(ids[0], ids[1]) {
-                Ok(neighbors) => wire::write_neighbors_frame(writer, neighbors.iter().copied())?,
-                Err(e) => wire::write_error(writer, e.status_code())?,
-            },
-            wire::OP_STATS => {
-                wire::write_stats_frame(writer, &router.stats().aggregate.fields())?;
-            }
-            _ => wire::write_error(writer, wire::STATUS_BAD_FRAME)?,
+            false
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, state: Arc<RouterState>) {
-    let peer = stream.peer_addr().ok();
-    let Ok(clone) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(clone);
-    let mut writer = stream;
-    let first = match reader.fill_buf() {
-        Ok(buf) if !buf.is_empty() => buf[0],
-        _ => return,
-    };
-    if first == wire::MAGIC[0] {
-        let mut magic = [0u8; 4];
-        if reader.read_exact(&mut magic).is_err() || magic != wire::MAGIC {
-            let _ = writer.write_all(b"ERR bad magic\n");
-            return;
-        }
-        if let Err(e) = handle_binary(&mut reader, &mut writer, &state) {
-            crate::debug!("cluster binary conn {peer:?} ended: {e}");
-        }
-    } else {
-        handle_text(&mut reader, &mut writer, &state);
+impl net::Service for RouterState {
+    /// The dimensionality comes from the first downstream hello. If no
+    /// shard-0 replica is reachable there is nothing truthful to negotiate
+    /// — refuse the connection (the client sees a failed handshake and
+    /// retries later) rather than cache dim=0 in the client for the
+    /// connection's lifetime, which would desync its row framing the
+    /// moment the shards come up.
+    fn hello_dim(&self) -> Option<u32> {
+        self.router.dim().ok().map(|d| d as u32)
+    }
+
+    fn text(&self, line: &str) -> TextAction {
+        dispatch_text(self, line)
+    }
+
+    fn binary(&self, req: BinRequest, out: &mut Vec<u8>) -> bool {
+        respond_binary_router(self, req, out)
+    }
+
+    fn note_accept_error(&self) {
+        self.accept_errors.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -301,39 +306,26 @@ pub fn spawn(
     Ok((state, listener, bound))
 }
 
-/// Accept-loop helper: serve until `state.stop` flips.
+/// Serve until [`RouterState::shutdown`], then drain, close connections,
+/// join handler threads, and stop the probe loop. Runs on the `[net]`
+/// driver from the router config.
 pub fn accept_loop(listener: TcpListener, state: Arc<RouterState>) {
-    listener.set_nonblocking(true).ok();
-    while !state.stop.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((s, _)) => {
-                let st = state.clone();
-                std::thread::spawn(move || handle_conn(s, st));
-            }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            Err(_) => break,
-        }
-    }
+    let cfg = state.router.config().net;
+    let lifecycle = state.lifecycle.clone();
+    let svc: Arc<dyn net::Service> = state.clone();
+    net::serve(listener, svc, &cfg, lifecycle);
+    state.router.shutdown();
 }
 
-/// Run the router until the process dies (`w2k cluster route`).
+/// Run the router until shutdown (`w2k cluster route`).
 pub fn serve_blocking(topo: Topology, cfg: RouterConfig, addr: &str) -> Result<()> {
     let (state, listener, bound) = spawn(topo, cfg, addr)?;
     crate::info!(
-        "cluster router on {bound} ({}), probing every {:?}",
+        "cluster router on {bound} ({}, {} driver), probing every {:?}",
         state.router.topology().describe(),
+        cfg.net.driver,
         cfg.probe_interval
     );
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
-                let st = state.clone();
-                std::thread::spawn(move || handle_conn(s, st));
-            }
-            Err(e) => crate::warn!("accept error: {e}"),
-        }
-    }
+    accept_loop(listener, state);
     Ok(())
 }

@@ -15,6 +15,10 @@ pub use schema::{
 };
 pub use toml::{TomlDoc, TomlValue};
 
+// The `[net]` section's types live with the drivers in `crate::net`;
+// re-exported here so config consumers see one namespace.
+pub use crate::net::{NetConfig, NetDriver};
+
 use crate::error::{Error, Result};
 use std::path::Path;
 

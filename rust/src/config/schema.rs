@@ -2,6 +2,7 @@
 
 use super::toml::TomlDoc;
 use crate::error::{Error, Result};
+use crate::net::NetConfig;
 use crate::snapshot::Codec;
 
 /// Which downstream NLP task (paper §4 evaluates three).
@@ -298,6 +299,9 @@ pub struct ExperimentConfig {
     pub serving: ServingConfig,
     pub index: IndexConfig,
     pub snapshot: SnapshotConfig,
+    /// `[net]` — which connection driver the listener runs on plus its
+    /// timeouts (see `net/`).
+    pub net: NetConfig,
     pub artifacts_dir: String,
 }
 
@@ -314,6 +318,7 @@ impl Default for ExperimentConfig {
             serving: ServingConfig::default(),
             index: IndexConfig::default(),
             snapshot: SnapshotConfig::default(),
+            net: NetConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -392,6 +397,7 @@ impl ExperimentConfig {
                     None => d.snapshot.codec,
                 },
             },
+            net: NetConfig::from_doc(doc),
             artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir),
         };
         cfg.validate()?;
@@ -450,6 +456,9 @@ impl ExperimentConfig {
         }
         if self.index.nlist == 0 || self.index.nprobe == 0 {
             return Err(Error::Config("index.nlist/nprobe must be >= 1".into()));
+        }
+        if self.net.handlers == 0 {
+            return Err(Error::Config("net.handlers must be >= 1".into()));
         }
         Ok(())
     }
@@ -589,6 +598,32 @@ codec = "int8"
         // Bad codec is a config error at parse time.
         let bad = TomlDoc::parse("[snapshot]\ncodec = \"f64\"\n").unwrap();
         assert!(ExperimentConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn net_section_parses_and_validates() {
+        let src = r#"
+[net]
+driver = "epoll"
+handlers = 2
+idle_timeout_ms = 5000
+drain_ms = 500
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.net.driver, crate::net::NetDriver::Epoll);
+        assert_eq!(cfg.net.handlers, 2);
+        assert_eq!(cfg.net.idle_timeout_ms, 5000);
+        assert_eq!(cfg.net.drain_ms, 500);
+        assert_eq!(cfg.net.read_timeout_ms, NetConfig::default().read_timeout_ms);
+
+        // Defaults: blocking threads driver.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.net.driver, crate::net::NetDriver::Threads);
+
+        let mut bad = ExperimentConfig::default();
+        bad.net.handlers = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

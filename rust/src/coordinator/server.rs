@@ -20,7 +20,7 @@
 //!                                 cache_hits=.. cache_misses=.. rejected=..
 //!                                 knn_queries=.. knn_candidates=..
 //!                                 knn_mean_probes=.. model_generation=..
-//!                                 snapshot_bytes=..\n`
+//!                                 snapshot_bytes=.. accept_errors=..\n`
 //!   `QUIT\n`                   → closes the connection.
 //!
 //! Malformed input (bad ids, out-of-range ids, empty LOOKUP, unknown
@@ -33,18 +33,17 @@ use crate::config::ExperimentConfig;
 use crate::embedding::{self, EmbeddingStore};
 use crate::error::{Error, Result};
 use crate::index::{KnnIndex, Query};
+use crate::net::{self, Lifecycle, NetConfig, TextAction};
 use crate::serving::{wire, LookupError, ServingState};
 use crate::util::Rng;
-use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::TcpListener;
 use std::sync::Arc;
-use std::time::Duration;
 
 /// Shared server state: the serving layer plus listener lifecycle flags.
 pub struct ServerState {
     serving: ServingState,
-    stop: AtomicBool,
+    net: NetConfig,
+    lifecycle: Arc<Lifecycle>,
 }
 
 impl ServerState {
@@ -70,7 +69,7 @@ impl ServerState {
         serving.set_reload_mmap(cfg.snapshot.mmap);
         crate::info!("serving {}", serving.store().describe());
         crate::info!("knn via {}", serving.index().describe());
-        Ok(ServerState { serving, stop: AtomicBool::new(false) })
+        Ok(ServerState { serving, net: cfg.net, lifecycle: Lifecycle::new() })
     }
 
     /// The serving layer (cache + pool) behind both protocols.
@@ -82,9 +81,17 @@ impl ServerState {
         self.serving.served()
     }
 
+    /// Begin graceful shutdown: the accept loop stops taking connections,
+    /// drains in-flight requests up to `net.drain_ms`, closes every
+    /// connection, and returns; the serving pool is torn down last (by the
+    /// thread running [`accept_loop`], after the drain completes).
     pub fn shutdown(&self) {
-        self.stop.store(true, Ordering::SeqCst);
-        self.serving.shutdown();
+        self.lifecycle.begin_shutdown();
+    }
+
+    /// The listener's shutdown/drain handle.
+    pub fn lifecycle(&self) -> &Arc<Lifecycle> {
+        &self.lifecycle
     }
 
     fn stats_line(&self) -> String {
@@ -127,130 +134,99 @@ pub(crate) fn neighbors_line(neighbors: &[(u32, f32)]) -> String {
     s
 }
 
-/// Request-line byte cap: without it, `read_line` would buffer an unbounded
-/// newline-free stream into memory before any id-count check could run.
-const MAX_LINE_BYTES: u64 = 1 << 20;
-
-/// One text-protocol session over an already-peeked reader.
-fn handle_text(
-    reader: &mut BufReader<TcpStream>,
-    writer: &mut TcpStream,
-    state: &ServerState,
-) {
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match (&mut *reader).take(MAX_LINE_BYTES).read_line(&mut line) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
+/// Dispatch one text-protocol line to a response. Both network drivers
+/// funnel through this one function (via the [`net::Service`] impl), which
+/// is what keeps the text protocol byte-identical across drivers.
+fn dispatch_text(state: &ServerState, line: &str) -> TextAction {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    let response = match parts.as_slice() {
+        [] => String::new(),
+        ["QUIT"] => return TextAction::Quit,
+        // Status-only liveness probe, mirroring binary OP_PING.
+        ["PING"] => "OK\n".to_string(),
+        ["PING", ..] => "ERR PING takes no arguments\n".to_string(),
+        ["STATS"] => state.stats_line(),
+        ["LOOKUP"] => err_line(LookupError::Empty),
+        // Same allocation cap as the binary protocol's MAX_IDS: one text
+        // line must not be able to force a multi-GB reply buffer.
+        ["LOOKUP", rest @ ..] if rest.len() > wire::MAX_IDS as usize => {
+            "ERR too many ids\n".to_string()
         }
-        if line.len() as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
-            // Hit the cap mid-line: the rest of the stream is unparseable.
-            let _ = writer.write_all(b"ERR line too long\n");
-            break;
-        }
-        let parts: Vec<&str> = line.split_whitespace().collect();
-        let response = match parts.as_slice() {
-            [] => continue,
-            ["QUIT"] => break,
-            // Status-only liveness probe, mirroring binary OP_PING.
-            ["PING"] => "OK\n".to_string(),
-            ["PING", ..] => "ERR PING takes no arguments\n".to_string(),
-            ["STATS"] => state.stats_line(),
-            ["LOOKUP"] => err_line(LookupError::Empty),
-            // Same allocation cap as the binary protocol's MAX_IDS: one text
-            // line must not be able to force a multi-GB reply buffer.
-            ["LOOKUP", rest @ ..] if rest.len() > wire::MAX_IDS as usize => {
-                "ERR too many ids\n".to_string()
-            }
-            ["LOOKUP", rest @ ..] => {
-                match rest
-                    .iter()
-                    .map(|s| s.parse::<usize>())
-                    .collect::<std::result::Result<Vec<_>, _>>()
-                {
-                    Ok(ids) => match state.serving.lookup_rows(ids) {
-                        Ok(rows) => rows_lines(rows),
-                        Err(e) => err_line(e),
-                    },
-                    Err(_) => "ERR bad id\n".to_string(),
-                }
-            }
-            ["DOT", a, b] => match (a.parse::<usize>(), b.parse::<usize>()) {
-                (Ok(a), Ok(b)) => match state.serving.dot(a, b) {
-                    Ok(d) => format!("OK {d}\n"),
+        ["LOOKUP", rest @ ..] => {
+            match rest
+                .iter()
+                .map(|s| s.parse::<usize>())
+                .collect::<std::result::Result<Vec<_>, _>>()
+            {
+                Ok(ids) => match state.serving.lookup_rows(ids) {
+                    Ok(rows) => rows_lines(rows),
                     Err(e) => err_line(e),
                 },
-                _ => "ERR bad id\n".to_string(),
-            },
-            ["DOT", ..] => "ERR DOT takes exactly two ids\n".to_string(),
-            // No k cap here: the serving layer clamps k to the vocabulary
-            // size (same as the binary protocol).
-            ["KNN", id, k] => match (id.parse::<usize>(), k.parse::<usize>()) {
-                (Ok(id), Ok(k)) => match state.serving.knn(Query::Id(id), k) {
-                    Ok(neighbors) => {
-                        let pairs: Vec<(u32, f32)> =
-                            neighbors.iter().map(|n| (n.id as u32, n.score)).collect();
-                        neighbors_line(&pairs)
-                    }
-                    Err(e) => err_line(e),
-                },
-                _ => "ERR bad id\n".to_string(),
-            },
-            ["KNN", ..] => "ERR KNN takes <query id> <k>\n".to_string(),
-            ["RELOAD", path] => {
-                match state.serving.reload_snapshot(std::path::Path::new(path)) {
-                    Ok(generation) => format!("OK generation={generation}\n"),
-                    Err(e) => format!("ERR reload: {e}\n"),
-                }
+                Err(_) => "ERR bad id\n".to_string(),
             }
-            ["RELOAD", ..] => "ERR RELOAD takes <path>\n".to_string(),
-            _ => "ERR unknown command\n".to_string(),
-        };
-        if writer.write_all(response.as_bytes()).is_err() {
-            break;
         }
-    }
-}
-
-/// Per-connection dispatcher: sniff the first byte to pick a protocol.
-fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
-    let peer = stream.peer_addr().ok();
-    crate::debug!("connection from {peer:?}");
-    let Ok(clone) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(clone);
-    let mut writer = stream;
-    let first = match reader.fill_buf() {
-        Ok(buf) if !buf.is_empty() => buf[0],
-        _ => return,
+        ["DOT", a, b] => match (a.parse::<usize>(), b.parse::<usize>()) {
+            (Ok(a), Ok(b)) => match state.serving.dot(a, b) {
+                Ok(d) => format!("OK {d}\n"),
+                Err(e) => err_line(e),
+            },
+            _ => "ERR bad id\n".to_string(),
+        },
+        ["DOT", ..] => "ERR DOT takes exactly two ids\n".to_string(),
+        // No k cap here: the serving layer clamps k to the vocabulary
+        // size (same as the binary protocol).
+        ["KNN", id, k] => match (id.parse::<usize>(), k.parse::<usize>()) {
+            (Ok(id), Ok(k)) => match state.serving.knn(Query::Id(id), k) {
+                Ok(neighbors) => {
+                    let pairs: Vec<(u32, f32)> =
+                        neighbors.iter().map(|n| (n.id as u32, n.score)).collect();
+                    neighbors_line(&pairs)
+                }
+                Err(e) => err_line(e),
+            },
+            _ => "ERR bad id\n".to_string(),
+        },
+        ["KNN", ..] => "ERR KNN takes <query id> <k>\n".to_string(),
+        ["RELOAD", path] => {
+            match state.serving.reload_snapshot(std::path::Path::new(path)) {
+                Ok(generation) => format!("OK generation={generation}\n"),
+                Err(e) => format!("ERR reload: {e}\n"),
+            }
+        }
+        ["RELOAD", ..] => "ERR RELOAD takes <path>\n".to_string(),
+        _ => "ERR unknown command\n".to_string(),
     };
-    if first == wire::MAGIC[0] {
-        let mut magic = [0u8; 4];
-        if reader.read_exact(&mut magic).is_err() || magic != wire::MAGIC {
-            let _ = writer.write_all(b"ERR bad magic\n");
-            return;
-        }
-        if let Err(e) = wire::handle_binary(&mut reader, &mut writer, &state.serving) {
-            crate::debug!("binary conn {peer:?} ended: {e}");
-        }
-    } else {
-        handle_text(&mut reader, &mut writer, &state);
+    TextAction::Reply(response)
+}
+
+/// The coordinator's protocol brain: both network drivers dispatch every
+/// text line and binary frame through this one impl.
+impl net::Service for ServerState {
+    fn hello_dim(&self) -> Option<u32> {
+        Some(self.serving.dim() as u32)
+    }
+
+    fn text(&self, line: &str) -> TextAction {
+        dispatch_text(self, line)
+    }
+
+    fn binary(&self, req: wire::BinRequest, out: &mut Vec<u8>) -> bool {
+        wire::respond_binary(&self.serving, req, out)
+    }
+
+    fn note_accept_error(&self) {
+        self.serving.note_accept_error();
     }
 }
 
-/// Run the server until the process is killed (the `w2k serve` subcommand).
+/// Run the server until shutdown (the `w2k serve` subcommand).
 pub fn serve_blocking(cfg: &ExperimentConfig) -> Result<()> {
     let (state, listener, addr) = spawn(cfg)?;
-    crate::info!("listening on {addr} (text + binary protocols)");
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
-                let st = state.clone();
-                std::thread::spawn(move || handle_conn(s, st));
-            }
-            Err(e) => crate::warn!("accept error: {e}"),
-        }
-    }
+    crate::info!(
+        "listening on {addr} ({} driver, text + binary protocols)",
+        state.net.driver
+    );
+    accept_loop(listener, state);
     Ok(())
 }
 
@@ -268,21 +244,15 @@ pub fn spawn(cfg: &ExperimentConfig) -> Result<(Arc<ServerState>, TcpListener, S
     Ok((state, listener, addr))
 }
 
-/// Accept-loop helper for examples/tests: serve until `state.stop` flips.
+/// Serve until [`ServerState::shutdown`] is called, then drain in-flight
+/// requests, close connections, join handler threads, and tear down the
+/// serving pool. Runs on the configured `[net]` driver.
 pub fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
-    listener.set_nonblocking(true).ok();
-    while !state.stop.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((s, _)) => {
-                let st = state.clone();
-                std::thread::spawn(move || handle_conn(s, st));
-            }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            Err(_) => break,
-        }
-    }
+    let cfg = state.net;
+    let lifecycle = state.lifecycle.clone();
+    let svc: Arc<dyn net::Service> = state.clone();
+    net::serve(listener, svc, &cfg, lifecycle);
+    state.serving.shutdown();
 }
 
 #[cfg(test)]
@@ -291,6 +261,7 @@ mod tests {
     use crate::config::{EmbeddingKind, ExperimentConfig};
     use crate::serving::BinaryClient;
     use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
 
     fn test_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
@@ -397,10 +368,58 @@ mod tests {
             resp[0],
             "OK p50_us=0 p99_us=0 served=0 cache_hits=0 cache_misses=0 rejected=0 \
              knn_queries=0 knn_candidates=0 knn_mean_probes=0.00 model_generation=1 \
-             snapshot_bytes=0"
+             snapshot_bytes=0 accept_errors=0"
         );
         state.shutdown();
         acc.join().unwrap();
+    }
+
+    /// Satellite: graceful shutdown drains and actually terminates — the
+    /// accept thread joins even with idle connections parked on the server
+    /// (close_all must unblock their reader threads), the listener socket
+    /// is released, and parked clients observe EOF.
+    #[test]
+    fn graceful_shutdown_unblocks_idle_conns_and_releases_listener() {
+        let (state, addr, acc) = start();
+
+        // Park one idle text connection and one idle binary session.
+        let mut idle_text = TcpStream::connect(&addr).unwrap();
+        idle_text.write_all(b"PING\n").unwrap();
+        let mut r = BufReader::new(idle_text.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line, "OK\n");
+        let mut idle_bin = BinaryClient::connect(&addr).unwrap();
+        idle_bin.ping().unwrap();
+
+        state.shutdown();
+        // The accept thread must join without any client sending QUIT: the
+        // drain sees zero busy requests, close_all() unblocks both parked
+        // handler threads, and every handler is joined before serve returns.
+        acc.join().expect("accept loop did not terminate on shutdown");
+
+        // Parked clients observe EOF (or a reset), never a hang.
+        let mut probe = [0u8; 1];
+        idle_text
+            .set_read_timeout(Some(std::time::Duration::from_secs(2)))
+            .unwrap();
+        match std::io::Read::read(&mut r, &mut probe) {
+            Ok(0) | Err(_) => {}
+            Ok(n) => panic!("expected EOF after shutdown, read {n} bytes"),
+        }
+
+        // The listener socket is gone: a fresh connection cannot complete a
+        // request round-trip (connect may land in a dead backlog, but the
+        // first read sees EOF/reset).
+        if let Ok(mut s) = TcpStream::connect(&addr) {
+            s.set_read_timeout(Some(std::time::Duration::from_secs(2))).unwrap();
+            s.write_all(b"PING\n").ok();
+            let mut buf = [0u8; 8];
+            match std::io::Read::read(&mut s, &mut buf) {
+                Ok(0) | Err(_) => {}
+                Ok(n) => panic!("server still answered after shutdown ({n} bytes)"),
+            }
+        }
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub mod error;
 pub mod index;
 pub mod kron;
 pub mod metrics;
+pub mod net;
 pub mod repr;
 pub mod runtime;
 pub mod serving;

@@ -1,0 +1,404 @@
+//! Concurrent scatter-gather fan-out for the cluster router.
+//!
+//! The threaded router scatters a multi-shard request by spawning one
+//! scoped thread per shard, each doing a blocking round-trip on that
+//! shard's pooled connection. This module replaces the thread fan-out with
+//! one event loop: write every request frame, then multiplex all the
+//! replies on a single [`Poller`](super::poll::Poller) — in-flight on every
+//! shard at once, zero thread spawns per request.
+//!
+//! Scope: one request frame, one response frame, per pooled connection. The
+//! caller (the router) still owns replica choice, slot locking, health
+//! accounting, and fallback — a connection that fails here is marked
+//! broken (so the pool reconnects it later) and the router retries that
+//! shard through the ordinary blocking failover path. Response *decoding*
+//! reuses the exact header/payload layout the [`BinaryClient`] readers
+//! expect; only the transport scheduling differs.
+
+use super::poll::{Event, Poller};
+use crate::serving::wire::{self, WireError};
+use crate::serving::BinaryClient;
+use std::io::{self, Read, Write};
+use std::os::unix::io::AsRawFd;
+use std::time::{Duration, Instant};
+
+/// Expected response payload layout for one exchange.
+#[derive(Debug, Clone, Copy)]
+pub enum Shape {
+    /// `count` rows of `dim` f32s (OP_LOOKUP).
+    Rows { dim: usize },
+    /// `count` (u32 id, f32 score) pairs (OP_KNN / OP_KNN_VEC).
+    Neighbors,
+}
+
+/// A decoded OK response.
+#[derive(Debug)]
+pub enum Payload {
+    Rows(Vec<Vec<f32>>),
+    Neighbors(Vec<(u32, f32)>),
+}
+
+/// One request to put in flight on a pooled connection. The caller must
+/// have checked [`BinaryClient::fanout_ready`] — a dirty read buffer or a
+/// poisoned transport cannot be multiplexed safely.
+pub struct Exchange<'a> {
+    pub client: &'a mut BinaryClient,
+    pub frame: Vec<u8>,
+    pub shape: Shape,
+}
+
+struct JobState {
+    buf: Vec<u8>,
+    /// Total bytes wanted: 8 until the header arrives, then 8 + payload.
+    need: usize,
+    header_parsed: bool,
+    status: u32,
+    count: usize,
+    done: Option<Result<Payload, WireError>>,
+}
+
+impl JobState {
+    fn new() -> JobState {
+        JobState { buf: Vec::new(), need: 8, header_parsed: false, status: 0, count: 0, done: None }
+    }
+}
+
+/// Write every frame, then multiplex all replies until done or `deadline`
+/// elapses. Returns one result per job, in job order. Transport failures
+/// (including deadline expiry) mark that job's client broken; server
+/// status errors leave the connection clean, exactly like
+/// `BinaryClient::roundtrip`.
+pub fn exchange_all(mut jobs: Vec<Exchange<'_>>, deadline: Duration) -> Vec<Result<Payload, WireError>> {
+    let mut states: Vec<JobState> = jobs.iter().map(|_| JobState::new()).collect();
+
+    // Phase 1: blocking writes. Frames are small (ids / one query vector)
+    // and the sockets keep their configured write timeouts.
+    for (job, state) in jobs.iter_mut().zip(states.iter_mut()) {
+        let frame = std::mem::take(&mut job.frame);
+        if let Err(e) = job.client.stream().write_all(&frame) {
+            job.client.mark_broken();
+            state.done = Some(Err(wire::classify(e)));
+        }
+    }
+
+    // Phase 2: multiplexed reads.
+    match Poller::new() {
+        Ok(poller) => multiplex_reads(&mut jobs, &mut states, poller, deadline),
+        // No poller (fd exhaustion): degrade to sequential blocking reads —
+        // still correct, just serial.
+        Err(_) => {
+            for (job, state) in jobs.iter_mut().zip(states.iter_mut()) {
+                if state.done.is_some() {
+                    continue;
+                }
+                blocking_read(job, state);
+            }
+        }
+    }
+
+    states
+        .into_iter()
+        .map(|s| s.done.unwrap_or(Err(WireError::TimedOut)))
+        .collect()
+}
+
+fn multiplex_reads(
+    jobs: &mut [Exchange<'_>],
+    states: &mut [JobState],
+    mut poller: Poller,
+    deadline: Duration,
+) {
+    let start = Instant::now();
+    let mut pending = 0usize;
+    for (i, (job, state)) in jobs.iter_mut().zip(states.iter_mut()).enumerate() {
+        if state.done.is_some() {
+            continue;
+        }
+        let stream = job.client.stream();
+        if stream.set_nonblocking(true).is_err()
+            || poller.register(stream.as_raw_fd(), i, true, false).is_err()
+        {
+            job.client.mark_broken();
+            state.done = Some(Err(WireError::TimedOut));
+            continue;
+        }
+        pending += 1;
+    }
+    let mut events: Vec<Event> = Vec::new();
+    while pending > 0 {
+        let remain = deadline.saturating_sub(start.elapsed());
+        if remain.is_zero() {
+            break;
+        }
+        events.clear();
+        let timeout = (remain.as_millis() as i64).clamp(1, 100) as i32;
+        if poller.wait(&mut events, timeout).is_err() {
+            break;
+        }
+        for ev in &events {
+            let i = ev.token;
+            let (job, state) = (&mut jobs[i], &mut states[i]);
+            if state.done.is_some() {
+                continue;
+            }
+            step_read(job, state);
+            if state.done.is_some() {
+                let _ = poller.deregister(job.client.stream().as_raw_fd());
+                pending -= 1;
+            }
+        }
+    }
+    // Deadline leftovers: the stream holds (or will hold) a half-read
+    // late reply — poison so the pool reconnects before reusing it.
+    for (job, state) in jobs.iter_mut().zip(states.iter_mut()) {
+        if state.done.is_none() {
+            let _ = poller.deregister(job.client.stream().as_raw_fd());
+            job.client.mark_broken();
+            state.done = Some(Err(WireError::TimedOut));
+        }
+        let _ = job.client.stream().set_nonblocking(false);
+    }
+}
+
+/// Nonblocking read step: pull bytes toward `need`, parse the header when
+/// it lands, finish when the payload is complete.
+fn step_read(job: &mut Exchange<'_>, state: &mut JobState) {
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        let want = state.need - state.buf.len();
+        if want == 0 {
+            break;
+        }
+        // Never read past this response: the pooled connection must stay
+        // frame-aligned for its next (blocking) user.
+        let cap = want.min(chunk.len());
+        match job.client.stream().read(&mut chunk[..cap]) {
+            Ok(0) => {
+                job.client.mark_broken();
+                state.done = Some(Err(WireError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-response",
+                ))));
+                return;
+            }
+            Ok(n) => {
+                state.buf.extend_from_slice(&chunk[..n]);
+                if !state.header_parsed && state.buf.len() >= 8 {
+                    parse_header(job, state);
+                }
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                job.client.mark_broken();
+                state.done = Some(Err(wire::classify(e)));
+                return;
+            }
+        }
+    }
+    if state.header_parsed && state.buf.len() == state.need {
+        finish(job, state);
+    }
+}
+
+/// Blocking fallback read (sockets still in blocking mode, io timeouts
+/// apply): header, then payload, then decode.
+fn blocking_read(job: &mut Exchange<'_>, state: &mut JobState) {
+    let mut stream = job.client.stream();
+    let mut header = [0u8; 8];
+    if let Err(e) = stream.read_exact(&mut header) {
+        job.client.mark_broken();
+        state.done = Some(Err(wire::classify(e)));
+        return;
+    }
+    state.buf.extend_from_slice(&header);
+    parse_header(job, state);
+    while state.buf.len() < state.need {
+        let mut chunk = vec![0u8; state.need - state.buf.len()];
+        if let Err(e) = stream.read_exact(&mut chunk) {
+            job.client.mark_broken();
+            state.done = Some(Err(wire::classify(e)));
+            return;
+        }
+        state.buf.extend_from_slice(&chunk);
+    }
+    finish(job, state);
+}
+
+fn parse_header(job: &Exchange<'_>, state: &mut JobState) {
+    state.status = u32::from_le_bytes(state.buf[..4].try_into().expect("8-byte header"));
+    state.count = u32::from_le_bytes(state.buf[4..8].try_into().expect("8-byte header")) as usize;
+    state.header_parsed = true;
+    // Error frames carry no payload regardless of shape.
+    let payload = if state.status != wire::STATUS_OK {
+        0
+    } else {
+        match job.shape {
+            Shape::Rows { dim } => state.count * dim * 4,
+            Shape::Neighbors => state.count * 8,
+        }
+    };
+    state.need = 8 + payload;
+}
+
+fn finish(job: &Exchange<'_>, state: &mut JobState) {
+    if state.status != wire::STATUS_OK {
+        // A complete error frame: the server answered, the connection is
+        // clean and stays pooled.
+        state.done = Some(Err(WireError::Status(state.status)));
+        return;
+    }
+    let body = &state.buf[8..];
+    let payload = match job.shape {
+        Shape::Rows { dim } => {
+            let mut rows = Vec::with_capacity(state.count);
+            for r in 0..state.count {
+                let row = body[r * dim * 4..(r + 1) * dim * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect();
+                rows.push(row);
+            }
+            Payload::Rows(rows)
+        }
+        Shape::Neighbors => {
+            let pairs = body
+                .chunks_exact(8)
+                .map(|c| {
+                    (
+                        u32::from_le_bytes(c[..4].try_into().expect("8-byte pair")),
+                        f32::from_le_bytes(c[4..].try_into().expect("8-byte pair")),
+                    )
+                })
+                .collect();
+            Payload::Neighbors(pairs)
+        }
+    };
+    state.done = Some(Ok(payload));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::wire::{put_f32s, put_u32};
+    use std::net::TcpListener;
+
+    /// A hand-rolled shard stub: accepts one binary connection, answers
+    /// each LOOKUP frame with `count` rows of `dim` f32s (value = id).
+    fn stub_shard(dim: usize) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let Ok((mut s, _)) = listener.accept() else { return };
+            let mut magic = [0u8; 4];
+            use std::io::{Read, Write};
+            if s.read_exact(&mut magic).is_err() {
+                return;
+            }
+            let mut hello = wire::MAGIC.to_vec();
+            hello.extend_from_slice(&(dim as u32).to_le_bytes());
+            s.write_all(&hello).unwrap();
+            let mut reader = std::io::BufReader::new(s.try_clone().unwrap());
+            loop {
+                let mut head = [0u8; 8];
+                if reader.read_exact(&mut head).is_err() {
+                    return;
+                }
+                let count = u32::from_le_bytes(head[4..].try_into().unwrap()) as usize;
+                let mut ids = vec![0u8; count * 4];
+                if reader.read_exact(&mut ids).is_err() {
+                    return;
+                }
+                let mut out = Vec::new();
+                put_u32(&mut out, wire::STATUS_OK);
+                put_u32(&mut out, count as u32);
+                for c in ids.chunks_exact(4) {
+                    let id = u32::from_le_bytes(c.try_into().unwrap());
+                    put_f32s(&mut out, &vec![id as f32; dim]);
+                }
+                if s.write_all(&out).is_err() {
+                    return;
+                }
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn multiplexed_lookups_decode_per_shard() {
+        let dim = 3;
+        let a = stub_shard(dim);
+        let b = stub_shard(dim);
+        let mut ca = BinaryClient::connect(&a).unwrap();
+        let mut cb = BinaryClient::connect(&b).unwrap();
+        assert!(ca.fanout_ready() && cb.fanout_ready());
+        let jobs = vec![
+            Exchange {
+                client: &mut ca,
+                frame: wire::encode_ids_frame(wire::OP_LOOKUP, &[1, 2]),
+                shape: Shape::Rows { dim },
+            },
+            Exchange {
+                client: &mut cb,
+                frame: wire::encode_ids_frame(wire::OP_LOOKUP, &[7]),
+                shape: Shape::Rows { dim },
+            },
+        ];
+        let results = exchange_all(jobs, Duration::from_secs(5));
+        match &results[0] {
+            Ok(Payload::Rows(rows)) => {
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[0], vec![1.0; dim]);
+                assert_eq!(rows[1], vec![2.0; dim]);
+            }
+            other => panic!("{other:?}"),
+        }
+        match &results[1] {
+            Ok(Payload::Rows(rows)) => assert_eq!(rows[0], vec![7.0; dim]),
+            other => panic!("{other:?}"),
+        }
+        // Connections come back blocking and clean: pooled reuse works.
+        assert!(ca.fanout_ready() && cb.fanout_ready());
+        assert_eq!(ca.lookup(&[4]).unwrap()[0], vec![4.0; dim]);
+    }
+
+    #[test]
+    fn dead_peer_breaks_only_its_own_job() {
+        let dim = 2;
+        let live = stub_shard(dim);
+        // A listener that accepts the handshake then hangs up.
+        let dead_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead = dead_listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let Ok((mut s, _)) = dead_listener.accept() else { return };
+            use std::io::{Read, Write};
+            let mut magic = [0u8; 4];
+            s.read_exact(&mut magic).ok();
+            let mut hello = wire::MAGIC.to_vec();
+            hello.extend_from_slice(&(dim as u32).to_le_bytes());
+            s.write_all(&hello).ok();
+            // Read one frame header then drop the connection mid-response.
+            let mut head = [0u8; 8];
+            s.read_exact(&mut head).ok();
+        });
+        let mut ca = BinaryClient::connect(&live).unwrap();
+        let mut cb = BinaryClient::connect(&dead).unwrap();
+        let jobs = vec![
+            Exchange {
+                client: &mut ca,
+                frame: wire::encode_ids_frame(wire::OP_LOOKUP, &[5]),
+                shape: Shape::Rows { dim },
+            },
+            Exchange {
+                client: &mut cb,
+                frame: wire::encode_ids_frame(wire::OP_LOOKUP, &[6]),
+                shape: Shape::Rows { dim },
+            },
+        ];
+        let results = exchange_all(jobs, Duration::from_secs(5));
+        assert!(matches!(&results[0], Ok(Payload::Rows(_))), "{:?}", results[0]);
+        assert!(results[1].is_err(), "dead peer must fail");
+        assert!(ca.fanout_ready(), "healthy connection stays pooled");
+        assert!(!cb.fanout_ready(), "failed connection is poisoned");
+    }
+}

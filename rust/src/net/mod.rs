@@ -1,0 +1,311 @@
+//! Network serving core: one listener abstraction, two drivers.
+//!
+//! Every listener in the repo (single-node coordinator, cluster router)
+//! speaks the same two protocols — line-oriented text and the length-framed
+//! binary protocol from [`crate::serving::wire`] — sniffed from the first
+//! byte of each connection. This module splits *what the server answers*
+//! from *how connections are driven*:
+//!
+//! * [`Service`] is the protocol brain: given one text line or one decoded
+//!   binary frame, produce the response bytes. The coordinator and the
+//!   router each implement it once, and both drivers call the same impl, so
+//!   driver choice can never change a response byte.
+//! * [`threads`] is the classic blocking driver: thread per connection,
+//!   blocking reads. Simple, debuggable, the default.
+//! * [`reactor`] is the event-loop driver: one reactor thread multiplexing
+//!   every connection over epoll (`poll(2)` off Linux), nonblocking sockets,
+//!   a per-connection incremental parser ([`parser`]), request pipelining on
+//!   the binary protocol, `writev`-batched responses, and idle/read/write
+//!   deadlines kept on a [`timer`] wheel.
+//!
+//! The driver is picked by `[net] driver = "threads" | "epoll"` in the
+//! experiment config (default `threads`). Both drivers share the
+//! accept-backoff policy (transient `accept(2)` failures back off and
+//! retry, counted in the `accept_errors` STATS field, never killing the
+//! listener) and the graceful-shutdown protocol driven by [`Lifecycle`]:
+//! stop accepting, drain in-flight requests up to a deadline, close every
+//! connection, join every thread.
+
+pub mod parser;
+pub mod sys;
+pub mod threads;
+pub mod timer;
+
+#[cfg(unix)]
+pub mod fanout;
+#[cfg(unix)]
+pub mod poll;
+#[cfg(unix)]
+pub mod reactor;
+
+use crate::serving::wire::BinRequest;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Text lines above this many bytes poison the stream (`ERR line too
+/// long\n`, close): past the cap there is no way to find the next command
+/// boundary. Shared by both drivers.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Which connection driver a listener runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetDriver {
+    /// Blocking thread-per-connection (default).
+    Threads,
+    /// Readiness-driven event loop (epoll on Linux, `poll(2)` on other
+    /// unix). Falls back to [`NetDriver::Threads`] with a warning on
+    /// platforms without a poller.
+    Epoll,
+}
+
+impl NetDriver {
+    pub fn parse(s: &str) -> Result<NetDriver, String> {
+        match s {
+            "threads" => Ok(NetDriver::Threads),
+            "epoll" => Ok(NetDriver::Epoll),
+            other => Err(format!("net.driver must be \"threads\" or \"epoll\", got {other:?}")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NetDriver::Threads => "threads",
+            NetDriver::Epoll => "epoll",
+        }
+    }
+}
+
+impl std::fmt::Display for NetDriver {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// `[net]` section of the experiment config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetConfig {
+    pub driver: NetDriver,
+    /// Worker threads executing request handlers under the reactor driver
+    /// (the reactor thread itself never runs model code).
+    pub handlers: usize,
+    /// Close a connection with no traffic for this long (reactor only; the
+    /// blocking driver keeps idle connections parked in their reads).
+    pub idle_timeout_ms: u64,
+    /// Deadline for completing a started request frame/line (reactor only).
+    pub read_timeout_ms: u64,
+    /// Deadline for flushing a pending response (reactor only).
+    pub write_timeout_ms: u64,
+    /// Graceful-shutdown drain: in-flight requests get this long to finish
+    /// before connections are force-closed.
+    pub drain_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            driver: NetDriver::Threads,
+            handlers: 4,
+            idle_timeout_ms: 60_000,
+            read_timeout_ms: 10_000,
+            write_timeout_ms: 10_000,
+            drain_ms: 2_000,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Read `[net]` overrides from a parsed TOML doc — shared by the
+    /// experiment config and the cluster router config, so a single
+    /// `[net]` section configures whichever listener the process runs. An
+    /// unknown driver name warns and keeps the default rather than failing
+    /// the whole config.
+    pub fn from_doc(doc: &crate::config::TomlDoc) -> NetConfig {
+        let d = NetConfig::default();
+        let driver = match NetDriver::parse(&doc.str_or("net.driver", d.driver.as_str())) {
+            Ok(v) => v,
+            Err(e) => {
+                crate::warn!("{e}; using \"{}\"", d.driver);
+                d.driver
+            }
+        };
+        NetConfig {
+            driver,
+            handlers: doc.usize_or("net.handlers", d.handlers).max(1),
+            idle_timeout_ms: doc.usize_or("net.idle_timeout_ms", d.idle_timeout_ms as usize)
+                as u64,
+            read_timeout_ms: doc.usize_or("net.read_timeout_ms", d.read_timeout_ms as usize)
+                as u64,
+            write_timeout_ms: doc.usize_or("net.write_timeout_ms", d.write_timeout_ms as usize)
+                as u64,
+            drain_ms: doc.usize_or("net.drain_ms", d.drain_ms as usize) as u64,
+        }
+    }
+}
+
+/// What a [`Service`] wants done after dispatching one text line.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TextAction {
+    /// Send these bytes (possibly empty) and keep the connection.
+    Reply(String),
+    /// Close the connection without replying (the QUIT command).
+    Quit,
+}
+
+/// The protocol brain behind a listener. One impl per server flavor; both
+/// network drivers dispatch into the same impl, which is what guarantees
+/// byte-identical responses across drivers.
+pub trait Service: Send + Sync + 'static {
+    /// The `dim` word of the binary server hello, or `None` to refuse
+    /// binary connections entirely (the router does this while it cannot
+    /// reach any replica to learn the embedding width).
+    fn hello_dim(&self) -> Option<u32>;
+
+    /// Answer one text line (newline included when one was on the wire —
+    /// an EOF-truncated tail arrives without it, like `read_line` yields).
+    fn text(&self, line: &str) -> TextAction;
+
+    /// Answer one decoded binary frame by appending the response frame to
+    /// `out`; returns `true` when the connection must close after `out`
+    /// flushes (QUIT, hostile header).
+    fn binary(&self, req: BinRequest, out: &mut Vec<u8>) -> bool;
+
+    /// A transient accept(2) failure was survived (counted into STATS).
+    fn note_accept_error(&self);
+}
+
+/// Shared shutdown/drain state for one listener: the stop flag, the count
+/// of requests currently executing, and every live connection (so shutdown
+/// can unblock parked reader threads by closing their sockets).
+pub struct Lifecycle {
+    stop: AtomicBool,
+    busy: AtomicUsize,
+    next_id: AtomicUsize,
+    conns: Mutex<Vec<(usize, TcpStream)>>,
+}
+
+impl Lifecycle {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Arc<Lifecycle> {
+        Arc::new(Lifecycle {
+            stop: AtomicBool::new(false),
+            busy: AtomicUsize::new(0),
+            next_id: AtomicUsize::new(0),
+            conns: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Flip the stop flag; the driver observes it, stops accepting, drains,
+    /// and returns from `serve`.
+    pub fn begin_shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Requests currently executing (not merely connections held open).
+    /// The drain phase waits on this, not on idle connections — an idle
+    /// pooled client must not stall shutdown.
+    pub fn busy(&self) -> usize {
+        self.busy.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn begin_request(&self) {
+        self.busy.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn end_request(&self) {
+        self.busy.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Register a live connection for shutdown teardown. Returns a token
+    /// for [`untrack`](Self::untrack); `None` if the clone failed (the
+    /// connection still serves, it just cannot be force-closed early).
+    pub(crate) fn track(&self, stream: &TcpStream) -> Option<usize> {
+        let clone = stream.try_clone().ok()?;
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.conns.lock().expect("lifecycle lock poisoned").push((id, clone));
+        Some(id)
+    }
+
+    pub(crate) fn untrack(&self, id: usize) {
+        self.conns.lock().expect("lifecycle lock poisoned").retain(|(cid, _)| *cid != id);
+    }
+
+    /// Force-close every tracked connection (both directions), unblocking
+    /// any handler thread parked in a read on it.
+    pub(crate) fn close_all(&self) {
+        let conns = self.conns.lock().expect("lifecycle lock poisoned");
+        for (_, stream) in conns.iter() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// Run `listener` on the configured driver until `lifecycle` begins
+/// shutdown, then drain and return. The listener must already be in
+/// nonblocking mode for both drivers (the accept loop polls the stop flag).
+pub fn serve(
+    listener: TcpListener,
+    svc: Arc<dyn Service>,
+    cfg: &NetConfig,
+    lifecycle: Arc<Lifecycle>,
+) {
+    match cfg.driver {
+        NetDriver::Threads => threads::serve(listener, svc, cfg, lifecycle),
+        NetDriver::Epoll => {
+            #[cfg(unix)]
+            reactor::serve(listener, svc, cfg, lifecycle);
+            #[cfg(not(unix))]
+            {
+                crate::warn!("net.driver = \"epoll\" unsupported on this platform; using threads");
+                threads::serve(listener, svc, cfg, lifecycle);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn driver_parses_and_round_trips() {
+        assert_eq!(NetDriver::parse("threads").unwrap(), NetDriver::Threads);
+        assert_eq!(NetDriver::parse("epoll").unwrap(), NetDriver::Epoll);
+        assert!(NetDriver::parse("tokio").is_err());
+        assert_eq!(NetDriver::parse(NetDriver::Epoll.as_str()).unwrap(), NetDriver::Epoll);
+        assert_eq!(format!("{}", NetDriver::Threads), "threads");
+    }
+
+    #[test]
+    fn lifecycle_tracks_busy_and_stop() {
+        let lc = Lifecycle::new();
+        assert!(!lc.stopping());
+        assert_eq!(lc.busy(), 0);
+        lc.begin_request();
+        lc.begin_request();
+        assert_eq!(lc.busy(), 2);
+        lc.end_request();
+        assert_eq!(lc.busy(), 1);
+        lc.begin_shutdown();
+        assert!(lc.stopping());
+    }
+
+    #[test]
+    fn lifecycle_untrack_removes_the_right_conn() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let b = TcpStream::connect(addr).unwrap();
+        let lc = Lifecycle::new();
+        let ta = lc.track(&a).unwrap();
+        let _tb = lc.track(&b).unwrap();
+        assert_eq!(lc.conns.lock().unwrap().len(), 2);
+        lc.untrack(ta);
+        assert_eq!(lc.conns.lock().unwrap().len(), 1);
+        lc.close_all();
+    }
+}

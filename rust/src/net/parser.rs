@@ -1,0 +1,268 @@
+//! Incremental request parsing for the event-loop driver.
+//!
+//! The blocking driver can lean on `Read::read_exact` / `read_line`; the
+//! reactor only ever has *whatever bytes have arrived so far*. These
+//! functions implement the same protocol grammar as the blocking readers in
+//! [`crate::serving::wire`] over a byte buffer, returning "incomplete"
+//! instead of blocking. Every decision that the blocking path takes (caps,
+//! hostile-header handling, UTF-8 failures, the line-length ceiling) is
+//! mirrored here so the two drivers answer byte-identically; the shared
+//! request type ([`wire::BinRequest`]) and response builder live in `wire`
+//! itself, so a frame parsed here and a frame read blockingly dispatch into
+//! the exact same code.
+
+use crate::serving::wire::{self, BinRequest};
+
+/// First-byte protocol sniff over buffered bytes (mirrors the blocking
+/// listener's `fill_buf` + magic verification).
+#[derive(Debug, PartialEq, Eq)]
+pub enum Sniff {
+    /// Not enough bytes buffered to decide.
+    Incomplete,
+    /// Line-oriented text protocol; no bytes consumed.
+    Text,
+    /// Binary magic verified; 4 bytes consumed, server hello is owed.
+    Binary,
+    /// First byte was `MAGIC[0]` but the preamble mismatched: reply
+    /// `ERR bad magic\n` and close (same as the blocking driver).
+    BadMagic,
+}
+
+pub fn sniff(buf: &[u8]) -> Sniff {
+    if buf.is_empty() {
+        return Sniff::Incomplete;
+    }
+    if buf[0] != wire::MAGIC[0] {
+        return Sniff::Text;
+    }
+    if buf.len() < wire::MAGIC.len() {
+        return Sniff::Incomplete;
+    }
+    if buf[..wire::MAGIC.len()] == wire::MAGIC {
+        Sniff::Binary
+    } else {
+        Sniff::BadMagic
+    }
+}
+
+/// One step of text-line extraction.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineStep {
+    /// No complete line buffered yet.
+    Incomplete,
+    /// `max` bytes buffered with no newline: the stream is unparseable from
+    /// here (reply `ERR line too long\n`, close) — the blocking driver's
+    /// `take(MAX_LINE_BYTES)` cap, incrementally.
+    TooLong,
+    /// One complete line. `consumed` includes the newline; `text` is `None`
+    /// when the bytes are not UTF-8 (the blocking `read_line` fails the
+    /// same way: the connection closes without a reply).
+    Line { consumed: usize, text: Option<String> },
+}
+
+/// Extract the next newline-terminated line from `buf`, capped at `max`
+/// bytes (newline included).
+pub fn next_line(buf: &[u8], max: usize) -> LineStep {
+    match buf.iter().take(max).position(|&b| b == b'\n') {
+        Some(i) => LineStep::Line {
+            consumed: i + 1,
+            text: String::from_utf8(buf[..=i].to_vec()).ok(),
+        },
+        None if buf.len() >= max => LineStep::TooLong,
+        None => LineStep::Incomplete,
+    }
+}
+
+/// A partial line cut off by EOF: the blocking `read_line` still returns
+/// (and the dispatcher still processes) the unterminated tail, so the
+/// reactor does the same when the peer half-closes mid-line.
+pub fn eof_line(buf: &[u8]) -> LineStep {
+    LineStep::Line { consumed: buf.len(), text: String::from_utf8(buf.to_vec()).ok() }
+}
+
+/// Try to parse one complete binary request frame from the front of `buf`.
+///
+/// Returns `None` while the frame is still incomplete, otherwise the byte
+/// count consumed plus the request. Hostile count headers return
+/// [`BinRequest::Fatal`] after only the 8 header bytes — exactly like the
+/// blocking reader, the claimed payload is never waited for or allocated.
+pub fn next_frame(buf: &[u8]) -> Option<(usize, BinRequest)> {
+    if buf.len() < 8 {
+        return None;
+    }
+    let op = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    let count = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    if op == wire::OP_RELOAD {
+        if count == 0 || count > wire::MAX_PATH_BYTES {
+            return Some((8, BinRequest::Fatal));
+        }
+        let need = 8 + count as usize;
+        if buf.len() < need {
+            return None;
+        }
+        let path = String::from_utf8(buf[8..need].to_vec()).ok();
+        Some((need, BinRequest::Reload { path }))
+    } else if op == wire::OP_KNN_VEC {
+        if count == 0 || count > wire::MAX_IDS {
+            return Some((8, BinRequest::Fatal));
+        }
+        let need = 8 + 4 + count as usize * 4;
+        if buf.len() < need {
+            return None;
+        }
+        let k = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+        let query = buf[12..need]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Some((need, BinRequest::KnnVec { k, query }))
+    } else {
+        if count > wire::MAX_IDS {
+            return Some((8, BinRequest::Fatal));
+        }
+        let need = 8 + count as usize * 4;
+        if buf.len() < need {
+            return None;
+        }
+        let ids = buf[8..need]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Some((need, BinRequest::Ids { op, ids }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(op: u32, payload: &[u8], count: u32) -> Vec<u8> {
+        let mut f = Vec::new();
+        f.extend_from_slice(&op.to_le_bytes());
+        f.extend_from_slice(&count.to_le_bytes());
+        f.extend_from_slice(payload);
+        f
+    }
+
+    #[test]
+    fn sniff_distinguishes_text_binary_and_garbage() {
+        assert_eq!(sniff(b""), Sniff::Incomplete);
+        assert_eq!(sniff(b"L"), Sniff::Text);
+        assert_eq!(sniff(b"LOOKUP 1\n"), Sniff::Text);
+        assert_eq!(sniff(&wire::MAGIC[..1]), Sniff::Incomplete);
+        assert_eq!(sniff(&wire::MAGIC[..3]), Sniff::Incomplete);
+        assert_eq!(sniff(&wire::MAGIC), Sniff::Binary);
+        let mut bad = wire::MAGIC;
+        bad[2] ^= 0xFF;
+        assert_eq!(sniff(&bad), Sniff::BadMagic);
+    }
+
+    #[test]
+    fn lines_extract_incrementally() {
+        assert_eq!(next_line(b"STATS", 64), LineStep::Incomplete);
+        match next_line(b"STATS\nPING\n", 64) {
+            LineStep::Line { consumed, text } => {
+                assert_eq!(consumed, 6);
+                assert_eq!(text.as_deref(), Some("STATS\n"));
+            }
+            other => panic!("{other:?}"),
+        }
+        // Cap semantics: a newline at exactly the cap still parses; one past
+        // the cap is rejected, mirroring the blocking take(MAX) reader.
+        let mut at_cap = vec![b'x'; 7];
+        at_cap.push(b'\n');
+        assert!(matches!(next_line(&at_cap, 8), LineStep::Line { consumed: 8, .. }));
+        let mut past = vec![b'x'; 8];
+        past.push(b'\n');
+        assert_eq!(next_line(&past, 8), LineStep::TooLong);
+        assert_eq!(next_line(&[b'x'; 8], 8), LineStep::TooLong);
+        // Invalid UTF-8 in a complete line closes silently (text = None).
+        assert!(matches!(
+            next_line(&[0xC3, 0x28, b'\n'], 64),
+            LineStep::Line { consumed: 3, text: None }
+        ));
+    }
+
+    #[test]
+    fn frames_parse_only_when_complete() {
+        let mut f = frame(wire::OP_LOOKUP, &[], 2);
+        f.extend_from_slice(&7u32.to_le_bytes());
+        f.extend_from_slice(&9u32.to_le_bytes());
+        // Dribble: every strict prefix is incomplete, the full frame parses.
+        for cut in 0..f.len() {
+            assert!(next_frame(&f[..cut]).is_none(), "cut={cut}");
+        }
+        match next_frame(&f) {
+            Some((consumed, BinRequest::Ids { op, ids })) => {
+                assert_eq!(consumed, f.len());
+                assert_eq!(op, wire::OP_LOOKUP);
+                assert_eq!(ids, vec![7, 9]);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Pipelined: a second frame behind the first is untouched.
+        let mut two = f.clone();
+        two.extend_from_slice(&frame(wire::OP_STATS, &[], 0));
+        let (consumed, _) = next_frame(&two).unwrap();
+        assert_eq!(consumed, f.len());
+        assert!(matches!(
+            next_frame(&two[consumed..]),
+            Some((8, BinRequest::Ids { op: wire::OP_STATS, .. }))
+        ));
+    }
+
+    #[test]
+    fn hostile_headers_are_fatal_without_waiting_for_payload() {
+        // 4 GiB id count: fatal after just the header, nothing allocated.
+        assert!(matches!(
+            next_frame(&frame(wire::OP_LOOKUP, &[], u32::MAX)),
+            Some((8, BinRequest::Fatal))
+        ));
+        assert!(matches!(
+            next_frame(&frame(wire::OP_RELOAD, &[], 0)),
+            Some((8, BinRequest::Fatal))
+        ));
+        assert!(matches!(
+            next_frame(&frame(wire::OP_RELOAD, &[], wire::MAX_PATH_BYTES + 1)),
+            Some((8, BinRequest::Fatal))
+        ));
+        assert!(matches!(
+            next_frame(&frame(wire::OP_KNN_VEC, &[], 0)),
+            Some((8, BinRequest::Fatal))
+        ));
+        assert!(matches!(
+            next_frame(&frame(wire::OP_KNN_VEC, &[], wire::MAX_IDS + 1)),
+            Some((8, BinRequest::Fatal))
+        ));
+    }
+
+    #[test]
+    fn reload_and_knn_vec_payloads_decode() {
+        let f = frame(wire::OP_RELOAD, b"/tmp/m.snap", 11);
+        match next_frame(&f) {
+            Some((19, BinRequest::Reload { path })) => {
+                assert_eq!(path.as_deref(), Some("/tmp/m.snap"))
+            }
+            other => panic!("{other:?}"),
+        }
+        // Non-UTF-8 path: request parses, path is None (BAD_FRAME downstream).
+        let f = frame(wire::OP_RELOAD, &[0xFF, 0xFE], 2);
+        assert!(matches!(next_frame(&f), Some((10, BinRequest::Reload { path: None }))));
+
+        let mut payload = 3u32.to_le_bytes().to_vec();
+        for x in [1.0f32, -2.5] {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let f = frame(wire::OP_KNN_VEC, &payload, 2);
+        for cut in 0..f.len() {
+            assert!(next_frame(&f[..cut]).is_none(), "cut={cut}");
+        }
+        match next_frame(&f) {
+            Some((20, BinRequest::KnnVec { k, query })) => {
+                assert_eq!(k, 3);
+                assert_eq!(query, vec![1.0, -2.5]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Readiness polling behind one small API: epoll on Linux, `poll(2)` on
+//! other unix platforms. Level-triggered semantics on both — the reactor
+//! reads until `WouldBlock`, so a level-triggered wakeup it does not fully
+//! drain simply re-fires, which is impossible to get wrong in the way
+//! edge-triggered wakeups are.
+
+use super::sys;
+use std::io;
+
+#[cfg(unix)]
+use std::os::unix::io::RawFd;
+
+/// One readiness report. `token` is the caller's identifier from
+/// [`Poller::register`] (the reactor uses connection-slab slots).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up or the socket errored; the read path will observe the
+    /// EOF/error, the flag only guarantees the wakeup is not silently empty.
+    pub hangup: bool,
+}
+
+/// How many kernel events one `wait` call can surface.
+const WAIT_BATCH: usize = 1024;
+
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    epfd: RawFd,
+    buf: Vec<sys::raw::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        let epfd = unsafe { sys::raw::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller {
+            epfd,
+            buf: vec![sys::raw::EpollEvent { events: 0, data: 0 }; WAIT_BATCH],
+        })
+    }
+
+    fn ctl(&mut self, op: i32, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+        let mut events = 0u32;
+        if read {
+            events |= sys::EPOLLIN;
+        }
+        if write {
+            events |= sys::EPOLLOUT;
+        }
+        let mut ev = sys::raw::EpollEvent { events, data: token as u64 };
+        let rc = unsafe { sys::raw::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, read, write)
+    }
+
+    /// Change the interest set of an already-registered fd.
+    pub fn rearm(&mut self, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, read, write)
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, false, false)
+    }
+
+    /// Block up to `timeout_ms` (-1 = forever) and append readiness reports
+    /// to `out`. A signal interruption returns cleanly with no events.
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        let n = unsafe {
+            sys::raw::epoll_wait(
+                self.epfd,
+                self.buf.as_mut_ptr(),
+                self.buf.len() as i32,
+                timeout_ms,
+            )
+        };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for &ev in self.buf.iter().take(n as usize) {
+            // `ev` is a copy out of the (possibly packed) struct.
+            let mask = ev.events;
+            let hangup = mask & (sys::EPOLLHUP | sys::EPOLLERR) != 0;
+            out.push(Event {
+                token: ev.data as usize,
+                readable: mask & sys::EPOLLIN != 0 || hangup,
+                writable: mask & sys::EPOLLOUT != 0,
+                hangup,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe { sys::raw::close(self.epfd) };
+    }
+}
+
+/// `poll(2)` fallback for non-Linux unix: the registration table lives in
+/// userspace and the pollfd array is rebuilt per wait. O(n) per call — fine
+/// for the fallback role; Linux (CI, production) takes the epoll path.
+#[cfg(all(unix, not(target_os = "linux")))]
+pub struct Poller {
+    reg: Vec<(RawFd, usize, bool, bool)>,
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { reg: Vec::new() })
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+        self.reg.push((fd, token, read, write));
+        Ok(())
+    }
+
+    pub fn rearm(&mut self, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+        match self.reg.iter_mut().find(|r| r.0 == fd) {
+            Some(r) => {
+                *r = (fd, token, read, write);
+                Ok(())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.reg.retain(|r| r.0 != fd);
+        Ok(())
+    }
+
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        let mut fds: Vec<sys::raw::PollFd> = self
+            .reg
+            .iter()
+            .map(|&(fd, _, read, write)| {
+                let mut events = 0i16;
+                if read {
+                    events |= sys::POLLIN;
+                }
+                if write {
+                    events |= sys::POLLOUT;
+                }
+                sys::raw::PollFd { fd, events, revents: 0 }
+            })
+            .collect();
+        let n = unsafe { sys::raw::poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for (pfd, &(_, token, _, _)) in fds.iter().zip(&self.reg) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            let hangup = pfd.revents & (sys::POLLHUP | sys::POLLERR) != 0;
+            out.push(Event {
+                token,
+                readable: pfd.revents & sys::POLLIN != 0 || hangup,
+                writable: pfd.revents & sys::POLLOUT != 0,
+                hangup,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn readable_fires_only_after_data_arrives() {
+        let (mut a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        let mut p = Poller::new().unwrap();
+        p.register(b.as_raw_fd(), 7, true, false).unwrap();
+
+        let mut events = Vec::new();
+        p.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "no data yet: {events:?}");
+
+        a.write_all(b"x").unwrap();
+        p.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        p.deregister(b.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn writable_interest_rearms() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let mut p = Poller::new().unwrap();
+        p.register(a.as_raw_fd(), 3, true, false).unwrap();
+        // A fresh socket with write interest reports writable immediately.
+        p.rearm(a.as_raw_fd(), 3, true, true).unwrap();
+        let mut events = Vec::new();
+        p.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.writable), "{events:?}");
+        // Dropping write interest silences it again.
+        p.rearm(a.as_raw_fd(), 3, true, false).unwrap();
+        events.clear();
+        p.wait(&mut events, 0).unwrap();
+        assert!(events.iter().all(|e| !e.writable), "{events:?}");
+    }
+
+    #[test]
+    fn hangup_is_surfaced_as_readable() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let mut p = Poller::new().unwrap();
+        p.register(b.as_raw_fd(), 9, true, false).unwrap();
+        drop(a);
+        let mut events = Vec::new();
+        p.wait(&mut events, 1000).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 9 && e.readable),
+            "peer close must wake the read path: {events:?}"
+        );
+    }
+}

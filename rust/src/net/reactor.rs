@@ -1,0 +1,859 @@
+//! Readiness-driven event-loop driver.
+//!
+//! One reactor thread (the caller of [`serve`]) multiplexes the listener and
+//! every connection over one [`Poller`](super::poll::Poller): nonblocking
+//! sockets, level-triggered readiness, incremental protocol parsing
+//! ([`super::parser`]), `writev`-batched response flushes, and deadlines on
+//! a [`TimerWheel`](super::timer::TimerWheel). Request *execution* (model
+//! code, snapshot reloads) happens on a small handler pool, never on the
+//! reactor thread — a slow KNN cannot stall accepts or other connections.
+//!
+//! ## Pipelining and ordering
+//!
+//! Binary frames are parsed as fast as they arrive and dispatched
+//! concurrently to the handler pool; every request carries a per-connection
+//! sequence number and completions are reassembled in sequence order before
+//! any byte is written, so pipelined responses always come back in request
+//! order. Parsing stops at a terminal frame (QUIT, hostile header) — bytes
+//! pipelined *behind* a QUIT are never executed, exactly like the blocking
+//! driver which stops reading after it. Text lines are deliberately *not*
+//! pipelined (one in flight per connection): the blocking driver reads the
+//! next line only after answering the previous one, and a text QUIT must
+//! discard — not execute — whatever follows it in the buffer.
+//!
+//! ## Connection state machine
+//!
+//! ```text
+//!   accept → Sniff ──first byte── Text ──line──▶ dispatch ─▶ reply ─┐
+//!              │                   ▲◀──────────── (one at a time) ──┘
+//!              │MAGIC
+//!              ▼
+//!            Binary ──frame──▶ dispatch (pipelined, seq-ordered replies)
+//!              │
+//!              └─ QUIT / hostile header / bad magic ▶ Discard → close
+//! ```
+//!
+//! Each connection also carries one deadline (idle, read, or write — see
+//! `schedule_deadline`); expiry closes it.
+
+use super::parser::{self, LineStep, Sniff};
+use super::poll::{Event, Poller};
+use super::sys;
+use super::timer::TimerWheel;
+use super::{Lifecycle, NetConfig, Service, TextAction, MAX_LINE_BYTES};
+use crate::serving::wire::{self, BinRequest};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Poller token of the accept socket.
+const LISTENER: usize = usize::MAX;
+/// Poller token of the handler-pool wakeup pipe.
+const WAKER: usize = usize::MAX - 1;
+/// Timer-wheel granularity.
+const TICK_MS: u64 = 50;
+/// Slots on the wheel (one lap = ~51 s; longer deadlines survive laps).
+const WHEEL_SLOTS: usize = 1024;
+
+/// One unit of work shipped to the handler pool.
+struct Task {
+    conn: usize,
+    gen: u64,
+    seq: u64,
+    req: Req,
+}
+
+enum Req {
+    Text(String),
+    Binary(BinRequest),
+}
+
+/// One finished request coming back from the pool.
+struct Done {
+    conn: usize,
+    gen: u64,
+    seq: u64,
+    bytes: Vec<u8>,
+    close: bool,
+}
+
+/// Reactor ⇄ handler-pool rendezvous.
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    done: Mutex<Vec<Done>>,
+    stop: AtomicBool,
+    /// Write half of the wakeup pipe; one byte per completion batch tells
+    /// `epoll_wait` to wake early. Nonblocking: a full pipe already means a
+    /// wakeup is pending.
+    waker: Mutex<UnixStream>,
+}
+
+impl Shared {
+    fn wake(&self) {
+        let mut w = self.waker.lock().expect("waker lock poisoned");
+        let _ = w.write(&[1u8]);
+    }
+}
+
+fn worker(shared: Arc<Shared>, svc: Arc<dyn Service>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().expect("task queue poisoned");
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .expect("task queue poisoned");
+                q = guard;
+            }
+        };
+        let mut bytes = Vec::new();
+        let close = match task.req {
+            Req::Text(line) => match svc.text(&line) {
+                TextAction::Reply(r) => {
+                    bytes = r.into_bytes();
+                    false
+                }
+                TextAction::Quit => true,
+            },
+            Req::Binary(req) => svc.binary(req, &mut bytes),
+        };
+        shared
+            .done
+            .lock()
+            .expect("done list poisoned")
+            .push(Done { conn: task.conn, gen: task.gen, seq: task.seq, bytes, close });
+        shared.wake();
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Sniff,
+    Text,
+    Binary,
+    /// Terminal: remaining input is read and dropped, pending output still
+    /// flushes, then the connection closes.
+    Discard,
+}
+
+struct Conn {
+    stream: TcpStream,
+    fd: RawFd,
+    /// Guards stale completions/timers after this slab slot is reused.
+    gen: u64,
+    phase: Phase,
+    inbuf: Vec<u8>,
+    eof: bool,
+    /// Pending response bytes, flushed with `writev` on writability.
+    outq: VecDeque<Vec<u8>>,
+    /// Bytes of `outq[0]` already written.
+    out_head: usize,
+    /// Next sequence number to assign to a dispatched request.
+    next_seq: u64,
+    /// Next sequence number eligible to be written out.
+    next_deliver: u64,
+    /// Out-of-order completions parked until their turn (pipelining).
+    ready: BTreeMap<u64, (Vec<u8>, bool)>,
+    /// Requests dispatched but not yet delivered.
+    inflight: usize,
+    close_after_flush: bool,
+    /// Current poller interest, to avoid redundant `EPOLL_CTL_MOD`s.
+    int_read: bool,
+    int_write: bool,
+    /// Matches the newest wheel entry; older entries are stale.
+    timer_gen: u64,
+}
+
+impl Conn {
+    fn queue_out(&mut self, bytes: Vec<u8>) {
+        if !bytes.is_empty() {
+            self.outq.push_back(bytes);
+        }
+    }
+
+    fn out_empty(&self) -> bool {
+        self.outq.is_empty()
+    }
+}
+
+struct Reactor {
+    poller: Poller,
+    listener: Option<TcpListener>,
+    slab: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    wheel: TimerWheel,
+    epoch: Instant,
+    next_gen: u64,
+    next_timer_gen: u64,
+    /// Tick until which accepts pause after a transient failure.
+    accept_pause_until: u64,
+    cfg: NetConfig,
+}
+
+impl Reactor {
+    fn tick(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64 / TICK_MS
+    }
+
+    fn live_conns(&self) -> usize {
+        self.slab.iter().filter(|c| c.is_some()).count()
+    }
+
+    fn accept_burst(&mut self, svc: &dyn Service) {
+        if self.tick() < self.accept_pause_until {
+            return;
+        }
+        loop {
+            let Some(listener) = self.listener.as_ref() else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let fd = stream.as_raw_fd();
+                    self.next_gen += 1;
+                    let conn = Conn {
+                        stream,
+                        fd,
+                        gen: self.next_gen,
+                        phase: Phase::Sniff,
+                        inbuf: Vec::new(),
+                        eof: false,
+                        outq: VecDeque::new(),
+                        out_head: 0,
+                        next_seq: 0,
+                        next_deliver: 0,
+                        ready: BTreeMap::new(),
+                        inflight: 0,
+                        close_after_flush: false,
+                        int_read: true,
+                        int_write: false,
+                        timer_gen: 0,
+                    };
+                    let token = match self.free.pop() {
+                        Some(t) => {
+                            self.slab[t] = Some(conn);
+                            t
+                        }
+                        None => {
+                            self.slab.push(Some(conn));
+                            self.slab.len() - 1
+                        }
+                    };
+                    if self.poller.register(fd, token, true, false).is_err() {
+                        self.slab[token] = None;
+                        self.free.push(token);
+                        continue;
+                    }
+                    self.schedule_deadline(token);
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(ref e) if sys::accept_transient(e) => {
+                    svc.note_accept_error();
+                    crate::warn!("transient accept error (retrying): {e}");
+                    self.accept_pause_until = self.tick() + 1;
+                    return;
+                }
+                Err(e) => {
+                    svc.note_accept_error();
+                    crate::warn!("accept error (retrying): {e}");
+                    self.accept_pause_until = self.tick() + 1;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn close_conn(&mut self, token: usize) {
+        if let Some(conn) = self.slab[token].take() {
+            let _ = self.poller.deregister(conn.fd);
+            self.free.push(token);
+            // `conn.stream` drops here, closing the socket.
+        }
+    }
+
+    /// Pick and arm the connection's single deadline: flushing a response →
+    /// write deadline; mid-frame/mid-line with nothing executing → read
+    /// deadline; otherwise idle.
+    fn schedule_deadline(&mut self, token: usize) {
+        let now = self.tick();
+        let Some(conn) = self.slab[token].as_mut() else { return };
+        let ms = if !conn.out_empty() {
+            self.cfg.write_timeout_ms
+        } else if !conn.inbuf.is_empty() && conn.inflight == 0 {
+            self.cfg.read_timeout_ms
+        } else {
+            self.cfg.idle_timeout_ms
+        };
+        self.next_timer_gen += 1;
+        conn.timer_gen = self.next_timer_gen;
+        self.wheel.schedule(now + (ms / TICK_MS).max(1), token, conn.timer_gen);
+    }
+
+    /// Drain the socket. Returns false when the connection died.
+    fn read_conn(&mut self, token: usize) -> bool {
+        let Some(conn) = self.slab[token].as_mut() else { return true };
+        // Text backpressure: while a line executes, leave bytes in the
+        // kernel buffer (interest is also dropped; see `rearm`).
+        if conn.phase == Phase::Text && conn.inflight > 0 {
+            return true;
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.eof = true;
+                    return true;
+                }
+                Ok(n) => {
+                    if conn.phase != Phase::Discard {
+                        conn.inbuf.extend_from_slice(&chunk[..n]);
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Parse whatever is buffered, dispatching complete requests. Returns
+    /// false when the connection must close *now*, unflushed (the blocking
+    /// driver's silent-close cases).
+    fn parse_conn(
+        &mut self,
+        token: usize,
+        shared: &Shared,
+        svc: &dyn Service,
+        lifecycle: &Lifecycle,
+    ) -> bool {
+        loop {
+            let Some(conn) = self.slab[token].as_mut() else { return true };
+            match conn.phase {
+                Phase::Sniff => match parser::sniff(&conn.inbuf) {
+                    Sniff::Incomplete => {
+                        if conn.eof {
+                            if conn.inbuf.is_empty() {
+                                return false;
+                            }
+                            // A MAGIC prefix cut off by EOF: the blocking
+                            // driver's magic read_exact fails the same way.
+                            conn.queue_out(b"ERR bad magic\n".to_vec());
+                            conn.close_after_flush = true;
+                            conn.phase = Phase::Discard;
+                        }
+                        return true;
+                    }
+                    Sniff::Text => conn.phase = Phase::Text,
+                    Sniff::Binary => {
+                        conn.inbuf.drain(..wire::MAGIC.len());
+                        let Some(dim) = svc.hello_dim() else { return false };
+                        let mut hello = Vec::with_capacity(8);
+                        hello.extend_from_slice(&wire::MAGIC);
+                        hello.extend_from_slice(&dim.to_le_bytes());
+                        conn.queue_out(hello);
+                        conn.phase = Phase::Binary;
+                    }
+                    Sniff::BadMagic => {
+                        conn.queue_out(b"ERR bad magic\n".to_vec());
+                        conn.close_after_flush = true;
+                        conn.phase = Phase::Discard;
+                    }
+                },
+                Phase::Text => {
+                    if conn.inflight > 0 {
+                        return true; // one text line in flight at a time
+                    }
+                    match parser::next_line(&conn.inbuf, MAX_LINE_BYTES) {
+                        LineStep::Incomplete => {
+                            if conn.eof && !conn.inbuf.is_empty() {
+                                // EOF-truncated tail: read_line would still
+                                // yield it, so dispatch it.
+                                let LineStep::Line { text, .. } = parser::eof_line(&conn.inbuf)
+                                else {
+                                    return false;
+                                };
+                                conn.inbuf.clear();
+                                let Some(text) = text else { return false };
+                                dispatch(conn, token, shared, lifecycle, Req::Text(text));
+                            }
+                            return true;
+                        }
+                        LineStep::TooLong => {
+                            conn.queue_out(b"ERR line too long\n".to_vec());
+                            conn.close_after_flush = true;
+                            conn.phase = Phase::Discard;
+                        }
+                        LineStep::Line { consumed, text } => {
+                            conn.inbuf.drain(..consumed);
+                            // Invalid UTF-8 closes silently, like the
+                            // blocking read_line erroring out.
+                            let Some(text) = text else { return false };
+                            dispatch(conn, token, shared, lifecycle, Req::Text(text));
+                        }
+                    }
+                }
+                Phase::Binary => match parser::next_frame(&conn.inbuf) {
+                    None => return true,
+                    Some((consumed, req)) => {
+                        conn.inbuf.drain(..consumed);
+                        let terminal = req.is_terminal();
+                        dispatch(conn, token, shared, lifecycle, Req::Binary(req));
+                        if terminal {
+                            conn.phase = Phase::Discard;
+                        }
+                    }
+                },
+                Phase::Discard => {
+                    conn.inbuf.clear();
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// writev as much pending output as the socket takes. Returns false
+    /// when the connection died.
+    fn flush_conn(&mut self, token: usize) -> bool {
+        let Some(conn) = self.slab[token].as_mut() else { return true };
+        while !conn.outq.is_empty() {
+            let mut iov = Vec::with_capacity(conn.outq.len().min(sys::MAX_IOV));
+            for (i, buf) in conn.outq.iter().enumerate().take(sys::MAX_IOV) {
+                let off = if i == 0 { conn.out_head } else { 0 };
+                iov.push(sys::raw::IoVec { base: buf[off..].as_ptr(), len: buf.len() - off });
+            }
+            match sys::writev(conn.fd, &iov) {
+                Ok(0) => return false,
+                Ok(mut n) => {
+                    while n > 0 {
+                        let avail = conn.outq[0].len() - conn.out_head;
+                        if n >= avail {
+                            conn.outq.pop_front();
+                            conn.out_head = 0;
+                            n -= avail;
+                        } else {
+                            conn.out_head += n;
+                            n = 0;
+                        }
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+
+    /// Post-activity bookkeeping: finish EOF, flush, close when drained,
+    /// recompute poller interest, rearm the deadline.
+    fn settle(&mut self, token: usize) {
+        {
+            let Some(conn) = self.slab[token].as_mut() else { return };
+            // EOF with nothing left to execute: whatever is buffered is an
+            // incomplete frame the blocking driver would also abandon.
+            if conn.eof && conn.inflight == 0 {
+                conn.close_after_flush = true;
+            }
+        }
+        if !self.flush_conn(token) {
+            self.close_conn(token);
+            return;
+        }
+        let Some(conn) = self.slab[token].as_mut() else { return };
+        if conn.out_empty() && conn.close_after_flush && conn.inflight == 0 {
+            self.close_conn(token);
+            return;
+        }
+        let want_read = !(conn.phase == Phase::Text && conn.inflight > 0);
+        let want_write = !conn.out_empty();
+        if want_read != conn.int_read || want_write != conn.int_write {
+            conn.int_read = want_read;
+            conn.int_write = want_write;
+            let (fd, r, w) = (conn.fd, want_read, want_write);
+            if self.poller.rearm(fd, token, r, w).is_err() {
+                self.close_conn(token);
+                return;
+            }
+        }
+        self.schedule_deadline(token);
+    }
+
+    fn handle_conn_event(
+        &mut self,
+        ev: Event,
+        shared: &Shared,
+        svc: &dyn Service,
+        lifecycle: &Lifecycle,
+    ) {
+        let token = ev.token;
+        if self.slab.get(token).map(|c| c.is_none()).unwrap_or(true) {
+            return; // already closed this cycle
+        }
+        if ev.readable && !self.read_conn(token) {
+            self.close_conn(token);
+            return;
+        }
+        if !self.parse_conn(token, shared, svc, lifecycle) {
+            self.close_conn(token);
+            return;
+        }
+        self.settle(token);
+    }
+
+    /// Deliver finished requests in per-connection sequence order.
+    fn process_done(&mut self, shared: &Shared, svc: &dyn Service, lifecycle: &Lifecycle) {
+        let batch: Vec<Done> =
+            std::mem::take(&mut *shared.done.lock().expect("done list poisoned"));
+        let mut touched = Vec::new();
+        for done in batch {
+            lifecycle.end_request();
+            let Some(conn) = self.slab.get_mut(done.conn).and_then(Option::as_mut) else {
+                continue; // connection died while the request executed
+            };
+            if conn.gen != done.gen {
+                continue; // slot was reused: completion belongs to a dead conn
+            }
+            conn.ready.insert(done.seq, (done.bytes, done.close));
+            while let Some((bytes, close)) = conn.ready.remove(&conn.next_deliver) {
+                conn.next_deliver += 1;
+                conn.inflight -= 1;
+                conn.queue_out(bytes);
+                if close {
+                    conn.close_after_flush = true;
+                    conn.phase = Phase::Discard;
+                }
+            }
+            if !touched.contains(&done.conn) {
+                touched.push(done.conn);
+            }
+        }
+        for token in touched {
+            // A text connection may have the next line already buffered.
+            if !self.parse_conn(token, shared, svc, lifecycle) {
+                self.close_conn(token);
+                continue;
+            }
+            self.settle(token);
+        }
+    }
+
+    fn fire_timers(&mut self, due: &mut Vec<(usize, u64)>) {
+        due.clear();
+        let now = self.tick();
+        self.wheel.advance(now, due);
+        for &(token, tgen) in due.iter() {
+            let expired = self.slab.get(token).and_then(Option::as_ref).map(|c| {
+                // Only the *newest* deadline counts; rearms invalidate
+                // older wheel entries lazily.
+                c.timer_gen == tgen
+            });
+            if expired == Some(true) {
+                crate::debug!("conn deadline expired; closing");
+                self.close_conn(token);
+            }
+        }
+    }
+}
+
+fn dispatch(conn: &mut Conn, token: usize, shared: &Shared, lifecycle: &Lifecycle, req: Req) {
+    let seq = conn.next_seq;
+    conn.next_seq += 1;
+    conn.inflight += 1;
+    lifecycle.begin_request();
+    shared
+        .queue
+        .lock()
+        .expect("task queue poisoned")
+        .push_back(Task { conn: token, gen: conn.gen, seq, req });
+    shared.cv.notify_one();
+}
+
+/// Run the event loop until `lifecycle` begins shutdown, then drain
+/// in-flight requests (up to `cfg.drain_ms`), close every connection, and
+/// join the handler pool. Falls back to the blocking driver if no poller
+/// can be created.
+pub fn serve(
+    listener: TcpListener,
+    svc: Arc<dyn Service>,
+    cfg: &NetConfig,
+    lifecycle: Arc<Lifecycle>,
+) {
+    let poller = match Poller::new() {
+        Ok(p) => p,
+        Err(e) => {
+            crate::warn!("event-loop poller unavailable ({e}); falling back to threads driver");
+            return super::threads::serve(listener, svc, cfg, lifecycle);
+        }
+    };
+    listener.set_nonblocking(true).ok();
+    let Ok((waker_rx, waker_tx)) = UnixStream::pair() else {
+        crate::warn!("wakeup pipe unavailable; falling back to threads driver");
+        return super::threads::serve(listener, svc, cfg, lifecycle);
+    };
+    waker_rx.set_nonblocking(true).ok();
+    waker_tx.set_nonblocking(true).ok();
+
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        done: Mutex::new(Vec::new()),
+        stop: AtomicBool::new(false),
+        waker: Mutex::new(waker_tx),
+    });
+    let workers: Vec<_> = (0..cfg.handlers.max(1))
+        .map(|_| {
+            let shared = shared.clone();
+            let svc = svc.clone();
+            std::thread::spawn(move || worker(shared, svc))
+        })
+        .collect();
+
+    let mut r = Reactor {
+        poller,
+        listener: Some(listener),
+        slab: Vec::new(),
+        free: Vec::new(),
+        wheel: TimerWheel::new(WHEEL_SLOTS),
+        epoch: Instant::now(),
+        next_gen: 0,
+        next_timer_gen: 0,
+        accept_pause_until: 0,
+        cfg: *cfg,
+    };
+    if let Some(l) = r.listener.as_ref() {
+        if r.poller.register(l.as_raw_fd(), LISTENER, true, false).is_err() {
+            crate::warn!("cannot register listener; falling back to threads driver");
+            let listener = r.listener.take().expect("listener present");
+            shared.stop.store(true, Ordering::SeqCst);
+            shared.cv.notify_all();
+            for w in workers {
+                let _ = w.join();
+            }
+            return super::threads::serve(listener, svc, cfg, lifecycle);
+        }
+    }
+    r.poller.register(waker_rx.as_raw_fd(), WAKER, true, false).ok();
+
+    let mut events: Vec<Event> = Vec::new();
+    let mut due: Vec<(usize, u64)> = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        r.fire_timers(&mut due);
+
+        if lifecycle.stopping() {
+            if let Some(l) = r.listener.take() {
+                let _ = r.poller.deregister(l.as_raw_fd());
+                drop(l); // refuse new connections from here on
+                drain_deadline = Some(Instant::now() + Duration::from_millis(r.cfg.drain_ms));
+                // Idle connections don't gate the drain: close them now.
+                let idle: Vec<usize> = r
+                    .slab
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(t, c)| {
+                        let c = c.as_ref()?;
+                        (c.inflight == 0 && c.out_empty()).then_some(t)
+                    })
+                    .collect();
+                for t in idle {
+                    r.close_conn(t);
+                }
+            }
+            let expired = drain_deadline.map(|d| Instant::now() >= d).unwrap_or(true);
+            if r.live_conns() == 0 || expired {
+                break;
+            }
+        }
+
+        events.clear();
+        if let Err(e) = r.poller.wait(&mut events, 10) {
+            crate::warn!("poller wait failed: {e}");
+            break;
+        }
+        for &ev in events.iter() {
+            match ev.token {
+                LISTENER => r.accept_burst(&*svc),
+                WAKER => {
+                    let mut sink = [0u8; 64];
+                    while matches!((&waker_rx).read(&mut sink), Ok(n) if n > 0) {}
+                }
+                _ => r.handle_conn_event(ev, &shared, &*svc, &lifecycle),
+            }
+        }
+        r.process_done(&shared, &*svc, &lifecycle);
+    }
+
+    // Force-close whatever the drain left behind, then stop the pool.
+    let remaining: Vec<usize> =
+        (0..r.slab.len()).filter(|&t| r.slab[t].is_some()).collect();
+    if !remaining.is_empty() {
+        crate::warn!("drain deadline expired with {} open connections", remaining.len());
+    }
+    for t in remaining {
+        r.close_conn(t);
+    }
+    shared.stop.store(true, Ordering::SeqCst);
+    shared.cv.notify_all();
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+    use std::sync::atomic::AtomicU64;
+
+    /// Minimal protocol brain: text echoes, binary echoes op/ids back as
+    /// `status=op count=len` — enough to exercise ordering and lifecycle.
+    struct EchoSvc {
+        accept_errors: AtomicU64,
+    }
+
+    impl Service for EchoSvc {
+        fn hello_dim(&self) -> Option<u32> {
+            Some(4)
+        }
+
+        fn text(&self, line: &str) -> TextAction {
+            let t = line.trim();
+            if t == "QUIT" {
+                TextAction::Quit
+            } else if t.is_empty() {
+                TextAction::Reply(String::new())
+            } else {
+                TextAction::Reply(format!("echo {t}\n"))
+            }
+        }
+
+        fn binary(&self, req: BinRequest, out: &mut Vec<u8>) -> bool {
+            match req {
+                BinRequest::Fatal => {
+                    out.extend_from_slice(&wire::STATUS_BAD_FRAME.to_le_bytes());
+                    out.extend_from_slice(&0u32.to_le_bytes());
+                    true
+                }
+                BinRequest::Ids { op: wire::OP_QUIT, .. } => true,
+                BinRequest::Ids { op, ids } => {
+                    out.extend_from_slice(&op.to_le_bytes());
+                    out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+                    false
+                }
+                _ => {
+                    out.extend_from_slice(&wire::STATUS_OK.to_le_bytes());
+                    out.extend_from_slice(&0u32.to_le_bytes());
+                    false
+                }
+            }
+        }
+
+        fn note_accept_error(&self) {
+            self.accept_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn start() -> (String, Arc<Lifecycle>, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let lifecycle = Lifecycle::new();
+        let lc = lifecycle.clone();
+        let svc: Arc<dyn Service> = Arc::new(EchoSvc { accept_errors: AtomicU64::new(0) });
+        let cfg = NetConfig { handlers: 2, drain_ms: 500, ..NetConfig::default() };
+        let h = std::thread::spawn(move || serve(listener, svc, &cfg, lc));
+        (addr, lifecycle, h)
+    }
+
+    #[test]
+    fn text_round_trip_and_graceful_shutdown() {
+        let (addr, lifecycle, h) = start();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"hello\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line, "echo hello\n");
+        s.write_all(b"QUIT\n").unwrap();
+        lifecycle.begin_shutdown();
+        h.join().unwrap(); // serve() returns: no leaked reactor/handlers
+    }
+
+    #[test]
+    fn pipelined_binary_frames_answer_in_order() {
+        let (addr, lifecycle, h) = start();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::MAGIC).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut hello = [0u8; 8];
+        r.read_exact(&mut hello).unwrap();
+        assert_eq!(&hello[..4], &wire::MAGIC);
+        // Three frames in one write; replies must come back 1-id, 2-id,
+        // 3-id in that order regardless of handler scheduling.
+        let mut burst = Vec::new();
+        for n in 1u32..=3 {
+            burst.extend_from_slice(&wire::OP_LOOKUP.to_le_bytes());
+            burst.extend_from_slice(&n.to_le_bytes());
+            for id in 0..n {
+                burst.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        s.write_all(&burst).unwrap();
+        for n in 1u32..=3 {
+            let mut resp = [0u8; 8];
+            r.read_exact(&mut resp).unwrap();
+            assert_eq!(u32::from_le_bytes(resp[..4].try_into().unwrap()), wire::OP_LOOKUP);
+            assert_eq!(u32::from_le_bytes(resp[4..].try_into().unwrap()), n, "order broke");
+        }
+        lifecycle.begin_shutdown();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dribbled_bytes_parse_once_complete() {
+        let (addr, lifecycle, h) = start();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        for b in b"ST" {
+            s.write_all(&[*b]).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        s.write_all(b"ATS\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line, "echo STATS\n");
+        lifecycle.begin_shutdown();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let (addr, lifecycle, h) = start();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut bad = wire::MAGIC;
+        bad[1] ^= 0xFF;
+        s.write_all(&bad).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line, "ERR bad magic\n");
+        // Connection is closed after the error line.
+        let mut rest = String::new();
+        assert_eq!(r.read_line(&mut rest).unwrap(), 0);
+        lifecycle.begin_shutdown();
+        h.join().unwrap();
+    }
+}

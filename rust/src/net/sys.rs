@@ -1,0 +1,193 @@
+//! Raw syscall bindings for the event-loop serving core.
+//!
+//! Vendored extern-C declarations in the same spirit as the mmap wrapper in
+//! `snapshot/reader.rs`: no external crates, every `unsafe` confined to this
+//! file behind safe wrappers that translate `-1` into
+//! [`io::Error::last_os_error`]. Only what the reactor actually needs is
+//! bound — epoll (Linux), `poll(2)` (portable unix fallback), `writev` for
+//! batched response flushes, and `{get,set}rlimit` so the connection-scaling
+//! bench can lift the file-descriptor ceiling.
+
+#![allow(dead_code)] // each platform uses a subset of the bindings
+
+use std::io;
+
+#[cfg(unix)]
+pub(crate) mod raw {
+    /// One gather segment (`struct iovec`). `writev` never mutates the
+    /// buffers, so `base` is `*const`.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct IoVec {
+        pub base: *const u8,
+        pub len: usize,
+    }
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    /// Kernel `struct epoll_event`. x86_64 is the one 64-bit ABI where the
+    /// kernel declares it packed (12 bytes); elsewhere natural C layout
+    /// applies. Fields are only ever read *by value* (copy), never borrowed,
+    /// so the packed layout cannot produce an unaligned reference.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct RLimit {
+        pub cur: u64,
+        pub max: u64,
+    }
+
+    extern "C" {
+        pub fn writev(fd: i32, iov: *const IoVec, iovcnt: i32) -> isize;
+        pub fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+        pub fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        pub fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+
+    #[cfg(target_os = "linux")]
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout: i32,
+        ) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+// ---- epoll constants (Linux uapi) -----------------------------------------
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+
+pub const EPOLL_CTL_ADD: i32 = 1;
+pub const EPOLL_CTL_DEL: i32 = 2;
+pub const EPOLL_CTL_MOD: i32 = 3;
+
+/// `EPOLL_CLOEXEC` (== `O_CLOEXEC`, octal `02000000`).
+pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+// ---- poll(2) constants (POSIX) --------------------------------------------
+
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+
+/// Transient accept(2) failures that must never kill a listener: the
+/// connection was reset before accept (`ECONNABORTED`), or the process/
+/// system fd table is full (`EMFILE`/`ENFILE`) and will drain. Matched by
+/// raw errno because std maps the fd-table errors to an uncategorized kind.
+pub fn accept_transient(e: &io::Error) -> bool {
+    const EMFILE: i32 = 24;
+    const ENFILE: i32 = 23;
+    e.kind() == io::ErrorKind::ConnectionAborted
+        || e.kind() == io::ErrorKind::Interrupted
+        || matches!(e.raw_os_error(), Some(EMFILE) | Some(ENFILE))
+}
+
+/// Gather-write `bufs` to `fd`. At most [`MAX_IOV`] segments are submitted
+/// per call (the remainder goes on the next readiness cycle).
+#[cfg(unix)]
+pub fn writev(fd: i32, bufs: &[raw::IoVec]) -> io::Result<usize> {
+    let cnt = bufs.len().min(MAX_IOV) as i32;
+    let n = unsafe { raw::writev(fd, bufs.as_ptr(), cnt) };
+    if n < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(n as usize)
+    }
+}
+
+/// Segments per writev call; far below every platform's `UIO_MAXIOV`.
+pub const MAX_IOV: usize = 64;
+
+/// Raise the soft `RLIMIT_NOFILE` toward `want` (clamped to the hard cap).
+/// Returns `(soft before, soft after)`. The connection-scaling bench calls
+/// this before opening tens of thousands of sockets.
+#[cfg(target_os = "linux")]
+pub fn raise_nofile_limit(want: u64) -> io::Result<(u64, u64)> {
+    const RLIMIT_NOFILE: i32 = 7;
+    let mut rl = raw::RLimit { cur: 0, max: 0 };
+    if unsafe { raw::getrlimit(RLIMIT_NOFILE, &mut rl) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let before = rl.cur;
+    if rl.cur < want {
+        rl.cur = want.min(rl.max);
+        if unsafe { raw::setrlimit(RLIMIT_NOFILE, &rl) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    Ok((before, rl.cur))
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn raise_nofile_limit(_want: u64) -> io::Result<(u64, u64)> {
+    Ok((0, 0)) // unsupported: report no change, callers proceed best-effort
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_accept_errors_are_recognized() {
+        assert!(accept_transient(&io::Error::from_raw_os_error(24))); // EMFILE
+        assert!(accept_transient(&io::Error::from_raw_os_error(23))); // ENFILE
+        assert!(accept_transient(&io::Error::new(
+            io::ErrorKind::ConnectionAborted,
+            "aborted"
+        )));
+        assert!(!accept_transient(&io::Error::new(
+            io::ErrorKind::PermissionDenied,
+            "nope"
+        )));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn writev_gathers_segments() {
+        use std::io::Read;
+        use std::os::unix::io::AsRawFd;
+        use std::os::unix::net::UnixStream;
+        let (a, mut b) = UnixStream::pair().unwrap();
+        let one = b"hello ";
+        let two = b"world";
+        let iov = [
+            raw::IoVec { base: one.as_ptr(), len: one.len() },
+            raw::IoVec { base: two.as_ptr(), len: two.len() },
+        ];
+        let n = writev(a.as_raw_fd(), &iov).unwrap();
+        assert_eq!(n, 11);
+        let mut got = [0u8; 11];
+        b.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"hello world");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn nofile_limit_is_readable() {
+        let (before, after) = raise_nofile_limit(0).unwrap();
+        assert!(before > 0);
+        assert!(after >= before);
+    }
+}

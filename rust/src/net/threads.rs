@@ -1,0 +1,168 @@
+//! Blocking thread-per-connection driver (the default).
+//!
+//! This is the classic shape the listeners had before the reactor existed
+//! — one handler thread per accepted connection, blocking reads — lifted
+//! behind the [`Service`] trait so it shares the protocol brain (and thus
+//! byte-exact responses) with the event-loop driver. What it adds over the
+//! old inline loops:
+//!
+//! * the accept loop survives transient failures (`EMFILE`, `ENFILE`,
+//!   `ECONNABORTED`) with backoff instead of silently dying, counting each
+//!   into the `accept_errors` STATS field;
+//! * graceful shutdown: stop accepting, wait for *busy* requests (not idle
+//!   connections) up to the drain deadline, force-close every connection to
+//!   unpark blocked reader threads, join them all — no leaked threads.
+
+use super::{sys, Lifecycle, NetConfig, Service, TextAction, MAX_LINE_BYTES};
+use crate::serving::wire;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Accept until shutdown, then drain. See the module docs for the policy.
+pub fn serve(
+    listener: TcpListener,
+    svc: Arc<dyn Service>,
+    cfg: &NetConfig,
+    lifecycle: Arc<Lifecycle>,
+) {
+    listener.set_nonblocking(true).ok();
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !lifecycle.stopping() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Some platforms leak the listener's nonblocking flag into
+                // accepted sockets; this driver needs blocking reads.
+                stream.set_nonblocking(false).ok();
+                let conn_svc = svc.clone();
+                let lc = lifecycle.clone();
+                // Builder, not thread::spawn: under a connection flood the
+                // OS can refuse new threads, and that must drop one
+                // connection, not panic the accept loop.
+                let spawned = std::thread::Builder::new()
+                    .name("w2k-conn".into())
+                    .spawn(move || handle_conn(stream, conn_svc, lc));
+                match spawned {
+                    Ok(h) => handlers.push(h),
+                    Err(e) => {
+                        svc.note_accept_error();
+                        crate::warn!("cannot spawn handler thread (conn dropped): {e}");
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+                if handlers.len() >= 128 {
+                    handlers.retain(|h| !h.is_finished());
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(ref e) if sys::accept_transient(e) => {
+                // Out of fds or the peer reset before accept: the listener
+                // must outlive the spike. Back off and retry.
+                svc.note_accept_error();
+                crate::warn!("transient accept error (retrying): {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                svc.note_accept_error();
+                crate::warn!("accept error (retrying): {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    drop(listener); // closed: new connections are refused from here on
+    let deadline = Instant::now() + Duration::from_millis(cfg.drain_ms);
+    while lifecycle.busy() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    if lifecycle.busy() > 0 {
+        crate::warn!("drain deadline expired with {} busy requests", lifecycle.busy());
+    }
+    // Unpark every handler blocked in a read; joining is then prompt.
+    lifecycle.close_all();
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(stream: TcpStream, svc: Arc<dyn Service>, lifecycle: Arc<Lifecycle>) {
+    let token = lifecycle.track(&stream);
+    run_conn(stream, &*svc, &lifecycle);
+    if let Some(t) = token {
+        lifecycle.untrack(t);
+    }
+}
+
+/// Per-connection dispatcher: sniff the first byte to pick a protocol.
+fn run_conn(stream: TcpStream, svc: &dyn Service, lifecycle: &Lifecycle) {
+    let peer = stream.peer_addr().ok();
+    crate::debug!("connection from {peer:?}");
+    let Ok(clone) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(clone);
+    let mut writer = stream;
+    let first = match reader.fill_buf() {
+        Ok(buf) if !buf.is_empty() => buf[0],
+        _ => return,
+    };
+    if first == wire::MAGIC[0] {
+        let mut magic = [0u8; 4];
+        if reader.read_exact(&mut magic).is_err() || magic != wire::MAGIC {
+            let _ = writer.write_all(b"ERR bad magic\n");
+            return;
+        }
+        let Some(dim) = svc.hello_dim() else { return };
+        let mut hello = Vec::with_capacity(8);
+        hello.extend_from_slice(&wire::MAGIC);
+        hello.extend_from_slice(&dim.to_le_bytes());
+        if writer.write_all(&hello).is_err() {
+            return;
+        }
+        let mut out = Vec::new();
+        loop {
+            let req = match wire::read_frame(&mut reader) {
+                Ok(Some(req)) => req,
+                Ok(None) => break, // clean EOF between frames
+                Err(e) => {
+                    crate::debug!("binary conn {peer:?} ended: {e}");
+                    break;
+                }
+            };
+            out.clear();
+            lifecycle.begin_request();
+            let close = svc.binary(req, &mut out);
+            let wrote = out.is_empty() || writer.write_all(&out).is_ok();
+            lifecycle.end_request();
+            if close || !wrote {
+                break;
+            }
+        }
+    } else {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match (&mut reader).take(MAX_LINE_BYTES as u64).read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            if line.len() >= MAX_LINE_BYTES && !line.ends_with('\n') {
+                // Hit the cap mid-line: the rest of the stream is
+                // unparseable.
+                let _ = writer.write_all(b"ERR line too long\n");
+                break;
+            }
+            lifecycle.begin_request();
+            let action = svc.text(&line);
+            let wrote = match &action {
+                TextAction::Quit => true,
+                TextAction::Reply(r) if r.is_empty() => true,
+                TextAction::Reply(r) => writer.write_all(r.as_bytes()).is_ok(),
+            };
+            lifecycle.end_request();
+            if action == TextAction::Quit || !wrote {
+                break;
+            }
+        }
+    }
+}

@@ -106,6 +106,9 @@ pub struct ServingStats {
     /// On-disk bytes of the snapshot backing the current generation (0 when
     /// the model was built in memory).
     pub snapshot_bytes: u64,
+    /// Transient accept(2) failures the listener survived (EMFILE /
+    /// ECONNABORTED backoff-and-retry events).
+    pub accept_errors: u64,
 }
 
 impl ServingStats {
@@ -126,6 +129,7 @@ impl ServingStats {
             self.knn_mean_probes,
             self.model_generation as f64,
             self.snapshot_bytes as f64,
+            self.accept_errors as f64,
         ]
     }
 }
@@ -166,6 +170,9 @@ pub struct ServingState {
     generation: AtomicU64,
     carry: Arc<Carry>,
     timeout: Duration,
+    /// Transient accept(2) failures survived by this state's listener;
+    /// lives here (not in the pool) so it persists across hot swaps.
+    accept_errors: AtomicU64,
 }
 
 impl ServingState {
@@ -209,7 +216,13 @@ impl ServingState {
             generation: AtomicU64::new(1),
             carry: Arc::new(Carry::default()),
             timeout: Duration::from_secs(5),
+            accept_errors: AtomicU64::new(0),
         }
+    }
+
+    /// Count one transient accept(2) failure the listener survived.
+    pub fn note_accept_error(&self) {
+        self.accept_errors.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Build one model generation over `inner`. `index_payload` (from a
@@ -451,6 +464,7 @@ impl ServingState {
             knn_mean_probes,
             model_generation: self.generation(),
             snapshot_bytes: m.snapshot_bytes,
+            accept_errors: self.accept_errors.load(Ordering::Relaxed),
         }
     }
 
@@ -590,6 +604,7 @@ mod tests {
         assert_eq!(s.knn_mean_probes, 0.0);
         assert_eq!(s.model_generation, 1);
         assert_eq!(s.snapshot_bytes, 0);
+        assert_eq!(s.accept_errors, 0);
         st.shutdown();
     }
 

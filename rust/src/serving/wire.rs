@@ -29,7 +29,7 @@
 //! response:      u32 status, u32 count, payload
 //!   LOOKUP ok    count = #ids,  payload = count × dim × f32 rows
 //!   DOT ok       count = 1,     payload = 1 × f32
-//!   STATS ok     count = 11,    payload = 11 × f64 in
+//!   STATS ok     count = 12,    payload = 12 × f64 in
 //!                [`STATS_FIELD_NAMES`] order
 //!   KNN ok       count = #neighbors (≤ k), payload = count × (u32 id,
 //!                f32 score), best first (KNN_VEC identical, query word
@@ -85,7 +85,7 @@ pub const MAX_IDS: u32 = 1 << 16;
 pub const MAX_PATH_BYTES: u32 = 4096;
 
 /// Number of f64 values in a STATS response payload.
-pub const STATS_FIELDS: usize = 11;
+pub const STATS_FIELDS: usize = 12;
 
 /// The one canonical STATS field list. The binary payload is these values
 /// in this order; the text `STATS` line is `name=value` pairs in this order
@@ -107,6 +107,9 @@ pub const STATS_FIELD_NAMES: [&str; STATS_FIELDS] = [
     "knn_mean_probes",
     "model_generation",
     "snapshot_bytes",
+    // Appended last so binary decoders built against the 11-field layout
+    // still parse newer servers (trailing fields are ignored).
+    "accept_errors",
 ];
 
 /// Text-protocol rendering of one STATS field: microsecond percentiles as
@@ -244,9 +247,213 @@ fn status_of(e: LookupError) -> u32 {
 
 // ---- server side ----------------------------------------------------------
 
-/// Serve binary frames on an accepted connection. Called by the listener
-/// after it consumed and verified [`MAGIC`]; sends the server hello and
-/// loops until QUIT, EOF, or an unrecoverable framing error.
+/// One decoded binary request frame, shared by both network drivers: the
+/// blocking driver decodes it with [`read_frame`], the reactor with
+/// `crate::net::parser::next_frame`, and both dispatch through
+/// [`respond_binary`] — so the two drivers answer byte-identically by
+/// construction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BinRequest {
+    /// LOOKUP / DOT / STATS / QUIT / KNN / PING — and any unknown op — with
+    /// `count` ids as payload.
+    Ids { op: u32, ids: Vec<u32> },
+    /// RELOAD; `path` is `None` when the payload bytes are not UTF-8 (a
+    /// consumed-in-full frame: BAD_FRAME reply, connection survives).
+    Reload { path: Option<String> },
+    /// KNN_VEC: external query vector plus k.
+    KnnVec { k: u32, query: Vec<f32> },
+    /// Hostile count header (cap exceeded before any allocation): error
+    /// frame, then close — the remaining stream length is untrustworthy.
+    Fatal,
+}
+
+impl BinRequest {
+    /// Does this request end the connection? (QUIT closes silently, a
+    /// hostile header closes after the error frame.) The reactor uses this
+    /// to stop parsing pipelined bytes past a terminal frame, which the
+    /// blocking driver never sees either.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, BinRequest::Fatal | BinRequest::Ids { op: OP_QUIT, .. })
+    }
+}
+
+/// Blocking-read one request frame (`Ok(None)` = clean EOF between frames).
+/// The grammar — caps, payload shapes, hostile-header short-circuits — is
+/// mirrored incrementally by `crate::net::parser::next_frame`.
+pub(crate) fn read_frame(r: &mut impl Read) -> io::Result<Option<BinRequest>> {
+    let op = match read_u32(r) {
+        Ok(op) => op,
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None), // clean close
+        Err(e) => return Err(e),
+    };
+    let count = read_u32(r)?;
+    if op == OP_RELOAD {
+        // RELOAD's payload is path bytes, not ids; cap checked before any
+        // allocation, like MAX_IDS below.
+        if count == 0 || count > MAX_PATH_BYTES {
+            return Ok(Some(BinRequest::Fatal));
+        }
+        let mut raw = vec![0u8; count as usize];
+        r.read_exact(&mut raw)?;
+        Ok(Some(BinRequest::Reload { path: String::from_utf8(raw).ok() }))
+    } else if op == OP_KNN_VEC {
+        // KNN_VEC's payload is `u32 k` + `count` f32s, not ids. The whole
+        // frame is consumed before validation so the connection stays
+        // usable after a semantic error.
+        if count == 0 || count > MAX_IDS {
+            return Ok(Some(BinRequest::Fatal));
+        }
+        let k = read_u32(r)?;
+        let query = read_f32s(r, count as usize)?;
+        Ok(Some(BinRequest::KnnVec { k, query }))
+    } else {
+        // Hostile-header guard: the cap check precedes the id-buffer
+        // allocation, so a 4 GiB count never reserves memory.
+        if count > MAX_IDS {
+            return Ok(Some(BinRequest::Fatal));
+        }
+        let mut ids = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            ids.push(read_u32(r)?);
+        }
+        Ok(Some(BinRequest::Ids { op, ids }))
+    }
+}
+
+/// Append the response frame for `req` to `out`; returns true when the
+/// connection must close after `out` is flushed. This is the single binary
+/// dispatcher behind both network drivers.
+pub(crate) fn respond_binary(state: &ServingState, req: BinRequest, out: &mut Vec<u8>) -> bool {
+    match req {
+        BinRequest::Fatal => {
+            put_u32(out, STATUS_BAD_FRAME);
+            put_u32(out, 0);
+            true
+        }
+        BinRequest::Reload { path: None } => {
+            put_u32(out, STATUS_BAD_FRAME);
+            put_u32(out, 0);
+            false
+        }
+        BinRequest::Reload { path: Some(path) } => {
+            match state.reload_snapshot(std::path::Path::new(&path)) {
+                Ok(generation) => {
+                    put_u32(out, STATUS_OK);
+                    put_u32(out, 1);
+                    put_u32(out, generation as u32);
+                }
+                Err(e) => {
+                    crate::warn!("binary RELOAD {path:?} failed: {e}");
+                    put_u32(out, STATUS_RELOAD_FAILED);
+                    put_u32(out, 0);
+                }
+            }
+            false
+        }
+        BinRequest::KnnVec { k: 0, .. } => {
+            put_u32(out, STATUS_BAD_REQUEST);
+            put_u32(out, 0);
+            false
+        }
+        BinRequest::KnnVec { k, query } => {
+            match state.knn(Query::Vector(query), k as usize) {
+                Ok(neighbors) => {
+                    let pairs = neighbors.iter().map(|n| (n.id as u32, n.score));
+                    let _ = write_neighbors_frame(out, pairs);
+                }
+                Err(e) => {
+                    put_u32(out, status_of(e));
+                    put_u32(out, 0);
+                }
+            }
+            false
+        }
+        BinRequest::Ids { op: OP_QUIT, .. } => true, // closes without a reply
+        BinRequest::Ids { op, ids } => {
+            match op {
+                // Status-only liveness probe (the cluster health prober's
+                // op): no state is touched, so a wedged model cannot fake
+                // liveness — only the listener/framing path is exercised.
+                OP_PING if ids.is_empty() => {
+                    put_u32(out, STATUS_OK);
+                    put_u32(out, 0);
+                }
+                // A PING carrying ids is a bad request (the frame was
+                // consumed, so the connection survives).
+                OP_PING => {
+                    put_u32(out, STATUS_BAD_REQUEST);
+                    put_u32(out, 0);
+                }
+                OP_LOOKUP if !ids.is_empty() => {
+                    let ids: Vec<usize> = ids.iter().map(|&id| id as usize).collect();
+                    match state.lookup_rows(ids) {
+                        Ok(rows) => {
+                            out.reserve(8 + rows.len() * state.dim() * 4);
+                            put_u32(out, STATUS_OK);
+                            put_u32(out, rows.len() as u32);
+                            for row in &rows {
+                                put_f32s(out, row);
+                            }
+                        }
+                        Err(e) => {
+                            put_u32(out, status_of(e));
+                            put_u32(out, 0);
+                        }
+                    }
+                }
+                OP_DOT if ids.len() == 2 => {
+                    match state.dot(ids[0] as usize, ids[1] as usize) {
+                        Ok(d) => {
+                            put_u32(out, STATUS_OK);
+                            put_u32(out, 1);
+                            put_f32s(out, &[d]);
+                        }
+                        Err(e) => {
+                            put_u32(out, status_of(e));
+                            put_u32(out, 0);
+                        }
+                    }
+                }
+                // Zero-length k is rejected here, before the job could be
+                // built or enqueued (state.knn would also catch it; failing
+                // at the frame layer keeps it off the pool entirely).
+                OP_KNN if ids.len() == 2 && ids[1] == 0 => {
+                    put_u32(out, STATUS_BAD_FRAME);
+                    put_u32(out, 0);
+                }
+                OP_KNN if ids.len() == 2 => {
+                    match state.knn(Query::Id(ids[0] as usize), ids[1] as usize) {
+                        Ok(neighbors) => {
+                            let pairs = neighbors.iter().map(|n| (n.id as u32, n.score));
+                            let _ = write_neighbors_frame(out, pairs);
+                        }
+                        Err(e) => {
+                            put_u32(out, status_of(e));
+                            put_u32(out, 0);
+                        }
+                    }
+                }
+                OP_STATS => {
+                    // The payload is the shared field table in canonical
+                    // order (the text protocol renders the same array).
+                    let _ = write_stats_frame(out, &state.stats().fields());
+                }
+                // Known op with a bad id count, or an unknown op: the frame
+                // was consumed in full, so report and keep the connection.
+                _ => {
+                    put_u32(out, STATUS_BAD_FRAME);
+                    put_u32(out, 0);
+                }
+            }
+            false
+        }
+    }
+}
+
+/// Serve binary frames on an accepted connection (blocking driver). Called
+/// by the listener after it consumed and verified [`MAGIC`]; sends the
+/// server hello and loops until QUIT, EOF, or an unrecoverable framing
+/// error.
 pub fn handle_binary(
     reader: &mut BufReader<TcpStream>,
     writer: &mut TcpStream,
@@ -256,134 +463,18 @@ pub fn handle_binary(
     hello.extend_from_slice(&MAGIC);
     put_u32(&mut hello, state.dim() as u32);
     writer.write_all(&hello)?;
+    let mut out = Vec::new();
     loop {
-        let op = match read_u32(reader) {
-            Ok(op) => op,
-            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()), // clean close
-            Err(e) => return Err(e),
+        let Some(req) = read_frame(reader)? else {
+            return Ok(());
         };
-        let count = read_u32(reader)?;
-        if op == OP_RELOAD {
-            // RELOAD's payload is path bytes, not ids; cap checked before
-            // any allocation, like MAX_IDS below.
-            if count == 0 || count > MAX_PATH_BYTES {
-                // The remaining stream length is untrustworthy: error, close.
-                return write_error(writer, STATUS_BAD_FRAME);
-            }
-            let mut raw = vec![0u8; count as usize];
-            reader.read_exact(&mut raw)?;
-            let Ok(path) = String::from_utf8(raw) else {
-                write_error(writer, STATUS_BAD_FRAME)?;
-                continue;
-            };
-            match state.reload_snapshot(std::path::Path::new(&path)) {
-                Ok(generation) => {
-                    let mut buf = Vec::with_capacity(12);
-                    put_u32(&mut buf, STATUS_OK);
-                    put_u32(&mut buf, 1);
-                    put_u32(&mut buf, generation as u32);
-                    writer.write_all(&buf)?;
-                }
-                Err(e) => {
-                    crate::warn!("binary RELOAD {path:?} failed: {e}");
-                    write_error(writer, STATUS_RELOAD_FAILED)?;
-                }
-            }
-            continue;
+        out.clear();
+        let close = respond_binary(state, req, &mut out);
+        if !out.is_empty() {
+            writer.write_all(&out)?;
         }
-        if op == OP_KNN_VEC {
-            // KNN_VEC's payload is `u32 k` + `count` f32s, not ids. The cap
-            // check precedes any allocation, like MAX_IDS below; the whole
-            // frame is consumed before validation so the connection stays
-            // usable after a semantic error.
-            if count == 0 || count > MAX_IDS {
-                return write_error(writer, STATUS_BAD_FRAME);
-            }
-            let k = read_u32(reader)? as usize;
-            let query = read_f32s(reader, count as usize)?;
-            if k == 0 {
-                write_error(writer, STATUS_BAD_REQUEST)?;
-                continue;
-            }
-            match state.knn(Query::Vector(query), k) {
-                Ok(neighbors) => {
-                    let pairs = neighbors.iter().map(|n| (n.id as u32, n.score));
-                    write_neighbors_frame(writer, pairs)?;
-                }
-                Err(e) => write_error(writer, status_of(e))?,
-            }
-            continue;
-        }
-        // Hostile-header guard: the cap check precedes the id-buffer
-        // allocation, so a 4 GiB count never reserves memory.
-        if count > MAX_IDS {
-            // The remaining stream length is untrustworthy: error and close.
-            return write_error(writer, STATUS_BAD_FRAME);
-        }
-        let mut ids = Vec::with_capacity(count as usize);
-        for _ in 0..count {
-            ids.push(read_u32(reader)? as usize);
-        }
-        match op {
-            OP_QUIT => return Ok(()),
-            // Status-only liveness probe (the cluster health prober's op):
-            // no state is touched, so a wedged model cannot fake liveness —
-            // only the listener/framing path is exercised.
-            OP_PING if ids.is_empty() => {
-                let mut buf = Vec::with_capacity(8);
-                put_u32(&mut buf, STATUS_OK);
-                put_u32(&mut buf, 0);
-                writer.write_all(&buf)?;
-            }
-            // A PING carrying ids is a bad request (the frame was consumed,
-            // so the connection survives).
-            OP_PING => write_error(writer, STATUS_BAD_REQUEST)?,
-            OP_LOOKUP if !ids.is_empty() => match state.lookup_rows(ids) {
-                Ok(rows) => {
-                    let mut buf = Vec::with_capacity(8 + rows.len() * state.dim() * 4);
-                    put_u32(&mut buf, STATUS_OK);
-                    put_u32(&mut buf, rows.len() as u32);
-                    for row in &rows {
-                        put_f32s(&mut buf, row);
-                    }
-                    writer.write_all(&buf)?;
-                }
-                Err(e) => write_error(writer, status_of(e))?,
-            },
-            OP_DOT if ids.len() == 2 => match state.dot(ids[0], ids[1]) {
-                Ok(d) => {
-                    let mut buf = Vec::with_capacity(12);
-                    put_u32(&mut buf, STATUS_OK);
-                    put_u32(&mut buf, 1);
-                    put_f32s(&mut buf, &[d]);
-                    writer.write_all(&buf)?;
-                }
-                Err(e) => write_error(writer, status_of(e))?,
-            },
-            // Zero-length k is rejected here, before the job could be built
-            // or enqueued (state.knn would also catch it; failing at the
-            // frame layer keeps the invalid request off the pool entirely).
-            OP_KNN if ids.len() == 2 && ids[1] == 0 => {
-                write_error(writer, STATUS_BAD_FRAME)?
-            }
-            OP_KNN if ids.len() == 2 => {
-                let (query, k) = (ids[0], ids[1]);
-                match state.knn(Query::Id(query), k) {
-                    Ok(neighbors) => {
-                        let pairs = neighbors.iter().map(|n| (n.id as u32, n.score));
-                        write_neighbors_frame(writer, pairs)?;
-                    }
-                    Err(e) => write_error(writer, status_of(e))?,
-                }
-            }
-            OP_STATS => {
-                // The payload is the shared field table in canonical order
-                // (the text protocol renders the same array).
-                write_stats_frame(writer, &state.stats().fields())?;
-            }
-            // Known op with a bad id count, or an unknown op: the frame was
-            // still consumed in full, so report and keep the connection.
-            _ => write_error(writer, STATUS_BAD_FRAME)?,
+        if close {
+            return Ok(());
         }
     }
 }
@@ -432,7 +523,7 @@ impl From<io::Error> for WireError {
 /// Typed mapping of raw transport errors: deadline expiries (both the unix
 /// `WouldBlock` and the windows `TimedOut` spellings of a socket timeout)
 /// become [`WireError::TimedOut`]; everything else stays [`WireError::Io`].
-fn classify(e: io::Error) -> WireError {
+pub(crate) fn classify(e: io::Error) -> WireError {
     match e.kind() {
         io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => WireError::TimedOut,
         _ => WireError::Io(e),
@@ -467,6 +558,9 @@ pub struct WireStats {
     pub knn_mean_probes: f64,
     pub model_generation: u64,
     pub snapshot_bytes: u64,
+    /// Transient accept(2) failures survived by the listener (EMFILE /
+    /// ECONNABORTED backoff-and-retry events).
+    pub accept_errors: u64,
 }
 
 impl WireStats {
@@ -485,6 +579,7 @@ impl WireStats {
             knn_mean_probes: xs[8],
             model_generation: xs[9] as u64,
             snapshot_bytes: xs[10] as u64,
+            accept_errors: xs[11] as u64,
         }
     }
 
@@ -503,8 +598,32 @@ impl WireStats {
             self.knn_mean_probes,
             self.model_generation as f64,
             self.snapshot_bytes as f64,
+            self.accept_errors as f64,
         ]
     }
+}
+
+/// Encode one id-payload request frame (LOOKUP/DOT/KNN/STATS/PING/QUIT).
+/// Shared by [`BinaryClient`] and the router's multiplexed fan-out so both
+/// paths put identical bytes on the wire.
+pub(crate) fn encode_ids_frame(op: u32, ids: &[u32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + ids.len() * 4);
+    put_u32(&mut buf, op);
+    put_u32(&mut buf, ids.len() as u32);
+    for &id in ids {
+        put_u32(&mut buf, id);
+    }
+    buf
+}
+
+/// Encode one KNN_VEC request frame (count = query dimension).
+pub(crate) fn encode_knn_vec_frame(query: &[f32], k: u32) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(12 + query.len() * 4);
+    put_u32(&mut buf, OP_KNN_VEC);
+    put_u32(&mut buf, query.len() as u32);
+    put_u32(&mut buf, k);
+    put_f32s(&mut buf, query);
+    buf
 }
 
 /// Binary-protocol client (load generator, tests, examples, and the unit of
@@ -676,13 +795,33 @@ impl BinaryClient {
     }
 
     fn request(&mut self, op: u32, ids: &[u32]) -> Result<u32, WireError> {
-        let mut buf = Vec::with_capacity(8 + ids.len() * 4);
-        put_u32(&mut buf, op);
-        put_u32(&mut buf, ids.len() as u32);
-        for &id in ids {
-            put_u32(&mut buf, id);
-        }
+        let buf = encode_ids_frame(op, ids);
         self.roundtrip(&buf, true)
+    }
+
+    // ---- multiplexed fan-out hooks (`crate::net::fanout`) ----------------
+    //
+    // The router's epoll fan-out writes request frames on many pooled
+    // clients, then multiplexes the responses on one poller instead of one
+    // scoped thread per shard. That path bypasses `roundtrip`, so it needs
+    // raw access to the transport plus a way to honor / set the `broken`
+    // poison flag.
+
+    /// Safe to use for a raw multiplexed exchange: not poisoned, and no
+    /// stale buffered response bytes from an earlier exchange.
+    pub(crate) fn fanout_ready(&self) -> bool {
+        !self.broken && self.reader.buffer().is_empty()
+    }
+
+    /// The underlying stream, for readiness registration and direct reads.
+    pub(crate) fn stream(&self) -> &TcpStream {
+        &self.writer
+    }
+
+    /// Poison the transport after a failed raw exchange; the next pooled
+    /// request reconnects instead of trusting the stream's framing.
+    pub(crate) fn mark_broken(&mut self) {
+        self.broken = true;
     }
 
     /// Fetch rows for `ids`; one `dim`-length vector per id, request order.
@@ -733,11 +872,7 @@ impl BinaryClient {
     /// the scatter half of cluster KNN: the router sends the query row to
     /// every shard and merges the per-shard heaps.
     pub fn knn_vec(&mut self, query: &[f32], k: u32) -> Result<Vec<(u32, f32)>, WireError> {
-        let mut buf = Vec::with_capacity(12 + query.len() * 4);
-        put_u32(&mut buf, OP_KNN_VEC);
-        put_u32(&mut buf, query.len() as u32);
-        put_u32(&mut buf, k);
-        put_f32s(&mut buf, query);
+        let buf = encode_knn_vec_frame(query, k);
         let status = self.roundtrip(&buf, true)?;
         let count = self.recv_u32()? as usize;
         if status != STATUS_OK {
@@ -851,6 +986,7 @@ mod tests {
             knn_mean_probes: 2.5,
             model_generation: 3,
             snapshot_bytes: 4096,
+            accept_errors: 5,
         };
         assert_eq!(WireStats::from_fields(&s.fields()), s);
         assert_eq!(STATS_FIELD_NAMES.len(), s.fields().len());

@@ -176,6 +176,7 @@ mod tests {
             knn_mean_probes: 2.5,
             model_generation: 3,
             snapshot_bytes: 4096,
+            accept_errors: 1,
         };
         // A line rendered through the shared table must pass, extra rollup
         // tokens included.

@@ -8,7 +8,7 @@
 use word2ket::cluster::{
     save_shard_snapshots, shard_snapshot_path, Router, RouterConfig, ShardStrategy, Topology,
 };
-use word2ket::config::ExperimentConfig;
+use word2ket::config::{ExperimentConfig, NetConfig, NetDriver};
 use word2ket::coordinator::server::{self, ServerState};
 use word2ket::embedding::{EmbeddingStore, RegularEmbedding};
 use word2ket::index::{BruteForce, Query, Scorer};
@@ -34,6 +34,18 @@ impl Node {
     }
 }
 
+/// The `[net]` config every server and router in this file runs under. The
+/// CI matrix re-runs the whole suite per driver by exporting
+/// `W2K_NET_DRIVER=threads|epoll`; locally, unset means the default
+/// (threads). An unknown value is a test bug — fail loudly.
+fn net_from_env() -> NetConfig {
+    let mut net = NetConfig::default();
+    if let Ok(name) = std::env::var("W2K_NET_DRIVER") {
+        net.driver = NetDriver::parse(&name).expect("bad W2K_NET_DRIVER");
+    }
+    net
+}
+
 fn spawn_node(snap: &Path) -> Node {
     let mut cfg = ExperimentConfig::default();
     cfg.server.addr = "127.0.0.1:0".into();
@@ -41,6 +53,7 @@ fn spawn_node(snap: &Path) -> Node {
     cfg.serving.shards = 2;
     cfg.serving.cache_rows = 512;
     cfg.snapshot.path = snap.display().to_string();
+    cfg.net = net_from_env();
     let (state, listener, addr) = server::spawn(&cfg).expect("shard server");
     let st = state.clone();
     let accept = std::thread::spawn(move || server::accept_loop(listener, st));
@@ -57,6 +70,7 @@ fn router_cfg() -> RouterConfig {
         io_timeout: Duration::from_millis(5000),
         probe_interval: Duration::from_millis(50),
         eject_after: 2,
+        net: net_from_env(),
     }
 }
 
@@ -448,5 +462,51 @@ fn router_listener_serves_both_protocols() {
     state.shutdown();
     accept.join().unwrap();
     std::fs::remove_dir_all(&dir2).ok();
+    cluster.stop();
+}
+
+/// Graceful shutdown of the router's own listener: idle clients parked on
+/// both protocols observe EOF instead of a hang, the accept thread joins
+/// (no leaked listener threads), and the address stops serving.
+#[test]
+fn router_listener_graceful_shutdown_drains_and_releases() {
+    use std::io::{Read, Write};
+
+    let store = regular_store(40, 8, 29);
+    let cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 2, 1, "shutdown");
+    let (state, listener, addr) =
+        word2ket::cluster::server::spawn(cluster.topo.clone(), router_cfg(), "127.0.0.1:0")
+            .unwrap();
+    let st = state.clone();
+    let accept = std::thread::spawn(move || word2ket::cluster::server::accept_loop(listener, st));
+
+    // One served request per protocol, then the clients sit idle — no QUIT.
+    let mut bin = BinaryClient::connect(&addr).unwrap();
+    assert_eq!(bin.lookup(&[3]).unwrap()[0], store.lookup(3));
+    let mut text = std::net::TcpStream::connect(&addr).unwrap();
+    text.write_all(b"PING\n").unwrap();
+    let mut ok = [0u8; 3];
+    text.read_exact(&mut ok).unwrap();
+    assert_eq!(&ok, b"OK\n");
+
+    state.shutdown();
+    accept.join().expect("accept loop must exit after shutdown");
+
+    // The parked text client is unblocked with EOF/reset, never a hang.
+    text.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut probe = [0u8; 1];
+    match text.read(&mut probe) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("expected EOF after shutdown, read {n} bytes"),
+    }
+
+    // A fresh client finds nobody serving on the old address (connection
+    // refused, or an accepted-then-reset socket that cannot complete a
+    // round-trip).
+    match BinaryClient::connect(&addr) {
+        Ok(mut c) => assert!(c.ping().is_err(), "listener still serving after shutdown"),
+        Err(_) => {}
+    }
+
     cluster.stop();
 }

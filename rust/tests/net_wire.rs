@@ -1,0 +1,361 @@
+//! Wire-level conformance across network drivers.
+//!
+//! The `[net]` driver toggle must be invisible on the wire: every byte the
+//! blocking thread-per-connection driver sends, the epoll reactor must send
+//! too, for the full text + binary protocol surface — including when the
+//! client fragments its requests one byte at a time, and when it pipelines
+//! many binary frames into a single write. These tests drive real servers
+//! (OS-assigned ports) under both drivers and compare raw response bytes.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+use word2ket::config::{EmbeddingKind, ExperimentConfig, NetDriver};
+use word2ket::coordinator::server::{accept_loop, spawn, ServerState};
+use word2ket::serving::wire;
+
+const DRIVERS: [NetDriver; 2] = [NetDriver::Threads, NetDriver::Epoll];
+
+fn cfg_for(driver: NetDriver) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.embedding.kind = EmbeddingKind::Word2KetXS;
+    cfg.embedding.order = 2;
+    cfg.embedding.rank = 2;
+    cfg.model.vocab = 100;
+    cfg.model.emb_dim = 16;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.serving.batch_window_us = 100;
+    cfg.serving.shards = 2;
+    cfg.serving.cache_rows = 64;
+    cfg.net.driver = driver;
+    cfg
+}
+
+fn start(driver: NetDriver) -> (Arc<ServerState>, String, JoinHandle<()>) {
+    let (state, listener, addr) = spawn(&cfg_for(driver)).unwrap();
+    let st = state.clone();
+    let acc = std::thread::spawn(move || accept_loop(listener, st));
+    (state, addr, acc)
+}
+
+/// Write `bytes` in one shot, read until the server closes.
+fn roundtrip_batched(addr: &str, bytes: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).ok();
+    s.write_all(bytes).unwrap();
+    let mut out = Vec::new();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.read_to_end(&mut out).unwrap();
+    out
+}
+
+/// Dribble `bytes` one at a time with small pauses so the server sees the
+/// request fragmented across many reads (frames and lines split anywhere,
+/// including mid-header and mid-f32), then read until close.
+fn roundtrip_dribbled(addr: &str, bytes: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).ok();
+    for (i, b) in bytes.iter().enumerate() {
+        s.write_all(std::slice::from_ref(b)).unwrap();
+        // Pause often enough that coalescing cannot reassemble everything,
+        // without making the test crawl.
+        if i % 3 == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let mut out = Vec::new();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.read_to_end(&mut out).unwrap();
+    out
+}
+
+// -- request builders (hand-rolled: the test must not share encoder code
+// with the client under test) ----------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn ids_frame(op: u32, ids: &[u32]) -> Vec<u8> {
+    let mut f = Vec::new();
+    put_u32(&mut f, op);
+    put_u32(&mut f, ids.len() as u32);
+    for &id in ids {
+        put_u32(&mut f, id);
+    }
+    f
+}
+
+fn knn_vec_frame(query: &[f32], k: u32) -> Vec<u8> {
+    let mut f = Vec::new();
+    put_u32(&mut f, wire::OP_KNN_VEC);
+    put_u32(&mut f, query.len() as u32);
+    put_u32(&mut f, k);
+    for &x in query {
+        f.extend_from_slice(&x.to_le_bytes());
+    }
+    f
+}
+
+/// The deterministic text script: every command family, success and error
+/// paths, empty lines, ending in QUIT (which closes without a reply).
+/// STATS is deliberately absent — latency percentiles are timing-dependent
+/// and would never be byte-identical across runs.
+fn text_script() -> Vec<u8> {
+    concat!(
+        "PING\n",
+        "PING extra\n",
+        "\n",
+        "LOOKUP 1 2 1\n",
+        "LOOKUP\n",
+        "LOOKUP abc\n",
+        "LOOKUP 5000\n",
+        "DOT 1 2\n",
+        "DOT 1\n",
+        "DOT a b\n",
+        "KNN 42 5\n",
+        "KNN 1 0\n",
+        "KNN\n",
+        "RELOAD\n",
+        "NONSENSE then args\n",
+        "QUIT\n",
+    )
+    .as_bytes()
+    .to_vec()
+}
+
+/// The deterministic binary script: hello, then a pipeline of frames
+/// covering every op (success and error), written as one blob. The server
+/// must answer strictly in order; QUIT closes silently.
+fn binary_script() -> Vec<u8> {
+    let mut blob = Vec::new();
+    blob.extend_from_slice(&wire::MAGIC);
+    blob.extend_from_slice(&ids_frame(wire::OP_LOOKUP, &[1, 2, 1]));
+    blob.extend_from_slice(&ids_frame(wire::OP_DOT, &[1, 2]));
+    blob.extend_from_slice(&ids_frame(wire::OP_PING, &[]));
+    blob.extend_from_slice(&ids_frame(wire::OP_PING, &[7])); // bad request
+    blob.extend_from_slice(&ids_frame(wire::OP_KNN, &[42, 5]));
+    blob.extend_from_slice(&ids_frame(wire::OP_KNN, &[1, 0])); // bad frame, survives
+    blob.extend_from_slice(&ids_frame(wire::OP_LOOKUP, &[5000])); // range error
+    blob.extend_from_slice(&ids_frame(wire::OP_LOOKUP, &[])); // empty: bad frame
+    blob.extend_from_slice(&ids_frame(99, &[1])); // unknown op
+    let query = [0.25f32; 16];
+    blob.extend_from_slice(&knn_vec_frame(&query, 4));
+    blob.extend_from_slice(&knn_vec_frame(&query, 0)); // bad request
+    blob.extend_from_slice(&ids_frame(wire::OP_QUIT, &[]));
+    blob
+}
+
+#[test]
+fn text_surface_byte_identical_across_drivers_and_fragmentation() {
+    let script = text_script();
+    let mut per_driver = Vec::new();
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let batched = roundtrip_batched(&addr, &script);
+        let dribbled = roundtrip_dribbled(&addr, &script);
+        assert_eq!(
+            batched, dribbled,
+            "{driver}: fragmented text must answer byte-identically"
+        );
+        assert!(!batched.is_empty());
+        // Spot-check shape: 3 rows for the triple lookup, errors as ERR.
+        let text = String::from_utf8(batched.clone()).unwrap();
+        assert_eq!(text.matches("OK 16 ").count(), 3, "{driver}: {text}");
+        assert!(text.contains("ERR bad id\n"), "{driver}");
+        assert!(text.contains("ERR unknown command\n"), "{driver}");
+        per_driver.push(batched);
+        state.shutdown();
+        acc.join().unwrap();
+    }
+    assert_eq!(
+        per_driver[0], per_driver[1],
+        "threads and epoll drivers must answer the text protocol byte-identically"
+    );
+}
+
+#[test]
+fn binary_pipeline_byte_identical_across_drivers_and_fragmentation() {
+    let script = binary_script();
+    let mut per_driver = Vec::new();
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let batched = roundtrip_batched(&addr, &script);
+        let dribbled = roundtrip_dribbled(&addr, &script);
+        assert_eq!(
+            batched, dribbled,
+            "{driver}: fragmented binary frames must answer byte-identically"
+        );
+        // Hello first: MAGIC + dim 16.
+        assert_eq!(&batched[..4], &wire::MAGIC);
+        assert_eq!(u32::from_le_bytes(batched[4..8].try_into().unwrap()), 16);
+        // First pipelined response: OK + 3 rows of 16 f32s, answered
+        // strictly before the later frames' replies.
+        assert_eq!(
+            u32::from_le_bytes(batched[8..12].try_into().unwrap()),
+            wire::STATUS_OK
+        );
+        assert_eq!(u32::from_le_bytes(batched[12..16].try_into().unwrap()), 3);
+        per_driver.push(batched);
+        state.shutdown();
+        acc.join().unwrap();
+    }
+    assert_eq!(
+        per_driver[0], per_driver[1],
+        "threads and epoll drivers must answer the binary protocol byte-identically"
+    );
+}
+
+#[test]
+fn pipelined_frames_split_across_writes_mid_header() {
+    // Split the pipelined blob at a frame-header boundary+2 bytes — the
+    // parser must hold the partial header across reads under both drivers.
+    let script = binary_script();
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_nodelay(true).ok();
+        let cut = 4 + 8 + 2; // mid-header of the second frame's op word
+        s.write_all(&script[..cut]).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        s.write_all(&script[cut..]).unwrap();
+        let mut out = Vec::new();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.read_to_end(&mut out).unwrap();
+        let whole = roundtrip_batched(&addr, &script);
+        assert_eq!(out, whole, "{driver}: mid-header split changed the response bytes");
+        state.shutdown();
+        acc.join().unwrap();
+    }
+}
+
+#[test]
+fn hostile_count_header_errors_and_closes_under_both_drivers() {
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::MAGIC).unwrap();
+        let mut hello = [0u8; 8];
+        s.read_exact(&mut hello).unwrap();
+        let mut frame = Vec::new();
+        put_u32(&mut frame, wire::OP_LOOKUP);
+        put_u32(&mut frame, u32::MAX);
+        s.write_all(&frame).unwrap();
+        let mut resp = [0u8; 8];
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.read_exact(&mut resp).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(resp[..4].try_into().unwrap()),
+            wire::STATUS_BAD_FRAME,
+            "{driver}"
+        );
+        let mut probe = [0u8; 1];
+        assert_eq!(s.read(&mut probe).unwrap(), 0, "{driver}: conn must close");
+        state.shutdown();
+        acc.join().unwrap();
+    }
+}
+
+#[test]
+fn bad_magic_is_rejected_under_both_drivers() {
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let mut s = TcpStream::connect(&addr).unwrap();
+        // First byte matches MAGIC[0], the rest does not.
+        s.write_all(&[wire::MAGIC[0], b'X', b'Y', b'Z']).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line, "ERR bad magic\n", "{driver}");
+        state.shutdown();
+        acc.join().unwrap();
+    }
+}
+
+#[test]
+fn graceful_shutdown_drains_and_joins_under_both_drivers() {
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        // Park idle connections on both protocols; none sends QUIT.
+        let mut idle_text = TcpStream::connect(&addr).unwrap();
+        idle_text.write_all(b"PING\n").unwrap();
+        let mut line = [0u8; 3];
+        idle_text.read_exact(&mut line).unwrap();
+        assert_eq!(&line, b"OK\n", "{driver}");
+        let mut idle_bin = TcpStream::connect(&addr).unwrap();
+        idle_bin.write_all(&wire::MAGIC).unwrap();
+        let mut hello = [0u8; 8];
+        idle_bin.read_exact(&mut hello).unwrap();
+
+        state.shutdown();
+        acc.join().unwrap_or_else(|_| panic!("{driver}: accept loop did not join"));
+
+        // Parked clients observe EOF/reset, never a hang.
+        for s in [&mut idle_text, &mut idle_bin] {
+            s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            let mut probe = [0u8; 1];
+            match s.read(&mut probe) {
+                Ok(0) | Err(_) => {}
+                Ok(n) => panic!("{driver}: expected EOF after shutdown, read {n}"),
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn idle_timeout_reaps_parked_conns_under_epoll() {
+    let mut cfg = cfg_for(NetDriver::Epoll);
+    cfg.net.idle_timeout_ms = 300;
+    let (state, listener, addr) = spawn(&cfg).unwrap();
+    let st = state.clone();
+    let acc = std::thread::spawn(move || accept_loop(listener, st));
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"PING\n").unwrap();
+    let mut line = [0u8; 3];
+    s.read_exact(&mut line).unwrap();
+    // Sit idle: the timer wheel must close the connection, well before the
+    // generous read timeout below.
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let start = std::time::Instant::now();
+    let mut probe = [0u8; 1];
+    match s.read(&mut probe) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("expected idle close, read {n} bytes"),
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "idle reap took {:?}",
+        start.elapsed()
+    );
+
+    state.shutdown();
+    acc.join().unwrap();
+}
+
+#[test]
+fn stats_views_consistent_under_both_drivers() {
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let mut bin = word2ket::serving::BinaryClient::connect(&addr).unwrap();
+        bin.lookup(&[1, 2, 3]).unwrap();
+        bin.knn(7, 4).unwrap();
+        let binary = bin.stats().unwrap();
+        assert!(binary.served > 0, "{driver}");
+        assert_eq!(binary.accept_errors, 0, "{driver}");
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"STATS\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut text = String::new();
+        r.read_line(&mut text).unwrap();
+        assert!(text.contains("accept_errors=0"), "{driver}: {text}");
+        s.write_all(b"QUIT\n").ok();
+        bin.quit().unwrap();
+        state.shutdown();
+        acc.join().unwrap();
+    }
+}
