@@ -1,0 +1,197 @@
+//! Bench: observability overhead — the same batched LOOKUP load against a
+//! server with the metrics plane enabled (the default) and one started with
+//! `[obs] enable = false`, for each net driver.
+//!
+//! What this quantifies: the per-request cost of the `obs/` plane — one
+//! `Instant` read per stage boundary, one relaxed atomic increment per
+//! log₂-bucket histogram sample, and the slow-query ring check. The
+//! acceptance bar for the metrics plane is that enabled-vs-disabled
+//! throughput stays within 5% on the batched lookup path; rows land in
+//! `BENCH_obs.json` with the measured overhead so regressions are visible
+//! in version control, not just in a terminal scrollback.
+//!
+//! The enabled server is also scraped once over the wire (`OP_METRICS`)
+//! after the load run, so the bench doubles as an end-to-end check that the
+//! exposition renders under concurrent traffic.
+//!
+//! Run: cargo bench --bench obs_overhead    (W2K_BENCH_FAST=1 to smoke)
+
+use word2ket::bench::header;
+use word2ket::config::{EmbeddingKind, ExperimentConfig, NetDriver};
+use word2ket::coordinator::server::{self, ServerState};
+use word2ket::serving::BinaryClient;
+use word2ket::util::{Json, Rng, Summary, Timer};
+use std::sync::Arc;
+
+const DIM: usize = 32;
+const BATCH: usize = 16;
+const ACTIVE: usize = 4;
+
+struct Server {
+    state: Arc<ServerState>,
+    addr: String,
+    accept: std::thread::JoinHandle<()>,
+}
+
+fn spawn_server(driver: NetDriver, obs_enabled: bool, vocab: usize) -> Server {
+    let mut cfg = ExperimentConfig::default();
+    cfg.embedding.kind = EmbeddingKind::Word2KetXS;
+    cfg.embedding.order = 2;
+    cfg.embedding.rank = 2;
+    cfg.model.vocab = vocab;
+    cfg.model.emb_dim = DIM;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.serving.batch_window_us = 50;
+    cfg.net.driver = driver;
+    cfg.obs.enable = obs_enabled;
+    let (state, listener, addr) = server::spawn(&cfg).expect("bench server");
+    let st = state.clone();
+    let accept = std::thread::spawn(move || server::accept_loop(listener, st));
+    Server { state, addr, accept }
+}
+
+/// `ACTIVE` workers × `iters` batched lookups each; returns
+/// (requests/s, per-request latency summary).
+fn run_load(addr: &str, vocab: usize, iters: usize) -> (f64, Summary) {
+    let wall = Timer::start();
+    let merged = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..ACTIVE)
+            .map(|t| {
+                scope.spawn(move || {
+                    let mut rng = Rng::new(7200 + t as u64);
+                    let mut client = BinaryClient::connect(addr).expect("load conn");
+                    let mut lat = Summary::new();
+                    let mut ids = vec![0u32; BATCH];
+                    for _ in 0..iters {
+                        for id in ids.iter_mut() {
+                            *id = (rng.next_u64() % vocab as u64) as u32;
+                        }
+                        let timer = Timer::start();
+                        let rows = client.lookup(&ids).expect("lookup");
+                        assert_eq!(rows.len(), BATCH);
+                        lat.add(timer.elapsed_us());
+                    }
+                    client.quit().ok();
+                    lat
+                })
+            })
+            .collect();
+        let mut merged = Summary::new();
+        for h in handles {
+            merged.merge(&h.join().expect("load worker"));
+        }
+        merged
+    });
+    let reqs = (ACTIVE * iters) as f64;
+    (reqs / wall.elapsed().as_secs_f64(), merged)
+}
+
+struct RowOut {
+    driver: NetDriver,
+    obs: bool,
+    rps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    overhead_pct: f64,
+    metrics_lines: usize,
+}
+
+fn main() {
+    header(
+        "Observability overhead: metrics plane on vs off, per net driver",
+        "per-stage timing is one Instant read per boundary and one relaxed \
+         atomic per histogram sample — cheap enough to leave on in \
+         production, and this bench is the receipt",
+    );
+    let fast = std::env::var("W2K_BENCH_FAST").is_ok();
+    let vocab = if fast { 2_000 } else { 10_000 };
+    let iters = if fast { 200 } else { 5_000 };
+
+    let mut out: Vec<RowOut> = Vec::new();
+    for driver in [NetDriver::Threads, NetDriver::Epoll] {
+        println!("driver = {driver}:");
+        let mut baseline_rps = 0.0;
+        for obs_enabled in [false, true] {
+            let server = spawn_server(driver, obs_enabled, vocab);
+            // Warm the cache and the batching path before timing.
+            run_load(&server.addr, vocab, iters / 10 + 1);
+            let (rps, lat) = run_load(&server.addr, vocab, iters);
+            let overhead_pct = if obs_enabled && baseline_rps > 0.0 {
+                (baseline_rps - rps) / baseline_rps * 100.0
+            } else {
+                baseline_rps = rps;
+                0.0
+            };
+            let metrics_lines = if obs_enabled {
+                let mut client = BinaryClient::connect(&server.addr).expect("scrape conn");
+                let text = client.metrics().expect("METRICS over wire");
+                assert!(text.contains("w2k_served_total"), "exposition missing counters");
+                assert!(
+                    text.contains("w2k_stage_us_count{stage=\"kernel\"}"),
+                    "exposition missing stage histograms"
+                );
+                client.quit().ok();
+                text.lines().count()
+            } else {
+                0
+            };
+            println!(
+                "  obs {}  {rps:>9.0} req/s  p50 {:>6.0}µs  p99 {:>6.0}µs{}",
+                if obs_enabled { "on " } else { "off" },
+                lat.p50(),
+                lat.p99(),
+                if obs_enabled {
+                    format!("  overhead {overhead_pct:+.1}%  ({metrics_lines} exposition lines)")
+                } else {
+                    String::new()
+                }
+            );
+            out.push(RowOut {
+                driver,
+                obs: obs_enabled,
+                rps,
+                p50_us: lat.p50(),
+                p99_us: lat.p99(),
+                overhead_pct,
+                metrics_lines,
+            });
+            server.state.shutdown();
+            server.accept.join().ok();
+        }
+    }
+
+    let worst = out
+        .iter()
+        .filter(|r| r.obs)
+        .map(|r| r.overhead_pct)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nworst-case overhead {worst:+.1}% — {}",
+        if worst <= 5.0 {
+            "within the 5% budget"
+        } else {
+            "OVER the 5% budget (loopback noise? rerun without W2K_BENCH_FAST)"
+        }
+    );
+
+    let doc = Json::arr(out.iter().map(|r| {
+        Json::obj(vec![
+            ("bench", Json::str("obs_overhead".to_string())),
+            ("driver", Json::str(r.driver.as_str().to_string())),
+            ("obs", Json::str(if r.obs { "on" } else { "off" }.to_string())),
+            ("rps", Json::num(r.rps)),
+            ("p50_us", Json::num(r.p50_us)),
+            ("p99_us", Json::num(r.p99_us)),
+            ("overhead_pct", Json::num(r.overhead_pct)),
+            ("metrics_lines", Json::num(r.metrics_lines as f64)),
+            ("active", Json::num(ACTIVE as f64)),
+            ("batch", Json::num(BATCH as f64)),
+            ("vocab", Json::num(vocab as f64)),
+            ("dim", Json::num(DIM as f64)),
+        ])
+    }));
+    match std::fs::write("BENCH_obs.json", doc.pretty() + "\n") {
+        Ok(()) => println!("wrote BENCH_obs.json ({} rows)", out.len()),
+        Err(e) => eprintln!("could not write BENCH_obs.json: {e}"),
+    }
+}

@@ -51,12 +51,13 @@ use crate::config::TomlDoc;
 use crate::error::Error;
 use crate::index::{merge_top_k, Neighbor};
 use crate::net::{NetConfig, NetDriver};
+use crate::obs::{relabel_exposition, Obs, ObsConfig, Stage};
 use crate::serving::wire::{self, WireError, WireStats};
 use crate::serving::BinaryClient;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Router knobs, parsed from the same `[cluster]` section as the topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,6 +77,9 @@ pub struct RouterConfig {
     /// concurrent in-flight exchanges on one poller instead of one scoped
     /// thread per shard.
     pub net: NetConfig,
+    /// The router's own metrics plane (`[obs]` section): route/fan-out/
+    /// merge stage histograms, per-shard failover counters, slow ring.
+    pub obs: ObsConfig,
 }
 
 impl Default for RouterConfig {
@@ -86,6 +90,7 @@ impl Default for RouterConfig {
             probe_interval: Duration::from_millis(1000),
             eject_after: 3,
             net: NetConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -105,6 +110,7 @@ impl RouterConfig {
             probe_interval: ms("cluster.probe_interval_ms", d.probe_interval),
             eject_after: doc.usize_or("cluster.eject_after", d.eject_after as usize) as u32,
             net: NetConfig::from_doc(doc),
+            obs: ObsConfig::from_doc(doc),
         }
     }
 }
@@ -215,6 +221,16 @@ struct Inner {
     dim: AtomicUsize,
     stop: AtomicBool,
     failovers: AtomicU64,
+    /// Requests that succeeded only after failing over, per shard
+    /// (`w2k_router_shard_failovers_total{shard=...}`).
+    shard_failovers: Vec<AtomicU64>,
+    /// Downstream deadline expiries observed per shard, whether or not the
+    /// request eventually succeeded elsewhere.
+    shard_timeouts: Vec<AtomicU64>,
+    /// The router's own metrics registry: route/fan-out/merge stage
+    /// histograms, end-to-end latency, slow ring, plus whatever transport
+    /// stages the router's listener driver records.
+    obs: Arc<Obs>,
 }
 
 /// The cluster router (cheaply cloneable handle; see the module docs).
@@ -238,6 +254,9 @@ impl Router {
             dim: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             failovers: AtomicU64::new(0),
+            shard_failovers: shape.iter().map(|_| AtomicU64::new(0)).collect(),
+            shard_timeouts: shape.iter().map(|_| AtomicU64::new(0)).collect(),
+            obs: Arc::new(Obs::new(&cfg.obs)),
             topo,
             cfg,
         });
@@ -286,6 +305,10 @@ impl Router {
         if ids.is_empty() {
             return Err(RouterError::BadQuery);
         }
+        // Stage boundaries (one Instant read each, only when obs is on):
+        // route = bucketing ids by owning shard, fanout = downstream
+        // round-trips, merge = scattering rows back into request order.
+        let t0 = inner.obs.enabled().then(Instant::now);
         let vocab = inner.topo.vocab();
         let n = inner.topo.n_shards();
         // positions[s] / locals[s]: which request slots shard s fills, and
@@ -302,12 +325,17 @@ impl Router {
         }
         let mut out: Vec<Vec<f32>> = vec![Vec::new(); ids.len()];
         let involved: Vec<usize> = (0..n).filter(|&s| !positions[s].is_empty()).collect();
+        let t_route = t0.map(|_| Instant::now());
         if let [s] = involved[..] {
             // Single-shard fast path: no scatter threads for the common
             // small request.
             let rows = inner.with_replica(s, |c| c.lookup(&locals[s]))?;
+            let t_fan = t0.map(|_| Instant::now());
             for (row, &pos) in rows.into_iter().zip(&positions[s]) {
                 out[pos] = row;
+            }
+            if let (Some(t0), Some(t_route), Some(t_fan)) = (t0, t_route, t_fan) {
+                inner.record_route("lookup", t0, t_route, t_fan);
             }
             return Ok(out);
         }
@@ -316,10 +344,14 @@ impl Router {
         } else {
             scatter(&involved, |s| inner.with_replica(s, |c| c.lookup(&locals[s])))?
         };
+        let t_fan = t0.map(|_| Instant::now());
         for (s, rows) in involved.iter().zip(gathered) {
             for (row, &pos) in rows.into_iter().zip(&positions[*s]) {
                 out[pos] = row;
             }
+        }
+        if let (Some(t0), Some(t_route), Some(t_fan)) = (t0, t_route, t_fan) {
+            inner.record_route("lookup", t0, t_route, t_fan);
         }
         Ok(out)
     }
@@ -383,11 +415,13 @@ impl Router {
     ) -> Result<Vec<Neighbor>, RouterError> {
         let inner = &*self.inner;
         let shards: Vec<usize> = (0..inner.topo.n_shards()).collect();
+        let t0 = inner.obs.enabled().then(Instant::now);
         let per_shard = if inner.multiplexed() && shards.len() > 1 {
             inner.fan_knn(&shards, query, per_shard_k)?
         } else {
             scatter(&shards, |s| inner.with_replica(s, |c| c.knn_vec(query, per_shard_k)))?
         };
+        let t_fan = t0.map(|_| Instant::now());
         let lists = shards.iter().zip(per_shard).map(|(&s, locals)| {
             locals
                 .into_iter()
@@ -402,7 +436,14 @@ impl Router {
         // their own vocabularies, and the router must do the same rather
         // than let a u32::MAX k from the wire size an eager allocation.
         let cap = (per_shard_k as usize).min(inner.topo.vocab());
-        Ok(merge_top_k(cap, lists))
+        let merged = merge_top_k(cap, lists);
+        if let (Some(t0), Some(t_fan)) = (t0, t_fan) {
+            // No routing decision for a scatter-to-all: the route span is
+            // empty by construction (the query row's own lookup recorded
+            // its routing separately).
+            inner.record_route("knn", t0, t0, t_fan);
+        }
+        Ok(merged)
     }
 
     /// Every (shard, replica) coordinate, shard-major.
@@ -550,6 +591,82 @@ impl Router {
             .collect();
         self.rolling_reload(&paths)
     }
+
+    /// The router's metrics registry — its own listener records transport
+    /// stages (parse/flush, reactor loop) into it via [`net::Service::obs`]
+    /// (see `cluster::server`).
+    pub fn obs(&self) -> Arc<Obs> {
+        self.inner.obs.clone()
+    }
+
+    /// Cluster-wide METRICS roll-up: the router's own families first
+    /// (total and per-shard failover counters, per-shard downstream
+    /// timeout counters, route/fan-out/merge stage histograms), then every
+    /// replica's full exposition scraped over `OP_METRICS` and re-emitted
+    /// with `shard`/`replica` labels injected into each sample. A
+    /// `w2k_scrape_ok{shard,replica}` marker precedes each replica's
+    /// section (0 when the replica did not answer — its samples are simply
+    /// absent, so one dead node never hides the rest of the cluster).
+    pub fn metrics(&self) -> String {
+        use std::fmt::Write as _;
+        let inner = &*self.inner;
+        let mut out = String::new();
+        let _ = writeln!(out, "w2k_router_failovers_total {}", self.failovers());
+        for (s, c) in inner.shard_failovers.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "w2k_router_shard_failovers_total{{shard=\"{s}\"}} {}",
+                c.load(Ordering::Relaxed)
+            );
+        }
+        for (s, c) in inner.shard_timeouts.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "w2k_router_shard_timeouts_total{{shard=\"{s}\"}} {}",
+                c.load(Ordering::Relaxed)
+            );
+        }
+        let _ = writeln!(out, "w2k_router_healthy_replicas {}", inner.health.healthy_count());
+        let _ = writeln!(out, "w2k_router_total_replicas {}", inner.health.total());
+        inner.obs.render_into(&mut out);
+        // Scrape every replica in parallel on dedicated admin connections —
+        // a dead replica costs one connect timeout, not one per corpse, and
+        // the pooled request slots are never held across a scrape.
+        let pairs = self.replica_pairs();
+        let scraped: Vec<(usize, usize, Option<String>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = pairs
+                .iter()
+                .map(|&(s, r)| {
+                    scope.spawn(move || {
+                        (s, r, inner.with_admin_connection(s, r, |c| c.metrics()).ok())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("metrics scrape thread")).collect()
+        });
+        for (s, r, text) in scraped {
+            let _ = writeln!(
+                out,
+                "w2k_scrape_ok{{shard=\"{s}\",replica=\"{r}\"}} {}",
+                u32::from(text.is_some())
+            );
+            if let Some(text) = text {
+                out.push_str(&relabel_exposition(
+                    &text,
+                    &format!("shard=\"{s}\",replica=\"{r}\""),
+                ));
+            }
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+
+    /// The router's own slow-query ring (`METRICS?slow` on the router
+    /// listener) — slow routed requests with their route/fan-out/merge
+    /// split, not the shards' rings (scrape a shard directly for those).
+    pub fn metrics_slow_text(&self) -> String {
+        self.inner.obs.render_slow()
+    }
 }
 
 /// Run `f(shard)` for every listed shard on scoped threads and gather the
@@ -576,6 +693,29 @@ fn take_k(mut merged: Vec<Neighbor>, k: usize) -> Vec<(u32, f32)> {
 }
 
 impl Inner {
+    /// Record the route/fan-out/merge stage split of one routed request
+    /// (merge ends now), its end-to-end latency, and a slow-ring entry.
+    /// Callers only reach this when obs is enabled (the `Instant`s exist).
+    fn record_route(&self, op: &'static str, t0: Instant, route_done: Instant, fan_done: Instant) {
+        let now = Instant::now();
+        let route = route_done.duration_since(t0);
+        let fan = fan_done.duration_since(route_done);
+        let merge = now.duration_since(fan_done);
+        self.obs.record_stage(Stage::Route, route);
+        self.obs.record_stage(Stage::Fanout, fan);
+        self.obs.record_stage(Stage::Merge, merge);
+        self.obs.record_e2e(now.duration_since(t0));
+        self.obs.note_slow(
+            op,
+            now.duration_since(t0),
+            vec![
+                (Stage::Route, route.as_micros() as u64),
+                (Stage::Fanout, fan.as_micros() as u64),
+                (Stage::Merge, merge.as_micros() as u64),
+            ],
+        );
+    }
+
     /// Lock a replica slot, (re)connecting if needed, and run `op` on it.
     /// On transport failure the pooled connection is dropped and the
     /// failure recorded; server status errors are *answers* and count as
@@ -702,6 +842,7 @@ impl Inner {
                     Ok(v) => {
                         if attempts > 1 {
                             self.failovers.fetch_add(1, Ordering::Relaxed);
+                            self.shard_failovers[s].fetch_add(1, Ordering::Relaxed);
                         }
                         return Ok(v);
                     }
@@ -709,6 +850,9 @@ impl Inner {
                         if code == wire::STATUS_OVERLOADED
                             || code == wire::STATUS_TIMEOUT =>
                     {
+                        if code == wire::STATUS_TIMEOUT {
+                            self.shard_timeouts[s].fetch_add(1, Ordering::Relaxed);
+                        }
                         last = format!("status {code}: {}", wire::status_name(code));
                     }
                     // Any other status is a final answer about the request;
@@ -717,7 +861,12 @@ impl Inner {
                     Err(WireError::Status(code)) => {
                         return Err(RouterError::Wire(WireError::Status(code)));
                     }
-                    Err(e) => last = e.to_string(),
+                    Err(e) => {
+                        if matches!(e, WireError::TimedOut) {
+                            self.shard_timeouts[s].fetch_add(1, Ordering::Relaxed);
+                        }
+                        last = e.to_string();
+                    }
                 }
             }
         }
@@ -819,6 +968,7 @@ impl Inner {
         let v = self.with_replica(s, &mut op)?;
         if failed {
             self.failovers.fetch_add(1, Ordering::Relaxed);
+            self.shard_failovers[s].fetch_add(1, Ordering::Relaxed);
         }
         Ok(v)
     }

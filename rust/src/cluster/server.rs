@@ -21,6 +21,10 @@
 //!   (minimum) generation.
 //! * `PING` answers from the router itself — liveness of the routing tier,
 //!   not of any shard.
+//! * `METRICS` / `OP_METRICS` answers the cluster-wide roll-up
+//!   ([`Router::metrics`]): the router's own families followed by every
+//!   replica's exposition re-labelled with `shard`/`replica`;
+//!   `METRICS?slow` answers the router's own slow-query ring.
 
 use super::router::{ClusterStats, Router, RouterConfig, RouterError};
 use super::topology::Topology;
@@ -108,6 +112,9 @@ fn dispatch_text(state: &RouterState, line: &str) -> TextAction {
         ["PING"] => "OK\n".to_string(),
         ["PING", ..] => "ERR PING takes no arguments\n".to_string(),
         ["STATS"] => state.stats_line(),
+        ["METRICS"] => router.metrics(),
+        ["METRICS?slow"] => router.metrics_slow_text(),
+        ["METRICS" | "METRICS?slow", ..] => "ERR METRICS takes no arguments\n".to_string(),
         ["LOOKUP"] => err_line(&RouterError::BadQuery),
         ["LOOKUP", rest @ ..] if rest.len() > wire::MAX_IDS as usize => {
             "ERR too many ids\n".to_string()
@@ -257,6 +264,16 @@ fn respond_binary_router(state: &RouterState, req: BinRequest, out: &mut Vec<u8>
                 wire::OP_STATS => {
                     let _ = wire::write_stats_frame(out, &state.stats_rollup().aggregate.fields());
                 }
+                wire::OP_METRICS if ids.is_empty() => {
+                    let text = state.router.metrics();
+                    wire::put_u32(out, wire::STATUS_OK);
+                    wire::put_u32(out, text.len() as u32);
+                    out.extend_from_slice(text.as_bytes());
+                }
+                wire::OP_METRICS => {
+                    wire::put_u32(out, wire::STATUS_BAD_REQUEST);
+                    wire::put_u32(out, 0);
+                }
                 _ => {
                     wire::put_u32(out, wire::STATUS_BAD_FRAME);
                     wire::put_u32(out, 0);
@@ -288,6 +305,10 @@ impl net::Service for RouterState {
 
     fn note_accept_error(&self) {
         self.accept_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn obs(&self) -> Option<Arc<crate::obs::Obs>> {
+        Some(self.router.obs())
     }
 }
 

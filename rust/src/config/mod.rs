@@ -15,9 +15,11 @@ pub use schema::{
 };
 pub use toml::{TomlDoc, TomlValue};
 
-// The `[net]` section's types live with the drivers in `crate::net`;
+// The `[net]` section's types live with the drivers in `crate::net`, and
+// the `[obs]` section's with the metrics plane in `crate::obs`;
 // re-exported here so config consumers see one namespace.
 pub use crate::net::{NetConfig, NetDriver};
+pub use crate::obs::ObsConfig;
 
 use crate::error::{Error, Result};
 use std::path::Path;

@@ -3,6 +3,7 @@
 use super::toml::TomlDoc;
 use crate::error::{Error, Result};
 use crate::net::NetConfig;
+use crate::obs::ObsConfig;
 use crate::snapshot::Codec;
 
 /// Which downstream NLP task (paper §4 evaluates three).
@@ -302,6 +303,9 @@ pub struct ExperimentConfig {
     /// `[net]` — which connection driver the listener runs on plus its
     /// timeouts (see `net/`).
     pub net: NetConfig,
+    /// `[obs]` — metrics plane: enable switch, slow-query ring length,
+    /// stage-histogram toggle (see `obs/`).
+    pub obs: ObsConfig,
     pub artifacts_dir: String,
 }
 
@@ -319,6 +323,7 @@ impl Default for ExperimentConfig {
             index: IndexConfig::default(),
             snapshot: SnapshotConfig::default(),
             net: NetConfig::default(),
+            obs: ObsConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -398,6 +403,7 @@ impl ExperimentConfig {
                 },
             },
             net: NetConfig::from_doc(doc),
+            obs: ObsConfig::from_doc(doc),
             artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir),
         };
         cfg.validate()?;
@@ -459,6 +465,9 @@ impl ExperimentConfig {
         }
         if self.net.handlers == 0 {
             return Err(Error::Config("net.handlers must be >= 1".into()));
+        }
+        if self.obs.slow_log_len > 1 << 16 {
+            return Err(Error::Config("obs.slow_log_len must be <= 65536".into()));
         }
         Ok(())
     }
@@ -623,6 +632,29 @@ drain_ms = 500
 
         let mut bad = ExperimentConfig::default();
         bad.net.handlers = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        let src = r#"
+[obs]
+enable = false
+slow_log_len = 8
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(!cfg.obs.enable);
+        assert_eq!(cfg.obs.slow_log_len, 8);
+        assert_eq!(cfg.obs.stage_histograms, ObsConfig::default().stage_histograms);
+
+        // Defaults: metrics on, 32-entry slow ring.
+        let d = ExperimentConfig::default();
+        assert!(d.obs.enable);
+        assert_eq!(d.obs.slow_log_len, 32);
+
+        let mut bad = ExperimentConfig::default();
+        bad.obs.slow_log_len = (1 << 16) + 1;
         assert!(bad.validate().is_err());
     }
 

@@ -21,6 +21,11 @@
 //!                                 knn_queries=.. knn_candidates=..
 //!                                 knn_mean_probes=.. model_generation=..
 //!                                 snapshot_bytes=.. accept_errors=..\n`
+//!   `METRICS\n`                → Prometheus-style exposition text
+//!                                 (counters, per-stage latency histograms,
+//!                                 cache occupancy), terminated by `# EOF`
+//!   `METRICS?slow\n`           → the bounded slow-query ring in the same
+//!                                 format (rank/op/stage labels)
 //!   `QUIT\n`                   → closes the connection.
 //!
 //! Malformed input (bad ids, out-of-range ids, empty LOOKUP, unknown
@@ -56,13 +61,14 @@ impl ServerState {
                 cfg.model.emb_dim,
                 &mut rng,
             );
-            ServingState::new(store, &cfg.serving, &cfg.index)
+            ServingState::new_with_obs(store, &cfg.serving, &cfg.index, &cfg.obs)
         } else {
-            ServingState::from_snapshot(
+            ServingState::from_snapshot_with_obs(
                 std::path::Path::new(&cfg.snapshot.path),
                 &cfg.serving,
                 &cfg.index,
                 cfg.snapshot.mmap,
+                &cfg.obs,
             )?
         };
         // RELOADs honor the same [snapshot] mmap preference as boot.
@@ -146,6 +152,12 @@ fn dispatch_text(state: &ServerState, line: &str) -> TextAction {
         ["PING"] => "OK\n".to_string(),
         ["PING", ..] => "ERR PING takes no arguments\n".to_string(),
         ["STATS"] => state.stats_line(),
+        // Metrics plane: full exposition and the slow-query ring. The
+        // `?slow` suffix is part of the token (no whitespace), mirroring
+        // the path-style query a Prometheus scraper would send.
+        ["METRICS"] => state.serving.metrics_text(),
+        ["METRICS?slow"] => state.serving.metrics_slow_text(),
+        ["METRICS" | "METRICS?slow", ..] => "ERR METRICS takes no arguments\n".to_string(),
         ["LOOKUP"] => err_line(LookupError::Empty),
         // Same allocation cap as the binary protocol's MAX_IDS: one text
         // line must not be able to force a multi-GB reply buffer.
@@ -216,6 +228,10 @@ impl net::Service for ServerState {
 
     fn note_accept_error(&self) {
         self.serving.note_accept_error();
+    }
+
+    fn obs(&self) -> Option<Arc<crate::obs::Obs>> {
+        Some(self.serving.obs())
     }
 }
 
@@ -364,12 +380,68 @@ mod tests {
     fn stats_before_traffic_is_zeros() {
         let (state, addr, acc) = start();
         let resp = request(&addr, "STATS\n", 1);
-        assert_eq!(
-            resp[0],
-            "OK p50_us=0 p99_us=0 served=0 cache_hits=0 cache_misses=0 rejected=0 \
-             knn_queries=0 knn_candidates=0 knn_mean_probes=0.00 model_generation=1 \
-             snapshot_bytes=0 accept_errors=0"
-        );
+        // Generated from the shared field table instead of a hand-written
+        // literal: adding a STATS field updates this expectation
+        // automatically, while renames/reorders still fail loudly.
+        let mut expected = String::from("OK");
+        for name in wire::STATS_FIELD_NAMES {
+            let value = if name == "model_generation" { 1.0 } else { 0.0 };
+            expected.push(' ');
+            expected.push_str(name);
+            expected.push('=');
+            expected.push_str(&wire::format_stats_field(name, value));
+        }
+        assert_eq!(resp[0], expected);
+        // Drift guard: the generated line went through the real formatter
+        // (float fields keep their fixed precision, counters render bare).
+        assert!(expected.contains("knn_mean_probes=0.00"), "{expected}");
+        assert!(expected.contains("p50_us=0 "), "{expected}");
+        state.shutdown();
+        acc.join().unwrap();
+    }
+
+    /// Tentpole: the text METRICS verb serves a `# EOF`-terminated
+    /// Prometheus-style exposition, including the transport-stage
+    /// histograms the threads driver records, and `METRICS?slow` serves
+    /// the slow-query ring.
+    #[test]
+    fn text_metrics_exposition_roundtrip() {
+        let (state, addr, acc) = start();
+        request(&addr, "LOOKUP 1 2\n", 2);
+
+        let read_exposition = |verb: &str| -> String {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(verb.as_bytes()).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut text = String::new();
+            loop {
+                let mut l = String::new();
+                if r.read_line(&mut l).unwrap() == 0 {
+                    break;
+                }
+                let done = l == "# EOF\n";
+                text.push_str(&l);
+                if done {
+                    break;
+                }
+            }
+            s.write_all(b"QUIT\n").ok();
+            text
+        };
+
+        let text = read_exposition("METRICS\n");
+        assert!(text.contains("w2k_served_total 2"), "{text}");
+        assert!(text.contains("w2k_stage_us_count{stage=\"parse\"}"), "{text}");
+        assert!(text.contains("w2k_request_us_count"), "{text}");
+        assert!(text.ends_with("# EOF\n"), "{text}");
+
+        let slow = read_exposition("METRICS?slow\n");
+        assert!(slow.contains("w2k_slow_total_us"), "{slow}");
+        assert!(slow.ends_with("# EOF\n"), "{slow}");
+
+        let resp = request(&addr, "METRICS now\n", 1);
+        assert!(resp[0].starts_with("ERR"), "{resp:?}");
+
         state.shutdown();
         acc.join().unwrap();
     }

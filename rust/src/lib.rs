@@ -45,6 +45,7 @@ pub mod index;
 pub mod kron;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod repr;
 pub mod runtime;
 pub mod serving;

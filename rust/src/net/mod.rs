@@ -172,6 +172,13 @@ pub trait Service: Send + Sync + 'static {
 
     /// A transient accept(2) failure was survived (counted into STATS).
     fn note_accept_error(&self);
+
+    /// The metrics registry the driver should record transport-level
+    /// timings into (parse/flush stages, reactor loop iterations, writev
+    /// batch sizes). `None` (the default) disables driver instrumentation.
+    fn obs(&self) -> Option<Arc<crate::obs::Obs>> {
+        None
+    }
 }
 
 /// Shared shutdown/drain state for one listener: the stop flag, the count

@@ -41,6 +41,7 @@ use super::poll::{Event, Poller};
 use super::sys;
 use super::timer::TimerWheel;
 use super::{Lifecycle, NetConfig, Service, TextAction, MAX_LINE_BYTES};
+use crate::obs::{Obs, Stage};
 use crate::serving::wire::{self, BinRequest};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{self, Read, Write};
@@ -201,6 +202,10 @@ struct Reactor {
     /// Tick until which accepts pause after a transient failure.
     accept_pause_until: u64,
     cfg: NetConfig,
+    /// Metrics plane (from [`Service::obs`], kept only when enabled):
+    /// parse/flush stage timings, loop-iteration and writev-batch-size
+    /// histograms. `None` costs nothing on the hot path.
+    obs: Option<Arc<Obs>>,
 }
 
 impl Reactor {
@@ -377,6 +382,7 @@ impl Reactor {
                     if conn.inflight > 0 {
                         return true; // one text line in flight at a time
                     }
+                    let t_parse = self.obs.as_ref().map(|_| Instant::now());
                     match parser::next_line(&conn.inbuf, MAX_LINE_BYTES) {
                         LineStep::Incomplete => {
                             if conn.eof && !conn.inbuf.is_empty() {
@@ -399,6 +405,9 @@ impl Reactor {
                         }
                         LineStep::Line { consumed, text } => {
                             conn.inbuf.drain(..consumed);
+                            if let (Some(o), Some(t)) = (&self.obs, t_parse) {
+                                o.record_stage(Stage::Parse, t.elapsed());
+                            }
                             // Invalid UTF-8 closes silently, like the
                             // blocking read_line erroring out.
                             let Some(text) = text else { return false };
@@ -406,17 +415,23 @@ impl Reactor {
                         }
                     }
                 }
-                Phase::Binary => match parser::next_frame(&conn.inbuf) {
-                    None => return true,
-                    Some((consumed, req)) => {
-                        conn.inbuf.drain(..consumed);
-                        let terminal = req.is_terminal();
-                        dispatch(conn, token, shared, lifecycle, Req::Binary(req));
-                        if terminal {
-                            conn.phase = Phase::Discard;
+                Phase::Binary => {
+                    let t_parse = self.obs.as_ref().map(|_| Instant::now());
+                    match parser::next_frame(&conn.inbuf) {
+                        None => return true,
+                        Some((consumed, req)) => {
+                            conn.inbuf.drain(..consumed);
+                            if let (Some(o), Some(t)) = (&self.obs, t_parse) {
+                                o.record_stage(Stage::Parse, t.elapsed());
+                            }
+                            let terminal = req.is_terminal();
+                            dispatch(conn, token, shared, lifecycle, Req::Binary(req));
+                            if terminal {
+                                conn.phase = Phase::Discard;
+                            }
                         }
                     }
-                },
+                }
                 Phase::Discard => {
                     conn.inbuf.clear();
                     return true;
@@ -435,9 +450,14 @@ impl Reactor {
                 let off = if i == 0 { conn.out_head } else { 0 };
                 iov.push(sys::raw::IoVec { base: buf[off..].as_ptr(), len: buf.len() - off });
             }
+            let t_flush = self.obs.as_ref().map(|_| Instant::now());
             match sys::writev(conn.fd, &iov) {
                 Ok(0) => return false,
                 Ok(mut n) => {
+                    if let (Some(o), Some(t)) = (&self.obs, t_flush) {
+                        o.record_stage(Stage::Flush, t.elapsed());
+                        o.record_writev_batch(iov.len());
+                    }
                     while n > 0 {
                         let avail = conn.outq[0].len() - conn.out_head;
                         if n >= avail {
@@ -633,6 +653,7 @@ pub fn serve(
         next_timer_gen: 0,
         accept_pause_until: 0,
         cfg: *cfg,
+        obs: svc.obs().filter(|o| o.enabled()),
     };
     if let Some(l) = r.listener.as_ref() {
         if r.poller.register(l.as_raw_fd(), LISTENER, true, false).is_err() {
@@ -652,6 +673,10 @@ pub fn serve(
     let mut due: Vec<(usize, u64)> = Vec::new();
     let mut drain_deadline: Option<Instant> = None;
     loop {
+        // One histogram sample per event-loop lap (includes the bounded
+        // `poller.wait`); a fat tail here means a handler is running on the
+        // reactor thread or a parse/flush is degenerate.
+        let iter_t0 = r.obs.as_ref().map(|_| Instant::now());
         r.fire_timers(&mut due);
 
         if lifecycle.stopping() {
@@ -695,6 +720,9 @@ pub fn serve(
             }
         }
         r.process_done(&shared, &*svc, &lifecycle);
+        if let (Some(o), Some(t)) = (&r.obs, iter_t0) {
+            o.record_loop_iter(t.elapsed());
+        }
     }
 
     // Force-close whatever the drain left behind, then stop the pool.

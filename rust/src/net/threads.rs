@@ -14,6 +14,7 @@
 //!   unpark blocked reader threads, join them all — no leaked threads.
 
 use super::{sys, Lifecycle, NetConfig, Service, TextAction, MAX_LINE_BYTES};
+use crate::obs::Stage;
 use crate::serving::wire;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -102,6 +103,12 @@ fn run_conn(stream: TcpStream, svc: &dyn Service, lifecycle: &Lifecycle) {
     let Ok(clone) = stream.try_clone() else { return };
     let mut reader = BufReader::new(clone);
     let mut writer = stream;
+    // Transport-level timing (parse/flush stages). The blocking reads park
+    // waiting for the *next request* to arrive at all, which is idle time,
+    // not parse work — so each loop below blocks in `fill_buf` first and
+    // only then starts the parse timer.
+    let obs = svc.obs();
+    let timing = obs.as_ref().is_some_and(|o| o.enabled());
     let first = match reader.fill_buf() {
         Ok(buf) if !buf.is_empty() => buf[0],
         _ => return,
@@ -121,18 +128,31 @@ fn run_conn(stream: TcpStream, svc: &dyn Service, lifecycle: &Lifecycle) {
         }
         let mut out = Vec::new();
         loop {
+            match reader.fill_buf() {
+                Ok(buf) if buf.is_empty() => break, // clean EOF between frames
+                Err(_) => break,
+                Ok(_) => {}
+            }
+            let t_parse = timing.then(Instant::now);
             let req = match wire::read_frame(&mut reader) {
                 Ok(Some(req)) => req,
-                Ok(None) => break, // clean EOF between frames
+                Ok(None) => break,
                 Err(e) => {
                     crate::debug!("binary conn {peer:?} ended: {e}");
                     break;
                 }
             };
+            if let (Some(o), Some(t)) = (&obs, t_parse) {
+                o.record_stage(Stage::Parse, t.elapsed());
+            }
             out.clear();
             lifecycle.begin_request();
             let close = svc.binary(req, &mut out);
+            let t_flush = timing.then(Instant::now);
             let wrote = out.is_empty() || writer.write_all(&out).is_ok();
+            if let (Some(o), Some(t)) = (&obs, t_flush) {
+                o.record_stage(Stage::Flush, t.elapsed());
+            }
             lifecycle.end_request();
             if close || !wrote {
                 break;
@@ -141,10 +161,19 @@ fn run_conn(stream: TcpStream, svc: &dyn Service, lifecycle: &Lifecycle) {
     } else {
         let mut line = String::new();
         loop {
+            match reader.fill_buf() {
+                Ok(buf) if buf.is_empty() => break,
+                Err(_) => break,
+                Ok(_) => {}
+            }
             line.clear();
+            let t_parse = timing.then(Instant::now);
             match (&mut reader).take(MAX_LINE_BYTES as u64).read_line(&mut line) {
                 Ok(0) | Err(_) => break,
                 Ok(_) => {}
+            }
+            if let (Some(o), Some(t)) = (&obs, t_parse) {
+                o.record_stage(Stage::Parse, t.elapsed());
             }
             if line.len() >= MAX_LINE_BYTES && !line.ends_with('\n') {
                 // Hit the cap mid-line: the rest of the stream is
@@ -154,11 +183,15 @@ fn run_conn(stream: TcpStream, svc: &dyn Service, lifecycle: &Lifecycle) {
             }
             lifecycle.begin_request();
             let action = svc.text(&line);
+            let t_flush = timing.then(Instant::now);
             let wrote = match &action {
                 TextAction::Quit => true,
                 TextAction::Reply(r) if r.is_empty() => true,
                 TextAction::Reply(r) => writer.write_all(r.as_bytes()).is_ok(),
             };
+            if let (Some(o), Some(t)) = (&obs, t_flush) {
+                o.record_stage(Stage::Flush, t.elapsed());
+            }
             lifecycle.end_request();
             if action == TextAction::Quit || !wrote {
                 break;

@@ -1,0 +1,730 @@
+//! Observability plane: log₂-bucket histograms, per-stage request timing,
+//! a bounded slow-query ring, and Prometheus-style text exposition.
+//!
+//! Every latency measurement in the serving stack lands here instead of in
+//! unbounded sample vectors: a [`Histogram`] is 64 atomic counters covering
+//! `[0, 2^63)` microseconds in power-of-two buckets, so recording is one
+//! relaxed `fetch_add`, memory is constant for the life of the server, and
+//! per-worker histograms merge by addition. Quantiles (p50/p90/p99/p999)
+//! come from linear interpolation inside the bucket holding the target
+//! rank, which bounds their error by one bucket width.
+//!
+//! Request time is attributed to [`Stage`]s — `parse → enqueue →
+//! batch_wait → cache/kernel → serialize → flush` on a node, `route →
+//! fanout → merge` on the cluster router — each stage costing one
+//! `Instant` read at its boundary. The [`Obs`] registry owns the stage
+//! histograms plus the end-to-end/request and per-batch histograms, the
+//! reactor's loop-iteration and writev-batch-size histograms, snapshot
+//! reload durations, the pool queue-depth high-water mark, and the
+//! [`SlowLog`] ring of the slowest requests with their stage breakdown.
+//!
+//! Exposition is `name{label="v"} value` lines in a fixed render order, so
+//! two servers in the same state emit byte-identical text regardless of
+//! which network driver produced it. The `METRICS` text verb and the
+//! binary `OP_METRICS` op both serve the same string; a scrape ends with a
+//! `# EOF` terminator line (OpenMetrics style) so line-oriented clients
+//! know when the exposition is complete.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Number of power-of-two buckets per histogram. Bucket 0 holds exact
+/// zeros; bucket `b ≥ 1` holds values in `[2^(b-1), 2^b)`; the last bucket
+/// absorbs everything from `2^62` up.
+pub const BUCKETS: usize = 64;
+
+/// The quantiles every histogram exposes, as (label, q) pairs.
+pub const QUANTILES: [(&str, f64); 4] =
+    [("0.5", 0.5), ("0.9", 0.9), ("0.99", 0.99), ("0.999", 0.999)];
+
+/// `[obs]` section of the experiment config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Master switch: when false every record call is a single branch and
+    /// `METRICS` reports all-zero families.
+    pub enable: bool,
+    /// Capacity of the slow-query ring (`METRICS?slow`); 0 disables it.
+    pub slow_log_len: usize,
+    /// Per-stage histograms can be switched off independently of counters
+    /// and the end-to-end latency histogram.
+    pub stage_histograms: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig { enable: true, slow_log_len: 32, stage_histograms: true }
+    }
+}
+
+impl ObsConfig {
+    /// Read `[obs]` overrides from a parsed TOML doc (missing keys keep
+    /// defaults, like every other config section).
+    pub fn from_doc(doc: &crate::config::TomlDoc) -> ObsConfig {
+        let d = ObsConfig::default();
+        ObsConfig {
+            enable: doc.bool_or("obs.enable", d.enable),
+            slow_log_len: doc.usize_or("obs.slow_log_len", d.slow_log_len),
+            stage_histograms: doc.bool_or("obs.stage_histograms", d.stage_histograms),
+        }
+    }
+}
+
+/// A stage of the request path. Node-local requests flow through the first
+/// seven; the cluster router's scatter-gather path uses the last three.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Decoding one request frame or text line off the socket.
+    Parse,
+    /// Submitting the job into the worker pool (lock + queue push).
+    Enqueue,
+    /// Sitting in the shard queue until a worker drains the batch.
+    BatchWait,
+    /// Hot-row cache bookkeeping (lookup, admission, eviction).
+    Cache,
+    /// Factored-kernel row reconstruction on a cache miss.
+    Kernel,
+    /// Materializing response rows and waking the requester.
+    Serialize,
+    /// Writing response bytes to the socket.
+    Flush,
+    /// Router: partitioning a request across the shard topology.
+    Route,
+    /// Router: shard round-trips (scoped threads or multiplexed).
+    Fanout,
+    /// Router: reassembling shard replies into one response.
+    Merge,
+}
+
+impl Stage {
+    /// Every stage, in render order.
+    pub const ALL: [Stage; 10] = [
+        Stage::Parse,
+        Stage::Enqueue,
+        Stage::BatchWait,
+        Stage::Cache,
+        Stage::Kernel,
+        Stage::Serialize,
+        Stage::Flush,
+        Stage::Route,
+        Stage::Fanout,
+        Stage::Merge,
+    ];
+
+    /// The `stage="..."` label value.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Enqueue => "enqueue",
+            Stage::BatchWait => "batch_wait",
+            Stage::Cache => "cache",
+            Stage::Kernel => "kernel",
+            Stage::Serialize => "serialize",
+            Stage::Flush => "flush",
+            Stage::Route => "route",
+            Stage::Fanout => "fanout",
+            Stage::Merge => "merge",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Fixed-size log₂-bucket histogram: 64 atomic buckets, lock-free
+/// recording, constant memory, mergeable by addition. Values are unitless
+/// `u64`s — microseconds for latencies, counts for size distributions.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Index of the bucket holding `v`: 0 for 0, else `⌊log₂ v⌋ + 1`, capped.
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound of bucket `b`.
+fn bucket_lo(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << (b - 1)
+    }
+}
+
+/// Exclusive upper bound of bucket `b` (saturating for the last bucket).
+fn bucket_hi(b: usize) -> u64 {
+    if b == 0 {
+        1
+    } else if b >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        1u64 << b
+    }
+}
+
+/// Width of the bucket that holds `v` — the error bound on any quantile
+/// estimate near `v`.
+pub fn bucket_width(v: u64) -> u64 {
+    let b = bucket_of(v);
+    bucket_hi(b) - bucket_lo(b)
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// A fresh all-zero histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. One relaxed `fetch_add` per counter — safe
+    /// from any thread, never blocks, never allocates.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Fold another histogram into this one (bucketwise addition) — how
+    /// per-worker histograms aggregate without ever resetting.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = theirs.load(Ordering::Relaxed);
+            if v > 0 {
+                mine.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+    }
+
+    /// Quantile estimate for `q ∈ [0, 1]` by linear interpolation inside
+    /// the bucket containing the target rank; 0 when empty. The estimate
+    /// is within one bucket width of the exact order statistic.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        // 1-based rank of the order statistic we are estimating.
+        let rank = (q * total as f64).ceil().clamp(1.0, total as f64);
+        let mut seen = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            let n = bucket.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if (seen + n) as f64 >= rank {
+                let lo = bucket_lo(b) as f64;
+                let hi = bucket_hi(b) as f64;
+                let frac = (rank - seen as f64) / n as f64;
+                return lo + frac * (hi - lo).max(0.0);
+            }
+            seen += n;
+        }
+        bucket_hi(BUCKETS - 1) as f64
+    }
+
+    /// Median estimate.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    /// 99th-percentile estimate.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// One entry in the slow-query ring: the request's end-to-end time plus
+/// its per-stage breakdown at the moment it completed.
+#[derive(Debug, Clone)]
+pub struct SlowEntry {
+    /// Which operation ("lookup", "knn").
+    pub op: &'static str,
+    /// End-to-end microseconds for this request.
+    pub total_us: u64,
+    /// Stage breakdown, in the order the stages ran.
+    pub stages: Vec<(Stage, u64)>,
+}
+
+/// Bounded in-memory ring of the top-k slowest requests, kept sorted
+/// slowest-first. Admission is screened by a lock-free threshold so the
+/// hot path only takes the lock for requests that would actually place.
+pub struct SlowLog {
+    cap: usize,
+    /// Smallest total in a full ring — requests at or below it can skip
+    /// the lock entirely. 0 while the ring has room.
+    threshold: AtomicU64,
+    entries: Mutex<Vec<SlowEntry>>,
+}
+
+impl SlowLog {
+    /// A ring holding at most `cap` entries (`cap == 0` records nothing).
+    pub fn new(cap: usize) -> SlowLog {
+        SlowLog { cap, threshold: AtomicU64::new(0), entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Offer a completed request; it places only if it beats the current
+    /// k-th slowest.
+    pub fn offer(&self, entry: SlowEntry) {
+        if self.cap == 0 || entry.total_us <= self.threshold.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut entries = self.entries.lock().expect("slow log lock poisoned");
+        if entries.len() == self.cap
+            && entry.total_us <= entries.last().map_or(0, |e| e.total_us)
+        {
+            return;
+        }
+        let at = entries
+            .iter()
+            .position(|e| e.total_us < entry.total_us)
+            .unwrap_or(entries.len());
+        entries.insert(at, entry);
+        entries.truncate(self.cap);
+        if entries.len() == self.cap {
+            self.threshold
+                .store(entries.last().map_or(0, |e| e.total_us), Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot of the ring, slowest first.
+    pub fn entries(&self) -> Vec<SlowEntry> {
+        self.entries.lock().expect("slow log lock poisoned").clone()
+    }
+}
+
+/// The metrics registry one server (or router) owns: stage histograms,
+/// request/batch/reactor/reload histograms, the pool queue high-water
+/// mark, and the slow-query ring. Shared as `Arc<Obs>` across model
+/// generations and worker threads, so its series are monotonic for the
+/// life of the process — a snapshot RELOAD merges into it, never resets.
+pub struct Obs {
+    enabled: bool,
+    stage_histograms: bool,
+    stages: [Histogram; Stage::ALL.len()],
+    e2e: Histogram,
+    batch: Histogram,
+    loop_iter: Histogram,
+    writev_batch: Histogram,
+    reload: Histogram,
+    queue_hwm: AtomicU64,
+    slow: SlowLog,
+}
+
+impl Default for Obs {
+    fn default() -> Obs {
+        Obs::new(&ObsConfig::default())
+    }
+}
+
+impl Obs {
+    /// Build a registry from the `[obs]` config section.
+    pub fn new(cfg: &ObsConfig) -> Obs {
+        Obs {
+            enabled: cfg.enable,
+            stage_histograms: cfg.enable && cfg.stage_histograms,
+            stages: std::array::from_fn(|_| Histogram::new()),
+            e2e: Histogram::new(),
+            batch: Histogram::new(),
+            loop_iter: Histogram::new(),
+            writev_batch: Histogram::new(),
+            reload: Histogram::new(),
+            queue_hwm: AtomicU64::new(0),
+            slow: SlowLog::new(if cfg.enable { cfg.slow_log_len } else { 0 }),
+        }
+    }
+
+    /// A registry that records nothing (the `enable = false` fast path).
+    pub fn disabled() -> Obs {
+        Obs::new(&ObsConfig { enable: false, slow_log_len: 0, stage_histograms: false })
+    }
+
+    /// Whether recording is on at all. Callers wrap their `Instant` reads
+    /// in this so a disabled plane costs one branch per stage boundary.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Attribute `d` to a stage of the request path.
+    pub fn record_stage(&self, stage: Stage, d: Duration) {
+        if self.stage_histograms {
+            self.stages[stage.idx()].record(d.as_micros() as u64);
+        }
+    }
+
+    /// Record one request's end-to-end latency (feeds STATS p50/p99).
+    pub fn record_e2e(&self, d: Duration) {
+        if self.enabled {
+            self.e2e.record(d.as_micros() as u64);
+        }
+    }
+
+    /// Record one worker batch's in-pool service span (drain → replies
+    /// sent) — the interval the cache/kernel/serialize stages partition.
+    pub fn record_batch(&self, d: Duration) {
+        if self.enabled {
+            self.batch.record(d.as_micros() as u64);
+        }
+    }
+
+    /// Record one reactor event-loop iteration.
+    pub fn record_loop_iter(&self, d: Duration) {
+        if self.enabled {
+            self.loop_iter.record(d.as_micros() as u64);
+        }
+    }
+
+    /// Record how many iovecs one `writev` flushed.
+    pub fn record_writev_batch(&self, iovs: usize) {
+        if self.enabled {
+            self.writev_batch.record(iovs as u64);
+        }
+    }
+
+    /// Record one snapshot reload's duration.
+    pub fn record_reload(&self, d: Duration) {
+        if self.enabled {
+            self.reload.record(d.as_micros() as u64);
+        }
+    }
+
+    /// Raise the pool queue-depth high-water mark.
+    pub fn note_queue_depth(&self, depth: usize) {
+        if self.enabled {
+            self.queue_hwm.fetch_max(depth as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Offer a completed request to the slow-query ring.
+    pub fn note_slow(&self, op: &'static str, total: Duration, stages: Vec<(Stage, u64)>) {
+        if self.enabled {
+            self.slow.offer(SlowEntry { op, total_us: total.as_micros() as u64, stages });
+        }
+    }
+
+    /// The end-to-end request-latency histogram (STATS p50/p99 source).
+    pub fn e2e(&self) -> &Histogram {
+        &self.e2e
+    }
+
+    /// The per-batch service-span histogram.
+    pub fn batch(&self) -> &Histogram {
+        &self.batch
+    }
+
+    /// One stage's histogram (tests and exposition).
+    pub fn stage(&self, stage: Stage) -> &Histogram {
+        &self.stages[stage.idx()]
+    }
+
+    /// Pool queue-depth high-water mark since process start.
+    pub fn queue_depth_hwm(&self) -> u64 {
+        self.queue_hwm.load(Ordering::Relaxed)
+    }
+
+    /// Append this registry's families to `out` in fixed order:
+    /// per-stage histograms, request/batch, reactor loop + writev, reload,
+    /// then the queue high-water gauge. Callers prepend their own counter
+    /// families and append the `# EOF` terminator.
+    pub fn render_into(&self, out: &mut String) {
+        for s in Stage::ALL {
+            render_histogram(
+                out,
+                "w2k_stage_us",
+                &format!("stage=\"{}\"", s.name()),
+                &self.stages[s.idx()],
+            );
+        }
+        render_histogram(out, "w2k_request_us", "", &self.e2e);
+        render_histogram(out, "w2k_batch_us", "", &self.batch);
+        render_histogram(out, "w2k_reactor_loop_us", "", &self.loop_iter);
+        render_histogram(out, "w2k_writev_batch_size", "", &self.writev_batch);
+        render_histogram(out, "w2k_reload_us", "", &self.reload);
+        out.push_str(&format!("w2k_pool_queue_depth_hwm {}\n", self.queue_depth_hwm()));
+    }
+
+    /// Render the slow-query ring (`METRICS?slow`), slowest first, with a
+    /// `# EOF` terminator. Rank 0 is the slowest request seen.
+    pub fn render_slow(&self) -> String {
+        let mut out = String::new();
+        for (rank, e) in self.slow.entries().iter().enumerate() {
+            out.push_str(&format!(
+                "w2k_slow_total_us{{rank=\"{rank}\",op=\"{}\"}} {}\n",
+                e.op, e.total_us
+            ));
+            for (stage, us) in &e.stages {
+                out.push_str(&format!(
+                    "w2k_slow_stage_us{{rank=\"{rank}\",op=\"{}\",stage=\"{}\"}} {us}\n",
+                    e.op,
+                    stage.name()
+                ));
+            }
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+}
+
+/// Append one histogram family: `<name>_count`, `<name>_sum`, then one
+/// quantile line per entry of [`QUANTILES`], all carrying `labels` (which
+/// may be empty).
+pub fn render_histogram(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    if labels.is_empty() {
+        out.push_str(&format!("{name}_count {}\n", h.count()));
+        out.push_str(&format!("{name}_sum {}\n", h.sum()));
+    } else {
+        out.push_str(&format!("{name}_count{{{labels}}} {}\n", h.count()));
+        out.push_str(&format!("{name}_sum{{{labels}}} {}\n", h.sum()));
+    }
+    for (label, q) in QUANTILES {
+        out.push_str(&format!(
+            "{name}{{{labels}{sep}q=\"{label}\"}} {:.0}\n",
+            h.quantile(q)
+        ));
+    }
+}
+
+/// Re-label a scraped exposition for the cluster roll-up: inject `labels`
+/// (e.g. `shard="0",replica="1"`) into every metric line, dropping comment
+/// lines (including the scraped server's `# EOF`).
+pub fn relabel_exposition(text: &str, labels: &str) -> String {
+    let mut out = String::new();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match line.find('{') {
+            Some(at) => {
+                out.push_str(&line[..=at]);
+                out.push_str(labels);
+                out.push(',');
+                out.push_str(&line[at + 1..]);
+            }
+            None => match line.find(' ') {
+                Some(at) => {
+                    out.push_str(&line[..at]);
+                    out.push('{');
+                    out.push_str(labels);
+                    out.push('}');
+                    out.push_str(&line[at..]);
+                }
+                None => out.push_str(line),
+            },
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Summary;
+
+    #[test]
+    fn bucket_mapping_covers_the_line() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // Every bucket's bounds tile the line: hi(b) == lo(b+1).
+        for b in 0..BUCKETS - 1 {
+            assert_eq!(bucket_hi(b), bucket_lo(b + 1), "bucket {b}");
+            assert_eq!(bucket_of(bucket_lo(b)), b);
+        }
+    }
+
+    #[test]
+    fn quantiles_within_one_bucket_of_exact() {
+        // A skewed sample (mostly fast, a heavy tail) — the shape STATS
+        // percentiles see in practice.
+        let h = Histogram::new();
+        let mut exact = Summary::new();
+        let mut x = 7u64;
+        for i in 0..10_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = if i % 100 == 0 { 5_000 + x % 20_000 } else { 10 + x % 400 };
+            h.record(v);
+            exact.add(v as f64);
+        }
+        for (_, q) in QUANTILES {
+            let est = h.quantile(q);
+            let ex = exact.percentile(q * 100.0);
+            let tol = bucket_width(est.max(ex) as u64) as f64;
+            assert!(
+                (est - ex).abs() <= tol,
+                "q={q}: est {est} vs exact {ex} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_single_value_quantiles() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.count(), 0);
+        h.record(100);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 100);
+        // One sample in bucket [64,128): every quantile lands inside it.
+        for (_, q) in QUANTILES {
+            let est = h.quantile(q);
+            assert!((64.0..128.0).contains(&est), "q={q}: {est}");
+        }
+    }
+
+    #[test]
+    fn merge_is_bucketwise_addition() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [1u64, 10, 100] {
+            a.record(v);
+        }
+        for v in [1000u64, 10_000] {
+            b.record(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.sum(), 11_111);
+        assert!(a.quantile(0.999) >= 8192.0);
+    }
+
+    #[test]
+    fn slow_log_keeps_topk_sorted() {
+        let log = SlowLog::new(3);
+        for (op, us) in
+            [("lookup", 50u64), ("knn", 400), ("lookup", 10), ("lookup", 900), ("knn", 200)]
+        {
+            log.offer(SlowEntry { op, total_us: us, stages: vec![(Stage::BatchWait, us / 2)] });
+        }
+        let got: Vec<u64> = log.entries().iter().map(|e| e.total_us).collect();
+        assert_eq!(got, vec![900, 400, 200]);
+        // Below-threshold offers are screened out without displacing.
+        log.offer(SlowEntry { op: "lookup", total_us: 5, stages: vec![] });
+        assert_eq!(log.entries().len(), 3);
+        // Zero-capacity ring records nothing.
+        let none = SlowLog::new(0);
+        none.offer(SlowEntry { op: "lookup", total_us: 1, stages: vec![] });
+        assert!(none.entries().is_empty());
+    }
+
+    #[test]
+    fn render_is_deterministic_and_disabled_records_nothing() {
+        let a = Obs::new(&ObsConfig::default());
+        let b = Obs::new(&ObsConfig::default());
+        let (mut ra, mut rb) = (String::new(), String::new());
+        a.render_into(&mut ra);
+        b.render_into(&mut rb);
+        assert_eq!(ra, rb, "two fresh registries must render byte-identically");
+        for family in [
+            "w2k_stage_us_count{stage=\"parse\"}",
+            "w2k_stage_us{stage=\"kernel\",q=\"0.999\"}",
+            "w2k_request_us_count",
+            "w2k_batch_us_sum",
+            "w2k_reactor_loop_us_count",
+            "w2k_writev_batch_size_count",
+            "w2k_reload_us_count",
+            "w2k_pool_queue_depth_hwm",
+        ] {
+            assert!(ra.contains(family), "missing {family} in:\n{ra}");
+        }
+
+        let off = Obs::disabled();
+        off.record_stage(Stage::Kernel, Duration::from_micros(10));
+        off.record_e2e(Duration::from_micros(10));
+        off.record_batch(Duration::from_micros(10));
+        off.note_queue_depth(7);
+        off.note_slow("lookup", Duration::from_micros(10), vec![]);
+        assert_eq!(off.e2e().count(), 0);
+        assert_eq!(off.stage(Stage::Kernel).count(), 0);
+        assert_eq!(off.queue_depth_hwm(), 0);
+        assert_eq!(off.render_slow(), "# EOF\n");
+    }
+
+    #[test]
+    fn stage_toggle_keeps_e2e_but_drops_stages() {
+        let obs =
+            Obs::new(&ObsConfig { enable: true, slow_log_len: 4, stage_histograms: false });
+        obs.record_stage(Stage::Cache, Duration::from_micros(9));
+        obs.record_e2e(Duration::from_micros(9));
+        assert_eq!(obs.stage(Stage::Cache).count(), 0);
+        assert_eq!(obs.e2e().count(), 1);
+    }
+
+    #[test]
+    fn relabel_injects_into_both_line_shapes() {
+        let text = "w2k_served_total 5\nw2k_stage_us{stage=\"parse\",q=\"0.5\"} 12\n# EOF\n";
+        let got = relabel_exposition(text, "shard=\"1\",replica=\"0\"");
+        assert_eq!(
+            got,
+            "w2k_served_total{shard=\"1\",replica=\"0\"} 5\n\
+             w2k_stage_us{shard=\"1\",replica=\"0\",stage=\"parse\",q=\"0.5\"} 12\n"
+        );
+    }
+
+    #[test]
+    fn slow_render_includes_stage_breakdown() {
+        let obs = Obs::new(&ObsConfig { enable: true, slow_log_len: 2, stage_histograms: true });
+        obs.note_slow(
+            "knn",
+            Duration::from_micros(750),
+            vec![(Stage::BatchWait, 300), (Stage::Kernel, 400)],
+        );
+        let text = obs.render_slow();
+        assert!(text.contains("w2k_slow_total_us{rank=\"0\",op=\"knn\"} 750"), "{text}");
+        assert!(
+            text.contains("w2k_slow_stage_us{rank=\"0\",op=\"knn\",stage=\"kernel\"} 400"),
+            "{text}"
+        );
+        assert!(text.ends_with("# EOF\n"), "{text}");
+    }
+
+    #[test]
+    fn config_defaults_and_doc_overrides() {
+        let d = ObsConfig::default();
+        assert!(d.enable);
+        assert_eq!(d.slow_log_len, 32);
+        assert!(d.stage_histograms);
+        let doc = crate::config::TomlDoc::parse(
+            "[obs]\nenable = false\nslow_log_len = 7\nstage_histograms = false\n",
+        )
+        .unwrap();
+        let cfg = ObsConfig::from_doc(&doc);
+        assert!(!cfg.enable);
+        assert_eq!(cfg.slow_log_len, 7);
+        assert!(!cfg.stage_histograms);
+    }
+}

@@ -19,12 +19,14 @@
 //!   it like any other store.
 
 use crate::embedding::EmbeddingStore;
+use crate::obs::{Obs, Stage};
 use crate::repr::Repr;
 use crate::util::ceil_div;
 use crate::util::rng::splitmix64;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 const NIL: usize = usize::MAX;
 
@@ -153,22 +155,23 @@ impl Shard {
     /// Miss path: admit `row` if there is room, or if `id` is at least as
     /// frequent as the LRU victim (frequency-based admission). The row is
     /// copied *into* the victim's existing buffer when one is evicted —
-    /// after the shard fills, admission never allocates.
-    fn insert_if_absent(&mut self, id: usize, row: &[f32]) {
+    /// after the shard fills, admission never allocates. Returns `true`
+    /// when a resident row was displaced (an eviction, counted cache-wide).
+    fn insert_if_absent(&mut self, id: usize, row: &[f32]) -> bool {
         if self.cap == 0 || self.map.contains_key(&id) {
-            return;
+            return false;
         }
         if self.slots.len() < self.cap {
             let i = self.slots.len();
             self.slots.push(Slot { id, row: row.to_vec(), prev: NIL, next: NIL });
             self.push_front(i);
             self.map.insert(id, i);
-            return;
+            return false;
         }
         let victim = self.tail;
         let victim_id = self.slots[victim].id;
         if self.sketch.estimate(id) < self.sketch.estimate(victim_id) {
-            return; // victim is hotter: reject the candidate
+            return false; // victim is hotter: reject the candidate
         }
         self.map.remove(&victim_id);
         self.detach(victim);
@@ -176,6 +179,7 @@ impl Shard {
         self.slots[victim].row.copy_from_slice(row);
         self.push_front(victim);
         self.map.insert(id, victim);
+        true
     }
 
     fn len(&self) -> usize {
@@ -211,6 +215,10 @@ pub struct ShardedCache {
     enabled: bool,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    /// Metrics plane this cache reports cache/kernel stage timings into;
+    /// defaults to a disabled registry (one branch per lookup).
+    obs: Arc<Obs>,
 }
 
 impl ShardedCache {
@@ -225,11 +233,30 @@ impl ShardedCache {
             enabled: cache_rows > 0,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            obs: Arc::new(Obs::disabled()),
         }
+    }
+
+    /// Attach the server's metrics plane: cache-stage and kernel-stage
+    /// durations record into `obs`'s per-stage histograms.
+    pub fn set_obs(&mut self, obs: Arc<Obs>) {
+        self.obs = obs;
     }
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Rows displaced by admission since construction (never reset).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Resident row count per shard, in shard order (locks each shard
+    /// briefly; exposition-path only).
+    pub fn shard_entries(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
     }
 
     /// The wrapped store.
@@ -263,21 +290,40 @@ impl ShardedCache {
     /// duplicate work but never block each other, and the result is
     /// identical either way.
     fn fetch_into(&self, id: usize, out: &mut [f32]) {
+        // Stage attribution: hits bill their whole duration to `cache`;
+        // misses bill the inner reconstruction to `kernel` and the
+        // remaining lock/sketch/admission time to `cache`. With obs
+        // disabled the only cost is this one branch.
+        let t0 = if self.obs.enabled() { Some(Instant::now()) } else { None };
         if !self.enabled {
             // cache_rows == 0: a true pass-through baseline — no shard
             // locks, no sketch updates, just the inner reconstruction.
             self.inner.lookup_into(id, out);
             self.misses.fetch_add(1, Ordering::Relaxed);
+            if let Some(t0) = t0 {
+                self.obs.record_stage(Stage::Kernel, t0.elapsed());
+            }
             return;
         }
         let s = id % self.shards.len();
         if self.shards[s].lock().unwrap().get_into(id, out) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            if let Some(t0) = t0 {
+                self.obs.record_stage(Stage::Cache, t0.elapsed());
+            }
             return;
         }
+        let t1 = t0.map(|_| Instant::now());
         self.inner.lookup_into(id, out);
+        let kernel = t1.map(|t| t.elapsed());
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.shards[s].lock().unwrap().insert_if_absent(id, out);
+        if self.shards[s].lock().unwrap().insert_if_absent(id, out) {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        if let (Some(t0), Some(k)) = (t0, kernel) {
+            self.obs.record_stage(Stage::Kernel, k);
+            self.obs.record_stage(Stage::Cache, t0.elapsed().saturating_sub(k));
+        }
     }
 }
 
@@ -421,6 +467,34 @@ mod tests {
             cached.lookup(id);
         }
         assert_eq!(cached.stats().hits - before, 4, "hot ids were evicted by cold scan");
+    }
+
+    #[test]
+    fn evictions_and_stage_timings_are_recorded() {
+        let mut cached = ShardedCache::new(xs_store(8), 1, 2);
+        let obs = Arc::new(Obs::default());
+        cached.set_obs(obs.clone());
+        // Fill both slots (no evictions yet — growth, not displacement).
+        for _ in 0..4 {
+            cached.lookup(0);
+            cached.lookup(1);
+        }
+        assert_eq!(cached.evictions(), 0);
+        assert_eq!(cached.shard_entries(), vec![2]);
+        // Hammer a third id until its sketch estimate displaces a victim.
+        for _ in 0..20 {
+            cached.lookup(2);
+        }
+        assert!(cached.evictions() >= 1, "hot candidate never displaced a victim");
+        assert_eq!(cached.shard_entries(), vec![2], "capacity bound broken by eviction");
+        // Hits billed to the cache stage, misses split cache/kernel — with
+        // traffic on both paths, both histograms must have samples.
+        assert!(obs.stage(Stage::Cache).count() > 0);
+        assert!(obs.stage(Stage::Kernel).count() > 0);
+        // Disabled registry records nothing (the default wiring).
+        let quiet = ShardedCache::new(xs_store(8), 1, 2);
+        quiet.lookup(0);
+        assert_eq!(quiet.obs.stage(Stage::Kernel).count(), 0);
     }
 
     #[test]

@@ -10,9 +10,10 @@
 //!   admission wrapping any [`EmbeddingStore`]; Zipf-head tokens are
 //!   reconstructed once and then served as memcpys.
 //! * [`pool::WorkerPool`] — per-shard bounded queues drained in micro-batches
-//!   by independent workers, with fail-fast backpressure and per-worker
-//!   latency summaries merged on `STATS`. Lookup *and* k-NN jobs flow
-//!   through the same queues.
+//!   by independent workers, with fail-fast backpressure. Latency lands in
+//!   the shared [`crate::obs::Obs`] registry's log₂-bucket histograms
+//!   (`STATS` percentiles and the `METRICS` exposition read the same
+//!   series). Lookup *and* k-NN jobs flow through the same queues.
 //! * [`wire`] — a length-prefixed binary protocol negotiated on the same
 //!   TCP listener as the text protocol (see `coordinator::server`).
 //! * similarity search — a [`crate::index::KnnIndex`] (brute force or IVF,
@@ -52,7 +53,9 @@ use crate::config::{IndexConfig, IndexKind, ServingConfig};
 use crate::embedding::EmbeddingStore;
 use crate::error::Error;
 use crate::index::{build_index, IvfIndex, KnnIndex, Neighbor, Query, Scorer};
+use crate::obs::{Obs, ObsConfig, Stage};
 use crate::snapshot::{self, IndexPayload, Snapshot, SnapshotStore};
+use std::fmt::Write as _;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -150,6 +153,7 @@ struct Carry {
     rejected: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
     knn_queries: AtomicU64,
     knn_candidates: AtomicU64,
     knn_probes: AtomicU64,
@@ -173,6 +177,12 @@ pub struct ServingState {
     /// Transient accept(2) failures survived by this state's listener;
     /// lives here (not in the pool) so it persists across hot swaps.
     accept_errors: AtomicU64,
+    /// The metrics plane: e2e/stage/batch histograms, reload durations,
+    /// queue high-water, the slow-request ring. One registry for the whole
+    /// process lifetime — each new model generation's cache and pool record
+    /// into the *same* histograms, so every series is monotonic across hot
+    /// swaps by construction.
+    obs: Arc<Obs>,
 }
 
 impl ServingState {
@@ -181,8 +191,20 @@ impl ServingState {
         cfg: &ServingConfig,
         index_cfg: &IndexConfig,
     ) -> ServingState {
-        let model = Self::assemble(inner, cfg, index_cfg, None, 0);
-        Self::with_model(model, cfg, index_cfg)
+        Self::new_with_obs(inner, cfg, index_cfg, &ObsConfig::default())
+    }
+
+    /// [`Self::new`] with an explicit `[obs]` config (the server's entry
+    /// point; the plain constructor defaults to metrics enabled).
+    pub fn new_with_obs(
+        inner: Box<dyn EmbeddingStore>,
+        cfg: &ServingConfig,
+        index_cfg: &IndexConfig,
+        obs_cfg: &ObsConfig,
+    ) -> ServingState {
+        let obs = Arc::new(Obs::new(obs_cfg));
+        let model = Self::assemble(inner, cfg, index_cfg, None, 0, &obs);
+        Self::with_model(model, cfg, index_cfg, obs)
     }
 
     /// Boot directly from a snapshot file (`[snapshot] path`): the store
@@ -195,8 +217,20 @@ impl ServingState {
         index_cfg: &IndexConfig,
         mmap: bool,
     ) -> crate::Result<ServingState> {
-        let model = Self::model_from_snapshot(path, cfg, index_cfg, mmap)?;
-        let mut state = Self::with_model(model, cfg, index_cfg);
+        Self::from_snapshot_with_obs(path, cfg, index_cfg, mmap, &ObsConfig::default())
+    }
+
+    /// [`Self::from_snapshot`] with an explicit `[obs]` config.
+    pub fn from_snapshot_with_obs(
+        path: &Path,
+        cfg: &ServingConfig,
+        index_cfg: &IndexConfig,
+        mmap: bool,
+        obs_cfg: &ObsConfig,
+    ) -> crate::Result<ServingState> {
+        let obs = Arc::new(Obs::new(obs_cfg));
+        let model = Self::model_from_snapshot(path, cfg, index_cfg, mmap, &obs)?;
+        let mut state = Self::with_model(model, cfg, index_cfg, obs);
         state.reload_mmap = mmap;
         Ok(state)
     }
@@ -207,7 +241,12 @@ impl ServingState {
         self.reload_mmap = mmap;
     }
 
-    fn with_model(model: Model, cfg: &ServingConfig, index_cfg: &IndexConfig) -> ServingState {
+    fn with_model(
+        model: Model,
+        cfg: &ServingConfig,
+        index_cfg: &IndexConfig,
+        obs: Arc<Obs>,
+    ) -> ServingState {
         ServingState {
             model: Mutex::new(Arc::new(model)),
             serving_cfg: cfg.clone(),
@@ -217,6 +256,7 @@ impl ServingState {
             carry: Arc::new(Carry::default()),
             timeout: Duration::from_secs(5),
             accept_errors: AtomicU64::new(0),
+            obs,
         }
     }
 
@@ -235,8 +275,11 @@ impl ServingState {
         index_cfg: &IndexConfig,
         index_payload: Option<IndexPayload>,
         snapshot_bytes: u64,
+        obs: &Arc<Obs>,
     ) -> Model {
-        let store = Arc::new(ShardedCache::new(inner, cfg.shards, cfg.cache_rows));
+        let mut cache = ShardedCache::new(inner, cfg.shards, cfg.cache_rows);
+        cache.set_obs(obs.clone());
+        let store = Arc::new(cache);
         let index_store: Arc<dyn EmbeddingStore> = store.clone();
         let mut index: Option<Arc<dyn KnnIndex>> = None;
         if index_cfg.kind == IndexKind::Ivf {
@@ -270,6 +313,7 @@ impl ServingState {
             Duration::from_micros(cfg.batch_window_us),
             cfg.max_batch,
             Some(index.clone()),
+            obs.clone(),
         );
         Model { store, index, pool, snapshot_bytes }
     }
@@ -279,12 +323,13 @@ impl ServingState {
         cfg: &ServingConfig,
         index_cfg: &IndexConfig,
         mmap: bool,
+        obs: &Arc<Obs>,
     ) -> crate::Result<Model> {
         let snap = Arc::new(Snapshot::open(path, mmap)?);
         let payload = snapshot::load_index_payload(&snap)?;
         let bytes = snap.file_len();
         let store = SnapshotStore::open(snap)?;
-        Ok(Self::assemble(Box::new(store), cfg, index_cfg, payload, bytes))
+        Ok(Self::assemble(Box::new(store), cfg, index_cfg, payload, bytes, obs))
     }
 
     /// Swap in a new model generation loaded from `path` (memory-mapped
@@ -298,8 +343,14 @@ impl ServingState {
     /// once the last holder lets go, and its counters fold into the carry.
     /// Returns the new generation number.
     pub fn reload_snapshot(&self, path: &Path) -> crate::Result<u64> {
-        let model =
-            Self::model_from_snapshot(path, &self.serving_cfg, &self.index_cfg, self.reload_mmap)?;
+        let t0 = Instant::now();
+        let model = Self::model_from_snapshot(
+            path,
+            &self.serving_cfg,
+            &self.index_cfg,
+            self.reload_mmap,
+            &self.obs,
+        )?;
         if model.store.dim() != self.dim() {
             return Err(Error::Snapshot(format!(
                 "snapshot dim {} does not match serving dim {} (connected clients negotiated \
@@ -328,6 +379,10 @@ impl ServingState {
         let cs = old.store.stats();
         self.carry.hits.fetch_add(cs.hits, Ordering::Relaxed);
         self.carry.misses.fetch_add(cs.misses, Ordering::Relaxed);
+        self.carry.evictions.fetch_add(old.store.evictions(), Ordering::Relaxed);
+        // Build + validate + swap wall time, one histogram sample per
+        // successful reload (failures never reach this point).
+        self.obs.record_reload(t0.elapsed());
         // Retire off-thread: in-flight requests still hold the old Arc and
         // must be able to submit + drain against its live pool before its
         // workers stop.
@@ -383,9 +438,13 @@ impl ServingState {
             return Err(LookupError::OutOfRange);
         }
         let (tx, rx) = mpsc::channel();
+        let t0 = self.obs.enabled().then(Instant::now);
         m.pool
             .submit(Job::Lookup { ids, enqueued: Instant::now(), reply: tx })
             .map_err(|_| LookupError::Overloaded)?;
+        if let Some(t0) = t0 {
+            self.obs.record_stage(Stage::Enqueue, t0.elapsed());
+        }
         rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)
     }
 
@@ -427,9 +486,13 @@ impl ServingState {
             }
         }
         let (tx, rx) = mpsc::channel();
+        let t0 = self.obs.enabled().then(Instant::now);
         m.pool
             .submit(Job::Knn { query, k, enqueued: Instant::now(), reply: tx })
             .map_err(|_| LookupError::Overloaded)?;
+        if let Some(t0) = t0 {
+            self.obs.record_stage(Stage::Enqueue, t0.elapsed());
+        }
         // knn accounting happens worker-side (like `served`), so queries
         // the caller gives up on are still counted when the scan finishes.
         let (neighbors, _stats) = rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)?;
@@ -440,8 +503,10 @@ impl ServingState {
     /// counters (never NaN) before any traffic.
     pub fn stats(&self) -> ServingStats {
         let m = self.current();
-        let lat = m.pool.latency_summary();
-        let (p50, p99) = if lat.is_empty() { (0.0, 0.0) } else { (lat.p50(), lat.p99()) };
+        // Percentiles come from the process-lifetime e2e histogram (exact
+        // to within one log₂ bucket width); an empty histogram reads 0.
+        let e2e = self.obs.e2e();
+        let (p50, p99) = (e2e.p50(), e2e.p99());
         let (knn_q, knn_c, knn_p) = m.pool.knn_counters();
         let knn_queries = self.carry.knn_queries.load(Ordering::Relaxed) + knn_q;
         let knn_candidates = self.carry.knn_candidates.load(Ordering::Relaxed) + knn_c;
@@ -466,6 +531,49 @@ impl ServingState {
             snapshot_bytes: m.snapshot_bytes,
             accept_errors: self.accept_errors.load(Ordering::Relaxed),
         }
+    }
+
+    /// The metrics registry shared by this state's cache, pool, and (via
+    /// [`crate::net::Service::obs`]) its network driver.
+    pub fn obs(&self) -> Arc<Obs> {
+        self.obs.clone()
+    }
+
+    /// Full Prometheus-style metrics exposition: counters first (fixed
+    /// order), then every histogram family from the [`Obs`] registry, then
+    /// `# EOF`. Both the text `METRICS` verb and binary `OP_METRICS` return
+    /// exactly this string, and the render order is deterministic, so a
+    /// quiescent server exposes byte-identical metrics regardless of
+    /// protocol or network driver.
+    pub fn metrics_text(&self) -> String {
+        let m = self.current();
+        let s = self.stats();
+        let knn_probes = self.carry.knn_probes.load(Ordering::Relaxed) + m.pool.knn_counters().2;
+        let evictions = self.carry.evictions.load(Ordering::Relaxed) + m.store.evictions();
+        let mut out = String::new();
+        let _ = writeln!(out, "w2k_served_total {}", s.served);
+        let _ = writeln!(out, "w2k_rejected_total {}", s.rejected);
+        let _ = writeln!(out, "w2k_cache_hits_total {}", s.cache.hits);
+        let _ = writeln!(out, "w2k_cache_misses_total {}", s.cache.misses);
+        let _ = writeln!(out, "w2k_cache_evictions_total {evictions}");
+        for (i, n) in m.store.shard_entries().iter().enumerate() {
+            let _ = writeln!(out, "w2k_cache_entries{{shard=\"{i}\"}} {n}");
+        }
+        let _ = writeln!(out, "w2k_knn_queries_total {}", s.knn_queries);
+        let _ = writeln!(out, "w2k_knn_candidates_total {}", s.knn_candidates);
+        let _ = writeln!(out, "w2k_knn_probes_total {knn_probes}");
+        let _ = writeln!(out, "w2k_model_generation {}", s.model_generation);
+        let _ = writeln!(out, "w2k_snapshot_bytes {}", s.snapshot_bytes);
+        let _ = writeln!(out, "w2k_accept_errors_total {}", s.accept_errors);
+        self.obs.render_into(&mut out);
+        out.push_str("# EOF\n");
+        out
+    }
+
+    /// The slow-request ring (`METRICS?slow`): worst observed requests with
+    /// their per-stage breakdowns, rank order.
+    pub fn metrics_slow_text(&self) -> String {
+        self.obs.render_slow()
     }
 
     /// Stop the current generation's pool workers after their queues drain;
@@ -695,6 +803,53 @@ mod tests {
                 st.knn(Query::Id(q), 6).unwrap().iter().map(|n| n.id).collect();
             assert_eq!(&got, want, "query {q} differs after ivf-carrying reload");
         }
+        st.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn metrics_exposition_is_deterministic_and_eof_terminated() {
+        let st = state();
+        st.lookup_rows(vec![1, 2, 3]).unwrap();
+        let text = st.metrics_text();
+        assert!(text.contains("w2k_served_total 3"), "{text}");
+        assert!(text.contains("w2k_model_generation 1"), "{text}");
+        assert!(text.contains("w2k_cache_entries{shard=\"0\"}"), "{text}");
+        assert!(text.contains("w2k_request_us_count 3"), "{text}");
+        assert!(text.contains("w2k_stage_us_count{stage=\"batch_wait\"}"), "{text}");
+        assert!(text.ends_with("# EOF\n"), "{text}");
+        // Quiescent server: two scrapes are byte-identical (the scrape
+        // itself must not perturb any series).
+        assert_eq!(st.metrics_text(), st.metrics_text());
+        // The slow ring saw the traffic too.
+        assert!(st.metrics_slow_text().contains("w2k_slow_total_us"), "no slow entries");
+        st.shutdown();
+    }
+
+    #[test]
+    fn metrics_and_stats_are_monotonic_across_reload() {
+        // The obs registry is shared across generations, and counters fold
+        // into the carry at swap time — nothing may dip through a RELOAD.
+        let st = state();
+        st.lookup_rows(vec![1, 2, 3]).unwrap();
+        let before = st.stats();
+        let e2e_before = st.obs().e2e().count();
+        assert!(before.p50_us >= 0.0);
+
+        let mut rng = Rng::new(99);
+        let other = Word2KetXS::random(120, 16, 2, 3, &mut rng);
+        let path = tmp("metrics_reload");
+        snapshot::save_store(&other, &path, &SaveOptions::default()).unwrap();
+        st.reload_snapshot(&path).unwrap();
+
+        st.lookup_rows(vec![0]).unwrap();
+        let after = st.stats();
+        assert!(after.served >= before.served + 1, "served dipped across reload");
+        assert!(after.cache.misses >= before.cache.misses, "misses dipped across reload");
+        assert!(st.obs().e2e().count() >= e2e_before + 1, "e2e histogram reset across reload");
+        let text = st.metrics_text();
+        assert!(text.contains("w2k_model_generation 2"), "{text}");
+        assert!(text.contains("w2k_reload_us_count 1"), "{text}");
         st.shutdown();
         std::fs::remove_file(&path).ok();
     }

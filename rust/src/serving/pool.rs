@@ -12,12 +12,18 @@
 //! jobs. Lookup jobs across the drain are flattened into one `lookup_batch`
 //! call (which dedups repeated ids) and rows are scattered back per job;
 //! k-NN jobs run against the shared [`KnnIndex`] on the worker thread, so
-//! index scans never block the listener. Per-worker latency summaries avoid
-//! a shared stats lock on the hot path and are merged on demand for `STATS`.
+//! index scans never block the listener.
+//!
+//! Latency accounting lives in the pool's [`Obs`] registry: end-to-end
+//! request latencies and per-stage spans (`batch_wait`, `serialize`, the
+//! cache/kernel split recorded by [`super::ShardedCache`]) land in
+//! constant-memory log₂-bucket histograms — lock-free relaxed atomics, no
+//! per-worker sample vectors, no growth with server age — and the queue
+//! depth high-water mark is tracked at submit time.
 
 use crate::embedding::EmbeddingStore;
 use crate::index::{KnnIndex, KnnResult, Query};
-use crate::util::Summary;
+use crate::obs::{Obs, Stage};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -65,7 +71,10 @@ struct PoolShared {
     knn_queries: AtomicU64,
     knn_candidates: AtomicU64,
     knn_probes: AtomicU64,
-    latencies_us: Vec<Mutex<Summary>>,
+    /// Metrics plane: e2e/stage/batch histograms + queue high-water mark.
+    /// Shared with the serving state (and across model generations), so
+    /// its series never reset while the process lives.
+    obs: Arc<Obs>,
     depth: usize,
     window: Duration,
     max_batch: usize,
@@ -86,6 +95,7 @@ impl WorkerPool {
         batch_window: Duration,
         max_batch: usize,
         index: Option<Arc<dyn KnnIndex>>,
+        obs: Arc<Obs>,
     ) -> WorkerPool {
         let workers = workers.max(1);
         let shared = Arc::new(PoolShared {
@@ -100,7 +110,7 @@ impl WorkerPool {
             knn_queries: AtomicU64::new(0),
             knn_candidates: AtomicU64::new(0),
             knn_probes: AtomicU64::new(0),
-            latencies_us: (0..workers).map(|_| Mutex::new(Summary::new())).collect(),
+            obs,
             depth: queue_depth.max(1),
             window: batch_window,
             max_batch: max_batch.max(1),
@@ -135,7 +145,9 @@ impl WorkerPool {
             }
             if jobs.len() < self.shared.depth {
                 jobs.push_back(job);
+                let depth = jobs.len();
                 drop(jobs);
+                self.shared.obs.note_queue_depth(depth);
                 q.ready.notify_one();
                 return Ok(());
             }
@@ -165,13 +177,10 @@ impl WorkerPool {
         )
     }
 
-    /// Merge the per-worker latency summaries into one view.
-    pub fn latency_summary(&self) -> Summary {
-        let mut merged = Summary::new();
-        for lat in &self.shared.latencies_us {
-            merged.merge(&lat.lock().unwrap());
-        }
-        merged
+    /// The metrics registry this pool records into — the end-to-end
+    /// latency histogram here is the `STATS` p50/p99 source.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.shared.obs
     }
 
     /// Stop workers after they drain their queues; idempotent.
@@ -218,13 +227,6 @@ fn take_batch(shared: &PoolShared, w: usize) -> Option<Vec<Job>> {
     Some(jobs.drain(..take).collect())
 }
 
-/// Per-worker latency samples kept for percentile queries. The summary is a
-/// *tumbling* window: once it fills it is reset and starts collecting fresh,
-/// so STATS reflects roughly the most recent window rather than all of
-/// uptime. Unbounded accumulation would leak memory and make every STATS
-/// percentile sort grow with server age.
-const LATENCY_WINDOW: usize = 1 << 16;
-
 fn worker_loop(shared: &PoolShared, w: usize) {
     // Per-worker buffers, reused across micro-batches: the flattened id
     // list, the reconstruction arena `lookup_batch_into` fills, and the job
@@ -234,7 +236,11 @@ fn worker_loop(shared: &PoolShared, w: usize) {
     let mut flat: Vec<f32> = Vec::new();
     let mut lookups = Vec::new();
     let mut knns = Vec::new();
+    let timing = shared.obs.enabled();
     while let Some(batch) = take_batch(shared, w) {
+        // The drain boundary: everything before it is `batch_wait`, the
+        // span from here to the last reply is the batch's service time.
+        let drained = Instant::now();
         // Split the drain: lookups are scattered and answered first — their
         // rows come from one flat store call and must not wait behind index
         // scans that happen to share the micro-batch.
@@ -252,47 +258,79 @@ fn worker_loop(shared: &PoolShared, w: usize) {
         // One flat store call covering every lookup job in the drain: dedup
         // inside lookup_batch_into collapses the Zipf head across all of
         // them, and the arena write skips the per-drain tensor allocation.
+        // The cache/kernel stage split for this span is recorded per-row by
+        // the [`super::ShardedCache`] underneath.
         if !lookups.is_empty() {
             shared.store.lookup_batch_into(&all_ids, &mut flat);
             let dim = shared.store.dim();
-            // Each job's latency is recorded *before* its reply is sent
-            // (under the per-worker stats lock), so a caller that has
-            // received its reply is guaranteed to see the request in STATS.
-            let now = Instant::now();
+            let fetched = Instant::now();
             let mut row = 0usize;
-            let mut lat = shared.latencies_us[w].lock().unwrap();
-            if lat.len() >= LATENCY_WINDOW {
-                *lat = Summary::new();
-            }
+            let mut slowest_wait = Duration::ZERO;
             for (ids, enqueued, reply) in lookups.drain(..) {
                 let mut rows = Vec::with_capacity(ids.len());
                 for _ in 0..ids.len() {
                     rows.push(flat[row * dim..(row + 1) * dim].to_vec());
                     row += 1;
                 }
-                lat.add(now.duration_since(enqueued).as_secs_f64() * 1e6);
+                // Each job's latency is recorded *before* its reply is
+                // sent, so a caller that has received its reply is
+                // guaranteed to see the request in STATS.
+                if timing {
+                    let wait = drained.duration_since(enqueued);
+                    slowest_wait = slowest_wait.max(wait);
+                    shared.obs.record_stage(Stage::BatchWait, wait);
+                    shared.obs.record_e2e(Instant::now().duration_since(enqueued));
+                }
                 shared.served.fetch_add(ids.len() as u64, Ordering::Relaxed);
                 let _ = reply.send(rows);
             }
+            if timing {
+                let done = Instant::now();
+                shared.obs.record_stage(Stage::Serialize, done.duration_since(fetched));
+                shared.obs.record_batch(done.duration_since(drained));
+                // Slow-ring entry for the batch's longest-waiting request.
+                // The `cache` slot here carries the whole fetch span
+                // (cache + kernel combined — the split is batch-granular).
+                shared.obs.note_slow(
+                    "lookup",
+                    slowest_wait + done.duration_since(drained),
+                    vec![
+                        (Stage::BatchWait, slowest_wait.as_micros() as u64),
+                        (Stage::Cache, fetched.duration_since(drained).as_micros() as u64),
+                        (Stage::Serialize, done.duration_since(fetched).as_micros() as u64),
+                    ],
+                );
+            }
         }
 
-        // Index scans run after lookup replies are out, each outside the
-        // stats lock (a brute scan is milliseconds; STATS must not block
-        // on it).
+        // Index scans run after lookup replies are out (a brute scan is
+        // milliseconds; row replies must not block on it).
         for (query, k, enqueued, reply) in knns.drain(..) {
             match shared.index.as_deref() {
                 Some(index) => {
+                    let scan_start = Instant::now();
                     let result = index.top_k(&query, k);
                     let stats = result.1;
                     shared.knn_queries.fetch_add(1, Ordering::Relaxed);
                     shared.knn_candidates.fetch_add(stats.candidates as u64, Ordering::Relaxed);
                     shared.knn_probes.fetch_add(stats.probes as u64, Ordering::Relaxed);
-                    let elapsed = enqueued.elapsed().as_secs_f64() * 1e6;
-                    let mut lat = shared.latencies_us[w].lock().unwrap();
-                    if lat.len() >= LATENCY_WINDOW {
-                        *lat = Summary::new();
+                    if timing {
+                        let done = Instant::now();
+                        let wait = scan_start.duration_since(enqueued);
+                        let scan = done.duration_since(scan_start);
+                        let total = done.duration_since(enqueued);
+                        shared.obs.record_stage(Stage::BatchWait, wait);
+                        shared.obs.record_stage(Stage::Kernel, scan);
+                        shared.obs.record_e2e(total);
+                        shared.obs.note_slow(
+                            "knn",
+                            total,
+                            vec![
+                                (Stage::BatchWait, wait.as_micros() as u64),
+                                (Stage::Kernel, scan.as_micros() as u64),
+                            ],
+                        );
                     }
-                    lat.add(elapsed);
                     let _ = reply.send(result);
                 }
                 // A pool without an index drops the reply channel; the
@@ -332,6 +370,7 @@ mod tests {
                 Duration::from_micros(window_us),
                 16,
                 index,
+                Arc::new(Obs::default()),
             ),
             store,
         )
@@ -364,7 +403,7 @@ mod tests {
             }
         }
         assert_eq!(pool.served(), 60);
-        assert_eq!(pool.latency_summary().len(), 20);
+        assert_eq!(pool.obs().e2e().count(), 20);
         pool.shutdown();
     }
 
@@ -383,9 +422,9 @@ mod tests {
         assert_eq!(neighbors.len(), 4);
         assert_eq!(stats.candidates, store.vocab_size() - 1);
         assert!(neighbors.iter().all(|n| n.id != 5));
-        // Knn latency lands in the same summary; rows served stays 0;
+        // Knn latency lands in the same e2e histogram; rows served stays 0;
         // worker-side knn counters reflect the scan.
-        assert_eq!(pool.latency_summary().len(), 1);
+        assert_eq!(pool.obs().e2e().count(), 1);
         assert_eq!(pool.served(), 0);
         assert_eq!(pool.knn_counters(), (1, 63, 0));
         pool.shutdown();
@@ -426,6 +465,68 @@ mod tests {
         for rx in receivers {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_high_water_is_tracked() {
+        // One worker with a long batch window: jobs submitted while it
+        // sleeps inside the window pile up in the queue, so the high-water
+        // mark must reflect the pile, not just 1.
+        let (pool, _) = pool(1, 8, 50_000);
+        let rxs: Vec<_> = (0..5).map(|i| submit_ids(&pool, vec![i])).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert!(
+            pool.obs().queue_depth_hwm() >= 3,
+            "queue high-water {} never saw the pile-up",
+            pool.obs().queue_depth_hwm()
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn stage_histograms_partition_end_to_end_latency() {
+        // Acceptance: with every stage instrumented (batch_wait + the
+        // cache/kernel split from ShardedCache + serialize), the per-stage
+        // sums must account for the e2e sum to within one log₂ bucket width
+        // plus the per-sample microsecond truncation.
+        let obs = Arc::new(Obs::default());
+        let mut rng = Rng::new(0);
+        let mut cache = crate::serving::ShardedCache::new(
+            Box::new(RegularEmbedding::random(64, 8, &mut rng)),
+            2,
+            64,
+        );
+        cache.set_obs(obs.clone());
+        let store: Arc<dyn EmbeddingStore> = Arc::new(cache);
+        let pool =
+            WorkerPool::new(store, 1, 32, Duration::from_micros(0), 16, None, obs.clone());
+        let n = 50u64;
+        // Sequential awaited submits with a zero window: every job is its
+        // own single-id batch, so per-job and per-batch stages line up.
+        for i in 0..n as usize {
+            let rx = submit_ids(&pool, vec![i % 64]);
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(obs.e2e().count(), n);
+        assert_eq!(obs.stage(Stage::BatchWait).count(), n);
+        assert_eq!(obs.stage(Stage::Serialize).count(), n);
+        // Unique ids 0..50: all misses, so cache and kernel both record.
+        assert_eq!(obs.stage(Stage::Cache).count(), n);
+        assert_eq!(obs.stage(Stage::Kernel).count(), n);
+        let stage_total: u64 = [Stage::BatchWait, Stage::Cache, Stage::Kernel, Stage::Serialize]
+            .iter()
+            .map(|&s| obs.stage(s).sum())
+            .sum();
+        let e2e_total = obs.e2e().sum();
+        let tol = crate::obs::bucket_width(stage_total.max(e2e_total)).max(4 * n);
+        let gap = stage_total.abs_diff(e2e_total);
+        assert!(
+            gap <= tol,
+            "stage sum {stage_total}us vs e2e sum {e2e_total}us: gap {gap} > tol {tol}"
+        );
         pool.shutdown();
     }
 

@@ -26,11 +26,15 @@
 //!                count × f32 query vector (not ids); the scatter half of
 //!                cluster KNN — shards that do not own the query word score
 //!                the caller-supplied vector
+//!   op 9 METRICS count == 0; full metrics exposition (the binary twin of
+//!                the text `METRICS` verb — same bytes)
 //! response:      u32 status, u32 count, payload
 //!   LOOKUP ok    count = #ids,  payload = count × dim × f32 rows
 //!   DOT ok       count = 1,     payload = 1 × f32
 //!   STATS ok     count = 12,    payload = 12 × f64 in
 //!                [`STATS_FIELD_NAMES`] order
+//!   METRICS ok   count = payload byte length, payload = UTF-8 exposition
+//!                text (Prometheus-style lines, `# EOF` terminated)
 //!   KNN ok       count = #neighbors (≤ k), payload = count × (u32 id,
 //!                f32 score), best first (KNN_VEC identical, query word
 //!                not excluded)
@@ -63,6 +67,7 @@ pub const OP_KNN: u32 = 5;
 pub const OP_RELOAD: u32 = 6;
 pub const OP_PING: u32 = 7;
 pub const OP_KNN_VEC: u32 = 8;
+pub const OP_METRICS: u32 = 9;
 
 pub const STATUS_OK: u32 = 0;
 pub const STATUS_RANGE: u32 = 1;
@@ -438,6 +443,22 @@ pub(crate) fn respond_binary(state: &ServingState, req: BinRequest, out: &mut Ve
                     // order (the text protocol renders the same array).
                     let _ = write_stats_frame(out, &state.stats().fields());
                 }
+                // Full metrics exposition: the payload is the exact UTF-8
+                // text the text-protocol `METRICS` verb returns, so the two
+                // protocols (and both network drivers) expose identical
+                // bytes by construction.
+                OP_METRICS if ids.is_empty() => {
+                    let text = state.metrics_text();
+                    put_u32(out, STATUS_OK);
+                    put_u32(out, text.len() as u32);
+                    out.extend_from_slice(text.as_bytes());
+                }
+                // METRICS carrying ids is a bad request (frame consumed,
+                // connection survives) — mirrors PING.
+                OP_METRICS => {
+                    put_u32(out, STATUS_BAD_REQUEST);
+                    put_u32(out, 0);
+                }
                 // Known op with a bad id count, or an unknown op: the frame
                 // was consumed in full, so report and keep the connection.
                 _ => {
@@ -757,6 +778,14 @@ impl BinaryClient {
         }
     }
 
+    fn recv_bytes(&mut self, n: usize) -> Result<Vec<u8>, WireError> {
+        let mut bytes = vec![0u8; n];
+        match self.reader.read_exact(&mut bytes) {
+            Ok(()) => Ok(bytes),
+            Err(e) => Err(self.fail(e)),
+        }
+    }
+
     /// Send `frame` and read the response status word, reconnecting and
     /// resending once if the server dropped the connection. See the type
     /// docs for when the retry is safe (`idempotent`). A connection
@@ -911,6 +940,20 @@ impl BinaryClient {
             )));
         }
         Ok(WireStats::from_fields(&xs))
+    }
+
+    /// Fetch the server's full metrics exposition (the binary twin of the
+    /// text `METRICS` verb; the cluster router scrapes replicas with this).
+    pub fn metrics(&mut self) -> Result<String, WireError> {
+        let status = self.request(OP_METRICS, &[])?;
+        let count = self.recv_u32()? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let bytes = self.recv_bytes(count)?;
+        String::from_utf8(bytes).map_err(|_| {
+            WireError::Io(io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 METRICS payload"))
+        })
     }
 
     /// Ask the server to hot-swap its model to the snapshot at `path`

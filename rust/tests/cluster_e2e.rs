@@ -71,6 +71,7 @@ fn router_cfg() -> RouterConfig {
         probe_interval: Duration::from_millis(50),
         eject_after: 2,
         net: net_from_env(),
+        ..RouterConfig::default()
     }
 }
 
@@ -462,6 +463,70 @@ fn router_listener_serves_both_protocols() {
     state.shutdown();
     accept.join().unwrap();
     std::fs::remove_dir_all(&dir2).ok();
+    cluster.stop();
+}
+
+/// CI smoke for the metrics plane end-to-end over a live 2-shard cluster:
+/// each shard answers `OP_METRICS` with its own families, and the router's
+/// roll-up re-emits every replica's samples with `shard`/`replica` labels
+/// alongside its own router families and scrape markers.
+#[test]
+fn metrics_scrape_across_cluster() {
+    let store = regular_store(64, 8, 31);
+    let cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 2, 1, "metrics");
+    let router = Router::new(cluster.topo.clone(), router_cfg());
+
+    // Traffic through the router so shard and router counters move.
+    let rows = router.lookup(&[0, 63, 1]).unwrap();
+    assert_eq!(rows.len(), 3);
+    router.knn(5, 3).unwrap();
+
+    // Direct shard scrape over the binary wire.
+    let mut shard_client = BinaryClient::connect(&cluster.topo.replicas(0)[0]).unwrap();
+    let shard_text = shard_client.metrics().unwrap();
+    shard_client.quit().unwrap();
+    assert!(shard_text.contains("w2k_served_total"), "{shard_text}");
+    assert!(
+        shard_text.contains("w2k_stage_us_count{stage=\"batch_wait\"}"),
+        "{shard_text}"
+    );
+    assert!(shard_text.ends_with("# EOF\n"), "{shard_text}");
+
+    // Router roll-up: own families first, then per-replica sections.
+    let rolled = router.metrics();
+    assert!(
+        rolled.contains("w2k_router_shard_failovers_total{shard=\"0\"} 0"),
+        "{rolled}"
+    );
+    assert!(
+        rolled.contains("w2k_router_shard_timeouts_total{shard=\"1\"} 0"),
+        "{rolled}"
+    );
+    assert!(rolled.contains("w2k_router_healthy_replicas 2"), "{rolled}");
+    assert!(rolled.contains("w2k_stage_us_count{stage=\"route\"}"), "{rolled}");
+    for (s, r) in [(0, 0), (1, 0)] {
+        assert!(
+            rolled.contains(&format!("w2k_scrape_ok{{shard=\"{s}\",replica=\"{r}\"}} 1")),
+            "shard {s} replica {r} scrape missing: {rolled}"
+        );
+        // Unbraced shard samples gain a label set; braced ones gain the
+        // shard labels in front of their own.
+        assert!(
+            rolled.contains(&format!("w2k_served_total{{shard=\"{s}\",replica=\"{r}\"}}")),
+            "{rolled}"
+        );
+        assert!(
+            rolled.contains(&format!(
+                "w2k_stage_us_count{{shard=\"{s}\",replica=\"{r}\",stage=\"kernel\"}}"
+            )),
+            "{rolled}"
+        );
+    }
+    // The scraped servers' own terminators are dropped; exactly one EOF.
+    assert!(rolled.ends_with("# EOF\n"), "{rolled}");
+    assert_eq!(rolled.matches("# EOF").count(), 1, "{rolled}");
+
+    router.shutdown();
     cluster.stop();
 }
 

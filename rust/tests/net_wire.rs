@@ -338,6 +338,70 @@ fn idle_timeout_reaps_parked_conns_under_epoll() {
 }
 
 #[test]
+fn metrics_exposition_byte_identical_across_drivers() {
+    // Histogram samples are timing-dependent, so byte-identity is asserted
+    // with the metrics plane disabled ([obs] enable = false): every family
+    // still renders (all-zero), making the full exposition deterministic.
+    // On each server the text verb and OP_METRICS must also agree byte for
+    // byte.
+    let mut per_driver = Vec::new();
+    for driver in DRIVERS {
+        let mut cfg = cfg_for(driver);
+        cfg.obs.enable = false;
+        let (state, listener, addr) = spawn(&cfg).unwrap();
+        let st = state.clone();
+        let acc = std::thread::spawn(move || accept_loop(listener, st));
+
+        let text = roundtrip_batched(&addr, b"METRICS\nQUIT\n");
+        let mut bin = word2ket::serving::BinaryClient::connect(&addr).unwrap();
+        let bin_text = bin.metrics().unwrap();
+        bin.quit().unwrap();
+        assert_eq!(
+            String::from_utf8(text.clone()).unwrap(),
+            bin_text,
+            "{driver}: text METRICS vs OP_METRICS diverge"
+        );
+        assert!(bin_text.ends_with("# EOF\n"), "{driver}: {bin_text}");
+        per_driver.push(text);
+
+        state.shutdown();
+        acc.join().unwrap();
+    }
+    assert_eq!(
+        per_driver[0], per_driver[1],
+        "threads and epoll drivers must render METRICS byte-identically"
+    );
+}
+
+#[test]
+fn metrics_name_sets_match_across_drivers_under_traffic() {
+    // With the plane enabled and live traffic, values differ but the
+    // rendered families and their label sets must not depend on the driver.
+    let mut names_per_driver: Vec<Vec<String>> = Vec::new();
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let mut bin = word2ket::serving::BinaryClient::connect(&addr).unwrap();
+        bin.lookup(&[1, 2, 3]).unwrap();
+        bin.knn(7, 4).unwrap();
+        let text = bin.metrics().unwrap();
+        bin.quit().unwrap();
+        assert!(text.contains("w2k_served_total"), "{driver}: {text}");
+        let names: Vec<String> = text
+            .lines()
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(|l| l.split_whitespace().next().unwrap().to_string())
+            .collect();
+        names_per_driver.push(names);
+        state.shutdown();
+        acc.join().unwrap();
+    }
+    assert_eq!(
+        names_per_driver[0], names_per_driver[1],
+        "metric name/label sets diverge across drivers"
+    );
+}
+
+#[test]
 fn stats_views_consistent_under_both_drivers() {
     for driver in DRIVERS {
         let (state, addr, acc) = start(driver);
