@@ -9,6 +9,13 @@
 //!      [--wire binary|text] [--driver threads|epoll] [--zipf 1.05]
 //!      [--knn 0.1 --topk 10] [--index ivf --nlist 64 --nprobe 8]
 //!      [--save model.snap] [--load model.snap] [--reload model.snap]
+//!      [--trace-sample 0.01] [--trace <32-hex id>]
+//!
+//! `--trace-sample F` head-samples a fraction of requests into the
+//! distributed tracer ([`word2ket::obs::Tracer`]); after the run the demo
+//! dumps the server's completed-trace ring (`TRACE?slow`). `--trace <id>`
+//! fetches one specific trace instead — in cluster mode the router
+//! assembles the cross-node span tree from every shard.
 //!
 //! `--driver epoll` runs every listener on the event-loop reactor instead
 //! of the blocking thread-per-connection driver (and, in cluster mode,
@@ -75,6 +82,8 @@ fn main() -> word2ket::Result<()> {
                 OptSpec { name: "load", help: "boot the server from this snapshot (mmap) instead of RNG+config", takes_value: true, repeated: false, default: None },
                 OptSpec { name: "reload", help: "hot-swap to this snapshot mid-load via OP_RELOAD (cluster mode: a dir to rolling-reload from)", takes_value: true, repeated: false, default: None },
                 OptSpec { name: "cluster", help: "topology TOML ([cluster] section): self-host the shards and route through a scatter-gather router", takes_value: true, repeated: false, default: None },
+                OptSpec { name: "trace-sample", help: "fraction of requests head-sampled into the distributed tracer", takes_value: true, repeated: false, default: Some("0") },
+                OptSpec { name: "trace", help: "dump this 32-hex trace id after the run instead of the trace ring", takes_value: true, repeated: false, default: None },
             ],
             positionals: vec![],
         }],
@@ -99,6 +108,17 @@ fn main() -> word2ket::Result<()> {
     let zipf_s = parsed.get_f64("zipf")?.unwrap_or(1.05);
     let knn_frac = parsed.get_f64("knn")?.unwrap_or(0.0).clamp(0.0, 1.0);
     let topk = parsed.get_usize("topk")?.unwrap_or(10).max(1);
+    let trace_sample = parsed.get_f64("trace-sample")?.unwrap_or(0.0).clamp(0.0, 1.0);
+    let trace_id = match parsed.get("trace") {
+        Some(hex) => match word2ket::obs::TraceContext::parse_hex(hex) {
+            Some(id) => Some(id),
+            None => {
+                eprintln!("--trace must be a 32-hex trace id, got '{hex}'");
+                std::process::exit(2);
+            }
+        },
+        None => None,
+    };
 
     let mut cfg = ExperimentConfig::default();
     cfg.embedding.kind = EmbeddingKind::Word2KetXS;
@@ -116,6 +136,7 @@ fn main() -> word2ket::Result<()> {
     cfg.index.kind = IndexKind::parse(parsed.get("index").unwrap_or("brute"))?;
     cfg.index.nlist = parsed.get_usize("nlist")?.unwrap_or(64);
     cfg.index.nprobe = parsed.get_usize("nprobe")?.unwrap_or(8);
+    cfg.obs.trace_sample = trace_sample;
 
     if let Some(save) = parsed.get("save") {
         // Build the exact store the server would build (same seed) and
@@ -155,6 +176,7 @@ fn main() -> word2ket::Result<()> {
             &mix,
             zipf_s,
             reload_path.as_deref(),
+            trace_id,
         );
     }
 
@@ -260,6 +282,19 @@ fn main() -> word2ket::Result<()> {
         stats.accept_errors,
         100.0 * stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64
     );
+    // Trace dump: one specific id, or (when sampling was on) the server's
+    // completed-trace ring — the single-node span-per-stage story.
+    if let Some(id) = trace_id {
+        match stats_client.trace(id) {
+            Ok(text) => print!("{text}"),
+            Err(e) => eprintln!("TRACE fetch failed: {e}"),
+        }
+    } else if trace_sample > 0.0 {
+        match stats_client.trace_slow() {
+            Ok(text) => print!("server trace ring:\n{text}"),
+            Err(e) => eprintln!("TRACE?slow fetch failed: {e}"),
+        }
+    }
     stats_client.quit().ok();
 
     state.shutdown();
@@ -333,6 +368,7 @@ fn run_binary_client(
 /// Self-hosted cluster demo: per-shard snapshots, one stock server per
 /// replica, Zipf load through the scatter-gather router, optional mid-load
 /// rolling reload. See the module docs.
+#[allow(clippy::too_many_arguments)]
 fn run_cluster(
     topo_file: &str,
     cfg: &ExperimentConfig,
@@ -341,6 +377,7 @@ fn run_cluster(
     mix: &Mix,
     zipf_s: f64,
     reload_dir: Option<&str>,
+    trace_id: Option<u128>,
 ) -> word2ket::Result<()> {
     let src = std::fs::read_to_string(topo_file).map_err(|e| {
         word2ket::Error::Config(format!("cannot read topology {topo_file}: {e}"))
@@ -351,6 +388,10 @@ fn run_cluster(
     // The demo's --driver flag overrides the topology file's [net] section
     // so one flag flips the shard servers and the router's fan-out together.
     router_cfg.net = cfg.net;
+    // Likewise --trace-sample overrides the topology file's [obs] sampling
+    // so one flag arms tracing on the router and (via the shard configs
+    // cloned below) every shard server at once.
+    router_cfg.obs.trace_sample = cfg.obs.trace_sample;
     let mut cfg = cfg.clone();
     cfg.model.vocab = shape.vocab();
     cfg.validate()?;
@@ -513,6 +554,13 @@ fn run_cluster(
         cs.aggregate.knn_queries,
         cs.aggregate.p99_us
     );
+    // Cross-node trace dump: the router assembles its own spans plus every
+    // shard's (scraped over OP_TRACE) into one labelled span tree.
+    if let Some(id) = trace_id {
+        print!("{}", router.trace_text(id));
+    } else if cfg.obs.trace_sample > 0.0 {
+        print!("router trace ring:\n{}", router.trace_slow_text());
+    }
 
     router.shutdown();
     for (state, accept) in nodes {

@@ -1,14 +1,16 @@
 //! Bench: observability overhead — the same batched LOOKUP load against a
-//! server with the metrics plane enabled (the default) and one started with
-//! `[obs] enable = false`, for each net driver.
+//! server with the metrics plane enabled (the default), one started with
+//! `[obs] enable = false`, and one with the metrics plane *plus* the
+//! distributed tracer head-sampling 1% of requests, for each net driver.
 //!
 //! What this quantifies: the per-request cost of the `obs/` plane — one
 //! `Instant` read per stage boundary, one relaxed atomic increment per
-//! log₂-bucket histogram sample, and the slow-query ring check. The
-//! acceptance bar for the metrics plane is that enabled-vs-disabled
-//! throughput stays within 5% on the batched lookup path; rows land in
-//! `BENCH_obs.json` with the measured overhead so regressions are visible
-//! in version control, not just in a terminal scrollback.
+//! log₂-bucket histogram sample, and the slow-query ring check — and, in
+//! the traced column, the sampling branch plus the span allocations for
+//! the sampled 1%. The acceptance bar is that every enabled column stays
+//! within 5% of the disabled baseline on the batched lookup path; rows
+//! land in `BENCH_obs.json` with the measured overhead so regressions are
+//! visible in version control, not just in a terminal scrollback.
 //!
 //! The enabled server is also scraped once over the wire (`OP_METRICS`)
 //! after the load run, so the bench doubles as an end-to-end check that the
@@ -33,7 +35,7 @@ struct Server {
     accept: std::thread::JoinHandle<()>,
 }
 
-fn spawn_server(driver: NetDriver, obs_enabled: bool, vocab: usize) -> Server {
+fn spawn_server(driver: NetDriver, obs_enabled: bool, trace_sample: f64, vocab: usize) -> Server {
     let mut cfg = ExperimentConfig::default();
     cfg.embedding.kind = EmbeddingKind::Word2KetXS;
     cfg.embedding.order = 2;
@@ -44,6 +46,7 @@ fn spawn_server(driver: NetDriver, obs_enabled: bool, vocab: usize) -> Server {
     cfg.serving.batch_window_us = 50;
     cfg.net.driver = driver;
     cfg.obs.enable = obs_enabled;
+    cfg.obs.trace_sample = trace_sample;
     let (state, listener, addr) = server::spawn(&cfg).expect("bench server");
     let st = state.clone();
     let accept = std::thread::spawn(move || server::accept_loop(listener, st));
@@ -86,9 +89,24 @@ fn run_load(addr: &str, vocab: usize, iters: usize) -> (f64, Summary) {
     (reqs / wall.elapsed().as_secs_f64(), merged)
 }
 
+/// One bench column: the metrics plane on/off, optionally with the
+/// distributed tracer head-sampling a fraction of requests.
+struct BenchMode {
+    label: &'static str,
+    obs_enabled: bool,
+    trace_sample: f64,
+}
+
+const MODES: [BenchMode; 3] = [
+    BenchMode { label: "off", obs_enabled: false, trace_sample: 0.0 },
+    BenchMode { label: "on", obs_enabled: true, trace_sample: 0.0 },
+    BenchMode { label: "on+trace1%", obs_enabled: true, trace_sample: 0.01 },
+];
+
 struct RowOut {
     driver: NetDriver,
-    obs: bool,
+    obs: &'static str,
+    trace_sample: f64,
     rps: f64,
     p50_us: f64,
     p99_us: f64,
@@ -111,18 +129,18 @@ fn main() {
     for driver in [NetDriver::Threads, NetDriver::Epoll] {
         println!("driver = {driver}:");
         let mut baseline_rps = 0.0;
-        for obs_enabled in [false, true] {
-            let server = spawn_server(driver, obs_enabled, vocab);
+        for mode in &MODES {
+            let server = spawn_server(driver, mode.obs_enabled, mode.trace_sample, vocab);
             // Warm the cache and the batching path before timing.
             run_load(&server.addr, vocab, iters / 10 + 1);
             let (rps, lat) = run_load(&server.addr, vocab, iters);
-            let overhead_pct = if obs_enabled && baseline_rps > 0.0 {
+            let overhead_pct = if mode.obs_enabled && baseline_rps > 0.0 {
                 (baseline_rps - rps) / baseline_rps * 100.0
             } else {
                 baseline_rps = rps;
                 0.0
             };
-            let metrics_lines = if obs_enabled {
+            let metrics_lines = if mode.obs_enabled {
                 let mut client = BinaryClient::connect(&server.addr).expect("scrape conn");
                 let text = client.metrics().expect("METRICS over wire");
                 assert!(text.contains("w2k_served_total"), "exposition missing counters");
@@ -130,17 +148,24 @@ fn main() {
                     text.contains("w2k_stage_us_count{stage=\"kernel\"}"),
                     "exposition missing stage histograms"
                 );
+                if mode.trace_sample > 0.0 {
+                    // Deterministic counter sampling starts at request 0,
+                    // so at least one span tree always lands in the ring.
+                    let ring = client.trace_slow().expect("TRACE?slow over wire");
+                    assert!(ring.contains("w2k_trace_span"), "tracer sampled nothing");
+                    assert!(ring.ends_with("# EOF\n"), "trace ring not EOF-terminated");
+                }
                 client.quit().ok();
                 text.lines().count()
             } else {
                 0
             };
             println!(
-                "  obs {}  {rps:>9.0} req/s  p50 {:>6.0}µs  p99 {:>6.0}µs{}",
-                if obs_enabled { "on " } else { "off" },
+                "  obs {:<11}  {rps:>9.0} req/s  p50 {:>6.0}µs  p99 {:>6.0}µs{}",
+                mode.label,
                 lat.p50(),
                 lat.p99(),
-                if obs_enabled {
+                if mode.obs_enabled {
                     format!("  overhead {overhead_pct:+.1}%  ({metrics_lines} exposition lines)")
                 } else {
                     String::new()
@@ -148,7 +173,8 @@ fn main() {
             );
             out.push(RowOut {
                 driver,
-                obs: obs_enabled,
+                obs: mode.label,
+                trace_sample: mode.trace_sample,
                 rps,
                 p50_us: lat.p50(),
                 p99_us: lat.p99(),
@@ -162,7 +188,7 @@ fn main() {
 
     let worst = out
         .iter()
-        .filter(|r| r.obs)
+        .filter(|r| r.obs != "off")
         .map(|r| r.overhead_pct)
         .fold(f64::NEG_INFINITY, f64::max);
     println!(
@@ -178,7 +204,8 @@ fn main() {
         Json::obj(vec![
             ("bench", Json::str("obs_overhead".to_string())),
             ("driver", Json::str(r.driver.as_str().to_string())),
-            ("obs", Json::str(if r.obs { "on" } else { "off" }.to_string())),
+            ("obs", Json::str(r.obs.to_string())),
+            ("trace_sample", Json::num(r.trace_sample)),
             ("rps", Json::num(r.rps)),
             ("p50_us", Json::num(r.p50_us)),
             ("p99_us", Json::num(r.p99_us)),

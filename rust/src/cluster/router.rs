@@ -51,7 +51,7 @@ use crate::config::TomlDoc;
 use crate::error::Error;
 use crate::index::{merge_top_k, Neighbor};
 use crate::net::{NetConfig, NetDriver};
-use crate::obs::{relabel_exposition, Obs, ObsConfig, Stage};
+use crate::obs::{relabel_exposition, Obs, ObsConfig, Span, Stage, TraceContext};
 use crate::serving::wire::{self, WireError, WireStats};
 use crate::serving::BinaryClient;
 use std::path::Path;
@@ -60,7 +60,8 @@ use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 /// Router knobs, parsed from the same `[cluster]` section as the topology.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// (`PartialEq` only: [`ObsConfig`] carries the float `trace_sample`.)
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RouterConfig {
     /// Downstream TCP connect deadline.
     pub connect_timeout: Duration,
@@ -175,6 +176,18 @@ impl RouterError {
             RouterError::Wire(WireError::TimedOut) => wire::STATUS_TIMEOUT,
             RouterError::Wire(_) => wire::STATUS_TIMEOUT,
             RouterError::Reload { .. } => wire::STATUS_RELOAD_FAILED,
+        }
+    }
+
+    /// Short status label stamped onto a routed span that ends in this
+    /// error (mirrors the single-node `LookupError` tags).
+    fn trace_tag(&self) -> &'static str {
+        match self {
+            RouterError::OutOfRange => "range",
+            RouterError::BadQuery => "bad_query",
+            RouterError::ShardDown { .. } => "shard_down",
+            RouterError::Wire(_) => "wire",
+            RouterError::Reload { .. } => "reload",
         }
     }
 }
@@ -301,59 +314,92 @@ impl Router {
     /// Fetch rows for global `ids`, one `dim`-length vector per id, in
     /// request order (scatter by shard, gather by position).
     pub fn lookup(&self, ids: &[u32]) -> Result<Vec<Vec<f32>>, RouterError> {
+        self.lookup_traced(ids, None)
+    }
+
+    /// [`Self::lookup`] carrying an optional propagated trace context plus
+    /// the listener's parse time: the routed span (a child of the client's
+    /// span, or a head-sampled root when `trace` is `None`) parents every
+    /// shard-side span via the fan-out's trace-context extension.
+    pub fn lookup_traced(
+        &self,
+        ids: &[u32],
+        trace: Option<(TraceContext, u64)>,
+    ) -> Result<Vec<Vec<f32>>, RouterError> {
+        let span = self.inner.edge_span("lookup", trace);
+        self.lookup_with_span(ids, span)
+    }
+
+    /// The real lookup: `span` (when sampled) collects the route/fan-out/
+    /// merge stage split and its context rides every downstream frame.
+    fn lookup_with_span(
+        &self,
+        ids: &[u32],
+        mut span: Option<Span>,
+    ) -> Result<Vec<Vec<f32>>, RouterError> {
         let inner = &*self.inner;
-        if ids.is_empty() {
-            return Err(RouterError::BadQuery);
-        }
-        // Stage boundaries (one Instant read each, only when obs is on):
-        // route = bucketing ids by owning shard, fanout = downstream
-        // round-trips, merge = scattering rows back into request order.
-        let t0 = inner.obs.enabled().then(Instant::now);
-        let vocab = inner.topo.vocab();
-        let n = inner.topo.n_shards();
-        // positions[s] / locals[s]: which request slots shard s fills, and
-        // with which shard-local ids.
-        let mut positions: Vec<Vec<usize>> = vec![Vec::new(); n];
-        let mut locals: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for (pos, &gid) in ids.iter().enumerate() {
-            if gid as usize >= vocab {
-                return Err(RouterError::OutOfRange);
+        let t_start = Instant::now();
+        let sampled = span.is_some();
+        let ctx = span.as_ref().map(|s| s.context());
+        let result = (|| {
+            if ids.is_empty() {
+                return Err(RouterError::BadQuery);
             }
-            let (s, local) = inner.topo.locate(gid as usize);
-            positions[s].push(pos);
-            locals[s].push(local as u32);
-        }
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); ids.len()];
-        let involved: Vec<usize> = (0..n).filter(|&s| !positions[s].is_empty()).collect();
-        let t_route = t0.map(|_| Instant::now());
-        if let [s] = involved[..] {
-            // Single-shard fast path: no scatter threads for the common
-            // small request.
-            let rows = inner.with_replica(s, |c| c.lookup(&locals[s]))?;
+            // Stage boundaries (one Instant read each, only when obs is on):
+            // route = bucketing ids by owning shard, fanout = downstream
+            // round-trips, merge = scattering rows back into request order.
+            let t0 = inner.obs.enabled().then(Instant::now);
+            let vocab = inner.topo.vocab();
+            let n = inner.topo.n_shards();
+            // positions[s] / locals[s]: which request slots shard s fills,
+            // and with which shard-local ids.
+            let mut positions: Vec<Vec<usize>> = vec![Vec::new(); n];
+            let mut locals: Vec<Vec<u32>> = vec![Vec::new(); n];
+            for (pos, &gid) in ids.iter().enumerate() {
+                if gid as usize >= vocab {
+                    return Err(RouterError::OutOfRange);
+                }
+                let (s, local) = inner.topo.locate(gid as usize);
+                positions[s].push(pos);
+                locals[s].push(local as u32);
+            }
+            let mut out: Vec<Vec<f32>> = vec![Vec::new(); ids.len()];
+            let involved: Vec<usize> = (0..n).filter(|&s| !positions[s].is_empty()).collect();
+            let t_route = t0.map(|_| Instant::now());
+            if let [s] = involved[..] {
+                // Single-shard fast path: no scatter threads for the common
+                // small request.
+                let rows = inner.with_replica(s, |c| c.lookup_traced(&locals[s], ctx))?;
+                let t_fan = t0.map(|_| Instant::now());
+                for (row, &pos) in rows.into_iter().zip(&positions[s]) {
+                    out[pos] = row;
+                }
+                if let (Some(t0), Some(t_route), Some(t_fan)) = (t0, t_route, t_fan) {
+                    inner.record_route("lookup", t0, t_route, t_fan, &mut span);
+                }
+                return Ok(out);
+            }
+            let gathered = if inner.multiplexed() {
+                inner.fan_lookup(&involved, &locals, ctx)?
+            } else {
+                scatter(&involved, |s| {
+                    inner.with_replica(s, |c| c.lookup_traced(&locals[s], ctx))
+                })?
+            };
             let t_fan = t0.map(|_| Instant::now());
-            for (row, &pos) in rows.into_iter().zip(&positions[s]) {
-                out[pos] = row;
+            for (s, rows) in involved.iter().zip(gathered) {
+                for (row, &pos) in rows.into_iter().zip(&positions[*s]) {
+                    out[pos] = row;
+                }
             }
             if let (Some(t0), Some(t_route), Some(t_fan)) = (t0, t_route, t_fan) {
-                inner.record_route("lookup", t0, t_route, t_fan);
+                inner.record_route("lookup", t0, t_route, t_fan, &mut span);
             }
-            return Ok(out);
-        }
-        let gathered = if inner.multiplexed() {
-            inner.fan_lookup(&involved, &locals)?
-        } else {
-            scatter(&involved, |s| inner.with_replica(s, |c| c.lookup(&locals[s])))?
-        };
-        let t_fan = t0.map(|_| Instant::now());
-        for (s, rows) in involved.iter().zip(gathered) {
-            for (row, &pos) in rows.into_iter().zip(&positions[*s]) {
-                out[pos] = row;
-            }
-        }
-        if let (Some(t0), Some(t_route), Some(t_fan)) = (t0, t_route, t_fan) {
-            inner.record_route("lookup", t0, t_route, t_fan);
-        }
-        Ok(out)
+            Ok(out)
+        })();
+        let err_tag = result.as_ref().err().map(RouterError::trace_tag);
+        inner.close_route_span("lookup", span.take(), sampled, err_tag, t_start);
+        result
     }
 
     /// Inner product of two global ids: co-routed when one shard owns both
@@ -380,46 +426,98 @@ impl Router {
     /// unsharded scan for dense shard stores (see the module docs for the
     /// factored-word2ket ulp caveat).
     pub fn knn(&self, id: u32, k: u32) -> Result<Vec<(u32, f32)>, RouterError> {
+        self.knn_traced(id, k, None)
+    }
+
+    /// [`Self::knn`] carrying an optional propagated trace context: the
+    /// routed span parents both the query row's own lookup span and every
+    /// shard's scatter span, so one client request yields one cross-node
+    /// span tree.
+    pub fn knn_traced(
+        &self,
+        id: u32,
+        k: u32,
+        trace: Option<(TraceContext, u64)>,
+    ) -> Result<Vec<(u32, f32)>, RouterError> {
         let inner = &*self.inner;
-        if id as usize >= inner.topo.vocab() {
-            return Err(RouterError::OutOfRange);
-        }
-        if k == 0 {
-            return Err(RouterError::BadQuery);
-        }
-        // The query row comes from its owning shard like any lookup...
-        let query = self.lookup(&[id])?.remove(0);
-        // ...then every shard scores it. Shards cannot exclude the query
-        // word (they see only a vector), so each is asked for k+1 and the
-        // gather filters the query id out before the merge.
-        let merged = self.scatter_knn(&query, k.saturating_add(1), Some(id))?;
-        Ok(take_k(merged, k as usize))
+        let t_start = Instant::now();
+        let mut span = inner.edge_span("knn", trace);
+        let sampled = span.is_some();
+        let ctx = span.as_ref().map(|s| s.context());
+        let result = (|| {
+            if id as usize >= inner.topo.vocab() {
+                return Err(RouterError::OutOfRange);
+            }
+            if k == 0 {
+                return Err(RouterError::BadQuery);
+            }
+            // The query row comes from its owning shard like any lookup —
+            // traced as a child span of this knn (never a fresh root: an
+            // unsampled knn must not mint an unrelated lookup trace).
+            let child = ctx.and_then(|c| inner.obs.tracer().start_child(c, "lookup", 0));
+            let query = self.lookup_with_span(&[id], child)?.remove(0);
+            // ...then every shard scores it. Shards cannot exclude the query
+            // word (they see only a vector), so each is asked for k+1 and
+            // the gather filters the query id out before the merge.
+            let merged =
+                self.scatter_knn(&query, k.saturating_add(1), Some(id), ctx, &mut span)?;
+            Ok(take_k(merged, k as usize))
+        })();
+        let err_tag = result.as_ref().err().map(RouterError::trace_tag);
+        inner.close_route_span("knn", span.take(), sampled, err_tag, t_start);
+        result
     }
 
     /// Exact global top-`k` for an external query vector (no exclusion).
     pub fn knn_vec(&self, query: &[f32], k: u32) -> Result<Vec<(u32, f32)>, RouterError> {
-        if k == 0 || query.is_empty() {
-            return Err(RouterError::BadQuery);
-        }
-        let merged = self.scatter_knn(query, k, None)?;
-        Ok(take_k(merged, k as usize))
+        self.knn_vec_traced(query, k, None)
+    }
+
+    /// [`Self::knn_vec`] carrying an optional propagated trace context.
+    pub fn knn_vec_traced(
+        &self,
+        query: &[f32],
+        k: u32,
+        trace: Option<(TraceContext, u64)>,
+    ) -> Result<Vec<(u32, f32)>, RouterError> {
+        let inner = &*self.inner;
+        let t_start = Instant::now();
+        let mut span = inner.edge_span("knn", trace);
+        let sampled = span.is_some();
+        let ctx = span.as_ref().map(|s| s.context());
+        let result = (|| {
+            if k == 0 || query.is_empty() {
+                return Err(RouterError::BadQuery);
+            }
+            let merged = self.scatter_knn(query, k, None, ctx, &mut span)?;
+            Ok(take_k(merged, k as usize))
+        })();
+        let err_tag = result.as_ref().err().map(RouterError::trace_tag);
+        inner.close_route_span("knn", span.take(), sampled, err_tag, t_start);
+        result
     }
 
     /// Scatter `OP_KNN_VEC` to every shard, map local ids to global, drop
-    /// `exclude`, and merge the partial heaps exactly.
+    /// `exclude`, and merge the partial heaps exactly. `ctx` rides every
+    /// downstream frame; `span` (the caller's routed span, when sampled)
+    /// is finished by [`Inner::record_route`] on success.
     fn scatter_knn(
         &self,
         query: &[f32],
         per_shard_k: u32,
         exclude: Option<u32>,
+        ctx: Option<TraceContext>,
+        span: &mut Option<Span>,
     ) -> Result<Vec<Neighbor>, RouterError> {
         let inner = &*self.inner;
         let shards: Vec<usize> = (0..inner.topo.n_shards()).collect();
         let t0 = inner.obs.enabled().then(Instant::now);
         let per_shard = if inner.multiplexed() && shards.len() > 1 {
-            inner.fan_knn(&shards, query, per_shard_k)?
+            inner.fan_knn(&shards, query, per_shard_k, ctx)?
         } else {
-            scatter(&shards, |s| inner.with_replica(s, |c| c.knn_vec(query, per_shard_k)))?
+            scatter(&shards, |s| {
+                inner.with_replica(s, |c| c.knn_vec_traced(query, per_shard_k, ctx))
+            })?
         };
         let t_fan = t0.map(|_| Instant::now());
         let lists = shards.iter().zip(per_shard).map(|(&s, locals)| {
@@ -441,7 +539,7 @@ impl Router {
             // No routing decision for a scatter-to-all: the route span is
             // empty by construction (the query row's own lookup recorded
             // its routing separately).
-            inner.record_route("knn", t0, t0, t_fan);
+            inner.record_route("knn", t0, t0, t_fan, span);
         }
         Ok(merged)
     }
@@ -667,6 +765,58 @@ impl Router {
     pub fn metrics_slow_text(&self) -> String {
         self.inner.obs.render_slow()
     }
+
+    /// Cluster-assembled trace dump (`TRACE <id>` / `OP_TRACE` on the
+    /// router listener): the router's own spans for `trace_id` first, then
+    /// every replica's spans for it scraped over `OP_TRACE` on dedicated
+    /// admin connections and re-emitted with `shard`/`replica` labels —
+    /// the same roll-up pattern as [`Self::metrics`]. A
+    /// `w2k_trace_scrape_ok{shard,replica}` marker per replica keeps dead
+    /// shards *visible* (marker 0, spans absent) instead of silently
+    /// hiding them from the assembled tree.
+    pub fn trace_text(&self, trace_id: u128) -> String {
+        use std::fmt::Write as _;
+        let inner = &*self.inner;
+        let mut out = String::new();
+        inner.obs.tracer().render_trace(trace_id, &mut out);
+        let pairs = self.replica_pairs();
+        let scraped: Vec<(usize, usize, Option<String>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = pairs
+                .iter()
+                .map(|&(s, r)| {
+                    scope.spawn(move || {
+                        (s, r, inner.with_admin_connection(s, r, |c| c.trace(trace_id)).ok())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("trace scrape thread")).collect()
+        });
+        for (s, r, text) in scraped {
+            let _ = writeln!(
+                out,
+                "w2k_trace_scrape_ok{{shard=\"{s}\",replica=\"{r}\"}} {}",
+                u32::from(text.is_some())
+            );
+            if let Some(text) = text {
+                out.push_str(&relabel_exposition(
+                    &text,
+                    &format!("shard=\"{s}\",replica=\"{r}\""),
+                ));
+            }
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+
+    /// The router's own completed-trace ring (`TRACE?slow` on the router
+    /// listener): head-sampled plus tail-captured routed requests. Shard
+    /// rings are one `TRACE <id>` away via the assembled dump.
+    pub fn trace_slow_text(&self) -> String {
+        let mut out = String::new();
+        self.inner.obs.tracer().render_ring(&mut out);
+        out.push_str("# EOF\n");
+        out
+    }
 }
 
 /// Run `f(shard)` for every listed shard on scoped threads and gather the
@@ -696,7 +846,16 @@ impl Inner {
     /// Record the route/fan-out/merge stage split of one routed request
     /// (merge ends now), its end-to-end latency, and a slow-ring entry.
     /// Callers only reach this when obs is enabled (the `Instant`s exist).
-    fn record_route(&self, op: &'static str, t0: Instant, route_done: Instant, fan_done: Instant) {
+    /// A sampled routed span mirrors the same stage split and is finished
+    /// here — ring-visible before the response is written.
+    fn record_route(
+        &self,
+        op: &'static str,
+        t0: Instant,
+        route_done: Instant,
+        fan_done: Instant,
+        span: &mut Option<Span>,
+    ) {
         let now = Instant::now();
         let route = route_done.duration_since(t0);
         let fan = fan_done.duration_since(route_done);
@@ -714,6 +873,52 @@ impl Inner {
                 (Stage::Merge, merge.as_micros() as u64),
             ],
         );
+        if let Some(mut s) = span.take() {
+            s.stage(Stage::Route, route.as_micros() as u64);
+            s.stage(Stage::Fanout, fan.as_micros() as u64);
+            s.stage(Stage::Merge, merge.as_micros() as u64);
+            self.obs.tracer().finish(s);
+        }
+    }
+
+    /// Mint the routed span for one request at the router's edge: adopt a
+    /// propagated client context as a child span (stamping the listener's
+    /// parse time) or head-sample a fresh root.
+    fn edge_span(&self, op: &'static str, trace: Option<(TraceContext, u64)>) -> Option<Span> {
+        let tracer = self.obs.tracer();
+        let mut span = match trace {
+            Some((ctx, pre_us)) => tracer.start_child(ctx, op, pre_us),
+            None => tracer.maybe_start_root(op),
+        };
+        if let (Some(s), Some((_, pre_us))) = (span.as_mut(), trace) {
+            if pre_us > 0 {
+                s.stage(Stage::Parse, pre_us);
+            }
+        }
+        span
+    }
+
+    /// Close out a routed request's span. A span still alive here ended in
+    /// an error (success finishes it inside [`Self::record_route`]);
+    /// unsampled or errored requests fall through to tail-capture so slow
+    /// and failing routes stay ring-visible at any sampling rate.
+    fn close_route_span(
+        &self,
+        op: &'static str,
+        span: Option<Span>,
+        sampled: bool,
+        err: Option<&'static str>,
+        t0: Instant,
+    ) {
+        let tracer = self.obs.tracer();
+        if let Some(mut s) = span {
+            if let Some(tag) = err {
+                s.set_status(tag);
+            }
+            tracer.finish(s);
+        } else if err.is_some() || !sampled {
+            tracer.tail_capture(op, t0.elapsed().as_micros() as u64, err.is_some());
+        }
     }
 
     /// Lock a replica slot, (re)connecting if needed, and run `op` on it.
@@ -887,10 +1092,11 @@ impl Inner {
         &self,
         involved: &[usize],
         locals: &[Vec<u32>],
+        ctx: Option<TraceContext>,
     ) -> Result<Vec<Vec<Vec<f32>>>, RouterError> {
         let attempts = self.scatter_multiplexed(
             involved,
-            &|s| wire::encode_ids_frame(wire::OP_LOOKUP, &locals[s]),
+            &|s| wire::encode_ids_frame_traced(wire::OP_LOOKUP, &locals[s], ctx),
             true,
         );
         let mut out = Vec::with_capacity(involved.len());
@@ -898,7 +1104,7 @@ impl Inner {
             out.push(match attempt {
                 FanAttempt::Rows(rows) => rows,
                 FanAttempt::Neighbors(_) => unreachable!("rows exchange answered neighbors"),
-                other => self.refan(s, other, |c| c.lookup(&locals[s]))?,
+                other => self.refan(s, other, |c| c.lookup_traced(&locals[s], ctx))?,
             });
         }
         Ok(out)
@@ -909,8 +1115,9 @@ impl Inner {
         &self,
         involved: &[usize],
         locals: &[Vec<u32>],
+        ctx: Option<TraceContext>,
     ) -> Result<Vec<Vec<Vec<f32>>>, RouterError> {
-        scatter(involved, |s| self.with_replica(s, |c| c.lookup(&locals[s])))
+        scatter(involved, |s| self.with_replica(s, |c| c.lookup_traced(&locals[s], ctx)))
     }
 
     /// Multiplexed KNN_VEC fan-out with the same per-shard fallback.
@@ -920,10 +1127,11 @@ impl Inner {
         shards: &[usize],
         query: &[f32],
         per_shard_k: u32,
+        ctx: Option<TraceContext>,
     ) -> Result<Vec<Vec<(u32, f32)>>, RouterError> {
         let attempts = self.scatter_multiplexed(
             shards,
-            &|_| wire::encode_knn_vec_frame(query, per_shard_k),
+            &|_| wire::encode_knn_vec_frame_traced(query, per_shard_k, ctx),
             false,
         );
         let mut out = Vec::with_capacity(shards.len());
@@ -931,7 +1139,7 @@ impl Inner {
             out.push(match attempt {
                 FanAttempt::Neighbors(ns) => ns,
                 FanAttempt::Rows(_) => unreachable!("neighbors exchange answered rows"),
-                other => self.refan(s, other, |c| c.knn_vec(query, per_shard_k))?,
+                other => self.refan(s, other, |c| c.knn_vec_traced(query, per_shard_k, ctx))?,
             });
         }
         Ok(out)
@@ -943,8 +1151,11 @@ impl Inner {
         shards: &[usize],
         query: &[f32],
         per_shard_k: u32,
+        ctx: Option<TraceContext>,
     ) -> Result<Vec<Vec<(u32, f32)>>, RouterError> {
-        scatter(shards, |s| self.with_replica(s, |c| c.knn_vec(query, per_shard_k)))
+        scatter(shards, |s| {
+            self.with_replica(s, |c| c.knn_vec_traced(query, per_shard_k, ctx))
+        })
     }
 
     /// Resolve a non-answer fan-out attempt through the blocking failover

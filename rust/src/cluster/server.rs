@@ -25,6 +25,14 @@
 //!   ([`Router::metrics`]): the router's own families followed by every
 //!   replica's exposition re-labelled with `shard`/`replica`;
 //!   `METRICS?slow` answers the router's own slow-query ring.
+//! * `TRACE <id>` / `OP_TRACE` answers the cluster-assembled span tree
+//!   ([`Router::trace_text`]): the router's own spans for the trace plus
+//!   every replica's spans scraped over `OP_TRACE` and re-labelled with
+//!   `shard`/`replica`; `TRACE?slow` answers the router's own
+//!   completed-trace ring. A client frame carrying the trace-context
+//!   extension bit routes through the traced paths, so the propagated
+//!   context parents the router span and, through the fan-out, every
+//!   shard-side span.
 
 use super::router::{ClusterStats, Router, RouterConfig, RouterError};
 use super::topology::Topology;
@@ -115,6 +123,12 @@ fn dispatch_text(state: &RouterState, line: &str) -> TextAction {
         ["METRICS"] => router.metrics(),
         ["METRICS?slow"] => router.metrics_slow_text(),
         ["METRICS" | "METRICS?slow", ..] => "ERR METRICS takes no arguments\n".to_string(),
+        ["TRACE?slow"] => router.trace_slow_text(),
+        ["TRACE", id] => match crate::obs::TraceContext::parse_hex(id) {
+            Some(trace_id) => router.trace_text(trace_id),
+            None => "ERR bad trace id\n".to_string(),
+        },
+        ["TRACE" | "TRACE?slow", ..] => "ERR TRACE takes <trace id>\n".to_string(),
         ["LOOKUP"] => err_line(&RouterError::BadQuery),
         ["LOOKUP", rest @ ..] if rest.len() > wire::MAX_IDS as usize => {
             "ERR too many ids\n".to_string()
@@ -166,8 +180,32 @@ fn dispatch_text(state: &RouterState, line: &str) -> TextAction {
 /// local [`ServingState`](crate::serving::ServingState). Returns true when
 /// the connection must close after the bytes flush.
 fn respond_binary_router(state: &RouterState, req: BinRequest, out: &mut Vec<u8>) -> bool {
+    match req {
+        // Unwrap a propagated trace context and dispatch through the
+        // router's traced paths; the response bytes are identical to the
+        // untraced dispatch by construction.
+        BinRequest::Traced { ctx, parse_us, inner } => {
+            dispatch_binary_router(state, *inner, Some((ctx, parse_us)), out)
+        }
+        other => dispatch_binary_router(state, other, None, out),
+    }
+}
+
+fn dispatch_binary_router(
+    state: &RouterState,
+    req: BinRequest,
+    trace: Option<(crate::obs::TraceContext, u64)>,
+    out: &mut Vec<u8>,
+) -> bool {
     let router = &state.router;
     match req {
+        // Decoders never nest contexts; a hand-built nested frame is a
+        // semantic error (the frame was consumed, connection survives).
+        BinRequest::Traced { .. } => {
+            wire::put_u32(out, wire::STATUS_BAD_REQUEST);
+            wire::put_u32(out, 0);
+            false
+        }
         BinRequest::Fatal => {
             wire::put_u32(out, wire::STATUS_BAD_FRAME);
             wire::put_u32(out, 0);
@@ -200,7 +238,7 @@ fn respond_binary_router(state: &RouterState, req: BinRequest, out: &mut Vec<u8>
             false
         }
         BinRequest::KnnVec { k, query } => {
-            match router.knn_vec(&query, k) {
+            match router.knn_vec_traced(&query, k, trace) {
                 Ok(neighbors) => {
                     let _ = wire::write_neighbors_frame(out, neighbors.iter().copied());
                 }
@@ -222,7 +260,7 @@ fn respond_binary_router(state: &RouterState, req: BinRequest, out: &mut Vec<u8>
                     wire::put_u32(out, wire::STATUS_BAD_REQUEST);
                     wire::put_u32(out, 0);
                 }
-                wire::OP_LOOKUP if !ids.is_empty() => match router.lookup(&ids) {
+                wire::OP_LOOKUP if !ids.is_empty() => match router.lookup_traced(&ids, trace) {
                     Ok(rows) => {
                         let row_bytes: usize = rows.iter().map(|r| r.len() * 4).sum();
                         out.reserve(8 + row_bytes);
@@ -252,7 +290,7 @@ fn respond_binary_router(state: &RouterState, req: BinRequest, out: &mut Vec<u8>
                     wire::put_u32(out, wire::STATUS_BAD_FRAME);
                     wire::put_u32(out, 0);
                 }
-                wire::OP_KNN if ids.len() == 2 => match router.knn(ids[0], ids[1]) {
+                wire::OP_KNN if ids.len() == 2 => match router.knn_traced(ids[0], ids[1], trace) {
                     Ok(neighbors) => {
                         let _ = wire::write_neighbors_frame(out, neighbors.iter().copied());
                     }
@@ -271,6 +309,26 @@ fn respond_binary_router(state: &RouterState, req: BinRequest, out: &mut Vec<u8>
                     out.extend_from_slice(text.as_bytes());
                 }
                 wire::OP_METRICS => {
+                    wire::put_u32(out, wire::STATUS_BAD_REQUEST);
+                    wire::put_u32(out, 0);
+                }
+                // Cluster-assembled trace by id (four little-endian u32
+                // words) — the binary twin of the text `TRACE <hex id>`.
+                wire::OP_TRACE if ids.len() == 4 => {
+                    let text = router.trace_text(wire::trace_id_from_words(&ids));
+                    wire::put_u32(out, wire::STATUS_OK);
+                    wire::put_u32(out, text.len() as u32);
+                    out.extend_from_slice(text.as_bytes());
+                }
+                // No id: the router's own completed-trace ring.
+                wire::OP_TRACE if ids.is_empty() => {
+                    let text = router.trace_slow_text();
+                    wire::put_u32(out, wire::STATUS_OK);
+                    wire::put_u32(out, text.len() as u32);
+                    out.extend_from_slice(text.as_bytes());
+                }
+                // Any other TRACE id count is a bad request — mirrors PING.
+                wire::OP_TRACE => {
                     wire::put_u32(out, wire::STATUS_BAD_REQUEST);
                     wire::put_u32(out, 0);
                 }

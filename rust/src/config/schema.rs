@@ -469,6 +469,15 @@ impl ExperimentConfig {
         if self.obs.slow_log_len > 1 << 16 {
             return Err(Error::Config("obs.slow_log_len must be <= 65536".into()));
         }
+        if !(0.0..=1.0).contains(&self.obs.trace_sample) {
+            return Err(Error::Config(format!(
+                "obs.trace_sample must be in [0, 1] (got {})",
+                self.obs.trace_sample
+            )));
+        }
+        if self.obs.trace_ring_len > 1 << 16 {
+            return Err(Error::Config("obs.trace_ring_len must be <= 65536".into()));
+        }
         Ok(())
     }
 
@@ -641,20 +650,40 @@ drain_ms = 500
 [obs]
 enable = false
 slow_log_len = 8
+trace_sample = 0.25
+trace_ring_len = 16
+trace_slow_us = 5000
 "#;
         let doc = TomlDoc::parse(src).unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert!(!cfg.obs.enable);
         assert_eq!(cfg.obs.slow_log_len, 8);
         assert_eq!(cfg.obs.stage_histograms, ObsConfig::default().stage_histograms);
+        assert!((cfg.obs.trace_sample - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.obs.trace_ring_len, 16);
+        assert_eq!(cfg.obs.trace_slow_us, 5000);
 
-        // Defaults: metrics on, 32-entry slow ring.
+        // Defaults: metrics on, 32-entry slow ring, tracing off (sample 0)
+        // with a 64-entry trace ring armed for propagated contexts.
         let d = ExperimentConfig::default();
         assert!(d.obs.enable);
         assert_eq!(d.obs.slow_log_len, 32);
+        assert_eq!(d.obs.trace_sample, 0.0);
+        assert_eq!(d.obs.trace_ring_len, 64);
+        assert_eq!(d.obs.trace_slow_us, 100_000);
 
         let mut bad = ExperimentConfig::default();
         bad.obs.slow_log_len = (1 << 16) + 1;
+        assert!(bad.validate().is_err());
+
+        let mut bad = ExperimentConfig::default();
+        bad.obs.trace_sample = 1.5;
+        assert!(bad.validate().is_err());
+        bad.obs.trace_sample = -0.1;
+        assert!(bad.validate().is_err());
+
+        let mut bad = ExperimentConfig::default();
+        bad.obs.trace_ring_len = (1 << 16) + 1;
         assert!(bad.validate().is_err());
     }
 

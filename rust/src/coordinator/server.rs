@@ -25,7 +25,12 @@
 //!                                 (counters, per-stage latency histograms,
 //!                                 cache occupancy), terminated by `# EOF`
 //!   `METRICS?slow\n`           → the bounded slow-query ring in the same
-//!                                 format (rank/op/stage labels)
+//!                                 format (rank/op/stage labels, per-stage
+//!                                 latency breakdown per entry)
+//!   `TRACE <id>\n`             → every stored span of trace `<id>` (hex)
+//!                                 with per-stage lines, `# EOF`-terminated
+//!   `TRACE?slow\n`             → the completed-trace ring, one span
+//!                                 summary line per record, oldest first
 //!   `QUIT\n`                   → closes the connection.
 //!
 //! Malformed input (bad ids, out-of-range ids, empty LOOKUP, unknown
@@ -158,6 +163,13 @@ fn dispatch_text(state: &ServerState, line: &str) -> TextAction {
         ["METRICS"] => state.serving.metrics_text(),
         ["METRICS?slow"] => state.serving.metrics_slow_text(),
         ["METRICS" | "METRICS?slow", ..] => "ERR METRICS takes no arguments\n".to_string(),
+        // Trace plane: the completed-span ring and single-trace dumps.
+        ["TRACE?slow"] => state.serving.trace_slow_text(),
+        ["TRACE", id] => match crate::obs::TraceContext::parse_hex(id) {
+            Some(t) => state.serving.trace_text(t),
+            None => "ERR bad trace id\n".to_string(),
+        },
+        ["TRACE" | "TRACE?slow", ..] => "ERR TRACE takes <trace id>\n".to_string(),
         ["LOOKUP"] => err_line(LookupError::Empty),
         // Same allocation cap as the binary protocol's MAX_IDS: one text
         // line must not be able to force a multi-GB reply buffer.

@@ -11,6 +11,7 @@
 //! itself, so a frame parsed here and a frame read blockingly dispatch into
 //! the exact same code.
 
+use crate::obs::TraceContext;
 use crate::serving::wire::{self, BinRequest};
 
 /// First-byte protocol sniff over buffered bytes (mirrors the blocking
@@ -85,50 +86,62 @@ pub fn eof_line(buf: &[u8]) -> LineStep {
 /// Returns `None` while the frame is still incomplete, otherwise the byte
 /// count consumed plus the request. Hostile count headers return
 /// [`BinRequest::Fatal`] after only the 8 header bytes — exactly like the
-/// blocking reader, the claimed payload is never waited for or allocated.
+/// blocking reader, the claimed payload (and any trace-context extension)
+/// is never waited for or allocated. A header with [`wire::OP_TRACE_CTX`]
+/// set needs 24 extension bytes between header and payload; the decoded
+/// request comes back wrapped in [`BinRequest::Traced`] with `parse_us` 0
+/// (the reactor stamps the measured parse time before dispatch).
 pub fn next_frame(buf: &[u8]) -> Option<(usize, BinRequest)> {
     if buf.len() < 8 {
         return None;
     }
-    let op = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    let word = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
     let count = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
-    if op == wire::OP_RELOAD {
-        if count == 0 || count > wire::MAX_PATH_BYTES {
-            return Some((8, BinRequest::Fatal));
-        }
-        let need = 8 + count as usize;
+    let op = word & !wire::OP_TRACE_CTX;
+    let traced = word & wire::OP_TRACE_CTX != 0;
+    if wire::count_is_hostile(op, count) {
+        return Some((8, BinRequest::Fatal));
+    }
+    // Payload begins after the optional 24-byte trace-context extension;
+    // every `need` below includes it, so a partial extension is just an
+    // incomplete frame.
+    let hdr = if traced { 8 + 24 } else { 8 };
+    let (consumed, inner) = if op == wire::OP_RELOAD {
+        let need = hdr + count as usize;
         if buf.len() < need {
             return None;
         }
-        let path = String::from_utf8(buf[8..need].to_vec()).ok();
-        Some((need, BinRequest::Reload { path }))
+        let path = String::from_utf8(buf[hdr..need].to_vec()).ok();
+        (need, BinRequest::Reload { path })
     } else if op == wire::OP_KNN_VEC {
-        if count == 0 || count > wire::MAX_IDS {
-            return Some((8, BinRequest::Fatal));
-        }
-        let need = 8 + 4 + count as usize * 4;
+        let need = hdr + 4 + count as usize * 4;
         if buf.len() < need {
             return None;
         }
-        let k = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
-        let query = buf[12..need]
+        let k = u32::from_le_bytes([buf[hdr], buf[hdr + 1], buf[hdr + 2], buf[hdr + 3]]);
+        let query = buf[hdr + 4..need]
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Some((need, BinRequest::KnnVec { k, query }))
+        (need, BinRequest::KnnVec { k, query })
     } else {
-        if count > wire::MAX_IDS {
-            return Some((8, BinRequest::Fatal));
-        }
-        let need = 8 + count as usize * 4;
+        let need = hdr + count as usize * 4;
         if buf.len() < need {
             return None;
         }
-        let ids = buf[8..need]
+        let ids = buf[hdr..need]
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Some((need, BinRequest::Ids { op, ids }))
+        (need, BinRequest::Ids { op, ids })
+    };
+    if traced {
+        let trace_id = u128::from_le_bytes(buf[8..24].try_into().expect("16 ctx bytes"));
+        let span_id = u64::from_le_bytes(buf[24..32].try_into().expect("8 ctx bytes"));
+        let ctx = TraceContext { trace_id, span_id };
+        Some((consumed, BinRequest::Traced { ctx, parse_us: 0, inner: Box::new(inner) }))
+    } else {
+        Some((consumed, inner))
     }
 }
 
@@ -232,6 +245,37 @@ mod tests {
         ));
         assert!(matches!(
             next_frame(&frame(wire::OP_KNN_VEC, &[], wire::MAX_IDS + 1)),
+            Some((8, BinRequest::Fatal))
+        ));
+    }
+
+    #[test]
+    fn traced_frames_decode_incrementally() {
+        // Hand-rolled traced LOOKUP: flagged header, 24 ctx bytes, payload.
+        let mut f = frame(wire::OP_LOOKUP | wire::OP_TRACE_CTX, &[], 2);
+        f.extend_from_slice(&0xAABB_CCDD_EEFF_0011_2233_4455_6677_8899u128.to_le_bytes());
+        f.extend_from_slice(&0xDEAD_BEEF_CAFE_F00Du64.to_le_bytes());
+        f.extend_from_slice(&7u32.to_le_bytes());
+        f.extend_from_slice(&9u32.to_le_bytes());
+        // Dribble: every strict prefix (including a partial extension) is
+        // incomplete; the full frame parses and consumes the extension.
+        for cut in 0..f.len() {
+            assert!(next_frame(&f[..cut]).is_none(), "cut={cut}");
+        }
+        match next_frame(&f) {
+            Some((consumed, BinRequest::Traced { ctx, parse_us, inner })) => {
+                assert_eq!(consumed, f.len());
+                assert_eq!(ctx.trace_id, 0xAABB_CCDD_EEFF_0011_2233_4455_6677_8899);
+                assert_eq!(ctx.span_id, 0xDEAD_BEEF_CAFE_F00D);
+                assert_eq!(parse_us, 0);
+                assert_eq!(*inner, BinRequest::Ids { op: wire::OP_LOOKUP, ids: vec![7, 9] });
+            }
+            other => panic!("{other:?}"),
+        }
+        // Hostile count with the flag set: fatal from the 8 header bytes
+        // alone — the extension is never waited for.
+        assert!(matches!(
+            next_frame(&frame(wire::OP_LOOKUP | wire::OP_TRACE_CTX, &[], u32::MAX)),
             Some((8, BinRequest::Fatal))
         ));
     }

@@ -419,10 +419,17 @@ impl Reactor {
                     let t_parse = self.obs.as_ref().map(|_| Instant::now());
                     match parser::next_frame(&conn.inbuf) {
                         None => return true,
-                        Some((consumed, req)) => {
+                        Some((consumed, mut req)) => {
                             conn.inbuf.drain(..consumed);
                             if let (Some(o), Some(t)) = (&self.obs, t_parse) {
                                 o.record_stage(Stage::Parse, t.elapsed());
+                            }
+                            // Stamp the measured parse time onto a traced
+                            // request. No note_flush counterpart here: this
+                            // driver flushes whole writev batches, so flush
+                            // time has no per-request attribution.
+                            if let wire::BinRequest::Traced { parse_us, .. } = &mut req {
+                                *parse_us = t_parse.map_or(0, |t| t.elapsed().as_micros() as u64);
                             }
                             let terminal = req.is_terminal();
                             dispatch(conn, token, shared, lifecycle, Req::Binary(req));

@@ -134,7 +134,7 @@ fn run_conn(stream: TcpStream, svc: &dyn Service, lifecycle: &Lifecycle) {
                 Ok(_) => {}
             }
             let t_parse = timing.then(Instant::now);
-            let req = match wire::read_frame(&mut reader) {
+            let mut req = match wire::read_frame(&mut reader) {
                 Ok(Some(req)) => req,
                 Ok(None) => break,
                 Err(e) => {
@@ -142,8 +142,17 @@ fn run_conn(stream: TcpStream, svc: &dyn Service, lifecycle: &Lifecycle) {
                     break;
                 }
             };
-            if let (Some(o), Some(t)) = (&obs, t_parse) {
-                o.record_stage(Stage::Parse, t.elapsed());
+            let parse = t_parse.map(|t| t.elapsed());
+            if let (Some(o), Some(d)) = (&obs, parse) {
+                o.record_stage(Stage::Parse, d);
+            }
+            // Stamp the measured parse time onto a traced request and keep
+            // its context: the flush below happens after dispatch finished
+            // the span, so it is attributed retroactively via note_flush.
+            let mut trace_ctx = None;
+            if let wire::BinRequest::Traced { ctx, parse_us, .. } = &mut req {
+                *parse_us = parse.map_or(0, |d| d.as_micros() as u64);
+                trace_ctx = Some(*ctx);
             }
             out.clear();
             lifecycle.begin_request();
@@ -151,7 +160,11 @@ fn run_conn(stream: TcpStream, svc: &dyn Service, lifecycle: &Lifecycle) {
             let t_flush = timing.then(Instant::now);
             let wrote = out.is_empty() || writer.write_all(&out).is_ok();
             if let (Some(o), Some(t)) = (&obs, t_flush) {
-                o.record_stage(Stage::Flush, t.elapsed());
+                let flushed = t.elapsed();
+                o.record_stage(Stage::Flush, flushed);
+                if let Some(ctx) = trace_ctx {
+                    o.tracer().note_flush(ctx, flushed.as_micros() as u64);
+                }
             }
             lifecycle.end_request();
             if close || !wrote {

@@ -24,6 +24,16 @@
 //! binary `OP_METRICS` op both serve the same string; a scrape ends with a
 //! `# EOF` terminator line (OpenMetrics style) so line-oriented clients
 //! know when the exposition is complete.
+//!
+//! The [`trace`] submodule adds per-request attribution on top of these
+//! aggregates: a sampling, allocation-bounded distributed tracer whose
+//! span dumps (`TRACE` / `OP_TRACE`) reuse the same exposition format,
+//! and whose slowest observation is linked from `METRICS` via the
+//! `w2k_request_us_exemplar` line.
+
+pub mod trace;
+
+pub use trace::{Span, SpanRecord, TraceContext, Tracer};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -39,7 +49,7 @@ pub const QUANTILES: [(&str, f64); 4] =
     [("0.5", 0.5), ("0.9", 0.9), ("0.99", 0.99), ("0.999", 0.999)];
 
 /// `[obs]` section of the experiment config.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ObsConfig {
     /// Master switch: when false every record call is a single branch and
     /// `METRICS` reports all-zero families.
@@ -49,11 +59,30 @@ pub struct ObsConfig {
     /// Per-stage histograms can be switched off independently of counters
     /// and the end-to-end latency histogram.
     pub stage_histograms: bool,
+    /// Head-sampling rate for the distributed tracer, in `[0, 1]`: mint a
+    /// root span at the edge for every ⌈1/rate⌉-th request. 0 (the
+    /// default) never mints, but propagated trace context is still
+    /// honored while the trace ring has capacity.
+    pub trace_sample: f64,
+    /// Capacity of the completed-span ring (`TRACE` / `OP_TRACE`); 0
+    /// disables tracing entirely, including propagated context.
+    pub trace_ring_len: usize,
+    /// Tail-capture threshold: an unsampled request slower than this many
+    /// microseconds (or one that errors) is kept in the trace ring
+    /// regardless of `trace_sample`. 0 disables latency tail-capture.
+    pub trace_slow_us: u64,
 }
 
 impl Default for ObsConfig {
     fn default() -> ObsConfig {
-        ObsConfig { enable: true, slow_log_len: 32, stage_histograms: true }
+        ObsConfig {
+            enable: true,
+            slow_log_len: 32,
+            stage_histograms: true,
+            trace_sample: 0.0,
+            trace_ring_len: 64,
+            trace_slow_us: 100_000,
+        }
     }
 }
 
@@ -66,6 +95,9 @@ impl ObsConfig {
             enable: doc.bool_or("obs.enable", d.enable),
             slow_log_len: doc.usize_or("obs.slow_log_len", d.slow_log_len),
             stage_histograms: doc.bool_or("obs.stage_histograms", d.stage_histograms),
+            trace_sample: doc.f64_or("obs.trace_sample", d.trace_sample),
+            trace_ring_len: doc.usize_or("obs.trace_ring_len", d.trace_ring_len),
+            trace_slow_us: doc.usize_or("obs.trace_slow_us", d.trace_slow_us as usize) as u64,
         }
     }
 }
@@ -227,6 +259,17 @@ impl Histogram {
     /// Quantile estimate for `q ∈ [0, 1]` by linear interpolation inside
     /// the bucket containing the target rank; 0 when empty. The estimate
     /// is within one bucket width of the exact order statistic.
+    ///
+    /// Pinned edge behavior (see the edge-case tests):
+    /// - empty histogram → `0.0` for every `q`;
+    /// - `q = 0.0` and `q = 1.0` clamp to the first/last recorded rank —
+    ///   neither can escape the lowest/highest occupied bucket;
+    /// - interpolation uses the *midpoint* rank convention
+    ///   (`frac = (rank − seen − ½) / n`), so the estimate is always
+    ///   strictly inside `[lo, hi)` of its bucket — a single observation
+    ///   yields the bucket midpoint, never the exclusive upper bound;
+    /// - a saturated top bucket reports the midpoint of
+    ///   `[2^62, u64::MAX)`, the estimate's documented ceiling.
     pub fn quantile(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -243,7 +286,7 @@ impl Histogram {
             if (seen + n) as f64 >= rank {
                 let lo = bucket_lo(b) as f64;
                 let hi = bucket_hi(b) as f64;
-                let frac = (rank - seen as f64) / n as f64;
+                let frac = (rank - seen as f64 - 0.5) / n as f64;
                 return lo + frac * (hi - lo).max(0.0);
             }
             seen += n;
@@ -337,6 +380,7 @@ pub struct Obs {
     reload: Histogram,
     queue_hwm: AtomicU64,
     slow: SlowLog,
+    trace: Tracer,
 }
 
 impl Default for Obs {
@@ -359,12 +403,25 @@ impl Obs {
             reload: Histogram::new(),
             queue_hwm: AtomicU64::new(0),
             slow: SlowLog::new(if cfg.enable { cfg.slow_log_len } else { 0 }),
+            trace: Tracer::new(cfg),
         }
     }
 
     /// A registry that records nothing (the `enable = false` fast path).
     pub fn disabled() -> Obs {
-        Obs::new(&ObsConfig { enable: false, slow_log_len: 0, stage_histograms: false })
+        Obs::new(&ObsConfig {
+            enable: false,
+            slow_log_len: 0,
+            stage_histograms: false,
+            trace_sample: 0.0,
+            trace_ring_len: 0,
+            trace_slow_us: 0,
+        })
+    }
+
+    /// The distributed tracer owned by this registry.
+    pub fn tracer(&self) -> &Tracer {
+        &self.trace
     }
 
     /// Whether recording is on at all. Callers wrap their `Instant` reads
@@ -464,6 +521,7 @@ impl Obs {
             );
         }
         render_histogram(out, "w2k_request_us", "", &self.e2e);
+        self.trace.render_exemplar(out);
         render_histogram(out, "w2k_batch_us", "", &self.batch);
         render_histogram(out, "w2k_reactor_loop_us", "", &self.loop_iter);
         render_histogram(out, "w2k_writev_batch_size", "", &self.writev_batch);
@@ -513,9 +571,30 @@ pub fn render_histogram(out: &mut String, name: &str, labels: &str, h: &Histogra
     }
 }
 
+/// Escape a label *value* for exposition text: `\` becomes `\\`, `"`
+/// becomes `\"`, and a newline becomes `\n`, per the Prometheus text
+/// format. Apply this to any value that did not come from a fixed
+/// vocabulary — snapshot paths, replica addresses, operation tags —
+/// before splicing it between quotes; otherwise an adversarial value
+/// produces unparseable (or forgeable) exposition lines.
+pub fn escape_label_value(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len());
+    for c in raw.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
 /// Re-label a scraped exposition for the cluster roll-up: inject `labels`
 /// (e.g. `shard="0",replica="1"`) into every metric line, dropping comment
-/// lines (including the scraped server's `# EOF`).
+/// lines (including the scraped server's `# EOF`). `labels` is spliced in
+/// verbatim — callers building it from dynamic values must pass each value
+/// through [`escape_label_value`] first.
 pub fn relabel_exposition(text: &str, labels: &str) -> String {
     let mut out = String::new();
     for line in text.lines() {
@@ -594,7 +673,11 @@ mod tests {
     #[test]
     fn empty_and_single_value_quantiles() {
         let h = Histogram::new();
+        // Empty histogram: every quantile is exactly 0.0, including the
+        // q = 0.0 / 1.0 extremes.
+        assert_eq!(h.quantile(0.0), 0.0);
         assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
         assert_eq!(h.count(), 0);
         h.record(100);
         assert_eq!(h.count(), 1);
@@ -604,6 +687,40 @@ mod tests {
             let est = h.quantile(q);
             assert!((64.0..128.0).contains(&est), "q={q}: {est}");
         }
+        // Pinned: a single observation interpolates to its bucket's
+        // midpoint — rank 1 of 1, frac = (1 − 0 − ½)/1 — for every q,
+        // because both extremes clamp to the only rank there is.
+        assert_eq!(h.quantile(0.0), 96.0);
+        assert_eq!(h.quantile(0.5), 96.0);
+        assert_eq!(h.quantile(1.0), 96.0);
+    }
+
+    #[test]
+    fn quantile_extremes_and_saturated_top_bucket_pinned() {
+        // Two samples in different buckets: q = 0.0 clamps to rank 1 and
+        // q = 1.0 to rank 2, each interpolating to its own bucket's
+        // midpoint — neither extreme can escape the occupied buckets.
+        let h = Histogram::new();
+        h.record(1); // bucket 1: [1, 2)
+        h.record(1_000); // bucket 10: [512, 1024)
+        assert_eq!(h.quantile(0.0), 1.5);
+        assert_eq!(h.quantile(1.0), 768.0);
+        // Out-of-domain q values clamp to the same extremes rather than
+        // indexing outside the rank range.
+        assert_eq!(h.quantile(-3.0), h.quantile(0.0));
+        assert_eq!(h.quantile(7.0), h.quantile(1.0));
+
+        // Saturated top bucket: u64::MAX lands in the final bucket
+        // [2^62, u64::MAX), and the estimate is pinned to that bucket's
+        // midpoint — the documented ceiling of any quantile estimate.
+        let top = Histogram::new();
+        top.record(u64::MAX);
+        let lo = (1u64 << 62) as f64;
+        let hi = u64::MAX as f64;
+        let expect = lo + 0.5 * (hi - lo);
+        assert_eq!(top.quantile(0.5), expect);
+        assert_eq!(top.quantile(1.0), expect);
+        assert!(top.quantile(1.0) < hi);
     }
 
     #[test]
@@ -676,8 +793,12 @@ mod tests {
 
     #[test]
     fn stage_toggle_keeps_e2e_but_drops_stages() {
-        let obs =
-            Obs::new(&ObsConfig { enable: true, slow_log_len: 4, stage_histograms: false });
+        let obs = Obs::new(&ObsConfig {
+            enable: true,
+            slow_log_len: 4,
+            stage_histograms: false,
+            ..ObsConfig::default()
+        });
         obs.record_stage(Stage::Cache, Duration::from_micros(9));
         obs.record_e2e(Duration::from_micros(9));
         assert_eq!(obs.stage(Stage::Cache).count(), 0);
@@ -696,8 +817,41 @@ mod tests {
     }
 
     #[test]
+    fn adversarial_label_values_escape_cleanly() {
+        // Backslashes and quotes — the two characters that break the
+        // `name{label="value"} n` grammar — must be escaped before a
+        // dynamic value (a snapshot path, a replica address) is spliced
+        // between quotes.
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("C:\\snapshots\\v2"), "C:\\\\snapshots\\\\v2");
+        assert_eq!(
+            escape_label_value("evil\"} 1\nfake_metric 2"),
+            "evil\\\"} 1\\nfake_metric 2"
+        );
+        // An escaped adversarial value survives relabeling with balanced,
+        // escaped quotes: every unescaped quote in the output is a label
+        // delimiter, so the quote count stays even.
+        let hostile = "sn\\ap\"shot";
+        let labels = format!("path=\"{}\"", escape_label_value(hostile));
+        let out = relabel_exposition("w2k_reloads_total 3\n", &labels);
+        assert_eq!(out, "w2k_reloads_total{path=\"sn\\\\ap\\\"shot\"} 3\n");
+        let unescaped_quotes = out
+            .as_bytes()
+            .iter()
+            .enumerate()
+            .filter(|&(i, &b)| b == b'"' && (i == 0 || out.as_bytes()[i - 1] != b'\\'))
+            .count();
+        assert_eq!(unescaped_quotes, 2, "{out}");
+    }
+
+    #[test]
     fn slow_render_includes_stage_breakdown() {
-        let obs = Obs::new(&ObsConfig { enable: true, slow_log_len: 2, stage_histograms: true });
+        let obs = Obs::new(&ObsConfig {
+            enable: true,
+            slow_log_len: 2,
+            stage_histograms: true,
+            ..ObsConfig::default()
+        });
         obs.note_slow(
             "knn",
             Duration::from_micros(750),
@@ -718,13 +872,20 @@ mod tests {
         assert!(d.enable);
         assert_eq!(d.slow_log_len, 32);
         assert!(d.stage_histograms);
+        assert_eq!(d.trace_sample, 0.0, "tracing is off-by-default at the edge");
+        assert_eq!(d.trace_ring_len, 64);
+        assert_eq!(d.trace_slow_us, 100_000);
         let doc = crate::config::TomlDoc::parse(
-            "[obs]\nenable = false\nslow_log_len = 7\nstage_histograms = false\n",
+            "[obs]\nenable = false\nslow_log_len = 7\nstage_histograms = false\n\
+             trace_sample = 0.25\ntrace_ring_len = 16\ntrace_slow_us = 5000\n",
         )
         .unwrap();
         let cfg = ObsConfig::from_doc(&doc);
         assert!(!cfg.enable);
         assert_eq!(cfg.slow_log_len, 7);
         assert!(!cfg.stage_histograms);
+        assert_eq!(cfg.trace_sample, 0.25);
+        assert_eq!(cfg.trace_ring_len, 16);
+        assert_eq!(cfg.trace_slow_us, 5_000);
     }
 }

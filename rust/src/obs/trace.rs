@@ -1,0 +1,468 @@
+//! Distributed per-request tracing: sampled, allocation-bounded span
+//! capture with wire-propagated context.
+//!
+//! A trace is a tree of [`SpanRecord`]s sharing one 16-byte trace id. The
+//! root span is minted at the edge — the first server that saw the client
+//! request — by deterministic head-sampling (every ⌈1/`trace_sample`⌉-th
+//! request). When the cluster router fans a sampled request out to shards
+//! it propagates a [`TraceContext`] in an optional binary-frame extension,
+//! so each shard's `parse → enqueue → batch_wait → cache/kernel →
+//! serialize → flush` span parents under the router's `route → fanout →
+//! merge` root span.
+//!
+//! Memory is bounded by construction: completed spans land in a per-node
+//! ring of at most `trace_ring_len` records, each carrying a small
+//! stage vector; an unsampled request allocates nothing. Tail-capture
+//! complements head-sampling — a request that breaches `trace_slow_us` or
+//! errors is kept as a minimal root record regardless of the sampling
+//! rate, so the ring always contains the requests worth looking at.
+//!
+//! Dumps (`TRACE <id>` / `OP_TRACE`) reuse the exposition line format of
+//! the metrics plane, which means the router can assemble a cross-node
+//! trace with the exact same scrape-and-relabel machinery as the METRICS
+//! roll-up.
+
+use super::Stage;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Wire-propagated trace context: which trace a request belongs to, and
+/// the sender's span id — the parent of any span the receiver creates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    /// 16-byte id shared by every span in one request tree.
+    pub trace_id: u128,
+    /// The sender's span id.
+    pub span_id: u64,
+}
+
+impl TraceContext {
+    /// A trace id as the fixed-width lowercase hex used in `trace="…"`
+    /// labels and accepted by the `TRACE <id>` verb.
+    pub fn hex(trace_id: u128) -> String {
+        format!("{trace_id:032x}")
+    }
+
+    /// Parse a trace id from 1–32 hex characters (as printed by
+    /// [`TraceContext::hex`]); `None` on anything else.
+    pub fn parse_hex(s: &str) -> Option<u128> {
+        if s.is_empty() || s.len() > 32 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        u128::from_str_radix(s, 16).ok()
+    }
+}
+
+/// A completed span as stored in the trace ring.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Trace this span belongs to.
+    pub trace_id: u128,
+    /// This span's own id.
+    pub span_id: u64,
+    /// Parent span id; 0 marks a root span minted at the edge.
+    pub parent_id: u64,
+    /// Which operation ("lookup", "knn", …).
+    pub op: &'static str,
+    /// "ok", a short error tag, or "slow" for tail-captured records.
+    pub status: &'static str,
+    /// End-to-end microseconds covered by this span.
+    pub total_us: u64,
+    /// Stage breakdown, in the order the stages ran.
+    pub stages: Vec<(Stage, u64)>,
+}
+
+/// A live span being measured on this node. Plain owned data — it rides
+/// inside a pool job or across a router fan-out and is finished exactly
+/// once via [`Tracer::finish`], which pushes it into the bounded ring.
+#[derive(Debug)]
+pub struct Span {
+    ctx: TraceContext,
+    parent_id: u64,
+    op: &'static str,
+    status: &'static str,
+    started: Instant,
+    /// Microseconds spent before `started` (e.g. frame parse time the
+    /// driver measured before the request reached the serving layer).
+    pre_us: u64,
+    stages: Vec<(Stage, u64)>,
+}
+
+impl Span {
+    /// This span's ids — what gets propagated downstream on a fan-out.
+    pub fn context(&self) -> TraceContext {
+        self.ctx
+    }
+
+    /// Attribute `us` microseconds to `stage`.
+    pub fn stage(&mut self, stage: Stage, us: u64) {
+        self.stages.push((stage, us));
+    }
+
+    /// Mark the span failed with a short status tag ("range", "timeout").
+    pub fn set_status(&mut self, status: &'static str) {
+        self.status = status;
+    }
+}
+
+/// Process-wide id source: a counter mixed through splitmix64, salted
+/// with the process id so ids from different test servers in one process
+/// (and different nodes on one host) never collide.
+static NEXT_RAW: AtomicU64 = AtomicU64::new(1);
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+fn mint_u64() -> u64 {
+    let raw = NEXT_RAW.fetch_add(1, Ordering::Relaxed) ^ ((std::process::id() as u64) << 32);
+    splitmix64(raw).max(1)
+}
+
+fn mint_u128() -> u128 {
+    ((mint_u64() as u128) << 64) | mint_u64() as u128
+}
+
+/// The per-node tracer: head-sampling decisions, span minting, the
+/// bounded completed-span ring, tail-capture, and the e2e exemplar.
+/// Owned by [`super::Obs`] and shared wherever the registry is.
+pub struct Tracer {
+    /// Whether spans are stored at all (`[obs] enable` and a non-zero
+    /// `trace_ring_len`). Inactive tracers drop propagated context too.
+    active: bool,
+    /// Mint a root for every `sample_every`-th edge request; 0 never
+    /// mints (propagated context is still honored while active).
+    sample_every: u64,
+    /// Tail-capture threshold in µs; 0 disables latency tail-capture.
+    slow_us: u64,
+    cap: usize,
+    seq: AtomicU64,
+    ring: Mutex<VecDeque<SpanRecord>>,
+    /// Slowest traced observation so far (µs) and its trace id — the
+    /// exemplar METRICS renders next to the e2e histogram.
+    exemplar_us: AtomicU64,
+    exemplar_trace: Mutex<u128>,
+}
+
+impl Tracer {
+    /// Build a tracer from the `[obs]` config section.
+    pub fn new(cfg: &super::ObsConfig) -> Tracer {
+        let active = cfg.enable && cfg.trace_ring_len > 0;
+        let rate = cfg.trace_sample.clamp(0.0, 1.0);
+        let sample_every =
+            if !active || rate <= 0.0 { 0 } else { (1.0 / rate).round().max(1.0) as u64 };
+        Tracer {
+            active,
+            sample_every,
+            slow_us: cfg.trace_slow_us,
+            cap: if active { cfg.trace_ring_len } else { 0 },
+            seq: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+            exemplar_us: AtomicU64::new(0),
+            exemplar_trace: Mutex::new(0),
+        }
+    }
+
+    /// Whether this node stores spans at all. Distinct from sampling:
+    /// an active tracer with `trace_sample = 0` never mints roots but
+    /// still honors propagated context and tail-captures.
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    /// Edge head-sampling: deterministically mint a root span for every
+    /// ⌈1/`trace_sample`⌉-th request; `None` when unsampled.
+    pub fn maybe_start_root(&self, op: &'static str) -> Option<Span> {
+        if self.sample_every == 0 {
+            return None;
+        }
+        if self.seq.fetch_add(1, Ordering::Relaxed) % self.sample_every != 0 {
+            return None;
+        }
+        Some(new_span(TraceContext { trace_id: mint_u128(), span_id: mint_u64() }, 0, op, 0))
+    }
+
+    /// Start a span under a propagated upstream context. Always honored
+    /// while the tracer is active — the sampling decision was made at the
+    /// edge, this node just records its share of the request.
+    pub fn start_child(
+        &self,
+        parent: TraceContext,
+        op: &'static str,
+        pre_us: u64,
+    ) -> Option<Span> {
+        if !self.active {
+            return None;
+        }
+        Some(new_span(
+            TraceContext { trace_id: parent.trace_id, span_id: mint_u64() },
+            parent.span_id,
+            op,
+            pre_us,
+        ))
+    }
+
+    /// Complete a span: its duration is `pre_us` plus the time since it
+    /// started, and the record lands in the ring (evicting the oldest
+    /// when full).
+    pub fn finish(&self, span: Span) {
+        let total_us = span.pre_us.saturating_add(span.started.elapsed().as_micros() as u64);
+        self.push(SpanRecord {
+            trace_id: span.ctx.trace_id,
+            span_id: span.ctx.span_id,
+            parent_id: span.parent_id,
+            op: span.op,
+            status: span.status,
+            total_us,
+            stages: span.stages,
+        });
+    }
+
+    /// Tail-capture: keep a minimal root record for an *unsampled*
+    /// request that breached `trace_slow_us` or errored, regardless of
+    /// the head-sampling rate.
+    pub fn tail_capture(&self, op: &'static str, total_us: u64, error: bool) {
+        if !self.active || (!error && (self.slow_us == 0 || total_us < self.slow_us)) {
+            return;
+        }
+        self.push(SpanRecord {
+            trace_id: mint_u128(),
+            span_id: mint_u64(),
+            parent_id: 0,
+            op,
+            status: if error { "error" } else { "slow" },
+            total_us,
+            stages: Vec::new(),
+        });
+    }
+
+    /// Attribute socket-flush time to an already-finished span. The
+    /// blocking driver learns the flush duration only after the response
+    /// is written, by which point the span (a child of `ctx`) is in the
+    /// ring; its `flush` stage and total are extended in place.
+    pub fn note_flush(&self, ctx: TraceContext, flush_us: u64) {
+        if !self.active || flush_us == 0 {
+            return;
+        }
+        let mut ring = self.ring.lock().expect("trace ring lock poisoned");
+        if let Some(rec) = ring
+            .iter_mut()
+            .rev()
+            .find(|r| r.trace_id == ctx.trace_id && r.parent_id == ctx.span_id)
+        {
+            rec.stages.push((Stage::Flush, flush_us));
+            rec.total_us = rec.total_us.saturating_add(flush_us);
+        }
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        if self.cap == 0 {
+            return;
+        }
+        let prev = self.exemplar_us.fetch_max(rec.total_us, Ordering::Relaxed);
+        if rec.total_us > prev {
+            *self.exemplar_trace.lock().expect("exemplar lock poisoned") = rec.trace_id;
+        }
+        let mut ring = self.ring.lock().expect("trace ring lock poisoned");
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+    }
+
+    /// Append every stored span of `trace_id` (spans plus their stage
+    /// lines) to `out`, in completion order.
+    pub fn render_trace(&self, trace_id: u128, out: &mut String) {
+        let ring = self.ring.lock().expect("trace ring lock poisoned");
+        for rec in ring.iter().filter(|r| r.trace_id == trace_id) {
+            render_span(out, rec);
+        }
+    }
+
+    /// Append one summary line per ring record, oldest first — the
+    /// `TRACE?slow` listing a client picks trace ids from.
+    pub fn render_ring(&self, out: &mut String) {
+        let ring = self.ring.lock().expect("trace ring lock poisoned");
+        for rec in ring.iter() {
+            render_span_line(out, rec);
+        }
+    }
+
+    /// Append the e2e exemplar line — only once a traced observation has
+    /// been recorded, so expositions without traced traffic stay
+    /// byte-stable scrape over scrape.
+    pub fn render_exemplar(&self, out: &mut String) {
+        let us = self.exemplar_us.load(Ordering::Relaxed);
+        if us == 0 {
+            return;
+        }
+        let trace = *self.exemplar_trace.lock().expect("exemplar lock poisoned");
+        out.push_str(&format!("w2k_request_us_exemplar{{trace=\"{trace:032x}\"}} {us}\n"));
+    }
+}
+
+fn new_span(ctx: TraceContext, parent_id: u64, op: &'static str, pre_us: u64) -> Span {
+    Span { ctx, parent_id, op, status: "ok", started: Instant::now(), pre_us, stages: Vec::new() }
+}
+
+fn render_span_line(out: &mut String, r: &SpanRecord) {
+    out.push_str(&format!(
+        "w2k_trace_span{{trace=\"{:032x}\",span=\"{:016x}\",parent=\"{:016x}\",op=\"{}\",status=\"{}\"}} {}\n",
+        r.trace_id,
+        r.span_id,
+        r.parent_id,
+        super::escape_label_value(r.op),
+        super::escape_label_value(r.status),
+        r.total_us
+    ));
+}
+
+fn render_span(out: &mut String, r: &SpanRecord) {
+    render_span_line(out, r);
+    for (stage, us) in &r.stages {
+        out.push_str(&format!(
+            "w2k_trace_stage{{trace=\"{:032x}\",span=\"{:016x}\",stage=\"{}\"}} {us}\n",
+            r.trace_id,
+            r.span_id,
+            stage.name()
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ObsConfig;
+    use super::*;
+
+    fn cfg(sample: f64, ring: usize, slow_us: u64) -> ObsConfig {
+        ObsConfig {
+            trace_sample: sample,
+            trace_ring_len: ring,
+            trace_slow_us: slow_us,
+            ..ObsConfig::default()
+        }
+    }
+
+    #[test]
+    fn head_sampling_is_deterministic() {
+        let every = Tracer::new(&cfg(1.0, 8, 0));
+        assert!(every.active());
+        for _ in 0..5 {
+            assert!(every.maybe_start_root("lookup").is_some());
+        }
+        let half = Tracer::new(&cfg(0.5, 8, 0));
+        let hits = (0..10).filter(|_| half.maybe_start_root("lookup").is_some()).count();
+        assert_eq!(hits, 5, "rate 0.5 samples exactly every 2nd request");
+        let off = Tracer::new(&cfg(0.0, 8, 0));
+        assert!(off.active(), "sample=0 still stores propagated spans");
+        assert!(off.maybe_start_root("lookup").is_none());
+        let dead = Tracer::new(&cfg(1.0, 0, 0));
+        assert!(!dead.active());
+        assert!(dead.maybe_start_root("lookup").is_none());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_evicts_oldest() {
+        let t = Tracer::new(&cfg(1.0, 2, 0));
+        let mut first_trace = 0u128;
+        for i in 0..3 {
+            let span = t.maybe_start_root("lookup").expect("sampled");
+            if i == 0 {
+                first_trace = span.context().trace_id;
+            }
+            t.finish(span);
+        }
+        let mut all = String::new();
+        t.render_ring(&mut all);
+        assert_eq!(all.lines().count(), 2, "ring capped at 2:\n{all}");
+        let mut gone = String::new();
+        t.render_trace(first_trace, &mut gone);
+        assert!(gone.is_empty(), "oldest record evicted");
+    }
+
+    #[test]
+    fn child_spans_parent_under_propagated_context() {
+        let t = Tracer::new(&cfg(0.0, 8, 0));
+        let parent = TraceContext { trace_id: 0xabcd, span_id: 77 };
+        let mut span = t.start_child(parent, "lookup", 3).expect("active tracer");
+        assert_eq!(span.context().trace_id, 0xabcd);
+        assert_ne!(span.context().span_id, 77, "child gets its own span id");
+        span.stage(Stage::Parse, 3);
+        span.stage(Stage::BatchWait, 10);
+        let ctx = span.context();
+        t.finish(span);
+        let mut out = String::new();
+        t.render_trace(0xabcd, &mut out);
+        assert!(
+            out.contains(&format!("span=\"{:016x}\",parent=\"{:016x}\"", ctx.span_id, 77)),
+            "{out}"
+        );
+        assert!(out.contains("stage=\"batch_wait\"} 10"), "{out}");
+        // note_flush finds the finished child by its parent context.
+        t.note_flush(parent, 5);
+        let mut out2 = String::new();
+        t.render_trace(0xabcd, &mut out2);
+        assert!(out2.contains("stage=\"flush\"} 5"), "{out2}");
+    }
+
+    #[test]
+    fn tail_capture_keeps_slow_and_errored_requests() {
+        let t = Tracer::new(&cfg(0.0, 8, 1_000));
+        t.tail_capture("lookup", 500, false); // fast + ok: dropped
+        t.tail_capture("lookup", 2_000, false); // breach: kept
+        t.tail_capture("knn", 10, true); // error: kept
+        let mut out = String::new();
+        t.render_ring(&mut out);
+        assert_eq!(out.lines().count(), 2, "{out}");
+        assert!(out.contains("status=\"slow\"} 2000"), "{out}");
+        assert!(out.contains("status=\"error\"} 10"), "{out}");
+        // slow_us = 0 disables latency tail-capture but not error capture.
+        let t0 = Tracer::new(&cfg(0.0, 8, 0));
+        t0.tail_capture("lookup", u64::MAX, false);
+        let mut none = String::new();
+        t0.render_ring(&mut none);
+        assert!(none.is_empty(), "{none}");
+    }
+
+    #[test]
+    fn exemplar_tracks_the_slowest_traced_observation() {
+        let t = Tracer::new(&cfg(0.0, 8, 1));
+        let mut out = String::new();
+        t.render_exemplar(&mut out);
+        assert!(out.is_empty(), "no exemplar before any traced request");
+        t.tail_capture("lookup", 40, false);
+        t.tail_capture("lookup", 900, false);
+        t.tail_capture("lookup", 100, false);
+        t.render_exemplar(&mut out);
+        assert_eq!(out.lines().count(), 1, "{out}");
+        assert!(out.starts_with("w2k_request_us_exemplar{trace=\""), "{out}");
+        assert!(out.ends_with("} 900\n"), "{out}");
+    }
+
+    #[test]
+    fn trace_id_hex_roundtrip() {
+        let id = 0x0123_4567_89ab_cdef_0011_2233_4455_6677u128;
+        let hex = TraceContext::hex(id);
+        assert_eq!(hex.len(), 32);
+        assert_eq!(TraceContext::parse_hex(&hex), Some(id));
+        assert_eq!(TraceContext::parse_hex("ff"), Some(0xff));
+        assert_eq!(TraceContext::parse_hex(""), None);
+        assert_eq!(TraceContext::parse_hex("xyz"), None);
+        assert_eq!(TraceContext::parse_hex(&"0".repeat(33)), None);
+    }
+
+    #[test]
+    fn minted_ids_are_unique_and_nonzero() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1_000 {
+            let id = mint_u64();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate span id");
+        }
+    }
+}

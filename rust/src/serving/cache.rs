@@ -293,7 +293,11 @@ impl ShardedCache {
         // Stage attribution: hits bill their whole duration to `cache`;
         // misses bill the inner reconstruction to `kernel` and the
         // remaining lock/sketch/admission time to `cache`. With obs
-        // disabled the only cost is this one branch.
+        // disabled the only cost is this one branch. Trace spans attribute
+        // at *batch* granularity instead (the pool worker bills one `cache`
+        // stage for the whole drained batch, hits and kernels combined) —
+        // per-row stage splits here would mean per-row span bookkeeping on
+        // the hot path, which the histograms above already cover.
         let t0 = if self.obs.enabled() { Some(Instant::now()) } else { None };
         if !self.enabled {
             // cache_rows == 0: a true pass-through baseline — no shard

@@ -53,7 +53,7 @@ use crate::config::{IndexConfig, IndexKind, ServingConfig};
 use crate::embedding::EmbeddingStore;
 use crate::error::Error;
 use crate::index::{build_index, IvfIndex, KnnIndex, Neighbor, Query, Scorer};
-use crate::obs::{Obs, ObsConfig, Stage};
+use crate::obs::{Obs, ObsConfig, Span, Stage, TraceContext};
 use crate::snapshot::{self, IndexPayload, Snapshot, SnapshotStore};
 use std::fmt::Write as _;
 use std::path::Path;
@@ -74,6 +74,19 @@ pub enum LookupError {
     Overloaded,
     /// The pool did not reply within the request deadline.
     Timeout,
+}
+
+impl LookupError {
+    /// Short status tag stamped on trace spans for failed requests.
+    fn trace_tag(self) -> &'static str {
+        match self {
+            LookupError::Empty => "empty",
+            LookupError::OutOfRange => "range",
+            LookupError::BadQuery => "bad_query",
+            LookupError::Overloaded => "overloaded",
+            LookupError::Timeout => "timeout",
+        }
+    }
 }
 
 impl std::fmt::Display for LookupError {
@@ -429,23 +442,91 @@ impl ServingState {
     /// runs against one model generation (captured here), so a concurrent
     /// hot swap can never mix rows from two models.
     pub fn lookup_rows(&self, ids: Vec<usize>) -> Result<Vec<Vec<f32>>, LookupError> {
-        if ids.is_empty() {
-            return Err(LookupError::Empty);
+        self.lookup_rows_traced(ids, None)
+    }
+
+    /// [`Self::lookup_rows`] carrying an optional propagated trace context
+    /// plus the microseconds the driver spent parsing the frame. This is
+    /// the tracing edge for both protocols and both drivers: a span is
+    /// adopted from the wire context (the sampling decision was made
+    /// upstream) or head-sampled fresh, rides the pool job, and is
+    /// finished worker-side before the reply is sent. Unsampled requests
+    /// that end slow or in error still reach the trace ring via
+    /// tail-capture.
+    pub fn lookup_rows_traced(
+        &self,
+        ids: Vec<usize>,
+        trace: Option<(TraceContext, u64)>,
+    ) -> Result<Vec<Vec<f32>>, LookupError> {
+        let t0 = Instant::now();
+        let mut span = self.edge_span("lookup", trace);
+        let sampled = span.is_some();
+        let result = (|| {
+            if ids.is_empty() {
+                return Err(LookupError::Empty);
+            }
+            let m = self.current();
+            let vocab = m.store.vocab_size();
+            if ids.iter().any(|&id| id >= vocab) {
+                return Err(LookupError::OutOfRange);
+            }
+            let (tx, rx) = mpsc::channel();
+            let te = self.obs.enabled().then(Instant::now);
+            if let Some(s) = span.as_mut() {
+                s.stage(Stage::Enqueue, t0.elapsed().as_micros() as u64);
+            }
+            m.pool
+                .submit(Job::Lookup { ids, enqueued: Instant::now(), span: span.take(), reply: tx })
+                .map_err(|_| LookupError::Overloaded)?;
+            if let Some(te) = te {
+                self.obs.record_stage(Stage::Enqueue, te.elapsed());
+            }
+            rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)
+        })();
+        self.close_edge_span("lookup", span.take(), sampled, result.as_ref().err().copied(), t0);
+        result
+    }
+
+    /// Mint the edge span for one request: a child when the peer
+    /// propagated a context, otherwise a head-sampling roll for a fresh
+    /// root. `parse_us` (driver frame-parse time) lands as the `parse`
+    /// stage and extends the span's total.
+    fn edge_span(&self, op: &'static str, trace: Option<(TraceContext, u64)>) -> Option<Span> {
+        let tracer = self.obs.tracer();
+        let mut span = match trace {
+            Some((ctx, parse_us)) => tracer.start_child(ctx, op, parse_us),
+            None => tracer.maybe_start_root(op),
+        };
+        if let (Some(s), Some((_, parse_us))) = (span.as_mut(), trace) {
+            if parse_us > 0 {
+                s.stage(Stage::Parse, parse_us);
+            }
         }
-        let m = self.current();
-        let vocab = m.store.vocab_size();
-        if ids.iter().any(|&id| id >= vocab) {
-            return Err(LookupError::OutOfRange);
+        span
+    }
+
+    /// Close out the edge span after the reply (or failure). A span still
+    /// held here never reached a worker (validation or submit failure) and
+    /// is finished with the error tag; requests whose span rode the job —
+    /// or that were never sampled — fall through to tail-capture, which
+    /// keeps slow and errored requests regardless of the sampling rate.
+    fn close_edge_span(
+        &self,
+        op: &'static str,
+        span: Option<Span>,
+        sampled: bool,
+        err: Option<LookupError>,
+        t0: Instant,
+    ) {
+        let tracer = self.obs.tracer();
+        if let Some(mut s) = span {
+            if let Some(e) = err {
+                s.set_status(e.trace_tag());
+            }
+            tracer.finish(s);
+        } else if err.is_some() || !sampled {
+            tracer.tail_capture(op, t0.elapsed().as_micros() as u64, err.is_some());
         }
-        let (tx, rx) = mpsc::channel();
-        let t0 = self.obs.enabled().then(Instant::now);
-        m.pool
-            .submit(Job::Lookup { ids, enqueued: Instant::now(), reply: tx })
-            .map_err(|_| LookupError::Overloaded)?;
-        if let Some(t0) = t0 {
-            self.obs.record_stage(Stage::Enqueue, t0.elapsed());
-        }
-        rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)
     }
 
     /// Inner product of two rows. Served synchronously through the cache
@@ -468,35 +549,58 @@ impl ServingState {
     /// client-supplied k would size the selection heap — a u32::MAX k from
     /// the binary wire must not turn into a giant eager allocation).
     pub fn knn(&self, query: Query, k: usize) -> Result<Vec<Neighbor>, LookupError> {
-        if k == 0 {
-            return Err(LookupError::BadQuery);
-        }
-        let m = self.current();
-        let k = k.min(m.store.vocab_size());
-        match &query {
-            Query::Id(id) => {
-                if *id >= m.store.vocab_size() {
-                    return Err(LookupError::OutOfRange);
+        self.knn_traced(query, k, None)
+    }
+
+    /// [`Self::knn`] with an optional propagated trace context; see
+    /// [`Self::lookup_rows_traced`] for the span lifecycle.
+    pub fn knn_traced(
+        &self,
+        query: Query,
+        k: usize,
+        trace: Option<(TraceContext, u64)>,
+    ) -> Result<Vec<Neighbor>, LookupError> {
+        let t0 = Instant::now();
+        let mut span = self.edge_span("knn", trace);
+        let sampled = span.is_some();
+        let result = (|| {
+            if k == 0 {
+                return Err(LookupError::BadQuery);
+            }
+            let m = self.current();
+            let k = k.min(m.store.vocab_size());
+            match &query {
+                Query::Id(id) => {
+                    if *id >= m.store.vocab_size() {
+                        return Err(LookupError::OutOfRange);
+                    }
+                }
+                Query::Vector(v) => {
+                    if v.len() != m.store.dim() {
+                        return Err(LookupError::BadQuery);
+                    }
                 }
             }
-            Query::Vector(v) => {
-                if v.len() != m.store.dim() {
-                    return Err(LookupError::BadQuery);
-                }
+            let (tx, rx) = mpsc::channel();
+            let te = self.obs.enabled().then(Instant::now);
+            if let Some(s) = span.as_mut() {
+                s.stage(Stage::Enqueue, t0.elapsed().as_micros() as u64);
             }
-        }
-        let (tx, rx) = mpsc::channel();
-        let t0 = self.obs.enabled().then(Instant::now);
-        m.pool
-            .submit(Job::Knn { query, k, enqueued: Instant::now(), reply: tx })
-            .map_err(|_| LookupError::Overloaded)?;
-        if let Some(t0) = t0 {
-            self.obs.record_stage(Stage::Enqueue, t0.elapsed());
-        }
-        // knn accounting happens worker-side (like `served`), so queries
-        // the caller gives up on are still counted when the scan finishes.
-        let (neighbors, _stats) = rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)?;
-        Ok(neighbors)
+            m.pool
+                .submit(Job::Knn { query, k, enqueued: Instant::now(), span: span.take(), reply: tx })
+                .map_err(|_| LookupError::Overloaded)?;
+            if let Some(te) = te {
+                self.obs.record_stage(Stage::Enqueue, te.elapsed());
+            }
+            // knn accounting happens worker-side (like `served`), so queries
+            // the caller gives up on are still counted when the scan
+            // finishes.
+            let (neighbors, _stats) =
+                rx.recv_timeout(self.timeout).map_err(|_| LookupError::Timeout)?;
+            Ok(neighbors)
+        })();
+        self.close_edge_span("knn", span.take(), sampled, result.as_ref().err().copied(), t0);
+        result
     }
 
     /// Pool + cache + knn statistics, cumulative across hot swaps; all-zero
@@ -574,6 +678,26 @@ impl ServingState {
     /// their per-stage breakdowns, rank order.
     pub fn metrics_slow_text(&self) -> String {
         self.obs.render_slow()
+    }
+
+    /// One trace's stored spans (`TRACE <id>` / `OP_TRACE`), exposition
+    /// formatted and `# EOF`-terminated; an unknown id yields just the
+    /// terminator.
+    pub fn trace_text(&self, trace_id: u128) -> String {
+        let mut out = String::new();
+        self.obs.tracer().render_trace(trace_id, &mut out);
+        out.push_str("# EOF\n");
+        out
+    }
+
+    /// The completed-trace ring (`TRACE?slow`): one summary line per
+    /// stored span, oldest first, `# EOF`-terminated. Clients pick trace
+    /// ids for `TRACE <id>` from here.
+    pub fn trace_slow_text(&self) -> String {
+        let mut out = String::new();
+        self.obs.tracer().render_ring(&mut out);
+        out.push_str("# EOF\n");
+        out
     }
 
     /// Stop the current generation's pool workers after their queues drain;

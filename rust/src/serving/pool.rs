@@ -23,7 +23,7 @@
 
 use crate::embedding::EmbeddingStore;
 use crate::index::{KnnIndex, KnnResult, Query};
-use crate::obs::{Obs, Stage};
+use crate::obs::{Obs, Span, Stage};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -35,6 +35,10 @@ pub enum Job {
     Lookup {
         ids: Vec<usize>,
         enqueued: Instant,
+        /// Live trace span riding the job (sampled requests only); the
+        /// worker fills its queue/compute stages and finishes it just
+        /// before the reply is sent.
+        span: Option<Span>,
         reply: mpsc::Sender<Vec<Vec<f32>>>,
     },
     /// Top-`k` similarity search against the pool's index.
@@ -42,6 +46,8 @@ pub enum Job {
         query: Query,
         k: usize,
         enqueued: Instant,
+        /// Live trace span riding the job (see [`Job::Lookup`]).
+        span: Option<Span>,
         reply: mpsc::Sender<KnnResult>,
     },
 }
@@ -247,11 +253,13 @@ fn worker_loop(shared: &PoolShared, w: usize) {
         all_ids.clear();
         for job in batch {
             match job {
-                Job::Lookup { ids, enqueued, reply } => {
+                Job::Lookup { ids, enqueued, span, reply } => {
                     all_ids.extend_from_slice(&ids);
-                    lookups.push((ids, enqueued, reply));
+                    lookups.push((ids, enqueued, span, reply));
                 }
-                Job::Knn { query, k, enqueued, reply } => knns.push((query, k, enqueued, reply)),
+                Job::Knn { query, k, enqueued, span, reply } => {
+                    knns.push((query, k, enqueued, span, reply))
+                }
             }
         }
 
@@ -266,7 +274,7 @@ fn worker_loop(shared: &PoolShared, w: usize) {
             let fetched = Instant::now();
             let mut row = 0usize;
             let mut slowest_wait = Duration::ZERO;
-            for (ids, enqueued, reply) in lookups.drain(..) {
+            for (ids, enqueued, span, reply) in lookups.drain(..) {
                 let mut rows = Vec::with_capacity(ids.len());
                 for _ in 0..ids.len() {
                     rows.push(flat[row * dim..(row + 1) * dim].to_vec());
@@ -280,6 +288,20 @@ fn worker_loop(shared: &PoolShared, w: usize) {
                     slowest_wait = slowest_wait.max(wait);
                     shared.obs.record_stage(Stage::BatchWait, wait);
                     shared.obs.record_e2e(Instant::now().duration_since(enqueued));
+                }
+                // The span is finished (ring-visible) before the reply is
+                // sent, so a caller that has its rows can fetch the trace.
+                // The `cache` stage carries the whole batch fetch span —
+                // cache + kernel combined, same granularity as the slow
+                // ring below.
+                if let Some(mut s) = span {
+                    s.stage(Stage::BatchWait, drained.duration_since(enqueued).as_micros() as u64);
+                    s.stage(Stage::Cache, fetched.duration_since(drained).as_micros() as u64);
+                    s.stage(
+                        Stage::Serialize,
+                        Instant::now().duration_since(fetched).as_micros() as u64,
+                    );
+                    shared.obs.tracer().finish(s);
                 }
                 shared.served.fetch_add(ids.len() as u64, Ordering::Relaxed);
                 let _ = reply.send(rows);
@@ -305,7 +327,7 @@ fn worker_loop(shared: &PoolShared, w: usize) {
 
         // Index scans run after lookup replies are out (a brute scan is
         // milliseconds; row replies must not block on it).
-        for (query, k, enqueued, reply) in knns.drain(..) {
+        for (query, k, enqueued, span, reply) in knns.drain(..) {
             match shared.index.as_deref() {
                 Some(index) => {
                     let scan_start = Instant::now();
@@ -330,6 +352,17 @@ fn worker_loop(shared: &PoolShared, w: usize) {
                                 (Stage::Kernel, scan.as_micros() as u64),
                             ],
                         );
+                    }
+                    // Finished (ring-visible) before the reply, like the
+                    // lookup path above.
+                    if let Some(mut s) = span {
+                        let done = Instant::now();
+                        s.stage(
+                            Stage::BatchWait,
+                            scan_start.duration_since(enqueued).as_micros() as u64,
+                        );
+                        s.stage(Stage::Kernel, done.duration_since(scan_start).as_micros() as u64);
+                        shared.obs.tracer().finish(s);
                     }
                     let _ = reply.send(result);
                 }
@@ -382,7 +415,8 @@ mod tests {
 
     fn submit_ids(pool: &WorkerPool, ids: Vec<usize>) -> mpsc::Receiver<Vec<Vec<f32>>> {
         let (tx, rx) = mpsc::channel();
-        pool.submit(Job::Lookup { ids, enqueued: Instant::now(), reply: tx }).unwrap();
+        pool.submit(Job::Lookup { ids, enqueued: Instant::now(), span: None, reply: tx })
+            .unwrap();
         rx
     }
 
@@ -415,6 +449,7 @@ mod tests {
             query: Query::Id(5),
             k: 4,
             enqueued: Instant::now(),
+            span: None,
             reply: tx,
         })
         .unwrap();
@@ -435,8 +470,14 @@ mod tests {
         let (pool, store) = pool_with(1, 64, 2_000, true);
         let look = submit_ids(&pool, vec![1, 2, 3]);
         let (tx, knn_rx) = mpsc::channel();
-        pool.submit(Job::Knn { query: Query::Id(1), k: 2, enqueued: Instant::now(), reply: tx })
-            .unwrap();
+        pool.submit(Job::Knn {
+            query: Query::Id(1),
+            k: 2,
+            enqueued: Instant::now(),
+            span: None,
+            reply: tx,
+        })
+        .unwrap();
         let rows = look.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(rows[2], store.lookup(3));
         let (neighbors, _) = knn_rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -454,7 +495,8 @@ mod tests {
         let mut rejected = 0usize;
         for _ in 0..16 {
             let (tx, rx) = mpsc::channel();
-            match pool.submit(Job::Lookup { ids: vec![1], enqueued: Instant::now(), reply: tx }) {
+            let job = Job::Lookup { ids: vec![1], enqueued: Instant::now(), span: None, reply: tx };
+            match pool.submit(job) {
                 Ok(()) => receivers.push(rx),
                 Err(Overloaded) => rejected += 1,
             }

@@ -28,6 +28,19 @@
 //!                the caller-supplied vector
 //!   op 9 METRICS count == 0; full metrics exposition (the binary twin of
 //!                the text `METRICS` verb — same bytes)
+//!   op 10 TRACE  count == 4: the 16-byte trace id as 4 little-endian u32
+//!                words (low word first), or count == 0 for the stored-
+//!                trace ring summary; payload = UTF-8 trace dump (the
+//!                binary twin of `TRACE <id>` / `TRACE?slow`)
+//!
+//! trace-context extension: a request whose op word has the high bit
+//! ([`OP_TRACE_CTX`]) set carries 24 extension bytes between the 8-byte
+//! header and the payload — u128 trace id + u64 parent span id, both
+//! little-endian. The flag changes nothing else: caps are enforced on the
+//! masked op *before* the extension is read, and responses never carry the
+//! extension. With tracing off (or a request unsampled) the flag is never
+//! set, so the wire is byte-identical to the untraced protocol.
+//!
 //! response:      u32 status, u32 count, payload
 //!   LOOKUP ok    count = #ids,  payload = count × dim × f32 rows
 //!   DOT ok       count = 1,     payload = 1 × f32
@@ -52,6 +65,7 @@
 
 use super::{LookupError, ServingState};
 use crate::index::Query;
+use crate::obs::TraceContext;
 use std::io::{self, BufReader, Read, Write};
 use std::net::TcpStream;
 
@@ -68,6 +82,14 @@ pub const OP_RELOAD: u32 = 6;
 pub const OP_PING: u32 = 7;
 pub const OP_KNN_VEC: u32 = 8;
 pub const OP_METRICS: u32 = 9;
+pub const OP_TRACE: u32 = 10;
+
+/// High bit of the request op word: the frame carries a 24-byte
+/// trace-context extension (u128 trace id + u64 parent span id, both
+/// little-endian) between the header and the payload. Never set on
+/// responses; never set when tracing is off or the request is unsampled —
+/// which keeps the untraced wire byte-identical.
+pub const OP_TRACE_CTX: u32 = 0x8000_0000;
 
 pub const STATUS_OK: u32 = 0;
 pub const STATUS_RANGE: u32 = 1;
@@ -267,6 +289,11 @@ pub enum BinRequest {
     Reload { path: Option<String> },
     /// KNN_VEC: external query vector plus k.
     KnnVec { k: u32, query: Vec<f32> },
+    /// A request whose op word carried the [`OP_TRACE_CTX`] extension:
+    /// the propagated upstream context wraps the decoded inner request.
+    /// `parse_us` is filled by the driver after decode (both drivers
+    /// already time the parse stage) so the span can bill it.
+    Traced { ctx: TraceContext, parse_us: u64, inner: Box<BinRequest> },
     /// Hostile count header (cap exceeded before any allocation): error
     /// frame, then close — the remaining stream length is untrustworthy.
     Fatal,
@@ -278,51 +305,76 @@ impl BinRequest {
     /// to stop parsing pipelined bytes past a terminal frame, which the
     /// blocking driver never sees either.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, BinRequest::Fatal | BinRequest::Ids { op: OP_QUIT, .. })
+        match self {
+            BinRequest::Fatal | BinRequest::Ids { op: OP_QUIT, .. } => true,
+            BinRequest::Traced { inner, .. } => inner.is_terminal(),
+            _ => false,
+        }
     }
+}
+
+/// The shared hostile-count screen, applied to the *masked* op before any
+/// allocation or further read — including the trace-context extension —
+/// so both drivers reject a hostile header after exactly 8 bytes.
+pub(crate) fn count_is_hostile(op: u32, count: u32) -> bool {
+    match op {
+        OP_RELOAD => count == 0 || count > MAX_PATH_BYTES,
+        OP_KNN_VEC => count == 0 || count > MAX_IDS,
+        _ => count > MAX_IDS,
+    }
+}
+
+fn read_trace_ctx(r: &mut impl Read) -> io::Result<TraceContext> {
+    let mut b = [0u8; 24];
+    r.read_exact(&mut b)?;
+    Ok(TraceContext {
+        trace_id: u128::from_le_bytes(b[..16].try_into().expect("16-byte slice")),
+        span_id: u64::from_le_bytes(b[16..].try_into().expect("8-byte slice")),
+    })
 }
 
 /// Blocking-read one request frame (`Ok(None)` = clean EOF between frames).
 /// The grammar — caps, payload shapes, hostile-header short-circuits — is
 /// mirrored incrementally by `crate::net::parser::next_frame`.
 pub(crate) fn read_frame(r: &mut impl Read) -> io::Result<Option<BinRequest>> {
-    let op = match read_u32(r) {
-        Ok(op) => op,
+    let word = match read_u32(r) {
+        Ok(word) => word,
         Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None), // clean close
         Err(e) => return Err(e),
     };
     let count = read_u32(r)?;
-    if op == OP_RELOAD {
-        // RELOAD's payload is path bytes, not ids; cap checked before any
-        // allocation, like MAX_IDS below.
-        if count == 0 || count > MAX_PATH_BYTES {
-            return Ok(Some(BinRequest::Fatal));
-        }
+    let op = word & !OP_TRACE_CTX;
+    // Hostile-header guard: the cap check precedes every allocation and
+    // every further read (including the trace-context extension), so a
+    // 4 GiB count never reserves memory and fails after 8 header bytes
+    // whether or not the frame claimed an extension.
+    if count_is_hostile(op, count) {
+        return Ok(Some(BinRequest::Fatal));
+    }
+    let ctx = if word & OP_TRACE_CTX != 0 { Some(read_trace_ctx(r)?) } else { None };
+    let inner = if op == OP_RELOAD {
+        // RELOAD's payload is path bytes, not ids.
         let mut raw = vec![0u8; count as usize];
         r.read_exact(&mut raw)?;
-        Ok(Some(BinRequest::Reload { path: String::from_utf8(raw).ok() }))
+        BinRequest::Reload { path: String::from_utf8(raw).ok() }
     } else if op == OP_KNN_VEC {
         // KNN_VEC's payload is `u32 k` + `count` f32s, not ids. The whole
         // frame is consumed before validation so the connection stays
         // usable after a semantic error.
-        if count == 0 || count > MAX_IDS {
-            return Ok(Some(BinRequest::Fatal));
-        }
         let k = read_u32(r)?;
         let query = read_f32s(r, count as usize)?;
-        Ok(Some(BinRequest::KnnVec { k, query }))
+        BinRequest::KnnVec { k, query }
     } else {
-        // Hostile-header guard: the cap check precedes the id-buffer
-        // allocation, so a 4 GiB count never reserves memory.
-        if count > MAX_IDS {
-            return Ok(Some(BinRequest::Fatal));
-        }
         let mut ids = Vec::with_capacity(count as usize);
         for _ in 0..count {
             ids.push(read_u32(r)?);
         }
-        Ok(Some(BinRequest::Ids { op, ids }))
-    }
+        BinRequest::Ids { op, ids }
+    };
+    Ok(Some(match ctx {
+        Some(ctx) => BinRequest::Traced { ctx, parse_us: 0, inner: Box::new(inner) },
+        None => inner,
+    }))
 }
 
 /// Append the response frame for `req` to `out`; returns true when the
@@ -330,6 +382,31 @@ pub(crate) fn read_frame(r: &mut impl Read) -> io::Result<Option<BinRequest>> {
 /// dispatcher behind both network drivers.
 pub(crate) fn respond_binary(state: &ServingState, req: BinRequest, out: &mut Vec<u8>) -> bool {
     match req {
+        // Unwrap a propagated trace context and dispatch the inner request
+        // through the traced serving paths. The response bytes are
+        // identical to the untraced dispatch by construction — the context
+        // only decides whether a span is recorded server-side.
+        BinRequest::Traced { ctx, parse_us, inner } => {
+            dispatch_binary(state, *inner, out, Some((ctx, parse_us)))
+        }
+        other => dispatch_binary(state, other, out, None),
+    }
+}
+
+fn dispatch_binary(
+    state: &ServingState,
+    req: BinRequest,
+    out: &mut Vec<u8>,
+    trace: Option<(TraceContext, u64)>,
+) -> bool {
+    match req {
+        // Decoders never nest contexts; a hand-built nested frame is a
+        // semantic error (the frame was consumed, connection survives).
+        BinRequest::Traced { .. } => {
+            put_u32(out, STATUS_BAD_REQUEST);
+            put_u32(out, 0);
+            false
+        }
         BinRequest::Fatal => {
             put_u32(out, STATUS_BAD_FRAME);
             put_u32(out, 0);
@@ -361,7 +438,7 @@ pub(crate) fn respond_binary(state: &ServingState, req: BinRequest, out: &mut Ve
             false
         }
         BinRequest::KnnVec { k, query } => {
-            match state.knn(Query::Vector(query), k as usize) {
+            match state.knn_traced(Query::Vector(query), k as usize, trace) {
                 Ok(neighbors) => {
                     let pairs = neighbors.iter().map(|n| (n.id as u32, n.score));
                     let _ = write_neighbors_frame(out, pairs);
@@ -391,7 +468,7 @@ pub(crate) fn respond_binary(state: &ServingState, req: BinRequest, out: &mut Ve
                 }
                 OP_LOOKUP if !ids.is_empty() => {
                     let ids: Vec<usize> = ids.iter().map(|&id| id as usize).collect();
-                    match state.lookup_rows(ids) {
+                    match state.lookup_rows_traced(ids, trace) {
                         Ok(rows) => {
                             out.reserve(8 + rows.len() * state.dim() * 4);
                             put_u32(out, STATUS_OK);
@@ -427,7 +504,7 @@ pub(crate) fn respond_binary(state: &ServingState, req: BinRequest, out: &mut Ve
                     put_u32(out, 0);
                 }
                 OP_KNN if ids.len() == 2 => {
-                    match state.knn(Query::Id(ids[0] as usize), ids[1] as usize) {
+                    match state.knn_traced(Query::Id(ids[0] as usize), ids[1] as usize, trace) {
                         Ok(neighbors) => {
                             let pairs = neighbors.iter().map(|n| (n.id as u32, n.score));
                             let _ = write_neighbors_frame(out, pairs);
@@ -456,6 +533,26 @@ pub(crate) fn respond_binary(state: &ServingState, req: BinRequest, out: &mut Ve
                 // METRICS carrying ids is a bad request (frame consumed,
                 // connection survives) — mirrors PING.
                 OP_METRICS => {
+                    put_u32(out, STATUS_BAD_REQUEST);
+                    put_u32(out, 0);
+                }
+                // One stored trace by id (four little-endian u32 words) —
+                // the binary twin of the text `TRACE <hex id>` verb.
+                OP_TRACE if ids.len() == 4 => {
+                    let text = state.trace_text(trace_id_from_words(&ids));
+                    put_u32(out, STATUS_OK);
+                    put_u32(out, text.len() as u32);
+                    out.extend_from_slice(text.as_bytes());
+                }
+                // No id: the stored-trace ring summary (`TRACE?slow`).
+                OP_TRACE if ids.is_empty() => {
+                    let text = state.trace_slow_text();
+                    put_u32(out, STATUS_OK);
+                    put_u32(out, text.len() as u32);
+                    out.extend_from_slice(text.as_bytes());
+                }
+                // Any other TRACE id count is a bad request — mirrors PING.
+                OP_TRACE => {
                     put_u32(out, STATUS_BAD_REQUEST);
                     put_u32(out, 0);
                 }
@@ -639,12 +736,62 @@ pub(crate) fn encode_ids_frame(op: u32, ids: &[u32]) -> Vec<u8> {
 
 /// Encode one KNN_VEC request frame (count = query dimension).
 pub(crate) fn encode_knn_vec_frame(query: &[f32], k: u32) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(12 + query.len() * 4);
-    put_u32(&mut buf, OP_KNN_VEC);
+    encode_knn_vec_frame_traced(query, k, None)
+}
+
+fn put_trace_ctx(buf: &mut Vec<u8>, ctx: TraceContext) {
+    buf.extend_from_slice(&ctx.trace_id.to_le_bytes());
+    buf.extend_from_slice(&ctx.span_id.to_le_bytes());
+}
+
+/// [`encode_ids_frame`] with an optional trace-context extension; `None`
+/// produces the exact untraced bytes. The router's fan-out uses this to
+/// propagate the root span's context to every shard.
+pub(crate) fn encode_ids_frame_traced(op: u32, ids: &[u32], ctx: Option<TraceContext>) -> Vec<u8> {
+    let Some(ctx) = ctx else {
+        return encode_ids_frame(op, ids);
+    };
+    let mut buf = Vec::with_capacity(32 + ids.len() * 4);
+    put_u32(&mut buf, op | OP_TRACE_CTX);
+    put_u32(&mut buf, ids.len() as u32);
+    put_trace_ctx(&mut buf, ctx);
+    for &id in ids {
+        put_u32(&mut buf, id);
+    }
+    buf
+}
+
+/// [`encode_knn_vec_frame`] with an optional trace-context extension.
+pub(crate) fn encode_knn_vec_frame_traced(
+    query: &[f32],
+    k: u32,
+    ctx: Option<TraceContext>,
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(36 + query.len() * 4);
+    put_u32(&mut buf, if ctx.is_some() { OP_KNN_VEC | OP_TRACE_CTX } else { OP_KNN_VEC });
     put_u32(&mut buf, query.len() as u32);
+    if let Some(ctx) = ctx {
+        put_trace_ctx(&mut buf, ctx);
+    }
     put_u32(&mut buf, k);
     put_f32s(&mut buf, query);
     buf
+}
+
+/// Pack a 16-byte trace id into the four little-endian u32 id words an
+/// `OP_TRACE` request carries (low word first).
+pub fn trace_id_words(trace_id: u128) -> [u32; 4] {
+    std::array::from_fn(|i| (trace_id >> (32 * i)) as u32)
+}
+
+/// Unpack an `OP_TRACE` id payload (inverse of [`trace_id_words`]; short
+/// or long payloads fold the words that are present).
+pub fn trace_id_from_words(words: &[u32]) -> u128 {
+    words
+        .iter()
+        .take(4)
+        .enumerate()
+        .fold(0u128, |acc, (i, &w)| acc | ((w as u128) << (32 * i)))
 }
 
 /// Binary-protocol client (load generator, tests, examples, and the unit of
@@ -855,7 +1002,18 @@ impl BinaryClient {
 
     /// Fetch rows for `ids`; one `dim`-length vector per id, request order.
     pub fn lookup(&mut self, ids: &[u32]) -> Result<Vec<Vec<f32>>, WireError> {
-        let status = self.request(OP_LOOKUP, ids)?;
+        self.lookup_traced(ids, None)
+    }
+
+    /// [`lookup`](Self::lookup) with an optional propagated trace context
+    /// (the router's fan-out path); `None` sends the exact untraced frame.
+    pub fn lookup_traced(
+        &mut self,
+        ids: &[u32],
+        ctx: Option<TraceContext>,
+    ) -> Result<Vec<Vec<f32>>, WireError> {
+        let buf = encode_ids_frame_traced(OP_LOOKUP, ids, ctx);
+        let status = self.roundtrip(&buf, true)?;
         let count = self.recv_u32()? as usize;
         if status != STATUS_OK {
             return Err(WireError::Status(status));
@@ -901,7 +1059,18 @@ impl BinaryClient {
     /// the scatter half of cluster KNN: the router sends the query row to
     /// every shard and merges the per-shard heaps.
     pub fn knn_vec(&mut self, query: &[f32], k: u32) -> Result<Vec<(u32, f32)>, WireError> {
-        let buf = encode_knn_vec_frame(query, k);
+        self.knn_vec_traced(query, k, None)
+    }
+
+    /// [`knn_vec`](Self::knn_vec) with an optional propagated trace
+    /// context; `None` sends the exact untraced frame.
+    pub fn knn_vec_traced(
+        &mut self,
+        query: &[f32],
+        k: u32,
+        ctx: Option<TraceContext>,
+    ) -> Result<Vec<(u32, f32)>, WireError> {
+        let buf = encode_knn_vec_frame_traced(query, k, ctx);
         let status = self.roundtrip(&buf, true)?;
         let count = self.recv_u32()? as usize;
         if status != STATUS_OK {
@@ -953,6 +1122,37 @@ impl BinaryClient {
         let bytes = self.recv_bytes(count)?;
         String::from_utf8(bytes).map_err(|_| {
             WireError::Io(io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 METRICS payload"))
+        })
+    }
+
+    /// Fetch one stored trace (span + stage exposition lines, `# EOF`
+    /// terminated) from the server by trace id — the binary twin of the
+    /// text `TRACE <hex id>` verb. The cluster router assembles
+    /// cross-node traces by calling this on every replica.
+    pub fn trace(&mut self, trace_id: u128) -> Result<String, WireError> {
+        let status = self.request(OP_TRACE, &trace_id_words(trace_id))?;
+        let count = self.recv_u32()? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let bytes = self.recv_bytes(count)?;
+        String::from_utf8(bytes).map_err(|_| {
+            WireError::Io(io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 TRACE payload"))
+        })
+    }
+
+    /// Fetch the server's stored-trace ring summary (the binary twin of
+    /// the text `TRACE?slow` verb) — how a client finds trace ids worth
+    /// fetching with [`trace`](Self::trace).
+    pub fn trace_slow(&mut self) -> Result<String, WireError> {
+        let status = self.request(OP_TRACE, &[])?;
+        let count = self.recv_u32()? as usize;
+        if status != STATUS_OK {
+            return Err(WireError::Status(status));
+        }
+        let bytes = self.recv_bytes(count)?;
+        String::from_utf8(bytes).map_err(|_| {
+            WireError::Io(io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 TRACE payload"))
         })
     }
 
@@ -1041,6 +1241,60 @@ mod tests {
         assert_eq!(format_stats_field("knn_mean_probes", 2.0), "2.00");
         assert_eq!(format_stats_field("served", 42.0), "42");
         assert_eq!(format_stats_field("model_generation", 1.0), "1");
+    }
+
+    #[test]
+    fn trace_id_words_roundtrip() {
+        let id = 0x0011_2233_4455_6677_8899_aabb_ccdd_eeffu128;
+        let words = trace_id_words(id);
+        assert_eq!(words[0], 0xccdd_eeff, "low word first");
+        assert_eq!(trace_id_from_words(&words), id);
+        assert_eq!(trace_id_from_words(&[]), 0);
+    }
+
+    #[test]
+    fn traced_frames_extend_untraced_frames_byte_exactly() {
+        // A traced frame is the untraced frame with the flag bit set and
+        // 24 context bytes spliced after the 8-byte header — nothing else
+        // moves, so the payload grammar is unchanged.
+        let ctx = TraceContext { trace_id: 0xAB, span_id: 0xCD };
+        let plain = encode_ids_frame(OP_LOOKUP, &[5, 9]);
+        let traced = encode_ids_frame_traced(OP_LOOKUP, &[5, 9], Some(ctx));
+        assert_eq!(encode_ids_frame_traced(OP_LOOKUP, &[5, 9], None), plain);
+        assert_eq!(traced.len(), plain.len() + 24);
+        assert_eq!(traced[0..4], (OP_LOOKUP | OP_TRACE_CTX).to_le_bytes());
+        assert_eq!(traced[4..8], plain[4..8], "count unchanged");
+        assert_eq!(traced[8..24], 0xABu128.to_le_bytes());
+        assert_eq!(traced[24..32], 0xCDu64.to_le_bytes());
+        assert_eq!(traced[32..], plain[8..], "payload unchanged");
+
+        let plain_kv = encode_knn_vec_frame(&[0.5, 1.5], 3);
+        let traced_kv = encode_knn_vec_frame_traced(&[0.5, 1.5], 3, Some(ctx));
+        assert_eq!(encode_knn_vec_frame_traced(&[0.5, 1.5], 3, None), plain_kv);
+        assert_eq!(traced_kv.len(), plain_kv.len() + 24);
+        assert_eq!(traced_kv[32..], plain_kv[8..], "k + query unchanged");
+
+        // Both decode paths agree with the blocking reader.
+        let got = read_frame(&mut Cursor::new(traced)).unwrap().unwrap();
+        match got {
+            BinRequest::Traced { ctx: c, parse_us, inner } => {
+                assert_eq!(c, ctx);
+                assert_eq!(parse_us, 0);
+                assert_eq!(*inner, BinRequest::Ids { op: OP_LOOKUP, ids: vec![5, 9] });
+                assert!(!BinRequest::Traced { ctx: c, parse_us, inner }.is_terminal());
+            }
+            other => panic!("expected Traced, got {other:?}"),
+        }
+        // A traced QUIT is still terminal through the wrapper.
+        let q = encode_ids_frame_traced(OP_QUIT, &[], Some(ctx));
+        assert!(read_frame(&mut Cursor::new(q)).unwrap().unwrap().is_terminal());
+        // A hostile count fails before the extension is read: 8 bytes of
+        // header with the flag set and an absurd count is Fatal even
+        // though no 24 context bytes follow.
+        let mut hostile = Vec::new();
+        put_u32(&mut hostile, OP_LOOKUP | OP_TRACE_CTX);
+        put_u32(&mut hostile, u32::MAX & !OP_TRACE_CTX);
+        assert_eq!(read_frame(&mut Cursor::new(hostile)).unwrap().unwrap(), BinRequest::Fatal);
     }
 
     #[test]

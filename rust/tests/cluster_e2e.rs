@@ -530,6 +530,133 @@ fn metrics_scrape_across_cluster() {
     cluster.stop();
 }
 
+/// Pull one label value (`key="…"`) out of an exposition line.
+fn label_value<'a>(line: &'a str, key: &str) -> &'a str {
+    let pat = format!("{key}=\"");
+    let start = line.find(&pat).unwrap_or_else(|| panic!("no {key} label in: {line}")) + pat.len();
+    &line[start..start + line[start..].find('"').unwrap()]
+}
+
+/// The µs value after the closing brace of an exposition line.
+fn sample_value(line: &str) -> u64 {
+    line.rsplit(' ').next().unwrap().parse().unwrap_or_else(|_| panic!("bad sample: {line}"))
+}
+
+/// Acceptance for the trace plane: a head-sampled KNN through a 2-shard
+/// router yields ONE assembled trace — the router's root span parenting a
+/// span group from every shard — fetched with `Router::trace_text`, which
+/// scrapes each shard's ring over the admin connections and relabels the
+/// spans exactly like the METRICS roll-up. Killing a shard degrades the
+/// assembly visibly (`w2k_trace_scrape_ok … 0`) instead of hiding it.
+#[test]
+fn assembled_trace_spans_the_cluster_and_degrades_visibly() {
+    let store = regular_store(64, 8, 37);
+    let mut cluster = Cluster::start(store.as_ref(), ShardStrategy::Range, 2, 1, "trace");
+    let mut rc = router_cfg();
+    // Sample every routed request; the stock shard servers keep their
+    // default config (ring armed, no self-sampling) and record spans only
+    // under the router's propagated context.
+    rc.obs.trace_sample = 1.0;
+    let router = Router::new(cluster.topo.clone(), rc);
+
+    let neighbors = router.knn(5, 3).unwrap();
+    assert_eq!(neighbors.len(), 3);
+
+    // The router's own ring names the trace: the head-sampled root span.
+    let ring = router.trace_slow_text();
+    let root_line = ring
+        .lines()
+        .find(|l| l.contains("op=\"knn\"") && l.contains("parent=\"0000000000000000\""))
+        .unwrap_or_else(|| panic!("no sampled knn root in ring: {ring}"));
+    let trace_hex = label_value(root_line, "trace").to_string();
+    let root_span = label_value(root_line, "span").to_string();
+    let trace_id = word2ket::obs::TraceContext::parse_hex(&trace_hex).unwrap();
+
+    let assembled = router.trace_text(trace_id);
+    assert!(assembled.ends_with("# EOF\n"), "{assembled}");
+    assert_eq!(assembled.matches("# EOF").count(), 1, "{assembled}");
+    for s in 0..2 {
+        assert!(
+            assembled.contains(&format!("w2k_trace_scrape_ok{{shard=\"{s}\",replica=\"0\"}} 1")),
+            "shard {s} scrape missing: {assembled}"
+        );
+    }
+
+    // Router-side spans come first, unlabeled: the root and the query-row
+    // lookup child it spawned before the scatter.
+    assert!(
+        assembled.contains(&format!("span=\"{root_span}\",parent=\"0000000000000000\"")),
+        "{assembled}"
+    );
+    assert!(
+        assembled
+            .contains(&format!("parent=\"{root_span}\",op=\"lookup\"")),
+        "query-row lookup child missing: {assembled}"
+    );
+
+    // Every shard contributes a KNN span parented directly under the
+    // router's root — the cross-node tree the tentpole promises.
+    let shard_spans: Vec<&str> = assembled
+        .lines()
+        .filter(|l| {
+            l.starts_with("w2k_trace_span{shard=")
+                && l.contains(&format!("parent=\"{root_span}\""))
+        })
+        .collect();
+    assert!(shard_spans.len() >= 2, "root parents {} shard spans: {assembled}", shard_spans.len());
+    for s in 0..2 {
+        assert!(
+            shard_spans.iter().any(|l| label_value(l, "shard") == s.to_string()),
+            "no shard-{s} span under the root: {assembled}"
+        );
+    }
+
+    // Per-shard stage accounting: each shard span's stage sum lands within
+    // one log₂-histogram bucket width of the span's own duration (clock
+    // reads truncate to µs, so a few-µs floor keeps sub-bucket spans honest).
+    for line in assembled.lines().filter(|l| l.starts_with("w2k_trace_span{shard=")) {
+        let span_hex = label_value(line, "span");
+        let total = sample_value(line);
+        let stage_sum: u64 = assembled
+            .lines()
+            .filter(|l| {
+                l.starts_with("w2k_trace_stage{shard=")
+                    && label_value(l, "span") == span_hex
+            })
+            .map(sample_value)
+            .sum();
+        let slack = word2ket::obs::bucket_width(total).max(32);
+        assert!(
+            total.abs_diff(stage_sum) <= slack,
+            "span {span_hex}: stages sum to {stage_sum}µs vs {total}µs total \
+             (slack {slack}µs): {assembled}"
+        );
+    }
+
+    // Kill shard 1's only replica: the re-assembled dump must keep the
+    // router spans and shard 0, and mark shard 1's scrape dead — a partial
+    // trace that says so beats a silently complete-looking one.
+    cluster.nodes[1].remove(0).kill();
+    let degraded = router.trace_text(trace_id);
+    assert!(
+        degraded.contains("w2k_trace_scrape_ok{shard=\"1\",replica=\"0\"} 0"),
+        "{degraded}"
+    );
+    assert!(
+        degraded.contains("w2k_trace_scrape_ok{shard=\"0\",replica=\"0\"} 1"),
+        "{degraded}"
+    );
+    assert!(
+        degraded.contains(&format!("span=\"{root_span}\",parent=\"0000000000000000\"")),
+        "{degraded}"
+    );
+    assert!(!degraded.contains("w2k_trace_span{shard=\"1\""), "{degraded}");
+    assert!(degraded.ends_with("# EOF\n"), "{degraded}");
+
+    router.shutdown();
+    cluster.stop();
+}
+
 /// Graceful shutdown of the router's own listener: idle clients parked on
 /// both protocols observe EOF instead of a hang, the accept thread joins
 /// (no leaked listener threads), and the address stops serving.

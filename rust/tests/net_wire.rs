@@ -401,6 +401,140 @@ fn metrics_name_sets_match_across_drivers_under_traffic() {
     );
 }
 
+/// Hand-rolled frame carrying the optional trace-context extension: the
+/// high bit of the op word flags 24 extra bytes (u128 trace id + u64
+/// parent span id, both little-endian) between the header and the payload.
+fn traced_ids_frame(op: u32, ids: &[u32], trace_id: u128, parent_span: u64) -> Vec<u8> {
+    let mut f = Vec::new();
+    put_u32(&mut f, op | 0x8000_0000);
+    put_u32(&mut f, ids.len() as u32);
+    f.extend_from_slice(&trace_id.to_le_bytes());
+    f.extend_from_slice(&parent_span.to_le_bytes());
+    for &id in ids {
+        put_u32(&mut f, id);
+    }
+    f
+}
+
+#[test]
+fn tracing_config_never_changes_response_bytes() {
+    // The acceptance bar for the trace plane's wire footprint: a server
+    // head-sampling *every* request must answer the full binary script
+    // byte-identically to one with the tracer disabled outright — responses
+    // never carry trace bytes; the extension exists on requests only.
+    let script = binary_script();
+    for driver in DRIVERS {
+        let mut responses = Vec::new();
+        for (sample, ring) in [(0.0, 0), (1.0, 64)] {
+            let mut cfg = cfg_for(driver);
+            cfg.obs.trace_sample = sample;
+            cfg.obs.trace_ring_len = ring;
+            let (state, listener, addr) = spawn(&cfg).unwrap();
+            let st = state.clone();
+            let acc = std::thread::spawn(move || accept_loop(listener, st));
+            responses.push(roundtrip_batched(&addr, &script));
+            state.shutdown();
+            acc.join().unwrap();
+        }
+        assert_eq!(
+            responses[0], responses[1],
+            "{driver}: sampling every request changed the response bytes"
+        );
+    }
+}
+
+#[test]
+fn traced_frames_answer_byte_identically_to_untraced() {
+    // A client stamping the trace-context extension onto its frames must
+    // get the exact bytes an untraced client gets, under both drivers,
+    // batched and dribbled one byte at a time (the 24 extension bytes
+    // fragment across reads like any other frame bytes).
+    let trace_id = 0xfeed_f00d_dead_beef_0123_4567_89ab_cdefu128;
+    let mut traced = Vec::new();
+    traced.extend_from_slice(&wire::MAGIC);
+    traced.extend_from_slice(&traced_ids_frame(wire::OP_LOOKUP, &[1, 2, 1], trace_id, 7));
+    traced.extend_from_slice(&traced_ids_frame(wire::OP_KNN, &[42, 5], trace_id, 7));
+    traced.extend_from_slice(&ids_frame(wire::OP_QUIT, &[]));
+    let mut untraced = Vec::new();
+    untraced.extend_from_slice(&wire::MAGIC);
+    untraced.extend_from_slice(&ids_frame(wire::OP_LOOKUP, &[1, 2, 1]));
+    untraced.extend_from_slice(&ids_frame(wire::OP_KNN, &[42, 5]));
+    untraced.extend_from_slice(&ids_frame(wire::OP_QUIT, &[]));
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let plain = roundtrip_batched(&addr, &untraced);
+        let batched = roundtrip_batched(&addr, &traced);
+        let dribbled = roundtrip_dribbled(&addr, &traced);
+        assert_eq!(batched, plain, "{driver}: trace extension leaked into the response");
+        assert_eq!(batched, dribbled, "{driver}: fragmented traced frames diverged");
+        state.shutdown();
+        acc.join().unwrap();
+    }
+    // A hostile count with the trace flag set must die at the header, before
+    // the server ever reads the extension bytes.
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::MAGIC).unwrap();
+        let mut hello = [0u8; 8];
+        s.read_exact(&mut hello).unwrap();
+        let mut frame = Vec::new();
+        put_u32(&mut frame, wire::OP_LOOKUP | 0x8000_0000);
+        put_u32(&mut frame, u32::MAX);
+        s.write_all(&frame).unwrap();
+        let mut resp = [0u8; 8];
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.read_exact(&mut resp).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(resp[..4].try_into().unwrap()),
+            wire::STATUS_BAD_FRAME,
+            "{driver}"
+        );
+        state.shutdown();
+        acc.join().unwrap();
+    }
+}
+
+#[test]
+fn op_trace_returns_the_span_tree_for_a_propagated_context() {
+    // The default config arms the trace ring (64 entries) even with
+    // head-sampling off, so a propagated context is always honored: send a
+    // traced LOOKUP with a client-chosen trace id, then fetch the stored
+    // span over OP_TRACE and check the per-stage breakdown.
+    let trace_id = 0x0123_4567_89ab_cdef_feed_f00d_dead_beefu128;
+    for driver in DRIVERS {
+        let (state, addr, acc) = start(driver);
+        let mut bin = word2ket::serving::BinaryClient::connect(&addr).unwrap();
+        let ctx = word2ket::obs::TraceContext { trace_id, span_id: 0x5afe };
+        let rows = bin.lookup_traced(&[1, 2, 3], Some(ctx)).unwrap();
+        assert_eq!(rows.len(), 3, "{driver}");
+        let text = bin.trace(trace_id).unwrap();
+        let hex = word2ket::obs::TraceContext::hex(trace_id);
+        assert!(
+            text.contains(&format!("trace=\"{hex}\"")),
+            "{driver}: trace id missing from dump: {text}"
+        );
+        assert!(text.contains("w2k_trace_span"), "{driver}: {text}");
+        // The propagated span id is the stored span's parent.
+        assert!(
+            text.contains("parent=\"0000000000005afe\""),
+            "{driver}: propagated context not honored as parent: {text}"
+        );
+        assert!(
+            text.contains("stage=\"batch_wait\""),
+            "{driver}: per-stage breakdown missing: {text}"
+        );
+        assert!(text.ends_with("# EOF\n"), "{driver}: {text}");
+        // An unknown id answers an empty (EOF-only) dump, not an error.
+        let empty = bin.trace(0x1).unwrap();
+        assert!(!empty.contains("w2k_trace_span"), "{driver}: {empty}");
+        assert!(empty.ends_with("# EOF\n"), "{driver}: {empty}");
+        bin.quit().unwrap();
+        state.shutdown();
+        acc.join().unwrap();
+    }
+}
+
 #[test]
 fn stats_views_consistent_under_both_drivers() {
     for driver in DRIVERS {
