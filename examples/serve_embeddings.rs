@@ -8,6 +8,7 @@
 //!      [--clients C] [--order 4 --rank 1] [--shards 4] [--cache-rows 65536]
 //!      [--wire binary|text] [--driver threads|epoll] [--zipf 1.05]
 //!      [--knn 0.1 --topk 10] [--index ivf --nlist 64 --nprobe 8]
+//!      [--scan-threads 0]
 //!      [--save model.snap] [--load model.snap] [--reload model.snap]
 //!      [--trace-sample 0.01] [--trace <32-hex id>]
 //!
@@ -78,6 +79,7 @@ fn main() -> word2ket::Result<()> {
                 OptSpec { name: "index", help: "knn index: brute|ivf", takes_value: true, repeated: false, default: Some("brute") },
                 OptSpec { name: "nlist", help: "IVF coarse cells", takes_value: true, repeated: false, default: Some("64") },
                 OptSpec { name: "nprobe", help: "IVF cells probed per query", takes_value: true, repeated: false, default: Some("8") },
+                OptSpec { name: "scan-threads", help: "KNN scan threads (0 = all cores, 1 = sequential; results are bit-identical at any setting)", takes_value: true, repeated: false, default: Some("0") },
                 OptSpec { name: "save", help: "write the configured store to this snapshot file before serving", takes_value: true, repeated: false, default: None },
                 OptSpec { name: "load", help: "boot the server from this snapshot (mmap) instead of RNG+config", takes_value: true, repeated: false, default: None },
                 OptSpec { name: "reload", help: "hot-swap to this snapshot mid-load via OP_RELOAD (cluster mode: a dir to rolling-reload from)", takes_value: true, repeated: false, default: None },
@@ -136,6 +138,7 @@ fn main() -> word2ket::Result<()> {
     cfg.index.kind = IndexKind::parse(parsed.get("index").unwrap_or("brute"))?;
     cfg.index.nlist = parsed.get_usize("nlist")?.unwrap_or(64);
     cfg.index.nprobe = parsed.get_usize("nprobe")?.unwrap_or(8);
+    cfg.index.scan_threads = parsed.get_usize("scan-threads")?.unwrap_or(0);
     cfg.obs.trace_sample = trace_sample;
 
     if let Some(save) = parsed.get("save") {
@@ -185,13 +188,15 @@ fn main() -> word2ket::Result<()> {
     let accept = std::thread::spawn(move || server::accept_loop(listener, accept_state));
 
     println!(
-        "server on {addr} [{wire_mode} wire, {} driver, {} shards, {} cache rows, {} index]; \
-         {clients} clients × {requests} reqs (batch {batch}, Zipf s={zipf_s}, \
-         knn mix {:.0}% top-{topk})",
+        "server on {addr} [{wire_mode} wire, {} driver, {} shards, {} cache rows, {} index, \
+         {} kernels, scan-threads {}]; {clients} clients × {requests} reqs (batch {batch}, \
+         Zipf s={zipf_s}, knn mix {:.0}% top-{topk})",
         cfg.net.driver,
         cfg.serving.shards,
         cfg.serving.cache_rows,
         cfg.index.kind.name(),
+        word2ket::simd::level().name(),
+        cfg.index.scan_threads,
         100.0 * knn_frac
     );
     let zipf = Arc::new(ZipfSampler::new(cfg.model.vocab, zipf_s));
@@ -267,7 +272,8 @@ fn main() -> word2ket::Result<()> {
     println!(
         "server STATS: p50_us={:.0} p99_us={:.0} served={} cache_hits={} cache_misses={} \
          rejected={} knn_queries={} knn_candidates={} knn_mean_probes={:.2} \
-         model_generation={} snapshot_bytes={} accept_errors={} (hit rate {:.1}%)",
+         model_generation={} snapshot_bytes={} accept_errors={} simd_level={} \
+         (hit rate {:.1}%)",
         stats.p50_us,
         stats.p99_us,
         stats.served,
@@ -280,6 +286,7 @@ fn main() -> word2ket::Result<()> {
         stats.model_generation,
         stats.snapshot_bytes,
         stats.accept_errors,
+        stats.simd_level,
         100.0 * stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64
     );
     // Trace dump: one specific id, or (when sampling was on) the server's

@@ -1,4 +1,5 @@
-//! Bench: allocation-free batched lookups vs the per-row `Vec` path.
+//! Bench: allocation-free batched lookups vs the per-row `Vec` path,
+//! swept across SIMD dispatch levels.
 //!
 //! The repr-layer refactor made `EmbeddingStore::lookup_into` /
 //! `lookup_batch_into` write caller-provided buffers end to end (per-thread
@@ -6,14 +7,18 @@
 //! filled in place). This bench quantifies what that buys over the
 //! historical per-row path (`lookup` allocating a fresh `Vec<f32>` per id)
 //! on the acceptance config — a 10k-vocab order-4 word2ketXS store — plus
-//! the order-2 heavy-rank cell and a cache-wrapped variant, and emits
-//! `BENCH_batch.json` so the perf trajectory accumulates across PRs.
+//! the order-2 heavy-rank cell and a cache-wrapped variant. Every
+//! store-level cell now also runs once per available kernel set
+//! (`scalar` → `sse2` → `avx2+fma`), so the scalar-vs-vectorized ratio for
+//! the factored reconstruction kernels lands in `BENCH_batch.json` and the
+//! perf trajectory accumulates across PRs.
 //!
 //! Run: cargo bench --bench batch_lookup    (W2K_BENCH_FAST=1 to smoke)
 
 use word2ket::bench::{black_box, header, BenchRunner};
 use word2ket::embedding::{EmbeddingStore, Word2KetXS};
 use word2ket::serving::ShardedCache;
+use word2ket::simd;
 use word2ket::util::{Json, Rng};
 
 const VOCAB: usize = 10_000;
@@ -29,6 +34,7 @@ struct Row {
     rank: usize,
     batched: bool,
     cached: bool,
+    simd: &'static str,
 }
 
 fn xs_store(order: usize, rank: usize) -> Word2KetXS {
@@ -55,9 +61,10 @@ fn batches(n: usize) -> Vec<Vec<usize>> {
 
 fn main() {
     header(
-        "Batched lookup_into vs per-row Vec reconstruction",
+        "Batched lookup_into vs per-row Vec reconstruction, per kernel set",
         "the repr layer writes rows into caller buffers (per-thread scratch, \
-         reused arenas); the old path allocated a Vec per row",
+         reused arenas) through runtime-dispatched kernels; each cell runs \
+         under every kernel set the host supports",
     );
     let fast = std::env::var("W2K_BENCH_FAST").is_ok();
     let runner = if fast {
@@ -78,6 +85,7 @@ fn main() {
                       rank: usize,
                       batched: bool,
                       cached: bool,
+                      simd: &'static str,
                       results: &mut Vec<Row>| {
         println!("{}", r.render());
         results.push(Row {
@@ -89,56 +97,75 @@ fn main() {
             rank,
             batched,
             cached,
+            simd,
         });
     };
 
     // The acceptance config (order 4) first, then the rank-heavy order-2
-    // cell from the paper's tables.
+    // cell from the paper's tables — each swept across every kernel set
+    // the host supports, scalar first so the vectorized speedup prints
+    // against a fresh baseline.
+    let levels = simd::available_levels();
     for (order, rank) in [(4usize, 2usize), (2, 10)] {
         let store = xs_store(order, rank);
-        let mut next = 0usize;
+        let mut scalar_batched_mean = 0.0f64;
+        for &lvl in &levels {
+            simd::set_level(lvl);
+            let simd_name = lvl.name();
+            let mut next = 0usize;
 
-        let name = format!("xs {order}/{rank} per-row Vec ({BATCH} rows)");
-        let per_row = runner.run_throughput(&name, BATCH as f64, || {
-            let ids = &workload[next % workload.len()];
-            next += 1;
-            for &id in ids {
-                black_box(store.lookup(id));
+            let name = format!("xs {order}/{rank} per-row Vec [{simd_name}] ({BATCH} rows)");
+            let per_row = runner.run_throughput(&name, BATCH as f64, || {
+                let ids = &workload[next % workload.len()];
+                next += 1;
+                for &id in ids {
+                    black_box(store.lookup(id));
+                }
+            });
+            record(&name, &per_row, order, rank, false, false, simd_name, &mut results);
+
+            let mut arena: Vec<f32> = Vec::new();
+            let mut next = 0usize;
+            let name = format!("xs {order}/{rank} batched arena [{simd_name}] ({BATCH} rows)");
+            let batched = runner.run_throughput(&name, BATCH as f64, || {
+                let ids = &workload[next % workload.len()];
+                next += 1;
+                store.lookup_batch_into(ids, &mut arena);
+                black_box(arena.last().copied())
+            });
+            record(&name, &batched, order, rank, true, false, simd_name, &mut results);
+
+            let speedup = per_row.mean.as_secs_f64() / batched.mean.as_secs_f64();
+            println!("  -> batched/per-row speedup {speedup:.2}×");
+            let batched_mean = batched.mean.as_secs_f64();
+            if lvl == simd::SimdLevel::Scalar {
+                scalar_batched_mean = batched_mean;
+            } else if scalar_batched_mean > 0.0 {
+                let vs_scalar = scalar_batched_mean / batched_mean;
+                println!("  -> batched {simd_name}/scalar speedup {vs_scalar:.2}×");
             }
-        });
-        record(&name, &per_row, order, rank, false, false, &mut results);
-
-        let mut arena: Vec<f32> = Vec::new();
-        let mut next = 0usize;
-        let name = format!("xs {order}/{rank} batched arena ({BATCH} rows)");
-        let batched = runner.run_throughput(&name, BATCH as f64, || {
-            let ids = &workload[next % workload.len()];
-            next += 1;
-            store.lookup_batch_into(ids, &mut arena);
-            black_box(arena.last().copied())
-        });
-        record(&name, &batched, order, rank, true, false, &mut results);
-
-        let speedup = per_row.mean.as_secs_f64() / batched.mean.as_secs_f64();
-        println!("  -> batched/per-row speedup {speedup:.2}×\n");
+            println!();
+        }
     }
 
-    // Cache-wrapped order-4 store: misses reconstruct in place, hits are
-    // single memcpys into the arena.
+    // Cache-wrapped order-4 store at the host's best kernel set: misses
+    // reconstruct in place, hits are single memcpys into the arena (the
+    // kernel set only matters on the miss path, so one cell suffices).
+    let best = simd::set_level(simd::detect());
     let cached = ShardedCache::new(Box::new(xs_store(4, 2)), 4, VOCAB);
     let mut arena: Vec<f32> = Vec::new();
     for ids in &workload {
         cached.lookup_batch_into(ids, &mut arena); // warm
     }
     let mut next = 0usize;
-    let name = format!("xs 4/2 cached batched arena ({BATCH} rows)");
+    let name = format!("xs 4/2 cached batched arena [{}] ({BATCH} rows)", best.name());
     let warm = runner.run_throughput(&name, BATCH as f64, || {
         let ids = &workload[next % workload.len()];
         next += 1;
         cached.lookup_batch_into(ids, &mut arena);
         black_box(arena.last().copied())
     });
-    record(&name, &warm, 4, 2, true, true, &mut results);
+    record(&name, &warm, 4, 2, true, true, best.name(), &mut results);
 
     let json = Json::arr(results.iter().map(|r| {
         Json::obj(vec![
@@ -150,6 +177,7 @@ fn main() {
             ("rank", Json::num(r.rank as f64)),
             ("batched", Json::num(if r.batched { 1.0 } else { 0.0 })),
             ("cached", Json::num(if r.cached { 1.0 } else { 0.0 })),
+            ("simd", Json::str(r.simd.to_string())),
         ])
     }));
     let path = "BENCH_batch.json";

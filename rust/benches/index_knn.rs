@@ -5,8 +5,10 @@
 //! of `O(q^n)` (§2.3), so exact search over the compressed table beats the
 //! dense scan without any approximation; IVF stacks a sub-linear candidate
 //! scan on top (probe `nprobe` of `nlist` k-means cells, exact factored
-//! re-rank). This bench quantifies both speedups plus IVF recall@k and
-//! emits `BENCH_index.json` so the perf trajectory accumulates across PRs.
+//! re-rank). This bench quantifies both speedups plus IVF recall@k, sweeps
+//! the factored scans across `scan_threads` 1/2/4 (the blocked parallel
+//! scan — bit-identical results, so only throughput moves), and emits
+//! `BENCH_index.json` so the perf trajectory accumulates across PRs.
 //!
 //! Run: cargo bench --bench index_knn    (W2K_BENCH_FAST=1 to smoke)
 
@@ -52,6 +54,7 @@ struct Row {
     p99_us: f64,
     mean_candidates: f64,
     recall_at_k: f64,
+    scan_threads: usize,
 }
 
 fn main() {
@@ -112,28 +115,46 @@ fn main() {
         p99_us: mat.p99.as_secs_f64() * 1e6,
         mean_candidates: (vocab - 1) as f64,
         recall_at_k: 1.0,
+        scan_threads: 1,
     });
 
-    // --- factored brute force ---------------------------------------------
-    let brute = BruteForce::new(Scorer::new(store.clone() as Arc<dyn EmbeddingStore>, false));
-    assert!(brute.scorer().is_factored(), "bench premise: factored scoring path");
-    let next = Cell::new(0usize);
-    let fac = runner.run_throughput(&format!("factored brute top-{K}"), 1.0, || {
-        let q = queries[next.get() % queries.len()];
-        next.set(next.get() + 1);
-        black_box(brute.top_k(&Query::Id(q), K))
-    });
-    println!("{}", fac.render());
-    let fac_speedup = mat.mean.as_secs_f64() / fac.mean.as_secs_f64();
-    println!("  -> factored/materialized speedup {fac_speedup:.1}×");
-    results.push(Row {
-        name: "factored brute".into(),
-        queries_per_s: fac.throughput().unwrap_or(0.0),
-        p50_us: fac.p50.as_secs_f64() * 1e6,
-        p99_us: fac.p99.as_secs_f64() * 1e6,
-        mean_candidates: (vocab - 1) as f64,
-        recall_at_k: 1.0,
-    });
+    // --- factored brute force, swept across the scan-thread knob ----------
+    // The 1-thread row is the historical cell; the 2- and 4-thread rows are
+    // the blocked parallel scan (results bit-identical by construction, so
+    // the only thing that moves is throughput — the scaling column).
+    let mut fac_base_mean = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let brute = BruteForce::new(Scorer::new(store.clone() as Arc<dyn EmbeddingStore>, false))
+            .with_scan_threads(threads);
+        if threads == 1 {
+            assert!(brute.scorer().is_factored(), "bench premise: factored scoring path");
+        }
+        let next = Cell::new(0usize);
+        let fac = runner.run_throughput(&format!("factored brute top-{K} [{threads}t]"), 1.0, || {
+            let q = queries[next.get() % queries.len()];
+            next.set(next.get() + 1);
+            black_box(brute.top_k(&Query::Id(q), K))
+        });
+        println!("{}", fac.render());
+        let fac_mean = fac.mean.as_secs_f64();
+        if threads == 1 {
+            fac_base_mean = fac_mean;
+            let fac_speedup = mat.mean.as_secs_f64() / fac_mean;
+            println!("  -> factored/materialized speedup {fac_speedup:.1}×");
+        } else if fac_base_mean > 0.0 {
+            let scaling = fac_base_mean / fac_mean;
+            println!("  -> {threads}-thread scan scaling {scaling:.2}× over 1 thread");
+        }
+        results.push(Row {
+            name: format!("factored brute {threads}t"),
+            queries_per_s: fac.throughput().unwrap_or(0.0),
+            p50_us: fac.p50.as_secs_f64() * 1e6,
+            p99_us: fac.p99.as_secs_f64() * 1e6,
+            mean_candidates: (vocab - 1) as f64,
+            recall_at_k: 1.0,
+            scan_threads: threads,
+        });
+    }
 
     // --- IVF ----------------------------------------------------------------
     let t = Timer::start();
@@ -182,6 +203,35 @@ fn main() {
         p99_us: ivf_r.p99.as_secs_f64() * 1e6,
         mean_candidates,
         recall_at_k: recall,
+        scan_threads: 1,
+    });
+
+    // --- IVF with a parallel re-rank ----------------------------------------
+    // Same probed cells, same bit-identical results; the candidate scan is
+    // chunked across the scan team (the knob clamps itself when the probed
+    // lists are too small to split, so small configs just run sequentially).
+    let ivf = ivf.with_scan_threads(4);
+    let next = Cell::new(0usize);
+    let ivf_p = runner.run_throughput(
+        &format!("ivf[{nlist}/{nprobe}] top-{K} [4t]"),
+        1.0,
+        || {
+            let q = queries[next.get() % queries.len()];
+            next.set(next.get() + 1);
+            black_box(ivf.top_k(&Query::Id(q), K))
+        },
+    );
+    println!("{}", ivf_p.render());
+    let rerank_scaling = ivf_r.mean.as_secs_f64() / ivf_p.mean.as_secs_f64();
+    println!("  -> 4-thread re-rank scaling {rerank_scaling:.2}× over 1 thread");
+    results.push(Row {
+        name: format!("ivf nlist={nlist} nprobe={nprobe} 4t"),
+        queries_per_s: ivf_p.throughput().unwrap_or(0.0),
+        p50_us: ivf_p.p50.as_secs_f64() * 1e6,
+        p99_us: ivf_p.p99.as_secs_f64() * 1e6,
+        mean_candidates,
+        recall_at_k: recall,
+        scan_threads: 4,
     });
 
     // Persist the trajectory point.
@@ -193,6 +243,7 @@ fn main() {
             ("p99_us", Json::num(r.p99_us)),
             ("mean_candidates", Json::num(r.mean_candidates)),
             ("recall_at_k", Json::num(r.recall_at_k)),
+            ("scan_threads", Json::num(r.scan_threads as f64)),
             ("vocab", Json::num(vocab as f64)),
             ("dim", Json::num(DIM as f64)),
             ("k", Json::num(K as f64)),

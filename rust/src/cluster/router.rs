@@ -598,6 +598,7 @@ impl Router {
         });
         let mut agg = WireStats::default();
         let (mut min_generation, mut max_generation) = (u64::MAX, 0u64);
+        let mut min_simd = u64::MAX;
         let mut probes_weighted = 0.0f64;
         for rep in replicas.iter().filter_map(|r| r.stats.as_ref()) {
             agg.p50_us = agg.p50_us.max(rep.p50_us);
@@ -612,10 +613,14 @@ impl Router {
             agg.snapshot_bytes += rep.snapshot_bytes;
             min_generation = min_generation.min(rep.model_generation);
             max_generation = max_generation.max(rep.model_generation);
+            // The fleet is only as vectorized as its slowest member: the
+            // roll-up reports the minimum dispatch level across replicas.
+            min_simd = min_simd.min(rep.simd_level);
         }
         if min_generation == u64::MAX {
             min_generation = 0;
         }
+        agg.simd_level = if min_simd == u64::MAX { 0 } else { min_simd };
         agg.knn_mean_probes =
             if agg.knn_queries == 0 { 0.0 } else { probes_weighted / agg.knn_queries as f64 };
         agg.model_generation = min_generation;

@@ -232,11 +232,16 @@ pub struct IndexConfig {
     /// Rank by cosine similarity instead of raw dot product (per-word norms
     /// are precomputed at index build).
     pub cosine: bool,
+    /// Scan-team size for brute-force sweeps and IVF re-ranks: 0 = auto
+    /// (available parallelism, the default), 1 = single-threaded, N = at
+    /// most N workers. Results are bit-identical at any setting (exact
+    /// per-worker top-k heaps merged through `merge_top_k`).
+    pub scan_threads: usize,
 }
 
 impl Default for IndexConfig {
     fn default() -> Self {
-        IndexConfig { kind: IndexKind::Brute, nlist: 64, nprobe: 8, cosine: false }
+        IndexConfig { kind: IndexKind::Brute, nlist: 64, nprobe: 8, cosine: false, scan_threads: 0 }
     }
 }
 
@@ -384,6 +389,7 @@ impl ExperimentConfig {
                 nlist: doc.usize_or("index.nlist", d.index.nlist),
                 nprobe: doc.usize_or("index.nprobe", d.index.nprobe),
                 cosine: doc.bool_or("index.cosine", d.index.cosine),
+                scan_threads: doc.usize_or("index.scan_threads", d.index.scan_threads),
             },
             serving: ServingConfig {
                 shards: doc.usize_or("serving.shards", d.serving.shards),
@@ -571,6 +577,7 @@ kind = "ivf"
 nlist = 32
 nprobe = 4
 cosine = true
+scan_threads = 2
 "#;
         let doc = TomlDoc::parse(src).unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
@@ -578,11 +585,13 @@ cosine = true
         assert_eq!(cfg.index.nlist, 32);
         assert_eq!(cfg.index.nprobe, 4);
         assert!(cfg.index.cosine);
+        assert_eq!(cfg.index.scan_threads, 2);
 
-        // Defaults: brute-force, dot product.
+        // Defaults: brute-force, dot product, auto-sized scan team.
         let d = ExperimentConfig::default();
         assert_eq!(d.index.kind, IndexKind::Brute);
         assert!(!d.index.cosine);
+        assert_eq!(d.index.scan_threads, 0, "0 = available parallelism");
 
         assert_eq!(IndexKind::parse("brute-force").unwrap(), IndexKind::Brute);
         assert_eq!(IndexKind::parse("IVF").unwrap(), IndexKind::Ivf);

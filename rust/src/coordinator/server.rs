@@ -397,7 +397,13 @@ mod tests {
         // automatically, while renames/reorders still fail loudly.
         let mut expected = String::from("OK");
         for name in wire::STATS_FIELD_NAMES {
-            let value = if name == "model_generation" { 1.0 } else { 0.0 };
+            // Not every field starts at zero: the generation is 1 after
+            // assemble, and simd_level reports the process's kernel set.
+            let value = match name {
+                "model_generation" => 1.0,
+                "simd_level" => crate::simd::level().code() as f64,
+                _ => 0.0,
+            };
             expected.push(' ');
             expected.push_str(name);
             expected.push('=');

@@ -10,7 +10,10 @@
 //! followed by one streaming full-vocabulary assignment pass; everything is
 //! seeded and deterministic.
 
-use super::{scan_blocked, KnnIndex, KnnResult, Query, QueryStats, Scorer, TopK};
+use super::{
+    effective_scan_threads, scan_blocked, scan_parallel, KnnIndex, KnnResult, Query, QueryStats,
+    Scorer, TopK,
+};
 use crate::tensor::dot;
 use crate::util::Rng;
 
@@ -31,6 +34,10 @@ pub struct IvfIndex {
     centroids: Vec<f32>,
     /// `lists[c]` holds the word ids whose rows quantize to centroid `c`.
     lists: Vec<Vec<u32>>,
+    /// `scan_threads` knob for the re-rank: 0 = auto, 1 = single-threaded
+    /// (the default for directly-constructed indexes), N = at most N
+    /// workers.
+    scan_threads: usize,
 }
 
 #[inline]
@@ -161,7 +168,16 @@ impl IvfIndex {
             }
             lists[nearest_centroid(&centroids, dim, &row)].push(id as u32);
         }
-        IvfIndex { scorer, dim, nprobe, centroids, lists }
+        IvfIndex { scorer, dim, nprobe, centroids, lists, scan_threads: 1 }
+    }
+
+    /// Set the `[index] scan_threads` knob for the exact re-rank: 0 = auto
+    /// (available parallelism), 1 = today's single-threaded pass, N = at
+    /// most N workers. Small probe sets stay single-threaded regardless
+    /// (each worker must be worth at least `MIN_SCAN_SPAN` candidates).
+    pub fn with_scan_threads(mut self, knob: usize) -> IvfIndex {
+        self.scan_threads = knob;
+        self
     }
 
     /// Rebuild an index from serialized parts (snapshot loading), skipping
@@ -201,7 +217,7 @@ impl IvfIndex {
             ));
         }
         let nprobe = nprobe.clamp(1, nlist);
-        Ok(IvfIndex { scorer, dim, nprobe, centroids, lists })
+        Ok(IvfIndex { scorer, dim, nprobe, centroids, lists, scan_threads: 1 })
     }
 
     pub fn nlist(&self) -> usize {
@@ -264,6 +280,36 @@ impl KnnIndex for IvfIndex {
         // factors hoisted per block); dense dots against the
         // already-materialized query vector otherwise.
         let factored_id = matches!(query, Query::Id(_)) && self.scorer.is_factored();
+
+        // Thread-parallel re-rank when the probed candidate set is big
+        // enough: flatten the probed cells' members (same order as the
+        // sequential pass) and chunk them across a scoped scan team. The
+        // exact merge keeps results bit-identical to `scan_threads = 1`.
+        let total_members: usize = probed.iter().map(|cell| self.lists[cell.id].len()).sum();
+        let threads = effective_scan_threads(self.scan_threads, total_members);
+        if threads > 1 {
+            let cands: Vec<usize> = probed
+                .iter()
+                .flat_map(|cell| self.lists[cell.id].iter().map(|&cand| cand as usize))
+                .filter(|&b| Some(b) != exclude)
+                .collect();
+            let (neighbors, scanned) = match (factored_id, exclude) {
+                (true, Some(a)) => scan_parallel(cands.len(), k, threads, |lo, hi, top| {
+                    // Each worker resolves its own factored view; the
+                    // scorer itself is shared read-only.
+                    let pairs = self.scorer.pair_scorer();
+                    scan_blocked(&pairs, a, cands[lo..hi].iter().copied(), top)
+                }),
+                _ => scan_parallel(cands.len(), k, threads, |lo, hi, top| {
+                    for &b in &cands[lo..hi] {
+                        top.push(b, self.scorer.score_vec(q, q_norm, b));
+                    }
+                    hi - lo
+                }),
+            };
+            return (neighbors, QueryStats { candidates: scanned, probes: probed.len() });
+        }
+
         let pairs = self.scorer.pair_scorer();
         let mut top = TopK::new(k);
         let mut scanned = 0usize;
@@ -411,6 +457,32 @@ mod tests {
             lists
         )
         .is_err());
+    }
+
+    /// Tentpole identity: the thread-parallel re-rank returns the same ids
+    /// and score bits as the single-threaded pass (same index, same probes).
+    #[test]
+    fn parallel_rerank_is_bit_identical() {
+        let vocab = 4096;
+        let mut rng = Rng::new(31);
+        let s: Arc<dyn EmbeddingStore> = Arc::new(Word2Ket::random(vocab, 16, 2, 2, &mut rng));
+        // nprobe == nlist: every member re-ranked, so the candidate set is
+        // large enough for 4 workers to actually engage.
+        let ivf = IvfIndex::build(Scorer::new(s.clone(), false), 4, 4, 7);
+        let mut want = Vec::new();
+        for &q in &[0usize, 777, 4095] {
+            want.push(ivf.top_k(&Query::Id(q), 9));
+        }
+        let ivf = ivf.with_scan_threads(4);
+        for (i, &q) in [0usize, 777, 4095].iter().enumerate() {
+            let (got, gs) = ivf.top_k(&Query::Id(q), 9);
+            let (exp, es) = &want[i];
+            assert_eq!(*es, gs, "stats differ for query {q}");
+            assert_eq!(exp.len(), got.len());
+            for (w, g) in exp.iter().zip(&got) {
+                assert_eq!((w.id, w.score.to_bits()), (g.id, g.score.to_bits()), "query {q}");
+            }
+        }
     }
 
     #[test]

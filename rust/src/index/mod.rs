@@ -75,6 +75,72 @@ pub trait KnnIndex: Send + Sync {
 /// stack.
 pub(crate) const SCAN_BLOCK: usize = 128;
 
+/// Minimum candidates each scan worker must have before another thread is
+/// worth spawning; below this, thread startup dwarfs the scoring work.
+pub(crate) const MIN_SCAN_SPAN: usize = 512;
+
+/// Resolve the `[index] scan_threads` knob for a scan over `candidates`
+/// ids: `0` means auto (available parallelism), `1` is the single-threaded
+/// scan, and any request is capped so each worker keeps at least
+/// [`MIN_SCAN_SPAN`] candidates.
+pub(crate) fn effective_scan_threads(knob: usize, candidates: usize) -> usize {
+    let want = if knob == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        knob
+    };
+    want.min(candidates / MIN_SCAN_SPAN).max(1)
+}
+
+/// `SCAN_BLOCK`-aligned contiguous chunks covering `0..total`, at most
+/// `threads` of them. Alignment keeps parallel flush boundaries on the same
+/// block grid a single-threaded sweep uses.
+fn scan_chunks(total: usize, threads: usize) -> Vec<(usize, usize)> {
+    let chunk = total.div_ceil(threads).div_ceil(SCAN_BLOCK).max(1) * SCAN_BLOCK;
+    (0..total).step_by(chunk).map(|lo| (lo, (lo + chunk).min(total))).collect()
+}
+
+/// Run `work` over contiguous chunks of `0..total` on a scoped thread team,
+/// each worker filling its own exact [`TopK`], and merge the partial lists
+/// through [`merge_top_k`]. Because the selection rule is a total order
+/// (descending score, ties by ascending id), the top-k *set* does not
+/// depend on how the candidate space is partitioned — the merged result is
+/// bit-identical to the `threads == 1` scan, which runs inline with no
+/// thread spawned (today's behavior). Returns the merged neighbors plus the
+/// summed per-worker scanned counts.
+fn scan_parallel<F>(total: usize, k: usize, threads: usize, work: F) -> (Vec<Neighbor>, usize)
+where
+    F: Fn(usize, usize, &mut TopK) -> usize + Sync,
+{
+    if threads <= 1 || total == 0 {
+        let mut top = TopK::new(k);
+        let scanned = work(0, total, &mut top);
+        return (top.into_sorted(), scanned);
+    }
+    let chunks = scan_chunks(total, threads);
+    let results: Vec<(Vec<Neighbor>, usize)> = std::thread::scope(|s| {
+        let work = &work;
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|&(lo, hi)| {
+                s.spawn(move || {
+                    let mut top = TopK::new(k);
+                    let scanned = work(lo, hi, &mut top);
+                    (top.into_sorted(), scanned)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("scan worker panicked")).collect()
+    });
+    let mut scanned = 0usize;
+    let mut lists = Vec::with_capacity(results.len());
+    for (list, n) in results {
+        scanned += n;
+        lists.push(list);
+    }
+    (merge_top_k(k, lists), scanned)
+}
+
 /// Feed every id yielded by `candidates` through block-resolved factored
 /// scoring into `top`, returning how many candidates were scored. Shared by
 /// the brute-force sweep and the IVF cell re-rank so both batch the same
@@ -196,11 +262,23 @@ impl TopK {
 /// Exact index: score every word in the vocabulary through the [`Scorer`].
 pub struct BruteForce {
     scorer: Scorer,
+    /// `scan_threads` knob: 0 = auto, 1 = single-threaded (the default for
+    /// directly-constructed indexes), N = at most N scan workers.
+    scan_threads: usize,
 }
 
 impl BruteForce {
     pub fn new(scorer: Scorer) -> BruteForce {
-        BruteForce { scorer }
+        BruteForce { scorer, scan_threads: 1 }
+    }
+
+    /// Set the `[index] scan_threads` knob: 0 = auto (available
+    /// parallelism), 1 = today's single-threaded scan, N = at most N
+    /// workers. Small vocabularies stay single-threaded regardless (each
+    /// worker must be worth at least `MIN_SCAN_SPAN` candidates).
+    pub fn with_scan_threads(mut self, knob: usize) -> BruteForce {
+        self.scan_threads = knob;
+        self
     }
 
     pub fn scorer(&self) -> &Scorer {
@@ -211,38 +289,47 @@ impl BruteForce {
 impl KnnIndex for BruteForce {
     fn top_k(&self, query: &Query, k: usize) -> KnnResult {
         let vocab = self.scorer.vocab_size();
-        let mut top = TopK::new(k);
-        let mut scanned = 0usize;
-        match query {
+        let threads = effective_scan_threads(self.scan_threads, vocab);
+        let (neighbors, scanned) = match query {
             Query::Id(a) if self.scorer.is_factored() => {
-                // Resolve the factored representation once and sweep the
-                // vocabulary in blocks; neither dispatch nor the query
-                // word's factor resolution runs per pair.
-                let pairs = self.scorer.pair_scorer();
-                scanned += scan_blocked(&pairs, *a, (0..vocab).filter(|b| b != a), &mut top);
+                let a = *a;
+                scan_parallel(vocab, k, threads, |lo, hi, top| {
+                    // Resolve the factored representation once per worker
+                    // and sweep its chunk in blocks; neither dispatch nor
+                    // the query word's factor resolution runs per pair.
+                    let pairs = self.scorer.pair_scorer();
+                    scan_blocked(&pairs, a, (lo..hi).filter(|b| *b != a), top)
+                })
             }
             Query::Id(a) => {
                 // Dense fallback: materialize the query row once instead of
-                // on every pair.
-                let q = self.scorer.row(*a);
-                let q_norm = if self.scorer.cosine() { self.scorer.norm(*a) } else { 0.0 };
-                for b in 0..vocab {
-                    if b == *a {
-                        continue;
+                // on every pair; workers share it read-only.
+                let a = *a;
+                let q = self.scorer.row(a);
+                let q_norm = if self.scorer.cosine() { self.scorer.norm(a) } else { 0.0 };
+                scan_parallel(vocab, k, threads, |lo, hi, top| {
+                    let mut scanned = 0usize;
+                    for b in lo..hi {
+                        if b == a {
+                            continue;
+                        }
+                        top.push(b, self.scorer.score_vec(&q, q_norm, b));
+                        scanned += 1;
                     }
-                    top.push(b, self.scorer.score_vec(&q, q_norm, b));
-                    scanned += 1;
-                }
+                    scanned
+                })
             }
             Query::Vector(q) => {
                 let q_norm = if self.scorer.cosine() { dot(q, q).sqrt() } else { 0.0 };
-                for b in 0..vocab {
-                    top.push(b, self.scorer.score_vec(q, q_norm, b));
-                    scanned += 1;
-                }
+                scan_parallel(vocab, k, threads, |lo, hi, top| {
+                    for b in lo..hi {
+                        top.push(b, self.scorer.score_vec(q, q_norm, b));
+                    }
+                    hi - lo
+                })
             }
-        }
-        (top.into_sorted(), QueryStats { candidates: scanned, probes: 0 })
+        };
+        (neighbors, QueryStats { candidates: scanned, probes: 0 })
     }
 
     fn describe(&self) -> String {
@@ -260,8 +347,11 @@ pub fn build_index(
 ) -> Box<dyn KnnIndex> {
     let scorer = Scorer::new(store, cfg.cosine);
     match cfg.kind {
-        IndexKind::Brute => Box::new(BruteForce::new(scorer)),
-        IndexKind::Ivf => Box::new(IvfIndex::build(scorer, cfg.nlist, cfg.nprobe, seed)),
+        IndexKind::Brute => Box::new(BruteForce::new(scorer).with_scan_threads(cfg.scan_threads)),
+        IndexKind::Ivf => Box::new(
+            IvfIndex::build(scorer, cfg.nlist, cfg.nprobe, seed)
+                .with_scan_threads(cfg.scan_threads),
+        ),
     }
 }
 
@@ -408,6 +498,95 @@ mod tests {
 
         // k == 0 is an empty answer.
         assert!(merge_top_k(0, [a]).is_empty());
+    }
+
+    #[test]
+    fn effective_scan_threads_resolves_knob() {
+        // 1 is always exactly one worker; explicit requests are honored
+        // while the candidate count can feed them.
+        assert_eq!(effective_scan_threads(1, 1_000_000), 1);
+        assert_eq!(effective_scan_threads(4, 4 * MIN_SCAN_SPAN), 4);
+        // Small scans never spawn, whatever was asked for.
+        assert_eq!(effective_scan_threads(8, MIN_SCAN_SPAN - 1), 1);
+        assert_eq!(effective_scan_threads(0, 10), 1);
+        // Auto resolves to at least one worker.
+        assert!(effective_scan_threads(0, usize::MAX / 2) >= 1);
+    }
+
+    #[test]
+    fn scan_chunks_align_to_blocks_and_cover() {
+        for (total, threads) in [(4096, 4), (4097, 4), (1000, 3), (129, 2), (128, 2)] {
+            let chunks = scan_chunks(total, threads);
+            assert!(chunks.len() <= threads, "total={total} threads={threads}");
+            let mut expect = 0usize;
+            for &(lo, hi) in &chunks {
+                assert_eq!(lo, expect, "gap at {lo} (total={total} threads={threads})");
+                assert!(hi > lo);
+                assert_eq!(lo % SCAN_BLOCK, 0, "chunk start off the block grid");
+                expect = hi;
+            }
+            assert_eq!(expect, total, "chunks must cover 0..total");
+        }
+    }
+
+    /// Tentpole identity: the thread-parallel blocked scan returns the same
+    /// ids *and the same score bits* as the single-threaded scan, on the
+    /// factored fast path.
+    #[test]
+    fn parallel_factored_scan_is_bit_identical() {
+        let vocab = 4096; // 4 workers × MIN_SCAN_SPAN and change
+        let mut rng = Rng::new(91);
+        let store: Arc<dyn EmbeddingStore> =
+            Arc::new(Word2Ket::random(vocab, 16, 2, 2, &mut rng));
+        let single = BruteForce::new(Scorer::new(store.clone(), false));
+        assert!(single.scorer().is_factored());
+        for &threads in &[2usize, 4] {
+            let parallel =
+                BruteForce::new(Scorer::new(store.clone(), false)).with_scan_threads(threads);
+            for &query in &[0usize, 1234, 4095] {
+                let (want, ws) = single.top_k(&Query::Id(query), 10);
+                let (got, gs) = parallel.top_k(&Query::Id(query), 10);
+                assert_eq!(ws, gs, "stats differ (threads={threads} query={query})");
+                assert_eq!(want.len(), got.len());
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(
+                        (w.id, w.score.to_bits()),
+                        (g.id, g.score.to_bits()),
+                        "threads={threads} query={query}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Same identity on the dense arms, with heavy *exact* score ties:
+    /// every 64th row is identical, so the ascending-id tie rule is what
+    /// decides the result — partitioning must not disturb it.
+    #[test]
+    fn parallel_dense_scan_identical_under_score_ties() {
+        use crate::embedding::RegularEmbedding;
+        let (vocab, dim) = (3072usize, 8usize);
+        let mut rng = Rng::new(92);
+        let base: Vec<Vec<f32>> =
+            (0..64).map(|_| (0..dim).map(|_| rng.uniform(-0.5, 0.5)).collect()).collect();
+        let mut rows = Vec::with_capacity(vocab * dim);
+        for id in 0..vocab {
+            rows.extend_from_slice(&base[id % 64]);
+        }
+        let store: Arc<dyn EmbeddingStore> = Arc::new(RegularEmbedding::new(vocab, dim, rows));
+        let single = BruteForce::new(Scorer::new(store.clone(), false));
+        let parallel = BruteForce::new(Scorer::new(store.clone(), false)).with_scan_threads(4);
+        let probe: Vec<f32> = base[7].clone();
+        for query in [Query::Id(7), Query::Id(2048), Query::Vector(probe)] {
+            // k = 130 straddles many tie groups (each distinct row repeats
+            // 48 times with exactly equal scores).
+            let (want, _) = single.top_k(&query, 130);
+            let (got, _) = parallel.top_k(&query, 130);
+            assert_eq!(want.len(), got.len());
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!((w.id, w.score.to_bits()), (g.id, g.score.to_bits()), "{query:?}");
+            }
+        }
     }
 
     /// Satellite property: scatter-gather over range-sharded slices of a

@@ -49,6 +49,7 @@ pub mod obs;
 pub mod repr;
 pub mod runtime;
 pub mod serving;
+pub mod simd;
 pub mod snapshot;
 pub mod tensor;
 pub mod testing;

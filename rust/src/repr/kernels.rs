@@ -7,9 +7,13 @@
 //! dot product, the axpy accumulate, the truncating Kronecker
 //! row-accumulate, and the `Π_j ⟨·,·⟩` factor-product behind every
 //! factored inner product (paper §2.3). Every caller routes through these
-//! so a future SIMD/kernel swap happens in exactly one place — and so the
-//! concrete stores and the snapshot-mapped store stay *bit-identical* by
-//! construction instead of by parallel maintenance.
+//! — and since the SIMD swap that centralization was for has now landed,
+//! the four slice primitives (`dot`, `axpy`, `add_assign`,
+//! `kron2_accumulate`) delegate to the runtime-dispatched kernels in
+//! [`crate::simd`] (scalar / SSE2 / AVX2, selected per CPU at startup,
+//! bit-identical across levels by contract). The concrete stores and the
+//! snapshot-mapped store stay *bit-identical* by construction instead of
+//! by parallel maintenance.
 //!
 //! Also hosts the per-thread reconstruction scratch
 //! ([`with_lookup_scratch`]) that makes the trait-level
@@ -19,72 +23,53 @@
 use crate::kron::KronScratch;
 use std::cell::RefCell;
 
-/// Unrolled dot product of two equal-length slices.
+/// Dot product of two equal-length slices.
 ///
-/// 4-way unrolled accumulation: measurably faster than a naive fold and
-/// deterministic (fixed association order). This is the primitive under
-/// every factored inner product and every dense re-rank;
-/// [`crate::tensor::dot`] delegates here.
+/// Delegates to [`crate::simd::dot`]: a pinned 8-lane association order
+/// (identical bits at every dispatch level — scalar, SSE2, AVX2). This is
+/// the primitive under every factored inner product and every dense
+/// re-rank; [`crate::tensor::dot`] delegates here.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let k = i * 4;
-        acc[0] += a[k] * b[k];
-        acc[1] += a[k + 1] * b[k + 1];
-        acc[2] += a[k + 2] * b[k + 2];
-        acc[3] += a[k + 3] * b[k + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for k in chunks * 4..a.len() {
-        s += a[k] * b[k];
-    }
-    s
+    crate::simd::dot(a, b)
 }
 
 /// `y += alpha · x` over the zip of the two slices (stops at the shorter).
+/// Runtime-dispatched via [`crate::simd::axpy`]; elementwise, so every
+/// dispatch level produces identical bits.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    for (o, &v) in y.iter_mut().zip(x) {
-        *o += alpha * v;
-    }
+    crate::simd::axpy(alpha, x, y)
 }
 
 /// `acc += src` elementwise over the zip (stops at the shorter slice —
 /// word2ket reconstructions accumulate a `q^n`-long term into a `p`-long
-/// truncated row through exactly this).
+/// truncated row through exactly this). Runtime-dispatched via
+/// [`crate::simd::add_assign`].
 #[inline]
 pub fn add_assign(acc: &mut [f32], src: &[f32]) {
-    for (o, &v) in acc.iter_mut().zip(src) {
-        *o += v;
-    }
+    crate::simd::add_assign(acc, src)
 }
 
 /// Truncating Kronecker accumulate of two vectors:
-/// `acc[i·q .. (i+1)·q] += a[i] · b` for every block that fits in `acc`
-/// (`q = |b|`; the last block may be partial — word2ketXS truncates
-/// `q^n ≥ p` reconstructions to `p`).
+/// `acc[i·q .. (i+1)·q] += a[i] · b` for every block that fits in both `a`
+/// and `acc` (`q = |b|`; the last block may be partial — word2ketXS
+/// truncates `q^n ≥ p` reconstructions to `p`).
 ///
-/// Zero entries of `a` skip their block entirely — same arithmetic as the
-/// dense loop (the skipped block would add `0 · b[j]` everywhere), fewer
-/// memory touches on sparse-ish factors.
+/// Runtime-dispatched via [`crate::simd::kron2_accumulate`]. Two semantic
+/// notes versus the original scalar loop:
+///
+/// * **Hardened block count.** The loop is clamped to `a.len()` blocks, so
+///   an `acc` longer than `a.len() · q` — a hostile or short factor from a
+///   snapshot-loaded geometry — leaves the uncovered suffix untouched
+///   instead of panicking a worker on an out-of-bounds `a[i]`.
+/// * **Dense.** Zero entries of `a` no longer skip their block: a vector
+///   kernel can't cheaply skip, and skipping changes bits in `-0.0`/`NaN`
+///   corners, which would break the cross-level parity contract.
 #[inline]
 pub fn kron2_accumulate(a: &[f32], b: &[f32], acc: &mut [f32]) {
-    let q = b.len();
-    if q == 0 {
-        return;
-    }
-    let mut i = 0;
-    while i * q < acc.len() {
-        let x = a[i];
-        if x != 0.0 {
-            let end = ((i + 1) * q).min(acc.len());
-            axpy(x, b, &mut acc[i * q..end]);
-        }
-        i += 1;
-    }
+    crate::simd::kron2_accumulate(a, b, acc)
 }
 
 /// `Π_j ⟨x_j, y_j⟩` over a stream of slice pairs, with the early-out on a
@@ -231,6 +216,18 @@ mod tests {
         assert_eq!(short, [2.0, 6.0, 0.0, 0.0, -1.0]);
         // Empty b: nothing to do (and no infinite loop).
         kron2_accumulate(&a, &[], &mut acc);
+    }
+
+    #[test]
+    fn kron2_tolerates_acc_longer_than_outer_product() {
+        // Regression: `acc.len() > a.len() * b.len()` used to walk off the
+        // end of `a` (snapshot-loaded geometry could panic a worker). The
+        // covered prefix accumulates; the suffix is left untouched.
+        let a = [2.0f32, -1.0];
+        let b = [1.0f32, 3.0];
+        let mut acc = [7.0f32; 7];
+        kron2_accumulate(&a, &b, &mut acc);
+        assert_eq!(acc, [9.0, 13.0, 6.0, 4.0, 7.0, 7.0, 7.0]);
     }
 
     #[test]

@@ -125,6 +125,11 @@ pub struct ServingStats {
     /// Transient accept(2) failures the listener survived (EMFILE /
     /// ECONNABORTED backoff-and-retry events).
     pub accept_errors: u64,
+    /// SIMD dispatch level of the serving kernels
+    /// ([`crate::simd::SimdLevel::code`]: 0 = scalar, 1 = sse2,
+    /// 2 = avx2+fma). Constant per process; on the wire so operators can
+    /// see which kernel set a replica runs without shell access.
+    pub simd_level: u64,
 }
 
 impl ServingStats {
@@ -146,6 +151,7 @@ impl ServingStats {
             self.model_generation as f64,
             self.snapshot_bytes as f64,
             self.accept_errors as f64,
+            self.simd_level as f64,
         ]
     }
 }
@@ -300,7 +306,9 @@ impl ServingState {
                 if p.cosine == index_cfg.cosine {
                     let scorer = Scorer::new(index_store.clone(), index_cfg.cosine);
                     match IvfIndex::from_parts(scorer, index_cfg.nprobe, p.centroids, p.lists) {
-                        Ok(ivf) => index = Some(Arc::new(ivf)),
+                        Ok(ivf) => {
+                            index = Some(Arc::new(ivf.with_scan_threads(index_cfg.scan_threads)))
+                        }
                         Err(e) => crate::warn!("snapshot index rejected ({e}); retraining"),
                     }
                 } else {
@@ -634,6 +642,7 @@ impl ServingState {
             model_generation: self.generation(),
             snapshot_bytes: m.snapshot_bytes,
             accept_errors: self.accept_errors.load(Ordering::Relaxed),
+            simd_level: crate::simd::level().code() as u64,
         }
     }
 
@@ -669,6 +678,10 @@ impl ServingState {
         let _ = writeln!(out, "w2k_model_generation {}", s.model_generation);
         let _ = writeln!(out, "w2k_snapshot_bytes {}", s.snapshot_bytes);
         let _ = writeln!(out, "w2k_accept_errors_total {}", s.accept_errors);
+        // Info-style gauge: the label names the kernel set, the value is
+        // its numeric code (0 = scalar, 1 = sse2, 2 = avx2+fma).
+        let simd = crate::simd::level();
+        let _ = writeln!(out, "w2k_simd_level{{level=\"{}\"}} {}", simd.name(), simd.code());
         self.obs.render_into(&mut out);
         out.push_str("# EOF\n");
         out
@@ -802,6 +815,7 @@ mod tests {
             nlist: 8,
             nprobe: 3,
             cosine: false,
+            scan_threads: 1,
         });
         let before = st.stats();
         assert_eq!(before.knn_queries, 0);
@@ -837,7 +851,60 @@ mod tests {
         assert_eq!(s.model_generation, 1);
         assert_eq!(s.snapshot_bytes, 0);
         assert_eq!(s.accept_errors, 0);
+        // Not a traffic counter: reports the process's kernel set.
+        assert_eq!(s.simd_level, crate::simd::level().code() as u64);
         st.shutdown();
+    }
+
+    /// Acceptance: what goes on the wire — reconstructed rows and KNN
+    /// results — is byte-identical across SIMD dispatch levels and across
+    /// `scan_threads` settings. Each run builds its own server (separate
+    /// caches), so every value is recomputed under the forced kernel set.
+    #[test]
+    fn wire_responses_identical_across_simd_levels_and_scan_threads() {
+        use crate::simd::{self, SimdLevel};
+
+        type Harvest = (Vec<Vec<u32>>, Vec<Vec<(usize, u32)>>);
+        fn harvest(scan_threads: usize) -> Harvest {
+            let mut rng = Rng::new(4242);
+            let store = Word2KetXS::random(2560, 16, 2, 2, &mut rng);
+            let icfg = IndexConfig {
+                kind: IndexKind::Brute,
+                nlist: 64,
+                nprobe: 8,
+                cosine: false,
+                scan_threads,
+            };
+            let st = ServingState::new(
+                Box::new(store),
+                &ServingConfig { batch_window_us: 50, ..Default::default() },
+                &icfg,
+            );
+            let rows: Vec<Vec<u32>> = st
+                .lookup_rows(vec![0, 1, 7, 1000, 2559])
+                .unwrap()
+                .into_iter()
+                .map(|r| r.into_iter().map(f32::to_bits).collect())
+                .collect();
+            let knn: Vec<Vec<(usize, u32)>> = [0usize, 1234, 2555]
+                .iter()
+                .map(|&q| {
+                    st.knn(Query::Id(q), 7)
+                        .unwrap()
+                        .into_iter()
+                        .map(|n| (n.id, n.score.to_bits()))
+                        .collect()
+                })
+                .collect();
+            st.shutdown();
+            (rows, knn)
+        }
+
+        let scalar = simd::with_level(SimdLevel::Scalar, || harvest(1));
+        let auto = simd::with_level(simd::detect(), || harvest(1));
+        assert_eq!(scalar, auto, "scalar vs detected kernel set must match bitwise");
+        let threaded = simd::with_level(simd::detect(), || harvest(4));
+        assert_eq!(auto, threaded, "scan_threads 1 vs 4 must match bitwise");
     }
 
     #[test]
@@ -902,7 +969,13 @@ mod tests {
         // identically to the original index (same centroids, same lists).
         let mut rng = Rng::new(7);
         let store = Word2KetXS::random(300, 16, 2, 2, &mut rng);
-        let icfg = IndexConfig { kind: IndexKind::Ivf, nlist: 8, nprobe: 3, cosine: false };
+        let icfg = IndexConfig {
+            kind: IndexKind::Ivf,
+            nlist: 8,
+            nprobe: 3,
+            cosine: false,
+            scan_threads: 1,
+        };
         let st = ServingState::new(
             Box::new(store.clone()),
             &ServingConfig { batch_window_us: 50, ..Default::default() },

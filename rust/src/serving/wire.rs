@@ -44,7 +44,7 @@
 //! response:      u32 status, u32 count, payload
 //!   LOOKUP ok    count = #ids,  payload = count × dim × f32 rows
 //!   DOT ok       count = 1,     payload = 1 × f32
-//!   STATS ok     count = 12,    payload = 12 × f64 in
+//!   STATS ok     count = 13,    payload = 13 × f64 in
 //!                [`STATS_FIELD_NAMES`] order
 //!   METRICS ok   count = payload byte length, payload = UTF-8 exposition
 //!                text (Prometheus-style lines, `# EOF` terminated)
@@ -112,7 +112,7 @@ pub const MAX_IDS: u32 = 1 << 16;
 pub const MAX_PATH_BYTES: u32 = 4096;
 
 /// Number of f64 values in a STATS response payload.
-pub const STATS_FIELDS: usize = 12;
+pub const STATS_FIELDS: usize = 13;
 
 /// The one canonical STATS field list. The binary payload is these values
 /// in this order; the text `STATS` line is `name=value` pairs in this order
@@ -137,6 +137,11 @@ pub const STATS_FIELD_NAMES: [&str; STATS_FIELDS] = [
     // Appended last so binary decoders built against the 11-field layout
     // still parse newer servers (trailing fields are ignored).
     "accept_errors",
+    // SIMD dispatch level of the serving kernels (0 = scalar, 1 = sse2,
+    // 2 = avx2+fma); the cluster roll-up reports the minimum across
+    // replicas. Appended after accept_errors for the same trailing-field
+    // back-compat reason.
+    "simd_level",
 ];
 
 /// Text-protocol rendering of one STATS field: microsecond percentiles as
@@ -679,6 +684,11 @@ pub struct WireStats {
     /// Transient accept(2) failures survived by the listener (EMFILE /
     /// ECONNABORTED backoff-and-retry events).
     pub accept_errors: u64,
+    /// SIMD dispatch level of the serving kernels
+    /// ([`crate::simd::SimdLevel::code`]: 0 = scalar, 1 = sse2,
+    /// 2 = avx2+fma). The cluster roll-up reports the minimum across
+    /// replicas.
+    pub simd_level: u64,
 }
 
 impl WireStats {
@@ -698,6 +708,7 @@ impl WireStats {
             model_generation: xs[9] as u64,
             snapshot_bytes: xs[10] as u64,
             accept_errors: xs[11] as u64,
+            simd_level: xs[12] as u64,
         }
     }
 
@@ -717,6 +728,7 @@ impl WireStats {
             self.model_generation as f64,
             self.snapshot_bytes as f64,
             self.accept_errors as f64,
+            self.simd_level as f64,
         ]
     }
 }
@@ -1230,6 +1242,7 @@ mod tests {
             model_generation: 3,
             snapshot_bytes: 4096,
             accept_errors: 5,
+            simd_level: 2,
         };
         assert_eq!(WireStats::from_fields(&s.fields()), s);
         assert_eq!(STATS_FIELD_NAMES.len(), s.fields().len());

@@ -1,0 +1,599 @@
+//! Runtime-dispatched SIMD kernels for the factored hot paths.
+//!
+//! Every arithmetic-dense routine in the serving stack (row reconstruction
+//! in `repr/kernels.rs`, the §2.3 factored inner product, BruteForce/IVF
+//! scans) funnels through four primitives: [`dot`], [`axpy`], [`add_assign`]
+//! and [`kron2_accumulate`]. This module provides scalar, SSE2 and AVX2
+//! implementations of each, selected once per process by runtime CPU-feature
+//! detection (`is_x86_feature_detected!`) and overridable via the `W2K_SIMD`
+//! environment variable (`scalar` | `sse2` | `avx2` | `auto`; requests above
+//! what the CPU supports are clamped down).
+//!
+//! # Bit-parity contract
+//!
+//! All levels produce **bit-identical** results for identical inputs, so a
+//! server's wire surface does not depend on the CPU it happens to run on —
+//! the same goldens-prove-it contract the interpreter-vs-AOT snippets pin,
+//! applied to kernels. Two rules make this hold:
+//!
+//! * **Pinned association order.** `dot` accumulates in a fixed 8-lane shape
+//!   at every level: lane `l` holds the sequential sum of `a[c*8+l] *
+//!   b[c*8+l]` over full 8-element chunks, the lanes reduce as `m[j] =
+//!   lane[j] + lane[j+4]` followed by `(m[0] + m[2]) + (m[1] + m[3])`, and
+//!   the tail (`len % 8` elements) is added sequentially onto that sum. This
+//!   is exactly the order a single 8-wide AVX2 accumulator (or an SSE2 lo/hi
+//!   accumulator pair) reduces in, and the scalar fallback replays it lane
+//!   by lane. `axpy`, `add_assign` and `kron2_accumulate` are elementwise
+//!   (each output cell is one `mul` + `add` of the same operands at every
+//!   level), so any vector width produces the same bits by construction.
+//! * **No FMA in parity-bound arithmetic.** A fused multiply-add rounds once
+//!   where `mul` + `add` round twice, so fusing would change bits between
+//!   levels. The top level is still *gated* on `avx2 && fma` (and named
+//!   `avx2+fma`) so future non-parity-bound kernels — e.g. quantized-domain
+//!   scoring — may assume FMA is present, but the four primitives here use
+//!   explicit mul/add intrinsics, which the compiler never contracts.
+//!
+//! A consequence worth documenting: `kron2_accumulate` is *dense*. The old
+//! scalar kernel skipped zero coefficients as a throughput trick; a vector
+//! kernel cannot cheaply do the same, and skipping changes bits in `-0.0`
+//! and `NaN` corners (`acc + 0.0 * b` is not always `acc`). Dense semantics
+//! keep every level identical.
+//!
+//! Goldens plus randomized property tests (lengths 0..64 and large lengths
+//! with tail remainders 1–7) enforce the contract in `cargo test`, and a
+//! forced `W2K_SIMD=scalar` CI leg keeps the portable fallback from rotting.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// A kernel set, ordered weakest-to-strongest so requested levels can be
+/// clamped to what the CPU supports with `min`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SimdLevel {
+    /// Portable scalar fallback (any architecture).
+    Scalar = 0,
+    /// 128-bit SSE2 kernels (x86_64 baseline, always available there).
+    Sse2 = 1,
+    /// 256-bit AVX2 kernels; the level is gated on `avx2 && fma` even
+    /// though the parity-bound kernels use explicit mul/add (see module
+    /// docs for why FMA itself is excluded).
+    Avx2Fma = 2,
+}
+
+impl SimdLevel {
+    /// Human-readable kernel-set name (used in logs, METRICS and README).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2Fma => "avx2+fma",
+        }
+    }
+
+    /// Numeric code carried by the STATS `simd_level` field
+    /// (0 = scalar, 1 = sse2, 2 = avx2+fma).
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    fn from_code(v: u8) -> SimdLevel {
+        match v {
+            2 => SimdLevel::Avx2Fma,
+            1 => SimdLevel::Sse2,
+            _ => SimdLevel::Scalar,
+        }
+    }
+}
+
+/// Strongest kernel set this CPU can run (ignores the `W2K_SIMD` override).
+#[cfg(target_arch = "x86_64")]
+pub fn detect() -> SimdLevel {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        SimdLevel::Avx2Fma
+    } else {
+        // SSE2 is part of the x86_64 ABI baseline.
+        SimdLevel::Sse2
+    }
+}
+
+/// Strongest kernel set this CPU can run (ignores the `W2K_SIMD` override).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn detect() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// Every level this CPU can execute, weakest first. Parity tests iterate
+/// this so they exercise exactly the sets that can run here.
+pub fn available_levels() -> Vec<SimdLevel> {
+    let top = detect();
+    [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2Fma]
+        .into_iter()
+        .filter(|&l| l <= top)
+        .collect()
+}
+
+/// Parse a `W2K_SIMD` value. `None` means "auto": use [`detect`].
+pub fn parse_level(s: &str) -> Option<SimdLevel> {
+    match s.to_ascii_lowercase().as_str() {
+        "scalar" => Some(SimdLevel::Scalar),
+        "sse2" => Some(SimdLevel::Sse2),
+        "avx2" | "avx2+fma" | "avx2fma" => Some(SimdLevel::Avx2Fma),
+        _ => None,
+    }
+}
+
+const LEVEL_UNSET: u8 = u8::MAX;
+
+/// Cached active level; `LEVEL_UNSET` until the first [`level`] call.
+static ACTIVE: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+/// Serializes [`with_level`] callers (benches, byte-identity tests) so a
+/// temporary override cannot be clobbered by a concurrent one. Regular
+/// readers never touch this lock — and because of the bit-parity contract,
+/// reading a temporarily overridden level is harmless anyway.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+/// The active kernel set for this process. Resolved once on first use:
+/// `W2K_SIMD` if set to a recognized name (clamped to [`detect`]),
+/// otherwise whatever the CPU supports.
+pub fn level() -> SimdLevel {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v != LEVEL_UNSET {
+        return SimdLevel::from_code(v);
+    }
+    let l = std::env::var("W2K_SIMD")
+        .ok()
+        .and_then(|s| parse_level(&s))
+        .unwrap_or_else(detect)
+        .min(detect());
+    ACTIVE.store(l.code(), Ordering::Relaxed);
+    l
+}
+
+/// Force the active kernel set for this process, clamped to what the CPU
+/// supports; returns the level actually installed. Intended for benches and
+/// parity tests — servers pick once at startup via [`level`]. Prefer
+/// [`with_level`], which restores the previous level when done.
+pub fn set_level(l: SimdLevel) -> SimdLevel {
+    let l = l.min(detect());
+    ACTIVE.store(l.code(), Ordering::Relaxed);
+    l
+}
+
+/// Run `f` with the active level forced to `l` (clamped to the CPU), then
+/// restore the previous level — including on panic. Callers are serialized
+/// on a process-wide lock so overrides never interleave.
+pub fn with_level<R>(l: SimdLevel, f: impl FnOnce() -> R) -> R {
+    struct Restore(SimdLevel);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_level(self.0);
+        }
+    }
+    let _serial = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = Restore(level());
+    set_level(l);
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched kernels.
+//
+// Each public kernel has a `*_at` twin taking an explicit level (clamped to
+// the CPU, so it is always safe to call); the plain form reads the cached
+// process level. Slices shorter than one vector chunk take an inlined
+// sequential path that is bit-identical to every level's tail handling —
+// this keeps tiny leaf dots (order-4 geometries have length-4 leaves) from
+// paying an atomic load plus an uninlinable `#[target_feature]` call.
+// ---------------------------------------------------------------------------
+
+/// Inner product in the pinned 8-lane association order (see module docs).
+/// Pairs beyond the shorter slice are ignored.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    if n < 8 {
+        // All-tail: every level computes the same sequential sum from +0.0.
+        let mut s = 0.0f32;
+        for (&x, &y) in a[..n].iter().zip(&b[..n]) {
+            s += x * y;
+        }
+        return s;
+    }
+    dot_dispatch(level(), a, b)
+}
+
+/// [`dot`] at an explicit level (clamped to what the CPU supports).
+#[inline]
+pub fn dot_at(l: SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    dot_dispatch(l.min(detect()), a, b)
+}
+
+/// `y[i] += alpha * x[i]` over the shorter of the two slices.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    if x.len().min(y.len()) < 8 {
+        scalar::axpy(alpha, x, y);
+        return;
+    }
+    axpy_dispatch(level(), alpha, x, y)
+}
+
+/// [`axpy`] at an explicit level (clamped to what the CPU supports).
+#[inline]
+pub fn axpy_at(l: SimdLevel, alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_dispatch(l.min(detect()), alpha, x, y)
+}
+
+/// `acc[i] += src[i]` over the shorter of the two slices.
+#[inline]
+pub fn add_assign(acc: &mut [f32], src: &[f32]) {
+    if acc.len().min(src.len()) < 8 {
+        scalar::add_assign(acc, src);
+        return;
+    }
+    add_assign_dispatch(level(), acc, src)
+}
+
+/// [`add_assign`] at an explicit level (clamped to what the CPU supports).
+#[inline]
+pub fn add_assign_at(l: SimdLevel, acc: &mut [f32], src: &[f32]) {
+    add_assign_dispatch(l.min(detect()), acc, src)
+}
+
+/// Dense blocked outer-product accumulation: treats `acc` as consecutive
+/// blocks of `b.len()` and adds `a[i] * b` into block `i`.
+///
+/// Hardened against geometry mismatches from untrusted (snapshot-loaded)
+/// factors: the block count is clamped to `a.len()`, so an `acc` longer
+/// than `a.len() * b.len()` leaves its uncovered suffix untouched instead
+/// of panicking, and a short `acc` truncates the final block.
+#[inline]
+pub fn kron2_accumulate(a: &[f32], b: &[f32], acc: &mut [f32]) {
+    kron2_dispatch(level(), a, b, acc)
+}
+
+/// [`kron2_accumulate`] at an explicit level (clamped to the CPU).
+#[inline]
+pub fn kron2_accumulate_at(l: SimdLevel, a: &[f32], b: &[f32], acc: &mut [f32]) {
+    kron2_dispatch(l.min(detect()), a, b, acc)
+}
+
+// The dispatchers require `l <= detect()`: both call sites above guarantee
+// it (the cached level is stored clamped; `*_at` clamps explicitly), which
+// is what makes the `unsafe` target-feature calls sound.
+
+#[inline]
+fn dot_dispatch(l: SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    match l {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `l <= detect()`, so the required CPU features are present.
+        SimdLevel::Sse2 => unsafe { x86::dot_sse2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        SimdLevel::Avx2Fma => unsafe { x86::dot_avx2(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+#[inline]
+fn axpy_dispatch(l: SimdLevel, alpha: f32, x: &[f32], y: &mut [f32]) {
+    match l {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `l <= detect()`, so the required CPU features are present.
+        SimdLevel::Sse2 => unsafe { x86::axpy_sse2(alpha, x, y) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        SimdLevel::Avx2Fma => unsafe { x86::axpy_avx2(alpha, x, y) },
+        _ => scalar::axpy(alpha, x, y),
+    }
+}
+
+#[inline]
+fn add_assign_dispatch(l: SimdLevel, acc: &mut [f32], src: &[f32]) {
+    match l {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `l <= detect()`, so the required CPU features are present.
+        SimdLevel::Sse2 => unsafe { x86::add_assign_sse2(acc, src) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        SimdLevel::Avx2Fma => unsafe { x86::add_assign_avx2(acc, src) },
+        _ => scalar::add_assign(acc, src),
+    }
+}
+
+#[inline]
+fn kron2_dispatch(l: SimdLevel, a: &[f32], b: &[f32], acc: &mut [f32]) {
+    match l {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `l <= detect()`, so the required CPU features are present.
+        SimdLevel::Sse2 => unsafe { x86::kron2_sse2(a, b, acc) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        SimdLevel::Avx2Fma => unsafe { x86::kron2_avx2(a, b, acc) },
+        _ => scalar::kron2_accumulate(a, b, acc),
+    }
+}
+
+/// Portable reference kernels. These *define* the canonical bits; the
+/// vector implementations must match them exactly (proved by the parity
+/// tests below).
+mod scalar {
+    /// Canonical dot: 8 sequential lanes, the pinned two-stage reduction,
+    /// then a sequential tail (see module docs for the exact order).
+    pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut lanes = [0.0f32; 8];
+        let ca = a[..n].chunks_exact(8);
+        let cb = b[..n].chunks_exact(8);
+        let (ta, tb) = (ca.remainder(), cb.remainder());
+        for (xs, ys) in ca.zip(cb) {
+            for ((lane, &x), &y) in lanes.iter_mut().zip(xs).zip(ys) {
+                *lane += x * y;
+            }
+        }
+        let m = [
+            lanes[0] + lanes[4],
+            lanes[1] + lanes[5],
+            lanes[2] + lanes[6],
+            lanes[3] + lanes[7],
+        ];
+        let mut s = (m[0] + m[2]) + (m[1] + m[3]);
+        for (&x, &y) in ta.iter().zip(tb) {
+            s += x * y;
+        }
+        s
+    }
+
+    pub(super) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        for (o, &v) in y.iter_mut().zip(x) {
+            *o += alpha * v;
+        }
+    }
+
+    pub(super) fn add_assign(acc: &mut [f32], src: &[f32]) {
+        for (o, &v) in acc.iter_mut().zip(src) {
+            *o += v;
+        }
+    }
+
+    /// Canonical dense kron2: block count clamped to `a.len()`, final block
+    /// truncated to `acc`, no zero skipping (see module docs).
+    pub(super) fn kron2_accumulate(a: &[f32], b: &[f32], acc: &mut [f32]) {
+        let q = b.len();
+        if q == 0 {
+            return;
+        }
+        let blocks = a.len().min(acc.len().div_ceil(q));
+        for (i, &x) in a[..blocks].iter().enumerate() {
+            let end = ((i + 1) * q).min(acc.len());
+            axpy(x, b, &mut acc[i * q..end]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny deterministic generator; magnitudes vary across ~2^16 so sums
+    /// actually round and association order is observable.
+    struct Rng(u64);
+
+    impl Rng {
+        fn next_f32(&mut self) -> f32 {
+            self.0 ^= self.0 << 13;
+            self.0 ^= self.0 >> 7;
+            self.0 ^= self.0 << 17;
+            let unit = (self.0 >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+            let scale = match self.0 & 3 {
+                0 => 1.0e-3,
+                1 => 1.0,
+                2 => 64.0,
+                _ => 4096.0,
+            };
+            unit * scale
+        }
+
+        fn vec(&mut self, n: usize) -> Vec<f32> {
+            (0..n).map(|_| self.next_f32()).collect()
+        }
+    }
+
+    /// The documented association order, written out naively. This is the
+    /// golden: every level must reproduce these bits exactly.
+    fn pinned_order_dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let mut lanes = [0.0f32; 8];
+        for c in 0..chunks {
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                *lane += a[c * 8 + l] * b[c * 8 + l];
+            }
+        }
+        let m: Vec<f32> = (0..4).map(|j| lanes[j] + lanes[j + 4]).collect();
+        let mut s = (m[0] + m[2]) + (m[1] + m[3]);
+        for k in chunks * 8..n {
+            s += a[k] * b[k];
+        }
+        s
+    }
+
+    fn test_lengths() -> Vec<usize> {
+        // 0..64 catches every lane/tail combination at least eight times;
+        // the large ones catch unaligned tails (remainders 1..=7) after
+        // many full chunks.
+        let mut lens: Vec<usize> = (0..=64).collect();
+        lens.extend([1021, 1024, 1031, 2051, 4093, 8199]);
+        lens
+    }
+
+    #[test]
+    fn dot_matches_pinned_association_golden() {
+        let mut rng = Rng(0x5eed_0001);
+        for n in test_lengths() {
+            let a = rng.vec(n);
+            let b = rng.vec(n);
+            let want = pinned_order_dot(&a, &b);
+            for l in available_levels() {
+                let got = dot_at(l, &a, &b);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "dot level={:?} n={} got={} want={}",
+                    l,
+                    n,
+                    got,
+                    want
+                );
+            }
+            // The cached-level entry point must agree too.
+            assert_eq!(dot(&a, &b).to_bits(), want.to_bits(), "dot() n={}", n);
+        }
+    }
+
+    #[test]
+    fn axpy_and_add_assign_parity_across_levels() {
+        let mut rng = Rng(0x5eed_0002);
+        for n in test_lengths() {
+            let x = rng.vec(n);
+            let base = rng.vec(n);
+            let alpha = rng.next_f32();
+
+            let mut want_axpy = base.clone();
+            axpy_at(SimdLevel::Scalar, alpha, &x, &mut want_axpy);
+            let mut want_add = base.clone();
+            add_assign_at(SimdLevel::Scalar, &mut want_add, &x);
+
+            for l in available_levels() {
+                let mut got = base.clone();
+                axpy_at(l, alpha, &x, &mut got);
+                for (i, (g, w)) in got.iter().zip(&want_axpy).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "axpy level={:?} n={} i={}", l, n, i);
+                }
+                let mut got = base.clone();
+                add_assign_at(l, &mut got, &x);
+                for (i, (g, w)) in got.iter().zip(&want_add).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "add level={:?} n={} i={}", l, n, i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kron2_parity_across_levels_and_geometries() {
+        let mut rng = Rng(0x5eed_0003);
+        // (p, q, acc_len): exact fits, truncated finals, oversized accs
+        // (the hardening clamp), the q == 4 fast path with even and odd
+        // block counts, and degenerate shapes.
+        let cases = [
+            (0, 4, 8),
+            (3, 0, 9),
+            (1, 1, 1),
+            (2, 3, 6),
+            (2, 3, 5),
+            (2, 3, 10),
+            (7, 4, 28),
+            (8, 4, 32),
+            (8, 4, 30),
+            (5, 4, 40),
+            (3, 16, 48),
+            (3, 16, 41),
+            (4, 19, 76),
+            (2, 257, 514),
+        ];
+        for &(p, q, acc_len) in &cases {
+            let a = rng.vec(p);
+            let b = rng.vec(q);
+            let base = rng.vec(acc_len);
+
+            let mut want = base.clone();
+            kron2_accumulate_at(SimdLevel::Scalar, &a, &b, &mut want);
+            for l in available_levels() {
+                let mut got = base.clone();
+                kron2_accumulate_at(l, &a, &b, &mut got);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "kron2 level={:?} p={} q={} acc={} i={}",
+                        l,
+                        p,
+                        q,
+                        acc_len,
+                        i
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kron2_clamps_instead_of_panicking_on_short_factor() {
+        // Regression: acc longer than a.len() * b.len() used to index `a`
+        // out of bounds. The covered prefix accumulates; the rest is
+        // untouched.
+        let a = [2.0f32, 3.0];
+        let b = [1.0f32, 10.0, 100.0];
+        for l in available_levels() {
+            let mut acc = vec![0.5f32; 10];
+            kron2_accumulate_at(l, &a, &b, &mut acc);
+            assert_eq!(
+                &acc[..6],
+                &[2.5, 20.5, 200.5, 3.5, 30.5, 300.5],
+                "level={:?}",
+                l
+            );
+            assert!(acc[6..].iter().all(|&v| v == 0.5), "level={:?}", l);
+        }
+    }
+
+    #[test]
+    fn kron2_is_dense_in_signed_zero_corners() {
+        // 0.0 * b must still be *added* (a zero-skip would leave -0.0 in
+        // place; adding +0.0 * 1.0 flips it to +0.0).
+        for l in available_levels() {
+            let mut acc = [-0.0f32; 2];
+            kron2_accumulate_at(l, &[0.0], &[1.0, 1.0], &mut acc);
+            assert_eq!(acc[0].to_bits(), 0.0f32.to_bits(), "level={:?}", l);
+            assert_eq!(acc[1].to_bits(), 0.0f32.to_bits(), "level={:?}", l);
+        }
+    }
+
+    #[test]
+    fn parse_level_names() {
+        assert_eq!(parse_level("scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(parse_level("SSE2"), Some(SimdLevel::Sse2));
+        assert_eq!(parse_level("avx2"), Some(SimdLevel::Avx2Fma));
+        assert_eq!(parse_level("avx2+fma"), Some(SimdLevel::Avx2Fma));
+        assert_eq!(parse_level("auto"), None);
+        assert_eq!(parse_level(""), None);
+        assert_eq!(parse_level("neon"), None);
+    }
+
+    #[test]
+    fn with_level_forces_and_clamps() {
+        with_level(SimdLevel::Scalar, || {
+            assert_eq!(level(), SimdLevel::Scalar);
+        });
+        // Requests above the CPU's ceiling clamp instead of lying.
+        with_level(SimdLevel::Avx2Fma, || {
+            assert!(level() <= detect());
+        });
+    }
+
+    #[test]
+    fn level_codes_and_names_are_stable() {
+        assert_eq!(SimdLevel::Scalar.code(), 0);
+        assert_eq!(SimdLevel::Sse2.code(), 1);
+        assert_eq!(SimdLevel::Avx2Fma.code(), 2);
+        assert_eq!(SimdLevel::Avx2Fma.name(), "avx2+fma");
+        for l in available_levels() {
+            assert_eq!(SimdLevel::from_code(l.code()), l);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! x86_64 kernel implementations (SSE2 baseline + AVX2).
+//!
+//! Every function here reproduces the canonical bits of `super::scalar`
+//! exactly — see the module docs in `simd/mod.rs` for the pinned
+//! association order and the no-FMA rule. The `#[target_feature]`
+//! functions are `unsafe fn`s whose single obligation is that the caller
+//! has verified the feature is present; the dispatchers in `mod.rs` do so
+//! by clamping every level to `detect()`.
+//!
+//! The AVX2 functions enable only `avx2` (which implies `avx`), not `fma`:
+//! the parity-bound kernels must never be compiled in a context where a
+//! mul/add pair could be contracted into a fused op.
+
+use std::arch::x86_64::*;
+
+/// Horizontal sum of a 4-lane register in the pinned reduction order:
+/// `(m0 + m2) + (m1 + m3)`.
+#[inline]
+#[target_feature(enable = "sse2")]
+unsafe fn hsum128(m: __m128) -> f32 {
+    // movehl: (m2, m3, m2, m3); add: (m0+m2, m1+m3, ..).
+    let folded = _mm_add_ps(m, _mm_movehl_ps(m, m));
+    let lane1 = _mm_shuffle_ps::<1>(folded, folded);
+    _mm_cvtss_f32(_mm_add_ss(folded, lane1))
+}
+
+#[target_feature(enable = "sse2")]
+pub(super) unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let chunks = n / 8;
+    // lo carries canonical lanes 0..4, hi lanes 4..8.
+    let mut lo = _mm_setzero_ps();
+    let mut hi = _mm_setzero_ps();
+    for c in 0..chunks {
+        let k = c * 8;
+        lo = _mm_add_ps(
+            lo,
+            _mm_mul_ps(_mm_loadu_ps(ap.add(k)), _mm_loadu_ps(bp.add(k))),
+        );
+        hi = _mm_add_ps(
+            hi,
+            _mm_mul_ps(_mm_loadu_ps(ap.add(k + 4)), _mm_loadu_ps(bp.add(k + 4))),
+        );
+    }
+    // lo + hi is exactly the m[j] = lane[j] + lane[j+4] fold.
+    let mut s = hsum128(_mm_add_ps(lo, hi));
+    for k in chunks * 8..n {
+        s += *ap.add(k) * *bp.add(k);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let k = c * 8;
+        // mul + add, never fma: parity with the scalar lanes.
+        acc = _mm256_add_ps(
+            acc,
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(k)), _mm256_loadu_ps(bp.add(k))),
+        );
+    }
+    let m = _mm_add_ps(
+        _mm256_castps256_ps128(acc),
+        _mm256_extractf128_ps::<1>(acc),
+    );
+    let mut s = hsum128(m);
+    for k in chunks * 8..n {
+        s += *ap.add(k) * *bp.add(k);
+    }
+    s
+}
+
+#[target_feature(enable = "sse2")]
+pub(super) unsafe fn axpy_sse2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+    let va = _mm_set1_ps(alpha);
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let k = c * 4;
+        let sum = _mm_add_ps(
+            _mm_loadu_ps(yp.add(k)),
+            _mm_mul_ps(va, _mm_loadu_ps(xp.add(k))),
+        );
+        _mm_storeu_ps(yp.add(k), sum);
+    }
+    for k in chunks * 4..n {
+        *yp.add(k) += alpha * *xp.add(k);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+    let va = _mm256_set1_ps(alpha);
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let k = c * 8;
+        let sum = _mm256_add_ps(
+            _mm256_loadu_ps(yp.add(k)),
+            _mm256_mul_ps(va, _mm256_loadu_ps(xp.add(k))),
+        );
+        _mm256_storeu_ps(yp.add(k), sum);
+    }
+    for k in chunks * 8..n {
+        *yp.add(k) += alpha * *xp.add(k);
+    }
+}
+
+#[target_feature(enable = "sse2")]
+pub(super) unsafe fn add_assign_sse2(acc: &mut [f32], src: &[f32]) {
+    let n = acc.len().min(src.len());
+    let (ap, sp) = (acc.as_mut_ptr(), src.as_ptr());
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let k = c * 4;
+        let sum = _mm_add_ps(_mm_loadu_ps(ap.add(k)), _mm_loadu_ps(sp.add(k)));
+        _mm_storeu_ps(ap.add(k), sum);
+    }
+    for k in chunks * 4..n {
+        *ap.add(k) += *sp.add(k);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn add_assign_avx2(acc: &mut [f32], src: &[f32]) {
+    let n = acc.len().min(src.len());
+    let (ap, sp) = (acc.as_mut_ptr(), src.as_ptr());
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let k = c * 8;
+        let sum = _mm256_add_ps(_mm256_loadu_ps(ap.add(k)), _mm256_loadu_ps(sp.add(k)));
+        _mm256_storeu_ps(ap.add(k), sum);
+    }
+    for k in chunks * 8..n {
+        *ap.add(k) += *sp.add(k);
+    }
+}
+
+/// Shared tail for the kron2 kernels: at most one block extends past the
+/// end of `acc` (or `acc` stops mid-block); accumulate its covered prefix
+/// sequentially. Elementwise, so bit-parity is automatic.
+#[inline]
+fn kron2_partial_tail(a: &[f32], b: &[f32], acc: &mut [f32], q: usize, full: usize) {
+    let blocks = a.len().min(acc.len().div_ceil(q));
+    if blocks > full {
+        let x = a[full];
+        for (o, &v) in acc[full * q..].iter_mut().zip(b) {
+            *o += x * v;
+        }
+    }
+}
+
+#[target_feature(enable = "sse2")]
+pub(super) unsafe fn kron2_sse2(a: &[f32], b: &[f32], acc: &mut [f32]) {
+    let q = b.len();
+    if q == 0 {
+        return;
+    }
+    // Blocks that fit entirely inside both `a` and `acc` (hardening clamp).
+    let full = a.len().min(acc.len() / q);
+    if q == 4 {
+        // Order-4 geometries put length-4 leaves in the final kron level:
+        // one 128-bit op per block instead of a per-block axpy call.
+        let (ap, bp, accp) = (a.as_ptr(), b.as_ptr(), acc.as_mut_ptr());
+        let vb = _mm_loadu_ps(bp);
+        for i in 0..full {
+            let dst = accp.add(i * 4);
+            let sum = _mm_add_ps(
+                _mm_loadu_ps(dst),
+                _mm_mul_ps(_mm_set1_ps(*ap.add(i)), vb),
+            );
+            _mm_storeu_ps(dst, sum);
+        }
+    } else {
+        for i in 0..full {
+            axpy_sse2(a[i], b, &mut acc[i * q..(i + 1) * q]);
+        }
+    }
+    kron2_partial_tail(a, b, acc, q, full);
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn kron2_avx2(a: &[f32], b: &[f32], acc: &mut [f32]) {
+    let q = b.len();
+    if q == 0 {
+        return;
+    }
+    let full = a.len().min(acc.len() / q);
+    if q == 4 {
+        // Pack two length-4 blocks per 256-bit op: lane layout is
+        // (a[i]·b | a[i+1]·b), matching `acc[i*4..i*4+8]` exactly.
+        let (ap, bp, accp) = (a.as_ptr(), b.as_ptr(), acc.as_mut_ptr());
+        let vb = _mm_loadu_ps(bp);
+        let vbb = _mm256_set_m128(vb, vb);
+        let pairs = full / 2;
+        for p in 0..pairs {
+            let i = p * 2;
+            let va = _mm256_set_m128(_mm_set1_ps(*ap.add(i + 1)), _mm_set1_ps(*ap.add(i)));
+            let dst = accp.add(i * 4);
+            let sum = _mm256_add_ps(_mm256_loadu_ps(dst), _mm256_mul_ps(va, vbb));
+            _mm256_storeu_ps(dst, sum);
+        }
+        if full % 2 == 1 {
+            let i = full - 1;
+            let dst = accp.add(i * 4);
+            let sum = _mm_add_ps(
+                _mm_loadu_ps(dst),
+                _mm_mul_ps(_mm_set1_ps(*ap.add(i)), vb),
+            );
+            _mm_storeu_ps(dst, sum);
+        }
+    } else {
+        for i in 0..full {
+            axpy_avx2(a[i], b, &mut acc[i * q..(i + 1) * q]);
+        }
+    }
+    kron2_partial_tail(a, b, acc, q, full);
+}

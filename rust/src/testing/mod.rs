@@ -177,6 +177,7 @@ mod tests {
             model_generation: 3,
             snapshot_bytes: 4096,
             accept_errors: 1,
+            simd_level: 2,
         };
         // A line rendered through the shared table must pass, extra rollup
         // tokens included.
