@@ -16,10 +16,12 @@
 //! Run: cargo bench --bench batch_lookup    (W2K_BENCH_FAST=1 to smoke)
 
 use word2ket::bench::{black_box, header, BenchRunner};
-use word2ket::embedding::{EmbeddingStore, Word2KetXS};
+use word2ket::embedding::{EmbeddingStore, Word2Ket, Word2KetXS};
 use word2ket::serving::ShardedCache;
 use word2ket::simd;
+use word2ket::snapshot::{save_store, Codec, SaveOptions, Snapshot, SnapshotStore};
 use word2ket::util::{Json, Rng};
+use std::sync::Arc;
 
 const VOCAB: usize = 10_000;
 const DIM: usize = 256;
@@ -167,22 +169,72 @@ fn main() {
     });
     record(&name, &warm, 4, 2, true, true, best.name(), &mut results);
 
-    let json = Json::arr(results.iter().map(|r| {
-        Json::obj(vec![
-            ("name", Json::str(r.name.clone())),
-            ("lookups_per_s", Json::num(r.lookups_per_s)),
-            ("p50_us", Json::num(r.p50_us)),
-            ("p99_us", Json::num(r.p99_us)),
-            ("order", Json::num(r.order as f64)),
-            ("rank", Json::num(r.rank as f64)),
-            ("batched", Json::num(if r.batched { 1.0 } else { 0.0 })),
-            ("cached", Json::num(if r.cached { 1.0 } else { 0.0 })),
-            ("simd", Json::str(r.simd.to_string())),
-        ])
-    }));
+    // Snapshot-store lookups per payload codec, at the host's best kernel
+    // set: the same word2ket table saved at every codec and served back off
+    // its snapshot. Rows are exact for every codec (f16/int8 dequantize at
+    // open; the sub-byte codecs serve f16-refined quantized-ket rows — see
+    // `word2ket::quant`), so this cell prices what *serving* compressed
+    // payloads costs; cold-start load time lands in BENCH_index.json.
+    let mut codec_rows: Vec<Json> = Vec::new();
+    {
+        let mut rng = Rng::new(7);
+        let w2k = Word2Ket::random(VOCAB, DIM, 2, 1, &mut rng);
+        let dir = std::env::temp_dir().join(format!("w2k_bench_blookup_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).ok();
+        println!();
+        for codec in [Codec::F32, Codec::F16, Codec::Int8, Codec::Int4, Codec::B2, Codec::B1] {
+            let path = dir.join(format!("codec_{}.snap", codec.name()));
+            save_store(&w2k, &path, &SaveOptions { codec, ..Default::default() })
+                .expect("save snapshot");
+            let snap = Arc::new(Snapshot::open(&path, true).expect("open snapshot"));
+            let store = SnapshotStore::open(snap).expect("load snapshot store");
+            let mut arena: Vec<f32> = Vec::new();
+            let mut next = 0usize;
+            let name = format!("snapshot w2k 2/1 {} batched ({BATCH} rows)", codec.name());
+            let r = runner.run_throughput(&name, BATCH as f64, || {
+                let ids = &workload[next % workload.len()];
+                next += 1;
+                store.lookup_batch_into(ids, &mut arena);
+                black_box(arena.last().copied())
+            });
+            println!("{}", r.render());
+            codec_rows.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("lookups_per_s", Json::num(r.throughput().unwrap_or(0.0))),
+                ("p50_us", Json::num(r.p50.as_secs_f64() * 1e6)),
+                ("p99_us", Json::num(r.p99.as_secs_f64() * 1e6)),
+                ("codec", Json::str(codec.name())),
+                ("payload_bits", Json::num(codec.bits() as f64)),
+                ("batched", Json::num(1.0)),
+                ("cached", Json::num(0.0)),
+                ("simd", Json::str(best.name())),
+            ]));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    let mut items: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("lookups_per_s", Json::num(r.lookups_per_s)),
+                ("p50_us", Json::num(r.p50_us)),
+                ("p99_us", Json::num(r.p99_us)),
+                ("order", Json::num(r.order as f64)),
+                ("rank", Json::num(r.rank as f64)),
+                ("batched", Json::num(if r.batched { 1.0 } else { 0.0 })),
+                ("cached", Json::num(if r.cached { 1.0 } else { 0.0 })),
+                ("simd", Json::str(r.simd.to_string())),
+            ])
+        })
+        .collect();
+    let n_rows = items.len() + codec_rows.len();
+    items.extend(codec_rows);
+    let json = Json::arr(items);
     let path = "BENCH_batch.json";
     match std::fs::write(path, json.pretty()) {
-        Ok(()) => println!("\nwrote {path} ({} configs)", results.len()),
+        Ok(()) => println!("\nwrote {path} ({n_rows} configs)"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

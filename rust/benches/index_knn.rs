@@ -7,7 +7,9 @@
 //! scan on top (probe `nprobe` of `nlist` k-means cells, exact factored
 //! re-rank). This bench quantifies both speedups plus IVF recall@k, sweeps
 //! the factored scans across `scan_threads` 1/2/4 (the blocked parallel
-//! scan — bit-identical results, so only throughput moves), and emits
+//! scan — bit-identical results, so only throughput moves), sweeps the
+//! snapshot payload codecs (f32/f16/int8/int4/b2/b1) recording recall@k,
+//! bytes/query and cold-start load time per codec, and emits
 //! `BENCH_index.json` so the perf trajectory accumulates across PRs.
 //!
 //! Run: cargo bench --bench index_knn    (W2K_BENCH_FAST=1 to smoke)
@@ -15,6 +17,7 @@
 use word2ket::bench::{black_box, header, BenchRunner};
 use word2ket::embedding::{EmbeddingStore, Word2Ket};
 use word2ket::index::{BruteForce, IvfIndex, KnnIndex, Neighbor, Query, Scorer};
+use word2ket::snapshot::{save_store, Codec, SaveOptions, Snapshot, SnapshotStore};
 use word2ket::tensor::dot;
 use word2ket::util::{Json, Rng, Timer};
 use std::cell::Cell;
@@ -234,24 +237,131 @@ fn main() {
         scan_threads: 4,
     });
 
-    // Persist the trajectory point.
-    let json = Json::arr(results.iter().map(|r| {
-        Json::obj(vec![
-            ("name", Json::str(r.name.clone())),
-            ("queries_per_s", Json::num(r.queries_per_s)),
-            ("p50_us", Json::num(r.p50_us)),
-            ("p99_us", Json::num(r.p99_us)),
-            ("mean_candidates", Json::num(r.mean_candidates)),
-            ("recall_at_k", Json::num(r.recall_at_k)),
-            ("scan_threads", Json::num(r.scan_threads as f64)),
-            ("vocab", Json::num(vocab as f64)),
+    // --- payload-codec sweep -----------------------------------------------
+    // The same word2ket table saved at every snapshot codec, cold-booted the
+    // way a server would boot it, and searched with the same top-k workload.
+    // Probing every cell (nprobe = nlist) removes the cell-miss term, so
+    // recall@K isolates what the *codec* costs: f16/int8 dequantize at open
+    // and scan factored f32 rows; the sub-byte codecs scan packed codes
+    // coarsely and re-rank the survivors against exact f16-refined rows
+    // (see `word2ket::quant`). bytes_per_query counts the payload bytes one
+    // query touches — coarse codes + scales per candidate plus the re-ranked
+    // rows — against the dim·4 per candidate a dense scan reads.
+    let vocab_q = if fast { 2_000 } else { 10_000 };
+    let nlist_q = if fast { 16usize } else { 64usize };
+    let mut rng_q = Rng::new(19);
+    let store_q = Word2Ket::random(vocab_q, DIM, ORDER, RANK, &mut rng_q);
+    let leaf = store_q.leaf_dim();
+    let leaves = ORDER * RANK;
+    let matrix_q = {
+        let mut m = Vec::with_capacity(vocab_q * DIM);
+        for id in 0..vocab_q {
+            m.extend_from_slice(&store_q.lookup(id));
+        }
+        m
+    };
+    let queries_q: Vec<usize> = (0..n_queries).map(|_| rng_q.below(vocab_q)).collect();
+    let dir = std::env::temp_dir().join(format!("w2k_bench_codecs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).ok();
+    println!("\ncodec sweep: vocab {vocab_q}, full probe ({nlist_q}/{nlist_q}), top-{K}");
+    let mut codec_rows: Vec<Json> = Vec::new();
+    for codec in [Codec::F32, Codec::F16, Codec::Int8, Codec::Int4, Codec::B2, Codec::B1] {
+        let path = dir.join(format!("codec_{}.snap", codec.name()));
+        let opts = SaveOptions { codec, ..Default::default() };
+        let info = save_store(&store_q, &path, &opts).expect("save snapshot");
+        let t = Timer::start();
+        let snap = Arc::new(Snapshot::open(&path, true).expect("open snapshot"));
+        let loaded = SnapshotStore::open(snap).expect("load snapshot store");
+        let cold_load_ms = t.elapsed_ms();
+        let ivf = IvfIndex::build(
+            Scorer::new(Arc::new(loaded) as Arc<dyn EmbeddingStore>, false),
+            nlist_q,
+            nlist_q,
+            42,
+        );
+        let mut hits = 0usize;
+        let mut candidates = 0usize;
+        for &q in &queries_q {
+            let exact: HashSet<usize> =
+                dense_top_k(&matrix_q, vocab_q, q, K).into_iter().map(|(id, _)| id).collect();
+            let (approx, stats) = ivf.top_k(&Query::Id(q), K);
+            candidates += stats.candidates;
+            hits += approx.iter().filter(|n: &&Neighbor| exact.contains(&n.id)).count();
+        }
+        let recall = hits as f64 / (queries_q.len() * K) as f64;
+        let mean_candidates = candidates as f64 / queries_q.len() as f64;
+        // Coarse bytes per candidate: sub-byte scans packed codes + one
+        // scale per leaf; every other codec scans f32 factors in memory
+        // (f16/int8 payloads dequantize at open). Sub-byte then re-reads
+        // `(K·8).max(64)` refined rows — the IVF re-rank depth.
+        let coarse_bytes = if codec.is_sub_byte() {
+            let wpl = (leaf * codec.bits()).div_ceil(32);
+            (leaves * (wpl * 4 + 4)) as f64
+        } else {
+            (leaves * leaf * 4) as f64
+        };
+        let rerank_rows = if codec.is_sub_byte() { (K * 8).max(64) } else { 0 };
+        let bytes_per_query =
+            mean_candidates * coarse_bytes + (rerank_rows * leaves * leaf * 4) as f64;
+        let reduction = mean_candidates * (DIM * 4) as f64 / bytes_per_query;
+        let next = Cell::new(0usize);
+        let r = runner.run_throughput(&format!("codec {} top-{K}", codec.name()), 1.0, || {
+            let q = queries_q[next.get() % queries_q.len()];
+            next.set(next.get() + 1);
+            black_box(ivf.top_k(&Query::Id(q), K))
+        });
+        println!("{}", r.render());
+        println!(
+            "  -> recall@{K} {recall:.3}, {:.1} KB/query ({reduction:.1}× less than a dense \
+             scan), snapshot {} KB, cold load {cold_load_ms:.0}ms",
+            bytes_per_query / 1024.0,
+            info.bytes / 1024,
+        );
+        codec_rows.push(Json::obj(vec![
+            ("name", Json::str(format!("codec {}", codec.name()))),
+            ("codec", Json::str(codec.name())),
+            ("payload_bits", Json::num(codec.bits() as f64)),
+            ("queries_per_s", Json::num(r.throughput().unwrap_or(0.0))),
+            ("p50_us", Json::num(r.p50.as_secs_f64() * 1e6)),
+            ("p99_us", Json::num(r.p99.as_secs_f64() * 1e6)),
+            ("mean_candidates", Json::num(mean_candidates)),
+            ("recall_at_k", Json::num(recall)),
+            ("bytes_per_query", Json::num(bytes_per_query)),
+            ("reduction_x_vs_dense", Json::num(reduction)),
+            ("file_bytes", Json::num(info.bytes as f64)),
+            ("cold_load_ms", Json::num(cold_load_ms)),
+            ("scan_threads", Json::num(1.0)),
+            ("vocab", Json::num(vocab_q as f64)),
             ("dim", Json::num(DIM as f64)),
             ("k", Json::num(K as f64)),
-        ])
-    }));
+        ]));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Persist the trajectory point (scan rows first, then the codec sweep).
+    let mut items: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("queries_per_s", Json::num(r.queries_per_s)),
+                ("p50_us", Json::num(r.p50_us)),
+                ("p99_us", Json::num(r.p99_us)),
+                ("mean_candidates", Json::num(r.mean_candidates)),
+                ("recall_at_k", Json::num(r.recall_at_k)),
+                ("scan_threads", Json::num(r.scan_threads as f64)),
+                ("vocab", Json::num(vocab as f64)),
+                ("dim", Json::num(DIM as f64)),
+                ("k", Json::num(K as f64)),
+            ])
+        })
+        .collect();
+    let n_rows = items.len() + codec_rows.len();
+    items.extend(codec_rows);
+    let json = Json::arr(items);
     let path = "BENCH_index.json";
     match std::fs::write(path, json.pretty()) {
-        Ok(()) => println!("\nwrote {path} ({} configs)", results.len()),
+        Ok(()) => println!("\nwrote {path} ({n_rows} configs)"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

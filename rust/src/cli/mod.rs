@@ -233,7 +233,7 @@ pub fn app() -> App {
                 about: "save, inspect or load embedding-store snapshots",
                 opts: {
                     let mut o = common_train.clone();
-                    o.push(OptSpec { name: "payload", help: "payload codec for save: f32|f16|int8 (default: [snapshot] codec)", takes_value: true, repeated: false, default: None });
+                    o.push(OptSpec { name: "payload", help: "payload codec for save: f32|f16|int8|int4|b2|b1 (sub-byte codecs pack word2ket factors with an f16 refinement; default: [snapshot] codec)", takes_value: true, repeated: false, default: None });
                     o.push(OptSpec { name: "with-index", help: "embed the trained IVF index ([index] config) in the snapshot", takes_value: false, repeated: false, default: None });
                     o.push(OptSpec { name: "with-norms", help: "embed per-word L2 norms so cosine scorers skip the norm pass on load (f32 payloads only)", takes_value: false, repeated: false, default: None });
                     o.push(OptSpec { name: "mmap", help: "load via memory mapping (zero-copy) instead of heap read", takes_value: false, repeated: false, default: None });
@@ -337,6 +337,13 @@ mod tests {
         assert!(p.flag("with-index"));
         assert!(p.flag("with-norms"));
         assert!(!p.flag("mmap"));
+        // Sub-byte payload codecs parse at the CLI layer like any other
+        // value; validation happens in Codec::parse at save time.
+        let p = a.parse(&argv(&["snapshot", "save", "m.snap", "--payload", "int4"])).unwrap();
+        assert_eq!(p.get("payload"), Some("int4"));
+        assert!(crate::snapshot::Codec::parse("b1").is_ok());
+        let err = crate::snapshot::Codec::parse("int3").unwrap_err().to_string();
+        assert!(err.contains("f32|f16|int8|int4|b2|b1"), "{err}");
         // Too many positionals is a CLI error.
         assert!(a.parse(&argv(&["snapshot", "save", "a.snap", "extra"])).is_err());
     }

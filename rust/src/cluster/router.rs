@@ -616,6 +616,10 @@ impl Router {
             // The fleet is only as vectorized as its slowest member: the
             // roll-up reports the minimum dispatch level across replicas.
             min_simd = min_simd.min(rep.simd_level);
+            // Payload precision rolls up as the *maximum*: the fleet is
+            // only as compressed as its least-quantized serving payload
+            // (0 only when no replica answered).
+            agg.payload_bits = agg.payload_bits.max(rep.payload_bits);
         }
         if min_generation == u64::MAX {
             min_generation = 0;

@@ -58,6 +58,10 @@ pub enum EmbeddingKind {
     LowRank,
     /// Parameter-sharing via hashing (Suzuki & Nagata, 2016).
     Hashed,
+    /// word2ket with sub-byte quantized leaf payloads scored in the
+    /// quantized domain plus an f16 refinement (see `quant/`). Uses
+    /// `order`/`rank` like word2ket and `bits` ∈ {1, 2, 4, 8}.
+    QuantizedKet,
 }
 
 impl EmbeddingKind {
@@ -69,6 +73,7 @@ impl EmbeddingKind {
             "quantized" => Ok(EmbeddingKind::Quantized),
             "lowrank" => Ok(EmbeddingKind::LowRank),
             "hashed" => Ok(EmbeddingKind::Hashed),
+            "quantizedket" | "qket" => Ok(EmbeddingKind::QuantizedKet),
             other => Err(Error::Config(format!("unknown embedding kind '{other}'"))),
         }
     }
@@ -81,6 +86,7 @@ impl EmbeddingKind {
             EmbeddingKind::Quantized => "quantized",
             EmbeddingKind::LowRank => "lowrank",
             EmbeddingKind::Hashed => "hashed",
+            EmbeddingKind::QuantizedKet => "quantizedket",
         }
     }
 }
@@ -423,6 +429,27 @@ impl ExperimentConfig {
             return Err(Error::Config("embedding order/rank must be >= 1".into()));
         }
         match e.kind {
+            EmbeddingKind::QuantizedKet => {
+                if e.order < 2 {
+                    return Err(Error::Config(format!(
+                        "quantizedket needs order >= 2 (got {})",
+                        e.order
+                    )));
+                }
+                if ![1usize, 2, 4, 8].contains(&e.bits) {
+                    return Err(Error::Config(format!(
+                        "quantizedket bits must be 1, 2, 4 or 8 (got {})",
+                        e.bits
+                    )));
+                }
+                if e.layernorm {
+                    return Err(Error::Config(
+                        "quantizedket requires embedding.layernorm = false (quantized-domain \
+                         scoring needs raw CP leaves)"
+                            .into(),
+                    ));
+                }
+            }
             EmbeddingKind::Word2Ket | EmbeddingKind::Word2KetXS => {
                 if e.order < 2 {
                     return Err(Error::Config(format!(

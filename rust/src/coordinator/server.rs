@@ -402,6 +402,8 @@ mod tests {
             let value = match name {
                 "model_generation" => 1.0,
                 "simd_level" => crate::simd::level().code() as f64,
+                // Float store: full-precision serving payload.
+                "payload_bits" => 32.0,
                 _ => 0.0,
             };
             expected.push(' ');

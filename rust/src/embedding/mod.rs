@@ -193,6 +193,18 @@ pub fn build(
             Box::new(LowRankEmbedding::random(vocab, dim, cfg.lowrank_dim, rng))
         }
         EmbeddingKind::Hashed => Box::new(HashedEmbedding::random(vocab, dim, cfg.buckets, rng)),
+        EmbeddingKind::QuantizedKet => {
+            // Quantize a fresh raw-CP word2ket store (LayerNorm never
+            // applies — config validation rejects it, and the random
+            // constructor starts raw). `from_word2ket` only fails on
+            // unsupported widths or degenerate geometry, both of which
+            // config validation rejects before a server gets here.
+            let w = Word2Ket::random(vocab, dim, cfg.order, cfg.rank, rng);
+            Box::new(
+                crate::quant::QuantizedKet::from_word2ket(&w, cfg.bits)
+                    .expect("quantized-ket geometry rejected by config validation"),
+            )
+        }
     }
 }
 
@@ -211,6 +223,7 @@ mod tests {
             EmbeddingKind::Quantized,
             EmbeddingKind::LowRank,
             EmbeddingKind::Hashed,
+            EmbeddingKind::QuantizedKet,
         ] {
             let cfg = EmbeddingConfig { kind, order: 2, rank: 2, ..Default::default() };
             let store = build(&cfg, 100, 16, &mut rng);

@@ -11,8 +11,8 @@
 //! seeded and deterministic.
 
 use super::{
-    effective_scan_threads, scan_blocked, scan_parallel, KnnIndex, KnnResult, Query, QueryStats,
-    Scorer, TopK,
+    effective_scan_threads, scan_blocked, scan_parallel, KnnIndex, KnnResult, Neighbor, Query,
+    QueryStats, Scorer, TopK,
 };
 use crate::tensor::dot;
 use crate::util::Rng;
@@ -24,6 +24,16 @@ const KMEANS_ITERS: usize = 8;
 /// Upper bound on k-means training rows (keeps index builds on 100k+ vocabs
 /// from scaling with vocabulary size; assignment still sees every row once).
 const MAX_TRAIN_ROWS: usize = 16_384;
+
+/// Coarse-scan survivor count when the store serves a sub-byte payload
+/// (`Scorer::payload_bits() < 32`): the quantized-domain scan keeps this
+/// many candidates and only they are re-scored exactly. `8k` floored at 64
+/// buys back the quantization error — at int4 the exact top-10 sits inside
+/// the coarse top-64 on the standard configs — while the exact pass stays
+/// `O(k)` materialized rows instead of `O(vocab)`.
+fn rerank_depth(k: usize) -> usize {
+    (k * 8).max(64)
+}
 
 /// IVF index: coarse centroids plus per-cell id lists (see module docs).
 pub struct IvfIndex {
@@ -241,6 +251,26 @@ impl IvfIndex {
     pub fn lists(&self) -> &[Vec<u32>] {
         &self.lists
     }
+
+    /// Exact pass over the coarse-scan survivors: re-score each against
+    /// the already-materialized query row (f32 dots over served rows; the
+    /// scorer's cosine norms are exact row norms) and keep the true top
+    /// `k`. The selection rule is the same total order as the coarse
+    /// [`TopK`], so the result is deterministic and thread-count
+    /// independent.
+    fn exact_rerank(
+        &self,
+        q: &[f32],
+        q_norm: f32,
+        coarse: Vec<Neighbor>,
+        k: usize,
+    ) -> Vec<Neighbor> {
+        let mut top = TopK::new(k);
+        for n in coarse {
+            top.push(n.id, self.scorer.score_vec(q, q_norm, n.id));
+        }
+        top.into_sorted()
+    }
 }
 
 impl KnnIndex for IvfIndex {
@@ -281,6 +311,14 @@ impl KnnIndex for IvfIndex {
         // already-materialized query vector otherwise.
         let factored_id = matches!(query, Query::Id(_)) && self.scorer.is_factored();
 
+        // Quantization-aware serving: on a sub-byte payload the factored
+        // scan scores in the quantized domain (cheap, coarse), so it keeps
+        // `rerank_depth(k)` survivors instead of `k` and a second pass
+        // re-scores just those against exact materialized rows. Dense
+        // scans (vector queries, non-factored stores) are exact already.
+        let coarse = factored_id && self.scorer.payload_bits() < 32;
+        let fetch_k = if coarse { rerank_depth(k) } else { k };
+
         // Thread-parallel re-rank when the probed candidate set is big
         // enough: flatten the probed cells' members (same order as the
         // sequential pass) and chunk them across a scoped scan team. The
@@ -294,24 +332,29 @@ impl KnnIndex for IvfIndex {
                 .filter(|&b| Some(b) != exclude)
                 .collect();
             let (neighbors, scanned) = match (factored_id, exclude) {
-                (true, Some(a)) => scan_parallel(cands.len(), k, threads, |lo, hi, top| {
+                (true, Some(a)) => scan_parallel(cands.len(), fetch_k, threads, |lo, hi, top| {
                     // Each worker resolves its own factored view; the
                     // scorer itself is shared read-only.
                     let pairs = self.scorer.pair_scorer();
                     scan_blocked(&pairs, a, cands[lo..hi].iter().copied(), top)
                 }),
-                _ => scan_parallel(cands.len(), k, threads, |lo, hi, top| {
+                _ => scan_parallel(cands.len(), fetch_k, threads, |lo, hi, top| {
                     for &b in &cands[lo..hi] {
                         top.push(b, self.scorer.score_vec(q, q_norm, b));
                     }
                     hi - lo
                 }),
             };
+            let neighbors = if coarse {
+                self.exact_rerank(q, q_norm, neighbors, k)
+            } else {
+                neighbors
+            };
             return (neighbors, QueryStats { candidates: scanned, probes: probed.len() });
         }
 
         let pairs = self.scorer.pair_scorer();
-        let mut top = TopK::new(k);
+        let mut top = TopK::new(fetch_k);
         let mut scanned = 0usize;
         match query {
             Query::Id(a) if factored_id => {
@@ -344,7 +387,12 @@ impl KnnIndex for IvfIndex {
                 }
             }
         }
-        (top.into_sorted(), QueryStats { candidates: scanned, probes: probed.len() })
+        let neighbors = if coarse {
+            self.exact_rerank(q, q_norm, top.into_sorted(), k)
+        } else {
+            top.into_sorted()
+        };
+        (neighbors, QueryStats { candidates: scanned, probes: probed.len() })
     }
 
     fn describe(&self) -> String {
@@ -483,6 +531,69 @@ mod tests {
                 assert_eq!((w.id, w.score.to_bits()), (g.id, g.score.to_bits()), "query {q}");
             }
         }
+    }
+
+    /// Tentpole: on a sub-byte store the IVF scan runs coarse in the
+    /// quantized domain, then exactly re-ranks `rerank_depth(k)` survivors
+    /// — recovering the exact top-k over the *served* rows with high
+    /// recall, returning exact (not coarse) scores, and staying
+    /// bit-identical under thread-parallel scans.
+    #[test]
+    fn quantized_store_reranks_to_exact_scores() {
+        let vocab = 2048;
+        let mut rng = Rng::new(41);
+        let w2k = Word2Ket::random(vocab, 16, 2, 2, &mut rng);
+        let qk: Arc<dyn EmbeddingStore> =
+            Arc::new(crate::quant::QuantizedKet::from_word2ket(&w2k, 4).unwrap());
+        // Probe every cell so any recall gap is purely quantization error.
+        let ivf = IvfIndex::build(Scorer::new(qk.clone(), false), 8, 8, 6);
+        assert!(ivf.scorer().is_factored());
+        assert_eq!(ivf.scorer().payload_bits(), 4);
+        assert!(ivf.describe().contains("coarse"), "{}", ivf.describe());
+        let par = IvfIndex::from_parts(
+            Scorer::new(qk.clone(), false),
+            8,
+            ivf.centroids().to_vec(),
+            ivf.lists().to_vec(),
+        )
+        .unwrap()
+        .with_scan_threads(4);
+
+        let k = 10;
+        let rows: Vec<Vec<f32>> = (0..vocab).map(|id| qk.lookup(id)).collect();
+        let (mut hits, mut total) = (0usize, 0usize);
+        for query in (0..vocab).step_by(173) {
+            let (got, stats) = ivf.top_k(&Query::Id(query), k);
+            assert_eq!(stats.candidates, vocab - 1);
+            assert_eq!(got.len(), k);
+
+            // Exact ground truth over the served (f16-refined) rows.
+            let mut truth = TopK::new(k);
+            for b in 0..vocab {
+                if b != query {
+                    truth.push(b, dot(&rows[query], &rows[b]));
+                }
+            }
+            let want: std::collections::HashSet<usize> =
+                truth.into_sorted().iter().map(|n| n.id).collect();
+            hits += got.iter().filter(|n| want.contains(&n.id)).count();
+            total += k;
+
+            // Returned scores are the exact dense scores, not coarse ones.
+            for n in &got {
+                let exact = dot(&rows[query], &rows[n.id]);
+                assert_eq!(n.score.to_bits(), exact.to_bits(), "query {query} id {}", n.id);
+            }
+
+            // Thread-parallel coarse scan + re-rank is bit-identical.
+            let (par_got, par_stats) = par.top_k(&Query::Id(query), k);
+            assert_eq!(stats, par_stats, "query {query}");
+            for (w, g) in got.iter().zip(&par_got) {
+                assert_eq!((w.id, w.score.to_bits()), (g.id, g.score.to_bits()), "q {query}");
+            }
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall >= 0.95, "int4 rerank recall {recall:.3} below 0.95");
     }
 
     #[test]

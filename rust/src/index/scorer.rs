@@ -45,7 +45,13 @@ pub struct Scorer {
 /// norms so a reloading server can skip the pass.
 pub fn compute_norms(store: &dyn EmbeddingStore) -> Vec<f32> {
     let vocab = store.vocab_size();
-    if let Some(f) = Repr::resolve(store).factored() {
+    let repr = Repr::resolve(store);
+    // Sub-byte payloads score coarsely in factored space (`inner` is a
+    // quantized-domain approximation — see `crate::quant`), so `⟨v, v⟩`
+    // there is *not* the served row's norm. Norms always describe the
+    // exact materialized rows.
+    let factored = if repr.payload_bits() >= 32 { repr.factored() } else { None };
+    if let Some(f) = factored {
         return (0..vocab).map(|id| f.inner(id, id).max(0.0).sqrt()).collect();
     }
     // Dense fallback: chunk rows through one reused arena (cache-aware when
@@ -106,6 +112,16 @@ impl Scorer {
     /// same resolution [`Scorer::pair_scorer`] performs.
     pub fn is_factored(&self) -> bool {
         Repr::resolve(self.store.as_ref()).factored().is_some()
+    }
+
+    /// Stored precision of the backing factor payload in bits per value
+    /// ([`Repr::payload_bits`] on the resolved representation): 32 for
+    /// float stores, the packed code width for quantized payloads. The IVF
+    /// index treats `< 32` as "factored scores are coarse — re-rank the
+    /// top candidates through exact rows", and serving surfaces report it
+    /// (STATS `payload_bits` / the `w2k_payload_bits` gauge).
+    pub fn payload_bits(&self) -> usize {
+        Repr::resolve(self.store.as_ref()).payload_bits()
     }
 
     /// The cached per-word norms (cosine mode only): snapshot saving embeds
@@ -177,7 +193,11 @@ impl Scorer {
 
     pub fn describe(&self) -> String {
         let metric = if self.cosine { "cosine" } else { "dot" };
-        match Repr::resolve(self.store.as_ref()).factored() {
+        let repr = Repr::resolve(self.store.as_ref());
+        match repr.factored() {
+            Some(f) if repr.payload_bits() < 32 => {
+                format!("{metric}/coarse({}, {}b)", f.kind_name(), repr.payload_bits())
+            }
             Some(f) => format!("{metric}/factored({})", f.kind_name()),
             None => format!("{metric}/materialized"),
         }
@@ -410,6 +430,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Sub-byte stores are factored but *coarse*: their norms must come
+    /// from the served rows, never from the quantized-domain self-inner
+    /// (which differs grossly at 2 bits).
+    #[test]
+    fn quantized_store_norms_come_from_rows() {
+        let mut rng = Rng::new(13);
+        let w2k = Word2Ket::random(20, 16, 2, 2, &mut rng);
+        let qk = crate::quant::QuantizedKet::from_word2ket(&w2k, 2).unwrap();
+        assert!(Repr::resolve(&qk).factored().is_some());
+        let norms = compute_norms(&qk);
+        assert_eq!(norms.len(), 20);
+        for (id, &n) in norms.iter().enumerate() {
+            let v = qk.lookup(id);
+            assert_eq!(n.to_bits(), dot(&v, &v).max(0.0).sqrt().to_bits(), "id {id}");
+        }
+        let scorer = Scorer::new(Arc::new(qk) as Arc<dyn EmbeddingStore>, false);
+        assert_eq!(scorer.payload_bits(), 2);
+        assert!(scorer.describe().contains("coarse"), "{}", scorer.describe());
     }
 
     #[test]

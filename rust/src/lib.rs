@@ -46,6 +46,7 @@ pub mod kron;
 pub mod metrics;
 pub mod net;
 pub mod obs;
+pub mod quant;
 pub mod repr;
 pub mod runtime;
 pub mod serving;

@@ -1,0 +1,783 @@
+//! Sub-byte factored payloads scored directly in the quantized domain.
+//!
+//! word2ket's space story (§2.3) compounds with Word2Bits-style sub-byte
+//! quantization (Lam, 2018): each CP leaf `v_jk ∈ R^q` is stored as
+//! bit-packed codes plus one per-leaf scale, and the factored inner product
+//! is computed *without dequantizing* — `⟨v_jk, w_jk'⟩ ≈ s_v s_w Σ c_v c_w`
+//! where the code sum runs through the integer SIMD kernels in
+//! [`crate::simd`] ([`crate::simd::idot_b1`] and friends). Because those
+//! sums are exact `i32` arithmetic, quantized-domain scores are
+//! bit-identical across scalar/SSE2/AVX2 by construction.
+//!
+//! # Payload layout
+//!
+//! Leaf `l = (word·rank + k)·order + j` owns
+//!
+//! * `codes[l·W .. (l+1)·W]` — `q` codes packed LSB-first into `W =
+//!   ⌈q·bits/32⌉` u32 words (bits are powers of two, so codes never
+//!   straddle a word; padding bits are zero), and
+//! * `scales[l]` — one non-negative finite f32.
+//!
+//! Code semantics per width (encode: deterministic round-half-away-from-
+//! zero; decode: `value = scale · c`):
+//!
+//! | bits | scale            | code `u`                      | centered `c` |
+//! |------|------------------|-------------------------------|--------------|
+//! | 1    | `Σ\|x\|/q`       | `x ≥ 0`                       | `2u-1` ∈ {±1} |
+//! | 2    | `max\|x\|/3`     | `clamp(round((x/s+3)/2),0,3)` | `2u-3` ∈ {±1,±3} |
+//! | 4    | `max\|x\|/7`     | `clamp(round(x/s),-7,7)+7`    | `u-7` ∈ -7..=7 |
+//! | 8    | `max\|x\|/127`   | `clamp(round(x/s),-127,127)+127` | `u-127` ∈ -127..=127 |
+//!
+//! # The refinement payload and the coarse contract
+//!
+//! Quantized-domain dots are *coarse*: int4 alone ranks top-10 neighbours
+//! at ~0.85 recall on the standard config, below the ≥ 0.95 bar. So a
+//! [`QuantizedKet`] additionally carries its leaves rounded through f16
+//! (half the f32 factor bytes), and serving uses the two payloads for what
+//! each is good at: candidate scans run in the quantized domain (the
+//! bandwidth win), rows and the IVF re-rank come from the f16-refined
+//! leaves (the accuracy win — recall@10 returns to 1.0 for int8/int4).
+//!
+//! This makes `QuantizedKet` the one *documented deviation* from the
+//! [`FactoredRepr`] invariant that `inner` reproduces the dense dot of
+//! `write_row` outputs: here `inner`/`block_inner` are quantized-domain
+//! approximations of it, while `factors`/`write_row` expose the exact
+//! refined leaves. Consumers that need exact scores re-rank through rows;
+//! the IVF index does so automatically (see `index/ivf.rs`).
+
+use crate::embedding::{EmbeddingStore, Word2Ket};
+use crate::error::{Error, Result};
+use crate::kron::tree_term;
+use crate::repr::{kernels, FactorGeometry, FactoredRepr, Repr, MAX_ORDER};
+use crate::simd;
+use crate::snapshot::format::{f16_bits_to_f32, f32_to_f16_bits};
+
+/// Packed code widths the quantized-domain kernels support.
+pub const SUPPORTED_BITS: [usize; 4] = [1, 2, 4, 8];
+
+/// Upper bound on the leaf dimension: keeps the worst-case int8 code sum
+/// (`127² · q`) inside the kernels' exact `i32` accumulators.
+pub const MAX_LEAF_DIM: usize = 65536;
+
+/// Packed u32 words per `q`-long leaf at the given code width.
+pub fn words_per_leaf(q: usize, bits: usize) -> usize {
+    (q * bits).div_ceil(32)
+}
+
+/// Centered code value for width `bits` (the `c` column of the module-doc
+/// table).
+#[inline]
+fn code_val(u: u32, bits: usize) -> i32 {
+    match bits {
+        1 => 2 * u as i32 - 1,
+        2 => 2 * u as i32 - 3,
+        4 => u as i32 - 7,
+        _ => u as i32 - 127,
+    }
+}
+
+#[inline]
+fn encode_value(x: f32, scale: f32, bits: usize) -> u32 {
+    if bits == 1 {
+        // Sign bit; an all-zero leaf still gets well-defined codes (its
+        // scale is 0, so decode is 0 regardless).
+        return (x >= 0.0) as u32;
+    }
+    if scale <= 0.0 {
+        return 0;
+    }
+    match bits {
+        2 => ((x / scale + 3.0) * 0.5).round().clamp(0.0, 3.0) as u32,
+        4 => ((x / scale).round().clamp(-7.0, 7.0) + 7.0) as u32,
+        _ => ((x / scale).round().clamp(-127.0, 127.0) + 127.0) as u32,
+    }
+}
+
+/// Quantize one leaf into `codes` (length [`words_per_leaf`], fully
+/// overwritten including zero padding bits) and return its scale.
+/// Deterministic: `f32::round` half-away-from-zero, no data-dependent
+/// branching.
+pub fn encode_leaf(x: &[f32], bits: usize, codes: &mut [u32]) -> f32 {
+    debug_assert_eq!(codes.len(), words_per_leaf(x.len(), bits));
+    codes.fill(0);
+    let scale = match bits {
+        1 => x.iter().map(|v| v.abs()).sum::<f32>() / (x.len().max(1)) as f32,
+        2 => x.iter().fold(0.0f32, |m, v| m.max(v.abs())) / 3.0,
+        4 => x.iter().fold(0.0f32, |m, v| m.max(v.abs())) / 7.0,
+        _ => x.iter().fold(0.0f32, |m, v| m.max(v.abs())) / 127.0,
+    };
+    let per = 32 / bits;
+    for (i, &v) in x.iter().enumerate() {
+        codes[i / per] |= encode_value(v, scale, bits) << ((i % per) * bits);
+    }
+    scale
+}
+
+/// Dequantize one packed leaf: `out[i] = scale · c_i`.
+pub fn decode_leaf(codes: &[u32], bits: usize, scale: f32, out: &mut [f32]) {
+    let per = 32 / bits;
+    let mask = (1u32 << bits) - 1;
+    for (i, o) in out.iter_mut().enumerate() {
+        let u = (codes[i / per] >> ((i % per) * bits)) & mask;
+        *o = scale * code_val(u, bits) as f32;
+    }
+}
+
+/// In-domain dot of two packed leaves: `(sa·sb) · Σ c_a·c_b`, the code sum
+/// running through the exact-integer SIMD kernels.
+#[inline]
+pub fn leaf_dot(a: &[u32], sa: f32, b: &[u32], sb: f32, q: usize, bits: usize) -> f32 {
+    let idot = match bits {
+        1 => simd::idot_b1(a, b, q),
+        2 => simd::idot_b2(a, b, q),
+        4 => simd::idot_i4(a, b, q),
+        _ => simd::idot_i8(a, b, q),
+    };
+    (sa * sb) * idot as f32
+}
+
+/// Borrowed view over a quantized-ket payload triplet. [`QuantizedKet`]
+/// and the snapshot-mapped store both score and reconstruct through this
+/// one struct, so in-memory and mapped serving are bit-identical by
+/// construction (the same guarantee the float stores get from sharing
+/// `repr::kernels`).
+#[derive(Clone, Copy)]
+pub struct QketView<'a> {
+    /// Tensor order `n`.
+    pub order: usize,
+    /// CP rank `r`.
+    pub rank: usize,
+    /// Per-leaf length `q`.
+    pub leaf_dim: usize,
+    /// Packed code width (1, 2, 4 or 8).
+    pub bits: usize,
+    /// Packed codes, `words_per_leaf(q, bits)` u32 words per leaf.
+    pub codes: &'a [u32],
+    /// One scale per leaf.
+    pub scales: &'a [f32],
+    /// f16-refined leaves (decoded to f32), `q` values per leaf, same leaf
+    /// order as `codes`/`scales`.
+    pub leaves: &'a [f32],
+}
+
+impl<'a> QketView<'a> {
+    #[inline]
+    fn wpl(&self) -> usize {
+        words_per_leaf(self.leaf_dim, self.bits)
+    }
+
+    #[inline]
+    fn leaf_index(&self, w: usize, k: usize, j: usize) -> usize {
+        (w * self.rank + k) * self.order + j
+    }
+
+    /// Packed codes of word `w`'s `(k, j)` leaf.
+    #[inline]
+    pub fn leaf_codes(&self, w: usize, k: usize, j: usize) -> &'a [u32] {
+        let (l, wpl) = (self.leaf_index(w, k, j), self.wpl());
+        &self.codes[l * wpl..(l + 1) * wpl]
+    }
+
+    /// Scale of word `w`'s `(k, j)` leaf.
+    #[inline]
+    pub fn leaf_scale(&self, w: usize, k: usize, j: usize) -> f32 {
+        self.scales[self.leaf_index(w, k, j)]
+    }
+
+    /// f16-refined `(k, j)` leaf of word `w`.
+    #[inline]
+    pub fn refined_leaf(&self, w: usize, k: usize, j: usize) -> &'a [f32] {
+        let (l, q) = (self.leaf_index(w, k, j), self.leaf_dim);
+        &self.leaves[l * q..(l + 1) * q]
+    }
+
+    /// Coarse quantized-domain inner product `⟨row a, row b⟩`: the §2.3
+    /// rank-pair sum with every leaf dot taken in the quantized domain.
+    /// Deterministic and SIMD-level-independent (exact integer code sums;
+    /// same early-out-on-zero and summation order as
+    /// `kernels::product_of_dots`/`rank_pair_sum`).
+    pub fn inner(&self, a: usize, b: usize) -> f32 {
+        kernels::rank_pair_sum(self.rank, self.rank, |k, k2| {
+            let mut prod = 1.0f32;
+            for j in 0..self.order {
+                prod *= leaf_dot(
+                    self.leaf_codes(a, k, j),
+                    self.leaf_scale(a, k, j),
+                    self.leaf_codes(b, k2, j),
+                    self.leaf_scale(b, k2, j),
+                    self.leaf_dim,
+                    self.bits,
+                );
+                if prod == 0.0 {
+                    break;
+                }
+            }
+            prod
+        })
+    }
+
+    /// Coarse block scoring: `out[i] = inner(a, bs[i])`, bitwise equal to
+    /// the per-pair form.
+    pub fn block_inner(&self, a: usize, bs: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(bs.len(), out.len());
+        for (o, &b) in out.iter_mut().zip(bs) {
+            *o = self.inner(a, b);
+        }
+    }
+
+    /// Materialize row `id` from the *refined* leaves (truncating to
+    /// `out.len()` when `q^order > dim`) — the exact payload, mirroring
+    /// `Word2Ket::lookup_into`.
+    pub fn write_row(&self, id: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        let mut refs: [&[f32]; MAX_ORDER] = [&[]; MAX_ORDER];
+        for k in 0..self.rank {
+            for j in 0..self.order {
+                refs[j] = self.refined_leaf(id, k, j);
+            }
+            let term = tree_term(&refs[..self.order], false);
+            kernels::add_assign(out, &term);
+        }
+    }
+
+    /// Bytes a coarse scan touches per candidate word: packed codes plus
+    /// scales for all `r·n` leaves (the bandwidth denominator the benches
+    /// report).
+    pub fn coarse_bytes_per_word(&self) -> usize {
+        self.rank * self.order * (self.wpl() * 4 + 4)
+    }
+}
+
+/// A word2ket store with sub-byte quantized leaf payloads plus f16-refined
+/// leaves (see the module docs for the split contract). Built from a
+/// trained [`Word2Ket`] via [`QuantizedKet::from_word2ket`] or loaded from
+/// a snapshot.
+pub struct QuantizedKet {
+    vocab: usize,
+    dim: usize,
+    order: usize,
+    rank: usize,
+    leaf_dim: usize,
+    bits: usize,
+    codes: Vec<u32>,
+    scales: Vec<f32>,
+    leaves: Vec<f32>,
+}
+
+impl QuantizedKet {
+    /// Quantize a raw-CP word2ket store: every leaf is packed at `bits`
+    /// (∈ {1, 2, 4, 8}) with one scale, and the refinement copy of the
+    /// leaf is rounded through f16 *at construction* — so in-memory
+    /// serving is bit-identical to serving the store back off a snapshot
+    /// (whose leaf section is stored as f16).
+    ///
+    /// LayerNorm-ed stores are rejected: the quantized-domain identity
+    /// needs raw CP leaves. Truncated dims (`q^order > dim`) are accepted
+    /// for row serving but excluded from factored scoring by the
+    /// [`Repr::factored`] gate, same as [`Word2Ket`].
+    pub fn from_word2ket(w: &Word2Ket, bits: usize) -> Result<QuantizedKet> {
+        if w.layernorm() {
+            return Err(Error::Shape(
+                "quantized-ket requires raw CP leaves (disable LayerNorm before quantizing)"
+                    .into(),
+            ));
+        }
+        let (vocab, dim) = (w.vocab_size(), w.dim());
+        let (order, rank, q) = (w.order(), w.rank(), w.leaf_dim());
+        if !SUPPORTED_BITS.contains(&bits) {
+            return Err(Error::Shape(format!(
+                "quantized-ket bits must be one of {SUPPORTED_BITS:?}, got {bits}"
+            )));
+        }
+        let wpl = words_per_leaf(q, bits);
+        let n_leaves = vocab * rank * order;
+        let mut codes = vec![0u32; n_leaves * wpl];
+        let mut scales = vec![0.0f32; n_leaves];
+        let mut leaves = vec![0.0f32; n_leaves * q];
+        for id in 0..vocab {
+            for k in 0..rank {
+                for j in 0..order {
+                    let leaf = w.word(id).leaf(k, j);
+                    let l = (id * rank + k) * order + j;
+                    scales[l] = encode_leaf(leaf, bits, &mut codes[l * wpl..(l + 1) * wpl]);
+                    for (dst, &v) in leaves[l * q..(l + 1) * q].iter_mut().zip(leaf) {
+                        *dst = f16_bits_to_f32(f32_to_f16_bits(v));
+                    }
+                }
+            }
+        }
+        Self::from_parts(vocab, dim, order, rank, q, bits, codes, scales, leaves)
+    }
+
+    /// Assemble a store from raw payloads (the snapshot loader's entry
+    /// point), validating geometry and values as if the inputs were
+    /// hostile: unsupported widths, order/leaf-dim bounds, truncation
+    /// beyond the w2k envelope, length mismatches, non-finite or negative
+    /// scales, and nonzero padding bits are all typed errors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        vocab: usize,
+        dim: usize,
+        order: usize,
+        rank: usize,
+        leaf_dim: usize,
+        bits: usize,
+        codes: Vec<u32>,
+        scales: Vec<f32>,
+        leaves: Vec<f32>,
+    ) -> Result<QuantizedKet> {
+        if !SUPPORTED_BITS.contains(&bits) {
+            return Err(Error::Shape(format!(
+                "quantized-ket bits must be one of {SUPPORTED_BITS:?}, got {bits}"
+            )));
+        }
+        if !(2..=MAX_ORDER).contains(&order) {
+            return Err(Error::Shape(format!(
+                "quantized-ket order must be in 2..={MAX_ORDER}, got {order}"
+            )));
+        }
+        if rank == 0 || dim == 0 {
+            return Err(Error::Shape("quantized-ket rank and dim must be >= 1".into()));
+        }
+        if leaf_dim == 0 || leaf_dim > MAX_LEAF_DIM {
+            return Err(Error::Shape(format!(
+                "quantized-ket leaf_dim must be in 1..={MAX_LEAF_DIM}, got {leaf_dim}"
+            )));
+        }
+        // Same envelope the snapshot store enforces for w2k leaves: the
+        // full tensor covers the row, and truncation stays below 2^order
+        // (each leaf at most doubling past the covered prefix).
+        let full = leaf_dim.checked_pow(order as u32);
+        let envelope = dim.saturating_mul(1usize << order);
+        if !matches!(full, Some(f) if f >= dim && f <= envelope) {
+            return Err(Error::Shape(format!(
+                "quantized-ket geometry q={leaf_dim} order={order} incompatible with dim={dim}"
+            )));
+        }
+        let wpl = words_per_leaf(leaf_dim, bits);
+        let n_leaves = vocab
+            .checked_mul(rank)
+            .and_then(|v| v.checked_mul(order))
+            .ok_or_else(|| Error::Shape("quantized-ket leaf count overflows".into()))?;
+        if codes.len() != n_leaves * wpl {
+            return Err(Error::Shape(format!(
+                "quantized-ket codes length {} != {} leaves × {wpl} words",
+                codes.len(),
+                n_leaves
+            )));
+        }
+        if scales.len() != n_leaves {
+            return Err(Error::Shape(format!(
+                "quantized-ket scales length {} != {} leaves",
+                scales.len(),
+                n_leaves
+            )));
+        }
+        if leaves.len() != n_leaves * leaf_dim {
+            return Err(Error::Shape(format!(
+                "quantized-ket refined-leaves length {} != {} leaves × q={leaf_dim}",
+                leaves.len(),
+                n_leaves
+            )));
+        }
+        if let Some(bad) = scales.iter().find(|s| !s.is_finite() || **s < 0.0) {
+            return Err(Error::Shape(format!(
+                "quantized-ket scales must be finite and non-negative, found {bad}"
+            )));
+        }
+        // Nonzero padding bits would corrupt the whole-word b1 popcount
+        // (and claim codes past q) — reject them outright.
+        let used = leaf_dim * bits - (wpl - 1) * 32;
+        if used < 32 {
+            let pad_mask = !0u32 << used;
+            for l in 0..n_leaves {
+                if codes[l * wpl + wpl - 1] & pad_mask != 0 {
+                    return Err(Error::Shape(format!(
+                        "quantized-ket leaf {l} has nonzero padding bits"
+                    )));
+                }
+            }
+        }
+        Ok(QuantizedKet { vocab, dim, order, rank, leaf_dim, bits, codes, scales, leaves })
+    }
+
+    /// Tensor order `n`.
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    /// CP rank `r`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Per-leaf length `q`.
+    pub fn leaf_dim(&self) -> usize {
+        self.leaf_dim
+    }
+
+    /// Packed code width (1, 2, 4 or 8).
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Whether `q^order == dim` exactly (factored scoring requires it).
+    pub fn exact_dim(&self) -> bool {
+        self.leaf_dim.checked_pow(self.order as u32) == Some(self.dim)
+    }
+
+    /// Packed code words, all leaves concatenated.
+    pub fn codes(&self) -> &[u32] {
+        &self.codes
+    }
+
+    /// Per-leaf scales.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// f16-refined leaves (decoded to f32), all leaves concatenated.
+    pub fn leaves(&self) -> &[f32] {
+        &self.leaves
+    }
+
+    /// The borrowed payload view (shared with the snapshot store).
+    pub fn view(&self) -> QketView<'_> {
+        QketView {
+            order: self.order,
+            rank: self.rank,
+            leaf_dim: self.leaf_dim,
+            bits: self.bits,
+            codes: &self.codes,
+            scales: &self.scales,
+            leaves: &self.leaves,
+        }
+    }
+}
+
+impl EmbeddingStore for QuantizedKet {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_params(&self) -> usize {
+        // 4-byte units actually stored: one per u32 code word, one per f32
+        // scale, and half per refined leaf value (persisted as f16).
+        self.codes.len() + self.scales.len() + self.leaves.len().div_ceil(2)
+    }
+
+    fn lookup(&self, id: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.lookup_into(id, &mut out);
+        out
+    }
+
+    fn lookup_into(&self, id: usize, out: &mut [f32]) {
+        self.view().write_row(id, out);
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "quantized-ket(d={}, p={}, n={}, r={}, q={}, {}-bit codes + f16 leaves): {} params",
+            self.vocab,
+            self.dim,
+            self.order,
+            self.rank,
+            self.leaf_dim,
+            self.bits,
+            self.num_params()
+        )
+    }
+
+    fn repr(&self) -> Repr<'_> {
+        Repr::QuantizedKet(self)
+    }
+}
+
+impl FactoredRepr for QuantizedKet {
+    fn geometry(&self) -> FactorGeometry {
+        FactorGeometry { order: self.order, rank: self.rank, leaf_dim: self.leaf_dim }
+    }
+
+    fn factors<'s>(&'s self, id: usize, k: usize, out: &mut [&'s [f32]]) {
+        let v = self.view();
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = v.refined_leaf(id, k, j);
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "quantized_ket"
+    }
+
+    // Coarse contract (module docs): quantized-domain approximations of
+    // the row dot, not the trait's default exact identity.
+    fn inner(&self, a: usize, b: usize) -> f32 {
+        self.view().inner(a, b)
+    }
+
+    fn block_inner(&self, a: usize, bs: &[usize], out: &mut [f32]) {
+        self.view().block_inner(a, bs, out)
+    }
+
+    fn write_row(&self, id: usize, out: &mut [f32]) {
+        self.view().write_row(id, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::{available_levels, with_level, SimdLevel};
+    use crate::tensor::dot;
+    use crate::util::Rng;
+
+    #[test]
+    fn encode_decode_error_bounds_per_width() {
+        let mut rng = Rng::new(11);
+        let q = 16;
+        let x: Vec<f32> = (0..q).map(|_| rng.normal(0.0, 1.0)).collect();
+        let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for &(bits, steps) in &[(2usize, 3.0f32), (4, 7.0), (8, 127.0)] {
+            let mut codes = vec![0u32; words_per_leaf(q, bits)];
+            let scale = encode_leaf(&x, bits, &mut codes);
+            let mut back = vec![0.0f32; q];
+            decode_leaf(&codes, bits, scale, &mut back);
+            // Grid step is max_abs/steps; round-to-nearest halves it.
+            let bound = max_abs / steps * 0.5 + 1e-6;
+            for (i, (&orig, &dec)) in x.iter().zip(&back).enumerate() {
+                assert!(
+                    (orig - dec).abs() <= bound,
+                    "bits={bits} i={i}: |{orig} - {dec}| > {bound}"
+                );
+            }
+        }
+        // b1 preserves signs exactly.
+        let mut codes = vec![0u32; words_per_leaf(q, 1)];
+        let scale = encode_leaf(&x, 1, &mut codes);
+        let mut back = vec![0.0f32; q];
+        decode_leaf(&codes, 1, scale, &mut back);
+        for (&orig, &dec) in x.iter().zip(&back) {
+            assert_eq!(orig >= 0.0, dec >= 0.0);
+            assert!((dec.abs() - scale).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn encode_golden_pins_code_semantics() {
+        // int4: scale = 0.7/7 ≈ 0.1; codes round to the nearest grid step
+        // (inputs sit safely off the rounding ties).
+        let x = [0.7f32, -0.7, 0.06, -0.06, 0.24, 0.0];
+        let mut codes = vec![0u32; words_per_leaf(6, 4)];
+        let scale = encode_leaf(&x, 4, &mut codes);
+        assert!((scale - 0.1).abs() < 1e-7);
+        let per_code: Vec<u32> = (0..6).map(|i| (codes[i / 8] >> ((i % 8) * 4)) & 0xf).collect();
+        // c = round(x/0.1): 7, -7, 1, -1, 2, 0.
+        assert_eq!(per_code, vec![14, 0, 8, 6, 9, 7]);
+        // b2: scale = 0.9/3 = 0.3; u = clamp(round((x/0.3 + 3)/2), 0, 3).
+        let x = [0.9f32, -0.9, 0.1, -0.4];
+        let mut codes = vec![0u32; words_per_leaf(4, 2)];
+        let scale = encode_leaf(&x, 2, &mut codes);
+        assert!((scale - 0.3).abs() < 1e-7);
+        let per_code: Vec<u32> = (0..4).map(|i| (codes[0] >> (i * 2)) & 0x3).collect();
+        assert_eq!(per_code, vec![3, 0, 2, 1]);
+        // Zero-scale leaves decode to exactly zero.
+        let zeros = [0.0f32; 8];
+        for &bits in &SUPPORTED_BITS {
+            let mut codes = vec![0u32; words_per_leaf(8, bits)];
+            let scale = encode_leaf(&zeros, bits, &mut codes);
+            assert_eq!(scale, 0.0, "bits={bits}");
+            let mut back = [f32::NAN; 8];
+            decode_leaf(&codes, bits, scale, &mut back);
+            assert_eq!(back, [0.0f32; 8], "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn leaf_dot_matches_decoded_dot() {
+        let mut rng = Rng::new(23);
+        for &bits in &SUPPORTED_BITS {
+            for q in [1usize, 4, 16, 33, 100] {
+                let xa: Vec<f32> = (0..q).map(|_| rng.normal(0.0, 1.0)).collect();
+                let xb: Vec<f32> = (0..q).map(|_| rng.normal(0.0, 1.0)).collect();
+                let wpl = words_per_leaf(q, bits);
+                let (mut ca, mut cb) = (vec![0u32; wpl], vec![0u32; wpl]);
+                let sa = encode_leaf(&xa, bits, &mut ca);
+                let sb = encode_leaf(&xb, bits, &mut cb);
+                let got = leaf_dot(&ca, sa, &cb, sb, q, bits);
+                let (mut da, mut db) = (vec![0.0f32; q], vec![0.0f32; q]);
+                decode_leaf(&ca, bits, sa, &mut da);
+                decode_leaf(&cb, bits, sb, &mut db);
+                let want = dot(&da, &db);
+                // Same value up to f32 rounding of the two summation
+                // orders (the in-domain sum is exact in integers).
+                let tol = 1e-4 * (1.0 + want.abs());
+                assert!(
+                    (got - want).abs() <= tol,
+                    "bits={bits} q={q}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    fn sample(vocab: usize, dim: usize, order: usize, rank: usize, seed: u64) -> Word2Ket {
+        let mut rng = Rng::new(seed);
+        Word2Ket::random(vocab, dim, order, rank, &mut rng)
+    }
+
+    #[test]
+    fn rows_match_f16_rounded_word2ket() {
+        let w = sample(20, 16, 2, 2, 5);
+        let qk = QuantizedKet::from_word2ket(&w, 4).unwrap();
+        assert!(qk.exact_dim());
+        // Row = CP tree over f16-rounded leaves; independently reconstruct.
+        for id in [0usize, 7, 19] {
+            let mut refs: [&[f32]; MAX_ORDER] = [&[]; MAX_ORDER];
+            let mut want = vec![0.0f32; 16];
+            let rounded: Vec<Vec<f32>> = (0..2)
+                .flat_map(|k| {
+                    (0..2).map(move |j| (k, j)).collect::<Vec<_>>()
+                })
+                .map(|(k, j)| {
+                    w.word(id)
+                        .leaf(k, j)
+                        .iter()
+                        .map(|&v| f16_bits_to_f32(f32_to_f16_bits(v)))
+                        .collect()
+                })
+                .collect();
+            for k in 0..2 {
+                for j in 0..2 {
+                    refs[j] = &rounded[k * 2 + j];
+                }
+                let term = tree_term(&refs[..2], false);
+                kernels::add_assign(&mut want, &term);
+            }
+            assert_eq!(qk.lookup(id), want, "id={id}");
+            // And the refinement is close to the original row.
+            let orig = w.lookup(id);
+            for (a, b) in orig.iter().zip(&want) {
+                assert!((a - b).abs() <= 2e-3 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn coarse_inner_approximates_row_dot() {
+        let w = sample(40, 64, 2, 2, 9);
+        for &bits in &[4usize, 8] {
+            let qk = QuantizedKet::from_word2ket(&w, bits).unwrap();
+            for (a, b) in [(0usize, 1usize), (3, 30), (12, 12)] {
+                let coarse = FactoredRepr::inner(&qk, a, b);
+                let exact = dot(&qk.lookup(a), &qk.lookup(b));
+                let tol = 0.5 * (1.0 + exact.abs());
+                assert!(
+                    (coarse - exact).abs() <= tol,
+                    "bits={bits} ({a},{b}): coarse {coarse} vs exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coarse_inner_is_simd_level_invariant() {
+        let w = sample(12, 256, 2, 2, 13);
+        for &bits in &SUPPORTED_BITS {
+            let qk = QuantizedKet::from_word2ket(&w, bits).unwrap();
+            let want: Vec<f32> = with_level(SimdLevel::Scalar, || {
+                (0..12).map(|b| qk.view().inner(3, b)).collect()
+            });
+            for l in available_levels() {
+                let got: Vec<f32> =
+                    with_level(l, || (0..12).map(|b| qk.view().inner(3, b)).collect());
+                for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), w_.to_bits(), "bits={bits} level={l:?} b={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_inner_matches_per_pair() {
+        let w = sample(30, 81, 4, 2, 17);
+        let qk = QuantizedKet::from_word2ket(&w, 2).unwrap();
+        let bs: Vec<usize> = (0..30).collect();
+        let mut block = vec![0.0f32; 30];
+        qk.view().block_inner(5, &bs, &mut block);
+        for (i, &b) in bs.iter().enumerate() {
+            assert_eq!(block[i].to_bits(), qk.view().inner(5, b).to_bits());
+        }
+    }
+
+    #[test]
+    fn factors_expose_refined_leaves() {
+        let w = sample(10, 16, 2, 3, 21);
+        let qk = QuantizedKet::from_word2ket(&w, 8).unwrap();
+        let mut fs: [&[f32]; MAX_ORDER] = [&[]; MAX_ORDER];
+        qk.factors(4, 1, &mut fs[..2]);
+        assert_eq!(fs[0], qk.view().refined_leaf(4, 1, 0));
+        assert_eq!(fs[1], qk.view().refined_leaf(4, 1, 1));
+        // Refined leaves are exactly f16-representable.
+        for &v in fs[0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v);
+        }
+    }
+
+    #[test]
+    fn truncated_dim_serves_rows_but_is_not_exact() {
+        // dim 20, order 2 -> q = 5, 25 > 20: rows truncate like Word2Ket.
+        let w = sample(15, 20, 2, 1, 25);
+        let qk = QuantizedKet::from_word2ket(&w, 4).unwrap();
+        assert!(!qk.exact_dim());
+        assert_eq!(qk.lookup(3).len(), 20);
+    }
+
+    #[test]
+    fn from_parts_rejects_hostile_payloads() {
+        let w = sample(4, 16, 2, 1, 33);
+        let qk = QuantizedKet::from_word2ket(&w, 4).unwrap();
+        let (codes, scales, leaves) =
+            (qk.codes().to_vec(), qk.scales().to_vec(), qk.leaves().to_vec());
+        let ok = |c: Vec<u32>, s: Vec<f32>, l: Vec<f32>, bits: usize| {
+            QuantizedKet::from_parts(4, 16, 2, 1, 4, bits, c, s, l)
+        };
+        assert!(ok(codes.clone(), scales.clone(), leaves.clone(), 4).is_ok());
+        // Unsupported width.
+        assert!(ok(codes.clone(), scales.clone(), leaves.clone(), 3).is_err());
+        // NaN / negative / infinite scales.
+        for bad in [f32::NAN, f32::INFINITY, -1.0] {
+            let mut s = scales.clone();
+            s[1] = bad;
+            assert!(ok(codes.clone(), s, leaves.clone(), 4).is_err(), "scale {bad}");
+        }
+        // Geometry mismatches.
+        assert!(ok(codes[..codes.len() - 1].to_vec(), scales.clone(), leaves.clone(), 4).is_err());
+        assert!(ok(codes.clone(), scales[1..].to_vec(), leaves.clone(), 4).is_err());
+        assert!(ok(codes.clone(), scales.clone(), leaves[1..].to_vec(), 4).is_err());
+        // Nonzero padding bits (q=4 at 4 bits uses 16 of 32 word bits).
+        let mut c = codes.clone();
+        c[0] |= 1 << 20;
+        assert!(ok(c, scales.clone(), leaves.clone(), 4).is_err());
+        // Degenerate geometry.
+        assert!(QuantizedKet::from_parts(4, 16, 1, 1, 16, 4, vec![], vec![], vec![]).is_err());
+        assert!(QuantizedKet::from_parts(4, 16, 2, 0, 4, 4, vec![], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn space_story_beats_float_factors() {
+        // q = 16: int8 leaves pack 4× (4 words/leaf), int4 8×, b2/b1 both
+        // hit the one-word-per-leaf floor, so the total is dominated by the
+        // shared f16 refinement payload (half the float bytes).
+        let w = sample(100, 256, 2, 2, 41);
+        let float_params = w.num_params();
+        for (bits, min_gain) in [(8usize, 1.2f64), (4, 1.4), (2, 1.55), (1, 1.55)] {
+            let qk = QuantizedKet::from_word2ket(&w, bits).unwrap();
+            let gain = float_params as f64 / qk.num_params() as f64;
+            assert!(gain >= min_gain, "bits={bits}: gain {gain:.2} < {min_gain}");
+        }
+    }
+}

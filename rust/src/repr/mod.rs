@@ -30,6 +30,7 @@ use crate::embedding::{
     EmbeddingStore, HashedEmbedding, LowRankEmbedding, QuantizedEmbedding, RegularEmbedding,
     Word2Ket, Word2KetXS,
 };
+use crate::quant::QuantizedKet;
 use crate::serving::ShardedCache;
 use crate::snapshot::SnapshotStore;
 
@@ -128,6 +129,10 @@ pub enum Repr<'a> {
     LowRank(&'a LowRankEmbedding),
     /// Hashing-trick baseline.
     Hashed(&'a HashedEmbedding),
+    /// Sub-byte quantized word2ket payloads with an f16 refinement (see
+    /// [`crate::quant`]). Its factored handle follows the *coarse
+    /// contract*: `inner`/`block_inner` score in the quantized domain.
+    QuantizedKet(&'a QuantizedKet),
     /// Snapshot-mapped store (any kind, served off the file).
     Snapshot(&'a SnapshotStore),
     /// The sharded hot-row cache wrapper; [`Repr::resolve`] peels it.
@@ -165,8 +170,28 @@ impl<'a> Repr<'a> {
         match self {
             Repr::Word2Ket(w) if !w.layernorm() && w.exact_dim() => Some(w),
             Repr::Word2KetXS(xs) if xs.exact_dim() => Some(xs),
+            // Quantized-ket handles score coarsely (`inner` is a
+            // quantized-domain approximation — see `crate::quant`); callers
+            // detect this via `payload_bits` and re-rank through rows.
+            Repr::QuantizedKet(qk) if qk.exact_dim() => Some(qk),
             Repr::Snapshot(s) if s.factored() => Some(s),
             _ => None,
+        }
+    }
+
+    /// Effective stored precision of the factor payload this representation
+    /// scores with, in bits per value: 32 for float stores, 16/8 for
+    /// f16/int8 snapshot payloads, and the packed code width for
+    /// quantized-ket stores. Serving surfaces report it (the STATS
+    /// `payload_bits` field / `w2k_payload_bits` gauge), and the IVF index
+    /// treats `< 32` as "coarse scores — re-rank the top candidates through
+    /// exact rows".
+    pub fn payload_bits(self) -> usize {
+        match self {
+            Repr::QuantizedKet(qk) => qk.bits(),
+            Repr::Quantized(q) => q.bits(),
+            Repr::Snapshot(s) => s.payload_bits(),
+            _ => 32,
         }
     }
 }
@@ -187,7 +212,7 @@ mod tests {
         std::env::temp_dir().join(format!("w2k_repr_test_{}_{}.snap", std::process::id(), name))
     }
 
-    fn all_kinds() -> [EmbeddingKind; 6] {
+    fn all_kinds() -> [EmbeddingKind; 7] {
         [
             EmbeddingKind::Regular,
             EmbeddingKind::Word2Ket,
@@ -195,6 +220,7 @@ mod tests {
             EmbeddingKind::Quantized,
             EmbeddingKind::LowRank,
             EmbeddingKind::Hashed,
+            EmbeddingKind::QuantizedKet,
         ]
     }
 
@@ -453,6 +479,22 @@ mod tests {
         assert!(matches!(Repr::resolve(&cached), Repr::Word2KetXS(_)));
         assert!(Repr::resolve(&cached).factored().is_some());
         assert!(matches!(cached.repr(), Repr::Cached(_)));
+    }
+
+    /// `payload_bits` reports the stored factor precision: packed code
+    /// width for quantized payloads, 32 for everything served as f32.
+    #[test]
+    fn payload_bits_reports_stored_precision() {
+        let mut rng = Rng::new(11);
+        let w2k = Word2Ket::random(10, 16, 2, 2, &mut rng);
+        assert_eq!(Repr::resolve(&w2k).payload_bits(), 32);
+        let qk = crate::quant::QuantizedKet::from_word2ket(&w2k, 2).unwrap();
+        assert_eq!(Repr::resolve(&qk).payload_bits(), 2);
+        let cached = ShardedCache::new(Box::new(qk), 2, 8);
+        assert_eq!(Repr::resolve(&cached).payload_bits(), 2);
+        let q = QuantizedEmbedding::random(8, 6, 5, &mut rng);
+        assert_eq!(Repr::resolve(&q).payload_bits(), 5);
+        assert_eq!(Repr::Opaque.payload_bits(), 32);
     }
 
     /// Satellite acceptance: `space_saving_rate` must not divide by zero

@@ -130,6 +130,11 @@ pub struct ServingStats {
     /// 2 = avx2+fma). Constant per process; on the wire so operators can
     /// see which kernel set a replica runs without shell access.
     pub simd_level: u64,
+    /// Stored precision of the served factor payload in bits per value
+    /// ([`crate::repr::Repr::payload_bits`]): 32 for float stores, the
+    /// packed code width (16/8/4/2/1) for quantized payloads. Changes on
+    /// hot swap; the cluster roll-up reports the maximum across replicas.
+    pub payload_bits: u64,
 }
 
 impl ServingStats {
@@ -152,6 +157,7 @@ impl ServingStats {
             self.snapshot_bytes as f64,
             self.accept_errors as f64,
             self.simd_level as f64,
+            self.payload_bits as f64,
         ]
     }
 }
@@ -643,6 +649,7 @@ impl ServingState {
             snapshot_bytes: m.snapshot_bytes,
             accept_errors: self.accept_errors.load(Ordering::Relaxed),
             simd_level: crate::simd::level().code() as u64,
+            payload_bits: crate::repr::Repr::resolve(m.store.as_ref()).payload_bits() as u64,
         }
     }
 
@@ -682,6 +689,9 @@ impl ServingState {
         // its numeric code (0 = scalar, 1 = sse2, 2 = avx2+fma).
         let simd = crate::simd::level();
         let _ = writeln!(out, "w2k_simd_level{{level=\"{}\"}} {}", simd.name(), simd.code());
+        // Serving-payload precision gauge: 32 = float rows, below that the
+        // factor payload is quantized to that many bits per value.
+        let _ = writeln!(out, "w2k_payload_bits {}", s.payload_bits);
         self.obs.render_into(&mut out);
         out.push_str("# EOF\n");
         out
@@ -853,6 +863,47 @@ mod tests {
         assert_eq!(s.accept_errors, 0);
         // Not a traffic counter: reports the process's kernel set.
         assert_eq!(s.simd_level, crate::simd::level().code() as u64);
+        // Float store: the served payload is full-precision.
+        assert_eq!(s.payload_bits, 32);
+        st.shutdown();
+    }
+
+    /// A server over a sub-byte store reports the packed code width in
+    /// STATS and as the `w2k_payload_bits` gauge, and still serves exact
+    /// rows / sane KNN through the coarse-scan + re-rank path.
+    #[test]
+    fn quantized_store_reports_payload_bits() {
+        let mut rng = Rng::new(6);
+        let w2k = crate::embedding::Word2Ket::random(200, 16, 2, 2, &mut rng);
+        let qk = crate::quant::QuantizedKet::from_word2ket(&w2k, 4).unwrap();
+        let rows: Vec<Vec<f32>> = (0..200).map(|id| qk.lookup(id)).collect();
+        let st = ServingState::new(
+            Box::new(qk),
+            &ServingConfig { batch_window_us: 50, ..Default::default() },
+            &IndexConfig {
+                kind: IndexKind::Ivf,
+                nlist: 4,
+                nprobe: 4,
+                cosine: false,
+                scan_threads: 1,
+            },
+        );
+        let s = st.stats();
+        assert_eq!(s.payload_bits, 4);
+        assert!(
+            st.metrics_text().contains("w2k_payload_bits 4\n"),
+            "gauge missing: {}",
+            st.metrics_text()
+        );
+        // Served rows are the exact refined rows; KNN scores are exact
+        // dense scores (re-ranked), not coarse quantized ones.
+        let got = st.lookup_rows(vec![3]).unwrap();
+        assert_eq!(got[0], rows[3]);
+        let ns = st.knn(Query::Id(3), 5).unwrap();
+        for n in &ns {
+            let exact = crate::tensor::dot(&rows[3], &rows[n.id]);
+            assert_eq!(n.score.to_bits(), exact.to_bits(), "id {}", n.id);
+        }
         st.shutdown();
     }
 

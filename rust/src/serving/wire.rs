@@ -112,7 +112,7 @@ pub const MAX_IDS: u32 = 1 << 16;
 pub const MAX_PATH_BYTES: u32 = 4096;
 
 /// Number of f64 values in a STATS response payload.
-pub const STATS_FIELDS: usize = 13;
+pub const STATS_FIELDS: usize = 14;
 
 /// The one canonical STATS field list. The binary payload is these values
 /// in this order; the text `STATS` line is `name=value` pairs in this order
@@ -142,6 +142,11 @@ pub const STATS_FIELD_NAMES: [&str; STATS_FIELDS] = [
     // replicas. Appended after accept_errors for the same trailing-field
     // back-compat reason.
     "simd_level",
+    // Stored precision of the served factor payload in bits per value
+    // (32 = float, 16/8/4/2/1 = quantized — see `crate::quant`); the
+    // cluster roll-up reports the maximum across replicas. Trailing for
+    // the same back-compat reason.
+    "payload_bits",
 ];
 
 /// Text-protocol rendering of one STATS field: microsecond percentiles as
@@ -689,6 +694,12 @@ pub struct WireStats {
     /// 2 = avx2+fma). The cluster roll-up reports the minimum across
     /// replicas.
     pub simd_level: u64,
+    /// Stored precision of the served factor payload in bits per value
+    /// ([`crate::repr::Repr::payload_bits`]): 32 for float stores, the
+    /// packed code width for quantized payloads. The cluster roll-up
+    /// reports the *maximum* across replicas (the least-compressed
+    /// serving payload in the fleet).
+    pub payload_bits: u64,
 }
 
 impl WireStats {
@@ -709,6 +720,7 @@ impl WireStats {
             snapshot_bytes: xs[10] as u64,
             accept_errors: xs[11] as u64,
             simd_level: xs[12] as u64,
+            payload_bits: xs[13] as u64,
         }
     }
 
@@ -729,6 +741,7 @@ impl WireStats {
             self.snapshot_bytes as f64,
             self.accept_errors as f64,
             self.simd_level as f64,
+            self.payload_bits as f64,
         ]
     }
 }
@@ -1243,6 +1256,7 @@ mod tests {
             snapshot_bytes: 4096,
             accept_errors: 5,
             simd_level: 2,
+            payload_bits: 4,
         };
         assert_eq!(WireStats::from_fields(&s.fields()), s);
         assert_eq!(STATS_FIELD_NAMES.len(), s.fields().len());

@@ -42,6 +42,18 @@
 //! Goldens plus randomized property tests (lengths 0..64 and large lengths
 //! with tail remainders 1–7) enforce the contract in `cargo test`, and a
 //! forced `W2K_SIMD=scalar` CI leg keeps the portable fallback from rotting.
+//!
+//! # Quantized-domain integer kernels
+//!
+//! The `quant/` subsystem scores bit-packed leaves without dequantizing, via
+//! four integer primitives: [`idot_b1`] (sign bits: XNOR/popcount),
+//! [`idot_b2`], [`idot_i4`] and [`idot_i8`] (packed 2/4/8-bit codes:
+//! widen-multiply-accumulate). They dispatch through the same level
+//! machinery, but their parity story is *stronger* than the float kernels':
+//! the accumulation is exact `i32` arithmetic, so **any** summation order
+//! yields identical bits and every level agrees with the scalar definition
+//! by construction. Goldens below still pin the scalar definition so the
+//! code semantics (LSB-first packing, centered code values) cannot drift.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Mutex;
@@ -263,6 +275,77 @@ pub fn kron2_accumulate_at(l: SimdLevel, a: &[f32], b: &[f32], acc: &mut [f32]) 
     kron2_dispatch(l.min(detect()), a, b, acc)
 }
 
+// ---------------------------------------------------------------------------
+// Quantized-domain integer dot kernels.
+//
+// Inputs are LSB-first bit-packed code words as produced by
+// `quant::encode_leaf`: code `i` of a `bits`-wide payload occupies bits
+// `(i % (32/bits)) * bits ..` of word `i / (32/bits)`. Padding bits past
+// code `q-1` in the final word must be zero for `idot_b1` (it popcounts
+// whole words); the sub-byte/byte kernels never read past code `q-1`.
+// Results are exact i32 sums of centered code products; callers multiply by
+// the two per-leaf scales to recover the approximate f32 dot. The caller
+// must keep `q <= 65536` so the i8 worst case (127² per code) cannot
+// overflow the i32 accumulator — `quant` enforces this at construction.
+// ---------------------------------------------------------------------------
+
+/// Sign-bit dot: `q - 2·popcount(a XOR b)` over the packed prefix of `q`
+/// bits — each agreeing bit contributes `+1`, each disagreeing bit `-1`
+/// (codes are `2u - 1 ∈ {-1, +1}`).
+#[inline]
+pub fn idot_b1(a: &[u32], b: &[u32], q: usize) -> i32 {
+    idot_b1_dispatch(level(), a, b, q)
+}
+
+/// [`idot_b1`] at an explicit level (clamped to what the CPU supports).
+#[inline]
+pub fn idot_b1_at(l: SimdLevel, a: &[u32], b: &[u32], q: usize) -> i32 {
+    idot_b1_dispatch(l.min(detect()), a, b, q)
+}
+
+/// 2-bit code dot: `Σ (2·ua-3)(2·ub-3)` over `q` packed codes
+/// (codes decode to `{-3, -1, +1, +3}`).
+#[inline]
+pub fn idot_b2(a: &[u32], b: &[u32], q: usize) -> i32 {
+    idot_b2_dispatch(level(), a, b, q)
+}
+
+/// [`idot_b2`] at an explicit level (clamped to what the CPU supports).
+#[inline]
+pub fn idot_b2_at(l: SimdLevel, a: &[u32], b: &[u32], q: usize) -> i32 {
+    idot_b2_dispatch(l.min(detect()), a, b, q)
+}
+
+/// 4-bit code dot: `Σ (ua-7)(ub-7)` over `q` packed codes
+/// (codes decode to `-7..=7`).
+#[inline]
+pub fn idot_i4(a: &[u32], b: &[u32], q: usize) -> i32 {
+    idot_i4_dispatch(level(), a, b, q)
+}
+
+/// [`idot_i4`] at an explicit level (clamped to what the CPU supports).
+#[inline]
+pub fn idot_i4_at(l: SimdLevel, a: &[u32], b: &[u32], q: usize) -> i32 {
+    idot_i4_dispatch(l.min(detect()), a, b, q)
+}
+
+/// 8-bit code dot: `Σ (ua-127)(ub-127)` over `q` packed codes
+/// (codes decode to `-127..=127`).
+///
+/// Codes must lie in `0..=254` — the encoder's range. Byte value 255 is
+/// outside the contract: the vector paths compute `u - 127` in wrapping
+/// `i8`, which maps 255 to `-128` where the scalar definition says `+128`.
+#[inline]
+pub fn idot_i8(a: &[u32], b: &[u32], q: usize) -> i32 {
+    idot_i8_dispatch(level(), a, b, q)
+}
+
+/// [`idot_i8`] at an explicit level (clamped to what the CPU supports).
+#[inline]
+pub fn idot_i8_at(l: SimdLevel, a: &[u32], b: &[u32], q: usize) -> i32 {
+    idot_i8_dispatch(l.min(detect()), a, b, q)
+}
+
 // The dispatchers require `l <= detect()`: both call sites above guarantee
 // it (the cached level is stored clamped; `*_at` clamps explicitly), which
 // is what makes the `unsafe` target-feature calls sound.
@@ -316,6 +399,55 @@ fn kron2_dispatch(l: SimdLevel, a: &[f32], b: &[f32], acc: &mut [f32]) {
         // SAFETY: as above.
         SimdLevel::Avx2Fma => unsafe { x86::kron2_avx2(a, b, acc) },
         _ => scalar::kron2_accumulate(a, b, acc),
+    }
+}
+
+// The SSE2 rows below fall back to the scalar definition for b1/b2/i4: the
+// byte-shuffle tricks the vector popcount and nibble/crumb unpacks rely on
+// need SSSE3+, which is above the x86_64 baseline SSE2 guarantees. Only i8
+// has a genuine SSE2 path (unpack + arithmetic-shift sign extension +
+// `pmaddwd`). Results are identical either way — integer sums are exact.
+
+#[inline]
+fn idot_b1_dispatch(l: SimdLevel, a: &[u32], b: &[u32], q: usize) -> i32 {
+    match l {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `l <= detect()`, so the required CPU features are present.
+        SimdLevel::Avx2Fma => unsafe { x86::idot_b1_avx2(a, b, q) },
+        _ => scalar::idot_b1(a, b, q),
+    }
+}
+
+#[inline]
+fn idot_b2_dispatch(l: SimdLevel, a: &[u32], b: &[u32], q: usize) -> i32 {
+    match l {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `l <= detect()`, so the required CPU features are present.
+        SimdLevel::Avx2Fma => unsafe { x86::idot_b2_avx2(a, b, q) },
+        _ => scalar::idot_b2(a, b, q),
+    }
+}
+
+#[inline]
+fn idot_i4_dispatch(l: SimdLevel, a: &[u32], b: &[u32], q: usize) -> i32 {
+    match l {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `l <= detect()`, so the required CPU features are present.
+        SimdLevel::Avx2Fma => unsafe { x86::idot_i4_avx2(a, b, q) },
+        _ => scalar::idot_i4(a, b, q),
+    }
+}
+
+#[inline]
+fn idot_i8_dispatch(l: SimdLevel, a: &[u32], b: &[u32], q: usize) -> i32 {
+    match l {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `l <= detect()`, so the required CPU features are present.
+        SimdLevel::Sse2 => unsafe { x86::idot_i8_sse2(a, b, q) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        SimdLevel::Avx2Fma => unsafe { x86::idot_i8_avx2(a, b, q) },
+        _ => scalar::idot_i8(a, b, q),
     }
 }
 
@@ -373,6 +505,53 @@ mod scalar {
             let end = ((i + 1) * q).min(acc.len());
             axpy(x, b, &mut acc[i * q..end]);
         }
+    }
+
+    /// Code `i` of an LSB-first `bits`-wide packing (`bits ∈ {2, 4, 8}`,
+    /// always a power of two, so codes never straddle word boundaries).
+    #[inline]
+    fn code_at(words: &[u32], i: usize, bits: usize) -> i32 {
+        let per = 32 / bits;
+        ((words[i / per] >> ((i % per) * bits)) & ((1u32 << bits) - 1)) as i32
+    }
+
+    /// Canonical sign-bit dot. Popcounts *whole* words, which is why
+    /// padding bits past `q` must be zero (zero XOR zero contributes
+    /// nothing).
+    pub(super) fn idot_b1(a: &[u32], b: &[u32], q: usize) -> i32 {
+        let words = q.div_ceil(32);
+        let mut pop = 0u32;
+        for (&x, &y) in a[..words].iter().zip(&b[..words]) {
+            pop += (x ^ y).count_ones();
+        }
+        q as i32 - 2 * pop as i32
+    }
+
+    /// Canonical 2-bit dot over codes decoding to `2u - 3`.
+    pub(super) fn idot_b2(a: &[u32], b: &[u32], q: usize) -> i32 {
+        let mut s = 0i32;
+        for i in 0..q {
+            s += (2 * code_at(a, i, 2) - 3) * (2 * code_at(b, i, 2) - 3);
+        }
+        s
+    }
+
+    /// Canonical 4-bit dot over codes decoding to `u - 7`.
+    pub(super) fn idot_i4(a: &[u32], b: &[u32], q: usize) -> i32 {
+        let mut s = 0i32;
+        for i in 0..q {
+            s += (code_at(a, i, 4) - 7) * (code_at(b, i, 4) - 7);
+        }
+        s
+    }
+
+    /// Canonical 8-bit dot over codes decoding to `u - 127`.
+    pub(super) fn idot_i8(a: &[u32], b: &[u32], q: usize) -> i32 {
+        let mut s = 0i32;
+        for i in 0..q {
+            s += (code_at(a, i, 8) - 127) * (code_at(b, i, 8) - 127);
+        }
+        s
     }
 }
 
@@ -561,6 +740,81 @@ mod tests {
             kron2_accumulate_at(l, &[0.0], &[1.0, 1.0], &mut acc);
             assert_eq!(acc[0].to_bits(), 0.0f32.to_bits(), "level={:?}", l);
             assert_eq!(acc[1].to_bits(), 0.0f32.to_bits(), "level={:?}", l);
+        }
+    }
+
+    /// LSB-first packing of one code stream, padding bits zero — the same
+    /// layout `quant::encode_leaf` produces.
+    fn pack(codes: &[u32], bits: usize) -> Vec<u32> {
+        let per = 32 / bits;
+        let mut words = vec![0u32; (codes.len() * bits).div_ceil(32)];
+        for (i, &c) in codes.iter().enumerate() {
+            words[i / per] |= c << ((i % per) * bits);
+        }
+        words
+    }
+
+    #[test]
+    fn quant_idot_goldens_pin_scalar_semantics() {
+        // b1: a = +1,-1,+1,+1,-1  b = +1,+1,+1,-1,-1 -> 1-1+1-1+1 = 1
+        assert_eq!(idot_b1_at(SimdLevel::Scalar, &[0b01101], &[0b00111], 5), 1);
+        // b2: a codes [0,3,2] -> {-3,+3,+1}; b codes [1,1,0] -> {-1,-1,-3}
+        //     dot = 3 - 3 - 3 = -3
+        let (a, b) = (pack(&[0, 3, 2], 2), pack(&[1, 1, 0], 2));
+        assert_eq!(idot_b2_at(SimdLevel::Scalar, &a, &b, 3), -3);
+        // i4: a codes [14,0,7] -> {+7,-7,0}; b codes [13,1,3] -> {+6,-6,-4}
+        //     dot = 42 + 42 + 0 = 84
+        let (a, b) = (pack(&[14, 0, 7], 4), pack(&[13, 1, 3], 4));
+        assert_eq!(idot_i4_at(SimdLevel::Scalar, &a, &b, 3), 84);
+        // i8: a codes [254,0] -> {+127,-127}; b codes [127,130] -> {0,+3}
+        //     dot = 0 - 381 = -381
+        let (a, b) = (pack(&[254, 0], 8), pack(&[127, 130], 8));
+        assert_eq!(idot_i8_at(SimdLevel::Scalar, &a, &b, 2), -381);
+        // Empty payloads are zero at every width.
+        for l in available_levels() {
+            assert_eq!(idot_b1_at(l, &[], &[], 0), 0, "level={l:?}");
+            assert_eq!(idot_i8_at(l, &[], &[], 0), 0, "level={l:?}");
+        }
+    }
+
+    #[test]
+    fn quant_idot_parity_across_levels() {
+        let mut rng = Rng(0x5eed_0010);
+        let mut code = |bound: u32| {
+            // Advance the xorshift state and draw a code below `bound`.
+            let _ = rng.next_f32();
+            ((rng.0 >> 24) as u32) % bound
+        };
+        let qs: Vec<usize> = {
+            let mut v: Vec<usize> = (0..=40).collect();
+            v.extend([63, 64, 65, 127, 128, 129, 255, 256, 1021, 4096]);
+            v
+        };
+        for &q in &qs {
+            // (bits, exclusive code bound): i8 stops at 255 — see idot_i8.
+            for &(bits, bound) in &[(1usize, 2u32), (2, 4), (4, 16), (8, 255)] {
+                let ca: Vec<u32> = (0..q).map(|_| code(bound)).collect();
+                let cb: Vec<u32> = (0..q).map(|_| code(bound)).collect();
+                let (a, b) = (pack(&ca, bits), pack(&cb, bits));
+                let at = |l: SimdLevel| match bits {
+                    1 => idot_b1_at(l, &a, &b, q),
+                    2 => idot_b2_at(l, &a, &b, q),
+                    4 => idot_i4_at(l, &a, &b, q),
+                    _ => idot_i8_at(l, &a, &b, q),
+                };
+                let want = at(SimdLevel::Scalar);
+                for l in available_levels() {
+                    assert_eq!(at(l), want, "idot bits={bits} q={q} level={l:?}");
+                }
+                // The cached-level entry points must agree too.
+                let got = match bits {
+                    1 => idot_b1(&a, &b, q),
+                    2 => idot_b2(&a, &b, q),
+                    4 => idot_i4(&a, &b, q),
+                    _ => idot_i8(&a, &b, q),
+                };
+                assert_eq!(got, want, "idot bits={bits} q={q} cached level");
+            }
         }
     }
 

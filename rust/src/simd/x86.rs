@@ -187,6 +187,213 @@ pub(super) unsafe fn kron2_sse2(a: &[f32], b: &[f32], acc: &mut [f32]) {
     kron2_partial_tail(a, b, acc, q, full);
 }
 
+// ---------------------------------------------------------------------------
+// Quantized-domain integer dot kernels. Accumulation is exact i32
+// arithmetic, so parity with the scalar definitions holds for *any* lane
+// layout — these pick whatever unpack is fastest. SSE2 lacks the byte
+// shuffle the b1 popcount and the nibble/crumb unpacks want (SSSE3+), so
+// only i8 gets a genuine SSE2 path; the dispatcher falls back to scalar
+// for the others.
+// ---------------------------------------------------------------------------
+
+/// Sum the 8 i32 lanes of an accumulator.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(acc: __m256i) -> i32 {
+    let mut parts = [0i32; 8];
+    _mm256_storeu_si256(parts.as_mut_ptr() as *mut __m256i, acc);
+    parts.iter().sum()
+}
+
+/// Widen two centered-code byte vectors (values within i8) to i16 halves
+/// and multiply-accumulate their products into `acc`'s i32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mac_epi8(acc: __m256i, ca: __m256i, cb: __m256i) -> __m256i {
+    let a_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(ca));
+    let a_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(ca));
+    let b_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(cb));
+    let b_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(cb));
+    let acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a_lo, b_lo));
+    _mm256_add_epi32(acc, _mm256_madd_epi16(a_hi, b_hi))
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn idot_b1_avx2(a: &[u32], b: &[u32], q: usize) -> i32 {
+    let words = q.div_ceil(32);
+    let vec_words = words / 8 * 8;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut pop = 0i64;
+    if vec_words > 0 {
+        // Per-nibble popcount LUT (Mula's method): shuffle each nibble
+        // through a 0..15 -> bit-count table, add low+high counts, then
+        // SAD against zero to widen the byte counts into u64 lanes.
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let mut acc = _mm256_setzero_si256();
+        let mut w = 0;
+        while w < vec_words {
+            let x = _mm256_xor_si256(
+                _mm256_loadu_si256(ap.add(w) as *const __m256i),
+                _mm256_loadu_si256(bp.add(w) as *const __m256i),
+            );
+            let lo = _mm256_and_si256(x, low);
+            let hi = _mm256_and_si256(_mm256_srli_epi32::<4>(x), low);
+            let cnt =
+                _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+            w += 8;
+        }
+        let mut parts = [0i64; 4];
+        _mm256_storeu_si256(parts.as_mut_ptr() as *mut __m256i, acc);
+        pop = parts.iter().sum();
+    }
+    for w in vec_words..words {
+        pop += i64::from((*ap.add(w) ^ *bp.add(w)).count_ones());
+    }
+    q as i32 - 2 * pop as i32
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn idot_b2_avx2(a: &[u32], b: &[u32], q: usize) -> i32 {
+    let vec_words = (q / 16) / 8 * 8; // 128 codes per 256-bit chunk
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mask = _mm256_set1_epi8(0x03);
+    let bias = _mm256_set1_epi8(3);
+    let mut acc = _mm256_setzero_si256();
+    let mut w = 0;
+    while w < vec_words {
+        let xa = _mm256_loadu_si256(ap.add(w) as *const __m256i);
+        let xb = _mm256_loadu_si256(bp.add(w) as *const __m256i);
+        // Crumb r of byte k is code 4k + r — the same position in both
+        // operands, so each of the four shift rounds pairs up correctly.
+        // c = 2u - 3 via u+u then -3, all within i8.
+        let ua0 = _mm256_and_si256(xa, mask);
+        let ua1 = _mm256_and_si256(_mm256_srli_epi16::<2>(xa), mask);
+        let ua2 = _mm256_and_si256(_mm256_srli_epi16::<4>(xa), mask);
+        let ua3 = _mm256_and_si256(_mm256_srli_epi16::<6>(xa), mask);
+        let ub0 = _mm256_and_si256(xb, mask);
+        let ub1 = _mm256_and_si256(_mm256_srli_epi16::<2>(xb), mask);
+        let ub2 = _mm256_and_si256(_mm256_srli_epi16::<4>(xb), mask);
+        let ub3 = _mm256_and_si256(_mm256_srli_epi16::<6>(xb), mask);
+        acc = mac_epi8(
+            acc,
+            _mm256_sub_epi8(_mm256_add_epi8(ua0, ua0), bias),
+            _mm256_sub_epi8(_mm256_add_epi8(ub0, ub0), bias),
+        );
+        acc = mac_epi8(
+            acc,
+            _mm256_sub_epi8(_mm256_add_epi8(ua1, ua1), bias),
+            _mm256_sub_epi8(_mm256_add_epi8(ub1, ub1), bias),
+        );
+        acc = mac_epi8(
+            acc,
+            _mm256_sub_epi8(_mm256_add_epi8(ua2, ua2), bias),
+            _mm256_sub_epi8(_mm256_add_epi8(ub2, ub2), bias),
+        );
+        acc = mac_epi8(
+            acc,
+            _mm256_sub_epi8(_mm256_add_epi8(ua3, ua3), bias),
+            _mm256_sub_epi8(_mm256_add_epi8(ub3, ub3), bias),
+        );
+        w += 8;
+    }
+    let mut s = hsum_epi32(acc);
+    for i in vec_words * 16..q {
+        let ua = ((*ap.add(i / 16) >> ((i % 16) * 2)) & 0x03) as i32;
+        let ub = ((*bp.add(i / 16) >> ((i % 16) * 2)) & 0x03) as i32;
+        s += (2 * ua - 3) * (2 * ub - 3);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn idot_i4_avx2(a: &[u32], b: &[u32], q: usize) -> i32 {
+    let vec_words = (q / 8) / 8 * 8; // 64 codes per 256-bit chunk
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mask = _mm256_set1_epi8(0x0f);
+    let bias = _mm256_set1_epi8(7);
+    let mut acc = _mm256_setzero_si256();
+    let mut w = 0;
+    while w < vec_words {
+        let xa = _mm256_loadu_si256(ap.add(w) as *const __m256i);
+        let xb = _mm256_loadu_si256(bp.add(w) as *const __m256i);
+        // Low nibbles are the even code positions, high nibbles the odd
+        // ones — matching positions in `a` and `b`, so products pair up.
+        let ca0 = _mm256_sub_epi8(_mm256_and_si256(xa, mask), bias);
+        let cb0 = _mm256_sub_epi8(_mm256_and_si256(xb, mask), bias);
+        let ca1 = _mm256_sub_epi8(_mm256_and_si256(_mm256_srli_epi16::<4>(xa), mask), bias);
+        let cb1 = _mm256_sub_epi8(_mm256_and_si256(_mm256_srli_epi16::<4>(xb), mask), bias);
+        acc = mac_epi8(acc, ca0, cb0);
+        acc = mac_epi8(acc, ca1, cb1);
+        w += 8;
+    }
+    let mut s = hsum_epi32(acc);
+    for i in vec_words * 8..q {
+        let ua = ((*ap.add(i / 8) >> ((i % 8) * 4)) & 0x0f) as i32;
+        let ub = ((*bp.add(i / 8) >> ((i % 8) * 4)) & 0x0f) as i32;
+        s += (ua - 7) * (ub - 7);
+    }
+    s
+}
+
+#[target_feature(enable = "sse2")]
+pub(super) unsafe fn idot_i8_sse2(a: &[u32], b: &[u32], q: usize) -> i32 {
+    let vec_words = (q / 4) / 4 * 4; // 16 codes per 128-bit chunk
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let bias = _mm_set1_epi8(127);
+    let mut acc = _mm_setzero_si128();
+    let mut w = 0;
+    while w < vec_words {
+        let ca = _mm_sub_epi8(_mm_loadu_si128(ap.add(w) as *const __m128i), bias);
+        let cb = _mm_sub_epi8(_mm_loadu_si128(bp.add(w) as *const __m128i), bias);
+        // Sign-extend bytes to i16 by duplicating each byte into the high
+        // half and arithmetic-shifting back down (the pre-SSE4.1 idiom).
+        let a_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(ca, ca));
+        let a_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(ca, ca));
+        let b_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(cb, cb));
+        let b_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(cb, cb));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(a_lo, b_lo));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(a_hi, b_hi));
+        w += 4;
+    }
+    let mut parts = [0i32; 4];
+    _mm_storeu_si128(parts.as_mut_ptr() as *mut __m128i, acc);
+    let mut s: i32 = parts.iter().sum();
+    for i in vec_words * 4..q {
+        let ua = ((*ap.add(i / 4) >> ((i % 4) * 8)) & 0xff) as i32;
+        let ub = ((*bp.add(i / 4) >> ((i % 4) * 8)) & 0xff) as i32;
+        s += (ua - 127) * (ub - 127);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn idot_i8_avx2(a: &[u32], b: &[u32], q: usize) -> i32 {
+    let vec_words = (q / 4) / 8 * 8; // 32 codes per 256-bit chunk
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let bias = _mm256_set1_epi8(127);
+    let mut acc = _mm256_setzero_si256();
+    let mut w = 0;
+    while w < vec_words {
+        let ca = _mm256_sub_epi8(_mm256_loadu_si256(ap.add(w) as *const __m256i), bias);
+        let cb = _mm256_sub_epi8(_mm256_loadu_si256(bp.add(w) as *const __m256i), bias);
+        acc = mac_epi8(acc, ca, cb);
+        w += 8;
+    }
+    let mut s = hsum_epi32(acc);
+    for i in vec_words * 4..q {
+        let ua = ((*ap.add(i / 4) >> ((i % 4) * 8)) & 0xff) as i32;
+        let ub = ((*bp.add(i / 4) >> ((i % 4) * 8)) & 0xff) as i32;
+        s += (ua - 127) * (ub - 127);
+    }
+    s
+}
+
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn kron2_avx2(a: &[f32], b: &[f32], acc: &mut [f32]) {
     let q = b.len();

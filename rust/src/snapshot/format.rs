@@ -91,6 +91,12 @@ pub const SEC_NORMS: u32 = 13;
 /// [`FLAG_HAS_SHARD_RANGE`]): which slice of a sharded global vocabulary
 /// this snapshot's local ids map to.
 pub const SEC_SHARD_RANGE: u32 = 14;
+/// Quantized-ket bit-packed leaf codes (U32; see [`crate::quant`] for the
+/// packing). One `⌈q·bits/32⌉`-word block per leaf, leaves in
+/// word-major/rank-major/position order.
+pub const SEC_QKET_CODES: u32 = 15;
+/// Quantized-ket per-leaf dequantization scales (F32, one per leaf).
+pub const SEC_QKET_SCALES: u32 = 16;
 
 /// Human-readable section name for `snapshot info`.
 pub fn section_name(id: u32) -> &'static str {
@@ -109,14 +115,16 @@ pub fn section_name(id: u32) -> &'static str {
         SEC_IVF_LIST_IDS => "ivf.list_ids",
         SEC_NORMS => "norms",
         SEC_SHARD_RANGE => "shard_range",
+        SEC_QKET_CODES => "quantized_ket.codes",
+        SEC_QKET_SCALES => "quantized_ket.scales",
         _ => "unknown",
     }
 }
 
 // Meta slot assignments (header `meta: [u64; 6]`).
-/// word2ket: leaf dimension q. word2ketXS: leaf q.
+/// word2ket: leaf dimension q. word2ketXS: leaf q. quantized_ket: leaf q.
 pub const META_Q: usize = 0;
-/// word2ketXS: leaf t. hashed: seed.
+/// word2ketXS: leaf t. hashed: seed. quantized_ket: code bits.
 pub const META_T_OR_SEED: usize = 1;
 /// quantized: bits. lowrank: k. hashed: buckets (also meta[0] for those
 /// kinds — each kind owns slot 0 for its primary hyper-parameter).
@@ -133,6 +141,9 @@ pub enum StoreKind {
     Quantized,
     LowRank,
     Hashed,
+    /// Sub-byte quantized word2ket factors plus f16 refinement leaves
+    /// (see [`crate::quant::QuantizedKet`]).
+    QuantizedKet,
 }
 
 impl StoreKind {
@@ -144,6 +155,7 @@ impl StoreKind {
             StoreKind::Quantized => 3,
             StoreKind::LowRank => 4,
             StoreKind::Hashed => 5,
+            StoreKind::QuantizedKet => 6,
         }
     }
 
@@ -155,6 +167,7 @@ impl StoreKind {
             3 => StoreKind::Quantized,
             4 => StoreKind::LowRank,
             5 => StoreKind::Hashed,
+            6 => StoreKind::QuantizedKet,
             other => return Err(Error::Snapshot(format!("unknown store kind tag {other}"))),
         })
     }
@@ -167,6 +180,7 @@ impl StoreKind {
             StoreKind::Quantized => "quantized",
             StoreKind::LowRank => "lowrank",
             StoreKind::Hashed => "hashed",
+            StoreKind::QuantizedKet => "quantized_ket",
         }
     }
 }
@@ -211,6 +225,13 @@ impl Dtype {
 }
 
 /// How float payloads are written (`[snapshot] codec` / `--payload`).
+///
+/// `F32`/`F16`/`Int8` re-encode each float section element-wise and keep
+/// the snapshot's store kind. The sub-byte codecs (`Int4`/`B2`/`B1`) are
+/// only meaningful for word2ket stores: saving converts the store into a
+/// [`StoreKind::QuantizedKet`] snapshot whose factors live in the
+/// quantized domain (bit-packed codes + per-leaf scales + f16 refinement
+/// leaves; see [`crate::quant`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Codec {
     /// Exact 32-bit floats (bit-exact round trip).
@@ -220,6 +241,12 @@ pub enum Codec {
     F16,
     /// Symmetric per-chunk int8: 4× smaller, ~1e-2 relative error.
     Int8,
+    /// Symmetric per-leaf int4 factor codes (word2ket → quantized_ket).
+    Int4,
+    /// 2-bit odd-level factor codes {-3,-1,+1,+3}·scale (word2ket only).
+    B2,
+    /// 1-bit sign factor codes ±scale (word2ket only).
+    B1,
 }
 
 impl Codec {
@@ -228,8 +255,11 @@ impl Codec {
             "f32" | "none" | "exact" => Ok(Codec::F32),
             "f16" | "half" => Ok(Codec::F16),
             "int8" | "i8" => Ok(Codec::Int8),
+            "int4" | "i4" => Ok(Codec::Int4),
+            "b2" | "2bit" => Ok(Codec::B2),
+            "b1" | "1bit" => Ok(Codec::B1),
             other => Err(Error::Config(format!(
-                "unknown snapshot codec '{other}' (expected f32|f16|int8)"
+                "unknown snapshot codec '{other}' (expected f32|f16|int8|int4|b2|b1)"
             ))),
         }
     }
@@ -239,7 +269,28 @@ impl Codec {
             Codec::F32 => "f32",
             Codec::F16 => "f16",
             Codec::Int8 => "int8",
+            Codec::Int4 => "int4",
+            Codec::B2 => "b2",
+            Codec::B1 => "b1",
         }
+    }
+
+    /// Bits per stored factor value under this codec.
+    pub fn bits(&self) -> usize {
+        match self {
+            Codec::F32 => 32,
+            Codec::F16 => 16,
+            Codec::Int8 => 8,
+            Codec::Int4 => 4,
+            Codec::B2 => 2,
+            Codec::B1 => 1,
+        }
+    }
+
+    /// True for the codecs that force a word2ket store into the
+    /// quantized-ket snapshot layout instead of element-wise re-encoding.
+    pub fn is_sub_byte(&self) -> bool {
+        matches!(self, Codec::Int4 | Codec::B2 | Codec::B1)
     }
 }
 
@@ -528,6 +579,11 @@ fn put_u64(buf: &mut Vec<u8>, x: u64) {
 /// section).
 pub fn encode_f32s(id: u32, data: &[f32], codec: Codec, chunk: usize) -> SectionData {
     match codec {
+        // Sub-byte codecs restructure the whole store into quantized_ket
+        // sections instead of re-encoding float sections element-wise; a
+        // float section reaching here under one of them (norms, IVF
+        // centroids) stays exact.
+        Codec::Int4 | Codec::B2 | Codec::B1 => encode_f32s(id, data, Codec::F32, chunk),
         Codec::F32 => {
             let mut bytes = Vec::with_capacity(data.len() * 4);
             for &x in data {
@@ -772,7 +828,32 @@ mod tests {
         assert_eq!(Codec::parse("f32").unwrap(), Codec::F32);
         assert_eq!(Codec::parse("F16").unwrap(), Codec::F16);
         assert_eq!(Codec::parse("int8").unwrap(), Codec::Int8);
+        assert_eq!(Codec::parse("int4").unwrap(), Codec::Int4);
+        assert_eq!(Codec::parse("i4").unwrap(), Codec::Int4);
+        assert_eq!(Codec::parse("2bit").unwrap(), Codec::B2);
+        assert_eq!(Codec::parse("B1").unwrap(), Codec::B1);
         assert!(Codec::parse("f64").is_err());
+        // The error must enumerate every accepted codec so a typo'd config
+        // is self-diagnosing.
+        let msg = Codec::parse("f64").unwrap_err().to_string();
+        for name in ["f32", "f16", "int8", "int4", "b2", "b1"] {
+            assert!(msg.contains(name), "error {msg:?} misses {name}");
+        }
+        for c in [Codec::F32, Codec::F16, Codec::Int8, Codec::Int4, Codec::B2, Codec::B1] {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c, "name must re-parse");
+        }
+        assert_eq!(Codec::Int4.bits(), 4);
+        assert_eq!(Codec::B1.bits(), 1);
+        assert!(Codec::B2.is_sub_byte() && !Codec::Int8.is_sub_byte());
+    }
+
+    #[test]
+    fn sub_byte_codec_keeps_float_sections_exact() {
+        // Norms / IVF centroids saved under --payload int4 must stay f32.
+        let data = [1.5f32, -0.25, 3.0e-5];
+        let s = encode_f32s(3, &data, Codec::Int4, 0);
+        assert_eq!(s.dtype, Dtype::F32);
+        assert_eq!(s.bytes.len(), 12);
     }
 
     #[test]
@@ -784,6 +865,7 @@ mod tests {
             StoreKind::Quantized,
             StoreKind::LowRank,
             StoreKind::Hashed,
+            StoreKind::QuantizedKet,
         ] {
             assert_eq!(StoreKind::from_tag(k.tag()).unwrap(), k);
         }
@@ -792,5 +874,68 @@ mod tests {
         }
         assert!(StoreKind::from_tag(99).is_err());
         assert!(Dtype::from_tag(99).is_err());
+    }
+
+    /// Every one of the 65536 half patterns must decode to the f32 the
+    /// IEEE 754 mapping defines and (for non-NaN) re-encode to itself —
+    /// `f16_bits_to_f32` and `f32_to_f16_bits` are each other's inverse on
+    /// the representable set. An independent from-scratch decode (plain
+    /// `2^(e-15) · (1 + frac/1024)` arithmetic, no bit tricks shared with
+    /// the production code) pins the semantics.
+    #[test]
+    fn f16_codec_exhaustive_all_65536_patterns() {
+        for h in 0..=u16::MAX {
+            let got = f16_bits_to_f32(h);
+            let sign = if h & 0x8000 != 0 { -1.0f64 } else { 1.0 };
+            let exp = ((h >> 10) & 0x1f) as i32;
+            let frac = (h & 0x3ff) as f64;
+            if exp == 0x1f {
+                if frac == 0.0 {
+                    assert_eq!(got, (sign as f32) * f32::INFINITY, "{h:#06x}");
+                } else {
+                    assert!(got.is_nan(), "{h:#06x} must decode NaN, got {got}");
+                    continue; // NaN payloads need not roundtrip bit-exactly…
+                }
+            } else {
+                let want = if exp == 0 {
+                    sign * frac * 2.0f64.powi(-24) // subnormal: frac · 2^-24
+                } else {
+                    sign * (1.0 + frac / 1024.0) * 2.0f64.powi(exp - 15)
+                };
+                assert_eq!(got as f64, want, "{h:#06x}");
+            }
+            // …but every non-NaN pattern must, including both zeros, both
+            // infinities, and all 2048 subnormals.
+            let back = f32_to_f16_bits(got);
+            assert_eq!(back, h, "{h:#06x} -> {got} -> {back:#06x}");
+        }
+    }
+
+    /// Round-to-nearest-even at the exact halfway points, both directions.
+    #[test]
+    fn f16_encode_rounding_tie_goldens() {
+        // Half spacing at 1.0 is 1/1024, so ties sit at odd multiples of
+        // 1/2048. 1 + 3/2048 is exactly between 0x3c01 (1+1/1024) and
+        // 0x3c02 (1+2/1024): ties-to-even picks the even code 0x3c02.
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 / 2048.0), 0x3c02);
+        // 1 + 1/2048 ties between 0x3c00 and 0x3c01 → even 0x3c00.
+        assert_eq!(f32_to_f16_bits(1.0 + 1.0 / 2048.0), 0x3c00);
+        // Just above/below a tie resolves toward nearest, not toward even.
+        assert_eq!(f32_to_f16_bits(f32::from_bits((1.0f32 + 1.0 / 2048.0).to_bits() + 1)), 0x3c01);
+        assert_eq!(f32_to_f16_bits(f32::from_bits((1.0f32 + 3.0 / 2048.0).to_bits() - 1)), 0x3c01);
+        // Tie with mantissa carry: 1 + 2047/2048 ties the largest mantissa
+        // 0x3fff against 2.0, and the even side carries into the next
+        // exponent (frac overflows 10 bits → 0x4000).
+        assert_eq!(f32_to_f16_bits(1.0 + 2047.0 / 2048.0), 0x4000);
+        // Tie at the very top of the range overflows to infinity: 65520 is
+        // halfway between 65504 (max finite half) and 65536.
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16_bits(65519.99), 0x7bff);
+        // Subnormal tie: 1.5 · 2^-24 is halfway between subnormal codes 1
+        // and 2 → even code 2; 0.5 · 2^-24 ties between 0 and 1 → 0.
+        assert_eq!(f32_to_f16_bits(1.5 * 2.0f32.powi(-24)), 0x0002);
+        assert_eq!(f32_to_f16_bits(0.5 * 2.0f32.powi(-24)), 0x0000);
+        // Negative mirrors the positive cases with the sign bit set.
+        assert_eq!(f32_to_f16_bits(-(1.0 + 1.0 / 4096.0)), 0xbc00);
     }
 }

@@ -9,7 +9,10 @@
 //! with f16/int8-quantized payloads (Word2Bits-style: trade mantissa bits
 //! for another 2–4× on top of the paper's 100×) and optionally with the
 //! serving IVF index's centroids and cell lists so a reloaded server skips
-//! k-means retraining.
+//! k-means retraining. The sub-byte codecs (`int4`/`b2`/`b1`) go further:
+//! they convert a word2ket store into a [`crate::quant::QuantizedKet`]
+//! snapshot whose packed factors are scored directly in the quantized
+//! domain on load.
 //!
 //! Loading has two paths:
 //! * [`load_store`] — rebuild the concrete in-memory store (bit-exact for
@@ -88,6 +91,13 @@ pub fn save_store(
 
 /// Save an embedding store — plus, optionally, a trained IVF index so the
 /// loading server can skip k-means — to a versioned, checksummed snapshot.
+///
+/// A sub-byte codec (`int4`/`b2`/`b1`) does not re-encode sections
+/// element-wise: it converts a word2ket store into a
+/// [`crate::quant::QuantizedKet`] and writes a `quantized_ket` snapshot
+/// (packed codes + scales + f16 refinement leaves). Sub-byte codecs on any
+/// other store kind are a typed error; a store that is *already* a
+/// quantized-ket ignores the codec (its sections have fixed dtypes).
 pub fn save_store_with_index(
     store: &dyn EmbeddingStore,
     index: Option<&IvfIndex>,
@@ -95,6 +105,38 @@ pub fn save_store_with_index(
     opts: &SaveOptions,
 ) -> Result<SnapshotInfo> {
     let store = unwrap_wrappers(store);
+    if opts.codec.is_sub_byte() {
+        let sub = SaveOptions { codec: Codec::F32, ..*opts };
+        return match store.repr() {
+            Repr::Word2Ket(e) => {
+                let qk = crate::quant::QuantizedKet::from_word2ket(e, opts.codec.bits())?;
+                // Any cached scorer norms describe the *original* rows;
+                // the converted store serves f16-refined rows, so norms
+                // must be recomputed from it.
+                save_impl(&qk, index, path, &sub, true)
+            }
+            Repr::QuantizedKet(_) => save_impl(store, index, path, &sub, false),
+            _ => Err(Error::Snapshot(format!(
+                "codec '{}' quantizes word2ket factors; store '{}' is not word2ket",
+                opts.codec.name(),
+                store.describe()
+            ))),
+        };
+    }
+    save_impl(store, index, path, opts, false)
+}
+
+/// The save body. `recompute_norms` forces the norms section (when
+/// embedded) to be derived from `store`'s rows instead of trusting the
+/// index scorer's cache — required when `store` is a lossy conversion of
+/// the store the scorer was built over.
+fn save_impl(
+    store: &dyn EmbeddingStore,
+    index: Option<&IvfIndex>,
+    path: &Path,
+    opts: &SaveOptions,
+    recompute_norms: bool,
+) -> Result<SnapshotInfo> {
     let vocab = store.vocab_size();
     let dim = store.dim();
     let codec = opts.codec;
@@ -169,6 +211,21 @@ pub fn save_store_with_index(
             header.meta[META_T_OR_SEED] = e.seed();
             sections.push(encode_f32s(SEC_HASHED_WEIGHTS, e.weights(), codec, 0));
         }
+        Repr::QuantizedKet(e) => {
+            header.kind = StoreKind::QuantizedKet;
+            header.order = e.order() as u32;
+            header.rank = e.rank() as u32;
+            header.meta[META_Q] = e.leaf_dim() as u64;
+            header.meta[META_T_OR_SEED] = e.bits() as u64;
+            // Codes and scales *are* the quantized payload (exact u32/f32
+            // sections), and the refined leaves are f16-valued by
+            // construction, so the f16 leaf section is lossless too:
+            // quantized_ket snapshots round-trip bit-exactly regardless of
+            // the requested codec.
+            sections.push(encode_u32s(SEC_QKET_CODES, e.codes()));
+            sections.push(encode_f32s(SEC_QKET_SCALES, e.scales(), Codec::F32, 0));
+            sections.push(encode_f32s(SEC_W2K_LEAVES, e.leaves(), Codec::F16, 0));
+        }
         Repr::Snapshot(_) | Repr::Cached(_) | Repr::Opaque => {
             return Err(Error::Snapshot(format!(
                 "store '{}' has no snapshot serializer",
@@ -182,14 +239,16 @@ pub fn save_store_with_index(
     // payloads only: with a lossy codec the loader serves dequantized rows,
     // and norms of the *original* rows would skew its cosine denominators
     // (self-similarity ≠ 1) — lossy saves let the loader recompute instead.
-    // Quantized stores write byte-exact sections regardless of the
-    // requested codec (see above), so their rows — and thus these norms —
-    // survive any codec unchanged.
-    let payload_exact = codec == Codec::F32 || header.kind == StoreKind::Quantized;
+    // Quantized and quantized-ket stores write byte-exact sections
+    // regardless of the requested codec (see above), so their rows — and
+    // thus these norms — survive any codec unchanged.
+    let payload_exact = codec == Codec::F32
+        || matches!(header.kind, StoreKind::Quantized | StoreKind::QuantizedKet);
     let norms_embedded =
         payload_exact && (opts.norms || index.is_some_and(|ivf| ivf.scorer().cosine()));
     if norms_embedded {
-        let norms = match index.and_then(|ivf| ivf.scorer().norms()) {
+        let cached = index.and_then(|ivf| ivf.scorer().norms()).filter(|_| !recompute_norms);
+        let norms = match cached {
             Some(n) => n.to_vec(),
             None => crate::index::scorer::compute_norms(store),
         };
@@ -249,6 +308,7 @@ mod tests {
             EmbeddingKind::Quantized,
             EmbeddingKind::LowRank,
             EmbeddingKind::Hashed,
+            EmbeddingKind::QuantizedKet,
         ]
         .into_iter()
         .map(|kind| {
@@ -621,6 +681,191 @@ mod tests {
             Err(crate::Error::Snapshot(msg)) => assert!(msg.contains("norms"), "{msg}"),
             other => panic!("hostile norms accepted: {:?}", other.map(|_| ())),
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A sub-byte codec converts a word2ket store into a `quantized_ket`
+    /// snapshot: rows and coarse scores bit-match the in-memory
+    /// [`crate::quant::QuantizedKet`] on both load paths, non-word2ket
+    /// stores are rejected, and a native quantized-ket store ignores the
+    /// codec.
+    #[test]
+    fn sub_byte_codec_converts_word2ket() {
+        use crate::repr::FactoredRepr;
+        let mut rng = Rng::new(27);
+        let w = Word2Ket::random(40, 16, 2, 2, &mut rng);
+        for codec in [Codec::Int4, Codec::B2, Codec::B1] {
+            let want = crate::quant::QuantizedKet::from_word2ket(&w, codec.bits()).unwrap();
+            let path = tmp(&format!("conv_{}", codec.name()));
+            save_store(&w, &path, &SaveOptions { codec, ..Default::default() }).unwrap();
+            let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+            assert_eq!(snap.kind(), StoreKind::QuantizedKet);
+            assert_eq!(snap.header().meta[META_T_OR_SEED], codec.bits() as u64);
+            let d = snap.describe();
+            assert!(
+                d.contains("quantized_ket.codes") && d.contains("quantized_ket.scales"),
+                "{d}"
+            );
+            let mm = SnapshotStore::open(snap.clone()).unwrap();
+            let heap = load_store(&snap).unwrap();
+            assert!(mm.factored());
+            assert_eq!(mm.payload_bits(), codec.bits());
+            assert_eq!(mm.num_params(), want.num_params());
+            for id in [0usize, 9, 39] {
+                assert_eq!(mm.lookup(id), want.lookup(id), "{codec:?} mmap id {id}");
+                assert_eq!(heap.lookup(id), want.lookup(id), "{codec:?} heap id {id}");
+            }
+            for (a, b) in [(0usize, 1usize), (5, 31)] {
+                assert_eq!(
+                    mm.inner(a, b).to_bits(),
+                    FactoredRepr::inner(&want, a, b).to_bits(),
+                    "{codec:?} coarse ({a},{b})"
+                );
+            }
+            std::fs::remove_file(&path).ok();
+        }
+
+        // Sub-byte codecs only quantize word2ket factors.
+        let mut rng = Rng::new(28);
+        let xs = Word2KetXS::random(20, 16, 2, 2, &mut rng);
+        let path = tmp("conv_bad_kind");
+        assert!(matches!(
+            save_store(&xs, &path, &SaveOptions { codec: Codec::B1, ..Default::default() }),
+            Err(Error::Snapshot(_))
+        ));
+
+        // A store that is already quantized-ket keeps its own width; the
+        // requested codec is irrelevant to its fixed-dtype sections.
+        let native = crate::quant::QuantizedKet::from_word2ket(&w, 2).unwrap();
+        save_store(&native, &path, &SaveOptions { codec: Codec::Int4, ..Default::default() })
+            .unwrap();
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert_eq!(snap.kind(), StoreKind::QuantizedKet);
+        assert_eq!(snap.header().meta[META_T_OR_SEED], 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Norms embedded next to a sub-byte payload describe the *converted*
+    /// rows (the rows the loader serves), not the original word2ket rows.
+    #[test]
+    fn sub_byte_norms_describe_converted_rows() {
+        let mut rng = Rng::new(30);
+        let w = Word2Ket::random(35, 16, 2, 2, &mut rng);
+        let path = tmp("conv_norms");
+        let opts = SaveOptions { codec: Codec::Int4, norms: true, ..Default::default() };
+        save_store(&w, &path, &opts).unwrap();
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert_eq!(snap.header().flags & FLAG_HAS_NORMS, FLAG_HAS_NORMS);
+        let mm = SnapshotStore::open(snap).unwrap();
+        let want = crate::index::scorer::compute_norms(&mm);
+        let got = mm.norms().expect("norms embedded");
+        for (id, (a, b)) in want.iter().zip(got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "norm {id}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Sub-byte files shrink with the code width (the refinement payload
+    /// sets the floor — b1 and b2 can tie on the one-word-per-leaf floor).
+    #[test]
+    fn sub_byte_snapshots_shrink_disk() {
+        let mut rng = Rng::new(29);
+        let w = Word2Ket::random(300, 256, 2, 2, &mut rng);
+        let save = |codec: Codec, name: &str| {
+            let path = tmp(name);
+            let b = save_store(&w, &path, &SaveOptions { codec, ..Default::default() })
+                .unwrap()
+                .bytes;
+            std::fs::remove_file(&path).ok();
+            b
+        };
+        let b32 = save(Codec::F32, "szq32");
+        let i4 = save(Codec::Int4, "szq4");
+        let b2 = save(Codec::B2, "szq2");
+        let b1 = save(Codec::B1, "szq1");
+        assert!(i4 < b32, "int4 {i4} !< f32 {b32}");
+        assert!(b2 < i4 && b1 <= b2, "b1 {b1} / b2 {b2} / int4 {i4}");
+    }
+
+    /// Satellite hardening: CRC-valid quantized-ket files with hostile
+    /// scales, padding bits, geometry, or bit widths are rejected with
+    /// typed errors on both load paths.
+    #[test]
+    fn hostile_quantized_ket_snapshots_rejected() {
+        let mut rng = Rng::new(26);
+        let w = Word2Ket::random(6, 16, 2, 1, &mut rng);
+        let qk = crate::quant::QuantizedKet::from_word2ket(&w, 4).unwrap();
+        let mut meta = [0u64; 6];
+        meta[META_Q] = 4;
+        meta[META_T_OR_SEED] = 4;
+        let header = Header {
+            kind: StoreKind::QuantizedKet,
+            vocab: 6,
+            dim: 16,
+            order: 2,
+            rank: 1,
+            flags: 0,
+            meta,
+        };
+        let path = tmp("qket_hostile");
+        let write = |header: &Header, codes: &[u32], scales: &[f32], leaves: &[f32]| {
+            let sections = vec![
+                encode_u32s(SEC_QKET_CODES, codes),
+                encode_f32s(SEC_QKET_SCALES, scales, Codec::F32, 0),
+                encode_f32s(SEC_W2K_LEAVES, leaves, Codec::F16, 0),
+            ];
+            write_snapshot(&path, header, &sections).unwrap();
+        };
+
+        // Baseline: the unmutated file opens on both paths.
+        write(&header, qk.codes(), qk.scales(), qk.leaves());
+        let snap = Arc::new(Snapshot::open(&path, true).unwrap());
+        assert!(SnapshotStore::open(snap.clone()).is_ok());
+        assert!(load_store(&snap).is_ok());
+
+        let expect_rejected = |what: &str| {
+            // Hostile scales die inside Snapshot::open (parse-time);
+            // geometry/padding mutations die when a store is built over
+            // the otherwise-valid file — and the two load paths must
+            // agree on acceptance.
+            let rejected = match Snapshot::open(&path, true) {
+                Err(Error::Snapshot(_)) => true,
+                Err(other) => panic!("{what}: wrong error kind {other}"),
+                Ok(snap) => {
+                    let snap = Arc::new(snap);
+                    let mm_bad = SnapshotStore::open(snap.clone()).is_err();
+                    let heap_bad = load_store(&snap).is_err();
+                    assert_eq!(mm_bad, heap_bad, "{what}: load paths disagree");
+                    mm_bad
+                }
+            };
+            assert!(rejected, "{what}: hostile snapshot accepted");
+        };
+
+        for bad in [f32::NAN, f32::NEG_INFINITY, -0.5] {
+            let mut s = qk.scales().to_vec();
+            s[2] = bad;
+            write(&header, qk.codes(), &s, qk.leaves());
+            expect_rejected(&format!("scale {bad}"));
+        }
+        // Nonzero padding bits (q=4 at 4 bits uses 16 of 32 word bits).
+        let mut c = qk.codes().to_vec();
+        c[0] |= 1 << 30;
+        write(&header, &c, qk.scales(), qk.leaves());
+        expect_rejected("nonzero padding bits");
+        // Scale-count / geometry mismatch.
+        write(&header, qk.codes(), &qk.scales()[1..], qk.leaves());
+        expect_rejected("scale count");
+        // Unsupported code width in the header.
+        let mut h = header;
+        h.meta[META_T_OR_SEED] = 3;
+        write(&h, qk.codes(), qk.scales(), qk.leaves());
+        expect_rejected("bits=3");
+        // Hostile q blows the dim envelope (would drive oversized scratch).
+        let mut h = header;
+        h.meta[META_Q] = 4096;
+        write(&h, qk.codes(), qk.scales(), qk.leaves());
+        expect_rejected("q envelope");
         std::fs::remove_file(&path).ok();
     }
 

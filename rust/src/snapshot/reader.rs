@@ -281,6 +281,31 @@ impl Snapshot {
                     sec.crc
                 )));
             }
+            // Quantization scales are trusted multipliers on every decode
+            // path; a NaN/inf/negative scale smuggled into a CRC-valid file
+            // would silently poison each row it covers (and NaN defeats
+            // every downstream comparison), so hostile scales fail the open
+            // itself. Covers the i8 chunk-scale prefix and the
+            // quantized-ket per-leaf scale section.
+            let scale_prefix = match sec.dtype {
+                Dtype::I8 => {
+                    let n = sec.count as usize;
+                    if n == 0 { 0 } else { n.div_ceil(sec.chunk as usize) }
+                }
+                Dtype::F32 if sec.id == SEC_QKET_SCALES => sec.count as usize,
+                _ => 0,
+            };
+            for i in 0..scale_prefix {
+                let s = f32::from_le_bytes(
+                    payload[i * 4..i * 4 + 4].try_into().expect("bounds checked"),
+                );
+                if !s.is_finite() || s < 0.0 {
+                    return Err(Error::Snapshot(format!(
+                        "section {name}: quantization scale [{i}] = {s} \
+                         (must be finite and non-negative)"
+                    )));
+                }
+            }
             sections.push(sec);
         }
         // Shard-assignment metadata: flag and section must agree, and the
@@ -567,6 +592,20 @@ pub fn load_store(snap: &Snapshot) -> Result<Box<dyn EmbeddingStore>> {
             let buckets = h.meta[META_PRIMARY] as usize;
             let seed = h.meta[META_T_OR_SEED];
             Box::new(HashedEmbedding::from_parts(vocab, dim, buckets, seed, weights)?)
+        }
+        StoreKind::QuantizedKet => {
+            let codes = snap.read_u32s(snap.require(SEC_QKET_CODES)?)?;
+            let scales = snap.read_f32s(snap.require(SEC_QKET_SCALES)?)?;
+            let leaves = snap.read_f32s(snap.require(SEC_W2K_LEAVES)?)?;
+            let q = h.meta[META_Q] as usize;
+            let bits = h.meta[META_T_OR_SEED] as usize;
+            // from_parts re-validates everything a hostile header could
+            // skew: bits ∈ {1,2,4,8}, the q^order/dim envelope, section
+            // lengths against the derived leaf count, scale finiteness, and
+            // zero padding bits in the packed codes.
+            Box::new(crate::quant::QuantizedKet::from_parts(
+                vocab, dim, order, rank, q, bits, codes, scales, leaves,
+            )?)
         }
     })
 }

@@ -20,6 +20,7 @@ use crate::embedding::quantized::get_bits;
 use crate::embedding::EmbeddingStore;
 use crate::error::{Error, Result};
 use crate::kron::{kron_accumulate, tree_term, MixedRadix};
+use crate::quant::{self, QketView};
 use crate::repr::{kernels, FactorGeometry, FactoredRepr, Repr};
 use crate::tensor::dot;
 use crate::util::rng::splitmix64;
@@ -67,6 +68,16 @@ enum View {
     Hashed {
         weights: Slab,
         seed: u64,
+    },
+    /// Quantized-ket: packed codes + per-leaf scales score in the
+    /// quantized domain straight off the mapping; the f16 refinement
+    /// leaves (decoded once at open) serve rows and exact re-ranks.
+    QKet {
+        codes: SlabU32,
+        scales: Slab,
+        leaves: Slab,
+        q: usize,
+        bits: usize,
     },
 }
 
@@ -254,6 +265,75 @@ impl SnapshotStore {
                     seed: h.meta[META_T_OR_SEED],
                 }
             }
+            StoreKind::QuantizedKet => {
+                let q = h.meta[META_Q] as usize;
+                let bits = h.meta[META_T_OR_SEED] as usize;
+                if !quant::SUPPORTED_BITS.contains(&bits) {
+                    return Err(Error::Snapshot(format!(
+                        "quantized_ket bits {bits} not one of {:?}",
+                        quant::SUPPORTED_BITS
+                    )));
+                }
+                if !(2..=crate::repr::MAX_ORDER).contains(&order)
+                    || rank == 0
+                    || q == 0
+                    || q > quant::MAX_LEAF_DIM
+                {
+                    return Err(Error::Snapshot(format!(
+                        "bad quantized_ket geometry: order={order} rank={rank} q={q}"
+                    )));
+                }
+                // Same q^order envelope as the word2ket arm above: covers
+                // the row, truncation bounded, hostile headers can't drive
+                // oversized per-lookup scratch.
+                let full = q
+                    .checked_pow(order as u32)
+                    .ok_or_else(|| Error::Snapshot("quantized_ket q^order overflows".into()))?;
+                if full < dim || full > dim.saturating_mul(1usize << order) {
+                    return Err(Error::Snapshot(format!(
+                        "quantized_ket q^order = {full} inconsistent with dim {dim}"
+                    )));
+                }
+                // The writer stores codes as U32, scales as F32, leaves as
+                // F16 — exactly. Any other dtype is a hand-crafted file, and
+                // accepting (say) i8-coded leaves would break the exactness
+                // story lossy_payload() relies on below.
+                for (id, want) in [
+                    (SEC_QKET_SCALES, Dtype::F32),
+                    (SEC_W2K_LEAVES, Dtype::F16),
+                ] {
+                    let sec = snap.section(id).ok_or_else(|| {
+                        Error::Snapshot(format!("missing section {}", section_name(id)))
+                    })?;
+                    if sec.dtype != want {
+                        return Err(Error::Snapshot(format!(
+                            "section {} must be {}-typed in a quantized_ket snapshot",
+                            section_name(id),
+                            want.name()
+                        )));
+                    }
+                }
+                let n_leaves = prod(&[vocab, rank, order])?;
+                let wpl = quant::words_per_leaf(q, bits);
+                let codes = Self::slab_u32_for(&snap, SEC_QKET_CODES, prod(&[n_leaves, wpl])?)?;
+                let scales = Self::slab_for(&snap, SEC_QKET_SCALES, n_leaves)?;
+                let leaves = Self::slab_for(&snap, SEC_W2K_LEAVES, prod(&[n_leaves, q])?)?;
+                // Nonzero padding bits would corrupt the whole-word b1
+                // popcount; scale values were already vetted at parse
+                // (finite, non-negative) but the packed words were not.
+                let used = q * bits - (wpl - 1) * 32;
+                if used < 32 {
+                    let SlabU32::Map { off, count } = &codes;
+                    let words = snap.u32s_at(*off, *count);
+                    let pad_mask = !0u32 << used;
+                    if (0..n_leaves).any(|l| words[l * wpl + wpl - 1] & pad_mask != 0) {
+                        return Err(Error::Snapshot(
+                            "quantized_ket codes have nonzero padding bits".into(),
+                        ));
+                    }
+                }
+                View::QKet { codes, scales, leaves, q, bits }
+            }
         };
         let mut store = SnapshotStore { snap, vocab, dim, order, rank, view, norms: None };
         if h.flags & FLAG_HAS_NORMS != 0 {
@@ -294,6 +374,42 @@ impl SnapshotStore {
             View::Quant { scales, offsets, .. } => own(scales) || own(offsets),
             View::LowRank { u, vt, .. } => own(u) || own(vt),
             View::Hashed { weights, .. } => own(weights),
+            // Codes and scales are exact by the dtype enforcement at open,
+            // and the f16 leaves *define* the served rows (the writer
+            // computed norms from these same f16-rounded values), so a
+            // quantized_ket payload is exact in the sense this gate cares
+            // about even though its leaf slab is an owned decode.
+            View::QKet { .. } => false,
+        }
+    }
+
+    /// The shared quantized-ket payload view (see [`crate::quant`]), when
+    /// this snapshot holds one. In-memory and mapped quantized-ket serving
+    /// both go through this struct, so they are bit-identical.
+    fn qket_view(&self) -> Option<QketView<'_>> {
+        match &self.view {
+            View::QKet { codes, scales, leaves, q, bits } => Some(QketView {
+                order: self.order,
+                rank: self.rank,
+                leaf_dim: *q,
+                bits: *bits,
+                codes: self.u32s(codes),
+                scales: self.floats(scales),
+                leaves: self.floats(leaves),
+            }),
+            _ => None,
+        }
+    }
+
+    /// Bit width of the factor payload candidate scans score against: the
+    /// packed code width for quantized stores, 32 for everything that
+    /// scores in (dequantized) f32. The IVF scorer re-ranks through exact
+    /// rows whenever this drops below 32, and serving reports it in STATS.
+    pub fn payload_bits(&self) -> usize {
+        match &self.view {
+            View::QKet { bits, .. } => *bits,
+            View::Quant { bits, .. } => *bits,
+            _ => 32,
         }
     }
 
@@ -328,6 +444,10 @@ impl SnapshotStore {
                 !*layernorm && q.checked_pow(self.order as u32) == Some(self.dim)
             }
             View::Xs { q, .. } => q.checked_pow(self.order as u32) == Some(self.dim),
+            // Quantized-ket factored scoring is *coarse* (see
+            // `crate::quant` module docs); consumers check `payload_bits`
+            // and re-rank through exact rows where it matters.
+            View::QKet { q, .. } => q.checked_pow(self.order as u32) == Some(self.dim),
             _ => false,
         }
     }
@@ -387,6 +507,7 @@ impl SnapshotStore {
                     self.xs_col(factors, *q, *t, k, j, c)
                 })
             }
+            View::QKet { .. } => self.qket_view().expect("view matched QKet").inner(a, b),
             _ => {
                 // Dense fallback: correctness over speed for non-factored
                 // kinds (the scorer never routes them here).
@@ -416,6 +537,14 @@ impl EmbeddingStore for SnapshotStore {
                 Slab::Map { count, .. } => *count,
                 Slab::Own(v) => v.len(),
             },
+            // Match QuantizedKet::num_params: 4-byte units stored (code
+            // words + f32 scales + f16 leaves at half a unit each).
+            View::QKet { q, bits, .. } => {
+                let n_leaves = self.vocab * self.rank * self.order;
+                n_leaves * quant::words_per_leaf(*q, *bits)
+                    + n_leaves
+                    + (n_leaves * q).div_ceil(2)
+            }
         }
     }
 
@@ -499,6 +628,9 @@ impl EmbeddingStore for SnapshotStore {
                     *o = sign * w[(x % buckets as u64) as usize];
                 }
             }
+            View::QKet { .. } => {
+                self.qket_view().expect("view matched QKet").write_row(id, out)
+            }
         }
     }
 
@@ -523,12 +655,15 @@ impl EmbeddingStore for SnapshotStore {
 
 /// Factored-space contract (see [`crate::repr`]) straight off the mapped
 /// file. Handed out by [`Repr::factored`] only when
-/// [`SnapshotStore::factored`] holds (raw word2ket/word2ketXS factors,
-/// untruncated); the accessors below are only called under that gate.
+/// [`SnapshotStore::factored`] holds (raw word2ket/word2ketXS/quantized_ket
+/// factors, untruncated); the accessors below are only called under that
+/// gate. For the quantized_ket view, `inner`/`block_inner` follow the
+/// coarse quantized-domain contract of [`crate::quant`] while `factors`/
+/// `write_row` expose the exact refined payload.
 impl FactoredRepr for SnapshotStore {
     fn geometry(&self) -> FactorGeometry {
         let leaf_dim = match &self.view {
-            View::W2k { q, .. } | View::Xs { q, .. } => *q,
+            View::W2k { q, .. } | View::Xs { q, .. } | View::QKet { q, .. } => *q,
             _ => 0,
         };
         FactorGeometry { order: self.order, rank: self.rank, leaf_dim }
@@ -549,6 +684,14 @@ impl FactoredRepr for SnapshotStore {
                 radix.decode_into(id, &mut digits[..self.order]);
                 for (j, col) in out.iter_mut().enumerate() {
                     *col = self.xs_col(factors, *q, *t, k, j, digits[j]);
+                }
+            }
+            View::QKet { .. } => {
+                // Exact f16-refined leaves — the payload `write_row`
+                // reconstructs from, not the coarse codes.
+                let v = self.qket_view().expect("view matched QKet");
+                for (j, slot) in out.iter_mut().enumerate() {
+                    *slot = v.refined_leaf(id, k, j);
                 }
             }
             _ => unreachable!("factored repr over a non-factored snapshot view"),
@@ -578,6 +721,9 @@ impl FactoredRepr for SnapshotStore {
                     bs,
                     out,
                 );
+            }
+            View::QKet { .. } => {
+                self.qket_view().expect("view matched QKet").block_inner(a, bs, out)
             }
             _ => {
                 for (o, &b) in out.iter_mut().zip(bs) {

@@ -178,6 +178,7 @@ mod tests {
             snapshot_bytes: 4096,
             accept_errors: 1,
             simd_level: 2,
+            payload_bits: 32,
         };
         // A line rendered through the shared table must pass, extra rollup
         // tokens included.

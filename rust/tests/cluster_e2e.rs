@@ -219,6 +219,84 @@ fn lookup_dot_and_stats_across_shards() {
     cluster.stop();
 }
 
+/// Acceptance for the quantized serving path end to end: shard snapshots
+/// saved with the int4 codec boot completely stock servers that serve the
+/// f16-refined quantized-ket rows, scatter-gather KNN scores those rows
+/// exactly (the router broadcasts the query *vector*, so shards score
+/// materialized rows, never the coarse codes), and the STATS/METRICS
+/// roll-ups surface the sub-byte payload. The CI matrix re-runs this per
+/// net driver like every other test in this file.
+#[test]
+fn quantized_snapshot_cluster_serves_refined_rows() {
+    use word2ket::embedding::Word2Ket;
+    use word2ket::quant::QuantizedKet;
+    use word2ket::snapshot::Codec;
+    use word2ket::tensor::dot;
+
+    let mut rng = Rng::new(43);
+    let w2k = Word2Ket::random(96, 16, 2, 2, &mut rng);
+    // The exact store the servers will serve: the same conversion
+    // `save_store` performs for a sub-byte codec.
+    let qk = QuantizedKet::from_word2ket(&w2k, 4).unwrap();
+    let rows: Vec<Vec<f32>> = (0..96).map(|id| qk.lookup(id)).collect();
+
+    // `Cluster::start` saves at the default codec; this leg saves int4.
+    let placeholder: Vec<Vec<String>> = (0..2).map(|_| vec!["127.0.0.1:0".to_string()]).collect();
+    let topo = Topology::new(96, ShardStrategy::Range, placeholder).unwrap();
+    let dir = tmp_dir("quantized");
+    let opts = SaveOptions { codec: Codec::Int4, ..SaveOptions::default() };
+    let saved = save_shard_snapshots(&w2k, &topo, &dir, &opts).unwrap();
+    let mut nodes = Vec::new();
+    let mut addrs: Vec<Vec<String>> = Vec::new();
+    for (path, _) in &saved {
+        let node = spawn_node(path);
+        addrs.push(vec![node.addr.clone()]);
+        nodes.push(node);
+    }
+    let topo = topo.with_addrs(addrs).unwrap();
+    let router = Router::new(topo, router_cfg());
+
+    // LOOKUP serves the refined rows — not the original float rows.
+    let ids = [0u32, 95, 48, 7];
+    for (row, &gid) in router.lookup(&ids).unwrap().iter().zip(&ids) {
+        assert_eq!(row, &rows[gid as usize], "refined row for global id {gid}");
+        assert_ne!(row, &w2k.lookup(gid as usize), "row {gid} cannot be the float original");
+    }
+
+    // Scatter-gather KNN: ids *and* scores bit-identical to a dense scan
+    // over the refined rows.
+    for &(q, k) in &[(5usize, 4usize), (60, 9)] {
+        let mut want: Vec<(usize, f32)> =
+            (0..96).filter(|&b| b != q).map(|b| (b, dot(&rows[q], &rows[b]))).collect();
+        want.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        want.truncate(k);
+        let got = router.knn(q as u32, k as u32).unwrap();
+        assert_eq!(got.len(), k);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(g.0 as usize == w.0 && g.1 == w.1, "q={q} k={k}: {g:?} vs {w:?}");
+        }
+    }
+
+    // The roll-up reports the sub-byte payload: STATS takes the maximum
+    // across replicas, and the METRICS scrape re-emits each shard's gauge.
+    let cs = router.stats();
+    assert_eq!(cs.healthy_replicas, 2);
+    assert_eq!(cs.aggregate.payload_bits, 4, "roll-up must surface the int4 payload");
+    let rolled = router.metrics();
+    for s in 0..2 {
+        assert!(
+            rolled.contains(&format!("w2k_payload_bits{{shard=\"{s}\",replica=\"0\"}} 4")),
+            "{rolled}"
+        );
+    }
+
+    router.shutdown();
+    for node in nodes {
+        node.kill();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Mixed lookup+knn load through the router; returns total successful
 /// requests, panicking on any failure.
 fn hammer(router: &Router, threads: usize, iters: usize, mid: impl FnOnce()) -> u64 {
